@@ -1,0 +1,145 @@
+//! End-to-end driver — proves all three layers compose on a real
+//! workload (recorded in EXPERIMENTS.md):
+//!
+//!   L1 Pallas Stockham kernel → L2 JAX row-FFT model → AOT HLO text →
+//!   L3 rust coordinator loading it via PJRT, planning with measured
+//!   FPMs (POPTA/HPOPTA), executing PFFT-LB / PFFT-FPM / PFFT-FPM-PAD,
+//!   and verifying numerics against two independent oracles.
+//!
+//! Workload: batched 2D-DFT requests over the artifact grid (a small
+//! "serving" trace: mixed sizes, mixed batch shapes), reporting
+//! per-request latency and aggregate throughput in the paper's MFLOPs.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+
+use std::path::Path;
+use std::time::Instant;
+
+use hclfft::coordinator::engine::{NativeEngine, RowFftEngine};
+use hclfft::coordinator::group::GroupConfig;
+use hclfft::coordinator::pad::{pads_for_distribution, PadCost};
+use hclfft::coordinator::pfft::{pfft_fpm, pfft_fpm_pad, pfft_lb, plan_partition};
+use hclfft::dft::{naive_dft2d, SignalMatrix};
+use hclfft::profiler::build_plane;
+use hclfft::runtime::PjrtRowFftEngine;
+use hclfft::stats::harness::fft2d_flops;
+
+fn main() -> Result<(), String> {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.tsv").exists() {
+        return Err("artifacts/ missing — run `make artifacts` first".into());
+    }
+
+    println!("== e2e: L1 Pallas -> L2 JAX -> AOT HLO -> L3 rust/PJRT ==\n");
+    let engine = PjrtRowFftEngine::load(artifacts).map_err(|e| e.to_string())?;
+    let lengths = engine.supported_lengths().unwrap();
+    println!("artifact grid row lengths: {lengths:?}");
+
+    // ---- Phase 1: profile the PJRT engine & plan per size -------------
+    let cfg = GroupConfig::new(2, 1);
+    let mut plans = Vec::new();
+    for &n in lengths.iter().filter(|&&n| n <= 512) {
+        let xs: Vec<usize> = (1..=4).map(|k| k * n / 4).collect();
+        let t0 = Instant::now();
+        let fpms = build_plane(&engine, cfg, xs, n, 10_000);
+        let part = plan_partition(&fpms, n, 0.05).map_err(|e| e.to_string())?;
+        let pads = pads_for_distribution(&fpms, &part.d, n, PadCost::PaperRatio);
+        println!(
+            "plan n={n}: d = {:?} ({:?}), pads = {:?} [profiled+planned in {:.2}s]",
+            part.d,
+            part.algorithm,
+            pads.iter().map(|p| p.n_padded).collect::<Vec<_>>(),
+            t0.elapsed().as_secs_f64()
+        );
+        plans.push((n, part, pads));
+    }
+
+    // ---- Phase 2: serve a mixed-size request trace ---------------------
+    let trace: Vec<usize> = plans
+        .iter()
+        .cycle()
+        .take(plans.len() * 4)
+        .map(|(n, _, _)| *n)
+        .collect();
+    let mut total_flops = 0.0f64;
+    let mut total_time = 0.0f64;
+    let mut latencies = Vec::new();
+    for (req, &n) in trace.iter().enumerate() {
+        let (_, part, pads) = plans.iter().find(|(pn, _, _)| *pn == n).unwrap();
+        let mut m = SignalMatrix::random(n, n, req as u64);
+        let t0 = Instant::now();
+        pfft_fpm_pad(&engine, &mut m, &part.d, pads, cfg.t, 64).map_err(|e| e.to_string())?;
+        let dt = t0.elapsed().as_secs_f64();
+        latencies.push(dt);
+        total_flops += fft2d_flops(n);
+        total_time += dt;
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = latencies[latencies.len() / 2];
+    let p99 = latencies[((latencies.len() * 99) / 100).min(latencies.len() - 1)];
+    println!(
+        "\nserved {} requests: {:.1} MFLOPs aggregate, p50 {:.2} ms, p99 {:.2} ms",
+        trace.len(),
+        total_flops / total_time / 1e6,
+        p50 * 1e3,
+        p99 * 1e3
+    );
+
+    // ---- Phase 3: verify the stack against two oracles -----------------
+    let n = plans[0].0;
+    let signal = SignalMatrix::random(n, n, 7);
+    let (_, part, _) = &plans[0];
+
+    let mut via_pjrt = signal.clone();
+    pfft_fpm(&engine, &mut via_pjrt, &part.d, cfg.t, 64).map_err(|e| e.to_string())?;
+
+    let mut via_native = signal.clone();
+    pfft_lb(&NativeEngine, &mut via_native, cfg, 64).map_err(|e| e.to_string())?;
+
+    let naive = naive_dft2d(&signal);
+    let err_pjrt = via_pjrt.max_abs_diff(&naive) / naive.norm().max(1.0);
+    let err_native = via_native.max_abs_diff(&naive) / naive.norm().max(1.0);
+    println!("\nverification at n={n}:");
+    println!("  PJRT (f32 artifacts) vs naive oracle: rel err {err_pjrt:.2e}");
+    println!("  native (f64)         vs naive oracle: rel err {err_native:.2e}");
+    if err_pjrt > 1e-4 || err_native > 1e-10 {
+        return Err("verification FAILED".into());
+    }
+
+    // ---- Phase 4: compare coordinator algorithms on the PJRT engine ----
+    println!("\nalgorithm comparison on PJRT engine (n = 512, mean of 5):");
+    let n = 512;
+    let (_, part, pads) = plans.iter().find(|(pn, _, _)| *pn == 512).unwrap();
+    for (label, runner) in [
+        ("basic (1 group)", 0usize),
+        ("PFFT-LB", 1),
+        ("PFFT-FPM", 2),
+        ("PFFT-FPM-PAD", 3),
+    ] {
+        let mut secs = 0.0;
+        const REPS: usize = 5;
+        for rep in 0..REPS {
+            let mut m = SignalMatrix::random(n, n, rep as u64);
+            let t0 = Instant::now();
+            match runner {
+                0 => pfft_lb(&engine, &mut m, GroupConfig::new(1, 2), 64),
+                1 => pfft_lb(&engine, &mut m, cfg, 64),
+                2 => pfft_fpm(&engine, &mut m, &part.d, cfg.t, 64),
+                _ => pfft_fpm_pad(&engine, &mut m, &part.d, pads, cfg.t, 64),
+            }
+            .map_err(|e| e.to_string())?;
+            secs += t0.elapsed().as_secs_f64();
+        }
+        let mean = secs / REPS as f64;
+        println!(
+            "  {label:<16} {:.2} ms  ({:.1} MFLOPs)",
+            mean * 1e3,
+            fft2d_flops(n) / mean / 1e6
+        );
+    }
+
+    println!("\ne2e pipeline OK — all layers compose.");
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Tour of the repo's extensions beyond the paper's 2D experiments —
+//! the §VII future-work items and baselines, all runnable:
+//!
+//! 1. PFFT-FPM-3D (slab-decomposed 3D-DFT) — measured + verified,
+//! 2. the distributed-cluster model (homogeneous + heterogeneous),
+//! 3. the time/energy Pareto front (bi-objective partitioning),
+//! 4. the dynamic work-stealing baseline, real execution.
+//!
+//! ```sh
+//! cargo run --release --example extensions_tour
+//! ```
+
+use hclfft::coordinator::dynamic::pfft_dynamic;
+use hclfft::coordinator::energy::pareto_front;
+use hclfft::coordinator::engine::NativeEngine;
+use hclfft::coordinator::fpm::Curve;
+use hclfft::coordinator::pfft3d::pfft_fpm_3d;
+use hclfft::dft::dft3d::{dft3d, SignalCube};
+use hclfft::dft::fft::Direction;
+use hclfft::dft::SignalMatrix;
+use hclfft::simulator::cluster::{strong_scaling, VirtualCluster};
+use hclfft::simulator::fpm::SimTestbed;
+use hclfft::simulator::Package;
+
+fn main() -> Result<(), String> {
+    // ---- 1. 3D-DFT ----------------------------------------------------
+    println!("== 1. PFFT-FPM-3D (paper §VII future work) ==");
+    let n = 32;
+    let orig = SignalCube::random(n, 1);
+    let mut slab = orig.clone();
+    let t0 = std::time::Instant::now();
+    pfft_fpm_3d(&NativeEngine, &mut slab, &[12, 20], 1, 16).map_err(|e| e.to_string())?;
+    let t_slab = t0.elapsed().as_secs_f64();
+    let mut serial = orig.clone();
+    dft3d(&mut serial, Direction::Forward, 1);
+    let err = slab.max_abs_diff(&serial) / serial.norm().max(1.0);
+    println!("  {n}^3 cube, imbalanced slabs (12, 20): {:.1} ms, rel err {err:.2e}\n", t_slab * 1e3);
+
+    // ---- 2. cluster scaling -------------------------------------------
+    println!("== 2. distributed clusters (virtual, N = 24704, MKL nodes) ==");
+    for pt in strong_scaling(Package::Mkl, 24_704, &[1, 2, 4, 8], 0.0) {
+        println!(
+            "  homogeneous {} node(s): t = {:.3}s, speedup {:.2}x",
+            pt.nodes, pt.t_fpm, pt.speedup_vs_single
+        );
+    }
+    let het = VirtualCluster::heterogeneous(Package::Mkl, 4, 0.4);
+    let (t_fpm, d) = het.dft2d_time_fpm(24_704).map_err(|e| e.to_string())?;
+    let t_bal = het.dft2d_time_balanced(24_704);
+    println!(
+        "  heterogeneous 4 nodes (40% skew): HPOPTA d = {d:?} -> {:.3}s vs balanced {:.3}s ({:.0}% faster)\n",
+        t_fpm,
+        t_bal,
+        100.0 * (1.0 - t_fpm / t_bal)
+    );
+
+    // ---- 3. energy Pareto front ----------------------------------------
+    println!("== 3. time/energy Pareto front (bi-objective partitioning) ==");
+    let tb = SimTestbed::paper_best(Package::Mkl);
+    let n2d = 12_800;
+    let speed = tb.plane_sections(n2d);
+    let energy: Vec<Curve> = speed
+        .iter()
+        .map(|c| {
+            let joules: Vec<f64> =
+                c.xs.iter()
+                    .zip(&c.speeds)
+                    .map(|(&x, &s)| x as f64 / s * (120.0 + 90.0 * x as f64 / n2d as f64))
+                    .collect();
+            Curve::new(c.xs.clone(), joules)
+        })
+        .collect();
+    let front = pareto_front(&speed, &energy, n2d - n2d % 128).map_err(|e| e.to_string())?;
+    println!("  {} Pareto points; extremes:", front.len());
+    if let (Some(fast), Some(frugal)) = (front.first(), front.last()) {
+        println!("    fastest: t = {:.3}, E = {:.1}", fast.makespan, fast.energy);
+        println!(
+            "    most frugal: t = {:.3} (+{:.0}%), E = {:.1} (−{:.0}%)\n",
+            frugal.makespan,
+            100.0 * (frugal.makespan / fast.makespan - 1.0),
+            frugal.energy,
+            100.0 * (1.0 - frugal.energy / fast.energy)
+        );
+    }
+
+    // ---- 4. dynamic baseline, real execution ---------------------------
+    println!("== 4. dynamic work-stealing baseline (real, native engine) ==");
+    let n = 128;
+    let orig2 = SignalMatrix::random(n, n, 2);
+    let mut m = orig2.clone();
+    let rep = pfft_dynamic(&NativeEngine, &mut m, 2, 1, 16, 64).map_err(|e| e.to_string())?;
+    let mut want = orig2.clone();
+    hclfft::dft::dft2d::dft2d(&mut want, Direction::Forward, 1);
+    let err = m.max_abs_diff(&want) / want.norm().max(1.0);
+    println!(
+        "  N={n}: {:.1} ms, chunks stolen per group {:?}, rel err {err:.2e}",
+        rep.elapsed_s * 1e3,
+        rep.chunks_per_group
+    );
+    println!("\nextensions tour OK");
+    Ok(())
+}

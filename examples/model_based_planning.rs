@@ -1,0 +1,61 @@
+//! Model-based planning walkthrough on the paper's running example:
+//! Intel MKL FFT, N = 24704, two abstract processors of 18 threads
+//! (Figures 9-12) — plane sections, the ε-identity test, HPOPTA, and the
+//! pad-length selection, on the calibrated virtual testbed.
+//!
+//! ```sh
+//! cargo run --release --example model_based_planning
+//! ```
+
+use hclfft::coordinator::pad::{determine_pad_length, PadCost};
+use hclfft::coordinator::partition::{balanced, curves_identical, hpopta, predict_makespan};
+use hclfft::simulator::fpm::SimTestbed;
+use hclfft::simulator::vexec::PAD_WINDOW;
+use hclfft::simulator::Package;
+
+fn main() -> Result<(), String> {
+    let n = 24_704;
+    let tb = SimTestbed::paper_best(Package::Mkl);
+    println!(
+        "virtual testbed: {} with (p={}, t={})\n",
+        tb.model.package.name(),
+        tb.cfg.p,
+        tb.cfg.t
+    );
+
+    // Step 1a — intersect the FPM surfaces with the plane y = N.
+    let curves = tb.plane_sections(n);
+    println!(
+        "plane y = {n}: {} grid points per group (memory-capped)",
+        curves[0].len()
+    );
+
+    // Step 1b — are the group speed functions identical within 5%?
+    let identical = curves_identical(&curves, 0.05);
+    println!("ε-identity test (ε = 0.05): {}", if identical { "identical -> POPTA" } else { "heterogeneous -> HPOPTA" });
+
+    // Step 1c/1d — partition.
+    let part = hpopta(&curves, n).map_err(|e| e.to_string())?;
+    let bal = balanced(tb.cfg.p, n);
+    let bal_makespan = predict_makespan(&curves, &bal.d);
+    println!("HPOPTA:   d = {:?}, makespan {:.4}", part.d, part.makespan);
+    println!("balanced: d = {:?}, makespan {:.4}", bal.d, bal_makespan);
+    println!(
+        "predicted gain over load-balancing: {:.1}%  (paper's example: d = (11648, 13056))\n",
+        100.0 * (1.0 - part.makespan / bal_makespan)
+    );
+
+    // PFFT-FPM-PAD Step 2 — pad lengths from the column sections.
+    for (i, &di) in part.d.iter().enumerate() {
+        let col = tb.column_section(i + 1, di, n, PAD_WINDOW);
+        let dec = determine_pad_length(&col, di, n, PadCost::PaperRatio);
+        println!(
+            "group{}: x = {di} rows -> N_padded = {} (predicted gain {:.1}%)",
+            i + 1,
+            dec.n_padded,
+            100.0 * dec.n_padded_gain()
+        );
+    }
+    println!("(paper's example pads both groups to 24960)");
+    Ok(())
+}

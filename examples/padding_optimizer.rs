@@ -1,0 +1,58 @@
+//! Padding as a performance lever: sweep the virtual campaign and report
+//! where PFFT-FPM-PAD beats PFFT-FPM, by how much, and which pad lengths
+//! get chosen — the mechanism behind Figures 16/21.
+//!
+//! Also demonstrates the exact-flops ablation of the pad cost model
+//! (DESIGN.md §Perf).
+//!
+//! ```sh
+//! cargo run --release --example padding_optimizer
+//! ```
+
+use hclfft::coordinator::pad::{determine_pad_length, PadCost};
+use hclfft::simulator::fpm::SimTestbed;
+use hclfft::simulator::vexec::{simulate_size, PAD_WINDOW};
+use hclfft::simulator::Package;
+
+fn main() {
+    let tb = SimTestbed::paper_best(Package::Mkl);
+    let sizes: Vec<usize> = (0..30).map(|k| 10_048 + 1_152 * k).collect();
+
+    println!("{:>7} {:>10} {:>10} {:>9} {:>11}", "N", "t_fpm(s)", "t_pad(s)", "gain", "pads");
+    let mut padded_count = 0usize;
+    let mut gain_sum = 0.0f64;
+    for &n in &sizes {
+        let p = simulate_size(&tb, n);
+        let gain = p.t_fpm / p.t_pad;
+        let padded = p.pads.iter().any(|&v| v != n);
+        if padded {
+            padded_count += 1;
+            gain_sum += gain;
+        }
+        println!(
+            "{:>7} {:>10.4} {:>10.4} {:>8.2}x {:>11}",
+            n,
+            p.t_fpm,
+            p.t_pad,
+            gain,
+            if padded { format!("{:?}", p.pads) } else { "none".to_string() }
+        );
+    }
+    println!(
+        "\npadding chosen on {padded_count}/{} sizes; mean gain when padded {:.2}x",
+        sizes.len(),
+        if padded_count > 0 { gain_sum / padded_count as f64 } else { 1.0 }
+    );
+
+    // ablation: paper-ratio vs exact-flops cost on one size
+    let n = 24_704;
+    let curves = tb.plane_sections(n);
+    let part = hclfft::coordinator::partition::hpopta(&curves, n).unwrap();
+    let col = tb.column_section(1, part.d[0], n, PAD_WINDOW);
+    let paper = determine_pad_length(&col, part.d[0], n, PadCost::PaperRatio);
+    let exact = determine_pad_length(&col, part.d[0], n, PadCost::ExactFlops);
+    println!(
+        "\ncost-model ablation at N = {n}: paper-ratio pads to {}, exact-flops to {}",
+        paper.n_padded, exact.n_padded
+    );
+}

@@ -1,0 +1,52 @@
+//! Quickstart: compute a 2D-DFT with the model-based coordinator in
+//! five steps — profile, plan, execute, verify, report.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use hclfft::coordinator::engine::NativeEngine;
+use hclfft::coordinator::group::GroupConfig;
+use hclfft::coordinator::pfft::{pfft_fpm, pfft_lb, plan_partition};
+use hclfft::dft::{naive_dft2d, SignalMatrix};
+use hclfft::profiler::build_plane;
+
+fn main() -> Result<(), String> {
+    let n = 256; // signal matrix is n x n complex
+    let cfg = GroupConfig::new(2, 1); // p = 2 abstract processors, t = 1
+
+    // 1. Profile: build the speed functions (FPMs) of the two abstract
+    //    processors on the plane y = n, with the paper's Student's-t
+    //    measurement loop (rep counts scaled down for a demo).
+    println!("profiling {} on the y = {n} plane...", cfg);
+    let xs: Vec<usize> = (1..=8).map(|k| k * n / 8).collect();
+    let fpms = build_plane(&NativeEngine, cfg, xs, n, 10_000);
+
+    // 2. Plan: ε-identity test, then POPTA (identical) or HPOPTA
+    //    (heterogeneous) — PFFT-FPM Step 1.
+    let part = plan_partition(&fpms, n, 0.05).map_err(|e| e.to_string())?;
+    println!("planned distribution d = {:?} ({:?})", part.d, part.algorithm);
+
+    // 3. Execute PFFT-FPM on a random complex signal matrix.
+    let signal = SignalMatrix::random(n, n, 42);
+    let mut out = signal.clone();
+    let report =
+        pfft_fpm(&NativeEngine, &mut out, &part.d, cfg.t, 64).map_err(|e| e.to_string())?;
+    println!("PFFT-FPM executed in {:.3} ms", report.elapsed_s * 1e3);
+
+    // 4. Verify against the O(N^2)-per-row naive oracle.
+    let want = naive_dft2d(&signal);
+    let rel_err = out.max_abs_diff(&want) / want.norm().max(1.0);
+    println!("verified vs naive 2D-DFT: rel err {rel_err:.2e}");
+    assert!(rel_err < 1e-9);
+
+    // 5. Compare with the balanced baseline (PFFT-LB).
+    let mut lb_out = signal.clone();
+    let lb = pfft_lb(&NativeEngine, &mut lb_out, cfg, 64).map_err(|e| e.to_string())?;
+    println!(
+        "PFFT-LB (balanced) took {:.3} ms -> speedup {:.2}x",
+        lb.elapsed_s * 1e3,
+        lb.elapsed_s / report.elapsed_s
+    );
+    Ok(())
+}

@@ -1,0 +1,106 @@
+"""AOT lowering: JAX/Pallas model -> HLO text artifacts for the rust runtime.
+
+Python runs ONCE, at build time (``make artifacts``); the rust binary is
+self-contained afterwards. Interchange format is HLO **text**, not a
+serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version behind the published ``xla``
+crate) rejects; the text parser reassigns ids and round-trips cleanly.
+(See /opt/xla-example/README.md.)
+
+Artifact grid
+-------------
+* ``row_fft_<rows>x<n>.hlo.txt``   — forward row-FFT stage, (rows, n)
+* ``row_ifft_<rows>x<n>.hlo.txt``  — inverse row-FFT stage
+* ``full2d_<n>.hlo.txt``           — whole 2D-DFT, (n, n)
+
+Row chunk sizes {1, 8, 32, 128} let the rust coordinator greedily tile any
+partition d_i; n covers the power-of-two ladder the real-machine
+experiments use. ``manifest.tsv`` (kind, rows, n, file) is the index the
+rust side parses — TSV, not JSON, because the offline vendor set has no
+serde and a 4-column table does not need one.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+ROW_CHUNKS = (1, 8, 32, 128)
+ROW_FFT_SIZES = (128, 256, 512, 1024, 2048)
+FULL2D_SIZES = (128, 256, 512)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_row_fft(rows: int, n: int, inverse: bool = False) -> str:
+    spec = jax.ShapeDtypeStruct((rows, n), jnp.float32)
+    fn = functools.partial(model.row_fft_stage, inverse=inverse)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def lower_full2d(n: int) -> str:
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    return to_hlo_text(jax.jit(model.dft2d).lower(spec, spec))
+
+
+def build(out_dir: str, row_chunks=ROW_CHUNKS, sizes=ROW_FFT_SIZES,
+          full2d_sizes=FULL2D_SIZES, verbose: bool = True) -> list[tuple]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: list[tuple] = []  # (kind, rows, n, filename)
+
+    def emit(kind: str, rows: int, n: int, text: str) -> None:
+        fname = f"{kind}_{rows}x{n}.hlo.txt" if kind != "full2d" else f"full2d_{n}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest.append((kind, rows, n, fname))
+        if verbose:
+            print(f"  {fname}: {len(text)} chars")
+
+    for n in sizes:
+        for rows in row_chunks:
+            if rows > n:
+                continue
+            emit("row_fft", rows, n, lower_row_fft(rows, n, inverse=False))
+            emit("row_ifft", rows, n, lower_row_fft(rows, n, inverse=True))
+    for n in full2d_sizes:
+        emit("full2d", n, n, lower_full2d(n))
+
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("# kind\trows\tn\tfile\n")
+        for kind, rows, n, fname in manifest:
+            f.write(f"{kind}\t{rows}\t{n}\t{fname}\n")
+    if verbose:
+        print(f"wrote {len(manifest)} artifacts + manifest.tsv to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="small grid for CI smoke runs")
+    args = ap.parse_args()
+    if args.quick:
+        build(args.out_dir, row_chunks=(1, 8), sizes=(128,), full2d_sizes=(128,))
+    else:
+        build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""L1 — Pallas batched row-FFT kernel (Stockham radix-2 autosort).
+
+The paper's compute hot spot is "x row 1D-FFTs of length y"
+(``1D_ROW_FFTS_LOCAL``, Algorithm 6). This kernel is that routine: it
+transforms a block of rows, each a power-of-two length-``n`` complex
+signal stored as split float32 re/im planes.
+
+Why Stockham (and not Cooley-Tukey + bit reversal):
+
+* autosorting — no data-dependent permutation, every stage is a dense
+  strided reshape + multiply + stack, i.e. exactly the kind of
+  gather-free tile op the TPU VPU/MXU likes;
+* the (rows_block, n) tile is the natural VMEM block: rows map to the
+  sublane/batch axis, the transform axis stays whole in-lane;
+* log2(n) stages of O(1) jnp ops keep the traced HLO tiny (important
+  because the AOT grid lowers dozens of shapes).
+
+The kernel MUST run with ``interpret=True``: the CPU PJRT plugin used by
+the rust runtime cannot execute Mosaic custom-calls (see DESIGN.md
+§Hardware-Adaptation).
+
+Hardware adaptation note (paper targets a 2-socket Haswell): the paper
+parallelises rows across thread groups; here the grid dimension blocks
+rows, so ``grid=(rows/block_rows,)`` plays the role of the OpenMP
+section, and the L3 rust coordinator plays the role of the paper's
+abstract processors by dispatching row *chunks* to PJRT executables.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default rows-per-grid-step. 8 rows x 4096 cols x 2 planes x 4B = 256 KiB,
+# comfortably inside a TPU core's ~16 MiB VMEM together with the stage
+# ping-pong buffer; see DESIGN.md §Perf for the sweep.
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _stockham_stages(xr, xi, n: int, inverse: bool):
+    """Run log2(n) Stockham radix-2 DIF stages over the last axis.
+
+    State layout: (rows, n_cur, s) where the original index is
+    ``q + s * p`` with p in [0, n_cur), q in [0, s). Starts at
+    (rows, n, 1); each stage halves n_cur and doubles s; ends at
+    (rows, 1, n) holding the transform in natural order.
+    """
+    rows = xr.shape[0]
+    xr = xr.reshape(rows, n, 1)
+    xi = xi.reshape(rows, n, 1)
+    n_cur, s = n, 1
+    sign = 1.0 if inverse else -1.0
+    while n_cur > 1:
+        m = n_cur // 2
+        ar, ai = xr[:, :m, :], xi[:, :m, :]
+        br, bi = xr[:, m:, :], xi[:, m:, :]
+        # Twiddles w_p = exp(sign * 2*pi*i * p / n_cur); constant-folded by
+        # XLA since n_cur is static.
+        ang = sign * 2.0 * math.pi * (jnp.arange(m, dtype=jnp.float32) / n_cur)
+        wr = jnp.cos(ang)[None, :, None]
+        wi = jnp.sin(ang)[None, :, None]
+        sum_r, sum_i = ar + br, ai + bi
+        dif_r, dif_i = ar - br, ai - bi
+        tw_r = dif_r * wr - dif_i * wi
+        tw_i = dif_r * wi + dif_i * wr
+        # Stockham interleave: out[p, 2q..] keeps (sum, twiddled) adjacent.
+        xr = jnp.stack([sum_r, tw_r], axis=2).reshape(rows, m, 2 * s)
+        xi = jnp.stack([sum_i, tw_i], axis=2).reshape(rows, m, 2 * s)
+        n_cur, s = m, 2 * s
+    xr = xr.reshape(rows, n)
+    xi = xi.reshape(rows, n)
+    if inverse:
+        xr = xr / n
+        xi = xi / n
+    return xr, xi
+
+
+def _row_fft_kernel(re_ref, im_ref, out_re_ref, out_im_ref, *, n: int, inverse: bool):
+    """Pallas kernel body: FFT every row of the (block_rows, n) tile."""
+    xr = re_ref[...]
+    xi = im_ref[...]
+    yr, yi = _stockham_stages(xr, xi, n, inverse)
+    out_re_ref[...] = yr
+    out_im_ref[...] = yi
+
+
+def row_fft(re, im, *, inverse: bool = False, block_rows: int | None = None):
+    """Batched 1D FFT over the last axis of split-plane float32 inputs.
+
+    Args:
+      re, im: float32 arrays of shape (rows, n), n a power of two.
+      inverse: inverse transform (normalised by 1/n).
+      block_rows: rows per grid step (defaults to DEFAULT_BLOCK_ROWS,
+        clamped to rows; must divide rows).
+
+    Returns:
+      (re, im) float32 arrays of shape (rows, n).
+    """
+    rows, n = re.shape
+    if n & (n - 1) or n == 0:
+        raise ValueError(f"row length must be a power of two, got {n}")
+    if im.shape != re.shape:
+        raise ValueError(f"re/im shape mismatch: {re.shape} vs {im.shape}")
+    br = min(block_rows or DEFAULT_BLOCK_ROWS, rows)
+    if rows % br:
+        raise ValueError(f"block_rows {br} must divide rows {rows}")
+
+    kernel = functools.partial(_row_fft_kernel, n=n, inverse=inverse)
+    spec = pl.BlockSpec((br, n), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((rows, n), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[out_shape, out_shape],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(re, im)

@@ -1,0 +1,43 @@
+"""L1 — Pallas blocked matrix-transpose kernel.
+
+Port of the paper's Appendix A ``hcl_transpose_block`` to the TPU tiling
+model: instead of an OpenMP loop over (block_size x block_size) scalar
+blocks, the Pallas grid walks (n/b, n/b) tiles, the input BlockSpec maps
+grid cell (i, j) to source tile (j, i), and the kernel body transposes one
+tile in registers. The HBM<->VMEM schedule expressed by the BlockSpecs is
+exactly the paper's cache-blocking intent (block_size=64 there; 64 here).
+
+Used by the full-2D validation model; the rust L3 coordinator has its own
+native blocked transpose (rust/src/dft/transpose.rs) for the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 64
+
+
+def _transpose_kernel(in_ref, out_ref):
+    out_ref[...] = in_ref[...].T
+
+
+def transpose(x, *, block: int | None = None):
+    """Transpose a square (n, n) float32 matrix with b x b tiling."""
+    n, n2 = x.shape
+    if n != n2:
+        raise ValueError(f"square matrix required, got {x.shape}")
+    b = min(block or DEFAULT_BLOCK, n)
+    if n % b:
+        raise ValueError(f"block {b} must divide n {n}")
+    return pl.pallas_call(
+        _transpose_kernel,
+        grid=(n // b, n // b),
+        # read the mirrored source tile, write the natural destination tile
+        in_specs=[pl.BlockSpec((b, b), lambda i, j: (j, i))],
+        out_specs=pl.BlockSpec((b, b), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(x)

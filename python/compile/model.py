@@ -1,0 +1,52 @@
+"""L2 — JAX compute graph for the 2D-DFT row-column decomposition.
+
+Two entry points, both lowered AOT to HLO text by ``aot.py`` and executed
+from the rust L3 coordinator via PJRT:
+
+* ``row_fft_stage`` — the unit the paper's abstract processors execute:
+  ``x`` row 1D-FFTs of length ``n`` (Algorithm 6, ``1D_ROW_FFTS_LOCAL``).
+  The rust coordinator implements PFFT-LB / PFFT-FPM / PFFT-FPM-PAD by
+  dispatching chunks of rows to these executables and transposing
+  natively between the two phases.
+
+* ``dft2d`` — the whole row-column decomposition (Section III-A) in one
+  graph: row FFTs -> transpose -> row FFTs -> transpose. Used as the
+  single-executable baseline ("basic FFT, one group") and as an
+  end-to-end numeric cross-check of the rust-orchestrated path.
+
+Complex data is split float32 re/im planes throughout (see kernels/ref.py
+for why).
+"""
+
+from __future__ import annotations
+
+from .kernels import fft as fft_kernel
+from .kernels import transpose as transpose_kernel
+
+
+def row_fft_stage(re, im, *, inverse: bool = False, block_rows: int | None = None):
+    """x row 1D-FFTs of length n over (rows, n) split-plane inputs."""
+    return tuple(fft_kernel.row_fft(re, im, inverse=inverse, block_rows=block_rows))
+
+
+def dft2d(re, im, *, block_rows: int | None = None, transpose_block: int | None = None):
+    """Full 2D-DFT of an (n, n) split-plane signal matrix.
+
+    Row-column decomposition exactly as the paper's PFFT-LB steps 1-4,
+    fused into one XLA program: the two transposes use the Pallas blocked
+    transpose kernel so the whole pipeline exercises both L1 kernels.
+    """
+    n, n2 = re.shape
+    if n != n2:
+        raise ValueError(f"square signal matrix required, got {re.shape}")
+    # Step 1: 1D-FFTs on rows.
+    re, im = fft_kernel.row_fft(re, im, block_rows=block_rows)
+    # Step 2: transpose.
+    re = transpose_kernel.transpose(re, block=transpose_block)
+    im = transpose_kernel.transpose(im, block=transpose_block)
+    # Step 3: 1D-FFTs on rows (former columns).
+    re, im = fft_kernel.row_fft(re, im, block_rows=block_rows)
+    # Step 4: transpose back.
+    re = transpose_kernel.transpose(re, block=transpose_block)
+    im = transpose_kernel.transpose(im, block=transpose_block)
+    return re, im

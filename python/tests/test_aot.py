@@ -1,0 +1,77 @@
+"""AOT pipeline tests: lowering produces valid HLO text + a sane manifest.
+
+These run the same lowering code path as ``make artifacts`` on a small
+grid, and additionally check the HLO is loadable by the *same* text parser
+the rust side uses (via xla_client round-trip).
+"""
+
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def small_grid(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(out, row_chunks=(1, 8), sizes=(128,),
+                         full2d_sizes=(128,), verbose=False)
+    return out, manifest
+
+
+def test_manifest_contents(small_grid):
+    out, manifest = small_grid
+    kinds = {m[0] for m in manifest}
+    assert kinds == {"row_fft", "row_ifft", "full2d"}
+    # 2 chunks x 1 size x 2 directions + 1 full2d
+    assert len(manifest) == 5
+    for kind, rows, n, fname in manifest:
+        assert os.path.exists(os.path.join(out, fname))
+
+
+def test_manifest_tsv_parses(small_grid):
+    out, manifest = small_grid
+    lines = open(os.path.join(out, "manifest.tsv")).read().strip().splitlines()
+    assert lines[0].startswith("#")
+    rows = [l.split("\t") for l in lines[1:]]
+    assert len(rows) == len(manifest)
+    for kind, r, n, fname in rows:
+        assert kind in ("row_fft", "row_ifft", "full2d")
+        assert int(r) > 0 and int(n) > 0
+        assert fname.endswith(".hlo.txt")
+
+
+def test_hlo_text_is_entry_computation(small_grid):
+    out, manifest = small_grid
+    for kind, rows, n, fname in manifest:
+        text = open(os.path.join(out, fname)).read()
+        assert "ENTRY" in text, f"{fname} lacks ENTRY computation"
+        assert "f32[" in text
+
+
+def test_hlo_executes_under_jax(small_grid):
+    """Compile the lowered row_fft HLO back and run it — numerics intact."""
+    import numpy as np
+    import jax.numpy as jnp
+    from compile.kernels.ref import fft_rows_ref
+
+    out, manifest = small_grid
+    fname = next(m[3] for m in manifest if m[0] == "row_fft" and m[1] == 8)
+    # round-trip through the text parser the rust loader uses
+    from jax._src.lib import xla_client as xc
+    text = open(os.path.join(out, fname)).read()
+    # parsing check: the proto must materialise from text
+    mod = xc._xla.hlo_module_from_text(text)
+    assert mod is not None
+
+    # numeric check via jax on the original function (the HLO itself is
+    # executed on the rust side in rust/tests/runtime_integration.rs)
+    rng = np.random.default_rng(0)
+    re = rng.standard_normal((8, 128)).astype(np.float32)
+    im = rng.standard_normal((8, 128)).astype(np.float32)
+    from compile import model
+    mr, mi = model.row_fft_stage(jnp.asarray(re), jnp.asarray(im))
+    rr, ri = fft_rows_ref(re, im)
+    np.testing.assert_allclose(mr, rr, rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(mi, ri, rtol=3e-3, atol=3e-3)

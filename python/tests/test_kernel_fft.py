@@ -1,0 +1,156 @@
+"""L1 kernel vs oracle — the CORE build-time correctness signal.
+
+The Pallas Stockham kernel is compared against two independent references
+(jnp.fft and the naive O(N^2) DFT-matrix oracle), plus algebraic FFT
+properties (linearity, impulse, Parseval, roundtrip). Hypothesis sweeps
+shapes and seeds.
+"""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fft import row_fft, DEFAULT_BLOCK_ROWS
+from compile.kernels.ref import dft_rows_naive, fft_rows_ref
+
+RTOL = 2e-4
+ATOL = 2e-4
+
+
+def rand_planes(rng, rows, n):
+    return (
+        rng.standard_normal((rows, n)).astype(np.float32),
+        rng.standard_normal((rows, n)).astype(np.float32),
+    )
+
+
+def tol(n):
+    # float32 FFT error grows ~ sqrt(log n); scale tolerance accordingly.
+    return dict(rtol=RTOL * math.log2(max(n, 2)), atol=ATOL * math.log2(max(n, 2)))
+
+
+@pytest.mark.parametrize("rows,n", [(1, 2), (1, 8), (4, 16), (8, 64),
+                                    (16, 128), (8, 256), (4, 512), (2, 1024)])
+def test_kernel_matches_jnp_fft(rows, n):
+    rng = np.random.default_rng(rows * 1000 + n)
+    re, im = rand_planes(rng, rows, n)
+    kr, ki = row_fft(jnp.asarray(re), jnp.asarray(im))
+    rr, ri = fft_rows_ref(re, im)
+    np.testing.assert_allclose(kr, rr, **tol(n))
+    np.testing.assert_allclose(ki, ri, **tol(n))
+
+
+@pytest.mark.parametrize("rows,n", [(2, 4), (4, 32), (8, 128)])
+def test_kernel_matches_naive_dft(rows, n):
+    rng = np.random.default_rng(42 + n)
+    re, im = rand_planes(rng, rows, n)
+    kr, ki = row_fft(jnp.asarray(re), jnp.asarray(im))
+    nr, ni = dft_rows_naive(re, im)
+    np.testing.assert_allclose(kr, nr, **tol(n))
+    np.testing.assert_allclose(ki, ni, **tol(n))
+
+
+@pytest.mark.parametrize("rows,n", [(4, 16), (8, 128), (2, 512)])
+def test_inverse_roundtrip(rows, n):
+    rng = np.random.default_rng(7 + n)
+    re, im = rand_planes(rng, rows, n)
+    fr, fi = row_fft(jnp.asarray(re), jnp.asarray(im))
+    br, bi = row_fft(fr, fi, inverse=True)
+    np.testing.assert_allclose(br, re, **tol(n))
+    np.testing.assert_allclose(bi, im, **tol(n))
+
+
+def test_impulse_is_flat_spectrum():
+    n = 64
+    re = np.zeros((1, n), np.float32)
+    im = np.zeros((1, n), np.float32)
+    re[0, 0] = 1.0
+    kr, ki = row_fft(jnp.asarray(re), jnp.asarray(im))
+    np.testing.assert_allclose(kr, np.ones((1, n)), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ki, np.zeros((1, n)), rtol=1e-5, atol=1e-5)
+
+
+def test_constant_signal_is_delta():
+    n = 128
+    re = np.ones((2, n), np.float32)
+    im = np.zeros((2, n), np.float32)
+    kr, ki = row_fft(jnp.asarray(re), jnp.asarray(im))
+    expect = np.zeros((2, n), np.float32)
+    expect[:, 0] = n
+    np.testing.assert_allclose(kr, expect, atol=1e-3)
+    np.testing.assert_allclose(ki, np.zeros((2, n)), atol=1e-3)
+
+
+def test_linearity():
+    rng = np.random.default_rng(3)
+    re1, im1 = rand_planes(rng, 4, 64)
+    re2, im2 = rand_planes(rng, 4, 64)
+    a, b = 2.5, -1.25
+    f1 = row_fft(jnp.asarray(re1), jnp.asarray(im1))
+    f2 = row_fft(jnp.asarray(re2), jnp.asarray(im2))
+    fs = row_fft(jnp.asarray(a * re1 + b * re2), jnp.asarray(a * im1 + b * im2))
+    np.testing.assert_allclose(fs[0], a * f1[0] + b * f2[0], **tol(64))
+    np.testing.assert_allclose(fs[1], a * f1[1] + b * f2[1], **tol(64))
+
+
+def test_parseval():
+    rng = np.random.default_rng(11)
+    re, im = rand_planes(rng, 4, 256)
+    kr, ki = row_fft(jnp.asarray(re), jnp.asarray(im))
+    time_energy = (re**2 + im**2).sum()
+    freq_energy = float((np.asarray(kr) ** 2 + np.asarray(ki) ** 2).sum()) / 256
+    assert abs(time_energy - freq_energy) / time_energy < 1e-4
+
+
+def test_rejects_non_power_of_two():
+    re = np.zeros((2, 12), np.float32)
+    with pytest.raises(ValueError, match="power of two"):
+        row_fft(jnp.asarray(re), jnp.asarray(re))
+
+
+def test_rejects_mismatched_planes():
+    re = np.zeros((2, 16), np.float32)
+    im = np.zeros((2, 8), np.float32)
+    with pytest.raises(ValueError):
+        row_fft(jnp.asarray(re), jnp.asarray(im))
+
+
+def test_rejects_bad_block_rows():
+    re = np.zeros((6, 16), np.float32)
+    with pytest.raises(ValueError, match="divide"):
+        row_fft(jnp.asarray(re), jnp.asarray(re), block_rows=4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows_pow=st.integers(min_value=0, max_value=4),
+    n_pow=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    inverse=st.booleans(),
+)
+def test_hypothesis_kernel_vs_ref(rows_pow, n_pow, seed, inverse):
+    rows, n = 2**rows_pow, 2**n_pow
+    rng = np.random.default_rng(seed)
+    re, im = rand_planes(rng, rows, n)
+    kr, ki = row_fft(jnp.asarray(re), jnp.asarray(im), inverse=inverse)
+    rr, ri = fft_rows_ref(re, im, inverse=inverse)
+    if inverse:
+        rr, ri = rr / n, ri / n  # ref returns unnormalised inverse
+    np.testing.assert_allclose(kr, rr, **tol(n))
+    np.testing.assert_allclose(ki, ri, **tol(n))
+
+
+@settings(max_examples=10, deadline=None)
+@given(block_pow=st.integers(min_value=0, max_value=4))
+def test_hypothesis_block_rows_invariance(block_pow):
+    """Result must not depend on the grid blocking."""
+    rows, n = 16, 64
+    rng = np.random.default_rng(99)
+    re, im = rand_planes(rng, rows, n)
+    base = row_fft(jnp.asarray(re), jnp.asarray(im), block_rows=rows)
+    blocked = row_fft(jnp.asarray(re), jnp.asarray(im), block_rows=2**block_pow)
+    np.testing.assert_allclose(base[0], blocked[0], rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(base[1], blocked[1], rtol=1e-6, atol=1e-6)

@@ -1,0 +1,48 @@
+"""L2 model tests: full 2D-DFT graph vs jnp.fft.fft2 and shape contracts."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels.ref import dft2d_ref
+
+
+@pytest.mark.parametrize("n", [8, 64, 128])
+def test_dft2d_matches_fft2(n):
+    rng = np.random.default_rng(n)
+    re = rng.standard_normal((n, n)).astype(np.float32)
+    im = rng.standard_normal((n, n)).astype(np.float32)
+    mr, mi = model.dft2d(jnp.asarray(re), jnp.asarray(im),
+                         block_rows=min(8, n), transpose_block=min(64, n))
+    rr, ri = dft2d_ref(re, im)
+    # 2D float32 FFT: absolute error scales with n; use a scaled tolerance.
+    scale = np.abs(np.asarray(rr)).max() + 1.0
+    np.testing.assert_allclose(np.asarray(mr) / scale, np.asarray(rr) / scale, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(mi) / scale, np.asarray(ri) / scale, atol=3e-5)
+
+
+def test_dft2d_rejects_non_square():
+    re = jnp.zeros((4, 8), jnp.float32)
+    with pytest.raises(ValueError, match="square"):
+        model.dft2d(re, re)
+
+
+def test_row_fft_stage_shapes():
+    re = jnp.zeros((8, 64), jnp.float32)
+    out = model.row_fft_stage(re, re)
+    assert isinstance(out, tuple) and len(out) == 2
+    assert out[0].shape == (8, 64) and out[1].shape == (8, 64)
+    assert out[0].dtype == jnp.float32
+
+
+def test_row_fft_stage_row_independence():
+    """Each row transforms independently — permuting rows commutes."""
+    rng = np.random.default_rng(1)
+    re = rng.standard_normal((8, 32)).astype(np.float32)
+    im = rng.standard_normal((8, 32)).astype(np.float32)
+    perm = rng.permutation(8)
+    a = model.row_fft_stage(jnp.asarray(re), jnp.asarray(im), block_rows=8)
+    b = model.row_fft_stage(jnp.asarray(re[perm]), jnp.asarray(im[perm]), block_rows=8)
+    np.testing.assert_allclose(np.asarray(a[0])[perm], b[0], rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a[1])[perm], b[1], rtol=1e-6, atol=1e-6)

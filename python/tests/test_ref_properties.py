@@ -1,0 +1,79 @@
+"""Property tests on the reference oracles themselves (the kernel tests
+lean on these oracles, so their own algebra is verified independently)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    dft_matrix,
+    dft_rows_naive,
+    dft2d_ref,
+    fft_rows_ref,
+    from_complex,
+    to_complex,
+)
+
+
+def test_dft_matrix_is_unitary_up_to_scale():
+    n = 16
+    w = dft_matrix(n)
+    prod = w @ w.conj().T
+    np.testing.assert_allclose(prod, n * np.eye(n), atol=1e-9)
+
+
+def test_dft_matrix_inverse_is_actual_inverse():
+    n = 12
+    f = dft_matrix(n)
+    b = dft_matrix(n, inverse=True)
+    np.testing.assert_allclose(f @ b, np.eye(n), atol=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=32),
+    rows=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_naive_matches_jnp_fft_any_length(n, rows, seed):
+    # the naive oracle covers arbitrary (non-pow2) lengths
+    rng = np.random.default_rng(seed)
+    re = rng.standard_normal((rows, n)).astype(np.float32)
+    im = rng.standard_normal((rows, n)).astype(np.float32)
+    nr, ni = dft_rows_naive(re, im)
+    rr, ri = fft_rows_ref(re, im)
+    np.testing.assert_allclose(nr, rr, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(ni, ri, rtol=1e-3, atol=1e-3)
+
+
+def test_complex_split_roundtrip():
+    rng = np.random.default_rng(0)
+    z = rng.standard_normal((3, 5)) + 1j * rng.standard_normal((3, 5))
+    z32 = jnp.asarray(z, dtype=jnp.complex64)
+    re, im = from_complex(z32)
+    back = to_complex(re, im)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(z32), rtol=1e-6)
+
+
+def test_dft2d_ref_separability():
+    # fft2 equals row-transform then column-transform
+    rng = np.random.default_rng(1)
+    re = rng.standard_normal((8, 8)).astype(np.float32)
+    im = rng.standard_normal((8, 8)).astype(np.float32)
+    rr, ri = dft2d_ref(re, im)
+    # manual: rows, transpose, rows, transpose
+    ar, ai = fft_rows_ref(re, im)
+    ar, ai = np.asarray(ar).T, np.asarray(ai).T
+    br, bi = fft_rows_ref(ar, ai)
+    br, bi = np.asarray(br).T, np.asarray(bi).T
+    np.testing.assert_allclose(rr, br, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(ri, bi, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [1, 2, 3])
+def test_tiny_sizes(n):
+    re = np.ones((1, n), np.float32)
+    im = np.zeros((1, n), np.float32)
+    nr, ni = dft_rows_naive(re, im)
+    assert nr[0, 0] == pytest.approx(n, rel=1e-6)

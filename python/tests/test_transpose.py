@@ -1,0 +1,50 @@
+"""Pallas blocked-transpose kernel tests (paper Appendix A analogue)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.transpose import transpose
+
+
+@pytest.mark.parametrize("n,block", [(4, 2), (64, 64), (128, 64), (256, 64), (64, 16)])
+def test_transpose_matches_numpy(n, block):
+    rng = np.random.default_rng(n)
+    x = rng.standard_normal((n, n)).astype(np.float32)
+    y = transpose(jnp.asarray(x), block=block)
+    np.testing.assert_array_equal(np.asarray(y), x.T)
+
+
+def test_transpose_involution():
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((128, 128)).astype(np.float32)
+    y = transpose(transpose(jnp.asarray(x)))
+    np.testing.assert_array_equal(np.asarray(y), x)
+
+
+def test_rejects_non_square():
+    x = np.zeros((4, 8), np.float32)
+    with pytest.raises(ValueError, match="square"):
+        transpose(jnp.asarray(x))
+
+
+def test_rejects_bad_block():
+    x = np.zeros((12, 12), np.float32)
+    with pytest.raises(ValueError, match="divide"):
+        transpose(jnp.asarray(x), block=8)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_pow=st.integers(min_value=1, max_value=8),
+    block_pow=st.integers(min_value=0, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_transpose(n_pow, block_pow, seed):
+    n = 2**n_pow
+    block = 2 ** min(block_pow, n_pow)
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, n)).astype(np.float32)
+    y = transpose(jnp.asarray(x), block=block)
+    np.testing.assert_array_equal(np.asarray(y), x.T)

@@ -1,0 +1,34 @@
+//! Bench: native row-FFT throughput across lengths — the real-machine
+//! analogue of the paper's speed functions (Figures 13-14). Reports
+//! MFLOPs via the paper's speed formula so numbers are comparable with
+//! the published plots.
+
+use hclfft::coordinator::engine::{NativeEngine, RowFftEngine};
+use hclfft::dft::fft::Direction;
+use hclfft::dft::SignalMatrix;
+use hclfft::stats::harness::{fft_flops, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::from_env("native_fft");
+    for &n in &[128usize, 256, 512, 1024, 2048] {
+        let rows = 64;
+        let mut m = SignalMatrix::random(rows, n, n as u64);
+        suite.bench_flops(&format!("row_fft_{rows}x{n}"), fft_flops(rows, n), || {
+            NativeEngine
+                .fft_rows(&mut m.re, &mut m.im, rows, n, Direction::Forward, 1)
+                .unwrap();
+        });
+    }
+    // non-pow2 (Bluestein) path — the paper's 128k grid sizes
+    for &n in &[192usize, 384, 1920] {
+        let rows = 32;
+        let mut m = SignalMatrix::random(rows, n, 1);
+        suite.bench_flops(&format!("bluestein_{rows}x{n}"), fft_flops(rows, n), || {
+            NativeEngine
+                .fft_rows(&mut m.re, &mut m.im, rows, n, Direction::Forward, 1)
+                .unwrap();
+        });
+    }
+    suite.write_json(std::path::Path::new("results/bench_native_fft.json")).ok();
+    println!("{}", suite.report());
+}

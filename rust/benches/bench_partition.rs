@@ -1,0 +1,32 @@
+//! Bench: POPTA/HPOPTA planning cost on paper-scale grids — shows the
+//! coordinator's Step 1 is negligible against the FFT it optimizes
+//! (the paper's 96-hour cost is FPM *construction*, not partitioning).
+
+use hclfft::coordinator::partition::{hpopta, popta};
+use hclfft::simulator::fpm::SimTestbed;
+use hclfft::simulator::Package;
+use hclfft::stats::harness::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::from_env("partition");
+    for &n in &[2_048usize, 12_800, 24_704, 44_800] {
+        let tb = SimTestbed::paper_best(Package::Mkl);
+        let curves = tb.plane_sections(n);
+        suite.bench(&format!("hpopta_p2_n{n}"), || {
+            hpopta(&curves, n - n % 128).unwrap();
+        });
+    }
+    for &n in &[12_800usize, 24_704] {
+        let tb = SimTestbed::paper_best(Package::Fftw3); // p = 4
+        let curves = tb.plane_sections(n);
+        suite.bench(&format!("hpopta_p4_n{n}"), || {
+            hpopta(&curves, n - n % 128).unwrap();
+        });
+        let avg = hclfft::coordinator::partition::average_curve(&curves);
+        suite.bench(&format!("popta_p4_n{n}"), || {
+            popta(&avg, 4, n - n % 128).unwrap();
+        });
+    }
+    suite.write_json(std::path::Path::new("results/bench_partition.json")).ok();
+    println!("{}", suite.report());
+}

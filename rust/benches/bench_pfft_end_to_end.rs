@@ -1,0 +1,41 @@
+//! Bench: the whole PFFT pipeline on the native engine — basic (one
+//! group) vs PFFT-LB vs PFFT-FPM vs PFFT-FPM-PAD. The real-machine
+//! analogue of Figures 15-24 (small N; the paper-scale campaign lives in
+//! the virtual testbed, `hclfft figures`).
+
+use hclfft::coordinator::engine::NativeEngine;
+use hclfft::coordinator::group::GroupConfig;
+use hclfft::coordinator::pad::{pads_for_distribution, PadCost};
+use hclfft::coordinator::pfft::{pfft_fpm, pfft_fpm_pad, pfft_lb, plan_partition};
+use hclfft::dft::SignalMatrix;
+use hclfft::profiler::build_plane;
+use hclfft::stats::harness::{fft2d_flops, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::from_env("pfft_end_to_end");
+    for &n in &[256usize, 512, 1024] {
+        let cfg = GroupConfig::new(2, 1);
+        let xs: Vec<usize> = (1..=4).map(|k| k * n / 4).collect();
+        let fpms = build_plane(&NativeEngine, cfg, xs, n, 10_000);
+        let part = plan_partition(&fpms, n, 0.05).unwrap();
+        let pads = pads_for_distribution(&fpms, &part.d, n, PadCost::PaperRatio);
+        let flops = fft2d_flops(n);
+
+        let mut m = SignalMatrix::random(n, n, 1);
+        suite.bench_flops(&format!("basic_1x2_n{n}"), flops, || {
+            pfft_lb(&NativeEngine, &mut m.clone(), GroupConfig::new(1, 2), 64).unwrap();
+        });
+        suite.bench_flops(&format!("pfft_lb_n{n}"), flops, || {
+            pfft_lb(&NativeEngine, &mut m.clone(), cfg, 64).unwrap();
+        });
+        suite.bench_flops(&format!("pfft_fpm_n{n}"), flops, || {
+            pfft_fpm(&NativeEngine, &mut m.clone(), &part.d, cfg.t, 64).unwrap();
+        });
+        suite.bench_flops(&format!("pfft_fpm_pad_n{n}"), flops, || {
+            pfft_fpm_pad(&NativeEngine, &mut m.clone(), &part.d, &pads, cfg.t, 64).unwrap();
+        });
+        let _ = &mut m;
+    }
+    suite.write_json(std::path::Path::new("results/bench_pfft_end_to_end.json")).ok();
+    println!("{}", suite.report());
+}

@@ -1,0 +1,42 @@
+//! Bench: PJRT execute path — per-chunk dispatch cost, executable-cache
+//! effect, and PJRT-vs-native throughput on the artifact grid. Skips
+//! cleanly when `artifacts/` has not been built.
+
+use hclfft::coordinator::engine::{NativeEngine, RowFftEngine};
+use hclfft::dft::fft::Direction;
+use hclfft::dft::SignalMatrix;
+use hclfft::runtime::PjrtRowFftEngine;
+use hclfft::stats::harness::{fft_flops, BenchSuite};
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.tsv").exists() {
+        println!("bench_runtime skipped: run `make artifacts` first");
+        return;
+    }
+    let engine = PjrtRowFftEngine::load(dir).expect("pjrt engine");
+    let mut suite = BenchSuite::from_env("runtime");
+    for &n in &[128usize, 512, 2048] {
+        for rows in [8usize, 128] {
+            let mut m = SignalMatrix::random(rows, n, 3);
+            suite.bench_flops(&format!("pjrt_row_fft_{rows}x{n}"), fft_flops(rows, n), || {
+                engine
+                    .fft_rows(&mut m.re, &mut m.im, rows, n, Direction::Forward, 1)
+                    .unwrap();
+            });
+            let mut m2 = SignalMatrix::random(rows, n, 3);
+            suite.bench_flops(&format!("native_row_fft_{rows}x{n}"), fft_flops(rows, n), || {
+                NativeEngine
+                    .fft_rows(&mut m2.re, &mut m2.im, rows, n, Direction::Forward, 1)
+                    .unwrap();
+            });
+        }
+    }
+    // ragged batch exercises the greedy chunk tiling (128+32+8+1...)
+    let mut m = SignalMatrix::random(173, 256, 9);
+    suite.bench_flops("pjrt_ragged_173x256", fft_flops(173, 256), || {
+        engine.fft_rows(&mut m.re, &mut m.im, 173, 256, Direction::Forward, 1).unwrap();
+    });
+    suite.write_json(std::path::Path::new("results/bench_runtime.json")).ok();
+    println!("{}", suite.report());
+}

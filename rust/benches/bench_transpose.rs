@@ -1,0 +1,20 @@
+//! Bench: blocked in-place transpose, block-size sweep — the paper's
+//! Appendix A (block_size = 64) ablation.
+
+use hclfft::dft::transpose::transpose_in_place;
+use hclfft::dft::SignalMatrix;
+use hclfft::stats::harness::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::from_env("transpose");
+    for &n in &[256usize, 1024, 2048] {
+        for &block in &[8usize, 16, 32, 64, 128, 256] {
+            let mut m = SignalMatrix::random(n, n, 7);
+            suite.bench(&format!("n{n}_block{block}"), || {
+                transpose_in_place(&mut m, block);
+            });
+        }
+    }
+    suite.write_json(std::path::Path::new("results/bench_transpose.json")).ok();
+    println!("{}", suite.report());
+}

@@ -1,0 +1,184 @@
+//! Minimal command-line parsing (no `clap` in the offline vendor set).
+//!
+//! Grammar: `hclfft <subcommand> [--key value]... [--flag]...`
+//! Unknown options are errors; every subcommand documents its options in
+//! [`crate::cli::help`].
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+/// Parse errors are plain strings (rendered with usage by main).
+pub fn parse(argv: &[String]) -> Result<Args, String> {
+    let mut args = Args::default();
+    let mut it = argv.iter().peekable();
+    match it.next() {
+        Some(sub) if !sub.starts_with('-') => args.subcommand = sub.clone(),
+        Some(other) => return Err(format!("expected subcommand, got `{other}`")),
+        None => return Err("missing subcommand".into()),
+    }
+    while let Some(tok) = it.next() {
+        let Some(key) = tok.strip_prefix("--") else {
+            return Err(format!("unexpected positional argument `{tok}`"));
+        };
+        if key.is_empty() {
+            return Err("bare `--` not supported".into());
+        }
+        // `--key=value` form
+        if let Some((k, v)) = key.split_once('=') {
+            args.opts.insert(k.to_string(), v.to_string());
+            continue;
+        }
+        // `--key value` form if next token isn't an option; else flag
+        match it.peek() {
+            Some(next) if !next.starts_with("--") => {
+                args.opts.insert(key.to_string(), it.next().unwrap().clone());
+            }
+            _ => args.flags.push(key.to_string()),
+        }
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name}: expected integer, got `{v}`")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name}: expected number, got `{v}`")),
+        }
+    }
+
+    /// All parsed option keys + flags (for unknown-option validation).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.opts.keys().map(|s| s.as_str()).chain(self.flags.iter().map(|s| s.as_str()))
+    }
+
+    /// Error if any provided option is not in `allowed`.
+    pub fn validate(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.keys() {
+            if !allowed.contains(&k) {
+                return Err(format!(
+                    "unknown option `--{k}` for `{}` (allowed: {})",
+                    self.subcommand,
+                    allowed.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Top-level usage text.
+pub fn help() -> &'static str {
+    "hclfft — model-based 2D-DFT performance optimization (PFFT-FPM / PFFT-FPM-PAD)
+
+USAGE: hclfft <subcommand> [options]
+
+SUBCOMMANDS:
+  plan      Partition N rows across p abstract processors using FPMs
+            --n <rows> --p <groups> [--eps <tol>] [--package mkl|fftw3|fftw2]
+            [--pad] [--source sim|native]
+  run       Execute a 2D-DFT via an engine and report time/MFLOPs
+            --n <size> [--engine native|pjrt|sim] [--algo lb|fpm|fpm-pad|basic]
+            [--p <groups>] [--t <threads>] [--artifacts <dir>] [--verify]
+  profile   Build speed functions for an engine (FPM construction)
+            --engine native|pjrt --n-list <csv> [--x-list <csv>] [--p <groups>]
+            [--out <file.tsv>] [--scale <rep-divisor>] [--artifacts <dir>]
+  figures   Regenerate the paper's figures/tables
+            --fig <id>|--all [--out-dir <dir>] [--quick]
+  simulate  Run the virtual-testbed experiment campaign
+            --package mkl|fftw3 [--algo fpm|fpm-pad] [--sizes <csv>]
+  bench     Alias of `run` with MeanUsingTtest measurement
+  help      Show this text
+"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = parse(&sv(&["plan", "--n", "1024", "--p", "4", "--pad"])).unwrap();
+        assert_eq!(a.subcommand, "plan");
+        assert_eq!(a.opt("n"), Some("1024"));
+        assert_eq!(a.opt_usize("p").unwrap(), Some(4));
+        assert!(a.flag("pad"));
+        assert!(!a.flag("quick"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse(&sv(&["run", "--n=256", "--engine=native"])).unwrap();
+        assert_eq!(a.opt("n"), Some("256"));
+        assert_eq!(a.opt("engine"), Some("native"));
+    }
+
+    #[test]
+    fn missing_subcommand_errors() {
+        assert!(parse(&[]).is_err());
+        assert!(parse(&sv(&["--n", "4"])).is_err());
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(parse(&sv(&["plan", "oops"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let a = parse(&sv(&["plan", "--n", "abc"])).unwrap();
+        let err = a.opt_usize("n").unwrap_err();
+        assert!(err.contains("expected integer"));
+    }
+
+    #[test]
+    fn validate_unknown_option() {
+        let a = parse(&sv(&["plan", "--bogus", "1"])).unwrap();
+        assert!(a.validate(&["n", "p"]).is_err());
+        let b = parse(&sv(&["plan", "--n", "1"])).unwrap();
+        assert!(b.validate(&["n", "p"]).is_ok());
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse(&sv(&["run", "--verify", "--n", "64"])).unwrap();
+        assert!(a.flag("verify"));
+        assert_eq!(a.opt("n"), Some("64"));
+    }
+}

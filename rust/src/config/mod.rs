@@ -1,0 +1,188 @@
+//! Runtime configuration: defaults < config file < env < CLI.
+//!
+//! File format is `key = value` lines (`#` comments) — deliberately not
+//! TOML-complete since the offline vendor set has no toml crate and the
+//! config surface is flat.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// All tunables of the system with their provenance-ordered overrides.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    /// Directory holding AOT artifacts + manifest.tsv.
+    pub artifacts_dir: PathBuf,
+    /// Directory for figure CSVs and reports.
+    pub results_dir: PathBuf,
+    /// Number of abstract processors p (paper: 2 for MKL, 4 for FFTW).
+    pub groups: usize,
+    /// Threads per group t (paper: 18 for MKL, 9 for FFTW).
+    pub threads_per_group: usize,
+    /// FPM identity tolerance ε (paper example: 0.05).
+    pub eps: f64,
+    /// Transpose block size (paper Appendix A: 64).
+    pub transpose_block: usize,
+    /// Repetition scale divisor for MeanUsingTtest (1 = paper-exact).
+    pub rep_scale: usize,
+    /// Deterministic seed for simulator noise.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: PathBuf::from("artifacts"),
+            results_dir: PathBuf::from("results"),
+            groups: 2,
+            threads_per_group: 2,
+            eps: 0.05,
+            transpose_block: 64,
+            rep_scale: 100,
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl Config {
+    /// Load with full precedence: defaults, then `path` (if it exists),
+    /// then `HCLFFT_*` environment variables.
+    pub fn load(path: Option<&Path>) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        if let Some(p) = path {
+            if p.exists() {
+                cfg.apply_map(&parse_file(p)?)?;
+            } else {
+                return Err(format!("config file not found: {}", p.display()));
+            }
+        } else {
+            let default_path = Path::new("hclfft.conf");
+            if default_path.exists() {
+                cfg.apply_map(&parse_file(default_path)?)?;
+            }
+        }
+        cfg.apply_env();
+        Ok(cfg)
+    }
+
+    fn apply_map(&mut self, map: &BTreeMap<String, String>) -> Result<(), String> {
+        for (k, v) in map {
+            self.set(k, v)?;
+        }
+        Ok(())
+    }
+
+    fn apply_env(&mut self) {
+        for (key, field) in [
+            ("HCLFFT_ARTIFACTS_DIR", "artifacts_dir"),
+            ("HCLFFT_RESULTS_DIR", "results_dir"),
+            ("HCLFFT_GROUPS", "groups"),
+            ("HCLFFT_THREADS_PER_GROUP", "threads_per_group"),
+            ("HCLFFT_EPS", "eps"),
+            ("HCLFFT_TRANSPOSE_BLOCK", "transpose_block"),
+            ("HCLFFT_REP_SCALE", "rep_scale"),
+            ("HCLFFT_SEED", "seed"),
+        ] {
+            if let Ok(v) = std::env::var(key) {
+                // env values are best-effort; ignore malformed ones
+                let _ = self.set(field, &v);
+            }
+        }
+    }
+
+    /// Set one field by name (config-file / env plumbing).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let bad = |k: &str, v: &str| format!("config: invalid value `{v}` for `{k}`");
+        match key {
+            "artifacts_dir" => self.artifacts_dir = PathBuf::from(value),
+            "results_dir" => self.results_dir = PathBuf::from(value),
+            "groups" => self.groups = value.parse().map_err(|_| bad(key, value))?,
+            "threads_per_group" => {
+                self.threads_per_group = value.parse().map_err(|_| bad(key, value))?
+            }
+            "eps" => self.eps = value.parse().map_err(|_| bad(key, value))?,
+            "transpose_block" => {
+                self.transpose_block = value.parse().map_err(|_| bad(key, value))?
+            }
+            "rep_scale" => self.rep_scale = value.parse().map_err(|_| bad(key, value))?,
+            "seed" => self.seed = value.parse().map_err(|_| bad(key, value))?,
+            other => return Err(format!("config: unknown key `{other}`")),
+        }
+        Ok(())
+    }
+}
+
+fn parse_file(path: &Path) -> Result<BTreeMap<String, String>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("config: cannot read {}: {e}", path.display()))?;
+    parse_str(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Parse `key = value` lines; `#` starts a comment; blank lines skipped.
+pub fn parse_str(text: &str) -> Result<BTreeMap<String, String>, String> {
+    let mut map = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            return Err(format!("line {}: expected `key = value`, got `{raw}`", lineno + 1));
+        };
+        map.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert_eq!(c.transpose_block, 64);
+        assert!(c.eps > 0.0);
+        assert!(c.groups >= 1);
+    }
+
+    #[test]
+    fn parse_str_basics() {
+        let m = parse_str("a = 1\n# comment\n  b=two  # trailing\n\n").unwrap();
+        assert_eq!(m["a"], "1");
+        assert_eq!(m["b"], "two");
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn parse_str_rejects_garbage() {
+        assert!(parse_str("not a kv line").is_err());
+    }
+
+    #[test]
+    fn set_fields_and_unknown_key() {
+        let mut c = Config::default();
+        c.set("groups", "4").unwrap();
+        c.set("eps", "0.1").unwrap();
+        assert_eq!(c.groups, 4);
+        assert_eq!(c.eps, 0.1);
+        assert!(c.set("groups", "x").is_err());
+        assert!(c.set("nope", "1").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("hclfft_config_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.conf");
+        std::fs::write(&p, "groups = 6\nthreads_per_group = 6\nseed = 42\n").unwrap();
+        let c = Config::load(Some(&p)).unwrap();
+        assert_eq!(c.groups, 6);
+        assert_eq!(c.threads_per_group, 6);
+        assert_eq!(c.seed, 42);
+    }
+
+    #[test]
+    fn missing_explicit_file_errors() {
+        assert!(Config::load(Some(Path::new("/nonexistent/x.conf"))).is_err());
+    }
+}

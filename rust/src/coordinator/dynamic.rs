@@ -1,0 +1,216 @@
+//! Dynamic load-balancing baseline — the related-work comparator
+//! (paper §VI-C): a centralized work-stealing row scheduler, the
+//! classical alternative to model-based *static* partitioning.
+//!
+//! Groups pull fixed-size row chunks from a shared atomic counter until
+//! the matrix is exhausted. No model is consulted; balance emerges at
+//! run time at the cost of (a) chunk-granularity idle tails and (b) no
+//! ability to exploit the speed function's shape (a group never *skips*
+//! a row count its speed function is bad at — the paper's core
+//! advantage for PFFT-FPM). The ablation bench and the virtual-campaign
+//! comparison quantify exactly that gap.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::coordinator::engine::{EngineError, RowFftEngine};
+use crate::dft::fft::Direction;
+use crate::dft::transpose::transpose_in_place_parallel;
+use crate::dft::SignalMatrix;
+
+/// Default rows pulled per steal.
+pub const DEFAULT_CHUNK: usize = 16;
+
+/// Report of a dynamic run.
+#[derive(Clone, Debug)]
+pub struct DynamicReport {
+    pub elapsed_s: f64,
+    /// chunks executed per group (work actually stolen)
+    pub chunks_per_group: Vec<usize>,
+}
+
+/// 2D-DFT with dynamic (work-stealing) row scheduling: the same
+/// four-step skeleton as PFFT-LB, but each row phase distributes rows at
+/// run time.
+pub fn pfft_dynamic(
+    engine: &dyn RowFftEngine,
+    m: &mut SignalMatrix,
+    p: usize,
+    threads_per_group: usize,
+    chunk: usize,
+    transpose_block: usize,
+) -> Result<DynamicReport, EngineError> {
+    assert_eq!(m.rows, m.cols, "square signal matrix required");
+    assert!(p >= 1 && chunk >= 1);
+    let started = std::time::Instant::now();
+    let mut chunks_per_group = vec![0usize; p];
+
+    for _phase in 0..2 {
+        let counts = dynamic_row_phase(engine, m, p, threads_per_group, chunk)?;
+        for (acc, c) in chunks_per_group.iter_mut().zip(counts) {
+            *acc += c;
+        }
+        transpose_in_place_parallel(m, transpose_block, p * threads_per_group);
+    }
+
+    Ok(DynamicReport { elapsed_s: started.elapsed().as_secs_f64(), chunks_per_group })
+}
+
+/// One dynamically-scheduled row phase. Rows are handed out in
+/// `chunk`-sized slices via an atomic cursor; each slice is transformed
+/// in place through a raw-parts window (disjoint by construction).
+fn dynamic_row_phase(
+    engine: &dyn RowFftEngine,
+    m: &mut SignalMatrix,
+    p: usize,
+    threads_per_group: usize,
+    chunk: usize,
+) -> Result<Vec<usize>, EngineError> {
+    let n = m.cols;
+    let rows = m.rows;
+    let cursor = AtomicUsize::new(0);
+    let errors: std::sync::Mutex<Vec<EngineError>> = std::sync::Mutex::new(Vec::new());
+    let counts: Vec<AtomicUsize> = (0..p).map(|_| AtomicUsize::new(0)).collect();
+
+    let re_ptr = SendPtr(m.re.as_mut_ptr());
+    let im_ptr = SendPtr(m.im.as_mut_ptr());
+
+    std::thread::scope(|scope| {
+        for g in 0..p {
+            let cursor = &cursor;
+            let errors = &errors;
+            let counts = &counts;
+            let re_ptr = re_ptr;
+            let im_ptr = im_ptr;
+            scope.spawn(move || {
+                let (re_ptr, im_ptr) = (re_ptr, im_ptr); // whole-struct capture
+                loop {
+                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= rows {
+                        break;
+                    }
+                    let take = chunk.min(rows - start);
+                    // SAFETY: [start, start+take) row windows are disjoint
+                    // across steals (the atomic cursor hands each range to
+                    // exactly one group).
+                    let re = unsafe {
+                        std::slice::from_raw_parts_mut(re_ptr.0.add(start * n), take * n)
+                    };
+                    let im = unsafe {
+                        std::slice::from_raw_parts_mut(im_ptr.0.add(start * n), take * n)
+                    };
+                    if let Err(e) =
+                        engine.fft_rows(re, im, take, n, Direction::Forward, threads_per_group)
+                    {
+                        errors.lock().unwrap().push(e);
+                        break;
+                    }
+                    counts[g].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+
+    match errors.into_inner().unwrap().into_iter().next() {
+        Some(e) => Err(e),
+        None => Ok(counts.into_iter().map(|c| c.into_inner()).collect()),
+    }
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+// SAFETY: disjoint row windows, see dynamic_row_phase.
+unsafe impl Send for SendPtr {}
+
+/// Virtual-time model of the dynamic scheduler for the simulator
+/// campaign: greedy list scheduling of `ceil(n/chunk)` chunks onto p
+/// groups with per-group speeds from the FPM plane section — the
+/// standard earliest-finish heuristic a dynamic balancer converges to.
+pub fn dynamic_virtual_time(
+    curves: &[crate::coordinator::fpm::Curve],
+    n: usize,
+    chunk: usize,
+    flops_per_row: f64,
+) -> f64 {
+    let p = curves.len();
+    let mut finish = vec![0.0f64; p];
+    let mut left = n;
+    while left > 0 {
+        let take = chunk.min(left);
+        // the idle-first group takes the next chunk
+        let g = (0..p)
+            .min_by(|&a, &b| finish[a].partial_cmp(&finish[b]).unwrap())
+            .unwrap();
+        // dynamic schedulers execute *chunk-sized* batches: the group's
+        // speed is its FPM value at the chunk size, not at its total —
+        // this is precisely the information loss vs model-based planning
+        let speed = curves[g].speed_nearest(take);
+        // same relative-cost unit as partition::point_cost (rows/speed,
+        // scaled by flops_per_row) so the makespans are comparable
+        finish[g] += take as f64 * flops_per_row / speed;
+        left -= take;
+    }
+    finish.into_iter().fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::NativeEngine;
+    use crate::coordinator::fpm::Curve;
+    use crate::dft::naive_dft2d;
+
+    #[test]
+    fn dynamic_matches_oracle() {
+        let n = 32;
+        let orig = SignalMatrix::random(n, n, 5);
+        let mut m = orig.clone();
+        let rep = pfft_dynamic(&NativeEngine, &mut m, 3, 1, 4, 16).unwrap();
+        let want = naive_dft2d(&orig);
+        let err = m.max_abs_diff(&want) / want.norm().max(1.0);
+        assert!(err < 1e-10, "rel err {err}");
+        // all chunks accounted for: 2 phases x ceil(32/4) = 16 chunks
+        assert_eq!(rep.chunks_per_group.iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn dynamic_single_group_equals_serial() {
+        let n = 16;
+        let orig = SignalMatrix::random(n, n, 6);
+        let mut a = orig.clone();
+        pfft_dynamic(&NativeEngine, &mut a, 1, 1, 8, 16).unwrap();
+        let mut b = orig.clone();
+        crate::dft::dft2d::dft2d(&mut b, Direction::Forward, 1);
+        assert!(a.max_abs_diff(&b) < 1e-12);
+    }
+
+    #[test]
+    fn dynamic_chunk_size_invariant_result() {
+        let n = 24;
+        let orig = SignalMatrix::random(n, n, 7);
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        pfft_dynamic(&NativeEngine, &mut a, 2, 1, 1, 8).unwrap();
+        pfft_dynamic(&NativeEngine, &mut b, 2, 1, 16, 8).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-12);
+    }
+
+    #[test]
+    fn virtual_dynamic_cannot_exploit_speed_spikes() {
+        // a spike at x=12 that HPOPTA exploits is invisible to a chunked
+        // dynamic scheduler working at chunk=4 granularity
+        let fast = Curve::new(vec![4, 8, 12, 16], vec![100.0, 100.0, 600.0, 100.0]);
+        let slow = Curve::new(vec![4, 8, 12, 16], vec![100.0, 100.0, 100.0, 100.0]);
+        let t_dyn = dynamic_virtual_time(&[fast.clone(), slow.clone()], 16, 4, 1.0);
+        let part = crate::coordinator::partition::hpopta(&[fast, slow], 16).unwrap();
+        // hpopta found (12, 4): makespan 0.04; dynamic pays 8/100 = 0.08
+        assert!(part.makespan < t_dyn * 0.8, "static {} dynamic {t_dyn}", part.makespan);
+    }
+
+    #[test]
+    fn virtual_dynamic_balances_flat_speeds() {
+        let c = Curve::new(vec![4, 8, 16], vec![100.0, 100.0, 100.0]);
+        let t = dynamic_virtual_time(&[c.clone(), c], 32, 4, 1.0);
+        // two groups, 32 rows at 100: perfect halves = 0.16
+        assert!((t - 0.16).abs() < 1e-12);
+    }
+}

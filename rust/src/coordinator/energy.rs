@@ -1,0 +1,241 @@
+//! Bi-objective (time, energy) partitioning — the companion extension
+//! the paper builds on (Reddy & Lastovetsky, IEEE ToC 2017, ref [36]:
+//! "Bi-objective optimization of data-parallel applications on
+//! homogeneous multicore clusters for performance and energy").
+//!
+//! Alongside each speed function s_i(x) the profiler (or simulator)
+//! provides a discrete *energy function* e_i(x) — joules consumed by
+//! processor i executing x rows. Two solvers:
+//!
+//! * [`eopta`] — minimize total energy subject to Σd_i = N (the
+//!   energy-optimal distribution, ignoring time): exact min-cost DP on
+//!   the reachable-sum lattice.
+//! * [`pareto_front`] — the full time/energy Pareto front via an
+//!   ε-constraint sweep over the candidate makespans (for each feasible
+//!   time bound T, the minimum-energy distribution among those with
+//!   makespan ≤ T).
+
+use crate::coordinator::fpm::Curve;
+use crate::coordinator::partition::PartitionError;
+
+/// An energy function: joules for executing x rows (x ascending, same
+/// grid convention as [`Curve`] — reuse it with "speeds" = joules).
+pub type EnergyCurve = Curve;
+
+/// A (time, energy, distribution) point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BiPoint {
+    pub makespan: f64,
+    pub energy: f64,
+    pub d: Vec<usize>,
+}
+
+/// Minimize total energy Σ e_i(d_i) with Σ d_i = n, each d_i on its
+/// grid (or 0, costing 0 J), optionally bounded by per-point time ≤
+/// t_max (cost unit: x / speed, as in `partition`).
+pub fn eopta(
+    speed: &[Curve],
+    energy: &[EnergyCurve],
+    n: usize,
+    t_max: f64,
+) -> Result<BiPoint, PartitionError> {
+    let p = speed.len();
+    if p == 0 {
+        return Err(PartitionError::NoProcessors);
+    }
+    assert_eq!(p, energy.len(), "speed/energy arity mismatch");
+    for (i, c) in speed.iter().enumerate() {
+        if c.is_empty() {
+            return Err(PartitionError::EmptyCurve(i));
+        }
+    }
+    if n == 0 {
+        return Ok(BiPoint { makespan: 0.0, energy: 0.0, d: vec![0; p] });
+    }
+
+    // common grid step
+    let mut step = n;
+    for c in speed {
+        for &x in &c.xs {
+            step = gcd(step, x);
+        }
+    }
+    let units = n / step;
+
+    // DP: best[s] = min energy to reach sum s; parent for reconstruction
+    const INF: f64 = f64::INFINITY;
+    let mut best = vec![INF; units + 1];
+    let mut choice: Vec<Vec<u32>> = Vec::with_capacity(p);
+    best[0] = 0.0;
+    for i in 0..p {
+        let allowed: Vec<(usize, f64)> = speed[i]
+            .xs
+            .iter()
+            .zip(&speed[i].speeds)
+            .filter(|(&x, &s)| x <= n && (x as f64 / s) <= t_max + 1e-15)
+            .filter_map(|(&x, _)| energy[i].speed_at(x).map(|e| (x / step, e)))
+            .collect();
+        let mut next = vec![INF; units + 1];
+        let mut ch = vec![u32::MAX; units + 1];
+        for s in 0..=units {
+            if best[s] == INF {
+                continue;
+            }
+            // taking zero rows costs zero energy
+            if best[s] < next[s] {
+                next[s] = best[s];
+                ch[s] = 0;
+            }
+            for &(du, e) in &allowed {
+                let t = s + du;
+                if t <= units && best[s] + e < next[t] {
+                    next[t] = best[s] + e;
+                    ch[t] = du as u32;
+                }
+            }
+        }
+        best = next;
+        choice.push(ch);
+    }
+
+    if best[units] == INF {
+        let max_total: usize = speed.iter().map(|c| *c.xs.last().unwrap()).sum();
+        return Err(PartitionError::Unreachable { n, max_total });
+    }
+
+    // reconstruct
+    let mut d = vec![0usize; p];
+    let mut s = units;
+    for i in (0..p).rev() {
+        let du = choice[i][s] as usize;
+        d[i] = du * step;
+        s -= du;
+    }
+    let makespan = d
+        .iter()
+        .zip(speed)
+        .filter(|(&di, _)| di > 0)
+        .map(|(&di, c)| di as f64 / c.speed_at(di).expect("grid point"))
+        .fold(0.0f64, f64::max);
+    Ok(BiPoint { makespan, energy: best[units], d })
+}
+
+/// Time/energy Pareto front via ε-constraint: for every candidate
+/// makespan T (ascending), solve min-energy with time ≤ T and keep the
+/// non-dominated outcomes.
+pub fn pareto_front(
+    speed: &[Curve],
+    energy: &[EnergyCurve],
+    n: usize,
+) -> Result<Vec<BiPoint>, PartitionError> {
+    let mut candidates: Vec<f64> = speed
+        .iter()
+        .flat_map(|c| c.xs.iter().zip(&c.speeds).map(|(&x, &s)| x as f64 / s))
+        .collect();
+    candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    candidates.dedup_by(|a, b| (*a - *b).abs() < f64::EPSILON * a.abs().max(1.0));
+
+    let mut front: Vec<BiPoint> = Vec::new();
+    for &t in &candidates {
+        let Ok(pt) = eopta(speed, energy, n, t) else { continue };
+        // keep if it strictly improves energy over the current best
+        match front.last() {
+            Some(prev) if pt.energy >= prev.energy - 1e-12 => {}
+            _ => front.push(pt),
+        }
+    }
+    if front.is_empty() {
+        let max_total: usize = speed.iter().map(|c| *c.xs.last().unwrap()).sum();
+        return Err(PartitionError::Unreachable { n, max_total });
+    }
+    Ok(front)
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::partition::hpopta;
+
+    fn curve(points: &[(usize, f64)]) -> Curve {
+        Curve::new(points.iter().map(|p| p.0).collect(), points.iter().map(|p| p.1).collect())
+    }
+
+    #[test]
+    fn eopta_prefers_efficient_processor() {
+        // equal speeds, but proc 1 burns half the energy: give it all
+        let s = curve(&[(4, 100.0), (8, 100.0)]);
+        let e_hungry = curve(&[(4, 40.0), (8, 80.0)]);
+        let e_frugal = curve(&[(4, 20.0), (8, 40.0)]);
+        let pt = eopta(&[s.clone(), s], &[e_hungry, e_frugal], 8, f64::INFINITY).unwrap();
+        assert_eq!(pt.d, vec![0, 8]);
+        assert!((pt.energy - 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_bound_forces_spread() {
+        // all on one proc takes 8/100 = 0.08; bound 0.05 forces a split
+        let s = curve(&[(4, 100.0), (8, 100.0)]);
+        let e = curve(&[(4, 20.0), (8, 40.0)]);
+        let tight = eopta(&[s.clone(), s.clone()], &[e.clone(), e.clone()], 8, 0.05).unwrap();
+        assert_eq!(tight.d, vec![4, 4]);
+        assert!(tight.makespan <= 0.05 + 1e-12);
+    }
+
+    #[test]
+    fn pareto_front_is_monotone() {
+        // heterogeneous speeds + energies: front must trade time for energy
+        let s1 = curve(&[(4, 200.0), (8, 200.0), (12, 200.0)]);
+        let s2 = curve(&[(4, 50.0), (8, 50.0), (12, 50.0)]);
+        let e1 = curve(&[(4, 100.0), (8, 200.0), (12, 300.0)]); // fast but hungry
+        let e2 = curve(&[(4, 10.0), (8, 20.0), (12, 30.0)]); // slow but frugal
+        let front = pareto_front(&[s1, s2], &[e1, e2], 12).unwrap();
+        assert!(!front.is_empty());
+        for w in front.windows(2) {
+            assert!(w[1].makespan >= w[0].makespan - 1e-12, "time must not improve");
+            assert!(w[1].energy < w[0].energy, "energy must strictly improve");
+        }
+        // the energy-minimal end pushes work to the frugal processor
+        let last = front.last().unwrap();
+        assert!(last.d[1] >= last.d[0], "{:?}", last.d);
+    }
+
+    #[test]
+    fn unconstrained_eopta_energy_no_worse_than_time_optimal() {
+        let s1 = curve(&[(4, 100.0), (8, 300.0), (12, 100.0)]);
+        let s2 = curve(&[(4, 120.0), (8, 90.0), (12, 110.0)]);
+        let e1 = curve(&[(4, 50.0), (8, 60.0), (12, 200.0)]);
+        let e2 = curve(&[(4, 30.0), (8, 100.0), (12, 150.0)]);
+        let n = 12;
+        let time_opt = hpopta(&[s1.clone(), s2.clone()], n).unwrap();
+        let time_opt_energy: f64 = time_opt
+            .d
+            .iter()
+            .zip([&e1, &e2])
+            .filter(|(&di, _)| di > 0)
+            .map(|(&di, e)| e.speed_at(di).unwrap())
+            .sum();
+        let energy_opt = eopta(&[s1, s2], &[e1, e2], n, f64::INFINITY).unwrap();
+        assert!(energy_opt.energy <= time_opt_energy + 1e-12);
+    }
+
+    #[test]
+    fn zero_n_and_errors() {
+        let s = curve(&[(4, 10.0)]);
+        let e = curve(&[(4, 5.0)]);
+        let pt = eopta(&[s.clone()], &[e.clone()], 0, f64::INFINITY).unwrap();
+        assert_eq!(pt.d, vec![0]);
+        assert!(eopta(&[], &[], 4, f64::INFINITY).is_err());
+        assert!(matches!(
+            eopta(&[s], &[e], 100, f64::INFINITY).unwrap_err(),
+            PartitionError::Unreachable { .. }
+        ));
+    }
+}

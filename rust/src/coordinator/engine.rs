@@ -1,0 +1,162 @@
+//! `RowFftEngine` — the compute abstraction the PFFT drivers dispatch to.
+//!
+//! The paper's abstract processors execute "series of row 1D-FFTs"
+//! (`1D_ROW_FFTS_LOCAL`); the engine trait is exactly that call. Three
+//! implementations:
+//!
+//! * [`NativeEngine`] — the from-scratch rust FFT ([`crate::dft`]),
+//! * `PjrtEngine` ([`crate::runtime`]) — AOT JAX/Pallas artifacts,
+//! * a virtual-time engine in [`crate::simulator`] for paper-scale sizes.
+//!
+//! Engines operate on raw split-plane row slices so the drivers can hand
+//! disjoint row ranges to concurrent abstract-processor threads with
+//! `split_at_mut` — no interior locking on the hot path.
+
+use crate::dft::fft::Direction;
+
+/// Errors an engine can raise (artifact-backed engines can fail on
+/// unsupported shapes; the native engine is total).
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error("row length {0} not supported by engine `{1}`")]
+    UnsupportedLength(usize, String),
+    #[error("runtime failure: {0}")]
+    Runtime(String),
+}
+
+/// A compute engine executing batches of row 1D-FFTs in place.
+pub trait RowFftEngine: Sync {
+    /// Engine name for reports.
+    fn name(&self) -> &str;
+
+    /// Execute `rows` 1D-FFTs of length `n` over the contiguous
+    /// split-plane buffers (`re.len() == rows * n`), using up to
+    /// `threads` worker threads (the abstract processor's `t`).
+    fn fft_rows(
+        &self,
+        re: &mut [f64],
+        im: &mut [f64],
+        rows: usize,
+        n: usize,
+        dir: Direction,
+        threads: usize,
+    ) -> Result<(), EngineError>;
+
+    /// Row lengths this engine supports, or None for "any length".
+    /// PFFT-FPM-PAD restricts pad candidates to supported lengths.
+    fn supported_lengths(&self) -> Option<Vec<usize>> {
+        None
+    }
+}
+
+/// The native rust FFT engine (radix-2 + Bluestein, plan-cached).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeEngine;
+
+impl RowFftEngine for NativeEngine {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn fft_rows(
+        &self,
+        re: &mut [f64],
+        im: &mut [f64],
+        rows: usize,
+        n: usize,
+        dir: Direction,
+        threads: usize,
+    ) -> Result<(), EngineError> {
+        debug_assert_eq!(re.len(), rows * n);
+        let threads = threads.max(1).min(rows.max(1));
+        if threads <= 1 || rows <= 1 {
+            fft_rows_chunk(re, im, rows, n, dir);
+            return Ok(());
+        }
+        let rows_per = rows.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (rc, ic) in re.chunks_mut(rows_per * n).zip(im.chunks_mut(rows_per * n)) {
+                scope.spawn(move || {
+                    fft_rows_chunk(rc, ic, rc.len() / n, n, dir);
+                });
+            }
+        });
+        Ok(())
+    }
+}
+
+fn fft_rows_chunk(re: &mut [f64], im: &mut [f64], rows: usize, n: usize, dir: Direction) {
+    if n.is_power_of_two() {
+        let plan = crate::dft::plan::PlanCache::global().pow2(n);
+        let mut sr = vec![0.0; n];
+        let mut si = vec![0.0; n];
+        for r in 0..rows {
+            let span = r * n..(r + 1) * n;
+            crate::dft::fft::fft_row_pow2(
+                &mut re[span.clone()],
+                &mut im[span],
+                &mut sr,
+                &mut si,
+                &plan,
+                dir,
+            );
+        }
+    } else {
+        let plan = crate::dft::plan::PlanCache::global().bluestein(n);
+        let m = plan.scratch_len();
+        let mut br = vec![0.0; m];
+        let mut bi = vec![0.0; m];
+        let mut sr = vec![0.0; m];
+        let mut si = vec![0.0; m];
+        for r in 0..rows {
+            let span = r * n..(r + 1) * n;
+            crate::dft::bluestein::fft_row_bluestein(
+                &mut re[span.clone()],
+                &mut im[span],
+                &plan,
+                dir,
+                &mut br,
+                &mut bi,
+                &mut sr,
+                &mut si,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dft::{naive_dft_rows, SignalMatrix};
+
+    #[test]
+    fn native_engine_matches_naive() {
+        let engine = NativeEngine;
+        for &(rows, n) in &[(4usize, 16usize), (3, 24), (8, 128)] {
+            let orig = SignalMatrix::random(rows, n, 9);
+            let mut m = orig.clone();
+            engine
+                .fft_rows(&mut m.re, &mut m.im, rows, n, Direction::Forward, 2)
+                .unwrap();
+            let want = naive_dft_rows(&orig, false);
+            let scale = want.norm().max(1.0);
+            assert!(m.max_abs_diff(&want) / scale < 1e-9, "rows={rows} n={n}");
+        }
+    }
+
+    #[test]
+    fn native_engine_thread_count_invariant() {
+        let engine = NativeEngine;
+        let orig = SignalMatrix::random(16, 64, 3);
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        engine.fft_rows(&mut a.re, &mut a.im, 16, 64, Direction::Forward, 1).unwrap();
+        engine.fft_rows(&mut b.re, &mut b.im, 16, 64, Direction::Forward, 5).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-14);
+    }
+
+    #[test]
+    fn native_engine_supports_all_lengths() {
+        assert_eq!(NativeEngine.supported_lengths(), None);
+    }
+}

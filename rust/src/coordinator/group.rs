@@ -1,0 +1,125 @@
+//! Abstract processor groups — the paper's (p, t) configurations.
+//!
+//! An *abstract processor* is a group of t threads executing one
+//! multithreaded row-FFT routine; p groups run in parallel. The paper
+//! fixes the candidate set {(2,18), (4,9), (6,6), (9,4), (12,3)} on its
+//! 36-core testbed and picks the best *experimentally per package*
+//! (MKL → (2,18), FFTW → (4,9)). [`best_config`] reproduces that
+//! selection procedure for any measurement closure.
+
+/// One (p, t) abstract-processor configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GroupConfig {
+    /// number of abstract processors (groups)
+    pub p: usize,
+    /// threads per group
+    pub t: usize,
+}
+
+impl GroupConfig {
+    pub fn new(p: usize, t: usize) -> Self {
+        assert!(p >= 1 && t >= 1);
+        GroupConfig { p, t }
+    }
+
+    /// Total thread count p·t.
+    pub fn total_threads(&self) -> usize {
+        self.p * self.t
+    }
+}
+
+impl std::fmt::Display for GroupConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "(p={}, t={})", self.p, self.t)
+    }
+}
+
+/// The paper's candidate configurations for a 36-thread budget
+/// (§IV-A: MKL candidates {(2,18),(4,9),(6,6),(9,4),(12,3)}).
+pub fn paper_candidates() -> Vec<GroupConfig> {
+    vec![
+        GroupConfig::new(2, 18),
+        GroupConfig::new(4, 9),
+        GroupConfig::new(6, 6),
+        GroupConfig::new(9, 4),
+        GroupConfig::new(12, 3),
+    ]
+}
+
+/// All (p, t) factorizations of a thread budget (ordered by p).
+pub fn candidates_for_budget(total: usize) -> Vec<GroupConfig> {
+    (2..=total)
+        .filter(|p| total % p == 0)
+        .map(|p| GroupConfig::new(p, total / p))
+        .collect()
+}
+
+/// The paper's selection procedure: measure each candidate with the
+/// load-balanced algorithm and keep the fastest (§IV-A "obtained from
+/// the best load-balanced configuration observed experimentally").
+pub fn best_config(
+    candidates: &[GroupConfig],
+    mut measure_seconds: impl FnMut(GroupConfig) -> f64,
+) -> Option<(GroupConfig, f64)> {
+    candidates
+        .iter()
+        .map(|&c| (c, measure_seconds(c)))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+}
+
+/// Row offsets implied by a distribution d: group i owns rows
+/// [offsets[i], offsets[i+1]).
+pub fn row_offsets(d: &[usize]) -> Vec<usize> {
+    let mut offsets = Vec::with_capacity(d.len() + 1);
+    let mut acc = 0;
+    offsets.push(0);
+    for &di in d {
+        acc += di;
+        offsets.push(acc);
+    }
+    offsets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_candidates_are_36_threads() {
+        for c in paper_candidates() {
+            assert_eq!(c.total_threads(), 36, "{c}");
+        }
+    }
+
+    #[test]
+    fn budget_factorizations() {
+        let cs = candidates_for_budget(12);
+        assert!(cs.contains(&GroupConfig::new(2, 6)));
+        assert!(cs.contains(&GroupConfig::new(4, 3)));
+        assert!(cs.contains(&GroupConfig::new(12, 1)));
+        for c in cs {
+            assert_eq!(c.total_threads(), 12);
+        }
+    }
+
+    #[test]
+    fn best_config_picks_minimum() {
+        let cands = paper_candidates();
+        // pretend (4,9) is fastest, as the paper found for FFTW
+        let (best, t) = best_config(&cands, |c| if c.p == 4 { 1.0 } else { 2.0 }).unwrap();
+        assert_eq!(best, GroupConfig::new(4, 9));
+        assert_eq!(t, 1.0);
+    }
+
+    #[test]
+    fn offsets_accumulate() {
+        assert_eq!(row_offsets(&[5, 3, 2, 6]), vec![0, 5, 8, 10, 16]);
+        assert_eq!(row_offsets(&[]), vec![0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_groups_rejected() {
+        GroupConfig::new(0, 4);
+    }
+}

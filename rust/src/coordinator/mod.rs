@@ -1,0 +1,26 @@
+//! L3 coordinator — the paper's contribution.
+//!
+//! * [`fpm`] — functional performance models: discrete 3D speed surfaces
+//!   `s_i(x, y)`, plane/column sections, Eq-1 variation width, and the
+//!   paper's speed formula `s = 2.5·x·y·log2(y) / t`.
+//! * [`partition`] — the data-partitioning algorithms: the ε-identity
+//!   test (PFFT-FPM Step 1b), speed-function averaging (Step 1c),
+//!   **POPTA** (homogeneous) and **HPOPTA** (heterogeneous), exact on the
+//!   discrete grid via binary search over candidate makespans + a
+//!   reachable-sum DP.
+//! * [`pad`] — `Determine_Pad_Length` (PFFT-FPM-PAD Step 2).
+//! * [`group`] — abstract processor (p, t) configurations.
+//! * [`engine`] — the `RowFftEngine` abstraction the drivers dispatch to
+//!   (native rust FFT, PJRT artifacts, or the virtual-time simulator).
+//! * [`pfft`] — the parallel 2D-DFT drivers: `PFFT-LB`, `PFFT-FPM`,
+//!   `PFFT-FPM-PAD` (Algorithms 1-5).
+
+pub mod dynamic;
+pub mod energy;
+pub mod engine;
+pub mod fpm;
+pub mod group;
+pub mod pad;
+pub mod partition;
+pub mod pfft;
+pub mod pfft3d;

@@ -1,0 +1,200 @@
+//! `Determine_Pad_Length` — PFFT-FPM-PAD Step 2.
+//!
+//! Given processor i's distribution d[i] and its FPM column section
+//! `x = d[i]` (speed vs row length y), pick
+//!
+//!   N_padded = argmin_{V ∈ (N, y_m]}  d[i]·V / s_i(d[i], V)
+//!              subject to  d[i]·V / s_i(d[i], V)  <  d[i]·N / s_i(d[i], N)
+//!
+//! i.e. the row length with the smallest execution-time estimate that
+//! beats the unpadded one; 0-length pad when no such point exists. The
+//! paper uses the ratio `x·y / s(x,y)` as the time proxy (Section III-D);
+//! we implement that literally and also offer the exact-flops variant
+//! `2.5·x·y·log2(y) / s` behind [`PadCost`] (ablation bench
+//! `figures --fig pad-ablation`).
+//!
+//! NOTE on semantics: zero-padding a length-N signal to V and taking a
+//! V-point DFT yields a *spectral interpolation*, not the N-point DFT —
+//! the paper trades exactness for speed here. Our engines implement the
+//! paper's scheme verbatim; the correctness-preserving alternative
+//! (Bluestein chirp-z, which pads internally without changing the
+//! transform) is what the native engine uses for non-pow2 lengths. See
+//! DESIGN.md §Substitutions.
+
+use crate::coordinator::fpm::{Curve, SpeedFunction};
+
+/// Which execution-time proxy the argmin uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PadCost {
+    /// The paper's literal ratio x·y/s.
+    #[default]
+    PaperRatio,
+    /// Exact flops model 2.5·x·y·log2(y)/s.
+    ExactFlops,
+}
+
+/// Decision record for one processor's padding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PadDecision {
+    /// chosen padded row length (== n when no padding helps)
+    pub n_padded: usize,
+    /// predicted time proxy at n (unpadded)
+    pub t_unpadded: f64,
+    /// predicted time proxy at n_padded
+    pub t_padded: f64,
+}
+
+impl PadDecision {
+    pub fn is_padded(&self) -> bool {
+        self.n_padded_gain() > 0.0
+    }
+
+    /// Predicted relative gain (0 when unpadded).
+    pub fn n_padded_gain(&self) -> f64 {
+        if self.t_unpadded > 0.0 && self.t_padded < self.t_unpadded {
+            1.0 - self.t_padded / self.t_unpadded
+        } else {
+            0.0
+        }
+    }
+}
+
+fn cost(x: usize, y: usize, speed: f64, model: PadCost) -> f64 {
+    match model {
+        PadCost::PaperRatio => x as f64 * y as f64 / speed,
+        PadCost::ExactFlops => 2.5 * x as f64 * y as f64 * (y as f64).log2() / speed,
+    }
+}
+
+/// Pad-length selection over a column-section curve (y ascending).
+/// `x` is the processor's row count d[i]; `n` the unpadded row length.
+pub fn determine_pad_length(column: &Curve, x: usize, n: usize, model: PadCost) -> PadDecision {
+    // speed at the unpadded point (nearest grid if n not measured)
+    let s_n = column.speed_at(n).unwrap_or_else(|| column.speed_nearest(n));
+    let t_unpadded = cost(x, n, s_n, model);
+
+    let mut best_v = n;
+    let mut best_t = t_unpadded;
+    for (k, &v) in column.xs.iter().enumerate() {
+        if v <= n {
+            continue; // only (N, y_m] candidates
+        }
+        let t = cost(x, v, column.speeds[k], model);
+        if t < best_t {
+            best_t = t;
+            best_v = v;
+        }
+    }
+    PadDecision { n_padded: best_v, t_unpadded, t_padded: best_t }
+}
+
+/// Per-processor pad decisions from the full FPM surfaces (PAD Step 2):
+/// the column section x = d[i] of S_i, then the argmin.
+pub fn pads_for_distribution(
+    fpms: &[SpeedFunction],
+    d: &[usize],
+    n: usize,
+    model: PadCost,
+) -> Vec<PadDecision> {
+    assert_eq!(fpms.len(), d.len());
+    d.iter()
+        .zip(fpms)
+        .map(|(&di, fpm)| {
+            if di == 0 {
+                return PadDecision { n_padded: n, t_unpadded: 0.0, t_padded: 0.0 };
+            }
+            let column = fpm.column_section(di);
+            determine_pad_length(&column, di, n, model)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col(points: &[(usize, f64)]) -> Curve {
+        Curve::new(points.iter().map(|p| p.0).collect(), points.iter().map(|p| p.1).collect())
+    }
+
+    #[test]
+    fn picks_faster_larger_size() {
+        // speed collapses at y=1000 but is excellent at y=1024:
+        // t(1000) = 100*1000/50 = 2000; t(1024) = 100*1024/600 ≈ 170.7
+        let c = col(&[(512, 500.0), (1000, 50.0), (1024, 600.0), (2048, 400.0)]);
+        let dec = determine_pad_length(&c, 100, 1000, PadCost::PaperRatio);
+        assert_eq!(dec.n_padded, 1024);
+        assert!(dec.is_padded());
+        assert!(dec.n_padded_gain() > 0.9);
+    }
+
+    #[test]
+    fn no_pad_when_nothing_beats_n() {
+        let c = col(&[(1000, 500.0), (1024, 400.0), (2048, 100.0)]);
+        let dec = determine_pad_length(&c, 10, 1000, PadCost::PaperRatio);
+        assert_eq!(dec.n_padded, 1000);
+        assert!(!dec.is_padded());
+        assert_eq!(dec.n_padded_gain(), 0.0);
+    }
+
+    #[test]
+    fn smaller_sizes_never_chosen() {
+        // y=512 is blazing fast but below N — must be ignored
+        let c = col(&[(512, 9999.0), (1000, 100.0), (2048, 150.0)]);
+        let dec = determine_pad_length(&c, 10, 1000, PadCost::PaperRatio);
+        // t(1000)=10*1000/100=100; t(2048)=10*2048/150=136.5 → no pad
+        assert_eq!(dec.n_padded, 1000);
+    }
+
+    #[test]
+    fn argmin_takes_global_minimum() {
+        // two beneficial candidates; the better one wins
+        let c = col(&[(1000, 100.0), (1024, 300.0), (1152, 500.0)]);
+        let dec = determine_pad_length(&c, 10, 1000, PadCost::PaperRatio);
+        // t(1024)=34.1, t(1152)=23.0 → 1152
+        assert_eq!(dec.n_padded, 1152);
+    }
+
+    #[test]
+    fn exact_flops_model_differs_when_log_matters() {
+        // paper ratio ignores log2(y) growth; candidates chosen near the
+        // break-even flip between models
+        let c = col(&[(1024, 100.0), (4096, 110.0)]);
+        let paper = determine_pad_length(&c, 10, 1024, PadCost::PaperRatio);
+        // paper: t(1024)=102.4, t(4096)=372 → no pad for both models here;
+        // make speed high enough that ratio pads but flops (log 4096/log
+        // 1024 = 1.2x extra work) does not:
+        let c2 = col(&[(1024, 100.0), (4096, 405.0)]);
+        let p2 = determine_pad_length(&c2, 10, 1024, PadCost::PaperRatio);
+        let e2 = determine_pad_length(&c2, 10, 1024, PadCost::ExactFlops);
+        assert_eq!(paper.n_padded, 1024);
+        assert_eq!(p2.n_padded, 4096); // 10*4096/405 = 101.1 < 102.4
+        assert_eq!(e2.n_padded, 1024); // ×(12/10) work ⇒ 121.4 > 102.4·1.0
+    }
+
+    #[test]
+    fn paper_example_24704_pads_to_24960() {
+        // Figures 11-12: both groups pad N=24704 → 24960. Build sections
+        // where 24960 is the first dominating larger size.
+        let xs: Vec<usize> = (24704 / 128..=25600 / 128).map(|k| k * 128).collect();
+        let speeds: Vec<f64> = xs
+            .iter()
+            .map(|&y| if y == 24960 { 12000.0 } else { 7000.0 })
+            .collect();
+        let c = Curve::new(xs, speeds);
+        for &x in &[11648usize, 13056] {
+            let dec = determine_pad_length(&c, x, 24704, PadCost::PaperRatio);
+            assert_eq!(dec.n_padded, 24960, "x={x}");
+        }
+    }
+
+    #[test]
+    fn zero_rows_processor_gets_trivial_decision() {
+        use crate::coordinator::fpm::SpeedFunction;
+        let fpm = SpeedFunction::from_fn("f", vec![128], vec![1024, 2048], |_, _| Some(100.0));
+        let pads = pads_for_distribution(&[fpm.clone(), fpm], &[0, 128], 1024, PadCost::PaperRatio);
+        assert_eq!(pads[0].n_padded, 1024);
+        assert!(!pads[0].is_padded());
+        assert_eq!(pads.len(), 2);
+    }
+}

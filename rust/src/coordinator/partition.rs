@@ -1,0 +1,490 @@
+//! Model-based data partitioning: POPTA and HPOPTA.
+//!
+//! The paper invokes POPTA (Lastovetsky & Reddy, TPDS 2017) for identical
+//! speed functions and HPOPTA (Khaleghzadeh et al., TPDS 2018) for
+//! heterogeneous ones (PFFT-FPM Step 1). Both find the distribution
+//! `d = {d_1..d_p}`, Σd_i = N, minimizing the parallel execution time
+//! `max_i time_i(d_i)` for the *most general* (non-monotonic,
+//! non-convex) discrete speed functions — the optimal solution may be
+//! deliberately load-imbalanced.
+//!
+//! Implementation: exact on the discrete grid. Candidate makespans are
+//! the O(p·m) per-processor point times; a binary search over them asks
+//! "can processors, each restricted to {0} ∪ {x : time_i(x) ≤ T}, pick
+//! d_i summing to N?" — answered by a reachable-sum bitset DP with parent
+//! pointers for reconstruction. This is O(p·m·N/step) per check, exact,
+//! and fast for the paper's grids (step 128, m ≤ 500, p ≤ 12). The same
+//! machinery solves POPTA with p copies of one curve (matching the
+//! original algorithm's output on all our test grids, including the
+//! brute-force cross-check).
+
+use crate::coordinator::fpm::{variation_pct, Curve};
+
+/// Outcome of a partitioning run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Partition {
+    /// rows per abstract processor, Σ = N (entries may be 0)
+    pub d: Vec<usize>,
+    /// predicted makespan, in the same unit as `cost` (relative time)
+    pub makespan: f64,
+    /// which algorithm produced it
+    pub algorithm: Algorithm,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    Popta,
+    Hpopta,
+    Balanced,
+}
+
+/// Errors from partitioning.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum PartitionError {
+    #[error("no processors given")]
+    NoProcessors,
+    #[error("curve {0} is empty")]
+    EmptyCurve(usize),
+    #[error("N = {n} is not reachable with the given curves (max total {max_total})")]
+    Unreachable { n: usize, max_total: usize },
+    #[error("curve grids are not aligned to a common step")]
+    UnalignedGrid,
+}
+
+/// Relative execution time of x rows at curve speed s(x): `x / s(x)`.
+/// The absolute scale (2.5·N·log2 N / 1e-6) is constant across processors
+/// for a fixed row length N, so it cancels in the minimax.
+fn point_cost(x: usize, speed: f64) -> f64 {
+    x as f64 / speed
+}
+
+/// The paper's Step 1b ε-identity test: are the p plane-section curves
+/// identical within tolerance `eps` (fraction, e.g. 0.05 = 5%)?
+/// Returns false (heterogeneous) if any shared grid point differs by more.
+pub fn curves_identical(curves: &[Curve], eps: f64) -> bool {
+    if curves.len() <= 1 {
+        return true;
+    }
+    let base = &curves[0];
+    for (k, &x) in base.xs.iter().enumerate() {
+        let mut mn = base.speeds[k];
+        let mut mx = base.speeds[k];
+        for c in &curves[1..] {
+            match c.speed_at(x) {
+                Some(s) => {
+                    mn = mn.min(s);
+                    mx = mx.max(s);
+                }
+                None => return false, // differing grids ⇒ not identical
+            }
+        }
+        if variation_pct(mx, mn) / 100.0 > eps {
+            return false;
+        }
+    }
+    true
+}
+
+/// The paper's Step 1c averaging: harmonic-mean speed function
+/// `s_avg(x) = p / Σ_j 1/s_j(x)` over the shared grid.
+pub fn average_curve(curves: &[Curve]) -> Curve {
+    assert!(!curves.is_empty());
+    let p = curves.len() as f64;
+    let base = &curves[0];
+    let mut xs = Vec::new();
+    let mut speeds = Vec::new();
+    for (k, &x) in base.xs.iter().enumerate() {
+        let mut inv_sum = 1.0 / base.speeds[k];
+        let mut all = true;
+        for c in &curves[1..] {
+            match c.speed_at(x) {
+                Some(s) => inv_sum += 1.0 / s,
+                None => {
+                    all = false;
+                    break;
+                }
+            }
+        }
+        if all {
+            xs.push(x);
+            speeds.push(p / inv_sum);
+        }
+    }
+    Curve::new(xs, speeds)
+}
+
+/// POPTA: optimal distribution of `n` rows over `p` processors sharing
+/// one speed curve.
+pub fn popta(curve: &Curve, p: usize, n: usize) -> Result<Partition, PartitionError> {
+    let curves: Vec<Curve> = std::iter::repeat(curve.clone()).take(p).collect();
+    let mut part = hpopta(&curves, n)?;
+    part.algorithm = Algorithm::Popta;
+    Ok(part)
+}
+
+/// HPOPTA: optimal distribution of `n` rows over processors with
+/// individual speed curves. Exact minimax over the discrete grid.
+pub fn hpopta(curves: &[Curve], n: usize) -> Result<Partition, PartitionError> {
+    let p = curves.len();
+    if p == 0 {
+        return Err(PartitionError::NoProcessors);
+    }
+    for (i, c) in curves.iter().enumerate() {
+        if c.is_empty() {
+            return Err(PartitionError::EmptyCurve(i));
+        }
+    }
+    if n == 0 {
+        return Ok(Partition { d: vec![0; p], makespan: 0.0, algorithm: Algorithm::Hpopta });
+    }
+
+    // grid step: gcd of all x values and n, so sums map onto a dense array
+    let mut step = n;
+    for c in curves {
+        for &x in &c.xs {
+            step = gcd(step, x);
+        }
+    }
+    if step == 0 {
+        return Err(PartitionError::UnalignedGrid);
+    }
+    let units = n / step; // target in grid units
+
+    let max_total: usize = curves.iter().map(|c| *c.xs.last().unwrap()).sum();
+    if max_total < n {
+        return Err(PartitionError::Unreachable { n, max_total });
+    }
+
+    // candidate makespans: every per-processor point time (dedup/sorted)
+    let mut candidates: Vec<f64> = curves
+        .iter()
+        .flat_map(|c| c.xs.iter().zip(&c.speeds).map(|(&x, &s)| point_cost(x, s)))
+        .collect();
+    candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    candidates.dedup_by(|a, b| (*a - *b).abs() < f64::EPSILON * a.abs().max(1.0));
+
+    // binary search the smallest feasible candidate
+    let mut lo = 0usize;
+    let mut hi = candidates.len() - 1;
+    if !feasible(curves, units, step, candidates[hi]).0 {
+        return Err(PartitionError::Unreachable { n, max_total });
+    }
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if feasible(curves, units, step, candidates[mid]).0 {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let t_opt = candidates[lo];
+    let (ok, d) = feasible(curves, units, step, t_opt);
+    debug_assert!(ok);
+    let d = d.expect("feasible returned a distribution");
+
+    // true makespan = max over used points of their cost
+    let makespan = d
+        .iter()
+        .zip(curves)
+        .filter(|(&di, _)| di > 0)
+        .map(|(&di, c)| point_cost(di, c.speed_at(di).expect("grid point")))
+        .fold(0.0f64, f64::max);
+
+    Ok(Partition { d, makespan, algorithm: Algorithm::Hpopta })
+}
+
+/// Reachable-sum DP: can each processor pick d_i in {0} ∪ {x: cost ≤ T}
+/// with Σ d_i / step = units? Returns the distribution on success.
+fn feasible(
+    curves: &[Curve],
+    units: usize,
+    step: usize,
+    t_max: f64,
+) -> (bool, Option<Vec<usize>>) {
+    let p = curves.len();
+    // reach[s] after processing processors 0..i; parent choice for
+    // reconstruction: choice[i][s] = x taken by processor i to land on s
+    let mut reach = vec![false; units + 1];
+    reach[0] = true;
+    let mut choice: Vec<Vec<u32>> = Vec::with_capacity(p);
+
+    for c in curves {
+        let allowed: Vec<usize> = c
+            .xs
+            .iter()
+            .zip(&c.speeds)
+            .filter(|(&x, &s)| x <= units * step && point_cost(x, s) <= t_max + 1e-15)
+            .map(|(&x, _)| x / step)
+            .collect();
+        let mut next = vec![false; units + 1];
+        let mut ch = vec![u32::MAX; units + 1];
+        for s in 0..=units {
+            if !reach[s] {
+                continue;
+            }
+            // taking 0 rows
+            if !next[s] {
+                next[s] = true;
+                ch[s] = 0;
+            }
+            for &a in &allowed {
+                let t = s + a;
+                if t <= units && !next[t] {
+                    next[t] = true;
+                    ch[t] = a as u32;
+                }
+            }
+        }
+        choice.push(ch);
+        reach = next;
+    }
+
+    if !reach[units] {
+        return (false, None);
+    }
+    // reconstruct back-to-front
+    let mut d = vec![0usize; p];
+    let mut s = units;
+    for i in (0..p).rev() {
+        let a = choice[i][s] as usize;
+        d[i] = a * step;
+        s -= a;
+    }
+    debug_assert_eq!(s, 0);
+    (true, Some(d))
+}
+
+/// Balanced (PFFT-LB) distribution: N/p each, remainder spread from the
+/// front — the baseline the model-based algorithms beat.
+pub fn balanced(p: usize, n: usize) -> Partition {
+    assert!(p > 0);
+    let base = n / p;
+    let rem = n % p;
+    let d: Vec<usize> = (0..p).map(|i| base + usize::from(i < rem)).collect();
+    Partition { d, makespan: f64::NAN, algorithm: Algorithm::Balanced }
+}
+
+/// Predicted makespan of an arbitrary distribution under given curves
+/// (nearest-grid speeds; used to compare optimal vs balanced).
+pub fn predict_makespan(curves: &[Curve], d: &[usize]) -> f64 {
+    d.iter()
+        .zip(curves)
+        .filter(|(&di, _)| di > 0)
+        .map(|(&di, c)| point_cost(di, c.speed_nearest(di)))
+        .fold(0.0f64, f64::max)
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Exhaustive minimax reference (tests only): try every gridded
+/// assignment. Exponential — keep grids tiny.
+pub fn brute_force(curves: &[Curve], n: usize) -> Option<(Vec<usize>, f64)> {
+    let p = curves.len();
+    let mut best: Option<(Vec<usize>, f64)> = None;
+    let mut d = vec![0usize; p];
+    fn rec(
+        curves: &[Curve],
+        n: usize,
+        i: usize,
+        d: &mut Vec<usize>,
+        acc: usize,
+        cur_max: f64,
+        best: &mut Option<(Vec<usize>, f64)>,
+    ) {
+        if i == curves.len() {
+            if acc == n {
+                match best {
+                    Some((_, m)) if *m <= cur_max => {}
+                    _ => *best = Some((d.clone(), cur_max)),
+                }
+            }
+            return;
+        }
+        // option: zero rows
+        d[i] = 0;
+        rec(curves, n, i + 1, d, acc, cur_max, best);
+        for (k, &x) in curves[i].xs.iter().enumerate() {
+            if acc + x > n {
+                continue;
+            }
+            d[i] = x;
+            let c = point_cost(x, curves[i].speeds[k]);
+            rec(curves, n, i + 1, d, acc + x, cur_max.max(c), best);
+        }
+        d[i] = 0;
+    }
+    rec(curves, n, 0, &mut d, 0, 0.0, &mut best);
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(points: &[(usize, f64)]) -> Curve {
+        Curve::new(points.iter().map(|p| p.0).collect(), points.iter().map(|p| p.1).collect())
+    }
+
+    #[test]
+    fn identical_curves_detected() {
+        let a = curve(&[(10, 100.0), (20, 200.0)]);
+        let b = curve(&[(10, 103.0), (20, 198.0)]);
+        assert!(curves_identical(&[a.clone(), b.clone()], 0.05));
+        assert!(!curves_identical(&[a.clone(), b], 0.01));
+        assert!(curves_identical(&[a], 0.0));
+    }
+
+    #[test]
+    fn heterogeneous_grids_not_identical() {
+        let a = curve(&[(10, 100.0)]);
+        let b = curve(&[(20, 100.0)]);
+        assert!(!curves_identical(&[a, b], 0.5));
+    }
+
+    #[test]
+    fn average_is_harmonic_mean() {
+        let a = curve(&[(10, 100.0), (20, 300.0)]);
+        let b = curve(&[(10, 200.0), (20, 300.0)]);
+        let avg = average_curve(&[a, b]);
+        // harmonic mean of 100, 200 = 2/(1/100+1/200) = 133.33
+        assert!((avg.speeds[0] - 400.0 / 3.0).abs() < 1e-9);
+        assert!((avg.speeds[1] - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn balanced_splits_remainder() {
+        assert_eq!(balanced(4, 16).d, vec![4, 4, 4, 4]);
+        assert_eq!(balanced(4, 18).d, vec![5, 5, 4, 4]);
+        assert_eq!(balanced(3, 2).d, vec![1, 1, 0]);
+    }
+
+    #[test]
+    fn hpopta_balances_flat_speeds() {
+        // flat identical speeds ⇒ optimum is the balanced split
+        let c = curve(&[(4, 100.0), (8, 100.0), (12, 100.0), (16, 100.0)]);
+        let part = hpopta(&[c.clone(), c], 16).unwrap();
+        assert_eq!(part.d.iter().sum::<usize>(), 16);
+        assert_eq!(part.d, vec![8, 8]);
+        assert!((part.makespan - 0.08).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hpopta_exploits_speed_spike() {
+        // proc 0 has a huge speed spike at x=12: give it more than half
+        let fast = curve(&[(4, 100.0), (8, 100.0), (12, 600.0), (16, 100.0)]);
+        let slow = curve(&[(4, 100.0), (8, 100.0), (12, 100.0), (16, 100.0)]);
+        let part = hpopta(&[fast, slow], 16).unwrap();
+        assert_eq!(part.d, vec![12, 4]);
+        // makespan = max(12/600, 4/100) = 0.04 < balanced 0.08
+        assert!((part.makespan - 0.04).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hpopta_matches_brute_force_random() {
+        use crate::util::prng::Xoshiro256;
+        let mut rng = Xoshiro256::seeded(42);
+        for case in 0..40 {
+            let p = rng.range_usize(2, 3);
+            let m = rng.range_usize(3, 5);
+            let step = 2usize;
+            let curves: Vec<Curve> = (0..p)
+                .map(|_| {
+                    let xs: Vec<usize> = (1..=m).map(|k| k * step).collect();
+                    let speeds: Vec<f64> =
+                        (0..m).map(|_| 50.0 + rng.next_f64() * 500.0).collect();
+                    Curve::new(xs, speeds)
+                })
+                .collect();
+            let n = step * rng.range_usize(1, p * m);
+            let bf = brute_force(&curves, n);
+            let hp = hpopta(&curves, n);
+            match bf {
+                Some((_, bf_makespan)) => {
+                    let part = hp.unwrap_or_else(|e| panic!("case {case}: {e}"));
+                    assert_eq!(part.d.iter().sum::<usize>(), n, "case {case}");
+                    assert!(
+                        (part.makespan - bf_makespan).abs() < 1e-9,
+                        "case {case}: hpopta {} vs brute {}",
+                        part.makespan,
+                        bf_makespan
+                    );
+                }
+                None => assert!(hp.is_err(), "case {case}: brute says infeasible"),
+            }
+        }
+    }
+
+    #[test]
+    fn hpopta_beats_or_ties_balanced() {
+        let a = curve(&[(64, 100.0), (128, 80.0), (192, 240.0), (256, 90.0)]);
+        let b = curve(&[(64, 110.0), (128, 90.0), (192, 100.0), (256, 85.0)]);
+        let n = 256;
+        let part = hpopta(&[a.clone(), b.clone()], n).unwrap();
+        let bal = predict_makespan(&[a, b], &balanced(2, n).d);
+        assert!(part.makespan <= bal + 1e-12, "opt {} bal {bal}", part.makespan);
+    }
+
+    #[test]
+    fn popta_homogeneous() {
+        let c = curve(&[(4, 10.0), (8, 30.0), (12, 20.0)]);
+        let part = popta(&c, 3, 24).unwrap();
+        assert_eq!(part.algorithm, Algorithm::Popta);
+        assert_eq!(part.d.iter().sum::<usize>(), 24);
+        // optimum: each takes 8 at speed 30 → cost 8/30 ≈ 0.2667
+        assert_eq!(part.d, vec![8, 8, 8]);
+    }
+
+    #[test]
+    fn unreachable_n_errors() {
+        let c = curve(&[(4, 10.0)]);
+        let err = hpopta(&[c.clone(), c], 100).unwrap_err();
+        assert!(matches!(err, PartitionError::Unreachable { .. }));
+    }
+
+    #[test]
+    fn zero_n_gives_zero_distribution() {
+        let c = curve(&[(4, 10.0)]);
+        let part = hpopta(&[c], 0).unwrap();
+        assert_eq!(part.d, vec![0]);
+        assert_eq!(part.makespan, 0.0);
+    }
+
+    #[test]
+    fn empty_inputs_error() {
+        assert_eq!(hpopta(&[], 4).unwrap_err(), PartitionError::NoProcessors);
+        let empty = Curve::new(vec![], vec![]);
+        assert!(matches!(
+            hpopta(&[empty], 4).unwrap_err(),
+            PartitionError::EmptyCurve(0)
+        ));
+    }
+
+    #[test]
+    fn paper_example_shape() {
+        // Figures 9-10: two 18-thread groups, N=24704, HPOPTA gives the
+        // imbalanced (11648, 13056). Build curves with that optimum:
+        // group2 slightly faster near 13056, group1 best at 11648.
+        let step = 128;
+        let xs: Vec<usize> = (1..=24704 / 128).map(|k| k * step).collect();
+        let speed1: Vec<f64> = xs
+            .iter()
+            .map(|&x| if x == 11648 { 9000.0 } else { 6000.0 })
+            .collect();
+        let speed2: Vec<f64> = xs
+            .iter()
+            .map(|&x| if x == 13056 { 10000.0 } else { 6000.0 })
+            .collect();
+        let part = hpopta(
+            &[Curve::new(xs.clone(), speed1), Curve::new(xs, speed2)],
+            24704,
+        )
+        .unwrap();
+        assert_eq!(part.d, vec![11648, 13056]);
+    }
+}

@@ -1,0 +1,374 @@
+//! The parallel 2D-DFT drivers: PFFT-LB, PFFT-FPM, PFFT-FPM-PAD
+//! (paper Algorithms 1-5).
+//!
+//! All three share the same four-step skeleton over p abstract
+//! processors (row FFTs → transpose → row FFTs → transpose); they differ
+//! only in *how rows are distributed* (balanced vs FPM-optimal) and in
+//! *row length* (exact N vs per-processor padded N_i):
+//!
+//! * `PFFT-LB`   — Section III-B: equal rows per processor.
+//! * `PFFT-FPM`  — Section III-C: rows from POPTA/HPOPTA; possibly
+//!   deliberately imbalanced.
+//! * `PFFT-FPM-PAD` — Section III-D: FPM rows + per-processor padded row
+//!   lengths from `Determine_Pad_Length`.
+//!
+//! Groups run as scoped threads over disjoint row ranges obtained with
+//! `split_at_mut`; the transpose between phases is the paper's Appendix A
+//! blocked transpose using the full p·t thread budget.
+
+use crate::coordinator::engine::{EngineError, RowFftEngine};
+use crate::coordinator::fpm::SpeedFunction;
+use crate::coordinator::group::{row_offsets, GroupConfig};
+use crate::coordinator::pad::{pads_for_distribution, PadCost, PadDecision};
+use crate::coordinator::partition::{
+    average_curve, balanced, curves_identical, hpopta, popta, Partition, PartitionError,
+};
+use crate::dft::fft::Direction;
+use crate::dft::transpose::transpose_in_place_parallel;
+use crate::dft::SignalMatrix;
+
+/// What a driver run did (for reports and EXPERIMENTS.md records).
+#[derive(Clone, Debug)]
+pub struct PfftReport {
+    pub algorithm: String,
+    pub d: Vec<usize>,
+    /// padded row length per processor (== N when unpadded)
+    pub pads: Vec<usize>,
+    pub elapsed_s: f64,
+    pub threads_per_group: usize,
+}
+
+/// Step-1 planning (Algorithm 2 `PARTITION`): ε-identity test over the
+/// plane sections, then POPTA on the harmonic average or HPOPTA on the
+/// per-processor curves.
+pub fn plan_partition(
+    fpms: &[SpeedFunction],
+    n: usize,
+    eps: f64,
+) -> Result<Partition, PartitionError> {
+    let curves: Vec<_> = fpms.iter().map(|f| f.plane_section(n)).collect();
+    if curves_identical(&curves, eps) {
+        let avg = average_curve(&curves);
+        popta(&avg, fpms.len(), n)
+    } else {
+        hpopta(&curves, n)
+    }
+}
+
+/// PFFT-LB (Section III-B): balanced distribution, exact row length.
+pub fn pfft_lb(
+    engine: &dyn RowFftEngine,
+    m: &mut SignalMatrix,
+    cfg: GroupConfig,
+    transpose_block: usize,
+) -> Result<PfftReport, EngineError> {
+    let d = balanced(cfg.p, m.rows).d;
+    run_four_steps(engine, m, &d, None, cfg.t, transpose_block, "PFFT-LB")
+}
+
+/// PFFT-FPM (Section III-C / Algorithm 1): FPM-optimal distribution,
+/// exact row length.
+pub fn pfft_fpm(
+    engine: &dyn RowFftEngine,
+    m: &mut SignalMatrix,
+    d: &[usize],
+    threads_per_group: usize,
+    transpose_block: usize,
+) -> Result<PfftReport, EngineError> {
+    run_four_steps(engine, m, d, None, threads_per_group, transpose_block, "PFFT-FPM")
+}
+
+/// PFFT-FPM-PAD (Section III-D): FPM-optimal distribution with
+/// per-processor padded row lengths.
+pub fn pfft_fpm_pad(
+    engine: &dyn RowFftEngine,
+    m: &mut SignalMatrix,
+    d: &[usize],
+    pads: &[PadDecision],
+    threads_per_group: usize,
+    transpose_block: usize,
+) -> Result<PfftReport, EngineError> {
+    let pad_lens: Vec<usize> = pads.iter().map(|p| p.n_padded).collect();
+    run_four_steps(
+        engine,
+        m,
+        d,
+        Some(&pad_lens),
+        threads_per_group,
+        transpose_block,
+        "PFFT-FPM-PAD",
+    )
+}
+
+/// Plan + execute PFFT-FPM-PAD end to end from FPM surfaces.
+pub fn pfft_fpm_pad_planned(
+    engine: &dyn RowFftEngine,
+    m: &mut SignalMatrix,
+    fpms: &[SpeedFunction],
+    eps: f64,
+    threads_per_group: usize,
+    transpose_block: usize,
+) -> Result<PfftReport, EngineError> {
+    let part = plan_partition(fpms, m.rows, eps)
+        .map_err(|e| EngineError::Runtime(format!("partition failed: {e}")))?;
+    let pads = pads_for_distribution(fpms, &part.d, m.cols, PadCost::PaperRatio);
+    pfft_fpm_pad(engine, m, &part.d, &pads, threads_per_group, transpose_block)
+}
+
+/// The shared four-step skeleton (Algorithm 3 `PFFT_LIMB`).
+fn run_four_steps(
+    engine: &dyn RowFftEngine,
+    m: &mut SignalMatrix,
+    d: &[usize],
+    pad_lens: Option<&[usize]>,
+    threads_per_group: usize,
+    transpose_block: usize,
+    label: &str,
+) -> Result<PfftReport, EngineError> {
+    assert_eq!(m.rows, m.cols, "square signal matrix required");
+    let n = m.rows;
+    assert_eq!(d.iter().sum::<usize>(), n, "distribution must cover all rows");
+    if let Some(p) = pad_lens {
+        assert_eq!(p.len(), d.len());
+        assert!(p.iter().all(|&v| v >= n), "pad length below N");
+    }
+    let total_threads = d.len() * threads_per_group;
+    let started = std::time::Instant::now();
+
+    // Step 1/2: row FFTs on d-partitioned rows, then transpose.
+    row_phase(engine, m, d, pad_lens, threads_per_group)?;
+    transpose_in_place_parallel(m, transpose_block, total_threads);
+    // Step 3/4: same again (the transposed matrix's rows are the
+    // original columns).
+    row_phase(engine, m, d, pad_lens, threads_per_group)?;
+    transpose_in_place_parallel(m, transpose_block, total_threads);
+
+    Ok(PfftReport {
+        algorithm: label.to_string(),
+        d: d.to_vec(),
+        pads: pad_lens.map(|p| p.to_vec()).unwrap_or_else(|| vec![n; d.len()]),
+        elapsed_s: started.elapsed().as_secs_f64(),
+        threads_per_group,
+    })
+}
+
+/// One row phase: each abstract processor transforms its row range
+/// concurrently. With padding, a processor works on a local padded copy
+/// (the paper's work-matrix technique) and writes back the first N
+/// columns.
+fn row_phase(
+    engine: &dyn RowFftEngine,
+    m: &mut SignalMatrix,
+    d: &[usize],
+    pad_lens: Option<&[usize]>,
+    threads_per_group: usize,
+) -> Result<(), EngineError> {
+    let n = m.cols;
+    let offsets = row_offsets(d);
+
+    // carve disjoint per-group row slices
+    let mut re_rest: &mut [f64] = &mut m.re;
+    let mut im_rest: &mut [f64] = &mut m.im;
+    let mut slices: Vec<(&mut [f64], &mut [f64])> = Vec::with_capacity(d.len());
+    for i in 0..d.len() {
+        let len = (offsets[i + 1] - offsets[i]) * n;
+        let (re_here, re_next) = re_rest.split_at_mut(len);
+        let (im_here, im_next) = im_rest.split_at_mut(len);
+        re_rest = re_next;
+        im_rest = im_next;
+        slices.push((re_here, im_here));
+    }
+
+    let errors: std::sync::Mutex<Vec<EngineError>> = std::sync::Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for (i, (re, im)) in slices.into_iter().enumerate() {
+            let rows = d[i];
+            if rows == 0 {
+                continue;
+            }
+            let pad = pad_lens.map(|p| p[i]).unwrap_or(n);
+            let errors = &errors;
+            scope.spawn(move || {
+                let r = if pad == n {
+                    engine.fft_rows(re, im, rows, n, Direction::Forward, threads_per_group)
+                } else {
+                    fft_rows_padded(engine, re, im, rows, n, pad, threads_per_group)
+                };
+                if let Err(e) = r {
+                    errors.lock().unwrap().push(e);
+                }
+            });
+        }
+    });
+
+    match errors.into_inner().unwrap().into_iter().next() {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Padded row FFTs (Algorithm 7 `1D_ROW_FFTS_LOCAL_PADDED`): copy the
+/// rows into a (rows × pad) zeroed work buffer, transform at length
+/// `pad`, copy the first `n` columns back.
+fn fft_rows_padded(
+    engine: &dyn RowFftEngine,
+    re: &mut [f64],
+    im: &mut [f64],
+    rows: usize,
+    n: usize,
+    pad: usize,
+    threads: usize,
+) -> Result<(), EngineError> {
+    debug_assert!(pad > n);
+    let mut wre = vec![0.0f64; rows * pad];
+    let mut wim = vec![0.0f64; rows * pad];
+    for r in 0..rows {
+        wre[r * pad..r * pad + n].copy_from_slice(&re[r * n..(r + 1) * n]);
+        wim[r * pad..r * pad + n].copy_from_slice(&im[r * n..(r + 1) * n]);
+    }
+    engine.fft_rows(&mut wre, &mut wim, rows, pad, Direction::Forward, threads)?;
+    for r in 0..rows {
+        re[r * n..(r + 1) * n].copy_from_slice(&wre[r * pad..r * pad + n]);
+        im[r * n..(r + 1) * n].copy_from_slice(&wim[r * pad..r * pad + n]);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::NativeEngine;
+    use crate::dft::naive_dft2d;
+
+    fn rel_err(a: &SignalMatrix, b: &SignalMatrix) -> f64 {
+        a.max_abs_diff(b) / b.norm().max(1.0)
+    }
+
+    #[test]
+    fn pfft_lb_matches_naive_2d() {
+        for &n in &[8usize, 16, 24] {
+            let orig = SignalMatrix::random(n, n, n as u64);
+            let mut m = orig.clone();
+            let rep = pfft_lb(&NativeEngine, &mut m, GroupConfig::new(2, 2), 64).unwrap();
+            assert_eq!(rep.d.iter().sum::<usize>(), n);
+            let want = naive_dft2d(&orig);
+            assert!(rel_err(&m, &want) < 1e-10, "n={n}: {}", rel_err(&m, &want));
+        }
+    }
+
+    #[test]
+    fn pfft_fpm_imbalanced_matches_naive_2d() {
+        let n = 16;
+        let orig = SignalMatrix::random(n, n, 5);
+        let mut m = orig.clone();
+        // the paper's Figure 8 distribution d = {5, 3, 2, 6}
+        let rep = pfft_fpm(&NativeEngine, &mut m, &[5, 3, 2, 6], 1, 64).unwrap();
+        assert_eq!(rep.algorithm, "PFFT-FPM");
+        let want = naive_dft2d(&orig);
+        assert!(rel_err(&m, &want) < 1e-10);
+    }
+
+    #[test]
+    fn zero_row_groups_allowed() {
+        let n = 8;
+        let orig = SignalMatrix::random(n, n, 2);
+        let mut m = orig.clone();
+        pfft_fpm(&NativeEngine, &mut m, &[0, 8, 0], 1, 64).unwrap();
+        let want = naive_dft2d(&orig);
+        assert!(rel_err(&m, &want) < 1e-10);
+    }
+
+    #[test]
+    fn pad_zero_length_equals_fpm() {
+        let n = 16;
+        let orig = SignalMatrix::random(n, n, 7);
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        pfft_fpm(&NativeEngine, &mut a, &[8, 8], 1, 64).unwrap();
+        let pads = vec![
+            PadDecision { n_padded: n, t_unpadded: 1.0, t_padded: 1.0 },
+            PadDecision { n_padded: n, t_unpadded: 1.0, t_padded: 1.0 },
+        ];
+        pfft_fpm_pad(&NativeEngine, &mut b, &[8, 8], &pads, 1, 64).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-14);
+    }
+
+    #[test]
+    fn pad_is_spectral_interpolation_per_row_phase() {
+        // One row-phase with padding must equal: zero-pad rows to V,
+        // V-point FFT, take first n columns (the paper's semantics).
+        let (rows, n, v) = (4usize, 16usize, 24usize);
+        let orig = SignalMatrix::random(rows, n, 11);
+        let mut got = orig.clone();
+        fft_rows_padded(
+            &NativeEngine,
+            &mut got.re,
+            &mut got.im,
+            rows,
+            n,
+            v,
+            1,
+        )
+        .unwrap();
+        let padded = orig.pad_cols(v);
+        let mut want = padded.clone();
+        NativeEngine
+            .fft_rows(&mut want.re, &mut want.im, rows, v, Direction::Forward, 1)
+            .unwrap();
+        let want = want.crop_cols(n);
+        assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn plan_partition_homogeneous_uses_popta() {
+        use crate::coordinator::partition::Algorithm;
+        let fpm = SpeedFunction::from_fn(
+            "g",
+            (1..=8).map(|k| k * 2).collect(),
+            vec![16],
+            |x, _| Some(100.0 + x as f64 * 0.01),
+        );
+        let part = plan_partition(&[fpm.clone(), fpm], 16, 0.05).unwrap();
+        assert_eq!(part.algorithm, Algorithm::Popta);
+        assert_eq!(part.d.iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn plan_partition_heterogeneous_uses_hpopta() {
+        use crate::coordinator::partition::Algorithm;
+        let f1 = SpeedFunction::from_fn(
+            "g1",
+            (1..=8).map(|k| k * 2).collect(),
+            vec![16],
+            |_, _| Some(100.0),
+        );
+        let f2 = SpeedFunction::from_fn(
+            "g2",
+            (1..=8).map(|k| k * 2).collect(),
+            vec![16],
+            |_, _| Some(300.0),
+        );
+        let part = plan_partition(&[f1, f2], 16, 0.05).unwrap();
+        assert_eq!(part.algorithm, Algorithm::Hpopta);
+        // faster processor gets more rows
+        assert!(part.d[1] > part.d[0], "{:?}", part.d);
+    }
+
+    #[test]
+    #[should_panic(expected = "distribution must cover")]
+    fn wrong_distribution_sum_panics() {
+        let mut m = SignalMatrix::random(8, 8, 1);
+        let _ = pfft_fpm(&NativeEngine, &mut m, &[3, 3], 1, 64);
+    }
+
+    #[test]
+    fn report_contents() {
+        let n = 8;
+        let mut m = SignalMatrix::random(n, n, 3);
+        let rep = pfft_lb(&NativeEngine, &mut m, GroupConfig::new(2, 1), 64).unwrap();
+        assert_eq!(rep.algorithm, "PFFT-LB");
+        assert_eq!(rep.d, vec![4, 4]);
+        assert_eq!(rep.pads, vec![8, 8]);
+        assert!(rep.elapsed_s >= 0.0);
+    }
+}

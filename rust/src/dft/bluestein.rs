@@ -1,0 +1,225 @@
+//! Arbitrary-length FFT via Bluestein's chirp-z transform.
+//!
+//! The paper's problem sizes are N = 128·k (128, 192, …, 64000) — mostly
+//! *not* powers of two — while the radix-2 engine (and the L1 Pallas
+//! kernel) only handles powers of two. Bluestein closes the gap:
+//!
+//!   X_k = b*_k · Σ_j (a_j · b*_j) · b_{k-j},   b_j = exp(iπ j²/n)
+//!
+//! i.e. a length-n DFT becomes one circular convolution of length
+//! m ≥ 2n−1 (m a power of two), computed with three pow2 FFTs. The
+//! chirp sequences and the pre-transformed kernel are cached per n in
+//! [`BluesteinPlan`].
+
+use crate::dft::fft::{fft_row_pow2, Direction};
+use crate::dft::plan::Pow2Plan;
+
+/// Precomputed chirp state for a length-`n` Bluestein transform.
+#[derive(Clone, Debug)]
+pub struct BluesteinPlan {
+    pub n: usize,
+    /// Padded convolution length (power of two ≥ 2n-1).
+    pub m: usize,
+    /// chirp b_j = exp(-iπ j²/n) for forward transforms, j in [0, n).
+    chirp_re: Vec<f64>,
+    chirp_im: Vec<f64>,
+    /// FFT of the convolution kernel (conj chirp, wrapped), length m.
+    kernel_re: Vec<f64>,
+    kernel_im: Vec<f64>,
+    sub: Pow2Plan,
+}
+
+impl BluesteinPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let m = (2 * n - 1).next_power_of_two();
+        let sub = Pow2Plan::new(m);
+
+        // forward chirp: b_j = exp(-iπ j² / n)
+        let mut chirp_re = vec![0.0; n];
+        let mut chirp_im = vec![0.0; n];
+        for j in 0..n {
+            // j² mod 2n to keep the angle argument small (exactness)
+            let jsq = (j * j) % (2 * n);
+            let ang = -std::f64::consts::PI * jsq as f64 / n as f64;
+            chirp_re[j] = ang.cos();
+            chirp_im[j] = ang.sin();
+        }
+
+        // kernel c_j = conj(b_j) wrapped circularly: c[0]=b*_0,
+        // c[j] = c[m-j] = b*_j for j in [1, n)
+        let mut kernel_re = vec![0.0; m];
+        let mut kernel_im = vec![0.0; m];
+        for j in 0..n {
+            kernel_re[j] = chirp_re[j];
+            kernel_im[j] = -chirp_im[j];
+            if j > 0 {
+                kernel_re[m - j] = chirp_re[j];
+                kernel_im[m - j] = -chirp_im[j];
+            }
+        }
+        // pre-transform the kernel
+        let mut sr = vec![0.0; m];
+        let mut si = vec![0.0; m];
+        fft_row_pow2(&mut kernel_re, &mut kernel_im, &mut sr, &mut si, &sub, Direction::Forward);
+
+        BluesteinPlan { n, m, chirp_re, chirp_im, kernel_re, kernel_im, sub }
+    }
+
+    /// Scratch buffer length needed by [`fft_row_bluestein`] (4 buffers
+    /// of this length).
+    pub fn scratch_len(&self) -> usize {
+        self.m
+    }
+}
+
+/// Transform one length-`n` row (arbitrary n) in place using `plan` and
+/// four caller-provided scratch buffers of length `plan.m`.
+pub fn fft_row_bluestein(
+    re: &mut [f64],
+    im: &mut [f64],
+    plan: &BluesteinPlan,
+    dir: Direction,
+    buf_re: &mut [f64],
+    buf_im: &mut [f64],
+    scr_re: &mut [f64],
+    scr_im: &mut [f64],
+) {
+    let n = plan.n;
+    let m = plan.m;
+    debug_assert_eq!(re.len(), n);
+    debug_assert_eq!(buf_re.len(), m);
+
+    // inverse transform via conj-forward-conj: ifft(x) = conj(fft(conj(x)))/n
+    if dir == Direction::Inverse {
+        for v in im.iter_mut() {
+            *v = -*v;
+        }
+    }
+
+    // a_j * b_j  (chirp-premultiply), zero-pad to m
+    for j in 0..n {
+        let (ar, ai) = (re[j], im[j]);
+        let (br, bi) = (plan.chirp_re[j], plan.chirp_im[j]);
+        buf_re[j] = ar * br - ai * bi;
+        buf_im[j] = ar * bi + ai * br;
+    }
+    for j in n..m {
+        buf_re[j] = 0.0;
+        buf_im[j] = 0.0;
+    }
+
+    // convolution via pow2 FFT: fft(buf) * kernel_fft, then ifft
+    fft_row_pow2(buf_re, buf_im, scr_re, scr_im, &plan.sub, Direction::Forward);
+    for j in 0..m {
+        let (xr, xi) = (buf_re[j], buf_im[j]);
+        let (kr, ki) = (plan.kernel_re[j], plan.kernel_im[j]);
+        buf_re[j] = xr * kr - xi * ki;
+        buf_im[j] = xr * ki + xi * kr;
+    }
+    fft_row_pow2(buf_re, buf_im, scr_re, scr_im, &plan.sub, Direction::Inverse);
+
+    // chirp-postmultiply and write back
+    for k in 0..n {
+        let (br, bi) = (plan.chirp_re[k], plan.chirp_im[k]);
+        let (xr, xi) = (buf_re[k], buf_im[k]);
+        re[k] = xr * br - xi * bi;
+        im[k] = xr * bi + xi * br;
+    }
+
+    if dir == Direction::Inverse {
+        let inv_n = 1.0 / n as f64;
+        for k in 0..n {
+            re[k] *= inv_n;
+            im[k] = -im[k] * inv_n;
+        }
+    }
+}
+
+/// Batched arbitrary-length row FFT (allocates scratch once).
+pub fn fft_rows(re: &mut [f64], im: &mut [f64], rows: usize, n: usize, dir: Direction) {
+    if n.is_power_of_two() {
+        crate::dft::fft::fft_rows_pow2(re, im, rows, n, dir);
+        return;
+    }
+    let plan = crate::dft::plan::PlanCache::global().bluestein(n);
+    let m = plan.scratch_len();
+    let mut buf_re = vec![0.0; m];
+    let mut buf_im = vec![0.0; m];
+    let mut scr_re = vec![0.0; m];
+    let mut scr_im = vec![0.0; m];
+    for r in 0..rows {
+        let span = r * n..(r + 1) * n;
+        fft_row_bluestein(
+            &mut re[span.clone()],
+            &mut im[span],
+            &plan,
+            dir,
+            &mut buf_re,
+            &mut buf_im,
+            &mut scr_re,
+            &mut scr_im,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dft::{naive_dft_rows, SignalMatrix};
+
+    fn bluestein_matrix(m: &SignalMatrix, dir: Direction) -> SignalMatrix {
+        let mut out = m.clone();
+        fft_rows(&mut out.re, &mut out.im, m.rows, m.cols, dir);
+        out
+    }
+
+    #[test]
+    fn matches_naive_on_paper_sizes() {
+        // paper grid sizes are multiples of 128 — not powers of two
+        for &n in &[3usize, 5, 12, 24, 100, 128, 192, 320, 448] {
+            let m = SignalMatrix::random(2, n, n as u64 + 1);
+            let got = bluestein_matrix(&m, Direction::Forward);
+            let want = naive_dft_rows(&m, false);
+            let scale = want.norm().max(1.0);
+            assert!(
+                got.max_abs_diff(&want) / scale < 1e-9,
+                "n={n}: rel diff {}",
+                got.max_abs_diff(&want) / scale
+            );
+        }
+    }
+
+    #[test]
+    fn pow2_fast_path_taken() {
+        // power-of-two goes through radix-2; result must still match naive
+        let m = SignalMatrix::random(1, 64, 11);
+        let got = bluestein_matrix(&m, Direction::Forward);
+        let want = naive_dft_rows(&m, false);
+        assert!(got.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn inverse_roundtrip_arbitrary_n() {
+        for &n in &[7usize, 48, 192, 1000] {
+            let m = SignalMatrix::random(2, n, 3);
+            let f = bluestein_matrix(&m, Direction::Forward);
+            let b = bluestein_matrix(&f, Direction::Inverse);
+            assert!(m.max_abs_diff(&b) < 1e-9, "n={n}: {}", m.max_abs_diff(&b));
+        }
+    }
+
+    #[test]
+    fn n_equals_one_is_identity() {
+        let m = SignalMatrix::random(3, 1, 5);
+        let got = bluestein_matrix(&m, Direction::Forward);
+        assert!(m.max_abs_diff(&got) < 1e-15);
+    }
+
+    #[test]
+    fn plan_pads_to_pow2() {
+        let p = BluesteinPlan::new(192);
+        assert!(p.m.is_power_of_two());
+        assert!(p.m >= 2 * 192 - 1);
+    }
+}

@@ -1,0 +1,180 @@
+//! 2D-DFT row-column driver over the native substrate.
+//!
+//! Implements the paper's sequential algorithm (Section III-A) and the
+//! multithreaded row-FFT stage the abstract processors execute. The
+//! coordinator-level parallel algorithms (PFFT-LB / PFFT-FPM / PAD) live
+//! in [`crate::coordinator::pfft`]; this module provides the engine
+//! primitives they drive.
+
+use crate::dft::bluestein::fft_row_bluestein;
+use crate::dft::fft::{fft_row_pow2, Direction};
+use crate::dft::plan::PlanCache;
+use crate::dft::transpose::{transpose_in_place_parallel, DEFAULT_BLOCK};
+use crate::dft::SignalMatrix;
+
+/// Execute `rows` 1D-FFTs over the given contiguous row range of `m`
+/// using `threads` worker threads (the paper's `1D_ROW_FFTS_LOCAL` with a
+/// thread group). Arbitrary row length via Bluestein.
+pub fn row_ffts_local(
+    m: &mut SignalMatrix,
+    row_start: usize,
+    rows: usize,
+    dir: Direction,
+    threads: usize,
+) {
+    let n = m.cols;
+    if rows == 0 || n == 0 {
+        return;
+    }
+    assert!(row_start + rows <= m.rows, "row range out of bounds");
+    let threads = threads.max(1).min(rows);
+
+    let re = &mut m.re[row_start * n..(row_start + rows) * n];
+    let im = &mut m.im[row_start * n..(row_start + rows) * n];
+
+    if threads == 1 {
+        fft_rows_serial(re, im, rows, n, dir);
+        return;
+    }
+
+    // split the rows across the group's threads; each worker gets its own
+    // scratch + shared plan (plans are read-only).
+    let rows_per = rows.div_ceil(threads);
+    let re_chunks = re.chunks_mut(rows_per * n);
+    let im_chunks = im.chunks_mut(rows_per * n);
+    std::thread::scope(|scope| {
+        for (rc, ic) in re_chunks.zip(im_chunks) {
+            scope.spawn(move || {
+                let r = rc.len() / n;
+                fft_rows_serial(rc, ic, r, n, dir);
+            });
+        }
+    });
+}
+
+/// Serial batched row FFT with plan reuse (pow2 fast path, Bluestein else).
+fn fft_rows_serial(re: &mut [f64], im: &mut [f64], rows: usize, n: usize, dir: Direction) {
+    if n.is_power_of_two() {
+        let plan = PlanCache::global().pow2(n);
+        let mut sr = vec![0.0; n];
+        let mut si = vec![0.0; n];
+        for r in 0..rows {
+            let span = r * n..(r + 1) * n;
+            fft_row_pow2(&mut re[span.clone()], &mut im[span], &mut sr, &mut si, &plan, dir);
+        }
+    } else {
+        let plan = PlanCache::global().bluestein(n);
+        let mlen = plan.scratch_len();
+        let mut br = vec![0.0; mlen];
+        let mut bi = vec![0.0; mlen];
+        let mut sr = vec![0.0; mlen];
+        let mut si = vec![0.0; mlen];
+        for r in 0..rows {
+            let span = r * n..(r + 1) * n;
+            fft_row_bluestein(
+                &mut re[span.clone()],
+                &mut im[span],
+                &plan,
+                dir,
+                &mut br,
+                &mut bi,
+                &mut sr,
+                &mut si,
+            );
+        }
+    }
+}
+
+/// Full 2D-DFT of a square signal matrix with one thread group — the
+/// "basic FFT version" baseline of the paper's experiments (one group of
+/// `threads` threads), steps 1-4 of PFFT-LB with p=1.
+pub fn dft2d(m: &mut SignalMatrix, dir: Direction, threads: usize) {
+    assert_eq!(m.rows, m.cols, "square signal matrix required");
+    let n = m.rows;
+    row_ffts_local(m, 0, n, dir, threads);
+    transpose_in_place_parallel(m, DEFAULT_BLOCK, threads);
+    row_ffts_local(m, 0, n, dir, threads);
+    transpose_in_place_parallel(m, DEFAULT_BLOCK, threads);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dft::naive_dft2d;
+
+    #[test]
+    fn dft2d_matches_naive() {
+        for &n in &[4usize, 8, 16, 24] {
+            let orig = SignalMatrix::random(n, n, n as u64);
+            let mut m = orig.clone();
+            dft2d(&mut m, Direction::Forward, 1);
+            let want = naive_dft2d(&orig);
+            let scale = want.norm().max(1.0);
+            assert!(
+                m.max_abs_diff(&want) / scale < 1e-10,
+                "n={n}: {}",
+                m.max_abs_diff(&want) / scale
+            );
+        }
+    }
+
+    #[test]
+    fn dft2d_threads_invariant() {
+        let orig = SignalMatrix::random(32, 32, 5);
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        dft2d(&mut a, Direction::Forward, 1);
+        dft2d(&mut b, Direction::Forward, 4);
+        assert!(a.max_abs_diff(&b) < 1e-12);
+    }
+
+    #[test]
+    fn dft2d_roundtrip() {
+        let orig = SignalMatrix::random(16, 16, 6);
+        let mut m = orig.clone();
+        dft2d(&mut m, Direction::Forward, 2);
+        dft2d(&mut m, Direction::Inverse, 2);
+        assert!(m.max_abs_diff(&orig) < 1e-10);
+    }
+
+    #[test]
+    fn row_ffts_local_partial_range() {
+        // transforming rows [2, 5) must not touch other rows
+        let orig = SignalMatrix::random(8, 16, 7);
+        let mut m = orig.clone();
+        row_ffts_local(&mut m, 2, 3, Direction::Forward, 2);
+        for r in [0usize, 1, 5, 6, 7] {
+            for c in 0..16 {
+                assert_eq!(m.get(r, c), orig.get(r, c), "row {r} modified");
+            }
+        }
+        // and the transformed rows match a full serial transform
+        let mut want = orig.clone();
+        row_ffts_local(&mut want, 0, 8, Direction::Forward, 1);
+        for r in 2..5 {
+            for c in 0..16 {
+                let (ar, ai) = m.get(r, c);
+                let (br, bi) = want.get(r, c);
+                assert!((ar - br).abs() < 1e-12 && (ai - bi).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rows_is_noop() {
+        let orig = SignalMatrix::random(4, 8, 1);
+        let mut m = orig.clone();
+        row_ffts_local(&mut m, 2, 0, Direction::Forward, 4);
+        assert_eq!(m, orig);
+    }
+
+    #[test]
+    fn non_pow2_rows_via_bluestein() {
+        let orig = SignalMatrix::random(3, 24, 8);
+        let mut m = orig.clone();
+        row_ffts_local(&mut m, 0, 3, Direction::Forward, 1);
+        let want = crate::dft::naive_dft_rows(&orig, false);
+        let scale = want.norm().max(1.0);
+        assert!(m.max_abs_diff(&want) / scale < 1e-10);
+    }
+}

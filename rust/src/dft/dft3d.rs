@@ -1,0 +1,232 @@
+//! 3D-DFT extension — the paper's stated future work (§VII: "we plan to
+//! extend our algorithms for fast computation of 3D-DFT").
+//!
+//! The row-column decomposition generalizes to *slab* decomposition: a
+//! P×N×N volume is transformed as
+//!
+//!   1. batched 1D-FFTs along axis 2 (contiguous rows of every slab),
+//!   2. per-slab transpose (axes 1↔2), batched 1D-FFTs, transpose back,
+//!   3. slab rotation (axes 0↔1), batched 1D-FFTs along the former
+//!      depth axis, rotation back.
+//!
+//! Every compute step is again "x row 1D-FFTs of length y", so the same
+//! FPMs, POPTA/HPOPTA partitioning and padding apply unchanged — the
+//! distribution now splits *slabs* instead of rows (see
+//! [`crate::coordinator::pfft3d`]).
+
+use crate::dft::fft::Direction;
+use crate::dft::transpose::transpose_in_place_parallel;
+use crate::dft::SignalMatrix;
+
+/// A complex cube in SoA split-plane layout, `[d][r][c]` row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SignalCube {
+    pub n: usize,
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
+}
+
+impl SignalCube {
+    pub fn zeros(n: usize) -> Self {
+        SignalCube { n, re: vec![0.0; n * n * n], im: vec![0.0; n * n * n] }
+    }
+
+    pub fn random(n: usize, seed: u64) -> Self {
+        let mut rng = crate::util::prng::Xoshiro256::seeded(seed);
+        let mut c = SignalCube::zeros(n);
+        for v in c.re.iter_mut().chain(c.im.iter_mut()) {
+            *v = rng.next_f64() * 2.0 - 1.0;
+        }
+        c
+    }
+
+    #[inline]
+    pub fn idx(&self, d: usize, r: usize, c: usize) -> usize {
+        (d * self.n + r) * self.n + c
+    }
+
+    pub fn get(&self, d: usize, r: usize, c: usize) -> (f64, f64) {
+        let i = self.idx(d, r, c);
+        (self.re[i], self.im[i])
+    }
+
+    pub fn set(&mut self, d: usize, r: usize, c: usize, re: f64, im: f64) {
+        let i = self.idx(d, r, c);
+        self.re[i] = re;
+        self.im[i] = im;
+    }
+
+    pub fn max_abs_diff(&self, other: &SignalCube) -> f64 {
+        self.re
+            .iter()
+            .zip(&other.re)
+            .chain(self.im.iter().zip(&other.im))
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn norm(&self) -> f64 {
+        self.re.iter().zip(&self.im).map(|(r, i)| r * r + i * i).sum::<f64>().sqrt()
+    }
+
+    /// View slab `d` as a borrowed SignalMatrix-shaped pair of slices.
+    pub fn slab_mut(&mut self, d: usize) -> (&mut [f64], &mut [f64]) {
+        let n2 = self.n * self.n;
+        (&mut self.re[d * n2..(d + 1) * n2], &mut self.im[d * n2..(d + 1) * n2])
+    }
+}
+
+/// Rotate axes 0↔2 in place: cube[d][r][c] ↔ cube[c][r][d]. After this,
+/// the contiguous row axis (axis 2) holds what was the depth axis, so a
+/// batched row FFT transforms the original axis 0.
+pub fn rotate_d_c(cube: &mut SignalCube) {
+    let n = cube.n;
+    for r in 0..n {
+        for d in 0..n {
+            for c in (d + 1)..n {
+                let a = (d * n + r) * n + c;
+                let b = (c * n + r) * n + d;
+                cube.re.swap(a, b);
+                cube.im.swap(a, b);
+            }
+        }
+    }
+}
+
+/// Per-slab transpose (axes 1↔2) over a contiguous range of slabs.
+pub fn transpose_slabs(cube: &mut SignalCube, d0: usize, d1: usize, block: usize, threads: usize) {
+    let n = cube.n;
+    let n2 = n * n;
+    for d in d0..d1 {
+        // wrap the slab in a temporary SignalMatrix facade
+        let mut m = SignalMatrix {
+            rows: n,
+            cols: n,
+            re: cube.re[d * n2..(d + 1) * n2].to_vec(),
+            im: cube.im[d * n2..(d + 1) * n2].to_vec(),
+        };
+        transpose_in_place_parallel(&mut m, block, threads);
+        cube.re[d * n2..(d + 1) * n2].copy_from_slice(&m.re);
+        cube.im[d * n2..(d + 1) * n2].copy_from_slice(&m.im);
+    }
+}
+
+/// Full 3D-DFT of an n×n×n cube using one thread group (the baseline the
+/// PFFT-FPM-3D coordinator beats). Dir applies to all three axes.
+pub fn dft3d(cube: &mut SignalCube, dir: Direction, threads: usize) {
+    let n = cube.n;
+    // axis 2: all n^2 rows are contiguous
+    crate::dft::bluestein::fft_rows(&mut cube.re, &mut cube.im, n * n, n, dir);
+    // axis 1: per-slab transpose, rows, transpose back
+    transpose_slabs(cube, 0, n, 64, threads);
+    crate::dft::bluestein::fft_rows(&mut cube.re, &mut cube.im, n * n, n, dir);
+    transpose_slabs(cube, 0, n, 64, threads);
+    // axis 0: rotate depth<->column, rows, rotate back
+    rotate_d_c(cube);
+    crate::dft::bluestein::fft_rows(&mut cube.re, &mut cube.im, n * n, n, dir);
+    rotate_d_c(cube);
+}
+
+/// Naive O(N^2)-per-axis 3D-DFT oracle (tests only; keep n tiny).
+pub fn naive_dft3d(cube: &SignalCube) -> SignalCube {
+    let n = cube.n;
+    let mut out = SignalCube::zeros(n);
+    let w = |k: usize, j: usize| {
+        let ang = -2.0 * std::f64::consts::PI * (k * j % n) as f64 / n as f64;
+        (ang.cos(), ang.sin())
+    };
+    for kd in 0..n {
+        for kr in 0..n {
+            for kc in 0..n {
+                let (mut sr, mut si) = (0.0, 0.0);
+                for d in 0..n {
+                    for r in 0..n {
+                        for c in 0..n {
+                            let (xr, xi) = cube.get(d, r, c);
+                            let (w1r, w1i) = w(kd, d);
+                            let (w2r, w2i) = w(kr, r);
+                            let (w3r, w3i) = w(kc, c);
+                            // w = w1*w2*w3
+                            let (t1r, t1i) = (w1r * w2r - w1i * w2i, w1r * w2i + w1i * w2r);
+                            let (wr, wi) = (t1r * w3r - t1i * w3i, t1r * w3i + t1i * w3r);
+                            sr += xr * wr - xi * wi;
+                            si += xr * wi + xi * wr;
+                        }
+                    }
+                }
+                out.set(kd, kr, kc, sr, si);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dft3d_matches_naive() {
+        for &n in &[2usize, 4, 6] {
+            let orig = SignalCube::random(n, n as u64);
+            let mut c = orig.clone();
+            dft3d(&mut c, Direction::Forward, 1);
+            let want = naive_dft3d(&orig);
+            let scale = want.norm().max(1.0);
+            assert!(
+                c.max_abs_diff(&want) / scale < 1e-10,
+                "n={n}: {}",
+                c.max_abs_diff(&want) / scale
+            );
+        }
+    }
+
+    #[test]
+    fn dft3d_roundtrip() {
+        let orig = SignalCube::random(8, 3);
+        let mut c = orig.clone();
+        dft3d(&mut c, Direction::Forward, 2);
+        dft3d(&mut c, Direction::Inverse, 2);
+        assert!(c.max_abs_diff(&orig) < 1e-10);
+    }
+
+    #[test]
+    fn rotate_is_involution() {
+        let orig = SignalCube::random(5, 7);
+        let mut c = orig.clone();
+        rotate_d_c(&mut c);
+        assert_ne!(c, orig);
+        rotate_d_c(&mut c);
+        assert_eq!(c, orig);
+    }
+
+    #[test]
+    fn rotate_moves_elements_correctly() {
+        let mut c = SignalCube::zeros(3);
+        c.set(0, 2, 1, 5.0, -5.0);
+        rotate_d_c(&mut c);
+        // [d][r][c] -> [c][r][d]: (0,2,1) lands at (1,2,0)
+        assert_eq!(c.get(1, 2, 0), (5.0, -5.0));
+        assert_eq!(c.get(0, 2, 1), (0.0, 0.0));
+    }
+
+    #[test]
+    fn transpose_slabs_per_slab() {
+        let mut c = SignalCube::zeros(2);
+        c.set(1, 0, 1, 3.0, 4.0);
+        transpose_slabs(&mut c, 0, 2, 16, 1);
+        assert_eq!(c.get(1, 1, 0), (3.0, 4.0));
+    }
+
+    #[test]
+    fn parseval_3d() {
+        let n = 4;
+        let orig = SignalCube::random(n, 9);
+        let mut c = orig.clone();
+        dft3d(&mut c, Direction::Forward, 1);
+        let et: f64 = orig.re.iter().zip(&orig.im).map(|(r, i)| r * r + i * i).sum();
+        let ef: f64 =
+            c.re.iter().zip(&c.im).map(|(r, i)| r * r + i * i).sum::<f64>() / (n * n * n) as f64;
+        assert!((et - ef).abs() / et < 1e-10);
+    }
+}

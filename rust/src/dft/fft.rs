@@ -1,0 +1,267 @@
+//! Iterative Stockham radix-2 FFT over split-plane buffers.
+//!
+//! Same decimation-in-frequency Stockham formulation as the L1 Pallas
+//! kernel (`python/compile/kernels/fft.py`) so the two implementations are
+//! line-for-line comparable: state is viewed as `(n_cur, s)` with original
+//! index `q + s·p`; each stage halves `n_cur`, doubles `s`, and the result
+//! lands in natural order (no bit reversal).
+//!
+//! The hot entry point is [`fft_rows_pow2_with`], which transforms a batch
+//! of rows reusing a cached [`plan::Pow2Plan`] twiddle table and one
+//! scratch buffer — the plan-once/execute-many shape of Algorithm 6.
+
+use crate::dft::plan::Pow2Plan;
+
+/// Forward/inverse direction marker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Forward,
+    Inverse,
+}
+
+impl Direction {
+    #[inline]
+    pub fn sign(self) -> f64 {
+        match self {
+            Direction::Forward => -1.0,
+            Direction::Inverse => 1.0,
+        }
+    }
+}
+
+/// Transform a single length-`n` row (power of two) in `re`/`im`,
+/// using `plan` twiddles and `scratch` (same length) as the ping-pong
+/// buffer. O(n log n), result in natural order.
+pub fn fft_row_pow2(
+    re: &mut [f64],
+    im: &mut [f64],
+    scratch_re: &mut [f64],
+    scratch_im: &mut [f64],
+    plan: &Pow2Plan,
+    dir: Direction,
+) {
+    let n = plan.n;
+    debug_assert!(n.is_power_of_two());
+    debug_assert_eq!(re.len(), n);
+    debug_assert_eq!(scratch_re.len(), n);
+
+    if n == 1 {
+        return;
+    }
+
+    // ping-pong between (re,im) and scratch; stage s: view src as
+    // (n_cur, stride) row-major [p, q] at index q + stride*p.
+    let mut n_cur = n;
+    let mut stride = 1usize;
+    let mut in_src = true; // data currently in re/im?
+    while n_cur > 1 {
+        let m = n_cur / 2;
+        let (sr, si, dr, di): (&[f64], &[f64], &mut [f64], &mut [f64]) = if in_src {
+            (&*re, &*im, &mut *scratch_re, &mut *scratch_im)
+        } else {
+            (&*scratch_re, &*scratch_im, &mut *re, &mut *im)
+        };
+        // twiddles for this stage: w_p = exp(sign*2πi * p / n_cur)
+        // plan stores forward twiddles at stride n/n_cur: w_p = tw[p * (n/n_cur)]
+        let tw_step = plan.n / n_cur;
+        let sign = if dir == Direction::Inverse { -1.0 } else { 1.0 };
+        for p in 0..m {
+            let (wr, wi0) = plan.twiddle(p * tw_step);
+            let wi = sign * wi0;
+            let a_base = stride * p;
+            let b_base = stride * (p + m);
+            let o0_base = stride * 2 * p;
+            let o1_base = stride * (2 * p + 1);
+            // slice the butterfly lanes once: the explicit subslices let
+            // LLVM drop per-element bounds checks and vectorize the q
+            // loop (see EXPERIMENTS.md §Perf)
+            let sar = &sr[a_base..a_base + stride];
+            let sai = &si[a_base..a_base + stride];
+            let sbr = &sr[b_base..b_base + stride];
+            let sbi = &si[b_base..b_base + stride];
+            let (d0r, d1r) = dr[o0_base..o1_base + stride].split_at_mut(stride);
+            let (d0i, d1i) = di[o0_base..o1_base + stride].split_at_mut(stride);
+            for q in 0..stride {
+                let ar = sar[q];
+                let ai = sai[q];
+                let br = sbr[q];
+                let bi = sbi[q];
+                d0r[q] = ar + br;
+                d0i[q] = ai + bi;
+                let xr = ar - br;
+                let xi = ai - bi;
+                d1r[q] = xr * wr - xi * wi;
+                d1i[q] = xr * wi + xi * wr;
+            }
+        }
+        n_cur = m;
+        stride *= 2;
+        in_src = !in_src;
+    }
+
+    if !in_src {
+        re.copy_from_slice(scratch_re);
+        im.copy_from_slice(scratch_im);
+    }
+    if dir == Direction::Inverse {
+        let inv_n = 1.0 / n as f64;
+        for v in re.iter_mut() {
+            *v *= inv_n;
+        }
+        for v in im.iter_mut() {
+            *v *= inv_n;
+        }
+    }
+}
+
+/// Transform `rows` rows of length `plan.n` stored contiguously in
+/// `re`/`im` (row-major), reusing one scratch buffer.
+pub fn fft_rows_pow2_with(
+    re: &mut [f64],
+    im: &mut [f64],
+    rows: usize,
+    plan: &Pow2Plan,
+    dir: Direction,
+    scratch_re: &mut Vec<f64>,
+    scratch_im: &mut Vec<f64>,
+) {
+    let n = plan.n;
+    debug_assert_eq!(re.len(), rows * n);
+    scratch_re.resize(n, 0.0);
+    scratch_im.resize(n, 0.0);
+    for r in 0..rows {
+        let span = r * n..(r + 1) * n;
+        fft_row_pow2(
+            &mut re[span.clone()],
+            &mut im[span],
+            &mut scratch_re[..],
+            &mut scratch_im[..],
+            plan,
+            dir,
+        );
+    }
+}
+
+/// Convenience allocation-per-call wrapper (tests / cold paths).
+pub fn fft_rows_pow2(re: &mut [f64], im: &mut [f64], rows: usize, n: usize, dir: Direction) {
+    let plan = Pow2Plan::new(n);
+    let mut sr = Vec::new();
+    let mut si = Vec::new();
+    fft_rows_pow2_with(re, im, rows, &plan, dir, &mut sr, &mut si);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dft::{naive_dft_rows, SignalMatrix};
+
+    fn fft_matrix(m: &SignalMatrix, dir: Direction) -> SignalMatrix {
+        let mut out = m.clone();
+        fft_rows_pow2(&mut out.re, &mut out.im, m.rows, m.cols, dir);
+        out
+    }
+
+    #[test]
+    fn matches_naive_dft_across_sizes() {
+        for &n in &[1usize, 2, 4, 8, 16, 64, 256, 1024] {
+            let m = SignalMatrix::random(2, n, n as u64);
+            let got = fft_matrix(&m, Direction::Forward);
+            let want = naive_dft_rows(&m, false);
+            let scale = want.norm().max(1.0);
+            assert!(
+                got.max_abs_diff(&want) / scale < 1e-10,
+                "n={n}: diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        for &n in &[2usize, 8, 128, 512] {
+            let m = SignalMatrix::random(3, n, 7);
+            let f = fft_matrix(&m, Direction::Forward);
+            let b = fft_matrix(&f, Direction::Inverse);
+            assert!(m.max_abs_diff(&b) < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn impulse_flat_spectrum() {
+        let mut m = SignalMatrix::zeros(1, 32);
+        m.set(0, 0, 1.0, 0.0);
+        let f = fft_matrix(&m, Direction::Forward);
+        for c in 0..32 {
+            let (re, im) = f.get(0, c);
+            assert!((re - 1.0).abs() < 1e-12 && im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn constant_maps_to_delta() {
+        let n = 64;
+        let mut m = SignalMatrix::zeros(1, n);
+        for c in 0..n {
+            m.set(0, c, 1.0, 0.0);
+        }
+        let f = fft_matrix(&m, Direction::Forward);
+        let (re0, _) = f.get(0, 0);
+        assert!((re0 - n as f64).abs() < 1e-9);
+        for c in 1..n {
+            let (re, im) = f.get(0, c);
+            assert!(re.abs() < 1e-9 && im.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let n = 256;
+        let m = SignalMatrix::random(1, n, 5);
+        let f = fft_matrix(&m, Direction::Forward);
+        let te: f64 = m.re.iter().zip(&m.im).map(|(r, i)| r * r + i * i).sum();
+        let fe: f64 = f.re.iter().zip(&f.im).map(|(r, i)| r * r + i * i).sum::<f64>() / n as f64;
+        assert!((te - fe).abs() / te < 1e-12);
+    }
+
+    #[test]
+    fn linearity() {
+        let n = 64;
+        let a = SignalMatrix::random(1, n, 1);
+        let b = SignalMatrix::random(1, n, 2);
+        let mut sum = SignalMatrix::zeros(1, n);
+        for i in 0..n {
+            sum.re[i] = 2.0 * a.re[i] - 0.5 * b.re[i];
+            sum.im[i] = 2.0 * a.im[i] - 0.5 * b.im[i];
+        }
+        let fa = fft_matrix(&a, Direction::Forward);
+        let fb = fft_matrix(&b, Direction::Forward);
+        let fs = fft_matrix(&sum, Direction::Forward);
+        for i in 0..n {
+            assert!((fs.re[i] - (2.0 * fa.re[i] - 0.5 * fb.re[i])).abs() < 1e-9);
+            assert!((fs.im[i] - (2.0 * fa.im[i] - 0.5 * fb.im[i])).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn shift_theorem() {
+        // circular shift by k multiplies spectrum by exp(-2πi k l / n)
+        let n = 32;
+        let m = SignalMatrix::random(1, n, 9);
+        let mut shifted = SignalMatrix::zeros(1, n);
+        let k = 5;
+        for c in 0..n {
+            let (re, im) = m.get(0, c);
+            shifted.set(0, (c + k) % n, re, im);
+        }
+        let fm = fft_matrix(&m, Direction::Forward);
+        let fs = fft_matrix(&shifted, Direction::Forward);
+        for l in 0..n {
+            let ang = -2.0 * std::f64::consts::PI * (k as f64) * (l as f64) / n as f64;
+            let (wr, wi) = (ang.cos(), ang.sin());
+            let (ar, ai) = fm.get(0, l);
+            let want = (ar * wr - ai * wi, ar * wi + ai * wr);
+            let got = fs.get(0, l);
+            assert!((got.0 - want.0).abs() < 1e-9 && (got.1 - want.1).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Native FFT substrate — the from-scratch compute engine.
+//!
+//! The paper's experiments run FFTW / Intel MKL under the coordinator;
+//! neither exists here, so this module provides the multithreaded 2D-DFT
+//! compute engine the coordinator drives on the real machine:
+//!
+//! * [`plan`] — cached FFT plans (twiddle tables, Bluestein state): the
+//!   analogue of `fftw_plan_many_dft` (Algorithm 6's plan/execute/destroy
+//!   becomes plan-once/execute-many, see DESIGN.md §Perf),
+//! * [`fft`] — iterative Stockham radix-2 (same algorithm as the L1
+//!   Pallas kernel, so the two implementations cross-check each other),
+//! * [`bluestein`] — arbitrary-length FFT via the chirp-z transform (the
+//!   paper's problem sizes N = 128·k are mostly *not* powers of two),
+//! * [`transpose`] — the paper's Appendix A blocked in-place transpose,
+//! * [`dft2d`] — the row-column 2D-DFT driver with thread groups.
+//!
+//! Layout is SoA split planes (`re`, `im` as separate slices), matching
+//! the L1/L2 representation, with `f64` precision so the native engine
+//! doubles as a numeric oracle for the f32 PJRT artifacts.
+
+pub mod bluestein;
+pub mod dft2d;
+pub mod dft3d;
+pub mod fft;
+pub mod plan;
+pub mod transpose;
+
+/// A complex matrix in SoA split-plane layout, row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SignalMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
+}
+
+impl SignalMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        SignalMatrix { rows, cols, re: vec![0.0; rows * cols], im: vec![0.0; rows * cols] }
+    }
+
+    /// Deterministic random matrix for tests/benches.
+    pub fn random(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = crate::util::prng::Xoshiro256::seeded(seed);
+        let mut m = SignalMatrix::zeros(rows, cols);
+        for v in m.re.iter_mut().chain(m.im.iter_mut()) {
+            *v = rng.next_f64() * 2.0 - 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn idx(&self, r: usize, c: usize) -> usize {
+        r * self.cols + c
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> (f64, f64) {
+        let i = self.idx(r, c);
+        (self.re[i], self.im[i])
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, re: f64, im: f64) {
+        let i = self.idx(r, c);
+        self.re[i] = re;
+        self.im[i] = im;
+    }
+
+    /// Max |elementwise difference| against another matrix.
+    pub fn max_abs_diff(&self, other: &SignalMatrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.re
+            .iter()
+            .zip(&other.re)
+            .chain(self.im.iter().zip(&other.im))
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Frobenius norm (for relative-error checks).
+    pub fn norm(&self) -> f64 {
+        self.re
+            .iter()
+            .zip(&self.im)
+            .map(|(r, i)| r * r + i * i)
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Copy this matrix into the top-left corner of a (rows, new_cols)
+    /// zero matrix — the PFFT-FPM-PAD row-padding primitive.
+    pub fn pad_cols(&self, new_cols: usize) -> SignalMatrix {
+        assert!(new_cols >= self.cols);
+        let mut out = SignalMatrix::zeros(self.rows, new_cols);
+        for r in 0..self.rows {
+            let src = r * self.cols..(r + 1) * self.cols;
+            let dst = r * new_cols..r * new_cols + self.cols;
+            out.re[dst.clone()].copy_from_slice(&self.re[src.clone()]);
+            out.im[dst].copy_from_slice(&self.im[src]);
+        }
+        out
+    }
+
+    /// Inverse of [`pad_cols`]: take the left `new_cols` columns.
+    pub fn crop_cols(&self, new_cols: usize) -> SignalMatrix {
+        assert!(new_cols <= self.cols);
+        let mut out = SignalMatrix::zeros(self.rows, new_cols);
+        for r in 0..self.rows {
+            let src = r * self.cols..r * self.cols + new_cols;
+            let dst = r * new_cols..(r + 1) * new_cols;
+            out.re[dst.clone()].copy_from_slice(&self.re[src.clone()]);
+            out.im[dst].copy_from_slice(&self.im[src]);
+        }
+        out
+    }
+}
+
+/// Naive O(N^2)-per-row DFT oracle (paper Section III-A definition).
+/// Slow by design; used only in tests.
+pub fn naive_dft_rows(m: &SignalMatrix, inverse: bool) -> SignalMatrix {
+    let n = m.cols;
+    let sign = if inverse { 2.0 } else { -2.0 };
+    let mut out = SignalMatrix::zeros(m.rows, n);
+    for r in 0..m.rows {
+        for k in 0..n {
+            let (mut sr, mut si) = (0.0f64, 0.0f64);
+            for j in 0..n {
+                let ang = sign * std::f64::consts::PI * (k as f64) * (j as f64) / n as f64;
+                let (wr, wi) = (ang.cos(), ang.sin());
+                let (xr, xi) = m.get(r, j);
+                sr += xr * wr - xi * wi;
+                si += xr * wi + xi * wr;
+            }
+            if inverse {
+                sr /= n as f64;
+                si /= n as f64;
+            }
+            out.set(r, k, sr, si);
+        }
+    }
+    out
+}
+
+/// Naive full 2D-DFT oracle: row DFTs then column DFTs.
+pub fn naive_dft2d(m: &SignalMatrix) -> SignalMatrix {
+    assert_eq!(m.rows, m.cols, "square signal matrix required");
+    let rowed = naive_dft_rows(m, false);
+    let mut t = transpose::transposed(&rowed);
+    t = naive_dft_rows(&t, false);
+    transpose::transposed(&t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_and_crop_roundtrip() {
+        let m = SignalMatrix::random(3, 5, 1);
+        let padded = m.pad_cols(8);
+        assert_eq!((padded.rows, padded.cols), (3, 8));
+        // padded region is zero
+        for r in 0..3 {
+            for c in 5..8 {
+                assert_eq!(padded.get(r, c), (0.0, 0.0));
+            }
+        }
+        assert_eq!(padded.crop_cols(5), m);
+    }
+
+    #[test]
+    fn naive_dft_impulse() {
+        let mut m = SignalMatrix::zeros(1, 4);
+        m.set(0, 0, 1.0, 0.0);
+        let f = naive_dft_rows(&m, false);
+        for c in 0..4 {
+            let (re, im) = f.get(0, c);
+            assert!((re - 1.0).abs() < 1e-12 && im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn naive_dft_roundtrip() {
+        let m = SignalMatrix::random(2, 6, 3);
+        let f = naive_dft_rows(&m, false);
+        let b = naive_dft_rows(&f, true);
+        assert!(m.max_abs_diff(&b) < 1e-10);
+    }
+
+    #[test]
+    fn norm_and_diff() {
+        let mut a = SignalMatrix::zeros(1, 2);
+        a.set(0, 0, 3.0, 4.0);
+        assert!((a.norm() - 5.0).abs() < 1e-12);
+        let b = SignalMatrix::zeros(1, 2);
+        assert_eq!(a.max_abs_diff(&b), 4.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Cached FFT plans — the plan-once/execute-many analogue of
+//! `fftw_plan_many_dft` (paper Algorithm 6).
+//!
+//! A [`Pow2Plan`] holds the forward twiddle table for a power-of-two
+//! length; a [`BluesteinPlan`] (built by [`crate::dft::bluestein`]) holds
+//! the chirp sequences and the padded pow2 sub-plan for arbitrary lengths.
+//! [`PlanCache`] memoizes both behind a mutex so abstract-processor
+//! threads share tables (twiddle construction is O(n) but shows up hard
+//! in profiles when executed per call — see EXPERIMENTS.md §Perf).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Twiddle table for a power-of-two FFT: `tw[k] = exp(-2πi k / n)` for
+/// k in [0, n/2).
+#[derive(Clone, Debug)]
+pub struct Pow2Plan {
+    pub n: usize,
+    tw_re: Vec<f64>,
+    tw_im: Vec<f64>,
+}
+
+impl Pow2Plan {
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two(), "Pow2Plan requires power-of-two n, got {n}");
+        let half = (n / 2).max(1);
+        let mut tw_re = Vec::with_capacity(half);
+        let mut tw_im = Vec::with_capacity(half);
+        for k in 0..half {
+            let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+            tw_re.push(ang.cos());
+            tw_im.push(ang.sin());
+        }
+        Pow2Plan { n, tw_re, tw_im }
+    }
+
+    /// Forward twiddle `exp(-2πi k / n)`, k < n/2.
+    #[inline]
+    pub fn twiddle(&self, k: usize) -> (f64, f64) {
+        (self.tw_re[k], self.tw_im[k])
+    }
+}
+
+/// Process-wide plan cache (pow2 plans keyed by n).
+#[derive(Default)]
+pub struct PlanCache {
+    pow2: Mutex<HashMap<usize, Arc<Pow2Plan>>>,
+    bluestein: Mutex<HashMap<usize, Arc<crate::dft::bluestein::BluesteinPlan>>>,
+}
+
+impl PlanCache {
+    pub fn global() -> &'static PlanCache {
+        static CACHE: OnceLock<PlanCache> = OnceLock::new();
+        CACHE.get_or_init(PlanCache::default)
+    }
+
+    pub fn pow2(&self, n: usize) -> Arc<Pow2Plan> {
+        let mut map = self.pow2.lock().unwrap();
+        map.entry(n).or_insert_with(|| Arc::new(Pow2Plan::new(n))).clone()
+    }
+
+    pub fn bluestein(&self, n: usize) -> Arc<crate::dft::bluestein::BluesteinPlan> {
+        let mut map = self.bluestein.lock().unwrap();
+        map.entry(n)
+            .or_insert_with(|| Arc::new(crate::dft::bluestein::BluesteinPlan::new(n)))
+            .clone()
+    }
+
+    /// Number of cached pow2 plans (test hook).
+    pub fn pow2_len(&self) -> usize {
+        self.pow2.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twiddle_values() {
+        let p = Pow2Plan::new(8);
+        let (re, im) = p.twiddle(0);
+        assert!((re - 1.0).abs() < 1e-15 && im.abs() < 1e-15);
+        let (re, im) = p.twiddle(2); // exp(-i π/2) = -i
+        assert!(re.abs() < 1e-15 && (im + 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn rejects_non_pow2() {
+        Pow2Plan::new(24);
+    }
+
+    #[test]
+    fn cache_shares_plans() {
+        let cache = PlanCache::default();
+        let a = cache.pow2(64);
+        let b = cache.pow2(64);
+        assert!(Arc::ptr_eq(&a, &b));
+        let _c = cache.pow2(128);
+        assert_eq!(cache.pow2_len(), 2);
+    }
+
+    #[test]
+    fn global_cache_is_singleton() {
+        let a = PlanCache::global().pow2(32);
+        let b = PlanCache::global().pow2(32);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

@@ -1,0 +1,208 @@
+//! Blocked matrix transpose — port of the paper's Appendix A
+//! (`hcl_transpose_block`, block size 64) to the SoA split-plane layout,
+//! plus a multithreaded variant (the paper's `PARALLEL_TRANSPOSE`).
+//!
+//! The in-place square transpose walks the upper triangle in b×b tiles and
+//! swaps mirrored tiles; the diagonal tiles transpose in place. This is
+//! the paper's cache-blocking scheme exactly (their `block_size=64` default
+//! is kept; the sweep lives in `rust/benches/bench_transpose.rs`).
+
+use crate::dft::SignalMatrix;
+
+/// Paper's default block size (Appendix A: "We use a block size of 64").
+pub const DEFAULT_BLOCK: usize = 64;
+
+/// In-place transpose of a square n×n split-plane matrix with blocking.
+pub fn transpose_in_place(m: &mut SignalMatrix, block: usize) {
+    assert_eq!(m.rows, m.cols, "in-place transpose requires square matrix");
+    let n = m.rows;
+    let b = block.max(1);
+    let mut i = 0;
+    while i < n {
+        let ih = (i + b).min(n);
+        // diagonal tile
+        transpose_diag_tile(&mut m.re, n, i, ih);
+        transpose_diag_tile(&mut m.im, n, i, ih);
+        // off-diagonal tiles (swap mirrored pairs)
+        let mut j = ih;
+        while j < n {
+            let jh = (j + b).min(n);
+            swap_tiles(&mut m.re, n, i, ih, j, jh);
+            swap_tiles(&mut m.im, n, i, ih, j, jh);
+            j = jh;
+        }
+        i = ih;
+    }
+}
+
+/// Transpose the diagonal tile rows [lo, hi) in place.
+fn transpose_diag_tile(x: &mut [f64], n: usize, lo: usize, hi: usize) {
+    for r in lo..hi {
+        for c in (r + 1)..hi {
+            x.swap(r * n + c, c * n + r);
+        }
+    }
+}
+
+/// Swap tile (ri.., cj..) with its mirror (cj.., ri..), transposing both.
+fn swap_tiles(x: &mut [f64], n: usize, r0: usize, r1: usize, c0: usize, c1: usize) {
+    for r in r0..r1 {
+        for c in c0..c1 {
+            x.swap(r * n + c, c * n + r);
+        }
+    }
+}
+
+/// Multithreaded in-place transpose: tile pairs are partitioned across
+/// `threads` workers (each tile pair touches a disjoint index set, so the
+/// split-plane buffers can be shared mutably via raw parts safely).
+pub fn transpose_in_place_parallel(m: &mut SignalMatrix, block: usize, threads: usize) {
+    assert_eq!(m.rows, m.cols);
+    let n = m.rows;
+    let b = block.max(1);
+    if threads <= 1 || n < 2 * b {
+        return transpose_in_place(m, block);
+    }
+
+    // enumerate tile jobs: (i, j) with j >= i, block-aligned
+    let mut jobs: Vec<(usize, usize)> = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j < n {
+            jobs.push((i, j));
+            j += b;
+        }
+        i += b;
+    }
+
+    let re_ptr = SendPtr(m.re.as_mut_ptr());
+    let im_ptr = SendPtr(m.im.as_mut_ptr());
+    let jobs_per = jobs.len().div_ceil(threads);
+    std::thread::scope(|scope| {
+        for chunk in jobs.chunks(jobs_per.max(1)) {
+            let re_ptr = re_ptr;
+            let im_ptr = im_ptr;
+            scope.spawn(move || {
+                // rebind the wrappers whole: 2021 precise capture would
+                // otherwise capture only the (non-Send) pointer fields
+                let (re_ptr, im_ptr) = (re_ptr, im_ptr);
+                for &(ti, tj) in chunk {
+                    let ih = (ti + b).min(n);
+                    let jh = (tj + b).min(n);
+                    // SAFETY: each (ti, tj) tile pair touches indices
+                    // {(r,c), (c,r) : r in [ti,ih), c in [tj,jh)} which are
+                    // disjoint across jobs for ti <= tj block-aligned grid.
+                    let re = unsafe { std::slice::from_raw_parts_mut(re_ptr.0, n * n) };
+                    let im = unsafe { std::slice::from_raw_parts_mut(im_ptr.0, n * n) };
+                    if ti == tj {
+                        transpose_diag_tile(re, n, ti, ih);
+                        transpose_diag_tile(im, n, ti, ih);
+                    } else {
+                        swap_tiles(re, n, ti, ih, tj, jh);
+                        swap_tiles(im, n, ti, ih, tj, jh);
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+// SAFETY: jobs touch disjoint index sets (see above).
+unsafe impl Send for SendPtr {}
+
+/// Out-of-place transpose (works for rectangular matrices).
+pub fn transposed(m: &SignalMatrix) -> SignalMatrix {
+    let mut out = SignalMatrix::zeros(m.cols, m.rows);
+    let b = DEFAULT_BLOCK;
+    let mut i = 0;
+    while i < m.rows {
+        let ih = (i + b).min(m.rows);
+        let mut j = 0;
+        while j < m.cols {
+            let jh = (j + b).min(m.cols);
+            for r in i..ih {
+                for c in j..jh {
+                    let src = r * m.cols + c;
+                    let dst = c * m.rows + r;
+                    out.re[dst] = m.re[src];
+                    out.im[dst] = m.im[src];
+                }
+            }
+            j = jh;
+        }
+        i = ih;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reference_transpose(m: &SignalMatrix) -> SignalMatrix {
+        let mut out = SignalMatrix::zeros(m.cols, m.rows);
+        for r in 0..m.rows {
+            for c in 0..m.cols {
+                let (re, im) = m.get(r, c);
+                out.set(c, r, re, im);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn in_place_matches_reference() {
+        for &n in &[1usize, 2, 63, 64, 65, 128, 130] {
+            let orig = SignalMatrix::random(n, n, n as u64);
+            let mut m = orig.clone();
+            transpose_in_place(&mut m, 64);
+            assert_eq!(m, reference_transpose(&orig), "n={n}");
+        }
+    }
+
+    #[test]
+    fn in_place_involution() {
+        let orig = SignalMatrix::random(100, 100, 9);
+        let mut m = orig.clone();
+        transpose_in_place(&mut m, 32);
+        transpose_in_place(&mut m, 32);
+        assert_eq!(m, orig);
+    }
+
+    #[test]
+    fn block_size_does_not_change_result() {
+        let orig = SignalMatrix::random(96, 96, 2);
+        for &b in &[1usize, 7, 16, 64, 200] {
+            let mut m = orig.clone();
+            transpose_in_place(&mut m, b);
+            assert_eq!(m, reference_transpose(&orig), "block={b}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        for &(n, t) in &[(128usize, 2usize), (130, 3), (256, 4), (64, 8)] {
+            let orig = SignalMatrix::random(n, n, 77);
+            let mut a = orig.clone();
+            let mut b = orig.clone();
+            transpose_in_place(&mut a, 64);
+            transpose_in_place_parallel(&mut b, 64, t);
+            assert_eq!(a, b, "n={n} t={t}");
+        }
+    }
+
+    #[test]
+    fn out_of_place_rectangular() {
+        let m = SignalMatrix::random(3, 7, 4);
+        let t = transposed(&m);
+        assert_eq!((t.rows, t.cols), (7, 3));
+        for r in 0..3 {
+            for c in 0..7 {
+                assert_eq!(m.get(r, c), t.get(c, r));
+            }
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Extension figures (beyond the paper's 26): the future-work items and
+//! baselines this repo adds — dynamic-scheduler ablation, cluster strong
+//! scaling, the time/energy Pareto front, and the 3D-DFT demo.
+
+use crate::coordinator::dynamic::dynamic_virtual_time;
+use crate::coordinator::energy::pareto_front;
+use crate::coordinator::fpm::Curve;
+use crate::coordinator::partition::hpopta;
+use crate::figures::Ctx;
+use crate::simulator::cluster::strong_scaling;
+use crate::simulator::fpm::SimTestbed;
+use crate::simulator::Package;
+use crate::util::table::{fnum, Table};
+
+/// ext-dynamic: model-based static (HPOPTA) vs dynamic work-stealing on
+/// the virtual testbed — quantifies the value of the model.
+pub fn dynamic_ablation(ctx: &Ctx) -> Result<String, String> {
+    use crate::simulator::vexec::{simulate_size, transpose_time};
+    let tb = SimTestbed::paper_best(Package::Mkl);
+    let mut t = Table::new(
+        "ext-dynamic — dynamic work-stealing vs PFFT-FPM / PFFT-FPM-PAD (MKL testbed)",
+        &["N", "t dynamic (s)", "t PFFT-FPM (s)", "t PFFT-FPM-PAD (s)", "PAD gain %"],
+    );
+    // regime where the 128-grid gives static planning freedom (below
+    // ~p·512 rows the grid floor lets chunked dynamic out-split static —
+    // a measurement-granularity artifact, not a scheduling insight)
+    let sizes: Vec<usize> =
+        ctx.campaign_sizes().into_iter().filter(|&n| n >= 5_000).step_by(17).take(24).collect();
+    let mut fpm_gains = Vec::new();
+    let mut pad_gains = Vec::new();
+    for &n in &sizes {
+        let curves = tb.plane_sections(n);
+        let n_grid = n - n % 128;
+        if hpopta(&curves, n_grid).is_err() {
+            continue;
+        }
+        let pt = simulate_size(&tb, n);
+        // dynamic: best of two chunk sizes, same transpose costs, same
+        // flops basis (seconds per row at the group's chunk-size speed)
+        let fpr = 2.5 * n as f64 * (n as f64).log2() / 1e6;
+        let t_dyn_phase = dynamic_virtual_time(&curves, n_grid, 128, fpr)
+            .min(dynamic_virtual_time(&curves, n_grid, 512, fpr));
+        let t_dyn = 2.0 * t_dyn_phase + 2.0 * transpose_time(n);
+        fpm_gains.push(100.0 * (1.0 - pt.t_fpm / t_dyn));
+        pad_gains.push(100.0 * (1.0 - pt.t_pad / t_dyn));
+        t.row(vec![
+            n.to_string(),
+            fnum(t_dyn, 3),
+            fnum(pt.t_fpm, 3),
+            fnum(pt.t_pad, 3),
+            fnum(100.0 * (1.0 - pt.t_pad / t_dyn), 1),
+        ]);
+    }
+    t.write_csv(&ctx.out_dir.join("ext_dynamic.csv")).map_err(|e| e.to_string())?;
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    Ok(format!(
+        "== ext-dynamic: dynamic scheduling vs model-based ==\n  \
+         PFFT-FPM vs dynamic: mean gain {:.1}% (chunked dynamic dodges the same\n  \
+         x-keyed drops static does — competitive, as expected); PFFT-FPM-PAD vs\n  \
+         dynamic: mean gain {:.1}% — padding dodges the y-keyed drops no runtime\n  \
+         scheduler can, which is the model's unique value (DESIGN.md §6)\n{}",
+        mean(&fpm_gains),
+        mean(&pad_gains),
+        t.render()
+    ))
+}
+
+/// ext-cluster: strong scaling of the distributed 2D-DFT, homogeneous
+/// and heterogeneous clusters.
+pub fn cluster_scaling(ctx: &Ctx) -> Result<String, String> {
+    let n = 24_704;
+    let counts = [1usize, 2, 4, 8, 16];
+    let mut t = Table::new(
+        "ext-cluster — strong scaling, N = 24704 (MKL nodes)",
+        &["nodes", "homog t_fpm (s)", "homog speedup", "hetero t_fpm", "hetero t_balanced", "fpm gain %"],
+    );
+    let homog = strong_scaling(Package::Mkl, n, &counts, 0.0);
+    let hetero = strong_scaling(Package::Mkl, n, &counts, 0.4);
+    for (h, het) in homog.iter().zip(&hetero) {
+        t.row(vec![
+            h.nodes.to_string(),
+            fnum(h.t_fpm, 3),
+            fnum(h.speedup_vs_single, 2),
+            fnum(het.t_fpm, 3),
+            fnum(het.t_balanced, 3),
+            fnum(100.0 * (1.0 - het.t_fpm / het.t_balanced), 1),
+        ]);
+    }
+    t.write_csv(&ctx.out_dir.join("ext_cluster.csv")).map_err(|e| e.to_string())?;
+    Ok(t.render())
+}
+
+/// ext-energy: time/energy Pareto front on synthetic energy surfaces
+/// derived from the MKL testbed (power grows with group utilization).
+pub fn energy_pareto(ctx: &Ctx) -> Result<String, String> {
+    let tb = SimTestbed::paper_best(Package::Mkl);
+    let n = 12_800;
+    let speed = tb.plane_sections(n);
+    // synthetic energy: E(x) = t(x) · P(x), with active power rising in
+    // the row count (more cache/DRAM traffic per unit time)
+    let energy: Vec<Curve> = speed
+        .iter()
+        .map(|c| {
+            let joules: Vec<f64> = c
+                .xs
+                .iter()
+                .zip(&c.speeds)
+                .map(|(&x, &s)| {
+                    let time = x as f64 / s;
+                    let watts = 120.0 + 90.0 * (x as f64 / n as f64);
+                    time * watts
+                })
+                .collect();
+            Curve::new(c.xs.clone(), joules)
+        })
+        .collect();
+    let front = pareto_front(&speed, &energy, n - n % 128).map_err(|e| e.to_string())?;
+    let mut t = Table::new(
+        "ext-energy — time/energy Pareto front, N = 12800 (MKL testbed)",
+        &["makespan", "energy (rel J)", "d"],
+    );
+    for pt in &front {
+        t.row(vec![fnum(pt.makespan, 3), fnum(pt.energy, 2), format!("{:?}", pt.d)]);
+    }
+    t.write_csv(&ctx.out_dir.join("ext_energy.csv")).map_err(|e| e.to_string())?;
+    Ok(format!(
+        "== ext-energy: {} Pareto-optimal (time, energy) points ==\n{}",
+        front.len(),
+        t.render()
+    ))
+}
+
+/// ext-3d: real (measured) 3D-DFT through the slab-decomposed
+/// coordinator, verified against the serial 3D transform.
+pub fn dft3d_demo(ctx: &Ctx) -> Result<String, String> {
+    use crate::coordinator::engine::NativeEngine;
+    use crate::coordinator::pfft3d::{pfft_fpm_3d, pfft_lb_3d};
+    use crate::dft::dft3d::{dft3d, SignalCube};
+    use crate::dft::fft::Direction;
+
+    let mut t = Table::new(
+        "ext-3d — PFFT-FPM-3D (measured on this host)",
+        &["n^3", "t serial (s)", "t slab p=2 (s)", "rel err"],
+    );
+    for &n in &[16usize, 32, 48] {
+        let orig = SignalCube::random(n, n as u64);
+        let mut serial = orig.clone();
+        let t0 = std::time::Instant::now();
+        dft3d(&mut serial, Direction::Forward, 1);
+        let t_serial = t0.elapsed().as_secs_f64();
+
+        let mut slab = orig.clone();
+        let t0 = std::time::Instant::now();
+        let d = vec![n / 2, n - n / 2];
+        pfft_fpm_3d(&NativeEngine, &mut slab, &d, 1, 16).map_err(|e| e.to_string())?;
+        let t_slab = t0.elapsed().as_secs_f64();
+
+        let err = slab.max_abs_diff(&serial) / serial.norm().max(1.0);
+        t.row(vec![
+            format!("{n}^3"),
+            fnum(t_serial, 4),
+            fnum(t_slab, 4),
+            format!("{err:.2e}"),
+        ]);
+        // keep the balanced path exercised too
+        let mut lb = orig.clone();
+        pfft_lb_3d(&NativeEngine, &mut lb, 2, 1, 16).map_err(|e| e.to_string())?;
+    }
+    t.write_csv(&ctx.out_dir.join("ext_3d.csv")).map_err(|e| e.to_string())?;
+    Ok(t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn ctx() -> Ctx {
+        let mut c = Ctx::new(Path::new("/tmp/hclfft_ext"), true);
+        c.decimate = 64;
+        c
+    }
+
+    #[test]
+    fn dynamic_ablation_static_wins_on_average() {
+        let s = dynamic_ablation(&ctx()).unwrap();
+        // PAD must beat the best dynamic on average (y-drop dodging)
+        let pad_gain: f64 = s
+            .lines()
+            .find(|l| l.contains("dynamic: mean gain") && l.contains("padding"))
+            .or_else(|| s.lines().find(|l| l.contains("PFFT-FPM-PAD vs")))
+            .map(|_| {
+                // parse the second "mean gain X%" occurrence
+                let mut it = s.match_indices("mean gain ");
+                let _ = it.next();
+                let (idx, _) = it.next().expect("second gain");
+                s[idx + 10..].split('%').next().unwrap().trim().parse().unwrap()
+            })
+            .expect("gain line");
+        assert!(pad_gain > 0.0, "PAD should beat dynamic: {pad_gain}");
+    }
+
+    #[test]
+    fn cluster_scaling_renders() {
+        let s = cluster_scaling(&ctx()).unwrap();
+        assert!(s.contains("nodes"));
+        assert!(Path::new("/tmp/hclfft_ext/ext_cluster.csv").exists());
+    }
+
+    #[test]
+    fn energy_front_nonempty() {
+        let s = energy_pareto(&ctx()).unwrap();
+        assert!(s.contains("Pareto-optimal"));
+    }
+
+    #[test]
+    fn dft3d_demo_verifies() {
+        let s = dft3d_demo(&ctx()).unwrap();
+        for line in s.lines().filter(|l| l.contains("e-")) {
+            let err: f64 = line.split_whitespace().last().unwrap().parse().unwrap();
+            assert!(err < 1e-10, "{line}");
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Figures 9-14 — FPM geometry: plane sections, the HPOPTA partition of
+//! the paper's N=24704 MKL example, column sections, pad lengths, and
+//! the full speed surfaces.
+
+use crate::coordinator::pad::{determine_pad_length, PadCost};
+use crate::coordinator::partition::hpopta;
+use crate::figures::Ctx;
+use crate::simulator::fpm::SimTestbed;
+use crate::simulator::vexec::PAD_WINDOW;
+use crate::simulator::Package;
+use crate::util::table::{fnum, Table};
+
+/// The paper's running example size (Figures 9-12).
+pub const EXAMPLE_N: usize = 24_704;
+
+/// Fig 9: the two MKL 18-thread groups' speed functions sectioned by the
+/// plane y = N = 24704.
+pub fn plane_sections(ctx: &Ctx) -> Result<String, String> {
+    let tb = SimTestbed::paper_best(Package::Mkl);
+    let curves = tb.plane_sections(EXAMPLE_N);
+    let mut t = Table::new(
+        "fig9 — MKL speed functions sectioned by plane y = N = 24704",
+        &["x (rows)", "group1 MFLOPs", "group2 MFLOPs"],
+    );
+    for (k, &x) in curves[0].xs.iter().enumerate() {
+        t.row(vec![x.to_string(), fnum(curves[0].speeds[k], 1), fnum(curves[1].speeds[k], 1)]);
+    }
+    t.write_csv(&ctx.out_dir.join("fig9.csv")).map_err(|e| e.to_string())?;
+    Ok(format!(
+        "== fig9 — plane section y=24704, 2 groups of 18 threads ==\n  {} grid points per curve\n{}",
+        curves[0].len(),
+        crate::figures::profiles::decimated_view(&t, 12)
+    ))
+}
+
+/// Fig 10: HPOPTA applied to the sections → the paper's imbalanced
+/// distribution (theirs: d = (11648, 13056)).
+pub fn hpopta_partition(ctx: &Ctx) -> Result<String, String> {
+    let tb = SimTestbed::paper_best(Package::Mkl);
+    let curves = tb.plane_sections(EXAMPLE_N);
+    let part = hpopta(&curves, EXAMPLE_N).map_err(|e| e.to_string())?;
+    let balanced = crate::coordinator::partition::balanced(2, EXAMPLE_N);
+    let bal_makespan = crate::coordinator::partition::predict_makespan(&curves, &balanced.d);
+    let mut t = Table::new(
+        "fig10 — HPOPTA distribution for N = 24704",
+        &["group", "d[i] (rows)", "share %"],
+    );
+    for (i, &di) in part.d.iter().enumerate() {
+        t.row(vec![
+            format!("group{}", i + 1),
+            di.to_string(),
+            fnum(100.0 * di as f64 / EXAMPLE_N as f64, 2),
+        ]);
+    }
+    t.write_csv(&ctx.out_dir.join("fig10.csv")).map_err(|e| e.to_string())?;
+    Ok(format!(
+        "{}  paper's example: d = (11648, 13056); ours: d = ({}, {})\n  optimal makespan {:.4} vs balanced {:.4} (gain {:.1}%)\n",
+        t.render(),
+        part.d[0],
+        part.d[1],
+        part.makespan,
+        bal_makespan,
+        100.0 * (1.0 - part.makespan / bal_makespan)
+    ))
+}
+
+/// Fig 11: column sections x = d_i (speed vs y keeping x constant).
+pub fn column_sections(ctx: &Ctx) -> Result<String, String> {
+    let tb = SimTestbed::paper_best(Package::Mkl);
+    let curves = tb.plane_sections(EXAMPLE_N);
+    let part = hpopta(&curves, EXAMPLE_N).map_err(|e| e.to_string())?;
+    let mut t = Table::new(
+        "fig11 — column sections x = d[i] (speed vs y)",
+        &["y (row length)", "group1 @ x=d1", "group2 @ x=d2"],
+    );
+    let c1 = tb.column_section(1, part.d[0], EXAMPLE_N, PAD_WINDOW);
+    let c2 = tb.column_section(2, part.d[1], EXAMPLE_N, PAD_WINDOW);
+    for (k, &y) in c1.xs.iter().enumerate() {
+        let s2 = c2.speed_at(y).unwrap_or(f64::NAN);
+        t.row(vec![y.to_string(), fnum(c1.speeds[k], 1), fnum(s2, 1)]);
+    }
+    t.write_csv(&ctx.out_dir.join("fig11.csv")).map_err(|e| e.to_string())?;
+    Ok(format!("{}", crate::figures::profiles::decimated_view(&t, 16)))
+}
+
+/// Fig 12: pad lengths determined from the column sections
+/// (paper: N_padded = 24960 for both groups).
+pub fn pad_lengths(ctx: &Ctx) -> Result<String, String> {
+    let tb = SimTestbed::paper_best(Package::Mkl);
+    let curves = tb.plane_sections(EXAMPLE_N);
+    let part = hpopta(&curves, EXAMPLE_N).map_err(|e| e.to_string())?;
+    let mut t = Table::new(
+        "fig12 — pad lengths from the FPM column sections (N = 24704)",
+        &["group", "d[i]", "N_padded", "predicted gain %"],
+    );
+    for (i, &di) in part.d.iter().enumerate() {
+        let col = tb.column_section(i + 1, di, EXAMPLE_N, PAD_WINDOW);
+        let dec = determine_pad_length(&col, di, EXAMPLE_N, PadCost::PaperRatio);
+        t.row(vec![
+            format!("group{}", i + 1),
+            di.to_string(),
+            dec.n_padded.to_string(),
+            fnum(100.0 * dec.n_padded_gain(), 1),
+        ]);
+    }
+    t.write_csv(&ctx.out_dir.join("fig12.csv")).map_err(|e| e.to_string())?;
+    Ok(format!("{}  paper's example pads to 24960 for both groups\n", t.render()))
+}
+
+/// Figs 13-14: full speed surfaces (decimated grid; TSV dump per group).
+pub fn full_surface(ctx: &Ctx, name: &str, pkg: Package) -> Result<String, String> {
+    let tb = SimTestbed::paper_best(pkg);
+    // surface grids are big: decimate by 8 (full) / more (quick)
+    let decim = 8 * ctx.decimate.max(1);
+    let mut out = format!("== {name} — full speed surface: {} ==\n", pkg.name());
+    for g in 1..=tb.cfg.p.min(2) {
+        let s = tb.full_surface(g, decim);
+        let path = ctx.out_dir.join(format!("{name}_group{g}.tsv"));
+        s.write_tsv(&path).map_err(|e| e.to_string())?;
+        out.push_str(&format!(
+            "  group{g}: {} measured points (memory-capped grid), dumped to {}\n",
+            s.measured_points(),
+            path.display()
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn ctx() -> Ctx {
+        Ctx::new(Path::new("/tmp/hclfft_sections"), true)
+    }
+
+    #[test]
+    fn fig9_two_curves() {
+        let s = plane_sections(&ctx()).unwrap();
+        assert!(s.contains("plane section"));
+        assert!(Path::new("/tmp/hclfft_sections/fig9.csv").exists());
+    }
+
+    #[test]
+    fn fig10_imbalanced_and_optimal() {
+        let s = hpopta_partition(&ctx()).unwrap();
+        assert!(s.contains("HPOPTA"));
+        // the distribution must sum to N (printed shares ~100%)
+        assert!(s.contains("group1") && s.contains("group2"));
+    }
+
+    #[test]
+    fn fig12_pads_at_or_above_n() {
+        let s = pad_lengths(&ctx()).unwrap();
+        for line in s.lines().filter(|l| l.trim_start().starts_with("group")) {
+            let cols: Vec<&str> = line.split_whitespace().collect();
+            if cols[0] == "group" {
+                continue; // header row
+            }
+            let padded: usize = cols[2].parse().unwrap();
+            assert!(padded >= EXAMPLE_N, "{line}");
+        }
+    }
+
+    #[test]
+    fn fig13_surface_dump() {
+        let s = full_surface(&ctx(), "figtest13", Package::Fftw3).unwrap();
+        assert!(s.contains("measured points"));
+        assert!(Path::new("/tmp/hclfft_sections/figtest13_group1.tsv").exists());
+    }
+}

@@ -1,0 +1,241 @@
+//! Figures 15-26 — speedups and execution times of PFFT-FPM /
+//! PFFT-FPM-PAD over the basic packages, plus the optimized-vs-FFTW-2.1.5
+//! comparisons, from the virtual campaign.
+
+use crate::coordinator::pad::PadCost;
+use crate::figures::Ctx;
+use crate::simulator::packages::PackageModel;
+use crate::simulator::vexec::{app_flops, transpose_time, Campaign, CampaignSummary};
+use crate::simulator::Package;
+use crate::util::table::{fnum, Table};
+
+/// Which series a figure shows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Series {
+    Both,
+    FpmOnly,
+    PadOnly,
+    /// PAD, restricted to sizes where it improved (Figures 16/21)
+    PadImprovedOnly,
+}
+
+/// Figures 15/16/20/21: speedup series.
+pub fn speedups(ctx: &Ctx, name: &str, pkg: Package, series: Series) -> Result<String, String> {
+    let c = Campaign::run(pkg, &ctx.campaign_sizes());
+    let mut header = vec!["N".to_string()];
+    match series {
+        Series::Both => {
+            header.push("speedup PFFT-FPM".into());
+            header.push("speedup PFFT-FPM-PAD".into());
+        }
+        Series::FpmOnly => header.push("speedup PFFT-FPM".into()),
+        Series::PadOnly | Series::PadImprovedOnly => header.push("speedup PFFT-FPM-PAD".into()),
+    }
+    let mut t = Table::new(
+        &format!("{name} — speedup vs basic {} (36 threads)", pkg.name()),
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for p in &c.points {
+        match series {
+            Series::Both => t.row(vec![
+                p.n.to_string(),
+                fnum(p.speedup_fpm(), 3),
+                fnum(p.speedup_pad(), 3),
+            ]),
+            Series::FpmOnly => t.row(vec![p.n.to_string(), fnum(p.speedup_fpm(), 3)]),
+            Series::PadOnly => t.row(vec![p.n.to_string(), fnum(p.speedup_pad(), 3)]),
+            Series::PadImprovedOnly => {
+                if p.speedup_pad() > 1.0 {
+                    t.row(vec![p.n.to_string(), fnum(p.speedup_pad(), 3)]);
+                }
+            }
+        }
+    }
+    t.write_csv(&ctx.out_dir.join(format!("{name}.csv"))).map_err(|e| e.to_string())?;
+    let s = c.summary();
+    Ok(format!(
+        "== {name}: speedups over basic {} ==\n  FPM avg {:.2}x max {:.2}x | PAD avg {:.2}x max {:.2}x ({} sizes)\n{}",
+        pkg.name(),
+        s.avg_speedup_fpm,
+        s.max_speedup_fpm,
+        s.avg_speedup_pad,
+        s.max_speedup_pad,
+        s.count,
+        crate::figures::profiles::decimated_view(&t, 12)
+    ))
+}
+
+/// Figures 17-19/22-24: execution-time series.
+pub fn times(ctx: &Ctx, name: &str, pkg: Package, series: Series) -> Result<String, String> {
+    let c = Campaign::run(pkg, &ctx.campaign_sizes());
+    let mut header = vec!["N".to_string(), format!("basic {} (s)", pkg.name())];
+    match series {
+        Series::Both => {
+            header.push("PFFT-FPM (s)".into());
+            header.push("PFFT-FPM-PAD (s)".into());
+        }
+        Series::FpmOnly => header.push("PFFT-FPM (s)".into()),
+        Series::PadOnly | Series::PadImprovedOnly => header.push("PFFT-FPM-PAD (s)".into()),
+    }
+    let mut t = Table::new(
+        &format!("{name} — execution times vs basic {}", pkg.name()),
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for p in &c.points {
+        let mut row = vec![p.n.to_string(), fnum(p.t_basic, 4)];
+        match series {
+            Series::Both => {
+                row.push(fnum(p.t_fpm, 4));
+                row.push(fnum(p.t_pad, 4));
+            }
+            Series::FpmOnly => row.push(fnum(p.t_fpm, 4)),
+            Series::PadOnly | Series::PadImprovedOnly => row.push(fnum(p.t_pad, 4)),
+        }
+        t.row(row);
+    }
+    t.write_csv(&ctx.out_dir.join(format!("{name}.csv"))).map_err(|e| e.to_string())?;
+    Ok(format!(
+        "== {name}: execution times ==\n{}",
+        crate::figures::profiles::decimated_view(&t, 12)
+    ))
+}
+
+/// Figures 25/26: optimized package (PFFT-FPM-PAD) vs unoptimized
+/// FFTW-2.1.5.
+pub fn vs_fftw2(ctx: &Ctx, name: &str, pkg: Package) -> Result<String, String> {
+    let c = Campaign::run(pkg, &ctx.campaign_sizes());
+    let f2 = PackageModel::new(Package::Fftw2);
+    let mut t = Table::new(
+        &format!("{name} — optimized {} (PFFT-FPM-PAD) vs unoptimized FFTW-2.1.5", pkg.name()),
+        &["N", "speedup vs FFTW-2.1.5"],
+    );
+    let mut speedups = Vec::new();
+    let mut f2_wins = 0usize;
+    let mut opt_mflops_sum = 0.0;
+    let mut f2_mflops_sum = 0.0;
+    for p in &c.points {
+        // fftw2 basic time priced identically to other basic runs
+        let t_f2 = app_flops(p.n) / (f2.speed(p.n) * 1e6) + 2.0 * transpose_time(p.n);
+        let sp = t_f2 / p.t_pad;
+        speedups.push(sp);
+        if sp < 1.0 {
+            f2_wins += 1;
+        }
+        opt_mflops_sum += p.mflops(p.t_pad);
+        f2_mflops_sum += app_flops(p.n) / t_f2 / 1e6;
+        t.row(vec![p.n.to_string(), fnum(sp, 3)]);
+    }
+    t.write_csv(&ctx.out_dir.join(format!("{name}.csv"))).map_err(|e| e.to_string())?;
+    let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    let k = c.points.len() as f64;
+    Ok(format!(
+        "== {name}: optimized {} vs unoptimized FFTW-2.1.5 ==\n  avg speedup {:.2}x (paper: {}), FFTW-2.1.5 still wins {}/{} sizes\n  avg MFLOPs: optimized {} {:.0} vs FFTW-2.1.5 {:.0}\n{}",
+        pkg.name(),
+        avg,
+        if pkg == Package::Fftw3 { "1.2x" } else { "1.7x" },
+        f2_wins,
+        c.points.len(),
+        pkg.name(),
+        opt_mflops_sum / k,
+        f2_mflops_sum / k,
+        crate::figures::profiles::decimated_view(&t, 12)
+    ))
+}
+
+/// Ablation (DESIGN.md §Perf): paper-ratio vs exact-flops pad cost model.
+pub fn pad_ablation(ctx: &Ctx) -> Result<String, String> {
+    use crate::coordinator::pad::determine_pad_length;
+    use crate::simulator::fpm::SimTestbed;
+    use crate::simulator::vexec::PAD_WINDOW;
+
+    let mut t = Table::new(
+        "pad-ablation — PaperRatio vs ExactFlops pad selection",
+        &["package", "N", "d1", "pad(paper)", "pad(exact)", "agree"],
+    );
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for pkg in [Package::Fftw3, Package::Mkl] {
+        let tb = SimTestbed::paper_best(pkg);
+        for &n in ctx.campaign_sizes().iter().step_by(23).take(20) {
+            let curves = tb.plane_sections(n);
+            let Ok(part) = crate::coordinator::partition::hpopta(&curves, n - n % 128) else {
+                continue;
+            };
+            let d1 = part.d[0].max(128);
+            let col = tb.column_section(1, d1, n, PAD_WINDOW);
+            let a = determine_pad_length(&col, d1, n, PadCost::PaperRatio);
+            let b = determine_pad_length(&col, d1, n, PadCost::ExactFlops);
+            total += 1;
+            if a.n_padded == b.n_padded {
+                agree += 1;
+            }
+            t.row(vec![
+                pkg.name().to_string(),
+                n.to_string(),
+                d1.to_string(),
+                a.n_padded.to_string(),
+                b.n_padded.to_string(),
+                (a.n_padded == b.n_padded).to_string(),
+            ]);
+        }
+    }
+    t.write_csv(&ctx.out_dir.join("pad_ablation.csv")).map_err(|e| e.to_string())?;
+    Ok(format!(
+        "== pad-ablation: cost models agree on {agree}/{total} cases ==\n{}",
+        t.render()
+    ))
+}
+
+/// §V-F-style summary over an arbitrary campaign (re-exported for the
+/// summary figure).
+pub fn range_summary(c: &Campaign, lo: usize, hi: usize) -> CampaignSummary {
+    CampaignSummary::for_range(&c.points, lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn ctx() -> Ctx {
+        let mut c = Ctx::new(Path::new("/tmp/hclfft_speedups"), true);
+        c.decimate = 64; // keep debug-mode tests fast
+        c
+    }
+
+    #[test]
+    fn fig15_speedup_csv() {
+        let s = speedups(&ctx(), "figtest15", Package::Fftw3, Series::Both).unwrap();
+        assert!(s.contains("FPM avg"));
+        let csv = std::fs::read_to_string("/tmp/hclfft_speedups/figtest15.csv").unwrap();
+        assert!(csv.lines().next().unwrap().contains("PFFT-FPM-PAD"));
+    }
+
+    #[test]
+    fn fig16_only_improved_sizes() {
+        let _ = speedups(&ctx(), "figtest16", Package::Fftw3, Series::PadImprovedOnly).unwrap();
+        let csv = std::fs::read_to_string("/tmp/hclfft_speedups/figtest16.csv").unwrap();
+        for line in csv.lines().skip(1) {
+            let sp: f64 = line.split(',').nth(1).unwrap().parse().unwrap();
+            assert!(sp > 1.0, "{line}");
+        }
+    }
+
+    #[test]
+    fn fig22_times_positive() {
+        let _ = times(&ctx(), "figtest22", Package::Mkl, Series::Both).unwrap();
+        let csv = std::fs::read_to_string("/tmp/hclfft_speedups/figtest22.csv").unwrap();
+        for line in csv.lines().skip(1) {
+            for v in line.split(',').skip(1) {
+                assert!(v.parse::<f64>().unwrap() > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn fig26_vs_fftw2() {
+        let s = vs_fftw2(&ctx(), "figtest26", Package::Mkl).unwrap();
+        assert!(s.contains("vs unoptimized FFTW-2.1.5"));
+        assert!(s.contains("avg speedup"));
+    }
+}

@@ -1,0 +1,94 @@
+//! §V-F summary — the paper's headline statistics table, reproduced
+//! side by side with the published values.
+
+use crate::figures::Ctx;
+use crate::simulator::vexec::{Campaign, CampaignSummary};
+use crate::simulator::Package;
+use crate::util::table::{fnum, Table};
+
+/// Published values from the paper's abstract + §V-F (for the ranges, the
+/// paper gives mid-range numbers explicitly).
+struct PaperClaims {
+    fpm_avg: f64,
+    fpm_max: f64,
+    pad_avg: f64,
+    pad_max: f64,
+    mid_fpm_avg: f64,
+    mid_pad_avg: f64,
+}
+
+fn claims(pkg: Package) -> PaperClaims {
+    match pkg {
+        Package::Fftw3 => PaperClaims {
+            fpm_avg: 1.9,
+            fpm_max: 6.8,
+            pad_avg: 2.0,
+            pad_max: 9.4,
+            mid_fpm_avg: 2.7,
+            mid_pad_avg: 3.0,
+        },
+        Package::Mkl => PaperClaims {
+            fpm_avg: 1.3,
+            fpm_max: 2.0,
+            pad_avg: 1.4,
+            pad_max: 5.9,
+            mid_fpm_avg: 1.4,
+            mid_pad_avg: 2.7,
+        },
+        Package::Fftw2 => unreachable!("fftw2 is never optimized in the paper"),
+    }
+}
+
+pub fn generate(ctx: &Ctx) -> Result<String, String> {
+    let mut out = String::from("== summary — §V-F reproduction vs published ==\n");
+    let mut t = Table::new(
+        "summary",
+        &["package", "metric", "published", "reproduced"],
+    );
+    for pkg in [Package::Fftw3, Package::Mkl] {
+        let c = Campaign::run(pkg, &ctx.campaign_sizes());
+        let s = c.summary();
+        let mid = CampaignSummary::for_range(&c.points, 10_000, 33_000);
+        let low = CampaignSummary::for_range(&c.points, 0, 10_000);
+        let high = CampaignSummary::for_range(&c.points, 33_000, usize::MAX);
+        let p = claims(pkg);
+        let rows: Vec<(String, f64, f64)> = vec![
+            ("PFFT-FPM avg speedup".into(), p.fpm_avg, s.avg_speedup_fpm),
+            ("PFFT-FPM max speedup".into(), p.fpm_max, s.max_speedup_fpm),
+            ("PFFT-FPM-PAD avg speedup".into(), p.pad_avg, s.avg_speedup_pad),
+            ("PFFT-FPM-PAD max speedup".into(), p.pad_max, s.max_speedup_pad),
+            ("mid-range FPM avg".into(), p.mid_fpm_avg, mid.avg_speedup_fpm),
+            ("mid-range PAD avg".into(), p.mid_pad_avg, mid.avg_speedup_pad),
+            ("low-range FPM avg (paper: ~1, 'not significant')".into(), 1.0, low.avg_speedup_fpm),
+            ("high-range FPM avg (paper: 'still good')".into(), f64::NAN, high.avg_speedup_fpm),
+        ];
+        for (metric, published, got) in rows {
+            t.row(vec![
+                pkg.name().to_string(),
+                metric,
+                if published.is_nan() { "-".into() } else { fnum(published, 2) },
+                fnum(got, 2),
+            ]);
+        }
+    }
+    t.write_csv(&ctx.out_dir.join("summary.csv")).map_err(|e| e.to_string())?;
+    out.push_str(&t.render());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn summary_renders_both_packages() {
+        let mut ctx = Ctx::new(Path::new("/tmp/hclfft_summary"), true);
+        ctx.decimate = 64;
+        let s = generate(&ctx).unwrap();
+        assert!(s.contains("FFTW-3.3.7"));
+        assert!(s.contains("Intel MKL FFT"));
+        assert!(s.contains("PFFT-FPM-PAD max speedup"));
+        assert!(Path::new("/tmp/hclfft_summary/summary.csv").exists());
+    }
+}

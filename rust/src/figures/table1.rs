@@ -1,0 +1,52 @@
+//! Table I — specification of the (simulated) experimental platform.
+
+use crate::figures::Ctx;
+use crate::util::table::Table;
+
+pub fn generate(ctx: &Ctx) -> String {
+    let mut t = Table::new(
+        "Table I — simulated Intel Haswell server (paper's testbed)",
+        &["Technical Specifications", "Intel Haswell Server"],
+    );
+    for (k, v) in [
+        ("Processor", "Intel Xeon CPU E5-2699 v3 @ 2.30GHz (simulated)"),
+        ("OS", "CentOS 7.1.1503 (simulated)"),
+        ("Microarchitecture", "Haswell"),
+        ("Memory", "256 GB"),
+        ("Core(s) per socket", "18"),
+        ("Socket(s)", "2"),
+        ("NUMA node(s)", "2"),
+        ("L1d cache", "32 KB"),
+        ("L1i cache", "32 KB"),
+        ("L2 cache", "256 KB"),
+        ("L3 cache", "46080 KB"),
+        ("NUMA node0 CPU(s)", "0-17,36-53"),
+        ("NUMA node1 CPU(s)", "18-35,54-71"),
+    ] {
+        t.row(vec![k.to_string(), v.to_string()]);
+    }
+    let _ = t.write_csv(&ctx.out_dir.join("table1.csv"));
+
+    // also report the actual host this reproduction ran on
+    let mut host = Table::new("Actual reproduction host", &["key", "value"]);
+    host.row(vec!["cores".into(), std::thread::available_parallelism().map(|c| c.to_string()).unwrap_or_else(|_| "?".into())]);
+    host.row(vec!["os".into(), std::env::consts::OS.to_string()]);
+    host.row(vec!["arch".into(), std::env::consts::ARCH.to_string()]);
+    host.row(vec!["engines".into(), "native rust FFT, PJRT CPU (AOT JAX/Pallas), virtual testbed".into()]);
+    format!("{}\n{}", t.render(), host.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_both_tables() {
+        let ctx = Ctx::new(std::path::Path::new("/tmp/hclfft_t1"), true);
+        let s = generate(&ctx);
+        assert!(s.contains("Haswell"));
+        assert!(s.contains("NUMA node0"));
+        assert!(s.contains("reproduction host"));
+        assert!(std::path::Path::new("/tmp/hclfft_t1/table1.csv").exists());
+    }
+}

@@ -1,0 +1,34 @@
+//! # hclfft — model-based performance optimization of multithreaded 2D-DFT
+//!
+//! Reproduction of *"Novel Model-based Methods for Performance Optimization
+//! of Multithreaded 2D Discrete Fourier Transform on Multicore Processors"*
+//! (Khokhriakov, Reddy, Lastovetsky — 2018).
+//!
+//! The crate is organised as the Layer-3 (rust) coordinator of a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * [`coordinator`] — the paper's contribution: functional performance
+//!   models (FPMs), the POPTA / HPOPTA data-partitioning algorithms, and the
+//!   `PFFT-LB` / `PFFT-FPM` / `PFFT-FPM-PAD` parallel 2D-DFT drivers.
+//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX /
+//!   Pallas row-FFT artifacts (`artifacts/*.hlo.txt`) and executes them.
+//! * [`dft`] — a from-scratch native FFT substrate (radix-2 + Bluestein +
+//!   blocked transpose) used as the multithreaded compute engine and as an
+//!   independent numeric oracle.
+//! * [`simulator`] — calibrated performance models of the three FFT packages
+//!   the paper studies (FFTW-2.1.5, FFTW-3.3.7, Intel MKL FFT); substitutes
+//!   for the Haswell-36-core testbed that is not available here.
+//! * [`stats`] — the paper's Student's-t measurement methodology
+//!   (`MeanUsingTtest`, Algorithm 8) plus the bench harness built on it.
+//! * [`figures`] — regenerates every figure/table of the paper's evaluation.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dft;
+pub mod figures;
+pub mod profiler;
+pub mod runtime;
+pub mod simulator;
+pub mod stats;
+pub mod util;

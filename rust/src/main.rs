@@ -1,0 +1,299 @@
+//! `hclfft` CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands (see `hclfft help`):
+//! * `plan`     — FPM-based row partitioning (POPTA/HPOPTA) + pad lengths
+//! * `run`      — execute a 2D-DFT with PFFT-LB / PFFT-FPM / PFFT-FPM-PAD
+//! * `profile`  — build speed functions for a real engine (FPM dump)
+//! * `figures`  — regenerate the paper's figures/tables
+//! * `simulate` — virtual-testbed campaign summary
+//! * `bench`    — `run` measured with the MeanUsingTtest methodology
+
+use std::path::{Path, PathBuf};
+
+use hclfft::cli;
+use hclfft::config::Config;
+use hclfft::coordinator::engine::{NativeEngine, RowFftEngine};
+use hclfft::coordinator::group::GroupConfig;
+use hclfft::coordinator::pad::{pads_for_distribution, PadCost};
+use hclfft::coordinator::pfft::{pfft_fpm, pfft_fpm_pad, pfft_lb, plan_partition};
+use hclfft::dft::SignalMatrix;
+use hclfft::figures::{generate, generate_all, Ctx};
+use hclfft::profiler::{build_fpms, ProfileSpec};
+use hclfft::runtime::PjrtRowFftEngine;
+use hclfft::simulator::fpm::SimTestbed;
+use hclfft::simulator::vexec::{Campaign, CampaignSummary};
+use hclfft::simulator::Package;
+use hclfft::stats::{mean_using_ttest, TtestPolicy};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("run `hclfft help` for usage");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<(), String> {
+    let args = match cli::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            if argv.is_empty() {
+                println!("{}", cli::help());
+                return Ok(());
+            }
+            return Err(e);
+        }
+    };
+    let cfg = Config::load(args.opt("config").map(Path::new))?;
+    match args.subcommand.as_str() {
+        "help" => {
+            println!("{}", cli::help());
+            Ok(())
+        }
+        "plan" => cmd_plan(&args, &cfg),
+        "run" => cmd_run(&args, &cfg, false),
+        "bench" => cmd_run(&args, &cfg, true),
+        "profile" => cmd_profile(&args, &cfg),
+        "figures" => cmd_figures(&args, &cfg),
+        "simulate" => cmd_simulate(&args),
+        other => Err(format!("unknown subcommand `{other}`")),
+    }
+}
+
+fn cmd_plan(args: &cli::Args, cfg: &Config) -> Result<(), String> {
+    args.validate(&["n", "p", "eps", "package", "pad", "source", "config"])?;
+    let n = args.opt_usize("n")?.ok_or("--n required")?;
+    let pkg = Package::parse(&args.opt_or("package", "mkl")).ok_or("bad --package")?;
+    let p = args.opt_usize("p")?.unwrap_or(pkg.best_groups().p);
+    let eps = args.opt_f64("eps")?.unwrap_or(cfg.eps);
+
+    let tb = SimTestbed::new(pkg, GroupConfig::new(p, 36 / p.max(1)));
+    let curves = tb.plane_sections(n);
+    let identical = hclfft::coordinator::partition::curves_identical(&curves, eps);
+    let part = if identical {
+        let avg = hclfft::coordinator::partition::average_curve(&curves);
+        hclfft::coordinator::partition::popta(&avg, p, n - n % 128)
+    } else {
+        hclfft::coordinator::partition::hpopta(&curves, n - n % 128)
+    }
+    .map_err(|e| e.to_string())?;
+
+    println!("package: {} | N = {n} | p = {p} | eps = {eps}", pkg.name());
+    println!(
+        "identity test: curves {} => {}",
+        if identical { "identical" } else { "heterogeneous" },
+        if identical { "POPTA (averaged)" } else { "HPOPTA" }
+    );
+    println!("distribution d = {:?} (makespan {:.4})", part.d, part.makespan);
+    if args.flag("pad") {
+        for (i, &di) in part.d.iter().enumerate() {
+            if di == 0 {
+                continue;
+            }
+            let col = tb.column_section(i + 1, di, n, hclfft::simulator::vexec::PAD_WINDOW);
+            let dec = hclfft::coordinator::pad::determine_pad_length(
+                &col,
+                di,
+                n,
+                PadCost::PaperRatio,
+            );
+            println!(
+                "group{}: N_padded = {} (predicted gain {:.1}%)",
+                i + 1,
+                dec.n_padded,
+                100.0 * dec.n_padded_gain()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn make_engine(name: &str, artifacts: &Path) -> Result<Box<dyn RowFftEngine>, String> {
+    match name {
+        "native" => Ok(Box::new(NativeEngine)),
+        "pjrt" => Ok(Box::new(PjrtRowFftEngine::load(artifacts).map_err(|e| e.to_string())?)),
+        other => Err(format!("unknown engine `{other}` (native|pjrt)")),
+    }
+}
+
+fn cmd_run(args: &cli::Args, cfg: &Config, bench: bool) -> Result<(), String> {
+    args.validate(&["n", "engine", "algo", "p", "t", "artifacts", "verify", "config", "seed"])?;
+    let n = args.opt_usize("n")?.ok_or("--n required")?;
+    let algo = args.opt_or("algo", "fpm");
+    let p = args.opt_usize("p")?.unwrap_or(cfg.groups);
+    let t = args.opt_usize("t")?.unwrap_or(cfg.threads_per_group);
+    let artifacts = args
+        .opt("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| cfg.artifacts_dir.clone());
+    let engine = make_engine(&args.opt_or("engine", "native"), &artifacts)?;
+    let seed = args.opt_usize("seed")?.unwrap_or(42) as u64;
+    let grp = GroupConfig::new(p, t);
+
+    // plan from measured plane (real FPM construction, scaled-down reps)
+    let xs: Vec<usize> = (1..=8).map(|k| (k * n / 8).max(1)).collect();
+    let fpms = hclfft::profiler::build_plane(engine.as_ref(), grp, xs, n, cfg.rep_scale.max(100));
+    let part = plan_partition(&fpms, n, cfg.eps).map_err(|e| e.to_string())?;
+
+    let mut exec = |label: &str| -> Result<f64, String> {
+        let mut m = SignalMatrix::random(n, n, seed);
+        let t0 = std::time::Instant::now();
+        match label {
+            "basic" => {
+                // one group with the whole thread budget
+                pfft_lb(engine.as_ref(), &mut m, GroupConfig::new(1, p * t), cfg.transpose_block)
+                    .map_err(|e| e.to_string())?;
+            }
+            "lb" => {
+                pfft_lb(engine.as_ref(), &mut m, grp, cfg.transpose_block)
+                    .map_err(|e| e.to_string())?;
+            }
+            "fpm" => {
+                pfft_fpm(engine.as_ref(), &mut m, &part.d, t, cfg.transpose_block)
+                    .map_err(|e| e.to_string())?;
+            }
+            "fpm-pad" => {
+                let pads = pads_for_distribution(&fpms, &part.d, n, PadCost::PaperRatio);
+                pfft_fpm_pad(engine.as_ref(), &mut m, &part.d, &pads, t, cfg.transpose_block)
+                    .map_err(|e| e.to_string())?;
+            }
+            other => return Err(format!("unknown algo `{other}`")),
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    };
+
+    if bench {
+        let policy = TtestPolicy { min_reps: 5, max_reps: 50, max_time_s: 30.0, cl: 0.95, eps: 0.025 };
+        let m = mean_using_ttest(&policy, || exec(&algo).expect("bench run failed"));
+        let mflops = hclfft::stats::harness::fft2d_flops(n) / m.mean / 1e6;
+        println!(
+            "{} {} N={n} (p={p}, t={t}): mean {:.6}s ± {:.6}s over {} reps ({:.1} MFLOPs)",
+            engine.name(),
+            algo,
+            m.mean,
+            m.ci_half_width,
+            m.reps,
+            mflops
+        );
+    } else {
+        let secs = exec(&algo)?;
+        let mflops = hclfft::stats::harness::fft2d_flops(n) / secs / 1e6;
+        println!(
+            "{} {} N={n} (p={p}, t={t}): {:.6}s ({:.1} MFLOPs), d = {:?}",
+            engine.name(),
+            algo,
+            secs,
+            mflops,
+            part.d
+        );
+    }
+
+    if args.flag("verify") {
+        let mut m = SignalMatrix::random(n, n, seed);
+        pfft_fpm(engine.as_ref(), &mut m, &part.d, t, cfg.transpose_block)
+            .map_err(|e| e.to_string())?;
+        let mut reference = SignalMatrix::random(n, n, seed);
+        hclfft::dft::dft2d::dft2d(&mut reference, hclfft::dft::fft::Direction::Forward, 1);
+        let err = m.max_abs_diff(&reference) / reference.norm().max(1.0);
+        println!("verify vs native serial 2D-DFT: rel err {err:.3e}");
+        if err > 1e-3 {
+            return Err(format!("verification failed: rel err {err}"));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &cli::Args, cfg: &Config) -> Result<(), String> {
+    args.validate(&["engine", "n-list", "x-list", "p", "t", "out", "scale", "artifacts", "config", "budget"])?;
+    let parse_list = |s: &str| -> Result<Vec<usize>, String> {
+        s.split(',')
+            .map(|v| v.trim().parse().map_err(|_| format!("bad list item `{v}`")))
+            .collect()
+    };
+    let ys = parse_list(&args.opt_or("n-list", "128,256,512"))?;
+    let max_y = *ys.iter().max().unwrap_or(&512);
+    let xs = match args.opt("x-list") {
+        Some(s) => parse_list(s)?,
+        None => (1..=4).map(|k| k * max_y / 4).collect(),
+    };
+    let p = args.opt_usize("p")?.unwrap_or(cfg.groups);
+    let t = args.opt_usize("t")?.unwrap_or(cfg.threads_per_group);
+    let artifacts = args
+        .opt("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| cfg.artifacts_dir.clone());
+    let engine = make_engine(&args.opt_or("engine", "native"), &artifacts)?;
+    let mut spec = ProfileSpec::new(xs, ys, GroupConfig::new(p, t));
+    spec.rep_scale = args.opt_usize("scale")?.unwrap_or(cfg.rep_scale);
+    if let Some(b) = args.opt_f64("budget")? {
+        spec.budget_s = b;
+    }
+
+    let fpms = build_fpms(engine.as_ref(), &spec);
+    let out_base = args.opt_or("out", "results/fpm");
+    for (g, fpm) in fpms.iter().enumerate() {
+        let path = PathBuf::from(format!("{out_base}_group{}.tsv", g + 1));
+        fpm.write_tsv(&path).map_err(|e| e.to_string())?;
+        println!(
+            "group{}: {} points -> {}",
+            g + 1,
+            fpm.measured_points(),
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &cli::Args, cfg: &Config) -> Result<(), String> {
+    args.validate(&["fig", "all", "out-dir", "quick", "artifacts", "config"])?;
+    let out_dir = PathBuf::from(args.opt_or("out-dir", cfg.results_dir.to_str().unwrap_or("results")));
+    std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
+    let mut ctx = Ctx::new(&out_dir, args.flag("quick"));
+    if let Some(a) = args.opt("artifacts") {
+        ctx.artifacts_dir = PathBuf::from(a);
+    }
+    let text = if args.flag("all") {
+        generate_all(&ctx)?
+    } else {
+        let id = args.opt("fig").ok_or("--fig <id> or --all required")?;
+        generate(id, &ctx)?
+    };
+    println!("{text}");
+    Ok(())
+}
+
+fn cmd_simulate(args: &cli::Args) -> Result<(), String> {
+    args.validate(&["package", "sizes", "config", "quick"])?;
+    let pkg = Package::parse(&args.opt_or("package", "mkl")).ok_or("bad --package")?;
+    let sizes: Vec<usize> = match args.opt("sizes") {
+        Some(s) => s
+            .split(',')
+            .map(|v| v.trim().parse().map_err(|_| format!("bad size `{v}`")))
+            .collect::<Result<_, _>>()?,
+        None => {
+            let all = hclfft::simulator::campaign_sizes();
+            if args.flag("quick") {
+                all.into_iter().step_by(16).collect()
+            } else {
+                all
+            }
+        }
+    };
+    let c = Campaign::run(pkg, &sizes);
+    let s = c.summary();
+    let mid = CampaignSummary::for_range(&c.points, 10_000, 33_000);
+    println!("virtual campaign: {} over {} sizes (p={}, t={})", pkg.name(), s.count, c.cfg.p, c.cfg.t);
+    println!("  PFFT-FPM:     avg {:.2}x  max {:.2}x", s.avg_speedup_fpm, s.max_speedup_fpm);
+    println!("  PFFT-FPM-PAD: avg {:.2}x  max {:.2}x", s.avg_speedup_pad, s.max_speedup_pad);
+    println!("  mid-range (10000,33000]: FPM {:.2}x  PAD {:.2}x", mid.avg_speedup_fpm, mid.avg_speedup_pad);
+    println!(
+        "  avg MFLOPs: basic {:.0} | FPM {:.0} | PAD {:.0}",
+        s.avg_mflops_basic, s.avg_mflops_fpm, s.avg_mflops_pad
+    );
+    Ok(())
+}

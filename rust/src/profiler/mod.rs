@@ -1,0 +1,198 @@
+//! FPM construction by measurement (paper §V-A/§V-B).
+//!
+//! Builds the discrete speed functions `S_i = {((x, y), s)}` for `p`
+//! abstract processors by *actually executing* row-FFT batches on a real
+//! engine (native or PJRT) and applying the paper's `MeanUsingTtest`
+//! methodology per data point. All `p` groups execute the same point
+//! concurrently ("all of them execute the same problem size in parallel
+//! to determine the speed", §V-B).
+//!
+//! Also implements *partial* FPM construction (the paper's answer to the
+//! 96-hour full-surface build): points in the neighbourhood of the
+//! homogeneous distribution first, until a time budget is spent.
+
+use std::time::Instant;
+
+use crate::coordinator::engine::RowFftEngine;
+use crate::coordinator::fpm::{speed_from_time, SpeedFunction};
+use crate::coordinator::group::GroupConfig;
+use crate::dft::fft::Direction;
+use crate::dft::SignalMatrix;
+use crate::stats::{mean_using_ttest, TtestPolicy};
+
+/// Grid + policy settings for a profiling run.
+#[derive(Clone, Debug)]
+pub struct ProfileSpec {
+    /// row-count grid (x axis)
+    pub xs: Vec<usize>,
+    /// row-length grid (y axis)
+    pub ys: Vec<usize>,
+    pub cfg: GroupConfig,
+    /// divide the paper's repetition counts by this (CI speed knob)
+    pub rep_scale: usize,
+    /// wall-clock budget for the whole build (partial-FPM cutoff)
+    pub budget_s: f64,
+}
+
+impl ProfileSpec {
+    pub fn new(xs: Vec<usize>, ys: Vec<usize>, cfg: GroupConfig) -> Self {
+        ProfileSpec { xs, ys, cfg, rep_scale: 1000, budget_s: f64::INFINITY }
+    }
+}
+
+/// Measure the speed functions of all `p` groups of an engine.
+///
+/// Returns one [`SpeedFunction`] per group. Groups run concurrently per
+/// data point, mirroring the paper's methodology; each group's time is
+/// measured with `MeanUsingTtest`.
+pub fn build_fpms(engine: &dyn RowFftEngine, spec: &ProfileSpec) -> Vec<SpeedFunction> {
+    let p = spec.cfg.p;
+    let started = Instant::now();
+    let mut fpms: Vec<SpeedFunction> = (0..p)
+        .map(|g| {
+            SpeedFunction::new(
+                &format!("{}-group{}-p{}t{}", engine.name(), g + 1, p, spec.cfg.t),
+                spec.xs.clone(),
+                spec.ys.clone(),
+            )
+        })
+        .collect();
+
+    // visit points nearest the homogeneous distribution first so a
+    // budget cutoff yields the paper's *partial* FPM
+    let mut points: Vec<(usize, usize)> = Vec::new();
+    for &y in &spec.ys {
+        for &x in &spec.xs {
+            points.push((x, y));
+        }
+    }
+    points.sort_by_key(|&(x, y)| {
+        let homog = y / p.max(1);
+        (y, x.abs_diff(homog))
+    });
+
+    for (x, y) in points {
+        if started.elapsed().as_secs_f64() > spec.budget_s {
+            break; // partial FPM
+        }
+        let speeds = measure_point(engine, spec, x, y);
+        for (g, s) in speeds.into_iter().enumerate() {
+            if let Some(s) = s {
+                fpms[g].set(x, y, s);
+            }
+        }
+    }
+    fpms
+}
+
+/// Measure one (x, y) data point: all p groups execute x row-FFTs of
+/// length y concurrently; per-group mean time via MeanUsingTtest.
+fn measure_point(
+    engine: &dyn RowFftEngine,
+    spec: &ProfileSpec,
+    x: usize,
+    y: usize,
+) -> Vec<Option<f64>> {
+    let p = spec.cfg.p;
+    let t = spec.cfg.t;
+    let policy = {
+        let mut pol = TtestPolicy::for_problem_size(y, spec.rep_scale);
+        pol.max_time_s = pol.max_time_s.min(10.0);
+        pol
+    };
+    let results: std::sync::Mutex<Vec<Option<f64>>> = std::sync::Mutex::new(vec![None; p]);
+    std::thread::scope(|scope| {
+        for g in 0..p {
+            let results = &results;
+            let policy = policy;
+            scope.spawn(move || {
+                // per-group private buffers (groups share nothing)
+                let mut m = SignalMatrix::random(x, y, (g as u64 + 1) * 7919);
+                let mut failed = false;
+                let tt = mean_using_ttest(&policy, || {
+                    let t0 = Instant::now();
+                    if engine
+                        .fft_rows(&mut m.re, &mut m.im, x, y, Direction::Forward, t)
+                        .is_err()
+                    {
+                        failed = true;
+                    }
+                    t0.elapsed().as_secs_f64()
+                });
+                if !failed && tt.mean > 0.0 {
+                    results.lock().unwrap()[g] = Some(speed_from_time(x, y, tt.mean));
+                }
+            });
+        }
+    });
+    results.into_inner().unwrap()
+}
+
+/// Convenience: profile the plane y = n only (what PFFT-FPM Step 1
+/// actually consumes when a full surface is unaffordable).
+pub fn build_plane(
+    engine: &dyn RowFftEngine,
+    cfg: GroupConfig,
+    xs: Vec<usize>,
+    n: usize,
+    rep_scale: usize,
+) -> Vec<SpeedFunction> {
+    let mut spec = ProfileSpec::new(xs, vec![n], cfg);
+    spec.rep_scale = rep_scale;
+    build_fpms(engine, &spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::NativeEngine;
+
+    fn quick_spec(xs: Vec<usize>, ys: Vec<usize>) -> ProfileSpec {
+        let mut s = ProfileSpec::new(xs, ys, GroupConfig::new(2, 1));
+        s.rep_scale = 10_000; // min reps ~3
+        s
+    }
+
+    #[test]
+    fn builds_full_grid() {
+        let spec = quick_spec(vec![4, 8], vec![32, 64]);
+        let fpms = build_fpms(&NativeEngine, &spec);
+        assert_eq!(fpms.len(), 2);
+        for f in &fpms {
+            assert_eq!(f.measured_points(), 4);
+            for &x in &[4usize, 8] {
+                for &y in &[32usize, 64] {
+                    let s = f.get(x, y).expect("measured");
+                    assert!(s > 0.0, "speed {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bigger_batches_not_slower_per_flop() {
+        // speed(8 rows) should be >= ~0.3x speed(1 row): smoke check that
+        // the speed formula normalizes batch size
+        let spec = quick_spec(vec![1, 8], vec![128]);
+        let fpms = build_fpms(&NativeEngine, &spec);
+        let s1 = fpms[0].get(1, 128).unwrap();
+        let s8 = fpms[0].get(8, 128).unwrap();
+        assert!(s8 > 0.3 * s1, "s1 {s1} s8 {s8}");
+    }
+
+    #[test]
+    fn budget_yields_partial_fpm() {
+        let mut spec = quick_spec(vec![4, 8, 16, 32], vec![64, 128]);
+        spec.budget_s = 0.0; // cut off immediately
+        let fpms = build_fpms(&NativeEngine, &spec);
+        assert!(fpms[0].measured_points() < 8);
+    }
+
+    #[test]
+    fn plane_helper_single_y() {
+        let fpms = build_plane(&NativeEngine, GroupConfig::new(2, 1), vec![4, 8], 64, 10_000);
+        assert_eq!(fpms.len(), 2);
+        let c = fpms[0].plane_section(64);
+        assert_eq!(c.xs, vec![4, 8]);
+    }
+}

@@ -1,0 +1,162 @@
+//! Artifact manifest parsing (`artifacts/manifest.tsv`).
+//!
+//! Written by `python/compile/aot.py`; four tab-separated columns:
+//! `kind  rows  n  file`. TSV instead of JSON because the offline vendor
+//! set has no serde and the schema is a flat table.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+/// Artifact kinds the AOT grid produces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Kind {
+    RowFft,
+    RowIfft,
+    Full2d,
+}
+
+impl Kind {
+    pub fn parse(s: &str) -> Option<Kind> {
+        match s {
+            "row_fft" => Some(Kind::RowFft),
+            "row_ifft" => Some(Kind::RowIfft),
+            "full2d" => Some(Kind::Full2d),
+            _ => None,
+        }
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Entry {
+    pub kind: Kind,
+    pub rows: usize,
+    pub n: usize,
+    pub path: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`; paths are resolved relative to `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("manifest: cannot read {}: {e}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let mut entries = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                return Err(format!("manifest line {}: expected 4 columns", lineno + 1));
+            }
+            let kind = Kind::parse(cols[0])
+                .ok_or_else(|| format!("manifest line {}: unknown kind `{}`", lineno + 1, cols[0]))?;
+            let rows: usize = cols[1]
+                .parse()
+                .map_err(|_| format!("manifest line {}: bad rows", lineno + 1))?;
+            let n: usize = cols[2]
+                .parse()
+                .map_err(|_| format!("manifest line {}: bad n", lineno + 1))?;
+            entries.push(Entry { kind, rows, n, path: dir.join(cols[3]) });
+        }
+        if entries.is_empty() {
+            return Err("manifest: no entries".to_string());
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Row lengths available for a kind (the engine's supported grid).
+    pub fn lengths(&self, kind: Kind) -> Vec<usize> {
+        let set: BTreeSet<usize> =
+            self.entries.iter().filter(|e| e.kind == kind).map(|e| e.n).collect();
+        set.into_iter().collect()
+    }
+
+    /// Chunk row-counts available for (kind, n), descending (greedy tiling).
+    pub fn chunks_for(&self, kind: Kind, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == kind && e.n == n)
+            .map(|e| e.rows)
+            .collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v.dedup();
+        v
+    }
+
+    /// Find the artifact for exactly (kind, rows, n).
+    pub fn find(&self, kind: Kind, rows: usize, n: usize) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.kind == kind && e.rows == rows && e.n == n)
+    }
+}
+
+/// Greedy decomposition of `rows` into available chunk sizes
+/// (descending). Errors if no chunk can cover a remainder (i.e. no
+/// 1-row chunk exists and rows isn't expressible).
+pub fn tile_rows(rows: usize, chunks_desc: &[usize]) -> Result<Vec<usize>, String> {
+    let mut plan = Vec::new();
+    let mut left = rows;
+    for &c in chunks_desc {
+        while left >= c {
+            plan.push(c);
+            left -= c;
+        }
+    }
+    if left != 0 {
+        return Err(format!(
+            "cannot tile {rows} rows with chunks {chunks_desc:?} (left {left})"
+        ));
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# kind\trows\tn\tfile\n\
+        row_fft\t8\t128\trow_fft_8x128.hlo.txt\n\
+        row_fft\t1\t128\trow_fft_1x128.hlo.txt\n\
+        row_ifft\t8\t128\trow_ifft_8x128.hlo.txt\n\
+        full2d\t128\t128\tfull2d_128.hlo.txt\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 4);
+        assert_eq!(m.lengths(Kind::RowFft), vec![128]);
+        assert_eq!(m.chunks_for(Kind::RowFft, 128), vec![8, 1]);
+        let e = m.find(Kind::Full2d, 128, 128).unwrap();
+        assert_eq!(e.path, Path::new("/tmp/a/full2d_128.hlo.txt"));
+        assert!(m.find(Kind::RowFft, 32, 128).is_none());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("row_fft\t8\t128", Path::new("/")).is_err());
+        assert!(Manifest::parse("bogus\t8\t128\tx\n", Path::new("/")).is_err());
+        assert!(Manifest::parse("", Path::new("/")).is_err());
+        assert!(Manifest::parse("row_fft\tx\t128\tf\n", Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn tiling_greedy() {
+        assert_eq!(tile_rows(300, &[128, 32, 8, 1]).unwrap(), vec![128, 128, 32, 8, 1, 1, 1, 1]);
+        assert_eq!(tile_rows(0, &[8, 1]).unwrap(), Vec::<usize>::new());
+        assert_eq!(tile_rows(7, &[8, 1]).unwrap(), vec![1; 7]);
+        assert!(tile_rows(7, &[8, 4]).is_err());
+    }
+}

@@ -1,0 +1,211 @@
+//! PJRT runtime — loads and executes the AOT JAX/Pallas artifacts.
+//!
+//! The AOT bridge: `python/compile/aot.py` lowers the L2 model (calling
+//! the L1 Pallas kernels) to HLO **text**; this module loads it with
+//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client,
+//! and executes it from the L3 hot path. Python never runs at request
+//! time.
+//!
+//! ## Threading model
+//!
+//! The `xla` crate's `PjRtClient` holds a non-atomic `Rc`, and executing
+//! clones it into output buffers — so **all** PJRT object creation, use
+//! and destruction is serialized behind one mutex ([`PjrtCore`]). On this
+//! single-core testbed serialization costs nothing; on a multi-core box
+//! the PJRT CPU client parallelizes internally anyway. Only plain
+//! `Vec<f32>` data crosses the lock boundary.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::coordinator::engine::{EngineError, RowFftEngine};
+use crate::dft::fft::Direction;
+pub use manifest::{Kind, Manifest};
+
+/// The serialized PJRT state: client + compiled-executable cache.
+struct PjrtCore {
+    client: xla::PjRtClient,
+    cache: HashMap<(Kind, usize, usize), xla::PjRtLoadedExecutable>,
+    manifest: Manifest,
+}
+
+// SAFETY: `PjrtCore` is only ever accessed through `PjrtRuntime.inner`
+// (a Mutex). PJRT objects are created, executed and dropped strictly
+// under that lock, so the non-atomic Rc refcounts inside the xla crate
+// wrappers are never touched concurrently; the TFRT CPU client itself is
+// thread-safe. The wrapper types are merely moved across threads, which
+// the underlying C++ objects permit.
+unsafe impl Send for PjrtCore {}
+
+/// The runtime handle (cheap to share by reference across threads).
+pub struct PjrtRuntime {
+    inner: Mutex<PjrtCore>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU-PJRT runtime over an artifacts directory.
+    pub fn load(artifacts_dir: &Path) -> Result<PjrtRuntime, EngineError> {
+        let manifest = Manifest::load(artifacts_dir).map_err(EngineError::Runtime)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| EngineError::Runtime(format!("PJRT client: {e}")))?;
+        Ok(PjrtRuntime { inner: Mutex::new(PjrtCore { client, cache: HashMap::new(), manifest }) })
+    }
+
+    /// Row lengths executable by this runtime (the artifact grid).
+    pub fn supported_lengths(&self) -> Vec<usize> {
+        self.inner.lock().unwrap().manifest.lengths(Kind::RowFft)
+    }
+
+    /// Number of compiled executables currently cached (perf counter).
+    pub fn cached_executables(&self) -> usize {
+        self.inner.lock().unwrap().cache.len()
+    }
+
+    /// Execute `rows` row-FFTs of length `n` over f32 planes, tiling the
+    /// batch greedily onto the artifact chunk grid.
+    pub fn row_ffts_f32(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        rows: usize,
+        n: usize,
+        dir: Direction,
+    ) -> Result<(), EngineError> {
+        let kind = match dir {
+            Direction::Forward => Kind::RowFft,
+            Direction::Inverse => Kind::RowIfft,
+        };
+        let mut core = self.inner.lock().unwrap();
+        let chunks = core.manifest.chunks_for(kind, n);
+        if chunks.is_empty() {
+            return Err(EngineError::UnsupportedLength(n, "pjrt".to_string()));
+        }
+        let plan = manifest::tile_rows(rows, &chunks).map_err(EngineError::Runtime)?;
+        let mut row = 0usize;
+        for chunk in plan {
+            let span = row * n..(row + chunk) * n;
+            core.execute_chunk(kind, chunk, n, &mut re[span.clone()], &mut im[span])?;
+            row += chunk;
+        }
+        Ok(())
+    }
+
+    /// Execute the whole-2D-DFT artifact (`full2d_<n>`), if present.
+    pub fn full2d_f32(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        n: usize,
+    ) -> Result<(), EngineError> {
+        let mut core = self.inner.lock().unwrap();
+        if core.manifest.find(Kind::Full2d, n, n).is_none() {
+            return Err(EngineError::UnsupportedLength(n, "pjrt-full2d".to_string()));
+        }
+        core.execute_chunk(Kind::Full2d, n, n, re, im)
+    }
+}
+
+impl PjrtCore {
+    fn executable(
+        &mut self,
+        kind: Kind,
+        rows: usize,
+        n: usize,
+    ) -> Result<&xla::PjRtLoadedExecutable, EngineError> {
+        if !self.cache.contains_key(&(kind, rows, n)) {
+            let entry = self
+                .manifest
+                .find(kind, rows, n)
+                .ok_or_else(|| EngineError::UnsupportedLength(n, format!("pjrt {rows}x{n}")))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                entry.path.to_str().ok_or_else(|| EngineError::Runtime("bad path".into()))?,
+            )
+            .map_err(|e| EngineError::Runtime(format!("HLO parse {}: {e}", entry.path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| EngineError::Runtime(format!("compile {rows}x{n}: {e}")))?;
+            self.cache.insert((kind, rows, n), exe);
+        }
+        Ok(&self.cache[&(kind, rows, n)])
+    }
+
+    /// Run one (rows, n) executable over the given planes, in place.
+    ///
+    /// Perf (EXPERIMENTS.md §Perf): inputs go through
+    /// `buffer_from_host_buffer` (one host->device transfer; the naive
+    /// `Literal::vec1(..).reshape(..)` path copies twice before the
+    /// transfer), and outputs come back via `Literal::copy_raw_to`
+    /// straight into the caller's slices (the `to_vec` path allocates and
+    /// copies an extra time per plane).
+    fn execute_chunk(
+        &mut self,
+        kind: Kind,
+        rows: usize,
+        n: usize,
+        re: &mut [f32],
+        im: &mut [f32],
+    ) -> Result<(), EngineError> {
+        debug_assert_eq!(re.len(), rows * n);
+        let rt = |e: xla::Error| EngineError::Runtime(e.to_string());
+        self.executable(kind, rows, n)?; // ensure compiled (fills cache)
+        let exe = &self.cache[&(kind, rows, n)];
+        let dims = [rows, n];
+        let b_re = self.client.buffer_from_host_buffer(re, &dims, None).map_err(rt)?;
+        let b_im = self.client.buffer_from_host_buffer(im, &dims, None).map_err(rt)?;
+        let result = exe.execute_b(&[&b_re, &b_im]).map_err(rt)?;
+        let out = result[0][0].to_literal_sync().map_err(rt)?;
+        // lowered with return_tuple=True: (re, im)
+        let (out_re, out_im) = out.to_tuple2().map_err(rt)?;
+        out_re.copy_raw_to(re).map_err(rt)?;
+        out_im.copy_raw_to(im).map_err(rt)?;
+        Ok(())
+    }
+}
+
+/// `RowFftEngine` over the PJRT runtime: f64 planes are converted to f32
+/// at the boundary (the artifacts are f32 — the TPU-friendly dtype).
+pub struct PjrtRowFftEngine {
+    pub runtime: PjrtRuntime,
+}
+
+impl PjrtRowFftEngine {
+    pub fn load(artifacts_dir: &Path) -> Result<Self, EngineError> {
+        Ok(PjrtRowFftEngine { runtime: PjrtRuntime::load(artifacts_dir)? })
+    }
+}
+
+impl RowFftEngine for PjrtRowFftEngine {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn fft_rows(
+        &self,
+        re: &mut [f64],
+        im: &mut [f64],
+        rows: usize,
+        n: usize,
+        dir: Direction,
+        _threads: usize, // PJRT CPU client owns its own thread pool
+    ) -> Result<(), EngineError> {
+        let mut re32: Vec<f32> = re.iter().map(|&v| v as f32).collect();
+        let mut im32: Vec<f32> = im.iter().map(|&v| v as f32).collect();
+        self.runtime.row_ffts_f32(&mut re32, &mut im32, rows, n, dir)?;
+        for (dst, src) in re.iter_mut().zip(&re32) {
+            *dst = *src as f64;
+        }
+        for (dst, src) in im.iter_mut().zip(&im32) {
+            *dst = *src as f64;
+        }
+        Ok(())
+    }
+
+    fn supported_lengths(&self) -> Option<Vec<usize>> {
+        Some(self.runtime.supported_lengths())
+    }
+}

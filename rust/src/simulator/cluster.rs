@@ -1,0 +1,224 @@
+//! Cluster extension — the paper's second future-work item (§VII:
+//! "extensions of them for homogeneous and heterogeneous clusters of
+//! multicore nodes").
+//!
+//! A virtual cluster of `k` multicore nodes, each a full copy of the
+//! single-node testbed (optionally skewed per node — heterogeneous
+//! clusters). The distributed 2D-DFT follows the classic 1D (slab)
+//! decomposition (Dmitruk et al., the paper's ref [11]): rows are
+//! partitioned across nodes (hierarchically: HPOPTA across nodes using
+//! node-aggregate speed functions, then the single-node PFFT machinery
+//! within each node), and the transpose becomes an all-to-all exchange
+//! priced by a latency/bandwidth (α-β) model.
+
+use crate::coordinator::fpm::Curve;
+use crate::coordinator::partition::{balanced, hpopta, PartitionError};
+use crate::simulator::fpm::{SimTestbed, GRID_STEP};
+use crate::simulator::vexec::{app_flops, transpose_time};
+use crate::simulator::Package;
+
+/// α-β communication model for the all-to-all transpose.
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    /// per-message latency (s)
+    pub alpha: f64,
+    /// link bandwidth (B/s)
+    pub beta: f64,
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        // 10 GbE-class interconnect
+        NetModel { alpha: 20e-6, beta: 1.25e9 }
+    }
+}
+
+/// A virtual cluster: k nodes running `package`, node i's compute skewed
+/// by `skew[i]` (1.0 = identical; ≠1.0 models a heterogeneous cluster).
+#[derive(Clone, Debug)]
+pub struct VirtualCluster {
+    pub testbed: SimTestbed,
+    pub skew: Vec<f64>,
+    pub net: NetModel,
+}
+
+impl VirtualCluster {
+    pub fn homogeneous(package: Package, k: usize) -> Self {
+        VirtualCluster {
+            testbed: SimTestbed::paper_best(package),
+            skew: vec![1.0; k],
+            net: NetModel::default(),
+        }
+    }
+
+    /// Heterogeneous: node i runs at 1.0 / (1 + i·spread) of node 0.
+    pub fn heterogeneous(package: Package, k: usize, spread: f64) -> Self {
+        VirtualCluster {
+            testbed: SimTestbed::paper_best(package),
+            skew: (0..k).map(|i| 1.0 / (1.0 + i as f64 * spread)).collect(),
+            net: NetModel::default(),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.skew.len()
+    }
+
+    /// Node-aggregate speed curve at plane y = n: the node's p groups
+    /// sum (they run concurrently within the node), scaled by skew.
+    pub fn node_curve(&self, node: usize, n: usize) -> Curve {
+        let sections = self.testbed.plane_sections(n);
+        let base = &sections[0];
+        let mut speeds = vec![0.0f64; base.len()];
+        for sec in &sections {
+            for (k, &s) in sec.speeds.iter().enumerate() {
+                speeds[k] += s;
+            }
+        }
+        for s in &mut speeds {
+            *s *= self.skew[node];
+        }
+        Curve::new(base.xs.clone(), speeds)
+    }
+
+    /// All-to-all exchange time for redistributing an n×n complex-double
+    /// matrix across k nodes: each node sends (k−1)/k of its slab.
+    pub fn alltoall_time(&self, n: usize) -> f64 {
+        let k = self.nodes() as f64;
+        if k <= 1.0 {
+            return 0.0;
+        }
+        let bytes_total = 16.0 * (n as f64) * (n as f64);
+        let per_node = bytes_total / k * (k - 1.0) / k;
+        // k−1 messages per node, pipelined across the fabric
+        (k - 1.0) * self.net.alpha + per_node / self.net.beta
+    }
+
+    /// Distributed 2D-DFT time with model-based (HPOPTA) node-level
+    /// partitioning. Returns (total seconds, node distribution).
+    pub fn dft2d_time_fpm(&self, n: usize) -> Result<(f64, Vec<usize>), PartitionError> {
+        let curves: Vec<Curve> = (0..self.nodes()).map(|i| self.node_curve(i, n)).collect();
+        let n_grid = n - n % GRID_STEP;
+        let part = hpopta(&curves, n_grid)?;
+        Ok((self.time_for_distribution(&part.d, n, &curves), part.d))
+    }
+
+    /// Distributed 2D-DFT time with the balanced (homogeneous) split.
+    pub fn dft2d_time_balanced(&self, n: usize) -> f64 {
+        let curves: Vec<Curve> = (0..self.nodes()).map(|i| self.node_curve(i, n)).collect();
+        let n_grid = n - n % GRID_STEP;
+        let d = balanced(self.nodes(), n_grid).d;
+        self.time_for_distribution(&d, n, &curves)
+    }
+
+    fn time_for_distribution(&self, d: &[usize], n: usize, curves: &[Curve]) -> f64 {
+        // two row phases (slowest node) + two all-to-all transposes +
+        // local blocked transposes
+        let phase = d
+            .iter()
+            .zip(curves)
+            .filter(|(&di, _)| di > 0)
+            .map(|(&di, c)| {
+                let flops = 2.5 * di as f64 * n as f64 * (n as f64).log2();
+                flops / (c.speed_nearest(di) * 1e6)
+            })
+            .fold(0.0f64, f64::max);
+        2.0 * phase + 2.0 * self.alltoall_time(n) + 2.0 * transpose_time(n) / self.nodes() as f64
+    }
+
+    /// Single-node reference time (the scaling baseline).
+    pub fn single_node_time(&self, n: usize) -> f64 {
+        app_flops(n) / (self.testbed.model.speed(n) * 1e6) + 2.0 * transpose_time(n)
+    }
+}
+
+/// Strong-scaling record for the cluster figure.
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    pub nodes: usize,
+    pub t_fpm: f64,
+    pub t_balanced: f64,
+    pub speedup_vs_single: f64,
+}
+
+/// Sweep node counts for one problem size.
+pub fn strong_scaling(
+    package: Package,
+    n: usize,
+    node_counts: &[usize],
+    spread: f64,
+) -> Vec<ScalingPoint> {
+    node_counts
+        .iter()
+        .map(|&k| {
+            let cluster = if spread == 0.0 {
+                VirtualCluster::homogeneous(package, k)
+            } else {
+                VirtualCluster::heterogeneous(package, k, spread)
+            };
+            let single = cluster.single_node_time(n);
+            let (t_fpm, _) = cluster.dft2d_time_fpm(n).expect("feasible");
+            let t_balanced = cluster.dft2d_time_balanced(n);
+            ScalingPoint { nodes: k, t_fpm, t_balanced, speedup_vs_single: single / t_fpm }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alltoall_zero_for_single_node() {
+        let c = VirtualCluster::homogeneous(Package::Mkl, 1);
+        assert_eq!(c.alltoall_time(10_000), 0.0);
+    }
+
+    #[test]
+    fn alltoall_grows_with_size_and_nodes() {
+        let c2 = VirtualCluster::homogeneous(Package::Mkl, 2);
+        let c8 = VirtualCluster::homogeneous(Package::Mkl, 8);
+        assert!(c2.alltoall_time(20_000) > c2.alltoall_time(10_000));
+        // more nodes: less data per node but more latency terms
+        assert!(c8.alltoall_time(10_000) < c2.alltoall_time(10_000) * 4.0);
+    }
+
+    #[test]
+    fn homogeneous_scaling_improves_then_saturates() {
+        let pts = strong_scaling(Package::Fftw3, 24_704, &[1, 2, 4, 8], 0.0);
+        assert!(pts[1].speedup_vs_single > pts[0].speedup_vs_single);
+        // compute share shrinks with k; comm does not — speedup is sublinear
+        let eff8 = pts[3].speedup_vs_single / 8.0;
+        assert!(eff8 < 1.0, "efficiency {eff8}");
+    }
+
+    #[test]
+    fn heterogeneous_fpm_beats_balanced() {
+        // with 40% per-node skew, balanced splits stall on the slow node
+        let cluster = VirtualCluster::heterogeneous(Package::Mkl, 4, 0.4);
+        let (t_fpm, d) = cluster.dft2d_time_fpm(24_704).unwrap();
+        let t_bal = cluster.dft2d_time_balanced(24_704);
+        assert!(t_fpm < t_bal, "fpm {t_fpm} balanced {t_bal}");
+        // faster nodes get more rows
+        assert!(d[0] > d[3], "{d:?}");
+    }
+
+    #[test]
+    fn node_curve_skew_applied() {
+        let cluster = VirtualCluster::heterogeneous(Package::Mkl, 2, 1.0);
+        let fast = cluster.node_curve(0, 4_096);
+        let slow = cluster.node_curve(1, 4_096);
+        for (a, b) in fast.speeds.iter().zip(&slow.speeds) {
+            assert!((a / b - 2.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = strong_scaling(Package::Fftw3, 12_800, &[2, 4], 0.0);
+        let b = strong_scaling(Package::Fftw3, 12_800, &[2, 4], 0.0);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.t_fpm.to_bits(), y.t_fpm.to_bits());
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Simulated FPM surfaces and sections (Figures 9-14).
+//!
+//! Wraps [`PackageModel::group_speed`] into the coordinator's
+//! [`SpeedFunction`]/[`Curve`] types: full surfaces for Figures 13-14,
+//! lazy plane/column sections for the partitioning and padding steps of
+//! the virtual campaign (building a full surface per campaign size would
+//! be wasteful — sections are O(grid) each).
+
+use crate::coordinator::fpm::{Curve, SpeedFunction};
+use crate::coordinator::group::GroupConfig;
+use crate::simulator::packages::PackageModel;
+use crate::simulator::Package;
+
+/// The paper's FPM grid step (problem sizes are multiples of 128 in the
+/// speed-function construction, §V-B).
+pub const GRID_STEP: usize = 128;
+
+/// Max surface coordinate (paper: 64000).
+pub const GRID_MAX: usize = 64_000;
+
+/// Memory cap: points with x·y above this are "not built due to main
+/// memory constraint" (§V-B). 64000·24704 complex doubles ≈ 24 GiB.
+pub const MEM_CAP_XY: u128 = 64_000 * 24_704;
+
+/// A simulated virtual testbed for one package and group configuration.
+#[derive(Clone, Debug)]
+pub struct SimTestbed {
+    pub model: PackageModel,
+    pub cfg: GroupConfig,
+}
+
+impl SimTestbed {
+    pub fn new(package: Package, cfg: GroupConfig) -> Self {
+        SimTestbed { model: PackageModel::new(package), cfg }
+    }
+
+    /// With the package's paper-best (p, t).
+    pub fn paper_best(package: Package) -> Self {
+        Self::new(package, package.best_groups())
+    }
+
+    /// Plane section y = n for group `g` (1-based): speed vs x on the
+    /// 128-grid up to n, memory-capped (PFFT-FPM Step 1a).
+    pub fn plane_section(&self, g: usize, n: usize) -> Curve {
+        let mut xs = Vec::new();
+        let mut speeds = Vec::new();
+        let mut x = GRID_STEP;
+        while x <= n {
+            if (x as u128) * (n as u128) <= MEM_CAP_XY {
+                xs.push(x);
+                speeds.push(self.model.group_speed(x, n, g, self.cfg.p, self.cfg.t));
+            }
+            x += GRID_STEP;
+        }
+        Curve::new(xs, speeds)
+    }
+
+    /// All p plane sections at y = n.
+    pub fn plane_sections(&self, n: usize) -> Vec<Curve> {
+        (1..=self.cfg.p).map(|g| self.plane_section(g, n)).collect()
+    }
+
+    /// Column section x = d for group `g`: speed vs y over
+    /// (n, n + window] on the 128-grid (PAD Step 2 candidates), starting
+    /// at y = n itself.
+    pub fn column_section(&self, g: usize, d: usize, n: usize, window: usize) -> Curve {
+        let mut ys = Vec::new();
+        let mut speeds = Vec::new();
+        let mut y = n;
+        let cap = (n + window).min(GRID_MAX);
+        while y <= cap {
+            if (d as u128) * (y as u128) <= MEM_CAP_XY || y == n {
+                ys.push(y);
+                speeds.push(self.model.group_speed(d, y, g, self.cfg.p, self.cfg.t));
+            }
+            y += GRID_STEP;
+        }
+        Curve::new(ys, speeds)
+    }
+
+    /// Full FPM surface for group `g` on a decimated grid (Figures 13-14;
+    /// `decimate` thins the 128-grid to keep the dump small).
+    pub fn full_surface(&self, g: usize, decimate: usize) -> SpeedFunction {
+        let step = GRID_STEP * decimate.max(1);
+        let coords: Vec<usize> = (1..).map(|k| k * step).take_while(|&v| v <= GRID_MAX).collect();
+        SpeedFunction::from_fn(
+            &format!("{}-group{}-p{}t{}", self.model.package.name(), g, self.cfg.p, self.cfg.t),
+            coords.clone(),
+            coords,
+            |x, y| {
+                if (x as u128) * (y as u128) <= MEM_CAP_XY {
+                    Some(self.model.group_speed(x, y, g, self.cfg.p, self.cfg.t))
+                } else {
+                    None
+                }
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plane_section_grid() {
+        let tb = SimTestbed::paper_best(Package::Mkl);
+        let c = tb.plane_section(1, 24_704);
+        assert_eq!(c.xs[0], 128);
+        assert_eq!(*c.xs.last().unwrap(), 24_704);
+        assert_eq!(c.xs.len(), 24_704 / 128);
+        assert!(c.speeds.iter().all(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn sections_differ_between_groups() {
+        // heterogeneity (NUMA asymmetry + per-group drops) must show up,
+        // otherwise HPOPTA never fires
+        let tb = SimTestbed::paper_best(Package::Mkl);
+        let c1 = tb.plane_section(1, 24_704);
+        let c2 = tb.plane_section(2, 24_704);
+        let diff = c1
+            .speeds
+            .iter()
+            .zip(&c2.speeds)
+            .filter(|(a, b)| ((**a - **b).abs() / **b) > 0.05)
+            .count();
+        assert!(diff > c1.len() / 20, "only {diff} differing points");
+    }
+
+    #[test]
+    fn memory_cap_applied() {
+        let tb = SimTestbed::paper_best(Package::Fftw3);
+        let c = tb.plane_section(1, 63_936);
+        // x grid must stop before the cap
+        let max_x = *c.xs.last().unwrap();
+        assert!((max_x as u128) * 63_936 <= MEM_CAP_XY);
+        assert!(max_x < 63_936);
+    }
+
+    #[test]
+    fn column_section_window() {
+        let tb = SimTestbed::paper_best(Package::Mkl);
+        let c = tb.column_section(1, 11_648, 24_704, 2048);
+        assert_eq!(c.xs[0], 24_704);
+        assert!(*c.xs.last().unwrap() <= 24_704 + 2048);
+        assert!(c.len() > 10);
+    }
+
+    #[test]
+    fn full_surface_has_gaps_at_cap() {
+        let tb = SimTestbed::paper_best(Package::Fftw3);
+        let s = tb.full_surface(1, 64); // coarse 8192-grid
+        assert!(s.measured_points() > 0);
+        // the far corner must be missing (memory cap)
+        assert_eq!(s.get(57_344, 57_344), None);
+    }
+}

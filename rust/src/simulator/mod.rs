@@ -1,0 +1,121 @@
+//! Virtual testbed — calibrated performance models of the paper's setup.
+//!
+//! The paper's experiments need a 2×18-core Haswell server running
+//! FFTW-2.1.5, FFTW-3.3.7 and Intel MKL FFT; none are available here
+//! (repro band 0/5), so this module substitutes a *performance simulator*
+//! that reproduces the published statistics of those packages:
+//!
+//! * [`packages`] — per-package speed profiles `s(N)` (envelope × noise)
+//!   calibrated to the paper's peaks, averages and variation widths
+//!   (Figures 1-6), with the drop *structure* (x-keyed vs y-keyed) that
+//!   makes PFFT-FPM vs PFFT-FPM-PAD behave as published (see DESIGN.md
+//!   §6 for the mechanism),
+//! * [`fpm`] — simulated FPM surfaces `s_i(x, y)` for p groups of t
+//!   threads (Figures 9-14),
+//! * [`vexec`] — the virtual-time executor that runs the paper's whole
+//!   evaluation campaign (Figures 15-26 + §V-F summary) in model time.
+//!
+//! Everything is deterministic (splitmix64 hash noise keyed by
+//! `(package, coordinate)`), so every figure regenerates bit-identically.
+
+pub mod cluster;
+pub mod fpm;
+pub mod packages;
+pub mod vexec;
+
+/// The three FFT packages the paper studies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Package {
+    Fftw2,
+    Fftw3,
+    Mkl,
+}
+
+impl Package {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Package::Fftw2 => "FFTW-2.1.5",
+            Package::Fftw3 => "FFTW-3.3.7",
+            Package::Mkl => "Intel MKL FFT",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Package> {
+        match s.to_ascii_lowercase().as_str() {
+            "fftw2" | "fftw-2.1.5" => Some(Package::Fftw2),
+            "fftw3" | "fftw-3.3.7" => Some(Package::Fftw3),
+            "mkl" | "intel-mkl" | "intel mkl fft" => Some(Package::Mkl),
+            _ => None,
+        }
+    }
+
+    /// Hash tag for noise keying.
+    pub(crate) fn tag(&self) -> u64 {
+        match self {
+            Package::Fftw2 => 0x2157,
+            Package::Fftw3 => 0x3377,
+            Package::Mkl => 0x4D4B,
+        }
+    }
+
+    /// The paper's experimentally-best (p, t) for this package (§IV-A).
+    pub fn best_groups(&self) -> crate::coordinator::group::GroupConfig {
+        use crate::coordinator::group::GroupConfig;
+        match self {
+            // FFTW-2.1.5 is never optimized in the paper (poor threaded
+            // row-FFT support) — give it the FFTW split for completeness.
+            Package::Fftw2 => GroupConfig::new(4, 9),
+            Package::Fftw3 => GroupConfig::new(4, 9),
+            Package::Mkl => GroupConfig::new(2, 18),
+        }
+    }
+}
+
+/// The paper's problem-size grid: N ∈ {128, 192, ..., 64000} step 64
+/// ("around 1000 problem sizes").
+pub fn paper_sizes() -> Vec<usize> {
+    (0..).map(|k| 128 + 64 * k).take_while(|&n| n <= 64000).collect()
+}
+
+/// The evaluation campaign sizes ("out of 700"): the first 700 grid
+/// points, N ≤ 44864.
+pub fn campaign_sizes() -> Vec<usize> {
+    paper_sizes().into_iter().take(700).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_grid_shape() {
+        let sizes = paper_sizes();
+        assert_eq!(sizes[0], 128);
+        assert_eq!(sizes[1], 192);
+        assert_eq!(*sizes.last().unwrap(), 64_000);
+        assert!((995..=1000).contains(&sizes.len()), "{}", sizes.len());
+    }
+
+    #[test]
+    fn campaign_is_700() {
+        let sizes = campaign_sizes();
+        assert_eq!(sizes.len(), 700);
+        assert_eq!(*sizes.last().unwrap(), 128 + 64 * 699);
+    }
+
+    #[test]
+    fn package_parse() {
+        assert_eq!(Package::parse("mkl"), Some(Package::Mkl));
+        assert_eq!(Package::parse("FFTW3"), Some(Package::Fftw3));
+        assert_eq!(Package::parse("fftw-2.1.5"), Some(Package::Fftw2));
+        assert_eq!(Package::parse("cufft"), None);
+    }
+
+    #[test]
+    fn best_groups_match_paper() {
+        assert_eq!(Package::Mkl.best_groups().p, 2);
+        assert_eq!(Package::Mkl.best_groups().t, 18);
+        assert_eq!(Package::Fftw3.best_groups().p, 4);
+        assert_eq!(Package::Fftw3.best_groups().t, 9);
+    }
+}

@@ -1,0 +1,477 @@
+//! Calibrated package speed profiles (Figures 1-6, 13-14).
+//!
+//! Each package's basic (one group, 36 threads) 2D-DFT speed is
+//!
+//!   s_pkg(N) = envelope_pkg(N) · (1 − drop_pkg(N))
+//!
+//! * `envelope` — smooth asymmetric log-Gaussian through the package's
+//!   published peak, auto-scaled so the grid average matches the
+//!   published average *after* noise (two-pass calibration in
+//!   [`PackageModel::new`]).
+//! * `drop` — deterministic hash noise composed of (i) small per-size
+//!   jitter, (ii) heavy drop events with per-package density/depth (the
+//!   paper's "width of performance variations"), (iii) a smooth-size
+//!   bonus (radix-friendly sizes run fast — the mechanism behind the real
+//!   packages' spikes).
+//!
+//! Crucially, the drop noise is split into an **x-keyed** component
+//! (batch/row-count sensitive — dominant in FFTW-3.3.7) and a **y-keyed**
+//! component (row-length sensitive — dominant in MKL). PFFT-FPM dodges
+//! x-keyed drops by repartitioning rows; only PFFT-FPM-PAD dodges y-keyed
+//! drops by changing the row length. This is what makes the two methods'
+//! published speedup profiles qualitatively different (MKL: FPM ≤ 2×,
+//! PAD up to 5.9×; FFTW3: FPM already 6.8×). See DESIGN.md §6.
+
+use crate::simulator::Package;
+use crate::util::prng::{hash_key, unit_f64};
+
+/// Hash-noise channel tags.
+const TAG_JITTER: u64 = 1;
+const TAG_DROP_EVENT: u64 = 2;
+const TAG_DROP_DEPTH: u64 = 3;
+const TAG_XDROP: u64 = 4;
+const TAG_YDROP: u64 = 5;
+const TAG_COMMON: u64 = 6;
+const TAG_BASIC: u64 = 7;
+
+/// Per-package calibration constants (paper-published statistics).
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    /// published peak speed (MFLOPs) and its location N
+    pub peak_mflops: f64,
+    pub peak_n: usize,
+    /// published grid-average speed (MFLOPs)
+    pub avg_mflops: f64,
+    /// probability of a heavy drop at a given size
+    pub drop_density: f64,
+    /// heavy drop depth range (fraction of envelope lost)
+    pub drop_depth: (f64, f64),
+    /// small per-size jitter amplitude (fraction)
+    pub jitter: f64,
+    /// weight of the x-keyed (row-count) drop channel; 1 − w is y-keyed
+    pub x_weight: f64,
+    /// log-Gaussian envelope widths (left of peak, right of peak), in ln-N
+    pub sigma: (f64, f64),
+    /// floor fraction of peak the envelope decays to at large N
+    pub tail_floor: f64,
+    /// basic-only (whole-machine, 36-thread) penalty channel: the
+    /// cross-socket/NUMA losses that per-socket abstract-processor groups
+    /// dodge — the mechanism behind the paper's PFFT speedups
+    pub basic_density: f64,
+    pub basic_depth: (f64, f64),
+}
+
+impl Package {
+    pub fn calibration(&self) -> Calibration {
+        match self {
+            // last updated 1999; narrow variations, strong mid-size hump
+            Package::Fftw2 => Calibration {
+                peak_mflops: 17841.0,
+                peak_n: 2816,
+                avg_mflops: 7033.0,
+                drop_density: 0.10,
+                drop_depth: (0.05, 0.25),
+                jitter: 0.04,
+                x_weight: 0.5,
+                sigma: (1.1, 0.8),
+                tail_floor: 0.30,
+                basic_density: 0.25,
+                basic_depth: (0.10, 0.30),
+            },
+            // wide variations, batch-sensitive planner
+            Package::Fftw3 => Calibration {
+                peak_mflops: 16989.0,
+                peak_n: 8000,
+                avg_mflops: 5065.0,
+                drop_density: 0.72,
+                drop_depth: (0.50, 0.92),
+                jitter: 0.06,
+                x_weight: 0.70,
+                sigma: (1.3, 1.5),
+                tail_floor: 0.66,
+                basic_density: 0.85,
+                basic_depth: (0.40, 0.70),
+            },
+            // huge peak, severe length-keyed variations ("fill the picture")
+            Package::Mkl => Calibration {
+                peak_mflops: 39424.0,
+                peak_n: 1792,
+                avg_mflops: 9572.0,
+                drop_density: 0.55,
+                drop_depth: (0.40, 0.85),
+                jitter: 0.12,
+                x_weight: 0.15,
+                sigma: (1.0, 1.2),
+                tail_floor: 0.45,
+                basic_density: 0.85,
+                basic_depth: (0.25, 0.50),
+            },
+        }
+    }
+}
+
+/// A calibrated package model over the paper's size grid.
+#[derive(Clone, Debug)]
+pub struct PackageModel {
+    pub package: Package,
+    pub cal: Calibration,
+    /// envelope scale factor fitted so that mean(speed) == avg_mflops
+    scale: f64,
+}
+
+impl PackageModel {
+    /// Build and calibrate on the paper grid: fixed-point iteration of
+    /// the envelope scale so the noisy grid average hits the published
+    /// average (the pinned peak spike contributes mass, hence iterate).
+    pub fn new(package: Package) -> Self {
+        let cal = package.calibration();
+        let mut model = PackageModel { package, cal, scale: 1.0 };
+        let sizes = crate::simulator::paper_sizes();
+        for _ in 0..4 {
+            let mean: f64 =
+                sizes.iter().map(|&n| model.speed(n)).sum::<f64>() / sizes.len() as f64;
+            model.scale *= cal.avg_mflops / mean;
+        }
+        model
+    }
+
+    /// Narrow log-Gaussian spike pinning the published peak value at the
+    /// published peak location (the real packages' best-tuned kernel
+    /// size); negligible two grid steps away.
+    fn peak_spike(&self, n: usize) -> f64 {
+        let cal = &self.cal;
+        let du = (n as f64).ln() - (cal.peak_n as f64).ln();
+        cal.peak_mflops * (-du * du / (2.0 * 0.05 * 0.05)).exp()
+    }
+
+    /// Smooth envelope (MFLOPs, pre-noise) at size N.
+    pub fn envelope(&self, n: usize) -> f64 {
+        let cal = &self.cal;
+        let u = (n as f64).ln();
+        let up = (cal.peak_n as f64).ln();
+        let sig = if u < up { cal.sigma.0 } else { cal.sigma.1 };
+        let g = (-((u - up) * (u - up)) / (2.0 * sig * sig)).exp();
+        let shape = cal.tail_floor + (1.0 - cal.tail_floor) * g;
+        self.scale * cal.peak_mflops * shape
+    }
+
+    /// Basic (one 36-thread group) application speed at size N — this is
+    /// what Figures 1-6 plot. Composed of the x- and y-keyed channels at
+    /// x = N rows, y = N length.
+    /// Undodgeable drop tied to the whole-workload footprint (memory /
+    /// NUMA pressure of the N×N matrix): only bites at N > 33000, applies
+    /// to basic *and* optimized runs alike — this is why the paper's
+    /// optimized curves keep "major variations" in the high range (§V-F).
+    pub fn common_drop(&self, n: usize) -> f64 {
+        if n <= 33_000 {
+            return 0.0;
+        }
+        let tag = self.package.tag();
+        let event = unit_f64(hash_key(&[tag, TAG_COMMON, n as u64]));
+        if event < 0.50 {
+            0.55 * unit_f64(hash_key(&[tag, TAG_COMMON, TAG_DROP_DEPTH, n as u64]))
+        } else {
+            0.0
+        }
+    }
+
+    pub fn speed(&self, n: usize) -> f64 {
+        let keep = (1.0 - self.drop_at(n, n, 0)) * (1.0 - self.common_drop(n));
+        (self.envelope(n) * keep)
+            .max(self.peak_spike(n))
+            .min(self.cal.peak_mflops)
+            .max(1.0)
+    }
+
+    /// The composite drop fraction for a workload of `x` rows of length
+    /// `y` on group `g` (g = 0 is the whole-machine group; g ≥ 1 are
+    /// abstract processors, which see independently-keyed x-channels —
+    /// NUMA placement differs per group).
+    pub fn drop_at(&self, x: usize, y: usize, g: usize) -> f64 {
+        let cal = &self.cal;
+        let tag = self.package.tag();
+
+        // per-channel event densities are weighted so the overall event
+        // rate stays ~drop_density (independent channels would compound)
+        let x_drop = heavy_drop(
+            hash_key(&[tag, TAG_XDROP, g as u64, x as u64]),
+            hash_key(&[tag, TAG_DROP_EVENT, TAG_XDROP, g as u64, x as u64]),
+            cal,
+            range_scale(y),
+            cal.x_weight,
+        );
+        let y_drop = heavy_drop(
+            hash_key(&[tag, TAG_YDROP, y as u64]),
+            hash_key(&[tag, TAG_DROP_EVENT, TAG_YDROP, y as u64]),
+            cal,
+            range_scale(y),
+            1.0 - cal.x_weight,
+        );
+        // whole-machine penalty: only the basic one-group-of-36 run pays
+        let basic = if g == 0 {
+            let ev = unit_f64(hash_key(&[tag, TAG_BASIC, TAG_DROP_EVENT, y as u64]));
+            if ev < cal.basic_density * range_scale(y).min(1.25) {
+                let (lo, hi) = cal.basic_depth;
+                let d = unit_f64(hash_key(&[tag, TAG_BASIC, TAG_DROP_DEPTH, y as u64]));
+                (lo + (hi - lo) * d) * range_scale(y).clamp(0.25, 1.0)
+            } else {
+                0.0
+            }
+        } else {
+            0.0
+        };
+
+        let jitter = cal.jitter
+            * (unit_f64(hash_key(&[tag, TAG_JITTER, g as u64, x as u64, y as u64])) - 0.5);
+
+        // multiplicative channel composition: keep = prod(1 - channel);
+        // a deep y-drop and a deep basic penalty stack realistically
+        // instead of clamping (which produced unbounded speedup ratios)
+        let friendly = smoothness_bonus(y);
+        let dodge = 1.0 - friendly;
+        let keep = (1.0 - cal.x_weight * x_drop * dodge)
+            * (1.0 - (1.0 - cal.x_weight) * y_drop * dodge)
+            * (1.0 - basic * dodge)
+            * (1.0 - jitter);
+        (1.0 - keep).clamp(0.0, 0.95)
+    }
+
+    /// Speed (MFLOPs) of `x` row-FFTs of length `y` executed by abstract
+    /// group `g` (1-based) out of `p` groups of `t` threads each — the
+    /// simulated FPM surface value used by [`crate::simulator::fpm`].
+    pub fn group_speed(&self, x: usize, y: usize, g: usize, p: usize, t: usize) -> f64 {
+        debug_assert!(g >= 1 && g <= p);
+        // thread share of the machine envelope at the *row length* y
+        let share = t as f64 / 36.0;
+        // batch efficiency: small batches underutilize a group's threads
+        let eff = x as f64 / (x as f64 + 0.75 * t as f64);
+        // per-group NUMA asymmetry (deterministic, ±6%)
+        let asym = 1.0
+            + 0.12
+                * (unit_f64(hash_key(&[self.package.tag(), 0xA5, g as u64, p as u64])) - 0.5);
+        let keep = 1.0 - self.drop_at(x, y, g);
+        (self.envelope(y) * share * eff * asym * keep).max(1.0)
+    }
+}
+
+/// Heavy-drop channel: event hash decides occurrence (density), depth
+/// hash the magnitude.
+fn heavy_drop(depth_h: u64, event_h: u64, cal: &Calibration, scale: f64, density_w: f64) -> f64 {
+    if unit_f64(event_h) < cal.drop_density * density_w * scale.min(1.25) {
+        let (lo, hi) = cal.drop_depth;
+        (lo + (hi - lo) * unit_f64(depth_h)) * scale.clamp(0.25, 1.0)
+    } else {
+        0.0
+    }
+}
+
+/// Range modulation of drop severity (paper §V-F): mild below 10000,
+/// severe in (10000, 33000], severe-and-sticky above 33000.
+fn range_scale(n: usize) -> f64 {
+    if n <= 10_000 {
+        0.35
+    } else if n <= 33_000 {
+        1.25
+    } else {
+        1.0
+    }
+}
+
+/// How radix-friendly a length is: 1.0 for powers of two, decaying with
+/// the largest prime factor (mirrors real FFT libraries' mixed-radix
+/// kernels). Deterministic, not hashed.
+pub fn smoothness_bonus(mut y: usize) -> f64 {
+    if y == 0 {
+        return 0.0;
+    }
+    for f in [2usize, 3, 5, 7] {
+        while y % f == 0 {
+            y /= f;
+        }
+    }
+    match y {
+        1 => 0.9,        // 7-smooth: near-perfect kernels
+        _ if y <= 13 => 0.5,
+        _ if y <= 127 => 0.2,
+        _ => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::paper_sizes;
+    use crate::stats::summary;
+
+    fn profile(pkg: Package) -> Vec<f64> {
+        let m = PackageModel::new(pkg);
+        paper_sizes().iter().map(|&n| m.speed(n)).collect()
+    }
+
+    #[test]
+    fn averages_match_paper() {
+        for (pkg, want) in [
+            (Package::Fftw2, 7033.0),
+            (Package::Fftw3, 5065.0),
+            (Package::Mkl, 9572.0),
+        ] {
+            let avg = summary(&profile(pkg)).mean;
+            assert!(
+                (avg - want).abs() / want < 0.01,
+                "{}: avg {avg:.0} vs published {want}",
+                pkg.name()
+            );
+        }
+    }
+
+    #[test]
+    fn peaks_are_in_band() {
+        // peak value within 20% of published, location within a factor ~2
+        for (pkg, want_peak, want_n) in [
+            (Package::Fftw2, 17841.0, 2816usize),
+            (Package::Fftw3, 16989.0, 8000),
+            (Package::Mkl, 39424.0, 1792),
+        ] {
+            let m = PackageModel::new(pkg);
+            let sizes = paper_sizes();
+            let (n_at, peak) = sizes
+                .iter()
+                .map(|&n| (n, m.speed(n)))
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            assert!(
+                (peak - want_peak).abs() / want_peak < 0.35,
+                "{}: peak {peak:.0} vs {want_peak}",
+                pkg.name()
+            );
+            let ratio = n_at as f64 / want_n as f64;
+            assert!(
+                (0.4..2.5).contains(&ratio),
+                "{}: peak at N={n_at} vs published {want_n}",
+                pkg.name()
+            );
+        }
+    }
+
+    #[test]
+    fn mkl_variation_widest_fftw2_narrowest() {
+        // The paper's "width of performance variations" (Eq. 1, visible
+        // band of the profile): MKL's variations "almost fill the
+        // picture", FFTW-2.1.5's are narrowest. Measured here as the mean
+        // absolute speed swing between adjacent sizes (MFLOPs).
+        let mut widths = Vec::new();
+        for pkg in [Package::Fftw2, Package::Fftw3, Package::Mkl] {
+            let p = profile(pkg);
+            let w: f64 = p.windows(2).map(|w| (w[0] - w[1]).abs()).sum::<f64>()
+                / (p.len() - 1) as f64;
+            widths.push(w);
+        }
+        assert!(widths[0] < widths[1], "fftw2 {} < fftw3 {}", widths[0], widths[1]);
+        assert!(widths[1] < widths[2], "fftw3 {} < mkl {}", widths[1], widths[2]);
+    }
+
+    #[test]
+    fn win_counts_in_band() {
+        // paper: FFTW2 beats FFTW3 on 529/1000; beats MKL on 162/1000;
+        // FFTW3 beats MKL on 199/1000. Bands are generous — the *shape*
+        // (who wins how often) is what must hold.
+        let f2 = profile(Package::Fftw2);
+        let f3 = profile(Package::Fftw3);
+        let mk = profile(Package::Mkl);
+        let wins = |a: &[f64], b: &[f64]| a.iter().zip(b).filter(|(x, y)| x > y).count();
+        let n = f2.len() as f64;
+        let w23 = wins(&f2, &f3) as f64 / n;
+        let w2m = wins(&f2, &mk) as f64 / n;
+        let w3m = wins(&f3, &mk) as f64 / n;
+        assert!((0.40..=0.82).contains(&w23), "fftw2>fftw3 rate {w23}");
+        assert!((0.08..=0.32).contains(&w2m), "fftw2>mkl rate {w2m}");
+        assert!((0.08..=0.33).contains(&w3m), "fftw3>mkl rate {w3m}");
+    }
+
+    #[test]
+    fn determinism() {
+        let a = PackageModel::new(Package::Mkl);
+        let b = PackageModel::new(Package::Mkl);
+        for &n in &[128usize, 4096, 24704, 63936] {
+            assert_eq!(a.speed(n), b.speed(n));
+            assert_eq!(a.group_speed(128, n, 1, 2, 18), b.group_speed(128, n, 1, 2, 18));
+        }
+    }
+
+    #[test]
+    fn group_speed_scales_with_threads() {
+        let m = PackageModel::new(Package::Mkl);
+        // more threads per group → more speed at large batch
+        let s18 = m.group_speed(8192, 16384, 1, 2, 18);
+        let s9 = m.group_speed(8192, 16384, 1, 4, 9);
+        assert!(s18 > s9, "18t {s18} vs 9t {s9}");
+    }
+
+    #[test]
+    fn smoothness_bonus_ordering() {
+        assert_eq!(smoothness_bonus(4096), 0.9);
+        assert_eq!(smoothness_bonus(3840), 0.9); // 2^8·3·5
+        assert!(smoothness_bonus(24704) < 0.9); // 2^7·193
+        assert_eq!(smoothness_bonus(24704), 0.0);
+    }
+
+    /// Diagnostic (run with `--ignored --nocapture`): calibration report
+    /// used while tuning the constants against the paper's statistics.
+    #[test]
+    #[ignore]
+    fn calibration_report() {
+        let f2 = profile(Package::Fftw2);
+        let f3 = profile(Package::Fftw3);
+        let mk = profile(Package::Mkl);
+        let sizes = paper_sizes();
+        for (name, p) in [("fftw2", &f2), ("fftw3", &f3), ("mkl", &mk)] {
+            let s = summary(p);
+            let peak_at = sizes[p.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0];
+            println!("{name}: avg {:.0} peak {:.0} @ N={peak_at}", s.mean, s.max);
+        }
+        let wins = |a: &[f64], b: &[f64]| a.iter().zip(b).filter(|(x, y)| x > y).count();
+        println!("fftw2>fftw3: {}/1000(paper 529)", wins(&f2, &f3));
+        println!("fftw2>mkl:   {}/1000 (paper 162)", wins(&f2, &mk));
+        println!("fftw3>mkl:   {}/1000 (paper 199)", wins(&f3, &mk));
+        // envelopes and range-resolved wins
+        let m2 = PackageModel::new(Package::Fftw2);
+        let m3 = PackageModel::new(Package::Fftw3);
+        let mm = PackageModel::new(Package::Mkl);
+        for n in [512usize, 2048, 8000, 16000, 32000, 48000, 64000] {
+            println!(
+                "env @{n}: f2 {:.0} f3 {:.0} mkl {:.0}",
+                m2.envelope(n),
+                m3.envelope(n),
+                mm.envelope(n)
+            );
+        }
+        for (lo, hi) in [(0usize, 10_000usize), (10_000, 33_000), (33_000, 64_001)] {
+            let idx: Vec<usize> = sizes
+                .iter()
+                .enumerate()
+                .filter(|(_, &n)| n > lo && n <= hi)
+                .map(|(i, _)| i)
+                .collect();
+            let w = |a: &[f64], b: &[f64]| {
+                idx.iter().filter(|&&i| a[i] > b[i]).count() as f64 / idx.len() as f64
+            };
+            println!(
+                "range ({lo},{hi}]: f2>f3 {:.2} f2>mkl {:.2} f3>mkl {:.2}",
+                w(&f2, &f3),
+                w(&f2, &mk),
+                w(&f3, &mk)
+            );
+        }
+    }
+
+    #[test]
+    fn speeds_always_positive() {
+        for pkg in [Package::Fftw2, Package::Fftw3, Package::Mkl] {
+            let m = PackageModel::new(pkg);
+            for &n in paper_sizes().iter().step_by(37) {
+                assert!(m.speed(n) > 0.0);
+                assert!(m.group_speed(n / 2, n, 1, 2, 18) > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,366 @@
+//! Virtual-time executor: runs the paper's evaluation campaign
+//! (Figures 15-26 + §V-F) against the calibrated package models.
+//!
+//! Time model (consistent basis everywhere):
+//!
+//! * whole-app flops of an N×N 2D-DFT: `5·N²·log2 N` (two row phases of
+//!   the paper's `2.5·x·y·log2 y` speed formula),
+//! * basic package run: `t = flops / s_pkg(N)` — the package curve is the
+//!   measured whole-app speed, exactly what Figures 1-6 plot,
+//! * PFFT variants: two row phases (`max_i` over abstract processors from
+//!   the simulated FPM surfaces) plus two blocked transposes at a fixed
+//!   byte rate.
+
+use crate::coordinator::group::GroupConfig;
+use crate::coordinator::pad::{determine_pad_length, PadCost, PadDecision};
+use crate::coordinator::partition::{
+    average_curve, curves_identical, hpopta, popta, Partition, PartitionError,
+};
+use crate::simulator::fpm::{SimTestbed, GRID_STEP};
+use crate::simulator::Package;
+
+/// Whole-application complex-flop count of an N×N 2D-DFT.
+pub fn app_flops(n: usize) -> f64 {
+    5.0 * (n as f64) * (n as f64) * (n as f64).log2()
+}
+
+/// Per-phase flops of x rows of length y.
+fn phase_flops(x: usize, y: usize) -> f64 {
+    2.5 * x as f64 * y as f64 * (y as f64).log2()
+}
+
+/// Transpose model: bytes moved / sustained rate. 16 B/element complex
+/// double, read+write, at 25 GB/s effective (Haswell-class blocked
+/// in-place transpose). Charged symmetrically to the basic run and to
+/// the PFFT variants (all use the same Appendix-A transpose).
+pub fn transpose_time(n: usize) -> f64 {
+    2.0 * 16.0 * (n as f64) * (n as f64) / 25.0e9
+}
+
+/// ε for the Step-1b identity test in the virtual campaign (paper: 0.05).
+pub const EPS_IDENTICAL: f64 = 0.05;
+
+/// Pad search window above N (bytes-bounded as §V-B; 4096 on the
+/// 128-grid = 32 candidates).
+pub const PAD_WINDOW: usize = 4096;
+
+/// One campaign point — everything Figures 15-26 need for size N.
+#[derive(Clone, Debug)]
+pub struct CampaignPoint {
+    pub n: usize,
+    /// basic package execution time (one 36-thread group)
+    pub t_basic: f64,
+    pub t_fpm: f64,
+    pub t_pad: f64,
+    /// FPM row distribution and padded lengths
+    pub d: Vec<usize>,
+    pub pads: Vec<usize>,
+    pub used_hpopta: bool,
+}
+
+impl CampaignPoint {
+    pub fn speedup_fpm(&self) -> f64 {
+        self.t_basic / self.t_fpm
+    }
+    pub fn speedup_pad(&self) -> f64 {
+        self.t_basic / self.t_pad
+    }
+    /// Whole-app speed (MFLOPs) of a variant given its time.
+    pub fn mflops(&self, t: f64) -> f64 {
+        app_flops(self.n) / t / 1e6
+    }
+}
+
+/// Campaign results for one package.
+#[derive(Clone, Debug)]
+pub struct Campaign {
+    pub package: Package,
+    pub cfg: GroupConfig,
+    pub points: Vec<CampaignPoint>,
+}
+
+impl Campaign {
+    /// Run the virtual campaign over `sizes` with the package's
+    /// paper-best (p, t).
+    pub fn run(package: Package, sizes: &[usize]) -> Campaign {
+        let tb = SimTestbed::paper_best(package);
+        let points = sizes.iter().map(|&n| simulate_size(&tb, n)).collect();
+        Campaign { package, cfg: tb.cfg, points }
+    }
+
+    pub fn summary(&self) -> CampaignSummary {
+        CampaignSummary::from_points(&self.points)
+    }
+}
+
+/// §V-F summary statistics.
+#[derive(Clone, Debug, Default)]
+pub struct CampaignSummary {
+    pub count: usize,
+    pub avg_speedup_fpm: f64,
+    pub max_speedup_fpm: f64,
+    pub avg_speedup_pad: f64,
+    pub max_speedup_pad: f64,
+    pub avg_mflops_basic: f64,
+    pub avg_mflops_fpm: f64,
+    pub avg_mflops_pad: f64,
+}
+
+impl CampaignSummary {
+    pub fn from_points(points: &[CampaignPoint]) -> Self {
+        if points.is_empty() {
+            return Self::default();
+        }
+        let nf = points.len() as f64;
+        let mut s = CampaignSummary { count: points.len(), ..Default::default() };
+        for p in points {
+            s.avg_speedup_fpm += p.speedup_fpm() / nf;
+            s.avg_speedup_pad += p.speedup_pad() / nf;
+            s.max_speedup_fpm = s.max_speedup_fpm.max(p.speedup_fpm());
+            s.max_speedup_pad = s.max_speedup_pad.max(p.speedup_pad());
+            s.avg_mflops_basic += p.mflops(p.t_basic) / nf;
+            s.avg_mflops_fpm += p.mflops(p.t_fpm) / nf;
+            s.avg_mflops_pad += p.mflops(p.t_pad) / nf;
+        }
+        s
+    }
+
+    /// Restrict to a size range (the paper's three ranges in §V-F).
+    pub fn for_range(points: &[CampaignPoint], lo: usize, hi: usize) -> Self {
+        let subset: Vec<CampaignPoint> =
+            points.iter().filter(|p| p.n > lo && p.n <= hi).cloned().collect();
+        Self::from_points(&subset)
+    }
+}
+
+/// Simulate one problem size end-to-end: plan (Steps 1a-1d), pad
+/// (Step 2), and price all three executions in virtual time.
+pub fn simulate_size(tb: &SimTestbed, n: usize) -> CampaignPoint {
+    // basic pays the same two transposes the PFFT variants do: the
+    // package curve prices the row-FFT phases
+    let t_basic = app_flops(n) / (tb.model.speed(n) * 1e6) + 2.0 * transpose_time(n);
+
+    let (part, used_hpopta) = plan(tb, n);
+    let d = part.d;
+
+    // FPM phase time: slowest group, using each group's surface at y = n
+    let phase_fpm = d
+        .iter()
+        .enumerate()
+        .filter(|(_, &di)| di > 0)
+        .map(|(i, &di)| phase_flops(di, n) / (tb.model.group_speed(di, n, i + 1, tb.cfg.p, tb.cfg.t) * 1e6))
+        .fold(0.0f64, f64::max);
+    // the workload-footprint drop is undodgeable — it scales every
+    // variant's row phases identically (basic has it inside speed())
+    let common_keep = 1.0 - tb.model.common_drop(n);
+    let t_fpm = 2.0 * phase_fpm / common_keep + 2.0 * transpose_time(n);
+
+    // PAD: per-group pad decision from the column section x = d_i
+    let mut pads = Vec::with_capacity(d.len());
+    let mut phase_pad = 0.0f64;
+    for (i, &di) in d.iter().enumerate() {
+        if di == 0 {
+            pads.push(n);
+            continue;
+        }
+        let col = tb.column_section(i + 1, di, n, PAD_WINDOW);
+        let dec: PadDecision = determine_pad_length(&col, di, n, PadCost::PaperRatio);
+        let v = dec.n_padded;
+        let t = phase_flops(di, v)
+            / (tb.model.group_speed(di, v, i + 1, tb.cfg.p, tb.cfg.t) * 1e6);
+        phase_pad = phase_pad.max(t);
+        pads.push(v);
+    }
+    let t_pad = 2.0 * phase_pad / common_keep + 2.0 * transpose_time(n);
+
+    CampaignPoint { n, t_basic, t_fpm, t_pad, d, pads, used_hpopta }
+}
+
+/// Steps 1a-1d on the virtual testbed, with 64-remainder handling: the
+/// FPM grid is 128-stepped (§V-B) while app sizes step 64; the remainder
+/// rows go to the group whose marginal time grows least.
+fn plan(tb: &SimTestbed, n: usize) -> (Partition, bool) {
+    let n_grid = n - n % GRID_STEP;
+    let curves = tb.plane_sections(n);
+    let (part, hp) = if curves_identical(&curves, EPS_IDENTICAL) {
+        let avg = average_curve(&curves);
+        (popta(&avg, tb.cfg.p, n_grid), false)
+    } else {
+        (hpopta(&curves, n_grid), true)
+    };
+    // partitioning can only fail on degenerate grids (n below the grid
+    // step); fall back to giving everything to group 1
+    let mut part = match part {
+        Ok(p) => p,
+        Err(PartitionError::Unreachable { .. }) | Err(_) => {
+            let mut d = vec![0; tb.cfg.p];
+            d[0] = n_grid;
+            Partition {
+                d,
+                makespan: f64::INFINITY,
+                algorithm: crate::coordinator::partition::Algorithm::Balanced,
+            }
+        }
+    };
+    let rem = n - n_grid;
+    if rem > 0 {
+        // marginal-cost choice on nearest grid speeds
+        let best = (0..part.d.len())
+            .min_by(|&a, &b| {
+                let ca = marginal(&curves[a], part.d[a], rem);
+                let cb = marginal(&curves[b], part.d[b], rem);
+                ca.partial_cmp(&cb).unwrap()
+            })
+            .unwrap();
+        part.d[best] += rem;
+    }
+    (part, hp)
+}
+
+fn marginal(curve: &crate::coordinator::fpm::Curve, d: usize, rem: usize) -> f64 {
+    let s = curve.speed_nearest((d + rem).max(GRID_STEP));
+    (d + rem) as f64 / s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_sizes() -> Vec<usize> {
+        // a representative sample across the three ranges (cheap in debug)
+        vec![128, 192, 1024, 2816, 8000, 12_800, 16_384, 24_704, 33_024, 40_000]
+    }
+
+    #[test]
+    fn times_positive_and_distribution_sums() {
+        for pkg in [Package::Fftw3, Package::Mkl] {
+            let c = Campaign::run(pkg, &small_sizes());
+            for p in &c.points {
+                assert!(p.t_basic > 0.0 && p.t_fpm > 0.0 && p.t_pad > 0.0);
+                assert_eq!(p.d.iter().sum::<usize>(), p.n, "n={}", p.n);
+                assert_eq!(p.d.len(), c.cfg.p);
+                for (&di, &v) in p.d.iter().zip(&p.pads) {
+                    assert!(v >= p.n, "pad below n");
+                    let _ = di;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pad_never_slower_than_fpm_in_model() {
+        // pad picks argmin including "no pad", so modeled pad phase time
+        // can exceed fpm only through the paper-ratio-vs-flops mismatch;
+        // allow a small tolerance for that known bias.
+        let c = Campaign::run(Package::Mkl, &small_sizes());
+        for p in &c.points {
+            assert!(
+                p.t_pad <= p.t_fpm * 1.35,
+                "n={}: pad {} vs fpm {}",
+                p.n,
+                p.t_pad,
+                p.t_fpm
+            );
+        }
+    }
+
+    #[test]
+    fn mid_range_speedups_dominate() {
+        // §V-F: speedups concentrated in 10000 < N <= 33000
+        let sizes: Vec<usize> = (0..40).map(|k| 10_048 + 576 * k).collect();
+        let lo_sizes: Vec<usize> = (0..20).map(|k| 1_024 + 448 * k).collect();
+        let mid = Campaign::run(Package::Fftw3, &sizes).summary();
+        let low = Campaign::run(Package::Fftw3, &lo_sizes).summary();
+        assert!(
+            mid.avg_speedup_fpm > low.avg_speedup_fpm,
+            "mid {} low {}",
+            mid.avg_speedup_fpm,
+            low.avg_speedup_fpm
+        );
+    }
+
+    #[test]
+    fn determinism() {
+        let a = Campaign::run(Package::Mkl, &[24_704]);
+        let b = Campaign::run(Package::Mkl, &[24_704]);
+        assert_eq!(a.points[0].d, b.points[0].d);
+        assert_eq!(a.points[0].t_pad, b.points[0].t_pad);
+    }
+
+    #[test]
+    fn summary_ranges() {
+        let c = Campaign::run(Package::Mkl, &small_sizes());
+        let all = c.summary();
+        let mid = CampaignSummary::for_range(&c.points, 10_000, 33_000);
+        assert!(all.count == small_sizes().len());
+        assert!(mid.count < all.count);
+        assert!(all.max_speedup_fpm >= all.avg_speedup_fpm);
+    }
+}
+
+#[cfg(test)]
+mod campaign_diag {
+    use super::*;
+
+    #[test]
+    #[ignore]
+    fn max_point_diag() {
+        for pkg in [Package::Fftw3, Package::Mkl] {
+            let tb = SimTestbed::paper_best(pkg);
+            let c = Campaign::run(pkg, &crate::simulator::campaign_sizes());
+            let pt = c.points.iter().max_by(|a, b| a.speedup_fpm().partial_cmp(&b.speedup_fpm()).unwrap()).unwrap();
+            let n = pt.n;
+            println!("{} max FPM at n={n}: sp {:.2} d={:?} hp={}", pkg.name(), pt.speedup_fpm(), pt.d, pt.used_hpopta);
+            println!("  basic speed {:.0} env {:.0} drop {:.3}", tb.model.speed(n), tb.model.envelope(n), tb.model.drop_at(n, n, 0));
+            for (i, &di) in pt.d.iter().enumerate() {
+                if di == 0 { continue; }
+                println!("  g{} d={di} speed {:.0} drop {:.3}", i+1, tb.model.group_speed(di, n, i+1, tb.cfg.p, tb.cfg.t), tb.model.drop_at(di, n, i+1));
+            }
+        }
+    }
+
+    #[test]
+    #[ignore]
+    fn low_range_diag() {
+        let tb = SimTestbed::paper_best(Package::Mkl);
+        for n in [512usize, 1024, 2048, 5120] {
+            let p = simulate_size(&tb, n);
+            let basic_speed = tb.model.speed(n);
+            let g1 = tb.model.group_speed(p.d[0].max(128), n, 1, 2, 18);
+            let g2 = tb.model.group_speed(p.d[1].max(128), n, 2, 2, 18);
+            println!(
+                "n={n}: d={:?} basic {basic_speed:.0} g1 {g1:.0} g2 {g2:.0} tb {:.2e} tf {:.2e} ttr {:.2e} sp {:.2}",
+                p.d, p.t_basic, p.t_fpm, transpose_time(n), p.speedup_fpm()
+            );
+        }
+    }
+
+    /// Diagnostic (run with `--ignored --nocapture` in release):
+    /// full-campaign headline numbers vs the paper's abstract.
+    #[test]
+    #[ignore]
+    fn campaign_report() {
+        for pkg in [Package::Fftw3, Package::Mkl] {
+            let c = Campaign::run(pkg, &crate::simulator::campaign_sizes());
+            let s = c.summary();
+            let mid = CampaignSummary::for_range(&c.points, 10_000, 33_000);
+            let low = CampaignSummary::for_range(&c.points, 0, 10_000);
+            let high = CampaignSummary::for_range(&c.points, 33_000, usize::MAX);
+            println!(
+                "{}: FPM avg {:.2}x max {:.2}x | PAD avg {:.2}x max {:.2}x",
+                pkg.name(), s.avg_speedup_fpm, s.max_speedup_fpm,
+                s.avg_speedup_pad, s.max_speedup_pad
+            );
+            println!(
+                "  mid  FPM {:.2}/{:.2} PAD {:.2}/{:.2}   low FPM {:.2} high FPM {:.2}",
+                mid.avg_speedup_fpm, mid.max_speedup_fpm,
+                mid.avg_speedup_pad, mid.max_speedup_pad,
+                low.avg_speedup_fpm, high.avg_speedup_fpm
+            );
+            println!(
+                "  avg MFLOPs basic {:.0} fpm {:.0} pad {:.0}",
+                s.avg_mflops_basic, s.avg_mflops_fpm, s.avg_mflops_pad
+            );
+        }
+    }
+}

@@ -1,0 +1,245 @@
+//! Bench harness built on the paper's measurement methodology.
+//!
+//! `cargo bench` targets (`rust/benches/*.rs`, `harness = false`) use this
+//! instead of criterion (not in the offline vendor set): each benchmark is
+//! warmed up, then measured with [`mean_using_ttest`] until the 95% CI is
+//! tight, and reported with mean/CI/min plus an optional MFLOPs column
+//! computed with the paper's speed formula.
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::stats::{mean_using_ttest, StopReason, TtestMean, TtestPolicy};
+use crate::util::json::Json;
+
+/// One benchmark's outcome.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_s: f64,
+    pub ci_half_width_s: f64,
+    pub reps: usize,
+    pub stop: StopReason,
+    /// Optional work term: complex-FLOP count for MFLOPs reporting.
+    pub flops: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mflops(&self) -> Option<f64> {
+        self.flops.map(|f| f / self.mean_s / 1e6)
+    }
+}
+
+/// A suite of benchmarks sharing a policy; prints a criterion-like report
+/// and can dump JSON for EXPERIMENTS.md bookkeeping.
+pub struct BenchSuite {
+    pub name: String,
+    pub policy: TtestPolicy,
+    pub warmup_iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(name: &str) -> Self {
+        // Bench policy: tighter than quick(), bounded for CI wall-time.
+        let policy = TtestPolicy {
+            min_reps: 10,
+            max_reps: 200,
+            max_time_s: 20.0,
+            cl: 0.95,
+            eps: 0.025,
+        };
+        BenchSuite { name: name.to_string(), policy, warmup_iters: 3, results: Vec::new() }
+    }
+
+    /// Override policy (e.g. fast smoke under `HCLFFT_BENCH_FAST=1`).
+    pub fn with_policy(mut self, policy: TtestPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Honour the env knob used by CI to keep bench wall time bounded.
+    pub fn from_env(name: &str) -> Self {
+        let mut suite = Self::new(name);
+        if std::env::var("HCLFFT_BENCH_FAST").is_ok() {
+            suite.policy = TtestPolicy { min_reps: 3, max_reps: 10, max_time_s: 2.0, cl: 0.95, eps: 0.1 };
+            suite.warmup_iters = 1;
+        }
+        suite
+    }
+
+    /// Benchmark `f`, timing one call per observation.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_with_flops(name, None, &mut f)
+    }
+
+    /// Benchmark with a known per-call complex-FLOP count (for MFLOPs).
+    pub fn bench_flops<F: FnMut()>(&mut self, name: &str, flops: f64, mut f: F) -> &BenchResult {
+        self.bench_with_flops(name, Some(flops), &mut f)
+    }
+
+    fn bench_with_flops(&mut self, name: &str, flops: Option<f64>, f: &mut dyn FnMut()) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let m: TtestMean = mean_using_ttest(&self.policy, || {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        });
+        let r = BenchResult {
+            name: name.to_string(),
+            mean_s: m.mean,
+            ci_half_width_s: m.ci_half_width,
+            reps: m.reps,
+            stop: m.stop,
+            flops,
+        };
+        println!("{}", render_line(&self.name, &r));
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Render the final report table.
+    pub fn report(&self) -> String {
+        let mut out = format!("\n== bench suite: {} ==\n", self.name);
+        for r in &self.results {
+            out.push_str(&render_line(&self.name, r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Dump machine-readable results.
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        let arr: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj()
+                    .set("name", r.name.as_str())
+                    .set("mean_s", r.mean_s)
+                    .set("ci_half_width_s", r.ci_half_width_s)
+                    .set("reps", r.reps);
+                if let Some(mf) = r.mflops() {
+                    o = o.set("mflops", mf);
+                }
+                o
+            })
+            .collect();
+        let doc = Json::obj()
+            .set("suite", self.name.as_str())
+            .set("results", Json::Arr(arr));
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, doc.to_pretty())
+    }
+}
+
+fn render_line(suite: &str, r: &BenchResult) -> String {
+    let unit = scale_time(r.mean_s);
+    let mut line = format!(
+        "{suite}/{name:<40} {mean:>10} ± {ci:>8}  ({reps} reps)",
+        name = r.name,
+        mean = unit.fmt(r.mean_s),
+        ci = unit.fmt(r.ci_half_width_s),
+        reps = r.reps,
+    );
+    if let Some(mf) = r.mflops() {
+        line.push_str(&format!("  {mf:>10.1} MFLOPs"));
+    }
+    if r.stop == StopReason::MaxTimeExceeded {
+        line.push_str("  [time-capped]");
+    }
+    line
+}
+
+/// Pick a human time unit for a mean value.
+struct TimeUnit {
+    factor: f64,
+    suffix: &'static str,
+}
+
+impl TimeUnit {
+    fn fmt(&self, s: f64) -> String {
+        format!("{:.3}{}", s * self.factor, self.suffix)
+    }
+}
+
+fn scale_time(s: f64) -> TimeUnit {
+    if s >= 1.0 {
+        TimeUnit { factor: 1.0, suffix: "s" }
+    } else if s >= 1e-3 {
+        TimeUnit { factor: 1e3, suffix: "ms" }
+    } else if s >= 1e-6 {
+        TimeUnit { factor: 1e6, suffix: "µs" }
+    } else {
+        TimeUnit { factor: 1e9, suffix: "ns" }
+    }
+}
+
+/// The paper's speed formula inverted: complex-FLOP count of `x` row FFTs
+/// of length `y` — `2.5 · x · y · log2(y)` (used for MFLOPs columns so our
+/// numbers are comparable with the paper's plots).
+pub fn fft_flops(x: usize, y: usize) -> f64 {
+    2.5 * x as f64 * y as f64 * (y as f64).log2()
+}
+
+/// Complex-FLOP count of a full NxN 2D-DFT (both phases).
+pub fn fft2d_flops(n: usize) -> f64 {
+    2.0 * fft_flops(n, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut suite = BenchSuite::new("test").with_policy(TtestPolicy::quick());
+        suite.warmup_iters = 1;
+        let r = suite.bench("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.mean_s >= 0.0);
+        assert_eq!(suite.results.len(), 1);
+        assert!(suite.report().contains("noop"));
+    }
+
+    #[test]
+    fn mflops_formula() {
+        // 2.5 * 4 * 8 * 3 = 240
+        assert_eq!(fft_flops(4, 8), 240.0);
+        assert_eq!(fft2d_flops(8), 2.0 * fft_flops(8, 8));
+        let r = BenchResult {
+            name: "x".into(),
+            mean_s: 0.001,
+            ci_half_width_s: 0.0,
+            reps: 5,
+            stop: StopReason::PrecisionReached,
+            flops: Some(240.0),
+        };
+        assert!((r.mflops().unwrap() - 0.24).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_unit_scaling() {
+        assert_eq!(scale_time(2.0).suffix, "s");
+        assert_eq!(scale_time(2e-3).suffix, "ms");
+        assert_eq!(scale_time(2e-6).suffix, "µs");
+        assert_eq!(scale_time(2e-10).suffix, "ns");
+    }
+
+    #[test]
+    fn json_dump_writes() {
+        let mut suite = BenchSuite::new("jsontest").with_policy(TtestPolicy::quick());
+        suite.warmup_iters = 0;
+        suite.bench_flops("f", 100.0, || std::hint::black_box(()));
+        let path = std::env::temp_dir().join("hclfft_bench_test/out.json");
+        suite.write_json(&path).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.contains("\"suite\": \"jsontest\""));
+        assert!(s.contains("mflops"));
+    }
+}

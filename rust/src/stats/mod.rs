@@ -1,0 +1,226 @@
+//! Statistical measurement methodology (paper §V-A, Algorithm 8).
+//!
+//! The paper's experimental rigor is itself a contribution worth
+//! reproducing: every data point of a speed function is the sample mean of
+//! repeated executions, accepted only once the Student's-t 95% confidence
+//! interval is within 2.5% of the mean. [`ttest`] implements the
+//! distribution machinery from scratch (no GSL here), [`mean_using_ttest`]
+//! is Algorithm 8, and [`harness`] builds the `cargo bench` harness on top
+//! of it (the vendored crate set has no criterion — and the paper's own
+//! methodology is the more faithful harness anyway).
+
+pub mod harness;
+pub mod ttest;
+
+use std::time::Instant;
+
+/// Descriptive statistics over a sample.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Compute n/mean/sd/min/max of a sample (sd is the sample standard
+/// deviation, n-1 denominator, as in `gsl_stats_sd`).
+pub fn summary(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary::default();
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    Summary {
+        n,
+        mean,
+        sd: var.sqrt(),
+        min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Stopping policy for [`mean_using_ttest`] — the paper's Algorithm 8
+/// inputs, with the per-problem-size repetition classes of §V-A.
+#[derive(Clone, Copy, Debug)]
+pub struct TtestPolicy {
+    pub min_reps: usize,
+    pub max_reps: usize,
+    /// Max total elapsed seconds (paper: 3600).
+    pub max_time_s: f64,
+    /// Confidence level (paper: 0.95).
+    pub cl: f64,
+    /// Required relative precision (paper: 0.025).
+    pub eps: f64,
+}
+
+impl TtestPolicy {
+    /// Paper §V-A repetition classes by 1D problem size `n`:
+    /// small (32..=1024): 10000/100000, medium (..=5120): 100/1000,
+    /// large (>5120): 5/50. We scale the rep counts down by `scale` for
+    /// CI-speed runs (scale=1 reproduces the paper's numbers).
+    pub fn for_problem_size(n: usize, scale: usize) -> Self {
+        let scale = scale.max(1);
+        let (min_reps, max_reps) = if n <= 1024 {
+            (10_000 / scale, 100_000 / scale)
+        } else if n <= 5120 {
+            (100 / scale, 1000 / scale)
+        } else {
+            (5, 50)
+        };
+        TtestPolicy {
+            min_reps: min_reps.max(3),
+            max_reps: max_reps.max(5),
+            max_time_s: 3600.0,
+            cl: 0.95,
+            eps: 0.025,
+        }
+    }
+
+    /// A fast policy for unit tests and smoke benches.
+    pub fn quick() -> Self {
+        TtestPolicy { min_reps: 5, max_reps: 30, max_time_s: 10.0, cl: 0.95, eps: 0.05 }
+    }
+}
+
+/// Why the measurement loop stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// Confidence interval within eps of the mean (the desired outcome —
+    /// the paper observed this always fired first).
+    PrecisionReached,
+    MaxRepsExceeded,
+    MaxTimeExceeded,
+}
+
+/// Result of a [`mean_using_ttest`] measurement.
+#[derive(Clone, Debug)]
+pub struct TtestMean {
+    pub mean: f64,
+    /// Half-width of the CI actually achieved (absolute, same unit as mean).
+    pub ci_half_width: f64,
+    /// Relative precision achieved (`epsOut` of Algorithm 8).
+    pub eps_out: f64,
+    pub reps: usize,
+    pub elapsed_s: f64,
+    pub stop: StopReason,
+    pub samples: Vec<f64>,
+}
+
+/// Algorithm 8 (`MeanUsingTtest`): repeatedly run `measure` (which returns
+/// one observation, e.g. seconds of one application execution) until the
+/// sample mean lies within `policy.eps` relative precision at confidence
+/// `policy.cl`, or a rep/time cap fires.
+pub fn mean_using_ttest<F: FnMut() -> f64>(policy: &TtestPolicy, mut measure: F) -> TtestMean {
+    let started = Instant::now();
+    let mut samples: Vec<f64> = Vec::with_capacity(policy.min_reps.max(16));
+    let mut sum = 0.0f64;
+    let mut stop = StopReason::MaxRepsExceeded;
+    let mut ci_half_width = f64::INFINITY;
+
+    while samples.len() < policy.max_reps {
+        let obs = measure();
+        sum += obs;
+        samples.push(obs);
+        let reps = samples.len();
+        if reps > policy.min_reps && reps > 1 {
+            let s = summary(&samples);
+            // clOut = t_{cl, reps-1} * sd / sqrt(reps)   (Algorithm 8, L12)
+            let t = ttest::t_inv_cdf(policy.cl, (reps - 1) as f64);
+            ci_half_width = t * s.sd / (reps as f64).sqrt();
+            // stop if clOut * reps / sum < eps            (L13)
+            if ci_half_width * reps as f64 / sum < policy.eps {
+                stop = StopReason::PrecisionReached;
+                break;
+            }
+            if started.elapsed().as_secs_f64() > policy.max_time_s {
+                stop = StopReason::MaxTimeExceeded;
+                break;
+            }
+        }
+    }
+
+    let reps = samples.len();
+    let mean = sum / reps as f64;
+    TtestMean {
+        mean,
+        ci_half_width: if ci_half_width.is_finite() { ci_half_width } else { 0.0 },
+        eps_out: if sum > 0.0 { ci_half_width * reps as f64 / sum } else { 0.0 },
+        reps,
+        elapsed_s: started.elapsed().as_secs_f64(),
+        stop,
+        samples,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn summary_basics() {
+        let s = summary(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.sd - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn summary_empty_and_single() {
+        assert_eq!(summary(&[]).n, 0);
+        let s = summary(&[7.0]);
+        assert_eq!((s.mean, s.sd), (7.0, 0.0));
+    }
+
+    #[test]
+    fn ttest_loop_converges_on_low_noise() {
+        let mut rng = Xoshiro256::seeded(1);
+        let policy = TtestPolicy { min_reps: 5, max_reps: 10_000, max_time_s: 5.0, cl: 0.95, eps: 0.025 };
+        let r = mean_using_ttest(&policy, || 1.0 + 0.01 * rng.next_gaussian());
+        assert_eq!(r.stop, StopReason::PrecisionReached);
+        assert!((r.mean - 1.0).abs() < 0.01, "mean {}", r.mean);
+        assert!(r.eps_out < 0.025);
+        assert!(r.reps >= 6);
+    }
+
+    #[test]
+    fn ttest_loop_needs_more_reps_for_noisier_data() {
+        let policy = TtestPolicy { min_reps: 5, max_reps: 100_000, max_time_s: 10.0, cl: 0.95, eps: 0.025 };
+        let mut quiet_rng = Xoshiro256::seeded(2);
+        let quiet = mean_using_ttest(&policy, || 1.0 + 0.01 * quiet_rng.next_gaussian());
+        let mut noisy_rng = Xoshiro256::seeded(2);
+        let noisy = mean_using_ttest(&policy, || 1.0 + 0.2 * noisy_rng.next_gaussian());
+        assert!(noisy.reps > quiet.reps, "noisy {} quiet {}", noisy.reps, quiet.reps);
+    }
+
+    #[test]
+    fn ttest_loop_caps_reps() {
+        let mut rng = Xoshiro256::seeded(3);
+        let policy = TtestPolicy { min_reps: 2, max_reps: 10, max_time_s: 5.0, cl: 0.95, eps: 1e-9 };
+        let r = mean_using_ttest(&policy, || 1.0 + rng.next_gaussian().abs());
+        assert_eq!(r.reps, 10);
+        assert_eq!(r.stop, StopReason::MaxRepsExceeded);
+    }
+
+    #[test]
+    fn policy_classes_match_paper() {
+        let small = TtestPolicy::for_problem_size(512, 1);
+        assert_eq!((small.min_reps, small.max_reps), (10_000, 100_000));
+        let medium = TtestPolicy::for_problem_size(4096, 1);
+        assert_eq!((medium.min_reps, medium.max_reps), (100, 1000));
+        let large = TtestPolicy::for_problem_size(30_000, 1);
+        assert_eq!((large.min_reps, large.max_reps), (5, 50));
+        assert_eq!(small.cl, 0.95);
+        assert_eq!(small.eps, 0.025);
+        assert_eq!(small.max_time_s, 3600.0);
+    }
+}

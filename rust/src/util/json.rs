@@ -1,0 +1,219 @@
+//! Minimal JSON emitter for results files.
+//!
+//! Only *output* is needed (figure series, bench reports, experiment
+//! records); all machine-readable *inputs* in this repo are TSV
+//! (`artifacts/manifest.tsv`, speed-function dumps), so no parser lives
+//! here.
+
+use std::fmt::Write as _;
+
+/// A JSON value tree.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Insertion-ordered object (Vec keeps output stable for diffs).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    /// Add/overwrite a field on an object (panics on non-objects —
+    /// builder misuse is a programming error).
+    pub fn set(mut self, key: &str, val: impl Into<Json>) -> Json {
+        match &mut self {
+            Json::Obj(fields) => {
+                let val = val.into();
+                if let Some(f) = fields.iter_mut().find(|(k, _)| k == key) {
+                    f.1 = val;
+                } else {
+                    fields.push((key.to_string(), val));
+                }
+                self
+            }
+            _ => panic!("Json::set on non-object"),
+        }
+    }
+
+    /// Serialize compactly.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, None, 0);
+        s
+    }
+
+    /// Serialize with 2-space indentation.
+    pub fn to_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, Some(2), 0);
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        let (nl, pad, pad_in) = match indent {
+            Some(w) => ("\n", " ".repeat(w * depth), " ".repeat(w * (depth + 1))),
+            None => ("", String::new(), String::new()),
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
+            Json::Num(x) => {
+                if x.is_finite() {
+                    let _ = write!(out, "{x}");
+                } else {
+                    out.push_str("null"); // JSON has no NaN/Inf
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(nl);
+                    out.push_str(&pad_in);
+                    item.write(out, indent, depth + 1);
+                }
+                if !items.is_empty() {
+                    out.push_str(nl);
+                    out.push_str(&pad);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(nl);
+                    out.push_str(&pad_in);
+                    write_escaped(out, k);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    v.write(out, indent, depth + 1);
+                }
+                if !fields.is_empty() {
+                    out.push_str(nl);
+                    out.push_str(&pad);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl From<bool> for Json {
+    fn from(b: bool) -> Json {
+        Json::Bool(b)
+    }
+}
+impl From<f64> for Json {
+    fn from(x: f64) -> Json {
+        Json::Num(x)
+    }
+}
+impl From<i64> for Json {
+    fn from(x: i64) -> Json {
+        Json::Int(x)
+    }
+}
+impl From<usize> for Json {
+    fn from(x: usize) -> Json {
+        Json::Int(x as i64)
+    }
+}
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(s: String) -> Json {
+        Json::Str(s)
+    }
+}
+impl<T: Into<Json>> From<Vec<T>> for Json {
+    fn from(v: Vec<T>) -> Json {
+        Json::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(Json::Null.to_string(), "null");
+        assert_eq!(Json::from(true).to_string(), "true");
+        assert_eq!(Json::from(3i64).to_string(), "3");
+        assert_eq!(Json::from(1.5).to_string(), "1.5");
+        assert_eq!(Json::from("a\"b\n").to_string(), r#""a\"b\n""#);
+    }
+
+    #[test]
+    fn nan_becomes_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn object_builder_ordered_and_overwrites() {
+        let j = Json::obj().set("b", 1i64).set("a", 2i64).set("b", 3i64);
+        assert_eq!(j.to_string(), r#"{"b":3,"a":2}"#);
+    }
+
+    #[test]
+    fn arrays_nest() {
+        let j = Json::from(vec![1i64, 2, 3]);
+        assert_eq!(j.to_string(), "[1,2,3]");
+        let o = Json::obj().set("xs", j);
+        assert_eq!(o.to_string(), r#"{"xs":[1,2,3]}"#);
+    }
+
+    #[test]
+    fn pretty_roundtrips_structure() {
+        let j = Json::obj()
+            .set("name", "fig15")
+            .set("series", Json::from(vec![1.0, 2.0]));
+        let p = j.to_pretty();
+        assert!(p.contains("\n  \"name\": \"fig15\""), "{p}");
+    }
+
+    #[test]
+    fn control_chars_escaped() {
+        assert_eq!(Json::from("\u{1}").to_string(), "\"\\u0001\"");
+    }
+}

@@ -1,0 +1,62 @@
+//! Small self-contained utilities.
+//!
+//! The offline vendor set ships only the `xla` crate's dependency closure,
+//! so the usual ecosystem crates (`rand`, `serde_json`, `proptest`,
+//! `prettytable`) are replaced by minimal in-repo equivalents:
+//!
+//! * [`prng`] — deterministic splitmix64 / xoshiro256** generators,
+//! * [`json`] — a tiny JSON *emitter* (results files only; inputs use TSV),
+//! * [`table`] — aligned console tables for the figures harness,
+//! * [`proptest`] — a miniature property-testing harness with input
+//!   shrinking used by `rust/tests/proptests.rs`.
+
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod table;
+
+/// Round `x` up to the next multiple of `m` (m > 0).
+pub fn round_up(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Integer log2 for exact powers of two.
+pub fn log2_exact(n: usize) -> Option<u32> {
+    (n.is_power_of_two()).then(|| n.trailing_zeros())
+}
+
+/// `true` if `n` is a power of two (and nonzero).
+pub fn is_pow2(n: usize) -> bool {
+    n != 0 && n & (n - 1) == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+        assert_eq!(round_up(127, 64), 128);
+    }
+
+    #[test]
+    fn log2_exact_basics() {
+        assert_eq!(log2_exact(1), Some(0));
+        assert_eq!(log2_exact(1024), Some(10));
+        assert_eq!(log2_exact(3), None);
+        assert_eq!(log2_exact(0), None);
+    }
+
+    #[test]
+    fn is_pow2_basics() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(65536));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(24704));
+    }
+}

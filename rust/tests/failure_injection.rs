@@ -1,0 +1,112 @@
+//! Failure injection: the system must fail loudly and precisely on
+//! corrupt inputs — broken manifests, unparsable HLO, bad configs,
+//! degenerate planning inputs.
+
+use std::path::Path;
+
+use hclfft::config::Config;
+use hclfft::coordinator::fpm::SpeedFunction;
+use hclfft::runtime::{Manifest, PjrtRuntime};
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("hclfft_fail_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_manifest_reports_path() {
+    let d = tmp_dir("nomanifest");
+    let Err(err) = PjrtRuntime::load(&d) else {
+        panic!("load must fail without a manifest");
+    };
+    assert!(err.to_string().contains("manifest"), "{err}");
+}
+
+#[test]
+fn truncated_manifest_line_reports_lineno() {
+    let err = Manifest::parse("row_fft\t8\t128\n", Path::new("/x")).unwrap_err();
+    assert!(err.contains("line 1"), "{err}");
+}
+
+#[test]
+fn corrupt_hlo_file_fails_at_compile_not_later() {
+    let d = tmp_dir("badhlo");
+    std::fs::write(d.join("manifest.tsv"), "row_fft\t8\t128\tbroken.hlo.txt\n").unwrap();
+    std::fs::write(d.join("broken.hlo.txt"), "HloModule not-actually-hlo ENTRY {").unwrap();
+    let rt = PjrtRuntime::load(&d).unwrap(); // manifest ok
+    let mut re = vec![0.0f32; 8 * 128];
+    let mut im = vec![0.0f32; 8 * 128];
+    let err = rt
+        .row_ffts_f32(&mut re, &mut im, 8, 128, hclfft::dft::fft::Direction::Forward)
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("broken.hlo.txt") || msg.contains("runtime failure"), "{msg}");
+}
+
+#[test]
+fn manifest_pointing_at_missing_file_errors() {
+    let d = tmp_dir("missingfile");
+    std::fs::write(d.join("manifest.tsv"), "row_fft\t8\t128\tnot_there.hlo.txt\n").unwrap();
+    let rt = PjrtRuntime::load(&d).unwrap();
+    let mut re = vec![0.0f32; 8 * 128];
+    let mut im = vec![0.0f32; 8 * 128];
+    assert!(rt
+        .row_ffts_f32(&mut re, &mut im, 8, 128, hclfft::dft::fft::Direction::Forward)
+        .is_err());
+}
+
+#[test]
+fn config_rejects_malformed_values_with_key_name() {
+    let d = tmp_dir("badconfig");
+    let p = d.join("bad.conf");
+    std::fs::write(&p, "groups = not_a_number\n").unwrap();
+    let err = Config::load(Some(&p)).unwrap_err();
+    assert!(err.contains("groups"), "{err}");
+}
+
+#[test]
+fn config_rejects_unknown_keys() {
+    let d = tmp_dir("unknownkey");
+    let p = d.join("u.conf");
+    std::fs::write(&p, "grops = 2\n").unwrap();
+    let err = Config::load(Some(&p)).unwrap_err();
+    assert!(err.contains("unknown key"), "{err}");
+}
+
+#[test]
+fn fpm_tsv_with_garbage_reports_line() {
+    let d = tmp_dir("badfpm");
+    let p = d.join("f.tsv");
+    std::fs::write(&p, "128\t128\t100.0\n128\tbroken\n").unwrap();
+    let err = SpeedFunction::read_tsv(&p).unwrap_err();
+    assert!(err.contains("line 2"), "{err}");
+}
+
+#[test]
+fn fpm_tsv_empty_errors() {
+    let d = tmp_dir("emptyfpm");
+    let p = d.join("e.tsv");
+    std::fs::write(&p, "# nothing\n").unwrap();
+    assert!(SpeedFunction::read_tsv(&p).unwrap_err().contains("no data"));
+}
+
+#[test]
+fn partitioning_degenerate_inputs() {
+    use hclfft::coordinator::fpm::Curve;
+    use hclfft::coordinator::partition::{hpopta, PartitionError};
+    // single point far below N
+    let c = Curve::new(vec![64], vec![100.0]);
+    assert!(matches!(
+        hpopta(&[c], 6400).unwrap_err(),
+        PartitionError::Unreachable { n: 6400, .. }
+    ));
+}
+
+#[test]
+fn cli_errors_are_actionable() {
+    use hclfft::cli;
+    let args = cli::parse(&["run".to_string(), "--n".to_string(), "abc".to_string()]).unwrap();
+    let err = args.opt_usize("n").unwrap_err();
+    assert!(err.contains("--n") && err.contains("abc"), "{err}");
+}

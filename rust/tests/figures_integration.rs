@@ -1,0 +1,85 @@
+//! Integration: the figures harness regenerates every paper item in
+//! quick mode and produces well-formed CSVs.
+
+use std::path::PathBuf;
+
+use hclfft::figures::{all_ids, generate, Ctx};
+
+fn ctx() -> Ctx {
+    let dir = std::env::temp_dir().join("hclfft_figs_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut c = Ctx::new(&dir, true);
+    c.decimate = 32; // extra-quick for debug-mode CI
+    c
+}
+
+#[test]
+fn every_simulated_figure_generates() {
+    let ctx = ctx();
+    for id in all_ids() {
+        if id == "real" {
+            continue; // needs artifacts; covered by runtime_integration
+        }
+        let out = generate(id, &ctx).unwrap_or_else(|e| panic!("fig {id}: {e}"));
+        assert!(!out.is_empty(), "fig {id} produced empty output");
+    }
+}
+
+#[test]
+fn figure_csvs_are_written_and_parse() {
+    let ctx = ctx();
+    for id in ["1", "15", "20", "25"] {
+        generate(id, &ctx).unwrap();
+        let csv = std::fs::read_to_string(ctx.out_dir.join(format!("fig{id}.csv"))).unwrap();
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        assert!(header.starts_with("N,"), "fig{id} header: {header}");
+        let mut count = 0;
+        for line in lines {
+            let cols: Vec<&str> = line.split(',').collect();
+            assert!(cols.len() >= 2, "fig{id}: short row {line}");
+            let _: usize = cols[0].parse().expect("N column");
+            for v in &cols[1..] {
+                let x: f64 = v.parse().expect("numeric column");
+                assert!(x.is_finite() && x > 0.0, "fig{id}: bad value {v}");
+            }
+            count += 1;
+        }
+        assert!(count > 5, "fig{id}: only {count} rows");
+    }
+}
+
+#[test]
+fn summary_figure_contains_published_comparisons() {
+    let ctx = ctx();
+    let s = generate("summary", &ctx).unwrap();
+    assert!(s.contains("published"));
+    assert!(s.contains("reproduced"));
+    assert!(s.contains("PFFT-FPM max speedup"));
+}
+
+#[test]
+fn fig10_reports_partition_gain() {
+    let ctx = ctx();
+    let s = generate("10", &ctx).unwrap();
+    assert!(s.contains("gain"), "{s}");
+}
+
+#[test]
+fn table1_and_illustrations() {
+    let ctx = ctx();
+    assert!(generate("t1", &ctx).unwrap().contains("Haswell"));
+    assert!(generate("7", &ctx).unwrap().contains("PFFT-LB"));
+    assert!(generate("8", &ctx).unwrap().contains("{5,3,2,6}"));
+}
+
+#[test]
+fn out_dir_is_respected() {
+    let dir = std::env::temp_dir().join(format!("hclfft_figs_alt_{}", std::process::id()));
+    let mut ctx = Ctx::new(&dir, true);
+    ctx.decimate = 64;
+    let _ = std::fs::create_dir_all(&dir);
+    generate("1", &ctx).unwrap();
+    assert!(PathBuf::from(&dir).join("fig1.csv").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}

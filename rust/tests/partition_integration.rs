@@ -1,0 +1,95 @@
+//! Integration: the partitioning pipeline (Step 1 of PFFT-FPM) over the
+//! simulated testbed — ε-identity test, POPTA/HPOPTA selection, and the
+//! paper's running example.
+
+use hclfft::coordinator::fpm::Curve;
+use hclfft::coordinator::partition::{
+    average_curve, balanced, brute_force, curves_identical, hpopta, predict_makespan,
+};
+use hclfft::simulator::fpm::SimTestbed;
+use hclfft::simulator::Package;
+
+#[test]
+fn paper_example_n24704_is_imbalanced_and_better_than_balanced() {
+    let tb = SimTestbed::paper_best(Package::Mkl);
+    let curves = tb.plane_sections(24_704);
+    assert!(!curves_identical(&curves, 0.05), "paper example is heterogeneous");
+    let part = hpopta(&curves, 24_704).unwrap();
+    assert_eq!(part.d.iter().sum::<usize>(), 24_704);
+    // deliberately imbalanced (like the paper's (11648, 13056))
+    assert_ne!(part.d[0], part.d[1], "expected load imbalance: {:?}", part.d);
+    let bal = predict_makespan(&curves, &balanced(2, 24_704).d);
+    assert!(part.makespan <= bal + 1e-12, "opt {} > balanced {bal}", part.makespan);
+}
+
+#[test]
+fn hpopta_never_worse_than_balanced_across_sizes() {
+    let tb = SimTestbed::paper_best(Package::Fftw3);
+    // sizes divisible by p*128 so the balanced split lies on the FPM grid
+    // (off-grid balanced splits would be priced by nearest-point speeds,
+    // making the comparison meaningless)
+    for n in [1_536usize, 5_120, 12_800, 25_600, 33_280] {
+        let curves = tb.plane_sections(n);
+        let part = hpopta(&curves, n - n % 128).unwrap();
+        let bal = predict_makespan(&curves, &balanced(curves.len(), n - n % 128).d);
+        assert!(
+            part.makespan <= bal + 1e-12,
+            "n={n}: hpopta {} vs balanced {bal}",
+            part.makespan
+        );
+    }
+}
+
+#[test]
+fn hpopta_optimal_vs_brute_force_on_simulated_sections() {
+    // decimate the real sections to a brute-forceable grid and cross-check
+    let tb = SimTestbed::paper_best(Package::Mkl);
+    let full = tb.plane_sections(2_048);
+    let small: Vec<Curve> = full
+        .iter()
+        .map(|c| {
+            let xs: Vec<usize> = c.xs.iter().copied().take(4).collect();
+            let speeds: Vec<f64> = c.speeds.iter().copied().take(4).collect();
+            Curve::new(xs, speeds)
+        })
+        .collect();
+    let n = 768; // reachable: e.g. 256 + 512 on the {128..512} grid
+    let (bf_d, bf_m) = brute_force(&small, n).expect("feasible");
+    let part = hpopta(&small, n).unwrap();
+    assert!(
+        (part.makespan - bf_m).abs() < 1e-9,
+        "hpopta {} (d {:?}) vs brute {} (d {:?})",
+        part.makespan,
+        part.d,
+        bf_m,
+        bf_d
+    );
+}
+
+#[test]
+fn averaging_collapses_homogeneous_groups() {
+    // force-identical curves: average equals each curve
+    let c = Curve::new(vec![128, 256, 384], vec![100.0, 200.0, 150.0]);
+    let avg = average_curve(&[c.clone(), c.clone(), c.clone()]);
+    for (k, &x) in c.xs.iter().enumerate() {
+        assert!((avg.speed_at(x).unwrap() - c.speeds[k]).abs() < 1e-9);
+    }
+    assert!(curves_identical(&[c.clone(), c], 0.0));
+}
+
+#[test]
+fn plane_sections_memory_cap_respected_at_large_n() {
+    let tb = SimTestbed::paper_best(Package::Fftw3);
+    let curves = tb.plane_sections(44_864);
+    for c in &curves {
+        let max_x = *c.xs.last().unwrap();
+        assert!(
+            (max_x as u128) * 44_864 <= hclfft::simulator::fpm::MEM_CAP_XY,
+            "memory cap violated: x={max_x}"
+        );
+    }
+    // partitioning still succeeds with the capped grid (sum reachable
+    // because p * max_x >= n)
+    let part = hpopta(&curves, 44_800).unwrap();
+    assert_eq!(part.d.iter().sum::<usize>(), 44_800);
+}

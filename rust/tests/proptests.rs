@@ -1,0 +1,228 @@
+//! Property tests over the coordinator invariants and the numeric
+//! substrates, using the in-repo mini property-test harness
+//! (`util::proptest` — the vendored crate set has no proptest; see
+//! DESIGN.md §3).
+
+use hclfft::coordinator::engine::{NativeEngine, RowFftEngine};
+use hclfft::coordinator::fpm::Curve;
+use hclfft::coordinator::group::GroupConfig;
+use hclfft::coordinator::partition::{balanced, hpopta, predict_makespan};
+use hclfft::coordinator::pfft::pfft_lb;
+use hclfft::dft::fft::Direction;
+use hclfft::dft::transpose::transpose_in_place;
+use hclfft::dft::SignalMatrix;
+use hclfft::util::proptest::{run, Config};
+use hclfft::util::prng::Xoshiro256;
+
+/// Random partition instance: p curves on a common step grid + target n.
+#[derive(Clone, Debug)]
+struct PartitionCase {
+    curves: Vec<Curve>,
+    n: usize,
+}
+
+fn gen_partition_case(rng: &mut Xoshiro256) -> PartitionCase {
+    let p = rng.range_usize(1, 4);
+    let m = rng.range_usize(2, 12);
+    let step = [1usize, 2, 64, 128][rng.range_usize(0, 3)];
+    let curves: Vec<Curve> = (0..p)
+        .map(|_| {
+            let xs: Vec<usize> = (1..=m).map(|k| k * step).collect();
+            let speeds: Vec<f64> = (0..m).map(|_| 1.0 + rng.next_f64() * 999.0).collect();
+            Curve::new(xs, speeds)
+        })
+        .collect();
+    let max_total: usize = curves.iter().map(|c| *c.xs.last().unwrap()).sum();
+    let n = step * rng.range_usize(0, max_total / step);
+    PartitionCase { curves, n }
+}
+
+#[test]
+fn prop_hpopta_distribution_sums_to_n() {
+    run(
+        "hpopta-sums-to-n",
+        &Config::default(),
+        gen_partition_case,
+        |_| vec![],
+        |case| match hpopta(&case.curves, case.n) {
+            Ok(part) => {
+                let sum: usize = part.d.iter().sum();
+                if sum != case.n {
+                    return Err(format!("sum {sum} != n {}", case.n));
+                }
+                if part.d.len() != case.curves.len() {
+                    return Err("arity mismatch".to_string());
+                }
+                Ok(())
+            }
+            Err(_) => Ok(()), // infeasible is a legal outcome; optimality
+                               // vs brute force is covered separately
+        },
+    );
+}
+
+#[test]
+fn prop_hpopta_makespan_is_exactly_attained_max() {
+    run(
+        "hpopta-makespan-consistent",
+        &Config::default(),
+        gen_partition_case,
+        |_| vec![],
+        |case| {
+            let Ok(part) = hpopta(&case.curves, case.n) else { return Ok(()) };
+            let recomputed = predict_makespan(&case.curves, &part.d);
+            if (recomputed - part.makespan).abs() > 1e-9 * (1.0 + part.makespan) {
+                return Err(format!("makespan {} != recomputed {recomputed}", part.makespan));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hpopta_beats_or_ties_balanced_on_its_grid() {
+    run(
+        "hpopta-beats-balanced",
+        &Config::default(),
+        gen_partition_case,
+        |_| vec![],
+        |case| {
+            let Ok(part) = hpopta(&case.curves, case.n) else { return Ok(()) };
+            // compare only when the balanced split lies on the grid
+            let bal = balanced(case.curves.len(), case.n);
+            let on_grid = bal
+                .d
+                .iter()
+                .zip(&case.curves)
+                .all(|(&di, c)| di == 0 || c.speed_at(di).is_some());
+            if !on_grid {
+                return Ok(());
+            }
+            let bal_makespan = predict_makespan(&case.curves, &bal.d);
+            if part.makespan > bal_makespan + 1e-9 {
+                return Err(format!("opt {} > balanced {bal_makespan}", part.makespan));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fft_roundtrip_random_shapes() {
+    run(
+        "fft-roundtrip",
+        &Config { cases: 24, ..Config::default() },
+        |rng| {
+            let rows = rng.range_usize(1, 6);
+            let n = [2usize, 4, 8, 12, 24, 64, 100, 128][rng.range_usize(0, 7)];
+            (rows, n, rng.next_u64())
+        },
+        |_| vec![],
+        |&(rows, n, seed)| {
+            let orig = SignalMatrix::random(rows, n, seed);
+            let mut m = orig.clone();
+            NativeEngine
+                .fft_rows(&mut m.re, &mut m.im, rows, n, Direction::Forward, 1)
+                .map_err(|e| e.to_string())?;
+            NativeEngine
+                .fft_rows(&mut m.re, &mut m.im, rows, n, Direction::Inverse, 1)
+                .map_err(|e| e.to_string())?;
+            let err = m.max_abs_diff(&orig);
+            if err > 1e-8 {
+                return Err(format!("roundtrip err {err} (rows {rows}, n {n})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_transpose_involution_random_blocks() {
+    run(
+        "transpose-involution",
+        &Config { cases: 32, ..Config::default() },
+        |rng| {
+            let n = rng.range_usize(1, 100);
+            let block = rng.range_usize(1, 128);
+            (n, block, rng.next_u64())
+        },
+        |_| vec![],
+        |&(n, block, seed)| {
+            let orig = SignalMatrix::random(n, n, seed);
+            let mut m = orig.clone();
+            transpose_in_place(&mut m, block);
+            transpose_in_place(&mut m, block);
+            if m != orig {
+                return Err(format!("involution broken (n {n}, block {block})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pfft_lb_parseval_energy() {
+    // whole-pipeline invariant: the 2D transform preserves energy up to
+    // the N^2 normalization (Parseval), for any group configuration
+    run(
+        "pfft-parseval",
+        &Config { cases: 12, ..Config::default() },
+        |rng| {
+            let n = [8usize, 16, 24, 32][rng.range_usize(0, 3)];
+            let p = rng.range_usize(1, 4);
+            (n, p, rng.next_u64())
+        },
+        |_| vec![],
+        |&(n, p, seed)| {
+            let orig = SignalMatrix::random(n, n, seed);
+            let mut m = orig.clone();
+            pfft_lb(&NativeEngine, &mut m, GroupConfig::new(p, 1), 16)
+                .map_err(|e| e.to_string())?;
+            let e_time: f64 = orig.re.iter().zip(&orig.im).map(|(r, i)| r * r + i * i).sum();
+            let e_freq: f64 =
+                m.re.iter().zip(&m.im).map(|(r, i)| r * r + i * i).sum::<f64>()
+                    / (n * n) as f64;
+            if (e_time - e_freq).abs() / e_time > 1e-9 {
+                return Err(format!("Parseval violated: {e_time} vs {e_freq}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simulator_speed_positive_and_deterministic() {
+    use hclfft::simulator::packages::PackageModel;
+    use hclfft::simulator::Package;
+    let models = [
+        PackageModel::new(Package::Fftw2),
+        PackageModel::new(Package::Fftw3),
+        PackageModel::new(Package::Mkl),
+    ];
+    run(
+        "simulator-speed-sane",
+        &Config { cases: 200, ..Config::default() },
+        |rng| {
+            let n = 128 + 64 * rng.range_usize(0, 990);
+            let which = rng.range_usize(0, 2);
+            (which, n)
+        },
+        |_| vec![],
+        |&(which, n)| {
+            let m = &models[which];
+            let a = m.speed(n);
+            let b = m.speed(n);
+            if a <= 0.0 || !a.is_finite() {
+                return Err(format!("bad speed {a} at n {n}"));
+            }
+            if a != b {
+                return Err("nondeterministic".to_string());
+            }
+            let g = m.group_speed(n / 2 + 1, n, 1, 2, 18);
+            if g <= 0.0 || !g.is_finite() {
+                return Err(format!("bad group speed {g}"));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,121 @@
+//! Integration: the PJRT runtime against the AOT JAX/Pallas artifacts —
+//! the rust side of the three-layer AOT bridge. Requires
+//! `artifacts/manifest.tsv` (built by `make artifacts`); each test skips
+//! gracefully when absent so `cargo test` works pre-AOT.
+
+use std::path::Path;
+
+use hclfft::coordinator::engine::{NativeEngine, RowFftEngine};
+use hclfft::coordinator::group::GroupConfig;
+use hclfft::coordinator::pfft::{pfft_fpm, pfft_lb};
+use hclfft::dft::fft::Direction;
+use hclfft::dft::SignalMatrix;
+use hclfft::runtime::{PjrtRowFftEngine, PjrtRuntime};
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.tsv").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn pjrt_row_ffts_match_native_across_grid() {
+    let Some(dir) = artifacts() else { return };
+    let engine = PjrtRowFftEngine::load(dir).unwrap();
+    let lengths = engine.supported_lengths().unwrap();
+    assert!(!lengths.is_empty());
+    for &n in lengths.iter().take(3) {
+        for rows in [1usize, 5, 9] {
+            let orig = SignalMatrix::random(rows, n, n as u64);
+            let mut got = orig.clone();
+            engine
+                .fft_rows(&mut got.re, &mut got.im, rows, n, Direction::Forward, 1)
+                .unwrap();
+            let mut want = orig.clone();
+            NativeEngine
+                .fft_rows(&mut want.re, &mut want.im, rows, n, Direction::Forward, 1)
+                .unwrap();
+            let err = got.max_abs_diff(&want) / want.norm().max(1.0);
+            assert!(err < 1e-4, "rows={rows} n={n}: rel err {err}"); // f32 artifacts
+        }
+    }
+}
+
+#[test]
+fn pjrt_inverse_roundtrip() {
+    let Some(dir) = artifacts() else { return };
+    let engine = PjrtRowFftEngine::load(dir).unwrap();
+    let n = engine.supported_lengths().unwrap()[0];
+    let orig = SignalMatrix::random(4, n, 2);
+    let mut m = orig.clone();
+    engine.fft_rows(&mut m.re, &mut m.im, 4, n, Direction::Forward, 1).unwrap();
+    engine.fft_rows(&mut m.re, &mut m.im, 4, n, Direction::Inverse, 1).unwrap();
+    let err = m.max_abs_diff(&orig) / orig.norm().max(1.0);
+    assert!(err < 1e-4, "roundtrip rel err {err}");
+}
+
+#[test]
+fn pjrt_unsupported_length_errors() {
+    let Some(dir) = artifacts() else { return };
+    let engine = PjrtRowFftEngine::load(dir).unwrap();
+    let mut m = SignalMatrix::random(2, 96, 1); // 96 not in the grid
+    let err = engine
+        .fft_rows(&mut m.re, &mut m.im, 2, 96, Direction::Forward, 1)
+        .unwrap_err();
+    assert!(err.to_string().contains("not supported"), "{err}");
+}
+
+#[test]
+fn pjrt_full2d_matches_native_dft2d() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::load(dir).unwrap();
+    let n = 128;
+    let orig = SignalMatrix::random(n, n, 5);
+    let mut re32: Vec<f32> = orig.re.iter().map(|&v| v as f32).collect();
+    let mut im32: Vec<f32> = orig.im.iter().map(|&v| v as f32).collect();
+    rt.full2d_f32(&mut re32, &mut im32, n).unwrap();
+
+    let mut want = orig.clone();
+    hclfft::dft::dft2d::dft2d(&mut want, Direction::Forward, 1);
+    let scale = want.norm().max(1.0);
+    let mut max_err = 0.0f64;
+    for i in 0..n * n {
+        max_err = max_err.max((re32[i] as f64 - want.re[i]).abs());
+        max_err = max_err.max((im32[i] as f64 - want.im[i]).abs());
+    }
+    assert!(max_err / scale < 1e-4, "full2d rel err {}", max_err / scale);
+}
+
+#[test]
+fn pjrt_under_pfft_drivers_matches_native() {
+    let Some(dir) = artifacts() else { return };
+    let engine = PjrtRowFftEngine::load(dir).unwrap();
+    let n = 256;
+    let orig = SignalMatrix::random(n, n, 11);
+
+    let mut pjrt_out = orig.clone();
+    pfft_fpm(&engine, &mut pjrt_out, &[100, 156], 1, 64).unwrap();
+
+    let mut native_out = orig.clone();
+    pfft_lb(&NativeEngine, &mut native_out, GroupConfig::new(2, 1), 64).unwrap();
+
+    let err = pjrt_out.max_abs_diff(&native_out) / native_out.norm().max(1.0);
+    assert!(err < 1e-4, "pjrt-vs-native under drivers: rel err {err}");
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::load(dir).unwrap();
+    let n = rt.supported_lengths()[0];
+    let mut re = vec![0.0f32; 8 * n];
+    let mut im = vec![0.0f32; 8 * n];
+    rt.row_ffts_f32(&mut re, &mut im, 8, n, Direction::Forward).unwrap();
+    let after_first = rt.cached_executables();
+    rt.row_ffts_f32(&mut re, &mut im, 8, n, Direction::Forward).unwrap();
+    assert_eq!(rt.cached_executables(), after_first, "second run must not recompile");
+}

@@ -1,0 +1,138 @@
+//! Integration: the reproduction criteria — the virtual campaign must
+//! land in the paper's published bands (DESIGN.md §5/§6). These tests ARE
+//! the claim "the shape of the paper's evaluation holds".
+//!
+//! Grids are decimated (every 8th campaign size) to keep non-release test
+//! time reasonable; the bands account for that.
+
+use hclfft::simulator::packages::PackageModel;
+use hclfft::simulator::vexec::{Campaign, CampaignSummary};
+use hclfft::simulator::{campaign_sizes, paper_sizes, Package};
+use hclfft::stats::summary;
+
+fn decimated() -> Vec<usize> {
+    campaign_sizes().into_iter().step_by(8).collect()
+}
+
+#[test]
+fn package_study_statistics() {
+    // Figures 1-6 headline stats (published values in comments)
+    let sizes = paper_sizes();
+    for (pkg, avg, peak) in [
+        (Package::Fftw2, 7033.0, 17841.0),
+        (Package::Fftw3, 5065.0, 16989.0),
+        (Package::Mkl, 9572.0, 39424.0),
+    ] {
+        let m = PackageModel::new(pkg);
+        let speeds: Vec<f64> = sizes.iter().map(|&n| m.speed(n)).collect();
+        let s = summary(&speeds);
+        assert!((s.mean - avg).abs() / avg < 0.02, "{}: avg {}", pkg.name(), s.mean);
+        assert!((s.max - peak).abs() / peak < 0.02, "{}: peak {}", pkg.name(), s.max);
+    }
+}
+
+#[test]
+fn fftw3_speedups_in_paper_band() {
+    // paper: FPM avg 1.9x max 6.8x; PAD avg 2.0x max 9.4x
+    let c = Campaign::run(Package::Fftw3, &decimated());
+    let s = c.summary();
+    assert!((1.4..=2.4).contains(&s.avg_speedup_fpm), "FPM avg {}", s.avg_speedup_fpm);
+    assert!((4.0..=10.0).contains(&s.max_speedup_fpm), "FPM max {}", s.max_speedup_fpm);
+    assert!((1.6..=2.6).contains(&s.avg_speedup_pad), "PAD avg {}", s.avg_speedup_pad);
+    assert!((4.0..=12.0).contains(&s.max_speedup_pad), "PAD max {}", s.max_speedup_pad);
+    // PAD dominates FPM on average (it strictly extends it)
+    assert!(s.avg_speedup_pad >= s.avg_speedup_fpm);
+}
+
+#[test]
+fn mkl_speedups_in_paper_band() {
+    // paper: FPM avg 1.3x max 2.0x; PAD avg 1.4x max 5.9x
+    let c = Campaign::run(Package::Mkl, &decimated());
+    let s = c.summary();
+    assert!((1.05..=1.5).contains(&s.avg_speedup_fpm), "FPM avg {}", s.avg_speedup_fpm);
+    assert!(s.max_speedup_fpm <= 3.0, "FPM max {}", s.max_speedup_fpm);
+    assert!((1.2..=1.9).contains(&s.avg_speedup_pad), "PAD avg {}", s.avg_speedup_pad);
+    assert!((2.5..=7.0).contains(&s.max_speedup_pad), "PAD max {}", s.max_speedup_pad);
+    // the MKL signature: padding matters far more than repartitioning
+    assert!(s.max_speedup_pad > 1.5 * s.max_speedup_fpm);
+}
+
+#[test]
+fn range_structure_matches_section_v_f() {
+    for pkg in [Package::Fftw3, Package::Mkl] {
+        let c = Campaign::run(pkg, &decimated());
+        let low = CampaignSummary::for_range(&c.points, 0, 10_000);
+        let mid = CampaignSummary::for_range(&c.points, 10_000, 33_000);
+        let high = CampaignSummary::for_range(&c.points, 33_000, usize::MAX);
+        // low range: "not significant"
+        assert!(
+            (0.8..=1.3).contains(&low.avg_speedup_fpm),
+            "{}: low FPM {}",
+            pkg.name(),
+            low.avg_speedup_fpm
+        );
+        // mid range: "tremendous"
+        assert!(
+            mid.avg_speedup_fpm > low.avg_speedup_fpm,
+            "{}: mid {} vs low {}",
+            pkg.name(),
+            mid.avg_speedup_fpm,
+            low.avg_speedup_fpm
+        );
+        // high range: good but variations remain
+        assert!(
+            high.avg_speedup_fpm > 1.0,
+            "{}: high {}",
+            pkg.name(),
+            high.avg_speedup_fpm
+        );
+    }
+}
+
+#[test]
+fn optimized_beats_unoptimized_fftw2_on_average() {
+    // Figures 25/26: optimized 3.3.7 and MKL overtake unoptimized 2.1.5
+    use hclfft::simulator::vexec::{app_flops, transpose_time};
+    let f2 = PackageModel::new(Package::Fftw2);
+    for pkg in [Package::Fftw3, Package::Mkl] {
+        let c = Campaign::run(pkg, &decimated());
+        let mut sp_sum = 0.0;
+        for p in &c.points {
+            let t_f2 = app_flops(p.n) / (f2.speed(p.n) * 1e6) + 2.0 * transpose_time(p.n);
+            sp_sum += t_f2 / p.t_pad;
+        }
+        let avg = sp_sum / c.points.len() as f64;
+        // paper: 1.2x (fftw3), 1.7x (mkl)
+        assert!(avg > 1.0, "{}: avg speedup vs fftw2 {avg}", pkg.name());
+        if pkg == Package::Mkl {
+            assert!(avg > 1.3, "mkl should clearly beat fftw2: {avg}");
+        }
+    }
+}
+
+#[test]
+fn high_range_variations_remain_in_optimized_curve() {
+    // paper §V-F: "major variations still remain" for N > 33000
+    let c = Campaign::run(Package::Mkl, &decimated());
+    let high: Vec<f64> = c
+        .points
+        .iter()
+        .filter(|p| p.n > 33_000)
+        .map(|p| p.mflops(p.t_pad))
+        .collect();
+    assert!(high.len() > 10);
+    let s = summary(&high);
+    // coefficient of variation must stay substantial (not smoothed flat)
+    assert!(s.sd / s.mean > 0.10, "optimized high-range too smooth: cv {}", s.sd / s.mean);
+}
+
+#[test]
+fn campaign_is_deterministic() {
+    let a = Campaign::run(Package::Fftw3, &[12_800, 24_704]);
+    let b = Campaign::run(Package::Fftw3, &[12_800, 24_704]);
+    for (x, y) in a.points.iter().zip(&b.points) {
+        assert_eq!(x.d, y.d);
+        assert_eq!(x.pads, y.pads);
+        assert_eq!(x.t_pad.to_bits(), y.t_pad.to_bits());
+    }
+}
