@@ -1,0 +1,81 @@
+//! Serving quickstart: stand up the in-process 2D-DFT service, hit it
+//! from concurrent clients, verify a response against the serial oracle,
+//! and watch the wisdom store eliminate re-planning.
+//!
+//! ```sh
+//! cargo run --release --example serving
+//! ```
+//!
+//! Request lifecycle: submit → admit → batch → execute → respond.
+
+use hclfft::dft::fft::Direction;
+use hclfft::dft::SignalMatrix;
+use hclfft::service::wisdom::PlanningConfig;
+use hclfft::service::{Dft2dRequest, ServiceBuilder, ServiceConfig};
+
+fn main() -> Result<(), String> {
+    // 1. Configure and build the service: 2 workers, batches of up to 8,
+    //    p = 2 abstract processors planned by measurement.
+    let cfg = ServiceConfig {
+        workers: 2,
+        max_batch: 8,
+        planning: PlanningConfig {
+            groups: 2,
+            threads_per_group: 1,
+            rep_scale: 10_000, // demo-fast FPM profiling
+            ..PlanningConfig::default()
+        },
+        ..ServiceConfig::default()
+    };
+    let svc = ServiceBuilder::new(cfg).native().build();
+
+    // 2. Closed-loop clients: 4 threads × 4 requests over two sizes.
+    //    Same-size requests coalesce into shared PFFT dispatches.
+    println!("submitting 16 requests from 4 client threads...");
+    std::thread::scope(|scope| {
+        for c in 0..4u64 {
+            let svc = &svc;
+            scope.spawn(move || {
+                for i in 0..4u64 {
+                    let n = if (c + i) % 2 == 0 { 64 } else { 128 };
+                    let m = SignalMatrix::random(n, n, c * 10 + i);
+                    let resp = svc
+                        .submit(Dft2dRequest::forward("native", m))
+                        .expect("submit")
+                        .wait()
+                        .expect("response");
+                    assert_eq!(resp.report.d.iter().sum::<usize>(), n);
+                }
+            });
+        }
+    });
+
+    // 3. Verify: one more request, checked against the serial dft2d
+    //    oracle (the service path is bit-exact).
+    let orig = SignalMatrix::random(64, 64, 999);
+    let resp = svc
+        .submit(Dft2dRequest::forward("native", orig.clone()))
+        .map_err(|e| e.to_string())?
+        .wait()
+        .map_err(|e| e.to_string())?;
+    let mut want = orig;
+    hclfft::dft::dft2d::dft2d(&mut want, Direction::Forward, 1);
+    println!(
+        "oracle check: max |service - dft2d| = {:.1e} (bit-exact expected)",
+        resp.matrix.max_abs_diff(&want)
+    );
+
+    // 4. Stats: note planning_events (one per size, ever) vs wisdom hits
+    //    (every later dispatch), and the batch sizes the coalescer found.
+    let stats = svc.stats();
+    println!("{}", stats.render_table("serving example"));
+
+    // 5. Persist wisdom so the next process starts warm (serve-bench
+    //    does this automatically; see `hclfft wisdom` to inspect).
+    let path = std::path::PathBuf::from("results/example-wisdom.json");
+    svc.save_wisdom(&path)?;
+    println!("wisdom saved to {} — a restarted server skips planning", path.display());
+
+    svc.shutdown();
+    Ok(())
+}

@@ -5,8 +5,9 @@
 
 use hclfft::coordinator::engine::NativeEngine;
 use hclfft::coordinator::group::GroupConfig;
-use hclfft::coordinator::pad::{pads_for_distribution, PadCost};
-use hclfft::coordinator::pfft::{pfft_fpm, pfft_fpm_pad, pfft_lb, plan_partition};
+use hclfft::coordinator::pad::PadCost;
+use hclfft::coordinator::pfft::{pfft_fpm, pfft_fpm_pad, pfft_lb};
+use hclfft::coordinator::PlannedTransform;
 use hclfft::dft::SignalMatrix;
 use hclfft::profiler::build_plane;
 use hclfft::stats::harness::{fft2d_flops, BenchSuite};
@@ -17,8 +18,8 @@ fn main() {
         let cfg = GroupConfig::new(2, 1);
         let xs: Vec<usize> = (1..=4).map(|k| k * n / 4).collect();
         let fpms = build_plane(&NativeEngine, cfg, xs, n, 10_000);
-        let part = plan_partition(&fpms, n, 0.05).unwrap();
-        let pads = pads_for_distribution(&fpms, &part.d, n, PadCost::PaperRatio);
+        // plan once through the shared seam (what the service memoizes)
+        let plan = PlannedTransform::from_fpms(&fpms, n, 0.05, Some(PadCost::PaperRatio)).unwrap();
         let flops = fft2d_flops(n);
 
         let mut m = SignalMatrix::random(n, n, 1);
@@ -29,10 +30,10 @@ fn main() {
             pfft_lb(&NativeEngine, &mut m.clone(), cfg, 64).unwrap();
         });
         suite.bench_flops(&format!("pfft_fpm_n{n}"), flops, || {
-            pfft_fpm(&NativeEngine, &mut m.clone(), &part.d, cfg.t, 64).unwrap();
+            pfft_fpm(&NativeEngine, &mut m.clone(), &plan.d, cfg.t, 64).unwrap();
         });
         suite.bench_flops(&format!("pfft_fpm_pad_n{n}"), flops, || {
-            pfft_fpm_pad(&NativeEngine, &mut m.clone(), &part.d, &pads, cfg.t, 64).unwrap();
+            pfft_fpm_pad(&NativeEngine, &mut m.clone(), &plan.d, &plan.pads, cfg.t, 64).unwrap();
         });
         let _ = &mut m;
     }

@@ -1,0 +1,105 @@
+//! Bench: the serving layer vs the one-shot driver loop — what
+//! batching + wisdom reuse buy on repeated same-size traffic, plus the
+//! cold-vs-warm planning gap the wisdom store closes.
+
+use hclfft::coordinator::engine::NativeEngine;
+use hclfft::dft::SignalMatrix;
+use hclfft::service::wisdom::PlanningConfig;
+use hclfft::service::{Dft2dRequest, Dft2dService, ServiceBuilder, ServiceConfig};
+use hclfft::stats::harness::{fft2d_flops, BenchSuite};
+
+fn service(max_batch: usize) -> Dft2dService {
+    let cfg = ServiceConfig {
+        workers: 2,
+        max_batch,
+        planning: PlanningConfig {
+            groups: 2,
+            threads_per_group: 1,
+            rep_scale: 10_000,
+            profile_budget_s: 0.5,
+            ..PlanningConfig::default()
+        },
+        ..ServiceConfig::default()
+    };
+    ServiceBuilder::new(cfg).native().build()
+}
+
+fn drive(svc: &Dft2dService, mats: &[SignalMatrix]) {
+    let handles: Vec<_> = mats
+        .iter()
+        .map(|m| svc.submit(Dft2dRequest::forward("native", m.clone())).unwrap())
+        .collect();
+    for h in handles {
+        h.wait().unwrap();
+    }
+}
+
+fn main() {
+    let mut suite = BenchSuite::from_env("service");
+    let n = 256usize;
+    let burst = 8usize;
+    let mats: Vec<SignalMatrix> =
+        (0..burst as u64).map(|s| SignalMatrix::random(n, n, s)).collect();
+    let flops = burst as f64 * fft2d_flops(n);
+
+    // reference: one-shot planned driver, sequential requests
+    {
+        let rec = hclfft::service::wisdom::WisdomRecord::from_measurement(
+            "native",
+            &NativeEngine,
+            n,
+            &PlanningConfig {
+                groups: 2,
+                threads_per_group: 1,
+                rep_scale: 10_000,
+                profile_budget_s: 0.5,
+                ..PlanningConfig::default()
+            },
+        );
+        suite.bench_flops(&format!("single_shot_{burst}x{n}"), flops, || {
+            for m in &mats {
+                let mut work = m.clone();
+                rec.plan.execute(&NativeEngine, &mut work, rec.t, 64).unwrap();
+                std::hint::black_box(&work);
+            }
+        });
+    }
+
+    // warm service, batching enabled: the burst coalesces per dispatch
+    {
+        let svc = service(burst);
+        drive(&svc, &mats[..1]); // warm the wisdom + plan cache
+        suite.bench_flops(&format!("service_batched_{burst}x{n}"), flops, || {
+            drive(&svc, &mats);
+        });
+        svc.shutdown();
+    }
+
+    // warm service, batching disabled: per-request dispatch overhead
+    {
+        let svc = service(1);
+        drive(&svc, &mats[..1]);
+        suite.bench_flops(&format!("service_unbatched_{burst}x{n}"), flops, || {
+            drive(&svc, &mats);
+        });
+        svc.shutdown();
+    }
+
+    // cold planning cost: what the wisdom store amortizes away. One plan
+    // per iteration (fresh service), measured at a small N to keep the
+    // suite quick.
+    {
+        let n_cold = 64usize;
+        suite.bench(&format!("cold_plan_n{n_cold}"), || {
+            let svc = service(8);
+            let m = SignalMatrix::random(n_cold, n_cold, 1);
+            drive(&svc, std::slice::from_ref(&m));
+            svc.shutdown();
+        });
+    }
+
+    suite
+        .write_json(std::path::Path::new("results/bench_service.json"))
+        .ok();
+    println!("{}", suite.report());
+}

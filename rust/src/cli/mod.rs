@@ -30,8 +30,12 @@ pub fn parse(argv: &[String]) -> Result<Args, String> {
         if key.is_empty() {
             return Err("bare `--` not supported".into());
         }
-        // `--key=value` form
+        // `--key=value` form (equivalent to `--key value`; the value may
+        // itself contain `=`)
         if let Some((k, v)) = key.split_once('=') {
+            if k.is_empty() {
+                return Err(format!("empty option name in `{tok}`"));
+            }
             args.opts.insert(k.to_string(), v.to_string());
             continue;
         }
@@ -47,8 +51,15 @@ pub fn parse(argv: &[String]) -> Result<Args, String> {
 }
 
 impl Args {
+    /// Is a boolean flag set? Bare `--flag` form, plus the `=`-forms
+    /// `--flag=true|1|yes` (and `--flag=false|0|no` for an explicit
+    /// off) so the "all options accept `--key=value`" promise holds for
+    /// flags too.
     pub fn flag(&self, name: &str) -> bool {
-        self.flags.iter().any(|f| f == name)
+        if self.flags.iter().any(|f| f == name) {
+            return true;
+        }
+        matches!(self.opt(name), Some("true") | Some("1") | Some("yes"))
     }
 
     pub fn opt(&self, name: &str) -> Option<&str> {
@@ -120,7 +131,22 @@ SUBCOMMANDS:
   simulate  Run the virtual-testbed experiment campaign
             --package mkl|fftw3 [--algo fpm|fpm-pad] [--sizes <csv>]
   bench     Alias of `run` with MeanUsingTtest measurement
+  serve-bench
+            Closed-loop load generator against the in-process 2D-DFT
+            service (batching + wisdom + FPM scheduling); prints a
+            latency/throughput table and persists planning wisdom
+            --n <size[,size...]> [--requests <count>] [--clients <threads>]
+            [--engine native|sim-mkl|sim-fftw3|sim-fftw2] [--p <groups>]
+            [--t <threads>] [--workers <count>] [--batch <max>]
+            [--wisdom <file.json>] [--no-wisdom] [--pad] [--starve <s>]
+            [--budget <s>] [--seed <u64>]
+  wisdom    Inspect or prewarm the planning wisdom store
+            [--file <file.json>] [--prewarm <size[,size...]>]
+            [--engine native|sim-mkl|...] [--p <groups>] [--t <threads>]
+            [--pad] [--budget <s>]
   help      Show this text
+
+All options accept both `--key value` and `--key=value`.
 "
 }
 
@@ -147,6 +173,44 @@ mod tests {
         let a = parse(&sv(&["run", "--n=256", "--engine=native"])).unwrap();
         assert_eq!(a.opt("n"), Some("256"));
         assert_eq!(a.opt("engine"), Some("native"));
+    }
+
+    #[test]
+    fn equals_and_space_forms_are_equivalent() {
+        let a = parse(&sv(&["serve-bench", "--n=1024", "--clients", "8"])).unwrap();
+        let b = parse(&sv(&["serve-bench", "--n", "1024", "--clients=8"])).unwrap();
+        assert_eq!(a.opt("n"), b.opt("n"));
+        assert_eq!(a.opt("clients"), b.opt("clients"));
+        assert_eq!(a.opt_usize("n").unwrap(), Some(1024));
+    }
+
+    #[test]
+    fn equals_value_may_contain_equals() {
+        let a = parse(&sv(&["run", "--filter=key=value"])).unwrap();
+        assert_eq!(a.opt("filter"), Some("key=value"));
+    }
+
+    #[test]
+    fn equals_empty_value_is_kept() {
+        let a = parse(&sv(&["run", "--out="])).unwrap();
+        assert_eq!(a.opt("out"), Some(""));
+    }
+
+    #[test]
+    fn equals_empty_key_rejected() {
+        assert!(parse(&sv(&["run", "--=x"])).is_err());
+    }
+
+    #[test]
+    fn flags_accept_equals_form() {
+        let a = parse(&sv(&["run", "--verify=true", "--quick=1", "--pad=false"])).unwrap();
+        assert!(a.flag("verify"));
+        assert!(a.flag("quick"));
+        assert!(!a.flag("pad"));
+        // bare form unaffected
+        let b = parse(&sv(&["run", "--verify"])).unwrap();
+        assert!(b.flag("verify"));
+        assert!(!b.flag("pad"));
     }
 
     #[test]

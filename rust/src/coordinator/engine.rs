@@ -15,14 +15,26 @@
 use crate::dft::fft::Direction;
 
 /// Errors an engine can raise (artifact-backed engines can fail on
-/// unsupported shapes; the native engine is total).
-#[derive(Debug, thiserror::Error)]
+/// unsupported shapes; the native engine is total). Display/Error are
+/// hand-implemented — the offline vendor set has no `thiserror`.
+#[derive(Debug)]
 pub enum EngineError {
-    #[error("row length {0} not supported by engine `{1}`")]
     UnsupportedLength(usize, String),
-    #[error("runtime failure: {0}")]
     Runtime(String),
 }
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::UnsupportedLength(n, engine) => {
+                write!(f, "row length {n} not supported by engine `{engine}`")
+            }
+            EngineError::Runtime(msg) => write!(f, "runtime failure: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
 
 /// A compute engine executing batches of row 1D-FFTs in place.
 pub trait RowFftEngine: Sync {

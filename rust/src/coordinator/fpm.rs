@@ -84,7 +84,7 @@ impl Curve {
 
 /// A discrete FPM surface on an (x, y) grid. Missing points (the paper's
 /// "built until permissible problem size" memory cap) hold `None`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SpeedFunction {
     pub name: String,
     /// ascending x grid (number of rows)
@@ -192,6 +192,63 @@ impl SpeedFunction {
             }
         }
         std::fs::write(path, out)
+    }
+
+    /// Serialize to a JSON value: grids plus the dense speed array with
+    /// `null` for unmeasured points. Used by the service wisdom store to
+    /// persist measured surfaces (the paper's §V "96-hour" artifact)
+    /// alongside the plan they produced.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let speeds: Vec<Json> = self
+            .speeds
+            .iter()
+            .map(|s| match s {
+                Some(v) => Json::Num(*v),
+                None => Json::Null,
+            })
+            .collect();
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("xs", self.xs.clone())
+            .set("ys", self.ys.clone())
+            .set("speeds", Json::Arr(speeds))
+    }
+
+    /// Inverse of [`SpeedFunction::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> Result<SpeedFunction, String> {
+        use crate::util::json::Json;
+        let name = j.get("name").and_then(Json::as_str).ok_or("fpm json: missing name")?;
+        let grid = |key: &str| -> Result<Vec<usize>, String> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or(format!("fpm json: missing {key}"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or(format!("fpm json: bad {key} entry")))
+                .collect()
+        };
+        let xs = grid("xs")?;
+        let ys = grid("ys")?;
+        let raw = j.get("speeds").and_then(Json::as_arr).ok_or("fpm json: missing speeds")?;
+        if raw.len() != xs.len() * ys.len() {
+            return Err(format!(
+                "fpm json: speeds arity {} != {}x{}",
+                raw.len(),
+                xs.len(),
+                ys.len()
+            ));
+        }
+        let speeds: Vec<Option<f64>> = raw
+            .iter()
+            .map(|v| match v {
+                Json::Null => Ok(None),
+                other => other.as_f64().map(Some).ok_or("fpm json: bad speed".to_string()),
+            })
+            .collect::<Result<_, _>>()?;
+        if xs.windows(2).any(|w| w[0] >= w[1]) || ys.windows(2).any(|w| w[0] >= w[1]) {
+            return Err("fpm json: grids must be strictly ascending".to_string());
+        }
+        Ok(SpeedFunction { name: name.to_string(), xs, ys, speeds })
     }
 
     /// Parse the TSV produced by [`write_tsv`].
@@ -334,6 +391,34 @@ mod tests {
     #[should_panic(expected = "ascending")]
     fn curve_rejects_unsorted() {
         Curve::new(vec![2, 1], vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn json_roundtrip_with_gaps() {
+        let mut f = SpeedFunction::new("gappy", vec![1, 2], vec![10, 20]);
+        f.set(1, 10, 5.5);
+        f.set(2, 20, 7.25);
+        let text = f.to_json().to_string();
+        let g = SpeedFunction::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(g.name, "gappy");
+        assert_eq!(g.xs, f.xs);
+        assert_eq!(g.ys, f.ys);
+        assert_eq!(g.get(1, 10), Some(5.5));
+        assert_eq!(g.get(2, 20), Some(7.25));
+        assert_eq!(g.get(1, 20), None);
+        assert_eq!(g.get(2, 10), None);
+    }
+
+    #[test]
+    fn json_rejects_malformed() {
+        use crate::util::json::Json;
+        assert!(SpeedFunction::from_json(&Json::Null).is_err());
+        let bad = Json::obj()
+            .set("name", "x")
+            .set("xs", vec![1usize, 2])
+            .set("ys", vec![10usize])
+            .set("speeds", Json::Arr(vec![Json::Num(1.0)])); // arity 1 != 2
+        assert!(SpeedFunction::from_json(&bad).is_err());
     }
 
     #[test]

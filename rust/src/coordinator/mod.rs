@@ -14,6 +14,9 @@
 //!   (native rust FFT, PJRT artifacts, or the virtual-time simulator).
 //! * [`pfft`] — the parallel 2D-DFT drivers: `PFFT-LB`, `PFFT-FPM`,
 //!   `PFFT-FPM-PAD` (Algorithms 1-5).
+//! * [`plan`] — [`plan::PlannedTransform`]: the reusable partition+pad
+//!   planning outcome the drivers execute and the serving layer's wisdom
+//!   store memoizes.
 
 pub mod dynamic;
 pub mod energy;
@@ -24,3 +27,6 @@ pub mod pad;
 pub mod partition;
 pub mod pfft;
 pub mod pfft3d;
+pub mod plan;
+
+pub use plan::PlannedTransform;

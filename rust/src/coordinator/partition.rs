@@ -38,18 +38,54 @@ pub enum Algorithm {
     Balanced,
 }
 
-/// Errors from partitioning.
-#[derive(Debug, thiserror::Error, PartialEq)]
+impl Algorithm {
+    /// Stable lowercase name (wisdom-store serialization).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Popta => "popta",
+            Algorithm::Hpopta => "hpopta",
+            Algorithm::Balanced => "balanced",
+        }
+    }
+
+    /// Inverse of [`Algorithm::name`].
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s {
+            "popta" => Some(Algorithm::Popta),
+            "hpopta" => Some(Algorithm::Hpopta),
+            "balanced" => Some(Algorithm::Balanced),
+            _ => None,
+        }
+    }
+}
+
+/// Errors from partitioning. Display/Error are hand-implemented — the
+/// offline vendor set has no `thiserror`.
+#[derive(Debug, PartialEq)]
 pub enum PartitionError {
-    #[error("no processors given")]
     NoProcessors,
-    #[error("curve {0} is empty")]
     EmptyCurve(usize),
-    #[error("N = {n} is not reachable with the given curves (max total {max_total})")]
     Unreachable { n: usize, max_total: usize },
-    #[error("curve grids are not aligned to a common step")]
     UnalignedGrid,
 }
+
+impl std::fmt::Display for PartitionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartitionError::NoProcessors => write!(f, "no processors given"),
+            PartitionError::EmptyCurve(i) => write!(f, "curve {i} is empty"),
+            PartitionError::Unreachable { n, max_total } => write!(
+                f,
+                "N = {n} is not reachable with the given curves (max total {max_total})"
+            ),
+            PartitionError::UnalignedGrid => {
+                write!(f, "curve grids are not aligned to a common step")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PartitionError {}
 
 /// Relative execution time of x rows at curve speed s(x): `x / s(x)`.
 /// The absolute scale (2.5·N·log2 N / 1e-6) is constant across processors

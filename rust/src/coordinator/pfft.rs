@@ -19,7 +19,7 @@
 use crate::coordinator::engine::{EngineError, RowFftEngine};
 use crate::coordinator::fpm::SpeedFunction;
 use crate::coordinator::group::{row_offsets, GroupConfig};
-use crate::coordinator::pad::{pads_for_distribution, PadCost, PadDecision};
+use crate::coordinator::pad::{PadCost, PadDecision};
 use crate::coordinator::partition::{
     average_curve, balanced, curves_identical, hpopta, popta, Partition, PartitionError,
 };
@@ -101,6 +101,11 @@ pub fn pfft_fpm_pad(
 }
 
 /// Plan + execute PFFT-FPM-PAD end to end from FPM surfaces.
+///
+/// Thin wrapper over [`crate::coordinator::plan::PlannedTransform`] —
+/// callers that run the same size repeatedly (benches, the `service`
+/// layer) should build the `PlannedTransform` once and call
+/// `execute` per matrix instead.
 pub fn pfft_fpm_pad_planned(
     engine: &dyn RowFftEngine,
     m: &mut SignalMatrix,
@@ -109,10 +114,14 @@ pub fn pfft_fpm_pad_planned(
     threads_per_group: usize,
     transpose_block: usize,
 ) -> Result<PfftReport, EngineError> {
-    let part = plan_partition(fpms, m.rows, eps)
-        .map_err(|e| EngineError::Runtime(format!("partition failed: {e}")))?;
-    let pads = pads_for_distribution(fpms, &part.d, m.cols, PadCost::PaperRatio);
-    pfft_fpm_pad(engine, m, &part.d, &pads, threads_per_group, transpose_block)
+    let plan = crate::coordinator::plan::PlannedTransform::from_fpms(
+        fpms,
+        m.rows,
+        eps,
+        Some(PadCost::PaperRatio),
+    )
+    .map_err(|e| EngineError::Runtime(format!("partition failed: {e}")))?;
+    plan.execute(engine, m, threads_per_group, transpose_block)
 }
 
 /// The shared four-step skeleton (Algorithm 3 `PFFT_LIMB`).

@@ -1,0 +1,182 @@
+//! `PlannedTransform` — the reusable outcome of PFFT planning.
+//!
+//! Steps 1 (POPTA/HPOPTA partitioning) and 2 (`Determine_Pad_Length`)
+//! are the expensive, input-independent part of every PFFT-FPM /
+//! PFFT-FPM-PAD run: they depend only on (engine, N, p, ε), never on the
+//! signal itself. This module bundles their result into one value that
+//!
+//! * the drivers execute directly ([`PlannedTransform::execute`]),
+//! * the serving layer memoizes in its wisdom store
+//!   ([`crate::service::wisdom`]) and persists as JSON, and
+//! * `main.rs` / the benches build once and reuse across repetitions —
+//!   the shared seam that used to be duplicated between
+//!   `coordinator/pfft.rs` and `coordinator/pad.rs` call sites.
+
+use crate::coordinator::engine::{EngineError, RowFftEngine};
+use crate::coordinator::fpm::SpeedFunction;
+use crate::coordinator::pad::{pads_for_distribution, PadCost, PadDecision};
+use crate::coordinator::partition::{balanced, Algorithm, PartitionError};
+use crate::coordinator::pfft::{pfft_fpm, pfft_fpm_pad, plan_partition, PfftReport};
+use crate::dft::SignalMatrix;
+
+/// A fully planned N×N 2D-DFT: row distribution + per-group pad lengths.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlannedTransform {
+    /// problem size (rows == cols == n)
+    pub n: usize,
+    /// rows per abstract processor, Σ = n
+    pub d: Vec<usize>,
+    /// per-processor pad decisions (n_padded == n when unpadded)
+    pub pads: Vec<PadDecision>,
+    /// which partitioning algorithm produced `d`
+    pub algorithm: Algorithm,
+    /// predicted makespan in relative `x / s(x)` units (NaN when
+    /// unavailable, e.g. the balanced fallback)
+    pub makespan: f64,
+}
+
+impl PlannedTransform {
+    /// Plan from FPM surfaces: ε-identity test + POPTA/HPOPTA, then the
+    /// pad search when `pad_cost` is given (PFFT-FPM-PAD Step 2), or
+    /// trivial pads (exact row length) when `None`.
+    pub fn from_fpms(
+        fpms: &[SpeedFunction],
+        n: usize,
+        eps: f64,
+        pad_cost: Option<PadCost>,
+    ) -> Result<PlannedTransform, PartitionError> {
+        let part = plan_partition(fpms, n, eps)?;
+        let pads = match pad_cost {
+            Some(cost) => pads_for_distribution(fpms, &part.d, n, cost),
+            None => trivial_pads(part.d.len(), n),
+        };
+        Ok(PlannedTransform {
+            n,
+            d: part.d,
+            pads,
+            algorithm: part.algorithm,
+            makespan: part.makespan,
+        })
+    }
+
+    /// The model-free fallback: balanced rows, no padding. Used when
+    /// planning inputs are degenerate (empty curves, unreachable N).
+    pub fn balanced_fallback(p: usize, n: usize) -> PlannedTransform {
+        let part = balanced(p, n);
+        PlannedTransform {
+            n,
+            d: part.d.clone(),
+            pads: trivial_pads(part.d.len(), n),
+            algorithm: Algorithm::Balanced,
+            makespan: f64::NAN,
+        }
+    }
+
+    /// Number of abstract processors.
+    pub fn groups(&self) -> usize {
+        self.d.len()
+    }
+
+    /// Padded row length per processor (== n when unpadded).
+    pub fn pad_lens(&self) -> Vec<usize> {
+        self.pads.iter().map(|p| p.n_padded).collect()
+    }
+
+    /// Does any processor actually pad?
+    pub fn is_padded(&self) -> bool {
+        self.pads.iter().any(|p| p.n_padded > self.n)
+    }
+
+    /// Execute the planned transform on one signal matrix — dispatches to
+    /// PFFT-FPM or PFFT-FPM-PAD depending on whether padding is active.
+    pub fn execute(
+        &self,
+        engine: &dyn RowFftEngine,
+        m: &mut SignalMatrix,
+        threads_per_group: usize,
+        transpose_block: usize,
+    ) -> Result<PfftReport, EngineError> {
+        if self.is_padded() {
+            pfft_fpm_pad(engine, m, &self.d, &self.pads, threads_per_group, transpose_block)
+        } else {
+            pfft_fpm(engine, m, &self.d, threads_per_group, transpose_block)
+        }
+    }
+
+    /// Predicted execution seconds of the two row phases from the stored
+    /// relative makespan: `x/s` units × `2.5·n·log2(n) / 1e6` converts to
+    /// seconds (the constant the minimax cancelled out). Falls back to a
+    /// flat speed assumption when the makespan is unavailable.
+    pub fn predicted_seconds(&self, fallback_mflops: f64) -> f64 {
+        let n = self.n as f64;
+        if self.makespan.is_finite() && self.makespan > 0.0 {
+            2.0 * self.makespan * 2.5 * n * n.log2() / 1e6
+        } else {
+            crate::stats::harness::fft2d_flops(self.n) / (fallback_mflops.max(1.0) * 1e6)
+        }
+    }
+}
+
+fn trivial_pads(p: usize, n: usize) -> Vec<PadDecision> {
+    vec![PadDecision { n_padded: n, t_unpadded: 0.0, t_padded: 0.0 }; p]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::NativeEngine;
+    use crate::dft::naive_dft2d;
+
+    fn flat_fpm(name: &str, n: usize, speed: f64) -> SpeedFunction {
+        SpeedFunction::from_fn(
+            name,
+            (1..=8).map(|k| k * n / 8).collect(),
+            vec![n],
+            move |_, _| Some(speed),
+        )
+    }
+
+    #[test]
+    fn plan_without_pads_is_unpadded() {
+        let n = 16;
+        let fpms = vec![flat_fpm("a", n, 100.0), flat_fpm("b", n, 100.0)];
+        let plan = PlannedTransform::from_fpms(&fpms, n, 0.05, None).unwrap();
+        assert_eq!(plan.d.iter().sum::<usize>(), n);
+        assert!(!plan.is_padded());
+        assert_eq!(plan.pad_lens(), vec![n; 2]);
+    }
+
+    #[test]
+    fn execute_matches_oracle() {
+        let n = 16;
+        let fpms = vec![flat_fpm("a", n, 100.0), flat_fpm("b", n, 300.0)];
+        let plan = PlannedTransform::from_fpms(&fpms, n, 0.05, Some(PadCost::PaperRatio)).unwrap();
+        let orig = SignalMatrix::random(n, n, 7);
+        let mut m = orig.clone();
+        plan.execute(&NativeEngine, &mut m, 1, 64).unwrap();
+        let want = naive_dft2d(&orig);
+        let err = m.max_abs_diff(&want) / want.norm().max(1.0);
+        assert!(err < 1e-10, "rel err {err}");
+    }
+
+    #[test]
+    fn balanced_fallback_covers_all_rows() {
+        let plan = PlannedTransform::balanced_fallback(3, 10);
+        assert_eq!(plan.d, vec![4, 3, 3]);
+        assert_eq!(plan.algorithm, Algorithm::Balanced);
+        assert!(!plan.is_padded());
+        assert!(plan.makespan.is_nan());
+    }
+
+    #[test]
+    fn predicted_seconds_positive() {
+        let n = 1024;
+        let fpms = vec![flat_fpm("a", n, 100.0), flat_fpm("b", n, 100.0)];
+        let plan = PlannedTransform::from_fpms(&fpms, n, 0.05, None).unwrap();
+        let t = plan.predicted_seconds(500.0);
+        assert!(t > 0.0 && t.is_finite());
+        // fallback path too
+        let fb = PlannedTransform::balanced_fallback(2, n).predicted_seconds(500.0);
+        assert!(fb > 0.0 && fb.is_finite());
+    }
+}

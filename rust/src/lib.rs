@@ -21,6 +21,14 @@
 //! * [`stats`] — the paper's Student's-t measurement methodology
 //!   (`MeanUsingTtest`, Algorithm 8) plus the bench harness built on it.
 //! * [`figures`] — regenerates every figure/table of the paper's evaluation.
+//! * [`service`] — the model-driven serving layer: a concurrent 2D-DFT
+//!   server with size-bucketed batching, a persistent plan/partition
+//!   *wisdom* store (FFTW-style), FPM-informed admission and
+//!   shortest-predicted-job-first scheduling with a starvation bound,
+//!   latency/throughput stats, and a deterministic virtual-time path via
+//!   [`simulator`] for paper-scale scheduling tests. Request lifecycle:
+//!   **submit → admit → batch → execute → respond** (see the module docs
+//!   and README §Serving).
 
 pub mod cli;
 pub mod config;
@@ -29,6 +37,7 @@ pub mod dft;
 pub mod figures;
 pub mod profiler;
 pub mod runtime;
+pub mod service;
 pub mod simulator;
 pub mod stats;
 pub mod util;

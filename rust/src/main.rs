@@ -7,6 +7,9 @@
 //! * `figures`  — regenerate the paper's figures/tables
 //! * `simulate` — virtual-testbed campaign summary
 //! * `bench`    — `run` measured with the MeanUsingTtest methodology
+//! * `serve-bench` — closed-loop load generator against the in-process
+//!   2D-DFT service (batching + wisdom + FPM-informed scheduling)
+//! * `wisdom`   — inspect / prewarm the persistent planning wisdom
 
 use std::path::{Path, PathBuf};
 
@@ -14,8 +17,9 @@ use hclfft::cli;
 use hclfft::config::Config;
 use hclfft::coordinator::engine::{NativeEngine, RowFftEngine};
 use hclfft::coordinator::group::GroupConfig;
-use hclfft::coordinator::pad::{pads_for_distribution, PadCost};
-use hclfft::coordinator::pfft::{pfft_fpm, pfft_fpm_pad, pfft_lb, plan_partition};
+use hclfft::coordinator::pad::PadCost;
+use hclfft::coordinator::pfft::{pfft_fpm, pfft_fpm_pad, pfft_lb};
+use hclfft::coordinator::PlannedTransform;
 use hclfft::dft::SignalMatrix;
 use hclfft::figures::{generate, generate_all, Ctx};
 use hclfft::profiler::{build_fpms, ProfileSpec};
@@ -61,6 +65,8 @@ fn run(argv: &[String]) -> Result<(), String> {
         "profile" => cmd_profile(&args, &cfg),
         "figures" => cmd_figures(&args, &cfg),
         "simulate" => cmd_simulate(&args),
+        "serve-bench" => cmd_serve_bench(&args, &cfg),
+        "wisdom" => cmd_wisdom(&args, &cfg),
         other => Err(format!("unknown subcommand `{other}`")),
     }
 }
@@ -135,10 +141,13 @@ fn cmd_run(args: &cli::Args, cfg: &Config, bench: bool) -> Result<(), String> {
     let seed = args.opt_usize("seed")?.unwrap_or(42) as u64;
     let grp = GroupConfig::new(p, t);
 
-    // plan from measured plane (real FPM construction, scaled-down reps)
+    // plan from measured plane (real FPM construction, scaled-down
+    // reps), once, through the shared PlannedTransform seam — the same
+    // value the service's wisdom store memoizes
     let xs: Vec<usize> = (1..=8).map(|k| (k * n / 8).max(1)).collect();
     let fpms = hclfft::profiler::build_plane(engine.as_ref(), grp, xs, n, cfg.rep_scale.max(100));
-    let part = plan_partition(&fpms, n, cfg.eps).map_err(|e| e.to_string())?;
+    let plan = PlannedTransform::from_fpms(&fpms, n, cfg.eps, Some(PadCost::PaperRatio))
+        .map_err(|e| e.to_string())?;
 
     let mut exec = |label: &str| -> Result<f64, String> {
         let mut m = SignalMatrix::random(n, n, seed);
@@ -154,12 +163,11 @@ fn cmd_run(args: &cli::Args, cfg: &Config, bench: bool) -> Result<(), String> {
                     .map_err(|e| e.to_string())?;
             }
             "fpm" => {
-                pfft_fpm(engine.as_ref(), &mut m, &part.d, t, cfg.transpose_block)
+                pfft_fpm(engine.as_ref(), &mut m, &plan.d, t, cfg.transpose_block)
                     .map_err(|e| e.to_string())?;
             }
             "fpm-pad" => {
-                let pads = pads_for_distribution(&fpms, &part.d, n, PadCost::PaperRatio);
-                pfft_fpm_pad(engine.as_ref(), &mut m, &part.d, &pads, t, cfg.transpose_block)
+                pfft_fpm_pad(engine.as_ref(), &mut m, &plan.d, &plan.pads, t, cfg.transpose_block)
                     .map_err(|e| e.to_string())?;
             }
             other => return Err(format!("unknown algo `{other}`")),
@@ -189,13 +197,13 @@ fn cmd_run(args: &cli::Args, cfg: &Config, bench: bool) -> Result<(), String> {
             algo,
             secs,
             mflops,
-            part.d
+            plan.d
         );
     }
 
     if args.flag("verify") {
         let mut m = SignalMatrix::random(n, n, seed);
-        pfft_fpm(engine.as_ref(), &mut m, &part.d, t, cfg.transpose_block)
+        pfft_fpm(engine.as_ref(), &mut m, &plan.d, t, cfg.transpose_block)
             .map_err(|e| e.to_string())?;
         let mut reference = SignalMatrix::random(n, n, seed);
         hclfft::dft::dft2d::dft2d(&mut reference, hclfft::dft::fft::Direction::Forward, 1);
@@ -210,15 +218,10 @@ fn cmd_run(args: &cli::Args, cfg: &Config, bench: bool) -> Result<(), String> {
 
 fn cmd_profile(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     args.validate(&["engine", "n-list", "x-list", "p", "t", "out", "scale", "artifacts", "config", "budget"])?;
-    let parse_list = |s: &str| -> Result<Vec<usize>, String> {
-        s.split(',')
-            .map(|v| v.trim().parse().map_err(|_| format!("bad list item `{v}`")))
-            .collect()
-    };
-    let ys = parse_list(&args.opt_or("n-list", "128,256,512"))?;
+    let ys = parse_csv_usize(&args.opt_or("n-list", "128,256,512"))?;
     let max_y = *ys.iter().max().unwrap_or(&512);
     let xs = match args.opt("x-list") {
-        Some(s) => parse_list(s)?,
+        Some(s) => parse_csv_usize(s)?,
         None => (1..=4).map(|k| k * max_y / 4).collect(),
     };
     let p = args.opt_usize("p")?.unwrap_or(cfg.groups);
@@ -267,14 +270,245 @@ fn cmd_figures(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     Ok(())
 }
 
+fn parse_csv_usize(s: &str) -> Result<Vec<usize>, String> {
+    s.split(',')
+        .map(|v| v.trim().parse().map_err(|_| format!("bad list item `{v}`")))
+        .collect()
+}
+
+/// `sim-<pkg>` engine names resolve to a virtual-testbed package;
+/// anything else returns Ok(None). Bad `sim-` suffixes are errors.
+fn sim_package(engine: &str) -> Result<Option<Package>, String> {
+    match engine.strip_prefix("sim-") {
+        Some(pkg_name) => Package::parse(pkg_name)
+            .map(Some)
+            .ok_or_else(|| format!("unknown simulator package `{pkg_name}`")),
+        None => Ok(None),
+    }
+}
+
+/// The shared `--p/--t/--pad/--budget` → PlanningConfig plumbing of
+/// `serve-bench` and `wisdom`.
+fn planning_from_args(
+    args: &cli::Args,
+    cfg: &Config,
+) -> Result<hclfft::service::wisdom::PlanningConfig, String> {
+    Ok(hclfft::service::wisdom::PlanningConfig {
+        groups: args.opt_usize("p")?.unwrap_or(cfg.groups),
+        threads_per_group: args.opt_usize("t")?.unwrap_or(cfg.threads_per_group),
+        eps: cfg.eps,
+        pad_cost: args.flag("pad").then_some(PadCost::PaperRatio),
+        profile_budget_s: args.opt_f64("budget")?.unwrap_or(1.5),
+        ..hclfft::service::wisdom::PlanningConfig::default()
+    })
+}
+
+/// Build a service backend registry entry from an engine name:
+/// "native" is the real from-scratch engine, "sim-<pkg>" the
+/// deterministic virtual-time testbed.
+fn service_builder_for_engine(
+    builder: hclfft::service::ServiceBuilder,
+    engine: &str,
+) -> Result<hclfft::service::ServiceBuilder, String> {
+    if engine == "native" {
+        return Ok(builder.native());
+    }
+    if let Some(pkg) = sim_package(engine)? {
+        return Ok(builder.virtual_package(engine, pkg));
+    }
+    Err(format!("unknown service engine `{engine}` (native|sim-mkl|sim-fftw3|sim-fftw2)"))
+}
+
+fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
+    use hclfft::service::{Dft2dRequest, ServiceBuilder, ServiceConfig};
+
+    args.validate(&[
+        "n", "requests", "clients", "engine", "p", "t", "workers", "batch", "wisdom",
+        "no-wisdom", "pad", "starve", "budget", "seed", "config",
+    ])?;
+    let ns = parse_csv_usize(&args.opt_or("n", "1024"))?;
+    if ns.is_empty() {
+        return Err("--n requires at least one size".into());
+    }
+    let requests = args.opt_usize("requests")?.unwrap_or(64).max(1);
+    let clients = args.opt_usize("clients")?.unwrap_or(8).max(1);
+    let engine = args.opt_or("engine", "native");
+    let seed = args.opt_usize("seed")?.unwrap_or(42) as u64;
+    let virtual_engine = engine.starts_with("sim-");
+    if virtual_engine && (args.opt("p").is_some() || args.opt("t").is_some()) {
+        eprintln!(
+            "note: sim-* engines pin their package's paper-best (p, t); --p/--t are ignored"
+        );
+    }
+
+    let planning = planning_from_args(args, cfg)?;
+    let scfg = ServiceConfig {
+        workers: args.opt_usize("workers")?.unwrap_or(2).max(1),
+        max_batch: args.opt_usize("batch")?.unwrap_or(8).max(1),
+        starvation_bound_s: args.opt_f64("starve")?.unwrap_or(5.0),
+        transpose_block: cfg.transpose_block,
+        planning,
+    };
+
+    let wisdom_path = if args.flag("no-wisdom") {
+        None
+    } else {
+        Some(PathBuf::from(args.opt_or("wisdom", "results/wisdom.json")))
+    };
+
+    let workers = scfg.workers;
+    let max_batch = scfg.max_batch;
+    let mut builder = service_builder_for_engine(ServiceBuilder::new(scfg), &engine)?;
+    if let Some(path) = wisdom_path.as_ref().filter(|p| p.exists()) {
+        builder = builder.load_wisdom(path)?;
+    }
+    let svc = builder.build();
+    if let Some(path) = &wisdom_path {
+        println!(
+            "wisdom: {} record(s) available from {}",
+            svc.wisdom_snapshot().len(),
+            path.display()
+        );
+    }
+
+    println!(
+        "serve-bench: engine {engine} | sizes {ns:?} | {requests} requests | {clients} clients | \
+         {workers} workers | max batch {max_batch}"
+    );
+    let t0 = std::time::Instant::now();
+    let failures: std::sync::Mutex<Vec<String>> = std::sync::Mutex::new(Vec::new());
+    let engine_name: &str = &engine;
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let svc = &svc;
+            let ns = &ns;
+            let failures = &failures;
+            let engine_name = engine_name;
+            scope.spawn(move || {
+                // closed loop: each client owns its share of the request
+                // budget and waits for every response before the next send
+                let mine = requests / clients + usize::from(c < requests % clients);
+                for i in 0..mine {
+                    let n = ns[(c + i) % ns.len()];
+                    let req = if virtual_engine {
+                        Dft2dRequest::probe(engine_name, n)
+                    } else {
+                        // hash (seed, client, i): collision-free regardless
+                        // of how many requests each client issues
+                        let mseed =
+                            hclfft::util::prng::hash_key(&[seed, c as u64, i as u64]);
+                        Dft2dRequest::forward(
+                            engine_name,
+                            hclfft::dft::SignalMatrix::random(n, n, mseed),
+                        )
+                    };
+                    let outcome = svc.submit(req).and_then(|h| h.wait());
+                    if let Err(e) = outcome {
+                        failures.lock().unwrap().push(e.to_string());
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    svc.shutdown();
+
+    let stats = svc.stats();
+    println!("{}", stats.render_table(&format!("serve-bench {engine} (wall {wall:.3}s)")));
+    println!(
+        "planning: {} cold event(s), {} warm wisdom hit(s)",
+        stats.planning_events, stats.wisdom_hits
+    );
+    let failures = failures.into_inner().unwrap();
+    for f in &failures {
+        eprintln!("request failed: {f}");
+    }
+    if let Some(path) = &wisdom_path {
+        svc.save_wisdom(path)?;
+        println!(
+            "wisdom: saved {} record(s) to {} (rerun to serve fully warm)",
+            svc.wisdom_snapshot().len(),
+            path.display()
+        );
+    }
+    if !failures.is_empty() {
+        return Err(format!("{} of {requests} request(s) failed", failures.len()));
+    }
+    Ok(())
+}
+
+fn cmd_wisdom(args: &cli::Args, cfg: &Config) -> Result<(), String> {
+    use hclfft::service::wisdom::{WisdomRecord, WisdomStore};
+
+    args.validate(&["file", "prewarm", "engine", "p", "t", "pad", "budget", "config"])?;
+    let path = PathBuf::from(args.opt_or("file", "results/wisdom.json"));
+    let mut store = if path.exists() {
+        WisdomStore::load(&path)?
+    } else {
+        WisdomStore::new()
+    };
+
+    if let Some(list) = args.opt("prewarm") {
+        let sizes = parse_csv_usize(list)?;
+        let engine = args.opt_or("engine", "native");
+        let planning = planning_from_args(args, cfg)?;
+        if engine.starts_with("sim-") && (args.opt("p").is_some() || args.opt("t").is_some()) {
+            eprintln!(
+                "note: sim-* engines pin their package's paper-best (p, t); --p/--t are ignored"
+            );
+        }
+        for &n in &sizes {
+            let rec = if let Some(pkg) = sim_package(&engine)? {
+                WisdomRecord::from_simulator(&engine, pkg, n, planning.pad_cost.is_some())
+            } else if engine == "native" {
+                WisdomRecord::from_measurement(
+                    &engine,
+                    &hclfft::coordinator::engine::NativeEngine,
+                    n,
+                    &planning,
+                )
+            } else {
+                return Err(format!("unknown engine `{engine}` for prewarm"));
+            };
+            println!(
+                "prewarmed {engine} N={n}: d = {:?}, algo {}, predicted {:.6}s",
+                rec.plan.d,
+                rec.plan.algorithm.name(),
+                rec.predicted_cost_s
+            );
+            store.insert(rec);
+        }
+        store.save(&path)?;
+        println!("wisdom: saved {} record(s) to {}", store.len(), path.display());
+    }
+
+    let mut table = hclfft::util::table::Table::new(
+        &format!("wisdom store {}", path.display()),
+        &["engine", "n", "p", "t", "algo", "padded", "predicted_s"],
+    );
+    for rec in store.iter() {
+        table.row(vec![
+            rec.engine.clone(),
+            rec.n.to_string(),
+            rec.p.to_string(),
+            rec.t.to_string(),
+            rec.plan.algorithm.name().to_string(),
+            if rec.plan.is_padded() { "yes".into() } else { "no".into() },
+            format!("{:.6}", rec.predicted_cost_s),
+        ]);
+    }
+    println!("{}", table.render());
+    if store.is_empty() {
+        println!("(empty — run `hclfft serve-bench` or `hclfft wisdom --prewarm <sizes>`)");
+    }
+    Ok(())
+}
+
 fn cmd_simulate(args: &cli::Args) -> Result<(), String> {
     args.validate(&["package", "sizes", "config", "quick"])?;
     let pkg = Package::parse(&args.opt_or("package", "mkl")).ok_or("bad --package")?;
     let sizes: Vec<usize> = match args.opt("sizes") {
-        Some(s) => s
-            .split(',')
-            .map(|v| v.trim().parse().map_err(|_| format!("bad size `{v}`")))
-            .collect::<Result<_, _>>()?,
+        Some(s) => parse_csv_usize(s)?,
         None => {
             let all = hclfft::simulator::campaign_sizes();
             if args.flag("quick") {

@@ -6,166 +6,269 @@
 //! and executes it from the L3 hot path. Python never runs at request
 //! time.
 //!
-//! ## Threading model
+//! ## Feature gating
+//!
+//! The actual XLA execution lives behind the `pjrt` cargo feature
+//! because the `xla` bindings crate is not in the offline vendor set.
+//! Without the feature, an API-identical stub still parses manifests and
+//! reports shape support, but every execution returns a clear
+//! `EngineError::Runtime` — callers (CLI, figures, tests) detect this
+//! via [`pjrt_available`] and skip with a printed notice.
+//!
+//! ## Threading model (feature `pjrt`)
 //!
 //! The `xla` crate's `PjRtClient` holds a non-atomic `Rc`, and executing
 //! clones it into output buffers — so **all** PJRT object creation, use
-//! and destruction is serialized behind one mutex ([`PjrtCore`]). On this
+//! and destruction is serialized behind one mutex (`PjrtCore`). On this
 //! single-core testbed serialization costs nothing; on a multi-core box
 //! the PJRT CPU client parallelizes internally anyway. Only plain
 //! `Vec<f32>` data crosses the lock boundary.
 
 pub mod manifest;
 
-use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Mutex;
 
 use crate::coordinator::engine::{EngineError, RowFftEngine};
 use crate::dft::fft::Direction;
 pub use manifest::{Kind, Manifest};
 
-/// The serialized PJRT state: client + compiled-executable cache.
-struct PjrtCore {
-    client: xla::PjRtClient,
-    cache: HashMap<(Kind, usize, usize), xla::PjRtLoadedExecutable>,
-    manifest: Manifest,
+/// True when this build can actually execute PJRT artifacts.
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
 }
 
-// SAFETY: `PjrtCore` is only ever accessed through `PjrtRuntime.inner`
-// (a Mutex). PJRT objects are created, executed and dropped strictly
-// under that lock, so the non-atomic Rc refcounts inside the xla crate
-// wrappers are never touched concurrently; the TFRT CPU client itself is
-// thread-safe. The wrapper types are merely moved across threads, which
-// the underlying C++ objects permit.
-unsafe impl Send for PjrtCore {}
+#[cfg(feature = "pjrt")]
+mod xla_backend {
+    use std::collections::HashMap;
+    use std::sync::Mutex;
 
-/// The runtime handle (cheap to share by reference across threads).
-pub struct PjrtRuntime {
-    inner: Mutex<PjrtCore>,
+    use super::manifest::{self, Kind, Manifest};
+    use super::{Direction, EngineError, Path};
+
+    /// The serialized PJRT state: client + compiled-executable cache.
+    struct PjrtCore {
+        client: xla::PjRtClient,
+        cache: HashMap<(Kind, usize, usize), xla::PjRtLoadedExecutable>,
+        manifest: Manifest,
+    }
+
+    // SAFETY: `PjrtCore` is only ever accessed through `PjrtRuntime.inner`
+    // (a Mutex). PJRT objects are created, executed and dropped strictly
+    // under that lock, so the non-atomic Rc refcounts inside the xla crate
+    // wrappers are never touched concurrently; the TFRT CPU client itself
+    // is thread-safe. The wrapper types are merely moved across threads,
+    // which the underlying C++ objects permit.
+    unsafe impl Send for PjrtCore {}
+
+    /// The runtime handle (cheap to share by reference across threads).
+    pub struct PjrtRuntime {
+        inner: Mutex<PjrtCore>,
+    }
+
+    impl PjrtRuntime {
+        /// Create a CPU-PJRT runtime over an artifacts directory.
+        pub fn load(artifacts_dir: &Path) -> Result<PjrtRuntime, EngineError> {
+            let manifest = Manifest::load(artifacts_dir).map_err(EngineError::Runtime)?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| EngineError::Runtime(format!("PJRT client: {e}")))?;
+            Ok(PjrtRuntime {
+                inner: Mutex::new(PjrtCore { client, cache: HashMap::new(), manifest }),
+            })
+        }
+
+        /// Row lengths executable by this runtime (the artifact grid).
+        pub fn supported_lengths(&self) -> Vec<usize> {
+            self.inner.lock().unwrap().manifest.lengths(Kind::RowFft)
+        }
+
+        /// Number of compiled executables currently cached (perf counter).
+        pub fn cached_executables(&self) -> usize {
+            self.inner.lock().unwrap().cache.len()
+        }
+
+        /// Execute `rows` row-FFTs of length `n` over f32 planes, tiling
+        /// the batch greedily onto the artifact chunk grid.
+        pub fn row_ffts_f32(
+            &self,
+            re: &mut [f32],
+            im: &mut [f32],
+            rows: usize,
+            n: usize,
+            dir: Direction,
+        ) -> Result<(), EngineError> {
+            let kind = match dir {
+                Direction::Forward => Kind::RowFft,
+                Direction::Inverse => Kind::RowIfft,
+            };
+            let mut core = self.inner.lock().unwrap();
+            let chunks = core.manifest.chunks_for(kind, n);
+            if chunks.is_empty() {
+                return Err(EngineError::UnsupportedLength(n, "pjrt".to_string()));
+            }
+            let plan = manifest::tile_rows(rows, &chunks).map_err(EngineError::Runtime)?;
+            let mut row = 0usize;
+            for chunk in plan {
+                let span = row * n..(row + chunk) * n;
+                core.execute_chunk(kind, chunk, n, &mut re[span.clone()], &mut im[span])?;
+                row += chunk;
+            }
+            Ok(())
+        }
+
+        /// Execute the whole-2D-DFT artifact (`full2d_<n>`), if present.
+        pub fn full2d_f32(
+            &self,
+            re: &mut [f32],
+            im: &mut [f32],
+            n: usize,
+        ) -> Result<(), EngineError> {
+            let mut core = self.inner.lock().unwrap();
+            if core.manifest.find(Kind::Full2d, n, n).is_none() {
+                return Err(EngineError::UnsupportedLength(n, "pjrt-full2d".to_string()));
+            }
+            core.execute_chunk(Kind::Full2d, n, n, re, im)
+        }
+    }
+
+    impl PjrtCore {
+        fn executable(
+            &mut self,
+            kind: Kind,
+            rows: usize,
+            n: usize,
+        ) -> Result<&xla::PjRtLoadedExecutable, EngineError> {
+            if !self.cache.contains_key(&(kind, rows, n)) {
+                let entry = self
+                    .manifest
+                    .find(kind, rows, n)
+                    .ok_or_else(|| EngineError::UnsupportedLength(n, format!("pjrt {rows}x{n}")))?;
+                let proto = xla::HloModuleProto::from_text_file(
+                    entry.path.to_str().ok_or_else(|| EngineError::Runtime("bad path".into()))?,
+                )
+                .map_err(|e| {
+                    EngineError::Runtime(format!("HLO parse {}: {e}", entry.path.display()))
+                })?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| EngineError::Runtime(format!("compile {rows}x{n}: {e}")))?;
+                self.cache.insert((kind, rows, n), exe);
+            }
+            Ok(&self.cache[&(kind, rows, n)])
+        }
+
+        /// Run one (rows, n) executable over the given planes, in place.
+        ///
+        /// Perf (EXPERIMENTS.md §Perf): inputs go through
+        /// `buffer_from_host_buffer` (one host->device transfer; the naive
+        /// `Literal::vec1(..).reshape(..)` path copies twice before the
+        /// transfer), and outputs come back via `Literal::copy_raw_to`
+        /// straight into the caller's slices (the `to_vec` path allocates
+        /// and copies an extra time per plane).
+        fn execute_chunk(
+            &mut self,
+            kind: Kind,
+            rows: usize,
+            n: usize,
+            re: &mut [f32],
+            im: &mut [f32],
+        ) -> Result<(), EngineError> {
+            debug_assert_eq!(re.len(), rows * n);
+            let rt = |e: xla::Error| EngineError::Runtime(e.to_string());
+            self.executable(kind, rows, n)?; // ensure compiled (fills cache)
+            let exe = &self.cache[&(kind, rows, n)];
+            let dims = [rows, n];
+            let b_re = self.client.buffer_from_host_buffer(re, &dims, None).map_err(rt)?;
+            let b_im = self.client.buffer_from_host_buffer(im, &dims, None).map_err(rt)?;
+            let result = exe.execute_b(&[&b_re, &b_im]).map_err(rt)?;
+            let out = result[0][0].to_literal_sync().map_err(rt)?;
+            // lowered with return_tuple=True: (re, im)
+            let (out_re, out_im) = out.to_tuple2().map_err(rt)?;
+            out_re.copy_raw_to(re).map_err(rt)?;
+            out_im.copy_raw_to(im).map_err(rt)?;
+            Ok(())
+        }
+    }
 }
 
-impl PjrtRuntime {
-    /// Create a CPU-PJRT runtime over an artifacts directory.
-    pub fn load(artifacts_dir: &Path) -> Result<PjrtRuntime, EngineError> {
-        let manifest = Manifest::load(artifacts_dir).map_err(EngineError::Runtime)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| EngineError::Runtime(format!("PJRT client: {e}")))?;
-        Ok(PjrtRuntime { inner: Mutex::new(PjrtCore { client, cache: HashMap::new(), manifest }) })
+#[cfg(not(feature = "pjrt"))]
+mod stub_backend {
+    use std::sync::Mutex;
+
+    use super::manifest::{Kind, Manifest};
+    use super::{Direction, EngineError, Path};
+
+    /// API-identical stand-in for the XLA-backed runtime: manifest
+    /// handling (and therefore shape validation and every manifest error
+    /// path) is real, execution reports that the build lacks the `pjrt`
+    /// feature.
+    pub struct PjrtRuntime {
+        inner: Mutex<Manifest>,
     }
 
-    /// Row lengths executable by this runtime (the artifact grid).
-    pub fn supported_lengths(&self) -> Vec<usize> {
-        self.inner.lock().unwrap().manifest.lengths(Kind::RowFft)
+    fn not_compiled() -> EngineError {
+        EngineError::Runtime(
+            "hclfft was built without the `pjrt` feature; \
+             rebuild with `--features pjrt` (requires the `xla` crate) to execute artifacts"
+                .to_string(),
+        )
     }
 
-    /// Number of compiled executables currently cached (perf counter).
-    pub fn cached_executables(&self) -> usize {
-        self.inner.lock().unwrap().cache.len()
-    }
-
-    /// Execute `rows` row-FFTs of length `n` over f32 planes, tiling the
-    /// batch greedily onto the artifact chunk grid.
-    pub fn row_ffts_f32(
-        &self,
-        re: &mut [f32],
-        im: &mut [f32],
-        rows: usize,
-        n: usize,
-        dir: Direction,
-    ) -> Result<(), EngineError> {
-        let kind = match dir {
-            Direction::Forward => Kind::RowFft,
-            Direction::Inverse => Kind::RowIfft,
-        };
-        let mut core = self.inner.lock().unwrap();
-        let chunks = core.manifest.chunks_for(kind, n);
-        if chunks.is_empty() {
-            return Err(EngineError::UnsupportedLength(n, "pjrt".to_string()));
+    impl PjrtRuntime {
+        /// Load `<dir>/manifest.tsv`; execution is unavailable in this
+        /// build, so only manifest-level errors surface here.
+        pub fn load(artifacts_dir: &Path) -> Result<PjrtRuntime, EngineError> {
+            let manifest = Manifest::load(artifacts_dir).map_err(EngineError::Runtime)?;
+            Ok(PjrtRuntime { inner: Mutex::new(manifest) })
         }
-        let plan = manifest::tile_rows(rows, &chunks).map_err(EngineError::Runtime)?;
-        let mut row = 0usize;
-        for chunk in plan {
-            let span = row * n..(row + chunk) * n;
-            core.execute_chunk(kind, chunk, n, &mut re[span.clone()], &mut im[span])?;
-            row += chunk;
-        }
-        Ok(())
-    }
 
-    /// Execute the whole-2D-DFT artifact (`full2d_<n>`), if present.
-    pub fn full2d_f32(
-        &self,
-        re: &mut [f32],
-        im: &mut [f32],
-        n: usize,
-    ) -> Result<(), EngineError> {
-        let mut core = self.inner.lock().unwrap();
-        if core.manifest.find(Kind::Full2d, n, n).is_none() {
-            return Err(EngineError::UnsupportedLength(n, "pjrt-full2d".to_string()));
+        /// Row lengths the manifest declares (the artifact grid).
+        pub fn supported_lengths(&self) -> Vec<usize> {
+            self.inner.lock().unwrap().lengths(Kind::RowFft)
         }
-        core.execute_chunk(Kind::Full2d, n, n, re, im)
+
+        /// Always 0 — nothing can compile without the feature.
+        pub fn cached_executables(&self) -> usize {
+            0
+        }
+
+        pub fn row_ffts_f32(
+            &self,
+            _re: &mut [f32],
+            _im: &mut [f32],
+            _rows: usize,
+            n: usize,
+            dir: Direction,
+        ) -> Result<(), EngineError> {
+            let kind = match dir {
+                Direction::Forward => Kind::RowFft,
+                Direction::Inverse => Kind::RowIfft,
+            };
+            if self.inner.lock().unwrap().chunks_for(kind, n).is_empty() {
+                return Err(EngineError::UnsupportedLength(n, "pjrt".to_string()));
+            }
+            Err(not_compiled())
+        }
+
+        pub fn full2d_f32(
+            &self,
+            _re: &mut [f32],
+            _im: &mut [f32],
+            n: usize,
+        ) -> Result<(), EngineError> {
+            if self.inner.lock().unwrap().find(Kind::Full2d, n, n).is_none() {
+                return Err(EngineError::UnsupportedLength(n, "pjrt-full2d".to_string()));
+            }
+            Err(not_compiled())
+        }
     }
 }
 
-impl PjrtCore {
-    fn executable(
-        &mut self,
-        kind: Kind,
-        rows: usize,
-        n: usize,
-    ) -> Result<&xla::PjRtLoadedExecutable, EngineError> {
-        if !self.cache.contains_key(&(kind, rows, n)) {
-            let entry = self
-                .manifest
-                .find(kind, rows, n)
-                .ok_or_else(|| EngineError::UnsupportedLength(n, format!("pjrt {rows}x{n}")))?;
-            let proto = xla::HloModuleProto::from_text_file(
-                entry.path.to_str().ok_or_else(|| EngineError::Runtime("bad path".into()))?,
-            )
-            .map_err(|e| EngineError::Runtime(format!("HLO parse {}: {e}", entry.path.display())))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| EngineError::Runtime(format!("compile {rows}x{n}: {e}")))?;
-            self.cache.insert((kind, rows, n), exe);
-        }
-        Ok(&self.cache[&(kind, rows, n)])
-    }
-
-    /// Run one (rows, n) executable over the given planes, in place.
-    ///
-    /// Perf (EXPERIMENTS.md §Perf): inputs go through
-    /// `buffer_from_host_buffer` (one host->device transfer; the naive
-    /// `Literal::vec1(..).reshape(..)` path copies twice before the
-    /// transfer), and outputs come back via `Literal::copy_raw_to`
-    /// straight into the caller's slices (the `to_vec` path allocates and
-    /// copies an extra time per plane).
-    fn execute_chunk(
-        &mut self,
-        kind: Kind,
-        rows: usize,
-        n: usize,
-        re: &mut [f32],
-        im: &mut [f32],
-    ) -> Result<(), EngineError> {
-        debug_assert_eq!(re.len(), rows * n);
-        let rt = |e: xla::Error| EngineError::Runtime(e.to_string());
-        self.executable(kind, rows, n)?; // ensure compiled (fills cache)
-        let exe = &self.cache[&(kind, rows, n)];
-        let dims = [rows, n];
-        let b_re = self.client.buffer_from_host_buffer(re, &dims, None).map_err(rt)?;
-        let b_im = self.client.buffer_from_host_buffer(im, &dims, None).map_err(rt)?;
-        let result = exe.execute_b(&[&b_re, &b_im]).map_err(rt)?;
-        let out = result[0][0].to_literal_sync().map_err(rt)?;
-        // lowered with return_tuple=True: (re, im)
-        let (out_re, out_im) = out.to_tuple2().map_err(rt)?;
-        out_re.copy_raw_to(re).map_err(rt)?;
-        out_im.copy_raw_to(im).map_err(rt)?;
-        Ok(())
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use xla_backend::PjrtRuntime;
+#[cfg(not(feature = "pjrt"))]
+pub use stub_backend::PjrtRuntime;
 
 /// `RowFftEngine` over the PJRT runtime: f64 planes are converted to f32
 /// at the boundary (the artifacts are f32 — the TPU-friendly dtype).

@@ -1,0 +1,243 @@
+//! Coalesced execution of a planned transform over a batch of matrices.
+//!
+//! B same-size requests share the four-step skeleton: each abstract
+//! processor runs **one** row-FFT call per phase covering its row range
+//! of *all* B matrices (B·d_i rows instead of d_i), so engine batches
+//! stay large — the whole point of size-bucketed batching. Transposes
+//! remain per-matrix (they are matrix-local permutations).
+//!
+//! Bit-exactness: every row is transformed by the same per-row kernel
+//! with the same plan regardless of how rows are chunked across threads
+//! or batches (see `native_engine_thread_count_invariant`), and the
+//! gather/scatter copies are value-preserving — so a batched execution
+//! produces byte-identical planes to B single-shot
+//! [`PlannedTransform::execute`] runs. `service_integration.rs` asserts
+//! this against both the single-shot driver and the `dft2d` oracle.
+
+use crate::coordinator::engine::{EngineError, RowFftEngine};
+use crate::coordinator::group::row_offsets;
+use crate::coordinator::plan::PlannedTransform;
+use crate::dft::fft::Direction;
+use crate::dft::transpose::transpose_in_place_parallel;
+use crate::dft::SignalMatrix;
+
+/// Execute `plan` over every matrix in `mats` (all must be n×n).
+pub fn execute_planned_batch(
+    engine: &dyn RowFftEngine,
+    plan: &PlannedTransform,
+    mats: &mut [&mut SignalMatrix],
+    threads_per_group: usize,
+    transpose_block: usize,
+) -> Result<(), EngineError> {
+    let n = plan.n;
+    for m in mats.iter() {
+        assert_eq!((m.rows, m.cols), (n, n), "batch matrix shape mismatch");
+    }
+    assert_eq!(plan.d.iter().sum::<usize>(), n, "plan distribution must cover all rows");
+    if mats.is_empty() {
+        return Ok(());
+    }
+    let total_threads = plan.groups() * threads_per_group;
+    for _phase in 0..2 {
+        row_phase_batch(engine, plan, mats, threads_per_group)?;
+        for m in mats.iter_mut() {
+            transpose_in_place_parallel(m, transpose_block, total_threads);
+        }
+    }
+    Ok(())
+}
+
+/// One row phase across the whole batch: group i gets the i-th row
+/// slice of every matrix and runs them as a single engine call.
+fn row_phase_batch(
+    engine: &dyn RowFftEngine,
+    plan: &PlannedTransform,
+    mats: &mut [&mut SignalMatrix],
+    threads_per_group: usize,
+) -> Result<(), EngineError> {
+    let n = plan.n;
+    let d = &plan.d;
+    let pad_lens = plan.pad_lens();
+    let offsets = row_offsets(d);
+    let p = d.len();
+
+    // carve each matrix's planes into per-group row slices, regrouped
+    // per group so one thread owns group i's slice of every matrix
+    let mut per_group: Vec<Vec<(&mut [f64], &mut [f64])>> =
+        (0..p).map(|_| Vec::with_capacity(mats.len())).collect();
+    for m in mats.iter_mut() {
+        let mm: &mut SignalMatrix = &mut **m;
+        let mut re_rest: &mut [f64] = &mut mm.re;
+        let mut im_rest: &mut [f64] = &mut mm.im;
+        for (i, group) in per_group.iter_mut().enumerate() {
+            let len = (offsets[i + 1] - offsets[i]) * n;
+            let (re_here, re_next) = re_rest.split_at_mut(len);
+            let (im_here, im_next) = im_rest.split_at_mut(len);
+            re_rest = re_next;
+            im_rest = im_next;
+            group.push((re_here, im_here));
+        }
+    }
+
+    let errors: std::sync::Mutex<Vec<EngineError>> = std::sync::Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for (i, slices) in per_group.into_iter().enumerate() {
+            let rows = d[i];
+            if rows == 0 {
+                continue;
+            }
+            let pad = pad_lens[i];
+            let errors = &errors;
+            scope.spawn(move || {
+                if let Err(e) = group_ffts(engine, slices, rows, n, pad, threads_per_group) {
+                    errors.lock().unwrap().push(e);
+                }
+            });
+        }
+    });
+    match errors.into_inner().unwrap().into_iter().next() {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Group i's work for one phase: B row slices of `rows` rows each. The
+/// single-matrix unpadded case runs in place; otherwise the slices are
+/// gathered into one (B·rows × pad) work matrix (Algorithm 7's local
+/// padded buffer, batch-widened), transformed in one engine call, and
+/// scattered back.
+fn group_ffts(
+    engine: &dyn RowFftEngine,
+    mut slices: Vec<(&mut [f64], &mut [f64])>,
+    rows: usize,
+    n: usize,
+    pad: usize,
+    threads: usize,
+) -> Result<(), EngineError> {
+    debug_assert!(pad >= n);
+    if slices.len() == 1 && pad == n {
+        let (re, im) = &mut slices[0];
+        return engine.fft_rows(re, im, rows, n, Direction::Forward, threads);
+    }
+    let b = slices.len();
+    let mut wre = vec![0.0f64; b * rows * pad];
+    let mut wim = vec![0.0f64; b * rows * pad];
+    for (j, (re, im)) in slices.iter().enumerate() {
+        for r in 0..rows {
+            let dst = (j * rows + r) * pad;
+            wre[dst..dst + n].copy_from_slice(&re[r * n..(r + 1) * n]);
+            wim[dst..dst + n].copy_from_slice(&im[r * n..(r + 1) * n]);
+        }
+    }
+    engine.fft_rows(&mut wre, &mut wim, b * rows, pad, Direction::Forward, threads)?;
+    for (j, (re, im)) in slices.iter_mut().enumerate() {
+        for r in 0..rows {
+            let src = (j * rows + r) * pad;
+            re[r * n..(r + 1) * n].copy_from_slice(&wre[src..src + n]);
+            im[r * n..(r + 1) * n].copy_from_slice(&wim[src..src + n]);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::NativeEngine;
+    use crate::coordinator::fpm::SpeedFunction;
+    use crate::coordinator::pad::PadCost;
+
+    fn plan_for(n: usize, speeds: &[f64], pad: bool) -> PlannedTransform {
+        let fpms: Vec<SpeedFunction> = speeds
+            .iter()
+            .enumerate()
+            .map(|(g, &s)| {
+                SpeedFunction::from_fn(
+                    &format!("g{g}"),
+                    (1..=8).map(|k| k * n / 8).collect(),
+                    vec![n, n + 8],
+                    move |_, y| Some(if y > n { s * 2.0 } else { s }),
+                )
+            })
+            .collect();
+        PlannedTransform::from_fpms(&fpms, n, 0.05, pad.then_some(PadCost::PaperRatio)).unwrap()
+    }
+
+    #[test]
+    fn batch_of_one_matches_single_shot_bitwise() {
+        let n = 32;
+        let plan = plan_for(n, &[100.0, 100.0], false);
+        let orig = SignalMatrix::random(n, n, 1);
+        let mut single = orig.clone();
+        plan.execute(&NativeEngine, &mut single, 2, 64).unwrap();
+        let mut batched = orig.clone();
+        execute_planned_batch(&NativeEngine, &plan, &mut [&mut batched], 2, 64).unwrap();
+        assert_eq!(batched.max_abs_diff(&single), 0.0, "batch-of-one must be bit-exact");
+    }
+
+    #[test]
+    fn batch_of_many_matches_single_shot_bitwise() {
+        let n = 16;
+        let plan = plan_for(n, &[100.0, 300.0], false);
+        let origs: Vec<SignalMatrix> = (0..4).map(|s| SignalMatrix::random(n, n, s)).collect();
+        let mut singles = origs.clone();
+        for m in singles.iter_mut() {
+            plan.execute(&NativeEngine, m, 1, 64).unwrap();
+        }
+        let mut batched = origs.clone();
+        {
+            let mut refs: Vec<&mut SignalMatrix> = batched.iter_mut().collect();
+            execute_planned_batch(&NativeEngine, &plan, &mut refs, 1, 64).unwrap();
+        }
+        for (b, s) in batched.iter().zip(&singles) {
+            assert_eq!(b.max_abs_diff(s), 0.0);
+        }
+    }
+
+    #[test]
+    fn padded_batch_matches_single_shot_bitwise() {
+        let n = 16;
+        let plan = plan_for(n, &[100.0, 100.0], true);
+        assert!(plan.is_padded(), "test setup must choose a pad");
+        let origs: Vec<SignalMatrix> = (10..13).map(|s| SignalMatrix::random(n, n, s)).collect();
+        let mut singles = origs.clone();
+        for m in singles.iter_mut() {
+            plan.execute(&NativeEngine, m, 1, 64).unwrap();
+        }
+        let mut batched = origs.clone();
+        {
+            let mut refs: Vec<&mut SignalMatrix> = batched.iter_mut().collect();
+            execute_planned_batch(&NativeEngine, &plan, &mut refs, 1, 64).unwrap();
+        }
+        for (b, s) in batched.iter().zip(&singles) {
+            assert_eq!(b.max_abs_diff(s), 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_row_groups_skipped() {
+        let n = 8;
+        let plan = PlannedTransform {
+            n,
+            d: vec![0, 8, 0],
+            pads: vec![
+                crate::coordinator::pad::PadDecision { n_padded: n, t_unpadded: 0.0, t_padded: 0.0 };
+                3
+            ],
+            algorithm: crate::coordinator::partition::Algorithm::Balanced,
+            makespan: f64::NAN,
+        };
+        let orig = SignalMatrix::random(n, n, 2);
+        let mut got = orig.clone();
+        execute_planned_batch(&NativeEngine, &plan, &mut [&mut got], 1, 64).unwrap();
+        let want = crate::dft::naive_dft2d(&orig);
+        let err = got.max_abs_diff(&want) / want.norm().max(1.0);
+        assert!(err < 1e-10, "rel err {err}");
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let plan = plan_for(16, &[100.0, 100.0], false);
+        execute_planned_batch(&NativeEngine, &plan, &mut [], 1, 64).unwrap();
+    }
+}

@@ -1,0 +1,760 @@
+//! Model-driven 2D-DFT serving subsystem.
+//!
+//! Turns the one-shot PFFT drivers into a concurrent server for heavy
+//! traffic. Request lifecycle (see README §Serving):
+//!
+//! 1. **submit** — callers hand an owned [`crate::dft::SignalMatrix`]
+//!    wrapped in a [`Dft2dRequest`] to [`Dft2dService::submit`] and get a
+//!    [`ResponseHandle`] back.
+//! 2. **admit** — the FPM-informed admission check rejects requests whose
+//!    predicted cost (from the wisdom store's speed-function-derived
+//!    estimate) already exceeds their `deadline_hint`.
+//! 3. **batch** — admitted requests coalesce per `(engine, n, direction)`
+//!    in a [`sched::BatchQueue`]; dispatch is shortest-predicted-job-first
+//!    with a starvation bound.
+//! 4. **execute** — a fixed worker pool pops batches; planning artifacts
+//!    (POPTA/HPOPTA partition, pad lengths, plan-cache warmup) come from
+//!    the [`wisdom`] store — computed once per `(engine, n, p)`, reused
+//!    forever, persisted as JSON. Forward transforms run the coalesced
+//!    [`batch::execute_planned_batch`]; inverse transforms take the exact
+//!    `dft2d` path (padding is forward-only spectral interpolation).
+//! 5. **respond** — each request's channel receives the transformed
+//!    matrix plus a per-request [`ResponseReport`]; [`stats`] aggregates
+//!    throughput, p50/p95/p99 latency, queue depth and the
+//!    planning-event counters.
+//!
+//! A **virtual-time path** backs the whole pipeline with the calibrated
+//! [`crate::simulator`] instead of a real engine: requests are priced by
+//! `simulate_size` and advance a deterministic virtual clock, so
+//! scheduling behaviour is testable at paper-scale sizes (N = 24704) in
+//! milliseconds.
+
+pub mod batch;
+pub mod sched;
+pub mod stats;
+pub mod wisdom;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::engine::RowFftEngine;
+use crate::coordinator::plan::PlannedTransform;
+use crate::dft::fft::Direction;
+use crate::dft::SignalMatrix;
+use crate::simulator::Package;
+use crate::stats::harness::fft2d_flops;
+
+use sched::{BatchKey, BatchQueue};
+use stats::{ServiceStats, StatsCollector};
+use wisdom::{PlanningConfig, WisdomRecord, WisdomStore, DEFAULT_MFLOPS};
+
+/// Errors surfaced to callers.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServiceError {
+    UnknownEngine(String),
+    BadShape { rows: usize, cols: usize },
+    DeadlineInfeasible { predicted_s: f64, hint_s: f64 },
+    Engine(String),
+    ShuttingDown,
+    Disconnected,
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::UnknownEngine(e) => write!(f, "unknown engine `{e}`"),
+            ServiceError::BadShape { rows, cols } => {
+                write!(f, "signal matrix must be square, got {rows}x{cols}")
+            }
+            ServiceError::DeadlineInfeasible { predicted_s, hint_s } => write!(
+                f,
+                "admission rejected: predicted cost {predicted_s:.6}s exceeds deadline hint {hint_s:.6}s"
+            ),
+            ServiceError::Engine(msg) => write!(f, "engine failure: {msg}"),
+            ServiceError::ShuttingDown => write!(f, "service is shutting down"),
+            ServiceError::Disconnected => write!(f, "service dropped the request channel"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// One 2D-DFT request over an owned signal matrix.
+#[derive(Debug)]
+pub struct Dft2dRequest {
+    /// problem size (must equal `matrix.rows` unless this is a
+    /// virtual-time probe carrying an empty matrix)
+    pub n: usize,
+    pub matrix: SignalMatrix,
+    pub direction: Direction,
+    /// engine key in the service registry ("native", "sim-mkl", ...)
+    pub engine: String,
+    /// optional latency budget in seconds — the admission policy rejects
+    /// the request up front when the FPM-predicted cost already exceeds it
+    pub deadline_hint: Option<f64>,
+}
+
+impl Dft2dRequest {
+    /// Forward transform on the given engine.
+    pub fn forward(engine: &str, matrix: SignalMatrix) -> Dft2dRequest {
+        Dft2dRequest {
+            n: matrix.rows,
+            matrix,
+            direction: Direction::Forward,
+            engine: engine.to_string(),
+            deadline_hint: None,
+        }
+    }
+
+    /// Inverse transform on the given engine.
+    pub fn inverse(engine: &str, matrix: SignalMatrix) -> Dft2dRequest {
+        Dft2dRequest {
+            n: matrix.rows,
+            matrix,
+            direction: Direction::Inverse,
+            engine: engine.to_string(),
+            deadline_hint: None,
+        }
+    }
+
+    /// A virtual-time probe: no signal buffers, just a size — only valid
+    /// against virtual backends, where nothing is transformed anyway.
+    /// This is how scheduling is exercised at paper-scale N (a real
+    /// 24704² complex-double matrix would be ~10 GiB).
+    pub fn probe(engine: &str, n: usize) -> Dft2dRequest {
+        Dft2dRequest {
+            n,
+            matrix: SignalMatrix::zeros(0, 0),
+            direction: Direction::Forward,
+            engine: engine.to_string(),
+            deadline_hint: None,
+        }
+    }
+
+    pub fn with_deadline(mut self, seconds: f64) -> Dft2dRequest {
+        self.deadline_hint = Some(seconds);
+        self
+    }
+}
+
+/// Per-request execution report.
+#[derive(Clone, Debug)]
+pub struct ResponseReport {
+    /// rows per abstract processor used
+    pub d: Vec<usize>,
+    /// padded row length per processor
+    pub pads: Vec<usize>,
+    pub algorithm: String,
+    /// how many requests shared the dispatch (>= 1)
+    pub batched_with: usize,
+    /// did this dispatch pay a cold planning event?
+    pub planned_cold: bool,
+    pub queue_wait_s: f64,
+    pub latency_s: f64,
+    /// virtual completion timestamp (virtual backends only)
+    pub virtual_done_s: Option<f64>,
+}
+
+/// The transformed matrix plus its report.
+#[derive(Debug)]
+pub struct Dft2dResponse {
+    pub id: u64,
+    pub matrix: SignalMatrix,
+    pub report: ResponseReport,
+}
+
+/// Blocking handle for one submitted request.
+#[derive(Debug)]
+pub struct ResponseHandle {
+    pub id: u64,
+    rx: mpsc::Receiver<Result<Dft2dResponse, ServiceError>>,
+}
+
+impl ResponseHandle {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<Dft2dResponse, ServiceError> {
+        self.rx.recv().unwrap_or(Err(ServiceError::Disconnected))
+    }
+}
+
+/// Service tunables.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// fixed worker-pool size
+    pub workers: usize,
+    /// max requests coalesced into one dispatch
+    pub max_batch: usize,
+    /// seconds after which a waiting bucket preempts cheaper work
+    pub starvation_bound_s: f64,
+    /// transpose block size for the execution phases
+    pub transpose_block: usize,
+    /// planning knobs (p, t, ε, pad policy, profiling budget)
+    pub planning: PlanningConfig,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 2,
+            max_batch: 8,
+            starvation_bound_s: 5.0,
+            transpose_block: 64,
+            planning: PlanningConfig::default(),
+        }
+    }
+}
+
+/// An execution backend: a real row-FFT engine, or the calibrated
+/// virtual testbed (deterministic virtual time, no data transformed).
+#[derive(Clone)]
+enum Backend {
+    Real(Arc<dyn RowFftEngine + Send + Sync>),
+    Virtual(Package),
+}
+
+struct Pending {
+    id: u64,
+    matrix: SignalMatrix,
+    tx: mpsc::Sender<Result<Dft2dResponse, ServiceError>>,
+    submitted: Instant,
+}
+
+struct Inner {
+    cfg: ServiceConfig,
+    engines: BTreeMap<String, Backend>,
+    queue: Mutex<BatchQueue<Pending>>,
+    cv: Condvar,
+    wisdom: Mutex<WisdomStore>,
+    /// keys currently being cold-planned — lets planning run *outside*
+    /// the wisdom lock (submit() stays fast, unrelated keys plan
+    /// concurrently) while still guaranteeing one planning event per key
+    planning_inflight: Mutex<std::collections::BTreeSet<wisdom::WisdomKey>>,
+    planning_cv: Condvar,
+    stats: StatsCollector,
+    /// virtual seconds consumed by virtual backends
+    vclock: Mutex<f64>,
+    next_id: std::sync::atomic::AtomicU64,
+    shutdown: AtomicBool,
+    started: Instant,
+}
+
+/// The concurrent 2D-DFT server.
+pub struct Dft2dService {
+    inner: Arc<Inner>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+/// Builder: engine registry + wisdom seeding + paused start for
+/// deterministic tests.
+pub struct ServiceBuilder {
+    cfg: ServiceConfig,
+    engines: BTreeMap<String, Backend>,
+    wisdom: WisdomStore,
+    paused: bool,
+}
+
+impl ServiceBuilder {
+    pub fn new(cfg: ServiceConfig) -> ServiceBuilder {
+        ServiceBuilder { cfg, engines: BTreeMap::new(), wisdom: WisdomStore::new(), paused: false }
+    }
+
+    /// Register the from-scratch native engine under "native".
+    pub fn native(self) -> ServiceBuilder {
+        self.engine("native", Arc::new(crate::coordinator::engine::NativeEngine))
+    }
+
+    /// Register any real engine.
+    pub fn engine(mut self, name: &str, engine: Arc<dyn RowFftEngine + Send + Sync>) -> ServiceBuilder {
+        self.engines.insert(name.to_string(), Backend::Real(engine));
+        self
+    }
+
+    /// Register a virtual-time backend over a calibrated package model.
+    pub fn virtual_package(mut self, name: &str, package: Package) -> ServiceBuilder {
+        self.engines.insert(name.to_string(), Backend::Virtual(package));
+        self
+    }
+
+    /// Seed the wisdom store (e.g. loaded from disk).
+    pub fn wisdom(mut self, store: WisdomStore) -> ServiceBuilder {
+        self.wisdom = store;
+        self
+    }
+
+    /// Load wisdom from a JSON file if it exists; missing files are a
+    /// cold start, not an error.
+    pub fn load_wisdom(mut self, path: &std::path::Path) -> Result<ServiceBuilder, String> {
+        if path.exists() {
+            self.wisdom = WisdomStore::load(path)?;
+        }
+        Ok(self)
+    }
+
+    /// Do not spawn workers yet — submissions queue up until
+    /// [`Dft2dService::start`] (deterministic scheduling tests).
+    pub fn paused(mut self) -> ServiceBuilder {
+        self.paused = true;
+        self
+    }
+
+    pub fn build(self) -> Dft2dService {
+        for rec in self.wisdom.iter() {
+            // virtual backends never execute a real FFT — warming the
+            // native plan cache for their (paper-scale) sizes would cost
+            // real memory and startup time for nothing
+            if matches!(self.engines.get(&rec.engine), Some(Backend::Real(_))) {
+                rec.warm_plan_cache();
+            }
+        }
+        let inner = Arc::new(Inner {
+            cfg: self.cfg,
+            engines: self.engines,
+            queue: Mutex::new(BatchQueue::new()),
+            cv: Condvar::new(),
+            wisdom: Mutex::new(self.wisdom),
+            planning_inflight: Mutex::new(std::collections::BTreeSet::new()),
+            planning_cv: Condvar::new(),
+            stats: StatsCollector::new(),
+            vclock: Mutex::new(0.0),
+            next_id: std::sync::atomic::AtomicU64::new(1),
+            shutdown: AtomicBool::new(false),
+            started: Instant::now(),
+        });
+        let svc = Dft2dService { inner, workers: Mutex::new(Vec::new()) };
+        if !self.paused {
+            svc.start();
+        }
+        svc
+    }
+}
+
+impl Dft2dService {
+    /// Spawn the worker pool (idempotent).
+    pub fn start(&self) {
+        let mut workers = self.workers.lock().unwrap();
+        if !workers.is_empty() {
+            return;
+        }
+        for _ in 0..self.inner.cfg.workers.max(1) {
+            let inner = Arc::clone(&self.inner);
+            workers.push(std::thread::spawn(move || worker_loop(inner)));
+        }
+    }
+
+    /// Submit a request: validation + FPM-informed admission, then the
+    /// batching queue. Returns immediately with a blocking handle.
+    pub fn submit(&self, req: Dft2dRequest) -> Result<ResponseHandle, ServiceError> {
+        if self.inner.shutdown.load(Ordering::Acquire) {
+            return Err(ServiceError::ShuttingDown);
+        }
+        let Some(backend) = self.inner.engines.get(&req.engine) else {
+            return Err(ServiceError::UnknownEngine(req.engine));
+        };
+        let is_probe = req.matrix.rows == 0 && req.matrix.cols == 0;
+        let shape_ok = if is_probe {
+            // empty-buffer probes only make sense in virtual time
+            req.n > 0 && matches!(backend, Backend::Virtual(_))
+        } else {
+            req.matrix.rows == req.matrix.cols && req.matrix.rows == req.n && req.n > 0
+        };
+        if !shape_ok {
+            return Err(ServiceError::BadShape { rows: req.matrix.rows, cols: req.matrix.cols });
+        }
+        let n = req.n;
+        let cost = self.inner.predicted_cost(&req.engine, n);
+        if let Some(hint) = req.deadline_hint {
+            if cost > hint {
+                self.inner.stats.record_rejection();
+                return Err(ServiceError::DeadlineInfeasible { predicted_s: cost, hint_s: hint });
+            }
+        }
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let pending = Pending { id, matrix: req.matrix, tx, submitted: Instant::now() };
+        let key = BatchKey::new(&req.engine, n, req.direction);
+        {
+            let mut q = self.inner.queue.lock().unwrap();
+            // re-check under the queue lock: shutdown() flushes the queue
+            // under this same lock, so a push after its flush would hang
+            // the caller's wait() forever
+            if self.inner.shutdown.load(Ordering::Acquire) {
+                return Err(ServiceError::ShuttingDown);
+            }
+            q.push(key, cost, pending, self.inner.now_s());
+            self.inner.stats.observe_queue_depth(q.len());
+        }
+        self.inner.cv.notify_one();
+        Ok(ResponseHandle { id, rx })
+    }
+
+    /// Counter snapshot over the service's lifetime so far.
+    pub fn stats(&self) -> ServiceStats {
+        self.inner.stats.snapshot(self.inner.now_s())
+    }
+
+    /// Clone of the current wisdom store.
+    pub fn wisdom_snapshot(&self) -> WisdomStore {
+        self.inner.wisdom.lock().unwrap().clone()
+    }
+
+    /// Persist the current wisdom store.
+    pub fn save_wisdom(&self, path: &std::path::Path) -> Result<(), String> {
+        self.inner.wisdom.lock().unwrap().save(path)
+    }
+
+    /// The memoized plan for `(engine, n)` under the service's group
+    /// count, if planning has happened.
+    pub fn planned(&self, engine: &str, n: usize) -> Option<PlannedTransform> {
+        let p = self.inner.plan_groups(engine);
+        self.inner.wisdom.lock().unwrap().get(engine, n, p).map(|r| r.plan.clone())
+    }
+
+    /// Current virtual clock (virtual backends only; 0 otherwise).
+    pub fn virtual_now_s(&self) -> f64 {
+        *self.inner.vclock.lock().unwrap()
+    }
+
+    /// Graceful stop: reject new submissions, let the workers drain and
+    /// answer everything already queued, then join the pool. Requests
+    /// that no worker will ever pick up (a paused service that was never
+    /// started) receive [`ServiceError::ShuttingDown`] instead.
+    pub fn shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        {
+            // notify under the queue lock: a worker between a failed pop
+            // and cv.wait holds the lock, so this cannot race past it
+            let _q = self.inner.queue.lock().unwrap();
+            self.inner.cv.notify_all();
+        }
+        let mut workers = self.workers.lock().unwrap();
+        for w in workers.drain(..) {
+            let _ = w.join();
+        }
+        // flush anything the workers didn't pick up
+        let mut q = self.inner.queue.lock().unwrap();
+        while let Some(b) = q.pop(self.inner.now_s(), 0.0, usize::MAX) {
+            for (p, _) in b.entries {
+                let _ = p.tx.send(Err(ServiceError::ShuttingDown));
+            }
+        }
+    }
+}
+
+impl Drop for Dft2dService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl Inner {
+    fn now_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// The group count planning uses for an engine (virtual backends pin
+    /// the paper-best p of their package).
+    fn plan_groups(&self, engine: &str) -> usize {
+        match self.engines.get(engine) {
+            Some(Backend::Virtual(pkg)) => pkg.best_groups().p,
+            _ => self.cfg.planning.groups,
+        }
+    }
+
+    /// FPM-informed cost estimate for one request (wisdom if available,
+    /// conservative flat-speed fallback otherwise).
+    fn predicted_cost(&self, engine: &str, n: usize) -> f64 {
+        let p = self.plan_groups(engine);
+        if let Some(rec) = self.wisdom.lock().unwrap().get(engine, n, p) {
+            return rec.predicted_cost_s;
+        }
+        fft2d_flops(n) / (DEFAULT_MFLOPS * 1e6)
+    }
+
+    /// Wisdom lookup-or-plan. Returns the record plus whether this call
+    /// paid the cold planning cost.
+    ///
+    /// The expensive measurement runs *outside* the wisdom lock (so
+    /// `submit()`'s cost lookups never stall behind a 1.5s FPM build and
+    /// unrelated keys plan concurrently); a per-key in-flight set keeps
+    /// the cold-plan counter exact — one planning event per key, ever.
+    fn plan_for(&self, key: &BatchKey) -> (WisdomRecord, bool) {
+        let backend = self.engines.get(&key.engine).expect("validated at submit");
+        let p = self.plan_groups(&key.engine);
+        let wkey: wisdom::WisdomKey = (key.engine.clone(), key.n, p);
+
+        // claim the key, or wait for whoever holds it (lock order:
+        // planning_inflight, then wisdom — never the reverse)
+        {
+            let mut inflight = self.planning_inflight.lock().unwrap();
+            loop {
+                if let Some(rec) = self.wisdom.lock().unwrap().get(&key.engine, key.n, p) {
+                    self.stats.record_wisdom_hit();
+                    return (rec.clone(), false);
+                }
+                if !inflight.contains(&wkey) {
+                    inflight.insert(wkey.clone());
+                    break;
+                }
+                inflight = self.planning_cv.wait(inflight).unwrap();
+            }
+        }
+
+        // we own the cold plan for this key; no locks held while measuring
+        self.stats.record_planning_event();
+        let rec = match backend {
+            Backend::Real(engine) => {
+                let rec = WisdomRecord::from_measurement(
+                    &key.engine,
+                    engine.as_ref(),
+                    key.n,
+                    &self.cfg.planning,
+                );
+                rec.warm_plan_cache();
+                rec
+            }
+            // virtual records never execute real FFTs — no cache warmup
+            Backend::Virtual(pkg) => WisdomRecord::from_simulator(
+                &key.engine,
+                *pkg,
+                key.n,
+                self.cfg.planning.pad_cost.is_some(),
+            ),
+        };
+        self.wisdom.lock().unwrap().insert(rec.clone());
+        let mut inflight = self.planning_inflight.lock().unwrap();
+        inflight.remove(&wkey);
+        self.planning_cv.notify_all();
+        (rec, true)
+    }
+
+    fn execute_batch(&self, batch: sched::Batch<Pending>) {
+        let key = batch.key;
+        let (rec, planned_cold) = self.plan_for(&key);
+        let size = batch.entries.len();
+        self.stats.record_batch(size);
+
+        let mut items: Vec<Pending> = Vec::with_capacity(size);
+        let mut waits: Vec<f64> = Vec::with_capacity(size);
+        let enqueue_now = self.now_s();
+        for (p, enq_s) in batch.entries {
+            waits.push((enqueue_now - enq_s).max(0.0));
+            items.push(p);
+        }
+
+        let backend = self.engines.get(&key.engine).expect("validated at submit").clone();
+        let mut virtual_done: Option<f64> = None;
+        let exec_result: Result<(), ServiceError> = match &backend {
+            Backend::Real(engine) => {
+                if key.forward {
+                    let mut mats: Vec<&mut SignalMatrix> =
+                        items.iter_mut().map(|p| &mut p.matrix).collect();
+                    batch::execute_planned_batch(
+                        engine.as_ref(),
+                        &rec.plan,
+                        &mut mats,
+                        rec.t,
+                        self.cfg.transpose_block,
+                    )
+                    .map_err(|e| ServiceError::Engine(e.to_string()))
+                } else {
+                    // inverse: exact dft2d path (padding is forward-only
+                    // spectral interpolation — see coordinator::pad docs)
+                    let threads = rec.p * rec.t;
+                    for p in items.iter_mut() {
+                        crate::dft::dft2d::dft2d(&mut p.matrix, Direction::Inverse, threads);
+                    }
+                    Ok(())
+                }
+            }
+            Backend::Virtual(_) => {
+                // virtual time: the batch costs one planned execution of
+                // `size` stacked requests; matrices pass through untouched
+                let mut clock = self.vclock.lock().unwrap();
+                *clock += rec.predicted_cost_s * size as f64;
+                virtual_done = Some(*clock);
+                Ok(())
+            }
+        };
+
+        let flops = fft2d_flops(key.n);
+        for (p, wait) in items.into_iter().zip(waits) {
+            match &exec_result {
+                Ok(()) => {
+                    let latency = p.submitted.elapsed().as_secs_f64();
+                    self.stats.record_completion(latency, wait, flops);
+                    let resp = Dft2dResponse {
+                        id: p.id,
+                        matrix: p.matrix,
+                        report: ResponseReport {
+                            d: rec.plan.d.clone(),
+                            pads: rec.plan.pad_lens(),
+                            algorithm: rec.plan.algorithm.name().to_string(),
+                            batched_with: size,
+                            planned_cold,
+                            queue_wait_s: wait,
+                            latency_s: latency,
+                            virtual_done_s: virtual_done,
+                        },
+                    };
+                    let _ = p.tx.send(Ok(resp));
+                }
+                Err(e) => {
+                    self.stats.record_failure();
+                    let _ = p.tx.send(Err(e.clone()));
+                }
+            }
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    loop {
+        let batch = {
+            let mut q = inner.queue.lock().unwrap();
+            loop {
+                if let Some(b) = q.pop(
+                    inner.now_s(),
+                    inner.cfg.starvation_bound_s,
+                    inner.cfg.max_batch,
+                ) {
+                    break Some(b);
+                }
+                if inner.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = inner.cv.wait(q).unwrap();
+            }
+        };
+        match batch {
+            Some(b) => inner.execute_batch(b),
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> ServiceConfig {
+        ServiceConfig {
+            workers: 2,
+            max_batch: 4,
+            planning: PlanningConfig {
+                groups: 2,
+                threads_per_group: 1,
+                rep_scale: 10_000,
+                ..PlanningConfig::default()
+            },
+            ..ServiceConfig::default()
+        }
+    }
+
+    #[test]
+    fn submit_validates_inputs() {
+        let svc = ServiceBuilder::new(quick_cfg()).native().build();
+        let bad = Dft2dRequest::forward("native", SignalMatrix::random(4, 6, 1));
+        assert!(matches!(svc.submit(bad), Err(ServiceError::BadShape { .. })));
+        let nope = Dft2dRequest::forward("cufft", SignalMatrix::random(4, 4, 1));
+        assert!(matches!(svc.submit(nope), Err(ServiceError::UnknownEngine(_))));
+        svc.shutdown();
+        let late = Dft2dRequest::forward("native", SignalMatrix::random(4, 4, 1));
+        assert_eq!(svc.submit(late).unwrap_err(), ServiceError::ShuttingDown);
+    }
+
+    #[test]
+    fn forward_then_inverse_roundtrips() {
+        let svc = ServiceBuilder::new(quick_cfg()).native().build();
+        let orig = SignalMatrix::random(16, 16, 9);
+        let fwd = svc
+            .submit(Dft2dRequest::forward("native", orig.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        let back = svc
+            .submit(Dft2dRequest::inverse("native", fwd.matrix))
+            .unwrap()
+            .wait()
+            .unwrap();
+        let err = back.matrix.max_abs_diff(&orig) / orig.norm().max(1.0);
+        assert!(err < 1e-10, "roundtrip rel err {err}");
+        assert_eq!(fwd.report.d.iter().sum::<usize>(), 16);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn virtual_backend_prices_without_touching_data() {
+        let svc = ServiceBuilder::new(quick_cfg())
+            .virtual_package("sim-mkl", Package::Mkl)
+            .build();
+        let orig = SignalMatrix::random(8, 8, 3);
+        let resp = svc
+            .submit(Dft2dRequest::forward("sim-mkl", orig.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(resp.matrix, orig, "virtual path must not transform data");
+        assert!(resp.report.virtual_done_s.unwrap() > 0.0);
+        assert!(svc.virtual_now_s() > 0.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn deadline_admission_uses_wisdom() {
+        let mut store = WisdomStore::new();
+        store.insert(WisdomRecord::from_simulator("sim-mkl", Package::Mkl, 24_704, false));
+        let svc = ServiceBuilder::new(quick_cfg())
+            .virtual_package("sim-mkl", Package::Mkl)
+            .wisdom(store)
+            .paused()
+            .build();
+        let predicted = svc.inner.predicted_cost("sim-mkl", 24_704);
+        assert!(predicted > 0.0, "wisdom-backed prediction must exist");
+        // a deadline below the FPM-predicted cost is rejected at submit
+        let req = Dft2dRequest::probe("sim-mkl", 24_704).with_deadline(predicted / 2.0);
+        let err = svc.submit(req).unwrap_err();
+        assert!(matches!(err, ServiceError::DeadlineInfeasible { .. }), "{err}");
+        assert_eq!(svc.stats().rejected, 1);
+        // a feasible deadline is admitted
+        let ok = Dft2dRequest::probe("sim-mkl", 24_704).with_deadline(predicted * 2.0);
+        let h = svc.submit(ok).unwrap();
+        svc.start();
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.report.batched_with, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn probe_requires_virtual_backend() {
+        let svc = ServiceBuilder::new(quick_cfg()).native().build();
+        let err = svc.submit(Dft2dRequest::probe("native", 1024)).unwrap_err();
+        assert!(matches!(err, ServiceError::BadShape { .. }));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn stats_count_batches_and_planning() {
+        let svc = ServiceBuilder::new(quick_cfg()).native().paused().build();
+        let handles: Vec<ResponseHandle> = (0..4)
+            .map(|s| {
+                svc.submit(Dft2dRequest::forward("native", SignalMatrix::random(16, 16, s)))
+                    .unwrap()
+            })
+            .collect();
+        svc.start();
+        for h in handles {
+            let resp = h.wait().unwrap();
+            assert_eq!(resp.report.batched_with, 4, "paused submits must coalesce");
+        }
+        let s = svc.stats();
+        assert_eq!(s.completed, 4);
+        assert_eq!(s.planning_events, 1, "one cold plan for the shared key");
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.max_batch, 4);
+        assert!(s.peak_queue_depth >= 4);
+        svc.shutdown();
+    }
+}

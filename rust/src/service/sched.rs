@@ -1,0 +1,240 @@
+//! FPM-informed batch scheduling.
+//!
+//! Requests for the same `(engine, n, direction)` coalesce into one
+//! bucket; buckets are dispatched **shortest-predicted-job-first**, where
+//! the prediction comes from the wisdom store's `SpeedFunction`-derived
+//! cost (see [`crate::service::wisdom`]), with a **starvation bound**: a
+//! bucket whose oldest request has waited longer than the bound is
+//! served FIFO ahead of any cheaper bucket, so large transforms cannot
+//! be postponed forever by a stream of small ones.
+//!
+//! The queue is deliberately pure over an abstract clock (`now_s`): the
+//! service feeds it wall-clock seconds, unit tests and the virtual-time
+//! path feed deterministic timestamps — scheduling behaviour is testable
+//! at paper-scale sizes without executing a single FFT.
+
+use crate::dft::fft::Direction;
+
+/// What coalesces: same engine, same size, same direction.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct BatchKey {
+    pub engine: String,
+    pub n: usize,
+    pub forward: bool,
+}
+
+impl BatchKey {
+    pub fn new(engine: &str, n: usize, dir: Direction) -> BatchKey {
+        BatchKey { engine: engine.to_string(), n, forward: dir == Direction::Forward }
+    }
+
+    pub fn direction(&self) -> Direction {
+        if self.forward {
+            Direction::Forward
+        } else {
+            Direction::Inverse
+        }
+    }
+}
+
+struct Bucket<T> {
+    key: BatchKey,
+    /// predicted per-request seconds (the SPJF weight)
+    cost_s: f64,
+    /// FIFO within the bucket
+    entries: Vec<(T, f64)>,
+    /// enqueue time of the oldest entry
+    oldest_s: f64,
+    /// tie-break: arrival order of the bucket itself
+    seq: u64,
+}
+
+/// A popped batch ready for execution.
+pub struct Batch<T> {
+    pub key: BatchKey,
+    /// payloads with their enqueue timestamps, FIFO order
+    pub entries: Vec<(T, f64)>,
+    pub cost_s: f64,
+}
+
+/// The size-bucketed priority queue.
+pub struct BatchQueue<T> {
+    buckets: Vec<Bucket<T>>,
+    next_seq: u64,
+    len: usize,
+}
+
+impl<T> Default for BatchQueue<T> {
+    fn default() -> Self {
+        BatchQueue { buckets: Vec::new(), next_seq: 0, len: 0 }
+    }
+}
+
+impl<T> BatchQueue<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Queued request count (all buckets).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Enqueue one request with its predicted per-request cost.
+    pub fn push(&mut self, key: BatchKey, cost_s: f64, payload: T, now_s: f64) {
+        self.len += 1;
+        if let Some(b) = self.buckets.iter_mut().find(|b| b.key == key) {
+            // keep the freshest cost estimate (wisdom may have landed
+            // between submissions)
+            b.cost_s = cost_s;
+            b.entries.push((payload, now_s));
+            return;
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.buckets.push(Bucket {
+            key,
+            cost_s,
+            entries: vec![(payload, now_s)],
+            oldest_s: now_s,
+            seq,
+        });
+    }
+
+    /// Dispatch decision: any bucket older than `starvation_bound_s`
+    /// goes first (oldest bucket wins among the starved); otherwise the
+    /// cheapest predicted bucket wins (ties: older bucket). Up to
+    /// `max_batch` entries leave FIFO; a partially drained bucket keeps
+    /// its place with an updated oldest timestamp.
+    pub fn pop(&mut self, now_s: f64, starvation_bound_s: f64, max_batch: usize) -> Option<Batch<T>> {
+        if self.buckets.is_empty() {
+            return None;
+        }
+        let starved: Vec<usize> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| now_s - b.oldest_s >= starvation_bound_s)
+            .map(|(i, _)| i)
+            .collect();
+        let idx = if !starved.is_empty() {
+            starved
+                .into_iter()
+                .min_by(|&a, &b| {
+                    let (ba, bb) = (&self.buckets[a], &self.buckets[b]);
+                    ba.oldest_s
+                        .partial_cmp(&bb.oldest_s)
+                        .unwrap()
+                        .then(ba.seq.cmp(&bb.seq))
+                })
+                .unwrap()
+        } else {
+            (0..self.buckets.len())
+                .min_by(|&a, &b| {
+                    let (ba, bb) = (&self.buckets[a], &self.buckets[b]);
+                    ba.cost_s.partial_cmp(&bb.cost_s).unwrap().then(ba.seq.cmp(&bb.seq))
+                })
+                .unwrap()
+        };
+        let take = self.buckets[idx].entries.len().min(max_batch.max(1));
+        let b = &mut self.buckets[idx];
+        let entries: Vec<(T, f64)> = b.entries.drain(..take).collect();
+        self.len -= entries.len();
+        let batch = Batch { key: b.key.clone(), entries, cost_s: b.cost_s };
+        if self.buckets[idx].entries.is_empty() {
+            self.buckets.swap_remove(idx);
+        } else {
+            self.buckets[idx].oldest_s = self.buckets[idx].entries[0].1;
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(n: usize) -> BatchKey {
+        BatchKey::new("native", n, Direction::Forward)
+    }
+
+    #[test]
+    fn coalesces_same_key() {
+        let mut q: BatchQueue<u32> = BatchQueue::new();
+        q.push(key(64), 0.1, 1, 0.0);
+        q.push(key(64), 0.1, 2, 0.1);
+        q.push(key(128), 0.2, 3, 0.2);
+        assert_eq!(q.len(), 3);
+        let b = q.pop(0.3, f64::INFINITY, 8).unwrap();
+        assert_eq!(b.key, key(64));
+        assert_eq!(b.entries.iter().map(|e| e.0).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn spjf_orders_by_predicted_cost() {
+        let mut q: BatchQueue<&str> = BatchQueue::new();
+        q.push(key(24_704), 10.0, "big", 0.0);
+        q.push(key(8_064), 1.0, "small", 0.1);
+        q.push(key(16_064), 5.0, "mid", 0.2);
+        let order: Vec<&str> = std::iter::from_fn(|| {
+            q.pop(0.3, f64::INFINITY, 8).map(|b| b.entries[0].0)
+        })
+        .collect();
+        assert_eq!(order, vec!["small", "mid", "big"]);
+    }
+
+    #[test]
+    fn starvation_bound_restores_fifo() {
+        let mut q: BatchQueue<&str> = BatchQueue::new();
+        q.push(key(24_704), 10.0, "big", 0.0);
+        q.push(key(8_064), 1.0, "small", 0.1);
+        // bound 0: everything counts as starved => FIFO
+        let b = q.pop(0.2, 0.0, 8).unwrap();
+        assert_eq!(b.entries[0].0, "big");
+    }
+
+    #[test]
+    fn starved_bucket_preempts_cheaper_work() {
+        let mut q: BatchQueue<&str> = BatchQueue::new();
+        q.push(key(24_704), 10.0, "big", 0.0);
+        q.push(key(8_064), 1.0, "small", 5.0);
+        // at t=6 the big bucket has waited 6s >= bound 3s => it goes
+        // first despite the cheaper small bucket
+        let b = q.pop(6.0, 3.0, 8).unwrap();
+        assert_eq!(b.entries[0].0, "big");
+        // the small bucket (waited 1s) follows
+        let b2 = q.pop(6.0, 3.0, 8).unwrap();
+        assert_eq!(b2.entries[0].0, "small");
+    }
+
+    #[test]
+    fn max_batch_splits_bucket_fifo() {
+        let mut q: BatchQueue<u32> = BatchQueue::new();
+        for i in 0..5 {
+            q.push(key(64), 0.1, i, i as f64);
+        }
+        let b = q.pop(10.0, f64::INFINITY, 3).unwrap();
+        assert_eq!(b.entries.iter().map(|e| e.0).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(q.len(), 2);
+        let b2 = q.pop(10.0, f64::INFINITY, 3).unwrap();
+        assert_eq!(b2.entries.iter().map(|e| e.0).collect::<Vec<_>>(), vec![3, 4]);
+        assert!(q.pop(10.0, f64::INFINITY, 3).is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn direction_separates_buckets() {
+        let mut q: BatchQueue<u32> = BatchQueue::new();
+        q.push(BatchKey::new("native", 64, Direction::Forward), 0.1, 1, 0.0);
+        q.push(BatchKey::new("native", 64, Direction::Inverse), 0.1, 2, 0.0);
+        let b = q.pop(0.0, f64::INFINITY, 8).unwrap();
+        assert_eq!(b.entries.len(), 1);
+        assert_eq!(b.key.direction(), Direction::Forward);
+        assert_eq!(q.pop(0.0, f64::INFINITY, 8).unwrap().key.direction(), Direction::Inverse);
+    }
+}

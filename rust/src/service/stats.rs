@@ -1,0 +1,225 @@
+//! Service statistics — throughput, latency percentiles, queue depth,
+//! and the planning/wisdom counters the acceptance criteria expose.
+//!
+//! Built on [`crate::stats`]: the latency summary reuses
+//! [`crate::stats::summary`] and the MFLOPs column uses the harness's
+//! paper-formula flop counts, so service numbers are directly comparable
+//! with the bench suites.
+
+use std::sync::Mutex;
+
+use crate::stats::summary;
+use crate::util::table::{fnum, Table};
+
+/// Monotonic counters + samples, updated by workers under one lock
+/// (updates are tiny compared to a 2D-DFT execution).
+#[derive(Debug, Default)]
+pub struct StatsCollector {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Clone, Debug, Default)]
+struct Inner {
+    latencies_s: Vec<f64>,
+    queue_waits_s: Vec<f64>,
+    flops: f64,
+    completed: u64,
+    failed: u64,
+    rejected: u64,
+    planning_events: u64,
+    wisdom_hits: u64,
+    batches: u64,
+    batched_requests: u64,
+    max_batch: usize,
+    peak_queue_depth: usize,
+}
+
+impl StatsCollector {
+    pub fn new() -> StatsCollector {
+        StatsCollector::default()
+    }
+
+    pub fn record_completion(&self, latency_s: f64, queue_wait_s: f64, flops: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies_s.push(latency_s);
+        g.queue_waits_s.push(queue_wait_s);
+        g.flops += flops;
+        g.completed += 1;
+    }
+
+    pub fn record_failure(&self) {
+        self.inner.lock().unwrap().failed += 1;
+    }
+
+    pub fn record_rejection(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn record_planning_event(&self) {
+        self.inner.lock().unwrap().planning_events += 1;
+    }
+
+    pub fn record_wisdom_hit(&self) {
+        self.inner.lock().unwrap().wisdom_hits += 1;
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batched_requests += size as u64;
+        g.max_batch = g.max_batch.max(size);
+    }
+
+    pub fn observe_queue_depth(&self, depth: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.peak_queue_depth = g.peak_queue_depth.max(depth);
+    }
+
+    /// Consistent snapshot; `wall_s` is the observation window for
+    /// throughput/MFLOPs rates.
+    pub fn snapshot(&self, wall_s: f64) -> ServiceStats {
+        let g = self.inner.lock().unwrap();
+        let mut sorted = g.latencies_s.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let lat = summary(&sorted);
+        let wait = summary(&g.queue_waits_s);
+        let wall = wall_s.max(1e-12);
+        ServiceStats {
+            completed: g.completed,
+            failed: g.failed,
+            rejected: g.rejected,
+            wall_s,
+            throughput_rps: g.completed as f64 / wall,
+            mflops: g.flops / wall / 1e6,
+            latency_mean_s: lat.mean,
+            latency_p50_s: percentile(&sorted, 0.50),
+            latency_p95_s: percentile(&sorted, 0.95),
+            latency_p99_s: percentile(&sorted, 0.99),
+            latency_max_s: lat.max.max(0.0),
+            queue_wait_mean_s: wait.mean,
+            planning_events: g.planning_events,
+            wisdom_hits: g.wisdom_hits,
+            batches: g.batches,
+            batched_requests: g.batched_requests,
+            max_batch: g.max_batch,
+            peak_queue_depth: g.peak_queue_depth,
+        }
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample (0 on empty).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Immutable snapshot of the service counters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServiceStats {
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    /// aggregate paper-formula MFLOPs over the window
+    pub mflops: f64,
+    pub latency_mean_s: f64,
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    pub latency_p99_s: f64,
+    pub latency_max_s: f64,
+    pub queue_wait_mean_s: f64,
+    /// cold plans computed (FPM build + POPTA/HPOPTA + pad search)
+    pub planning_events: u64,
+    /// requests served from memoized wisdom
+    pub wisdom_hits: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub max_batch: usize,
+    pub peak_queue_depth: usize,
+}
+
+impl ServiceStats {
+    /// Mean coalesced batch size.
+    pub fn avg_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Render the serve-bench report table.
+    pub fn render_table(&self, title: &str) -> String {
+        let ms = |s: f64| format!("{:.3} ms", s * 1e3);
+        let mut t = Table::new(title, &["metric", "value"]);
+        t.row(vec!["requests completed".into(), self.completed.to_string()]);
+        t.row(vec!["requests failed".into(), self.failed.to_string()]);
+        t.row(vec!["requests rejected".into(), self.rejected.to_string()]);
+        t.row(vec!["wall time".into(), format!("{:.3} s", self.wall_s)]);
+        t.row(vec!["throughput".into(), format!("{} req/s", fnum(self.throughput_rps, 2))]);
+        t.row(vec!["aggregate speed".into(), format!("{} MFLOPs", fnum(self.mflops, 1))]);
+        t.row(vec!["latency mean".into(), ms(self.latency_mean_s)]);
+        t.row(vec!["latency p50".into(), ms(self.latency_p50_s)]);
+        t.row(vec!["latency p95".into(), ms(self.latency_p95_s)]);
+        t.row(vec!["latency p99".into(), ms(self.latency_p99_s)]);
+        t.row(vec!["latency max".into(), ms(self.latency_max_s)]);
+        t.row(vec!["queue wait mean".into(), ms(self.queue_wait_mean_s)]);
+        t.row(vec!["planning events (cold)".into(), self.planning_events.to_string()]);
+        t.row(vec!["wisdom hits (warm)".into(), self.wisdom_hits.to_string()]);
+        t.row(vec!["batches dispatched".into(), self.batches.to_string()]);
+        t.row(vec!["avg batch size".into(), fnum(self.avg_batch(), 2)]);
+        t.row(vec!["max batch size".into(), self.max_batch.to_string()]);
+        t.row(vec!["peak queue depth".into(), self.peak_queue_depth.to_string()]);
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        assert_eq!(percentile(&xs, 0.50), 50.0);
+        assert_eq!(percentile(&xs, 0.95), 95.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+    }
+
+    #[test]
+    fn collector_snapshot_counts() {
+        let c = StatsCollector::new();
+        for i in 1..=10 {
+            c.record_completion(i as f64 / 1000.0, 0.0001, 1e6);
+        }
+        c.record_planning_event();
+        c.record_wisdom_hit();
+        c.record_wisdom_hit();
+        c.record_batch(4);
+        c.record_batch(6);
+        c.observe_queue_depth(3);
+        c.observe_queue_depth(1);
+        let s = c.snapshot(2.0);
+        assert_eq!(s.completed, 10);
+        assert_eq!(s.throughput_rps, 5.0);
+        assert_eq!(s.planning_events, 1);
+        assert_eq!(s.wisdom_hits, 2);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.max_batch, 6);
+        assert_eq!(s.avg_batch(), 5.0);
+        assert_eq!(s.peak_queue_depth, 3);
+        assert_eq!(s.latency_p50_s, 0.005);
+        assert!((s.mflops - 5.0).abs() < 1e-9);
+        let table = s.render_table("svc");
+        assert!(table.contains("planning events"));
+        assert!(table.contains("throughput"));
+    }
+}

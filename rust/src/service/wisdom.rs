@@ -1,0 +1,493 @@
+//! Wisdom store — memoized planning artifacts, FFTW-style.
+//!
+//! The expensive inputs of a PFFT run — FPM construction (the paper's
+//! "96-hour surface" problem, §V) and the POPTA/HPOPTA + pad search —
+//! depend only on `(engine, N, p)`, never on the signal. The store
+//! memoizes one [`WisdomRecord`] per key and persists the whole map as
+//! JSON via [`crate::util::json`], so a restarted server skips
+//! re-planning entirely (the analogue of `fftw_import_wisdom`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::coordinator::engine::RowFftEngine;
+use crate::coordinator::group::GroupConfig;
+use crate::coordinator::pad::{PadCost, PadDecision};
+use crate::coordinator::partition::Algorithm;
+use crate::coordinator::plan::PlannedTransform;
+use crate::profiler::{build_fpms, ProfileSpec};
+use crate::simulator::vexec::predict_point;
+use crate::simulator::Package;
+use crate::util::json::Json;
+
+/// Flat speed assumption (MFLOPs) for cost estimates before any wisdom
+/// exists for a key — deliberately modest so unplanned work is not
+/// starved by the shortest-predicted-job-first queue.
+pub const DEFAULT_MFLOPS: f64 = 500.0;
+
+/// Knobs for on-demand (measured) planning inside the service.
+#[derive(Clone, Debug)]
+pub struct PlanningConfig {
+    /// abstract processors p
+    pub groups: usize,
+    /// threads per group t
+    pub threads_per_group: usize,
+    /// ε for the Step-1b identity test
+    pub eps: f64,
+    /// pad search (None = exact row length, the serving default — padding
+    /// trades exactness for speed, see `coordinator::pad` docs)
+    pub pad_cost: Option<PadCost>,
+    /// points on the x (rows) grid when profiling the y = N plane
+    pub profile_points: usize,
+    /// MeanUsingTtest repetition divisor while profiling
+    pub rep_scale: usize,
+    /// wall-clock budget for one FPM build (partial-FPM cutoff)
+    pub profile_budget_s: f64,
+}
+
+impl Default for PlanningConfig {
+    fn default() -> Self {
+        PlanningConfig {
+            groups: 2,
+            threads_per_group: 2,
+            eps: 0.05,
+            pad_cost: None,
+            profile_points: 4,
+            rep_scale: 2000,
+            profile_budget_s: 1.5,
+        }
+    }
+}
+
+/// Pads loaded from disk may be corrupt; cap how far above N a
+/// persisted pad is allowed to reach (the paper's search window is
+/// 4096; this leaves generous slack without permitting multi-GiB
+/// work-buffer allocations from a hand-edited file).
+pub const MAX_PAD_ABOVE_N: usize = 1 << 20;
+
+/// One memoized planning outcome for `(engine, n, p)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WisdomRecord {
+    pub engine: String,
+    pub n: usize,
+    /// abstract processors the plan targets
+    pub p: usize,
+    /// threads per group used while profiling
+    pub t: usize,
+    pub eps: f64,
+    pub plan: PlannedTransform,
+    /// predicted whole-request seconds (FPM-informed scheduling weight)
+    pub predicted_cost_s: f64,
+    /// the measured speed surfaces the plan came from — the paper's
+    /// expensive §V artifact, persisted so a restarted server can
+    /// re-plan (new ε, pad policy, ...) without re-measuring. Empty for
+    /// simulator-backed records (their surfaces are recomputable).
+    pub fpms: Vec<crate::coordinator::fpm::SpeedFunction>,
+}
+
+impl WisdomRecord {
+    /// Key inside the store.
+    pub fn key(&self) -> WisdomKey {
+        (self.engine.clone(), self.n, self.p)
+    }
+
+    /// Plan by *measuring* a real engine: build the y = N plane with the
+    /// paper's methodology (budget-capped partial FPM), then POPTA/HPOPTA
+    /// (+ pad search when configured). Falls back to the balanced
+    /// distribution on degenerate profiling outcomes rather than failing
+    /// the request.
+    pub fn from_measurement(
+        engine_label: &str,
+        engine: &dyn RowFftEngine,
+        n: usize,
+        cfg: &PlanningConfig,
+    ) -> WisdomRecord {
+        let points = cfg.profile_points.clamp(2, n.max(2));
+        let mut xs: Vec<usize> = (1..=points).map(|k| (k * n / points).max(1)).collect();
+        xs.dedup();
+        let mut ys = vec![n];
+        if cfg.pad_cost.is_some() {
+            // pad candidates need a y grid above N (grid step 128, §V-B)
+            for k in 1..=4usize {
+                ys.push(n + 128 * k);
+            }
+        }
+        let mut spec = ProfileSpec::new(xs, ys, GroupConfig::new(cfg.groups, cfg.threads_per_group));
+        spec.rep_scale = cfg.rep_scale.max(1);
+        spec.budget_s = cfg.profile_budget_s;
+        let fpms = build_fpms(engine, &spec);
+        let plan = PlannedTransform::from_fpms(&fpms, n, cfg.eps, cfg.pad_cost)
+            .unwrap_or_else(|_| PlannedTransform::balanced_fallback(cfg.groups, n));
+        let predicted_cost_s = plan.predicted_seconds(DEFAULT_MFLOPS);
+        WisdomRecord {
+            engine: engine_label.to_string(),
+            n,
+            p: cfg.groups,
+            t: cfg.threads_per_group,
+            eps: cfg.eps,
+            plan,
+            predicted_cost_s,
+            fpms,
+        }
+    }
+
+    /// Plan deterministically from the virtual testbed (no measurement,
+    /// instant even at paper scale) — the service's virtual-time path.
+    pub fn from_simulator(engine_label: &str, package: Package, n: usize, pad: bool) -> WisdomRecord {
+        let point = predict_point(package, n);
+        let cfg = package.best_groups();
+        let pads: Vec<PadDecision> = point
+            .d
+            .iter()
+            .zip(&point.pads)
+            .map(|(_, &v)| PadDecision {
+                n_padded: if pad { v } else { n },
+                t_unpadded: 0.0,
+                t_padded: 0.0,
+            })
+            .collect();
+        let plan = PlannedTransform {
+            n,
+            d: point.d.clone(),
+            pads,
+            algorithm: if point.used_hpopta { Algorithm::Hpopta } else { Algorithm::Popta },
+            makespan: f64::NAN,
+        };
+        WisdomRecord {
+            engine: engine_label.to_string(),
+            n,
+            p: cfg.p,
+            t: cfg.t,
+            eps: crate::simulator::vexec::EPS_IDENTICAL,
+            plan,
+            predicted_cost_s: if pad { point.t_pad } else { point.t_fpm },
+            fpms: Vec::new(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let pads: Vec<Json> = self
+            .plan
+            .pads
+            .iter()
+            .map(|p| {
+                Json::obj()
+                    .set("n_padded", p.n_padded)
+                    .set("t_unpadded", p.t_unpadded)
+                    .set("t_padded", p.t_padded)
+            })
+            .collect();
+        let fpms: Vec<Json> = self.fpms.iter().map(|f| f.to_json()).collect();
+        Json::obj()
+            .set("engine", self.engine.as_str())
+            .set("n", self.n)
+            .set("p", self.p)
+            .set("t", self.t)
+            .set("eps", self.eps)
+            .set("algorithm", self.plan.algorithm.name())
+            .set("d", self.plan.d.clone())
+            .set("pads", Json::Arr(pads))
+            .set("makespan", Json::Num(self.plan.makespan))
+            .set("predicted_cost_s", self.predicted_cost_s)
+            .set("fpms", Json::Arr(fpms))
+    }
+
+    pub fn from_json(j: &Json) -> Result<WisdomRecord, String> {
+        let str_field = |k: &str| {
+            j.get(k).and_then(Json::as_str).map(str::to_string).ok_or(format!("wisdom: missing {k}"))
+        };
+        let usize_field = |k: &str| {
+            j.get(k).and_then(Json::as_usize).ok_or(format!("wisdom: missing {k}"))
+        };
+        let f64_field = |k: &str| j.get(k).and_then(Json::as_f64).ok_or(format!("wisdom: missing {k}"));
+        let engine = str_field("engine")?;
+        let n = usize_field("n")?;
+        let p = usize_field("p")?;
+        let t = usize_field("t")?;
+        let eps = f64_field("eps")?;
+        let algorithm = Algorithm::parse(&str_field("algorithm")?)
+            .ok_or_else(|| "wisdom: bad algorithm".to_string())?;
+        let d: Vec<usize> = j
+            .get("d")
+            .and_then(Json::as_arr)
+            .ok_or("wisdom: missing d")?
+            .iter()
+            .map(|v| v.as_usize().ok_or("wisdom: bad d entry".to_string()))
+            .collect::<Result<_, _>>()?;
+        let pads: Vec<PadDecision> = j
+            .get("pads")
+            .and_then(Json::as_arr)
+            .ok_or("wisdom: missing pads")?
+            .iter()
+            .map(|pj| -> Result<PadDecision, String> {
+                Ok(PadDecision {
+                    n_padded: pj
+                        .get("n_padded")
+                        .and_then(Json::as_usize)
+                        .ok_or("wisdom: bad pad")?,
+                    t_unpadded: pj.get("t_unpadded").and_then(Json::as_f64).unwrap_or(0.0),
+                    t_padded: pj.get("t_padded").and_then(Json::as_f64).unwrap_or(0.0),
+                })
+            })
+            .collect::<Result<_, _>>()?;
+        if d.len() != pads.len() {
+            return Err("wisdom: d/pads arity mismatch".to_string());
+        }
+        if d.iter().sum::<usize>() != n {
+            return Err(format!("wisdom: d sums to {} != n {n}", d.iter().sum::<usize>()));
+        }
+        // the drivers assert n <= pad at execution time; reject corrupt
+        // pads at load time instead of panicking a worker later (and cap
+        // them so a hand-edited file cannot demand a huge work buffer)
+        for pd in &pads {
+            if pd.n_padded < n || pd.n_padded > n.saturating_add(MAX_PAD_ABOVE_N) {
+                return Err(format!(
+                    "wisdom: pad length {} out of range [{n}, {}]",
+                    pd.n_padded,
+                    n.saturating_add(MAX_PAD_ABOVE_N)
+                ));
+            }
+        }
+        // NaN makespans serialize as null (JSON has no NaN)
+        let makespan = j.get("makespan").and_then(Json::as_f64).unwrap_or(f64::NAN);
+        let predicted_cost_s = f64_field("predicted_cost_s")?;
+        // fpms are optional (older files / simulator records have none)
+        let fpms = match j.get("fpms").and_then(Json::as_arr) {
+            Some(arr) => arr
+                .iter()
+                .map(crate::coordinator::fpm::SpeedFunction::from_json)
+                .collect::<Result<Vec<_>, _>>()?,
+            None => Vec::new(),
+        };
+        Ok(WisdomRecord {
+            engine,
+            n,
+            p,
+            t,
+            eps,
+            plan: PlannedTransform { n, d, pads, algorithm, makespan },
+            predicted_cost_s,
+            fpms,
+        })
+    }
+
+    /// Warm the native plan cache for every row length this record can
+    /// touch (the "dft plan handles" part of the wisdom).
+    pub fn warm_plan_cache(&self) {
+        let mut lens = self.plan.pad_lens();
+        lens.push(self.n);
+        lens.sort_unstable();
+        lens.dedup();
+        for len in lens {
+            if len == 0 {
+                continue;
+            }
+            if len.is_power_of_two() {
+                let _ = crate::dft::plan::PlanCache::global().pow2(len);
+            } else {
+                let _ = crate::dft::plan::PlanCache::global().bluestein(len);
+            }
+        }
+    }
+}
+
+/// `(engine, n, p)` — what a plan depends on.
+pub type WisdomKey = (String, usize, usize);
+
+/// The persistent map of planning outcomes.
+#[derive(Clone, Debug, Default)]
+pub struct WisdomStore {
+    records: BTreeMap<WisdomKey, WisdomRecord>,
+}
+
+impl WisdomStore {
+    pub fn new() -> WisdomStore {
+        WisdomStore::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn get(&self, engine: &str, n: usize, p: usize) -> Option<&WisdomRecord> {
+        self.records.get(&(engine.to_string(), n, p))
+    }
+
+    /// Insert (replacing any previous record for the key).
+    pub fn insert(&mut self, rec: WisdomRecord) {
+        self.records.insert(rec.key(), rec);
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &WisdomRecord> {
+        self.records.values()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let recs: Vec<Json> = self.records.values().map(WisdomRecord::to_json).collect();
+        Json::obj().set("version", 1i64).set("records", Json::Arr(recs))
+    }
+
+    pub fn from_json(j: &Json) -> Result<WisdomStore, String> {
+        let mut store = WisdomStore::new();
+        let recs = j.get("records").and_then(Json::as_arr).ok_or("wisdom: missing records")?;
+        for r in recs {
+            store.insert(WisdomRecord::from_json(r)?);
+        }
+        Ok(store)
+    }
+
+    /// Persist as pretty JSON (creates parent directories).
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("wisdom: cannot create {}: {e}", dir.display()))?;
+        }
+        std::fs::write(path, self.to_json().to_pretty())
+            .map_err(|e| format!("wisdom: cannot write {}: {e}", path.display()))
+    }
+
+    /// Load a previously [`save`](WisdomStore::save)d store.
+    pub fn load(path: &Path) -> Result<WisdomStore, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("wisdom: cannot read {}: {e}", path.display()))?;
+        Self::from_json(&Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::NativeEngine;
+
+    fn demo_record() -> WisdomRecord {
+        let mut surface =
+            crate::coordinator::fpm::SpeedFunction::new("native-group1", vec![8, 16], vec![16]);
+        surface.set(8, 16, 123.5);
+        WisdomRecord {
+            engine: "native".to_string(),
+            n: 16,
+            p: 2,
+            t: 1,
+            eps: 0.05,
+            plan: PlannedTransform {
+                n: 16,
+                d: vec![10, 6],
+                pads: vec![
+                    PadDecision { n_padded: 16, t_unpadded: 1.5, t_padded: 1.5 },
+                    PadDecision { n_padded: 24, t_unpadded: 2.0, t_padded: 1.25 },
+                ],
+                algorithm: Algorithm::Hpopta,
+                makespan: 0.125,
+            },
+            predicted_cost_s: 0.01,
+            fpms: vec![surface],
+        }
+    }
+
+    #[test]
+    fn record_json_roundtrip() {
+        let rec = demo_record();
+        let j = Json::parse(&rec.to_json().to_string()).unwrap();
+        let back = WisdomRecord::from_json(&j).unwrap();
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn nan_makespan_survives_as_nan() {
+        let mut rec = demo_record();
+        rec.plan.makespan = f64::NAN;
+        let j = Json::parse(&rec.to_json().to_string()).unwrap();
+        let back = WisdomRecord::from_json(&j).unwrap();
+        assert!(back.plan.makespan.is_nan());
+    }
+
+    #[test]
+    fn store_save_load_roundtrip() {
+        let mut store = WisdomStore::new();
+        store.insert(demo_record());
+        store.insert(WisdomRecord::from_simulator("sim-mkl", Package::Mkl, 24_704, true));
+        let path = std::env::temp_dir()
+            .join(format!("hclfft_wisdom_test_{}/w.json", std::process::id()));
+        store.save(&path).unwrap();
+        let back = WisdomStore::load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get("native", 16, 2).unwrap(), store.get("native", 16, 2).unwrap());
+        let sim = back.get("sim-mkl", 24_704, 2).unwrap();
+        assert_eq!(sim.plan.d.iter().sum::<usize>(), 24_704);
+        assert!(sim.predicted_cost_s > 0.0);
+    }
+
+    #[test]
+    fn store_rejects_corrupt_records() {
+        let j = Json::parse(r#"{"records":[{"engine":"native","n":8}]}"#).unwrap();
+        assert!(WisdomStore::from_json(&j).is_err());
+        // d not summing to n
+        let mut rec = demo_record().to_json();
+        rec = rec.set("d", vec![1usize, 2]);
+        assert!(WisdomRecord::from_json(&rec).is_err());
+    }
+
+    #[test]
+    fn load_rejects_out_of_range_pads() {
+        // pad below n — would otherwise panic a worker at execution time
+        let below = demo_record().to_json().set(
+            "pads",
+            Json::Arr(vec![
+                Json::obj().set("n_padded", 8usize),
+                Json::obj().set("n_padded", 16usize),
+            ]),
+        );
+        let err = WisdomRecord::from_json(&below).unwrap_err();
+        assert!(err.contains("pad length"), "{err}");
+        // pad absurdly above n — would demand a huge work buffer
+        let above = demo_record().to_json().set(
+            "pads",
+            Json::Arr(vec![
+                Json::obj().set("n_padded", 16usize),
+                Json::obj().set("n_padded", usize::MAX / 2),
+            ]),
+        );
+        assert!(WisdomRecord::from_json(&above).is_err());
+    }
+
+    #[test]
+    fn measured_surfaces_survive_persistence() {
+        let rec = demo_record();
+        let back =
+            WisdomRecord::from_json(&Json::parse(&rec.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.fpms, rec.fpms);
+        assert_eq!(back.fpms[0].get(8, 16), Some(123.5));
+        // records without the field (older files) load with no surfaces
+        let mut legacy = rec.to_json();
+        legacy = legacy.set("fpms", Json::Arr(Vec::new()));
+        assert!(WisdomRecord::from_json(&legacy).unwrap().fpms.is_empty());
+    }
+
+    #[test]
+    fn measurement_planning_small_n_is_consistent() {
+        let cfg = PlanningConfig {
+            groups: 2,
+            threads_per_group: 1,
+            rep_scale: 10_000,
+            ..PlanningConfig::default()
+        };
+        let rec = WisdomRecord::from_measurement("native", &NativeEngine, 32, &cfg);
+        assert_eq!(rec.plan.d.iter().sum::<usize>(), 32);
+        assert_eq!(rec.plan.d.len(), 2);
+        assert!(!rec.plan.is_padded(), "pad_cost None must not pad");
+        assert!(rec.predicted_cost_s > 0.0);
+        rec.warm_plan_cache();
+    }
+
+    #[test]
+    fn simulator_planning_is_deterministic() {
+        let a = WisdomRecord::from_simulator("sim-fftw3", Package::Fftw3, 16_064, false);
+        let b = WisdomRecord::from_simulator("sim-fftw3", Package::Fftw3, 16_064, false);
+        assert_eq!(a, b);
+        assert!(!a.plan.is_padded());
+    }
+}

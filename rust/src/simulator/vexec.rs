@@ -176,6 +176,15 @@ pub fn simulate_size(tb: &SimTestbed, n: usize) -> CampaignPoint {
     CampaignPoint { n, t_basic, t_fpm, t_pad, d, pads, used_hpopta }
 }
 
+/// One-stop virtual prediction for a package at size N — used by the
+/// `service` layer's deterministic virtual-time path: the returned
+/// point's `d`/`pads` seed a wisdom record and `t_fpm`/`t_pad` price the
+/// request in virtual seconds (no real FFT executes).
+pub fn predict_point(package: Package, n: usize) -> CampaignPoint {
+    let tb = SimTestbed::paper_best(package);
+    simulate_size(&tb, n)
+}
+
 /// Steps 1a-1d on the virtual testbed, with 64-remainder handling: the
 /// FPM grid is 128-stepped (§V-B) while app sizes step 64; the remainder
 /// rows go to the group whose marginal time grows least.
@@ -204,15 +213,22 @@ fn plan(tb: &SimTestbed, n: usize) -> (Partition, bool) {
     };
     let rem = n - n_grid;
     if rem > 0 {
-        // marginal-cost choice on nearest grid speeds
-        let best = (0..part.d.len())
-            .min_by(|&a, &b| {
-                let ca = marginal(&curves[a], part.d[a], rem);
-                let cb = marginal(&curves[b], part.d[b], rem);
-                ca.partial_cmp(&cb).unwrap()
-            })
-            .unwrap();
-        part.d[best] += rem;
+        if curves.iter().all(|c| !c.is_empty()) {
+            // marginal-cost choice on nearest grid speeds
+            let best = (0..part.d.len())
+                .min_by(|&a, &b| {
+                    let ca = marginal(&curves[a], part.d[a], rem);
+                    let cb = marginal(&curves[b], part.d[b], rem);
+                    ca.partial_cmp(&cb).unwrap()
+                })
+                .unwrap();
+            part.d[best] += rem;
+        } else {
+            // below the FPM grid step there are no sections to consult —
+            // everything goes to group 1 (sub-grid sizes are not a
+            // modeled regime, just keep them total-preserving)
+            part.d[0] += rem;
+        }
     }
     (part, hp)
 }
@@ -285,6 +301,14 @@ mod tests {
         let b = Campaign::run(Package::Mkl, &[24_704]);
         assert_eq!(a.points[0].d, b.points[0].d);
         assert_eq!(a.points[0].t_pad, b.points[0].t_pad);
+    }
+
+    #[test]
+    fn predict_point_matches_campaign() {
+        let p = predict_point(Package::Mkl, 24_704);
+        let c = Campaign::run(Package::Mkl, &[24_704]);
+        assert_eq!(p.d, c.points[0].d);
+        assert_eq!(p.t_fpm, c.points[0].t_fpm);
     }
 
     #[test]

@@ -1,9 +1,9 @@
-//! Minimal JSON emitter for results files.
+//! Minimal JSON emitter **and parser** for results/wisdom files.
 //!
-//! Only *output* is needed (figure series, bench reports, experiment
-//! records); all machine-readable *inputs* in this repo are TSV
-//! (`artifacts/manifest.tsv`, speed-function dumps), so no parser lives
-//! here.
+//! The emitter covers figure series, bench reports and experiment
+//! records; the parser was added for the `service` layer's wisdom store
+//! (`results/wisdom.json` must survive a server restart). Both live here
+//! because the offline vendor set has no serde.
 
 use std::fmt::Write as _;
 
@@ -42,6 +42,66 @@ impl Json {
         }
     }
 
+    /// Field lookup on objects (None on non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric view: `Int` and `Num` both read as f64.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            Json::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integer view. Whole floats are accepted only up to
+    /// 2^53 (f64's exact-integer range) — beyond that the value could
+    /// not faithfully represent an integer, and a saturating `as` cast
+    /// would silently return usize::MAX for garbage like 1e300.
+    pub fn as_usize(&self) -> Option<usize> {
+        const F64_EXACT_MAX: f64 = 9_007_199_254_740_992.0; // 2^53
+        match self {
+            Json::Int(i) if *i >= 0 => Some(*i as usize),
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= F64_EXACT_MAX => {
+                Some(*x as usize)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Parse a JSON document (the inverse of [`Json::to_string`] /
+    /// [`Json::to_pretty`]). Integer literals (no `.`/exponent) become
+    /// [`Json::Int`]; everything else numeric becomes [`Json::Num`].
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(format!("trailing garbage at byte {}", p.pos));
+        }
+        Ok(v)
+    }
+
     /// Serialize compactly.
     pub fn to_string(&self) -> String {
         let mut s = String::new();
@@ -69,7 +129,10 @@ impl Json {
             }
             Json::Num(x) => {
                 if x.is_finite() {
-                    let _ = write!(out, "{x}");
+                    // Debug formatting is shortest-roundtrip AND always
+                    // keeps a decimal point or exponent ("2.0", not "2"),
+                    // so parse() reads a Num back as Num, never Int
+                    let _ = write!(out, "{x:?}");
                 } else {
                     out.push_str("null"); // JSON has no NaN/Inf
                 }
@@ -113,6 +176,205 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Recursive-descent JSON parser (RFC 8259 subset: no duplicate-key
+/// policing; surrogate pairs in `\u` escapes are combined).
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected `{}` at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn literal(&mut self, word: &str, val: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(val)
+        } else {
+            Err(format!("bad literal at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            None => Err("unexpected end of input".to_string()),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(format!("unexpected `{}` at byte {}", c as char, self.pos)),
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected `,` or `]` at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(format!("expected `,` or `}}` at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let start = self.pos;
+            while matches!(self.peek(), Some(c) if c != b'"' && c != b'\\') {
+                self.pos += 1;
+            }
+            out.push_str(
+                std::str::from_utf8(&self.bytes[start..self.pos])
+                    .map_err(|_| format!("invalid utf-8 near byte {start}"))?,
+            );
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                // surrogate pair: require \uXXXX low half
+                                self.expect(b'\\')?;
+                                self.expect(b'u')?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err("invalid low surrogate".to_string());
+                                }
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                hi
+                            };
+                            out.push(
+                                char::from_u32(cp)
+                                    .ok_or_else(|| format!("invalid codepoint {cp:#x}"))?,
+                            );
+                        }
+                        c => return Err(format!("bad escape `\\{}`", c as char)),
+                    }
+                }
+                _ => return Err("unterminated string".to_string()),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.pos + 4 > self.bytes.len() {
+            return Err("truncated \\u escape".to_string());
+        }
+        let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| "bad \\u escape".to_string())?;
+        let v = u32::from_str_radix(s, 16).map_err(|_| "bad \\u escape".to_string())?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let mut is_int = true;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' => self.pos += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    is_int = false;
+                    self.pos += 1;
+                }
+                _ => break,
+            }
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        if is_int {
+            if let Ok(i) = s.parse::<i64>() {
+                return Ok(Json::Int(i));
+            }
+        }
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number `{s}` at byte {start}"))
     }
 }
 
@@ -184,6 +446,15 @@ mod tests {
     }
 
     #[test]
+    fn whole_floats_keep_decimal_point() {
+        assert_eq!(Json::from(2.0).to_string(), "2.0");
+        assert_eq!(Json::parse("2.0").unwrap(), Json::Num(2.0));
+        // Num round-trips as Num even when whole (parse is a true inverse)
+        let j = Json::from(100.0);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
     fn nan_becomes_null() {
         assert_eq!(Json::Num(f64::NAN).to_string(), "null");
         assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
@@ -215,5 +486,75 @@ mod tests {
     #[test]
     fn control_chars_escaped() {
         assert_eq!(Json::from("\u{1}").to_string(), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(Json::parse("42").unwrap(), Json::Int(42));
+        assert_eq!(Json::parse("-7").unwrap(), Json::Int(-7));
+        assert_eq!(Json::parse("1.5").unwrap(), Json::Num(1.5));
+        assert_eq!(Json::parse("2e3").unwrap(), Json::Num(2000.0));
+        assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn parse_structures() {
+        let j = Json::parse(r#"{"a":[1,2.5,"x"],"b":{"c":null}}"#).unwrap();
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("b").unwrap().get("c"), Some(&Json::Null));
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(Json::parse("{}").unwrap(), Json::obj());
+    }
+
+    #[test]
+    fn parse_string_escapes() {
+        assert_eq!(Json::parse(r#""a\"b\n\t\\""#).unwrap(), Json::from("a\"b\n\t\\"));
+        assert_eq!(Json::parse(r#""\u0041""#).unwrap(), Json::from("A"));
+        // surrogate pair: U+1F600
+        assert_eq!(Json::parse(r#""\ud83d\ude00""#).unwrap(), Json::from("\u{1F600}"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("nul").is_err());
+        assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn emit_parse_roundtrip() {
+        let j = Json::obj()
+            .set("name", "wisdom")
+            .set("pi", 3.141592653589793)
+            .set("count", 64i64)
+            .set("ok", true)
+            .set("none", Json::Null)
+            .set("xs", Json::from(vec![1i64, 2, 3]))
+            .set("nested", Json::obj().set("speeds", Json::from(vec![1.25, 2.5])));
+        let compact = Json::parse(&j.to_string()).unwrap();
+        let pretty = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(compact, j);
+        assert_eq!(pretty, j);
+    }
+
+    #[test]
+    fn accessors() {
+        let j = Json::obj().set("n", 8i64).set("x", 2.0).set("s", "v");
+        assert_eq!(j.get("n").unwrap().as_usize(), Some(8));
+        assert_eq!(j.get("x").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("x").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("s").unwrap().as_str(), Some("v"));
+        assert_eq!(j.get("missing"), None);
+        assert_eq!(Json::Null.get("n"), None);
+        // out-of-exact-range floats are rejected, not saturated
+        assert_eq!(Json::Num(1e300).as_usize(), None);
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(1.5).as_usize(), None);
     }
 }

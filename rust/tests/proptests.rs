@@ -226,3 +226,186 @@ fn prop_simulator_speed_positive_and_deterministic() {
         },
     );
 }
+
+/// Random JSON tree generator for the round-trip properties.
+fn gen_json(rng: &mut Xoshiro256, depth: usize) -> hclfft::util::json::Json {
+    use hclfft::util::json::Json;
+    let leaf_only = depth == 0;
+    // range_usize is inclusive: leaves are arms 0-3, containers 4-5
+    match rng.range_usize(0, if leaf_only { 3 } else { 5 }) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_f64() < 0.5),
+        2 => Json::Int(rng.next_u64() as i64 / 1024),
+        3 => {
+            let s: String = (0..rng.range_usize(0, 8))
+                .map(|_| {
+                    // mix of plain chars, escapes and non-ascii
+                    ['a', '"', '\\', '\n', '\t', 'é', '\u{1}', 'z'][rng.range_usize(0, 7)]
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => Json::Arr((0..rng.range_usize(0, 4)).map(|_| gen_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut o = hclfft::util::json::Json::obj();
+            for k in 0..rng.range_usize(0, 4) {
+                o = o.set(&format!("k{k}"), gen_json(rng, depth - 1));
+            }
+            o
+        }
+    }
+}
+
+#[test]
+fn prop_json_emit_parse_roundtrip() {
+    use hclfft::util::json::Json;
+    run(
+        "json-emit-parse-roundtrip",
+        &Config { cases: 200, ..Config::default() },
+        |rng| gen_json(rng, 3),
+        |_| vec![],
+        |j| {
+            for text in [j.to_string(), j.to_pretty()] {
+                let back = Json::parse(&text).map_err(|e| format!("parse failed: {e} on {text}"))?;
+                if &back != j {
+                    return Err(format!("roundtrip mismatch: {text}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random `SpeedFunction` with gaps; non-integral speeds so the
+/// Int/Num distinction cannot alias.
+fn gen_speed_function(rng: &mut Xoshiro256) -> hclfft::coordinator::fpm::SpeedFunction {
+    let nx = rng.range_usize(1, 6);
+    let ny = rng.range_usize(1, 6);
+    let xs: Vec<usize> = (1..=nx).map(|k| k * (1 + rng.range_usize(0, 3))).collect();
+    let xs: Vec<usize> = {
+        // force strictly ascending
+        let mut acc = 0;
+        xs.iter()
+            .map(|&v| {
+                acc += v;
+                acc
+            })
+            .collect()
+    };
+    let ys: Vec<usize> = (1..=ny).map(|k| k * 128).collect();
+    let mut f = hclfft::coordinator::fpm::SpeedFunction::new("prop", xs.clone(), ys.clone());
+    for &x in &xs {
+        for &y in &ys {
+            if rng.next_f64() < 0.7 {
+                f.set(x, y, 1.0 + rng.next_f64() * 9999.0);
+            }
+        }
+    }
+    f
+}
+
+#[test]
+fn prop_speed_function_json_roundtrip() {
+    use hclfft::util::json::Json;
+    run(
+        "speed-function-json-roundtrip",
+        &Config { cases: 100, ..Config::default() },
+        gen_speed_function,
+        |_| vec![],
+        |f| {
+            let text = f.to_json().to_string();
+            let j = Json::parse(&text).map_err(|e| format!("parse: {e}"))?;
+            let g = hclfft::coordinator::fpm::SpeedFunction::from_json(&j)
+                .map_err(|e| format!("from_json: {e}"))?;
+            if g.xs != f.xs || g.ys != f.ys {
+                return Err("grid mismatch".to_string());
+            }
+            for &x in &f.xs {
+                for &y in &f.ys {
+                    if g.get(x, y) != f.get(x, y) {
+                        return Err(format!("speed mismatch at ({x},{y})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_wisdom_record_json_roundtrip() {
+    use hclfft::coordinator::pad::PadDecision;
+    use hclfft::coordinator::partition::Algorithm;
+    use hclfft::coordinator::plan::PlannedTransform;
+    use hclfft::service::wisdom::WisdomRecord;
+    use hclfft::util::json::Json;
+    run(
+        "wisdom-record-json-roundtrip",
+        &Config { cases: 100, ..Config::default() },
+        |rng| {
+            let p = rng.range_usize(1, 4);
+            let n_units: usize = (0..p).map(|_| rng.range_usize(0, 50)).sum::<usize>() + 1;
+            let n = n_units * 8;
+            // random distribution summing to n
+            let mut d = vec![0usize; p];
+            let mut left = n;
+            for item in d.iter_mut().take(p - 1) {
+                let take = rng.range_usize(0, left);
+                *item = take;
+                left -= take;
+            }
+            d[p - 1] = left;
+            let pads: Vec<PadDecision> = d
+                .iter()
+                .map(|_| PadDecision {
+                    n_padded: n + 8 * rng.range_usize(0, 4),
+                    t_unpadded: rng.next_f64() * 10.0,
+                    t_padded: rng.next_f64() * 10.0,
+                })
+                .collect();
+            WisdomRecord {
+                engine: "native".to_string(),
+                n,
+                p,
+                t: 1 + rng.range_usize(0, 8),
+                eps: rng.next_f64() * 0.2,
+                plan: PlannedTransform {
+                    n,
+                    d,
+                    pads,
+                    algorithm: [Algorithm::Popta, Algorithm::Hpopta, Algorithm::Balanced]
+                        [rng.range_usize(0, 2)],
+                    makespan: if rng.next_f64() < 0.2 { f64::NAN } else { rng.next_f64() * 100.0 },
+                },
+                predicted_cost_s: rng.next_f64() * 10.0,
+                fpms: if rng.next_f64() < 0.5 { vec![gen_speed_function(rng)] } else { vec![] },
+            }
+        },
+        |_| vec![],
+        |rec| {
+            let text = rec.to_json().to_pretty();
+            let j = Json::parse(&text).map_err(|e| format!("parse: {e}"))?;
+            let back = WisdomRecord::from_json(&j).map_err(|e| format!("from_json: {e}"))?;
+            // NaN makespan breaks PartialEq; compare piecewise
+            if back.engine != rec.engine
+                || back.n != rec.n
+                || back.p != rec.p
+                || back.t != rec.t
+                || back.eps != rec.eps
+                || back.plan.d != rec.plan.d
+                || back.plan.pads != rec.plan.pads
+                || back.plan.algorithm != rec.plan.algorithm
+                || back.predicted_cost_s != rec.predicted_cost_s
+                || back.fpms != rec.fpms
+            {
+                return Err("field mismatch after roundtrip".to_string());
+            }
+            let ms_ok = (back.plan.makespan.is_nan() && rec.plan.makespan.is_nan())
+                || back.plan.makespan == rec.plan.makespan;
+            if !ms_ok {
+                return Err("makespan mismatch".to_string());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,309 @@
+//! Integration: the 2D-DFT serving subsystem end to end — bit-exactness
+//! against the single-shot coordinator drivers and the `dft2d` oracle,
+//! wisdom persistence across restarts, concurrent hammering, and the
+//! deterministic virtual-time scheduling path at paper-scale sizes.
+
+use std::sync::Mutex;
+
+use hclfft::coordinator::engine::NativeEngine;
+use hclfft::dft::fft::Direction;
+use hclfft::dft::SignalMatrix;
+use hclfft::service::wisdom::{PlanningConfig, WisdomRecord, WisdomStore};
+use hclfft::service::{Dft2dRequest, ResponseHandle, ServiceBuilder, ServiceConfig, ServiceError};
+use hclfft::simulator::Package;
+
+fn quick_cfg() -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        max_batch: 8,
+        planning: PlanningConfig {
+            groups: 2,
+            threads_per_group: 1,
+            rep_scale: 10_000,
+            ..PlanningConfig::default()
+        },
+        ..ServiceConfig::default()
+    }
+}
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("hclfft_svc_{tag}_{}/w.json", std::process::id()))
+}
+
+/// Acceptance: service responses are bit-exact against the single-shot
+/// `coordinator::pfft` path executing the very same memoized plan.
+#[test]
+fn responses_bit_exact_vs_single_shot_pfft() {
+    let svc = ServiceBuilder::new(quick_cfg()).native().build();
+    for n in [16usize, 32, 64] {
+        let orig = SignalMatrix::random(n, n, n as u64);
+        let resp = svc
+            .submit(Dft2dRequest::forward("native", orig.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        let plan = svc.planned("native", n).expect("plan memoized after first request");
+        assert_eq!(plan.d, resp.report.d);
+        let mut single = orig.clone();
+        plan.execute(&NativeEngine, &mut single, 1, 64).unwrap();
+        assert_eq!(
+            resp.matrix.max_abs_diff(&single),
+            0.0,
+            "n={n}: service output must be bit-exact vs single-shot pfft"
+        );
+    }
+    svc.shutdown();
+}
+
+/// Satellite: 8 client threads hammer the service; every response must
+/// round-trip bit-exactly against the serial `dft::dft2d` oracle.
+#[test]
+fn eight_thread_hammer_bit_exact_vs_dft2d_oracle() {
+    let svc = ServiceBuilder::new(quick_cfg()).native().build();
+    let mismatches: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for c in 0..8u64 {
+            let svc = &svc;
+            let mismatches = &mismatches;
+            scope.spawn(move || {
+                for i in 0..4u64 {
+                    let n = if (c + i) % 2 == 0 { 32 } else { 64 };
+                    let orig = SignalMatrix::random(n, n, c * 100 + i);
+                    let resp = svc
+                        .submit(Dft2dRequest::forward("native", orig.clone()))
+                        .unwrap()
+                        .wait()
+                        .unwrap();
+                    let mut want = orig;
+                    hclfft::dft::dft2d::dft2d(&mut want, Direction::Forward, 1);
+                    let diff = resp.matrix.max_abs_diff(&want);
+                    if diff != 0.0 {
+                        mismatches
+                            .lock()
+                            .unwrap()
+                            .push(format!("client {c} req {i} n={n}: diff {diff:e}"));
+                    }
+                }
+            });
+        }
+    });
+    let bad = mismatches.into_inner().unwrap();
+    assert!(bad.is_empty(), "non-bit-exact responses: {bad:?}");
+    let stats = svc.stats();
+    assert_eq!(stats.completed, 32);
+    assert_eq!(stats.failed, 0);
+    // two sizes => exactly two cold plans no matter how the 8 threads race
+    assert_eq!(stats.planning_events, 2);
+    svc.shutdown();
+}
+
+/// Acceptance: a second service instance fed the persisted wisdom file
+/// replans nothing (planning_events == 0 < cold run's count).
+#[test]
+fn persisted_wisdom_eliminates_planning() {
+    let path = tmp_path("persist");
+    let n = 48;
+
+    let cold = ServiceBuilder::new(quick_cfg()).native().build();
+    let orig = SignalMatrix::random(n, n, 7);
+    let cold_resp = cold
+        .submit(Dft2dRequest::forward("native", orig.clone()))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let cold_stats = cold.stats();
+    assert_eq!(cold_stats.planning_events, 1, "cold run must pay one plan");
+    assert!(cold_resp.report.planned_cold);
+    cold.save_wisdom(&path).unwrap();
+    cold.shutdown();
+
+    let warm = ServiceBuilder::new(quick_cfg())
+        .native()
+        .load_wisdom(&path)
+        .unwrap()
+        .build();
+    let warm_resp = warm
+        .submit(Dft2dRequest::forward("native", orig.clone()))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let warm_stats = warm.stats();
+    assert_eq!(warm_stats.planning_events, 0, "warm run must not replan");
+    assert!(warm_stats.wisdom_hits >= 1);
+    assert!(warm_stats.planning_events < cold_stats.planning_events);
+    assert!(!warm_resp.report.planned_cold);
+    // same wisdom => byte-identical response
+    assert_eq!(warm_resp.matrix.max_abs_diff(&cold_resp.matrix), 0.0);
+    warm.shutdown();
+}
+
+/// Batched dispatch must produce the same bytes as unbatched dispatch.
+#[test]
+fn batched_and_unbatched_agree() {
+    let n = 32;
+    let origs: Vec<SignalMatrix> = (0..6).map(|s| SignalMatrix::random(n, n, s)).collect();
+
+    // unbatched reference: max_batch = 1
+    let solo_cfg = ServiceConfig { max_batch: 1, ..quick_cfg() };
+    let solo = ServiceBuilder::new(solo_cfg).native().build();
+    let solo_out: Vec<SignalMatrix> = origs
+        .iter()
+        .map(|m| {
+            solo.submit(Dft2dRequest::forward("native", m.clone()))
+                .unwrap()
+                .wait()
+                .unwrap()
+                .matrix
+        })
+        .collect();
+    let wisdom = solo.wisdom_snapshot();
+    solo.shutdown();
+
+    // batched run reuses the identical wisdom (same plan, zero replans)
+    let svc = ServiceBuilder::new(quick_cfg()).native().wisdom(wisdom).paused().build();
+    let handles: Vec<ResponseHandle> = origs
+        .iter()
+        .map(|m| svc.submit(Dft2dRequest::forward("native", m.clone())).unwrap())
+        .collect();
+    svc.start();
+    for (h, want) in handles.into_iter().zip(&solo_out) {
+        let resp = h.wait().unwrap();
+        assert!(resp.report.batched_with >= 1);
+        assert_eq!(resp.matrix.max_abs_diff(want), 0.0);
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.planning_events, 0);
+    assert!(stats.max_batch > 1, "paused submissions must coalesce");
+    svc.shutdown();
+}
+
+/// Virtual-time path: paper-scale requests are priced by the calibrated
+/// simulator and scheduled shortest-predicted-job-first, fully
+/// deterministically (single worker, paused submission).
+#[test]
+fn virtual_time_spjf_schedules_cheap_sizes_first() {
+    let sizes = [24_704usize, 8_064, 16_064];
+    let mut store = WisdomStore::new();
+    for &n in &sizes {
+        store.insert(WisdomRecord::from_simulator("sim-mkl", Package::Mkl, n, false));
+    }
+    let costs: Vec<f64> = sizes
+        .iter()
+        .map(|&n| store.get("sim-mkl", n, Package::Mkl.best_groups().p).unwrap().predicted_cost_s)
+        .collect();
+    assert!(costs[1] < costs[2] && costs[2] < costs[0], "model must order sizes: {costs:?}");
+
+    let cfg = ServiceConfig {
+        workers: 1,
+        starvation_bound_s: f64::INFINITY, // pure SPJF
+        ..quick_cfg()
+    };
+    let svc = ServiceBuilder::new(cfg)
+        .virtual_package("sim-mkl", Package::Mkl)
+        .wisdom(store)
+        .paused()
+        .build();
+    // submit most-expensive first; SPJF must still finish cheapest first
+    let handles: Vec<ResponseHandle> = sizes
+        .iter()
+        .map(|&n| svc.submit(Dft2dRequest::probe("sim-mkl", n)).unwrap())
+        .collect();
+    svc.start();
+    let done: Vec<(usize, f64)> = handles
+        .into_iter()
+        .zip(&sizes)
+        .map(|(h, &n)| (n, h.wait().unwrap().report.virtual_done_s.unwrap()))
+        .collect();
+    let mut by_completion = done.clone();
+    by_completion.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    assert_eq!(
+        by_completion.iter().map(|p| p.0).collect::<Vec<_>>(),
+        vec![8_064, 16_064, 24_704],
+        "virtual completion order must be shortest-predicted-job-first: {done:?}"
+    );
+    let stats = svc.stats();
+    assert_eq!(stats.planning_events, 0, "prewarmed wisdom");
+    assert_eq!(stats.wisdom_hits, 3);
+    svc.shutdown();
+}
+
+/// A zero starvation bound degrades SPJF to strict FIFO — the other end
+/// of the anti-starvation dial, again fully deterministic.
+#[test]
+fn zero_starvation_bound_means_fifo() {
+    let sizes = [24_704usize, 8_064];
+    let mut store = WisdomStore::new();
+    for &n in &sizes {
+        store.insert(WisdomRecord::from_simulator("sim-mkl", Package::Mkl, n, false));
+    }
+    let cfg = ServiceConfig { workers: 1, starvation_bound_s: 0.0, ..quick_cfg() };
+    let svc = ServiceBuilder::new(cfg)
+        .virtual_package("sim-mkl", Package::Mkl)
+        .wisdom(store)
+        .paused()
+        .build();
+    let handles: Vec<ResponseHandle> = sizes
+        .iter()
+        .map(|&n| svc.submit(Dft2dRequest::probe("sim-mkl", n)).unwrap())
+        .collect();
+    svc.start();
+    let done: Vec<f64> = handles
+        .into_iter()
+        .map(|h| h.wait().unwrap().report.virtual_done_s.unwrap())
+        .collect();
+    assert!(
+        done[0] < done[1],
+        "bound 0 must preserve submission order (big first): {done:?}"
+    );
+    svc.shutdown();
+}
+
+/// FPM-informed admission: wisdom-predicted cost vs deadline hint.
+#[test]
+fn admission_rejects_infeasible_deadlines() {
+    let mut store = WisdomStore::new();
+    store.insert(WisdomRecord::from_simulator("sim-fftw3", Package::Fftw3, 24_704, false));
+    let svc = ServiceBuilder::new(quick_cfg())
+        .virtual_package("sim-fftw3", Package::Fftw3)
+        .wisdom(store)
+        .build();
+    let err = svc
+        .submit(Dft2dRequest::probe("sim-fftw3", 24_704).with_deadline(1e-12))
+        .unwrap_err();
+    match err {
+        ServiceError::DeadlineInfeasible { predicted_s, hint_s } => {
+            assert!(predicted_s > hint_s);
+        }
+        other => panic!("expected DeadlineInfeasible, got {other}"),
+    }
+    assert_eq!(svc.stats().rejected, 1);
+    // generous deadline sails through
+    let ok = svc
+        .submit(Dft2dRequest::probe("sim-fftw3", 24_704).with_deadline(1e9))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(ok.report.virtual_done_s.is_some());
+    svc.shutdown();
+}
+
+/// Inverse requests take the exact dft2d path and undo forward service
+/// responses exactly enough for f64.
+#[test]
+fn service_inverse_roundtrip() {
+    let svc = ServiceBuilder::new(quick_cfg()).native().build();
+    let orig = SignalMatrix::random(24, 24, 11); // non-pow2 (Bluestein)
+    let fwd = svc
+        .submit(Dft2dRequest::forward("native", orig.clone()))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let back = svc
+        .submit(Dft2dRequest::inverse("native", fwd.matrix))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let err = back.matrix.max_abs_diff(&orig) / orig.norm().max(1.0);
+    assert!(err < 1e-9, "roundtrip rel err {err}");
+    svc.shutdown();
+}
