@@ -1,0 +1,81 @@
+//! Bench: Bluestein vs mixed-radix at the paper's N = 128·k sizes.
+//!
+//! The paper benchmarks grid sizes that are mostly *not* powers of two
+//! (384 = 2^7·3, 640 = 2^7·5, 1152 = 2^7·3^2, 3200 = 2^7·5^2). Before
+//! the mixed-radix executor, those lengths all paid Bluestein's chirp-z
+//! (pad to >= 2N pow2, three pow2 FFTs per row). This bench pins both
+//! kernels at each size so the speedup lands in the bench JSON
+//! trajectory (`results/bench_fft_sizes.json`).
+
+use hclfft::dft::bluestein::{fft_row_bluestein, BluesteinPlan};
+use hclfft::dft::fft::Direction;
+use hclfft::dft::radix::{fft_row_radix, RadixPlan};
+use hclfft::dft::SignalMatrix;
+use hclfft::stats::harness::{fft_flops, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::from_env("fft_sizes");
+    let rows = 16usize;
+    for &n in &[384usize, 640, 768, 1152, 3200] {
+        let orig = SignalMatrix::random(rows, n, n as u64);
+
+        // mixed-radix: the executor's native path for 5-smooth lengths
+        let radix_plan = RadixPlan::new(n);
+        let mut m = orig.clone();
+        let mut sr = vec![0.0; n];
+        let mut si = vec![0.0; n];
+        suite.bench_flops(&format!("radix_{rows}x{n}"), fft_flops(rows, n), || {
+            for r in 0..rows {
+                let span = r * n..(r + 1) * n;
+                fft_row_radix(
+                    &mut m.re[span.clone()],
+                    &mut m.im[span],
+                    &mut sr,
+                    &mut si,
+                    &radix_plan,
+                    Direction::Forward,
+                );
+            }
+        });
+
+        // Bluestein forced at the same length (the old path for these N)
+        let b_plan = BluesteinPlan::new(n);
+        let ml = b_plan.scratch_len();
+        let mut m2 = orig.clone();
+        let mut br = vec![0.0; ml];
+        let mut bi = vec![0.0; ml];
+        let mut cr = vec![0.0; ml];
+        let mut ci = vec![0.0; ml];
+        suite.bench_flops(&format!("bluestein_{rows}x{n}"), fft_flops(rows, n), || {
+            for r in 0..rows {
+                let span = r * n..(r + 1) * n;
+                fft_row_bluestein(
+                    &mut m2.re[span.clone()],
+                    &mut m2.im[span],
+                    &b_plan,
+                    Direction::Forward,
+                    &mut br,
+                    &mut bi,
+                    &mut cr,
+                    &mut ci,
+                );
+            }
+        });
+    }
+
+    // report the per-size speedup explicitly
+    println!("\n== bluestein/radix speedup ==");
+    let res = &suite.results;
+    for pair in res.chunks(2) {
+        if let [radix, blue] = pair {
+            println!(
+                "{:>20} vs {:<24} speedup {:.2}x",
+                radix.name,
+                blue.name,
+                blue.mean_s / radix.mean_s
+            );
+        }
+    }
+    suite.write_json(std::path::Path::new("results/bench_fft_sizes.json")).ok();
+    println!("{}", suite.report());
+}

@@ -19,10 +19,21 @@ fn main() {
                 .unwrap();
         });
     }
-    // non-pow2 (Bluestein) path — the paper's 128k grid sizes
+    // non-pow2 5-smooth paper sizes — mixed-radix since the executor
+    // refactor (see benches/bench_fft_sizes.rs for the vs-Bluestein A/B)
     for &n in &[192usize, 384, 1920] {
         let rows = 32;
         let mut m = SignalMatrix::random(rows, n, 1);
+        suite.bench_flops(&format!("smooth_{rows}x{n}"), fft_flops(rows, n), || {
+            NativeEngine
+                .fft_rows(&mut m.re, &mut m.im, rows, n, Direction::Forward, 1)
+                .unwrap();
+        });
+    }
+    // non-smooth length (128·7): the Bluestein fallback path
+    {
+        let (rows, n) = (32usize, 896usize);
+        let mut m = SignalMatrix::random(rows, n, 2);
         suite.bench_flops(&format!("bluestein_{rows}x{n}"), fft_flops(rows, n), || {
             NativeEngine
                 .fft_rows(&mut m.re, &mut m.im, rows, n, Direction::Forward, 1)

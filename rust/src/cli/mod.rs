@@ -120,7 +120,9 @@ SUBCOMMANDS:
   plan      Partition N rows across p abstract processors using FPMs
             --n <rows> --p <groups> [--eps <tol>] [--package mkl|fftw3|fftw2]
             [--pad] [--source sim|native]
-  run       Execute a 2D-DFT via an engine and report time/MFLOPs
+  run       Execute a 2D-DFT via an engine and report time/MFLOPs and
+            the row kernel used (mixed-radix for 5-smooth N, Bluestein
+            fallback otherwise)
             --n <size> [--engine native|pjrt|sim] [--algo lb|fpm|fpm-pad|basic]
             [--p <groups>] [--t <threads>] [--artifacts <dir>] [--verify]
   profile   Build speed functions for an engine (FPM construction)

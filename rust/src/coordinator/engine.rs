@@ -5,6 +5,9 @@
 //! implementations:
 //!
 //! * [`NativeEngine`] — the from-scratch rust FFT ([`crate::dft`]),
+//!   dispatching through the shared executor
+//!   ([`crate::dft::exec::fft_rows_pooled`]): mixed-radix for 5-smooth
+//!   lengths, Bluestein fallback, persistent pool, per-thread scratch,
 //! * `PjrtEngine` ([`crate::runtime`]) — AOT JAX/Pallas artifacts,
 //! * a virtual-time engine in [`crate::simulator`] for paper-scale sizes.
 //!
@@ -59,9 +62,27 @@ pub trait RowFftEngine: Sync {
     fn supported_lengths(&self) -> Option<Vec<usize>> {
         None
     }
+
+    /// Pad-candidate row lengths in `(n, n + window]` worth measuring
+    /// for this engine (PFFT-FPM-PAD Step 2's search grid). Default:
+    /// the paper's 128-step grid, intersected with `supported_lengths`
+    /// when the engine restricts lengths. Engines with a fast-length
+    /// structure (e.g. the native mixed-radix kernel's 5-smooth
+    /// lengths) override this so the pad search only prices lengths
+    /// they are actually fast at — letting PFFT-FPM-PAD pick 640
+    /// instead of jumping to 1024.
+    fn pad_candidates(&self, n: usize, window: usize) -> Vec<usize> {
+        let grid = crate::coordinator::pad::grid_candidates(n, window, 128);
+        match self.supported_lengths() {
+            None => grid,
+            Some(supported) => grid.into_iter().filter(|y| supported.contains(y)).collect(),
+        }
+    }
 }
 
-/// The native rust FFT engine (radix-2 + Bluestein, plan-cached).
+/// The native rust FFT engine (mixed-radix + Bluestein, plan-cached).
+/// A thin veneer over the shared executor: the row-FFT inner loop lives
+/// exactly once, in [`crate::dft::exec::fft_rows_pooled`].
 #[derive(Debug, Default, Clone, Copy)]
 pub struct NativeEngine;
 
@@ -80,58 +101,27 @@ impl RowFftEngine for NativeEngine {
         threads: usize,
     ) -> Result<(), EngineError> {
         debug_assert_eq!(re.len(), rows * n);
-        let threads = threads.max(1).min(rows.max(1));
-        if threads <= 1 || rows <= 1 {
-            fft_rows_chunk(re, im, rows, n, dir);
-            return Ok(());
-        }
-        let rows_per = rows.div_ceil(threads);
-        std::thread::scope(|scope| {
-            for (rc, ic) in re.chunks_mut(rows_per * n).zip(im.chunks_mut(rows_per * n)) {
-                scope.spawn(move || {
-                    fft_rows_chunk(rc, ic, rc.len() / n, n, dir);
-                });
-            }
-        });
+        crate::dft::exec::fft_rows_pooled(
+            crate::dft::exec::ExecCtx::global(),
+            re,
+            im,
+            rows,
+            n,
+            dir,
+            threads,
+        );
         Ok(())
     }
-}
 
-fn fft_rows_chunk(re: &mut [f64], im: &mut [f64], rows: usize, n: usize, dir: Direction) {
-    if n.is_power_of_two() {
-        let plan = crate::dft::plan::PlanCache::global().pow2(n);
-        let mut sr = vec![0.0; n];
-        let mut si = vec![0.0; n];
-        for r in 0..rows {
-            let span = r * n..(r + 1) * n;
-            crate::dft::fft::fft_row_pow2(
-                &mut re[span.clone()],
-                &mut im[span],
-                &mut sr,
-                &mut si,
-                &plan,
-                dir,
-            );
-        }
-    } else {
-        let plan = crate::dft::plan::PlanCache::global().bluestein(n);
-        let m = plan.scratch_len();
-        let mut br = vec![0.0; m];
-        let mut bi = vec![0.0; m];
-        let mut sr = vec![0.0; m];
-        let mut si = vec![0.0; m];
-        for r in 0..rows {
-            let span = r * n..(r + 1) * n;
-            crate::dft::bluestein::fft_row_bluestein(
-                &mut re[span.clone()],
-                &mut im[span],
-                &plan,
-                dir,
-                &mut br,
-                &mut bi,
-                &mut sr,
-                &mut si,
-            );
+    /// Mixed-radix makes every 5-smooth length a fast length: restrict
+    /// the pad search to 5-smooth points on the paper's 128-grid (with
+    /// the plain grid as fallback when the window holds none).
+    fn pad_candidates(&self, n: usize, window: usize) -> Vec<usize> {
+        let smooth = crate::coordinator::pad::smooth_grid_candidates(n, window, 128);
+        if smooth.is_empty() {
+            crate::coordinator::pad::grid_candidates(n, window, 128)
+        } else {
+            smooth
         }
     }
 }
@@ -170,5 +160,65 @@ mod tests {
     #[test]
     fn native_engine_supports_all_lengths() {
         assert_eq!(NativeEngine.supported_lengths(), None);
+    }
+
+    #[test]
+    fn native_engine_non_pow2_smooth_matches_naive() {
+        // the paper's 128·k sizes route through mixed-radix now
+        let engine = NativeEngine;
+        for &n in &[96usize, 384] {
+            let orig = SignalMatrix::random(4, n, 13);
+            let mut m = orig.clone();
+            engine
+                .fft_rows(&mut m.re, &mut m.im, 4, n, Direction::Forward, 3)
+                .unwrap();
+            let want = naive_dft_rows(&orig, false);
+            let scale = want.norm().max(1.0);
+            assert!(m.max_abs_diff(&want) / scale < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn small_row_count_large_n_still_bit_exact() {
+        // regression: rows < threads used to clamp the thread budget;
+        // the executor now splits within rows — values must not change
+        let engine = NativeEngine;
+        let n = crate::dft::exec::STAGE_PARALLEL_MIN_N;
+        let orig = SignalMatrix::random(2, n, 21);
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        engine.fft_rows(&mut a.re, &mut a.im, 2, n, Direction::Forward, 1).unwrap();
+        engine.fft_rows(&mut b.re, &mut b.im, 2, n, Direction::Forward, 8).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        // and the chunking policy actually fans out past the row count
+        assert_eq!(crate::dft::exec::work_units(2, n, 8), 8);
+    }
+
+    #[test]
+    fn native_pad_candidates_are_five_smooth() {
+        let c = NativeEngine.pad_candidates(384, 512);
+        assert_eq!(c, vec![512, 640, 768], "896 = 128·7 must be filtered out");
+        for &y in &c {
+            assert!(crate::dft::radix::is_five_smooth(y));
+        }
+        // default (trait) grid keeps every 128-multiple
+        struct AnyEngine;
+        impl RowFftEngine for AnyEngine {
+            fn name(&self) -> &str {
+                "any"
+            }
+            fn fft_rows(
+                &self,
+                _re: &mut [f64],
+                _im: &mut [f64],
+                _rows: usize,
+                _n: usize,
+                _dir: Direction,
+                _threads: usize,
+            ) -> Result<(), EngineError> {
+                Ok(())
+            }
+        }
+        assert_eq!(AnyEngine.pad_candidates(384, 512), vec![512, 640, 768, 896]);
     }
 }

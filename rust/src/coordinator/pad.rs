@@ -59,6 +59,31 @@ impl PadDecision {
     }
 }
 
+/// The paper's pad-candidate grid: multiples of `step` in `(n, n + window]`
+/// (§V-B uses a 128-point grid).
+pub fn grid_candidates(n: usize, window: usize, step: usize) -> Vec<usize> {
+    let step = step.max(1);
+    let mut v = Vec::new();
+    let mut y = (n / step + 1) * step;
+    while y <= n + window {
+        v.push(y);
+        y += step;
+    }
+    v
+}
+
+/// 5-smooth pad candidates on the grid: multiples of `step` in
+/// `(n, n + window]` whose only prime factors are {2, 3, 5} — the
+/// lengths the native mixed-radix kernel transforms at full speed
+/// (e.g. for N = 384 this yields {512, 640, 768} and drops 896 = 128·7,
+/// so PFFT-FPM-PAD can pick 640 instead of jumping to a power of two).
+pub fn smooth_grid_candidates(n: usize, window: usize, step: usize) -> Vec<usize> {
+    grid_candidates(n, window, step)
+        .into_iter()
+        .filter(|&y| crate::dft::radix::is_five_smooth(y))
+        .collect()
+}
+
 fn cost(x: usize, y: usize, speed: f64, model: PadCost) -> f64 {
     match model {
         PadCost::PaperRatio => x as f64 * y as f64 / speed,
@@ -186,6 +211,21 @@ mod tests {
             let dec = determine_pad_length(&c, x, 24704, PadCost::PaperRatio);
             assert_eq!(dec.n_padded, 24960, "x={x}");
         }
+    }
+
+    #[test]
+    fn grid_candidates_cover_window() {
+        assert_eq!(grid_candidates(384, 512, 128), vec![512, 640, 768, 896]);
+        // n off-grid still starts at the next multiple
+        assert_eq!(grid_candidates(400, 300, 128), vec![512, 640]);
+        assert_eq!(grid_candidates(384, 100, 128), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn smooth_candidates_drop_non_smooth_lengths() {
+        assert_eq!(smooth_grid_candidates(384, 512, 128), vec![512, 640, 768]);
+        // 1664 = 128·13 and 1792 = 128·14 are dropped; 1536 = 2^9·3 kept
+        assert_eq!(smooth_grid_candidates(1408, 512, 128), vec![1536, 1920]);
     }
 
     #[test]

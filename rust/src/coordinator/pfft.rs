@@ -12,9 +12,10 @@
 //! * `PFFT-FPM-PAD` — Section III-D: FPM rows + per-processor padded row
 //!   lengths from `Determine_Pad_Length`.
 //!
-//! Groups run as scoped threads over disjoint row ranges obtained with
-//! `split_at_mut`; the transpose between phases is the paper's Appendix A
-//! blocked transpose using the full p·t thread budget.
+//! Groups run as jobs on the shared [`crate::dft::exec::ExecCtx`] pool
+//! over disjoint row ranges obtained with `split_at_mut` — no per-call
+//! thread spawns; the transpose between phases is the paper's Appendix A
+//! blocked transpose using the full p·t thread budget on the same pool.
 
 use crate::coordinator::engine::{EngineError, RowFftEngine};
 use crate::coordinator::fpm::SpeedFunction;
@@ -189,26 +190,26 @@ fn row_phase(
     }
 
     let errors: std::sync::Mutex<Vec<EngineError>> = std::sync::Mutex::new(Vec::new());
-    std::thread::scope(|scope| {
-        for (i, (re, im)) in slices.into_iter().enumerate() {
-            let rows = d[i];
-            if rows == 0 {
-                continue;
-            }
-            let pad = pad_lens.map(|p| p[i]).unwrap_or(n);
-            let errors = &errors;
-            scope.spawn(move || {
-                let r = if pad == n {
-                    engine.fft_rows(re, im, rows, n, Direction::Forward, threads_per_group)
-                } else {
-                    fft_rows_padded(engine, re, im, rows, n, pad, threads_per_group)
-                };
-                if let Err(e) = r {
-                    errors.lock().unwrap().push(e);
-                }
-            });
+    let mut jobs: Vec<crate::dft::exec::Job> = Vec::with_capacity(d.len());
+    for (i, (re, im)) in slices.into_iter().enumerate() {
+        let rows = d[i];
+        if rows == 0 {
+            continue;
         }
-    });
+        let pad = pad_lens.map(|p| p[i]).unwrap_or(n);
+        let errors = &errors;
+        jobs.push(Box::new(move || {
+            let r = if pad == n {
+                engine.fft_rows(re, im, rows, n, Direction::Forward, threads_per_group)
+            } else {
+                fft_rows_padded(engine, re, im, rows, n, pad, threads_per_group)
+            };
+            if let Err(e) = r {
+                errors.lock().unwrap().push(e);
+            }
+        }));
+    }
+    crate::dft::exec::ExecCtx::global().run_jobs(jobs);
 
     match errors.into_inner().unwrap().into_iter().next() {
         Some(e) => Err(e),
@@ -217,8 +218,9 @@ fn row_phase(
 }
 
 /// Padded row FFTs (Algorithm 7 `1D_ROW_FFTS_LOCAL_PADDED`): copy the
-/// rows into a (rows × pad) zeroed work buffer, transform at length
-/// `pad`, copy the first `n` columns back.
+/// rows into a (rows × pad) zeroed work buffer leased from the calling
+/// thread's scratch arena, transform at length `pad`, copy the first
+/// `n` columns back.
 fn fft_rows_padded(
     engine: &dyn RowFftEngine,
     re: &mut [f64],
@@ -229,18 +231,19 @@ fn fft_rows_padded(
     threads: usize,
 ) -> Result<(), EngineError> {
     debug_assert!(pad > n);
-    let mut wre = vec![0.0f64; rows * pad];
-    let mut wim = vec![0.0f64; rows * pad];
-    for r in 0..rows {
-        wre[r * pad..r * pad + n].copy_from_slice(&re[r * n..(r + 1) * n]);
-        wim[r * pad..r * pad + n].copy_from_slice(&im[r * n..(r + 1) * n]);
-    }
-    engine.fft_rows(&mut wre, &mut wim, rows, pad, Direction::Forward, threads)?;
-    for r in 0..rows {
-        re[r * n..(r + 1) * n].copy_from_slice(&wre[r * pad..r * pad + n]);
-        im[r * n..(r + 1) * n].copy_from_slice(&wim[r * pad..r * pad + n]);
-    }
-    Ok(())
+    crate::dft::exec::with_scratch(|scratch| {
+        let (wre, wim) = scratch.pair(rows * pad);
+        for r in 0..rows {
+            wre[r * pad..r * pad + n].copy_from_slice(&re[r * n..(r + 1) * n]);
+            wim[r * pad..r * pad + n].copy_from_slice(&im[r * n..(r + 1) * n]);
+        }
+        engine.fft_rows(wre, wim, rows, pad, Direction::Forward, threads)?;
+        for r in 0..rows {
+            re[r * n..(r + 1) * n].copy_from_slice(&wre[r * pad..r * pad + n]);
+            im[r * n..(r + 1) * n].copy_from_slice(&wim[r * pad..r * pad + n]);
+        }
+        Ok(())
+    })
 }
 
 #[cfg(test)]

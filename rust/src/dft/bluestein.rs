@@ -1,8 +1,10 @@
-//! Arbitrary-length FFT via Bluestein's chirp-z transform.
+//! Arbitrary-length FFT via Bluestein's chirp-z transform — the
+//! executor's fallback for *non-smooth* lengths.
 //!
-//! The paper's problem sizes are N = 128·k (128, 192, …, 64000) — mostly
-//! *not* powers of two — while the radix-2 engine (and the L1 Pallas
-//! kernel) only handles powers of two. Bluestein closes the gap:
+//! Lengths whose prime factors are all in {2, 3, 5} run the native
+//! mixed-radix kernel ([`crate::dft::radix`]) instead; this module
+//! handles everything else (primes, 128·7 = 896, 128·193 = 24704, …),
+//! where no small-radix schedule exists:
 //!
 //!   X_k = b*_k · Σ_j (a_j · b*_j) · b_{k-j},   b_j = exp(iπ j²/n)
 //!

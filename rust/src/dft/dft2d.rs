@@ -6,15 +6,17 @@
 //! in [`crate::coordinator::pfft`]; this module provides the engine
 //! primitives they drive.
 
-use crate::dft::bluestein::fft_row_bluestein;
-use crate::dft::fft::{fft_row_pow2, Direction};
-use crate::dft::plan::PlanCache;
+use crate::dft::exec::{fft_rows_pooled, ExecCtx};
+use crate::dft::fft::Direction;
 use crate::dft::transpose::{transpose_in_place_parallel, DEFAULT_BLOCK};
 use crate::dft::SignalMatrix;
 
 /// Execute `rows` 1D-FFTs over the given contiguous row range of `m`
-/// using `threads` worker threads (the paper's `1D_ROW_FFTS_LOCAL` with a
-/// thread group). Arbitrary row length via Bluestein.
+/// with a `threads`-wide slice of the shared pool (the paper's
+/// `1D_ROW_FFTS_LOCAL` with a thread group). Mixed-radix for 5-smooth
+/// row lengths, Bluestein fallback otherwise — this is a thin veneer
+/// over the single executor entry point
+/// [`crate::dft::exec::fft_rows_pooled`].
 pub fn row_ffts_local(
     m: &mut SignalMatrix,
     row_start: usize,
@@ -27,62 +29,9 @@ pub fn row_ffts_local(
         return;
     }
     assert!(row_start + rows <= m.rows, "row range out of bounds");
-    let threads = threads.max(1).min(rows);
-
     let re = &mut m.re[row_start * n..(row_start + rows) * n];
     let im = &mut m.im[row_start * n..(row_start + rows) * n];
-
-    if threads == 1 {
-        fft_rows_serial(re, im, rows, n, dir);
-        return;
-    }
-
-    // split the rows across the group's threads; each worker gets its own
-    // scratch + shared plan (plans are read-only).
-    let rows_per = rows.div_ceil(threads);
-    let re_chunks = re.chunks_mut(rows_per * n);
-    let im_chunks = im.chunks_mut(rows_per * n);
-    std::thread::scope(|scope| {
-        for (rc, ic) in re_chunks.zip(im_chunks) {
-            scope.spawn(move || {
-                let r = rc.len() / n;
-                fft_rows_serial(rc, ic, r, n, dir);
-            });
-        }
-    });
-}
-
-/// Serial batched row FFT with plan reuse (pow2 fast path, Bluestein else).
-fn fft_rows_serial(re: &mut [f64], im: &mut [f64], rows: usize, n: usize, dir: Direction) {
-    if n.is_power_of_two() {
-        let plan = PlanCache::global().pow2(n);
-        let mut sr = vec![0.0; n];
-        let mut si = vec![0.0; n];
-        for r in 0..rows {
-            let span = r * n..(r + 1) * n;
-            fft_row_pow2(&mut re[span.clone()], &mut im[span], &mut sr, &mut si, &plan, dir);
-        }
-    } else {
-        let plan = PlanCache::global().bluestein(n);
-        let mlen = plan.scratch_len();
-        let mut br = vec![0.0; mlen];
-        let mut bi = vec![0.0; mlen];
-        let mut sr = vec![0.0; mlen];
-        let mut si = vec![0.0; mlen];
-        for r in 0..rows {
-            let span = r * n..(r + 1) * n;
-            fft_row_bluestein(
-                &mut re[span.clone()],
-                &mut im[span],
-                &plan,
-                dir,
-                &mut br,
-                &mut bi,
-                &mut sr,
-                &mut si,
-            );
-        }
-    }
+    fft_rows_pooled(ExecCtx::global(), re, im, rows, n, dir, threads);
 }
 
 /// Full 2D-DFT of a square signal matrix with one thread group — the
@@ -169,12 +118,15 @@ mod tests {
     }
 
     #[test]
-    fn non_pow2_rows_via_bluestein() {
-        let orig = SignalMatrix::random(3, 24, 8);
-        let mut m = orig.clone();
-        row_ffts_local(&mut m, 0, 3, Direction::Forward, 1);
-        let want = crate::dft::naive_dft_rows(&orig, false);
-        let scale = want.norm().max(1.0);
-        assert!(m.max_abs_diff(&want) / scale < 1e-10);
+    fn non_pow2_rows_supported() {
+        // 24 = 2^3·3 → mixed-radix; 22 = 2·11 → Bluestein fallback
+        for &n in &[24usize, 22] {
+            let orig = SignalMatrix::random(3, n, 8);
+            let mut m = orig.clone();
+            row_ffts_local(&mut m, 0, 3, Direction::Forward, 1);
+            let want = crate::dft::naive_dft_rows(&orig, false);
+            let scale = want.norm().max(1.0);
+            assert!(m.max_abs_diff(&want) / scale < 1e-10, "n={n}");
+        }
     }
 }

@@ -6,9 +6,14 @@
 //! index `q + s·p`; each stage halves `n_cur`, doubles `s`, and the result
 //! lands in natural order (no bit reversal).
 //!
-//! The hot entry point is [`fft_rows_pow2_with`], which transforms a batch
-//! of rows reusing a cached [`plan::Pow2Plan`] twiddle table and one
-//! scratch buffer — the plan-once/execute-many shape of Algorithm 6.
+//! Since the mixed-radix executor landed ([`crate::dft::radix`] +
+//! [`crate::dft::exec`]), general row FFTs dispatch through
+//! [`crate::dft::exec::fft_rows_pooled`]; this kernel remains the engine
+//! behind Bluestein's internal convolution FFTs ([`fft_rows_pow2_with`]
+//! transforms a batch of rows reusing a cached [`plan::Pow2Plan`] twiddle
+//! table and one scratch buffer — the plan-once/execute-many shape of
+//! Algorithm 6) and an independent cross-check for the all-2s radix
+//! schedule.
 
 use crate::dft::plan::Pow2Plan;
 

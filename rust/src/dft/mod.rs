@@ -4,14 +4,27 @@
 //! neither exists here, so this module provides the multithreaded 2D-DFT
 //! compute engine the coordinator drives on the real machine:
 //!
-//! * [`plan`] — cached FFT plans (twiddle tables, Bluestein state): the
-//!   analogue of `fftw_plan_many_dft` (Algorithm 6's plan/execute/destroy
-//!   becomes plan-once/execute-many, see DESIGN.md §Perf),
+//! * [`plan`] — cached FFT plans (twiddle tables, factor schedules,
+//!   Bluestein state): the analogue of `fftw_plan_many_dft` (Algorithm
+//!   6's plan/execute/destroy becomes plan-once/execute-many, see
+//!   DESIGN.md §Perf); [`plan::PlanCache::row_plan`] is the single
+//!   kernel-dispatch point,
+//! * [`radix`] — the mixed-radix (2/3/5) Stockham DIF kernel: every
+//!   5-smooth length — which includes most of the paper's N = 128·k
+//!   grid (384 = 2⁷·3, 640 = 2⁷·5, 1152 = 2⁷·3², …) — runs natively in
+//!   O(n log n),
 //! * [`fft`] — iterative Stockham radix-2 (same algorithm as the L1
-//!   Pallas kernel, so the two implementations cross-check each other),
-//! * [`bluestein`] — arbitrary-length FFT via the chirp-z transform (the
-//!   paper's problem sizes N = 128·k are mostly *not* powers of two),
-//! * [`transpose`] — the paper's Appendix A blocked in-place transpose,
+//!   Pallas kernel, so the two implementations cross-check each other;
+//!   still the engine behind Bluestein's internal convolution FFTs),
+//! * [`bluestein`] — chirp-z fallback for the remaining *non-smooth*
+//!   lengths (primes etc.): pads to a ≥ 2N power of two, three pow2
+//!   FFTs per row — correct for any N, ~5-6x the flops of mixed-radix,
+//! * [`exec`] — the shared execution context (`ExecCtx`): one
+//!   persistent worker pool + per-thread scratch arenas; its
+//!   [`exec::fft_rows_pooled`] is the single row-FFT entry point every
+//!   layer (engine, drivers, service) dispatches through,
+//! * [`transpose`] — the paper's Appendix A blocked in-place transpose
+//!   (parallel variant runs on the shared pool),
 //! * [`dft2d`] — the row-column 2D-DFT driver with thread groups.
 //!
 //! Layout is SoA split planes (`re`, `im` as separate slices), matching
@@ -21,8 +34,10 @@
 pub mod bluestein;
 pub mod dft2d;
 pub mod dft3d;
+pub mod exec;
 pub mod fft;
 pub mod plan;
+pub mod radix;
 pub mod transpose;
 
 /// A complex matrix in SoA split-plane layout, row-major.

@@ -1,15 +1,22 @@
 //! Cached FFT plans — the plan-once/execute-many analogue of
 //! `fftw_plan_many_dft` (paper Algorithm 6).
 //!
-//! A [`Pow2Plan`] holds the forward twiddle table for a power-of-two
-//! length; a [`BluesteinPlan`] (built by [`crate::dft::bluestein`]) holds
-//! the chirp sequences and the padded pow2 sub-plan for arbitrary lengths.
-//! [`PlanCache`] memoizes both behind a mutex so abstract-processor
-//! threads share tables (twiddle construction is O(n) but shows up hard
-//! in profiles when executed per call — see EXPERIMENTS.md §Perf).
+//! A [`crate::dft::radix::RadixPlan`] holds the factor schedule and
+//! per-stage twiddles for any 5-smooth length (the generalized plan
+//! behind [`RowPlan`]); a [`Pow2Plan`] holds the forward twiddle table
+//! for a power-of-two length (used by Bluestein's internal convolution
+//! FFTs); a [`BluesteinPlan`](crate::dft::bluestein::BluesteinPlan)
+//! holds the chirp sequences and padded pow2 sub-plan for the remaining
+//! (non-smooth) lengths. [`PlanCache`] memoizes all three behind
+//! mutexes so abstract-processor threads share tables (twiddle
+//! construction is O(n) but shows up hard in profiles when executed per
+//! call — see EXPERIMENTS.md §Perf), and [`PlanCache::row_plan`] is the
+//! single dispatch point deciding which kernel a row length gets.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::dft::radix::{is_five_smooth, RadixPlan};
 
 /// Twiddle table for a power-of-two FFT: `tw[k] = exp(-2πi k / n)` for
 /// k in [0, n/2).
@@ -41,9 +48,44 @@ impl Pow2Plan {
     }
 }
 
-/// Process-wide plan cache (pow2 plans keyed by n).
+/// The memoized kernel choice for one row length: mixed-radix for
+/// 5-smooth lengths, Bluestein for everything else.
+#[derive(Clone)]
+pub enum RowPlan {
+    Radix(Arc<RadixPlan>),
+    Bluestein(Arc<crate::dft::bluestein::BluesteinPlan>),
+}
+
+impl RowPlan {
+    /// The row length this plan transforms.
+    pub fn n(&self) -> usize {
+        match self {
+            RowPlan::Radix(p) => p.n,
+            RowPlan::Bluestein(p) => p.n,
+        }
+    }
+
+    /// Kernel label for reports ("mixed-radix" / "bluestein").
+    pub fn kernel(&self) -> &'static str {
+        match self {
+            RowPlan::Radix(_) => "mixed-radix",
+            RowPlan::Bluestein(_) => "bluestein",
+        }
+    }
+
+    /// The factor schedule (empty for Bluestein lengths).
+    pub fn factors(&self) -> Vec<usize> {
+        match self {
+            RowPlan::Radix(p) => p.factors.clone(),
+            RowPlan::Bluestein(_) => Vec::new(),
+        }
+    }
+}
+
+/// Process-wide plan cache (radix/pow2/Bluestein plans keyed by n).
 #[derive(Default)]
 pub struct PlanCache {
+    radix: Mutex<HashMap<usize, Arc<RadixPlan>>>,
     pow2: Mutex<HashMap<usize, Arc<Pow2Plan>>>,
     bluestein: Mutex<HashMap<usize, Arc<crate::dft::bluestein::BluesteinPlan>>>,
 }
@@ -57,6 +99,21 @@ impl PlanCache {
     pub fn pow2(&self, n: usize) -> Arc<Pow2Plan> {
         let mut map = self.pow2.lock().unwrap();
         map.entry(n).or_insert_with(|| Arc::new(Pow2Plan::new(n))).clone()
+    }
+
+    /// Mixed-radix plan for a 5-smooth length (panics otherwise).
+    pub fn radix(&self, n: usize) -> Arc<RadixPlan> {
+        let mut map = self.radix.lock().unwrap();
+        map.entry(n).or_insert_with(|| Arc::new(RadixPlan::new(n))).clone()
+    }
+
+    /// The executor's dispatch: the right kernel plan for a row length.
+    pub fn row_plan(&self, n: usize) -> RowPlan {
+        if is_five_smooth(n) {
+            RowPlan::Radix(self.radix(n))
+        } else {
+            RowPlan::Bluestein(self.bluestein(n))
+        }
     }
 
     pub fn bluestein(&self, n: usize) -> Arc<crate::dft::bluestein::BluesteinPlan> {
@@ -106,5 +163,33 @@ mod tests {
         let a = PlanCache::global().pow2(32);
         let b = PlanCache::global().pow2(32);
         assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn row_plan_dispatches_by_smoothness() {
+        let cache = PlanCache::default();
+        // 5-smooth (including non-pow2 paper sizes) → mixed-radix
+        for &n in &[64usize, 384, 640, 1152] {
+            let p = cache.row_plan(n);
+            assert!(matches!(p, RowPlan::Radix(_)), "n={n}");
+            assert_eq!(p.kernel(), "mixed-radix");
+            assert_eq!(p.n(), n);
+            assert!(!p.factors().is_empty());
+        }
+        // non-smooth (prime factor > 5) → Bluestein fallback
+        for &n in &[7usize, 896, 1000 * 7 + 3] {
+            let p = cache.row_plan(n);
+            assert!(matches!(p, RowPlan::Bluestein(_)), "n={n}");
+            assert_eq!(p.kernel(), "bluestein");
+            assert!(p.factors().is_empty());
+        }
+        // cached: same Arc comes back
+        let a = cache.row_plan(384);
+        let b = cache.row_plan(384);
+        if let (RowPlan::Radix(pa), RowPlan::Radix(pb)) = (&a, &b) {
+            assert!(Arc::ptr_eq(pa, pb));
+        } else {
+            panic!("expected radix plans");
+        }
     }
 }

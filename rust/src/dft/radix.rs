@@ -1,0 +1,589 @@
+//! Mixed-radix (2/3/5) iterative Stockham DIF FFT.
+//!
+//! The paper's problem sizes are N = 128·k — mostly *not* powers of two
+//! (384 = 2⁷·3, 640 = 2⁷·5, 1152 = 2⁷·3²). The radix-2 kernel
+//! ([`crate::dft::fft`]) cannot run them natively, and routing them
+//! through Bluestein's chirp-z ([`crate::dft::bluestein`]) pads to a
+//! ≥ 2N power of two and pays three pow2 FFTs per row — a ~5-6x flop
+//! overhead on exactly the sizes the paper benchmarks. This module
+//! closes that gap with a native mixed-radix kernel: any 5-smooth length
+//! (factors in {2, 3, 5}) runs in O(n log n) directly; Bluestein is
+//! demoted to the non-smooth fallback (primes and the like).
+//!
+//! Same decimation-in-frequency Stockham formulation as the radix-2
+//! kernel, generalized: state is viewed as an `(n_cur, stride)` matrix
+//! with original index `stride·p + q`; a radix-r stage gathers the r
+//! blocks `p, p+m, …, p+(r−1)m` (m = n_cur/r), applies the hard-coded
+//! r-point butterfly, multiplies outputs k = 1..r by the stage twiddle
+//! `exp(−2πi·p·k/n_cur)`, and scatters to blocks `r·p + k`. Each stage
+//! divides `n_cur` by r and multiplies `stride` by r; the result lands
+//! in natural order (no digit reversal).
+//!
+//! [`apply_stage_range`] applies one stage over a sub-range of `p`, so
+//! the executor ([`crate::dft::exec`]) can split a *single long row*
+//! across pool workers (disjoint output blocks per `p`) with bit-exact
+//! results regardless of the split.
+
+use crate::dft::fft::Direction;
+
+/// Factor `n` into its {2, 3, 5} prime factors (ascending), or `None`
+/// if `n` has any other prime factor (or is zero). `n == 1` factors as
+/// the empty product.
+pub fn factorize_235(n: usize) -> Option<Vec<usize>> {
+    if n == 0 {
+        return None;
+    }
+    let mut rem = n;
+    let mut factors = Vec::new();
+    for r in [2usize, 3, 5] {
+        while rem % r == 0 {
+            factors.push(r);
+            rem /= r;
+        }
+    }
+    if rem == 1 {
+        Some(factors)
+    } else {
+        None
+    }
+}
+
+/// Is `n` 5-smooth (product of 2s, 3s and 5s only)? Allocation-free —
+/// this runs on every row-FFT dispatch.
+pub fn is_five_smooth(n: usize) -> bool {
+    if n == 0 {
+        return false;
+    }
+    let mut rem = n;
+    for r in [2usize, 3, 5] {
+        while rem % r == 0 {
+            rem /= r;
+        }
+    }
+    rem == 1
+}
+
+/// Human-readable row-kernel description for a length (CLI reports).
+pub fn kernel_summary(n: usize) -> String {
+    if n == 0 {
+        return "empty".to_string();
+    }
+    match factorize_235(n) {
+        Some(f) if f.is_empty() => "identity".to_string(),
+        Some(f) => {
+            let (mut two, mut three, mut five) = (0usize, 0usize, 0usize);
+            for r in f {
+                match r {
+                    2 => two += 1,
+                    3 => three += 1,
+                    _ => five += 1,
+                }
+            }
+            let mut parts = Vec::new();
+            for (b, e) in [(2usize, two), (3, three), (5, five)] {
+                match e {
+                    0 => {}
+                    1 => parts.push(b.to_string()),
+                    _ => parts.push(format!("{b}^{e}")),
+                }
+            }
+            format!("mixed-radix {}", parts.join("*"))
+        }
+        None => {
+            let m = (2 * n - 1).next_power_of_two();
+            format!("bluestein (pow2 pad {m})")
+        }
+    }
+}
+
+/// One DIF stage: radix, sub-DFT geometry, and the twiddle table
+/// `tw[p·(r−1) + (k−1)] = exp(−2πi·p·k/n_cur)` for p ∈ [0, m), k ∈ [1, r).
+#[derive(Clone, Debug)]
+pub struct RadixStage {
+    pub radix: usize,
+    /// DFT length still to be resolved when this stage runs.
+    pub n_cur: usize,
+    /// lane width (original-index stride factor) at this stage
+    pub stride: usize,
+    tw_re: Vec<f64>,
+    tw_im: Vec<f64>,
+}
+
+impl RadixStage {
+    /// Butterfly count of this stage (`n_cur / radix`).
+    #[inline]
+    pub fn butterflies(&self) -> usize {
+        self.n_cur / self.radix
+    }
+}
+
+/// Factor schedule + per-stage twiddles for a 5-smooth length — the
+/// generalized plan that replaces pow2-only dispatch.
+#[derive(Clone, Debug)]
+pub struct RadixPlan {
+    pub n: usize,
+    /// radix schedule (ascending factors of n)
+    pub factors: Vec<usize>,
+    pub stages: Vec<RadixStage>,
+}
+
+impl RadixPlan {
+    /// Plan a 5-smooth length; panics otherwise (see [`RadixPlan::try_new`]).
+    pub fn new(n: usize) -> RadixPlan {
+        RadixPlan::try_new(n)
+            .unwrap_or_else(|| panic!("RadixPlan requires a 5-smooth length, got {n}"))
+    }
+
+    /// Plan a 5-smooth length, or `None` when `n` has other factors
+    /// (those lengths belong to Bluestein).
+    pub fn try_new(n: usize) -> Option<RadixPlan> {
+        let factors = factorize_235(n)?;
+        let mut stages = Vec::with_capacity(factors.len());
+        let mut n_cur = n;
+        let mut stride = 1usize;
+        for &r in &factors {
+            let m = n_cur / r;
+            let mut tw_re = Vec::with_capacity(m * (r - 1));
+            let mut tw_im = Vec::with_capacity(m * (r - 1));
+            for p in 0..m {
+                for k in 1..r {
+                    // p·k mod n_cur keeps the angle argument small (exactness)
+                    let pk = (p * k) % n_cur;
+                    let ang = -2.0 * std::f64::consts::PI * pk as f64 / n_cur as f64;
+                    tw_re.push(ang.cos());
+                    tw_im.push(ang.sin());
+                }
+            }
+            stages.push(RadixStage { radix: r, n_cur, stride, tw_re, tw_im });
+            n_cur = m;
+            stride *= r;
+        }
+        Some(RadixPlan { n, factors, stages })
+    }
+}
+
+/// Transform a single length-`n` row in `re`/`im`, using `plan` and a
+/// same-length ping-pong scratch. O(n log n), natural output order.
+pub fn fft_row_radix(
+    re: &mut [f64],
+    im: &mut [f64],
+    scratch_re: &mut [f64],
+    scratch_im: &mut [f64],
+    plan: &RadixPlan,
+    dir: Direction,
+) {
+    let n = plan.n;
+    debug_assert_eq!(re.len(), n);
+    debug_assert_eq!(scratch_re.len(), n);
+
+    let mut in_src = true; // data currently in re/im?
+    for stage in &plan.stages {
+        let m = stage.butterflies();
+        if in_src {
+            apply_stage_range(stage, dir, re, im, scratch_re, scratch_im, 0, m);
+        } else {
+            apply_stage_range(stage, dir, scratch_re, scratch_im, re, im, 0, m);
+        }
+        in_src = !in_src;
+    }
+    if !in_src {
+        re.copy_from_slice(scratch_re);
+        im.copy_from_slice(scratch_im);
+    }
+    if dir == Direction::Inverse {
+        let inv_n = 1.0 / n as f64;
+        for v in re.iter_mut() {
+            *v *= inv_n;
+        }
+        for v in im.iter_mut() {
+            *v *= inv_n;
+        }
+    }
+}
+
+/// Apply one DIF stage for butterflies `p ∈ [p_lo, p_hi)`, reading the
+/// full `src` planes and writing `dst`, which must cover *exactly* the
+/// output blocks of the range: `dst.len() == (p_hi − p_lo)·r·stride`
+/// (the range's blocks are contiguous, starting at absolute offset
+/// `r·stride·p_lo`). Because ranges own disjoint output slices, the
+/// executor runs them concurrently with plain `split_at_mut`; the
+/// arithmetic is identical regardless of how the range is split
+/// (bit-exact thread-count invariance).
+#[allow(clippy::too_many_arguments)]
+pub fn apply_stage_range(
+    stage: &RadixStage,
+    dir: Direction,
+    src_re: &[f64],
+    src_im: &[f64],
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+    p_lo: usize,
+    p_hi: usize,
+) {
+    let m = stage.butterflies();
+    let stride = stage.stride;
+    debug_assert!(p_hi <= m);
+    debug_assert_eq!(dst_re.len(), (p_hi - p_lo) * stage.radix * stride);
+    // plan stores forward twiddles; inverse conjugates via `sign`
+    let sign = if dir == Direction::Inverse { -1.0 } else { 1.0 };
+    match stage.radix {
+        2 => stage2(stage, sign, src_re, src_im, dst_re, dst_im, p_lo, p_hi, m, stride),
+        3 => stage3(stage, sign, src_re, src_im, dst_re, dst_im, p_lo, p_hi, m, stride),
+        5 => stage5(stage, sign, src_re, src_im, dst_re, dst_im, p_lo, p_hi, m, stride),
+        other => unreachable!("unsupported radix {other}"),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn stage2(
+    stage: &RadixStage,
+    sign: f64,
+    src_re: &[f64],
+    src_im: &[f64],
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+    p_lo: usize,
+    p_hi: usize,
+    m: usize,
+    stride: usize,
+) {
+    for p in p_lo..p_hi {
+        let wr = stage.tw_re[p];
+        let wi = sign * stage.tw_im[p];
+        let a_base = stride * p;
+        let b_base = stride * (p + m);
+        let o_base = stride * 2 * (p - p_lo);
+        // explicit lane subslices let LLVM drop bounds checks and
+        // vectorize the q loop (same shape as the radix-2 kernel)
+        let sar = &src_re[a_base..a_base + stride];
+        let sai = &src_im[a_base..a_base + stride];
+        let sbr = &src_re[b_base..b_base + stride];
+        let sbi = &src_im[b_base..b_base + stride];
+        let (d0r, d1r) = dst_re[o_base..o_base + 2 * stride].split_at_mut(stride);
+        let (d0i, d1i) = dst_im[o_base..o_base + 2 * stride].split_at_mut(stride);
+        for q in 0..stride {
+            let ar = sar[q];
+            let ai = sai[q];
+            let br = sbr[q];
+            let bi = sbi[q];
+            d0r[q] = ar + br;
+            d0i[q] = ai + bi;
+            let xr = ar - br;
+            let xi = ai - bi;
+            d1r[q] = xr * wr - xi * wi;
+            d1i[q] = xr * wi + xi * wr;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn stage3(
+    stage: &RadixStage,
+    sign: f64,
+    src_re: &[f64],
+    src_im: &[f64],
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+    p_lo: usize,
+    p_hi: usize,
+    m: usize,
+    stride: usize,
+) {
+    const C3: f64 = -0.5; // cos(2π/3)
+    let s3 = sign * (-(3.0f64.sqrt()) / 2.0); // sin(−2π/3), sign-adjusted
+    for p in p_lo..p_hi {
+        let t = 2 * p;
+        let w1r = stage.tw_re[t];
+        let w1i = sign * stage.tw_im[t];
+        let w2r = stage.tw_re[t + 1];
+        let w2i = sign * stage.tw_im[t + 1];
+        let a0 = stride * p;
+        let a1 = stride * (p + m);
+        let a2 = stride * (p + 2 * m);
+        let o = stride * 3 * (p - p_lo);
+        let s0r = &src_re[a0..a0 + stride];
+        let s0i = &src_im[a0..a0 + stride];
+        let s1r = &src_re[a1..a1 + stride];
+        let s1i = &src_im[a1..a1 + stride];
+        let s2r = &src_re[a2..a2 + stride];
+        let s2i = &src_im[a2..a2 + stride];
+        let (d0r, rest_r) = dst_re[o..o + 3 * stride].split_at_mut(stride);
+        let (d1r, d2r) = rest_r.split_at_mut(stride);
+        let (d0i, rest_i) = dst_im[o..o + 3 * stride].split_at_mut(stride);
+        let (d1i, d2i) = rest_i.split_at_mut(stride);
+        for q in 0..stride {
+            let x0r = s0r[q];
+            let x0i = s0i[q];
+            let x1r = s1r[q];
+            let x1i = s1i[q];
+            let x2r = s2r[q];
+            let x2i = s2i[q];
+            let tr = x1r + x2r;
+            let ti = x1i + x2i;
+            let dr = x1r - x2r;
+            let di = x1i - x2i;
+            d0r[q] = x0r + tr;
+            d0i[q] = x0i + ti;
+            let br = x0r + C3 * tr;
+            let bi = x0i + C3 * ti;
+            // y1 = b + i·s3·d, y2 = b − i·s3·d
+            let y1r = br - s3 * di;
+            let y1i = bi + s3 * dr;
+            let y2r = br + s3 * di;
+            let y2i = bi - s3 * dr;
+            d1r[q] = y1r * w1r - y1i * w1i;
+            d1i[q] = y1r * w1i + y1i * w1r;
+            d2r[q] = y2r * w2r - y2i * w2i;
+            d2i[q] = y2r * w2i + y2i * w2r;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn stage5(
+    stage: &RadixStage,
+    sign: f64,
+    src_re: &[f64],
+    src_im: &[f64],
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+    p_lo: usize,
+    p_hi: usize,
+    m: usize,
+    stride: usize,
+) {
+    let fifth = 2.0 * std::f64::consts::PI / 5.0;
+    let c1 = fifth.cos(); // cos(2π/5)
+    let c2 = (2.0 * fifth).cos(); // cos(4π/5)
+    let s1 = sign * (-fifth.sin()); // sin(−2π/5), sign-adjusted
+    let s2 = sign * (-(2.0 * fifth).sin()); // sin(−4π/5), sign-adjusted
+    for p in p_lo..p_hi {
+        let t = 4 * p;
+        let mut wr = [0.0f64; 4];
+        let mut wi = [0.0f64; 4];
+        for k in 0..4 {
+            wr[k] = stage.tw_re[t + k];
+            wi[k] = sign * stage.tw_im[t + k];
+        }
+        let o = stride * 5 * (p - p_lo);
+        let bases = [
+            stride * p,
+            stride * (p + m),
+            stride * (p + 2 * m),
+            stride * (p + 3 * m),
+            stride * (p + 4 * m),
+        ];
+        let s0r = &src_re[bases[0]..bases[0] + stride];
+        let s0i = &src_im[bases[0]..bases[0] + stride];
+        let s1r = &src_re[bases[1]..bases[1] + stride];
+        let s1i = &src_im[bases[1]..bases[1] + stride];
+        let s2r = &src_re[bases[2]..bases[2] + stride];
+        let s2i = &src_im[bases[2]..bases[2] + stride];
+        let s3r = &src_re[bases[3]..bases[3] + stride];
+        let s3i = &src_im[bases[3]..bases[3] + stride];
+        let s4r = &src_re[bases[4]..bases[4] + stride];
+        let s4i = &src_im[bases[4]..bases[4] + stride];
+        let (d0r, rest_r) = dst_re[o..o + 5 * stride].split_at_mut(stride);
+        let (d1r, rest_r) = rest_r.split_at_mut(stride);
+        let (d2r, rest_r) = rest_r.split_at_mut(stride);
+        let (d3r, d4r) = rest_r.split_at_mut(stride);
+        let (d0i, rest_i) = dst_im[o..o + 5 * stride].split_at_mut(stride);
+        let (d1i, rest_i) = rest_i.split_at_mut(stride);
+        let (d2i, rest_i) = rest_i.split_at_mut(stride);
+        let (d3i, d4i) = rest_i.split_at_mut(stride);
+        for q in 0..stride {
+            let (x0r, x0i) = (s0r[q], s0i[q]);
+            let (x1r, x1i) = (s1r[q], s1i[q]);
+            let (x2r, x2i) = (s2r[q], s2i[q]);
+            let (x3r, x3i) = (s3r[q], s3i[q]);
+            let (x4r, x4i) = (s4r[q], s4i[q]);
+            let t1r = x1r + x4r;
+            let t1i = x1i + x4i;
+            let t2r = x2r + x3r;
+            let t2i = x2i + x3i;
+            let e1r = x1r - x4r;
+            let e1i = x1i - x4i;
+            let e2r = x2r - x3r;
+            let e2i = x2i - x3i;
+            d0r[q] = x0r + t1r + t2r;
+            d0i[q] = x0i + t1i + t2i;
+            let m1r = x0r + c1 * t1r + c2 * t2r;
+            let m1i = x0i + c1 * t1i + c2 * t2i;
+            let m2r = x0r + c2 * t1r + c1 * t2r;
+            let m2i = x0i + c2 * t1i + c1 * t2i;
+            let u1r = s1 * e1r + s2 * e2r;
+            let u1i = s1 * e1i + s2 * e2i;
+            let u2r = s2 * e1r - s1 * e2r;
+            let u2i = s2 * e1i - s1 * e2i;
+            // y1 = m1 + i·u1, y4 = m1 − i·u1, y2 = m2 + i·u2, y3 = m2 − i·u2
+            let y1r = m1r - u1i;
+            let y1i = m1i + u1r;
+            let y4r = m1r + u1i;
+            let y4i = m1i - u1r;
+            let y2r = m2r - u2i;
+            let y2i = m2i + u2r;
+            let y3r = m2r + u2i;
+            let y3i = m2i - u2r;
+            d1r[q] = y1r * wr[0] - y1i * wi[0];
+            d1i[q] = y1r * wi[0] + y1i * wr[0];
+            d2r[q] = y2r * wr[1] - y2i * wi[1];
+            d2i[q] = y2r * wi[1] + y2i * wr[1];
+            d3r[q] = y3r * wr[2] - y3i * wi[2];
+            d3i[q] = y3r * wi[2] + y3i * wr[2];
+            d4r[q] = y4r * wr[3] - y4i * wi[3];
+            d4i[q] = y4r * wi[3] + y4i * wr[3];
+        }
+    }
+}
+
+/// Batched convenience wrapper (allocates a plan + scratch per call;
+/// tests and cold paths only — hot paths go through
+/// [`crate::dft::exec::fft_rows_pooled`]).
+pub fn fft_rows_radix(re: &mut [f64], im: &mut [f64], rows: usize, n: usize, dir: Direction) {
+    let plan = RadixPlan::new(n);
+    let mut sr = vec![0.0; n];
+    let mut si = vec![0.0; n];
+    for r in 0..rows {
+        let span = r * n..(r + 1) * n;
+        fft_row_radix(&mut re[span.clone()], &mut im[span], &mut sr, &mut si, &plan, dir);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dft::{naive_dft_rows, SignalMatrix};
+
+    fn radix_matrix(m: &SignalMatrix, dir: Direction) -> SignalMatrix {
+        let mut out = m.clone();
+        fft_rows_radix(&mut out.re, &mut out.im, m.rows, m.cols, dir);
+        out
+    }
+
+    #[test]
+    fn factorization() {
+        assert_eq!(factorize_235(1), Some(vec![]));
+        assert_eq!(factorize_235(2), Some(vec![2]));
+        assert_eq!(factorize_235(384), Some(vec![2, 2, 2, 2, 2, 2, 2, 3]));
+        assert_eq!(factorize_235(640), Some(vec![2, 2, 2, 2, 2, 2, 2, 5]));
+        assert_eq!(factorize_235(1152), Some(vec![2, 2, 2, 2, 2, 2, 2, 3, 3]));
+        assert_eq!(factorize_235(0), None);
+        assert_eq!(factorize_235(7), None);
+        assert_eq!(factorize_235(896), None); // 128·7
+        assert!(is_five_smooth(3200));
+        assert!(!is_five_smooth(1000 * 7));
+    }
+
+    #[test]
+    fn kernel_summary_strings() {
+        assert_eq!(kernel_summary(384), "mixed-radix 2^7*3");
+        assert_eq!(kernel_summary(640), "mixed-radix 2^7*5");
+        assert_eq!(kernel_summary(6), "mixed-radix 2*3");
+        assert!(kernel_summary(7).starts_with("bluestein"));
+        assert_eq!(kernel_summary(1), "identity");
+    }
+
+    #[test]
+    fn matches_naive_across_smooth_sizes() {
+        for &n in &[1usize, 2, 3, 4, 5, 6, 8, 10, 12, 15, 16, 20, 24, 30, 60, 128, 384, 640] {
+            let m = SignalMatrix::random(2, n, n as u64 + 3);
+            let got = radix_matrix(&m, Direction::Forward);
+            let want = naive_dft_rows(&m, false);
+            let scale = want.norm().max(1.0);
+            assert!(
+                got.max_abs_diff(&want) / scale < 1e-10,
+                "n={n}: rel diff {}",
+                got.max_abs_diff(&want) / scale
+            );
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        for &n in &[3usize, 5, 15, 60, 384, 1152] {
+            let m = SignalMatrix::random(2, n, 7);
+            let f = radix_matrix(&m, Direction::Forward);
+            let b = radix_matrix(&f, Direction::Inverse);
+            assert!(m.max_abs_diff(&b) < 1e-9, "n={n}: {}", m.max_abs_diff(&b));
+        }
+    }
+
+    #[test]
+    fn pow2_schedule_matches_radix2_kernel() {
+        // the all-2s schedule must agree with the dedicated pow2 kernel
+        let n = 256;
+        let m = SignalMatrix::random(3, n, 9);
+        let got = radix_matrix(&m, Direction::Forward);
+        let mut want = m.clone();
+        crate::dft::fft::fft_rows_pow2(&mut want.re, &mut want.im, 3, n, Direction::Forward);
+        assert!(got.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn matches_bluestein_at_paper_sizes() {
+        for &n in &[384usize, 640, 768] {
+            let m = SignalMatrix::random(1, n, 11);
+            let got = radix_matrix(&m, Direction::Forward);
+            let mut want = m.clone();
+            let plan = crate::dft::bluestein::BluesteinPlan::new(n);
+            let ml = plan.scratch_len();
+            let (mut br, mut bi) = (vec![0.0; ml], vec![0.0; ml]);
+            let (mut sr, mut si) = (vec![0.0; ml], vec![0.0; ml]);
+            crate::dft::bluestein::fft_row_bluestein(
+                &mut want.re,
+                &mut want.im,
+                &plan,
+                Direction::Forward,
+                &mut br,
+                &mut bi,
+                &mut sr,
+                &mut si,
+            );
+            let scale = want.norm().max(1.0);
+            assert!(
+                got.max_abs_diff(&want) / scale < 1e-9,
+                "n={n}: {}",
+                got.max_abs_diff(&want) / scale
+            );
+        }
+    }
+
+    #[test]
+    fn impulse_flat_spectrum() {
+        let mut m = SignalMatrix::zeros(1, 30);
+        m.set(0, 0, 1.0, 0.0);
+        let f = radix_matrix(&m, Direction::Forward);
+        for c in 0..30 {
+            let (re, im) = f.get(0, c);
+            assert!((re - 1.0).abs() < 1e-12 && im.abs() < 1e-12, "bin {c}");
+        }
+    }
+
+    #[test]
+    fn stage_range_split_is_bit_exact() {
+        // applying a stage in two halves must equal one full application
+        let n = 240; // 2^4·3·5 — exercises all three radixes
+        let plan = RadixPlan::new(n);
+        let m = SignalMatrix::random(1, n, 5);
+        for stage in &plan.stages {
+            let bf = stage.butterflies();
+            let (mut full_r, mut full_i) = (vec![0.0; n], vec![0.0; n]);
+            apply_stage_range(stage, Direction::Forward, &m.re, &m.im, &mut full_r, &mut full_i, 0, bf);
+            let (mut split_r, mut split_i) = (vec![0.0; n], vec![0.0; n]);
+            let mid = bf / 2;
+            let cut = stage.radix * stage.stride * mid;
+            let (lo_r, hi_r) = split_r.split_at_mut(cut);
+            let (lo_i, hi_i) = split_i.split_at_mut(cut);
+            apply_stage_range(stage, Direction::Forward, &m.re, &m.im, lo_r, lo_i, 0, mid);
+            apply_stage_range(stage, Direction::Forward, &m.re, &m.im, hi_r, hi_i, mid, bf);
+            assert_eq!(full_r, split_r, "radix {} re", stage.radix);
+            assert_eq!(full_i, split_i, "radix {} im", stage.radix);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "5-smooth")]
+    fn rejects_non_smooth() {
+        RadixPlan::new(14);
+    }
+}

@@ -54,8 +54,10 @@ fn swap_tiles(x: &mut [f64], n: usize, r0: usize, r1: usize, c0: usize, c1: usiz
 }
 
 /// Multithreaded in-place transpose: tile pairs are partitioned across
-/// `threads` workers (each tile pair touches a disjoint index set, so the
-/// split-plane buffers can be shared mutably via raw parts safely).
+/// up to `threads` jobs on the shared [`crate::dft::exec::ExecCtx`]
+/// pool — no per-call thread spawns (each tile pair touches a disjoint
+/// index set, so the split-plane buffers can be shared mutably via raw
+/// parts safely).
 pub fn transpose_in_place_parallel(m: &mut SignalMatrix, block: usize, threads: usize) {
     assert_eq!(m.rows, m.cols);
     let n = m.rows;
@@ -79,33 +81,35 @@ pub fn transpose_in_place_parallel(m: &mut SignalMatrix, block: usize, threads: 
     let re_ptr = SendPtr(m.re.as_mut_ptr());
     let im_ptr = SendPtr(m.im.as_mut_ptr());
     let jobs_per = jobs.len().div_ceil(threads);
-    std::thread::scope(|scope| {
-        for chunk in jobs.chunks(jobs_per.max(1)) {
-            let re_ptr = re_ptr;
-            let im_ptr = im_ptr;
-            scope.spawn(move || {
-                // rebind the wrappers whole: 2021 precise capture would
-                // otherwise capture only the (non-Send) pointer fields
-                let (re_ptr, im_ptr) = (re_ptr, im_ptr);
-                for &(ti, tj) in chunk {
-                    let ih = (ti + b).min(n);
-                    let jh = (tj + b).min(n);
-                    // SAFETY: each (ti, tj) tile pair touches indices
-                    // {(r,c), (c,r) : r in [ti,ih), c in [tj,jh)} which are
-                    // disjoint across jobs for ti <= tj block-aligned grid.
-                    let re = unsafe { std::slice::from_raw_parts_mut(re_ptr.0, n * n) };
-                    let im = unsafe { std::slice::from_raw_parts_mut(im_ptr.0, n * n) };
-                    if ti == tj {
-                        transpose_diag_tile(re, n, ti, ih);
-                        transpose_diag_tile(im, n, ti, ih);
-                    } else {
-                        swap_tiles(re, n, ti, ih, tj, jh);
-                        swap_tiles(im, n, ti, ih, tj, jh);
-                    }
+    let mut tasks: Vec<crate::dft::exec::Job> = Vec::new();
+    for chunk in jobs.chunks(jobs_per.max(1)) {
+        let re_ptr = re_ptr;
+        let im_ptr = im_ptr;
+        tasks.push(Box::new(move || {
+            // rebind the wrappers whole: 2021 precise capture would
+            // otherwise capture only the (non-Send) pointer fields
+            let (re_ptr, im_ptr) = (re_ptr, im_ptr);
+            for &(ti, tj) in chunk {
+                let ih = (ti + b).min(n);
+                let jh = (tj + b).min(n);
+                // SAFETY: each (ti, tj) tile pair touches indices
+                // {(r,c), (c,r) : r in [ti,ih), c in [tj,jh)} which are
+                // disjoint across jobs for ti <= tj block-aligned grid,
+                // and ExecCtx::run_jobs does not return before every job
+                // has finished.
+                let re = unsafe { std::slice::from_raw_parts_mut(re_ptr.0, n * n) };
+                let im = unsafe { std::slice::from_raw_parts_mut(im_ptr.0, n * n) };
+                if ti == tj {
+                    transpose_diag_tile(re, n, ti, ih);
+                    transpose_diag_tile(im, n, ti, ih);
+                } else {
+                    swap_tiles(re, n, ti, ih, tj, jh);
+                    swap_tiles(im, n, ti, ih, tj, jh);
                 }
-            });
-        }
-    });
+            }
+        }));
+    }
+    crate::dft::exec::ExecCtx::global().run_jobs(tasks);
 }
 
 #[derive(Clone, Copy)]

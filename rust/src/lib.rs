@@ -12,9 +12,12 @@
 //!   `PFFT-LB` / `PFFT-FPM` / `PFFT-FPM-PAD` parallel 2D-DFT drivers.
 //! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX /
 //!   Pallas row-FFT artifacts (`artifacts/*.hlo.txt`) and executes them.
-//! * [`dft`] — a from-scratch native FFT substrate (radix-2 + Bluestein +
-//!   blocked transpose) used as the multithreaded compute engine and as an
-//!   independent numeric oracle.
+//! * [`dft`] — a from-scratch native FFT substrate (mixed-radix 2/3/5
+//!   Stockham for 5-smooth lengths, radix-2, Bluestein fallback for
+//!   non-smooth lengths, blocked transpose) plus the shared execution
+//!   context ([`dft::exec::ExecCtx`]: one persistent worker pool +
+//!   per-thread scratch arenas) used as the multithreaded compute engine
+//!   and as an independent numeric oracle.
 //! * [`simulator`] — calibrated performance models of the three FFT packages
 //!   the paper studies (FFTW-2.1.5, FFTW-3.3.7, Intel MKL FFT); substitutes
 //!   for the Haswell-36-core testbed that is not available here.

@@ -175,12 +175,22 @@ fn cmd_run(args: &cli::Args, cfg: &Config, bench: bool) -> Result<(), String> {
         Ok(t0.elapsed().as_secs_f64())
     };
 
+    // which row kernel actually executes: the native engine dispatches
+    // by length (mixed-radix for 5-smooth, Bluestein else) — with
+    // padding, the row phases run at the *pad* lengths; other engines
+    // bring their own kernels (PJRT executes pow2 AOT artifacts)
+    let kernel = if args.opt_or("engine", "native") == "native" {
+        let lens = if algo == "fpm-pad" { plan.pad_lens() } else { vec![n] };
+        kernel_label(&lens)
+    } else {
+        "engine-defined kernel".to_string()
+    };
     if bench {
         let policy = TtestPolicy { min_reps: 5, max_reps: 50, max_time_s: 30.0, cl: 0.95, eps: 0.025 };
         let m = mean_using_ttest(&policy, || exec(&algo).expect("bench run failed"));
         let mflops = hclfft::stats::harness::fft2d_flops(n) / m.mean / 1e6;
         println!(
-            "{} {} N={n} (p={p}, t={t}): mean {:.6}s ± {:.6}s over {} reps ({:.1} MFLOPs)",
+            "{} {} N={n} (p={p}, t={t}, {kernel}): mean {:.6}s ± {:.6}s over {} reps ({:.1} MFLOPs)",
             engine.name(),
             algo,
             m.mean,
@@ -192,7 +202,7 @@ fn cmd_run(args: &cli::Args, cfg: &Config, bench: bool) -> Result<(), String> {
         let secs = exec(&algo)?;
         let mflops = hclfft::stats::harness::fft2d_flops(n) / secs / 1e6;
         println!(
-            "{} {} N={n} (p={p}, t={t}): {:.6}s ({:.1} MFLOPs), d = {:?}",
+            "{} {} N={n} (p={p}, t={t}, {kernel}): {:.6}s ({:.1} MFLOPs), d = {:?}",
             engine.name(),
             algo,
             secs,
@@ -274,6 +284,30 @@ fn parse_csv_usize(s: &str) -> Result<Vec<usize>, String> {
     s.split(',')
         .map(|v| v.trim().parse().map_err(|_| format!("bad list item `{v}`")))
         .collect()
+}
+
+/// Kernel summary over the distinct row lengths a plan executes
+/// (padded groups run their pad length, not N).
+fn kernel_label(lens: &[usize]) -> String {
+    let mut lens: Vec<usize> = lens.to_vec();
+    lens.sort_unstable();
+    lens.dedup();
+    let parts: Vec<String> =
+        lens.iter().map(|&l| hclfft::dft::radix::kernel_summary(l)).collect();
+    parts.join(" | ")
+}
+
+/// Kernel description for a wisdom record: the native kernels its row
+/// phases actually execute, or a non-kernel marker for virtual /
+/// artifact-backed engines.
+fn record_kernel(rec: &hclfft::service::wisdom::WisdomRecord) -> String {
+    if rec.engine.starts_with("sim-") {
+        return "virtual".to_string();
+    }
+    if rec.engine != "native" {
+        return "engine-defined".to_string();
+    }
+    kernel_label(&rec.plan.pad_lens())
 }
 
 /// `sim-<pkg>` engine names resolve to a virtual-testbed package;
@@ -373,7 +407,8 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
 
     println!(
         "serve-bench: engine {engine} | sizes {ns:?} | {requests} requests | {clients} clients | \
-         {workers} workers | max batch {max_batch}"
+         {workers} workers | max batch {max_batch} | exec pool {} thread(s)",
+        hclfft::dft::exec::ExecCtx::global().workers()
     );
     let t0 = std::time::Instant::now();
     let failures: std::sync::Mutex<Vec<String>> = std::sync::Mutex::new(Vec::new());
@@ -471,9 +506,10 @@ fn cmd_wisdom(args: &cli::Args, cfg: &Config) -> Result<(), String> {
                 return Err(format!("unknown engine `{engine}` for prewarm"));
             };
             println!(
-                "prewarmed {engine} N={n}: d = {:?}, algo {}, predicted {:.6}s",
+                "prewarmed {engine} N={n}: d = {:?}, algo {}, kernel {}, predicted {:.6}s",
                 rec.plan.d,
                 rec.plan.algorithm.name(),
+                record_kernel(&rec),
                 rec.predicted_cost_s
             );
             store.insert(rec);
@@ -484,7 +520,7 @@ fn cmd_wisdom(args: &cli::Args, cfg: &Config) -> Result<(), String> {
 
     let mut table = hclfft::util::table::Table::new(
         &format!("wisdom store {}", path.display()),
-        &["engine", "n", "p", "t", "algo", "padded", "predicted_s"],
+        &["engine", "n", "p", "t", "algo", "padded", "kernel", "predicted_s"],
     );
     for rec in store.iter() {
         table.row(vec![
@@ -494,6 +530,7 @@ fn cmd_wisdom(args: &cli::Args, cfg: &Config) -> Result<(), String> {
             rec.t.to_string(),
             rec.plan.algorithm.name().to_string(),
             if rec.plan.is_padded() { "yes".into() } else { "no".into() },
+            record_kernel(rec),
             format!("{:.6}", rec.predicted_cost_s),
         ]);
     }

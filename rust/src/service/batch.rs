@@ -80,21 +80,21 @@ fn row_phase_batch(
     }
 
     let errors: std::sync::Mutex<Vec<EngineError>> = std::sync::Mutex::new(Vec::new());
-    std::thread::scope(|scope| {
-        for (i, slices) in per_group.into_iter().enumerate() {
-            let rows = d[i];
-            if rows == 0 {
-                continue;
-            }
-            let pad = pad_lens[i];
-            let errors = &errors;
-            scope.spawn(move || {
-                if let Err(e) = group_ffts(engine, slices, rows, n, pad, threads_per_group) {
-                    errors.lock().unwrap().push(e);
-                }
-            });
+    let mut jobs: Vec<crate::dft::exec::Job> = Vec::with_capacity(p);
+    for (i, slices) in per_group.into_iter().enumerate() {
+        let rows = d[i];
+        if rows == 0 {
+            continue;
         }
-    });
+        let pad = pad_lens[i];
+        let errors = &errors;
+        jobs.push(Box::new(move || {
+            if let Err(e) = group_ffts(engine, slices, rows, n, pad, threads_per_group) {
+                errors.lock().unwrap().push(e);
+            }
+        }));
+    }
+    crate::dft::exec::ExecCtx::global().run_jobs(jobs);
     match errors.into_inner().unwrap().into_iter().next() {
         Some(e) => Err(e),
         None => Ok(()),
@@ -104,8 +104,9 @@ fn row_phase_batch(
 /// Group i's work for one phase: B row slices of `rows` rows each. The
 /// single-matrix unpadded case runs in place; otherwise the slices are
 /// gathered into one (B·rows × pad) work matrix (Algorithm 7's local
-/// padded buffer, batch-widened), transformed in one engine call, and
-/// scattered back.
+/// padded buffer, batch-widened) leased from the calling thread's
+/// scratch arena, transformed in one engine call, and scattered back —
+/// a warm serve loop performs no work-matrix allocation.
 fn group_ffts(
     engine: &dyn RowFftEngine,
     mut slices: Vec<(&mut [f64], &mut [f64])>,
@@ -120,24 +121,25 @@ fn group_ffts(
         return engine.fft_rows(re, im, rows, n, Direction::Forward, threads);
     }
     let b = slices.len();
-    let mut wre = vec![0.0f64; b * rows * pad];
-    let mut wim = vec![0.0f64; b * rows * pad];
-    for (j, (re, im)) in slices.iter().enumerate() {
-        for r in 0..rows {
-            let dst = (j * rows + r) * pad;
-            wre[dst..dst + n].copy_from_slice(&re[r * n..(r + 1) * n]);
-            wim[dst..dst + n].copy_from_slice(&im[r * n..(r + 1) * n]);
+    crate::dft::exec::with_scratch(|scratch| {
+        let (wre, wim) = scratch.pair(b * rows * pad);
+        for (j, (re, im)) in slices.iter().enumerate() {
+            for r in 0..rows {
+                let dst = (j * rows + r) * pad;
+                wre[dst..dst + n].copy_from_slice(&re[r * n..(r + 1) * n]);
+                wim[dst..dst + n].copy_from_slice(&im[r * n..(r + 1) * n]);
+            }
         }
-    }
-    engine.fft_rows(&mut wre, &mut wim, b * rows, pad, Direction::Forward, threads)?;
-    for (j, (re, im)) in slices.iter_mut().enumerate() {
-        for r in 0..rows {
-            let src = (j * rows + r) * pad;
-            re[r * n..(r + 1) * n].copy_from_slice(&wre[src..src + n]);
-            im[r * n..(r + 1) * n].copy_from_slice(&wim[src..src + n]);
+        engine.fft_rows(wre, wim, b * rows, pad, Direction::Forward, threads)?;
+        for (j, (re, im)) in slices.iter_mut().enumerate() {
+            for r in 0..rows {
+                let src = (j * rows + r) * pad;
+                re[r * n..(r + 1) * n].copy_from_slice(&wre[src..src + n]);
+                im[r * n..(r + 1) * n].copy_from_slice(&wim[src..src + n]);
+            }
         }
-    }
-    Ok(())
+        Ok(())
+    })
 }
 
 #[cfg(test)]

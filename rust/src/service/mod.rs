@@ -13,11 +13,15 @@
 //!    in a [`sched::BatchQueue`]; dispatch is shortest-predicted-job-first
 //!    with a starvation bound.
 //! 4. **execute** — a fixed worker pool pops batches; planning artifacts
-//!    (POPTA/HPOPTA partition, pad lengths, plan-cache warmup) come from
-//!    the [`wisdom`] store — computed once per `(engine, n, p)`, reused
-//!    forever, persisted as JSON. Forward transforms run the coalesced
-//!    [`batch::execute_planned_batch`]; inverse transforms take the exact
-//!    `dft2d` path (padding is forward-only spectral interpolation).
+//!    (POPTA/HPOPTA partition, pad lengths, row-kernel factor schedule,
+//!    plan-cache warmup) come from the [`wisdom`] store — computed once
+//!    per `(engine, n, p)`, reused forever, persisted as JSON. Forward
+//!    transforms run the coalesced [`batch::execute_planned_batch`];
+//!    inverse transforms take the exact `dft2d` path (padding is
+//!    forward-only spectral interpolation). All row FFTs and transposes
+//!    execute on the shared [`crate::dft::exec::ExecCtx`] pool with
+//!    per-thread scratch arenas — the steady-state hot path spawns no
+//!    threads and allocates no scratch.
 //! 5. **respond** — each request's channel receives the transformed
 //!    matrix plus a per-request [`ResponseReport`]; [`stats`] aggregates
 //!    throughput, p50/p95/p99 latency, queue depth and the

@@ -65,6 +65,10 @@ impl Default for PlanningConfig {
 /// work-buffer allocations from a hand-edited file).
 pub const MAX_PAD_ABOVE_N: usize = 1 << 20;
 
+/// The pad search window above N (the paper's §V-B grid reaches 4
+/// steps of 128 beyond the problem size).
+pub const PAD_SEARCH_WINDOW: usize = 512;
+
 /// One memoized planning outcome for `(engine, n, p)`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WisdomRecord {
@@ -78,6 +82,9 @@ pub struct WisdomRecord {
     pub plan: PlannedTransform,
     /// predicted whole-request seconds (FPM-informed scheduling weight)
     pub predicted_cost_s: f64,
+    /// the row-kernel factor schedule the executor chose for `n`
+    /// (ascending {2,3,5} factors; empty = non-smooth, Bluestein)
+    pub factors: Vec<usize>,
     /// the measured speed surfaces the plan came from — the paper's
     /// expensive §V artifact, persisted so a restarted server can
     /// re-plan (new ε, pad policy, ...) without re-measuring. Empty for
@@ -107,10 +114,10 @@ impl WisdomRecord {
         xs.dedup();
         let mut ys = vec![n];
         if cfg.pad_cost.is_some() {
-            // pad candidates need a y grid above N (grid step 128, §V-B)
-            for k in 1..=4usize {
-                ys.push(n + 128 * k);
-            }
+            // pad candidates above N come from the engine so the search
+            // only prices lengths the engine is fast at (the native
+            // engine restricts to 5-smooth points of the 128-grid)
+            ys.extend(engine.pad_candidates(n, PAD_SEARCH_WINDOW));
         }
         let mut spec = ProfileSpec::new(xs, ys, GroupConfig::new(cfg.groups, cfg.threads_per_group));
         spec.rep_scale = cfg.rep_scale.max(1);
@@ -127,6 +134,7 @@ impl WisdomRecord {
             eps: cfg.eps,
             plan,
             predicted_cost_s,
+            factors: crate::dft::radix::factorize_235(n).unwrap_or_default(),
             fpms,
         }
     }
@@ -161,6 +169,7 @@ impl WisdomRecord {
             eps: crate::simulator::vexec::EPS_IDENTICAL,
             plan,
             predicted_cost_s: if pad { point.t_pad } else { point.t_fpm },
+            factors: crate::dft::radix::factorize_235(n).unwrap_or_default(),
             fpms: Vec::new(),
         }
     }
@@ -189,6 +198,7 @@ impl WisdomRecord {
             .set("pads", Json::Arr(pads))
             .set("makespan", Json::Num(self.plan.makespan))
             .set("predicted_cost_s", self.predicted_cost_s)
+            .set("factors", self.factors.clone())
             .set("fpms", Json::Arr(fpms))
     }
 
@@ -251,6 +261,11 @@ impl WisdomRecord {
         // NaN makespans serialize as null (JSON has no NaN)
         let makespan = j.get("makespan").and_then(Json::as_f64).unwrap_or(f64::NAN);
         let predicted_cost_s = f64_field("predicted_cost_s")?;
+        // factor schedule: informational in the JSON artifact (it is
+        // fully derivable from n), so it is always recomputed on load —
+        // a stale or hand-edited field can never poison the executor,
+        // and legacy files without it load identically
+        let factors = crate::dft::radix::factorize_235(n).unwrap_or_default();
         // fpms are optional (older files / simulator records have none)
         let fpms = match j.get("fpms").and_then(Json::as_arr) {
             Some(arr) => arr
@@ -267,12 +282,15 @@ impl WisdomRecord {
             eps,
             plan: PlannedTransform { n, d, pads, algorithm, makespan },
             predicted_cost_s,
+            factors,
             fpms,
         })
     }
 
-    /// Warm the native plan cache for every row length this record can
-    /// touch (the "dft plan handles" part of the wisdom).
+    /// Warm the plan cache for every row length this record can touch
+    /// (the "dft plan handles" part of the wisdom) — mixed-radix plans
+    /// for 5-smooth lengths, Bluestein state otherwise, exactly the
+    /// executor's dispatch.
     pub fn warm_plan_cache(&self) {
         let mut lens = self.plan.pad_lens();
         lens.push(self.n);
@@ -282,11 +300,7 @@ impl WisdomRecord {
             if len == 0 {
                 continue;
             }
-            if len.is_power_of_two() {
-                let _ = crate::dft::plan::PlanCache::global().pow2(len);
-            } else {
-                let _ = crate::dft::plan::PlanCache::global().bluestein(len);
-            }
+            let _ = crate::dft::plan::PlanCache::global().row_plan(len);
         }
     }
 }
@@ -384,6 +398,7 @@ mod tests {
                 makespan: 0.125,
             },
             predicted_cost_s: 0.01,
+            factors: vec![2, 2, 2, 2],
             fpms: vec![surface],
         }
     }
@@ -481,6 +496,23 @@ mod tests {
         assert!(!rec.plan.is_padded(), "pad_cost None must not pad");
         assert!(rec.predicted_cost_s > 0.0);
         rec.warm_plan_cache();
+    }
+
+    #[test]
+    fn factor_schedule_round_trips_and_is_derived_on_load() {
+        let rec = demo_record();
+        let j = Json::parse(&rec.to_json().to_string()).unwrap();
+        let back = WisdomRecord::from_json(&j).unwrap();
+        assert_eq!(back.factors, vec![2, 2, 2, 2]);
+        // the persisted field is informational: a stale/hand-edited
+        // value is replaced by the schedule derived from n, and legacy
+        // files without the field load identically
+        let stale = rec.to_json().set("factors", Json::Arr(Vec::new()));
+        assert_eq!(WisdomRecord::from_json(&stale).unwrap().factors, vec![2, 2, 2, 2]);
+        // a non-smooth n (24704 = 128·193) records an empty schedule
+        // (Bluestein row kernel)
+        let sim = WisdomRecord::from_simulator("sim-mkl", Package::Mkl, 24_704, false);
+        assert!(sim.factors.is_empty());
     }
 
     #[test]

@@ -1,0 +1,103 @@
+//! Steady-state allocation audit for the executor hot path.
+//!
+//! This file intentionally holds a SINGLE test so the process-global
+//! counting allocator and the scratch-grow counter see no concurrent
+//! noise from sibling tests (each integration-test file is its own
+//! binary; tests *within* a binary run in parallel threads).
+//!
+//! The assertion backing the "no per-call scratch allocations" claim:
+//! after a warmup pass, repeated row-FFT batches at a fixed size must
+//! (a) never grow a scratch arena and (b) allocate only O(1) bytes per
+//! call (job boxes and queue nodes — not the O(n) `vec![0.0; n]`
+//! buffers the pre-executor code allocated per call). The bench note
+//! lives in `benches/bench_fft_sizes.rs` / README §Architecture.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCATED_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATED_BYTES.fetch_add(layout.size(), Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATED_BYTES.fetch_add(new_size.saturating_sub(layout.size()), Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+use hclfft::dft::exec::{fft_rows_pooled, scratch_grow_events, ExecCtx};
+use hclfft::dft::fft::Direction;
+use hclfft::dft::SignalMatrix;
+
+#[test]
+fn warm_fft_loop_does_not_allocate_scratch() {
+    // pin the pool size before first ExecCtx::global() use so the set of
+    // threads that can own arenas is small and the budget deterministic
+    std::env::set_var("HCLFFT_POOL_THREADS", "4");
+    let (rows, n) = (32usize, 768usize); // 768 = 2^8·3 — mixed-radix path
+    let ctx = ExecCtx::global();
+    let threads = 4usize;
+    let mut m = SignalMatrix::random(rows, n, 1);
+
+    // warmup: builds the plan, spawns the pool, and keeps iterating
+    // until a full pass grows no arena (chunk→worker assignment varies,
+    // so a fixed warmup count could leave a worker's arena cold)
+    let mut warm_iters = 0;
+    loop {
+        let before = scratch_grow_events();
+        fft_rows_pooled(ctx, &mut m.re, &mut m.im, rows, n, Direction::Forward, threads);
+        warm_iters += 1;
+        if scratch_grow_events() == before && warm_iters >= 5 {
+            break;
+        }
+        assert!(warm_iters < 500, "arenas never reached steady state");
+    }
+
+    let grow_before = scratch_grow_events();
+    let bytes_before = ALLOCATED_BYTES.load(Ordering::Relaxed);
+    let iters = 50usize;
+    for _ in 0..iters {
+        fft_rows_pooled(ctx, &mut m.re, &mut m.im, rows, n, Direction::Forward, threads);
+    }
+    let grow_delta = scratch_grow_events() - grow_before;
+    let bytes_delta = ALLOCATED_BYTES.load(Ordering::Relaxed) - bytes_before;
+
+    // a not-yet-exercised thread may still warm its arena once (2 planes)
+    // — but steady-state growth is bounded by the thread population, not
+    // by the iteration count (per-call growth would be >= 2·iters)
+    assert!(
+        grow_delta <= 2 * (4 + 1),
+        "scratch arenas grew {grow_delta} times over {iters} warm iterations"
+    );
+
+    // per-iteration allocation budget: job boxes + queue bookkeeping are
+    // fine (a few hundred bytes); per-call O(n) scratch planes are not.
+    // The old code allocated 2 Vec<f64> of n=768 per chunk per call
+    // (~49 KiB/iter at 4 chunks); the bound sits far below that.
+    let per_iter = bytes_delta / iters;
+    assert!(
+        per_iter < 8 * 1024,
+        "steady-state allocates {per_iter} B/iter (total {bytes_delta} B over {iters})"
+    );
+
+    // sanity: the warm executor still computes correct transforms
+    let orig = SignalMatrix::random(rows, n, 2);
+    let mut rt = orig.clone();
+    fft_rows_pooled(ctx, &mut rt.re, &mut rt.im, rows, n, Direction::Forward, threads);
+    fft_rows_pooled(ctx, &mut rt.re, &mut rt.im, rows, n, Direction::Inverse, threads);
+    let err = rt.max_abs_diff(&orig);
+    assert!(err < 1e-9, "warm roundtrip err {err}");
+}

@@ -378,6 +378,7 @@ fn prop_wisdom_record_json_roundtrip() {
                     makespan: if rng.next_f64() < 0.2 { f64::NAN } else { rng.next_f64() * 100.0 },
                 },
                 predicted_cost_s: rng.next_f64() * 10.0,
+                factors: hclfft::dft::radix::factorize_235(n).unwrap_or_default(),
                 fpms: if rng.next_f64() < 0.5 { vec![gen_speed_function(rng)] } else { vec![] },
             }
         },
@@ -396,6 +397,7 @@ fn prop_wisdom_record_json_roundtrip() {
                 || back.plan.pads != rec.plan.pads
                 || back.plan.algorithm != rec.plan.algorithm
                 || back.predicted_cost_s != rec.predicted_cost_s
+                || back.factors != rec.factors
                 || back.fpms != rec.fpms
             {
                 return Err("field mismatch after roundtrip".to_string());

@@ -1,0 +1,172 @@
+//! Integration: the mixed-radix executor end to end — correctness vs the
+//! naive DFT oracle and Bluestein at the paper's N = 128·k sizes,
+//! inverse round-trips, thread-count invariance through the shared pool,
+//! and the small-rows/large-n utilization regression.
+
+use hclfft::coordinator::engine::{NativeEngine, RowFftEngine};
+use hclfft::dft::bluestein::{fft_row_bluestein, BluesteinPlan};
+use hclfft::dft::exec::{fft_rows_pooled, work_units, ExecCtx, STAGE_PARALLEL_MIN_N};
+use hclfft::dft::fft::Direction;
+use hclfft::dft::radix::{factorize_235, fft_rows_radix, is_five_smooth};
+use hclfft::dft::{naive_dft_rows, SignalMatrix};
+use hclfft::util::proptest::{run, Config};
+
+/// The paper's benchmark lengths exercised throughout this file:
+/// 384 = 2^7·3, 640 = 2^7·5, 768 = 2^8·3, 1152 = 2^7·3^2, 3200 = 25·128.
+const PAPER_SIZES: [usize; 5] = [384, 640, 768, 1152, 3200];
+
+#[test]
+fn paper_sizes_are_five_smooth() {
+    for &n in &PAPER_SIZES {
+        let f = factorize_235(n).expect("paper size must be 5-smooth");
+        assert_eq!(f.iter().product::<usize>(), n);
+    }
+    assert!(!is_five_smooth(24_704), "24704 = 128·193 stays on Bluestein");
+}
+
+#[test]
+fn mixed_radix_matches_naive_at_paper_sizes() {
+    for &n in &PAPER_SIZES {
+        let rows = if n >= 3200 { 1 } else { 2 };
+        let orig = SignalMatrix::random(rows, n, n as u64);
+        let mut m = orig.clone();
+        fft_rows_radix(&mut m.re, &mut m.im, rows, n, Direction::Forward);
+        let want = naive_dft_rows(&orig, false);
+        let scale = want.norm().max(1.0);
+        let err = m.max_abs_diff(&want) / scale;
+        assert!(err < 1e-9, "n={n}: rel err {err}");
+    }
+}
+
+#[test]
+fn mixed_radix_cross_checks_bluestein_at_paper_sizes() {
+    // two independent algorithms agreeing at every paper size
+    for &n in &PAPER_SIZES {
+        let orig = SignalMatrix::random(1, n, 7 * n as u64 + 1);
+        let mut radix = orig.clone();
+        fft_rows_radix(&mut radix.re, &mut radix.im, 1, n, Direction::Forward);
+        let plan = BluesteinPlan::new(n);
+        let ml = plan.scratch_len();
+        let (mut br, mut bi) = (vec![0.0; ml], vec![0.0; ml]);
+        let (mut sr, mut si) = (vec![0.0; ml], vec![0.0; ml]);
+        let mut blue = orig.clone();
+        fft_row_bluestein(
+            &mut blue.re,
+            &mut blue.im,
+            &plan,
+            Direction::Forward,
+            &mut br,
+            &mut bi,
+            &mut sr,
+            &mut si,
+        );
+        let scale = blue.norm().max(1.0);
+        let err = radix.max_abs_diff(&blue) / scale;
+        assert!(err < 1e-9, "n={n}: radix vs bluestein rel err {err}");
+    }
+}
+
+#[test]
+fn inverse_round_trips_at_paper_sizes() {
+    for &n in &PAPER_SIZES {
+        let orig = SignalMatrix::random(1, n, 3);
+        let mut m = orig.clone();
+        fft_rows_radix(&mut m.re, &mut m.im, 1, n, Direction::Forward);
+        fft_rows_radix(&mut m.re, &mut m.im, 1, n, Direction::Inverse);
+        let err = m.max_abs_diff(&orig);
+        assert!(err < 1e-9, "n={n}: roundtrip err {err}");
+    }
+}
+
+#[test]
+fn prop_mixed_radix_matches_naive_on_random_smooth_lengths() {
+    // property: for random 5-smooth lengths the kernel agrees with the
+    // O(n^2) oracle (the pool of all smooth lengths <= 1280 keeps the
+    // oracle affordable)
+    let smooth: Vec<usize> = (1..=1280usize).filter(|&n| is_five_smooth(n)).collect();
+    run(
+        "radix-vs-naive",
+        &Config { cases: 25, ..Config::default() },
+        |rng| smooth[rng.range_usize(0, smooth.len() - 1)],
+        |_| vec![],
+        |&n| {
+            let m = SignalMatrix::random(1, n, n as u64 + 13);
+            let mut got = m.clone();
+            fft_rows_radix(&mut got.re, &mut got.im, 1, n, Direction::Forward);
+            let want = naive_dft_rows(&m, false);
+            let scale = want.norm().max(1.0);
+            let err = got.max_abs_diff(&want) / scale;
+            if err < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("n={n}: rel err {err}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn pool_thread_count_invariance_is_bitwise() {
+    // the executor must produce identical bits for every thread budget
+    let ctx = ExecCtx::new(6);
+    for &n in &[384usize, 640, 1152] {
+        let rows = 12;
+        let orig = SignalMatrix::random(rows, n, 99);
+        let mut reference = orig.clone();
+        fft_rows_pooled(&ctx, &mut reference.re, &mut reference.im, rows, n, Direction::Forward, 1);
+        for threads in [2usize, 3, 5, 8, 16] {
+            let mut m = orig.clone();
+            fft_rows_pooled(&ctx, &mut m.re, &mut m.im, rows, n, Direction::Forward, threads);
+            assert_eq!(
+                m.max_abs_diff(&reference),
+                0.0,
+                "n={n} threads={threads}: must be bit-exact vs serial"
+            );
+        }
+    }
+}
+
+#[test]
+fn native_engine_bit_exact_across_thread_budgets() {
+    let engine = NativeEngine;
+    let orig = SignalMatrix::random(33, 384, 5);
+    let mut a = orig.clone();
+    engine.fft_rows(&mut a.re, &mut a.im, 33, 384, Direction::Forward, 1).unwrap();
+    for t in [2usize, 7] {
+        let mut b = orig.clone();
+        engine.fft_rows(&mut b.re, &mut b.im, 33, 384, Direction::Forward, t).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 0.0, "threads={t}");
+    }
+}
+
+#[test]
+fn small_rows_large_n_regression() {
+    // rows < threads with long smooth rows: the old code clamped the
+    // thread budget to the row count; the executor now splits stages
+    // within each row. Values must be bit-identical either way.
+    let n = STAGE_PARALLEL_MIN_N * 2; // 8192
+    assert_eq!(work_units(3, n, 8), 8, "must fan out past the row count");
+    let ctx = ExecCtx::new(8);
+    let orig = SignalMatrix::random(3, n, 17);
+    let mut serial = orig.clone();
+    fft_rows_pooled(&ctx, &mut serial.re, &mut serial.im, 3, n, Direction::Forward, 1);
+    let mut wide = orig.clone();
+    fft_rows_pooled(&ctx, &mut wide.re, &mut wide.im, 3, n, Direction::Forward, 8);
+    assert_eq!(serial.max_abs_diff(&wide), 0.0);
+    // and the stage-split path is actually correct, not just stable
+    let mut back = wide.clone();
+    fft_rows_pooled(&ctx, &mut back.re, &mut back.im, 3, n, Direction::Inverse, 8);
+    assert!(back.max_abs_diff(&orig) < 1e-10);
+}
+
+#[test]
+fn dft2d_non_pow2_matches_naive() {
+    // full 2D driver over the executor at a 5-smooth non-pow2 size
+    let n = 48; // 2^4·3
+    let orig = SignalMatrix::random(n, n, 8);
+    let mut m = orig.clone();
+    hclfft::dft::dft2d::dft2d(&mut m, Direction::Forward, 4);
+    let want = hclfft::dft::naive_dft2d(&orig);
+    let scale = want.norm().max(1.0);
+    assert!(m.max_abs_diff(&want) / scale < 1e-10);
+}
