@@ -44,8 +44,9 @@ fn main() -> Result<(), String> {
         let xs: Vec<usize> = (1..=4).map(|k| k * n / 4).collect();
         let t0 = Instant::now();
         let fpms = build_plane(&engine, cfg, xs, n, 10_000);
-        let part = plan_partition(&fpms, n, 0.05).map_err(|e| e.to_string())?;
-        let pads = pads_for_distribution(&fpms, &part.d, n, PadCost::PaperRatio);
+        let model = hclfft::model::StaticModel::new(fpms);
+        let part = plan_partition(&model, n, 0.05).map_err(|e| e.to_string())?;
+        let pads = pads_for_distribution(&model, &part.d, n, usize::MAX, PadCost::PaperRatio);
         println!(
             "plan n={n}: d = {:?} ({:?}), pads = {:?} [profiled+planned in {:.2}s]",
             part.d,

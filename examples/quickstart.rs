@@ -9,6 +9,7 @@ use hclfft::coordinator::engine::NativeEngine;
 use hclfft::coordinator::group::GroupConfig;
 use hclfft::coordinator::pfft::{pfft_fpm, pfft_lb, plan_partition};
 use hclfft::dft::{naive_dft2d, SignalMatrix};
+use hclfft::model::StaticModel;
 use hclfft::profiler::build_plane;
 
 fn main() -> Result<(), String> {
@@ -23,8 +24,9 @@ fn main() -> Result<(), String> {
     let fpms = build_plane(&NativeEngine, cfg, xs, n, 10_000);
 
     // 2. Plan: ε-identity test, then POPTA (identical) or HPOPTA
-    //    (heterogeneous) — PFFT-FPM Step 1.
-    let part = plan_partition(&fpms, n, 0.05).map_err(|e| e.to_string())?;
+    //    (heterogeneous) — PFFT-FPM Step 1. Planning consumes the
+    //    surfaces through the unified PerfModel trait.
+    let part = plan_partition(&StaticModel::new(fpms), n, 0.05).map_err(|e| e.to_string())?;
     println!("planned distribution d = {:?} ({:?})", part.d, part.algorithm);
 
     // 3. Execute PFFT-FPM on a random complex signal matrix.

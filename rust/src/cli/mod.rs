@@ -135,17 +135,27 @@ SUBCOMMANDS:
   bench     Alias of `run` with MeanUsingTtest measurement
   serve-bench
             Closed-loop load generator against the in-process 2D-DFT
-            service (batching + wisdom + FPM scheduling); prints a
-            latency/throughput table and persists planning wisdom
-            --n <size[,size...]> [--requests <count>] [--clients <threads>]
+            service (batching + wisdom + FPM scheduling); runs a cold
+            and a warm pass, prints latency/throughput tables + model
+            calibration, writes the BENCH_serve.json trajectory and
+            persists planning wisdom + model deltas
+            --n <size[,size...]> [--requests <count-per-pass>]
+            [--clients <threads>]
             [--engine native|sim-mkl|sim-fftw3|sim-fftw2] [--p <groups>]
             [--t <threads>] [--workers <count>] [--batch <max>]
             [--wisdom <file.json>] [--no-wisdom] [--pad] [--starve <s>]
-            [--budget <s>] [--seed <u64>]
+            [--budget <s>] [--seed <u64>] [--json <file.json>] [--no-json]
+            [--drift-factor <x>]   (sim-* only: slow the virtual machine
+            by x before the warm pass to exercise drift -> re-planning)
   wisdom    Inspect or prewarm the planning wisdom store
             [--file <file.json>] [--prewarm <size[,size...]>]
             [--engine native|sim-mkl|...] [--p <groups>] [--t <threads>]
             [--pad] [--budget <s>]
+  model     Inspect the online performance model persisted alongside the
+            wisdom: per-engine observation/drift summaries, refined
+            points, and (with --engine and --n) the plane sections
+            planning consumes
+            [--file <file.json>] [--engine <name>] [--n <size>]
   help      Show this text
 
 All options accept both `--key value` and `--key=value`.

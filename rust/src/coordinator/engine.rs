@@ -64,7 +64,9 @@ pub trait RowFftEngine: Sync {
     }
 
     /// Pad-candidate row lengths in `(n, n + window]` worth measuring
-    /// for this engine (PFFT-FPM-PAD Step 2's search grid). Default:
+    /// for this engine (PFFT-FPM-PAD Step 2's search grid — the y grid
+    /// of the measured surfaces the [`crate::model`] layer later serves
+    /// column sections from). Default:
     /// the paper's 128-step grid, intersected with `supported_lengths`
     /// when the engine restricts lengths. Engines with a fast-length
     /// structure (e.g. the native mixed-radix kernel's 5-smooth

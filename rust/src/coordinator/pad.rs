@@ -21,7 +21,7 @@
 //! transform) is what the native engine uses for non-pow2 lengths. See
 //! DESIGN.md §Substitutions.
 
-use crate::coordinator::fpm::{Curve, SpeedFunction};
+use crate::model::{Curve, PerfModel};
 
 /// Which execution-time proxy the argmin uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -113,23 +113,28 @@ pub fn determine_pad_length(column: &Curve, x: usize, n: usize, model: PadCost) 
     PadDecision { n_padded: best_v, t_unpadded, t_padded: best_t }
 }
 
-/// Per-processor pad decisions from the full FPM surfaces (PAD Step 2):
-/// the column section x = d[i] of S_i, then the argmin.
+/// Per-processor pad decisions from a performance model (PAD Step 2):
+/// the column section x = d[i] of group i, windowed to `(n, n + window]`
+/// candidates, then the argmin.
 pub fn pads_for_distribution(
-    fpms: &[SpeedFunction],
+    model: &dyn PerfModel,
     d: &[usize],
     n: usize,
-    model: PadCost,
+    window: usize,
+    cost: PadCost,
 ) -> Vec<PadDecision> {
-    assert_eq!(fpms.len(), d.len());
+    assert_eq!(model.groups(), d.len(), "model group count must match the distribution");
     d.iter()
-        .zip(fpms)
-        .map(|(&di, fpm)| {
+        .enumerate()
+        .map(|(g, &di)| {
             if di == 0 {
                 return PadDecision { n_padded: n, t_unpadded: 0.0, t_padded: 0.0 };
             }
-            let column = fpm.column_section(di);
-            determine_pad_length(&column, di, n, model)
+            let column = model.column_section(g, di, n, window);
+            if column.is_empty() {
+                return PadDecision { n_padded: n, t_unpadded: 0.0, t_padded: 0.0 };
+            }
+            determine_pad_length(&column, di, n, cost)
         })
         .collect()
 }
@@ -230,9 +235,11 @@ mod tests {
 
     #[test]
     fn zero_rows_processor_gets_trivial_decision() {
-        use crate::coordinator::fpm::SpeedFunction;
+        use crate::model::{SpeedFunction, StaticModel};
         let fpm = SpeedFunction::from_fn("f", vec![128], vec![1024, 2048], |_, _| Some(100.0));
-        let pads = pads_for_distribution(&[fpm.clone(), fpm], &[0, 128], 1024, PadCost::PaperRatio);
+        let model = StaticModel::new(vec![fpm.clone(), fpm]);
+        let pads =
+            pads_for_distribution(&model, &[0, 128], 1024, usize::MAX, PadCost::PaperRatio);
         assert_eq!(pads[0].n_padded, 1024);
         assert!(!pads[0].is_padded());
         assert_eq!(pads.len(), 2);

@@ -18,7 +18,6 @@
 //! blocked transpose using the full p·t thread budget on the same pool.
 
 use crate::coordinator::engine::{EngineError, RowFftEngine};
-use crate::coordinator::fpm::SpeedFunction;
 use crate::coordinator::group::{row_offsets, GroupConfig};
 use crate::coordinator::pad::{PadCost, PadDecision};
 use crate::coordinator::partition::{
@@ -27,6 +26,7 @@ use crate::coordinator::partition::{
 use crate::dft::fft::Direction;
 use crate::dft::transpose::transpose_in_place_parallel;
 use crate::dft::SignalMatrix;
+use crate::model::{PerfModel, SpeedFunction};
 
 /// What a driver run did (for reports and EXPERIMENTS.md records).
 #[derive(Clone, Debug)]
@@ -40,20 +40,32 @@ pub struct PfftReport {
 }
 
 /// Step-1 planning (Algorithm 2 `PARTITION`): ε-identity test over the
-/// plane sections, then POPTA on the harmonic average or HPOPTA on the
-/// per-processor curves.
+/// model's plane sections, then POPTA on the harmonic average or HPOPTA
+/// on the per-processor curves. Consumes any [`PerfModel`] — measured
+/// surfaces, the virtual testbed, or the online model's live sections.
 pub fn plan_partition(
+    model: &dyn PerfModel,
+    n: usize,
+    eps: f64,
+) -> Result<Partition, PartitionError> {
+    let p = model.groups();
+    let curves: Vec<_> = (0..p).map(|g| model.plane_section(g, n)).collect();
+    if curves_identical(&curves, eps) {
+        let avg = average_curve(&curves);
+        popta(&avg, p, n)
+    } else {
+        hpopta(&curves, n)
+    }
+}
+
+/// [`plan_partition`] over raw measured surfaces (wraps them in a
+/// [`crate::model::StaticModel`]).
+pub fn plan_partition_fpms(
     fpms: &[SpeedFunction],
     n: usize,
     eps: f64,
 ) -> Result<Partition, PartitionError> {
-    let curves: Vec<_> = fpms.iter().map(|f| f.plane_section(n)).collect();
-    if curves_identical(&curves, eps) {
-        let avg = average_curve(&curves);
-        popta(&avg, fpms.len(), n)
-    } else {
-        hpopta(&curves, n)
-    }
+    plan_partition(&crate::model::StaticModel::from_slice(fpms), n, eps)
 }
 
 /// PFFT-LB (Section III-B): balanced distribution, exact row length.
@@ -340,7 +352,7 @@ mod tests {
             vec![16],
             |x, _| Some(100.0 + x as f64 * 0.01),
         );
-        let part = plan_partition(&[fpm.clone(), fpm], 16, 0.05).unwrap();
+        let part = plan_partition_fpms(&[fpm.clone(), fpm], 16, 0.05).unwrap();
         assert_eq!(part.algorithm, Algorithm::Popta);
         assert_eq!(part.d.iter().sum::<usize>(), 16);
     }
@@ -360,7 +372,7 @@ mod tests {
             vec![16],
             |_, _| Some(300.0),
         );
-        let part = plan_partition(&[f1, f2], 16, 0.05).unwrap();
+        let part = plan_partition_fpms(&[f1, f2], 16, 0.05).unwrap();
         assert_eq!(part.algorithm, Algorithm::Hpopta);
         // faster processor gets more rows
         assert!(part.d[1] > part.d[0], "{:?}", part.d);

@@ -9,17 +9,17 @@
 //! same distribution.
 
 use crate::coordinator::engine::{EngineError, RowFftEngine};
-use crate::coordinator::fpm::SpeedFunction;
 use crate::coordinator::group::row_offsets;
 use crate::coordinator::partition::{balanced, Partition, PartitionError};
 use crate::dft::dft3d::{rotate_d_c, transpose_slabs, SignalCube};
 use crate::dft::fft::Direction;
+use crate::model::SpeedFunction;
 
 /// Plan the slab distribution from FPM plane sections at y = n: the
 /// curves' x axis is rows, so slab counts are planned on the (n·slabs)
 /// row scale and converted back.
 pub fn plan_slabs(fpms: &[SpeedFunction], n: usize, eps: f64) -> Result<Partition, PartitionError> {
-    let part = crate::coordinator::pfft::plan_partition(fpms, n, eps)?;
+    let part = crate::coordinator::pfft::plan_partition_fpms(fpms, n, eps)?;
     Ok(part)
 }
 

@@ -13,11 +13,11 @@
 //!   `coordinator/pfft.rs` and `coordinator/pad.rs` call sites.
 
 use crate::coordinator::engine::{EngineError, RowFftEngine};
-use crate::coordinator::fpm::SpeedFunction;
 use crate::coordinator::pad::{pads_for_distribution, PadCost, PadDecision};
 use crate::coordinator::partition::{balanced, Algorithm, PartitionError};
 use crate::coordinator::pfft::{pfft_fpm, pfft_fpm_pad, plan_partition, PfftReport};
 use crate::dft::SignalMatrix;
+use crate::model::{PerfModel, SpeedFunction, StaticModel};
 
 /// A fully planned N×N 2D-DFT: row distribution + per-group pad lengths.
 #[derive(Clone, Debug, PartialEq)]
@@ -36,18 +36,23 @@ pub struct PlannedTransform {
 }
 
 impl PlannedTransform {
-    /// Plan from FPM surfaces: ε-identity test + POPTA/HPOPTA, then the
-    /// pad search when `pad_cost` is given (PFFT-FPM-PAD Step 2), or
-    /// trivial pads (exact row length) when `None`.
-    pub fn from_fpms(
-        fpms: &[SpeedFunction],
+    /// Plan from any performance model: ε-identity test + POPTA/HPOPTA
+    /// over the model's plane sections, then the pad search over its
+    /// column sections (windowed to `pad_window` above N) when
+    /// `pad_cost` is given, or trivial pads (exact row length) when
+    /// `None`. This is the single planning entry point — static
+    /// surfaces, the virtual testbed and the online model all plan
+    /// through it.
+    pub fn from_model(
+        model: &dyn PerfModel,
         n: usize,
         eps: f64,
         pad_cost: Option<PadCost>,
+        pad_window: usize,
     ) -> Result<PlannedTransform, PartitionError> {
-        let part = plan_partition(fpms, n, eps)?;
+        let part = plan_partition(model, n, eps)?;
         let pads = match pad_cost {
-            Some(cost) => pads_for_distribution(fpms, &part.d, n, cost),
+            Some(cost) => pads_for_distribution(model, &part.d, n, pad_window, cost),
             None => trivial_pads(part.d.len(), n),
         };
         Ok(PlannedTransform {
@@ -57,6 +62,18 @@ impl PlannedTransform {
             algorithm: part.algorithm,
             makespan: part.makespan,
         })
+    }
+
+    /// [`PlannedTransform::from_model`] over raw measured surfaces
+    /// (wraps them in a [`StaticModel`]; unbounded pad window — the
+    /// measured grid already bounds the candidates).
+    pub fn from_fpms(
+        fpms: &[SpeedFunction],
+        n: usize,
+        eps: f64,
+        pad_cost: Option<PadCost>,
+    ) -> Result<PlannedTransform, PartitionError> {
+        Self::from_model(&StaticModel::from_slice(fpms), n, eps, pad_cost, usize::MAX)
     }
 
     /// The model-free fallback: balanced rows, no padding. Used when

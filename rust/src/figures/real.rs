@@ -6,7 +6,7 @@
 
 use crate::coordinator::engine::{NativeEngine, RowFftEngine};
 use crate::coordinator::group::GroupConfig;
-use crate::coordinator::pfft::{pfft_fpm, pfft_lb, plan_partition};
+use crate::coordinator::pfft::{pfft_fpm, pfft_lb, plan_partition_fpms};
 use crate::dft::SignalMatrix;
 use crate::figures::Ctx;
 use crate::profiler::build_plane;
@@ -45,7 +45,7 @@ fn run_engine(
         // profile a small plane and plan
         let xs: Vec<usize> = (1..=4).map(|k| k * n / 4).collect();
         let fpms = build_plane(engine, cfg, xs, n, 10_000);
-        let part = plan_partition(&fpms, n, 0.05).map_err(|e| e.to_string())?;
+        let part = plan_partition_fpms(&fpms, n, 0.05).map_err(|e| e.to_string())?;
 
         let orig = SignalMatrix::random(n, n, n as u64);
         let mut m_lb = orig.clone();

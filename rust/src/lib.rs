@@ -21,6 +21,12 @@
 //! * [`simulator`] — calibrated performance models of the three FFT packages
 //!   the paper studies (FFTW-2.1.5, FFTW-3.3.7, Intel MKL FFT); substitutes
 //!   for the Haswell-36-core testbed that is not available here.
+//! * [`model`] — the unified performance-model subsystem: FPM surfaces
+//!   and sections, the [`model::PerfModel`] trait every planning /
+//!   scheduling / admission consumer goes through, and its three
+//!   implementations — static (measured), sim (virtual testbed) and
+//!   online (learns from live traffic, detects drift, drives
+//!   re-planning).
 //! * [`stats`] — the paper's Student's-t measurement methodology
 //!   (`MeanUsingTtest`, Algorithm 8) plus the bench harness built on it.
 //! * [`figures`] — regenerates every figure/table of the paper's evaluation.
@@ -38,6 +44,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dft;
 pub mod figures;
+pub mod model;
 pub mod profiler;
 pub mod runtime;
 pub mod service;

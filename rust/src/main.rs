@@ -8,8 +8,13 @@
 //! * `simulate` — virtual-testbed campaign summary
 //! * `bench`    — `run` measured with the MeanUsingTtest methodology
 //! * `serve-bench` — closed-loop load generator against the in-process
-//!   2D-DFT service (batching + wisdom + FPM-informed scheduling)
+//!   2D-DFT service (batching + wisdom + FPM-informed scheduling); runs
+//!   a cold and a warm pass, reports model calibration, writes the
+//!   `BENCH_serve.json` trajectory, and can inject a virtual speed
+//!   shift (`--drift-factor`) to exercise drift detection + re-planning
 //! * `wisdom`   — inspect / prewarm the persistent planning wisdom
+//! * `model`    — inspect the online performance model (sections,
+//!   sample counts, drift events)
 
 use std::path::{Path, PathBuf};
 
@@ -22,9 +27,9 @@ use hclfft::coordinator::pfft::{pfft_fpm, pfft_fpm_pad, pfft_lb};
 use hclfft::coordinator::PlannedTransform;
 use hclfft::dft::SignalMatrix;
 use hclfft::figures::{generate, generate_all, Ctx};
+use hclfft::model::PerfModel;
 use hclfft::profiler::{build_fpms, ProfileSpec};
 use hclfft::runtime::PjrtRowFftEngine;
-use hclfft::simulator::fpm::SimTestbed;
 use hclfft::simulator::vexec::{Campaign, CampaignSummary};
 use hclfft::simulator::Package;
 use hclfft::stats::{mean_using_ttest, TtestPolicy};
@@ -67,6 +72,7 @@ fn run(argv: &[String]) -> Result<(), String> {
         "simulate" => cmd_simulate(&args),
         "serve-bench" => cmd_serve_bench(&args, &cfg),
         "wisdom" => cmd_wisdom(&args, &cfg),
+        "model" => cmd_model(&args),
         other => Err(format!("unknown subcommand `{other}`")),
     }
 }
@@ -78,8 +84,9 @@ fn cmd_plan(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     let p = args.opt_usize("p")?.unwrap_or(pkg.best_groups().p);
     let eps = args.opt_f64("eps")?.unwrap_or(cfg.eps);
 
-    let tb = SimTestbed::new(pkg, GroupConfig::new(p, 36 / p.max(1)));
-    let curves = tb.plane_sections(n);
+    // the planning consumers read sections through the PerfModel trait
+    let model = hclfft::model::SimModel::new(pkg, GroupConfig::new(p, 36 / p.max(1)));
+    let curves: Vec<_> = (0..p).map(|g| model.plane_section(g, n)).collect();
     let identical = hclfft::coordinator::partition::curves_identical(&curves, eps);
     let part = if identical {
         let avg = hclfft::coordinator::partition::average_curve(&curves);
@@ -101,7 +108,7 @@ fn cmd_plan(args: &cli::Args, cfg: &Config) -> Result<(), String> {
             if di == 0 {
                 continue;
             }
-            let col = tb.column_section(i + 1, di, n, hclfft::simulator::vexec::PAD_WINDOW);
+            let col = model.column_section(i, di, n, hclfft::simulator::vexec::PAD_WINDOW);
             let dec = hclfft::coordinator::pad::determine_pad_length(
                 &col,
                 di,
@@ -358,7 +365,8 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
 
     args.validate(&[
         "n", "requests", "clients", "engine", "p", "t", "workers", "batch", "wisdom",
-        "no-wisdom", "pad", "starve", "budget", "seed", "config",
+        "no-wisdom", "pad", "starve", "budget", "seed", "config", "drift-factor", "json",
+        "no-json",
     ])?;
     let ns = parse_csv_usize(&args.opt_or("n", "1024"))?;
     if ns.is_empty() {
@@ -374,6 +382,15 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
             "note: sim-* engines pin their package's paper-best (p, t); --p/--t are ignored"
         );
     }
+    let drift_factor = args.opt_f64("drift-factor")?;
+    if let Some(f) = drift_factor {
+        if !virtual_engine {
+            return Err("--drift-factor requires a sim-* engine (virtual time)".into());
+        }
+        if !(f.is_finite() && f > 0.0) {
+            return Err("--drift-factor must be a positive number".into());
+        }
+    }
 
     let planning = planning_from_args(args, cfg)?;
     let scfg = ServiceConfig {
@@ -382,6 +399,7 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
         starvation_bound_s: args.opt_f64("starve")?.unwrap_or(5.0),
         transpose_block: cfg.transpose_block,
         planning,
+        ..ServiceConfig::default()
     };
 
     let wisdom_path = if args.flag("no-wisdom") {
@@ -406,70 +424,158 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     }
 
     println!(
-        "serve-bench: engine {engine} | sizes {ns:?} | {requests} requests | {clients} clients | \
-         {workers} workers | max batch {max_batch} | exec pool {} thread(s)",
+        "serve-bench: engine {engine} | sizes {ns:?} | {requests} requests/pass x 2 passes \
+         (cold+warm) | {clients} clients | {workers} workers | max batch {max_batch} | \
+         exec pool {} thread(s)",
         hclfft::dft::exec::ExecCtx::global().workers()
     );
-    let t0 = std::time::Instant::now();
-    let failures: std::sync::Mutex<Vec<String>> = std::sync::Mutex::new(Vec::new());
-    let engine_name: &str = &engine;
-    std::thread::scope(|scope| {
-        for c in 0..clients {
-            let svc = &svc;
-            let ns = &ns;
-            let failures = &failures;
-            let engine_name = engine_name;
-            scope.spawn(move || {
-                // closed loop: each client owns its share of the request
-                // budget and waits for every response before the next send
-                let mine = requests / clients + usize::from(c < requests % clients);
-                for i in 0..mine {
-                    let n = ns[(c + i) % ns.len()];
-                    let req = if virtual_engine {
-                        Dft2dRequest::probe(engine_name, n)
-                    } else {
-                        // hash (seed, client, i): collision-free regardless
-                        // of how many requests each client issues
-                        let mseed =
-                            hclfft::util::prng::hash_key(&[seed, c as u64, i as u64]);
-                        Dft2dRequest::forward(
-                            engine_name,
-                            hclfft::dft::SignalMatrix::random(n, n, mseed),
-                        )
-                    };
-                    let outcome = svc.submit(req).and_then(|h| h.wait());
-                    if let Err(e) = outcome {
-                        failures.lock().unwrap().push(e.to_string());
-                    }
-                }
-            });
-        }
-    });
-    let wall = t0.elapsed().as_secs_f64();
-    svc.shutdown();
 
-    let stats = svc.stats();
-    println!("{}", stats.render_table(&format!("serve-bench {engine} (wall {wall:.3}s)")));
+    // one closed-loop pass: each client owns its share of the request
+    // budget and waits for every response before the next send
+    let engine_name: &str = &engine;
+    let run_pass = |pass: u64| -> Vec<String> {
+        let failures: std::sync::Mutex<Vec<String>> = std::sync::Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let svc = &svc;
+                let ns = &ns;
+                let failures = &failures;
+                scope.spawn(move || {
+                    let mine = requests / clients + usize::from(c < requests % clients);
+                    for i in 0..mine {
+                        let n = ns[(c + i) % ns.len()];
+                        let req = if virtual_engine {
+                            Dft2dRequest::probe(engine_name, n)
+                        } else {
+                            // hash (seed, pass, client, i): collision-free
+                            // regardless of request division
+                            let mseed = hclfft::util::prng::hash_key(&[
+                                seed, pass, c as u64, i as u64,
+                            ]);
+                            Dft2dRequest::forward(
+                                engine_name,
+                                hclfft::dft::SignalMatrix::random(n, n, mseed),
+                            )
+                        };
+                        let outcome = svc.submit(req).and_then(|h| h.wait());
+                        if let Err(e) = outcome {
+                            failures.lock().unwrap().push(e.to_string());
+                        }
+                    }
+                });
+            }
+        });
+        failures.into_inner().unwrap()
+    };
+
+    // cold pass (plans, first observations), then warm pass (memoized
+    // wisdom; the --drift-factor speed shift is injected in between so
+    // the warm pass exercises drift detection + re-planning)
+    svc.stats_mark();
+    let mut failures = run_pass(0);
+    let cold = svc.stats_since_mark();
+    println!("{}", cold.render_table(&format!("serve-bench {engine} — cold pass")));
+    if let Some(f) = drift_factor {
+        println!("injecting virtual machine slowdown x{f} before the warm pass");
+        svc.set_virtual_slowdown(&engine, f);
+    }
+    svc.stats_mark();
+    failures.extend(run_pass(1));
+    let warm = svc.stats_since_mark();
+    println!("{}", warm.render_table(&format!("serve-bench {engine} — warm pass")));
+
+    let total = svc.stats();
+    let model = svc.model_snapshot(&engine);
+    let (obs, points) = model.as_ref().map_or((0, 0), |m| (m.observations(), m.len()));
     println!(
         "planning: {} cold event(s), {} warm wisdom hit(s)",
-        stats.planning_events, stats.wisdom_hits
+        total.planning_events, total.wisdom_hits
     );
-    let failures = failures.into_inner().unwrap();
+    println!(
+        "model: {obs} observation(s) over {points} point(s), {} drift event(s), \
+         calibration err mean {} (cold) -> {} (warm)",
+        total.drift_events,
+        fmt_pct(cold.calibration_mean_err, cold.calibration_batches),
+        fmt_pct(warm.calibration_mean_err, warm.calibration_batches),
+    );
     for f in &failures {
         eprintln!("request failed: {f}");
     }
+
+    if !args.flag("no-json") {
+        let json_path = PathBuf::from(args.opt_or("json", "BENCH_serve.json"));
+        let doc = hclfft::util::json::Json::obj()
+            .set("bench", "serve")
+            .set("engine", engine.as_str())
+            .set("sizes", ns.clone())
+            .set("requests_per_pass", requests)
+            .set("clients", clients)
+            .set("workers", workers)
+            .set("max_batch", max_batch)
+            .set(
+                "drift_factor",
+                drift_factor.map(hclfft::util::json::Json::Num).unwrap_or(
+                    hclfft::util::json::Json::Null,
+                ),
+            )
+            .set("cold", phase_json(&cold))
+            .set("warm", phase_json(&warm))
+            .set("drift_events", total.drift_events as i64)
+            .set("model_observations", obs as i64)
+            .set("model_points", points as i64);
+        if let Some(dir) = json_path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+        std::fs::write(&json_path, doc.to_pretty())
+            .map_err(|e| format!("cannot write {}: {e}", json_path.display()))?;
+        println!("bench trajectory written to {}", json_path.display());
+    }
+
     if let Some(path) = &wisdom_path {
         svc.save_wisdom(path)?;
         println!(
-            "wisdom: saved {} record(s) to {} (rerun to serve fully warm)",
+            "wisdom: saved {} record(s) + model deltas to {} (rerun to serve fully warm)",
             svc.wisdom_snapshot().len(),
             path.display()
         );
     }
+    svc.shutdown();
     if !failures.is_empty() {
-        return Err(format!("{} of {requests} request(s) failed", failures.len()));
+        return Err(format!("{} of {} request(s) failed", failures.len(), 2 * requests));
     }
     Ok(())
+}
+
+/// "12.3%" or "n/a" when no calibration samples exist.
+fn fmt_pct(err: f64, batches: u64) -> String {
+    if batches == 0 || !err.is_finite() {
+        "n/a".to_string()
+    } else {
+        format!("{:.1}%", err * 100.0)
+    }
+}
+
+/// One serve-bench phase as a BENCH_serve.json object.
+fn phase_json(s: &hclfft::service::stats::ServiceStats) -> hclfft::util::json::Json {
+    hclfft::util::json::Json::obj()
+        .set("completed", s.completed as i64)
+        .set("failed", s.failed as i64)
+        .set("wall_s", s.wall_s)
+        .set("throughput_rps", s.throughput_rps)
+        .set("latency_p50_ms", s.latency_p50_s * 1e3)
+        .set("latency_p95_ms", s.latency_p95_s * 1e3)
+        .set("latency_p99_ms", s.latency_p99_s * 1e3)
+        .set("planning_events", s.planning_events as i64)
+        .set("wisdom_hits", s.wisdom_hits as i64)
+        .set("drift_events", s.drift_events as i64)
+        .set(
+            "calibration_mean_err",
+            if s.calibration_batches == 0 {
+                hclfft::util::json::Json::Null
+            } else {
+                hclfft::util::json::Json::Num(s.calibration_mean_err)
+            },
+        )
 }
 
 fn cmd_wisdom(args: &cli::Args, cfg: &Config) -> Result<(), String> {
@@ -537,6 +643,124 @@ fn cmd_wisdom(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     println!("{}", table.render());
     if store.is_empty() {
         println!("(empty — run `hclfft serve-bench` or `hclfft wisdom --prewarm <sizes>`)");
+    }
+    Ok(())
+}
+
+/// `hclfft model` — inspect the persisted performance-model state:
+/// per-engine sample counts, refined points, drift events, and (with
+/// `--engine --n`) the plane sections planning runs against.
+fn cmd_model(args: &cli::Args) -> Result<(), String> {
+    use hclfft::model::{SimModel, StaticModel};
+    use hclfft::service::wisdom::WisdomStore;
+    use std::sync::Arc;
+
+    args.validate(&["file", "engine", "n", "config"])?;
+    let path = PathBuf::from(args.opt_or("file", "results/wisdom.json"));
+    let store = if path.exists() {
+        WisdomStore::load(&path)?
+    } else {
+        WisdomStore::new()
+    };
+    let engine_filter = args.opt("engine");
+    let keep = |e: &str| engine_filter.map_or(true, |f| f == e);
+
+    let mut table = hclfft::util::table::Table::new(
+        &format!("online models {}", path.display()),
+        &["engine", "points", "observations", "dropped", "drift events", "speed scale"],
+    );
+    let mut shown = 0usize;
+    for (e, m) in store.models() {
+        if !keep(e) {
+            continue;
+        }
+        shown += 1;
+        // reattach the virtual base so the observed speed scale is
+        // computable for sim engines (real engines report 1.000 until
+        // a service session attaches their measured surfaces). An
+        // unparseable sim-* name in a hand-edited file is skipped, not
+        // fatal — the inspection tool must work on the files it debugs.
+        let mut m = m.clone();
+        if let Ok(Some(pkg)) = sim_package(e) {
+            m.set_base(Arc::new(SimModel::paper_best(pkg)));
+        }
+        table.row(vec![
+            e.clone(),
+            m.len().to_string(),
+            m.observations().to_string(),
+            m.dropped().to_string(),
+            m.drift_events().len().to_string(),
+            format!("{:.3}", m.speed_scale()),
+        ]);
+    }
+    println!("{}", table.render());
+    if shown == 0 {
+        println!("(no model state — serve traffic with `hclfft serve-bench` first)");
+    }
+
+    // refined points: sample counts and running estimates
+    for (e, m) in store.models() {
+        if !keep(e) {
+            continue;
+        }
+        for (&(x, y), p) in m.points() {
+            let ci = p.reported_ci_rel();
+            println!(
+                "  {e} point (x={x}, y={y}): {} sample(s), mean {:.6}s, ci {}, {} drift(s)",
+                p.samples(),
+                p.mean(),
+                if ci.is_finite() { format!("+/-{:.2}%", ci * 100.0) } else { "n/a".into() },
+                p.drift_count
+            );
+        }
+        for ev in m.drift_events().iter().rev().take(10) {
+            println!(
+                "  {e} drift at obs #{}: (x={}, y={}) expected {:.6}s observed {:.6}s \
+                 (variation {:.0}%)",
+                ev.at_observation, ev.x, ev.y, ev.expected_s, ev.observed_s, ev.variation_pct
+            );
+        }
+    }
+
+    // section inspection: the curves planning consumes for (engine, n)
+    if let (Some(engine), Some(n)) = (engine_filter, args.opt_usize("n")?) {
+        let model: Option<Box<dyn PerfModel>> = if let Some(pkg) = sim_package(engine)? {
+            Some(Box::new(SimModel::paper_best(pkg)))
+        } else {
+            store
+                .iter()
+                .find(|r| r.engine == engine && r.n == n && !r.fpms.is_empty())
+                .map(|r| Box::new(StaticModel::new(r.fpms.clone())) as Box<dyn PerfModel>)
+        };
+        match model {
+            Some(model) => {
+                println!("plane sections y = {n} ({engine}):");
+                for g in 0..model.groups() {
+                    let c = model.plane_section(g, n);
+                    if c.is_empty() {
+                        println!("  group{}: (no measured points)", g + 1);
+                        continue;
+                    }
+                    let (lo, hi) = c
+                        .speeds
+                        .iter()
+                        .fold((f64::INFINITY, 0.0f64), |(lo, hi), &s| (lo.min(s), hi.max(s)));
+                    println!(
+                        "  group{}: {} point(s), x in [{}, {}], speed {:.0}..{:.0} MFLOPs",
+                        g + 1,
+                        c.len(),
+                        c.xs[0],
+                        c.xs[c.len() - 1],
+                        lo,
+                        hi
+                    );
+                }
+            }
+            None => println!(
+                "no sections available for {engine} N={n} (no persisted surfaces; run \
+                 serve-bench or wisdom --prewarm)"
+            ),
+        }
     }
     Ok(())
 }

@@ -1,0 +1,125 @@
+//! The unified performance-model subsystem.
+//!
+//! Everything the planning, padding, scheduling, admission and wisdom
+//! layers know about machine performance flows through this module.
+//! Before this layer existed the FPM machinery was scattered across four
+//! places (coordinator types, offline profiler builds, simulator virtual
+//! surfaces, frozen wisdom surfaces) and never improved after startup —
+//! even though every served batch is a free `(x, y, t)` measurement.
+//!
+//! * [`surface`] — the shared data types: discrete 3D speed surfaces
+//!   ([`SpeedFunction`]), section curves ([`Curve`]), the paper's speed
+//!   formula, Eq-1 variation width, and the *single sanitized ingestion
+//!   point* for raw timings ([`sanitize_time`],
+//!   [`speed_from_time_sanitized`]).
+//! * [`PerfModel`] — the trait every consumer plans against: plane
+//!   sections (POPTA/HPOPTA partitioning), column sections (pad
+//!   selection), whole-platform time prediction (SPJF scheduling +
+//!   admission), and observation folding (online refinement).
+//! * [`StaticModel`] — measured surfaces from the offline profiler or a
+//!   persisted wisdom record (the paper's frozen §V artifact).
+//! * [`SimModel`] — the calibrated virtual testbed
+//!   ([`crate::simulator::fpm::SimTestbed`]) behind the same trait.
+//! * [`OnlineModel`] — learns from live traffic: folds per-batch timings
+//!   into per-point running estimates (the `MeanUsingTtest` statistics,
+//!   streamed), detects drift via the paper's Eq-1 `variation_pct`, and
+//!   lets the serving layer invalidate wisdom and re-plan against
+//!   sections rescaled to the machine's current speed.
+
+pub mod online;
+pub mod sim;
+pub mod static_model;
+pub mod surface;
+
+pub use online::{DriftEvent, DriftPolicy, OnlineModel, PointStat};
+pub use sim::SimModel;
+pub use static_model::StaticModel;
+pub use surface::{
+    sanitize_time, speed_from_time, speed_from_time_sanitized, time_from_speed, variation_pct,
+    Curve, SpeedFunction, MIN_TIME_S,
+};
+
+/// A performance model of one execution platform: `groups()` abstract
+/// processors with per-group speed sections and a whole-platform time
+/// predictor. The geometric queries mirror the paper's two FPM
+/// operations (§III-C/D); `predict_time`/`observe` close the loop that
+/// turns the offline method into an adaptive serving system.
+pub trait PerfModel: Send + Sync {
+    /// Model name for reports.
+    fn model_name(&self) -> String;
+
+    /// Number of abstract processors the model describes.
+    fn groups(&self) -> usize;
+
+    /// Plane section `y = n` for group `g` (0-based): the speed-vs-x
+    /// curve POPTA/HPOPTA partition over. May be empty when the model
+    /// has no data for the group.
+    fn plane_section(&self, g: usize, n: usize) -> Curve;
+
+    /// Column section `x = d` for group `g`: the speed-vs-y curve pad
+    /// selection searches, restricted to `y <= n + window` (candidates
+    /// above `n`, plus the unpadded reference at/below `n`).
+    fn column_section(&self, g: usize, d: usize, n: usize, window: usize) -> Curve;
+
+    /// Predicted whole-platform seconds for executing `x` row 1D-FFTs of
+    /// length `y` (all groups working concurrently). `None` when the
+    /// model has no information near `(x, y)`.
+    fn predict_time(&self, x: usize, y: usize) -> Option<f64>;
+
+    /// Fold one timing observation into the model (no-op for models that
+    /// cannot learn). Returns a drift event when the observation stream
+    /// contradicts the model's established estimate.
+    fn observe(&mut self, _x: usize, _y: usize, _t_seconds: f64) -> Option<DriftEvent> {
+        None
+    }
+}
+
+/// Shared `predict_time` implementation for section-backed models: each
+/// group contributes the speed of its balanced share `x / p` at row
+/// length `y`; the summed speed prices the whole platform.
+pub(crate) fn predict_time_via_sections(model: &dyn PerfModel, x: usize, y: usize) -> Option<f64> {
+    let p = model.groups().max(1);
+    let share = (x / p).max(1);
+    let mut total = 0.0;
+    let mut informed = 0usize;
+    for g in 0..p {
+        let section = model.plane_section(g, y);
+        if !section.is_empty() {
+            total += section.speed_nearest(share);
+            informed += 1;
+        }
+    }
+    if informed == 0 || total <= 0.0 {
+        return None;
+    }
+    // uninformed groups contribute no speed: the estimate degrades
+    // conservatively (longer predicted time) instead of guessing
+    Some(time_from_speed(x, y, total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn section_prediction_sums_group_speeds() {
+        let fpms: Vec<SpeedFunction> = (0..2)
+            .map(|g| {
+                SpeedFunction::from_fn("m", vec![64, 128], vec![128], move |_, _| {
+                    Some(100.0 * (g + 1) as f64)
+                })
+            })
+            .collect();
+        let m = StaticModel::new(fpms);
+        // total speed 300 MFLOPs pricing 128 rows of length 128
+        let t = m.predict_time(128, 128).unwrap();
+        let want = time_from_speed(128, 128, 300.0);
+        assert!((t - want).abs() < 1e-12, "{t} vs {want}");
+    }
+
+    #[test]
+    fn empty_model_predicts_nothing() {
+        let m = StaticModel::new(vec![SpeedFunction::new("e", vec![1, 2], vec![128])]);
+        assert_eq!(m.predict_time(4, 128), None);
+    }
+}

@@ -1,0 +1,617 @@
+//! `OnlineModel` — the model that learns from live traffic.
+//!
+//! Every served batch is a free `(x, y, t)` measurement. This model
+//! folds those timings into per-point running estimates using the same
+//! statistics as the paper's `MeanUsingTtest` methodology (Algorithm 8:
+//! sample mean + Student's-t confidence interval, here streamed via
+//! running sums instead of a closed measurement loop), and watches the
+//! stream for *drift* with the paper's Eq-1 `variation_pct`: when the
+//! mean of the most recent window of observations differs from the
+//! established estimate by more than the drift threshold, the point is
+//! re-based onto the new regime and a [`DriftEvent`] is emitted — the
+//! serving layer reacts by invalidating the affected wisdom partitions
+//! and re-planning.
+//!
+//! An `OnlineModel` usually wraps a *base* model (the profiler's
+//! [`StaticModel`](crate::model::StaticModel) surfaces or the virtual
+//! [`SimModel`](crate::model::SimModel)): refined point estimates win
+//! where observations exist; section queries return the base sections
+//! rescaled by the observed speed ratio, so POPTA/HPOPTA and pad
+//! selection re-run against curves that follow the machine.
+//!
+//! Estimator invariants (property-tested in `proptests.rs`):
+//! * the per-point estimate is order-invariant under permutation of a
+//!   stationary sample stream (running sums, no order-dependent state);
+//! * the *reported* confidence interval never widens as samples
+//!   accumulate (it is the tightest CI achieved so far);
+//! * the drift detector does not fire on a stationary stream whose
+//!   noise is small relative to the threshold.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::model::surface::{sanitize_time, variation_pct, Curve, MIN_TIME_S};
+use crate::model::PerfModel;
+use crate::stats::ttest::t_inv_cdf;
+use crate::util::json::Json;
+
+/// Drift-detection knobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftPolicy {
+    /// Eq-1 variation width (percent) between the established mean and
+    /// the recent-window mean above which a point is declared drifted.
+    pub drift_pct: f64,
+    /// Size of the recent-observation window compared against the
+    /// established estimate.
+    pub window: usize,
+    /// Observations a point must accumulate before drift checks begin
+    /// (the establishment phase).
+    pub min_established: u64,
+    /// Confidence level for the reported interval (paper: 0.95).
+    pub cl: f64,
+    /// Drift is only *declared* once the established estimate itself is
+    /// trustworthy: its reported relative CI must be at or below this
+    /// (Algorithm 8's acceptance spirit). Keeps noisy real-engine
+    /// timings (µs-scale batches) from firing spurious re-plans while
+    /// the exact virtual-time path converges to CI 0 immediately.
+    pub max_established_ci: f64,
+}
+
+impl Default for DriftPolicy {
+    fn default() -> Self {
+        DriftPolicy {
+            drift_pct: 40.0,
+            window: 4,
+            min_established: 4,
+            cl: 0.95,
+            max_established_ci: 0.05,
+        }
+    }
+}
+
+/// One detected regime change at a model point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DriftEvent {
+    pub x: usize,
+    pub y: usize,
+    /// established mean seconds before the shift
+    pub expected_s: f64,
+    /// recent-window mean seconds that contradicted it
+    pub observed_s: f64,
+    /// Eq-1 width between the two (percent)
+    pub variation_pct: f64,
+    /// model-wide observation count when the event fired
+    pub at_observation: u64,
+}
+
+/// Running estimate for one `(x, y)` point: established running sums
+/// (order-invariant) plus the recent window the drift detector compares
+/// against them.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PointStat {
+    count: u64,
+    sum: f64,
+    sumsq: f64,
+    best_ci_rel: f64,
+    window: Vec<f64>,
+    /// regime changes this point has been through
+    pub drift_count: u32,
+}
+
+impl PointStat {
+    fn new() -> PointStat {
+        PointStat { best_ci_rel: f64::INFINITY, ..PointStat::default() }
+    }
+
+    /// Total observations folded in (established + pending window).
+    pub fn samples(&self) -> u64 {
+        self.count + self.window.len() as u64
+    }
+
+    /// Mean over every observation since the last regime change.
+    pub fn mean(&self) -> f64 {
+        let n = self.samples();
+        if n == 0 {
+            return 0.0;
+        }
+        (self.sum + self.window.iter().sum::<f64>()) / n as f64
+    }
+
+    fn established_mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Relative half-width of the Student's-t confidence interval over
+    /// the current sample set (Algorithm 8's `clOut·reps/sum`), computed
+    /// from running sums — order-invariant. Infinite below 2 samples.
+    pub fn ci_rel(&self, cl: f64) -> f64 {
+        let n = self.samples();
+        if n < 2 {
+            return f64::INFINITY;
+        }
+        let nf = n as f64;
+        let sum = self.sum + self.window.iter().sum::<f64>();
+        let sumsq = self.sumsq + self.window.iter().map(|v| v * v).sum::<f64>();
+        let mean = sum / nf;
+        if mean <= 0.0 {
+            return f64::INFINITY;
+        }
+        let var = ((sumsq - sum * sum / nf) / (nf - 1.0)).max(0.0);
+        let t = t_inv_cdf(cl, nf - 1.0);
+        t * var.sqrt() / nf.sqrt() / mean
+    }
+
+    /// The tightest relative CI achieved so far — monotone non-widening
+    /// as evidence accumulates (resets only on drift, a regime change).
+    pub fn reported_ci_rel(&self) -> f64 {
+        self.best_ci_rel
+    }
+
+    fn fold(&mut self, t: f64) {
+        self.count += 1;
+        self.sum += t;
+        self.sumsq += t * t;
+    }
+
+    fn merge_window(&mut self) {
+        for t in std::mem::take(&mut self.window) {
+            self.fold(t);
+        }
+    }
+
+    fn rebase_to_window(&mut self) {
+        let win = std::mem::take(&mut self.window);
+        self.count = 0;
+        self.sum = 0.0;
+        self.sumsq = 0.0;
+        self.best_ci_rel = f64::INFINITY;
+        self.drift_count += 1;
+        for t in win {
+            self.fold(t);
+        }
+    }
+}
+
+/// The live model: refined per-point estimates + drift log over an
+/// optional base model.
+#[derive(Clone)]
+pub struct OnlineModel {
+    name: String,
+    policy: DriftPolicy,
+    base: Option<Arc<dyn PerfModel>>,
+    points: BTreeMap<(usize, usize), PointStat>,
+    drift_log: Vec<DriftEvent>,
+    observations: u64,
+    dropped: u64,
+}
+
+impl std::fmt::Debug for OnlineModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OnlineModel")
+            .field("name", &self.name)
+            .field("policy", &self.policy)
+            .field("has_base", &self.base.is_some())
+            .field("points", &self.points.len())
+            .field("drift_events", &self.drift_log.len())
+            .field("observations", &self.observations)
+            .field("dropped", &self.dropped)
+            .finish()
+    }
+}
+
+impl OnlineModel {
+    pub fn new(name: &str, policy: DriftPolicy) -> OnlineModel {
+        OnlineModel {
+            name: name.to_string(),
+            policy,
+            base: None,
+            points: BTreeMap::new(),
+            drift_log: Vec::new(),
+            observations: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn with_base(mut self, base: Arc<dyn PerfModel>) -> OnlineModel {
+        self.base = Some(base);
+        self
+    }
+
+    /// Attach/replace the base model (e.g. after a fresh offline
+    /// profiling pass refreshed the static surfaces).
+    pub fn set_base(&mut self, base: Arc<dyn PerfModel>) {
+        self.base = Some(base);
+    }
+
+    pub fn policy(&self) -> DriftPolicy {
+        self.policy
+    }
+
+    /// Count of distinct refined points.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Total observations accepted (sanitized) so far.
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Observations rejected by the sanitizer (NaN/negative times).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn drift_events(&self) -> &[DriftEvent] {
+        &self.drift_log
+    }
+
+    pub fn points(&self) -> impl Iterator<Item = (&(usize, usize), &PointStat)> {
+        self.points.iter()
+    }
+
+    pub fn point(&self, x: usize, y: usize) -> Option<&PointStat> {
+        self.points.get(&(x, y))
+    }
+
+    /// Refined time estimate at exactly `(x, y)` — observations only,
+    /// never the base model. `None` until the point has at least two
+    /// accepted samples.
+    pub fn refined_time(&self, x: usize, y: usize) -> Option<f64> {
+        let p = self.points.get(&(x, y))?;
+        (p.samples() >= 2).then(|| p.mean())
+    }
+
+    /// Does any point carry enough samples to inform re-planning?
+    pub fn has_refined(&self) -> bool {
+        self.points.values().any(|p| p.samples() >= self.policy.min_established)
+    }
+
+    /// Observed speed ratio vs the base model (geometric mean of
+    /// `base_time / observed_time` over refined points): < 1 means the
+    /// machine runs slower than the base believed. 1.0 without a base
+    /// or without refined data.
+    pub fn speed_scale(&self) -> f64 {
+        let Some(base) = &self.base else { return 1.0 };
+        let mut logsum = 0.0;
+        let mut k = 0usize;
+        for ((x, y), p) in &self.points {
+            if p.samples() < self.policy.min_established {
+                continue;
+            }
+            let m = p.mean();
+            if let Some(bt) = base.predict_time(*x, *y) {
+                if bt > 0.0 && m > 0.0 {
+                    logsum += (bt / m).ln();
+                    k += 1;
+                }
+            }
+        }
+        if k == 0 {
+            1.0
+        } else {
+            (logsum / k as f64).exp()
+        }
+    }
+
+    fn scaled(&self, c: Curve) -> Curve {
+        let s = self.speed_scale();
+        if s == 1.0 || c.is_empty() {
+            return c;
+        }
+        Curve::new(c.xs, c.speeds.into_iter().map(|v| v * s).collect())
+    }
+}
+
+impl PerfModel for OnlineModel {
+    fn model_name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn groups(&self) -> usize {
+        self.base.as_ref().map_or(0, |b| b.groups())
+    }
+
+    /// Base sections rescaled by the observed speed ratio — the
+    /// "refreshed sections" POPTA/HPOPTA re-run against after drift.
+    fn plane_section(&self, g: usize, n: usize) -> Curve {
+        match &self.base {
+            Some(b) => self.scaled(b.plane_section(g, n)),
+            None => Curve::new(Vec::new(), Vec::new()),
+        }
+    }
+
+    fn column_section(&self, g: usize, d: usize, n: usize, window: usize) -> Curve {
+        match &self.base {
+            Some(b) => self.scaled(b.column_section(g, d, n, window)),
+            None => Curve::new(Vec::new(), Vec::new()),
+        }
+    }
+
+    fn predict_time(&self, x: usize, y: usize) -> Option<f64> {
+        if let Some(t) = self.refined_time(x, y) {
+            return Some(t);
+        }
+        let base = self.base.as_ref()?.predict_time(x, y)?;
+        Some(base / self.speed_scale())
+    }
+
+    /// Fold one observation (sanitized here — the model layer's single
+    /// ingestion point) and run the drift check.
+    fn observe(&mut self, x: usize, y: usize, t_seconds: f64) -> Option<DriftEvent> {
+        let Some(t) = sanitize_time(t_seconds) else {
+            self.dropped += 1;
+            return None;
+        };
+        self.observations += 1;
+        let policy = self.policy;
+        let at = self.observations;
+        let p = self.points.entry((x, y)).or_insert_with(PointStat::new);
+        let event = if p.count < policy.min_established {
+            p.fold(t);
+            None
+        } else {
+            p.window.push(t);
+            if p.window.len() < policy.window {
+                None
+            } else {
+                let wmean = p.window.iter().sum::<f64>() / p.window.len() as f64;
+                let emean = p.established_mean();
+                let width = variation_pct(emean.max(MIN_TIME_S), wmean.max(MIN_TIME_S));
+                if width > policy.drift_pct && p.best_ci_rel <= policy.max_established_ci {
+                    p.rebase_to_window();
+                    Some(DriftEvent {
+                        x,
+                        y,
+                        expected_s: emean,
+                        observed_s: wmean,
+                        variation_pct: width,
+                        at_observation: at,
+                    })
+                } else {
+                    p.merge_window();
+                    None
+                }
+            }
+        };
+        let ci = p.ci_rel(policy.cl);
+        if ci < p.best_ci_rel {
+            p.best_ci_rel = ci;
+        }
+        if let Some(e) = &event {
+            self.drift_log.push(e.clone());
+        }
+        event
+    }
+}
+
+impl OnlineModel {
+    /// Serialize the model deltas + drift log (the base model is not
+    /// persisted — it is reattached from the wisdom surfaces / the
+    /// simulator at load time). Pending window samples are folded into
+    /// the persisted sums.
+    pub fn to_json(&self) -> Json {
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|(&(x, y), p)| {
+                let winsum: f64 = p.window.iter().sum();
+                let winsumsq: f64 = p.window.iter().map(|v| v * v).sum();
+                let mut o = Json::obj()
+                    .set("x", x)
+                    .set("y", y)
+                    .set("count", p.samples() as i64)
+                    .set("sum", p.sum + winsum)
+                    .set("sumsq", p.sumsq + winsumsq)
+                    .set("drift_count", p.drift_count as i64);
+                if p.best_ci_rel.is_finite() {
+                    o = o.set("best_ci_rel", p.best_ci_rel);
+                }
+                o
+            })
+            .collect();
+        let drift: Vec<Json> = self
+            .drift_log
+            .iter()
+            .map(|e| {
+                Json::obj()
+                    .set("x", e.x)
+                    .set("y", e.y)
+                    .set("expected_s", e.expected_s)
+                    .set("observed_s", e.observed_s)
+                    .set("variation_pct", e.variation_pct)
+                    .set("at_observation", e.at_observation as i64)
+            })
+            .collect();
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("drift_pct", self.policy.drift_pct)
+            .set("window", self.policy.window)
+            .set("min_established", self.policy.min_established as i64)
+            .set("cl", self.policy.cl)
+            .set("max_established_ci", self.policy.max_established_ci)
+            .set("observations", self.observations as i64)
+            .set("dropped", self.dropped as i64)
+            .set("points", Json::Arr(points))
+            .set("drift_log", Json::Arr(drift))
+    }
+
+    /// Inverse of [`OnlineModel::to_json`] (base left unattached).
+    pub fn from_json(j: &Json) -> Result<OnlineModel, String> {
+        let name =
+            j.get("name").and_then(Json::as_str).ok_or("model json: missing name")?.to_string();
+        let f = |k: &str| j.get(k).and_then(Json::as_f64).ok_or(format!("model json: missing {k}"));
+        let u = |k: &str| {
+            j.get(k).and_then(Json::as_usize).ok_or(format!("model json: missing {k}"))
+        };
+        let policy = DriftPolicy {
+            drift_pct: f("drift_pct")?,
+            window: u("window")?,
+            min_established: u("min_established")? as u64,
+            cl: f("cl")?,
+            max_established_ci: j
+                .get("max_established_ci")
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| DriftPolicy::default().max_established_ci),
+        };
+        let mut m = OnlineModel::new(&name, policy);
+        m.observations = u("observations")? as u64;
+        m.dropped = u("dropped")? as u64;
+        for pj in j.get("points").and_then(Json::as_arr).ok_or("model json: missing points")? {
+            let pu = |k: &str| {
+                pj.get(k).and_then(Json::as_usize).ok_or(format!("model json: bad point {k}"))
+            };
+            let pf = |k: &str| {
+                pj.get(k).and_then(Json::as_f64).ok_or(format!("model json: bad point {k}"))
+            };
+            let stat = PointStat {
+                count: pu("count")? as u64,
+                sum: pf("sum")?,
+                sumsq: pf("sumsq")?,
+                best_ci_rel: pj
+                    .get("best_ci_rel")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(f64::INFINITY),
+                window: Vec::new(),
+                drift_count: pu("drift_count")? as u32,
+            };
+            m.points.insert((pu("x")?, pu("y")?), stat);
+        }
+        for ej in j.get("drift_log").and_then(Json::as_arr).unwrap_or(&[]) {
+            let eu = |k: &str| {
+                ej.get(k).and_then(Json::as_usize).ok_or(format!("model json: bad drift {k}"))
+            };
+            let ef = |k: &str| {
+                ej.get(k).and_then(Json::as_f64).ok_or(format!("model json: bad drift {k}"))
+            };
+            m.drift_log.push(DriftEvent {
+                x: eu("x")?,
+                y: eu("y")?,
+                expected_s: ef("expected_s")?,
+                observed_s: ef("observed_s")?,
+                variation_pct: ef("variation_pct")?,
+                at_observation: eu("at_observation")? as u64,
+            });
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{SpeedFunction, StaticModel};
+
+    fn flat_base(speed: f64) -> Arc<dyn PerfModel> {
+        Arc::new(StaticModel::new(
+            (0..2)
+                .map(|g| {
+                    SpeedFunction::from_fn(
+                        &format!("b{g}"),
+                        vec![64, 128, 256],
+                        vec![128, 256],
+                        move |_, _| Some(speed),
+                    )
+                })
+                .collect(),
+        ))
+    }
+
+    #[test]
+    fn refines_toward_observed_mean() {
+        let mut m = OnlineModel::new("t", DriftPolicy::default());
+        assert_eq!(m.refined_time(256, 128), None);
+        for _ in 0..6 {
+            assert!(m.observe(256, 128, 0.02).is_none());
+        }
+        let t = m.refined_time(256, 128).unwrap();
+        assert!((t - 0.02).abs() < 1e-12);
+        assert_eq!(m.observations(), 6);
+        assert!(m.has_refined());
+    }
+
+    #[test]
+    fn sanitizer_drops_nan_and_clamps_zero() {
+        // regression for the sub-resolution timing panic: neither input
+        // may panic, NaN must be dropped, ~0 must clamp to MIN_TIME_S
+        let mut m = OnlineModel::new("t", DriftPolicy::default());
+        assert!(m.observe(64, 128, f64::NAN).is_none());
+        assert_eq!(m.dropped(), 1);
+        assert_eq!(m.observations(), 0);
+        m.observe(64, 128, 0.0);
+        m.observe(64, 128, 0.0);
+        assert_eq!(m.refined_time(64, 128), Some(MIN_TIME_S));
+    }
+
+    #[test]
+    fn drift_fires_on_regime_shift_and_rebases() {
+        let mut m = OnlineModel::new("t", DriftPolicy::default());
+        for _ in 0..8 {
+            assert!(m.observe(256, 128, 0.01).is_none(), "stationary stream must not drift");
+        }
+        // 3x slowdown: the 4-observation window contradicts the mean
+        let mut fired = None;
+        for _ in 0..4 {
+            fired = m.observe(256, 128, 0.03);
+        }
+        let e = fired.expect("drift within one window");
+        assert!((e.expected_s - 0.01).abs() < 1e-12);
+        assert!((e.observed_s - 0.03).abs() < 1e-12);
+        assert!(e.variation_pct > 100.0);
+        assert_eq!(m.drift_events().len(), 1);
+        // estimate re-based onto the new regime
+        assert!((m.refined_time(256, 128).unwrap() - 0.03).abs() < 1e-12);
+        assert_eq!(m.point(256, 128).unwrap().drift_count, 1);
+    }
+
+    #[test]
+    fn sections_rescale_with_observed_speed() {
+        let base = flat_base(100.0);
+        let mut m = OnlineModel::new("t", DriftPolicy::default()).with_base(base.clone());
+        let before = m.plane_section(0, 128);
+        // observe the machine running 2x slower than the base predicts
+        let base_t = base.predict_time(256, 128).unwrap();
+        for _ in 0..6 {
+            m.observe(256, 128, base_t * 2.0);
+        }
+        let scale = m.speed_scale();
+        assert!((scale - 0.5).abs() < 1e-9, "scale {scale}");
+        let after = m.plane_section(0, 128);
+        for (a, b) in after.speeds.iter().zip(&before.speeds) {
+            assert!((a - b * 0.5).abs() < 1e-9);
+        }
+        // predictions without refined data also rescale
+        let pred = m.predict_time(128, 128).unwrap();
+        let unscaled = base.predict_time(128, 128).unwrap();
+        assert!((pred - unscaled * 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reported_ci_is_monotone_and_json_roundtrips() {
+        let mut m = OnlineModel::new("t", DriftPolicy::default());
+        let mut last = f64::INFINITY;
+        for i in 0..32u32 {
+            m.observe(128, 128, 0.01 * (1.0 + 0.03 * ((i % 5) as f64 - 2.0)));
+            let ci = m.point(128, 128).unwrap().reported_ci_rel();
+            assert!(ci <= last + 1e-15, "CI widened: {ci} > {last}");
+            last = ci;
+        }
+        assert!(last.is_finite());
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        let back = OnlineModel::from_json(&j).unwrap();
+        assert_eq!(back.observations(), m.observations());
+        assert_eq!(back.len(), 1);
+        let (a, b) = (back.point(128, 128).unwrap(), m.point(128, 128).unwrap());
+        assert_eq!(a.samples(), b.samples());
+        assert!((a.mean() - b.mean()).abs() < 1e-15);
+        assert_eq!(back.drift_events(), m.drift_events());
+    }
+}

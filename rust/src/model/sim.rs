@@ -1,0 +1,87 @@
+//! `SimModel` — the calibrated virtual testbed behind [`PerfModel`].
+//!
+//! Thin adapter over [`crate::simulator::fpm::SimTestbed`]: sections are
+//! computed lazily from the package model on the paper's 128-grid
+//! (memory-capped), so the virtual-time serving path and the planning
+//! algorithms consume the exact same curves as the figure campaigns —
+//! deterministic at paper-scale N in microseconds.
+
+use crate::coordinator::group::GroupConfig;
+use crate::model::surface::{time_from_speed, Curve};
+use crate::model::PerfModel;
+use crate::simulator::fpm::SimTestbed;
+use crate::simulator::Package;
+
+/// A virtual-testbed performance model (package + group configuration).
+#[derive(Clone, Debug)]
+pub struct SimModel {
+    tb: SimTestbed,
+}
+
+impl SimModel {
+    pub fn new(package: Package, cfg: GroupConfig) -> SimModel {
+        SimModel { tb: SimTestbed::new(package, cfg) }
+    }
+
+    /// With the package's paper-best (p, t).
+    pub fn paper_best(package: Package) -> SimModel {
+        SimModel { tb: SimTestbed::paper_best(package) }
+    }
+}
+
+impl PerfModel for SimModel {
+    fn model_name(&self) -> String {
+        format!("sim-{}", self.tb.model.package.name())
+    }
+
+    fn groups(&self) -> usize {
+        self.tb.cfg.p
+    }
+
+    fn plane_section(&self, g: usize, n: usize) -> Curve {
+        // SimTestbed groups are 1-based (paper numbering)
+        self.tb.plane_section(g + 1, n)
+    }
+
+    fn column_section(&self, g: usize, d: usize, n: usize, window: usize) -> Curve {
+        self.tb.column_section(g + 1, d, n, window)
+    }
+
+    fn predict_time(&self, x: usize, y: usize) -> Option<f64> {
+        let p = self.groups().max(1);
+        let share = (x / p).max(1);
+        let total: f64 = (1..=p)
+            .map(|g| self.tb.model.group_speed(share, y, g, p, self.tb.cfg.t))
+            .sum();
+        if total <= 0.0 {
+            return None;
+        }
+        Some(time_from_speed(x, y, total))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_match_testbed() {
+        let m = SimModel::paper_best(Package::Mkl);
+        let a = m.plane_section(0, 24_704);
+        let b = m.tb.plane_section(1, 24_704);
+        assert_eq!(a, b);
+        let ca = m.column_section(1, 11_648, 24_704, 2048);
+        let cb = m.tb.column_section(2, 11_648, 24_704, 2048);
+        assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn predicts_positive_finite_times() {
+        let m = SimModel::paper_best(Package::Fftw3);
+        let t = m.predict_time(2 * 8_064, 8_064).unwrap();
+        assert!(t > 0.0 && t.is_finite());
+        // bigger problems take longer
+        let t2 = m.predict_time(2 * 16_064, 16_064).unwrap();
+        assert!(t2 > t);
+    }
+}

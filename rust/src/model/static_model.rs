@@ -1,0 +1,109 @@
+//! `StaticModel` — measured FPM surfaces behind the [`PerfModel`] trait.
+//!
+//! Wraps the per-group [`SpeedFunction`]s produced by the offline
+//! profiler (§V-B construction) or loaded from a persisted wisdom
+//! record. This is the paper's frozen artifact: it answers section and
+//! prediction queries but ignores observations — live refinement is
+//! [`crate::model::OnlineModel`]'s job (typically with a `StaticModel`
+//! as its base).
+
+use crate::model::surface::{Curve, SpeedFunction};
+use crate::model::PerfModel;
+
+/// Per-group measured speed surfaces (index = abstract processor).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StaticModel {
+    fpms: Vec<SpeedFunction>,
+}
+
+impl StaticModel {
+    pub fn new(fpms: Vec<SpeedFunction>) -> StaticModel {
+        StaticModel { fpms }
+    }
+
+    /// Borrow-friendly constructor for callers holding `&[SpeedFunction]`.
+    pub fn from_slice(fpms: &[SpeedFunction]) -> StaticModel {
+        StaticModel { fpms: fpms.to_vec() }
+    }
+
+    pub fn surfaces(&self) -> &[SpeedFunction] {
+        &self.fpms
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fpms.is_empty()
+    }
+}
+
+impl PerfModel for StaticModel {
+    fn model_name(&self) -> String {
+        self.fpms.first().map(|f| f.name.clone()).unwrap_or_else(|| "static".to_string())
+    }
+
+    fn groups(&self) -> usize {
+        self.fpms.len()
+    }
+
+    fn plane_section(&self, g: usize, n: usize) -> Curve {
+        self.fpms[g].plane_section(n)
+    }
+
+    fn column_section(&self, g: usize, d: usize, n: usize, window: usize) -> Curve {
+        let full = self.fpms[g].column_section(d);
+        let cap = n.saturating_add(window);
+        let mut ys = Vec::new();
+        let mut speeds = Vec::new();
+        for (i, &y) in full.xs.iter().enumerate() {
+            if y <= cap {
+                ys.push(y);
+                speeds.push(full.speeds[i]);
+            }
+        }
+        Curve::new(ys, speeds)
+    }
+
+    fn predict_time(&self, x: usize, y: usize) -> Option<f64> {
+        crate::model::predict_time_via_sections(self, x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> StaticModel {
+        StaticModel::new(
+            (0..2)
+                .map(|g| {
+                    SpeedFunction::from_fn(
+                        &format!("g{g}"),
+                        vec![4, 8, 16],
+                        vec![64, 128, 256],
+                        move |x, _| Some(100.0 + g as f64 * 50.0 + x as f64),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn sections_match_underlying_surfaces() {
+        let m = demo();
+        let c = m.plane_section(1, 128);
+        assert_eq!(c.xs, vec![4, 8, 16]);
+        assert_eq!(c.speeds[0], 154.0);
+        // column section restricted by window: only y <= 64 + 64
+        let col = m.column_section(0, 8, 64, 64);
+        assert_eq!(col.xs, vec![64, 128]);
+        // unbounded window keeps everything
+        let all = m.column_section(0, 8, 64, usize::MAX);
+        assert_eq!(all.xs, vec![64, 128, 256]);
+    }
+
+    #[test]
+    fn groups_and_name() {
+        let m = demo();
+        assert_eq!(m.groups(), 2);
+        assert_eq!(m.model_name(), "g0");
+    }
+}

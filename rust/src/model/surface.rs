@@ -1,0 +1,492 @@
+//! FPM surfaces — the shared data types of every performance model.
+//!
+//! The paper's FPM is a *discrete 3D function of performance against
+//! problem size*: `S_i = {((x, y), s_i(x, y))}` where `s_i(x, y)` is the
+//! speed of abstract processor `i` executing `x` row 1D-FFTs of length
+//! `y`, computed as `s = 2.5·x·y·log2(y) / t` (Section III-C).
+//!
+//! The two geometric operations the algorithms need are the *plane
+//! section* `y = N` (PFFT-FPM Step 1a — gives speed-vs-x curves for
+//! partitioning, Figures 9-10) and the *column section* `x = d_i`
+//! (PFFT-FPM-PAD Step 2 — gives speed-vs-y curves for pad selection,
+//! Figures 11-12).
+//!
+//! This module is also the *single ingestion point* for raw timing
+//! measurements ([`sanitize_time`] / [`speed_from_time_sanitized`]):
+//! every producer — the offline profiler, the serving executor, the
+//! online model — routes observed times through it, so a sub-resolution
+//! timer reading (~0 ns on a fast point) or a NaN from a degenerate
+//! t-test can never reach the positivity asserts in [`Curve::new`] or
+//! [`speed_from_time`].
+
+use std::path::Path;
+
+/// Timer-resolution floor (seconds). Observed times are clamped up to
+/// this before the speed formula divides by them: a measurement of
+/// ~0 ns means "faster than the clock can see", not infinite speed.
+pub const MIN_TIME_S: f64 = 1e-9;
+
+/// Sanitize one raw timing observation: `None` for non-finite or
+/// negative values (clock error, degenerate t-test), otherwise the time
+/// clamped up to [`MIN_TIME_S`].
+pub fn sanitize_time(t_seconds: f64) -> Option<f64> {
+    if !t_seconds.is_finite() || t_seconds < 0.0 {
+        return None;
+    }
+    Some(t_seconds.max(MIN_TIME_S))
+}
+
+/// The paper's speed formula: speed (MFLOPs if t in seconds and the
+/// constant absorbed) of executing `x` row FFTs of length `y` in time `t`.
+pub fn speed_from_time(x: usize, y: usize, t_seconds: f64) -> f64 {
+    assert!(t_seconds > 0.0, "speed_from_time: nonpositive time");
+    2.5 * x as f64 * y as f64 * (y as f64).log2() / t_seconds / 1e6
+}
+
+/// [`speed_from_time`] behind the sanitizer: `None` when the
+/// observation is unusable (NaN/negative time, or a degenerate point
+/// whose speed would not be positive and finite). This is the form
+/// measurement producers must use.
+pub fn speed_from_time_sanitized(x: usize, y: usize, t_seconds: f64) -> Option<f64> {
+    let t = sanitize_time(t_seconds)?;
+    let s = speed_from_time(x, y, t);
+    (s > 0.0 && s.is_finite()).then_some(s)
+}
+
+/// Inverse: execution time (seconds) of `x` row FFTs of length `y` at
+/// speed `s` MFLOPs.
+pub fn time_from_speed(x: usize, y: usize, s_mflops: f64) -> f64 {
+    assert!(s_mflops > 0.0, "time_from_speed: nonpositive speed");
+    2.5 * x as f64 * y as f64 * (y as f64).log2() / (s_mflops * 1e6)
+}
+
+/// Eq. 1: width of performance variation between two speeds (percent).
+pub fn variation_pct(s1: f64, s2: f64) -> f64 {
+    (s1 - s2).abs() / s1.min(s2) * 100.0
+}
+
+/// A speed-vs-x curve (one plane or column section), x strictly ascending.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Curve {
+    /// problem-size coordinate (rows x for plane sections, length y for
+    /// column sections)
+    pub xs: Vec<usize>,
+    /// speed in MFLOPs at each coordinate
+    pub speeds: Vec<f64>,
+}
+
+impl Curve {
+    pub fn new(xs: Vec<usize>, speeds: Vec<f64>) -> Self {
+        assert_eq!(xs.len(), speeds.len(), "curve arity mismatch");
+        assert!(xs.windows(2).all(|w| w[0] < w[1]), "curve xs must be ascending");
+        assert!(speeds.iter().all(|&s| s > 0.0 && s.is_finite()), "curve speeds must be positive");
+        Curve { xs, speeds }
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Speed at exactly-gridded `x` (None if not a grid point).
+    pub fn speed_at(&self, x: usize) -> Option<f64> {
+        self.xs.binary_search(&x).ok().map(|i| self.speeds[i])
+    }
+
+    /// Speed at `x` with nearest-grid-point fallback.
+    pub fn speed_nearest(&self, x: usize) -> f64 {
+        assert!(!self.is_empty());
+        match self.xs.binary_search(&x) {
+            Ok(i) => self.speeds[i],
+            Err(0) => self.speeds[0],
+            Err(i) if i == self.xs.len() => self.speeds[i - 1],
+            Err(i) => {
+                // nearest neighbour; ties toward the smaller grid point
+                if x - self.xs[i - 1] <= self.xs[i] - x {
+                    self.speeds[i - 1]
+                } else {
+                    self.speeds[i]
+                }
+            }
+        }
+    }
+}
+
+/// A discrete FPM surface on an (x, y) grid. Missing points (the paper's
+/// "built until permissible problem size" memory cap) hold `None`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpeedFunction {
+    pub name: String,
+    /// ascending x grid (number of rows)
+    pub xs: Vec<usize>,
+    /// ascending y grid (row length)
+    pub ys: Vec<usize>,
+    /// speeds\[ix * ys.len() + iy\] in MFLOPs; None = unmeasured
+    speeds: Vec<Option<f64>>,
+}
+
+impl SpeedFunction {
+    pub fn new(name: &str, xs: Vec<usize>, ys: Vec<usize>) -> Self {
+        assert!(xs.windows(2).all(|w| w[0] < w[1]), "xs must be ascending");
+        assert!(ys.windows(2).all(|w| w[0] < w[1]), "ys must be ascending");
+        let len = xs.len() * ys.len();
+        SpeedFunction { name: name.to_string(), xs, ys, speeds: vec![None; len] }
+    }
+
+    /// Build from a closure over the full grid (simulator path).
+    pub fn from_fn(
+        name: &str,
+        xs: Vec<usize>,
+        ys: Vec<usize>,
+        f: impl Fn(usize, usize) -> Option<f64>,
+    ) -> Self {
+        let mut s = SpeedFunction::new(name, xs, ys);
+        for ix in 0..s.xs.len() {
+            for iy in 0..s.ys.len() {
+                let v = f(s.xs[ix], s.ys[iy]);
+                debug_assert!(v.map_or(true, |v| v > 0.0 && v.is_finite()));
+                s.speeds[ix * s.ys.len() + iy] = v;
+            }
+        }
+        s
+    }
+
+    pub fn set(&mut self, x: usize, y: usize, speed: f64) {
+        let ix = self.xs.binary_search(&x).expect("x not on grid");
+        let iy = self.ys.binary_search(&y).expect("y not on grid");
+        self.speeds[ix * self.ys.len() + iy] = Some(speed);
+    }
+
+    pub fn get(&self, x: usize, y: usize) -> Option<f64> {
+        let ix = self.xs.binary_search(&x).ok()?;
+        let iy = self.ys.binary_search(&y).ok()?;
+        self.speeds[ix * self.ys.len() + iy]
+    }
+
+    /// Plane section `y = n` (Step 1a): the speed-vs-x curve used by the
+    /// partitioning algorithms. `n` snaps to the nearest y grid point.
+    pub fn plane_section(&self, n: usize) -> Curve {
+        let iy = nearest_index(&self.ys, n);
+        let mut xs = Vec::new();
+        let mut speeds = Vec::new();
+        for (ix, &x) in self.xs.iter().enumerate() {
+            if let Some(s) = self.speeds[ix * self.ys.len() + iy] {
+                xs.push(x);
+                speeds.push(s);
+            }
+        }
+        Curve::new(xs, speeds)
+    }
+
+    /// Column section `x = d` (PAD Step 2): the speed-vs-y curve used for
+    /// pad-length selection. `d` snaps to the nearest x grid point.
+    pub fn column_section(&self, d: usize) -> Curve {
+        let ix = nearest_index(&self.xs, d);
+        let mut ys = Vec::new();
+        let mut speeds = Vec::new();
+        for (iy, &y) in self.ys.iter().enumerate() {
+            if let Some(s) = self.speeds[ix * self.ys.len() + iy] {
+                ys.push(y);
+                speeds.push(s);
+            }
+        }
+        Curve::new(ys, speeds)
+    }
+
+    /// The y grid point actually used by a plane section at `n`.
+    pub fn snap_y(&self, n: usize) -> usize {
+        self.ys[nearest_index(&self.ys, n)]
+    }
+
+    /// The x grid point actually used by a column section at `d`.
+    pub fn snap_x(&self, d: usize) -> usize {
+        self.xs[nearest_index(&self.xs, d)]
+    }
+
+    /// Count of measured points.
+    pub fn measured_points(&self) -> usize {
+        self.speeds.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Serialize as TSV: `x<TAB>y<TAB>speed` with a header comment.
+    pub fn write_tsv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = format!("# speed function: {}\n# x\ty\tmflops\n", self.name);
+        for (ix, &x) in self.xs.iter().enumerate() {
+            for (iy, &y) in self.ys.iter().enumerate() {
+                if let Some(s) = self.speeds[ix * self.ys.len() + iy] {
+                    out.push_str(&format!("{x}\t{y}\t{s:.6}\n"));
+                }
+            }
+        }
+        std::fs::write(path, out)
+    }
+
+    /// Serialize to a JSON value: grids plus the dense speed array with
+    /// `null` for unmeasured points. Used by the service wisdom store to
+    /// persist measured surfaces (the paper's §V "96-hour" artifact)
+    /// alongside the plan they produced.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let speeds: Vec<Json> = self
+            .speeds
+            .iter()
+            .map(|s| match s {
+                Some(v) => Json::Num(*v),
+                None => Json::Null,
+            })
+            .collect();
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("xs", self.xs.clone())
+            .set("ys", self.ys.clone())
+            .set("speeds", Json::Arr(speeds))
+    }
+
+    /// Inverse of [`SpeedFunction::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> Result<SpeedFunction, String> {
+        use crate::util::json::Json;
+        let name = j.get("name").and_then(Json::as_str).ok_or("fpm json: missing name")?;
+        let grid = |key: &str| -> Result<Vec<usize>, String> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or(format!("fpm json: missing {key}"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or(format!("fpm json: bad {key} entry")))
+                .collect()
+        };
+        let xs = grid("xs")?;
+        let ys = grid("ys")?;
+        let raw = j.get("speeds").and_then(Json::as_arr).ok_or("fpm json: missing speeds")?;
+        if raw.len() != xs.len() * ys.len() {
+            return Err(format!(
+                "fpm json: speeds arity {} != {}x{}",
+                raw.len(),
+                xs.len(),
+                ys.len()
+            ));
+        }
+        let speeds: Vec<Option<f64>> = raw
+            .iter()
+            .map(|v| match v {
+                Json::Null => Ok(None),
+                other => other.as_f64().map(Some).ok_or("fpm json: bad speed".to_string()),
+            })
+            .collect::<Result<_, _>>()?;
+        if xs.windows(2).any(|w| w[0] >= w[1]) || ys.windows(2).any(|w| w[0] >= w[1]) {
+            return Err("fpm json: grids must be strictly ascending".to_string());
+        }
+        Ok(SpeedFunction { name: name.to_string(), xs, ys, speeds })
+    }
+
+    /// Parse the TSV produced by [`write_tsv`].
+    pub fn read_tsv(path: &Path) -> Result<SpeedFunction, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("fpm: cannot read {}: {e}", path.display()))?;
+        let mut name = path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+        let mut points: Vec<(usize, usize, f64)> = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if let Some(rest) = line.strip_prefix("# speed function:") {
+                name = rest.trim().to_string();
+                continue;
+            }
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split('\t');
+            let parse = |tok: Option<&str>| -> Result<f64, String> {
+                tok.ok_or_else(|| format!("line {}: short row", lineno + 1))?
+                    .parse()
+                    .map_err(|_| format!("line {}: bad number", lineno + 1))
+            };
+            let x = parse(it.next())? as usize;
+            let y = parse(it.next())? as usize;
+            let s = parse(it.next())?;
+            points.push((x, y, s));
+        }
+        if points.is_empty() {
+            return Err(format!("fpm: no data points in {}", path.display()));
+        }
+        let mut xs: Vec<usize> = points.iter().map(|p| p.0).collect();
+        let mut ys: Vec<usize> = points.iter().map(|p| p.1).collect();
+        xs.sort_unstable();
+        xs.dedup();
+        ys.sort_unstable();
+        ys.dedup();
+        let mut fpm = SpeedFunction::new(&name, xs, ys);
+        for (x, y, s) in points {
+            fpm.set(x, y, s);
+        }
+        Ok(fpm)
+    }
+}
+
+fn nearest_index(grid: &[usize], v: usize) -> usize {
+    assert!(!grid.is_empty(), "empty grid");
+    match grid.binary_search(&v) {
+        Ok(i) => i,
+        Err(0) => 0,
+        Err(i) if i == grid.len() => grid.len() - 1,
+        Err(i) => {
+            if v - grid[i - 1] <= grid[i] - v {
+                i - 1
+            } else {
+                i
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_fpm() -> SpeedFunction {
+        // speed rises with x, dips at y=256
+        SpeedFunction::from_fn(
+            "demo",
+            vec![128, 256, 384, 512],
+            vec![128, 256, 512],
+            |x, y| {
+                let base = 1000.0 + x as f64;
+                Some(if y == 256 { base * 0.5 } else { base })
+            },
+        )
+    }
+
+    #[test]
+    fn sub_resolution_and_nan_times_are_sanitized() {
+        // regression: a fast point measured at ~0 ns (or a NaN mean from
+        // a degenerate t-test) used to panic `speed_from_time` /
+        // `Curve::new`; the ingestion point clamps/rejects instead
+        assert_eq!(sanitize_time(0.0), Some(MIN_TIME_S));
+        assert_eq!(sanitize_time(1e-15), Some(MIN_TIME_S));
+        assert_eq!(sanitize_time(0.25), Some(0.25));
+        assert_eq!(sanitize_time(f64::NAN), None);
+        assert_eq!(sanitize_time(f64::INFINITY), None);
+        assert_eq!(sanitize_time(-1.0), None);
+        let s = speed_from_time_sanitized(128, 1024, 0.0).expect("clamped, not panicking");
+        assert!(s > 0.0 && s.is_finite());
+        assert_eq!(speed_from_time_sanitized(128, 1024, f64::NAN), None);
+        // y = 1 has zero flops by the formula — speed 0 is rejected, not
+        // fed into Curve::new's positivity assert
+        assert_eq!(speed_from_time_sanitized(4, 1, 0.5), None);
+    }
+
+    #[test]
+    fn speed_formula_roundtrip() {
+        let t = 0.01;
+        let s = speed_from_time(100, 1024, t);
+        let t2 = time_from_speed(100, 1024, s);
+        assert!((t - t2).abs() < 1e-12);
+        // 2.5 * 1 * 2 * 1 = 5 flops in 1s = 5e-6 MFLOPs
+        assert!((speed_from_time(1, 2, 1.0) - 5e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn variation_matches_eq1() {
+        assert!((variation_pct(150.0, 100.0) - 50.0).abs() < 1e-12);
+        assert!((variation_pct(100.0, 150.0) - 50.0).abs() < 1e-12);
+        assert_eq!(variation_pct(100.0, 100.0), 0.0);
+    }
+
+    #[test]
+    fn plane_section_extracts_row() {
+        let f = demo_fpm();
+        let c = f.plane_section(256);
+        assert_eq!(c.xs, vec![128, 256, 384, 512]);
+        assert!((c.speeds[0] - (1000.0 + 128.0) * 0.5).abs() < 1e-9);
+        // snapping: y=300 snaps to 256
+        assert_eq!(f.snap_y(300), 256);
+        let c2 = f.plane_section(300);
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn column_section_extracts_col() {
+        let f = demo_fpm();
+        let c = f.column_section(384);
+        assert_eq!(c.xs, vec![128, 256, 512]);
+        assert!((c.speeds[1] - (1000.0 + 384.0) * 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn missing_points_skipped() {
+        let mut f = SpeedFunction::new("gappy", vec![1, 2], vec![10, 20]);
+        f.set(1, 10, 5.0);
+        f.set(2, 10, 6.0);
+        f.set(1, 20, 7.0);
+        // (2, 20) unmeasured — column_section(2) only has y=10
+        let c = f.column_section(2);
+        assert_eq!(c.xs, vec![10]);
+        assert_eq!(f.measured_points(), 3);
+    }
+
+    #[test]
+    fn curve_nearest_lookup() {
+        let c = Curve::new(vec![10, 20, 40], vec![1.0, 2.0, 3.0]);
+        assert_eq!(c.speed_at(20), Some(2.0));
+        assert_eq!(c.speed_at(25), None);
+        assert_eq!(c.speed_nearest(5), 1.0);
+        assert_eq!(c.speed_nearest(24), 2.0);
+        assert_eq!(c.speed_nearest(31), 3.0);
+        assert_eq!(c.speed_nearest(100), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn curve_rejects_unsorted() {
+        Curve::new(vec![2, 1], vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn json_roundtrip_with_gaps() {
+        let mut f = SpeedFunction::new("gappy", vec![1, 2], vec![10, 20]);
+        f.set(1, 10, 5.5);
+        f.set(2, 20, 7.25);
+        let text = f.to_json().to_string();
+        let g = SpeedFunction::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(g.name, "gappy");
+        assert_eq!(g.xs, f.xs);
+        assert_eq!(g.ys, f.ys);
+        assert_eq!(g.get(1, 10), Some(5.5));
+        assert_eq!(g.get(2, 20), Some(7.25));
+        assert_eq!(g.get(1, 20), None);
+        assert_eq!(g.get(2, 10), None);
+    }
+
+    #[test]
+    fn json_rejects_malformed() {
+        use crate::util::json::Json;
+        assert!(SpeedFunction::from_json(&Json::Null).is_err());
+        let bad = Json::obj()
+            .set("name", "x")
+            .set("xs", vec![1usize, 2])
+            .set("ys", vec![10usize])
+            .set("speeds", Json::Arr(vec![Json::Num(1.0)])); // arity 1 != 2
+        assert!(SpeedFunction::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let f = demo_fpm();
+        let path = std::env::temp_dir().join("hclfft_fpm_test/demo.tsv");
+        f.write_tsv(&path).unwrap();
+        let g = SpeedFunction::read_tsv(&path).unwrap();
+        assert_eq!(g.name, "demo");
+        assert_eq!(g.xs, f.xs);
+        assert_eq!(g.ys, f.ys);
+        for &x in &f.xs {
+            for &y in &f.ys {
+                let (a, b) = (f.get(x, y).unwrap(), g.get(x, y).unwrap());
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+}

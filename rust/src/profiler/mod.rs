@@ -10,14 +10,19 @@
 //! Also implements *partial* FPM construction (the paper's answer to the
 //! 96-hour full-surface build): points in the neighbourhood of the
 //! homogeneous distribution first, until a time budget is spent.
+//!
+//! All measured times flow through the model layer's sanitized ingestion
+//! point ([`crate::model::speed_from_time_sanitized`]) and can be teed
+//! into an online model via [`build_fpms_with`] — profiling emits
+//! samples into the same store the serving executor appends to.
 
 use std::time::Instant;
 
 use crate::coordinator::engine::RowFftEngine;
-use crate::coordinator::fpm::{speed_from_time, SpeedFunction};
 use crate::coordinator::group::GroupConfig;
 use crate::dft::fft::Direction;
 use crate::dft::SignalMatrix;
+use crate::model::{speed_from_time_sanitized, SpeedFunction};
 use crate::stats::{mean_using_ttest, TtestPolicy};
 
 /// Grid + policy settings for a profiling run.
@@ -46,6 +51,18 @@ impl ProfileSpec {
 /// data point, mirroring the paper's methodology; each group's time is
 /// measured with `MeanUsingTtest`.
 pub fn build_fpms(engine: &dyn RowFftEngine, spec: &ProfileSpec) -> Vec<SpeedFunction> {
+    build_fpms_with(engine, spec, |_, _, _| {})
+}
+
+/// [`build_fpms`] with a raw-sample sink: `on_sample(x, y, t_seconds)`
+/// is called once per `(group, point)` mean time, so profiling runs can
+/// feed the same online model store the serving executor appends to
+/// (times are sanitized downstream at the model ingestion point).
+pub fn build_fpms_with(
+    engine: &dyn RowFftEngine,
+    spec: &ProfileSpec,
+    mut on_sample: impl FnMut(usize, usize, f64),
+) -> Vec<SpeedFunction> {
     let p = spec.cfg.p;
     let started = Instant::now();
     let mut fpms: Vec<SpeedFunction> = (0..p)
@@ -75,9 +92,13 @@ pub fn build_fpms(engine: &dyn RowFftEngine, spec: &ProfileSpec) -> Vec<SpeedFun
         if started.elapsed().as_secs_f64() > spec.budget_s {
             break; // partial FPM
         }
-        let speeds = measure_point(engine, spec, x, y);
-        for (g, s) in speeds.into_iter().enumerate() {
-            if let Some(s) = s {
+        let times = measure_point(engine, spec, x, y);
+        for (g, t_mean) in times.into_iter().enumerate() {
+            let Some(t_mean) = t_mean else { continue };
+            on_sample(x, y, t_mean);
+            // the model layer's sanitized ingestion: a ~0 ns reading is
+            // clamped to timer resolution, NaN/degenerate means dropped
+            if let Some(s) = speed_from_time_sanitized(x, y, t_mean) {
                 fpms[g].set(x, y, s);
             }
         }
@@ -87,6 +108,7 @@ pub fn build_fpms(engine: &dyn RowFftEngine, spec: &ProfileSpec) -> Vec<SpeedFun
 
 /// Measure one (x, y) data point: all p groups execute x row-FFTs of
 /// length y concurrently; per-group mean time via MeanUsingTtest.
+/// Returns the raw mean seconds per group (`None` on engine failure).
 fn measure_point(
     engine: &dyn RowFftEngine,
     spec: &ProfileSpec,
@@ -119,8 +141,8 @@ fn measure_point(
                     }
                     t0.elapsed().as_secs_f64()
                 });
-                if !failed && tt.mean > 0.0 {
-                    results.lock().unwrap()[g] = Some(speed_from_time(x, y, tt.mean));
+                if !failed {
+                    results.lock().unwrap()[g] = Some(tt.mean);
                 }
             });
         }
@@ -178,6 +200,16 @@ mod tests {
         let s1 = fpms[0].get(1, 128).unwrap();
         let s8 = fpms[0].get(8, 128).unwrap();
         assert!(s8 > 0.3 * s1, "s1 {s1} s8 {s8}");
+    }
+
+    #[test]
+    fn sample_sink_receives_every_measured_point() {
+        let spec = quick_spec(vec![4, 8], vec![32]);
+        let mut samples: Vec<(usize, usize, f64)> = Vec::new();
+        let fpms = build_fpms_with(&NativeEngine, &spec, |x, y, t| samples.push((x, y, t)));
+        assert_eq!(samples.len(), 4, "2 points x 2 groups");
+        assert!(samples.iter().all(|&(_, _, t)| t > 0.0 && t.is_finite()));
+        assert_eq!(fpms[0].measured_points(), 2);
     }
 
     #[test]

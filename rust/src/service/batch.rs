@@ -13,6 +13,16 @@
 //! produces byte-identical planes to B single-shot
 //! [`PlannedTransform::execute`] runs. `service_integration.rs` asserts
 //! this against both the single-shot driver and the `dft2d` oracle.
+//! Because every row is transformed identically no matter which group
+//! owns it, a *re-partition* (model drift → new `d`) never changes the
+//! produced values on unpadded plans — outputs stay bit-exact across
+//! re-planning.
+//!
+//! Timing contract: one call = one whole-batch measurement. The service
+//! executor wraps this call in a wall clock and feeds `elapsed / B`
+//! into the engine's [`crate::model::OnlineModel`] at the
+//! whole-request observation point — the free `(x, y, t)` sample every
+//! served batch provides.
 
 use crate::coordinator::engine::{EngineError, RowFftEngine};
 use crate::coordinator::group::row_offsets;

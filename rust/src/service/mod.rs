@@ -32,6 +32,22 @@
 //! `simulate_size` and advance a deterministic virtual clock, so
 //! scheduling behaviour is testable at paper-scale sizes (N = 24704) in
 //! milliseconds.
+//!
+//! **The model feedback loop** (PR 3): every executed batch is a free
+//! measurement. The executor folds its per-request wall time into the
+//! engine's [`crate::model::OnlineModel`] at the whole-request point
+//! `(x, y) = (2N, N)` (two row phases of N rows each); admission and
+//! SPJF costs come from that live model first (wisdom second, flat
+//! fallback last), and every response reports predicted-vs-actual so
+//! the service's calibration error is observable. When the observation
+//! stream contradicts the established estimate (`variation_pct` drift),
+//! the affected wisdom partition is invalidated and re-planning runs in
+//! the worker — POPTA/HPOPTA and pad selection against the model's
+//! refreshed (speed-rescaled) sections. `save_wisdom` persists the
+//! model deltas and drift log next to the plans; virtual backends
+//! accept an injected slowdown factor
+//! ([`Dft2dService::set_virtual_slowdown`]) so the whole loop is
+//! deterministically testable in virtual time.
 
 pub mod batch;
 pub mod sched;
@@ -48,12 +64,20 @@ use crate::coordinator::engine::RowFftEngine;
 use crate::coordinator::plan::PlannedTransform;
 use crate::dft::fft::Direction;
 use crate::dft::SignalMatrix;
+use crate::model::{DriftPolicy, OnlineModel, PerfModel, SimModel, StaticModel};
 use crate::simulator::Package;
 use crate::stats::harness::fft2d_flops;
 
 use sched::{BatchKey, BatchQueue};
 use stats::{ServiceStats, StatsCollector};
 use wisdom::{PlanningConfig, WisdomRecord, WisdomStore, DEFAULT_MFLOPS};
+
+/// The online model's observation/query point for a whole N×N request:
+/// two row phases of N rows of length N (pads are an executor detail
+/// folded into the measured time).
+pub fn observation_point(n: usize) -> (usize, usize) {
+    (2 * n, n)
+}
 
 /// Errors surfaced to callers.
 #[derive(Clone, Debug, PartialEq)]
@@ -158,6 +182,13 @@ pub struct ResponseReport {
     pub planned_cold: bool,
     pub queue_wait_s: f64,
     pub latency_s: f64,
+    /// model-predicted per-request seconds at dispatch time (the SPJF
+    /// weight this batch was scheduled with)
+    pub predicted_s: f64,
+    /// measured per-request execution seconds (virtual seconds on
+    /// virtual backends) — `predicted_s` vs `executed_s` is the
+    /// calibration error the model is shrinking
+    pub executed_s: f64,
     /// virtual completion timestamp (virtual backends only)
     pub virtual_done_s: Option<f64>,
 }
@@ -197,6 +228,8 @@ pub struct ServiceConfig {
     pub transpose_block: usize,
     /// planning knobs (p, t, ε, pad policy, profiling budget)
     pub planning: PlanningConfig,
+    /// online-model drift detection knobs
+    pub drift: DriftPolicy,
 }
 
 impl Default for ServiceConfig {
@@ -207,6 +240,7 @@ impl Default for ServiceConfig {
             starvation_bound_s: 5.0,
             transpose_block: 64,
             planning: PlanningConfig::default(),
+            drift: DriftPolicy::default(),
         }
     }
 }
@@ -238,6 +272,17 @@ struct Inner {
     planning_inflight: Mutex<std::collections::BTreeSet<wisdom::WisdomKey>>,
     planning_cv: Condvar,
     stats: StatsCollector,
+    /// one live model per engine — the single store profiling samples
+    /// and served-batch timings both flow into. Lock rule: `models` and
+    /// `wisdom` are never held at the same time (take one, release it,
+    /// then take the other — see `predicted_cost` / `plan_for`).
+    models: Mutex<BTreeMap<String, OnlineModel>>,
+    /// injected machine-speed divisor for virtual backends (test/CI
+    /// drift hook): execution time = simulator cost × factor
+    virtual_slowdown: Mutex<BTreeMap<String, f64>>,
+    /// the simulator's *true* per-request cost per (engine, n) — fixed
+    /// machine ground truth, independent of what the model believes
+    virtual_base: Mutex<BTreeMap<(String, usize), f64>>,
     /// virtual seconds consumed by virtual backends
     vclock: Mutex<f64>,
     next_id: std::sync::atomic::AtomicU64,
@@ -313,6 +358,31 @@ impl ServiceBuilder {
                 rec.warm_plan_cache();
             }
         }
+        // one live model per engine: persisted deltas when the wisdom
+        // file carried them, fresh otherwise; virtual backends get their
+        // calibrated testbed as base, real engines get the latest
+        // persisted measured surfaces (refreshed on every cold plan)
+        let mut models: BTreeMap<String, OnlineModel> = BTreeMap::new();
+        for (name, backend) in &self.engines {
+            let mut model = self
+                .wisdom
+                .model(name)
+                .cloned()
+                .unwrap_or_else(|| OnlineModel::new(name, self.cfg.drift));
+            match backend {
+                Backend::Virtual(pkg) => {
+                    model.set_base(Arc::new(SimModel::paper_best(*pkg)));
+                }
+                Backend::Real(_) => {
+                    if let Some(rec) =
+                        self.wisdom.iter().find(|r| &r.engine == name && !r.fpms.is_empty())
+                    {
+                        model.set_base(Arc::new(StaticModel::new(rec.fpms.clone())));
+                    }
+                }
+            }
+            models.insert(name.clone(), model);
+        }
         let inner = Arc::new(Inner {
             cfg: self.cfg,
             engines: self.engines,
@@ -322,6 +392,9 @@ impl ServiceBuilder {
             planning_inflight: Mutex::new(std::collections::BTreeSet::new()),
             planning_cv: Condvar::new(),
             stats: StatsCollector::new(),
+            models: Mutex::new(models),
+            virtual_slowdown: Mutex::new(BTreeMap::new()),
+            virtual_base: Mutex::new(BTreeMap::new()),
             vclock: Mutex::new(0.0),
             next_id: std::sync::atomic::AtomicU64::new(1),
             shutdown: AtomicBool::new(false),
@@ -399,14 +472,46 @@ impl Dft2dService {
         self.inner.stats.snapshot(self.inner.now_s())
     }
 
-    /// Clone of the current wisdom store.
-    pub fn wisdom_snapshot(&self) -> WisdomStore {
-        self.inner.wisdom.lock().unwrap().clone()
+    /// Start a stats phase window (serve-bench's cold/warm phases).
+    pub fn stats_mark(&self) {
+        self.inner.stats.mark(self.inner.now_s());
     }
 
-    /// Persist the current wisdom store.
+    /// Stats over the window since the last [`Dft2dService::stats_mark`]
+    /// (lifetime stats when never marked).
+    pub fn stats_since_mark(&self) -> ServiceStats {
+        self.inner.stats.since_mark(self.inner.now_s())
+    }
+
+    /// Clone of the current wisdom store, including the live models'
+    /// deltas + drift logs (what [`Dft2dService::save_wisdom`] writes).
+    pub fn wisdom_snapshot(&self) -> WisdomStore {
+        let mut store = self.inner.wisdom.lock().unwrap().clone();
+        for (engine, model) in self.inner.models.lock().unwrap().iter() {
+            if model.observations() > 0 || !model.drift_events().is_empty() {
+                store.set_model(engine, model.clone());
+            }
+        }
+        store
+    }
+
+    /// Persist the current wisdom store + model deltas + drift log.
     pub fn save_wisdom(&self, path: &std::path::Path) -> Result<(), String> {
-        self.inner.wisdom.lock().unwrap().save(path)
+        self.wisdom_snapshot().save(path)
+    }
+
+    /// Snapshot of an engine's live online model.
+    pub fn model_snapshot(&self, engine: &str) -> Option<OnlineModel> {
+        self.inner.models.lock().unwrap().get(engine).cloned()
+    }
+
+    /// Inject a machine-speed shift on a virtual backend: execution
+    /// takes `factor`× the simulator's predicted time from now on. This
+    /// is the deterministic drift hook for tests and the CI smoke — the
+    /// model only ever sees the resulting timings, never the factor.
+    pub fn set_virtual_slowdown(&self, engine: &str, factor: f64) {
+        assert!(factor.is_finite() && factor > 0.0, "slowdown factor must be positive");
+        self.inner.virtual_slowdown.lock().unwrap().insert(engine.to_string(), factor);
     }
 
     /// The memoized plan for `(engine, n)` under the service's group
@@ -467,14 +572,38 @@ impl Inner {
         }
     }
 
-    /// FPM-informed cost estimate for one request (wisdom if available,
-    /// conservative flat-speed fallback otherwise).
+    /// Cost estimate for one request, best source first: the live
+    /// model's refined estimate (what the machine actually did
+    /// recently), then the wisdom record's planned prediction, then the
+    /// conservative flat-speed fallback. SPJF weights and admission
+    /// both come through here — scheduling follows the machine.
     fn predicted_cost(&self, engine: &str, n: usize) -> f64 {
+        let (x, y) = observation_point(n);
+        if let Some(model) = self.models.lock().unwrap().get(engine) {
+            if let Some(t) = model.refined_time(x, y) {
+                return t;
+            }
+        }
         let p = self.plan_groups(engine);
         if let Some(rec) = self.wisdom.lock().unwrap().get(engine, n, p) {
             return rec.predicted_cost_s;
         }
         fft2d_flops(n) / (DEFAULT_MFLOPS * 1e6)
+    }
+
+    /// The simulator's fixed ground-truth per-request cost for a
+    /// virtual (engine, n) — memoized once, never affected by what the
+    /// model currently believes (re-planning must not move the machine).
+    fn virtual_true_cost(&self, engine: &str, pkg: Package, n: usize) -> f64 {
+        let mut base = self.virtual_base.lock().unwrap();
+        *base.entry((engine.to_string(), n)).or_insert_with(|| {
+            let point = crate::simulator::vexec::predict_point(pkg, n);
+            if self.cfg.planning.pad_cost.is_some() {
+                point.t_pad
+            } else {
+                point.t_fpm
+            }
+        })
     }
 
     /// Wisdom lookup-or-plan. Returns the record plus whether this call
@@ -510,22 +639,68 @@ impl Inner {
         self.stats.record_planning_event();
         let rec = match backend {
             Backend::Real(engine) => {
-                let rec = WisdomRecord::from_measurement(
+                let (rec, samples) = WisdomRecord::from_measurement_sampled(
                     &key.engine,
                     engine.as_ref(),
                     key.n,
                     &self.cfg.planning,
                 );
                 rec.warm_plan_cache();
+                // profiling emits into the same model store the serving
+                // executor appends to, and refreshes the static base.
+                // A profiler sample is *per group* (x rows on one of p
+                // concurrent groups), so it lands at the platform row
+                // count p·x; the whole-request point (2y, y) is owned by
+                // the serving executor — a one-phase profiling time there
+                // would contaminate the live whole-request estimate, so
+                // it is skipped.
+                {
+                    let mut models = self.models.lock().unwrap();
+                    if let Some(model) = models.get_mut(&key.engine) {
+                        for (x, y, t) in samples {
+                            let platform_x = rec.p * x;
+                            if (platform_x, y) == observation_point(y) {
+                                continue;
+                            }
+                            model.observe(platform_x, y, t);
+                        }
+                        if !rec.fpms.is_empty() {
+                            model.set_base(Arc::new(StaticModel::new(rec.fpms.clone())));
+                        }
+                    }
+                }
                 rec
             }
-            // virtual records never execute real FFTs — no cache warmup
-            Backend::Virtual(pkg) => WisdomRecord::from_simulator(
-                &key.engine,
-                *pkg,
-                key.n,
-                self.cfg.planning.pad_cost.is_some(),
-            ),
+            // virtual records never execute real FFTs — no cache warmup.
+            // Once the live model has refined data (post-drift replan),
+            // planning runs against its refreshed sections instead of
+            // the pristine simulator surfaces.
+            Backend::Virtual(pkg) => {
+                let cfg = pkg.best_groups();
+                let model_rec = {
+                    let models = self.models.lock().unwrap();
+                    models.get(&key.engine).filter(|m| m.has_refined()).map(|m| {
+                        WisdomRecord::from_model(
+                            &key.engine,
+                            m,
+                            key.n,
+                            cfg.p,
+                            cfg.t,
+                            crate::simulator::vexec::EPS_IDENTICAL,
+                            self.cfg.planning.pad_cost,
+                            crate::simulator::vexec::PAD_WINDOW,
+                        )
+                    })
+                };
+                model_rec.unwrap_or_else(|| {
+                    WisdomRecord::from_simulator(
+                        &key.engine,
+                        *pkg,
+                        key.n,
+                        self.cfg.planning.pad_cost.is_some(),
+                    )
+                })
+            }
         };
         self.wisdom.lock().unwrap().insert(rec.clone());
         let mut inflight = self.planning_inflight.lock().unwrap();
@@ -539,6 +714,9 @@ impl Inner {
         let (rec, planned_cold) = self.plan_for(&key);
         let size = batch.entries.len();
         self.stats.record_batch(size);
+        // what the scheduler believed this batch costs per request —
+        // compared against the measured time below (calibration)
+        let predicted_s = self.predicted_cost(&key.engine, key.n);
 
         let mut items: Vec<Pending> = Vec::with_capacity(size);
         let mut waits: Vec<f64> = Vec::with_capacity(size);
@@ -550,9 +728,11 @@ impl Inner {
 
         let backend = self.engines.get(&key.engine).expect("validated at submit").clone();
         let mut virtual_done: Option<f64> = None;
+        let mut executed_batch_s = 0.0;
         let exec_result: Result<(), ServiceError> = match &backend {
             Backend::Real(engine) => {
-                if key.forward {
+                let t0 = Instant::now();
+                let r = if key.forward {
                     let mut mats: Vec<&mut SignalMatrix> =
                         items.iter_mut().map(|p| &mut p.matrix).collect();
                     batch::execute_planned_batch(
@@ -571,17 +751,46 @@ impl Inner {
                         crate::dft::dft2d::dft2d(&mut p.matrix, Direction::Inverse, threads);
                     }
                     Ok(())
-                }
+                };
+                executed_batch_s = t0.elapsed().as_secs_f64();
+                r
             }
-            Backend::Virtual(_) => {
-                // virtual time: the batch costs one planned execution of
-                // `size` stacked requests; matrices pass through untouched
+            Backend::Virtual(pkg) => {
+                // virtual time: the machine's ground-truth cost for
+                // `size` stacked requests, times any injected slowdown;
+                // matrices pass through untouched
+                let true_cost = self.virtual_true_cost(&key.engine, *pkg, key.n);
+                let factor = self
+                    .virtual_slowdown
+                    .lock()
+                    .unwrap()
+                    .get(&key.engine)
+                    .copied()
+                    .unwrap_or(1.0);
+                executed_batch_s = true_cost * factor * size as f64;
                 let mut clock = self.vclock.lock().unwrap();
-                *clock += rec.predicted_cost_s * size as f64;
+                *clock += executed_batch_s;
                 virtual_done = Some(*clock);
                 Ok(())
             }
         };
+
+        let executed_s = executed_batch_s / size.max(1) as f64;
+        let mut drifted = false;
+        if exec_result.is_ok() && key.forward {
+            // the feedback loop: fold the measured per-request time into
+            // the live model and record calibration (cheap, lock-scoped);
+            // the expensive drift *reaction* is deferred until after the
+            // responses are delivered
+            if predicted_s > 0.0 && executed_s > 0.0 {
+                self.stats.record_calibration((predicted_s - executed_s).abs() / executed_s);
+            }
+            let (x, y) = observation_point(key.n);
+            drifted = {
+                let mut models = self.models.lock().unwrap();
+                models.get_mut(&key.engine).and_then(|m| m.observe(x, y, executed_s)).is_some()
+            };
+        }
 
         let flops = fft2d_flops(key.n);
         for (p, wait) in items.into_iter().zip(waits) {
@@ -600,6 +809,8 @@ impl Inner {
                             planned_cold,
                             queue_wait_s: wait,
                             latency_s: latency,
+                            predicted_s,
+                            executed_s,
                             virtual_done_s: virtual_done,
                         },
                     };
@@ -611,6 +822,55 @@ impl Inner {
                 }
             }
         }
+
+        if drifted {
+            // responses are out; now invalidate the affected wisdom
+            // partition and re-plan in the worker, background wrt the
+            // clients of this batch
+            self.drift_replan(&key, &rec);
+        }
+    }
+
+    /// Drift reaction: drop the stale wisdom record and re-plan against
+    /// the refreshed sections. Real engines whose invalidated record
+    /// carries its measured surfaces re-plan from those surfaces
+    /// rescaled by the model's observed speed ratio — POPTA/HPOPTA +
+    /// pad selection re-run with *no re-measurement*; otherwise (and
+    /// for virtual backends, via `plan_for`'s model path) the normal
+    /// cold-plan route runs.
+    fn drift_replan(&self, key: &BatchKey, old: &WisdomRecord) {
+        self.stats.record_drift();
+        let p = self.plan_groups(&key.engine);
+        self.wisdom.lock().unwrap().remove(&key.engine, key.n, p);
+        let is_real = matches!(self.engines.get(&key.engine), Some(Backend::Real(_)));
+        if is_real && !old.fpms.is_empty() {
+            let model = {
+                let mut models = self.models.lock().unwrap();
+                models.get_mut(&key.engine).map(|m| {
+                    // the invalidated record's surfaces are this key's
+                    // own y = N sections — the right base to rescale
+                    m.set_base(Arc::new(StaticModel::new(old.fpms.clone())));
+                    m.clone()
+                })
+            };
+            if let Some(model) = model {
+                self.stats.record_planning_event();
+                let rec = WisdomRecord::from_model(
+                    &key.engine,
+                    &model,
+                    key.n,
+                    old.p,
+                    old.t,
+                    old.eps,
+                    self.cfg.planning.pad_cost,
+                    wisdom::PAD_SEARCH_WINDOW,
+                );
+                rec.warm_plan_cache();
+                self.wisdom.lock().unwrap().insert(rec);
+                return;
+            }
+        }
+        let _ = self.plan_for(key);
     }
 }
 

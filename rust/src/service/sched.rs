@@ -2,8 +2,11 @@
 //!
 //! Requests for the same `(engine, n, direction)` coalesce into one
 //! bucket; buckets are dispatched **shortest-predicted-job-first**, where
-//! the prediction comes from the wisdom store's `SpeedFunction`-derived
-//! cost (see [`crate::service::wisdom`]), with a **starvation bound**: a
+//! the prediction comes from the *live* performance model — the
+//! engine's [`crate::model::OnlineModel`] refined estimate when served
+//! traffic has taught it one, the wisdom store's planned cost otherwise
+//! (see `Inner::predicted_cost` in [`crate::service`]) — with a
+//! **starvation bound**: a
 //! bucket whose oldest request has waited longer than the bound is
 //! served FIFO ahead of any cheaper bucket, so large transforms cannot
 //! be postponed forever by a stream of small ones.

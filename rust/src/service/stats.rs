@@ -22,16 +22,45 @@ pub struct StatsCollector {
 struct Inner {
     latencies_s: Vec<f64>,
     queue_waits_s: Vec<f64>,
+    /// per-batch |predicted - actual| / actual (model calibration)
+    calib_errs: Vec<f64>,
     flops: f64,
     completed: u64,
     failed: u64,
     rejected: u64,
     planning_events: u64,
     wisdom_hits: u64,
+    drift_events: u64,
     batches: u64,
     batched_requests: u64,
     max_batch: usize,
     peak_queue_depth: usize,
+    /// high-water marks within the current phase window (reset by
+    /// [`StatsCollector::mark`]; maxima cannot be recovered by
+    /// subtraction like the counters)
+    win_max_batch: usize,
+    win_peak_queue_depth: usize,
+    /// window start for [`StatsCollector::since_mark`] phase snapshots
+    mark: Mark,
+}
+
+/// Counter values at the last [`StatsCollector::mark`] call — lets
+/// serve-bench report cold and warm phases separately.
+#[derive(Clone, Copy, Debug, Default)]
+struct Mark {
+    lat_idx: usize,
+    wait_idx: usize,
+    calib_idx: usize,
+    flops: f64,
+    completed: u64,
+    failed: u64,
+    rejected: u64,
+    planning_events: u64,
+    wisdom_hits: u64,
+    drift_events: u64,
+    batches: u64,
+    batched_requests: u64,
+    at_s: f64,
 }
 
 impl StatsCollector {
@@ -63,47 +92,113 @@ impl StatsCollector {
         self.inner.lock().unwrap().wisdom_hits += 1;
     }
 
+    pub fn record_drift(&self) {
+        self.inner.lock().unwrap().drift_events += 1;
+    }
+
+    /// One batch's model-calibration error: |predicted - actual| / actual.
+    pub fn record_calibration(&self, rel_err: f64) {
+        if rel_err.is_finite() {
+            self.inner.lock().unwrap().calib_errs.push(rel_err);
+        }
+    }
+
     pub fn record_batch(&self, size: usize) {
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
         g.batched_requests += size as u64;
         g.max_batch = g.max_batch.max(size);
+        g.win_max_batch = g.win_max_batch.max(size);
     }
 
     pub fn observe_queue_depth(&self, depth: usize) {
         let mut g = self.inner.lock().unwrap();
         g.peak_queue_depth = g.peak_queue_depth.max(depth);
+        g.win_peak_queue_depth = g.win_peak_queue_depth.max(depth);
     }
 
-    /// Consistent snapshot; `wall_s` is the observation window for
-    /// throughput/MFLOPs rates.
+    /// Consistent lifetime snapshot; `wall_s` is the observation window
+    /// for throughput/MFLOPs rates.
     pub fn snapshot(&self, wall_s: f64) -> ServiceStats {
         let g = self.inner.lock().unwrap();
-        let mut sorted = g.latencies_s.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let lat = summary(&sorted);
-        let wait = summary(&g.queue_waits_s);
-        let wall = wall_s.max(1e-12);
-        ServiceStats {
+        let (mb, pd) = (g.max_batch, g.peak_queue_depth);
+        stats_over(&g, Mark::default(), wall_s, mb, pd)
+    }
+
+    /// Start a phase window: subsequent [`StatsCollector::since_mark`]
+    /// snapshots cover only what happened after this call (serve-bench's
+    /// cold vs warm phases).
+    pub fn mark(&self, now_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.mark = Mark {
+            lat_idx: g.latencies_s.len(),
+            wait_idx: g.queue_waits_s.len(),
+            calib_idx: g.calib_errs.len(),
+            flops: g.flops,
             completed: g.completed,
             failed: g.failed,
             rejected: g.rejected,
-            wall_s,
-            throughput_rps: g.completed as f64 / wall,
-            mflops: g.flops / wall / 1e6,
-            latency_mean_s: lat.mean,
-            latency_p50_s: percentile(&sorted, 0.50),
-            latency_p95_s: percentile(&sorted, 0.95),
-            latency_p99_s: percentile(&sorted, 0.99),
-            latency_max_s: lat.max.max(0.0),
-            queue_wait_mean_s: wait.mean,
             planning_events: g.planning_events,
             wisdom_hits: g.wisdom_hits,
+            drift_events: g.drift_events,
             batches: g.batches,
             batched_requests: g.batched_requests,
-            max_batch: g.max_batch,
-            peak_queue_depth: g.peak_queue_depth,
-        }
+            at_s: now_s,
+        };
+        g.win_max_batch = 0;
+        g.win_peak_queue_depth = 0;
+    }
+
+    /// Snapshot of the window since the last [`StatsCollector::mark`]
+    /// (whole lifetime when never marked).
+    pub fn since_mark(&self, now_s: f64) -> ServiceStats {
+        let g = self.inner.lock().unwrap();
+        let m = g.mark;
+        // before the first mark() the window maxima equal the lifetime
+        // maxima (both accumulate from zero)
+        let (mb, pd) = (g.win_max_batch, g.win_peak_queue_depth);
+        stats_over(&g, m, now_s - m.at_s, mb, pd)
+    }
+}
+
+/// Compute a [`ServiceStats`] over everything recorded after `mark`.
+fn stats_over(
+    g: &Inner,
+    m: Mark,
+    wall_s: f64,
+    max_batch: usize,
+    peak_depth: usize,
+) -> ServiceStats {
+    let mut sorted = g.latencies_s[m.lat_idx..].to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lat = summary(&sorted);
+    let wait = summary(&g.queue_waits_s[m.wait_idx..]);
+    let calib = &g.calib_errs[m.calib_idx..];
+    let completed = g.completed - m.completed;
+    let wall = wall_s.max(1e-12);
+    ServiceStats {
+        completed,
+        failed: g.failed - m.failed,
+        rejected: g.rejected - m.rejected,
+        wall_s,
+        throughput_rps: completed as f64 / wall,
+        mflops: (g.flops - m.flops) / wall / 1e6,
+        latency_mean_s: lat.mean,
+        latency_p50_s: percentile(&sorted, 0.50),
+        latency_p95_s: percentile(&sorted, 0.95),
+        latency_p99_s: percentile(&sorted, 0.99),
+        latency_max_s: lat.max.max(0.0),
+        queue_wait_mean_s: wait.mean,
+        planning_events: g.planning_events - m.planning_events,
+        wisdom_hits: g.wisdom_hits - m.wisdom_hits,
+        drift_events: g.drift_events - m.drift_events,
+        calibration_batches: calib.len() as u64,
+        calibration_mean_err: summary(calib).mean,
+        calibration_last_err: calib.last().copied().unwrap_or(f64::NAN),
+        batches: g.batches - m.batches,
+        batched_requests: g.batched_requests - m.batched_requests,
+        max_batch,
+        peak_queue_depth: peak_depth,
     }
 }
 
@@ -136,6 +231,14 @@ pub struct ServiceStats {
     pub planning_events: u64,
     /// requests served from memoized wisdom
     pub wisdom_hits: u64,
+    /// online-model drift detections (each invalidated wisdom + replanned)
+    pub drift_events: u64,
+    /// batches that contributed a calibration sample
+    pub calibration_batches: u64,
+    /// mean |predicted - actual| / actual over those batches
+    pub calibration_mean_err: f64,
+    /// most recent batch's calibration error (NaN when none)
+    pub calibration_last_err: f64,
     pub batches: u64,
     pub batched_requests: u64,
     pub max_batch: usize,
@@ -170,6 +273,23 @@ impl ServiceStats {
         t.row(vec!["queue wait mean".into(), ms(self.queue_wait_mean_s)]);
         t.row(vec!["planning events (cold)".into(), self.planning_events.to_string()]);
         t.row(vec!["wisdom hits (warm)".into(), self.wisdom_hits.to_string()]);
+        t.row(vec!["model drift events".into(), self.drift_events.to_string()]);
+        t.row(vec![
+            "model calibration err (mean)".into(),
+            if self.calibration_batches == 0 {
+                "n/a".into()
+            } else {
+                format!("{:.1}%", self.calibration_mean_err * 100.0)
+            },
+        ]);
+        t.row(vec![
+            "model calibration err (last)".into(),
+            if self.calibration_last_err.is_finite() {
+                format!("{:.1}%", self.calibration_last_err * 100.0)
+            } else {
+                "n/a".into()
+            },
+        ]);
         t.row(vec!["batches dispatched".into(), self.batches.to_string()]);
         t.row(vec!["avg batch size".into(), fnum(self.avg_batch(), 2)]);
         t.row(vec!["max batch size".into(), self.max_batch.to_string()]);
@@ -192,6 +312,44 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&[], 0.5), 0.0);
         assert_eq!(percentile(&[7.0], 0.99), 7.0);
+    }
+
+    #[test]
+    fn mark_windows_isolate_phases() {
+        let c = StatsCollector::new();
+        c.record_completion(0.001, 0.0, 1e6);
+        c.record_planning_event();
+        c.record_calibration(0.5);
+        c.record_batch(8);
+        c.observe_queue_depth(12);
+        c.mark(1.0);
+        c.record_completion(0.002, 0.0, 1e6);
+        c.record_wisdom_hit();
+        c.record_drift();
+        c.record_calibration(0.1);
+        c.record_batch(2);
+        c.observe_queue_depth(3);
+        let warm = c.since_mark(3.0);
+        // maxima are per-window, not lifetime
+        assert_eq!(warm.max_batch, 2);
+        assert_eq!(warm.peak_queue_depth, 3);
+        assert_eq!(warm.completed, 1);
+        assert_eq!(warm.planning_events, 0);
+        assert_eq!(warm.wisdom_hits, 1);
+        assert_eq!(warm.drift_events, 1);
+        assert_eq!(warm.calibration_batches, 1);
+        assert!((warm.calibration_mean_err - 0.1).abs() < 1e-12);
+        assert!((warm.wall_s - 2.0).abs() < 1e-12);
+        assert_eq!(warm.latency_p50_s, 0.002);
+        let total = c.snapshot(3.0);
+        assert_eq!(total.completed, 2);
+        assert_eq!(total.max_batch, 8, "lifetime snapshot keeps the global maxima");
+        assert_eq!(total.peak_queue_depth, 12);
+        assert_eq!(total.calibration_batches, 2);
+        assert!((total.calibration_last_err - 0.1).abs() < 1e-12);
+        let table = total.render_table("svc");
+        assert!(table.contains("model drift events"));
+        assert!(table.contains("model calibration err"));
     }
 
     #[test]

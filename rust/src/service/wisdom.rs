@@ -15,7 +15,8 @@ use crate::coordinator::group::GroupConfig;
 use crate::coordinator::pad::{PadCost, PadDecision};
 use crate::coordinator::partition::Algorithm;
 use crate::coordinator::plan::PlannedTransform;
-use crate::profiler::{build_fpms, ProfileSpec};
+use crate::model::{OnlineModel, PerfModel};
+use crate::profiler::{build_fpms_with, ProfileSpec};
 use crate::simulator::vexec::predict_point;
 use crate::simulator::Package;
 use crate::util::json::Json;
@@ -109,6 +110,23 @@ impl WisdomRecord {
         n: usize,
         cfg: &PlanningConfig,
     ) -> WisdomRecord {
+        Self::from_measurement_sampled(engine_label, engine, n, cfg).0
+    }
+
+    /// [`from_measurement`](WisdomRecord::from_measurement) that also
+    /// returns the raw profiling samples `(x, y, mean seconds)` so the
+    /// caller can fold them into an [`OnlineModel`] — the profiler emits
+    /// into the same store the serving executor appends to. Each sample
+    /// is *per group*: the mean seconds for one of the p concurrent
+    /// groups to execute x row-FFTs of length y. A caller feeding a
+    /// platform-level model must rescale the row count to p·x (see the
+    /// service's `plan_for`).
+    pub fn from_measurement_sampled(
+        engine_label: &str,
+        engine: &dyn RowFftEngine,
+        n: usize,
+        cfg: &PlanningConfig,
+    ) -> (WisdomRecord, Vec<(usize, usize, f64)>) {
         let points = cfg.profile_points.clamp(2, n.max(2));
         let mut xs: Vec<usize> = (1..=points).map(|k| (k * n / points).max(1)).collect();
         xs.dedup();
@@ -122,11 +140,12 @@ impl WisdomRecord {
         let mut spec = ProfileSpec::new(xs, ys, GroupConfig::new(cfg.groups, cfg.threads_per_group));
         spec.rep_scale = cfg.rep_scale.max(1);
         spec.budget_s = cfg.profile_budget_s;
-        let fpms = build_fpms(engine, &spec);
+        let mut samples: Vec<(usize, usize, f64)> = Vec::new();
+        let fpms = build_fpms_with(engine, &spec, |x, y, t| samples.push((x, y, t)));
         let plan = PlannedTransform::from_fpms(&fpms, n, cfg.eps, cfg.pad_cost)
             .unwrap_or_else(|_| PlannedTransform::balanced_fallback(cfg.groups, n));
         let predicted_cost_s = plan.predicted_seconds(DEFAULT_MFLOPS);
-        WisdomRecord {
+        let rec = WisdomRecord {
             engine: engine_label.to_string(),
             n,
             p: cfg.groups,
@@ -136,6 +155,51 @@ impl WisdomRecord {
             predicted_cost_s,
             factors: crate::dft::radix::factorize_235(n).unwrap_or_default(),
             fpms,
+        };
+        (rec, samples)
+    }
+
+    /// Re-plan from a live [`OnlineModel`]: POPTA/HPOPTA + pad selection
+    /// run against the model's *refreshed* sections (base sections
+    /// rescaled to the observed machine speed), and the predicted cost
+    /// comes from the model's refined whole-request estimate when it has
+    /// one. This is the drift-recovery path — no re-measurement needed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_model(
+        engine_label: &str,
+        model: &OnlineModel,
+        n: usize,
+        p: usize,
+        t: usize,
+        eps: f64,
+        pad_cost: Option<PadCost>,
+        pad_window: usize,
+    ) -> WisdomRecord {
+        let plan = if model.groups() == 0 {
+            // no base model attached: sections are empty, fall back
+            PlannedTransform::balanced_fallback(p, n)
+        } else {
+            PlannedTransform::from_model(model, n, eps, pad_cost, pad_window)
+                .unwrap_or_else(|_| PlannedTransform::balanced_fallback(p, n))
+        };
+        // cost source order: refined whole-request estimate, then the
+        // model's (speed-rescaled) base prediction, then the plan's own
+        // makespan-derived estimate — never a flat guess while the model
+        // can do better
+        let predicted_cost_s = model
+            .refined_time(2 * n, n)
+            .or_else(|| model.predict_time(2 * n, n))
+            .unwrap_or_else(|| plan.predicted_seconds(DEFAULT_MFLOPS));
+        WisdomRecord {
+            engine: engine_label.to_string(),
+            n,
+            p,
+            t,
+            eps,
+            plan,
+            predicted_cost_s,
+            factors: crate::dft::radix::factorize_235(n).unwrap_or_default(),
+            fpms: Vec::new(),
         }
     }
 
@@ -308,10 +372,13 @@ impl WisdomRecord {
 /// `(engine, n, p)` — what a plan depends on.
 pub type WisdomKey = (String, usize, usize);
 
-/// The persistent map of planning outcomes.
+/// The persistent map of planning outcomes, plus the per-engine online
+/// model deltas + drift log (version 2 of the JSON artifact; version-1
+/// files load with no model state).
 #[derive(Clone, Debug, Default)]
 pub struct WisdomStore {
     records: BTreeMap<WisdomKey, WisdomRecord>,
+    models: BTreeMap<String, OnlineModel>,
 }
 
 impl WisdomStore {
@@ -336,13 +403,40 @@ impl WisdomStore {
         self.records.insert(rec.key(), rec);
     }
 
+    /// Drop a record (drift invalidation): the next request for the key
+    /// pays a fresh planning event against the refreshed model.
+    pub fn remove(&mut self, engine: &str, n: usize, p: usize) -> Option<WisdomRecord> {
+        self.records.remove(&(engine.to_string(), n, p))
+    }
+
     pub fn iter(&self) -> impl Iterator<Item = &WisdomRecord> {
         self.records.values()
     }
 
+    /// Attach/replace an engine's persisted online-model state.
+    pub fn set_model(&mut self, engine: &str, model: OnlineModel) {
+        self.models.insert(engine.to_string(), model);
+    }
+
+    pub fn model(&self, engine: &str) -> Option<&OnlineModel> {
+        self.models.get(engine)
+    }
+
+    pub fn models(&self) -> impl Iterator<Item = (&String, &OnlineModel)> {
+        self.models.iter()
+    }
+
     pub fn to_json(&self) -> Json {
         let recs: Vec<Json> = self.records.values().map(WisdomRecord::to_json).collect();
-        Json::obj().set("version", 1i64).set("records", Json::Arr(recs))
+        let models: Vec<Json> = self
+            .models
+            .iter()
+            .map(|(e, m)| Json::obj().set("engine", e.as_str()).set("model", m.to_json()))
+            .collect();
+        Json::obj()
+            .set("version", 2i64)
+            .set("records", Json::Arr(recs))
+            .set("models", Json::Arr(models))
     }
 
     pub fn from_json(j: &Json) -> Result<WisdomStore, String> {
@@ -350,6 +444,17 @@ impl WisdomStore {
         let recs = j.get("records").and_then(Json::as_arr).ok_or("wisdom: missing records")?;
         for r in recs {
             store.insert(WisdomRecord::from_json(r)?);
+        }
+        // model deltas are optional (version-1 files have none)
+        for mj in j.get("models").and_then(Json::as_arr).unwrap_or(&[]) {
+            let engine = mj
+                .get("engine")
+                .and_then(Json::as_str)
+                .ok_or("wisdom: model entry missing engine")?;
+            let model = OnlineModel::from_json(
+                mj.get("model").ok_or("wisdom: model entry missing model")?,
+            )?;
+            store.models.insert(engine.to_string(), model);
         }
         Ok(store)
     }
@@ -480,6 +585,63 @@ mod tests {
         let mut legacy = rec.to_json();
         legacy = legacy.set("fpms", Json::Arr(Vec::new()));
         assert!(WisdomRecord::from_json(&legacy).unwrap().fpms.is_empty());
+    }
+
+    #[test]
+    fn model_deltas_and_drift_log_persist() {
+        use crate::model::DriftPolicy;
+        let mut store = WisdomStore::new();
+        let mut m = OnlineModel::new("sim-mkl", DriftPolicy::default());
+        for _ in 0..8 {
+            m.observe(128, 64, 0.01);
+        }
+        for _ in 0..4 {
+            m.observe(128, 64, 0.05); // 5x regime shift -> one drift event
+        }
+        assert_eq!(m.drift_events().len(), 1);
+        store.set_model("sim-mkl", m.clone());
+        store.insert(demo_record());
+        let path = std::env::temp_dir()
+            .join(format!("hclfft_wisdom_model_{}/w.json", std::process::id()));
+        store.save(&path).unwrap();
+        let back = WisdomStore::load(&path).unwrap();
+        let back_m = back.model("sim-mkl").expect("model state persisted");
+        assert_eq!(back_m.observations(), m.observations());
+        assert_eq!(back_m.drift_events(), m.drift_events());
+        assert_eq!(back_m.len(), 1);
+        // version-1 files (no models field) still load
+        let v1 = Json::parse(r#"{"version":1,"records":[]}"#).unwrap();
+        assert!(WisdomStore::from_json(&v1).unwrap().models().next().is_none());
+    }
+
+    #[test]
+    fn from_model_replans_against_scaled_sections() {
+        use crate::model::{DriftPolicy, SimModel};
+        use std::sync::Arc;
+        let pkg = Package::Mkl;
+        let cfg = pkg.best_groups();
+        let base = Arc::new(SimModel::paper_best(pkg));
+        let n = 8_064;
+        let mut m = OnlineModel::new("sim-mkl", DriftPolicy::default()).with_base(base.clone());
+        // machine observed 2x slower than the base at the service's
+        // whole-request point
+        let base_t = base.predict_time(2 * n, n).unwrap();
+        for _ in 0..6 {
+            m.observe(2 * n, n, base_t * 2.0);
+        }
+        let rec = WisdomRecord::from_model(
+            "sim-mkl",
+            &m,
+            n,
+            cfg.p,
+            cfg.t,
+            crate::simulator::vexec::EPS_IDENTICAL,
+            None,
+            crate::simulator::vexec::PAD_WINDOW,
+        );
+        assert_eq!(rec.plan.d.iter().sum::<usize>(), n);
+        // predicted cost comes from the refined estimate (2x the base)
+        assert!((rec.predicted_cost_s - base_t * 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -6,8 +6,8 @@
 //! the virtual campaign (building a full surface per campaign size would
 //! be wasteful — sections are O(grid) each).
 
-use crate::coordinator::fpm::{Curve, SpeedFunction};
 use crate::coordinator::group::GroupConfig;
+use crate::model::{Curve, SpeedFunction};
 use crate::simulator::packages::PackageModel;
 use crate::simulator::Package;
 
@@ -34,7 +34,10 @@ impl SimTestbed {
         SimTestbed { model: PackageModel::new(package), cfg }
     }
 
-    /// With the package's paper-best (p, t).
+    /// With the package's paper-best (p, t). For the planning and
+    /// scheduling layers, wrap the testbed in
+    /// [`crate::model::SimModel`] — they consume the unified
+    /// [`crate::model::PerfModel`] trait, never the testbed directly.
     pub fn paper_best(package: Package) -> Self {
         Self::new(package, package.best_groups())
     }
@@ -67,7 +70,7 @@ impl SimTestbed {
         let mut ys = Vec::new();
         let mut speeds = Vec::new();
         let mut y = n;
-        let cap = (n + window).min(GRID_MAX);
+        let cap = n.saturating_add(window).min(GRID_MAX);
         while y <= cap {
             if (d as u128) * (y as u128) <= MEM_CAP_XY || y == n {
                 ys.push(y);

@@ -6,6 +6,7 @@ use hclfft::coordinator::engine::NativeEngine;
 use hclfft::coordinator::group::{best_config, candidates_for_budget, GroupConfig};
 use hclfft::coordinator::pad::{pads_for_distribution, PadCost};
 use hclfft::coordinator::pfft::{pfft_fpm, pfft_fpm_pad, pfft_lb, plan_partition};
+use hclfft::model::StaticModel;
 use hclfft::dft::{naive_dft2d, SignalMatrix};
 use hclfft::profiler::build_plane;
 
@@ -18,7 +19,7 @@ fn measured_plan_then_execute_matches_oracle() {
     let n = 32;
     let cfg = GroupConfig::new(2, 1);
     let fpms = build_plane(&NativeEngine, cfg, vec![8, 16, 24, 32], n, 10_000);
-    let part = plan_partition(&fpms, n, 0.05).unwrap();
+    let part = plan_partition(&StaticModel::new(fpms), n, 0.05).unwrap();
     assert_eq!(part.d.iter().sum::<usize>(), n);
 
     let orig = SignalMatrix::random(n, n, 3);
@@ -40,13 +41,15 @@ fn all_three_drivers_agree_when_unpadded() {
     pfft_fpm(&NativeEngine, &mut fpm, &[10, 6, 8], 1, 8).unwrap();
 
     let fpms = build_plane(&NativeEngine, GroupConfig::new(3, 1), vec![6, 12, 18, 24], n, 10_000);
-    let pads: Vec<_> = pads_for_distribution(&fpms, &[10, 6, 8], n, PadCost::PaperRatio)
-        .into_iter()
-        .map(|mut p| {
-            p.n_padded = n; // force unpadded so all three must agree exactly
-            p
-        })
-        .collect();
+    let model = StaticModel::new(fpms);
+    let pads: Vec<_> =
+        pads_for_distribution(&model, &[10, 6, 8], n, usize::MAX, PadCost::PaperRatio)
+            .into_iter()
+            .map(|mut p| {
+                p.n_padded = n; // force unpadded so all three must agree exactly
+                p
+            })
+            .collect();
     let mut pad = orig.clone();
     pfft_fpm_pad(&NativeEngine, &mut pad, &[10, 6, 8], &pads, 1, 8).unwrap();
 

@@ -332,6 +332,109 @@ fn prop_speed_function_json_roundtrip() {
     );
 }
 
+/// A stationary observation stream: base mean with bounded (±8%)
+/// multiplicative noise, plus a shuffled copy of the same samples.
+fn gen_stationary_stream(rng: &mut Xoshiro256) -> (Vec<f64>, Vec<f64>) {
+    let mean = 1e-4 + rng.next_f64() * 0.1;
+    let count = 12 + rng.range_usize(0, 52);
+    let samples: Vec<f64> =
+        (0..count).map(|_| mean * (1.0 + 0.16 * (rng.next_f64() - 0.5))).collect();
+    // Fisher-Yates shuffle for the permuted order
+    let mut shuffled = samples.clone();
+    for i in (1..shuffled.len()).rev() {
+        let j = rng.range_usize(0, i);
+        shuffled.swap(i, j);
+    }
+    (samples, shuffled)
+}
+
+#[test]
+fn prop_online_observe_is_order_invariant() {
+    use hclfft::model::{DriftPolicy, OnlineModel, PerfModel};
+    run(
+        "online-observe-order-invariant",
+        &Config { cases: 60, ..Config::default() },
+        gen_stationary_stream,
+        |_| vec![],
+        |(samples, shuffled)| {
+            let mut a = OnlineModel::new("a", DriftPolicy::default());
+            let mut b = OnlineModel::new("b", DriftPolicy::default());
+            for &t in samples {
+                a.observe(64, 128, t);
+            }
+            for &t in shuffled {
+                b.observe(64, 128, t);
+            }
+            let (ta, tb) = (
+                a.refined_time(64, 128).ok_or("no estimate a")?,
+                b.refined_time(64, 128).ok_or("no estimate b")?,
+            );
+            if (ta - tb).abs() > 1e-9 * ta.abs().max(1e-12) {
+                return Err(format!("estimate order-dependent: {ta} vs {tb}"));
+            }
+            // the set-based CI is order-invariant too
+            let (ca, cb) = (
+                a.point(64, 128).unwrap().ci_rel(0.95),
+                b.point(64, 128).unwrap().ci_rel(0.95),
+            );
+            if (ca - cb).abs() > 1e-6 * ca.abs().max(1e-12) {
+                return Err(format!("ci order-dependent: {ca} vs {cb}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_online_reported_ci_never_widens() {
+    use hclfft::model::{DriftPolicy, OnlineModel, PerfModel};
+    run(
+        "online-ci-monotone",
+        &Config { cases: 60, ..Config::default() },
+        gen_stationary_stream,
+        |_| vec![],
+        |(samples, _)| {
+            let mut m = OnlineModel::new("m", DriftPolicy::default());
+            let mut last = f64::INFINITY;
+            for &t in samples {
+                m.observe(96, 256, t);
+                let ci = m.point(96, 256).unwrap().reported_ci_rel();
+                if ci > last * (1.0 + 1e-12) {
+                    return Err(format!("reported CI widened: {ci} > {last}"));
+                }
+                last = ci;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_online_drift_no_false_positives_on_stationary_stream() {
+    use hclfft::model::{DriftPolicy, OnlineModel, PerfModel};
+    run(
+        "online-drift-no-false-positives",
+        &Config { cases: 80, ..Config::default() },
+        gen_stationary_stream,
+        |_| vec![],
+        |(samples, shuffled)| {
+            let mut m = OnlineModel::new("m", DriftPolicy::default());
+            for &t in samples.iter().chain(shuffled) {
+                if let Some(e) = m.observe(32, 512, t) {
+                    return Err(format!(
+                        "false drift on stationary stream: variation {:.1}%",
+                        e.variation_pct
+                    ));
+                }
+            }
+            if !m.drift_events().is_empty() {
+                return Err("drift log non-empty on stationary stream".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_wisdom_record_json_roundtrip() {
     use hclfft::coordinator::pad::PadDecision;

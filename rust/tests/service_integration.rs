@@ -287,6 +287,120 @@ fn admission_rejects_infeasible_deadlines() {
     svc.shutdown();
 }
 
+/// Acceptance (PR 3 tentpole): the online model learns from served
+/// batches — predicted-vs-actual error shrinks — and an injected speed
+/// shift triggers wisdom invalidation + a re-plan within a bounded
+/// number of batches, all in deterministic virtual time.
+#[test]
+fn online_model_learns_and_replans_on_drift_in_virtual_time() {
+    let n = 8_064usize;
+    let pkg = Package::Mkl;
+    let cfg = ServiceConfig { workers: 1, ..quick_cfg() };
+    let svc = ServiceBuilder::new(cfg).virtual_package("sim-mkl", pkg).build();
+    // the machine runs 2x slower than the calibrated simulator believes,
+    // from the very first request — the model has to learn this
+    svc.set_virtual_slowdown("sim-mkl", 2.0);
+
+    let probe = |svc: &hclfft::service::Dft2dService| {
+        let r = svc.submit(Dft2dRequest::probe("sim-mkl", n)).unwrap().wait().unwrap().report;
+        assert!(r.executed_s > 0.0 && r.predicted_s > 0.0);
+        (r.predicted_s - r.executed_s).abs() / r.executed_s
+    };
+
+    // phase 1: served batches shrink the calibration error
+    let errs: Vec<f64> = (0..8).map(|_| probe(&svc)).collect();
+    assert!(
+        errs[0] > 0.4,
+        "first prediction must be off by the hidden 2x slowdown: {errs:?}"
+    );
+    assert!(
+        *errs.last().unwrap() < errs[0] / 4.0,
+        "served batches must shrink predicted-vs-actual error: {errs:?}"
+    );
+    let phase1 = svc.stats();
+    assert_eq!(phase1.drift_events, 0, "stationary stream must not drift");
+    assert_eq!(phase1.planning_events, 1);
+
+    // phase 2: a 3x speed shift (2x -> 6x) must fire drift within one
+    // detection window and trigger wisdom invalidation + a re-plan
+    let window = hclfft::model::DriftPolicy::default().window;
+    svc.set_virtual_slowdown("sim-mkl", 6.0);
+    let mut errs2 = Vec::new();
+    for _ in 0..window + 4 {
+        errs2.push(probe(&svc));
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.drift_events, 1, "exactly one drift for one shift: {errs2:?}");
+    assert_eq!(
+        stats.planning_events, 2,
+        "drift must invalidate wisdom and re-plan (bounded: within {window} batches)"
+    );
+    let plan = svc.planned("sim-mkl", n).expect("re-planned partition exists");
+    assert_eq!(plan.d.iter().sum::<usize>(), n);
+    // the re-planned record prices the *shifted* machine
+    let unscaled = WisdomRecord::from_simulator("sim-mkl", pkg, n, false).predicted_cost_s;
+    let p = pkg.best_groups().p;
+    let replanned = svc.wisdom_snapshot().get("sim-mkl", n, p).unwrap().predicted_cost_s;
+    assert!(
+        replanned > 2.5 * unscaled,
+        "re-planned cost {replanned} must track the 6x machine (base {unscaled})"
+    );
+    // and post-drift predictions converge again
+    assert!(*errs2.last().unwrap() < 0.05, "post-replan calibration: {errs2:?}");
+
+    // the model deltas + drift log survive persistence
+    let path = tmp_path("drift");
+    svc.save_wisdom(&path).unwrap();
+    let store = WisdomStore::load(&path).unwrap();
+    let persisted = store.model("sim-mkl").expect("model state persisted");
+    assert_eq!(persisted.drift_events().len(), 1);
+    assert!(persisted.observations() >= 8);
+    svc.shutdown();
+
+    // a restarted service resumes from the persisted model
+    let cfg2 = ServiceConfig { workers: 1, ..quick_cfg() };
+    let warm = ServiceBuilder::new(cfg2)
+        .virtual_package("sim-mkl", pkg)
+        .load_wisdom(&path)
+        .unwrap()
+        .build();
+    let resumed = warm.model_snapshot("sim-mkl").expect("model reattached");
+    assert_eq!(resumed.drift_events().len(), 1);
+    assert_eq!(resumed.observations(), persisted.observations());
+    warm.shutdown();
+}
+
+/// Acceptance (PR 3): re-partitioning never changes transform values on
+/// unpadded plans — every row is transformed by the same kernel no
+/// matter which group owns it. Two independently planned services
+/// (independent measurements, possibly different d) must produce
+/// byte-identical spectra for the same input.
+#[test]
+fn replans_keep_outputs_bit_exact() {
+    let n = 32;
+    let orig = SignalMatrix::random(n, n, 77);
+    let mut outputs = Vec::new();
+    let mut plans = Vec::new();
+    for _ in 0..2 {
+        let svc = ServiceBuilder::new(quick_cfg()).native().build();
+        let resp = svc
+            .submit(Dft2dRequest::forward("native", orig.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        plans.push(resp.report.d.clone());
+        outputs.push(resp.matrix);
+        svc.shutdown();
+    }
+    assert_eq!(
+        outputs[0].max_abs_diff(&outputs[1]),
+        0.0,
+        "independently planned services (d = {:?} vs {:?}) must be bit-exact",
+        plans[0],
+        plans[1]
+    );
+}
+
 /// Inverse requests take the exact dft2d path and undo forward service
 /// responses exactly enough for f64.
 #[test]
