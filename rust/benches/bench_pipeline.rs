@@ -1,0 +1,107 @@
+//! Bench: fused tile pipeline vs barrier four-step at the paper sizes.
+//!
+//! The fused pipeline runs the column FFTs directly on row-major
+//! storage (per-tile transpose into per-thread scratch) — both
+//! whole-matrix transpose passes disappear, so the matrix is touched
+//! twice per 2D transform instead of four times. This harness pins the
+//! two modes against each other at N ∈ {384, 640, 1152}, *asserts
+//! bit-exactness first* (the CI smoke relies on that gate), prints a
+//! per-size speedup line, and writes the `BENCH_pipeline.json`
+//! trajectory at the repo root (next to `BENCH_serve.json`).
+
+use std::path::Path;
+
+use hclfft::coordinator::engine::NativeEngine;
+use hclfft::coordinator::partition::balanced;
+use hclfft::coordinator::pfft::pfft_fpm_with_mode;
+use hclfft::dft::pipeline::PipelineMode;
+use hclfft::dft::SignalMatrix;
+use hclfft::stats::harness::{fft2d_flops, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::from_env("pipeline");
+    let groups = 4usize;
+    let threads_per_group = 2usize;
+    println!(
+        "pipeline A/B: fused (tile stage-DAG, strided column FFTs) vs \
+         barrier (four-step with transpose passes); p={groups}, t={threads_per_group}"
+    );
+
+    for &n in &[384usize, 640, 1152] {
+        let d = balanced(groups, n).d;
+        let orig = SignalMatrix::random(n, n, n as u64);
+
+        // bit-exactness gate before any timing
+        {
+            let mut fused = orig.clone();
+            let mut barrier = orig.clone();
+            pfft_fpm_with_mode(
+                &NativeEngine,
+                &mut fused,
+                &d,
+                threads_per_group,
+                64,
+                PipelineMode::Fused,
+            )
+            .unwrap();
+            pfft_fpm_with_mode(
+                &NativeEngine,
+                &mut barrier,
+                &d,
+                threads_per_group,
+                64,
+                PipelineMode::Barrier,
+            )
+            .unwrap();
+            assert_eq!(
+                fused.max_abs_diff(&barrier),
+                0.0,
+                "N={n}: fused output differs from barrier"
+            );
+            println!("N={n}: fused output bit-exact vs barrier (max diff 0)");
+        }
+
+        // transform a fresh clone per rep (like bench_pfft_end_to_end):
+        // repeated unscaled forward passes on one matrix would overflow
+        // to inf within the rep budget; the clone cost is identical on
+        // both sides of the A/B
+        suite.bench_flops(&format!("fused_{n}"), fft2d_flops(n), || {
+            let mut m = orig.clone();
+            pfft_fpm_with_mode(
+                &NativeEngine,
+                &mut m,
+                &d,
+                threads_per_group,
+                64,
+                PipelineMode::Fused,
+            )
+            .unwrap();
+        });
+        suite.bench_flops(&format!("barrier_{n}"), fft2d_flops(n), || {
+            let mut m = orig.clone();
+            pfft_fpm_with_mode(
+                &NativeEngine,
+                &mut m,
+                &d,
+                threads_per_group,
+                64,
+                PipelineMode::Barrier,
+            )
+            .unwrap();
+        });
+    }
+
+    println!("\n== fused vs barrier ==");
+    for pair in suite.results.chunks(2) {
+        if let [fused, barrier] = pair {
+            println!(
+                "{:>16} vs {:<16} speedup {:.2}x",
+                fused.name,
+                barrier.name,
+                barrier.mean_s / fused.mean_s
+            );
+        }
+    }
+    suite.write_json(Path::new("BENCH_pipeline.json")).ok();
+    println!("{}", suite.report());
+}

@@ -125,6 +125,9 @@ SUBCOMMANDS:
             fallback otherwise)
             --n <size> [--engine native|pjrt|sim] [--algo lb|fpm|fpm-pad|basic]
             [--p <groups>] [--t <threads>] [--artifacts <dir>] [--verify]
+            [--pipeline fused|barrier]   (fused: tile stage-DAG, strided
+            column FFTs, no transpose barriers — the default; barrier:
+            the four-step fallback. Also via env HCLFFT_PIPELINE)
   profile   Build speed functions for an engine (FPM construction)
             --engine native|pjrt --n-list <csv> [--x-list <csv>] [--p <groups>]
             [--out <file.tsv>] [--scale <rep-divisor>] [--artifacts <dir>]
@@ -145,6 +148,7 @@ SUBCOMMANDS:
             [--t <threads>] [--workers <count>] [--batch <max>]
             [--wisdom <file.json>] [--no-wisdom] [--pad] [--starve <s>]
             [--budget <s>] [--seed <u64>] [--json <file.json>] [--no-json]
+            [--pipeline fused|barrier]
             [--drift-factor <x>]   (sim-* only: slow the virtual machine
             by x before the warm pass to exercise drift -> re-planning)
   wisdom    Inspect or prewarm the planning wisdom store

@@ -16,7 +16,8 @@
 //!   `PFFT-FPM-PAD` (Algorithms 1-5).
 //! * [`plan`] — [`plan::PlannedTransform`]: the reusable partition+pad
 //!   planning outcome the drivers execute and the serving layer's wisdom
-//!   store memoizes.
+//!   store memoizes, plus its compiled [`plan::ExecPipeline`] form —
+//!   the tile schedule of the fused (transpose-free) execution path.
 
 pub mod dynamic;
 pub mod energy;
@@ -29,4 +30,4 @@ pub mod pfft;
 pub mod pfft3d;
 pub mod plan;
 
-pub use plan::PlannedTransform;
+pub use plan::{ExecPipeline, PhaseTimings, PlannedTransform};

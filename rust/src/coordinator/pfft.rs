@@ -14,8 +14,14 @@
 //!
 //! Groups run as jobs on the shared [`crate::dft::exec::ExecCtx`] pool
 //! over disjoint row ranges obtained with `split_at_mut` — no per-call
-//! thread spawns; the transpose between phases is the paper's Appendix A
-//! blocked transpose using the full p·t thread budget on the same pool.
+//! thread spawns. Under [`PipelineMode::Fused`] (the default) the
+//! four-step skeleton compiles to a tile-granular
+//! [`crate::coordinator::plan::ExecPipeline`]: strided column FFTs
+//! replace both transpose barriers and each group's pad length becomes
+//! a tile stride. [`PipelineMode::Barrier`] keeps the original
+//! phase-barrier execution (the paper's Appendix A blocked transpose
+//! with the full p·t thread budget) as the fallback and bit-exactness
+//! oracle — the two modes produce identical bits.
 
 use crate::coordinator::engine::{EngineError, RowFftEngine};
 use crate::coordinator::group::{row_offsets, GroupConfig};
@@ -24,6 +30,7 @@ use crate::coordinator::partition::{
     average_curve, balanced, curves_identical, hpopta, popta, Partition, PartitionError,
 };
 use crate::dft::fft::Direction;
+use crate::dft::pipeline::{default_mode, PipelineMode};
 use crate::dft::transpose::transpose_in_place_parallel;
 use crate::dft::SignalMatrix;
 use crate::model::{PerfModel, SpeedFunction};
@@ -76,11 +83,11 @@ pub fn pfft_lb(
     transpose_block: usize,
 ) -> Result<PfftReport, EngineError> {
     let d = balanced(cfg.p, m.rows).d;
-    run_four_steps(engine, m, &d, None, cfg.t, transpose_block, "PFFT-LB")
+    run_four_steps(engine, m, &d, None, cfg.t, transpose_block, "PFFT-LB", default_mode())
 }
 
 /// PFFT-FPM (Section III-C / Algorithm 1): FPM-optimal distribution,
-/// exact row length.
+/// exact row length. Uses the process-wide [`PipelineMode`].
 pub fn pfft_fpm(
     engine: &dyn RowFftEngine,
     m: &mut SignalMatrix,
@@ -88,11 +95,25 @@ pub fn pfft_fpm(
     threads_per_group: usize,
     transpose_block: usize,
 ) -> Result<PfftReport, EngineError> {
-    run_four_steps(engine, m, d, None, threads_per_group, transpose_block, "PFFT-FPM")
+    pfft_fpm_with_mode(engine, m, d, threads_per_group, transpose_block, default_mode())
+}
+
+/// [`pfft_fpm`] with an explicit pipeline mode (A/B benches and the
+/// bit-exactness tests, which must not race on the process default).
+pub fn pfft_fpm_with_mode(
+    engine: &dyn RowFftEngine,
+    m: &mut SignalMatrix,
+    d: &[usize],
+    threads_per_group: usize,
+    transpose_block: usize,
+    mode: PipelineMode,
+) -> Result<PfftReport, EngineError> {
+    run_four_steps(engine, m, d, None, threads_per_group, transpose_block, "PFFT-FPM", mode)
 }
 
 /// PFFT-FPM-PAD (Section III-D): FPM-optimal distribution with
-/// per-processor padded row lengths.
+/// per-processor padded row lengths. Uses the process-wide
+/// [`PipelineMode`].
 pub fn pfft_fpm_pad(
     engine: &dyn RowFftEngine,
     m: &mut SignalMatrix,
@@ -100,6 +121,19 @@ pub fn pfft_fpm_pad(
     pads: &[PadDecision],
     threads_per_group: usize,
     transpose_block: usize,
+) -> Result<PfftReport, EngineError> {
+    pfft_fpm_pad_with_mode(engine, m, d, pads, threads_per_group, transpose_block, default_mode())
+}
+
+/// [`pfft_fpm_pad`] with an explicit pipeline mode.
+pub fn pfft_fpm_pad_with_mode(
+    engine: &dyn RowFftEngine,
+    m: &mut SignalMatrix,
+    d: &[usize],
+    pads: &[PadDecision],
+    threads_per_group: usize,
+    transpose_block: usize,
+    mode: PipelineMode,
 ) -> Result<PfftReport, EngineError> {
     let pad_lens: Vec<usize> = pads.iter().map(|p| p.n_padded).collect();
     run_four_steps(
@@ -110,6 +144,7 @@ pub fn pfft_fpm_pad(
         threads_per_group,
         transpose_block,
         "PFFT-FPM-PAD",
+        mode,
     )
 }
 
@@ -137,7 +172,10 @@ pub fn pfft_fpm_pad_planned(
     plan.execute(engine, m, threads_per_group, transpose_block)
 }
 
-/// The shared four-step skeleton (Algorithm 3 `PFFT_LIMB`).
+/// The shared four-step skeleton (Algorithm 3 `PFFT_LIMB`). Fused mode
+/// compiles (d, pads) into the tile pipeline; barrier mode runs the
+/// literal four steps with full-matrix transposes between phases.
+#[allow(clippy::too_many_arguments)]
 fn run_four_steps(
     engine: &dyn RowFftEngine,
     m: &mut SignalMatrix,
@@ -146,6 +184,7 @@ fn run_four_steps(
     threads_per_group: usize,
     transpose_block: usize,
     label: &str,
+    mode: PipelineMode,
 ) -> Result<PfftReport, EngineError> {
     assert_eq!(m.rows, m.cols, "square signal matrix required");
     let n = m.rows;
@@ -157,13 +196,21 @@ fn run_four_steps(
     let total_threads = d.len() * threads_per_group;
     let started = std::time::Instant::now();
 
-    // Step 1/2: row FFTs on d-partitioned rows, then transpose.
-    row_phase(engine, m, d, pad_lens, threads_per_group)?;
-    transpose_in_place_parallel(m, transpose_block, total_threads);
-    // Step 3/4: same again (the transposed matrix's rows are the
-    // original columns).
-    row_phase(engine, m, d, pad_lens, threads_per_group)?;
-    transpose_in_place_parallel(m, transpose_block, total_threads);
+    match mode {
+        PipelineMode::Fused => {
+            let pipe = crate::coordinator::plan::ExecPipeline::compile(n, d, pad_lens);
+            pipe.execute_batch(engine, &mut [&mut *m], total_threads)?;
+        }
+        PipelineMode::Barrier => {
+            // Step 1/2: row FFTs on d-partitioned rows, then transpose.
+            row_phase(engine, m, d, pad_lens, threads_per_group)?;
+            transpose_in_place_parallel(m, transpose_block, total_threads);
+            // Step 3/4: same again (the transposed matrix's rows are
+            // the original columns).
+            row_phase(engine, m, d, pad_lens, threads_per_group)?;
+            transpose_in_place_parallel(m, transpose_block, total_threads);
+        }
+    }
 
     Ok(PfftReport {
         algorithm: label.to_string(),
@@ -341,6 +388,52 @@ mod tests {
             .unwrap();
         let want = want.crop_cols(n);
         assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn fused_drivers_match_barrier_bitwise() {
+        let n = 48;
+        let orig = SignalMatrix::random(n, n, 31);
+        // imbalanced FPM distribution, mixed pad lengths (group 1 pads)
+        let d = vec![20usize, 17, 11];
+        let pads = vec![
+            PadDecision { n_padded: n, t_unpadded: 1.0, t_padded: 1.0 },
+            PadDecision { n_padded: 60, t_unpadded: 1.0, t_padded: 0.5 },
+            PadDecision { n_padded: n, t_unpadded: 1.0, t_padded: 1.0 },
+        ];
+        let mut fused = orig.clone();
+        let mut barrier = orig.clone();
+        pfft_fpm_pad_with_mode(
+            &NativeEngine, &mut fused, &d, &pads, 2, 64, crate::dft::pipeline::PipelineMode::Fused,
+        )
+        .unwrap();
+        pfft_fpm_pad_with_mode(
+            &NativeEngine,
+            &mut barrier,
+            &d,
+            &pads,
+            2,
+            64,
+            crate::dft::pipeline::PipelineMode::Barrier,
+        )
+        .unwrap();
+        assert_eq!(fused.max_abs_diff(&barrier), 0.0, "fused PFFT-FPM-PAD must be bit-exact");
+        // and correct against the oracle
+        let want = naive_dft2d(&orig);
+        assert!(rel_err(&fused, &want) < 1e-9, "{}", rel_err(&fused, &want));
+
+        // unpadded driver too
+        let mut fused = orig.clone();
+        let mut barrier = orig.clone();
+        pfft_fpm_with_mode(
+            &NativeEngine, &mut fused, &d, 1, 64, crate::dft::pipeline::PipelineMode::Fused,
+        )
+        .unwrap();
+        pfft_fpm_with_mode(
+            &NativeEngine, &mut barrier, &d, 1, 64, crate::dft::pipeline::PipelineMode::Barrier,
+        )
+        .unwrap();
+        assert_eq!(fused.max_abs_diff(&barrier), 0.0, "fused PFFT-FPM must be bit-exact");
     }
 
     #[test]

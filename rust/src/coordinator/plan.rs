@@ -11,11 +11,33 @@
 //! * `main.rs` / the benches build once and reuse across repetitions —
 //!   the shared seam that used to be duplicated between
 //!   `coordinator/pfft.rs` and `coordinator/pad.rs` call sites.
+//!
+//! A plan also **compiles** into an [`ExecPipeline`]: the tile schedule
+//! of the fused execution path. Row-stage tiles carry each group's pad
+//! length as a scratch *stride* (Algorithm 7's padded work matrix,
+//! tile-sized), column-stage tiles transpose-gather their columns into
+//! scratch at the same stride — so padding is a stride choice inside a
+//! cache-resident tile, never a whole-matrix `pad_cols`/`crop_cols`
+//! copy, and the two transpose barriers of the four-step skeleton
+//! disappear. Compilation is input-independent, like the plan itself.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::coordinator::engine::{EngineError, RowFftEngine};
+use crate::coordinator::group::row_offsets;
 use crate::coordinator::pad::{pads_for_distribution, PadCost, PadDecision};
 use crate::coordinator::partition::{balanced, Algorithm, PartitionError};
-use crate::coordinator::pfft::{pfft_fpm, pfft_fpm_pad, plan_partition, PfftReport};
+use crate::coordinator::pfft::{
+    pfft_fpm_pad_with_mode, pfft_fpm_with_mode, plan_partition, PfftReport,
+};
+use crate::dft::exec::{with_scratch, ExecCtx};
+use crate::dft::fft::Direction;
+use crate::dft::pipeline::{
+    default_mode, gather_col_tile, scatter_col_tile, PipelineMode, SendPtr, StageDag,
+    DEFAULT_COL_TILE, DEFAULT_ROW_TILE,
+};
 use crate::dft::SignalMatrix;
 use crate::model::{PerfModel, SpeedFunction, StaticModel};
 
@@ -105,7 +127,8 @@ impl PlannedTransform {
     }
 
     /// Execute the planned transform on one signal matrix — dispatches to
-    /// PFFT-FPM or PFFT-FPM-PAD depending on whether padding is active.
+    /// PFFT-FPM or PFFT-FPM-PAD depending on whether padding is active,
+    /// under the process-wide [`PipelineMode`].
     pub fn execute(
         &self,
         engine: &dyn RowFftEngine,
@@ -113,11 +136,39 @@ impl PlannedTransform {
         threads_per_group: usize,
         transpose_block: usize,
     ) -> Result<PfftReport, EngineError> {
+        self.execute_with_mode(engine, m, threads_per_group, transpose_block, default_mode())
+    }
+
+    /// [`PlannedTransform::execute`] with an explicit pipeline mode
+    /// (tests and A/B benches).
+    pub fn execute_with_mode(
+        &self,
+        engine: &dyn RowFftEngine,
+        m: &mut SignalMatrix,
+        threads_per_group: usize,
+        transpose_block: usize,
+        mode: PipelineMode,
+    ) -> Result<PfftReport, EngineError> {
         if self.is_padded() {
-            pfft_fpm_pad(engine, m, &self.d, &self.pads, threads_per_group, transpose_block)
+            pfft_fpm_pad_with_mode(
+                engine,
+                m,
+                &self.d,
+                &self.pads,
+                threads_per_group,
+                transpose_block,
+                mode,
+            )
         } else {
-            pfft_fpm(engine, m, &self.d, threads_per_group, transpose_block)
+            pfft_fpm_with_mode(engine, m, &self.d, threads_per_group, transpose_block, mode)
         }
+    }
+
+    /// Compile this plan into its fused-execution tile schedule.
+    pub fn pipeline(&self) -> ExecPipeline {
+        let pad_lens = self.pad_lens();
+        let pads = if self.is_padded() { Some(pad_lens.as_slice()) } else { None };
+        ExecPipeline::compile(self.n, &self.d, pads)
     }
 
     /// Predicted execution seconds of the two row phases from the stored
@@ -136,6 +187,245 @@ impl PlannedTransform {
 
 fn trivial_pads(p: usize, n: usize) -> Vec<PadDecision> {
     vec![PadDecision { n_padded: n, t_unpadded: 0.0, t_padded: 0.0 }; p]
+}
+
+// ---------------------------------------------------------------------------
+// The compiled execution pipeline
+// ---------------------------------------------------------------------------
+
+/// One tile of a pipeline stage: `len` rows (row stage) or columns
+/// (column stage) starting at `start`, transformed at FFT length
+/// `fft_len` (== n unpadded; the group's pad length otherwise, applied
+/// as the scratch stride).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileSpec {
+    pub start: usize,
+    pub len: usize,
+    pub fft_len: usize,
+}
+
+/// Per-phase execution time of one pipeline run over a whole batch.
+///
+/// Fused mode reports summed per-tile busy seconds (work time across
+/// all cooperating workers; can exceed wall time); barrier mode reports
+/// wall seconds of the row-FFT phases (`row_s`) and of the transpose
+/// passes (`col_s`). In both modes `col_s` tracks the memory-bound
+/// share of the transform — the signal behind the model layer's
+/// compute-vs-memory drift classification.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseTimings {
+    pub row_s: f64,
+    pub col_s: f64,
+}
+
+/// The compiled form of a [`PlannedTransform`]: the tile schedule the
+/// fused execution path runs as a [`StageDag`] on the shared pool.
+///
+/// Row tiles partition each group's row range ([`DEFAULT_ROW_TILE`]
+/// rows each); column tiles partition the same ranges *as columns*
+/// ([`DEFAULT_COL_TILE`] wide) — in phase 2 the distribution `d`
+/// governs columns, since the transposed matrix's rows are the original
+/// columns. In a batched execution each matrix gets its own row → join
+/// → column subgraph, so one matrix's column tiles execute while the
+/// next matrix's row tiles are still in flight: work flows through the
+/// batch with no per-phase barrier, and the slowest group only delays
+/// its own matrix's column start.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecPipeline {
+    pub n: usize,
+    pub row_tiles: Vec<TileSpec>,
+    pub col_tiles: Vec<TileSpec>,
+}
+
+impl ExecPipeline {
+    /// Build the tile schedule for distribution `d` over an n×n matrix
+    /// (pad lengths per group when given; every pad must be ≥ n).
+    pub fn compile(n: usize, d: &[usize], pad_lens: Option<&[usize]>) -> ExecPipeline {
+        if let Some(p) = pad_lens {
+            assert_eq!(p.len(), d.len());
+            assert!(p.iter().all(|&v| v >= n), "pad length below N");
+        }
+        let offsets = row_offsets(d);
+        let mut row_tiles = Vec::new();
+        let mut col_tiles = Vec::new();
+        for (i, &di) in d.iter().enumerate() {
+            if di == 0 {
+                continue;
+            }
+            let v = pad_lens.map(|p| p[i]).unwrap_or(n);
+            let end = offsets[i] + di;
+            let mut r = offsets[i];
+            while r < end {
+                let len = DEFAULT_ROW_TILE.min(end - r);
+                row_tiles.push(TileSpec { start: r, len, fft_len: v });
+                r += len;
+            }
+            let mut c = offsets[i];
+            while c < end {
+                let len = DEFAULT_COL_TILE.min(end - c);
+                col_tiles.push(TileSpec { start: c, len, fft_len: v });
+                c += len;
+            }
+        }
+        ExecPipeline { n, row_tiles, col_tiles }
+    }
+
+    /// Execute the pipeline over a batch of same-size matrices with up
+    /// to `workers` cooperating pool jobs. Bit-exact vs the barrier
+    /// four-step path for any engine whose `fft_rows` transforms each
+    /// row independently of batching (the documented engine contract).
+    pub fn execute_batch(
+        &self,
+        engine: &dyn RowFftEngine,
+        mats: &mut [&mut SignalMatrix],
+        workers: usize,
+    ) -> Result<PhaseTimings, EngineError> {
+        let n = self.n;
+        for m in mats.iter() {
+            assert_eq!((m.rows, m.cols), (n, n), "pipeline matrix shape mismatch");
+        }
+        if mats.is_empty() || n == 0 {
+            return Ok(PhaseTimings::default());
+        }
+        let errors: Mutex<Vec<EngineError>> = Mutex::new(Vec::new());
+        let row_ns = AtomicU64::new(0);
+        let col_ns = AtomicU64::new(0);
+
+        let ptrs: Vec<(SendPtr, SendPtr)> = mats
+            .iter_mut()
+            .map(|m| {
+                let mm: &mut SignalMatrix = &mut **m;
+                (SendPtr(mm.re.as_mut_ptr()), SendPtr(mm.im.as_mut_ptr()))
+            })
+            .collect();
+
+        let mut dag = StageDag::new();
+        for &(re_ptr, im_ptr) in &ptrs {
+            let mut row_ids = Vec::with_capacity(self.row_tiles.len());
+            for &tile in &self.row_tiles {
+                let errors = &errors;
+                let row_ns = &row_ns;
+                row_ids.push(dag.add(move || {
+                    // rebind the wrappers whole (2021 precise capture)
+                    let (re_ptr, im_ptr) = (re_ptr, im_ptr);
+                    // SAFETY: each row tile materializes `&mut` over its
+                    // OWN disjoint row range only (tiles partition the
+                    // rows; distinct matrices use distinct buffers);
+                    // column tasks are ordered strictly after every row
+                    // tile by DAG edges, so these slices are dead before
+                    // any cross-range access; run() returns only after
+                    // all tasks end, so the borrows in `mats` outlive
+                    // every access.
+                    let (re, im) = unsafe {
+                        (
+                            std::slice::from_raw_parts_mut(
+                                re_ptr.0.add(tile.start * n),
+                                tile.len * n,
+                            ),
+                            std::slice::from_raw_parts_mut(
+                                im_ptr.0.add(tile.start * n),
+                                tile.len * n,
+                            ),
+                        )
+                    };
+                    let t0 = Instant::now();
+                    let r = row_tile_ffts(engine, re, im, n, tile);
+                    row_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    if let Err(e) = r {
+                        errors.lock().unwrap().push(e);
+                    }
+                }));
+            }
+            // a no-op join keeps the edge count O(R + C), not R·C
+            let join = dag.add(|| {});
+            for id in row_ids {
+                dag.add_edge(id, join);
+            }
+            for &tile in &self.col_tiles {
+                let errors = &errors;
+                let col_ns = &col_ns;
+                let cid = dag.add(move || {
+                    let (re_ptr, im_ptr) = (re_ptr, im_ptr);
+                    let t0 = Instant::now();
+                    let r = col_tile_ffts(engine, re_ptr, im_ptr, n, tile);
+                    col_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    if let Err(e) = r {
+                        errors.lock().unwrap().push(e);
+                    }
+                });
+                dag.add_edge(join, cid);
+            }
+        }
+        dag.run(ExecCtx::global(), workers);
+
+        match errors.into_inner().unwrap().into_iter().next() {
+            Some(e) => Err(e),
+            None => Ok(PhaseTimings {
+                row_s: row_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+                col_s: col_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+            }),
+        }
+    }
+}
+
+/// One row-stage tile over its own `tile.len × n` row slice: FFT in
+/// place (unpadded), or via a stride-`fft_len` scratch work tile
+/// (Algorithm 7, tile-sized).
+fn row_tile_ffts(
+    engine: &dyn RowFftEngine,
+    re: &mut [f64],
+    im: &mut [f64],
+    n: usize,
+    tile: TileSpec,
+) -> Result<(), EngineError> {
+    debug_assert_eq!(re.len(), tile.len * n);
+    if tile.fft_len == n {
+        return engine.fft_rows(re, im, tile.len, n, Direction::Forward, 1);
+    }
+    let v = tile.fft_len;
+    with_scratch(|scratch| {
+        let (wre, wim) = scratch.pair(tile.len * v);
+        for r in 0..tile.len {
+            let src = r * n;
+            wre[r * v..r * v + n].copy_from_slice(&re[src..src + n]);
+            wim[r * v..r * v + n].copy_from_slice(&im[src..src + n]);
+        }
+        engine.fft_rows(wre, wim, tile.len, v, Direction::Forward, 1)?;
+        for r in 0..tile.len {
+            let dst = r * n;
+            re[dst..dst + n].copy_from_slice(&wre[r * v..r * v + n]);
+            im[dst..dst + n].copy_from_slice(&wim[r * v..r * v + n]);
+        }
+        Ok(())
+    })
+}
+
+/// One column-stage tile: transpose-gather columns `[start, start+len)`
+/// into scratch rows of length `fft_len` (zero tail = stride-choice
+/// padding), one engine call, scatter the first n spectrum points back.
+/// This replaces the transpose barrier *and* the padded copy. The
+/// gather/scatter are the shared raw-pointer primitives
+/// ([`gather_col_tile`]/[`scatter_col_tile`]) — concurrent column
+/// tiles never hold overlapping `&mut` plane slices.
+fn col_tile_ffts(
+    engine: &dyn RowFftEngine,
+    re: SendPtr,
+    im: SendPtr,
+    n: usize,
+    tile: TileSpec,
+) -> Result<(), EngineError> {
+    let (c0, w, v) = (tile.start, tile.len, tile.fft_len);
+    with_scratch(|scratch| {
+        let (wre, wim) = scratch.pair(w * v);
+        // SAFETY: the DAG schedules this task strictly after every row
+        // tile of its matrix, column tiles own pairwise-disjoint column
+        // sets, and `execute_batch` holds the plane borrows until the
+        // DAG run returns.
+        unsafe { gather_col_tile(re, im, n, n, c0, c0 + w, v, wre, wim) };
+        engine.fft_rows(wre, wim, w, v, Direction::Forward, 1)?;
+        unsafe { scatter_col_tile(re, im, n, n, c0, c0 + w, v, wre, wim) };
+        Ok(())
+    })
 }
 
 #[cfg(test)]
@@ -183,6 +473,110 @@ mod tests {
         assert_eq!(plan.algorithm, Algorithm::Balanced);
         assert!(!plan.is_padded());
         assert!(plan.makespan.is_nan());
+    }
+
+    #[test]
+    fn pipeline_tiles_cover_rows_and_cols() {
+        let n = 200;
+        let d = vec![70, 0, 130];
+        let pads = vec![n, n, 240];
+        let pipe = ExecPipeline::compile(n, &d, Some(pads.as_slice()));
+        // row tiles cover [0, n) exactly once, in order, ≤ tile size
+        let mut covered = 0usize;
+        for t in &pipe.row_tiles {
+            assert_eq!(t.start, covered);
+            assert!(t.len >= 1 && t.len <= DEFAULT_ROW_TILE);
+            covered += t.len;
+        }
+        assert_eq!(covered, n);
+        let mut covered = 0usize;
+        for t in &pipe.col_tiles {
+            assert_eq!(t.start, covered);
+            assert!(t.len >= 1 && t.len <= DEFAULT_COL_TILE);
+            covered += t.len;
+        }
+        assert_eq!(covered, n);
+        // tiles inside the padded group carry its pad as fft_len and
+        // never straddle the group boundary
+        for t in pipe.row_tiles.iter().chain(&pipe.col_tiles) {
+            let expect = if t.start >= 70 { 240 } else { n };
+            assert_eq!(t.fft_len, expect, "tile at {}", t.start);
+            assert!(t.start + t.len <= if t.start >= 70 { n } else { 70 });
+        }
+    }
+
+    #[test]
+    fn fused_execute_matches_barrier_bitwise() {
+        let n = 96;
+        for padded in [false, true] {
+            let fpms = vec![flat_fpm("a", n, 100.0), flat_fpm("b", n, 280.0)];
+            let mut plan =
+                PlannedTransform::from_fpms(&fpms, n, 0.05, None).unwrap();
+            if padded {
+                // force a pad on group 1 so the stride path runs
+                plan.pads[1] = PadDecision { n_padded: 120, t_unpadded: 1.0, t_padded: 0.5 };
+                assert!(plan.is_padded());
+            }
+            let orig = SignalMatrix::random(n, n, 21 + padded as u64);
+            let mut fused = orig.clone();
+            let mut barrier = orig.clone();
+            plan.execute_with_mode(&NativeEngine, &mut fused, 2, 64, PipelineMode::Fused)
+                .unwrap();
+            plan.execute_with_mode(&NativeEngine, &mut barrier, 2, 64, PipelineMode::Barrier)
+                .unwrap();
+            assert_eq!(
+                fused.max_abs_diff(&barrier),
+                0.0,
+                "padded={padded}: fused must be bit-exact vs barrier"
+            );
+            // and both are actually correct
+            let want = naive_dft2d(&orig);
+            let err = fused.max_abs_diff(&want) / want.norm().max(1.0);
+            assert!(err < 1e-9, "padded={padded}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn pipeline_batch_matches_singles_bitwise() {
+        let n = 64;
+        let fpms = vec![flat_fpm("a", n, 100.0), flat_fpm("b", n, 100.0)];
+        let plan = PlannedTransform::from_fpms(&fpms, n, 0.05, None).unwrap();
+        let pipe = plan.pipeline();
+        let origs: Vec<SignalMatrix> = (0..3).map(|s| SignalMatrix::random(n, n, 40 + s)).collect();
+        let mut singles = origs.clone();
+        for m in singles.iter_mut() {
+            plan.execute_with_mode(&NativeEngine, m, 1, 64, PipelineMode::Barrier).unwrap();
+        }
+        let mut batched = origs.clone();
+        {
+            let mut refs: Vec<&mut SignalMatrix> = batched.iter_mut().collect();
+            let timings = pipe.execute_batch(&NativeEngine, &mut refs, 4).unwrap();
+            assert!(timings.row_s >= 0.0 && timings.col_s >= 0.0);
+        }
+        for (b, s) in batched.iter().zip(&singles) {
+            assert_eq!(b.max_abs_diff(s), 0.0);
+        }
+    }
+
+    #[test]
+    fn pipeline_worker_count_invariant_bitwise() {
+        // tile-scheduler determinism: any worker count, same bits
+        let n = 80;
+        let pipe = ExecPipeline::compile(n, &[50, 30], Some(&[96, 80][..]));
+        let orig = SignalMatrix::random(n, n, 77);
+        let mut reference: Option<SignalMatrix> = None;
+        for workers in [1usize, 2, 8] {
+            let mut m = orig.clone();
+            pipe.execute_batch(&NativeEngine, &mut [&mut m], workers).unwrap();
+            match &reference {
+                None => reference = Some(m),
+                Some(want) => assert_eq!(
+                    m.max_abs_diff(want),
+                    0.0,
+                    "workers={workers} changed the bits"
+                ),
+            }
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use crate::dft::exec::{fft_rows_pooled, ExecCtx};
 use crate::dft::fft::Direction;
+use crate::dft::pipeline::{default_mode, fft_cols_fused, PipelineMode};
 use crate::dft::transpose::{transpose_in_place_parallel, DEFAULT_BLOCK};
 use crate::dft::SignalMatrix;
 
@@ -36,8 +37,34 @@ pub fn row_ffts_local(
 
 /// Full 2D-DFT of a square signal matrix with one thread group — the
 /// "basic FFT version" baseline of the paper's experiments (one group of
-/// `threads` threads), steps 1-4 of PFFT-LB with p=1.
+/// `threads` threads), steps 1-4 of PFFT-LB with p=1. Dispatches on the
+/// process-wide [`PipelineMode`]; both modes are bit-identical (each
+/// logical row/column vector meets the same per-row kernel either way).
 pub fn dft2d(m: &mut SignalMatrix, dir: Direction, threads: usize) {
+    dft2d_with_mode(m, dir, threads, default_mode());
+}
+
+/// [`dft2d`] with an explicit pipeline mode (tests and A/B benches —
+/// explicit callers never race on the process default).
+pub fn dft2d_with_mode(m: &mut SignalMatrix, dir: Direction, threads: usize, mode: PipelineMode) {
+    match mode {
+        PipelineMode::Fused => dft2d_fused(m, dir, threads),
+        PipelineMode::Barrier => dft2d_barrier(m, dir, threads),
+    }
+}
+
+/// The fused path: row FFTs in place, then strided column FFTs via
+/// per-tile transposes — no whole-matrix transpose passes.
+pub fn dft2d_fused(m: &mut SignalMatrix, dir: Direction, threads: usize) {
+    assert_eq!(m.rows, m.cols, "square signal matrix required");
+    let n = m.rows;
+    row_ffts_local(m, 0, n, dir, threads);
+    fft_cols_fused(ExecCtx::global(), m, dir, threads);
+}
+
+/// The pre-pipeline four-step path (row FFTs → transpose → row FFTs →
+/// transpose) — the bit-exactness oracle for the fused pipeline.
+pub fn dft2d_barrier(m: &mut SignalMatrix, dir: Direction, threads: usize) {
     assert_eq!(m.rows, m.cols, "square signal matrix required");
     let n = m.rows;
     row_ffts_local(m, 0, n, dir, threads);
@@ -105,6 +132,25 @@ mod tests {
                 let (ar, ai) = m.get(r, c);
                 let (br, bi) = want.get(r, c);
                 assert!((ar - br).abs() < 1e-12 && (ai - bi).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_matches_barrier_bitwise() {
+        // 24 (mixed-radix), 22 (Bluestein), 96 (two column tiles)
+        for &n in &[22usize, 24, 96] {
+            for dir in [Direction::Forward, Direction::Inverse] {
+                let orig = SignalMatrix::random(n, n, n as u64 + 13);
+                let mut fused = orig.clone();
+                let mut barrier = orig.clone();
+                dft2d_with_mode(&mut fused, dir, 3, PipelineMode::Fused);
+                dft2d_with_mode(&mut barrier, dir, 3, PipelineMode::Barrier);
+                assert_eq!(
+                    fused.max_abs_diff(&barrier),
+                    0.0,
+                    "n={n} {dir:?}: fused pipeline must be bit-exact vs barrier"
+                );
             }
         }
     }

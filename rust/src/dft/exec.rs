@@ -158,17 +158,35 @@ impl ExecCtx {
 
     /// The process-wide pool (sized by `HCLFFT_POOL_THREADS` or the
     /// machine's available parallelism), created on first use and kept
-    /// for the process lifetime.
+    /// for the process lifetime. An unparsable or zero
+    /// `HCLFFT_POOL_THREADS` warns to stderr and falls back to the
+    /// machine default — a silently ignored override would misreport
+    /// every thread-budget experiment built on top of it.
     pub fn global() -> &'static ExecCtx {
         static CTX: OnceLock<ExecCtx> = OnceLock::new();
         CTX.get_or_init(|| {
-            let workers = std::env::var("HCLFFT_POOL_THREADS")
-                .ok()
-                .and_then(|v| v.parse::<usize>().ok())
-                .filter(|&w| w >= 1)
-                .unwrap_or_else(|| {
-                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-                });
+            let machine_default =
+                || std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+            let workers = match std::env::var("HCLFFT_POOL_THREADS") {
+                Ok(v) => match v.trim().parse::<usize>() {
+                    Ok(w) if w >= 1 => w,
+                    Ok(_) => {
+                        eprintln!(
+                            "warning: HCLFFT_POOL_THREADS=0 is not a valid pool size; \
+                             using the machine default"
+                        );
+                        machine_default()
+                    }
+                    Err(_) => {
+                        eprintln!(
+                            "warning: HCLFFT_POOL_THREADS=`{v}` is not a positive integer; \
+                             using the machine default"
+                        );
+                        machine_default()
+                    }
+                },
+                Err(_) => machine_default(),
+            };
             ExecCtx::new(workers)
         })
     }

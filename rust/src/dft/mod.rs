@@ -25,6 +25,11 @@
 //!   layer (engine, drivers, service) dispatches through,
 //! * [`transpose`] — the paper's Appendix A blocked in-place transpose
 //!   (parallel variant runs on the shared pool),
+//! * [`pipeline`] — the fused tiled 2D pipeline: a stage-DAG tile
+//!   scheduler on the shared pool plus strided column FFTs (per-tile
+//!   transpose into scratch) that replace the global transpose
+//!   barriers; the barrier path survives as
+//!   [`pipeline::PipelineMode::Barrier`],
 //! * [`dft2d`] — the row-column 2D-DFT driver with thread groups.
 //!
 //! Layout is SoA split planes (`re`, `im` as separate slices), matching
@@ -36,6 +41,7 @@ pub mod dft2d;
 pub mod dft3d;
 pub mod exec;
 pub mod fft;
+pub mod pipeline;
 pub mod plan;
 pub mod radix;
 pub mod transpose;

@@ -1,0 +1,600 @@
+//! Fused tiled 2D pipeline — tile-granular stage scheduling that
+//! replaces the global transpose barriers.
+//!
+//! The four-step skeleton (row FFTs → transpose → row FFTs → transpose)
+//! spends two of its four matrix passes in transposes: pure memory
+//! traffic that exists only to make the column FFTs contiguous. The
+//! fused pipeline removes both barriers by running the column FFTs
+//! *directly on row-major storage*: each column tile is transposed into
+//! a per-thread [`crate::dft::exec::Scratch`] arena (the per-tile
+//! transpose doubles as
+//! the padded-plan gather, so padding becomes a stride choice in the
+//! tile, not a whole-matrix `pad_cols` copy), transformed with the same
+//! row kernel, and scattered back — the tile stays cache-resident
+//! through gather → FFT → scatter, and the matrix is touched twice per
+//! 2D transform instead of four times.
+//!
+//! Three pieces live here:
+//!
+//! * [`PipelineMode`] — fused vs barrier selection, with a process-wide
+//!   default (CLI `--pipeline`, env `HCLFFT_PIPELINE`). The barrier
+//!   path is kept as a first-class fallback and as the bit-exactness
+//!   oracle: both modes run the same per-row kernel over the same
+//!   logical vectors, so their outputs are bit-identical.
+//! * [`StageDag`] — a small dependency-counting task scheduler on the
+//!   shared [`ExecCtx`] pool: a tile task becomes ready the moment its
+//!   predecessors finish, so in a batched execution one matrix's column
+//!   tiles run while the next matrix's row tiles are still in flight —
+//!   no per-phase join barrier across the batch. Execution order never
+//!   affects values (tiles own disjoint index sets), so results are
+//!   bit-identical for every worker count and schedule.
+//! * [`fft_cols_fused`] — the fused column phase over the native
+//!   substrate, used by [`crate::dft::dft2d::dft2d`]. The
+//!   engine-dispatching drivers build their tiles in
+//!   [`crate::coordinator::plan::ExecPipeline`] instead, on top of the
+//!   same scheduler.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use crate::dft::exec::{fft_rows_pooled, with_scratch, ExecCtx, Job};
+use crate::dft::fft::Direction;
+use crate::dft::SignalMatrix;
+
+// ---------------------------------------------------------------------------
+// Pipeline mode
+// ---------------------------------------------------------------------------
+
+/// How the two FFT phases of a 2D transform are executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// Tile-granular fused pipeline: strided column FFTs via per-tile
+    /// transposes into scratch — no whole-matrix transpose passes.
+    Fused,
+    /// The paper's four-step skeleton with full-matrix transpose
+    /// barriers between phases (the pre-pipeline behaviour; kept as a
+    /// fallback and as the bit-exactness oracle).
+    Barrier,
+}
+
+impl PipelineMode {
+    /// Parse a CLI/env value ("fused" | "barrier").
+    pub fn parse(s: &str) -> Option<PipelineMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "fused" => Some(PipelineMode::Fused),
+            "barrier" => Some(PipelineMode::Barrier),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PipelineMode::Fused => "fused",
+            PipelineMode::Barrier => "barrier",
+        }
+    }
+}
+
+const MODE_UNSET: u8 = 0;
+const MODE_FUSED: u8 = 1;
+const MODE_BARRIER: u8 = 2;
+
+/// Process-wide default mode consulted by the implicit entry points
+/// (`dft2d`, the PFFT drivers, `PlannedTransform::execute`). Explicit
+/// `*_with_mode` variants ignore it — tests use those so concurrent
+/// test threads never race on this global.
+static DEFAULT_MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+/// Override the process default (the CLI's `--pipeline` flag).
+pub fn set_default_mode(mode: PipelineMode) {
+    let v = match mode {
+        PipelineMode::Fused => MODE_FUSED,
+        PipelineMode::Barrier => MODE_BARRIER,
+    };
+    DEFAULT_MODE.store(v, Ordering::Relaxed);
+}
+
+/// The current process default: an explicit [`set_default_mode`] value,
+/// else `HCLFFT_PIPELINE` (fused|barrier) from the environment, else
+/// fused. Unparsable env values warn once and fall back to fused.
+pub fn default_mode() -> PipelineMode {
+    match DEFAULT_MODE.load(Ordering::Relaxed) {
+        MODE_FUSED => PipelineMode::Fused,
+        MODE_BARRIER => PipelineMode::Barrier,
+        _ => {
+            let mode = match std::env::var("HCLFFT_PIPELINE") {
+                Ok(v) => PipelineMode::parse(&v).unwrap_or_else(|| {
+                    eprintln!(
+                        "warning: HCLFFT_PIPELINE=`{v}` is not `fused` or `barrier`; \
+                         using the fused pipeline"
+                    );
+                    PipelineMode::Fused
+                }),
+                Err(_) => PipelineMode::Fused,
+            };
+            set_default_mode(mode);
+            mode
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tile geometry defaults
+// ---------------------------------------------------------------------------
+
+/// Rows per row-stage tile. Small enough that a partition's row range
+/// fans out across the whole pool; large enough that per-tile dispatch
+/// overhead stays negligible against an FFT over `tile × n` points.
+pub const DEFAULT_ROW_TILE: usize = 32;
+
+/// Columns per column-stage tile: each source row contributes one
+/// contiguous 32-value read during the per-tile transpose while the
+/// write side fans out over 32 streams (well inside the L1 line
+/// budget — the same blocking argument as the paper's Appendix A
+/// transpose), a tile of a paper-size matrix stays L2-resident through
+/// gather → FFT → scatter, and N = 640 still yields 20 column tasks to
+/// keep a wide pool busy.
+pub const DEFAULT_COL_TILE: usize = 32;
+
+/// A raw split-plane pointer that pipeline tasks share. SAFETY contract
+/// (upheld by every constructor in this crate): tasks built over one
+/// `SendPtr` touch pairwise-disjoint index sets, or are ordered by
+/// [`StageDag`] edges (completion of a predecessor happens-before a
+/// dependent starts — the scheduler hands dependents out under the same
+/// mutex the predecessor's completion updates), and the DAG's `run`
+/// does not return before every task finished.
+#[derive(Clone, Copy)]
+pub struct SendPtr(pub *mut f64);
+// SAFETY: see the contract above — disjointness or DAG ordering makes
+// the aliasing sound, and the borrow the pointer was created from
+// outlives the scheduler run.
+unsafe impl Send for SendPtr {}
+
+// ---------------------------------------------------------------------------
+// The stage-DAG scheduler
+// ---------------------------------------------------------------------------
+
+/// A dependency-counting task graph executed on the shared pool.
+///
+/// Tasks are closures; edges are "must finish before". `run` drains the
+/// graph with `workers` cooperating pool jobs, each pulling whatever
+/// task is ready — a tile enters its column phase the moment its
+/// row-phase dependencies are done instead of waiting on the slowest
+/// group behind a phase barrier.
+pub struct StageDag<'env> {
+    tasks: Vec<Option<Job<'env>>>,
+    deps: Vec<usize>,
+    dependents: Vec<Vec<usize>>,
+}
+
+impl<'env> Default for StageDag<'env> {
+    fn default() -> Self {
+        StageDag::new()
+    }
+}
+
+impl<'env> StageDag<'env> {
+    pub fn new() -> StageDag<'env> {
+        StageDag { tasks: Vec::new(), deps: Vec::new(), dependents: Vec::new() }
+    }
+
+    /// Number of tasks added so far.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Add a task; returns its id for [`StageDag::add_edge`].
+    pub fn add(&mut self, job: impl FnOnce() + Send + 'env) -> usize {
+        self.tasks.push(Some(Box::new(job)));
+        self.deps.push(0);
+        self.dependents.push(Vec::new());
+        self.tasks.len() - 1
+    }
+
+    /// Require task `from` to finish before task `to` may start.
+    pub fn add_edge(&mut self, from: usize, to: usize) {
+        assert!(from < self.tasks.len() && to < self.tasks.len(), "edge references unknown task");
+        assert_ne!(from, to, "self-edge would deadlock the stage DAG");
+        self.dependents[from].push(to);
+        self.deps[to] += 1;
+    }
+
+    /// Run every task to completion with up to `workers` cooperating
+    /// pool jobs. Panics if a task panicked or the graph has a cycle.
+    pub fn run(self, ctx: &ExecCtx, workers: usize) {
+        let total = self.tasks.len();
+        if total == 0 {
+            return;
+        }
+        let workers = workers.max(1).min(total);
+        let dependents = self.dependents;
+
+        struct DagState<'env> {
+            slots: Vec<Option<Job<'env>>>,
+            deps: Vec<usize>,
+            ready: VecDeque<usize>,
+            running: usize,
+            done: usize,
+            failed: Option<&'static str>,
+        }
+        let ready: VecDeque<usize> =
+            self.deps.iter().enumerate().filter(|(_, &d)| d == 0).map(|(i, _)| i).collect();
+        let state = Mutex::new(DagState {
+            slots: self.tasks,
+            deps: self.deps,
+            ready,
+            running: 0,
+            done: 0,
+            failed: None,
+        });
+        let cv = Condvar::new();
+
+        let mut jobs: Vec<Job> = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let state = &state;
+            let cv = &cv;
+            let dependents = &dependents;
+            jobs.push(Box::new(move || loop {
+                let (id, job) = {
+                    let mut s = state.lock().unwrap();
+                    loop {
+                        if s.failed.is_some() || s.done == total {
+                            return;
+                        }
+                        if let Some(id) = s.ready.pop_front() {
+                            s.running += 1;
+                            let job = s.slots[id].take().expect("task scheduled twice");
+                            break (id, job);
+                        }
+                        if s.running == 0 {
+                            // nothing ready, nothing running, not done:
+                            // the remaining tasks wait on each other
+                            s.failed = Some("stage DAG contains a dependency cycle");
+                            cv.notify_all();
+                            return;
+                        }
+                        s = cv.wait(s).unwrap();
+                    }
+                };
+                let ok = catch_unwind(AssertUnwindSafe(job)).is_ok();
+                let mut s = state.lock().unwrap();
+                s.running -= 1;
+                s.done += 1;
+                if ok {
+                    for &dep in &dependents[id] {
+                        s.deps[dep] -= 1;
+                        if s.deps[dep] == 0 {
+                            s.ready.push_back(dep);
+                        }
+                    }
+                } else {
+                    s.failed = Some("stage DAG task panicked");
+                }
+                cv.notify_all();
+            }));
+        }
+        ctx.run_jobs(jobs);
+
+        let s = state.into_inner().unwrap();
+        if let Some(why) = s.failed {
+            panic!("{why}");
+        }
+        assert_eq!(s.done, total, "stage DAG finished with unexecuted tasks");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The fused column phase over the native substrate
+// ---------------------------------------------------------------------------
+
+/// Transpose-gather columns `[c0, c1)` of a `rows × stride` row-major
+/// region into tile rows of length `fft_len` in `dst` (the caller's
+/// zeroed scratch lease supplies the `fft_len − rows` stride-padding
+/// tail). Reads are row-major over the source, so each source row
+/// contributes one contiguous `c1 − c0`-value read while the write side
+/// fans out over that many streams — the blocked-transpose access
+/// shape. Element access goes through raw pointers so concurrent tile
+/// tasks never materialize overlapping `&mut` plane slices.
+///
+/// # Safety
+///
+/// The caller must have exclusive logical access to columns `[c0, c1)`
+/// of both planes for the duration of the call (disjoint tile column
+/// sets, or [`StageDag`] ordering against writers of other index
+/// sets), and both planes must be live `rows × stride` allocations.
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn gather_col_tile(
+    re: SendPtr,
+    im: SendPtr,
+    rows: usize,
+    stride: usize,
+    c0: usize,
+    c1: usize,
+    fft_len: usize,
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+) {
+    let w = c1 - c0;
+    debug_assert!(c1 <= stride && fft_len >= rows);
+    debug_assert!(dst_re.len() >= w * fft_len && dst_im.len() >= w * fft_len);
+    for r in 0..rows {
+        let base = r * stride + c0;
+        for j in 0..w {
+            dst_re[j * fft_len + r] = *re.0.add(base + j);
+            dst_im[j * fft_len + r] = *im.0.add(base + j);
+        }
+    }
+}
+
+/// Mirror of [`gather_col_tile`]: scatter the first `rows` spectrum
+/// points of each tile row back into columns `[c0, c1)`.
+///
+/// # Safety
+///
+/// Same contract as [`gather_col_tile`].
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn scatter_col_tile(
+    re: SendPtr,
+    im: SendPtr,
+    rows: usize,
+    stride: usize,
+    c0: usize,
+    c1: usize,
+    fft_len: usize,
+    src_re: &[f64],
+    src_im: &[f64],
+) {
+    let w = c1 - c0;
+    debug_assert!(c1 <= stride && fft_len >= rows);
+    for r in 0..rows {
+        let base = r * stride + c0;
+        for j in 0..w {
+            *re.0.add(base + j) = src_re[j * fft_len + r];
+            *im.0.add(base + j) = src_im[j * fft_len + r];
+        }
+    }
+}
+
+/// Transform columns `[c0, c1)` of a row-major split-plane region in
+/// place: per-tile transpose into scratch rows of length `fft_len`
+/// (zero tail when `fft_len > rows` — stride-choice padding), run the
+/// row kernel over the gathered rows, scatter the first `rows` spectrum
+/// points back. `stride` is the distance between consecutive rows of
+/// the region (≥ the logical row length).
+///
+/// Values are bit-identical to "transpose, row-FFT the same vectors,
+/// transpose back": the kernel sees exactly the same logical input
+/// either way.
+#[allow(clippy::too_many_arguments)]
+pub fn fft_col_range(
+    ctx: &ExecCtx,
+    re: &mut [f64],
+    im: &mut [f64],
+    rows: usize,
+    stride: usize,
+    c0: usize,
+    c1: usize,
+    fft_len: usize,
+    dir: Direction,
+) {
+    debug_assert!(c1 <= stride && fft_len >= rows);
+    let w = c1 - c0;
+    if w == 0 || rows == 0 {
+        return;
+    }
+    let (rp, ip) = (SendPtr(re.as_mut_ptr()), SendPtr(im.as_mut_ptr()));
+    with_scratch(|scratch| {
+        let (wre, wim) = scratch.pair(w * fft_len);
+        // SAFETY: this function holds `&mut` on both whole planes, so
+        // access to every column is exclusive here.
+        unsafe { gather_col_tile(rp, ip, rows, stride, c0, c1, fft_len, wre, wim) };
+        fft_rows_pooled(ctx, wre, wim, w, fft_len, dir, 1);
+        unsafe { scatter_col_tile(rp, ip, rows, stride, c0, c1, fft_len, wre, wim) };
+    });
+}
+
+/// The fused column phase of a square 2D-DFT: column FFTs of every
+/// column of `m`, executed as [`DEFAULT_COL_TILE`]-wide tiles chunked
+/// over at most `threads` pool jobs (the caller's thread budget is
+/// honored, exactly like the row phase) — the replacement for
+/// `transpose → row FFTs → transpose`. Inverse direction works
+/// symmetrically (the kernel's per-column 1/n scaling happens in the
+/// gathered tile).
+pub fn fft_cols_fused(ctx: &ExecCtx, m: &mut SignalMatrix, dir: Direction, threads: usize) {
+    assert_eq!(m.rows, m.cols, "square signal matrix required");
+    let n = m.rows;
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1);
+    if threads == 1 || n <= DEFAULT_COL_TILE {
+        let (re, im) = (&mut m.re[..], &mut m.im[..]);
+        let mut c = 0;
+        while c < n {
+            let hi = (c + DEFAULT_COL_TILE).min(n);
+            fft_col_range(ctx, re, im, n, n, c, hi, n, dir);
+            c = hi;
+        }
+        return;
+    }
+    let mut tiles: Vec<(usize, usize)> = Vec::with_capacity(n.div_ceil(DEFAULT_COL_TILE));
+    let mut c = 0;
+    while c < n {
+        let hi = (c + DEFAULT_COL_TILE).min(n);
+        tiles.push((c, hi));
+        c = hi;
+    }
+    let re_ptr = SendPtr(m.re.as_mut_ptr());
+    let im_ptr = SendPtr(m.im.as_mut_ptr());
+    let per_job = tiles.len().div_ceil(threads.min(tiles.len()));
+    let mut jobs: Vec<Job> = Vec::with_capacity(tiles.len().div_ceil(per_job));
+    for chunk in tiles.chunks(per_job) {
+        jobs.push(Box::new(move || {
+            // rebind the wrappers whole: 2021 precise capture would
+            // otherwise capture only the (non-Send) pointer fields
+            let (re_ptr, im_ptr) = (re_ptr, im_ptr);
+            for &(c0, hi) in chunk {
+                with_scratch(|scratch| {
+                    let (wre, wim) = scratch.pair((hi - c0) * n);
+                    // SAFETY: jobs own disjoint column sets, access is
+                    // raw-pointer per element (no overlapping `&mut`
+                    // slices), and run_jobs does not return before
+                    // every job finished.
+                    unsafe { gather_col_tile(re_ptr, im_ptr, n, n, c0, hi, n, wre, wim) };
+                    fft_rows_pooled(ctx, wre, wim, hi - c0, n, dir, 1);
+                    unsafe { scatter_col_tile(re_ptr, im_ptr, n, n, c0, hi, n, wre, wim) };
+                });
+            }
+        }));
+    }
+    ctx.run_jobs(jobs);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dft::transpose::transpose_in_place_parallel;
+    use crate::dft::{naive_dft_rows, SignalMatrix};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn mode_parses_and_names() {
+        assert_eq!(PipelineMode::parse("fused"), Some(PipelineMode::Fused));
+        assert_eq!(PipelineMode::parse(" Barrier "), Some(PipelineMode::Barrier));
+        assert_eq!(PipelineMode::parse("nope"), None);
+        assert_eq!(PipelineMode::Fused.name(), "fused");
+        assert_eq!(PipelineMode::Barrier.name(), "barrier");
+    }
+
+    #[test]
+    fn dag_respects_edges_and_runs_everything() {
+        let ctx = ExecCtx::new(3);
+        let order: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        let mut dag = StageDag::new();
+        // diamond: 0 -> {1, 2} -> 3
+        let a = dag.add(|| order.lock().unwrap().push(0));
+        let b = dag.add(|| order.lock().unwrap().push(1));
+        let c = dag.add(|| order.lock().unwrap().push(2));
+        let d = dag.add(|| order.lock().unwrap().push(3));
+        dag.add_edge(a, b);
+        dag.add_edge(a, c);
+        dag.add_edge(b, d);
+        dag.add_edge(c, d);
+        dag.run(&ctx, 3);
+        let got = order.into_inner().unwrap();
+        assert_eq!(got.len(), 4);
+        assert_eq!(got[0], 0, "root first");
+        assert_eq!(got[3], 3, "sink last");
+    }
+
+    #[test]
+    fn dag_single_worker_suffices() {
+        let ctx = ExecCtx::new(1);
+        let hits = AtomicUsize::new(0);
+        let mut dag = StageDag::new();
+        let mut prev = None;
+        for _ in 0..16 {
+            let id = dag.add(|| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            if let Some(p) = prev {
+                dag.add_edge(p, id);
+            }
+            prev = Some(id);
+        }
+        dag.run(&ctx, 1);
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "dependency cycle")]
+    fn dag_cycle_detected() {
+        let ctx = ExecCtx::new(2);
+        let mut dag = StageDag::new();
+        let a = dag.add(|| {});
+        let b = dag.add(|| {});
+        dag.add_edge(a, b);
+        dag.add_edge(b, a);
+        dag.run(&ctx, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "task panicked")]
+    fn dag_task_panic_propagates() {
+        let ctx = ExecCtx::new(2);
+        let mut dag = StageDag::new();
+        dag.add(|| {});
+        dag.add(|| panic!("boom"));
+        dag.run(&ctx, 2);
+    }
+
+    /// Oracle: the barrier column phase (transpose → row FFTs →
+    /// transpose) over the same matrix.
+    fn cols_via_barrier(m: &SignalMatrix, dir: Direction) -> SignalMatrix {
+        let mut t = m.clone();
+        transpose_in_place_parallel(&mut t, 64, 2);
+        let f = naive_dft_rows(&t, dir == Direction::Inverse);
+        let mut out = f;
+        transpose_in_place_parallel(&mut out, 64, 2);
+        out
+    }
+
+    #[test]
+    fn fused_cols_match_barrier_cols() {
+        let ctx = ExecCtx::new(4);
+        // 96 spans three tiles at width 32; 24 and 22 exercise the
+        // mixed-radix and Bluestein column kernels
+        for &n in &[22usize, 24, 96] {
+            let orig = SignalMatrix::random(n, n, n as u64 + 1);
+            let mut fused = orig.clone();
+            fft_cols_fused(&ctx, &mut fused, Direction::Forward, 4);
+            let want = cols_via_barrier(&orig, Direction::Forward);
+            let scale = want.norm().max(1.0);
+            assert!(
+                fused.max_abs_diff(&want) / scale < 1e-9,
+                "n={n}: {}",
+                fused.max_abs_diff(&want) / scale
+            );
+        }
+    }
+
+    #[test]
+    fn fused_cols_thread_count_invariant_bitwise() {
+        let ctx = ExecCtx::new(4);
+        let orig = SignalMatrix::random(96, 96, 9);
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        fft_cols_fused(&ctx, &mut a, Direction::Forward, 1);
+        fft_cols_fused(&ctx, &mut b, Direction::Forward, 4);
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+
+    #[test]
+    fn fused_col_range_pads_as_stride_choice() {
+        // padded column FFT == zero-pad the column to fft_len, FFT,
+        // keep the first n bins (the paper's spectral interpolation)
+        let (n, v) = (16usize, 24usize);
+        let orig = SignalMatrix::random(n, n, 5);
+        let mut got = orig.clone();
+        let ctx = ExecCtx::new(2);
+        {
+            let (re, im) = (&mut got.re[..], &mut got.im[..]);
+            fft_col_range(&ctx, re, im, n, n, 0, n, v, Direction::Forward);
+        }
+        // oracle: transpose, pad rows to v, FFT, crop, transpose back
+        let mut t = orig.clone();
+        transpose_in_place_parallel(&mut t, 64, 1);
+        let padded = t.pad_cols(v);
+        let f = naive_dft_rows(&padded, false);
+        let mut want = f.crop_cols(n);
+        transpose_in_place_parallel(&mut want, 64, 1);
+        let scale = want.norm().max(1.0);
+        assert!(got.max_abs_diff(&want) / scale < 1e-9);
+    }
+}

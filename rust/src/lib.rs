@@ -16,8 +16,10 @@
 //!   Stockham for 5-smooth lengths, radix-2, Bluestein fallback for
 //!   non-smooth lengths, blocked transpose) plus the shared execution
 //!   context ([`dft::exec::ExecCtx`]: one persistent worker pool +
-//!   per-thread scratch arenas) used as the multithreaded compute engine
-//!   and as an independent numeric oracle.
+//!   per-thread scratch arenas) and the fused tiled 2D pipeline
+//!   ([`dft::pipeline`]: stage-DAG tile scheduling + strided column
+//!   FFTs — no whole-matrix transpose barriers), used as the
+//!   multithreaded compute engine and as an independent numeric oracle.
 //! * [`simulator`] — calibrated performance models of the three FFT packages
 //!   the paper studies (FFTW-2.1.5, FFTW-3.3.7, Intel MKL FFT); substitutes
 //!   for the Haswell-36-core testbed that is not available here.

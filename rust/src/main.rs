@@ -134,9 +134,24 @@ fn make_engine(name: &str, artifacts: &Path) -> Result<Box<dyn RowFftEngine>, St
     }
 }
 
+/// Shared `--pipeline fused|barrier` parsing: sets the process-wide
+/// default mode every implicit entry point (drivers, dft2d) consults.
+fn pipeline_from_args(args: &cli::Args) -> Result<hclfft::dft::pipeline::PipelineMode, String> {
+    let mode = match args.opt("pipeline") {
+        Some(v) => hclfft::dft::pipeline::PipelineMode::parse(v)
+            .ok_or_else(|| format!("--pipeline must be `fused` or `barrier`, got `{v}`"))?,
+        None => hclfft::dft::pipeline::default_mode(),
+    };
+    hclfft::dft::pipeline::set_default_mode(mode);
+    Ok(mode)
+}
+
 fn cmd_run(args: &cli::Args, cfg: &Config, bench: bool) -> Result<(), String> {
-    args.validate(&["n", "engine", "algo", "p", "t", "artifacts", "verify", "config", "seed"])?;
+    args.validate(&[
+        "n", "engine", "algo", "p", "t", "artifacts", "verify", "config", "seed", "pipeline",
+    ])?;
     let n = args.opt_usize("n")?.ok_or("--n required")?;
+    let mode = pipeline_from_args(args)?;
     let algo = args.opt_or("algo", "fpm");
     let p = args.opt_usize("p")?.unwrap_or(cfg.groups);
     let t = args.opt_usize("t")?.unwrap_or(cfg.threads_per_group);
@@ -197,9 +212,10 @@ fn cmd_run(args: &cli::Args, cfg: &Config, bench: bool) -> Result<(), String> {
         let m = mean_using_ttest(&policy, || exec(&algo).expect("bench run failed"));
         let mflops = hclfft::stats::harness::fft2d_flops(n) / m.mean / 1e6;
         println!(
-            "{} {} N={n} (p={p}, t={t}, {kernel}): mean {:.6}s ± {:.6}s over {} reps ({:.1} MFLOPs)",
+            "{} {} N={n} (p={p}, t={t}, {kernel}, {} pipeline): mean {:.6}s ± {:.6}s over {} reps ({:.1} MFLOPs)",
             engine.name(),
             algo,
+            mode.name(),
             m.mean,
             m.ci_half_width,
             m.reps,
@@ -209,9 +225,10 @@ fn cmd_run(args: &cli::Args, cfg: &Config, bench: bool) -> Result<(), String> {
         let secs = exec(&algo)?;
         let mflops = hclfft::stats::harness::fft2d_flops(n) / secs / 1e6;
         println!(
-            "{} {} N={n} (p={p}, t={t}, {kernel}): {:.6}s ({:.1} MFLOPs), d = {:?}",
+            "{} {} N={n} (p={p}, t={t}, {kernel}, {} pipeline): {:.6}s ({:.1} MFLOPs), d = {:?}",
             engine.name(),
             algo,
+            mode.name(),
             secs,
             mflops,
             plan.d
@@ -366,8 +383,9 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     args.validate(&[
         "n", "requests", "clients", "engine", "p", "t", "workers", "batch", "wisdom",
         "no-wisdom", "pad", "starve", "budget", "seed", "config", "drift-factor", "json",
-        "no-json",
+        "no-json", "pipeline",
     ])?;
+    let pipeline = pipeline_from_args(args)?;
     let ns = parse_csv_usize(&args.opt_or("n", "1024"))?;
     if ns.is_empty() {
         return Err("--n requires at least one size".into());
@@ -398,6 +416,7 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
         max_batch: args.opt_usize("batch")?.unwrap_or(8).max(1),
         starvation_bound_s: args.opt_f64("starve")?.unwrap_or(5.0),
         transpose_block: cfg.transpose_block,
+        pipeline,
         planning,
         ..ServiceConfig::default()
     };
@@ -426,7 +445,8 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     println!(
         "serve-bench: engine {engine} | sizes {ns:?} | {requests} requests/pass x 2 passes \
          (cold+warm) | {clients} clients | {workers} workers | max batch {max_batch} | \
-         exec pool {} thread(s)",
+         {} pipeline | exec pool {} thread(s)",
+        pipeline.name(),
         hclfft::dft::exec::ExecCtx::global().workers()
     );
 
@@ -512,6 +532,7 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
             .set("clients", clients)
             .set("workers", workers)
             .set("max_batch", max_batch)
+            .set("pipeline", pipeline.name())
             .set(
                 "drift_factor",
                 drift_factor.map(hclfft::util::json::Json::Num).unwrap_or(
@@ -716,8 +737,14 @@ fn cmd_model(args: &cli::Args) -> Result<(), String> {
         for ev in m.drift_events().iter().rev().take(10) {
             println!(
                 "  {e} drift at obs #{}: (x={}, y={}) expected {:.6}s observed {:.6}s \
-                 (variation {:.0}%)",
-                ev.at_observation, ev.x, ev.y, ev.expected_s, ev.observed_s, ev.variation_pct
+                 (variation {:.0}%, {} drift)",
+                ev.at_observation,
+                ev.x,
+                ev.y,
+                ev.expected_s,
+                ev.observed_s,
+                ev.variation_pct,
+                ev.class.name()
             );
         }
     }

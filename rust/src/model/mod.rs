@@ -31,13 +31,43 @@ pub mod sim;
 pub mod static_model;
 pub mod surface;
 
-pub use online::{DriftEvent, DriftPolicy, OnlineModel, PointStat};
+pub use online::{DriftClass, DriftEvent, DriftPolicy, OnlineModel, PhaseStat, PointStat};
 pub use sim::SimModel;
 pub use static_model::StaticModel;
 pub use surface::{
     sanitize_time, speed_from_time, speed_from_time_sanitized, time_from_speed, variation_pct,
     Curve, SpeedFunction, MIN_TIME_S,
 };
+
+/// Which part of a 2D pipeline execution a timing observation covers.
+///
+/// The serving executor times the two stages of every forward batch
+/// separately: the row-FFT stage (compute-bound) and the column stage
+/// (the strided gather/FFT/scatter tiles under the fused pipeline, the
+/// transpose passes under the barrier path — memory-bound either way).
+/// Phase-resolved observations let the drift detector tell a machine
+/// that *computes* slower from one whose *memory bandwidth* degraded
+/// (e.g. a co-tenant saturating the bus): the former shifts both
+/// phases, the latter shifts the column phase disproportionately.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Whole-request wall time (the prediction/observation point).
+    Whole,
+    /// The row-FFT stage.
+    Row,
+    /// The column stage (strided tiles / transposes).
+    Col,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Whole => "whole",
+            Phase::Row => "row",
+            Phase::Col => "col",
+        }
+    }
+}
 
 /// A performance model of one execution platform: `groups()` abstract
 /// processors with per-group speed sections and a whole-platform time
@@ -71,6 +101,19 @@ pub trait PerfModel: Send + Sync {
     /// contradicts the model's established estimate.
     fn observe(&mut self, _x: usize, _y: usize, _t_seconds: f64) -> Option<DriftEvent> {
         None
+    }
+
+    /// Fold one *phase-resolved* timing observation ([`Phase::Row`] /
+    /// [`Phase::Col`] of the 2D pipeline) into the model. Phase streams
+    /// never fire drift themselves — they feed the compute-vs-memory
+    /// classification attached to whole-point drift events. No-op for
+    /// models that cannot learn; [`Phase::Whole`] delegates to
+    /// [`PerfModel::observe`] (the returned event, if any, is dropped —
+    /// drive whole-point observations through `observe` directly).
+    fn observe_phase(&mut self, phase: Phase, x: usize, y: usize, t_seconds: f64) {
+        if phase == Phase::Whole {
+            let _ = self.observe(x, y, t_seconds);
+        }
     }
 }
 

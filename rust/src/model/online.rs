@@ -27,11 +27,11 @@
 //! * the drift detector does not fire on a stationary stream whose
 //!   noise is small relative to the threshold.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 
 use crate::model::surface::{sanitize_time, variation_pct, Curve, MIN_TIME_S};
-use crate::model::PerfModel;
+use crate::model::{PerfModel, Phase};
 use crate::stats::ttest::t_inv_cdf;
 use crate::util::json::Json;
 
@@ -69,6 +69,42 @@ impl Default for DriftPolicy {
     }
 }
 
+/// What kind of machine change a drift event looks like, judged from
+/// the phase-resolved observation streams at the drifted point.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DriftClass {
+    /// Both pipeline phases shifted together (or only the compute-bound
+    /// row phase did): the machine computes at a different speed —
+    /// frequency scaling, a different core set, thermal throttling.
+    Compute,
+    /// The memory-bound column phase shifted disproportionately: memory
+    /// bandwidth changed — a co-tenant saturating the bus, NUMA
+    /// migration, hugepage loss.
+    Memory,
+    /// No phase-resolved evidence at this point (phase streams too
+    /// short, or the consumer only feeds whole-request timings).
+    #[default]
+    Unknown,
+}
+
+impl DriftClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DriftClass::Compute => "compute",
+            DriftClass::Memory => "memory",
+            DriftClass::Unknown => "unknown",
+        }
+    }
+
+    pub fn parse(s: &str) -> DriftClass {
+        match s {
+            "compute" => DriftClass::Compute,
+            "memory" => DriftClass::Memory,
+            _ => DriftClass::Unknown,
+        }
+    }
+}
+
 /// One detected regime change at a model point.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DriftEvent {
@@ -82,6 +118,8 @@ pub struct DriftEvent {
     pub variation_pct: f64,
     /// model-wide observation count when the event fired
     pub at_observation: u64,
+    /// compute vs memory-bandwidth judgement from the phase streams
+    pub class: DriftClass,
 }
 
 /// Running estimate for one `(x, y)` point: established running sums
@@ -176,6 +214,78 @@ impl PointStat {
     }
 }
 
+/// Running per-phase estimate at one point: established running sums
+/// plus a bounded window of the most recent samples. Backs the
+/// compute-vs-memory drift classification — never fires drift itself.
+/// Live diagnostics only (not persisted; a fresh session re-learns the
+/// phase split within a few served batches).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PhaseStat {
+    count: u64,
+    sum: f64,
+    recent: VecDeque<f64>,
+}
+
+impl PhaseStat {
+    fn push(&mut self, t: f64, window: usize) {
+        self.count += 1;
+        self.sum += t;
+        self.recent.push_back(t);
+        while self.recent.len() > window.max(1) {
+            self.recent.pop_front();
+        }
+    }
+
+    /// Total samples folded in.
+    pub fn samples(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean over every sample (both regimes' worth during a shift).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Mean of every sample *before* the recent window — the phase's
+    /// established regime. `None` until samples outnumber the window.
+    pub fn established_mean(&self) -> Option<f64> {
+        let k = self.recent.len() as u64;
+        if self.count <= k {
+            return None;
+        }
+        let rsum: f64 = self.recent.iter().sum();
+        Some((self.sum - rsum) / (self.count - k) as f64)
+    }
+
+    /// Mean of the recent window.
+    pub fn recent_mean(&self) -> Option<f64> {
+        if self.recent.is_empty() {
+            return None;
+        }
+        Some(self.recent.iter().sum::<f64>() / self.recent.len() as f64)
+    }
+
+    /// Eq-1 variation width (percent) between the established regime
+    /// and the recent window — this phase's share of a detected shift.
+    pub fn shift_pct(&self) -> Option<f64> {
+        let e = self.established_mean()?;
+        let r = self.recent_mean()?;
+        Some(variation_pct(e.max(MIN_TIME_S), r.max(MIN_TIME_S)))
+    }
+
+    /// Start a new regime from the recent window (called when the
+    /// whole-point drift detector declares a shift).
+    fn rebase(&mut self) {
+        self.count = self.recent.len() as u64;
+        self.sum = self.recent.iter().sum();
+        self.recent.clear();
+    }
+}
+
 /// The live model: refined per-point estimates + drift log over an
 /// optional base model.
 #[derive(Clone)]
@@ -184,6 +294,8 @@ pub struct OnlineModel {
     policy: DriftPolicy,
     base: Option<Arc<dyn PerfModel>>,
     points: BTreeMap<(usize, usize), PointStat>,
+    /// phase-resolved streams keyed (phase, x, y) — drift diagnostics
+    phases: BTreeMap<(Phase, usize, usize), PhaseStat>,
     drift_log: Vec<DriftEvent>,
     observations: u64,
     dropped: u64,
@@ -196,6 +308,7 @@ impl std::fmt::Debug for OnlineModel {
             .field("policy", &self.policy)
             .field("has_base", &self.base.is_some())
             .field("points", &self.points.len())
+            .field("phase_streams", &self.phases.len())
             .field("drift_events", &self.drift_log.len())
             .field("observations", &self.observations)
             .field("dropped", &self.dropped)
@@ -210,6 +323,7 @@ impl OnlineModel {
             policy,
             base: None,
             points: BTreeMap::new(),
+            phases: BTreeMap::new(),
             drift_log: Vec::new(),
             observations: 0,
             dropped: 0,
@@ -260,6 +374,50 @@ impl OnlineModel {
 
     pub fn point(&self, x: usize, y: usize) -> Option<&PointStat> {
         self.points.get(&(x, y))
+    }
+
+    /// The phase-resolved stream at `(phase, x, y)`, if any arrived.
+    pub fn phase_stat(&self, phase: Phase, x: usize, y: usize) -> Option<&PhaseStat> {
+        self.phases.get(&(phase, x, y))
+    }
+
+    /// Mean (row, col) phase seconds at `(x, y)` — the phase breakdown
+    /// drift re-plans inspect. `None` until both phases have samples.
+    pub fn phase_breakdown(&self, x: usize, y: usize) -> Option<(f64, f64)> {
+        let row = self.phases.get(&(Phase::Row, x, y)).filter(|p| p.samples() > 0)?;
+        let col = self.phases.get(&(Phase::Col, x, y)).filter(|p| p.samples() > 0)?;
+        Some((row.mean(), col.mean()))
+    }
+
+    /// Judge a just-detected whole-point shift from the phase streams,
+    /// then rebase those streams onto the new regime. A shift counts as
+    /// significant for a phase at half the whole-point drift threshold
+    /// (phase streams are noisier than whole-request walls); the column
+    /// phase dominating by 1.5× marks memory-bandwidth drift.
+    fn classify_and_rebase_phases(&mut self, x: usize, y: usize) -> DriftClass {
+        let sig = self.policy.drift_pct / 2.0;
+        let row = self.phases.get(&(Phase::Row, x, y)).and_then(PhaseStat::shift_pct);
+        let col = self.phases.get(&(Phase::Col, x, y)).and_then(PhaseStat::shift_pct);
+        let class = match (row, col) {
+            (Some(r), Some(c)) => {
+                if c > sig && c > 1.5 * r {
+                    DriftClass::Memory
+                } else if r > sig {
+                    DriftClass::Compute
+                } else if c > sig {
+                    DriftClass::Memory
+                } else {
+                    DriftClass::Unknown
+                }
+            }
+            _ => DriftClass::Unknown,
+        };
+        for phase in [Phase::Row, Phase::Col] {
+            if let Some(p) = self.phases.get_mut(&(phase, x, y)) {
+                p.rebase();
+            }
+        }
+        class
     }
 
     /// Refined time estimate at exactly `(x, y)` — observations only,
@@ -375,6 +533,7 @@ impl PerfModel for OnlineModel {
                         observed_s: wmean,
                         variation_pct: width,
                         at_observation: at,
+                        class: DriftClass::Unknown,
                     })
                 } else {
                     p.merge_window();
@@ -386,10 +545,33 @@ impl PerfModel for OnlineModel {
         if ci < p.best_ci_rel {
             p.best_ci_rel = ci;
         }
+        // classify from the phase streams *before* they rebase (the
+        // point borrow above has ended; the streams still hold the
+        // pre-shift regime as their established means)
+        let event = event.map(|mut e| {
+            e.class = self.classify_and_rebase_phases(x, y);
+            e
+        });
         if let Some(e) = &event {
             self.drift_log.push(e.clone());
         }
         event
+    }
+
+    /// Fold a phase-resolved timing (sanitized like every observation).
+    /// Phase streams never fire drift — they feed the classification
+    /// attached to whole-point drift events.
+    fn observe_phase(&mut self, phase: Phase, x: usize, y: usize, t_seconds: f64) {
+        if phase == Phase::Whole {
+            let _ = self.observe(x, y, t_seconds);
+            return;
+        }
+        let Some(t) = sanitize_time(t_seconds) else {
+            self.dropped += 1;
+            return;
+        };
+        let window = self.policy.window;
+        self.phases.entry((phase, x, y)).or_default().push(t, window);
     }
 }
 
@@ -429,6 +611,7 @@ impl OnlineModel {
                     .set("observed_s", e.observed_s)
                     .set("variation_pct", e.variation_pct)
                     .set("at_observation", e.at_observation as i64)
+                    .set("class", e.class.name())
             })
             .collect();
         Json::obj()
@@ -499,6 +682,12 @@ impl OnlineModel {
                 observed_s: ef("observed_s")?,
                 variation_pct: ef("variation_pct")?,
                 at_observation: eu("at_observation")? as u64,
+                // absent in pre-pipeline files — loads as Unknown
+                class: ej
+                    .get("class")
+                    .and_then(Json::as_str)
+                    .map(DriftClass::parse)
+                    .unwrap_or_default(),
             });
         }
         Ok(m)
@@ -570,6 +759,101 @@ mod tests {
         // estimate re-based onto the new regime
         assert!((m.refined_time(256, 128).unwrap() - 0.03).abs() < 1e-12);
         assert_eq!(m.point(256, 128).unwrap().drift_count, 1);
+    }
+
+    /// Drive a point past establishment with per-phase timings, then
+    /// shift the regime by `row_f`/`col_f` and return the drift event.
+    fn drift_with_phases(row_s: f64, col_s: f64, row_f: f64, col_f: f64) -> DriftEvent {
+        let mut m = OnlineModel::new("t", DriftPolicy::default());
+        let (x, y) = (256usize, 128usize);
+        for _ in 0..8 {
+            m.observe_phase(Phase::Row, x, y, row_s);
+            m.observe_phase(Phase::Col, x, y, col_s);
+            assert!(m.observe(x, y, row_s + col_s).is_none());
+        }
+        let mut fired = None;
+        for _ in 0..4 {
+            m.observe_phase(Phase::Row, x, y, row_s * row_f);
+            m.observe_phase(Phase::Col, x, y, col_s * col_f);
+            fired = m.observe(x, y, row_s * row_f + col_s * col_f);
+        }
+        fired.expect("shift must fire drift within one window")
+    }
+
+    #[test]
+    fn memory_drift_classified_from_column_phase() {
+        // only the memory-bound column phase slows: bandwidth drift
+        let e = drift_with_phases(0.01, 0.01, 1.0, 4.0);
+        assert_eq!(e.class, DriftClass::Memory, "{e:?}");
+    }
+
+    #[test]
+    fn compute_drift_classified_from_uniform_shift() {
+        // both phases slow together: the machine computes slower
+        let e = drift_with_phases(0.01, 0.01, 3.0, 3.0);
+        assert_eq!(e.class, DriftClass::Compute, "{e:?}");
+    }
+
+    #[test]
+    fn drift_without_phase_streams_is_unknown() {
+        let mut m = OnlineModel::new("t", DriftPolicy::default());
+        for _ in 0..8 {
+            assert!(m.observe(256, 128, 0.01).is_none());
+        }
+        let mut fired = None;
+        for _ in 0..4 {
+            fired = m.observe(256, 128, 0.03);
+        }
+        assert_eq!(fired.unwrap().class, DriftClass::Unknown);
+    }
+
+    #[test]
+    fn phase_breakdown_reports_means() {
+        let mut m = OnlineModel::new("t", DriftPolicy::default());
+        assert_eq!(m.phase_breakdown(64, 64), None);
+        for _ in 0..3 {
+            m.observe_phase(Phase::Row, 64, 64, 0.02);
+            m.observe_phase(Phase::Col, 64, 64, 0.01);
+        }
+        let (r, c) = m.phase_breakdown(64, 64).unwrap();
+        assert!((r - 0.02).abs() < 1e-12 && (c - 0.01).abs() < 1e-12);
+        // phase streams are sanitized like whole observations
+        m.observe_phase(Phase::Row, 64, 64, f64::NAN);
+        assert_eq!(m.dropped(), 1);
+        // Whole delegates to observe()
+        m.observe_phase(Phase::Whole, 64, 64, 0.03);
+        assert_eq!(m.point(64, 64).unwrap().samples(), 1);
+    }
+
+    #[test]
+    fn drift_class_json_roundtrips_and_v2_defaults_unknown() {
+        let e = drift_with_phases(0.01, 0.02, 1.0, 5.0);
+        assert_eq!(DriftClass::parse(e.class.name()), e.class);
+        // a v2 drift entry without `class` loads as Unknown
+        let mut m = OnlineModel::new("t", DriftPolicy::default());
+        for _ in 0..8 {
+            m.observe(8, 8, 0.01);
+        }
+        for _ in 0..4 {
+            m.observe(8, 8, 0.05);
+        }
+        let mut j = Json::parse(&m.to_json().to_string()).unwrap();
+        // strip the class field to simulate an old file
+        if let Json::Obj(pairs) = &mut j {
+            for (k, v) in pairs.iter_mut() {
+                if k == "drift_log" {
+                    if let Json::Arr(evs) = v {
+                        for ev in evs.iter_mut() {
+                            if let Json::Obj(fields) = ev {
+                                fields.retain(|(k, _)| k != "class");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let back = OnlineModel::from_json(&j).unwrap();
+        assert_eq!(back.drift_events()[0].class, DriftClass::Unknown);
     }
 
     #[test]

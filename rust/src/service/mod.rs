@@ -16,12 +16,16 @@
 //!    (POPTA/HPOPTA partition, pad lengths, row-kernel factor schedule,
 //!    plan-cache warmup) come from the [`wisdom`] store — computed once
 //!    per `(engine, n, p)`, reused forever, persisted as JSON. Forward
-//!    transforms run the coalesced [`batch::execute_planned_batch`];
-//!    inverse transforms take the exact `dft2d` path (padding is
-//!    forward-only spectral interpolation). All row FFTs and transposes
+//!    transforms run the coalesced [`batch::execute_planned_batch`] —
+//!    by default the plan's compiled fused pipeline (one stage DAG
+//!    across the whole batch: strided column-FFT tiles instead of
+//!    transpose barriers, pads as tile strides; `ServiceConfig::
+//!    pipeline` selects the barrier fallback); inverse transforms take
+//!    the exact `dft2d` path (padding is forward-only spectral
+//!    interpolation). All tiles, row FFTs and (barrier-mode) transposes
 //!    execute on the shared [`crate::dft::exec::ExecCtx`] pool with
 //!    per-thread scratch arenas — the steady-state hot path spawns no
-//!    threads and allocates no scratch.
+//!    threads and allocates no scratch planes.
 //! 5. **respond** — each request's channel receives the transformed
 //!    matrix plus a per-request [`ResponseReport`]; [`stats`] aggregates
 //!    throughput, p50/p95/p99 latency, queue depth and the
@@ -36,7 +40,11 @@
 //! **The model feedback loop** (PR 3): every executed batch is a free
 //! measurement. The executor folds its per-request wall time into the
 //! engine's [`crate::model::OnlineModel`] at the whole-request point
-//! `(x, y) = (2N, N)` (two row phases of N rows each); admission and
+//! `(x, y) = (2N, N)` (two row phases of N rows each) — and, per
+//! phase, the row-stage vs column-stage split of the same batch, so a
+//! drift event classifies itself as compute drift (both phases shift)
+//! or memory-bandwidth drift (the column stage shifts
+//! disproportionately); admission and
 //! SPJF costs come from that live model first (wisdom second, flat
 //! fallback last), and every response reports predicted-vs-actual so
 //! the service's calibration error is observable. When the observation
@@ -61,10 +69,11 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::engine::RowFftEngine;
-use crate::coordinator::plan::PlannedTransform;
+use crate::coordinator::plan::{PhaseTimings, PlannedTransform};
 use crate::dft::fft::Direction;
+use crate::dft::pipeline::PipelineMode;
 use crate::dft::SignalMatrix;
-use crate::model::{DriftPolicy, OnlineModel, PerfModel, SimModel, StaticModel};
+use crate::model::{DriftPolicy, OnlineModel, PerfModel, Phase, SimModel, StaticModel};
 use crate::simulator::Package;
 use crate::stats::harness::fft2d_flops;
 
@@ -224,8 +233,10 @@ pub struct ServiceConfig {
     pub max_batch: usize,
     /// seconds after which a waiting bucket preempts cheaper work
     pub starvation_bound_s: f64,
-    /// transpose block size for the execution phases
+    /// transpose block size for the execution phases (barrier mode)
     pub transpose_block: usize,
+    /// fused tile pipeline (default) vs the barrier four-step fallback
+    pub pipeline: PipelineMode,
     /// planning knobs (p, t, ε, pad policy, profiling budget)
     pub planning: PlanningConfig,
     /// online-model drift detection knobs
@@ -239,6 +250,7 @@ impl Default for ServiceConfig {
             max_batch: 8,
             starvation_bound_s: 5.0,
             transpose_block: 64,
+            pipeline: PipelineMode::Fused,
             planning: PlanningConfig::default(),
             drift: DriftPolicy::default(),
         }
@@ -729,26 +741,40 @@ impl Inner {
         let backend = self.engines.get(&key.engine).expect("validated at submit").clone();
         let mut virtual_done: Option<f64> = None;
         let mut executed_batch_s = 0.0;
+        // per-phase timings of the forward pipeline (row stage vs the
+        // memory-bound column stage) — the drift classifier's signal
+        let mut phase_timings: Option<PhaseTimings> = None;
         let exec_result: Result<(), ServiceError> = match &backend {
             Backend::Real(engine) => {
                 let t0 = Instant::now();
                 let r = if key.forward {
                     let mut mats: Vec<&mut SignalMatrix> =
                         items.iter_mut().map(|p| &mut p.matrix).collect();
-                    batch::execute_planned_batch(
+                    match batch::execute_planned_batch_with_mode(
                         engine.as_ref(),
                         &rec.plan,
                         &mut mats,
                         rec.t,
                         self.cfg.transpose_block,
-                    )
-                    .map_err(|e| ServiceError::Engine(e.to_string()))
+                        self.cfg.pipeline,
+                    ) {
+                        Ok(timings) => {
+                            phase_timings = Some(timings);
+                            Ok(())
+                        }
+                        Err(e) => Err(ServiceError::Engine(e.to_string())),
+                    }
                 } else {
                     // inverse: exact dft2d path (padding is forward-only
                     // spectral interpolation — see coordinator::pad docs)
                     let threads = rec.p * rec.t;
                     for p in items.iter_mut() {
-                        crate::dft::dft2d::dft2d(&mut p.matrix, Direction::Inverse, threads);
+                        crate::dft::dft2d::dft2d_with_mode(
+                            &mut p.matrix,
+                            Direction::Inverse,
+                            threads,
+                            self.cfg.pipeline,
+                        );
                     }
                     Ok(())
                 };
@@ -788,7 +814,20 @@ impl Inner {
             let (x, y) = observation_point(key.n);
             drifted = {
                 let mut models = self.models.lock().unwrap();
-                models.get_mut(&key.engine).and_then(|m| m.observe(x, y, executed_s)).is_some()
+                match models.get_mut(&key.engine) {
+                    Some(m) => {
+                        // phase streams first: a whole-point drift event
+                        // classifies itself from them (compute vs
+                        // memory-bandwidth) at the moment it fires
+                        if let Some(ph) = phase_timings {
+                            let b = size.max(1) as f64;
+                            m.observe_phase(Phase::Row, x, y, ph.row_s / b);
+                            m.observe_phase(Phase::Col, x, y, ph.col_s / b);
+                        }
+                        m.observe(x, y, executed_s).is_some()
+                    }
+                    None => false,
+                }
             };
         }
 

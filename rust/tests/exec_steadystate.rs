@@ -11,6 +11,11 @@
 //! call (job boxes and queue nodes — not the O(n) `vec![0.0; n]`
 //! buffers the pre-executor code allocated per call). The bench note
 //! lives in `benches/bench_fft_sizes.rs` / README §Architecture.
+//!
+//! The same audit covers the fused tile pipeline over a *padded batch*
+//! (the serving hot path): steady-state pipeline runs may allocate the
+//! small per-run DAG bookkeeping (task boxes, edge lists), but never a
+//! tile scratch plane — pads are stride choices inside reused arenas.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -100,4 +105,105 @@ fn warm_fft_loop_does_not_allocate_scratch() {
     fft_rows_pooled(ctx, &mut rt.re, &mut rt.im, rows, n, Direction::Inverse, threads);
     let err = rt.max_abs_diff(&orig);
     assert!(err < 1e-9, "warm roundtrip err {err}");
+
+    // ----- fused pipeline + padded batch (the serving hot path) -----
+    use hclfft::coordinator::engine::NativeEngine;
+    use hclfft::coordinator::pad::PadDecision;
+    use hclfft::coordinator::partition::Algorithm;
+    use hclfft::coordinator::PlannedTransform;
+    use hclfft::dft::pipeline::PipelineMode;
+    use hclfft::service::batch::execute_planned_batch_with_mode;
+
+    let pn = 384usize; // 2^7·3 — mixed-radix rows and columns
+    let plan = PlannedTransform {
+        n: pn,
+        d: vec![256, 128],
+        pads: vec![
+            PadDecision { n_padded: pn, t_unpadded: 0.0, t_padded: 0.0 },
+            // group 1 pads: the stride path must stay allocation-free
+            PadDecision { n_padded: 480, t_unpadded: 1.0, t_padded: 0.5 },
+        ],
+        algorithm: Algorithm::Hpopta,
+        makespan: f64::NAN,
+    };
+    assert!(plan.is_padded(), "audit must exercise the padded tile path");
+    let mut batch: Vec<SignalMatrix> =
+        (0..2).map(|s| SignalMatrix::random(pn, pn, 100 + s)).collect();
+    let run_pipeline = |batch: &mut Vec<SignalMatrix>| {
+        let mut refs: Vec<&mut SignalMatrix> = batch.iter_mut().collect();
+        execute_planned_batch_with_mode(
+            &NativeEngine,
+            &plan,
+            &mut refs,
+            2,
+            64,
+            PipelineMode::Fused,
+        )
+        .unwrap();
+    };
+
+    // warmup until a full pipeline pass grows no arena (tile→worker
+    // assignment varies run to run, so iterate rather than count)
+    let mut warm_iters = 0;
+    loop {
+        let before = scratch_grow_events();
+        run_pipeline(&mut batch);
+        warm_iters += 1;
+        if scratch_grow_events() == before && warm_iters >= 5 {
+            break;
+        }
+        assert!(warm_iters < 500, "pipeline arenas never reached steady state");
+    }
+
+    let grow_before = scratch_grow_events();
+    let bytes_before = ALLOCATED_BYTES.load(Ordering::Relaxed);
+    let iters = 20usize;
+    for _ in 0..iters {
+        run_pipeline(&mut batch);
+    }
+    let grow_delta = scratch_grow_events() - grow_before;
+    let bytes_delta = ALLOCATED_BYTES.load(Ordering::Relaxed) - bytes_before;
+
+    // a late-touched thread may still warm its arenas once — tile tasks
+    // lease a gather arena plus a nested kernel arena (2 planes each),
+    // so the bound is 4 planes per thread in the population, never a
+    // function of the iteration count (per-call growth would be ≥ iters)
+    assert!(
+        grow_delta <= 4 * (4 + 1),
+        "pipeline scratch arenas grew {grow_delta} times over {iters} warm iterations"
+    );
+
+    // per-iteration budget: DAG bookkeeping (task boxes, edge lists,
+    // ready queue) is O(tiles) small allocations — fine. A single
+    // leaked tile scratch plane would cost ≥ 32·480·8 ≈ 120 KiB per
+    // plane pair, and the old gather path copied whole (B·rows × pad)
+    // work matrices: the bound sits far below either.
+    let per_iter = bytes_delta / iters;
+    assert!(
+        per_iter < 96 * 1024,
+        "pipeline steady state allocates {per_iter} B/iter (total {bytes_delta} B over {iters})"
+    );
+
+    // sanity: the warm pipeline still computes the right transform
+    let orig = SignalMatrix::random(pn, pn, 7);
+    let mut fused = orig.clone();
+    let mut barrier = orig.clone();
+    {
+        let mut refs: Vec<&mut SignalMatrix> = vec![&mut fused];
+        execute_planned_batch_with_mode(&NativeEngine, &plan, &mut refs, 2, 64, PipelineMode::Fused)
+            .unwrap();
+    }
+    {
+        let mut refs: Vec<&mut SignalMatrix> = vec![&mut barrier];
+        execute_planned_batch_with_mode(
+            &NativeEngine,
+            &plan,
+            &mut refs,
+            2,
+            64,
+            PipelineMode::Barrier,
+        )
+        .unwrap();
+    }
+    assert_eq!(fused.max_abs_diff(&barrier), 0.0, "warm fused pipeline must stay bit-exact");
 }

@@ -1,0 +1,186 @@
+//! Fused-pipeline integration tests: the tile-granular stage-DAG
+//! execution path must be **bit-exact** against the barrier four-step
+//! path for every (N, d, pad) — both run the same per-row kernel over
+//! the same logical vectors — and numerically correct against the naive
+//! O(N³) oracle. Plus the tile-scheduler determinism regression: the
+//! bits must not depend on worker count or scheduling order.
+
+use hclfft::coordinator::engine::NativeEngine;
+use hclfft::coordinator::pad::PadDecision;
+use hclfft::coordinator::pfft::{pfft_fpm_pad_with_mode, pfft_fpm_with_mode};
+use hclfft::coordinator::ExecPipeline;
+use hclfft::dft::dft2d::dft2d_with_mode;
+use hclfft::dft::fft::Direction;
+use hclfft::dft::pipeline::PipelineMode;
+use hclfft::dft::radix::is_five_smooth;
+use hclfft::dft::{naive_dft2d, SignalMatrix};
+use hclfft::util::proptest::{run, Config};
+use hclfft::util::prng::Xoshiro256;
+
+/// Smallest 5-smooth length ≥ x (pad candidates for random cases).
+fn next_smooth(mut x: usize) -> usize {
+    x = x.max(1);
+    while !is_five_smooth(x) {
+        x += 1;
+    }
+    x
+}
+
+/// One random pipeline case: a 5-smooth N, an FPM row partition d
+/// (imbalanced, zero groups allowed), and per-group pad lengths.
+#[derive(Clone, Debug)]
+struct PipelineCase {
+    n: usize,
+    d: Vec<usize>,
+    pads: Vec<usize>,
+    seed: u64,
+}
+
+fn gen_case(rng: &mut Xoshiro256) -> PipelineCase {
+    // random 5-smooth N in [8, 120] (the naive oracle is O(N³))
+    let n = next_smooth(rng.range_usize(8, 120));
+    let p = rng.range_usize(1, 4);
+    // random composition of n into p parts (zeros allowed)
+    let mut d = vec![0usize; p];
+    let mut left = n;
+    for part in d.iter_mut().take(p - 1) {
+        *part = rng.range_usize(0, left);
+        left -= *part;
+    }
+    d[p - 1] = left;
+    // each group pads with probability ~1/2 (to a nearby smooth length)
+    let pads: Vec<usize> = (0..p)
+        .map(|_| {
+            if rng.range_usize(0, 1) == 0 {
+                n
+            } else {
+                next_smooth(n + rng.range_usize(1, n / 2 + 1))
+            }
+        })
+        .collect();
+    PipelineCase { n, d, pads, seed: rng.next_u64() }
+}
+
+#[test]
+fn prop_fused_bit_exact_vs_barrier_and_correct() {
+    run(
+        "fused == barrier == naive over random (N, d, pad)",
+        &Config::default(),
+        gen_case,
+        |_| Vec::new(),
+        |case| {
+            let orig = SignalMatrix::random(case.n, case.n, case.seed);
+            let pads: Vec<PadDecision> = case
+                .pads
+                .iter()
+                .map(|&v| PadDecision { n_padded: v, t_unpadded: 1.0, t_padded: 1.0 })
+                .collect();
+            let mut fused = orig.clone();
+            let mut barrier = orig.clone();
+            pfft_fpm_pad_with_mode(
+                &NativeEngine,
+                &mut fused,
+                &case.d,
+                &pads,
+                2,
+                64,
+                PipelineMode::Fused,
+            )
+            .map_err(|e| e.to_string())?;
+            pfft_fpm_pad_with_mode(
+                &NativeEngine,
+                &mut barrier,
+                &case.d,
+                &pads,
+                2,
+                64,
+                PipelineMode::Barrier,
+            )
+            .map_err(|e| e.to_string())?;
+            if fused.max_abs_diff(&barrier) != 0.0 {
+                return Err(format!(
+                    "fused differs from barrier by {}",
+                    fused.max_abs_diff(&barrier)
+                ));
+            }
+            // padding is spectral interpolation at the pad length, so
+            // the padded result is NOT the exact N-point DFT; only the
+            // all-unpadded case compares against the oracle
+            if case.pads.iter().all(|&v| v == case.n) {
+                let want = naive_dft2d(&orig);
+                let err = fused.max_abs_diff(&want) / want.norm().max(1.0);
+                if err > 1e-9 {
+                    return Err(format!("rel err vs naive {err}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_unpadded_fused_matches_naive() {
+    // dedicated unpadded property: every partition shape must hit the
+    // oracle (the mixed case above only checks it opportunistically)
+    run(
+        "unpadded fused == naive over random (N, d)",
+        &Config { cases: 32, ..Config::default() },
+        gen_case,
+        |_| Vec::new(),
+        |case| {
+            let orig = SignalMatrix::random(case.n, case.n, case.seed ^ 1);
+            let mut fused = orig.clone();
+            pfft_fpm_with_mode(&NativeEngine, &mut fused, &case.d, 1, 64, PipelineMode::Fused)
+                .map_err(|e| e.to_string())?;
+            let want = naive_dft2d(&orig);
+            let err = fused.max_abs_diff(&want) / want.norm().max(1.0);
+            if err > 1e-9 {
+                return Err(format!("rel err vs naive {err}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tile_scheduler_determinism_regression() {
+    // same pipeline, same input, any worker count, repeated runs: the
+    // output bits must be identical — tile tasks own disjoint index
+    // sets, so scheduling order must never leak into the values
+    let n = 160; // 2^5·5, three groups, group 1 padded
+    let pipe = ExecPipeline::compile(n, &[96, 40, 24], Some(&[n, 192, n][..]));
+    let orig = SignalMatrix::random(n, n, 4242);
+    let mut reference: Option<SignalMatrix> = None;
+    for workers in [1usize, 2, 3, 8] {
+        for rep in 0..3 {
+            let mut m = orig.clone();
+            pipe.execute_batch(&NativeEngine, &mut [&mut m], workers).unwrap();
+            match &reference {
+                None => reference = Some(m),
+                Some(want) => assert_eq!(
+                    m.max_abs_diff(want),
+                    0.0,
+                    "workers={workers} rep={rep} changed the output bits"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_dft2d_inverse_roundtrip_and_barrier_parity() {
+    // the service's inverse path runs dft2d under the same mode; both
+    // directions must agree with the barrier path bit-for-bit
+    for &n in &[60usize, 77] {
+        // 77 = 7·11: Bluestein columns through the fused gather
+        let orig = SignalMatrix::random(n, n, n as u64);
+        let mut fused = orig.clone();
+        dft2d_with_mode(&mut fused, Direction::Forward, 3, PipelineMode::Fused);
+        let mut barrier = orig.clone();
+        dft2d_with_mode(&mut barrier, Direction::Forward, 3, PipelineMode::Barrier);
+        assert_eq!(fused.max_abs_diff(&barrier), 0.0, "n={n} forward");
+        dft2d_with_mode(&mut fused, Direction::Inverse, 3, PipelineMode::Fused);
+        let err = fused.max_abs_diff(&orig) / orig.norm().max(1.0);
+        assert!(err < 1e-9, "n={n} roundtrip rel err {err}");
+    }
+}
