@@ -1,0 +1,128 @@
+//! Bench: real-input (r2c) vs complex (c2c) transforms at the paper
+//! sizes.
+//!
+//! The r2c pair kernel runs one complex FFT per *pair* of real rows —
+//! roughly half the row-phase flops and memory traffic of the c2c path
+//! — and the packed column phase touches only the `N/2+1` stored
+//! columns. This harness:
+//!
+//! 1. **gates correctness first**: the fused and barrier real pipelines
+//!    must be bit-identical, and both must match the c2c oracle (2D-DFT
+//!    of the real embedding, cropped to the stored columns) to tight
+//!    tolerance — the CI smoke greps these lines;
+//! 2. A/Bs the **row phase** (a forward+inverse pair per rep keeps
+//!    magnitudes bounded without per-rep clones — both sides pay the
+//!    same structure): `c2c_rows_N` vs `r2c_rows_N`;
+//! 3. A/Bs the **whole 2D transform** the same way: `c2c2d_N` vs
+//!    `rfft2d_N`;
+//! 4. prints per-size speedup lines and writes the `BENCH_real.json`
+//!    trajectory at the repo root — the input of the `perf-gate` CI job
+//!    (see `rust/src/bin/perf_gate.rs` and `BENCH_baseline.json`).
+
+use std::path::Path;
+
+use hclfft::coordinator::engine::{NativeEngine, RowFftEngine};
+use hclfft::dft::dft2d::dft2d_with_mode;
+use hclfft::dft::exec::ExecCtx;
+use hclfft::dft::fft::Direction;
+use hclfft::dft::pipeline::PipelineMode;
+use hclfft::dft::real::{
+    c2r_rows, crop_to_packed, embed_real, half_cols, irfft2d_with_mode, r2c_rows, rfft2d_with_mode,
+    rfft_cols_fused, RealMatrix,
+};
+use hclfft::dft::SignalMatrix;
+use hclfft::stats::harness::{fft2d_flops, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::from_env("real");
+    let threads = 8usize;
+    let ctx = ExecCtx::global();
+    println!(
+        "real A/B: r2c pair kernel + packed column phase vs the c2c path; \
+         {threads} thread budget, exec pool {} thread(s)",
+        ctx.workers()
+    );
+
+    for &n in &[384usize, 640, 1152] {
+        let nc = half_cols(n);
+        let rm = RealMatrix::random(n, n, n as u64);
+
+        // correctness gates before any timing (the CI smoke relies on
+        // these lines)
+        {
+            let fused = rfft2d_with_mode(&rm, threads, PipelineMode::Fused);
+            let barrier = rfft2d_with_mode(&rm, threads, PipelineMode::Barrier);
+            assert_eq!(
+                fused.max_abs_diff(&barrier),
+                0.0,
+                "N={n}: fused real output differs from barrier"
+            );
+            println!("N={n}: fused real output bit-exact vs barrier (max diff 0)");
+            let mut emb = embed_real(&rm);
+            dft2d_with_mode(&mut emb, Direction::Forward, threads, PipelineMode::Barrier);
+            let want = crop_to_packed(&emb);
+            let err = fused.max_abs_diff(&want) / want.norm().max(1.0);
+            assert!(err < 1e-9, "N={n}: r2c vs c2c oracle rel err {err}");
+            println!("N={n}: r2c output matches the c2c oracle (rel err {err:.3e})");
+            let back = irfft2d_with_mode(&fused, threads, PipelineMode::Fused);
+            let rerr = back.max_abs_diff(&rm) / rm.norm().max(1.0);
+            assert!(rerr < 1e-9, "N={n}: c2r∘r2c roundtrip rel err {rerr}");
+            println!("N={n}: c2r . r2c roundtrip exact (rel err {rerr:.3e})");
+        }
+
+        // one row *phase* of the 2D transform is half its flops; a rep
+        // here is a forward+inverse pair, i.e. two phases' worth
+        let row_pair_flops = fft2d_flops(n);
+
+        // c2c row phase: n complex rows of length n, fwd + inv
+        let mut c = SignalMatrix::random(n, n, n as u64 + 1);
+        suite.bench_flops(&format!("c2c_rows_{n}"), row_pair_flops, || {
+            NativeEngine
+                .fft_rows(&mut c.re, &mut c.im, n, n, Direction::Forward, threads)
+                .unwrap();
+            NativeEngine
+                .fft_rows(&mut c.re, &mut c.im, n, n, Direction::Inverse, threads)
+                .unwrap();
+        });
+
+        // r2c row phase: n real rows through the pair kernel, + c2r back
+        let mut dre = vec![0.0; n * nc];
+        let mut dim = vec![0.0; n * nc];
+        let mut back = vec![0.0; n * n];
+        suite.bench_flops(&format!("r2c_rows_{n}"), row_pair_flops / 2.0, || {
+            r2c_rows(ctx, &rm.data, &mut dre, &mut dim, n, n, n, threads);
+            c2r_rows(ctx, &dre, &dim, &mut back, n, n, threads);
+        });
+
+        // whole 2D transform, fwd + inv per rep — both sides reuse
+        // preallocated buffers so neither pays per-rep allocation the
+        // other does not
+        let mut m2 = SignalMatrix::random(n, n, n as u64 + 2);
+        suite.bench_flops(&format!("c2c2d_{n}"), 2.0 * fft2d_flops(n), || {
+            dft2d_with_mode(&mut m2, Direction::Forward, threads, PipelineMode::Fused);
+            dft2d_with_mode(&mut m2, Direction::Inverse, threads, PipelineMode::Fused);
+        });
+        let mut packed = SignalMatrix::zeros(n, nc);
+        let mut real_out = vec![0.0; n * n];
+        suite.bench_flops(&format!("rfft2d_{n}"), fft2d_flops(n), || {
+            r2c_rows(ctx, &rm.data, &mut packed.re, &mut packed.im, n, n, n, threads);
+            rfft_cols_fused(ctx, &mut packed, Direction::Forward, threads);
+            rfft_cols_fused(ctx, &mut packed, Direction::Inverse, threads);
+            c2r_rows(ctx, &packed.re, &packed.im, &mut real_out, n, n, threads);
+        });
+    }
+
+    println!("\n== r2c vs c2c ==");
+    for pair in suite.results.chunks(2) {
+        if let [c2c, r2c] = pair {
+            println!(
+                "{:>16} vs {:<16} speedup {:.2}x",
+                r2c.name,
+                c2c.name,
+                c2c.mean_s / r2c.mean_s
+            );
+        }
+    }
+    suite.write_json(Path::new("BENCH_real.json")).ok();
+    println!("{}", suite.report());
+}

@@ -1,0 +1,146 @@
+//! `perf-gate` — the CI performance-regression gate.
+//!
+//! The repo's two load-bearing speedups — the fused pipeline over the
+//! barrier four-step (PR 4) and the r2c real path over c2c (PR 5) —
+//! are *ratios of means measured in the same process on the same
+//! machine*, so they are comparable across runners in a way raw
+//! wall-clock numbers are not. This binary reads the bench
+//! trajectories (`BENCH_pipeline.json`, `BENCH_real.json`), recomputes
+//! each speedup, and fails (exit 1) if any drops below its committed
+//! baseline (`BENCH_baseline.json`) minus the noise tolerance — the
+//! 4-PR speedup trajectory cannot silently erode.
+//!
+//! Baseline format (committed at the repo root):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "tolerance": 0.15,
+//!   "metrics": [
+//!     {"name": "fused_vs_barrier_384", "suite": "pipeline",
+//!      "slow": "barrier_384", "fast": "fused_384", "baseline": 1.0},
+//!     {"name": "r2c_vs_c2c_rows_1152", "suite": "real",
+//!      "slow": "c2c_rows_1152", "fast": "r2c_rows_1152", "baseline": 1.75}
+//!   ]
+//! }
+//! ```
+//!
+//! `speedup = mean(slow) / mean(fast)`; the gate requires
+//! `speedup >= baseline * (1 - tolerance)`.
+//!
+//! Flags: `--baseline <file>` `--pipeline <file>` `--real <file>`
+//! `--tolerance <f>` (override) `--scale <f>` (multiply every measured
+//! speedup — `--scale 0.5` is the CI self-test proving the gate
+//! demonstrably fails on an injected regression).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use hclfft::cli;
+use hclfft::util::json::Json;
+
+fn main() {
+    // reuse the crate's CLI grammar by prepending a subcommand token
+    let mut argv: Vec<String> = vec!["perf-gate".to_string()];
+    argv.extend(std::env::args().skip(1));
+    let code = match run(&argv) {
+        Ok(true) => 0,
+        Ok(false) => 1,
+        Err(e) => {
+            eprintln!("perf-gate error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// name → mean seconds of one bench suite JSON.
+fn load_means(path: &Path) -> Result<BTreeMap<String, f64>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e} (run the benches first)", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut means = BTreeMap::new();
+    for r in j.get("results").and_then(Json::as_arr).ok_or("bench json: missing results")? {
+        let name = r.get("name").and_then(Json::as_str).ok_or("bench json: missing name")?;
+        let mean = r.get("mean_s").and_then(Json::as_f64).ok_or("bench json: missing mean_s")?;
+        means.insert(name.to_string(), mean);
+    }
+    Ok(means)
+}
+
+fn run(argv: &[String]) -> Result<bool, String> {
+    let args = cli::parse(argv)?;
+    args.validate(&["baseline", "pipeline", "real", "tolerance", "scale"])?;
+    let baseline_path = args.opt_or("baseline", "BENCH_baseline.json");
+    let pipeline_path = args.opt_or("pipeline", "BENCH_pipeline.json");
+    let real_path = args.opt_or("real", "BENCH_real.json");
+    let scale = args.opt_f64("scale")?.unwrap_or(1.0);
+
+    let text = std::fs::read_to_string(&baseline_path)
+        .map_err(|e| format!("cannot read {baseline_path}: {e}"))?;
+    let base = Json::parse(&text).map_err(|e| format!("{baseline_path}: {e}"))?;
+    let tolerance = args
+        .opt_f64("tolerance")?
+        .or_else(|| base.get("tolerance").and_then(Json::as_f64))
+        .unwrap_or(0.15);
+    if !(0.0..1.0).contains(&tolerance) {
+        return Err(format!("tolerance {tolerance} out of range [0, 1)"));
+    }
+
+    let mut suites: BTreeMap<&str, BTreeMap<String, f64>> = BTreeMap::new();
+    suites.insert("pipeline", load_means(Path::new(&pipeline_path))?);
+    suites.insert("real", load_means(Path::new(&real_path))?);
+
+    let metrics = base
+        .get("metrics")
+        .and_then(Json::as_arr)
+        .ok_or("baseline: missing metrics array")?;
+    if metrics.is_empty() {
+        return Err("baseline: empty metrics array".into());
+    }
+
+    println!(
+        "perf-gate: {} metric(s), tolerance {:.0}%{}",
+        metrics.len(),
+        tolerance * 100.0,
+        if scale != 1.0 { format!(", injected scale {scale}") } else { String::new() }
+    );
+    let mut ok = true;
+    for m in metrics {
+        let name = m.get("name").and_then(Json::as_str).ok_or("baseline: metric missing name")?;
+        let suite = m.get("suite").and_then(Json::as_str).ok_or("baseline: metric missing suite")?;
+        let slow = m.get("slow").and_then(Json::as_str).ok_or("baseline: metric missing slow")?;
+        let fast = m.get("fast").and_then(Json::as_str).ok_or("baseline: metric missing fast")?;
+        let baseline = m
+            .get("baseline")
+            .and_then(Json::as_f64)
+            .ok_or("baseline: metric missing baseline")?;
+        let means = suites
+            .get(suite)
+            .ok_or_else(|| format!("baseline: unknown suite `{suite}` for `{name}`"))?;
+        let (Some(&slow_s), Some(&fast_s)) = (means.get(slow), means.get(fast)) else {
+            println!("  FAIL {name}: bench result `{slow}` or `{fast}` missing from {suite} suite");
+            ok = false;
+            continue;
+        };
+        if !(slow_s.is_finite() && fast_s.is_finite()) || fast_s <= 0.0 {
+            println!("  FAIL {name}: degenerate means (slow {slow_s}, fast {fast_s})");
+            ok = false;
+            continue;
+        }
+        let speedup = slow_s / fast_s * scale;
+        let floor = baseline * (1.0 - tolerance);
+        let pass = speedup >= floor;
+        println!(
+            "  {} {name}: speedup {speedup:.3}x (baseline {baseline:.3}x, floor {floor:.3}x)",
+            if pass { "PASS" } else { "FAIL" }
+        );
+        ok &= pass;
+    }
+    if ok {
+        println!("perf-gate: OK — no speedup fell below baseline - {:.0}%", tolerance * 100.0);
+    } else {
+        println!("perf-gate: REGRESSION — at least one speedup fell below its floor");
+    }
+    Ok(ok)
+}

@@ -125,6 +125,9 @@ SUBCOMMANDS:
             fallback otherwise)
             --n <size> [--engine native|pjrt|sim] [--algo lb|fpm|fpm-pad|basic]
             [--p <groups>] [--t <threads>] [--artifacts <dir>] [--verify]
+            [--kind c2c|real]   (real = r2c: a real signal transforms via
+            the pair kernel into an N x (N/2+1) Hermitian-packed half
+            spectrum — roughly half the flops of c2c)
             [--pipeline fused|barrier]   (fused: tile stage-DAG, strided
             column FFTs, no transpose barriers — the default; barrier:
             the four-step fallback. Also via env HCLFFT_PIPELINE)
@@ -149,12 +152,15 @@ SUBCOMMANDS:
             [--wisdom <file.json>] [--no-wisdom] [--pad] [--starve <s>]
             [--budget <s>] [--seed <u64>] [--json <file.json>] [--no-json]
             [--pipeline fused|barrier]
+            [--kind c2c|real]   (real: r2c requests — batching, wisdom and
+            the online model are all keyed per kind; real engines only)
             [--drift-factor <x>]   (sim-* only: slow the virtual machine
             by x before the warm pass to exercise drift -> re-planning)
-  wisdom    Inspect or prewarm the planning wisdom store
+  wisdom    Inspect or prewarm the planning wisdom store (records are
+            kind-keyed; JSON v3, v2 files load as c2c)
             [--file <file.json>] [--prewarm <size[,size...]>]
             [--engine native|sim-mkl|...] [--p <groups>] [--t <threads>]
-            [--pad] [--budget <s>]
+            [--pad] [--budget <s>] [--kind c2c|real]
   model     Inspect the online performance model persisted alongside the
             wisdom: per-engine observation/drift summaries, refined
             points, and (with --engine and --n) the plane sections

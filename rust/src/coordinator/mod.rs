@@ -14,10 +14,16 @@
 //!   (native rust FFT, PJRT artifacts, or the virtual-time simulator).
 //! * [`pfft`] — the parallel 2D-DFT drivers: `PFFT-LB`, `PFFT-FPM`,
 //!   `PFFT-FPM-PAD` (Algorithms 1-5).
+//! * [`real`] — the real-input variants: planned r2c execution
+//!   (`pfft_fpm_real` / `pfft_fpm_pad_real`, the batched stage-DAG
+//!   executor) over Hermitian-packed `N×(N/2+1)` storage — roughly
+//!   half the flops of the c2c drivers for real-valued signals.
 //! * [`plan`] — [`plan::PlannedTransform`]: the reusable partition+pad
 //!   planning outcome the drivers execute and the serving layer's wisdom
-//!   store memoizes, plus its compiled [`plan::ExecPipeline`] form —
-//!   the tile schedule of the fused (transpose-free) execution path.
+//!   store memoizes (now carrying a
+//!   [`crate::dft::real::TransformKind`]), plus its compiled
+//!   [`plan::ExecPipeline`] form — the tile schedule of the fused
+//!   (transpose-free) execution path.
 
 pub mod dynamic;
 pub mod energy;
@@ -29,5 +35,6 @@ pub mod partition;
 pub mod pfft;
 pub mod pfft3d;
 pub mod plan;
+pub mod real;
 
 pub use plan::{ExecPipeline, PhaseTimings, PlannedTransform};

@@ -35,6 +35,13 @@ use crate::dft::transpose::transpose_in_place_parallel;
 use crate::dft::SignalMatrix;
 use crate::model::{PerfModel, SpeedFunction};
 
+// The real-input (r2c) variants of the drivers live in
+// [`crate::coordinator::real`]; re-exported here so the driver family
+// is importable from one place.
+pub use crate::coordinator::real::{
+    pfft_fpm_pad_real, pfft_fpm_pad_real_with_mode, pfft_fpm_real, pfft_fpm_real_with_mode,
+};
+
 /// What a driver run did (for reports and EXPERIMENTS.md records).
 #[derive(Clone, Debug)]
 pub struct PfftReport {
@@ -279,8 +286,9 @@ fn row_phase(
 /// Padded row FFTs (Algorithm 7 `1D_ROW_FFTS_LOCAL_PADDED`): copy the
 /// rows into a (rows × pad) zeroed work buffer leased from the calling
 /// thread's scratch arena, transform at length `pad`, copy the first
-/// `n` columns back.
-fn fft_rows_padded(
+/// `n` columns back. Shared with the real path's barrier column phase
+/// ([`crate::coordinator::real`]).
+pub(crate) fn fft_rows_padded(
     engine: &dyn RowFftEngine,
     re: &mut [f64],
     im: &mut [f64],

@@ -38,6 +38,7 @@ use crate::dft::pipeline::{
     default_mode, gather_col_tile, scatter_col_tile, PipelineMode, SendPtr, StageDag,
     DEFAULT_COL_TILE, DEFAULT_ROW_TILE,
 };
+use crate::dft::real::TransformKind;
 use crate::dft::SignalMatrix;
 use crate::model::{PerfModel, SpeedFunction, StaticModel};
 
@@ -55,6 +56,10 @@ pub struct PlannedTransform {
     /// predicted makespan in relative `x / s(x)` units (NaN when
     /// unavailable, e.g. the balanced fallback)
     pub makespan: f64,
+    /// which transform this plan targets (c2c or the real r2c plane —
+    /// real planes run ~2x faster, so their FPM surfaces and hence
+    /// their POPTA/HPOPTA partitions are measured and keyed separately)
+    pub kind: TransformKind,
 }
 
 impl PlannedTransform {
@@ -83,7 +88,16 @@ impl PlannedTransform {
             pads,
             algorithm: part.algorithm,
             makespan: part.makespan,
+            kind: TransformKind::C2c,
         })
+    }
+
+    /// Re-key this plan for another transform kind (builder style). The
+    /// partition math is kind-agnostic — what differs per kind is which
+    /// measured surfaces fed the model, which the caller controls.
+    pub fn with_kind(mut self, kind: TransformKind) -> PlannedTransform {
+        self.kind = kind;
+        self
     }
 
     /// [`PlannedTransform::from_model`] over raw measured surfaces
@@ -108,6 +122,7 @@ impl PlannedTransform {
             pads: trivial_pads(part.d.len(), n),
             algorithm: Algorithm::Balanced,
             makespan: f64::NAN,
+            kind: TransformKind::C2c,
         }
     }
 
@@ -149,6 +164,11 @@ impl PlannedTransform {
         transpose_block: usize,
         mode: PipelineMode,
     ) -> Result<PfftReport, EngineError> {
+        assert_eq!(
+            self.kind,
+            TransformKind::C2c,
+            "real-kind plans execute via coordinator::real, not the c2c drivers"
+        );
         if self.is_padded() {
             pfft_fpm_pad_with_mode(
                 engine,
@@ -174,18 +194,22 @@ impl PlannedTransform {
     /// Predicted execution seconds of the two row phases from the stored
     /// relative makespan: `x/s` units × `2.5·n·log2(n) / 1e6` converts to
     /// seconds (the constant the minimax cancelled out). Falls back to a
-    /// flat speed assumption when the makespan is unavailable.
+    /// flat speed assumption when the makespan is unavailable. Real-kind
+    /// plans: the makespan already reflects the real plane's measured
+    /// (~2x faster) surfaces, so only the flat fallback needs the
+    /// kind's flop factor.
     pub fn predicted_seconds(&self, fallback_mflops: f64) -> f64 {
         let n = self.n as f64;
         if self.makespan.is_finite() && self.makespan > 0.0 {
             2.0 * self.makespan * 2.5 * n * n.log2() / 1e6
         } else {
-            crate::stats::harness::fft2d_flops(self.n) / (fallback_mflops.max(1.0) * 1e6)
+            crate::stats::harness::fft2d_flops(self.n) * self.kind.flops_factor()
+                / (fallback_mflops.max(1.0) * 1e6)
         }
     }
 }
 
-fn trivial_pads(p: usize, n: usize) -> Vec<PadDecision> {
+pub(crate) fn trivial_pads(p: usize, n: usize) -> Vec<PadDecision> {
     vec![PadDecision { n_padded: n, t_unpadded: 0.0, t_padded: 0.0 }; p]
 }
 

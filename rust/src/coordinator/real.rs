@@ -1,0 +1,603 @@
+//! Engine-generic execution of planned **real-input** (r2c) 2D
+//! transforms — the coordinator face of [`crate::dft::real`].
+//!
+//! The c2c drivers execute a [`PlannedTransform`] in place over an
+//! `N×N` complex matrix; the real path is out-of-place by nature (an
+//! `N×N` real signal in, a Hermitian-packed `N×(N/2+1)` half spectrum
+//! out), so it gets its own executor built from the same pieces:
+//!
+//! * **row phase**: each group's row range runs the r2c pair kernel —
+//!   two real rows per complex FFT at the group's pad length (the tile
+//!   gather doubles as Algorithm 7's padded work matrix), tiled in
+//!   [`crate::dft::pipeline::DEFAULT_ROW_TILE`]-row steps so pairing is
+//!   identical under every execution strategy;
+//! * **column phase**: complex FFTs down the `N/2+1` *stored* columns
+//!   only — the packed layout halves phase-2 work too. Under
+//!   [`PipelineMode::Fused`] the column tiles of the plan's compiled
+//!   schedule are clipped to the packed width and run on the same
+//!   [`StageDag`] as the row tiles (one graph across a whole batch, no
+//!   phase barrier); under [`PipelineMode::Barrier`] the packed
+//!   rectangle is transposed out of place and the groups run padded row
+//!   FFTs over their clipped ranges. Both modes feed every logical
+//!   vector to the same kernel — outputs are bit-identical.
+//!
+//! [`pfft_fpm_real`] / [`pfft_fpm_pad_real`] are the real variants of
+//! the paper's drivers (re-exported from [`crate::coordinator::pfft`]);
+//! the serving layer batches through
+//! [`execute_real_batch_with_mode`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::engine::{EngineError, RowFftEngine};
+use crate::coordinator::group::row_offsets;
+use crate::coordinator::pad::PadDecision;
+use crate::coordinator::partition::Algorithm;
+use crate::coordinator::pfft::fft_rows_padded;
+use crate::coordinator::plan::{trivial_pads, PhaseTimings, PlannedTransform, TileSpec};
+use crate::dft::exec::{with_scratch, ExecCtx, Job};
+use crate::dft::fft::Direction;
+use crate::dft::pipeline::{
+    default_mode, gather_col_tile, scatter_col_tile, PipelineMode, SendPtr, StageDag,
+};
+use crate::dft::real::{half_cols, pack_pairs_tile, unpack_pairs_tile, RealMatrix, TransformKind};
+use crate::dft::transpose::transposed;
+use crate::dft::SignalMatrix;
+
+/// One r2c row tile over an arbitrary engine: pack the tile's row pairs
+/// into leased scratch at stride `v`, one engine call over the pairs,
+/// Hermitian unpack into the packed dst rows.
+#[allow(clippy::too_many_arguments)]
+pub fn r2c_tile_engine(
+    engine: &dyn RowFftEngine,
+    src_tile: &[f64],
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+    rows: usize,
+    n: usize,
+    v: usize,
+    threads: usize,
+) -> Result<(), EngineError> {
+    let nc = half_cols(n);
+    with_scratch(|s| {
+        let pairs = rows.div_ceil(2);
+        let (wre, wim) = s.pair(pairs * v);
+        pack_pairs_tile(src_tile, rows, n, v, wre, wim);
+        engine.fft_rows(wre, wim, pairs, v, Direction::Forward, threads)?;
+        unpack_pairs_tile(wre, wim, rows, nc, v, dst_re, dst_im);
+        Ok(())
+    })
+}
+
+/// r2c row phase over a contiguous row range of an arbitrary engine:
+/// [`crate::dft::pipeline::DEFAULT_ROW_TILE`]-row tiles (an even count,
+/// so pairing never depends on how the range is later split), serial
+/// tile loop with the engine's own `threads` parallelism per call. The
+/// profiler measures real-plane FPM surfaces through this entry point.
+#[allow(clippy::too_many_arguments)]
+pub fn r2c_rows_engine(
+    engine: &dyn RowFftEngine,
+    src: &[f64],
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+    rows: usize,
+    n: usize,
+    v: usize,
+    threads: usize,
+) -> Result<(), EngineError> {
+    let nc = half_cols(n);
+    debug_assert_eq!(src.len(), rows * n);
+    debug_assert_eq!(dst_re.len(), rows * nc);
+    let tile = crate::dft::pipeline::DEFAULT_ROW_TILE;
+    let mut re_rest: &mut [f64] = dst_re;
+    let mut im_rest: &mut [f64] = dst_im;
+    let mut r = 0usize;
+    while r < rows {
+        let len = tile.min(rows - r);
+        let (re_t, re_next) = re_rest.split_at_mut(len * nc);
+        let (im_t, im_next) = im_rest.split_at_mut(len * nc);
+        re_rest = re_next;
+        im_rest = im_next;
+        r2c_tile_engine(engine, &src[r * n..(r + len) * n], re_t, im_t, len, n, v, threads)?;
+        r += len;
+    }
+    Ok(())
+}
+
+/// A read-only raw plane pointer shared across pipeline tasks. SAFETY
+/// contract: the pointee is only ever *read* through this pointer, and
+/// the borrow it was created from outlives the scheduler run.
+#[derive(Clone, Copy)]
+struct SendConstPtr(*const f64);
+// SAFETY: see the contract above — read-only access to a live borrow.
+unsafe impl Send for SendConstPtr {}
+
+/// Execute a planned real forward transform over a batch of matrices:
+/// `srcs[i]` is the i-th `n×n` real signal (row-major), `dsts[i]` the
+/// caller-allocated `n×(n/2+1)` packed output. Returns the per-phase
+/// timings the serving executor feeds into the online model.
+pub fn execute_real_batch_with_mode(
+    engine: &dyn RowFftEngine,
+    plan: &PlannedTransform,
+    srcs: &[&[f64]],
+    dsts: &mut [&mut SignalMatrix],
+    threads_per_group: usize,
+    mode: PipelineMode,
+) -> Result<PhaseTimings, EngineError> {
+    let n = plan.n;
+    let nc = half_cols(n);
+    assert_eq!(
+        plan.kind.plan_kind(),
+        TransformKind::R2c,
+        "c2c plans execute via the c2c batch executor"
+    );
+    assert_eq!(srcs.len(), dsts.len(), "src/dst batch arity mismatch");
+    assert_eq!(plan.d.iter().sum::<usize>(), n, "plan distribution must cover all rows");
+    for s in srcs {
+        assert_eq!(s.len(), n * n, "real input must be n*n row-major");
+    }
+    for d in dsts.iter() {
+        assert_eq!((d.rows, d.cols), (n, nc), "packed output must be n x (n/2+1)");
+    }
+    if srcs.is_empty() || n == 0 {
+        return Ok(PhaseTimings::default());
+    }
+    let workers = plan.groups().max(1) * threads_per_group.max(1);
+    match mode {
+        PipelineMode::Fused => fused_real_batch(engine, plan, srcs, dsts, workers),
+        PipelineMode::Barrier => barrier_real_batch(engine, plan, srcs, dsts, threads_per_group),
+    }
+}
+
+/// One packed column tile: transpose-gather columns `[start, start+len)`
+/// of the `n × nc` packed planes into scratch rows of length `fft_len`
+/// (zero tail = stride-choice padding), one engine call, scatter the
+/// first `n` spectrum points back.
+fn col_tile_ffts_packed(
+    engine: &dyn RowFftEngine,
+    re: SendPtr,
+    im: SendPtr,
+    rows: usize,
+    stride: usize,
+    tile: TileSpec,
+) -> Result<(), EngineError> {
+    let (c0, w, v) = (tile.start, tile.len, tile.fft_len);
+    with_scratch(|scratch| {
+        let (wre, wim) = scratch.pair(w * v);
+        // SAFETY: the DAG schedules this task strictly after every row
+        // tile of its matrix, column tiles own pairwise-disjoint column
+        // sets, and the caller holds the plane borrows until the DAG
+        // run returns.
+        unsafe { gather_col_tile(re, im, rows, stride, c0, c0 + w, v, wre, wim) };
+        engine.fft_rows(wre, wim, w, v, Direction::Forward, 1)?;
+        unsafe { scatter_col_tile(re, im, rows, stride, c0, c0 + w, v, wre, wim) };
+        Ok(())
+    })
+}
+
+fn fused_real_batch(
+    engine: &dyn RowFftEngine,
+    plan: &PlannedTransform,
+    srcs: &[&[f64]],
+    dsts: &mut [&mut SignalMatrix],
+    workers: usize,
+) -> Result<PhaseTimings, EngineError> {
+    let n = plan.n;
+    let nc = half_cols(n);
+    // compile the c2c tile schedule, then clip the column tiles to the
+    // packed width: only the stored columns exist
+    let pipe = plan.pipeline();
+    let col_tiles: Vec<TileSpec> = pipe
+        .col_tiles
+        .iter()
+        .filter(|t| t.start < nc)
+        .map(|t| TileSpec { start: t.start, len: t.len.min(nc - t.start), fft_len: t.fft_len })
+        .collect();
+
+    let errors: Mutex<Vec<EngineError>> = Mutex::new(Vec::new());
+    let row_ns = AtomicU64::new(0);
+    let col_ns = AtomicU64::new(0);
+
+    let mats: Vec<(SendConstPtr, SendPtr, SendPtr)> = srcs
+        .iter()
+        .zip(dsts.iter_mut())
+        .map(|(s, d)| {
+            let dd: &mut SignalMatrix = &mut **d;
+            (SendConstPtr(s.as_ptr()), SendPtr(dd.re.as_mut_ptr()), SendPtr(dd.im.as_mut_ptr()))
+        })
+        .collect();
+
+    let mut dag = StageDag::new();
+    for &(sp, dre, dim) in &mats {
+        let mut row_ids = Vec::with_capacity(pipe.row_tiles.len());
+        for &tile in &pipe.row_tiles {
+            let errors = &errors;
+            let row_ns = &row_ns;
+            row_ids.push(dag.add(move || {
+                // rebind the wrappers whole (2021 precise capture)
+                let (sp, dre, dim) = (sp, dre, dim);
+                // SAFETY: row tiles materialize `&mut` over their OWN
+                // disjoint packed row ranges only (tiles partition the
+                // rows; distinct matrices use distinct buffers); the
+                // source plane is only read; column tasks are ordered
+                // strictly after every row tile by DAG edges; run()
+                // returns only after all tasks end, so the borrows the
+                // pointers came from outlive every access.
+                let (src_t, re_t, im_t) = unsafe {
+                    (
+                        std::slice::from_raw_parts(sp.0.add(tile.start * n), tile.len * n),
+                        std::slice::from_raw_parts_mut(dre.0.add(tile.start * nc), tile.len * nc),
+                        std::slice::from_raw_parts_mut(dim.0.add(tile.start * nc), tile.len * nc),
+                    )
+                };
+                let t0 = Instant::now();
+                let r = r2c_tile_engine(engine, src_t, re_t, im_t, tile.len, n, tile.fft_len, 1);
+                row_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                if let Err(e) = r {
+                    errors.lock().unwrap().push(e);
+                }
+            }));
+        }
+        // a no-op join keeps the edge count O(R + C), not R·C
+        let join = dag.add(|| {});
+        for id in row_ids {
+            dag.add_edge(id, join);
+        }
+        for &tile in &col_tiles {
+            let errors = &errors;
+            let col_ns = &col_ns;
+            let cid = dag.add(move || {
+                let (dre, dim) = (dre, dim);
+                let t0 = Instant::now();
+                let r = col_tile_ffts_packed(engine, dre, dim, n, nc, tile);
+                col_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                if let Err(e) = r {
+                    errors.lock().unwrap().push(e);
+                }
+            });
+            dag.add_edge(join, cid);
+        }
+    }
+    dag.run(ExecCtx::global(), workers);
+
+    match errors.into_inner().unwrap().into_iter().next() {
+        Some(e) => Err(e),
+        None => Ok(PhaseTimings {
+            row_s: row_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+            col_s: col_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        }),
+    }
+}
+
+fn barrier_real_batch(
+    engine: &dyn RowFftEngine,
+    plan: &PlannedTransform,
+    srcs: &[&[f64]],
+    dsts: &mut [&mut SignalMatrix],
+    threads_per_group: usize,
+) -> Result<PhaseTimings, EngineError> {
+    let n = plan.n;
+    let nc = half_cols(n);
+    let d = &plan.d;
+    let pad_lens = plan.pad_lens();
+    let offsets = row_offsets(d);
+    let mut row_s = 0.0;
+    let mut col_s = 0.0;
+
+    for (src, dst) in srcs.iter().zip(dsts.iter_mut()) {
+        let t0 = Instant::now();
+        // row phase: per-group jobs over disjoint packed row slices —
+        // the same 32-row tiling (hence the same pairing) as the fused
+        // path, so the two modes stay bit-identical
+        {
+            let dd: &mut SignalMatrix = &mut **dst;
+            let mut re_rest: &mut [f64] = &mut dd.re;
+            let mut im_rest: &mut [f64] = &mut dd.im;
+            let mut slices: Vec<(&mut [f64], &mut [f64])> = Vec::with_capacity(d.len());
+            for i in 0..d.len() {
+                let len = (offsets[i + 1] - offsets[i]) * nc;
+                let (re_here, re_next) = re_rest.split_at_mut(len);
+                let (im_here, im_next) = im_rest.split_at_mut(len);
+                re_rest = re_next;
+                im_rest = im_next;
+                slices.push((re_here, im_here));
+            }
+            let errors: Mutex<Vec<EngineError>> = Mutex::new(Vec::new());
+            let mut jobs: Vec<Job> = Vec::with_capacity(d.len());
+            for (i, (re, im)) in slices.into_iter().enumerate() {
+                let rows = d[i];
+                if rows == 0 {
+                    continue;
+                }
+                let v = pad_lens[i];
+                let off = offsets[i];
+                let errors = &errors;
+                let src: &[f64] = src;
+                jobs.push(Box::new(move || {
+                    let r = r2c_rows_engine(
+                        engine,
+                        &src[off * n..(off + rows) * n],
+                        re,
+                        im,
+                        rows,
+                        n,
+                        v,
+                        threads_per_group,
+                    );
+                    if let Err(e) = r {
+                        errors.lock().unwrap().push(e);
+                    }
+                }));
+            }
+            ExecCtx::global().run_jobs(jobs);
+            if let Some(e) = errors.into_inner().unwrap().into_iter().next() {
+                return Err(e);
+            }
+        }
+        row_s += t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        // column phase: transpose the packed rectangle out of place,
+        // per-group (clipped to the packed width) padded row FFTs over
+        // the transposed rows — the stored columns — transpose back
+        let mut t = transposed(&**dst);
+        {
+            let errors: Mutex<Vec<EngineError>> = Mutex::new(Vec::new());
+            let mut re_rest: &mut [f64] = &mut t.re;
+            let mut im_rest: &mut [f64] = &mut t.im;
+            let mut carved = 0usize;
+            let mut jobs: Vec<Job> = Vec::new();
+            for i in 0..d.len() {
+                let start_c = offsets[i].min(nc);
+                let end_c = (offsets[i] + d[i]).min(nc);
+                if end_c <= start_c {
+                    continue;
+                }
+                debug_assert_eq!(carved, start_c, "clipped group ranges must tile [0, nc)");
+                let rows_c = end_c - start_c;
+                let (re_here, re_next) = re_rest.split_at_mut(rows_c * n);
+                let (im_here, im_next) = im_rest.split_at_mut(rows_c * n);
+                re_rest = re_next;
+                im_rest = im_next;
+                carved = end_c;
+                let v = pad_lens[i];
+                let errors = &errors;
+                jobs.push(Box::new(move || {
+                    let r = if v == n {
+                        engine.fft_rows(
+                            re_here,
+                            im_here,
+                            rows_c,
+                            n,
+                            Direction::Forward,
+                            threads_per_group,
+                        )
+                    } else {
+                        fft_rows_padded(engine, re_here, im_here, rows_c, n, v, threads_per_group)
+                    };
+                    if let Err(e) = r {
+                        errors.lock().unwrap().push(e);
+                    }
+                }));
+            }
+            ExecCtx::global().run_jobs(jobs);
+            if let Some(e) = errors.into_inner().unwrap().into_iter().next() {
+                return Err(e);
+            }
+        }
+        **dst = transposed(&t);
+        col_s += t0.elapsed().as_secs_f64();
+    }
+    Ok(PhaseTimings { row_s, col_s })
+}
+
+/// Execute a planned real transform over one matrix, allocating the
+/// packed output.
+pub fn rfft_planned_with_mode(
+    engine: &dyn RowFftEngine,
+    plan: &PlannedTransform,
+    src: &RealMatrix,
+    threads_per_group: usize,
+    mode: PipelineMode,
+) -> Result<SignalMatrix, EngineError> {
+    assert_eq!((src.rows, src.cols), (plan.n, plan.n), "square real input required");
+    let mut out = SignalMatrix::zeros(plan.n, half_cols(plan.n));
+    {
+        let srcs: Vec<&[f64]> = vec![&src.data[..]];
+        let mut dst_refs: Vec<&mut SignalMatrix> = vec![&mut out];
+        execute_real_batch_with_mode(engine, plan, &srcs, &mut dst_refs, threads_per_group, mode)?;
+    }
+    Ok(out)
+}
+
+/// PFFT-FPM over a real signal: FPM-optimal distribution `d`, exact row
+/// length, Hermitian-packed output. The real variant of
+/// [`crate::coordinator::pfft::pfft_fpm`].
+pub fn pfft_fpm_real_with_mode(
+    engine: &dyn RowFftEngine,
+    src: &RealMatrix,
+    d: &[usize],
+    threads_per_group: usize,
+    mode: PipelineMode,
+) -> Result<SignalMatrix, EngineError> {
+    let n = src.rows;
+    let plan = PlannedTransform {
+        n,
+        d: d.to_vec(),
+        pads: trivial_pads(d.len(), n),
+        // label only — the caller supplied d, whatever produced it
+        algorithm: Algorithm::Balanced,
+        makespan: f64::NAN,
+        kind: TransformKind::R2c,
+    };
+    rfft_planned_with_mode(engine, &plan, src, threads_per_group, mode)
+}
+
+/// [`pfft_fpm_real_with_mode`] under the process-wide default mode.
+pub fn pfft_fpm_real(
+    engine: &dyn RowFftEngine,
+    src: &RealMatrix,
+    d: &[usize],
+    threads_per_group: usize,
+) -> Result<SignalMatrix, EngineError> {
+    pfft_fpm_real_with_mode(engine, src, d, threads_per_group, default_mode())
+}
+
+/// PFFT-FPM-PAD over a real signal: per-group padded pair FFTs (the
+/// forward-only spectral-interpolation semantics of the c2c driver,
+/// halved). The real variant of
+/// [`crate::coordinator::pfft::pfft_fpm_pad`].
+pub fn pfft_fpm_pad_real_with_mode(
+    engine: &dyn RowFftEngine,
+    src: &RealMatrix,
+    d: &[usize],
+    pads: &[PadDecision],
+    threads_per_group: usize,
+    mode: PipelineMode,
+) -> Result<SignalMatrix, EngineError> {
+    let n = src.rows;
+    let plan = PlannedTransform {
+        n,
+        d: d.to_vec(),
+        pads: pads.to_vec(),
+        algorithm: Algorithm::Balanced,
+        makespan: f64::NAN,
+        kind: TransformKind::R2c,
+    };
+    rfft_planned_with_mode(engine, &plan, src, threads_per_group, mode)
+}
+
+/// [`pfft_fpm_pad_real_with_mode`] under the process-wide default mode.
+pub fn pfft_fpm_pad_real(
+    engine: &dyn RowFftEngine,
+    src: &RealMatrix,
+    d: &[usize],
+    pads: &[PadDecision],
+    threads_per_group: usize,
+) -> Result<SignalMatrix, EngineError> {
+    pfft_fpm_pad_real_with_mode(engine, src, d, pads, threads_per_group, default_mode())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::NativeEngine;
+    use crate::dft::dft2d::dft2d_with_mode;
+    use crate::dft::real::{crop_to_packed, embed_real};
+
+    fn oracle_packed(m: &RealMatrix) -> SignalMatrix {
+        let mut full = embed_real(m);
+        dft2d_with_mode(&mut full, Direction::Forward, 1, PipelineMode::Barrier);
+        crop_to_packed(&full)
+    }
+
+    #[test]
+    fn planned_real_matches_oracle_and_modes_bitwise() {
+        let n = 48;
+        let m = RealMatrix::random(n, n, 3);
+        let d = vec![20usize, 17, 11]; // imbalanced FPM-style distribution
+        let fused = pfft_fpm_real_with_mode(&NativeEngine, &m, &d, 2, PipelineMode::Fused).unwrap();
+        let barrier =
+            pfft_fpm_real_with_mode(&NativeEngine, &m, &d, 2, PipelineMode::Barrier).unwrap();
+        assert_eq!(fused.max_abs_diff(&barrier), 0.0, "fused must be bit-exact vs barrier");
+        let want = oracle_packed(&m);
+        let err = fused.max_abs_diff(&want) / want.norm().max(1.0);
+        assert!(err < 1e-9, "rel err {err}");
+    }
+
+    #[test]
+    fn padded_real_matches_padded_c2c_oracle() {
+        let n = 48;
+        let m = RealMatrix::random(n, n, 5);
+        let d = vec![28usize, 20];
+        let pads = vec![
+            PadDecision { n_padded: n, t_unpadded: 1.0, t_padded: 1.0 },
+            PadDecision { n_padded: 60, t_unpadded: 1.0, t_padded: 0.5 },
+        ];
+        let fused =
+            pfft_fpm_pad_real_with_mode(&NativeEngine, &m, &d, &pads, 1, PipelineMode::Fused)
+                .unwrap();
+        let barrier =
+            pfft_fpm_pad_real_with_mode(&NativeEngine, &m, &d, &pads, 1, PipelineMode::Barrier)
+                .unwrap();
+        assert_eq!(fused.max_abs_diff(&barrier), 0.0, "padded fused must be bit-exact");
+        // c2c oracle: the padded complex driver on the embedded input,
+        // cropped to the stored columns
+        let mut full = embed_real(&m);
+        crate::coordinator::pfft::pfft_fpm_pad_with_mode(
+            &NativeEngine,
+            &mut full,
+            &d,
+            &pads,
+            1,
+            64,
+            PipelineMode::Barrier,
+        )
+        .unwrap();
+        let want = crop_to_packed(&full);
+        let err = fused.max_abs_diff(&want) / want.norm().max(1.0);
+        assert!(err < 1e-9, "rel err {err}");
+    }
+
+    #[test]
+    fn batch_matches_singles_bitwise() {
+        let n = 32;
+        let d = vec![18usize, 14];
+        let plan = PlannedTransform {
+            n,
+            d: d.clone(),
+            pads: trivial_pads(2, n),
+            algorithm: Algorithm::Balanced,
+            makespan: f64::NAN,
+            kind: TransformKind::R2c,
+        };
+        let ms: Vec<RealMatrix> = (0..3).map(|s| RealMatrix::random(n, n, 60 + s)).collect();
+        let singles: Vec<SignalMatrix> = ms
+            .iter()
+            .map(|m| {
+                rfft_planned_with_mode(&NativeEngine, &plan, m, 1, PipelineMode::Fused).unwrap()
+            })
+            .collect();
+        let mut outs: Vec<SignalMatrix> =
+            (0..3).map(|_| SignalMatrix::zeros(n, half_cols(n))).collect();
+        {
+            let srcs: Vec<&[f64]> = ms.iter().map(|m| &m.data[..]).collect();
+            let mut dst_refs: Vec<&mut SignalMatrix> = outs.iter_mut().collect();
+            let t = execute_real_batch_with_mode(
+                &NativeEngine,
+                &plan,
+                &srcs,
+                &mut dst_refs,
+                2,
+                PipelineMode::Fused,
+            )
+            .unwrap();
+            assert!(t.row_s >= 0.0 && t.col_s >= 0.0);
+        }
+        for (b, s) in outs.iter().zip(&singles) {
+            assert_eq!(b.max_abs_diff(s), 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_row_groups_allowed() {
+        let n = 16;
+        let m = RealMatrix::random(n, n, 4);
+        let got =
+            pfft_fpm_real_with_mode(&NativeEngine, &m, &[0, 16, 0], 1, PipelineMode::Fused)
+                .unwrap();
+        let want = oracle_packed(&m);
+        let err = got.max_abs_diff(&want) / want.norm().max(1.0);
+        assert!(err < 1e-9, "rel err {err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "c2c plans execute")]
+    fn c2c_plan_rejected() {
+        let n = 8;
+        let m = RealMatrix::random(n, n, 1);
+        let plan = PlannedTransform::balanced_fallback(2, n);
+        let _ = rfft_planned_with_mode(&NativeEngine, &plan, &m, 1, PipelineMode::Fused);
+    }
+}

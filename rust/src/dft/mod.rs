@@ -30,6 +30,11 @@
 //!   transpose into scratch) that replace the global transpose
 //!   barriers; the barrier path survives as
 //!   [`pipeline::PipelineMode::Barrier`],
+//! * [`real`] — the real-input (r2c / c2r) path: two real rows packed
+//!   into one complex FFT (Hermitian unpack), `N×(N/2+1)` packed
+//!   half-spectrum storage, fused tile schedules for the packed column
+//!   phase — roughly half the flops and memory traffic of c2c for the
+//!   dominant real-valued workloads,
 //! * [`dft2d`] — the row-column 2D-DFT driver with thread groups.
 //!
 //! Layout is SoA split planes (`re`, `im` as separate slices), matching
@@ -44,6 +49,7 @@ pub mod fft;
 pub mod pipeline;
 pub mod plan;
 pub mod radix;
+pub mod real;
 pub mod transpose;
 
 /// A complex matrix in SoA split-plane layout, row-major.
@@ -65,6 +71,17 @@ impl SignalMatrix {
         let mut rng = crate::util::prng::Xoshiro256::seeded(seed);
         let mut m = SignalMatrix::zeros(rows, cols);
         for v in m.re.iter_mut().chain(m.im.iter_mut()) {
+            *v = rng.next_f64() * 2.0 - 1.0;
+        }
+        m
+    }
+
+    /// Deterministic random *real* matrix (zero imaginary plane) — the
+    /// r2c request payload for tests/benches.
+    pub fn random_real(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = crate::util::prng::Xoshiro256::seeded(seed);
+        let mut m = SignalMatrix::zeros(rows, cols);
+        for v in m.re.iter_mut() {
             *v = rng.next_f64() * 2.0 - 1.0;
         }
         m

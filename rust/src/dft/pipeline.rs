@@ -96,6 +96,23 @@ pub fn set_default_mode(mode: PipelineMode) {
     DEFAULT_MODE.store(v, Ordering::Relaxed);
 }
 
+/// Resolve a raw `HCLFFT_PIPELINE` value: parse it, or warn to stderr
+/// (the same contract as `ExecCtx::global()`'s `HCLFFT_POOL_THREADS`
+/// warning — a silently ignored override would misreport every
+/// pipeline A/B built on top of it) and fall back to the fused default.
+/// Factored out of [`default_mode`] so the fallback path is unit-
+/// testable without racing on the process-global cache or the ambient
+/// environment.
+fn mode_from_env_value(v: &str) -> PipelineMode {
+    PipelineMode::parse(v).unwrap_or_else(|| {
+        eprintln!(
+            "warning: HCLFFT_PIPELINE=`{v}` is not `fused` or `barrier`; \
+             using the fused pipeline"
+        );
+        PipelineMode::Fused
+    })
+}
+
 /// The current process default: an explicit [`set_default_mode`] value,
 /// else `HCLFFT_PIPELINE` (fused|barrier) from the environment, else
 /// fused. Unparsable env values warn once and fall back to fused.
@@ -105,13 +122,7 @@ pub fn default_mode() -> PipelineMode {
         MODE_BARRIER => PipelineMode::Barrier,
         _ => {
             let mode = match std::env::var("HCLFFT_PIPELINE") {
-                Ok(v) => PipelineMode::parse(&v).unwrap_or_else(|| {
-                    eprintln!(
-                        "warning: HCLFFT_PIPELINE=`{v}` is not `fused` or `barrier`; \
-                         using the fused pipeline"
-                    );
-                    PipelineMode::Fused
-                }),
+                Ok(v) => mode_from_env_value(&v),
                 Err(_) => PipelineMode::Fused,
             };
             set_default_mode(mode);
@@ -409,29 +420,51 @@ pub fn fft_col_range(
 pub fn fft_cols_fused(ctx: &ExecCtx, m: &mut SignalMatrix, dir: Direction, threads: usize) {
     assert_eq!(m.rows, m.cols, "square signal matrix required");
     let n = m.rows;
-    if n == 0 {
+    fft_cols_fused_rect(ctx, &mut m.re, &mut m.im, n, n, n, dir, threads);
+}
+
+/// Rectangle-general fused column phase: FFT every column of a
+/// `rows × cols` row-major split-plane region at length
+/// `fft_len >= rows` (zero-tail stride padding), as
+/// [`DEFAULT_COL_TILE`]-wide tiles chunked over at most `threads` pool
+/// jobs. [`fft_cols_fused`] is the square case; the packed real path
+/// calls this with `cols = n/2+1`
+/// ([`crate::dft::real::rfft_cols_fused`]).
+#[allow(clippy::too_many_arguments)]
+pub fn fft_cols_fused_rect(
+    ctx: &ExecCtx,
+    re: &mut [f64],
+    im: &mut [f64],
+    rows: usize,
+    cols: usize,
+    fft_len: usize,
+    dir: Direction,
+    threads: usize,
+) {
+    debug_assert!(fft_len >= rows);
+    debug_assert!(re.len() >= rows * cols && im.len() >= rows * cols);
+    if rows == 0 || cols == 0 {
         return;
     }
     let threads = threads.max(1);
-    if threads == 1 || n <= DEFAULT_COL_TILE {
-        let (re, im) = (&mut m.re[..], &mut m.im[..]);
+    if threads == 1 || cols <= DEFAULT_COL_TILE {
         let mut c = 0;
-        while c < n {
-            let hi = (c + DEFAULT_COL_TILE).min(n);
-            fft_col_range(ctx, re, im, n, n, c, hi, n, dir);
+        while c < cols {
+            let hi = (c + DEFAULT_COL_TILE).min(cols);
+            fft_col_range(ctx, re, im, rows, cols, c, hi, fft_len, dir);
             c = hi;
         }
         return;
     }
-    let mut tiles: Vec<(usize, usize)> = Vec::with_capacity(n.div_ceil(DEFAULT_COL_TILE));
+    let mut tiles: Vec<(usize, usize)> = Vec::with_capacity(cols.div_ceil(DEFAULT_COL_TILE));
     let mut c = 0;
-    while c < n {
-        let hi = (c + DEFAULT_COL_TILE).min(n);
+    while c < cols {
+        let hi = (c + DEFAULT_COL_TILE).min(cols);
         tiles.push((c, hi));
         c = hi;
     }
-    let re_ptr = SendPtr(m.re.as_mut_ptr());
-    let im_ptr = SendPtr(m.im.as_mut_ptr());
+    let re_ptr = SendPtr(re.as_mut_ptr());
+    let im_ptr = SendPtr(im.as_mut_ptr());
     let per_job = tiles.len().div_ceil(threads.min(tiles.len()));
     let mut jobs: Vec<Job> = Vec::with_capacity(tiles.len().div_ceil(per_job));
     for chunk in tiles.chunks(per_job) {
@@ -441,14 +474,18 @@ pub fn fft_cols_fused(ctx: &ExecCtx, m: &mut SignalMatrix, dir: Direction, threa
             let (re_ptr, im_ptr) = (re_ptr, im_ptr);
             for &(c0, hi) in chunk {
                 with_scratch(|scratch| {
-                    let (wre, wim) = scratch.pair((hi - c0) * n);
+                    let (wre, wim) = scratch.pair((hi - c0) * fft_len);
                     // SAFETY: jobs own disjoint column sets, access is
                     // raw-pointer per element (no overlapping `&mut`
                     // slices), and run_jobs does not return before
                     // every job finished.
-                    unsafe { gather_col_tile(re_ptr, im_ptr, n, n, c0, hi, n, wre, wim) };
-                    fft_rows_pooled(ctx, wre, wim, hi - c0, n, dir, 1);
-                    unsafe { scatter_col_tile(re_ptr, im_ptr, n, n, c0, hi, n, wre, wim) };
+                    unsafe {
+                        gather_col_tile(re_ptr, im_ptr, rows, cols, c0, hi, fft_len, wre, wim)
+                    };
+                    fft_rows_pooled(ctx, wre, wim, hi - c0, fft_len, dir, 1);
+                    unsafe {
+                        scatter_col_tile(re_ptr, im_ptr, rows, cols, c0, hi, fft_len, wre, wim)
+                    };
                 });
             }
         }));
@@ -470,6 +507,19 @@ mod tests {
         assert_eq!(PipelineMode::parse("nope"), None);
         assert_eq!(PipelineMode::Fused.name(), "fused");
         assert_eq!(PipelineMode::Barrier.name(), "barrier");
+    }
+
+    #[test]
+    fn unparsable_env_value_warns_and_falls_back_to_fused() {
+        // regression: an unparsable HCLFFT_PIPELINE must take the same
+        // warn-to-stderr fallback route as a bad HCLFFT_POOL_THREADS —
+        // never a silent mode flip. The helper is exercised directly so
+        // this test cannot race the process-global mode cache.
+        assert_eq!(mode_from_env_value("bogus"), PipelineMode::Fused);
+        assert_eq!(mode_from_env_value(""), PipelineMode::Fused);
+        // parsable values pass through untouched (incl. whitespace/case)
+        assert_eq!(mode_from_env_value("barrier"), PipelineMode::Barrier);
+        assert_eq!(mode_from_env_value(" FUSED "), PipelineMode::Fused);
     }
 
     #[test]

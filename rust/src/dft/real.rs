@@ -1,0 +1,779 @@
+//! Real-input (r2c / c2r) transforms over the native substrate.
+//!
+//! The dominant production workloads — images, sensor grids, spectral
+//! solvers — are real-valued, and a real signal's spectrum is Hermitian
+//! (`F[-k] = conj(F[k])`): half of a complex transform's work and
+//! storage is redundant. This module makes the real case first-class:
+//!
+//! * **r2c row kernel** ([`r2c_rows`]): two real rows pack into *one*
+//!   complex FFT (row a → re plane, row b → im plane of a single
+//!   length-v vector); the Hermitian unpack
+//!   `A[k] = (Z[k] + conj(Z[v-k]))/2`, `B[k] = (Z[k] - conj(Z[v-k]))/2i`
+//!   separates the two spectra afterwards. One complex FFT per *pair*
+//!   of rows — roughly half the row-phase flops of the c2c path.
+//! * **Hermitian-packed storage**: an `N×N` real transform stores only
+//!   the non-redundant half-spectrum columns `0..N/2+1` — a plain
+//!   [`SignalMatrix`] of shape `N × (N/2+1)` ([`half_cols`]); the full
+//!   `N×N` spectrum is recoverable via [`expand_packed`].
+//! * **packed column phase** ([`rfft_cols_fused`]): plain complex FFTs
+//!   down the `N/2+1` stored columns, executed as the fused pipeline's
+//!   strided tiles (per-tile transpose-gather into pooled scratch — the
+//!   same access pattern as [`crate::dft::pipeline::fft_col_range`],
+//!   at the packed stride). The barrier fallback transposes the packed
+//!   rectangle out of place instead; both modes feed every logical
+//!   column vector to the same kernel, so they are bit-identical.
+//! * **c2r inverse** ([`c2r_rows`], [`irfft2d`]): inverse column FFTs,
+//!   then the inverse pair trick — two Hermitian half-spectra rows
+//!   re-combine into one complex inverse FFT whose re/im planes are the
+//!   two real rows. `irfft2d(rfft2d(x)) == x` up to rounding.
+//!
+//! Pairing is **per tile** ([`crate::dft::pipeline::DEFAULT_ROW_TILE`]
+//! rows, an even count): every execution strategy — serial, pooled,
+//! stage-DAG, any worker count — packs identical row pairs, which is
+//! what makes fused and barrier real pipelines bit-identical. Padded
+//! plans run the pair FFT at the group's pad length `v > n` and keep
+//! the first `n/2+1` bins — the same forward-only spectral
+//! interpolation semantics as the c2c PFFT-FPM-PAD row phase.
+
+use crate::dft::exec::{fft_rows_pooled, with_scratch, ExecCtx, Job};
+use crate::dft::fft::Direction;
+use crate::dft::pipeline::{default_mode, fft_cols_fused_rect, PipelineMode, DEFAULT_ROW_TILE};
+use crate::dft::transpose::transposed;
+use crate::dft::SignalMatrix;
+
+// ---------------------------------------------------------------------------
+// Transform kinds
+// ---------------------------------------------------------------------------
+
+/// What a planned/served 2D transform consumes and produces. Every
+/// layer above the kernels — plans, wisdom records, model streams,
+/// batch keys, requests — is keyed by this.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TransformKind {
+    /// Complex-to-complex: the classic path, `N×N` in, `N×N` out.
+    #[default]
+    C2c,
+    /// Real-to-complex forward: `N×N` real in, Hermitian-packed
+    /// `N×(N/2+1)` half-spectrum out.
+    R2c,
+    /// Complex-to-real inverse: packed `N×(N/2+1)` in, `N×N` real out.
+    C2r,
+}
+
+impl TransformKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransformKind::C2c => "c2c",
+            TransformKind::R2c => "r2c",
+            TransformKind::C2r => "c2r",
+        }
+    }
+
+    /// Parse a CLI/JSON value. `real` is accepted as an alias for the
+    /// forward real kind (the `--kind=real` flag).
+    pub fn parse(s: &str) -> Option<TransformKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "c2c" | "complex" => Some(TransformKind::C2c),
+            "r2c" | "real" => Some(TransformKind::R2c),
+            "c2r" => Some(TransformKind::C2r),
+            _ => None,
+        }
+    }
+
+    /// The *plane* kind FPM surfaces, wisdom records and model streams
+    /// are keyed by: c2r shares the real plane's partitions and
+    /// observation streams with r2c (same row kernels, same tile
+    /// geometry), exactly as c2c inverse shares the c2c plan.
+    pub fn plan_kind(&self) -> TransformKind {
+        match self {
+            TransformKind::C2r => TransformKind::R2c,
+            k => *k,
+        }
+    }
+
+    /// Does this kind transform real-plane data (either direction)?
+    pub fn is_real(&self) -> bool {
+        *self != TransformKind::C2c
+    }
+
+    /// Complex-flop factor vs the c2c transform of the same N (the real
+    /// row phase does half the kernel work; the packed column phase
+    /// touches half the columns).
+    pub fn flops_factor(&self) -> f64 {
+        if self.is_real() {
+            0.5
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Stored columns of the Hermitian-packed half spectrum for row length
+/// `n`: bins `0..=n/2`.
+pub fn half_cols(n: usize) -> usize {
+    n / 2 + 1
+}
+
+// ---------------------------------------------------------------------------
+// The real signal matrix
+// ---------------------------------------------------------------------------
+
+/// A real matrix in row-major layout — half the memory traffic of a
+/// [`SignalMatrix`] carrying a zero imaginary plane.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RealMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl RealMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> RealMatrix {
+        RealMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Deterministic random matrix for tests/benches.
+    pub fn random(rows: usize, cols: usize, seed: u64) -> RealMatrix {
+        let mut rng = crate::util::prng::Xoshiro256::seeded(seed);
+        let mut m = RealMatrix::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.next_f64() * 2.0 - 1.0;
+        }
+        m
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Max |elementwise difference| against another real matrix.
+    pub fn max_abs_diff(&self, other: &RealMatrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Frobenius norm (for relative-error checks).
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+}
+
+/// Embed a real matrix as a complex [`SignalMatrix`] with a zero
+/// imaginary plane — the c2c oracle's input for real-path tests.
+pub fn embed_real(m: &RealMatrix) -> SignalMatrix {
+    SignalMatrix { rows: m.rows, cols: m.cols, re: m.data.clone(), im: vec![0.0; m.data.len()] }
+}
+
+/// Reconstruct the full `n×n` spectrum from Hermitian-packed
+/// `n×(n/2+1)` storage: `F[r, c] = conj(F[(n-r)%n, n-c])` for the
+/// dropped columns. Only exact for *unpadded* transforms (padded row
+/// phases interpolate the spectrum, whose symmetry is about the pad
+/// length, not n).
+pub fn expand_packed(packed: &SignalMatrix) -> SignalMatrix {
+    let n = packed.rows;
+    let nc = packed.cols;
+    assert_eq!(nc, half_cols(n), "not a packed half spectrum");
+    let mut full = SignalMatrix::zeros(n, n);
+    for r in 0..n {
+        for c in 0..n {
+            let (re, im) = if c < nc {
+                packed.get(r, c)
+            } else {
+                let (re, im) = packed.get((n - r) % n, n - c);
+                (re, -im)
+            };
+            full.set(r, c, re, im);
+        }
+    }
+    full
+}
+
+// ---------------------------------------------------------------------------
+// Pack / unpack primitives (shared with the engine-generic coordinator path)
+// ---------------------------------------------------------------------------
+
+/// Pack `rows` real rows (contiguous length-`n` rows in `src`) into
+/// `rows.div_ceil(2)` complex length-`v` rows: pair j carries row `2j`
+/// in the re plane and row `2j+1` in the im plane. `wre`/`wim` must be
+/// zeroed (a scratch lease is) — the `v - n` tail is the stride-choice
+/// pad, and an odd leftover row leaves its im plane zero. Returns the
+/// pair count.
+pub fn pack_pairs_tile(
+    src: &[f64],
+    rows: usize,
+    n: usize,
+    v: usize,
+    wre: &mut [f64],
+    wim: &mut [f64],
+) -> usize {
+    let pairs = rows.div_ceil(2);
+    debug_assert!(src.len() >= rows * n);
+    debug_assert!(wre.len() >= pairs * v && wim.len() >= pairs * v);
+    for j in 0..pairs {
+        let a = 2 * j;
+        wre[j * v..j * v + n].copy_from_slice(&src[a * n..(a + 1) * n]);
+        let b = a + 1;
+        if b < rows {
+            wim[j * v..j * v + n].copy_from_slice(&src[b * n..(b + 1) * n]);
+        }
+    }
+    pairs
+}
+
+/// Hermitian-unpack the transformed pairs: from each length-`v`
+/// spectrum `Z` recover the two packed rows' half spectra
+/// `A[k] = (Z[k] + conj(Z[(v-k)%v]))/2` and
+/// `B[k] = (Z[k] - conj(Z[(v-k)%v]))/2i`, keeping bins `0..nc`, written
+/// to contiguous length-`nc` rows of `dst_re`/`dst_im`.
+pub fn unpack_pairs_tile(
+    wre: &[f64],
+    wim: &[f64],
+    rows: usize,
+    nc: usize,
+    v: usize,
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+) {
+    let pairs = rows.div_ceil(2);
+    debug_assert!(nc <= v);
+    debug_assert!(dst_re.len() >= rows * nc && dst_im.len() >= rows * nc);
+    for j in 0..pairs {
+        let z = j * v;
+        let a = 2 * j;
+        let b = a + 1;
+        let has_b = b < rows;
+        for k in 0..nc {
+            let km = if k == 0 { 0 } else { v - k };
+            let (zkr, zki) = (wre[z + k], wim[z + k]);
+            let (zmr, zmi) = (wre[z + km], wim[z + km]);
+            dst_re[a * nc + k] = 0.5 * (zkr + zmr);
+            dst_im[a * nc + k] = 0.5 * (zki - zmi);
+            if has_b {
+                dst_re[b * nc + k] = 0.5 * (zki + zmi);
+                dst_im[b * nc + k] = 0.5 * (zmr - zkr);
+            }
+        }
+    }
+}
+
+/// Inverse of the pair trick's unpack: re-combine two Hermitian
+/// half-spectra rows (bins `0..nc` of length-`n` spectra, contiguous
+/// `nc`-rows in `src_re`/`src_im`) into `rows.div_ceil(2)` full
+/// length-`n` complex rows `Z[k] = A[k] + i·B[k]` (Hermitian extension
+/// supplies bins `nc..n`). Exact length only — c2r does not interpolate.
+pub fn pack_spectra_tile(
+    src_re: &[f64],
+    src_im: &[f64],
+    rows: usize,
+    n: usize,
+    nc: usize,
+    wre: &mut [f64],
+    wim: &mut [f64],
+) -> usize {
+    let pairs = rows.div_ceil(2);
+    debug_assert_eq!(nc, half_cols(n));
+    debug_assert!(src_re.len() >= rows * nc && wre.len() >= pairs * n);
+    for j in 0..pairs {
+        let z = j * n;
+        let a = 2 * j;
+        let b = a + 1;
+        let has_b = b < rows;
+        for k in 0..n {
+            let (ar, ai) = if k < nc {
+                (src_re[a * nc + k], src_im[a * nc + k])
+            } else {
+                (src_re[a * nc + (n - k)], -src_im[a * nc + (n - k)])
+            };
+            let (br, bi) = if !has_b {
+                (0.0, 0.0)
+            } else if k < nc {
+                (src_re[b * nc + k], src_im[b * nc + k])
+            } else {
+                (src_re[b * nc + (n - k)], -src_im[b * nc + (n - k)])
+            };
+            wre[z + k] = ar - bi;
+            wim[z + k] = ai + br;
+        }
+    }
+    pairs
+}
+
+/// After the inverse FFT of [`pack_spectra_tile`]'s rows, the re plane
+/// is row `2j` and the im plane row `2j+1`: copy them out as real rows.
+pub fn unpack_real_tile(wre: &[f64], wim: &[f64], rows: usize, n: usize, dst: &mut [f64]) {
+    let pairs = rows.div_ceil(2);
+    debug_assert!(dst.len() >= rows * n);
+    for j in 0..pairs {
+        let z = j * n;
+        let a = 2 * j;
+        dst[a * n..(a + 1) * n].copy_from_slice(&wre[z..z + n]);
+        let b = a + 1;
+        if b < rows {
+            dst[b * n..(b + 1) * n].copy_from_slice(&wim[z..z + n]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row kernels over the native substrate
+// ---------------------------------------------------------------------------
+
+/// One r2c row tile over the native substrate: pack → one pooled FFT
+/// call over the pairs → Hermitian unpack.
+#[allow(clippy::too_many_arguments)]
+fn r2c_tile(
+    ctx: &ExecCtx,
+    src_tile: &[f64],
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+    rows: usize,
+    n: usize,
+    nc: usize,
+    v: usize,
+) {
+    with_scratch(|s| {
+        let pairs = rows.div_ceil(2);
+        let (wre, wim) = s.pair(pairs * v);
+        pack_pairs_tile(src_tile, rows, n, v, wre, wim);
+        fft_rows_pooled(ctx, wre, wim, pairs, v, Direction::Forward, 1);
+        unpack_pairs_tile(wre, wim, rows, nc, v, dst_re, dst_im);
+    });
+}
+
+/// The r2c row kernel: transform `rows` contiguous real rows of length
+/// `n` in `src` into Hermitian-packed rows of length `n/2+1` in the
+/// `dst` planes, running each pair of rows as one complex FFT of length
+/// `v >= n` (`v > n` = the padded row phase's spectral interpolation —
+/// the first `n/2+1` bins of the interpolated spectrum are kept). Work
+/// is tiled in [`DEFAULT_ROW_TILE`]-row steps and fans out over up to
+/// `threads` pool jobs; the per-tile pairing makes results identical
+/// for every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn r2c_rows(
+    ctx: &ExecCtx,
+    src: &[f64],
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+    rows: usize,
+    n: usize,
+    v: usize,
+    threads: usize,
+) {
+    assert!(v >= n, "pad length below n");
+    let nc = half_cols(n);
+    debug_assert_eq!(src.len(), rows * n);
+    debug_assert_eq!(dst_re.len(), rows * nc);
+    debug_assert_eq!(dst_im.len(), rows * nc);
+    if rows == 0 || n == 0 {
+        return;
+    }
+    // carve per-tile dst slices (disjoint row ranges)
+    let mut tiles: Vec<(usize, usize, &mut [f64], &mut [f64])> = Vec::new();
+    let mut re_rest: &mut [f64] = dst_re;
+    let mut im_rest: &mut [f64] = dst_im;
+    let mut r = 0usize;
+    while r < rows {
+        let len = DEFAULT_ROW_TILE.min(rows - r);
+        let (re_t, re_n) = re_rest.split_at_mut(len * nc);
+        let (im_t, im_n) = im_rest.split_at_mut(len * nc);
+        re_rest = re_n;
+        im_rest = im_n;
+        tiles.push((r, len, re_t, im_t));
+        r += len;
+    }
+    let threads = threads.max(1);
+    if threads == 1 || tiles.len() == 1 {
+        for (start, len, re_t, im_t) in tiles {
+            r2c_tile(ctx, &src[start * n..(start + len) * n], re_t, im_t, len, n, nc, v);
+        }
+        return;
+    }
+    let per_job = tiles.len().div_ceil(threads.min(tiles.len()));
+    let mut jobs: Vec<Job> = Vec::new();
+    let mut it = tiles.into_iter();
+    loop {
+        let chunk: Vec<(usize, usize, &mut [f64], &mut [f64])> =
+            it.by_ref().take(per_job).collect();
+        if chunk.is_empty() {
+            break;
+        }
+        jobs.push(Box::new(move || {
+            for (start, len, re_t, im_t) in chunk {
+                r2c_tile(ctx, &src[start * n..(start + len) * n], re_t, im_t, len, n, nc, v);
+            }
+        }));
+    }
+    ctx.run_jobs(jobs);
+}
+
+/// One c2r row tile: Hermitian re-combine → one pooled inverse FFT over
+/// the pairs → real rows out.
+fn c2r_tile(
+    ctx: &ExecCtx,
+    src_re: &[f64],
+    src_im: &[f64],
+    dst: &mut [f64],
+    rows: usize,
+    n: usize,
+    nc: usize,
+) {
+    with_scratch(|s| {
+        let pairs = rows.div_ceil(2);
+        let (wre, wim) = s.pair(pairs * n);
+        pack_spectra_tile(src_re, src_im, rows, n, nc, wre, wim);
+        fft_rows_pooled(ctx, wre, wim, pairs, n, Direction::Inverse, 1);
+        unpack_real_tile(wre, wim, rows, n, dst);
+    });
+}
+
+/// The c2r row kernel — inverse of [`r2c_rows`] at exact length: turn
+/// `rows` Hermitian-packed spectra rows (length `n/2+1`) back into real
+/// rows of length `n`, two rows per complex inverse FFT.
+pub fn c2r_rows(
+    ctx: &ExecCtx,
+    src_re: &[f64],
+    src_im: &[f64],
+    dst: &mut [f64],
+    rows: usize,
+    n: usize,
+    threads: usize,
+) {
+    let nc = half_cols(n);
+    debug_assert_eq!(src_re.len(), rows * nc);
+    debug_assert_eq!(dst.len(), rows * n);
+    if rows == 0 || n == 0 {
+        return;
+    }
+    let mut tiles: Vec<(usize, usize, &mut [f64])> = Vec::new();
+    let mut rest: &mut [f64] = dst;
+    let mut r = 0usize;
+    while r < rows {
+        let len = DEFAULT_ROW_TILE.min(rows - r);
+        let (d_t, d_n) = rest.split_at_mut(len * n);
+        rest = d_n;
+        tiles.push((r, len, d_t));
+        r += len;
+    }
+    let threads = threads.max(1);
+    if threads == 1 || tiles.len() == 1 {
+        for (start, len, d_t) in tiles {
+            c2r_tile(
+                ctx,
+                &src_re[start * nc..(start + len) * nc],
+                &src_im[start * nc..(start + len) * nc],
+                d_t,
+                len,
+                n,
+                nc,
+            );
+        }
+        return;
+    }
+    let per_job = tiles.len().div_ceil(threads.min(tiles.len()));
+    let mut jobs: Vec<Job> = Vec::new();
+    let mut it = tiles.into_iter();
+    loop {
+        let chunk: Vec<(usize, usize, &mut [f64])> = it.by_ref().take(per_job).collect();
+        if chunk.is_empty() {
+            break;
+        }
+        jobs.push(Box::new(move || {
+            for (start, len, d_t) in chunk {
+                c2r_tile(
+                    ctx,
+                    &src_re[start * nc..(start + len) * nc],
+                    &src_im[start * nc..(start + len) * nc],
+                    d_t,
+                    len,
+                    n,
+                    nc,
+                );
+            }
+        }));
+    }
+    ctx.run_jobs(jobs);
+}
+
+// ---------------------------------------------------------------------------
+// The packed column phase
+// ---------------------------------------------------------------------------
+
+/// Complex FFTs down every stored column of the packed `n×(n/2+1)`
+/// matrix — the fused pipeline's strided column tiles at the packed
+/// stride (the shared [`fft_cols_fused_rect`] scheduler). Bit-identical
+/// to the barrier (transpose) path: both feed the same logical column
+/// vectors to the same row kernel.
+pub fn rfft_cols_fused(ctx: &ExecCtx, packed: &mut SignalMatrix, dir: Direction, threads: usize) {
+    let n = packed.rows;
+    let nc = packed.cols;
+    assert_eq!(nc, half_cols(n), "not a packed half spectrum");
+    fft_cols_fused_rect(ctx, &mut packed.re, &mut packed.im, n, nc, n, dir, threads);
+}
+
+/// The barrier column phase: out-of-place transpose of the packed
+/// rectangle, row FFTs over the `n/2+1` transposed rows, transpose
+/// back. Kept as the fallback and the bit-exactness oracle.
+pub fn rfft_cols_barrier(ctx: &ExecCtx, packed: &mut SignalMatrix, dir: Direction, threads: usize) {
+    assert_eq!(packed.cols, half_cols(packed.rows), "not a packed half spectrum");
+    let mut t = transposed(packed);
+    fft_rows_pooled(ctx, &mut t.re, &mut t.im, t.rows, t.cols, dir, threads);
+    *packed = transposed(&t);
+}
+
+// ---------------------------------------------------------------------------
+// 2D drivers
+// ---------------------------------------------------------------------------
+
+/// Forward real 2D transform of an `n×n` real matrix into Hermitian-
+/// packed `n×(n/2+1)` storage, under an explicit pipeline mode.
+pub fn rfft2d_with_mode(m: &RealMatrix, threads: usize, mode: PipelineMode) -> SignalMatrix {
+    assert_eq!(m.rows, m.cols, "square real matrix required");
+    let n = m.rows;
+    let nc = half_cols(n);
+    let ctx = ExecCtx::global();
+    let mut packed = SignalMatrix::zeros(n, nc);
+    r2c_rows(ctx, &m.data, &mut packed.re, &mut packed.im, n, n, n, threads);
+    match mode {
+        PipelineMode::Fused => rfft_cols_fused(ctx, &mut packed, Direction::Forward, threads),
+        PipelineMode::Barrier => rfft_cols_barrier(ctx, &mut packed, Direction::Forward, threads),
+    }
+    packed
+}
+
+/// [`rfft2d_with_mode`] under the process-wide default mode.
+pub fn rfft2d(m: &RealMatrix, threads: usize) -> SignalMatrix {
+    rfft2d_with_mode(m, threads, default_mode())
+}
+
+/// Inverse real 2D transform: packed `n×(n/2+1)` half spectrum back to
+/// the `n×n` real signal. Exact inverse of the *unpadded* forward path.
+/// Consumes the spectrum (the column phase runs in place) — the
+/// borrowing convenience wrapper is [`irfft2d_with_mode`].
+pub fn irfft2d_owned_with_mode(
+    mut packed: SignalMatrix,
+    threads: usize,
+    mode: PipelineMode,
+) -> RealMatrix {
+    let n = packed.rows;
+    assert_eq!(packed.cols, half_cols(n), "not a packed half spectrum");
+    let ctx = ExecCtx::global();
+    match mode {
+        PipelineMode::Fused => rfft_cols_fused(ctx, &mut packed, Direction::Inverse, threads),
+        PipelineMode::Barrier => rfft_cols_barrier(ctx, &mut packed, Direction::Inverse, threads),
+    }
+    let mut out = RealMatrix::zeros(n, n);
+    c2r_rows(ctx, &packed.re, &packed.im, &mut out.data, n, n, threads);
+    out
+}
+
+/// [`irfft2d_owned_with_mode`] over a borrowed spectrum (pays one
+/// clone; the serving path uses the owned variant).
+pub fn irfft2d_with_mode(packed: &SignalMatrix, threads: usize, mode: PipelineMode) -> RealMatrix {
+    irfft2d_owned_with_mode(packed.clone(), threads, mode)
+}
+
+/// [`irfft2d_with_mode`] under the process-wide default mode.
+pub fn irfft2d(packed: &SignalMatrix, threads: usize) -> RealMatrix {
+    irfft2d_with_mode(packed, threads, default_mode())
+}
+
+/// Crop a full `n×n` spectrum to its packed `n×(n/2+1)` half — the c2c
+/// oracle's view of what the real path must produce.
+pub fn crop_to_packed(full: &SignalMatrix) -> SignalMatrix {
+    assert_eq!(full.rows, full.cols, "square spectrum required");
+    full.crop_cols(half_cols(full.rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dft::dft2d::dft2d_with_mode;
+
+    fn rel_err(a: &SignalMatrix, b: &SignalMatrix) -> f64 {
+        a.max_abs_diff(b) / b.norm().max(1.0)
+    }
+
+    /// c2c oracle for the packed forward transform: 2D-DFT the real
+    /// embedding, keep the stored columns.
+    fn oracle_packed(m: &RealMatrix) -> SignalMatrix {
+        let mut full = embed_real(m);
+        dft2d_with_mode(&mut full, Direction::Forward, 1, PipelineMode::Barrier);
+        crop_to_packed(&full)
+    }
+
+    #[test]
+    fn kind_names_and_parse() {
+        assert_eq!(TransformKind::parse("c2c"), Some(TransformKind::C2c));
+        assert_eq!(TransformKind::parse("real"), Some(TransformKind::R2c));
+        assert_eq!(TransformKind::parse(" R2C "), Some(TransformKind::R2c));
+        assert_eq!(TransformKind::parse("c2r"), Some(TransformKind::C2r));
+        assert_eq!(TransformKind::parse("nope"), None);
+        assert_eq!(TransformKind::C2r.plan_kind(), TransformKind::R2c);
+        assert_eq!(TransformKind::C2c.plan_kind(), TransformKind::C2c);
+        assert!(TransformKind::R2c.is_real() && !TransformKind::C2c.is_real());
+        assert_eq!(TransformKind::R2c.flops_factor(), 0.5);
+    }
+
+    #[test]
+    fn half_cols_even_and_odd() {
+        assert_eq!(half_cols(8), 5);
+        assert_eq!(half_cols(9), 5);
+        assert_eq!(half_cols(1), 1);
+    }
+
+    #[test]
+    fn pack_unpack_pair_recovers_row_spectra() {
+        // the pair trick must reproduce each row's own FFT half spectrum
+        let n = 16;
+        let nc = half_cols(n);
+        let m = RealMatrix::random(2, n, 3);
+        let ctx = ExecCtx::new(1);
+        let mut dre = vec![0.0; 2 * nc];
+        let mut dim = vec![0.0; 2 * nc];
+        r2c_rows(&ctx, &m.data, &mut dre, &mut dim, 2, n, n, 1);
+        for r in 0..2 {
+            let mut row = SignalMatrix::zeros(1, n);
+            row.re.copy_from_slice(&m.data[r * n..(r + 1) * n]);
+            let want = crate::dft::naive_dft_rows(&row, false);
+            for k in 0..nc {
+                let (wr, wi) = want.get(0, k);
+                assert!(
+                    (dre[r * nc + k] - wr).abs() < 1e-9 && (dim[r * nc + k] - wi).abs() < 1e-9,
+                    "row {r} bin {k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn odd_row_count_leftover_row_correct() {
+        let n = 8;
+        let nc = half_cols(n);
+        let m = RealMatrix::random(3, n, 5);
+        let ctx = ExecCtx::new(1);
+        let mut dre = vec![0.0; 3 * nc];
+        let mut dim = vec![0.0; 3 * nc];
+        r2c_rows(&ctx, &m.data, &mut dre, &mut dim, 3, n, n, 1);
+        let mut row = SignalMatrix::zeros(1, n);
+        row.re.copy_from_slice(&m.data[2 * n..3 * n]);
+        let want = crate::dft::naive_dft_rows(&row, false);
+        for k in 0..nc {
+            let (wr, wi) = want.get(0, k);
+            assert!((dre[2 * nc + k] - wr).abs() < 1e-9 && (dim[2 * nc + k] - wi).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn r2c_then_c2r_roundtrips_rows() {
+        let n = 24;
+        let nc = half_cols(n);
+        let ctx = ExecCtx::new(2);
+        for rows in [1usize, 2, 5, 8] {
+            let m = RealMatrix::random(rows, n, rows as u64);
+            let mut dre = vec![0.0; rows * nc];
+            let mut dim = vec![0.0; rows * nc];
+            r2c_rows(&ctx, &m.data, &mut dre, &mut dim, rows, n, n, 2);
+            let mut back = vec![0.0; rows * n];
+            c2r_rows(&ctx, &dre, &dim, &mut back, rows, n, 2);
+            let err = m
+                .data
+                .iter()
+                .zip(&back)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-10, "rows={rows}: {err}");
+        }
+    }
+
+    #[test]
+    fn rfft2d_matches_c2c_oracle_both_modes() {
+        // even, odd, mixed-radix and Bluestein sizes; > one column tile
+        for &n in &[8usize, 15, 24, 22, 96] {
+            let m = RealMatrix::random(n, n, n as u64 + 2);
+            let want = oracle_packed(&m);
+            for mode in [PipelineMode::Fused, PipelineMode::Barrier] {
+                let got = rfft2d_with_mode(&m, 3, mode);
+                assert_eq!((got.rows, got.cols), (n, half_cols(n)));
+                let err = rel_err(&got, &want);
+                assert!(err < 1e-9, "n={n} {mode:?}: rel err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_matches_barrier_bitwise() {
+        for &n in &[22usize, 24, 96] {
+            let m = RealMatrix::random(n, n, n as u64 + 31);
+            let fused = rfft2d_with_mode(&m, 4, PipelineMode::Fused);
+            let barrier = rfft2d_with_mode(&m, 4, PipelineMode::Barrier);
+            assert_eq!(fused.max_abs_diff(&barrier), 0.0, "n={n}");
+        }
+    }
+
+    #[test]
+    fn expand_packed_recovers_full_spectrum() {
+        let n = 16;
+        let m = RealMatrix::random(n, n, 9);
+        let packed = rfft2d_with_mode(&m, 2, PipelineMode::Fused);
+        let full = expand_packed(&packed);
+        let mut want = embed_real(&m);
+        dft2d_with_mode(&mut want, Direction::Forward, 1, PipelineMode::Barrier);
+        let err = rel_err(&full, &want);
+        assert!(err < 1e-9, "rel err {err}");
+    }
+
+    #[test]
+    fn irfft2d_roundtrips_both_modes() {
+        for &n in &[8usize, 15, 24, 96] {
+            let m = RealMatrix::random(n, n, n as u64 + 77);
+            for mode in [PipelineMode::Fused, PipelineMode::Barrier] {
+                let packed = rfft2d_with_mode(&m, 2, mode);
+                let back = irfft2d_with_mode(&packed, 2, mode);
+                let err = back.max_abs_diff(&m) / m.norm().max(1.0);
+                assert!(err < 1e-10, "n={n} {mode:?}: {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_invariant_bitwise() {
+        let n = 96;
+        let m = RealMatrix::random(n, n, 13);
+        let a = rfft2d_with_mode(&m, 1, PipelineMode::Fused);
+        let b = rfft2d_with_mode(&m, 7, PipelineMode::Fused);
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+
+    #[test]
+    fn padded_r2c_is_spectral_interpolation() {
+        // r2c at pad v == c2c rows zero-padded to v, FFT, first nc bins
+        let (rows, n, v) = (4usize, 16usize, 24usize);
+        let nc = half_cols(n);
+        let m = RealMatrix::random(rows, n, 11);
+        let ctx = ExecCtx::new(1);
+        let mut dre = vec![0.0; rows * nc];
+        let mut dim = vec![0.0; rows * nc];
+        r2c_rows(&ctx, &m.data, &mut dre, &mut dim, rows, n, v, 1);
+        let mut emb = SignalMatrix::zeros(rows, n);
+        emb.re.copy_from_slice(&m.data);
+        let padded = emb.pad_cols(v);
+        let want = crate::dft::naive_dft_rows(&padded, false);
+        for r in 0..rows {
+            for k in 0..nc {
+                let (wr, wi) = want.get(r, k);
+                assert!(
+                    (dre[r * nc + k] - wr).abs() < 1e-9 && (dim[r * nc + k] - wi).abs() < 1e-9,
+                    "row {r} bin {k}"
+                );
+            }
+        }
+    }
+}

@@ -16,10 +16,13 @@
 //!   Stockham for 5-smooth lengths, radix-2, Bluestein fallback for
 //!   non-smooth lengths, blocked transpose) plus the shared execution
 //!   context ([`dft::exec::ExecCtx`]: one persistent worker pool +
-//!   per-thread scratch arenas) and the fused tiled 2D pipeline
+//!   per-thread scratch arenas), the fused tiled 2D pipeline
 //!   ([`dft::pipeline`]: stage-DAG tile scheduling + strided column
-//!   FFTs — no whole-matrix transpose barriers), used as the
-//!   multithreaded compute engine and as an independent numeric oracle.
+//!   FFTs — no whole-matrix transpose barriers), and the real-input
+//!   path ([`dft::real`]: r2c pair kernel, Hermitian-packed
+//!   `N×(N/2+1)` storage, c2r inverse — ~half the flops of c2c for
+//!   real signals), used as the multithreaded compute engine and as an
+//!   independent numeric oracle.
 //! * [`simulator`] — calibrated performance models of the three FFT packages
 //!   the paper studies (FFTW-2.1.5, FFTW-3.3.7, Intel MKL FFT); substitutes
 //!   for the Haswell-36-core testbed that is not available here.

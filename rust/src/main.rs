@@ -23,8 +23,11 @@ use hclfft::config::Config;
 use hclfft::coordinator::engine::{NativeEngine, RowFftEngine};
 use hclfft::coordinator::group::GroupConfig;
 use hclfft::coordinator::pad::PadCost;
-use hclfft::coordinator::pfft::{pfft_fpm, pfft_fpm_pad, pfft_lb};
+use hclfft::coordinator::pfft::{
+    pfft_fpm, pfft_fpm_pad, pfft_fpm_pad_real, pfft_fpm_real, pfft_lb,
+};
 use hclfft::coordinator::PlannedTransform;
+use hclfft::dft::real::{crop_to_packed, embed_real, RealMatrix, TransformKind};
 use hclfft::dft::SignalMatrix;
 use hclfft::figures::{generate, generate_all, Ctx};
 use hclfft::model::PerfModel;
@@ -146,12 +149,32 @@ fn pipeline_from_args(args: &cli::Args) -> Result<hclfft::dft::pipeline::Pipelin
     Ok(mode)
 }
 
+/// Shared `--kind c2c|real` parsing (`real` = r2c: real signal in,
+/// Hermitian-packed half spectrum out).
+fn kind_from_args(args: &cli::Args) -> Result<TransformKind, String> {
+    match args.opt("kind") {
+        Some(v) => {
+            let k = TransformKind::parse(v)
+                .ok_or_else(|| format!("--kind must be `c2c` or `real`, got `{v}`"))?;
+            if k == TransformKind::C2r {
+                return Err(
+                    "--kind c2r is the service inverse path; use `real` for forward r2c".into(),
+                );
+            }
+            Ok(k)
+        }
+        None => Ok(TransformKind::C2c),
+    }
+}
+
 fn cmd_run(args: &cli::Args, cfg: &Config, bench: bool) -> Result<(), String> {
     args.validate(&[
         "n", "engine", "algo", "p", "t", "artifacts", "verify", "config", "seed", "pipeline",
+        "kind",
     ])?;
     let n = args.opt_usize("n")?.ok_or("--n required")?;
     let mode = pipeline_from_args(args)?;
+    let kind = kind_from_args(args)?;
     let algo = args.opt_or("algo", "fpm");
     let p = args.opt_usize("p")?.unwrap_or(cfg.groups);
     let t = args.opt_usize("t")?.unwrap_or(cfg.threads_per_group);
@@ -165,13 +188,45 @@ fn cmd_run(args: &cli::Args, cfg: &Config, bench: bool) -> Result<(), String> {
 
     // plan from measured plane (real FPM construction, scaled-down
     // reps), once, through the shared PlannedTransform seam — the same
-    // value the service's wisdom store memoizes
+    // value the service's wisdom store memoizes. Real-kind planes are
+    // measured with the r2c pair kernel (their own ~2x-faster surfaces).
     let xs: Vec<usize> = (1..=8).map(|k| (k * n / 8).max(1)).collect();
-    let fpms = hclfft::profiler::build_plane(engine.as_ref(), grp, xs, n, cfg.rep_scale.max(100));
+    let fpms = hclfft::profiler::build_plane_kind(
+        engine.as_ref(),
+        grp,
+        xs,
+        n,
+        cfg.rep_scale.max(100),
+        kind,
+    );
     let plan = PlannedTransform::from_fpms(&fpms, n, cfg.eps, Some(PadCost::PaperRatio))
-        .map_err(|e| e.to_string())?;
+        .map_err(|e| e.to_string())?
+        .with_kind(kind);
 
     let mut exec = |label: &str| -> Result<f64, String> {
+        if kind == TransformKind::R2c {
+            let rm = RealMatrix::random(n, n, seed);
+            let t0 = std::time::Instant::now();
+            match label {
+                // one group with the whole thread budget
+                "basic" => {
+                    pfft_fpm_real(engine.as_ref(), &rm, &[n], p * t).map_err(|e| e.to_string())?;
+                }
+                "lb" => {
+                    let d = hclfft::coordinator::partition::balanced(p, n).d;
+                    pfft_fpm_real(engine.as_ref(), &rm, &d, t).map_err(|e| e.to_string())?;
+                }
+                "fpm" => {
+                    pfft_fpm_real(engine.as_ref(), &rm, &plan.d, t).map_err(|e| e.to_string())?;
+                }
+                "fpm-pad" => {
+                    pfft_fpm_pad_real(engine.as_ref(), &rm, &plan.d, &plan.pads, t)
+                        .map_err(|e| e.to_string())?;
+                }
+                other => return Err(format!("unknown algo `{other}`")),
+            }
+            return Ok(t0.elapsed().as_secs_f64());
+        }
         let mut m = SignalMatrix::random(n, n, seed);
         let t0 = std::time::Instant::now();
         match label {
@@ -207,13 +262,15 @@ fn cmd_run(args: &cli::Args, cfg: &Config, bench: bool) -> Result<(), String> {
     } else {
         "engine-defined kernel".to_string()
     };
+    let work_flops = hclfft::stats::harness::fft2d_flops(n) * kind.flops_factor();
     if bench {
         let policy = TtestPolicy { min_reps: 5, max_reps: 50, max_time_s: 30.0, cl: 0.95, eps: 0.025 };
         let m = mean_using_ttest(&policy, || exec(&algo).expect("bench run failed"));
-        let mflops = hclfft::stats::harness::fft2d_flops(n) / m.mean / 1e6;
+        let mflops = work_flops / m.mean / 1e6;
         println!(
-            "{} {} N={n} (p={p}, t={t}, {kernel}, {} pipeline): mean {:.6}s ± {:.6}s over {} reps ({:.1} MFLOPs)",
+            "{} {} {} N={n} (p={p}, t={t}, {kernel}, {} pipeline): mean {:.6}s ± {:.6}s over {} reps ({:.1} MFLOPs)",
             engine.name(),
+            kind.name(),
             algo,
             mode.name(),
             m.mean,
@@ -223,10 +280,11 @@ fn cmd_run(args: &cli::Args, cfg: &Config, bench: bool) -> Result<(), String> {
         );
     } else {
         let secs = exec(&algo)?;
-        let mflops = hclfft::stats::harness::fft2d_flops(n) / secs / 1e6;
+        let mflops = work_flops / secs / 1e6;
         println!(
-            "{} {} N={n} (p={p}, t={t}, {kernel}, {} pipeline): {:.6}s ({:.1} MFLOPs), d = {:?}",
+            "{} {} {} N={n} (p={p}, t={t}, {kernel}, {} pipeline): {:.6}s ({:.1} MFLOPs), d = {:?}",
             engine.name(),
+            kind.name(),
             algo,
             mode.name(),
             secs,
@@ -236,15 +294,30 @@ fn cmd_run(args: &cli::Args, cfg: &Config, bench: bool) -> Result<(), String> {
     }
 
     if args.flag("verify") {
-        let mut m = SignalMatrix::random(n, n, seed);
-        pfft_fpm(engine.as_ref(), &mut m, &plan.d, t, cfg.transpose_block)
-            .map_err(|e| e.to_string())?;
-        let mut reference = SignalMatrix::random(n, n, seed);
-        hclfft::dft::dft2d::dft2d(&mut reference, hclfft::dft::fft::Direction::Forward, 1);
-        let err = m.max_abs_diff(&reference) / reference.norm().max(1.0);
-        println!("verify vs native serial 2D-DFT: rel err {err:.3e}");
-        if err > 1e-3 {
-            return Err(format!("verification failed: rel err {err}"));
+        if kind == TransformKind::R2c {
+            // real path vs the c2c oracle: 2D-DFT of the real embedding,
+            // cropped to the stored half-spectrum columns
+            let rm = RealMatrix::random(n, n, seed);
+            let got = pfft_fpm_real(engine.as_ref(), &rm, &plan.d, t).map_err(|e| e.to_string())?;
+            let mut reference = embed_real(&rm);
+            hclfft::dft::dft2d::dft2d(&mut reference, hclfft::dft::fft::Direction::Forward, 1);
+            let want = crop_to_packed(&reference);
+            let err = got.max_abs_diff(&want) / want.norm().max(1.0);
+            println!("verify r2c vs c2c oracle (real-embedded input): rel err {err:.3e}");
+            if err > 1e-3 {
+                return Err(format!("verification failed: rel err {err}"));
+            }
+        } else {
+            let mut m = SignalMatrix::random(n, n, seed);
+            pfft_fpm(engine.as_ref(), &mut m, &plan.d, t, cfg.transpose_block)
+                .map_err(|e| e.to_string())?;
+            let mut reference = SignalMatrix::random(n, n, seed);
+            hclfft::dft::dft2d::dft2d(&mut reference, hclfft::dft::fft::Direction::Forward, 1);
+            let err = m.max_abs_diff(&reference) / reference.norm().max(1.0);
+            println!("verify vs native serial 2D-DFT: rel err {err:.3e}");
+            if err > 1e-3 {
+                return Err(format!("verification failed: rel err {err}"));
+            }
         }
     }
     Ok(())
@@ -383,9 +456,10 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     args.validate(&[
         "n", "requests", "clients", "engine", "p", "t", "workers", "batch", "wisdom",
         "no-wisdom", "pad", "starve", "budget", "seed", "config", "drift-factor", "json",
-        "no-json", "pipeline",
+        "no-json", "pipeline", "kind",
     ])?;
     let pipeline = pipeline_from_args(args)?;
+    let kind = kind_from_args(args)?;
     let ns = parse_csv_usize(&args.opt_or("n", "1024"))?;
     if ns.is_empty() {
         return Err("--n requires at least one size".into());
@@ -395,6 +469,9 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     let engine = args.opt_or("engine", "native");
     let seed = args.opt_usize("seed")?.unwrap_or(42) as u64;
     let virtual_engine = engine.starts_with("sim-");
+    if kind.is_real() && virtual_engine {
+        return Err("--kind real requires a real engine (sim-* backends price c2c only)".into());
+    }
     if virtual_engine && (args.opt("p").is_some() || args.opt("t").is_some()) {
         eprintln!(
             "note: sim-* engines pin their package's paper-best (p, t); --p/--t are ignored"
@@ -443,9 +520,10 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     }
 
     println!(
-        "serve-bench: engine {engine} | sizes {ns:?} | {requests} requests/pass x 2 passes \
-         (cold+warm) | {clients} clients | {workers} workers | max batch {max_batch} | \
+        "serve-bench: engine {engine} | kind {} | sizes {ns:?} | {requests} requests/pass x 2 \
+         passes (cold+warm) | {clients} clients | {workers} workers | max batch {max_batch} | \
          {} pipeline | exec pool {} thread(s)",
+        kind.name(),
         pipeline.name(),
         hclfft::dft::exec::ExecCtx::global().workers()
     );
@@ -472,10 +550,17 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
                             let mseed = hclfft::util::prng::hash_key(&[
                                 seed, pass, c as u64, i as u64,
                             ]);
-                            Dft2dRequest::forward(
-                                engine_name,
-                                hclfft::dft::SignalMatrix::random(n, n, mseed),
-                            )
+                            if kind == TransformKind::R2c {
+                                Dft2dRequest::real_forward(
+                                    engine_name,
+                                    hclfft::dft::SignalMatrix::random_real(n, n, mseed),
+                                )
+                            } else {
+                                Dft2dRequest::forward(
+                                    engine_name,
+                                    hclfft::dft::SignalMatrix::random(n, n, mseed),
+                                )
+                            }
                         };
                         let outcome = svc.submit(req).and_then(|h| h.wait());
                         if let Err(e) = outcome {
@@ -505,7 +590,7 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     println!("{}", warm.render_table(&format!("serve-bench {engine} — warm pass")));
 
     let total = svc.stats();
-    let model = svc.model_snapshot(&engine);
+    let model = svc.model_snapshot(&hclfft::service::model_key(&engine, kind));
     let (obs, points) = model.as_ref().map_or((0, 0), |m| (m.observations(), m.len()));
     println!(
         "planning: {} cold event(s), {} warm wisdom hit(s)",
@@ -527,6 +612,7 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
         let doc = hclfft::util::json::Json::obj()
             .set("bench", "serve")
             .set("engine", engine.as_str())
+            .set("kind", kind.name())
             .set("sizes", ns.clone())
             .set("requests_per_pass", requests)
             .set("clients", clients)
@@ -602,7 +688,7 @@ fn phase_json(s: &hclfft::service::stats::ServiceStats) -> hclfft::util::json::J
 fn cmd_wisdom(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     use hclfft::service::wisdom::{WisdomRecord, WisdomStore};
 
-    args.validate(&["file", "prewarm", "engine", "p", "t", "pad", "budget", "config"])?;
+    args.validate(&["file", "prewarm", "engine", "p", "t", "pad", "budget", "config", "kind"])?;
     let path = PathBuf::from(args.opt_or("file", "results/wisdom.json"));
     let mut store = if path.exists() {
         WisdomStore::load(&path)?
@@ -613,6 +699,7 @@ fn cmd_wisdom(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     if let Some(list) = args.opt("prewarm") {
         let sizes = parse_csv_usize(list)?;
         let engine = args.opt_or("engine", "native");
+        let kind = kind_from_args(args)?;
         let planning = planning_from_args(args, cfg)?;
         if engine.starts_with("sim-") && (args.opt("p").is_some() || args.opt("t").is_some()) {
             eprintln!(
@@ -621,19 +708,24 @@ fn cmd_wisdom(args: &cli::Args, cfg: &Config) -> Result<(), String> {
         }
         for &n in &sizes {
             let rec = if let Some(pkg) = sim_package(&engine)? {
+                if kind.is_real() {
+                    return Err("--kind real requires a real engine for prewarm".into());
+                }
                 WisdomRecord::from_simulator(&engine, pkg, n, planning.pad_cost.is_some())
             } else if engine == "native" {
-                WisdomRecord::from_measurement(
+                WisdomRecord::from_measurement_kind(
                     &engine,
                     &hclfft::coordinator::engine::NativeEngine,
                     n,
                     &planning,
+                    kind,
                 )
             } else {
                 return Err(format!("unknown engine `{engine}` for prewarm"));
             };
             println!(
-                "prewarmed {engine} N={n}: d = {:?}, algo {}, kernel {}, predicted {:.6}s",
+                "prewarmed {engine} {} N={n}: d = {:?}, algo {}, kernel {}, predicted {:.6}s",
+                rec.kind().name(),
                 rec.plan.d,
                 rec.plan.algorithm.name(),
                 record_kernel(&rec),
@@ -647,7 +739,7 @@ fn cmd_wisdom(args: &cli::Args, cfg: &Config) -> Result<(), String> {
 
     let mut table = hclfft::util::table::Table::new(
         &format!("wisdom store {}", path.display()),
-        &["engine", "n", "p", "t", "algo", "padded", "kernel", "predicted_s"],
+        &["engine", "n", "p", "t", "kind", "algo", "padded", "kernel", "predicted_s"],
     );
     for rec in store.iter() {
         table.row(vec![
@@ -655,6 +747,7 @@ fn cmd_wisdom(args: &cli::Args, cfg: &Config) -> Result<(), String> {
             rec.n.to_string(),
             rec.p.to_string(),
             rec.t.to_string(),
+            rec.kind().name().to_string(),
             rec.plan.algorithm.name().to_string(),
             if rec.plan.is_padded() { "yes".into() } else { "no".into() },
             record_kernel(rec),

@@ -21,6 +21,7 @@ use std::time::Instant;
 use crate::coordinator::engine::RowFftEngine;
 use crate::coordinator::group::GroupConfig;
 use crate::dft::fft::Direction;
+use crate::dft::real::{half_cols, RealMatrix, TransformKind};
 use crate::dft::SignalMatrix;
 use crate::model::{speed_from_time_sanitized, SpeedFunction};
 use crate::stats::{mean_using_ttest, TtestPolicy};
@@ -37,11 +38,29 @@ pub struct ProfileSpec {
     pub rep_scale: usize,
     /// wall-clock budget for the whole build (partial-FPM cutoff)
     pub budget_s: f64,
+    /// which row kernel to measure: c2c complex rows (default) or the
+    /// r2c pair kernel — real planes run ~2x faster, so they get their
+    /// own surfaces (and hence their own POPTA/HPOPTA partitions)
+    pub kind: TransformKind,
 }
 
 impl ProfileSpec {
     pub fn new(xs: Vec<usize>, ys: Vec<usize>, cfg: GroupConfig) -> Self {
-        ProfileSpec { xs, ys, cfg, rep_scale: 1000, budget_s: f64::INFINITY }
+        ProfileSpec {
+            xs,
+            ys,
+            cfg,
+            rep_scale: 1000,
+            budget_s: f64::INFINITY,
+            kind: TransformKind::C2c,
+        }
+    }
+
+    /// Builder-style kind override ([`TransformKind::C2r`] measures the
+    /// shared r2c plane).
+    pub fn with_kind(mut self, kind: TransformKind) -> Self {
+        self.kind = kind.plan_kind();
+        self
     }
 }
 
@@ -65,10 +84,15 @@ pub fn build_fpms_with(
 ) -> Vec<SpeedFunction> {
     let p = spec.cfg.p;
     let started = Instant::now();
+    let kind_tag = if spec.kind.is_real() {
+        format!("-{}", spec.kind.plan_kind().name())
+    } else {
+        String::new()
+    };
     let mut fpms: Vec<SpeedFunction> = (0..p)
         .map(|g| {
             SpeedFunction::new(
-                &format!("{}-group{}-p{}t{}", engine.name(), g + 1, p, spec.cfg.t),
+                &format!("{}-group{}-p{}t{}{}", engine.name(), g + 1, p, spec.cfg.t, kind_tag),
                 spec.xs.clone(),
                 spec.ys.clone(),
             )
@@ -122,25 +146,46 @@ fn measure_point(
         pol.max_time_s = pol.max_time_s.min(10.0);
         pol
     };
+    let kind = spec.kind.plan_kind();
     let results: std::sync::Mutex<Vec<Option<f64>>> = std::sync::Mutex::new(vec![None; p]);
     std::thread::scope(|scope| {
         for g in 0..p {
             let results = &results;
             let policy = policy;
             scope.spawn(move || {
-                // per-group private buffers (groups share nothing)
-                let mut m = SignalMatrix::random(x, y, (g as u64 + 1) * 7919);
                 let mut failed = false;
-                let tt = mean_using_ttest(&policy, || {
-                    let t0 = Instant::now();
-                    if engine
-                        .fft_rows(&mut m.re, &mut m.im, x, y, Direction::Forward, t)
+                let tt = if kind == TransformKind::R2c {
+                    // real plane: time the r2c pair kernel — x real rows
+                    // of length y into packed x × (y/2+1) half spectra
+                    let src = RealMatrix::random(x, y, (g as u64 + 1) * 7919);
+                    let nc = half_cols(y);
+                    let mut dre = vec![0.0; x * nc];
+                    let mut dim = vec![0.0; x * nc];
+                    mean_using_ttest(&policy, || {
+                        let t0 = Instant::now();
+                        if crate::coordinator::real::r2c_rows_engine(
+                            engine, &src.data, &mut dre, &mut dim, x, y, y, t,
+                        )
                         .is_err()
-                    {
-                        failed = true;
-                    }
-                    t0.elapsed().as_secs_f64()
-                });
+                        {
+                            failed = true;
+                        }
+                        t0.elapsed().as_secs_f64()
+                    })
+                } else {
+                    // per-group private buffers (groups share nothing)
+                    let mut m = SignalMatrix::random(x, y, (g as u64 + 1) * 7919);
+                    mean_using_ttest(&policy, || {
+                        let t0 = Instant::now();
+                        if engine
+                            .fft_rows(&mut m.re, &mut m.im, x, y, Direction::Forward, t)
+                            .is_err()
+                        {
+                            failed = true;
+                        }
+                        t0.elapsed().as_secs_f64()
+                    })
+                };
                 if !failed {
                     results.lock().unwrap()[g] = Some(tt.mean);
                 }
@@ -159,7 +204,20 @@ pub fn build_plane(
     n: usize,
     rep_scale: usize,
 ) -> Vec<SpeedFunction> {
-    let mut spec = ProfileSpec::new(xs, vec![n], cfg);
+    build_plane_kind(engine, cfg, xs, n, rep_scale, TransformKind::C2c)
+}
+
+/// [`build_plane`] for an explicit transform kind (real planes measure
+/// the r2c pair kernel).
+pub fn build_plane_kind(
+    engine: &dyn RowFftEngine,
+    cfg: GroupConfig,
+    xs: Vec<usize>,
+    n: usize,
+    rep_scale: usize,
+    kind: TransformKind,
+) -> Vec<SpeedFunction> {
+    let mut spec = ProfileSpec::new(xs, vec![n], cfg).with_kind(kind);
     spec.rep_scale = rep_scale;
     build_fpms(engine, &spec)
 }
@@ -226,5 +284,27 @@ mod tests {
         assert_eq!(fpms.len(), 2);
         let c = fpms[0].plane_section(64);
         assert_eq!(c.xs, vec![4, 8]);
+    }
+
+    #[test]
+    fn real_plane_measures_r2c_kernel() {
+        // the real plane must build (positive speeds) and carry the
+        // kind tag in the surface name; c2r maps to the shared r2c plane
+        let fpms = build_plane_kind(
+            &NativeEngine,
+            GroupConfig::new(2, 1),
+            vec![8, 16],
+            64,
+            10_000,
+            TransformKind::C2r,
+        );
+        assert_eq!(fpms.len(), 2);
+        for f in &fpms {
+            assert!(f.name.contains("r2c"), "surface name `{}` must carry the kind", f.name);
+            for &x in &[8usize, 16] {
+                let s = f.get(x, 64).expect("measured");
+                assert!(s > 0.0);
+            }
+        }
     }
 }

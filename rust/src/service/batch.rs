@@ -331,6 +331,7 @@ mod tests {
             ],
             algorithm: crate::coordinator::partition::Algorithm::Balanced,
             makespan: f64::NAN,
+            kind: crate::dft::real::TransformKind::C2c,
         };
         let orig = SignalMatrix::random(n, n, 2);
         let mut got = orig.clone();

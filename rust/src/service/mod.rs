@@ -31,6 +31,16 @@
 //!    throughput, p50/p95/p99 latency, queue depth and the
 //!    planning-event counters.
 //!
+//! **Transform kinds** (PR 5): a [`Dft2dRequest`] declares its
+//! [`TransformKind`] — c2c, r2c (real signal in, Hermitian-packed
+//! `N×(N/2+1)` half spectrum out) or c2r (the inverse). Batching
+//! buckets by `(engine, n, direction, kind)`; wisdom records, FPM
+//! surfaces and online-model observation streams are all kind-keyed
+//! (real planes run ~2x faster, so their POPTA/HPOPTA partitions and
+//! cost estimates are separate artifacts — see [`model_key`]). r2c
+//! batches run the stage-DAG real executor
+//! ([`crate::coordinator::real`]); c2r takes the exact `irfft2d` path.
+//!
 //! A **virtual-time path** backs the whole pipeline with the calibrated
 //! [`crate::simulator`] instead of a real engine: requests are priced by
 //! `simulate_size` and advance a deterministic virtual clock, so
@@ -70,8 +80,10 @@ use std::time::Instant;
 
 use crate::coordinator::engine::RowFftEngine;
 use crate::coordinator::plan::{PhaseTimings, PlannedTransform};
+use crate::coordinator::real::execute_real_batch_with_mode;
 use crate::dft::fft::Direction;
 use crate::dft::pipeline::PipelineMode;
+use crate::dft::real::{half_cols, irfft2d_owned_with_mode, TransformKind};
 use crate::dft::SignalMatrix;
 use crate::model::{DriftPolicy, OnlineModel, PerfModel, Phase, SimModel, StaticModel};
 use crate::simulator::Package;
@@ -88,11 +100,31 @@ pub fn observation_point(n: usize) -> (usize, usize) {
     (2 * n, n)
 }
 
+/// The model-store key for an `(engine, kind)` stream. The
+/// [`OnlineModel`] keeps **per-kind observation streams**: real (r2c)
+/// requests do roughly half the work of c2c requests at the same N, so
+/// folding both into one stream would make every estimate wrong for
+/// both and fire spurious drift on every kind switch. c2r shares the
+/// r2c stream (same plane), exactly as c2c inverse shares c2c.
+pub fn model_key(engine: &str, kind: TransformKind) -> String {
+    match kind.plan_kind() {
+        TransformKind::C2c => engine.to_string(),
+        k => format!("{engine}+{}", k.name()),
+    }
+}
+
+/// Complex-flop work of one request of the given kind (the real path
+/// does ~half the kernel work of c2c at the same N).
+fn kind_flops(n: usize, kind: TransformKind) -> f64 {
+    fft2d_flops(n) * kind.flops_factor()
+}
+
 /// Errors surfaced to callers.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ServiceError {
     UnknownEngine(String),
     BadShape { rows: usize, cols: usize },
+    UnsupportedKind { engine: String, kind: &'static str },
     DeadlineInfeasible { predicted_s: f64, hint_s: f64 },
     Engine(String),
     ShuttingDown,
@@ -104,7 +136,10 @@ impl std::fmt::Display for ServiceError {
         match self {
             ServiceError::UnknownEngine(e) => write!(f, "unknown engine `{e}`"),
             ServiceError::BadShape { rows, cols } => {
-                write!(f, "signal matrix must be square, got {rows}x{cols}")
+                write!(f, "signal matrix shape {rows}x{cols} does not match the request kind")
+            }
+            ServiceError::UnsupportedKind { engine, kind } => {
+                write!(f, "engine `{engine}` does not serve {kind} transforms")
             }
             ServiceError::DeadlineInfeasible { predicted_s, hint_s } => write!(
                 f,
@@ -127,6 +162,10 @@ pub struct Dft2dRequest {
     pub n: usize,
     pub matrix: SignalMatrix,
     pub direction: Direction,
+    /// what the request transforms: c2c (n×n complex in/out), r2c (n×n
+    /// real signal in the `re` plane in, packed n×(n/2+1) half spectrum
+    /// out) or c2r (packed in, n×n real out in the `re` plane)
+    pub kind: TransformKind,
     /// engine key in the service registry ("native", "sim-mkl", ...)
     pub engine: String,
     /// optional latency budget in seconds — the admission policy rejects
@@ -141,6 +180,7 @@ impl Dft2dRequest {
             n: matrix.rows,
             matrix,
             direction: Direction::Forward,
+            kind: TransformKind::C2c,
             engine: engine.to_string(),
             deadline_hint: None,
         }
@@ -152,6 +192,36 @@ impl Dft2dRequest {
             n: matrix.rows,
             matrix,
             direction: Direction::Inverse,
+            kind: TransformKind::C2c,
+            engine: engine.to_string(),
+            deadline_hint: None,
+        }
+    }
+
+    /// Real-input forward (r2c) transform: the `n×n` signal lives in the
+    /// matrix's `re` plane (`im` is ignored); the response matrix is the
+    /// Hermitian-packed `n×(n/2+1)` half spectrum.
+    pub fn real_forward(engine: &str, matrix: SignalMatrix) -> Dft2dRequest {
+        Dft2dRequest {
+            n: matrix.rows,
+            matrix,
+            direction: Direction::Forward,
+            kind: TransformKind::R2c,
+            engine: engine.to_string(),
+            deadline_hint: None,
+        }
+    }
+
+    /// Real-output inverse (c2r) transform: `packed` is an `n×(n/2+1)`
+    /// half spectrum (what [`Dft2dRequest::real_forward`] returned); the
+    /// response matrix is `n×n` with the real signal in its `re` plane
+    /// and a zero `im` plane.
+    pub fn real_inverse(engine: &str, n: usize, packed: SignalMatrix) -> Dft2dRequest {
+        Dft2dRequest {
+            n,
+            matrix: packed,
+            direction: Direction::Inverse,
+            kind: TransformKind::C2r,
             engine: engine.to_string(),
             deadline_hint: None,
         }
@@ -166,6 +236,7 @@ impl Dft2dRequest {
             n,
             matrix: SignalMatrix::zeros(0, 0),
             direction: Direction::Forward,
+            kind: TransformKind::C2c,
             engine: engine.to_string(),
             deadline_hint: None,
         }
@@ -386,12 +457,33 @@ impl ServiceBuilder {
                     model.set_base(Arc::new(SimModel::paper_best(*pkg)));
                 }
                 Backend::Real(_) => {
-                    if let Some(rec) =
-                        self.wisdom.iter().find(|r| &r.engine == name && !r.fpms.is_empty())
-                    {
+                    // c2c stream ⇒ c2c surfaces only: an r2c record's
+                    // ~2x-faster surfaces would halve every c2c cost
+                    // estimate (wrong admission + SPJF weights)
+                    if let Some(rec) = self.wisdom.iter().find(|r| {
+                        &r.engine == name
+                            && r.kind() == TransformKind::C2c
+                            && !r.fpms.is_empty()
+                    }) {
                         model.set_base(Arc::new(StaticModel::new(rec.fpms.clone())));
                     }
                 }
+            }
+            models.insert(name.clone(), model);
+        }
+        // resume persisted per-kind streams (keys like "native+r2c"):
+        // the real plane's observations survive restarts exactly like
+        // the c2c plane's, with its own measured surfaces as base
+        for (name, m) in self.wisdom.models() {
+            let Some((engine, _)) = name.split_once('+') else { continue };
+            if models.contains_key(name) || !self.engines.contains_key(engine) {
+                continue;
+            }
+            let mut model = m.clone();
+            if let Some(rec) = self.wisdom.iter().find(|r| {
+                r.engine == engine && r.kind() == TransformKind::R2c && !r.fpms.is_empty()
+            }) {
+                model.set_base(Arc::new(StaticModel::new(rec.fpms.clone())));
             }
             models.insert(name.clone(), model);
         }
@@ -442,10 +534,37 @@ impl Dft2dService {
         let Some(backend) = self.inner.engines.get(&req.engine) else {
             return Err(ServiceError::UnknownEngine(req.engine));
         };
+        // real kinds run real kernels — virtual backends only price c2c
+        if req.kind.is_real() && matches!(backend, Backend::Virtual(_)) {
+            return Err(ServiceError::UnsupportedKind {
+                engine: req.engine,
+                kind: req.kind.name(),
+            });
+        }
+        // kind/direction coherence: r2c is forward-only, c2r inverse-only
+        // (a mismatch is a kind problem, not a shape problem — diagnose
+        // it as such instead of sending callers to debug dimensions)
+        let dir_ok = match req.kind {
+            TransformKind::C2c => true,
+            TransformKind::R2c => req.direction == Direction::Forward,
+            TransformKind::C2r => req.direction == Direction::Inverse,
+        };
+        if !dir_ok {
+            return Err(ServiceError::UnsupportedKind {
+                engine: req.engine,
+                kind: match req.kind {
+                    TransformKind::R2c => "inverse r2c (r2c is forward-only)",
+                    _ => "forward c2r (c2r is inverse-only)",
+                },
+            });
+        }
         let is_probe = req.matrix.rows == 0 && req.matrix.cols == 0;
         let shape_ok = if is_probe {
             // empty-buffer probes only make sense in virtual time
-            req.n > 0 && matches!(backend, Backend::Virtual(_))
+            req.n > 0 && req.kind == TransformKind::C2c && matches!(backend, Backend::Virtual(_))
+        } else if req.kind == TransformKind::C2r {
+            // packed half-spectrum input: n rows × (n/2+1) columns
+            req.n > 0 && req.matrix.rows == req.n && req.matrix.cols == half_cols(req.n)
         } else {
             req.matrix.rows == req.matrix.cols && req.matrix.rows == req.n && req.n > 0
         };
@@ -453,7 +572,7 @@ impl Dft2dService {
             return Err(ServiceError::BadShape { rows: req.matrix.rows, cols: req.matrix.cols });
         }
         let n = req.n;
-        let cost = self.inner.predicted_cost(&req.engine, n);
+        let cost = self.inner.predicted_cost(&req.engine, n, req.kind);
         if let Some(hint) = req.deadline_hint {
             if cost > hint {
                 self.inner.stats.record_rejection();
@@ -463,7 +582,7 @@ impl Dft2dService {
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         let pending = Pending { id, matrix: req.matrix, tx, submitted: Instant::now() };
-        let key = BatchKey::new(&req.engine, n, req.direction);
+        let key = BatchKey::new_kind(&req.engine, n, req.direction, req.kind);
         {
             let mut q = self.inner.queue.lock().unwrap();
             // re-check under the queue lock: shutdown() flushes the queue
@@ -529,8 +648,18 @@ impl Dft2dService {
     /// The memoized plan for `(engine, n)` under the service's group
     /// count, if planning has happened.
     pub fn planned(&self, engine: &str, n: usize) -> Option<PlannedTransform> {
+        self.planned_kind(engine, n, TransformKind::C2c)
+    }
+
+    /// [`Dft2dService::planned`] for an explicit transform kind.
+    pub fn planned_kind(
+        &self,
+        engine: &str,
+        n: usize,
+        kind: TransformKind,
+    ) -> Option<PlannedTransform> {
         let p = self.inner.plan_groups(engine);
-        self.inner.wisdom.lock().unwrap().get(engine, n, p).map(|r| r.plan.clone())
+        self.inner.wisdom.lock().unwrap().get_kind(engine, n, p, kind).map(|r| r.plan.clone())
     }
 
     /// Current virtual clock (virtual backends only; 0 otherwise).
@@ -588,19 +717,22 @@ impl Inner {
     /// model's refined estimate (what the machine actually did
     /// recently), then the wisdom record's planned prediction, then the
     /// conservative flat-speed fallback. SPJF weights and admission
-    /// both come through here — scheduling follows the machine.
-    fn predicted_cost(&self, engine: &str, n: usize) -> f64 {
+    /// both come through here — scheduling follows the machine. Each
+    /// `(engine, kind)` plane has its own model stream and wisdom key:
+    /// real requests do ~half the work, so sharing an estimate with c2c
+    /// would starve one kind or admit the other into missed deadlines.
+    fn predicted_cost(&self, engine: &str, n: usize, kind: TransformKind) -> f64 {
         let (x, y) = observation_point(n);
-        if let Some(model) = self.models.lock().unwrap().get(engine) {
+        if let Some(model) = self.models.lock().unwrap().get(&model_key(engine, kind)) {
             if let Some(t) = model.refined_time(x, y) {
                 return t;
             }
         }
         let p = self.plan_groups(engine);
-        if let Some(rec) = self.wisdom.lock().unwrap().get(engine, n, p) {
+        if let Some(rec) = self.wisdom.lock().unwrap().get_kind(engine, n, p, kind) {
             return rec.predicted_cost_s;
         }
-        fft2d_flops(n) / (DEFAULT_MFLOPS * 1e6)
+        kind_flops(n, kind) / (DEFAULT_MFLOPS * 1e6)
     }
 
     /// The simulator's fixed ground-truth per-request cost for a
@@ -628,14 +760,16 @@ impl Inner {
     fn plan_for(&self, key: &BatchKey) -> (WisdomRecord, bool) {
         let backend = self.engines.get(&key.engine).expect("validated at submit");
         let p = self.plan_groups(&key.engine);
-        let wkey: wisdom::WisdomKey = (key.engine.clone(), key.n, p);
+        let kind = key.kind.plan_kind();
+        let wkey: wisdom::WisdomKey = (key.engine.clone(), key.n, p, kind);
 
         // claim the key, or wait for whoever holds it (lock order:
         // planning_inflight, then wisdom — never the reverse)
         {
             let mut inflight = self.planning_inflight.lock().unwrap();
             loop {
-                if let Some(rec) = self.wisdom.lock().unwrap().get(&key.engine, key.n, p) {
+                if let Some(rec) = self.wisdom.lock().unwrap().get_kind(&key.engine, key.n, p, kind)
+                {
                     self.stats.record_wisdom_hit();
                     return (rec.clone(), false);
                 }
@@ -649,6 +783,7 @@ impl Inner {
 
         // we own the cold plan for this key; no locks held while measuring
         self.stats.record_planning_event();
+        let mkey = model_key(&key.engine, kind);
         let rec = match backend {
             Backend::Real(engine) => {
                 let (rec, samples) = WisdomRecord::from_measurement_sampled(
@@ -656,6 +791,7 @@ impl Inner {
                     engine.as_ref(),
                     key.n,
                     &self.cfg.planning,
+                    kind,
                 );
                 rec.warm_plan_cache();
                 // profiling emits into the same model store the serving
@@ -665,20 +801,22 @@ impl Inner {
                 // count p·x; the whole-request point (2y, y) is owned by
                 // the serving executor — a one-phase profiling time there
                 // would contaminate the live whole-request estimate, so
-                // it is skipped.
+                // it is skipped. Each kind's samples feed that kind's
+                // own stream (real planes are ~2x faster).
                 {
                     let mut models = self.models.lock().unwrap();
-                    if let Some(model) = models.get_mut(&key.engine) {
-                        for (x, y, t) in samples {
-                            let platform_x = rec.p * x;
-                            if (platform_x, y) == observation_point(y) {
-                                continue;
-                            }
-                            model.observe(platform_x, y, t);
+                    let model = models
+                        .entry(mkey.clone())
+                        .or_insert_with(|| OnlineModel::new(&mkey, self.cfg.drift));
+                    for (x, y, t) in samples {
+                        let platform_x = rec.p * x;
+                        if (platform_x, y) == observation_point(y) {
+                            continue;
                         }
-                        if !rec.fpms.is_empty() {
-                            model.set_base(Arc::new(StaticModel::new(rec.fpms.clone())));
-                        }
+                        model.observe(platform_x, y, t);
+                    }
+                    if !rec.fpms.is_empty() {
+                        model.set_base(Arc::new(StaticModel::new(rec.fpms.clone())));
                     }
                 }
                 rec
@@ -728,7 +866,7 @@ impl Inner {
         self.stats.record_batch(size);
         // what the scheduler believed this batch costs per request —
         // compared against the measured time below (calibration)
-        let predicted_s = self.predicted_cost(&key.engine, key.n);
+        let predicted_s = self.predicted_cost(&key.engine, key.n, key.kind);
 
         let mut items: Vec<Pending> = Vec::with_capacity(size);
         let mut waits: Vec<f64> = Vec::with_capacity(size);
@@ -747,36 +885,93 @@ impl Inner {
         let exec_result: Result<(), ServiceError> = match &backend {
             Backend::Real(engine) => {
                 let t0 = Instant::now();
-                let r = if key.forward {
-                    let mut mats: Vec<&mut SignalMatrix> =
-                        items.iter_mut().map(|p| &mut p.matrix).collect();
-                    match batch::execute_planned_batch_with_mode(
-                        engine.as_ref(),
-                        &rec.plan,
-                        &mut mats,
-                        rec.t,
-                        self.cfg.transpose_block,
-                        self.cfg.pipeline,
-                    ) {
-                        Ok(timings) => {
-                            phase_timings = Some(timings);
-                            Ok(())
+                let r = match key.kind {
+                    TransformKind::R2c => {
+                        // real forward: the batched stage-DAG real
+                        // executor writes packed half spectra into fresh
+                        // output matrices (the transform is out-of-place
+                        // by nature — input is real, output complex)
+                        let n = key.n;
+                        let nc = half_cols(n);
+                        let mut outs: Vec<SignalMatrix> =
+                            (0..size).map(|_| SignalMatrix::zeros(n, nc)).collect();
+                        let r = {
+                            let srcs: Vec<&[f64]> =
+                                items.iter().map(|p| p.matrix.re.as_slice()).collect();
+                            let mut dst_refs: Vec<&mut SignalMatrix> = outs.iter_mut().collect();
+                            execute_real_batch_with_mode(
+                                engine.as_ref(),
+                                &rec.plan,
+                                &srcs,
+                                &mut dst_refs,
+                                rec.t,
+                                self.cfg.pipeline,
+                            )
+                        };
+                        match r {
+                            Ok(timings) => {
+                                phase_timings = Some(timings);
+                                for (p, out) in items.iter_mut().zip(outs) {
+                                    p.matrix = out;
+                                }
+                                Ok(())
+                            }
+                            Err(e) => Err(ServiceError::Engine(e.to_string())),
                         }
-                        Err(e) => Err(ServiceError::Engine(e.to_string())),
                     }
-                } else {
-                    // inverse: exact dft2d path (padding is forward-only
-                    // spectral interpolation — see coordinator::pad docs)
-                    let threads = rec.p * rec.t;
-                    for p in items.iter_mut() {
-                        crate::dft::dft2d::dft2d_with_mode(
-                            &mut p.matrix,
-                            Direction::Inverse,
-                            threads,
+                    TransformKind::C2r => {
+                        // real inverse: exact irfft2d path (like c2c
+                        // inverse, padding is forward-only); the owned
+                        // variant runs the column phase in place on the
+                        // request's own spectrum — no clone
+                        let threads = rec.p * rec.t;
+                        for p in items.iter_mut() {
+                            let packed =
+                                std::mem::replace(&mut p.matrix, SignalMatrix::zeros(0, 0));
+                            let real =
+                                irfft2d_owned_with_mode(packed, threads, self.cfg.pipeline);
+                            let len = real.data.len();
+                            p.matrix = SignalMatrix {
+                                rows: real.rows,
+                                cols: real.cols,
+                                re: real.data,
+                                im: vec![0.0; len],
+                            };
+                        }
+                        Ok(())
+                    }
+                    TransformKind::C2c if key.forward => {
+                        let mut mats: Vec<&mut SignalMatrix> =
+                            items.iter_mut().map(|p| &mut p.matrix).collect();
+                        match batch::execute_planned_batch_with_mode(
+                            engine.as_ref(),
+                            &rec.plan,
+                            &mut mats,
+                            rec.t,
+                            self.cfg.transpose_block,
                             self.cfg.pipeline,
-                        );
+                        ) {
+                            Ok(timings) => {
+                                phase_timings = Some(timings);
+                                Ok(())
+                            }
+                            Err(e) => Err(ServiceError::Engine(e.to_string())),
+                        }
                     }
-                    Ok(())
+                    TransformKind::C2c => {
+                        // inverse: exact dft2d path (padding is forward-only
+                        // spectral interpolation — see coordinator::pad docs)
+                        let threads = rec.p * rec.t;
+                        for p in items.iter_mut() {
+                            crate::dft::dft2d::dft2d_with_mode(
+                                &mut p.matrix,
+                                Direction::Inverse,
+                                threads,
+                                self.cfg.pipeline,
+                            );
+                        }
+                        Ok(())
+                    }
                 };
                 executed_batch_s = t0.elapsed().as_secs_f64();
                 r
@@ -814,24 +1009,23 @@ impl Inner {
             let (x, y) = observation_point(key.n);
             drifted = {
                 let mut models = self.models.lock().unwrap();
-                match models.get_mut(&key.engine) {
-                    Some(m) => {
-                        // phase streams first: a whole-point drift event
-                        // classifies itself from them (compute vs
-                        // memory-bandwidth) at the moment it fires
-                        if let Some(ph) = phase_timings {
-                            let b = size.max(1) as f64;
-                            m.observe_phase(Phase::Row, x, y, ph.row_s / b);
-                            m.observe_phase(Phase::Col, x, y, ph.col_s / b);
-                        }
-                        m.observe(x, y, executed_s).is_some()
-                    }
-                    None => false,
+                let mkey = model_key(&key.engine, key.kind);
+                let m = models
+                    .entry(mkey.clone())
+                    .or_insert_with(|| OnlineModel::new(&mkey, self.cfg.drift));
+                // phase streams first: a whole-point drift event
+                // classifies itself from them (compute vs
+                // memory-bandwidth) at the moment it fires
+                if let Some(ph) = phase_timings {
+                    let b = size.max(1) as f64;
+                    m.observe_phase(Phase::Row, x, y, ph.row_s / b);
+                    m.observe_phase(Phase::Col, x, y, ph.col_s / b);
                 }
+                m.observe(x, y, executed_s).is_some()
             };
         }
 
-        let flops = fft2d_flops(key.n);
+        let flops = kind_flops(key.n, key.kind);
         for (p, wait) in items.into_iter().zip(waits) {
             match &exec_result {
                 Ok(()) => {
@@ -880,12 +1074,13 @@ impl Inner {
     fn drift_replan(&self, key: &BatchKey, old: &WisdomRecord) {
         self.stats.record_drift();
         let p = self.plan_groups(&key.engine);
-        self.wisdom.lock().unwrap().remove(&key.engine, key.n, p);
-        let is_real = matches!(self.engines.get(&key.engine), Some(Backend::Real(_)));
-        if is_real && !old.fpms.is_empty() {
+        let kind = key.kind.plan_kind();
+        self.wisdom.lock().unwrap().remove(&key.engine, key.n, p, kind);
+        let is_real_backend = matches!(self.engines.get(&key.engine), Some(Backend::Real(_)));
+        if is_real_backend && !old.fpms.is_empty() {
             let model = {
                 let mut models = self.models.lock().unwrap();
-                models.get_mut(&key.engine).map(|m| {
+                models.get_mut(&model_key(&key.engine, kind)).map(|m| {
                     // the invalidated record's surfaces are this key's
                     // own y = N sections — the right base to rescale
                     m.set_base(Arc::new(StaticModel::new(old.fpms.clone())));
@@ -894,7 +1089,7 @@ impl Inner {
             };
             if let Some(model) = model {
                 self.stats.record_planning_event();
-                let rec = WisdomRecord::from_model(
+                let rec = WisdomRecord::from_model_kind(
                     &key.engine,
                     &model,
                     key.n,
@@ -903,6 +1098,7 @@ impl Inner {
                     old.eps,
                     self.cfg.planning.pad_cost,
                     wisdom::PAD_SEARCH_WINDOW,
+                    kind,
                 );
                 rec.warm_plan_cache();
                 self.wisdom.lock().unwrap().insert(rec);
@@ -1014,7 +1210,7 @@ mod tests {
             .wisdom(store)
             .paused()
             .build();
-        let predicted = svc.inner.predicted_cost("sim-mkl", 24_704);
+        let predicted = svc.inner.predicted_cost("sim-mkl", 24_704, TransformKind::C2c);
         assert!(predicted > 0.0, "wisdom-backed prediction must exist");
         // a deadline below the FPM-predicted cost is rejected at submit
         let req = Dft2dRequest::probe("sim-mkl", 24_704).with_deadline(predicted / 2.0);
@@ -1027,6 +1223,56 @@ mod tests {
         svc.start();
         let resp = h.wait().unwrap();
         assert_eq!(resp.report.batched_with, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn real_forward_then_inverse_roundtrips() {
+        let svc = ServiceBuilder::new(quick_cfg()).native().build();
+        let orig = SignalMatrix::random_real(16, 16, 21);
+        let fwd = svc
+            .submit(Dft2dRequest::real_forward("native", orig.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        // the response is the Hermitian-packed half spectrum
+        assert_eq!((fwd.matrix.rows, fwd.matrix.cols), (16, half_cols(16)));
+        let back = svc
+            .submit(Dft2dRequest::real_inverse("native", 16, fwd.matrix))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!((back.matrix.rows, back.matrix.cols), (16, 16));
+        let err = back.matrix.max_abs_diff(&orig) / orig.norm().max(1.0);
+        assert!(err < 1e-10, "real roundtrip rel err {err}");
+        // the real plane planned its own kind-keyed wisdom record
+        assert_eq!(
+            svc.planned_kind("native", 16, TransformKind::R2c).unwrap().kind,
+            TransformKind::R2c
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn real_kind_validation() {
+        let svc = ServiceBuilder::new(quick_cfg())
+            .native()
+            .virtual_package("sim-mkl", Package::Mkl)
+            .build();
+        // real kinds never run on virtual backends (nothing to pack)
+        let err = svc
+            .submit(Dft2dRequest::real_forward("sim-mkl", SignalMatrix::random_real(8, 8, 1)))
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::UnsupportedKind { .. }), "{err}");
+        // c2r input must be the packed n×(n/2+1) rectangle
+        let err = svc
+            .submit(Dft2dRequest::real_inverse("native", 8, SignalMatrix::zeros(8, 8)))
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::BadShape { .. }), "{err}");
+        // per-kind model keys: c2c stream is the bare engine name
+        assert_eq!(model_key("native", TransformKind::C2c), "native");
+        assert_eq!(model_key("native", TransformKind::R2c), "native+r2c");
+        assert_eq!(model_key("native", TransformKind::C2r), "native+r2c");
         svc.shutdown();
     }
 

@@ -17,18 +17,26 @@
 //! at paper-scale sizes without executing a single FFT.
 
 use crate::dft::fft::Direction;
+use crate::dft::real::TransformKind;
 
-/// What coalesces: same engine, same size, same direction.
+/// What coalesces: same engine, same size, same direction, same
+/// transform kind (r2c batches run the real executor — mixing them
+/// with c2c work would force the slower path on everyone).
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct BatchKey {
     pub engine: String,
     pub n: usize,
     pub forward: bool,
+    pub kind: TransformKind,
 }
 
 impl BatchKey {
     pub fn new(engine: &str, n: usize, dir: Direction) -> BatchKey {
-        BatchKey { engine: engine.to_string(), n, forward: dir == Direction::Forward }
+        BatchKey::new_kind(engine, n, dir, TransformKind::C2c)
+    }
+
+    pub fn new_kind(engine: &str, n: usize, dir: Direction, kind: TransformKind) -> BatchKey {
+        BatchKey { engine: engine.to_string(), n, forward: dir == Direction::Forward, kind }
     }
 
     pub fn direction(&self) -> Direction {
@@ -239,5 +247,24 @@ mod tests {
         assert_eq!(b.entries.len(), 1);
         assert_eq!(b.key.direction(), Direction::Forward);
         assert_eq!(q.pop(0.0, f64::INFINITY, 8).unwrap().key.direction(), Direction::Inverse);
+    }
+
+    #[test]
+    fn kind_separates_buckets() {
+        // an r2c request must never coalesce with a c2c request of the
+        // same (engine, n, direction) — they run different executors
+        let mut q: BatchQueue<u32> = BatchQueue::new();
+        q.push(BatchKey::new("native", 64, Direction::Forward), 0.1, 1, 0.0);
+        q.push(
+            BatchKey::new_kind("native", 64, Direction::Forward, TransformKind::R2c),
+            0.1,
+            2,
+            0.0,
+        );
+        let b = q.pop(0.0, f64::INFINITY, 8).unwrap();
+        assert_eq!(b.entries.len(), 1);
+        let b2 = q.pop(0.0, f64::INFINITY, 8).unwrap();
+        assert_eq!(b2.entries.len(), 1);
+        assert_ne!(b.key.kind, b2.key.kind);
     }
 }

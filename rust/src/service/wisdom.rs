@@ -2,10 +2,16 @@
 //!
 //! The expensive inputs of a PFFT run — FPM construction (the paper's
 //! "96-hour surface" problem, §V) and the POPTA/HPOPTA + pad search —
-//! depend only on `(engine, N, p)`, never on the signal. The store
-//! memoizes one [`WisdomRecord`] per key and persists the whole map as
-//! JSON via [`crate::util::json`], so a restarted server skips
+//! depend only on `(engine, N, p, kind)`, never on the signal. The
+//! store memoizes one [`WisdomRecord`] per key and persists the whole
+//! map as JSON via [`crate::util::json`], so a restarted server skips
 //! re-planning entirely (the analogue of `fftw_import_wisdom`).
+//!
+//! Records are keyed per [`TransformKind`] plane: real (r2c) planes run
+//! roughly 2x faster than c2c, so their measured surfaces — and hence
+//! their POPTA/HPOPTA partitions and pad choices — are separate
+//! artifacts. The JSON artifact is **version 3** (per-record `kind`
+//! field); version-2 files load with every record as c2c.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -15,6 +21,7 @@ use crate::coordinator::group::GroupConfig;
 use crate::coordinator::pad::{PadCost, PadDecision};
 use crate::coordinator::partition::Algorithm;
 use crate::coordinator::plan::PlannedTransform;
+use crate::dft::real::TransformKind;
 use crate::model::{OnlineModel, PerfModel};
 use crate::profiler::{build_fpms_with, ProfileSpec};
 use crate::simulator::vexec::predict_point;
@@ -94,9 +101,15 @@ pub struct WisdomRecord {
 }
 
 impl WisdomRecord {
-    /// Key inside the store.
+    /// Key inside the store. The transform kind lives on the plan — a
+    /// record plans exactly one (engine, N, p, kind) plane.
     pub fn key(&self) -> WisdomKey {
-        (self.engine.clone(), self.n, self.p)
+        (self.engine.clone(), self.n, self.p, self.plan.kind)
+    }
+
+    /// The transform kind this record's plan targets.
+    pub fn kind(&self) -> TransformKind {
+        self.plan.kind
     }
 
     /// Plan by *measuring* a real engine: build the y = N plane with the
@@ -110,7 +123,21 @@ impl WisdomRecord {
         n: usize,
         cfg: &PlanningConfig,
     ) -> WisdomRecord {
-        Self::from_measurement_sampled(engine_label, engine, n, cfg).0
+        Self::from_measurement_sampled(engine_label, engine, n, cfg, TransformKind::C2c).0
+    }
+
+    /// [`from_measurement`](WisdomRecord::from_measurement) for an
+    /// explicit transform kind: real (r2c) planes are profiled with the
+    /// r2c pair kernel, so their surfaces — and the partitions planned
+    /// over them — reflect the real path's ~2x row-phase speed.
+    pub fn from_measurement_kind(
+        engine_label: &str,
+        engine: &dyn RowFftEngine,
+        n: usize,
+        cfg: &PlanningConfig,
+        kind: TransformKind,
+    ) -> WisdomRecord {
+        Self::from_measurement_sampled(engine_label, engine, n, cfg, kind).0
     }
 
     /// [`from_measurement`](WisdomRecord::from_measurement) that also
@@ -126,7 +153,9 @@ impl WisdomRecord {
         engine: &dyn RowFftEngine,
         n: usize,
         cfg: &PlanningConfig,
+        kind: TransformKind,
     ) -> (WisdomRecord, Vec<(usize, usize, f64)>) {
+        let kind = kind.plan_kind();
         let points = cfg.profile_points.clamp(2, n.max(2));
         let mut xs: Vec<usize> = (1..=points).map(|k| (k * n / points).max(1)).collect();
         xs.dedup();
@@ -140,10 +169,12 @@ impl WisdomRecord {
         let mut spec = ProfileSpec::new(xs, ys, GroupConfig::new(cfg.groups, cfg.threads_per_group));
         spec.rep_scale = cfg.rep_scale.max(1);
         spec.budget_s = cfg.profile_budget_s;
+        spec.kind = kind;
         let mut samples: Vec<(usize, usize, f64)> = Vec::new();
         let fpms = build_fpms_with(engine, &spec, |x, y, t| samples.push((x, y, t)));
         let plan = PlannedTransform::from_fpms(&fpms, n, cfg.eps, cfg.pad_cost)
-            .unwrap_or_else(|_| PlannedTransform::balanced_fallback(cfg.groups, n));
+            .unwrap_or_else(|_| PlannedTransform::balanced_fallback(cfg.groups, n))
+            .with_kind(kind);
         let predicted_cost_s = plan.predicted_seconds(DEFAULT_MFLOPS);
         let rec = WisdomRecord {
             engine: engine_label.to_string(),
@@ -175,13 +206,43 @@ impl WisdomRecord {
         pad_cost: Option<PadCost>,
         pad_window: usize,
     ) -> WisdomRecord {
+        Self::from_model_kind(
+            engine_label,
+            model,
+            n,
+            p,
+            t,
+            eps,
+            pad_cost,
+            pad_window,
+            TransformKind::C2c,
+        )
+    }
+
+    /// [`from_model`](WisdomRecord::from_model) for an explicit kind:
+    /// the drift-recovery replan of a real-plane record runs against
+    /// the *real* model stream's refreshed sections.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_model_kind(
+        engine_label: &str,
+        model: &OnlineModel,
+        n: usize,
+        p: usize,
+        t: usize,
+        eps: f64,
+        pad_cost: Option<PadCost>,
+        pad_window: usize,
+        kind: TransformKind,
+    ) -> WisdomRecord {
+        let kind = kind.plan_kind();
         let plan = if model.groups() == 0 {
             // no base model attached: sections are empty, fall back
             PlannedTransform::balanced_fallback(p, n)
         } else {
             PlannedTransform::from_model(model, n, eps, pad_cost, pad_window)
                 .unwrap_or_else(|_| PlannedTransform::balanced_fallback(p, n))
-        };
+        }
+        .with_kind(kind);
         // cost source order: refined whole-request estimate, then the
         // model's (speed-rescaled) base prediction, then the plan's own
         // makespan-derived estimate — never a flat guess while the model
@@ -224,6 +285,7 @@ impl WisdomRecord {
             pads,
             algorithm: if point.used_hpopta { Algorithm::Hpopta } else { Algorithm::Popta },
             makespan: f64::NAN,
+            kind: TransformKind::C2c,
         };
         WisdomRecord {
             engine: engine_label.to_string(),
@@ -257,6 +319,7 @@ impl WisdomRecord {
             .set("p", self.p)
             .set("t", self.t)
             .set("eps", self.eps)
+            .set("kind", self.plan.kind.name())
             .set("algorithm", self.plan.algorithm.name())
             .set("d", self.plan.d.clone())
             .set("pads", Json::Arr(pads))
@@ -279,6 +342,12 @@ impl WisdomRecord {
         let p = usize_field("p")?;
         let t = usize_field("t")?;
         let eps = f64_field("eps")?;
+        // the kind field arrived with JSON v3 — v2 records are all c2c;
+        // an unparsable value is corrupt, not legacy
+        let kind = match j.get("kind").and_then(Json::as_str) {
+            Some(s) => TransformKind::parse(s).ok_or(format!("wisdom: bad kind `{s}`"))?,
+            None => TransformKind::C2c,
+        };
         let algorithm = Algorithm::parse(&str_field("algorithm")?)
             .ok_or_else(|| "wisdom: bad algorithm".to_string())?;
         let d: Vec<usize> = j
@@ -344,7 +413,7 @@ impl WisdomRecord {
             p,
             t,
             eps,
-            plan: PlannedTransform { n, d, pads, algorithm, makespan },
+            plan: PlannedTransform { n, d, pads, algorithm, makespan, kind },
             predicted_cost_s,
             factors,
             fpms,
@@ -369,12 +438,13 @@ impl WisdomRecord {
     }
 }
 
-/// `(engine, n, p)` — what a plan depends on.
-pub type WisdomKey = (String, usize, usize);
+/// `(engine, n, p, kind)` — what a plan depends on.
+pub type WisdomKey = (String, usize, usize, TransformKind);
 
 /// The persistent map of planning outcomes, plus the per-engine online
-/// model deltas + drift log (version 2 of the JSON artifact; version-1
-/// files load with no model state).
+/// model deltas + drift log. JSON artifact version 3 (kind-keyed
+/// records); version-2 files load with every record as c2c, version-1
+/// files additionally load with no model state.
 #[derive(Clone, Debug, Default)]
 pub struct WisdomStore {
     records: BTreeMap<WisdomKey, WisdomRecord>,
@@ -394,8 +464,20 @@ impl WisdomStore {
         self.records.is_empty()
     }
 
+    /// Lookup of a c2c plan (the overwhelmingly common key shape).
     pub fn get(&self, engine: &str, n: usize, p: usize) -> Option<&WisdomRecord> {
-        self.records.get(&(engine.to_string(), n, p))
+        self.get_kind(engine, n, p, TransformKind::C2c)
+    }
+
+    /// Kind-keyed lookup (real planes are separate artifacts).
+    pub fn get_kind(
+        &self,
+        engine: &str,
+        n: usize,
+        p: usize,
+        kind: TransformKind,
+    ) -> Option<&WisdomRecord> {
+        self.records.get(&(engine.to_string(), n, p, kind.plan_kind()))
     }
 
     /// Insert (replacing any previous record for the key).
@@ -405,8 +487,14 @@ impl WisdomStore {
 
     /// Drop a record (drift invalidation): the next request for the key
     /// pays a fresh planning event against the refreshed model.
-    pub fn remove(&mut self, engine: &str, n: usize, p: usize) -> Option<WisdomRecord> {
-        self.records.remove(&(engine.to_string(), n, p))
+    pub fn remove(
+        &mut self,
+        engine: &str,
+        n: usize,
+        p: usize,
+        kind: TransformKind,
+    ) -> Option<WisdomRecord> {
+        self.records.remove(&(engine.to_string(), n, p, kind.plan_kind()))
     }
 
     pub fn iter(&self) -> impl Iterator<Item = &WisdomRecord> {
@@ -434,7 +522,7 @@ impl WisdomStore {
             .map(|(e, m)| Json::obj().set("engine", e.as_str()).set("model", m.to_json()))
             .collect();
         Json::obj()
-            .set("version", 2i64)
+            .set("version", 3i64)
             .set("records", Json::Arr(recs))
             .set("models", Json::Arr(models))
     }
@@ -501,6 +589,7 @@ mod tests {
                 ],
                 algorithm: Algorithm::Hpopta,
                 makespan: 0.125,
+                kind: TransformKind::C2c,
             },
             predicted_cost_s: 0.01,
             factors: vec![2, 2, 2, 2],
@@ -514,6 +603,51 @@ mod tests {
         let j = Json::parse(&rec.to_json().to_string()).unwrap();
         let back = WisdomRecord::from_json(&j).unwrap();
         assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn kind_keyed_records_coexist_and_roundtrip() {
+        // same (engine, n, p), different kind: two separate artifacts
+        let c2c = demo_record();
+        let mut r2c = demo_record();
+        r2c.plan = r2c.plan.with_kind(TransformKind::R2c);
+        r2c.plan.d = vec![12, 4]; // real plane partitions differ
+        let mut store = WisdomStore::new();
+        store.insert(c2c.clone());
+        store.insert(r2c.clone());
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.get("native", 16, 2).unwrap().plan.d, c2c.plan.d);
+        assert_eq!(
+            store.get_kind("native", 16, 2, TransformKind::R2c).unwrap().plan.d,
+            r2c.plan.d
+        );
+        // c2r shares the r2c plane
+        assert_eq!(
+            store.get_kind("native", 16, 2, TransformKind::C2r).unwrap().plan.d,
+            r2c.plan.d
+        );
+        // both survive persistence with their kinds
+        let j = Json::parse(&store.to_json().to_string()).unwrap();
+        let back = WisdomStore::from_json(&j).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(
+            back.get_kind("native", 16, 2, TransformKind::R2c).unwrap().kind(),
+            TransformKind::R2c
+        );
+    }
+
+    #[test]
+    fn v2_records_load_as_c2c() {
+        // strip the kind field — a version-2 file
+        let mut j = demo_record().to_json();
+        if let Json::Obj(fields) = &mut j {
+            fields.retain(|(k, _)| k != "kind");
+        }
+        let back = WisdomRecord::from_json(&j).unwrap();
+        assert_eq!(back.kind(), TransformKind::C2c);
+        // corrupt kind values are rejected, not defaulted
+        let bad = demo_record().to_json().set("kind", "c2z");
+        assert!(WisdomRecord::from_json(&bad).is_err());
     }
 
     #[test]

@@ -125,6 +125,7 @@ fn warm_fft_loop_does_not_allocate_scratch() {
         ],
         algorithm: Algorithm::Hpopta,
         makespan: f64::NAN,
+        kind: hclfft::dft::real::TransformKind::C2c,
     };
     assert!(plan.is_padded(), "audit must exercise the padded tile path");
     let mut batch: Vec<SignalMatrix> =
@@ -206,4 +207,113 @@ fn warm_fft_loop_does_not_allocate_scratch() {
         .unwrap();
     }
     assert_eq!(fused.max_abs_diff(&barrier), 0.0, "warm fused pipeline must stay bit-exact");
+
+    // ----- mixed c2c/r2c padded batch (the kind-diverse serving mix) -----
+    // A warm serve loop alternating c2c and r2c padded batches must
+    // allocate no packed plane and grow no scratch arena: pair-packed
+    // row tiles, strided column tiles and the c2c tile paths all lease
+    // from the same per-thread arenas, and the r2c outputs are written
+    // into caller-owned (preallocated) packed matrices.
+    use hclfft::coordinator::real::execute_real_batch_with_mode;
+    use hclfft::dft::real::{half_cols, RealMatrix, TransformKind};
+
+    let real_plan = PlannedTransform {
+        n: pn,
+        d: vec![256, 128],
+        pads: vec![
+            PadDecision { n_padded: pn, t_unpadded: 0.0, t_padded: 0.0 },
+            PadDecision { n_padded: 480, t_unpadded: 1.0, t_padded: 0.5 },
+        ],
+        algorithm: Algorithm::Hpopta,
+        makespan: f64::NAN,
+        kind: TransformKind::R2c,
+    };
+    let real_srcs: Vec<RealMatrix> =
+        (0..2).map(|s| RealMatrix::random(pn, pn, 200 + s)).collect();
+    let mut packed_outs: Vec<SignalMatrix> =
+        (0..2).map(|_| SignalMatrix::zeros(pn, half_cols(pn))).collect();
+    let run_mixed = |batch: &mut Vec<SignalMatrix>, packed: &mut Vec<SignalMatrix>| {
+        {
+            let mut refs: Vec<&mut SignalMatrix> = batch.iter_mut().collect();
+            execute_planned_batch_with_mode(
+                &NativeEngine,
+                &plan,
+                &mut refs,
+                2,
+                64,
+                PipelineMode::Fused,
+            )
+            .unwrap();
+        }
+        {
+            let srcs: Vec<&[f64]> = real_srcs.iter().map(|m| &m.data[..]).collect();
+            let mut dst_refs: Vec<&mut SignalMatrix> = packed.iter_mut().collect();
+            execute_real_batch_with_mode(
+                &NativeEngine,
+                &real_plan,
+                &srcs,
+                &mut dst_refs,
+                2,
+                PipelineMode::Fused,
+            )
+            .unwrap();
+        }
+    };
+
+    // warmup until a full mixed pass grows no arena
+    let mut warm_iters = 0;
+    loop {
+        let before = scratch_grow_events();
+        run_mixed(&mut batch, &mut packed_outs);
+        warm_iters += 1;
+        if scratch_grow_events() == before && warm_iters >= 5 {
+            break;
+        }
+        assert!(warm_iters < 500, "mixed-kind arenas never reached steady state");
+    }
+
+    let grow_before = scratch_grow_events();
+    let bytes_before = ALLOCATED_BYTES.load(Ordering::Relaxed);
+    let iters = 10usize;
+    for _ in 0..iters {
+        run_mixed(&mut batch, &mut packed_outs);
+    }
+    let grow_delta = scratch_grow_events() - grow_before;
+    let bytes_delta = ALLOCATED_BYTES.load(Ordering::Relaxed) - bytes_before;
+
+    // arena growth stays bounded by the thread population (a late
+    // thread may warm pair + gather arenas once) — never the iteration
+    // count
+    assert!(
+        grow_delta <= 4 * (4 + 1),
+        "mixed-kind scratch arenas grew {grow_delta} times over {iters} warm iterations"
+    );
+    // per-iteration budget: two DAGs' bookkeeping. A single warm-path
+    // packed-plane allocation would cost 2 · 384 · 193 · 8 ≈ 1.2 MiB —
+    // the bound sits far below one.
+    let per_iter = bytes_delta / iters;
+    assert!(
+        per_iter < 192 * 1024,
+        "mixed c2c/r2c steady state allocates {per_iter} B/iter (total {bytes_delta} B)"
+    );
+
+    // sanity: the warm real path still matches its barrier oracle
+    let mut barrier_out: Vec<SignalMatrix> =
+        (0..2).map(|_| SignalMatrix::zeros(pn, half_cols(pn))).collect();
+    {
+        let srcs: Vec<&[f64]> = real_srcs.iter().map(|m| &m.data[..]).collect();
+        let mut dst_refs: Vec<&mut SignalMatrix> = barrier_out.iter_mut().collect();
+        execute_real_batch_with_mode(
+            &NativeEngine,
+            &real_plan,
+            &srcs,
+            &mut dst_refs,
+            2,
+            PipelineMode::Barrier,
+        )
+        .unwrap();
+    }
+    for (f, b) in packed_outs.iter().zip(&barrier_out) {
+        assert_eq!(f.max_abs_diff(b), 0.0, "warm real pipeline must stay bit-exact");
+    }
 }

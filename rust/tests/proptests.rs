@@ -440,6 +440,7 @@ fn prop_wisdom_record_json_roundtrip() {
     use hclfft::coordinator::pad::PadDecision;
     use hclfft::coordinator::partition::Algorithm;
     use hclfft::coordinator::plan::PlannedTransform;
+    use hclfft::dft::real::TransformKind;
     use hclfft::service::wisdom::WisdomRecord;
     use hclfft::util::json::Json;
     run(
@@ -479,6 +480,7 @@ fn prop_wisdom_record_json_roundtrip() {
                     algorithm: [Algorithm::Popta, Algorithm::Hpopta, Algorithm::Balanced]
                         [rng.range_usize(0, 2)],
                     makespan: if rng.next_f64() < 0.2 { f64::NAN } else { rng.next_f64() * 100.0 },
+                    kind: [TransformKind::C2c, TransformKind::R2c][rng.range_usize(0, 1)],
                 },
                 predicted_cost_s: rng.next_f64() * 10.0,
                 factors: hclfft::dft::radix::factorize_235(n).unwrap_or_default(),
@@ -499,6 +501,7 @@ fn prop_wisdom_record_json_roundtrip() {
                 || back.plan.d != rec.plan.d
                 || back.plan.pads != rec.plan.pads
                 || back.plan.algorithm != rec.plan.algorithm
+                || back.plan.kind != rec.plan.kind
                 || back.predicted_cost_s != rec.predicted_cost_s
                 || back.factors != rec.factors
                 || back.fpms != rec.fpms

@@ -1,0 +1,263 @@
+//! Integration tests of the real-input (r2c/c2r) path: correctness is
+//! anchored to the existing complex path — the packed forward output
+//! must match the c2c oracle on the real-embedded input to tight
+//! tolerance, c2r ∘ r2c must round-trip, and the two properties are
+//! exercised over random 5-smooth N, random FPM partitions, and both
+//! pipeline modes. Plus the real-kind tile-DAG scheduler-determinism
+//! regression: any worker count, same bits.
+
+use hclfft::coordinator::engine::NativeEngine;
+use hclfft::coordinator::pad::PadDecision;
+use hclfft::coordinator::partition::Algorithm;
+use hclfft::coordinator::real::{
+    execute_real_batch_with_mode, pfft_fpm_pad_real_with_mode, pfft_fpm_real_with_mode,
+};
+use hclfft::coordinator::PlannedTransform;
+use hclfft::dft::dft2d::dft2d_with_mode;
+use hclfft::dft::fft::Direction;
+use hclfft::dft::pipeline::PipelineMode;
+use hclfft::dft::radix::is_five_smooth;
+use hclfft::dft::real::{
+    crop_to_packed, embed_real, expand_packed, half_cols, irfft2d_with_mode, rfft2d_with_mode,
+    RealMatrix, TransformKind,
+};
+use hclfft::dft::SignalMatrix;
+use hclfft::util::prng::Xoshiro256;
+use hclfft::util::proptest::{run, Config};
+
+/// c2c oracle for the packed forward transform: 2D-DFT the real
+/// embedding with the barrier driver, keep the stored columns.
+fn oracle_packed(m: &RealMatrix) -> SignalMatrix {
+    let mut full = embed_real(m);
+    dft2d_with_mode(&mut full, Direction::Forward, 2, PipelineMode::Barrier);
+    crop_to_packed(&full)
+}
+
+fn rel_err(a: &SignalMatrix, b: &SignalMatrix) -> f64 {
+    a.max_abs_diff(b) / b.norm().max(1.0)
+}
+
+/// Random FPM-style partition of n rows over p groups (any shape,
+/// including zero-row groups).
+fn random_partition(rng: &mut Xoshiro256, n: usize, p: usize) -> Vec<usize> {
+    let mut d = vec![0usize; p];
+    let mut left = n;
+    for item in d.iter_mut().take(p - 1) {
+        let take = rng.range_usize(0, left);
+        *item = take;
+        left -= take;
+    }
+    d[p - 1] = left;
+    d
+}
+
+#[test]
+fn rfft2d_matches_oracle_at_paper_sizes() {
+    for &n in &[384usize, 640] {
+        let m = RealMatrix::random(n, n, n as u64);
+        let want = oracle_packed(&m);
+        for mode in [PipelineMode::Fused, PipelineMode::Barrier] {
+            let got = rfft2d_with_mode(&m, 4, mode);
+            let err = rel_err(&got, &want);
+            assert!(err < 1e-9, "n={n} {mode:?}: rel err {err}");
+        }
+    }
+}
+
+#[test]
+fn expand_recovers_full_spectrum_non_pow2() {
+    let n = 96;
+    let m = RealMatrix::random(n, n, 5);
+    let packed = rfft2d_with_mode(&m, 3, PipelineMode::Fused);
+    let full = expand_packed(&packed);
+    let mut want = embed_real(&m);
+    dft2d_with_mode(&mut want, Direction::Forward, 2, PipelineMode::Barrier);
+    let err = rel_err(&full, &want);
+    assert!(err < 1e-9, "rel err {err}");
+}
+
+#[test]
+fn prop_r2c_matches_oracle_over_smooth_sizes_partitions_and_modes() {
+    // property: for random 5-smooth N, random FPM partitions d and both
+    // pipeline modes, the planned real transform matches the c2c oracle
+    // on the real embedding, fused == barrier bit-for-bit, and
+    // c2r ∘ r2c round-trips. N capped so the O(n² log n) oracle stays
+    // fast over many cases.
+    let smooth: Vec<usize> = (8..=200usize).filter(|&n| is_five_smooth(n)).collect();
+    let cfg = Config { cases: 24, ..Config::default() };
+    run(
+        "r2c-oracle-roundtrip",
+        &cfg,
+        |rng| {
+            let n = smooth[rng.range_usize(0, smooth.len() - 1)];
+            let p = rng.range_usize(1, 4);
+            let d = random_partition(rng, n, p);
+            let seed = rng.range_usize(0, 1 << 30) as u64;
+            (n, d, seed)
+        },
+        |_| vec![],
+        |(n, d, seed)| {
+            let (n, d) = (*n, d.clone());
+            let m = RealMatrix::random(n, n, *seed);
+            let fused = pfft_fpm_real_with_mode(&NativeEngine, &m, &d, 2, PipelineMode::Fused)
+                .map_err(|e| e.to_string())?;
+            let barrier =
+                pfft_fpm_real_with_mode(&NativeEngine, &m, &d, 2, PipelineMode::Barrier)
+                    .map_err(|e| e.to_string())?;
+            if fused.max_abs_diff(&barrier) != 0.0 {
+                return Err(format!("fused != barrier bitwise (n={n}, d={d:?})"));
+            }
+            let want = oracle_packed(&m);
+            let err = rel_err(&fused, &want);
+            if err > 1e-9 {
+                return Err(format!("oracle mismatch {err} (n={n}, d={d:?})"));
+            }
+            // round-trip: c2r of the packed spectrum recovers the signal
+            for mode in [PipelineMode::Fused, PipelineMode::Barrier] {
+                let back = irfft2d_with_mode(&fused, 2, mode);
+                let rerr = back.max_abs_diff(&m) / m.norm().max(1.0);
+                if rerr > 1e-9 {
+                    return Err(format!("roundtrip err {rerr} (n={n}, {mode:?})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_padded_r2c_matches_padded_c2c() {
+    // property: with random smooth pads, the padded real row phase is
+    // the same forward-only spectral interpolation as the c2c driver's
+    // (compared on the stored columns), in both modes.
+    let smooth: Vec<usize> = (16..=160usize).filter(|&n| is_five_smooth(n)).collect();
+    let cfg = Config { cases: 12, ..Config::default() };
+    run(
+        "r2c-padded-oracle",
+        &cfg,
+        |rng| {
+            let n = smooth[rng.range_usize(0, smooth.len() - 1)];
+            let p = rng.range_usize(1, 3);
+            let d = random_partition(rng, n, p);
+            // random smooth pads >= n per group
+            let pads: Vec<usize> = (0..p)
+                .map(|_| {
+                    let above: Vec<usize> =
+                        (n..=n + 64).filter(|&v| is_five_smooth(v)).collect();
+                    above[rng.range_usize(0, above.len() - 1)]
+                })
+                .collect();
+            let seed = rng.range_usize(0, 1 << 30) as u64;
+            (n, d, pads, seed)
+        },
+        |_| vec![],
+        |(n, d, pads, seed)| {
+            let (n, d) = (*n, d.clone());
+            let pads: Vec<PadDecision> = pads
+                .iter()
+                .map(|&v| PadDecision { n_padded: v, t_unpadded: 1.0, t_padded: 0.5 })
+                .collect();
+            let m = RealMatrix::random(n, n, *seed);
+            let fused =
+                pfft_fpm_pad_real_with_mode(&NativeEngine, &m, &d, &pads, 1, PipelineMode::Fused)
+                    .map_err(|e| e.to_string())?;
+            let barrier = pfft_fpm_pad_real_with_mode(
+                &NativeEngine,
+                &m,
+                &d,
+                &pads,
+                1,
+                PipelineMode::Barrier,
+            )
+            .map_err(|e| e.to_string())?;
+            if fused.max_abs_diff(&barrier) != 0.0 {
+                return Err(format!("padded fused != barrier bitwise (n={n}, d={d:?})"));
+            }
+            // c2c padded oracle, cropped to the stored columns
+            let mut full = embed_real(&m);
+            hclfft::coordinator::pfft::pfft_fpm_pad_with_mode(
+                &NativeEngine,
+                &mut full,
+                &d,
+                &pads,
+                1,
+                64,
+                PipelineMode::Barrier,
+            )
+            .map_err(|e| e.to_string())?;
+            let want = crop_to_packed(&full);
+            let err = rel_err(&fused, &want);
+            if err > 1e-9 {
+                return Err(format!("padded oracle mismatch {err} (n={n}, d={d:?})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn real_tile_dag_scheduler_determinism() {
+    // regression: real-kind tile DAGs must produce identical bits for
+    // every worker count and schedule (tiles own disjoint index sets;
+    // execution order must never affect values)
+    let n = 80;
+    let plan = PlannedTransform {
+        n,
+        d: vec![50, 30],
+        pads: vec![
+            PadDecision { n_padded: 96, t_unpadded: 1.0, t_padded: 0.5 },
+            PadDecision { n_padded: n, t_unpadded: 1.0, t_padded: 1.0 },
+        ],
+        algorithm: Algorithm::Hpopta,
+        makespan: f64::NAN,
+        kind: TransformKind::R2c,
+    };
+    let ms: Vec<RealMatrix> = (0..2).map(|s| RealMatrix::random(n, n, 700 + s)).collect();
+    let mut reference: Option<Vec<SignalMatrix>> = None;
+    for workers in [1usize, 2, 8] {
+        let mut outs: Vec<SignalMatrix> =
+            (0..2).map(|_| SignalMatrix::zeros(n, half_cols(n))).collect();
+        {
+            let srcs: Vec<&[f64]> = ms.iter().map(|m| &m.data[..]).collect();
+            let mut dst_refs: Vec<&mut SignalMatrix> = outs.iter_mut().collect();
+            execute_real_batch_with_mode(
+                &NativeEngine,
+                &plan,
+                &srcs,
+                &mut dst_refs,
+                workers,
+                PipelineMode::Fused,
+            )
+            .unwrap();
+        }
+        match &reference {
+            None => reference = Some(outs),
+            Some(want) => {
+                for (got, want) in outs.iter().zip(want) {
+                    assert_eq!(
+                        got.max_abs_diff(want),
+                        0.0,
+                        "workers={workers} changed the bits of a real-kind tile DAG"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn odd_size_real_transform_round_trips() {
+    // odd N: half_cols = (n+1)/2, a leftover unpaired row per tile
+    let n = 45; // 3^2 · 5, odd and 5-smooth
+    assert_eq!(half_cols(n), 23);
+    let m = RealMatrix::random(n, n, 9);
+    let want = oracle_packed(&m);
+    for mode in [PipelineMode::Fused, PipelineMode::Barrier] {
+        let got = rfft2d_with_mode(&m, 3, mode);
+        let err = rel_err(&got, &want);
+        assert!(err < 1e-9, "{mode:?}: rel err {err}");
+        let back = irfft2d_with_mode(&got, 3, mode);
+        let rerr = back.max_abs_diff(&m) / m.norm().max(1.0);
+        assert!(rerr < 1e-9, "{mode:?}: roundtrip err {rerr}");
+    }
+}

@@ -7,6 +7,7 @@ use std::sync::Mutex;
 
 use hclfft::coordinator::engine::NativeEngine;
 use hclfft::dft::fft::Direction;
+use hclfft::dft::real::TransformKind;
 use hclfft::dft::SignalMatrix;
 use hclfft::service::wisdom::{PlanningConfig, WisdomRecord, WisdomStore};
 use hclfft::service::{Dft2dRequest, ResponseHandle, ServiceBuilder, ServiceConfig, ServiceError};
@@ -53,6 +54,79 @@ fn responses_bit_exact_vs_single_shot_pfft() {
         );
     }
     svc.shutdown();
+}
+
+/// Real-input path through the service: r2c responses are bit-exact
+/// against the single-shot planned real executor running the same
+/// memoized kind-keyed plan, and the kind-keyed wisdom survives a
+/// restart (warm service re-plans nothing).
+#[test]
+fn real_responses_bit_exact_and_wisdom_kind_keyed() {
+    use hclfft::coordinator::real::rfft_planned_with_mode;
+    use hclfft::dft::pipeline::PipelineMode;
+    use hclfft::dft::real::RealMatrix;
+
+    let path = tmp_path("realkind");
+    let n = 32usize;
+    let (resp_matrix, plan) = {
+        let svc = ServiceBuilder::new(quick_cfg()).native().build();
+        let orig = SignalMatrix::random_real(n, n, 77);
+        let resp = svc
+            .submit(Dft2dRequest::real_forward("native", orig.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        let plan = svc
+            .planned_kind("native", n, TransformKind::R2c)
+            .expect("kind-keyed plan memoized");
+        assert_eq!(plan.kind, TransformKind::R2c);
+        // single-shot oracle: same plan, same executor seam
+        let rm = RealMatrix { rows: n, cols: n, data: orig.re.clone() };
+        let single =
+            rfft_planned_with_mode(&NativeEngine, &plan, &rm, 1, PipelineMode::Fused).unwrap();
+        assert_eq!(
+            resp.matrix.max_abs_diff(&single),
+            0.0,
+            "service r2c output must be bit-exact vs the single-shot planned real executor"
+        );
+        svc.save_wisdom(&path).unwrap();
+        svc.shutdown();
+        (resp.matrix, plan)
+    };
+    // restart: the kind-keyed record is warm — an identical request
+    // pays zero planning events and produces identical bits
+    let svc = ServiceBuilder::new(quick_cfg())
+        .native()
+        .load_wisdom(&path)
+        .unwrap()
+        .build();
+    let orig = SignalMatrix::random_real(n, n, 77);
+    let resp = svc.submit(Dft2dRequest::real_forward("native", orig)).unwrap().wait().unwrap();
+    assert_eq!(resp.matrix.max_abs_diff(&resp_matrix), 0.0, "restart changed the bits");
+    assert!(!resp.report.planned_cold, "kind-keyed wisdom must be warm after restart");
+    assert_eq!(svc.stats().planning_events, 0);
+    assert_eq!(
+        svc.planned_kind("native", n, TransformKind::R2c).unwrap().d,
+        plan.d,
+        "restored kind-keyed partition must match"
+    );
+    svc.shutdown();
+}
+
+/// A committed version-2 wisdom file (no `kind` fields) upgrades
+/// cleanly: every record loads as c2c, and re-saving writes the
+/// kind-keyed version-3 artifact. The CI `wisdom` smoke drives the same
+/// upgrade through the CLI.
+#[test]
+fn v2_wisdom_file_upgrades_to_kind_keyed_v3() {
+    let store =
+        WisdomStore::load(std::path::Path::new("rust/tests/fixtures/wisdom_v2.json")).unwrap();
+    assert_eq!(store.len(), 1);
+    let rec = store.get("native", 16, 2).expect("v2 record loads under the c2c key");
+    assert_eq!(rec.kind(), TransformKind::C2c);
+    assert_eq!(rec.plan.d, vec![10, 6]);
+    let j = store.to_json();
+    assert_eq!(j.get("version").and_then(hclfft::util::json::Json::as_usize), Some(3));
 }
 
 /// Satellite: 8 client threads hammer the service; every response must
