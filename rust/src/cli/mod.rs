@@ -156,6 +156,27 @@ SUBCOMMANDS:
             the online model are all keyed per kind; real engines only)
             [--drift-factor <x>]   (sim-* only: slow the virtual machine
             by x before the warm pass to exercise drift -> re-planning)
+            [--mode closed|open]   (open: open-loop arrivals against a
+            sharded front end — latency measured from arrival, overload
+            sheds instead of queueing without bound)
+            open-mode options: [--rate <rps>] [--arrivals fixed|poisson]
+            [--shards <k>] [--capacity <inflight>]
+            [--route model|round-robin|both] [--slowdowns <csv>]
+            (sim-* engines replay the schedule deterministically in
+            virtual time through the real router; native runs live and
+            requires --rate)
+  serve-net TCP front end speaking the length-prefixed binary wire
+            protocol (see README §Serving architecture)
+            server: --listen <host:port>   (port 0 = ephemeral; prints
+            the bound address) [--engine native|sim-*] [--shards <k>]
+            [--capacity <inflight>] [--route model|round-robin]
+            [--workers <count>] [--batch <max>] [--p] [--t] [--pad]
+            [--wisdom <file.json>] [--no-wisdom] [--max-payload-mb <mb>]
+            [--allow-shutdown]   (honor client shutdown frames)
+            client: --connect <host:port> [--n <size>] [--kind c2c|real]
+            [--requests <count>] [--seed <u64>] [--deadline-ms <ms>]
+            [--verify]   (check spectra against the local oracle)
+            [--shutdown]   (ask the server to drain and exit)
   wisdom    Inspect or prewarm the planning wisdom store (records are
             kind-keyed; JSON v3, v2 files load as c2c)
             [--file <file.json>] [--prewarm <size[,size...]>]

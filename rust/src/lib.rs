@@ -43,6 +43,17 @@
 //!   [`simulator`] for paper-scale scheduling tests. Request lifecycle:
 //!   **submit → admit → batch → execute → respond** (see the module docs
 //!   and README §Serving).
+//! * [`serve`] — the sharded async serving front end layered on
+//!   [`service`]: non-blocking submits resolving through
+//!   [`serve::Ticket`]s, a bounded admission window that sheds with a
+//!   typed `Overloaded` error carrying the model-predicted wait, a
+//!   model-driven router placing each request on the shard with the
+//!   lowest predicted completion time (re-scored on drift events), a
+//!   zero-dependency length-prefixed TCP wire protocol + threaded
+//!   server/client, and open-loop (fixed/Poisson) load generation with
+//!   a deterministic virtual-time routing harness. Request lifecycle:
+//!   **submit → shed-or-admit → route → shard service → ticket** (see
+//!   README §Serving architecture).
 
 pub mod cli;
 pub mod config;
@@ -52,6 +63,7 @@ pub mod figures;
 pub mod model;
 pub mod profiler;
 pub mod runtime;
+pub mod serve;
 pub mod service;
 pub mod simulator;
 pub mod stats;

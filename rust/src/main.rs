@@ -7,11 +7,17 @@
 //! * `figures`  — regenerate the paper's figures/tables
 //! * `simulate` — virtual-testbed campaign summary
 //! * `bench`    — `run` measured with the MeanUsingTtest methodology
-//! * `serve-bench` — closed-loop load generator against the in-process
-//!   2D-DFT service (batching + wisdom + FPM-informed scheduling); runs
-//!   a cold and a warm pass, reports model calibration, writes the
-//!   `BENCH_serve.json` trajectory, and can inject a virtual speed
-//!   shift (`--drift-factor`) to exercise drift detection + re-planning
+//! * `serve-bench` — load generator against the in-process 2D-DFT
+//!   service. `--mode closed` (default): each client waits for its
+//!   response; cold + warm passes, model calibration, the
+//!   `BENCH_serve.json` trajectory, optional `--drift-factor` speed
+//!   shift. `--mode open`: open-loop fixed/Poisson arrivals against the
+//!   sharded front end (`serve` module) — latency from arrival,
+//!   bounded admission sheds under overload, model routing vs
+//!   round-robin (deterministic in virtual time for sim-* engines)
+//! * `serve-net` — TCP serving front end (`--listen`) and its blocking
+//!   client (`--connect`): length-prefixed binary frames over
+//!   `std::net`, typed error codes, drain-on-shutdown
 //! * `wisdom`   — inspect / prewarm the persistent planning wisdom
 //! * `model`    — inspect the online performance model (sections,
 //!   sample counts, drift events)
@@ -74,6 +80,7 @@ fn run(argv: &[String]) -> Result<(), String> {
         "figures" => cmd_figures(&args, &cfg),
         "simulate" => cmd_simulate(&args),
         "serve-bench" => cmd_serve_bench(&args, &cfg),
+        "serve-net" => cmd_serve_net(&args, &cfg),
         "wisdom" => cmd_wisdom(&args, &cfg),
         "model" => cmd_model(&args),
         other => Err(format!("unknown subcommand `{other}`")),
@@ -456,8 +463,14 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     args.validate(&[
         "n", "requests", "clients", "engine", "p", "t", "workers", "batch", "wisdom",
         "no-wisdom", "pad", "starve", "budget", "seed", "config", "drift-factor", "json",
-        "no-json", "pipeline", "kind",
+        "no-json", "pipeline", "kind", "mode", "rate", "arrivals", "shards", "capacity",
+        "route", "slowdowns",
     ])?;
+    match args.opt_or("mode", "closed").as_str() {
+        "closed" => {}
+        "open" => return cmd_serve_bench_open(args, cfg),
+        other => return Err(format!("unknown --mode `{other}` (closed|open)")),
+    }
     let pipeline = pipeline_from_args(args)?;
     let kind = kind_from_args(args)?;
     let ns = parse_csv_usize(&args.opt_or("n", "1024"))?;
@@ -651,6 +664,399 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
         return Err(format!("{} of {} request(s) failed", failures.len(), 2 * requests));
     }
     Ok(())
+}
+
+fn parse_csv_f64(s: &str) -> Result<Vec<f64>, String> {
+    s.split(',')
+        .map(|v| v.trim().parse().map_err(|_| format!("bad list item `{v}`")))
+        .collect()
+}
+
+/// `serve-bench --mode open`: open-loop arrivals (fixed/Poisson)
+/// against a sharded front end, latency measured from arrival. sim-*
+/// engines run the deterministic virtual-time harness (real router
+/// placement over modeled shards, `--slowdowns` heterogeneity, exact
+/// reproducibility); `native` drives a live [`hclfft::serve`] front on
+/// the wall clock and then needs an explicit `--rate`.
+fn cmd_serve_bench_open(args: &cli::Args, cfg: &Config) -> Result<(), String> {
+    use hclfft::serve::{
+        run_open_loop, run_virtual_open_loop, Arrivals, FrontBuilder, FrontConfig,
+        OpenLoopReport, OpenLoopSpec, RoutePolicy, VirtualShard, VirtualSpec,
+    };
+    use hclfft::service::{Dft2dRequest, ServiceBuilder, ServiceConfig};
+
+    let kind = kind_from_args(args)?;
+    let ns = parse_csv_usize(&args.opt_or("n", "1024"))?;
+    if ns.is_empty() {
+        return Err("--n requires at least one size".into());
+    }
+    let requests = args.opt_usize("requests")?.unwrap_or(200).max(1);
+    let engine = args.opt_or("engine", "sim-mkl");
+    let seed = args.opt_usize("seed")?.unwrap_or(42) as u64;
+    let shard_count = args.opt_usize("shards")?.unwrap_or(2).max(1);
+    let capacity = args.opt_usize("capacity")?.unwrap_or(8).max(1);
+    let route = args.opt_or("route", "both");
+    let policies: Vec<RoutePolicy> = if route == "both" {
+        vec![RoutePolicy::ModelFinishTime, RoutePolicy::RoundRobin]
+    } else {
+        vec![RoutePolicy::parse(&route)
+            .ok_or_else(|| format!("unknown --route `{route}` (model|round-robin|both)"))?]
+    };
+    let slowdowns: Vec<f64> = match args.opt("slowdowns") {
+        Some(s) => parse_csv_f64(s)?,
+        // heterogeneous by default: routing only matters when shards differ
+        None => (0..shard_count).map(|i| 1.0 + 1.5 * i as f64).collect(),
+    };
+    if slowdowns.len() != shard_count {
+        return Err(format!("--slowdowns needs exactly {shard_count} value(s)"));
+    }
+    if kind.is_real() && engine.starts_with("sim-") {
+        return Err("--kind real requires a real engine (sim-* backends price c2c only)".into());
+    }
+    let rate_arg = args.opt_f64("rate")?;
+    let arrivals_name = args.opt_or("arrivals", "poisson");
+
+    let mut reports: Vec<OpenLoopReport> = Vec::new();
+    if let Some(pkg) = sim_package(&engine)? {
+        let base: Vec<f64> = ns
+            .iter()
+            .map(|&n| hclfft::simulator::vexec::predict_point(pkg, n).t_fpm)
+            .collect();
+        let mean_cost = base.iter().sum::<f64>() / base.len() as f64;
+        // aggregate service rate of the modeled shards; the default
+        // offered rate doubles it — guaranteed overload, nonzero sheds
+        let capacity_rps: f64 = slowdowns.iter().map(|s| 1.0 / (mean_cost * s)).sum();
+        let rate = match rate_arg {
+            Some(r) if r > 0.0 => r,
+            _ => 2.0 * capacity_rps,
+        };
+        let arrivals =
+            Arrivals::parse(&arrivals_name, rate, seed).ok_or("bad --arrivals (fixed|poisson)")?;
+        let shards: Vec<VirtualShard> = (0..shard_count)
+            .map(|j| {
+                let true_s: Vec<f64> = base.iter().map(|b| b * slowdowns[j]).collect();
+                // the router only sees beliefs; give them a deterministic
+                // few-percent error so prediction is imperfect but useful
+                let believed_s = true_s
+                    .iter()
+                    .enumerate()
+                    .map(|(k, t)| {
+                        let h = hclfft::util::prng::hash_key(&[seed, j as u64, k as u64]);
+                        t * (1.0 + ((h % 1000) as f64 / 1000.0 - 0.5) * 0.06)
+                    })
+                    .collect();
+                VirtualShard { name: format!("s{j}"), true_s, believed_s }
+            })
+            .collect();
+        println!(
+            "serve-bench open: engine {engine} | sizes {ns:?} | {requests} arrivals \
+             ({} @ {rate:.1} rps vs ~{capacity_rps:.1} rps capacity) | {shard_count} shard(s) \
+             slowdowns {slowdowns:?} | window {capacity} | virtual time",
+            arrivals.name()
+        );
+        for &policy in &policies {
+            let spec = VirtualSpec {
+                requests,
+                arrivals,
+                capacity,
+                policy,
+                classes: (0..ns.len()).collect(),
+            };
+            reports.push(run_virtual_open_loop(&shards, &spec));
+        }
+    } else {
+        let rate = rate_arg
+            .filter(|r| *r > 0.0)
+            .ok_or("--mode open with a real engine needs --rate (arrivals per second)")?;
+        let arrivals =
+            Arrivals::parse(&arrivals_name, rate, seed).ok_or("bad --arrivals (fixed|poisson)")?;
+        let planning = planning_from_args(args, cfg)?;
+        let scfg = ServiceConfig {
+            workers: args.opt_usize("workers")?.unwrap_or(2).max(1),
+            max_batch: args.opt_usize("batch")?.unwrap_or(8).max(1),
+            starvation_bound_s: args.opt_f64("starve")?.unwrap_or(5.0),
+            transpose_block: cfg.transpose_block,
+            pipeline: pipeline_from_args(args)?,
+            planning,
+            ..ServiceConfig::default()
+        };
+        println!(
+            "serve-bench open: engine {engine} | kind {} | sizes {ns:?} | {requests} arrivals \
+             ({arrivals_name} @ {rate:.1} rps) | {shard_count} shard(s) | window {capacity} | \
+             live",
+            kind.name()
+        );
+        for (pass, &policy) in policies.iter().enumerate() {
+            let mut fb = FrontBuilder::new(FrontConfig { capacity, policy });
+            for j in 0..shard_count {
+                fb = fb.shard(
+                    &format!("s{j}"),
+                    service_builder_for_engine(ServiceBuilder::new(scfg.clone()), &engine)?,
+                );
+            }
+            let front = fb.build();
+            let engine_name: &str = &engine;
+            let spec = OpenLoopSpec { requests, arrivals };
+            let rep = run_open_loop(
+                &front,
+                |i| {
+                    let n = ns[i % ns.len()];
+                    let mseed =
+                        hclfft::util::prng::hash_key(&[seed, pass as u64, i as u64]);
+                    if kind == TransformKind::R2c {
+                        Dft2dRequest::real_forward(
+                            engine_name,
+                            SignalMatrix::random_real(n, n, mseed),
+                        )
+                    } else {
+                        Dft2dRequest::forward(engine_name, SignalMatrix::random(n, n, mseed))
+                    }
+                },
+                &spec,
+            );
+            front.shutdown();
+            reports.push(rep);
+        }
+    }
+
+    for rep in &reports {
+        println!("{}", rep.render(&format!("serve-bench open [{}]", rep.policy)));
+        println!(
+            "open-loop[{}]: offered {} accepted {} shed {} p95 {:.3} ms p99 {:.3} ms",
+            rep.policy,
+            rep.offered,
+            rep.accepted,
+            rep.shed,
+            rep.latency_p95_s * 1e3,
+            rep.latency_p99_s * 1e3
+        );
+    }
+    if route == "both" && reports.len() == 2 {
+        let (m, r) = (&reports[0], &reports[1]);
+        let gain = if r.latency_p95_s > 0.0 {
+            (1.0 - m.latency_p95_s / r.latency_p95_s) * 100.0
+        } else {
+            0.0
+        };
+        println!(
+            "routing: model p95 {:.3} ms vs round-robin p95 {:.3} ms ({gain:+.1}% improvement)",
+            m.latency_p95_s * 1e3,
+            r.latency_p95_s * 1e3
+        );
+    }
+
+    if !args.flag("no-json") {
+        let json_path = PathBuf::from(args.opt_or("json", "BENCH_serve.json"));
+        let runs: Vec<hclfft::util::json::Json> =
+            reports.iter().map(|r| r.to_json()).collect();
+        let doc = hclfft::util::json::Json::obj()
+            .set("bench", "serve-open")
+            .set("engine", engine.as_str())
+            .set("kind", kind.name())
+            .set("sizes", ns.clone())
+            .set("requests", requests)
+            .set("shards", shard_count)
+            .set(
+                "slowdowns",
+                hclfft::util::json::Json::Arr(
+                    slowdowns.iter().map(|&s| hclfft::util::json::Json::Num(s)).collect(),
+                ),
+            )
+            .set("capacity", capacity)
+            .set("runs", hclfft::util::json::Json::Arr(runs));
+        if let Some(dir) = json_path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+        std::fs::write(&json_path, doc.to_pretty())
+            .map_err(|e| format!("cannot write {}: {e}", json_path.display()))?;
+        println!("open-loop results written to {}", json_path.display());
+    }
+    Ok(())
+}
+
+/// `serve-net`: the TCP front end. `--listen <addr>` starts a sharded
+/// serving process speaking the length-prefixed wire protocol;
+/// `--connect <addr>` runs the blocking client against one.
+fn cmd_serve_net(args: &cli::Args, cfg: &Config) -> Result<(), String> {
+    args.validate(&[
+        "listen", "connect", "engine", "shards", "capacity", "route", "workers", "batch",
+        "starve", "p", "t", "pad", "budget", "wisdom", "no-wisdom", "pipeline", "config",
+        "allow-shutdown", "max-payload-mb", "n", "kind", "requests", "seed", "verify",
+        "shutdown", "deadline-ms",
+    ])?;
+    if let Some(addr) = args.opt("listen") {
+        serve_net_server(args, cfg, addr)
+    } else if let Some(addr) = args.opt("connect") {
+        serve_net_client(args, addr)
+    } else {
+        Err("serve-net needs --listen <addr> or --connect <addr>".into())
+    }
+}
+
+fn serve_net_server(args: &cli::Args, cfg: &Config, addr: &str) -> Result<(), String> {
+    use hclfft::serve::{FrontBuilder, FrontConfig, NetConfig, NetServer, RoutePolicy};
+    use hclfft::service::{ServiceBuilder, ServiceConfig};
+
+    let engine = args.opt_or("engine", "native");
+    let shard_count = args.opt_usize("shards")?.unwrap_or(2).max(1);
+    let capacity = args.opt_usize("capacity")?.unwrap_or(64).max(1);
+    let policy = RoutePolicy::parse(&args.opt_or("route", "model"))
+        .ok_or("bad --route (model|round-robin)")?;
+    let planning = planning_from_args(args, cfg)?;
+    let scfg = ServiceConfig {
+        workers: args.opt_usize("workers")?.unwrap_or(2).max(1),
+        max_batch: args.opt_usize("batch")?.unwrap_or(8).max(1),
+        starvation_bound_s: args.opt_f64("starve")?.unwrap_or(5.0),
+        transpose_block: cfg.transpose_block,
+        pipeline: pipeline_from_args(args)?,
+        planning,
+        max_payload_bytes: args.opt_usize("max-payload-mb")?.map(|mb| mb << 20),
+        ..ServiceConfig::default()
+    };
+    let wisdom_path = if args.flag("no-wisdom") {
+        None
+    } else {
+        Some(PathBuf::from(args.opt_or("wisdom", "results/wisdom.json")))
+    };
+    let mut fb = FrontBuilder::new(FrontConfig { capacity, policy });
+    for j in 0..shard_count {
+        let mut b = service_builder_for_engine(ServiceBuilder::new(scfg.clone()), &engine)?;
+        if let Some(path) = wisdom_path.as_ref().filter(|p| p.exists()) {
+            b = b.load_wisdom(path)?;
+        }
+        fb = fb.shard(&format!("s{j}"), b);
+    }
+    let ncfg = NetConfig {
+        allow_remote_shutdown: args.flag("allow-shutdown"),
+        ..NetConfig::default()
+    };
+    let mut server = NetServer::bind(fb.build(), addr, ncfg)
+        .map_err(|e| format!("cannot bind {addr}: {e}"))?;
+    println!(
+        "serve-net: listening on {} | engine {engine} | {shard_count} shard(s) | route {} | \
+         capacity {capacity}",
+        server.local_addr(),
+        policy.name()
+    );
+    server.wait_until_stopped();
+    server.shutdown();
+    println!("{}", server.front().stats().render());
+    println!("serve-net: shutdown complete");
+    Ok(())
+}
+
+fn serve_net_client(args: &cli::Args, addr: &str) -> Result<(), String> {
+    use hclfft::serve::wire::WireRequest;
+    use hclfft::serve::NetClient;
+
+    let n = args.opt_usize("n")?.unwrap_or(64);
+    let kind = kind_from_args(args)?;
+    let requests = args.opt_usize("requests")?.unwrap_or(4).max(1);
+    let seed = args.opt_usize("seed")?.unwrap_or(42) as u64;
+    let engine = args.opt_or("engine", "native");
+    let deadline_us = args
+        .opt_f64("deadline-ms")?
+        .map(|ms| (ms * 1e3).max(0.0) as u64)
+        .unwrap_or(0);
+    let mut client =
+        NetClient::connect(addr).map_err(|e| format!("cannot connect to {addr}: {e}"))?;
+    let mut failures = 0usize;
+    for i in 0..requests {
+        let mseed = hclfft::util::prng::hash_key(&[seed, i as u64]);
+        let input = if kind == TransformKind::R2c {
+            SignalMatrix::random_real(n, n, mseed)
+        } else {
+            SignalMatrix::random(n, n, mseed)
+        };
+        let req = WireRequest {
+            req_id: 0,
+            deadline_us,
+            n: n as u64,
+            kind,
+            direction: hclfft::dft::fft::Direction::Forward,
+            engine: engine.clone(),
+            re: input.re.clone(),
+            // real signals ship with an empty (implicit all-zero) im plane
+            im: if kind == TransformKind::R2c { Vec::new() } else { input.im.clone() },
+        };
+        match client.roundtrip(req).map_err(|e| format!("io error: {e}"))? {
+            Ok(resp) => {
+                let mut line = format!(
+                    "serve-net: req {i} ok | n {n} kind {} | shard {} | {}x{} spectrum | \
+                     server latency {:.3} ms",
+                    kind.name(),
+                    resp.shard,
+                    resp.rows,
+                    resp.cols,
+                    resp.server_latency_s * 1e3
+                );
+                if args.flag("verify") {
+                    let max_err = verify_against_local(&input, kind, &resp.re, &resp.im)?;
+                    line.push_str(&format!(" | verify max err {max_err:.2e}"));
+                    if max_err > 1e-6 {
+                        line.push_str(" MISMATCH");
+                        failures += 1;
+                    }
+                }
+                println!("{line}");
+            }
+            Err((code, msg)) => {
+                eprintln!("serve-net: req {i} rejected (code {code}): {msg}");
+                failures += 1;
+            }
+        }
+    }
+    if args.flag("shutdown") {
+        let acked = client.shutdown_server().map_err(|e| format!("io error: {e}"))?;
+        println!(
+            "serve-net: server shutdown {}",
+            if acked { "acknowledged" } else { "refused (not enabled on server)" }
+        );
+    }
+    if failures > 0 {
+        return Err(format!("{failures} of {requests} request(s) failed"));
+    }
+    Ok(())
+}
+
+/// Max abs deviation of a served spectrum from the local single-thread
+/// oracle (`dft2d` for c2c, `rfft2d` for real input).
+fn verify_against_local(
+    input: &SignalMatrix,
+    kind: TransformKind,
+    got_re: &[f64],
+    got_im: &[f64],
+) -> Result<f64, String> {
+    let oracle = match kind {
+        TransformKind::C2c => {
+            let mut m = input.clone();
+            hclfft::dft::dft2d::dft2d(&mut m, hclfft::dft::fft::Direction::Forward, 1);
+            m
+        }
+        TransformKind::R2c => {
+            let rm = RealMatrix {
+                rows: input.rows,
+                cols: input.cols,
+                data: input.re.clone(),
+            };
+            hclfft::dft::real::rfft2d(&rm, 1)
+        }
+        TransformKind::C2r => return Err("--verify supports c2c and r2c requests".into()),
+    };
+    if got_re.len() != oracle.re.len() || got_im.len() != oracle.im.len() {
+        return Err(format!(
+            "verify: geometry mismatch (got {}+{} values, oracle {}+{})",
+            got_re.len(),
+            got_im.len(),
+            oracle.re.len(),
+            oracle.im.len()
+        ));
+    }
+    let mut max_err = 0.0f64;
+    for (a, b) in got_re.iter().zip(&oracle.re).chain(got_im.iter().zip(&oracle.im)) {
+        max_err = max_err.max((a - b).abs());
+    }
+    Ok(max_err)
 }
 
 /// "12.3%" or "n/a" when no calibration samples exist.

@@ -1,0 +1,321 @@
+//! The sharded front end: bounded admission + model-driven placement.
+//!
+//! A [`ShardedFront`] owns one [`Dft2dService`] per shard (each shard is
+//! meant to be built for its own core subset, so every POPTA plan inside
+//! it is computed for that shard's p) and a [`Router`] that places each
+//! admitted request on the shard with the lowest model-predicted
+//! completion time.
+//!
+//! Admission is a single bounded window across all shards: at most
+//! `capacity` requests may be in flight (admitted, not yet completed).
+//! An arrival beyond that is **shed** — the submit returns
+//! [`ServiceError::Overloaded`] immediately, carrying the FPM-predicted
+//! wait a retrying client should expect — instead of queueing without
+//! bound. That keeps the open-loop tail finite: under overload the
+//! latency of *accepted* work stays near the model's predicted
+//! completion times while the excess is refused up front.
+//!
+//! [`ShardedFront::submit`] never blocks on transform work: it
+//! validates/sheds/routes and hands back a [`Ticket`]. Completion flows
+//! from the shard worker through the service's callback into the ticket,
+//! where front-end latency is measured **from submission** (arrival),
+//! not from dequeue — the number an external client actually observes.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::service::stats::{ServiceStats, StatsCollector};
+use crate::service::{Dft2dRequest, Dft2dService, ServiceBuilder, ServiceError};
+use crate::stats::harness::fft2d_flops;
+
+use super::router::{RoutePolicy, Router, ShardEstimate};
+use super::ticket::Ticket;
+
+/// Front-end admission/placement knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontConfig {
+    /// max requests in flight (admitted, not yet completed) across all
+    /// shards — arrivals beyond this are shed with `Overloaded`
+    pub capacity: usize,
+    /// placement policy (model-predicted finish time, or round-robin)
+    pub policy: RoutePolicy,
+}
+
+impl Default for FrontConfig {
+    fn default() -> FrontConfig {
+        FrontConfig { capacity: 64, policy: RoutePolicy::ModelFinishTime }
+    }
+}
+
+/// Per-shard runtime state.
+struct ShardRt {
+    name: String,
+    svc: Dft2dService,
+    /// requests admitted to this shard and not yet completed
+    outstanding: AtomicUsize,
+    /// model-priced seconds of that outstanding work (the router's
+    /// backlog term; decremented as completions arrive)
+    outstanding_s: Mutex<f64>,
+}
+
+struct FrontInner {
+    cfg: FrontConfig,
+    shards: Vec<ShardRt>,
+    router: Router,
+    inflight: AtomicUsize,
+    draining: AtomicBool,
+    stats: StatsCollector,
+    next_id: AtomicU64,
+    started: Instant,
+}
+
+/// Sharded async serving front end. Cheap to clone (shared handle).
+#[derive(Clone)]
+pub struct ShardedFront {
+    inner: Arc<FrontInner>,
+}
+
+/// Builds a [`ShardedFront`] from named per-shard [`ServiceBuilder`]s.
+/// Pass paused builders ([`ServiceBuilder::paused`]) and call
+/// [`ShardedFront::start`] later for deterministic virtual-time tests.
+pub struct FrontBuilder {
+    cfg: FrontConfig,
+    shards: Vec<(String, ServiceBuilder)>,
+}
+
+impl FrontBuilder {
+    pub fn new(cfg: FrontConfig) -> FrontBuilder {
+        FrontBuilder { cfg, shards: Vec::new() }
+    }
+
+    /// Add a shard. The builder is consumed and built into a live (or
+    /// paused, if so configured) [`Dft2dService`].
+    pub fn shard(mut self, name: &str, builder: ServiceBuilder) -> FrontBuilder {
+        self.shards.push((name.to_string(), builder));
+        self
+    }
+
+    pub fn build(self) -> ShardedFront {
+        assert!(!self.shards.is_empty(), "front end needs at least one shard");
+        assert!(self.cfg.capacity >= 1, "admission capacity must be >= 1");
+        let shard_count = self.shards.len();
+        let shards = self
+            .shards
+            .into_iter()
+            .map(|(name, b)| ShardRt {
+                name,
+                svc: b.build(),
+                outstanding: AtomicUsize::new(0),
+                outstanding_s: Mutex::new(0.0),
+            })
+            .collect();
+        ShardedFront {
+            inner: Arc::new(FrontInner {
+                router: Router::new(self.cfg.policy, shard_count),
+                cfg: self.cfg,
+                shards,
+                inflight: AtomicUsize::new(0),
+                draining: AtomicBool::new(false),
+                stats: StatsCollector::new(),
+                next_id: AtomicU64::new(1),
+                started: Instant::now(),
+            }),
+        }
+    }
+}
+
+/// Aggregate + per-shard counters for one front end.
+pub struct FrontStats {
+    /// front-end view: latencies from submission, front-side sheds
+    pub total: ServiceStats,
+    /// each shard service's own lifetime stats, by shard name
+    pub shards: Vec<(String, ServiceStats)>,
+    /// drift-driven router re-scores so far
+    pub rescore_events: u64,
+}
+
+impl FrontStats {
+    pub fn render(&self) -> String {
+        let mut out = self.total.render_table("front end (aggregate, latency from arrival)");
+        for (name, s) in &self.shards {
+            out.push('\n');
+            out.push_str(&s.render_table(&format!("shard {name}")));
+        }
+        out.push_str(&format!("\nrouter re-scores after drift: {}\n", self.rescore_events));
+        out
+    }
+}
+
+impl ShardedFront {
+    /// Start every shard's workers (no-op for shards already running).
+    pub fn start(&self) {
+        for sh in &self.inner.shards {
+            sh.svc.start();
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    pub fn shard_name(&self, i: usize) -> &str {
+        &self.inner.shards[i].name
+    }
+
+    /// Direct handle to one shard's service (tests use this to inject
+    /// drift or snapshot wisdom; production traffic goes via `submit`).
+    pub fn shard_service(&self, i: usize) -> &Dft2dService {
+        &self.inner.shards[i].svc
+    }
+
+    /// Requests currently admitted and not yet completed.
+    pub fn inflight(&self) -> usize {
+        self.inner.inflight.load(Ordering::Acquire)
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.inner.router.policy()
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.inner.draining.load(Ordering::Acquire)
+    }
+
+    /// Non-blocking submit: shed-or-admit, route, enqueue on the chosen
+    /// shard, return a [`Ticket`]. On `Ok`, the ticket resolves exactly
+    /// once; on `Err`, nothing was enqueued anywhere.
+    pub fn submit(&self, req: Dft2dRequest) -> Result<Ticket, ServiceError> {
+        let inner = &self.inner;
+        if inner.draining.load(Ordering::Acquire) {
+            return Err(ServiceError::ShuttingDown);
+        }
+        // Reserve an admission slot, or shed. CAS keeps the window exact
+        // under concurrent submitters.
+        let mut cur = inner.inflight.load(Ordering::Acquire);
+        loop {
+            if cur >= inner.cfg.capacity {
+                inner.stats.record_shed();
+                return Err(ServiceError::Overloaded {
+                    queued: cur,
+                    capacity: inner.cfg.capacity,
+                    predicted_wait_s: self.shortest_backlog_s(),
+                });
+            }
+            match inner.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+
+        // Score every shard: model-predicted cost (cached until that
+        // shard's model drifts) + model-priced outstanding backlog.
+        let mut estimates = Vec::with_capacity(inner.shards.len());
+        let mut costs = Vec::with_capacity(inner.shards.len());
+        for (i, sh) in inner.shards.iter().enumerate() {
+            inner.router.note_drift(i, sh.svc.drift_events_total());
+            let cost_s = match inner.router.cached_cost(i, req.n, req.kind) {
+                Some(c) => c,
+                None => {
+                    let c = sh.svc.predicted_cost(&req.engine, req.n, req.kind);
+                    inner.router.store_cost(i, req.n, req.kind, c);
+                    c
+                }
+            };
+            let backlog_s = *sh.outstanding_s.lock().unwrap();
+            estimates.push(ShardEstimate { cost_s, backlog_s });
+            costs.push(cost_s);
+        }
+        let idx = inner.router.place(&estimates);
+        let cost = costs[idx];
+        let flops = fft2d_flops(req.n) * req.kind.flops_factor();
+        let id = inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let arrived = Instant::now();
+
+        // Reserve the shard's backlog *before* handing the request over:
+        // the completion callback may fire on a worker thread before
+        // submit_with even returns.
+        let sh = &inner.shards[idx];
+        sh.outstanding.fetch_add(1, Ordering::AcqRel);
+        *sh.outstanding_s.lock().unwrap() += cost;
+
+        let (ticket, completer) = Ticket::pending(id, idx);
+        let cb_inner = Arc::clone(inner);
+        let done = Box::new(move |r: Result<crate::service::Dft2dResponse, ServiceError>| {
+            let sh = &cb_inner.shards[idx];
+            {
+                let mut s = sh.outstanding_s.lock().unwrap();
+                *s = (*s - cost).max(0.0);
+            }
+            sh.outstanding.fetch_sub(1, Ordering::AcqRel);
+            cb_inner.inflight.fetch_sub(1, Ordering::AcqRel);
+            match &r {
+                Ok(resp) => cb_inner.stats.record_completion(
+                    arrived.elapsed().as_secs_f64(),
+                    resp.report.queue_wait_s,
+                    flops,
+                ),
+                Err(_) => cb_inner.stats.record_failure(),
+            }
+            completer.complete(r);
+        });
+        match sh.svc.submit_with(req, done) {
+            Ok(_) => Ok(ticket),
+            Err(e) => {
+                // synchronous rejection: the callback will never fire,
+                // so roll the reservations back here
+                {
+                    let mut s = sh.outstanding_s.lock().unwrap();
+                    *s = (*s - cost).max(0.0);
+                }
+                sh.outstanding.fetch_sub(1, Ordering::AcqRel);
+                inner.inflight.fetch_sub(1, Ordering::AcqRel);
+                inner.stats.record_rejection();
+                Err(e)
+            }
+        }
+    }
+
+    /// Cheapest model-priced backlog across shards — the predicted wait
+    /// quoted to shed clients.
+    fn shortest_backlog_s(&self) -> f64 {
+        self.inner
+            .shards
+            .iter()
+            .map(|sh| *sh.outstanding_s.lock().unwrap())
+            .fold(f64::INFINITY, f64::min)
+            .min(f64::MAX)
+    }
+
+    /// Drain and stop: new submits are rejected with `ShuttingDown`,
+    /// every already-admitted request still executes and resolves its
+    /// ticket, then the shard worker pools exit.
+    pub fn shutdown(&self) {
+        self.inner.draining.store(true, Ordering::Release);
+        for sh in &self.inner.shards {
+            // paused shards must run their accepted work before the
+            // drain completes; start() is a no-op when already running
+            sh.svc.start();
+            sh.svc.shutdown();
+        }
+    }
+
+    pub fn stats(&self) -> FrontStats {
+        let wall_s = self.inner.started.elapsed().as_secs_f64();
+        FrontStats {
+            total: self.inner.stats.snapshot(wall_s),
+            shards: self
+                .inner
+                .shards
+                .iter()
+                .map(|sh| (sh.name.clone(), sh.svc.stats()))
+                .collect(),
+            rescore_events: self.inner.router.rescore_events(),
+        }
+    }
+}

@@ -1,0 +1,477 @@
+//! Open-loop load generation and the deterministic routing harness.
+//!
+//! Closed-loop benching (`serve-bench --mode closed`) lets the system
+//! set the pace: a slow server simply receives requests more slowly, so
+//! queueing collapse is invisible. **Open-loop** generation submits on a
+//! fixed or Poisson arrival schedule regardless of completions, and
+//! measures latency **from the scheduled arrival instant** — exactly
+//! what an external client observes, coordinated-omission-free. Under
+//! overload the bounded front end sheds; the report separates shed
+//! arrivals from the latency distribution of accepted ones.
+//!
+//! Two drivers share one [`OpenLoopReport`]:
+//!
+//! * [`run_open_loop`] — wall-clock, against a live [`ShardedFront`].
+//! * [`run_virtual_open_loop`] — no threads, no clocks: modeled shards
+//!   (true cost vs model-believed cost per request class) replayed
+//!   against the **real** [`Router`] placement logic in virtual time.
+//!   Same seed, same schedule, same result on every machine — this is
+//!   the harness that proves model-driven placement beats round-robin
+//!   before any socket exists.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::service::stats::percentile;
+use crate::service::{Dft2dRequest, ServiceError};
+use crate::util::json::Json;
+use crate::util::prng::Xoshiro256;
+use crate::util::table::{fnum, Table};
+
+use super::front::ShardedFront;
+use super::router::{RoutePolicy, Router, ShardEstimate};
+
+/// Arrival process for open-loop generation. Times are seconds from the
+/// start of the run; schedules are deterministic given the seed.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrivals {
+    /// evenly spaced arrivals at `rate_rps`
+    Fixed { rate_rps: f64 },
+    /// Poisson process: exponential inter-arrival gaps at `rate_rps`
+    Poisson { rate_rps: f64, seed: u64 },
+}
+
+impl Arrivals {
+    pub fn rate_rps(&self) -> f64 {
+        match self {
+            Arrivals::Fixed { rate_rps } | Arrivals::Poisson { rate_rps, .. } => *rate_rps,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arrivals::Fixed { .. } => "fixed",
+            Arrivals::Poisson { .. } => "poisson",
+        }
+    }
+
+    /// Parse a CLI value (`fixed` | `poisson`).
+    pub fn parse(s: &str, rate_rps: f64, seed: u64) -> Option<Arrivals> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "fixed" | "uniform" => Some(Arrivals::Fixed { rate_rps }),
+            "poisson" => Some(Arrivals::Poisson { rate_rps, seed }),
+            _ => None,
+        }
+    }
+
+    /// The arrival instants for `count` requests (non-decreasing).
+    pub fn schedule(&self, count: usize) -> Vec<f64> {
+        match *self {
+            Arrivals::Fixed { rate_rps } => {
+                let gap = 1.0 / rate_rps.max(1e-9);
+                (0..count).map(|i| i as f64 * gap).collect()
+            }
+            Arrivals::Poisson { rate_rps, seed } => {
+                let mut rng = Xoshiro256::seeded(seed);
+                let rate = rate_rps.max(1e-9);
+                let mut t = 0.0;
+                (0..count)
+                    .map(|_| {
+                        // exponential gap via inverse CDF; next_f64 is in
+                        // [0,1) so the log argument stays positive
+                        t += -(1.0 - rng.next_f64()).ln() / rate;
+                        t
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// What one open-loop run produced.
+#[derive(Clone, Debug)]
+pub struct OpenLoopReport {
+    pub policy: String,
+    pub arrivals: String,
+    /// arrivals generated (accepted + shed + failed-at-submit)
+    pub offered: usize,
+    pub accepted: usize,
+    /// accepted requests that resolved Ok
+    pub completed: usize,
+    /// arrivals refused by backpressure (`Overloaded`)
+    pub shed: usize,
+    /// submit-time rejections other than shedding, plus failed outcomes
+    pub failed: usize,
+    pub duration_s: f64,
+    pub offered_rps: f64,
+    /// latency of accepted requests, measured from scheduled arrival
+    pub latency_mean_s: f64,
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    pub latency_p99_s: f64,
+    pub latency_max_s: f64,
+    /// mean relative error of the model's predicted vs actual time
+    pub predicted_err_mean: f64,
+    /// drift-driven router re-scores during the run (live runs only)
+    pub rescore_events: u64,
+}
+
+fn build_report(
+    policy: &str,
+    arrivals: &str,
+    offered: usize,
+    shed: usize,
+    failed: usize,
+    mut latencies: Vec<f64>,
+    pred_errs: &[f64],
+    duration_s: f64,
+    rescore_events: u64,
+) -> OpenLoopReport {
+    let accepted = latencies.len();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = if latencies.is_empty() {
+        0.0
+    } else {
+        latencies.iter().sum::<f64>() / latencies.len() as f64
+    };
+    let err_mean = if pred_errs.is_empty() {
+        0.0
+    } else {
+        pred_errs.iter().sum::<f64>() / pred_errs.len() as f64
+    };
+    OpenLoopReport {
+        policy: policy.to_string(),
+        arrivals: arrivals.to_string(),
+        offered,
+        accepted,
+        completed: accepted,
+        shed,
+        failed,
+        duration_s,
+        offered_rps: if duration_s > 0.0 { offered as f64 / duration_s } else { 0.0 },
+        latency_mean_s: mean,
+        latency_p50_s: percentile(&latencies, 0.50),
+        latency_p95_s: percentile(&latencies, 0.95),
+        latency_p99_s: percentile(&latencies, 0.99),
+        latency_max_s: latencies.last().copied().unwrap_or(0.0),
+        predicted_err_mean: err_mean,
+        rescore_events,
+    }
+}
+
+impl OpenLoopReport {
+    pub fn render(&self, title: &str) -> String {
+        let ms = |s: f64| format!("{:.3} ms", s * 1e3);
+        let mut t = Table::new(title, &["metric", "value"]);
+        t.row(vec!["policy".into(), self.policy.clone()]);
+        t.row(vec!["arrivals".into(), self.arrivals.clone()]);
+        t.row(vec!["offered".into(), self.offered.to_string()]);
+        t.row(vec!["accepted".into(), self.accepted.to_string()]);
+        t.row(vec!["shed".into(), self.shed.to_string()]);
+        t.row(vec!["failed".into(), self.failed.to_string()]);
+        t.row(vec!["offered rate".into(), format!("{} rps", fnum(self.offered_rps, 1))]);
+        t.row(vec!["latency mean".into(), ms(self.latency_mean_s)]);
+        t.row(vec!["latency p50".into(), ms(self.latency_p50_s)]);
+        t.row(vec!["latency p95".into(), ms(self.latency_p95_s)]);
+        t.row(vec!["latency p99".into(), ms(self.latency_p99_s)]);
+        t.row(vec!["latency max".into(), ms(self.latency_max_s)]);
+        t.row(vec![
+            "predicted-time rel err".into(),
+            format!("{:.1}%", self.predicted_err_mean * 100.0),
+        ]);
+        t.row(vec!["router re-scores".into(), self.rescore_events.to_string()]);
+        t.render()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("policy", self.policy.as_str())
+            .set("arrivals", self.arrivals.as_str())
+            .set("offered", self.offered)
+            .set("accepted", self.accepted)
+            .set("completed", self.completed)
+            .set("shed", self.shed)
+            .set("failed", self.failed)
+            .set("duration_s", self.duration_s)
+            .set("offered_rps", self.offered_rps)
+            .set("latency_mean_s", self.latency_mean_s)
+            .set("latency_p50_s", self.latency_p50_s)
+            .set("latency_p95_s", self.latency_p95_s)
+            .set("latency_p99_s", self.latency_p99_s)
+            .set("latency_max_s", self.latency_max_s)
+            .set("predicted_err_mean", self.predicted_err_mean)
+            .set("rescore_events", self.rescore_events as i64)
+    }
+}
+
+/// Parameters for a live open-loop run.
+pub struct OpenLoopSpec {
+    pub requests: usize,
+    pub arrivals: Arrivals,
+}
+
+struct Latch {
+    m: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct LatchState {
+    resolved: usize,
+    completed: usize,
+    failed: usize,
+    latencies_s: Vec<f64>,
+    pred_errs: Vec<f64>,
+}
+
+/// Drive a live front end open-loop: submit on the schedule no matter
+/// what, count sheds, then wait for every accepted ticket to resolve.
+/// `make_req` builds the i-th request (vary n/kind per index at will).
+pub fn run_open_loop(
+    front: &ShardedFront,
+    make_req: impl Fn(usize) -> Dft2dRequest,
+    spec: &OpenLoopSpec,
+) -> OpenLoopReport {
+    let schedule = spec.arrivals.schedule(spec.requests);
+    let latch = Arc::new(Latch { m: Mutex::new(LatchState::default()), cv: Condvar::new() });
+    let start = Instant::now();
+    let mut shed = 0usize;
+    let mut submit_failed = 0usize;
+    let mut accepted = 0usize;
+    for (i, &at) in schedule.iter().enumerate() {
+        let now = start.elapsed().as_secs_f64();
+        if at > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(at - now));
+        }
+        match front.submit(make_req(i)) {
+            Ok(ticket) => {
+                accepted += 1;
+                let latch = Arc::clone(&latch);
+                ticket.on_done(Box::new(move |outcome| {
+                    let done = start.elapsed().as_secs_f64();
+                    let mut g = latch.m.lock().unwrap();
+                    g.resolved += 1;
+                    match outcome {
+                        Ok(resp) => {
+                            g.completed += 1;
+                            // open-loop latency: from the *scheduled*
+                            // arrival, so submit-side stalls count too
+                            g.latencies_s.push((done - at).max(0.0));
+                            if resp.report.executed_s > 0.0 {
+                                g.pred_errs.push(
+                                    (resp.report.predicted_s - resp.report.executed_s).abs()
+                                        / resp.report.executed_s,
+                                );
+                            }
+                        }
+                        Err(_) => g.failed += 1,
+                    }
+                    latch.cv.notify_all();
+                }));
+            }
+            Err(ServiceError::Overloaded { .. }) => shed += 1,
+            Err(_) => submit_failed += 1,
+        }
+    }
+    let (completed_failed, latencies, pred_errs) = {
+        let mut g = latch.m.lock().unwrap();
+        while g.resolved < accepted {
+            g = latch.cv.wait(g).unwrap();
+        }
+        (g.failed, std::mem::take(&mut g.latencies_s), std::mem::take(&mut g.pred_errs))
+    };
+    let duration_s = start.elapsed().as_secs_f64();
+    let stats = front.stats();
+    build_report(
+        front.policy().name(),
+        spec.arrivals.name(),
+        spec.requests,
+        shed,
+        submit_failed + completed_failed,
+        latencies,
+        &pred_errs,
+        duration_s,
+        stats.rescore_events,
+    )
+}
+
+/// One modeled shard for the virtual harness: what requests of each
+/// class *actually* cost on it, and what its model *believes* they cost
+/// (the router only ever sees the beliefs).
+#[derive(Clone, Debug)]
+pub struct VirtualShard {
+    pub name: String,
+    /// true execution seconds, indexed by request class
+    pub true_s: Vec<f64>,
+    /// model-believed execution seconds, same indexing
+    pub believed_s: Vec<f64>,
+}
+
+/// Parameters for a virtual-time run.
+pub struct VirtualSpec {
+    pub requests: usize,
+    pub arrivals: Arrivals,
+    /// admission window, as in [`super::front::FrontConfig::capacity`]
+    pub capacity: usize,
+    pub policy: RoutePolicy,
+    /// request i gets class `classes[i % classes.len()]`
+    pub classes: Vec<usize>,
+}
+
+/// Replay an arrival schedule against modeled shards in virtual time,
+/// using the real [`Router`] for placement. Each shard executes its
+/// queue serially; admission counts requests in flight exactly like the
+/// live front end. Fully deterministic — no threads, no wall clock.
+pub fn run_virtual_open_loop(shards: &[VirtualShard], spec: &VirtualSpec) -> OpenLoopReport {
+    assert!(!shards.is_empty(), "virtual run needs at least one shard");
+    assert!(spec.capacity >= 1, "admission capacity must be >= 1");
+    let router = Router::new(spec.policy, shards.len());
+    let schedule = spec.arrivals.schedule(spec.requests);
+    // per-shard clocks: when the shard is truly free, and when the
+    // router's beliefs say it is free
+    let mut free_at = vec![0.0f64; shards.len()];
+    let mut believed_free_at = vec![0.0f64; shards.len()];
+    let mut finishes: Vec<f64> = Vec::with_capacity(spec.requests);
+    let mut latencies = Vec::with_capacity(spec.requests);
+    let mut pred_errs = Vec::with_capacity(spec.requests);
+    let mut shed = 0usize;
+    let mut last_event = 0.0f64;
+    for (i, &at) in schedule.iter().enumerate() {
+        last_event = last_event.max(at);
+        let class = spec.classes[i % spec.classes.len()];
+        // admitted-but-unfinished at this instant (the live front's
+        // inflight window, reconstructed from recorded finish times)
+        let inflight = finishes.iter().filter(|&&f| f > at).count();
+        if inflight >= spec.capacity {
+            shed += 1;
+            continue;
+        }
+        let estimates: Vec<ShardEstimate> = shards
+            .iter()
+            .enumerate()
+            .map(|(j, sh)| ShardEstimate {
+                cost_s: sh.believed_s[class],
+                backlog_s: (believed_free_at[j] - at).max(0.0),
+            })
+            .collect();
+        let idx = router.place(&estimates);
+        let start = free_at[idx].max(at);
+        let finish = start + shards[idx].true_s[class];
+        free_at[idx] = finish;
+        believed_free_at[idx] = believed_free_at[idx].max(at) + shards[idx].believed_s[class];
+        finishes.push(finish);
+        last_event = last_event.max(finish);
+        let actual_latency = finish - at;
+        latencies.push(actual_latency);
+        let predicted_latency = estimates[idx].finish_s();
+        if actual_latency > 0.0 {
+            pred_errs.push((predicted_latency - actual_latency).abs() / actual_latency);
+        }
+    }
+    build_report(
+        spec.policy.name(),
+        spec.arrivals.name(),
+        spec.requests,
+        shed,
+        0,
+        latencies,
+        &pred_errs,
+        last_event,
+        router.rescore_events(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_are_deterministic_and_sorted() {
+        let fixed = Arrivals::Fixed { rate_rps: 100.0 }.schedule(5);
+        assert_eq!(fixed.len(), 5);
+        for (i, t) in fixed.iter().enumerate() {
+            assert!((t - i as f64 * 0.01).abs() < 1e-12, "arrival {i} at {t}");
+        }
+        let a = Arrivals::Poisson { rate_rps: 50.0, seed: 9 }.schedule(64);
+        let b = Arrivals::Poisson { rate_rps: 50.0, seed: 9 }.schedule(64);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        // mean inter-arrival should be in the right ballpark (1/50 s)
+        let mean_gap = a.last().unwrap() / a.len() as f64;
+        assert!(mean_gap > 0.005 && mean_gap < 0.08, "mean gap {mean_gap}");
+    }
+
+    fn two_shards(fast: f64, slow: f64) -> Vec<VirtualShard> {
+        vec![
+            VirtualShard {
+                name: "fast".into(),
+                true_s: vec![fast],
+                believed_s: vec![fast * 1.02],
+            },
+            VirtualShard {
+                name: "slow".into(),
+                true_s: vec![slow],
+                believed_s: vec![slow * 0.98],
+            },
+        ]
+    }
+
+    #[test]
+    fn virtual_overload_sheds_and_bounds_tail() {
+        // 2 shards that each take 100 ms, offered 40 rps against ~20 rps
+        // of capacity: roughly half the arrivals must shed, and accepted
+        // latency stays bounded by (capacity+1) * service time
+        let shards = two_shards(0.1, 0.1);
+        let spec = VirtualSpec {
+            requests: 200,
+            arrivals: Arrivals::Poisson { rate_rps: 40.0, seed: 7 },
+            capacity: 4,
+            policy: RoutePolicy::ModelFinishTime,
+            classes: vec![0],
+        };
+        let rep = run_virtual_open_loop(&shards, &spec);
+        assert!(rep.shed > 0, "overload must shed (got {})", rep.shed);
+        assert_eq!(rep.offered, 200);
+        assert_eq!(rep.accepted + rep.shed, 200);
+        assert!(
+            rep.latency_p99_s <= 0.1 * (spec.capacity as f64 + 1.0),
+            "p99 {} not bounded by the admission window",
+            rep.latency_p99_s
+        );
+    }
+
+    #[test]
+    fn model_routing_beats_round_robin_on_heterogeneous_shards() {
+        // shard 1 is 4x slower; round-robin sends it half the traffic
+        // anyway, the model policy only what its queue justifies
+        let shards = two_shards(0.02, 0.08);
+        let mk_spec = |policy| VirtualSpec {
+            requests: 300,
+            arrivals: Arrivals::Poisson { rate_rps: 30.0, seed: 11 },
+            capacity: 8,
+            policy,
+            classes: vec![0],
+        };
+        let model = run_virtual_open_loop(&shards, &mk_spec(RoutePolicy::ModelFinishTime));
+        let rr = run_virtual_open_loop(&shards, &mk_spec(RoutePolicy::RoundRobin));
+        assert!(
+            model.latency_p95_s < rr.latency_p95_s,
+            "model p95 {} should beat round-robin p95 {}",
+            model.latency_p95_s,
+            rr.latency_p95_s
+        );
+        // beliefs are within a few percent of truth, so predicted
+        // completion times must track actual ones closely
+        assert!(
+            model.predicted_err_mean < 0.25,
+            "model-policy prediction error too large: {}",
+            model.predicted_err_mean
+        );
+        assert!(
+            model.shed <= rr.shed,
+            "model routing should not shed more than round-robin ({} vs {})",
+            model.shed,
+            rr.shed
+        );
+    }
+}

@@ -1,0 +1,55 @@
+//! Sharded, asynchronous, network-fronted serving.
+//!
+//! [`crate::service`] is one worker pool over one engine registry — a
+//! single blocking queue. This module layers the paper's thesis (*the
+//! performance model decides placement*) on top of it:
+//!
+//! * [`ticket`] — non-blocking submission: [`front::ShardedFront::submit`]
+//!   returns a [`ticket::Ticket`] immediately; callers poll, block, or
+//!   register a completion callback.
+//! * [`front`] — the sharded front end: one [`crate::service::Dft2dService`]
+//!   per configured core subset (POPTA partitions are per-p, so every
+//!   shard plans for its own p), a **bounded admission window** with
+//!   explicit backpressure (arrivals beyond capacity are shed with a
+//!   typed [`crate::service::ServiceError::Overloaded`] carrying the
+//!   FPM-predicted wait), and per-shard + aggregate stats through
+//!   [`crate::service::stats::StatsCollector`].
+//! * [`router`] — placement: each request goes to the shard with the
+//!   lowest **model-predicted completion time** (predicted execution
+//!   cost from that shard's live [`crate::model::OnlineModel`] plus its
+//!   model-priced backlog). Costs are cached per `(shard, n, kind)` and
+//!   the cache is purged — placement re-scored — whenever a shard's
+//!   model fires a drift event. Round-robin is kept as the control
+//!   arm the benches compare against.
+//! * [`wire`] / [`net`] — a zero-dependency length-prefixed TCP front
+//!   end (`std::net`): binary frames carrying (n, kind, direction,
+//!   deadline, payload planes), a threaded server, and the matching
+//!   blocking client the `serve-net` CLI and smoke tests drive.
+//! * [`loadgen`] — **open-loop** load generation: fixed or Poisson
+//!   arrival schedules where latency is measured **from arrival**, not
+//!   from dequeue, so the subsystem is judged on latency-under-load.
+//!   A deterministic virtual-time harness replays the same arrival
+//!   schedule against modeled shards through the *real* router, which
+//!   is how model-vs-round-robin placement is compared reproducibly.
+//!
+//! Request lifecycle: **submit → shed-or-admit → route → shard service
+//! (batch/plan/execute) → ticket completion**. Everything below the
+//! router is the PR-3/5 service unchanged — bit-exactness of routed
+//! output vs the single-service oracle is property-tested in
+//! `rust/tests/serve_integration.rs`.
+
+pub mod front;
+pub mod loadgen;
+pub mod net;
+pub mod router;
+pub mod ticket;
+pub mod wire;
+
+pub use front::{FrontBuilder, FrontConfig, FrontStats, ShardedFront};
+pub use loadgen::{
+    run_open_loop, run_virtual_open_loop, Arrivals, OpenLoopReport, OpenLoopSpec, VirtualShard,
+    VirtualSpec,
+};
+pub use net::{NetClient, NetConfig, NetServer};
+pub use router::{RoutePolicy, Router, ShardEstimate};
+pub use ticket::Ticket;

@@ -1,0 +1,396 @@
+//! TCP front end: threaded server + blocking client over [`super::wire`].
+//!
+//! [`NetServer`] accepts connections on a `std::net::TcpListener` (one
+//! thread per connection — the expensive part of a request is the
+//! transform, not the socket) and forwards decoded requests into a
+//! [`ShardedFront`]. Responses are written from ticket completion
+//! callbacks, so a connection can pipeline: many requests in flight,
+//! replies coming back **in completion order**, matched by `req_id`.
+//! Submit-time rejections (validation, shed, drain) return typed
+//! [`wire::Frame::Error`] frames carrying the stable
+//! [`crate::service::ServiceError::code`] value immediately.
+//!
+//! Shutdown is cooperative and drains: the stop flag interrupts reads
+//! at frame boundaries, [`NetServer::shutdown`] drains the front end
+//! (every admitted request still resolves, and its response is written
+//! before the writer handles drop), joins every thread, and closes the
+//! listener. A client may request this remotely with a shutdown frame
+//! when [`NetConfig::allow_remote_shutdown`] is set — the `serve-net`
+//! smoke test's clean-exit path.
+
+use std::io::{self, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::dft::real::{half_cols, TransformKind};
+use crate::dft::SignalMatrix;
+use crate::service::Dft2dRequest;
+
+use super::front::ShardedFront;
+use super::wire::{self, Frame, WireRequest, WireResponse, DEFAULT_MAX_FRAME};
+
+/// How long a blocked read waits before re-checking the stop flag.
+const READ_TICK: Duration = Duration::from_millis(200);
+/// Stalled mid-frame reads tolerated after stop before the connection
+/// is abandoned (~2 s at `READ_TICK`).
+const DRAIN_TICKS: u32 = 10;
+
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// per-frame payload cap (protects the server's allocator)
+    pub max_frame_bytes: usize,
+    /// honor client shutdown frames (off by default: a remote peer
+    /// should not be able to stop the server unless explicitly enabled)
+    pub allow_remote_shutdown: bool,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig { max_frame_bytes: DEFAULT_MAX_FRAME, allow_remote_shutdown: false }
+    }
+}
+
+/// The serving socket: accept loop + per-connection reader threads.
+pub struct NetServer {
+    front: ShardedFront,
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+enum ReadOutcome {
+    Frame(Frame),
+    /// peer closed (or stop was requested) at a frame boundary
+    Closed,
+}
+
+/// `read_exact` with stop-awareness: a read timeout at a frame boundary
+/// checks the stop flag and returns `Closed` instead of blocking the
+/// drain; mid-frame timeouts keep reading (a frame must never be torn)
+/// until the peer stalls past the drain budget.
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    at_boundary: bool,
+) -> io::Result<Option<()>> {
+    let mut got = 0usize;
+    let mut stalled = 0u32;
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 && at_boundary {
+                    return Ok(None);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "peer closed mid-frame",
+                ));
+            }
+            Ok(k) => {
+                got += k;
+                stalled = 0;
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::Acquire) {
+                    if got == 0 && at_boundary {
+                        return Ok(None);
+                    }
+                    stalled += 1;
+                    if stalled > DRAIN_TICKS {
+                        return Err(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            "peer stalled mid-frame during drain",
+                        ));
+                    }
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Some(()))
+}
+
+fn read_frame_interruptible(
+    stream: &mut TcpStream,
+    max_len: usize,
+    stop: &AtomicBool,
+) -> io::Result<ReadOutcome> {
+    let mut len_buf = [0u8; 4];
+    if read_full(stream, &mut len_buf, stop, true)?.is_none() {
+        return Ok(ReadOutcome::Closed);
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > max_len {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("announced frame of {len} bytes exceeds cap {max_len}"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    if read_full(stream, &mut payload, stop, false)?.is_none() {
+        return Ok(ReadOutcome::Closed);
+    }
+    Ok(ReadOutcome::Frame(wire::decode_payload(&payload)?))
+}
+
+/// Decode a wire request into a service request. Geometry follows the
+/// kind (c2r inputs are the packed `n x (n/2+1)` half spectrum); the
+/// service's admission validation rejects mismatched payloads.
+fn to_service_request(wr: WireRequest) -> Dft2dRequest {
+    let n = wr.n as usize;
+    let (rows, cols) = match wr.kind {
+        TransformKind::C2r => (n, half_cols(n)),
+        _ => (n, n),
+    };
+    let re = wr.re;
+    let im = if wr.im.is_empty() { vec![0.0; re.len()] } else { wr.im };
+    Dft2dRequest {
+        n,
+        matrix: SignalMatrix { rows, cols, re, im },
+        direction: wr.direction,
+        kind: wr.kind,
+        engine: wr.engine,
+        deadline_hint: (wr.deadline_us > 0).then(|| wr.deadline_us as f64 / 1e6),
+    }
+}
+
+fn serve_connection(
+    mut stream: TcpStream,
+    front: ShardedFront,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+) {
+    let _ = stream.set_read_timeout(Some(READ_TICK));
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    loop {
+        let frame = match read_frame_interruptible(&mut stream, cfg.max_frame_bytes, &stop) {
+            Ok(ReadOutcome::Frame(f)) => f,
+            Ok(ReadOutcome::Closed) => return,
+            Err(_) => return,
+        };
+        match frame {
+            Frame::Request(wr) => {
+                let req_id = wr.req_id;
+                let req = to_service_request(wr);
+                match front.submit(req) {
+                    Ok(ticket) => {
+                        let shard = ticket.shard() as u32;
+                        let w = Arc::clone(&writer);
+                        ticket.on_done(Box::new(move |outcome| {
+                            let frame = match outcome {
+                                Ok(resp) => Frame::Response(WireResponse {
+                                    req_id,
+                                    rows: resp.matrix.rows as u64,
+                                    cols: resp.matrix.cols as u64,
+                                    predicted_s: resp.report.predicted_s,
+                                    executed_s: resp.report.executed_s,
+                                    server_latency_s: resp.report.latency_s,
+                                    shard,
+                                    re: resp.matrix.re.clone(),
+                                    im: resp.matrix.im.clone(),
+                                }),
+                                Err(e) => Frame::Error {
+                                    req_id,
+                                    code: e.code(),
+                                    message: e.to_string(),
+                                },
+                            };
+                            // a vanished client is its own problem
+                            let _ = wire::write_frame(&mut *w.lock().unwrap(), &frame);
+                        }));
+                    }
+                    Err(e) => {
+                        let frame = Frame::Error {
+                            req_id,
+                            code: e.code(),
+                            message: e.to_string(),
+                        };
+                        if wire::write_frame(&mut *writer.lock().unwrap(), &frame).is_err() {
+                            return;
+                        }
+                    }
+                }
+            }
+            Frame::Shutdown { req_id } => {
+                if cfg.allow_remote_shutdown {
+                    let _ = wire::write_frame(
+                        &mut *writer.lock().unwrap(),
+                        &Frame::ShutdownAck { req_id },
+                    );
+                    stop.store(true, Ordering::Release);
+                    return;
+                }
+                let frame = Frame::Error {
+                    req_id,
+                    code: 0,
+                    message: "remote shutdown disabled on this server".into(),
+                };
+                if wire::write_frame(&mut *writer.lock().unwrap(), &frame).is_err() {
+                    return;
+                }
+            }
+            other => {
+                let frame = Frame::Error {
+                    req_id: other.req_id(),
+                    code: 0,
+                    message: "unexpected frame from client".into(),
+                };
+                if wire::write_frame(&mut *writer.lock().unwrap(), &frame).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+impl NetServer {
+    /// Bind and start accepting. `addr` like `127.0.0.1:0` (port 0 picks
+    /// a free ephemeral port; read it back via [`NetServer::local_addr`]).
+    pub fn bind<A: ToSocketAddrs>(
+        front: ShardedFront,
+        addr: A,
+        cfg: NetConfig,
+    ) -> io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let front = front.clone();
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let _ = stream.set_nonblocking(false);
+                            let front = front.clone();
+                            let stop = Arc::clone(&stop);
+                            let h = std::thread::spawn(move || {
+                                serve_connection(stream, front, cfg, stop)
+                            });
+                            conns.lock().unwrap().push(h);
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                    }
+                }
+                // listener drops here: the port closes as accept exits
+            })
+        };
+        Ok(NetServer { front, local, stop, accept: Some(accept), conns })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Has a stop been requested (remotely or via [`NetServer::shutdown`])?
+    pub fn is_stopped(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
+
+    /// Block until a stop is requested — the server-mode CLI parks here
+    /// until a client's shutdown frame (or process signal) arrives.
+    pub fn wait_until_stopped(&self) {
+        while !self.stop.load(Ordering::Acquire) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    /// Stop accepting, drain the front end (admitted work completes and
+    /// its responses are written), join every thread, close the socket.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.front.shutdown();
+        let mut conns = self.conns.lock().unwrap();
+        for h in conns.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    pub fn front(&self) -> &ShardedFront {
+        &self.front
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Blocking client for the wire protocol (used by `serve-net --connect`
+/// and the integration tests).
+pub struct NetClient {
+    stream: TcpStream,
+    max_frame: usize,
+    next_id: u64,
+}
+
+impl NetClient {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(NetClient { stream, max_frame: DEFAULT_MAX_FRAME, next_id: 1 })
+    }
+
+    /// Send one request and block for its reply. A zero `req_id` is
+    /// replaced with a fresh client-side id; replies are matched by id
+    /// (frames for other in-flight ids are skipped, so a caller that
+    /// interleaves submissions on one socket still pairs correctly).
+    /// Returns `Ok(Err((code, message)))` for a typed server rejection.
+    pub fn roundtrip(
+        &mut self,
+        mut req: WireRequest,
+    ) -> io::Result<Result<WireResponse, (u16, String)>> {
+        if req.req_id == 0 {
+            req.req_id = self.next_id;
+            self.next_id += 1;
+        }
+        let want = req.req_id;
+        wire::write_frame(&mut self.stream, &Frame::Request(req))?;
+        loop {
+            match wire::read_frame(&mut self.stream, self.max_frame)? {
+                Frame::Response(r) if r.req_id == want => return Ok(Ok(r)),
+                Frame::Error { req_id, code, message } if req_id == want => {
+                    return Ok(Err((code, message)));
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Ask the server to drain and exit. `Ok(true)` when acknowledged,
+    /// `Ok(false)` when the server has remote shutdown disabled.
+    pub fn shutdown_server(&mut self) -> io::Result<bool> {
+        let id = self.next_id;
+        self.next_id += 1;
+        wire::write_frame(&mut self.stream, &Frame::Shutdown { req_id: id })?;
+        loop {
+            match wire::read_frame(&mut self.stream, self.max_frame)? {
+                Frame::ShutdownAck { req_id } if req_id == id => return Ok(true),
+                Frame::Error { req_id, .. } if req_id == id => return Ok(false),
+                _ => {}
+            }
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Model-driven shard placement.
+//!
+//! The router answers one question: *given what every shard's
+//! performance model currently believes, where does this request finish
+//! earliest?* Each shard is summarized as a [`ShardEstimate`] —
+//! model-predicted execution cost for the request plus the model-priced
+//! backlog already admitted to the shard — and
+//! [`Router::place`] picks the argmin of `backlog_s + cost_s`
+//! (predicted completion time). The function is pure over the estimate
+//! slice, so the deterministic virtual-time harness
+//! ([`crate::serve::loadgen`]) exercises the *same* placement logic the
+//! live front end runs.
+//!
+//! Costs are memoized per `(shard, n, kind)` — a cost lookup walks the
+//! shard's model/wisdom locks, and open-loop arrival rates would pay it
+//! per arrival. The cache is **drift-aware**: [`Router::note_drift`]
+//! compares the shard's drift-event counter against the last value seen
+//! and purges that shard's entries when it moved, so placement re-scores
+//! against the refreshed model the very next arrival (the
+//! `rescore_events` counter makes this observable).
+//!
+//! [`RoutePolicy::RoundRobin`] keeps the model out of the decision —
+//! the control arm every model-vs-baseline comparison in
+//! `serve-bench --mode open` runs against.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::dft::real::TransformKind;
+
+/// Placement policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// lowest model-predicted completion time (backlog + cost)
+    ModelFinishTime,
+    /// ignore the model; rotate through shards
+    RoundRobin,
+}
+
+impl RoutePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::ModelFinishTime => "model",
+            RoutePolicy::RoundRobin => "round-robin",
+        }
+    }
+
+    /// Parse a CLI value (`model` | `round-robin`/`rr`).
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "model" | "finish-time" => Some(RoutePolicy::ModelFinishTime),
+            "round-robin" | "rr" => Some(RoutePolicy::RoundRobin),
+            _ => None,
+        }
+    }
+}
+
+/// One shard's scoring inputs for one request.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardEstimate {
+    /// model-predicted seconds to execute this request on this shard
+    pub cost_s: f64,
+    /// model-priced seconds of work already admitted to this shard
+    pub backlog_s: f64,
+}
+
+impl ShardEstimate {
+    /// Predicted completion time relative to now.
+    pub fn finish_s(&self) -> f64 {
+        self.backlog_s + self.cost_s
+    }
+}
+
+/// The placement engine: policy + drift-aware cost cache.
+pub struct Router {
+    policy: RoutePolicy,
+    rr_next: AtomicUsize,
+    /// last drift-event count seen per shard
+    seen_drift: Mutex<Vec<u64>>,
+    /// (shard, n, kind) → predicted cost seconds
+    costs: Mutex<BTreeMap<(usize, usize, TransformKind), f64>>,
+    rescores: AtomicU64,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy, shards: usize) -> Router {
+        Router {
+            policy,
+            rr_next: AtomicUsize::new(0),
+            seen_drift: Mutex::new(vec![0; shards]),
+            costs: Mutex::new(BTreeMap::new()),
+            rescores: AtomicU64::new(0),
+        }
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Pick a shard index for one request. Model policy: argmin of
+    /// predicted completion time, ties to the lower index (deterministic).
+    /// Round-robin ignores the estimates entirely.
+    pub fn place(&self, estimates: &[ShardEstimate]) -> usize {
+        assert!(!estimates.is_empty(), "place() needs at least one shard");
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                self.rr_next.fetch_add(1, Ordering::Relaxed) % estimates.len()
+            }
+            RoutePolicy::ModelFinishTime => {
+                let mut best = 0usize;
+                for (i, e) in estimates.iter().enumerate().skip(1) {
+                    if e.finish_s() < estimates[best].finish_s() {
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Cached predicted cost for `(shard, n, kind)`, if still valid.
+    pub fn cached_cost(&self, shard: usize, n: usize, kind: TransformKind) -> Option<f64> {
+        self.costs.lock().unwrap().get(&(shard, n, kind)).copied()
+    }
+
+    /// Memoize a freshly computed predicted cost.
+    pub fn store_cost(&self, shard: usize, n: usize, kind: TransformKind, cost_s: f64) {
+        self.costs.lock().unwrap().insert((shard, n, kind), cost_s);
+    }
+
+    /// Feed the shard's current drift-event counter. When it moved since
+    /// the last call, the shard's cached costs are purged (placement
+    /// re-scores against the refreshed model) and `true` is returned.
+    pub fn note_drift(&self, shard: usize, drift_total: u64) -> bool {
+        {
+            let mut seen = self.seen_drift.lock().unwrap();
+            if shard >= seen.len() {
+                seen.resize(shard + 1, 0);
+            }
+            if seen[shard] == drift_total {
+                return false;
+            }
+            seen[shard] = drift_total;
+        }
+        self.costs.lock().unwrap().retain(|&(s, _, _), _| s != shard);
+        self.rescores.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// How many drift-driven re-scores have happened.
+    pub fn rescore_events(&self) -> u64 {
+        self.rescores.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est(cost: f64, backlog: f64) -> ShardEstimate {
+        ShardEstimate { cost_s: cost, backlog_s: backlog }
+    }
+
+    #[test]
+    fn model_policy_picks_lowest_finish_time() {
+        let r = Router::new(RoutePolicy::ModelFinishTime, 3);
+        // shard 1 is slower per request but idle; shard 0 fast but backed up
+        let picks = r.place(&[est(0.1, 1.0), est(0.3, 0.0), est(0.2, 0.5)]);
+        assert_eq!(picks, 1);
+        // ties break to the lower index
+        assert_eq!(r.place(&[est(0.5, 0.0), est(0.5, 0.0)]), 0);
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let r = Router::new(RoutePolicy::RoundRobin, 3);
+        let e = [est(1.0, 0.0), est(0.0, 0.0), est(0.0, 0.0)];
+        assert_eq!(r.place(&e), 0);
+        assert_eq!(r.place(&e), 1);
+        assert_eq!(r.place(&e), 2);
+        assert_eq!(r.place(&e), 0);
+    }
+
+    #[test]
+    fn drift_purges_only_that_shards_costs() {
+        let r = Router::new(RoutePolicy::ModelFinishTime, 2);
+        r.store_cost(0, 1024, TransformKind::C2c, 0.5);
+        r.store_cost(1, 1024, TransformKind::C2c, 0.7);
+        // unchanged counter: no rescore
+        assert!(!r.note_drift(0, 0));
+        assert_eq!(r.rescore_events(), 0);
+        // drift on shard 0 purges shard 0's cache only
+        assert!(r.note_drift(0, 1));
+        assert_eq!(r.rescore_events(), 1);
+        assert!(r.cached_cost(0, 1024, TransformKind::C2c).is_none());
+        assert_eq!(r.cached_cost(1, 1024, TransformKind::C2c), Some(0.7));
+        // same counter again: cache stays
+        r.store_cost(0, 1024, TransformKind::C2c, 0.9);
+        assert!(!r.note_drift(0, 1));
+        assert_eq!(r.cached_cost(0, 1024, TransformKind::C2c), Some(0.9));
+    }
+
+    #[test]
+    fn policy_parse_names() {
+        assert_eq!(RoutePolicy::parse("model"), Some(RoutePolicy::ModelFinishTime));
+        assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("round-robin"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("nope"), None);
+        assert_eq!(RoutePolicy::ModelFinishTime.name(), "model");
+        assert_eq!(RoutePolicy::RoundRobin.name(), "round-robin");
+    }
+}

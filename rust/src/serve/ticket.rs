@@ -1,0 +1,221 @@
+//! Async completion tickets.
+//!
+//! [`crate::serve::front::ShardedFront::submit`] is non-blocking: it
+//! returns a [`Ticket`] the moment the request is admitted and routed. The outcome arrives later — from the shard's
+//! executing worker — and can be consumed three ways:
+//!
+//! * [`Ticket::poll`] — non-blocking; takes the outcome once it is ready;
+//! * [`Ticket::wait`] — blocks until the outcome arrives (the async API's
+//!   bridge back to the blocking world);
+//! * [`Ticket::on_done`] — registers a callback invoked with a reference
+//!   to the outcome the moment it completes (immediately, if it already
+//!   has). The TCP front end serializes responses from this hook.
+//!
+//! The outcome is delivered exactly once by the service's completion
+//! contract; `poll`/`wait` *take* it (first consumer wins), `on_done`
+//! observes it by reference before any consumer takes it.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::service::{Dft2dResponse, ServiceError};
+
+/// What a completed request resolves to.
+pub type Outcome = Result<Dft2dResponse, ServiceError>;
+
+/// Callback signature for [`Ticket::on_done`]. Callbacks run on the
+/// completing worker thread while the ticket's internal lock is held:
+/// they must not call back into the same ticket and should stay short.
+pub type DoneFn = Box<dyn FnOnce(&Outcome) + Send>;
+
+#[derive(Default)]
+struct TicketInner {
+    outcome: Option<Outcome>,
+    /// a consumer already took the outcome (poll/wait return nothing
+    /// more; late callbacks are dropped)
+    taken: bool,
+    callbacks: Vec<DoneFn>,
+}
+
+struct TicketState {
+    m: Mutex<TicketInner>,
+    cv: Condvar,
+}
+
+/// Handle for one admitted request on the sharded front end.
+pub struct Ticket {
+    id: u64,
+    shard: usize,
+    state: Arc<TicketState>,
+}
+
+/// The completion side of a [`Ticket`] — moved into the shard service's
+/// completion callback; consuming it delivers the outcome exactly once.
+pub(crate) struct TicketCompleter {
+    state: Arc<TicketState>,
+}
+
+impl Ticket {
+    /// A pending ticket plus its completer.
+    pub(crate) fn pending(id: u64, shard: usize) -> (Ticket, TicketCompleter) {
+        let state = Arc::new(TicketState {
+            m: Mutex::new(TicketInner::default()),
+            cv: Condvar::new(),
+        });
+        (Ticket { id, shard, state: Arc::clone(&state) }, TicketCompleter { state })
+    }
+
+    /// Front-assigned request id (note: the shard service assigns its
+    /// own internal ids; [`Dft2dResponse::id`] may differ).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Index of the shard the router placed this request on.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Has the outcome arrived (or already been consumed)?
+    pub fn is_done(&self) -> bool {
+        let g = self.state.m.lock().unwrap();
+        g.outcome.is_some() || g.taken
+    }
+
+    /// Non-blocking: take the outcome if it is ready. Returns `None`
+    /// while pending and after a consumer has already taken it.
+    pub fn poll(&self) -> Option<Outcome> {
+        let mut g = self.state.m.lock().unwrap();
+        let out = g.outcome.take();
+        if out.is_some() {
+            g.taken = true;
+        }
+        out
+    }
+
+    /// Block until the outcome arrives and take it. If another consumer
+    /// (an earlier `poll`) already took it, resolves to
+    /// [`ServiceError::Disconnected`].
+    pub fn wait(self) -> Outcome {
+        let mut g = self.state.m.lock().unwrap();
+        loop {
+            if let Some(out) = g.outcome.take() {
+                g.taken = true;
+                return out;
+            }
+            if g.taken {
+                return Err(ServiceError::Disconnected);
+            }
+            g = self.state.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Register a completion callback. Fires exactly once with a
+    /// reference to the outcome — immediately if the ticket already
+    /// completed, from the completing worker otherwise. Registered
+    /// after a consumer took the outcome, the callback is dropped
+    /// (there is nothing left to show it).
+    pub fn on_done(&self, cb: DoneFn) {
+        let mut g = self.state.m.lock().unwrap();
+        match &g.outcome {
+            Some(out) => cb(out),
+            None => {
+                if !g.taken {
+                    g.callbacks.push(cb);
+                }
+            }
+        }
+    }
+}
+
+impl TicketCompleter {
+    /// Deliver the outcome: run every registered callback, then park the
+    /// outcome for `poll`/`wait` and wake blocked waiters.
+    pub(crate) fn complete(self, outcome: Outcome) {
+        let mut g = self.state.m.lock().unwrap();
+        for cb in g.callbacks.drain(..) {
+            cb(&outcome);
+        }
+        g.outcome = Some(outcome);
+        drop(g);
+        self.state.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dft::SignalMatrix;
+    use crate::service::ResponseReport;
+
+    fn dummy_response(id: u64) -> Dft2dResponse {
+        Dft2dResponse {
+            id,
+            matrix: SignalMatrix::zeros(2, 2),
+            report: ResponseReport {
+                d: vec![2],
+                pads: vec![2],
+                algorithm: "test".into(),
+                batched_with: 1,
+                planned_cold: false,
+                queue_wait_s: 0.0,
+                latency_s: 0.0,
+                predicted_s: 0.0,
+                executed_s: 0.0,
+                virtual_done_s: None,
+            },
+        }
+    }
+
+    #[test]
+    fn poll_then_complete_then_poll() {
+        let (t, c) = Ticket::pending(7, 1);
+        assert_eq!(t.id(), 7);
+        assert_eq!(t.shard(), 1);
+        assert!(!t.is_done());
+        assert!(t.poll().is_none());
+        c.complete(Ok(dummy_response(7)));
+        assert!(t.is_done());
+        let out = t.poll().expect("outcome ready");
+        assert_eq!(out.unwrap().id, 7);
+        // second poll: already consumed
+        assert!(t.poll().is_none());
+        assert!(t.is_done());
+    }
+
+    #[test]
+    fn wait_blocks_until_completion() {
+        let (t, c) = Ticket::pending(1, 0);
+        let h = std::thread::spawn(move || t.wait());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        c.complete(Err(ServiceError::ShuttingDown));
+        assert_eq!(h.join().unwrap().unwrap_err(), ServiceError::ShuttingDown);
+    }
+
+    #[test]
+    fn on_done_fires_once_before_or_after_completion() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // registered before completion
+        let (t, c) = Ticket::pending(1, 0);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h2 = Arc::clone(&hits);
+        t.on_done(Box::new(move |out| {
+            assert!(out.is_ok());
+            h2.fetch_add(1, Ordering::SeqCst);
+        }));
+        c.complete(Ok(dummy_response(1)));
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        // registered after completion: fires immediately
+        let h3 = Arc::clone(&hits);
+        t.on_done(Box::new(move |_| {
+            h3.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        // after the outcome is consumed, late callbacks are dropped
+        assert!(t.poll().is_some());
+        let h4 = Arc::clone(&hits);
+        t.on_done(Box::new(move |_| {
+            h4.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+}

@@ -1,0 +1,473 @@
+//! Length-prefixed binary wire protocol for the TCP front end.
+//!
+//! Zero-dependency (`std::io` only) framing shared by [`super::net`]'s
+//! server and client. Every frame on the socket is
+//!
+//! ```text
+//! u32 LE payload length | payload
+//! ```
+//!
+//! and every payload starts with a fixed 16-byte header:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "HCLF"
+//! 4       1     version (1)
+//! 5       1     opcode  (1 request, 2 response, 3 error,
+//!                        4 shutdown, 5 shutdown-ack)
+//! 6       2     reserved (0)
+//! 8       8     req_id u64 LE (client-chosen; echoed in the reply)
+//! ```
+//!
+//! Request body (after the header): `deadline_us u64` (0 = none),
+//! `n u64`, `kind u8` (0 c2c / 1 r2c / 2 c2r), `direction u8`
+//! (0 forward / 1 inverse), `engine_len u16` + UTF-8 engine name,
+//! `re_count u64`, `im_count u64`, then the planes as f64 LE. An empty
+//! `im` plane (count 0) means "all zeros" — the common real-signal case
+//! ships half the bytes.
+//!
+//! Response body: `rows u64`, `cols u64`, `predicted_s f64`,
+//! `executed_s f64`, `server_latency_s f64`, `shard u32`, `re_count
+//! u64`, `im_count u64`, planes. Error body: `code u16` (the stable
+//! [`crate::service::ServiceError::code`] mapping), `msg_len u32`,
+//! UTF-8 message. Shutdown and shutdown-ack are header-only.
+//!
+//! Decoding is strict: bad magic/version/opcode, truncated bodies, or a
+//! length prefix above the configured cap all surface as
+//! [`std::io::ErrorKind::InvalidData`] — a misbehaving peer can not
+//! make the server allocate unbounded memory or misparse a frame.
+
+use std::io::{self, Read, Write};
+
+use crate::dft::fft::Direction;
+use crate::dft::real::TransformKind;
+
+pub const MAGIC: [u8; 4] = *b"HCLF";
+pub const VERSION: u8 = 1;
+/// Default cap on one frame's payload (1 GiB covers n=8192 c2c planes).
+pub const DEFAULT_MAX_FRAME: usize = 1 << 30;
+
+const HEADER_LEN: usize = 16;
+
+const OP_REQUEST: u8 = 1;
+const OP_RESPONSE: u8 = 2;
+const OP_ERROR: u8 = 3;
+const OP_SHUTDOWN: u8 = 4;
+const OP_SHUTDOWN_ACK: u8 = 5;
+
+/// A transform request as it travels on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    pub req_id: u64,
+    /// latency budget in microseconds; 0 = no deadline
+    pub deadline_us: u64,
+    pub n: u64,
+    pub kind: TransformKind,
+    pub direction: Direction,
+    pub engine: String,
+    pub re: Vec<f64>,
+    /// empty = all-zero imaginary plane (real signals ship half the bytes)
+    pub im: Vec<f64>,
+}
+
+/// A completed transform as it travels back.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireResponse {
+    pub req_id: u64,
+    pub rows: u64,
+    pub cols: u64,
+    pub predicted_s: f64,
+    pub executed_s: f64,
+    /// server-side latency from admission to completion
+    pub server_latency_s: f64,
+    /// shard index the router placed the request on
+    pub shard: u32,
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
+}
+
+/// Every message the protocol can carry.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Request(WireRequest),
+    Response(WireResponse),
+    /// typed rejection: `code` is the stable `ServiceError::code` value
+    Error { req_id: u64, code: u16, message: String },
+    /// client asks the server to drain and exit (if enabled)
+    Shutdown { req_id: u64 },
+    ShutdownAck { req_id: u64 },
+}
+
+impl Frame {
+    pub fn req_id(&self) -> u64 {
+        match self {
+            Frame::Request(r) => r.req_id,
+            Frame::Response(r) => r.req_id,
+            Frame::Error { req_id, .. }
+            | Frame::Shutdown { req_id }
+            | Frame::ShutdownAck { req_id } => *req_id,
+        }
+    }
+}
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+fn kind_code(kind: TransformKind) -> u8 {
+    match kind {
+        TransformKind::C2c => 0,
+        TransformKind::R2c => 1,
+        TransformKind::C2r => 2,
+    }
+}
+
+fn kind_from(code: u8) -> io::Result<TransformKind> {
+    match code {
+        0 => Ok(TransformKind::C2c),
+        1 => Ok(TransformKind::R2c),
+        2 => Ok(TransformKind::C2r),
+        other => Err(bad(format!("unknown transform kind code {other}"))),
+    }
+}
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new(opcode: u8, req_id: u64) -> Enc {
+        let mut buf = Vec::with_capacity(64);
+        buf.extend_from_slice(&MAGIC);
+        buf.push(VERSION);
+        buf.push(opcode);
+        buf.extend_from_slice(&[0, 0]);
+        buf.extend_from_slice(&req_id.to_le_bytes());
+        Enc { buf }
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn plane(&mut self, xs: &[f64]) {
+        self.buf.reserve(xs.len() * 8);
+        for x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, len: usize) -> io::Result<&'a [u8]> {
+        let end = self.pos.checked_add(len).ok_or_else(|| bad("length overflow"))?;
+        if end > self.buf.len() {
+            return Err(bad("truncated frame body"));
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> io::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> io::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn plane(&mut self, count: u64) -> io::Result<Vec<f64>> {
+        let count = usize::try_from(count).map_err(|_| bad("plane count overflow"))?;
+        let raw = self.take(count.checked_mul(8).ok_or_else(|| bad("plane bytes overflow"))?)?;
+        let mut out = Vec::with_capacity(count);
+        for chunk in raw.chunks_exact(8) {
+            out.push(f64::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    fn done(&self) -> io::Result<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(bad("trailing bytes after frame body"))
+        }
+    }
+}
+
+/// Serialize one frame's payload (everything after the length prefix).
+pub fn encode_payload(frame: &Frame) -> Vec<u8> {
+    match frame {
+        Frame::Request(r) => {
+            let mut e = Enc::new(OP_REQUEST, r.req_id);
+            e.u64(r.deadline_us);
+            e.u64(r.n);
+            e.buf.push(kind_code(r.kind));
+            e.buf.push(match r.direction {
+                Direction::Forward => 0,
+                Direction::Inverse => 1,
+            });
+            let name = r.engine.as_bytes();
+            e.u16(name.len() as u16);
+            e.buf.extend_from_slice(name);
+            e.u64(r.re.len() as u64);
+            e.u64(r.im.len() as u64);
+            e.plane(&r.re);
+            e.plane(&r.im);
+            e.buf
+        }
+        Frame::Response(r) => {
+            let mut e = Enc::new(OP_RESPONSE, r.req_id);
+            e.u64(r.rows);
+            e.u64(r.cols);
+            e.f64(r.predicted_s);
+            e.f64(r.executed_s);
+            e.f64(r.server_latency_s);
+            e.u32(r.shard);
+            e.u64(r.re.len() as u64);
+            e.u64(r.im.len() as u64);
+            e.plane(&r.re);
+            e.plane(&r.im);
+            e.buf
+        }
+        Frame::Error { req_id, code, message } => {
+            let mut e = Enc::new(OP_ERROR, *req_id);
+            e.u16(*code);
+            let msg = message.as_bytes();
+            e.u32(msg.len() as u32);
+            e.buf.extend_from_slice(msg);
+            e.buf
+        }
+        Frame::Shutdown { req_id } => Enc::new(OP_SHUTDOWN, *req_id).buf,
+        Frame::ShutdownAck { req_id } => Enc::new(OP_SHUTDOWN_ACK, *req_id).buf,
+    }
+}
+
+/// Parse one frame payload (strict: every violation is `InvalidData`).
+pub fn decode_payload(payload: &[u8]) -> io::Result<Frame> {
+    if payload.len() < HEADER_LEN {
+        return Err(bad("frame shorter than header"));
+    }
+    if payload[0..4] != MAGIC {
+        return Err(bad("bad magic"));
+    }
+    if payload[4] != VERSION {
+        return Err(bad(format!("unsupported protocol version {}", payload[4])));
+    }
+    let opcode = payload[5];
+    if payload[6] != 0 || payload[7] != 0 {
+        return Err(bad("nonzero reserved header bytes"));
+    }
+    let req_id = u64::from_le_bytes(payload[8..16].try_into().unwrap());
+    let mut d = Dec { buf: payload, pos: HEADER_LEN };
+    match opcode {
+        OP_REQUEST => {
+            let deadline_us = d.u64()?;
+            let n = d.u64()?;
+            let kind = kind_from(d.u8()?)?;
+            let direction = match d.u8()? {
+                0 => Direction::Forward,
+                1 => Direction::Inverse,
+                other => return Err(bad(format!("unknown direction code {other}"))),
+            };
+            let name_len = d.u16()? as usize;
+            let engine = String::from_utf8(d.take(name_len)?.to_vec())
+                .map_err(|_| bad("engine name is not UTF-8"))?;
+            let re_count = d.u64()?;
+            let im_count = d.u64()?;
+            let re = d.plane(re_count)?;
+            let im = d.plane(im_count)?;
+            d.done()?;
+            Ok(Frame::Request(WireRequest {
+                req_id,
+                deadline_us,
+                n,
+                kind,
+                direction,
+                engine,
+                re,
+                im,
+            }))
+        }
+        OP_RESPONSE => {
+            let rows = d.u64()?;
+            let cols = d.u64()?;
+            let predicted_s = d.f64()?;
+            let executed_s = d.f64()?;
+            let server_latency_s = d.f64()?;
+            let shard = d.u32()?;
+            let re_count = d.u64()?;
+            let im_count = d.u64()?;
+            let re = d.plane(re_count)?;
+            let im = d.plane(im_count)?;
+            d.done()?;
+            Ok(Frame::Response(WireResponse {
+                req_id,
+                rows,
+                cols,
+                predicted_s,
+                executed_s,
+                server_latency_s,
+                shard,
+                re,
+                im,
+            }))
+        }
+        OP_ERROR => {
+            let code = d.u16()?;
+            let msg_len = d.u32()? as usize;
+            let message = String::from_utf8(d.take(msg_len)?.to_vec())
+                .map_err(|_| bad("error message is not UTF-8"))?;
+            d.done()?;
+            Ok(Frame::Error { req_id, code, message })
+        }
+        OP_SHUTDOWN => {
+            d.done()?;
+            Ok(Frame::Shutdown { req_id })
+        }
+        OP_SHUTDOWN_ACK => {
+            d.done()?;
+            Ok(Frame::ShutdownAck { req_id })
+        }
+        other => Err(bad(format!("unknown opcode {other}"))),
+    }
+}
+
+/// Write one frame: length prefix + payload, then flush.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> io::Result<()> {
+    let payload = encode_payload(frame);
+    let len = u32::try_from(payload.len())
+        .map_err(|_| bad(format!("frame payload too large: {} bytes", payload.len())))?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(&payload)?;
+    w.flush()
+}
+
+/// Blocking read of one frame. `max_len` bounds the allocation a peer
+/// can force; a larger announced payload is rejected before reading it.
+pub fn read_frame<R: Read>(r: &mut R, max_len: usize) -> io::Result<Frame> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > max_len {
+        return Err(bad(format!("announced frame of {len} bytes exceeds cap {max_len}")));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    decode_payload(&payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, f).unwrap();
+        read_frame(&mut buf.as_slice(), DEFAULT_MAX_FRAME).unwrap()
+    }
+
+    #[test]
+    fn request_roundtrips_bit_exact() {
+        let req = Frame::Request(WireRequest {
+            req_id: 42,
+            deadline_us: 1_500_000,
+            n: 8,
+            kind: TransformKind::R2c,
+            direction: Direction::Forward,
+            engine: "native".into(),
+            re: (0..64).map(|i| (i as f64).sin()).collect(),
+            im: Vec::new(),
+        });
+        assert_eq!(roundtrip(&req), req);
+        assert_eq!(req.req_id(), 42);
+    }
+
+    #[test]
+    fn response_error_and_shutdown_roundtrip() {
+        let resp = Frame::Response(WireResponse {
+            req_id: 7,
+            rows: 8,
+            cols: 5,
+            predicted_s: 0.25,
+            executed_s: 0.5,
+            server_latency_s: 0.75,
+            shard: 3,
+            re: vec![1.0, -2.0],
+            im: vec![0.5, 0.25],
+        });
+        assert_eq!(roundtrip(&resp), resp);
+        let err = Frame::Error { req_id: 9, code: 8, message: "overloaded: 4/4".into() };
+        assert_eq!(roundtrip(&err), err);
+        let shut = Frame::Shutdown { req_id: 1 };
+        assert_eq!(roundtrip(&shut), shut);
+        let ack = Frame::ShutdownAck { req_id: 1 };
+        assert_eq!(roundtrip(&ack), ack);
+    }
+
+    #[test]
+    fn corrupt_frames_are_invalid_data() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Shutdown { req_id: 1 }).unwrap();
+        // flip the magic
+        buf[4] = b'X';
+        let e = read_frame(&mut buf.as_slice(), DEFAULT_MAX_FRAME).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+        // announced length above the cap is rejected before allocation
+        let huge = (DEFAULT_MAX_FRAME as u32 + 1).to_le_bytes();
+        let e = read_frame(&mut huge.as_slice(), 1024).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+        // truncated body
+        let mut ok = Vec::new();
+        write_frame(
+            &mut ok,
+            &Frame::Error { req_id: 2, code: 1, message: "nope".into() },
+        )
+        .unwrap();
+        let cut = &ok[..ok.len() - 2];
+        assert!(read_frame(&mut &cut[..], DEFAULT_MAX_FRAME).is_err());
+    }
+
+    #[test]
+    fn kind_codes_are_stable() {
+        for (kind, code) in [
+            (TransformKind::C2c, 0u8),
+            (TransformKind::R2c, 1),
+            (TransformKind::C2r, 2),
+        ] {
+            assert_eq!(kind_code(kind), code);
+            assert_eq!(kind_from(code).unwrap(), kind);
+        }
+        assert!(kind_from(3).is_err());
+    }
+}

@@ -119,35 +119,78 @@ fn kind_flops(n: usize, kind: TransformKind) -> f64 {
     fft2d_flops(n) * kind.flops_factor()
 }
 
-/// Errors surfaced to callers.
+/// Errors surfaced to callers. Every variant carries enough context to
+/// diagnose the rejected request (n, kind where applicable) and has a
+/// **stable numeric code** ([`ServiceError::code`]) — the wire protocol
+/// ships the code + rendered message, so codes must never be renumbered.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ServiceError {
     UnknownEngine(String),
-    BadShape { rows: usize, cols: usize },
+    BadShape { n: usize, rows: usize, cols: usize, kind: &'static str },
     UnsupportedKind { engine: String, kind: &'static str },
-    DeadlineInfeasible { predicted_s: f64, hint_s: f64 },
+    DeadlineInfeasible { n: usize, kind: &'static str, predicted_s: f64, hint_s: f64 },
     Engine(String),
     ShuttingDown,
     Disconnected,
+    /// Load shed: the admission queue is at capacity. `predicted_wait_s`
+    /// is the FPM-predicted seconds of work already queued — what the
+    /// caller would have waited for before even starting.
+    Overloaded { queued: usize, capacity: usize, predicted_wait_s: f64 },
+    /// The signal planes exceed the configured admission byte budget.
+    PayloadTooLarge { n: usize, kind: &'static str, bytes: usize, max_bytes: usize },
+    /// The plane buffer lengths disagree with the declared rows×cols
+    /// geometry (previously a worker-side panic).
+    BadPayload { n: usize, kind: &'static str, expected: usize, re_len: usize, im_len: usize },
+}
+
+impl ServiceError {
+    /// Stable numeric code for the wire protocol and logs. Append-only:
+    /// new variants take fresh numbers, existing numbers never move.
+    pub fn code(&self) -> u16 {
+        match self {
+            ServiceError::UnknownEngine(_) => 1,
+            ServiceError::BadShape { .. } => 2,
+            ServiceError::UnsupportedKind { .. } => 3,
+            ServiceError::DeadlineInfeasible { .. } => 4,
+            ServiceError::Engine(_) => 5,
+            ServiceError::ShuttingDown => 6,
+            ServiceError::Disconnected => 7,
+            ServiceError::Overloaded { .. } => 8,
+            ServiceError::PayloadTooLarge { .. } => 9,
+            ServiceError::BadPayload { .. } => 10,
+        }
+    }
 }
 
 impl std::fmt::Display for ServiceError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             ServiceError::UnknownEngine(e) => write!(f, "unknown engine `{e}`"),
-            ServiceError::BadShape { rows, cols } => {
-                write!(f, "signal matrix shape {rows}x{cols} does not match the request kind")
+            ServiceError::BadShape { n, rows, cols, kind } => {
+                write!(f, "signal matrix shape {rows}x{cols} does not match a {kind} request of size n={n}")
             }
             ServiceError::UnsupportedKind { engine, kind } => {
                 write!(f, "engine `{engine}` does not serve {kind} transforms")
             }
-            ServiceError::DeadlineInfeasible { predicted_s, hint_s } => write!(
+            ServiceError::DeadlineInfeasible { n, kind, predicted_s, hint_s } => write!(
                 f,
-                "admission rejected: predicted cost {predicted_s:.6}s exceeds deadline hint {hint_s:.6}s"
+                "admission rejected ({kind} n={n}): predicted cost {predicted_s:.6}s exceeds deadline hint {hint_s:.6}s"
             ),
             ServiceError::Engine(msg) => write!(f, "engine failure: {msg}"),
             ServiceError::ShuttingDown => write!(f, "service is shutting down"),
             ServiceError::Disconnected => write!(f, "service dropped the request channel"),
+            ServiceError::Overloaded { queued, capacity, predicted_wait_s } => write!(
+                f,
+                "overloaded: {queued} requests queued (capacity {capacity}), predicted wait {predicted_wait_s:.6}s"
+            ),
+            ServiceError::PayloadTooLarge { n, kind, bytes, max_bytes } => write!(
+                f,
+                "payload too large ({kind} n={n}): {bytes} bytes exceeds the {max_bytes}-byte admission limit"
+            ),
+            ServiceError::BadPayload { n, kind, expected, re_len, im_len } => write!(
+                f,
+                "payload planes disagree with the declared geometry ({kind} n={n}): expected {expected} samples per plane, got re={re_len} im={im_len}"
+            ),
         }
     }
 }
@@ -295,6 +338,17 @@ impl ResponseHandle {
     }
 }
 
+/// Queue-backlog snapshot ([`Dft2dService::backlog`]): how much admitted
+/// work a service is holding, priced by the same model estimates SPJF
+/// schedules with.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Backlog {
+    /// requests queued (not yet popped by a worker)
+    pub queued: usize,
+    /// Σ model-predicted per-request seconds over those requests
+    pub predicted_s: f64,
+}
+
 /// Service tunables.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
@@ -312,6 +366,9 @@ pub struct ServiceConfig {
     pub planning: PlanningConfig,
     /// online-model drift detection knobs
     pub drift: DriftPolicy,
+    /// admission byte budget for one request's signal planes (re + im);
+    /// `None` admits any size the process can hold
+    pub max_payload_bytes: Option<usize>,
 }
 
 impl Default for ServiceConfig {
@@ -324,6 +381,7 @@ impl Default for ServiceConfig {
             pipeline: PipelineMode::Fused,
             planning: PlanningConfig::default(),
             drift: DriftPolicy::default(),
+            max_payload_bytes: None,
         }
     }
 }
@@ -336,10 +394,29 @@ enum Backend {
     Virtual(Package),
 }
 
+/// How a finished request reaches its caller: the blocking channel
+/// behind [`ResponseHandle`], or a callback (what the [`crate::serve`]
+/// front end's tickets ride on). Exactly-once: `send` consumes self.
+enum Completion {
+    Channel(mpsc::Sender<Result<Dft2dResponse, ServiceError>>),
+    Callback(Box<dyn FnOnce(Result<Dft2dResponse, ServiceError>) + Send>),
+}
+
+impl Completion {
+    fn send(self, r: Result<Dft2dResponse, ServiceError>) {
+        match self {
+            Completion::Channel(tx) => {
+                let _ = tx.send(r);
+            }
+            Completion::Callback(cb) => cb(r),
+        }
+    }
+}
+
 struct Pending {
     id: u64,
     matrix: SignalMatrix,
-    tx: mpsc::Sender<Result<Dft2dResponse, ServiceError>>,
+    tx: Completion,
     submitted: Instant,
 }
 
@@ -528,6 +605,27 @@ impl Dft2dService {
     /// Submit a request: validation + FPM-informed admission, then the
     /// batching queue. Returns immediately with a blocking handle.
     pub fn submit(&self, req: Dft2dRequest) -> Result<ResponseHandle, ServiceError> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.submit_inner(req, Completion::Channel(tx))?;
+        Ok(ResponseHandle { id, rx })
+    }
+
+    /// Non-blocking submit with callback completion: the same validation
+    /// and admission as [`Dft2dService::submit`], but the response is
+    /// delivered by invoking `done` from the executing worker instead of
+    /// through a channel. Exactly-once contract: an `Ok(id)` return
+    /// guarantees `done` fires exactly once (with the response or an
+    /// execution/shutdown error); a synchronous `Err` return guarantees
+    /// it never fires — the caller still owns the failure.
+    pub fn submit_with(
+        &self,
+        req: Dft2dRequest,
+        done: Box<dyn FnOnce(Result<Dft2dResponse, ServiceError>) + Send>,
+    ) -> Result<u64, ServiceError> {
+        self.submit_inner(req, Completion::Callback(done))
+    }
+
+    fn submit_inner(&self, req: Dft2dRequest, tx: Completion) -> Result<u64, ServiceError> {
         if self.inner.shutdown.load(Ordering::Acquire) {
             return Err(ServiceError::ShuttingDown);
         }
@@ -569,18 +667,54 @@ impl Dft2dService {
             req.matrix.rows == req.matrix.cols && req.matrix.rows == req.n && req.n > 0
         };
         if !shape_ok {
-            return Err(ServiceError::BadShape { rows: req.matrix.rows, cols: req.matrix.cols });
+            return Err(ServiceError::BadShape {
+                n: req.n,
+                rows: req.matrix.rows,
+                cols: req.matrix.cols,
+                kind: req.kind.name(),
+            });
         }
         let n = req.n;
+        if !is_probe {
+            // geometry said rows×cols; the buffers must agree — catching
+            // this here turns a worker-side panic into a typed rejection
+            let expected = req.matrix.rows * req.matrix.cols;
+            if req.matrix.re.len() != expected || req.matrix.im.len() != expected {
+                return Err(ServiceError::BadPayload {
+                    n,
+                    kind: req.kind.name(),
+                    expected,
+                    re_len: req.matrix.re.len(),
+                    im_len: req.matrix.im.len(),
+                });
+            }
+            if let Some(max_bytes) = self.inner.cfg.max_payload_bytes {
+                let bytes =
+                    (req.matrix.re.len() + req.matrix.im.len()) * std::mem::size_of::<f64>();
+                if bytes > max_bytes {
+                    self.inner.stats.record_rejection();
+                    return Err(ServiceError::PayloadTooLarge {
+                        n,
+                        kind: req.kind.name(),
+                        bytes,
+                        max_bytes,
+                    });
+                }
+            }
+        }
         let cost = self.inner.predicted_cost(&req.engine, n, req.kind);
         if let Some(hint) = req.deadline_hint {
             if cost > hint {
                 self.inner.stats.record_rejection();
-                return Err(ServiceError::DeadlineInfeasible { predicted_s: cost, hint_s: hint });
+                return Err(ServiceError::DeadlineInfeasible {
+                    n,
+                    kind: req.kind.name(),
+                    predicted_s: cost,
+                    hint_s: hint,
+                });
             }
         }
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = mpsc::channel();
         let pending = Pending { id, matrix: req.matrix, tx, submitted: Instant::now() };
         let key = BatchKey::new_kind(&req.engine, n, req.direction, req.kind);
         {
@@ -595,7 +729,30 @@ impl Dft2dService {
             self.inner.stats.observe_queue_depth(q.len());
         }
         self.inner.cv.notify_one();
-        Ok(ResponseHandle { id, rx })
+        Ok(id)
+    }
+
+    /// Model-predicted per-request seconds for `(engine, n, kind)` —
+    /// live online model first, wisdom second, flat-speed fallback last.
+    /// This is the estimate admission and SPJF schedule with; the
+    /// [`crate::serve`] router prices shard placement through it.
+    pub fn predicted_cost(&self, engine: &str, n: usize, kind: TransformKind) -> f64 {
+        self.inner.predicted_cost(engine, n, kind)
+    }
+
+    /// Queue-backlog snapshot: admitted-but-unexecuted requests and the
+    /// sum of their model-predicted costs (the router / backpressure
+    /// signal — predicted seconds until a fresh arrival reaches a worker,
+    /// ignoring batching speedups).
+    pub fn backlog(&self) -> Backlog {
+        let q = self.inner.queue.lock().unwrap();
+        Backlog { queued: q.len(), predicted_s: q.backlog_s() }
+    }
+
+    /// Lifetime drift-event count (cheap counter read — the serve router
+    /// polls this to know when to re-score its placement cache).
+    pub fn drift_events_total(&self) -> u64 {
+        self.inner.stats.drift_events()
     }
 
     /// Counter snapshot over the service's lifetime so far.
@@ -687,7 +844,7 @@ impl Dft2dService {
         let mut q = self.inner.queue.lock().unwrap();
         while let Some(b) = q.pop(self.inner.now_s(), 0.0, usize::MAX) {
             for (p, _) in b.entries {
-                let _ = p.tx.send(Err(ServiceError::ShuttingDown));
+                p.tx.send(Err(ServiceError::ShuttingDown));
             }
         }
     }
@@ -1047,11 +1204,11 @@ impl Inner {
                             virtual_done_s: virtual_done,
                         },
                     };
-                    let _ = p.tx.send(Ok(resp));
+                    p.tx.send(Ok(resp));
                 }
                 Err(e) => {
                     self.stats.record_failure();
-                    let _ = p.tx.send(Err(e.clone()));
+                    p.tx.send(Err(e.clone()));
                 }
             }
         }

@@ -95,6 +95,14 @@ impl<T> BatchQueue<T> {
         self.len == 0
     }
 
+    /// Model-priced seconds of queued work: Σ over buckets of
+    /// entries × predicted per-request cost. The serve router's
+    /// backpressure signal — what a fresh arrival would wait behind
+    /// (batching speedups make it an upper bound).
+    pub fn backlog_s(&self) -> f64 {
+        self.buckets.iter().map(|b| b.entries.len() as f64 * b.cost_s).sum()
+    }
+
     /// Enqueue one request with its predicted per-request cost.
     pub fn push(&mut self, key: BatchKey, cost_s: f64, payload: T, now_s: f64) {
         self.len += 1;
@@ -236,6 +244,18 @@ mod tests {
         assert_eq!(b2.entries.iter().map(|e| e.0).collect::<Vec<_>>(), vec![3, 4]);
         assert!(q.pop(10.0, f64::INFINITY, 3).is_none());
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn backlog_prices_queued_work() {
+        let mut q: BatchQueue<u32> = BatchQueue::new();
+        assert_eq!(q.backlog_s(), 0.0);
+        q.push(key(64), 0.1, 1, 0.0);
+        q.push(key(64), 0.1, 2, 0.1);
+        q.push(key(128), 0.5, 3, 0.2);
+        assert!((q.backlog_s() - 0.7).abs() < 1e-12);
+        q.pop(0.3, f64::INFINITY, 8).unwrap();
+        assert!((q.backlog_s() - 0.5).abs() < 1e-12);
     }
 
     #[test]

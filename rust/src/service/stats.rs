@@ -28,6 +28,7 @@ struct Inner {
     completed: u64,
     failed: u64,
     rejected: u64,
+    shed: u64,
     planning_events: u64,
     wisdom_hits: u64,
     drift_events: u64,
@@ -55,6 +56,7 @@ struct Mark {
     completed: u64,
     failed: u64,
     rejected: u64,
+    shed: u64,
     planning_events: u64,
     wisdom_hits: u64,
     drift_events: u64,
@@ -82,6 +84,17 @@ impl StatsCollector {
 
     pub fn record_rejection(&self) {
         self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// One request shed by overload backpressure (the serve front end's
+    /// bounded admission queue turned it away).
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// Lifetime drift-event count without building a full snapshot.
+    pub fn drift_events(&self) -> u64 {
+        self.inner.lock().unwrap().drift_events
     }
 
     pub fn record_planning_event(&self) {
@@ -138,6 +151,7 @@ impl StatsCollector {
             completed: g.completed,
             failed: g.failed,
             rejected: g.rejected,
+            shed: g.shed,
             planning_events: g.planning_events,
             wisdom_hits: g.wisdom_hits,
             drift_events: g.drift_events,
@@ -180,6 +194,7 @@ fn stats_over(
         completed,
         failed: g.failed - m.failed,
         rejected: g.rejected - m.rejected,
+        shed: g.shed - m.shed,
         wall_s,
         throughput_rps: completed as f64 / wall,
         mflops: (g.flops - m.flops) / wall / 1e6,
@@ -217,6 +232,9 @@ pub struct ServiceStats {
     pub completed: u64,
     pub failed: u64,
     pub rejected: u64,
+    /// requests turned away by overload backpressure (bounded admission
+    /// queue at capacity — see [`crate::serve`])
+    pub shed: u64,
     pub wall_s: f64,
     pub throughput_rps: f64,
     /// aggregate paper-formula MFLOPs over the window
@@ -262,6 +280,7 @@ impl ServiceStats {
         t.row(vec!["requests completed".into(), self.completed.to_string()]);
         t.row(vec!["requests failed".into(), self.failed.to_string()]);
         t.row(vec!["requests rejected".into(), self.rejected.to_string()]);
+        t.row(vec!["requests shed".into(), self.shed.to_string()]);
         t.row(vec!["wall time".into(), format!("{:.3} s", self.wall_s)]);
         t.row(vec!["throughput".into(), format!("{} req/s", fnum(self.throughput_rps, 2))]);
         t.row(vec!["aggregate speed".into(), format!("{} MFLOPs", fnum(self.mflops, 1))]);
@@ -326,6 +345,7 @@ mod tests {
         c.record_completion(0.002, 0.0, 1e6);
         c.record_wisdom_hit();
         c.record_drift();
+        c.record_shed();
         c.record_calibration(0.1);
         c.record_batch(2);
         c.observe_queue_depth(3);
@@ -337,6 +357,8 @@ mod tests {
         assert_eq!(warm.planning_events, 0);
         assert_eq!(warm.wisdom_hits, 1);
         assert_eq!(warm.drift_events, 1);
+        assert_eq!(warm.shed, 1);
+        assert_eq!(c.drift_events(), 1);
         assert_eq!(warm.calibration_batches, 1);
         assert!((warm.calibration_mean_err - 0.1).abs() < 1e-12);
         assert!((warm.wall_s - 2.0).abs() < 1e-12);

@@ -1,0 +1,398 @@
+//! Integration: the sharded async serving front end end to end —
+//! routed output bit-exactness vs a single-service oracle, graceful
+//! drain (in-process and over a real socket on an ephemeral port),
+//! bounded admission with typed shedding, the deterministic open-loop
+//! routing harness (model vs round-robin), stable wire error codes and
+//! admission-side payload validation.
+
+use hclfft::dft::fft::Direction;
+use hclfft::dft::real::{half_cols, rfft2d, RealMatrix, TransformKind};
+use hclfft::dft::SignalMatrix;
+use hclfft::serve::wire::WireRequest;
+use hclfft::serve::{
+    run_virtual_open_loop, Arrivals, FrontBuilder, FrontConfig, NetClient, NetConfig, NetServer,
+    RoutePolicy, VirtualShard, VirtualSpec,
+};
+use hclfft::service::wisdom::PlanningConfig;
+use hclfft::service::{Dft2dRequest, ServiceBuilder, ServiceConfig, ServiceError};
+use hclfft::util::prng::Xoshiro256;
+
+/// Fast planning, like the service integration suite, with a per-shard
+/// processor-group count (each shard plans for its own p).
+fn cfg_with_groups(groups: usize) -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        max_batch: 8,
+        planning: PlanningConfig {
+            groups,
+            threads_per_group: 1,
+            rep_scale: 10_000,
+            ..PlanningConfig::default()
+        },
+        ..ServiceConfig::default()
+    }
+}
+
+fn max_abs_diff(a_re: &[f64], a_im: &[f64], b_re: &[f64], b_im: &[f64]) -> f64 {
+    assert_eq!(a_re.len(), b_re.len());
+    assert_eq!(a_im.len(), b_im.len());
+    let d_re = a_re.iter().zip(b_re).map(|(x, y)| (x - y).abs());
+    let d_im = a_im.iter().zip(b_im).map(|(x, y)| (x - y).abs());
+    d_re.chain(d_im).fold(0.0, f64::max)
+}
+
+/// Tentpole property: routing must be invisible in the bits. Shards
+/// planned for *different* p (different POPTA partitions) produce the
+/// same spectra as an independently planned single-service oracle, for
+/// random 5-smooth sizes and both c2c and r2c kinds — so wherever the
+/// router places a request, the answer is byte-identical.
+#[test]
+fn routed_outputs_bit_exact_vs_single_service_oracle() {
+    // round-robin placement: both shards are guaranteed traffic
+    let front = FrontBuilder::new(FrontConfig { capacity: 32, policy: RoutePolicy::RoundRobin })
+        .shard("p1", ServiceBuilder::new(cfg_with_groups(1)).native())
+        .shard("p2", ServiceBuilder::new(cfg_with_groups(2)).native())
+        .build();
+    let oracle = ServiceBuilder::new(cfg_with_groups(2)).native().build();
+
+    let pool = [16usize, 18, 20, 24, 27, 30, 32, 36, 40, 45, 48, 50, 54, 60];
+    let mut rng = Xoshiro256::seeded(0x5EED_CAFE);
+    let mut shards_hit = [false, false];
+    for pick in 0..4 {
+        let n = pool[(rng.next_f64() * pool.len() as f64) as usize % pool.len()];
+
+        // c2c, against the serial dft2d oracle (known bit-exact for the
+        // single service; the claim here is that sharding changes nothing)
+        let orig = SignalMatrix::random(n, n, 1000 + pick);
+        let mut want = orig.clone();
+        hclfft::dft::dft2d::dft2d(&mut want, Direction::Forward, 1);
+        for _ in 0..2 {
+            let ticket = front.submit(Dft2dRequest::forward("native", orig.clone())).unwrap();
+            shards_hit[ticket.shard()] = true;
+            let resp = ticket.wait().unwrap();
+            assert_eq!(
+                resp.matrix.max_abs_diff(&want),
+                0.0,
+                "n={n}: routed c2c output must be bit-exact vs the dft2d oracle"
+            );
+        }
+
+        // r2c, against the independently planned single-service oracle
+        let real = SignalMatrix::random_real(n, n, 2000 + pick);
+        let want = oracle
+            .submit(Dft2dRequest::real_forward("native", real.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        for _ in 0..2 {
+            let ticket = front.submit(Dft2dRequest::real_forward("native", real.clone())).unwrap();
+            shards_hit[ticket.shard()] = true;
+            let resp = ticket.wait().unwrap();
+            assert_eq!(
+                resp.matrix.max_abs_diff(&want.matrix),
+                0.0,
+                "n={n}: routed r2c output must be bit-exact vs the single-service oracle"
+            );
+        }
+    }
+    assert_eq!(shards_hit, [true, true], "round-robin must exercise both shards");
+    let stats = front.stats();
+    assert_eq!(stats.total.completed, 16);
+    assert_eq!(stats.total.failed + stats.total.shed, 0);
+    front.shutdown();
+    oracle.shutdown();
+}
+
+/// Graceful drain: work admitted to paused shards still executes and
+/// resolves its tickets during shutdown; submits after the drain began
+/// are rejected with the typed `ShuttingDown` (stable code 6).
+#[test]
+fn shutdown_drains_admitted_work_then_rejects_new_submits() {
+    let front = FrontBuilder::new(FrontConfig { capacity: 8, policy: RoutePolicy::ModelFinishTime })
+        .shard("a", ServiceBuilder::new(cfg_with_groups(1)).native().paused())
+        .shard("b", ServiceBuilder::new(cfg_with_groups(2)).native().paused())
+        .build();
+    let orig = SignalMatrix::random(16, 16, 5);
+    let tickets: Vec<_> = (0..3)
+        .map(|_| front.submit(Dft2dRequest::forward("native", orig.clone())).unwrap())
+        .collect();
+    for t in &tickets {
+        assert!(!t.is_done(), "paused shards must not have executed anything yet");
+    }
+    assert_eq!(front.inflight(), 3);
+
+    front.shutdown();
+    assert!(front.is_draining());
+    for t in tickets {
+        let resp = t.wait().expect("admitted work must complete during the drain");
+        assert_eq!(resp.matrix.rows, 16);
+    }
+    assert_eq!(front.inflight(), 0);
+    let err = front.submit(Dft2dRequest::forward("native", orig)).unwrap_err();
+    assert_eq!(err, ServiceError::ShuttingDown);
+    assert_eq!(err.code(), 6);
+    assert_eq!(front.stats().total.completed, 3);
+}
+
+/// The TCP front end on an ephemeral port: request/response round-trips
+/// are correct (c2c bit-exact vs the dft2d oracle, r2c vs the rfft2d
+/// oracle), typed rejections travel as error frames with stable codes,
+/// and a client shutdown frame drains the server cleanly — while a
+/// server without `--allow-shutdown` refuses it.
+#[test]
+fn tcp_roundtrip_error_frames_and_remote_shutdown() {
+    let front = FrontBuilder::new(FrontConfig::default())
+        .shard("s0", ServiceBuilder::new(cfg_with_groups(1)).native())
+        .shard("s1", ServiceBuilder::new(cfg_with_groups(2)).native())
+        .build();
+    let cfg = NetConfig { allow_remote_shutdown: true, ..NetConfig::default() };
+    let mut server = NetServer::bind(front, "127.0.0.1:0", cfg).unwrap();
+    let addr = server.local_addr();
+    let mut client = NetClient::connect(addr).unwrap();
+
+    // c2c round-trip: the wire carries exact f64 little-endian bits
+    let n = 20usize;
+    let orig = SignalMatrix::random(n, n, 9);
+    let resp = client
+        .roundtrip(WireRequest {
+            req_id: 0,
+            deadline_us: 0,
+            n: n as u64,
+            kind: TransformKind::C2c,
+            direction: Direction::Forward,
+            engine: "native".into(),
+            re: orig.re.clone(),
+            im: orig.im.clone(),
+        })
+        .unwrap()
+        .expect("c2c request must succeed");
+    assert_eq!((resp.rows, resp.cols), (n as u64, n as u64));
+    assert!((resp.shard as usize) < 2);
+    assert!(resp.server_latency_s >= 0.0);
+    let mut want = orig.clone();
+    hclfft::dft::dft2d::dft2d(&mut want, Direction::Forward, 1);
+    assert_eq!(
+        max_abs_diff(&resp.re, &resp.im, &want.re, &want.im),
+        0.0,
+        "spectrum over TCP must be bit-exact vs the dft2d oracle"
+    );
+
+    // r2c round-trip: empty im plane on the wire, packed half spectrum back
+    let n = 24usize;
+    let real = SignalMatrix::random_real(n, n, 10);
+    let resp = client
+        .roundtrip(WireRequest {
+            req_id: 0,
+            deadline_us: 0,
+            n: n as u64,
+            kind: TransformKind::R2c,
+            direction: Direction::Forward,
+            engine: "native".into(),
+            re: real.re.clone(),
+            im: Vec::new(),
+        })
+        .unwrap()
+        .expect("r2c request must succeed");
+    assert_eq!((resp.rows as usize, resp.cols as usize), (n, half_cols(n)));
+    let rm = RealMatrix { rows: n, cols: n, data: real.re.clone() };
+    let want = rfft2d(&rm, 1);
+    let err = max_abs_diff(&resp.re, &resp.im, &want.re, &want.im);
+    assert!(err < 1e-6, "r2c spectrum over TCP vs rfft2d oracle: max err {err:e}");
+
+    // typed rejection: unknown engine ships its stable code in an error frame
+    let rejected = client
+        .roundtrip(WireRequest {
+            req_id: 0,
+            deadline_us: 0,
+            n: 8,
+            kind: TransformKind::C2c,
+            direction: Direction::Forward,
+            engine: "cufft".into(),
+            re: vec![0.0; 64],
+            im: vec![0.0; 64],
+        })
+        .unwrap()
+        .expect_err("unknown engine must be rejected");
+    assert_eq!(rejected.0, ServiceError::UnknownEngine("cufft".into()).code());
+    assert!(rejected.1.contains("cufft"), "message must name the engine: {}", rejected.1);
+
+    // clean remote shutdown: acknowledged, then the server drains
+    assert!(client.shutdown_server().unwrap(), "shutdown must be acknowledged");
+    server.wait_until_stopped();
+    assert!(server.is_stopped());
+    assert_eq!(server.front().stats().total.completed, 2);
+    server.shutdown();
+
+    // a second server with remote shutdown disabled refuses the frame
+    let front2 = FrontBuilder::new(FrontConfig::default())
+        .shard("solo", ServiceBuilder::new(cfg_with_groups(1)).native())
+        .build();
+    let mut server2 = NetServer::bind(front2, "127.0.0.1:0", NetConfig::default()).unwrap();
+    let mut client2 = NetClient::connect(server2.local_addr()).unwrap();
+    assert!(!client2.shutdown_server().unwrap(), "disabled shutdown must be refused");
+    assert!(!server2.is_stopped());
+    server2.shutdown();
+}
+
+/// Bounded admission: beyond `capacity` requests in flight, submits are
+/// shed immediately with `Overloaded` (stable code 8) carrying a
+/// non-negative model-predicted wait, and the shed is counted.
+#[test]
+fn overload_sheds_with_typed_predicted_wait() {
+    let front = FrontBuilder::new(FrontConfig { capacity: 1, policy: RoutePolicy::ModelFinishTime })
+        .shard("only", ServiceBuilder::new(cfg_with_groups(1)).native().paused())
+        .build();
+    let orig = SignalMatrix::random(16, 16, 3);
+    let admitted = front.submit(Dft2dRequest::forward("native", orig.clone())).unwrap();
+    let err = front.submit(Dft2dRequest::forward("native", orig)).unwrap_err();
+    match err {
+        ServiceError::Overloaded { queued, capacity, predicted_wait_s } => {
+            assert_eq!((queued, capacity), (1, 1));
+            assert!(
+                predicted_wait_s >= 0.0 && predicted_wait_s.is_finite(),
+                "shed clients get a finite predicted wait, got {predicted_wait_s}"
+            );
+        }
+        other => panic!("expected Overloaded, got {other}"),
+    }
+    assert_eq!(front.stats().total.shed, 1);
+    front.shutdown();
+    assert!(admitted.wait().is_ok(), "the admitted request still completes");
+}
+
+/// Acceptance, in fully deterministic virtual time through the real
+/// router: (1) under overload the bounded window sheds and keeps the
+/// accepted tail finite; (2) on heterogeneous shards, model-predicted
+/// finish-time placement beats round-robin on p95 latency.
+#[test]
+fn virtual_open_loop_sheds_under_overload_and_model_beats_round_robin() {
+    // overload: two 100 ms shards offered ~4x their joint capacity
+    let uniform = vec![
+        VirtualShard { name: "u0".into(), true_s: vec![0.1], believed_s: vec![0.102] },
+        VirtualShard { name: "u1".into(), true_s: vec![0.1], believed_s: vec![0.098] },
+    ];
+    let spec = VirtualSpec {
+        requests: 300,
+        arrivals: Arrivals::Poisson { rate_rps: 80.0, seed: 17 },
+        capacity: 5,
+        policy: RoutePolicy::ModelFinishTime,
+        classes: vec![0],
+    };
+    let rep = run_virtual_open_loop(&uniform, &spec);
+    assert_eq!(rep.offered, 300);
+    assert!(rep.shed > 0, "4x overload must shed");
+    assert_eq!(rep.accepted + rep.shed, 300);
+    assert!(
+        rep.latency_p99_s <= 0.1 * (spec.capacity as f64 + 1.0),
+        "p99 {} must stay bounded by the admission window",
+        rep.latency_p99_s
+    );
+
+    // heterogeneous shards (one 4x slower): same schedule, both policies
+    let skewed = vec![
+        VirtualShard { name: "fast".into(), true_s: vec![0.02], believed_s: vec![0.0204] },
+        VirtualShard { name: "slow".into(), true_s: vec![0.08], believed_s: vec![0.0784] },
+    ];
+    let mk = |policy| VirtualSpec {
+        requests: 400,
+        arrivals: Arrivals::Poisson { rate_rps: 30.0, seed: 23 },
+        capacity: 8,
+        policy,
+        classes: vec![0],
+    };
+    let model = run_virtual_open_loop(&skewed, &mk(RoutePolicy::ModelFinishTime));
+    let rr = run_virtual_open_loop(&skewed, &mk(RoutePolicy::RoundRobin));
+    assert!(
+        model.latency_p95_s < rr.latency_p95_s,
+        "model p95 {} must beat round-robin p95 {}",
+        model.latency_p95_s,
+        rr.latency_p95_s
+    );
+    assert!(model.shed <= rr.shed, "model sheds ({}) <= round-robin ({})", model.shed, rr.shed);
+}
+
+/// Satellite: the wire protocol's numeric error codes are a contract —
+/// every variant keeps its number forever, and the rendered messages
+/// carry the n/kind context a remote client needs to diagnose.
+#[test]
+fn service_error_codes_are_stable_and_contextual() {
+    let shape = ServiceError::BadShape { n: 8, rows: 8, cols: 7, kind: "c2c" };
+    let deadline =
+        ServiceError::DeadlineInfeasible { n: 8, kind: "c2c", predicted_s: 1.0, hint_s: 0.5 };
+    let overloaded = ServiceError::Overloaded { queued: 4, capacity: 4, predicted_wait_s: 0.25 };
+    let too_large = ServiceError::PayloadTooLarge { n: 8, kind: "c2c", bytes: 99, max_bytes: 64 };
+    let torn = ServiceError::BadPayload { n: 8, kind: "c2c", expected: 4, re_len: 4, im_len: 3 };
+
+    assert_eq!(ServiceError::UnknownEngine("cufft".into()).code(), 1);
+    assert_eq!(shape.code(), 2);
+    assert_eq!(ServiceError::UnsupportedKind { engine: "sim-mkl".into(), kind: "r2c" }.code(), 3);
+    assert_eq!(deadline.code(), 4);
+    assert_eq!(ServiceError::Engine("boom".into()).code(), 5);
+    assert_eq!(ServiceError::ShuttingDown.code(), 6);
+    assert_eq!(ServiceError::Disconnected.code(), 7);
+    assert_eq!(overloaded.code(), 8);
+    assert_eq!(too_large.code(), 9);
+    assert_eq!(torn.code(), 10);
+
+    // context spot-checks on the rendered messages
+    assert!(shape.to_string().contains("n=8"), "{shape}");
+    assert!(deadline.to_string().contains("c2c"), "{deadline}");
+    assert!(overloaded.to_string().contains("capacity 4"), "{overloaded}");
+    assert!(too_large.to_string().contains("99"), "{too_large}");
+    assert!(torn.to_string().contains("im=3"), "{torn}");
+}
+
+/// Satellite: admission-side validation turns malformed payloads into
+/// typed rejections *before* any worker touches them — plane/geometry
+/// disagreement, a configured byte budget, and a declared n that does
+/// not match the matrix.
+#[test]
+fn admission_validates_geometry_and_payload() {
+    let shard_cfg = ServiceConfig { max_payload_bytes: Some(256), ..cfg_with_groups(1) };
+    let front = FrontBuilder::new(FrontConfig::default())
+        .shard("strict", ServiceBuilder::new(shard_cfg).native())
+        .build();
+
+    // plane length disagrees with the declared geometry
+    let mut torn = Dft2dRequest::forward("native", SignalMatrix::random(8, 8, 1));
+    torn.matrix.im.pop();
+    let err = front.submit(torn).unwrap_err();
+    match &err {
+        ServiceError::BadPayload { n, expected, im_len, .. } => {
+            assert_eq!((*n, *expected, *im_len), (8, 64, 63));
+        }
+        other => panic!("expected BadPayload, got {other}"),
+    }
+    assert_eq!(err.code(), 10);
+
+    // well-formed planes, but over the configured byte budget
+    let err = front
+        .submit(Dft2dRequest::forward("native", SignalMatrix::random(8, 8, 2)))
+        .unwrap_err();
+    match &err {
+        ServiceError::PayloadTooLarge { bytes, max_bytes, .. } => {
+            assert_eq!((*bytes, *max_bytes), (1024, 256));
+        }
+        other => panic!("expected PayloadTooLarge, got {other}"),
+    }
+    assert_eq!(err.code(), 9);
+
+    // declared n disagrees with the matrix
+    let err = front
+        .submit(Dft2dRequest {
+            n: 9,
+            matrix: SignalMatrix::random(8, 8, 3),
+            direction: Direction::Forward,
+            kind: TransformKind::C2c,
+            engine: "native".into(),
+            deadline_hint: None,
+        })
+        .unwrap_err();
+    assert!(matches!(err, ServiceError::BadShape { n: 9, rows: 8, cols: 8, .. }), "got {err}");
+    assert_eq!(err.code(), 2);
+
+    // every rejection rolled its admission slot back
+    assert_eq!(front.inflight(), 0);
+    assert_eq!(front.stats().total.rejected, 3);
+    front.shutdown();
+}

@@ -345,7 +345,7 @@ fn admission_rejects_infeasible_deadlines() {
         .submit(Dft2dRequest::probe("sim-fftw3", 24_704).with_deadline(1e-12))
         .unwrap_err();
     match err {
-        ServiceError::DeadlineInfeasible { predicted_s, hint_s } => {
+        ServiceError::DeadlineInfeasible { predicted_s, hint_s, .. } => {
             assert!(predicted_s > hint_s);
         }
         other => panic!("expected DeadlineInfeasible, got {other}"),
