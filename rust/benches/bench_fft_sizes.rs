@@ -1,29 +1,57 @@
-//! Bench: Bluestein vs mixed-radix at the paper's N = 128·k sizes.
+//! Bench: the row-kernel story at the paper's N = 128·k sizes.
 //!
 //! The paper benchmarks grid sizes that are mostly *not* powers of two
-//! (384 = 2^7·3, 640 = 2^7·5, 1152 = 2^7·3^2, 3200 = 2^7·5^2). Before
-//! the mixed-radix executor, those lengths all paid Bluestein's chirp-z
-//! (pad to >= 2N pow2, three pow2 FFTs per row). This bench pins both
-//! kernels at each size so the speedup lands in the bench JSON
-//! trajectory (`results/bench_fft_sizes.json`).
+//! (384 = 2^7·3, 640 = 2^7·5, 1152 = 2^7·3^2, 3200 = 2^7·5^2). Three
+//! arms per size:
+//!
+//! * `radix_…` — the vectorized mixed-radix kernel (reordered schedule,
+//!   fused FFT2/4/8 tail codelet, AVX2 first stages with `--features
+//!   simd`): the executor's live path,
+//! * `scalar_…` — [`KernelVariant::Scalar`], the pre-codelet kernel
+//!   shape kept as the reference arm, so the scalar-vs-vectorized
+//!   speedup is measured honestly in one process,
+//! * `bluestein_…` — chirp-z forced at the same length (the pre-PR-2
+//!   path for these sizes).
+//!
+//! Every mean carries a t-test confidence interval (≥ 5 reps even under
+//! `HCLFFT_BENCH_FAST`), and the scalar-vs-vectorized speedups are
+//! reported with the CIs propagated into the ratio — plus a geometric
+//! mean over the paper sizes {384, 640, 1152} with a PASS/FAIL verdict
+//! that CI greps (PASS ⇔ geomean ≥ 1.0; the perf gate separately locks
+//! the committed baseline). JSON lands in
+//! `results/bench_fft_sizes.json` for `perf-gate --fft`.
 
 use hclfft::dft::bluestein::{fft_row_bluestein, BluesteinPlan};
 use hclfft::dft::fft::Direction;
-use hclfft::dft::radix::{fft_row_radix, RadixPlan};
+use hclfft::dft::radix::{fft_row_radix, kernel_generation, KernelVariant, RadixPlan};
 use hclfft::dft::SignalMatrix;
-use hclfft::stats::harness::{fft_flops, BenchSuite};
+use hclfft::stats::harness::{fft_flops, BenchResult, BenchSuite};
+
+fn find<'a>(results: &'a [BenchResult], name: &str) -> &'a BenchResult {
+    results.iter().find(|r| r.name == name).unwrap_or_else(|| panic!("missing bench {name}"))
+}
+
+/// Relative half-width of a ratio of two measured means (independent
+/// errors added in quadrature).
+fn ratio_rel_hw(num: &BenchResult, den: &BenchResult) -> f64 {
+    let a = num.ci_half_width_s / num.mean_s;
+    let b = den.ci_half_width_s / den.mean_s;
+    (a * a + b * b).sqrt()
+}
 
 fn main() {
     let mut suite = BenchSuite::from_env("fft_sizes");
     let rows = 16usize;
-    for &n in &[384usize, 640, 768, 1152, 3200] {
+    let sizes = [384usize, 640, 768, 1152, 3200];
+    println!("row kernel generation: {}", kernel_generation());
+    for &n in &sizes {
         let orig = SignalMatrix::random(rows, n, n as u64);
-
-        // mixed-radix: the executor's native path for 5-smooth lengths
-        let radix_plan = RadixPlan::new(n);
-        let mut m = orig.clone();
         let mut sr = vec![0.0; n];
         let mut si = vec![0.0; n];
+
+        // vectorized mixed-radix: the executor's native path
+        let vec_plan = RadixPlan::new(n);
+        let mut m = orig.clone();
         suite.bench_flops(&format!("radix_{rows}x{n}"), fft_flops(rows, n), || {
             for r in 0..rows {
                 let span = r * n..(r + 1) * n;
@@ -32,7 +60,24 @@ fn main() {
                     &mut m.im[span],
                     &mut sr,
                     &mut si,
-                    &radix_plan,
+                    &vec_plan,
+                    Direction::Forward,
+                );
+            }
+        });
+
+        // the pre-PR scalar kernel shape: the honest reference arm
+        let scalar_plan = RadixPlan::with_variant(n, KernelVariant::Scalar);
+        let mut m1 = orig.clone();
+        suite.bench_flops(&format!("scalar_{rows}x{n}"), fft_flops(rows, n), || {
+            for r in 0..rows {
+                let span = r * n..(r + 1) * n;
+                fft_row_radix(
+                    &mut m1.re[span.clone()],
+                    &mut m1.im[span],
+                    &mut sr,
+                    &mut si,
+                    &scalar_plan,
                     Direction::Forward,
                 );
             }
@@ -63,18 +108,46 @@ fn main() {
         });
     }
 
-    // report the per-size speedup explicitly
+    // scalar vs vectorized at the paper sizes, CIs propagated into the
+    // ratio; the geomean line is the CI smoke's grep target and the
+    // perf gate's `scalar_vs_vector_geomean` metric mirrors it
+    let paper = [384usize, 640, 1152];
+    println!("\n== scalar vs vectorized row kernel ==");
+    let mut log_sum = 0.0;
+    let mut rel2_sum = 0.0;
+    for &n in &paper {
+        let s = find(&suite.results, &format!("scalar_{rows}x{n}"));
+        let v = find(&suite.results, &format!("radix_{rows}x{n}"));
+        let speedup = s.mean_s / v.mean_s;
+        let rel = ratio_rel_hw(s, v);
+        println!(
+            "{:>16} vs {:<16} speedup {:.2}x ± {:.2}",
+            s.name,
+            v.name,
+            speedup,
+            speedup * rel
+        );
+        log_sum += speedup.ln();
+        rel2_sum += rel * rel;
+    }
+    let geo = (log_sum / paper.len() as f64).exp();
+    let geo_hw = geo * rel2_sum.sqrt() / paper.len() as f64;
+    let verdict = if geo >= 1.0 { "PASS" } else { "FAIL" };
+    println!("vector-vs-scalar geomean {geo:.2}x ± {geo_hw:.2} {verdict} (target >= 1.30x)");
+
+    // the PR-2 story, still pinned: mixed-radix vs the chirp-z fallback
     println!("\n== bluestein/radix speedup ==");
-    let res = &suite.results;
-    for pair in res.chunks(2) {
-        if let [radix, blue] = pair {
-            println!(
-                "{:>20} vs {:<24} speedup {:.2}x",
-                radix.name,
-                blue.name,
-                blue.mean_s / radix.mean_s
-            );
-        }
+    for &n in &sizes {
+        let v = find(&suite.results, &format!("radix_{rows}x{n}"));
+        let b = find(&suite.results, &format!("bluestein_{rows}x{n}"));
+        let speedup = b.mean_s / v.mean_s;
+        println!(
+            "{:>20} vs {:<24} speedup {:.2}x ± {:.2}",
+            v.name,
+            b.name,
+            speedup,
+            speedup * ratio_rel_hw(b, v)
+        );
     }
     suite.write_json(std::path::Path::new("results/bench_fft_sizes.json")).ok();
     println!("{}", suite.report());

@@ -1,37 +1,44 @@
 //! `perf-gate` — the CI performance-regression gate.
 //!
-//! The repo's two load-bearing speedups — the fused pipeline over the
-//! barrier four-step (PR 4) and the r2c real path over c2c (PR 5) —
+//! The repo's load-bearing speedups — the fused pipeline over the
+//! barrier four-step (PR 4), the r2c real path over c2c (PR 5), and
+//! the vectorized row kernel over the scalar reference arm (this PR) —
 //! are *ratios of means measured in the same process on the same
 //! machine*, so they are comparable across runners in a way raw
 //! wall-clock numbers are not. This binary reads the bench
-//! trajectories (`BENCH_pipeline.json`, `BENCH_real.json`), recomputes
-//! each speedup, and fails (exit 1) if any drops below its committed
-//! baseline (`BENCH_baseline.json`) minus the noise tolerance — the
-//! 4-PR speedup trajectory cannot silently erode.
+//! trajectories (`BENCH_pipeline.json`, `BENCH_real.json`,
+//! `results/bench_fft_sizes.json`), recomputes each speedup, and fails
+//! (exit 1) if any drops below its committed baseline
+//! (`BENCH_baseline.json`) minus the noise tolerance — the speedup
+//! trajectory cannot silently erode.
 //!
 //! Baseline format (committed at the repo root):
 //!
 //! ```json
 //! {
-//!   "version": 1,
+//!   "version": 2,
 //!   "tolerance": 0.15,
 //!   "metrics": [
 //!     {"name": "fused_vs_barrier_384", "suite": "pipeline",
 //!      "slow": "barrier_384", "fast": "fused_384", "baseline": 1.0},
-//!     {"name": "r2c_vs_c2c_rows_1152", "suite": "real",
-//!      "slow": "c2c_rows_1152", "fast": "r2c_rows_1152", "baseline": 1.75}
+//!     {"name": "scalar_vs_vector_geomean", "suite": "fft",
+//!      "pairs": [{"slow": "scalar_16x384", "fast": "radix_16x384"},
+//!                {"slow": "scalar_16x640", "fast": "radix_16x640"}],
+//!      "baseline": 1.25}
 //!   ]
 //! }
 //! ```
 //!
-//! `speedup = mean(slow) / mean(fast)`; the gate requires
+//! `speedup = mean(slow) / mean(fast)` — or, when a metric carries a
+//! `pairs` array instead of a single `slow`/`fast`, the *geometric
+//! mean* of the pair ratios (the shape of the bench's
+//! vector-vs-scalar geomean line). The gate requires
 //! `speedup >= baseline * (1 - tolerance)`.
 //!
 //! Flags: `--baseline <file>` `--pipeline <file>` `--real <file>`
-//! `--tolerance <f>` (override) `--scale <f>` (multiply every measured
-//! speedup — `--scale 0.5` is the CI self-test proving the gate
-//! demonstrably fails on an injected regression).
+//! `--fft <file>` `--tolerance <f>` (override) `--scale <f>` (multiply
+//! every measured speedup — `--scale 0.5` is the CI self-test proving
+//! the gate demonstrably fails on an injected regression).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -70,10 +77,11 @@ fn load_means(path: &Path) -> Result<BTreeMap<String, f64>, String> {
 
 fn run(argv: &[String]) -> Result<bool, String> {
     let args = cli::parse(argv)?;
-    args.validate(&["baseline", "pipeline", "real", "tolerance", "scale"])?;
+    args.validate(&["baseline", "pipeline", "real", "fft", "tolerance", "scale"])?;
     let baseline_path = args.opt_or("baseline", "BENCH_baseline.json");
     let pipeline_path = args.opt_or("pipeline", "BENCH_pipeline.json");
     let real_path = args.opt_or("real", "BENCH_real.json");
+    let fft_path = args.opt_or("fft", "results/bench_fft_sizes.json");
     let scale = args.opt_f64("scale")?.unwrap_or(1.0);
 
     let text = std::fs::read_to_string(&baseline_path)
@@ -90,6 +98,7 @@ fn run(argv: &[String]) -> Result<bool, String> {
     let mut suites: BTreeMap<&str, BTreeMap<String, f64>> = BTreeMap::new();
     suites.insert("pipeline", load_means(Path::new(&pipeline_path))?);
     suites.insert("real", load_means(Path::new(&real_path))?);
+    suites.insert("fft", load_means(Path::new(&fft_path))?);
 
     let metrics = base
         .get("metrics")
@@ -109,26 +118,59 @@ fn run(argv: &[String]) -> Result<bool, String> {
     for m in metrics {
         let name = m.get("name").and_then(Json::as_str).ok_or("baseline: metric missing name")?;
         let suite = m.get("suite").and_then(Json::as_str).ok_or("baseline: metric missing suite")?;
-        let slow = m.get("slow").and_then(Json::as_str).ok_or("baseline: metric missing slow")?;
-        let fast = m.get("fast").and_then(Json::as_str).ok_or("baseline: metric missing fast")?;
         let baseline = m
             .get("baseline")
             .and_then(Json::as_f64)
             .ok_or("baseline: metric missing baseline")?;
+        // a metric is one slow/fast ratio, or — with a `pairs` array —
+        // the geometric mean of several (the gate-side mirror of the
+        // bench's vector-vs-scalar geomean line)
+        let mut pairs: Vec<(String, String)> = Vec::new();
+        if let Some(arr) = m.get("pairs").and_then(Json::as_arr) {
+            for p in arr {
+                let slow =
+                    p.get("slow").and_then(Json::as_str).ok_or("baseline: pair missing slow")?;
+                let fast =
+                    p.get("fast").and_then(Json::as_str).ok_or("baseline: pair missing fast")?;
+                pairs.push((slow.to_string(), fast.to_string()));
+            }
+            if pairs.is_empty() {
+                return Err(format!("baseline: metric `{name}` has an empty pairs array"));
+            }
+        } else {
+            let slow =
+                m.get("slow").and_then(Json::as_str).ok_or("baseline: metric missing slow")?;
+            let fast =
+                m.get("fast").and_then(Json::as_str).ok_or("baseline: metric missing fast")?;
+            pairs.push((slow.to_string(), fast.to_string()));
+        }
         let means = suites
             .get(suite)
             .ok_or_else(|| format!("baseline: unknown suite `{suite}` for `{name}`"))?;
-        let (Some(&slow_s), Some(&fast_s)) = (means.get(slow), means.get(fast)) else {
-            println!("  FAIL {name}: bench result `{slow}` or `{fast}` missing from {suite} suite");
-            ok = false;
-            continue;
-        };
-        if !(slow_s.is_finite() && fast_s.is_finite()) || fast_s <= 0.0 {
-            println!("  FAIL {name}: degenerate means (slow {slow_s}, fast {fast_s})");
+        let mut log_sum = 0.0;
+        let mut valid = true;
+        for (slow, fast) in &pairs {
+            let (Some(&slow_s), Some(&fast_s)) =
+                (means.get(slow.as_str()), means.get(fast.as_str()))
+            else {
+                println!(
+                    "  FAIL {name}: bench result `{slow}` or `{fast}` missing from {suite} suite"
+                );
+                valid = false;
+                break;
+            };
+            if !(slow_s.is_finite() && fast_s.is_finite()) || fast_s <= 0.0 {
+                println!("  FAIL {name}: degenerate means (slow {slow_s}, fast {fast_s})");
+                valid = false;
+                break;
+            }
+            log_sum += (slow_s / fast_s * scale).ln();
+        }
+        if !valid {
             ok = false;
             continue;
         }
-        let speedup = slow_s / fast_s * scale;
+        let speedup = (log_sum / pairs.len() as f64).exp();
         let floor = baseline * (1.0 - tolerance);
         let pass = speedup >= floor;
         println!(

@@ -471,10 +471,10 @@ fn fft_row_radix_pooled(
             }
             in_src = !in_src;
         }
-        if !in_src {
-            re.copy_from_slice(sr);
-            im.copy_from_slice(si);
-        }
+        // fused tail codelet (or legacy copy for tail-less plans): a
+        // single serial pass — it is one cheap sweep over the row, so
+        // splitting it is not worth a barrier (Amdahl note above)
+        radix::finish_tail(plan, dir, re, im, sr, si, in_src);
     });
     if dir == Direction::Inverse {
         let inv_n = 1.0 / n as f64;

@@ -14,8 +14,17 @@
 //! table and one scratch buffer — the plan-once/execute-many shape of
 //! Algorithm 6) and an independent cross-check for the all-2s radix
 //! schedule.
+//!
+//! The kernel shares the vectorized machinery of [`crate::dft::radix`]:
+//! the last `log2(min(n, 8))` stages run as one fused FFT2/4/8 tail
+//! codelet (hardcoded twiddles, in-place, no final un-ping-pong copy),
+//! and the stride-1 first stage — where the lane loop degenerates to
+//! scalar — dispatches to the AVX2 kernel in [`crate::dft::simd`] when
+//! the `simd` feature is compiled in and the CPU supports it (identical
+//! IEEE-754 operation order, so the output is bit-identical either way).
 
 use crate::dft::plan::Pow2Plan;
+use crate::dft::{radix, simd};
 
 /// Forward/inverse direction marker.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -55,11 +64,14 @@ pub fn fft_row_pow2(
     }
 
     // ping-pong between (re,im) and scratch; stage s: view src as
-    // (n_cur, stride) row-major [p, q] at index q + stride*p.
+    // (n_cur, stride) row-major [p, q] at index q + stride*p. The last
+    // log2(tail) stages are held back and fused into one codelet pass.
+    let tail = n.min(8);
+    let sign = if dir == Direction::Inverse { -1.0 } else { 1.0 };
     let mut n_cur = n;
     let mut stride = 1usize;
     let mut in_src = true; // data currently in re/im?
-    while n_cur > 1 {
+    while n_cur > tail {
         let m = n_cur / 2;
         let (sr, si, dr, di): (&[f64], &[f64], &mut [f64], &mut [f64]) = if in_src {
             (&*re, &*im, &mut *scratch_re, &mut *scratch_im)
@@ -69,7 +81,17 @@ pub fn fft_row_pow2(
         // twiddles for this stage: w_p = exp(sign*2πi * p / n_cur)
         // plan stores forward twiddles at stride n/n_cur: w_p = tw[p * (n/n_cur)]
         let tw_step = plan.n / n_cur;
-        let sign = if dir == Direction::Inverse { -1.0 } else { 1.0 };
+        if stride == 1 {
+            // first stage only: tw_step == 1, so the plan's twiddle
+            // planes are exactly the per-p table the AVX2 kernel packs
+            let (twr, twi) = plan.twiddles();
+            if simd::try_stage2(sign, twr, twi, sr, si, dr, di, 0, m, m, 1) {
+                n_cur = m;
+                stride *= 2;
+                in_src = !in_src;
+                continue;
+            }
+        }
         for p in 0..m {
             let (wr, wi0) = plan.twiddle(p * tw_step);
             let wi = sign * wi0;
@@ -104,9 +126,12 @@ pub fn fft_row_pow2(
         in_src = !in_src;
     }
 
-    if !in_src {
-        re.copy_from_slice(scratch_re);
-        im.copy_from_slice(scratch_im);
+    // fused FFT2/4/8 finish (shared with the mixed-radix kernel): one
+    // hardcoded-twiddle pass lands the result in re/im with no copy
+    if in_src {
+        radix::tail_codelet_inplace(tail, sign, re, im);
+    } else {
+        radix::tail_codelet(tail, sign, scratch_re, scratch_im, re, im);
     }
     if dir == Direction::Inverse {
         let inv_n = 1.0 / n as f64;

@@ -12,7 +12,11 @@
 //! * [`radix`] — the mixed-radix (2/3/5) Stockham DIF kernel: every
 //!   5-smooth length — which includes most of the paper's N = 128·k
 //!   grid (384 = 2⁷·3, 640 = 2⁷·5, 1152 = 2⁷·3², …) — runs natively in
-//!   O(n log n),
+//!   O(n log n); its vectorized schedule fuses the last pow2 stages
+//!   into hardcoded-twiddle FFT2/4/8 tail codelets,
+//! * [`simd`] — opt-in (`--features simd`) AVX2 kernels for the
+//!   narrow-stride radix-2 stages, runtime-detected with a safe scalar
+//!   fallback and bit-identical output,
 //! * [`fft`] — iterative Stockham radix-2 (same algorithm as the L1
 //!   Pallas kernel, so the two implementations cross-check each other;
 //!   still the engine behind Bluestein's internal convolution FFTs),
@@ -50,6 +54,7 @@ pub mod pipeline;
 pub mod plan;
 pub mod radix;
 pub mod real;
+pub mod simd;
 pub mod transpose;
 
 /// A complex matrix in SoA split-plane layout, row-major.

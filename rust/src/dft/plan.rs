@@ -46,6 +46,14 @@ impl Pow2Plan {
     pub fn twiddle(&self, k: usize) -> (f64, f64) {
         (self.tw_re[k], self.tw_im[k])
     }
+
+    /// The full forward twiddle planes (k < n/2), contiguous. The first
+    /// DIF stage reads `tw[p]` directly (twiddle stride 1), which is
+    /// what the AVX2 stage-2 kernel consumes as packed lanes.
+    #[inline]
+    pub(crate) fn twiddles(&self) -> (&[f64], &[f64]) {
+        (&self.tw_re, &self.tw_im)
+    }
 }
 
 /// The memoized kernel choice for one row length: mixed-radix for

@@ -1,4 +1,5 @@
-//! Mixed-radix (2/3/5) iterative Stockham DIF FFT.
+//! Mixed-radix (2/3/5) iterative Stockham DIF FFT — the vectorized row
+//! kernel behind every execution path.
 //!
 //! The paper's problem sizes are N = 128·k — mostly *not* powers of two
 //! (384 = 2⁷·3, 640 = 2⁷·5, 1152 = 2⁷·3²). The radix-2 kernel
@@ -19,12 +20,72 @@
 //! divides `n_cur` by r and multiplies `stride` by r; the result lands
 //! in natural order (no digit reversal).
 //!
+//! # Kernel variants
+//!
+//! [`KernelVariant::Vectorized`] (the default) restructures the
+//! schedule for throughput; [`KernelVariant::Scalar`] preserves the
+//! pre-codelet kernel shape (ascending factors, every stage twiddled
+//! through the ping-pong, no SIMD) as the honest reference arm for the
+//! scalar-vs-vectorized speedup in `bench_fft_sizes` and the perf gate.
+//! The vectorized plan differs in three ways:
+//!
+//! * **Reordered schedule.** Radix-2 stages run first, then 3s, then
+//!   5s, with the *last* `k = min(#2s, 3)` radix-2 stages held back and
+//!   fused into a single tail codelet. Odd radices therefore run at
+//!   lane widths that are multiples of the remaining pow2 factor —
+//!   vector-friendly `q` loops — and every explicit stage keeps the
+//!   bounds-check-free subslice shape that autovectorizes at default
+//!   flags.
+//! * **Tail codelets.** The final `k` radix-2 stages all carry unit
+//!   twiddles in this schedule (their `n_cur` divides the held-back
+//!   pow2 factor), so they collapse into one hardcoded-constant
+//!   FFT2/FFT4/FFT8 applied per lane `q` at stride `s = n/tail` — one
+//!   pass over the data instead of `k` twiddled ping-pong passes, and
+//!   it runs *in place* (output block `s·j+q` reads exactly the input
+//!   block set `s·p+q`), which also eliminates the final un-ping-pong
+//!   copy. At 384 that turns 8 full-row passes into 6; at 1152, 9+copy
+//!   into 7.
+//! * **SIMD first stages.** With the `simd` cargo feature on x86_64,
+//!   the stride-1 and stride-2 radix-2 stages — where the scalar lane
+//!   loop degenerates — dispatch to explicit AVX2 kernels
+//!   ([`crate::dft::simd`]), selected at runtime via
+//!   `is_x86_feature_detected!` with a safe scalar fallback. The SIMD
+//!   kernels perform identical IEEE-754 operations (no FMA), so their
+//!   output is bit-identical to the scalar loop.
+//!
 //! [`apply_stage_range`] applies one stage over a sub-range of `p`, so
 //! the executor ([`crate::dft::exec`]) can split a *single long row*
 //! across pool workers (disjoint output blocks per `p`) with bit-exact
-//! results regardless of the split.
+//! results regardless of the split; the tail codelet is a single serial
+//! pass in that path. [`kernel_generation`] names the kernel's
+//! measurable speed surface — wisdom records tagged with a different
+//! generation miss at lookup so the profiler re-measures FPM surfaces
+//! (and POPTA/HPOPTA partitions shift) after a kernel change.
 
 use crate::dft::fft::Direction;
+use crate::dft::simd;
+
+// ---------------------------------------------------------------------------
+// Hoisted butterfly constants
+// ---------------------------------------------------------------------------
+// Correctly-rounded f64 literals of the algebraic values (libm's cos/sin
+// are not correctly rounded: e.g. cos(4π/5) comes back 2 ulp off on
+// x86_64 glibc), hoisted so no stage recomputes trig per call. The
+// `hoisted_constants_match_trig` test pins them against runtime trig to
+// ~1e-15 — not bitwise, exactly because libm varies by platform.
+
+/// sin(2π/3) = √3/2
+const S3: f64 = 0.866_025_403_784_438_6;
+/// cos(2π/5) = (√5 − 1)/4
+const C5_1: f64 = 0.309_016_994_374_947_45;
+/// cos(4π/5) = −(√5 + 1)/4
+const C5_2: f64 = -0.809_016_994_374_947_5;
+/// sin(2π/5)
+const S5_1: f64 = 0.951_056_516_295_153_5;
+/// sin(4π/5)
+const S5_2: f64 = 0.587_785_252_292_473_1;
+/// cos(2π/8) = 1/√2 (FFT8 codelet twiddle)
+const C8: f64 = std::f64::consts::FRAC_1_SQRT_2;
 
 /// Factor `n` into its {2, 3, 5} prime factors (ascending), or `None`
 /// if `n` has any other prime factor (or is zero). `n == 1` factors as
@@ -63,7 +124,41 @@ pub fn is_five_smooth(n: usize) -> bool {
     rem == 1
 }
 
-/// Human-readable row-kernel description for a length (CLI reports).
+/// Which inner-loop implementation a [`RadixPlan`] uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelVariant {
+    /// The pre-codelet kernel shape: ascending factor schedule, every
+    /// stage twiddled through the ping-pong, no SIMD. Kept as the
+    /// reference arm of the scalar-vs-vectorized bench/perf-gate story.
+    Scalar,
+    /// Reordered schedule + fused FFT2/4/8 tail codelet + (with the
+    /// `simd` feature) AVX2 stride-1/2 first stages. The default.
+    Vectorized,
+}
+
+/// Is the AVX2 fast path active in this process (feature compiled in
+/// *and* detected at runtime)?
+pub fn simd_active() -> bool {
+    simd::avx2_enabled()
+}
+
+/// Name of the kernel generation whose speed surface the profiler would
+/// measure right now. Stored on wisdom records: a native record tagged
+/// with a *different* generation (pre-codelet artifact, or an AVX2
+/// on/off mismatch across machines) misses at lookup, forcing a
+/// re-measure so FPM surfaces — and the POPTA/HPOPTA partitions and pad
+/// choices planned over them — track the installed kernel.
+pub fn kernel_generation() -> &'static str {
+    if simd_active() {
+        "stockham-v2-codelet+avx2"
+    } else {
+        "stockham-v2-codelet"
+    }
+}
+
+/// Human-readable row-kernel description for a length (CLI reports):
+/// factorization plus, for the vectorized plan, the fused tail codelet
+/// and whether the AVX2 first stages apply.
 pub fn kernel_summary(n: usize) -> String {
     if n == 0 {
         return "empty".to_string();
@@ -87,7 +182,16 @@ pub fn kernel_summary(n: usize) -> String {
                     _ => parts.push(format!("{b}^{e}")),
                 }
             }
-            format!("mixed-radix {}", parts.join("*"))
+            let base = format!("mixed-radix {}", parts.join("*"));
+            let k = two.min(3);
+            if k == 0 {
+                base
+            } else {
+                // AVX2 applies to the stride-1/2 radix-2 stages, which
+                // exist only when 2s remain outside the fused tail
+                let avx2 = if simd_active() && two > k { "+avx2" } else { "" };
+                format!("{base} [fft{} codelet{avx2}]", 1usize << k)
+            }
         }
         None => {
             let m = (2 * n - 1).next_power_of_two();
@@ -105,6 +209,8 @@ pub struct RadixStage {
     pub n_cur: usize,
     /// lane width (original-index stride factor) at this stage
     pub stride: usize,
+    /// eligible for the AVX2 fast path (vectorized radix-2, stride ≤ 2)
+    simd_ok: bool,
     tw_re: Vec<f64>,
     tw_im: Vec<f64>,
 }
@@ -122,26 +228,57 @@ impl RadixStage {
 #[derive(Clone, Debug)]
 pub struct RadixPlan {
     pub n: usize,
-    /// radix schedule (ascending factors of n)
+    /// ascending {2,3,5} factorization of `n` (stable, informational —
+    /// the *executed* schedule is `stages` plus the fused `tail`)
     pub factors: Vec<usize>,
+    /// which inner-loop implementation this plan runs
+    pub variant: KernelVariant,
+    /// fused final-stages codelet size (1 = none, else 2/4/8): the last
+    /// log2(tail) radix-2 stages run as one hardcoded-twiddle pass
+    pub tail: usize,
     pub stages: Vec<RadixStage>,
 }
 
 impl RadixPlan {
-    /// Plan a 5-smooth length; panics otherwise (see [`RadixPlan::try_new`]).
+    /// Plan a 5-smooth length with the default (vectorized) kernel;
+    /// panics otherwise (see [`RadixPlan::try_new`]).
     pub fn new(n: usize) -> RadixPlan {
-        RadixPlan::try_new(n)
+        Self::with_variant(n, KernelVariant::Vectorized)
+    }
+
+    /// Plan with an explicit kernel variant; panics on non-smooth `n`.
+    pub fn with_variant(n: usize, variant: KernelVariant) -> RadixPlan {
+        RadixPlan::try_with_variant(n, variant)
             .unwrap_or_else(|| panic!("RadixPlan requires a 5-smooth length, got {n}"))
     }
 
     /// Plan a 5-smooth length, or `None` when `n` has other factors
     /// (those lengths belong to Bluestein).
     pub fn try_new(n: usize) -> Option<RadixPlan> {
+        Self::try_with_variant(n, KernelVariant::Vectorized)
+    }
+
+    /// [`RadixPlan::try_new`] with an explicit kernel variant.
+    pub fn try_with_variant(n: usize, variant: KernelVariant) -> Option<RadixPlan> {
         let factors = factorize_235(n)?;
-        let mut stages = Vec::with_capacity(factors.len());
+        // The executed schedule. Scalar: the ascending factors, no tail.
+        // Vectorized: 2s first (fusing the last min(#2s, 3) of them into
+        // the tail codelet), then 3s, then 5s.
+        let (schedule, tail) = match variant {
+            KernelVariant::Scalar => (factors.clone(), 1usize),
+            KernelVariant::Vectorized => {
+                let twos = factors.iter().filter(|&&r| r == 2).count();
+                let k = twos.min(3);
+                let mut schedule = Vec::with_capacity(factors.len() - k);
+                schedule.resize(twos - k, 2usize);
+                schedule.extend(factors.iter().copied().filter(|&r| r != 2));
+                (schedule, 1usize << k)
+            }
+        };
+        let mut stages = Vec::with_capacity(schedule.len());
         let mut n_cur = n;
         let mut stride = 1usize;
-        for &r in &factors {
+        for &r in &schedule {
             let m = n_cur / r;
             let mut tw_re = Vec::with_capacity(m * (r - 1));
             let mut tw_im = Vec::with_capacity(m * (r - 1));
@@ -154,11 +291,13 @@ impl RadixPlan {
                     tw_im.push(ang.sin());
                 }
             }
-            stages.push(RadixStage { radix: r, n_cur, stride, tw_re, tw_im });
+            let simd_ok = variant == KernelVariant::Vectorized && r == 2 && stride <= 2;
+            stages.push(RadixStage { radix: r, n_cur, stride, simd_ok, tw_re, tw_im });
             n_cur = m;
             stride *= r;
         }
-        Some(RadixPlan { n, factors, stages })
+        debug_assert_eq!(n_cur, tail);
+        Some(RadixPlan { n, factors, variant, tail, stages })
     }
 }
 
@@ -174,7 +313,9 @@ pub fn fft_row_radix(
 ) {
     let n = plan.n;
     debug_assert_eq!(re.len(), n);
+    debug_assert_eq!(im.len(), n);
     debug_assert_eq!(scratch_re.len(), n);
+    debug_assert_eq!(scratch_im.len(), n);
 
     let mut in_src = true; // data currently in re/im?
     for stage in &plan.stages {
@@ -186,10 +327,7 @@ pub fn fft_row_radix(
         }
         in_src = !in_src;
     }
-    if !in_src {
-        re.copy_from_slice(scratch_re);
-        im.copy_from_slice(scratch_im);
-    }
+    finish_tail(plan, dir, re, im, scratch_re, scratch_im, in_src);
     if dir == Direction::Inverse {
         let inv_n = 1.0 / n as f64;
         for v in re.iter_mut() {
@@ -201,14 +339,46 @@ pub fn fft_row_radix(
     }
 }
 
+/// Finish a row after the explicit stages: run the fused tail codelet
+/// (in place when the data sits in `re`/`im`, as a gathering pass from
+/// the scratch planes otherwise — either way the result lands in
+/// `re`/`im` with no extra copy), or, for tail-less plans, the legacy
+/// un-ping-pong copy. Shared by the serial kernel and the executor's
+/// split-row path.
+pub(crate) fn finish_tail(
+    plan: &RadixPlan,
+    dir: Direction,
+    re: &mut [f64],
+    im: &mut [f64],
+    scratch_re: &mut [f64],
+    scratch_im: &mut [f64],
+    in_src: bool,
+) {
+    if plan.tail == 1 {
+        if !in_src {
+            re.copy_from_slice(scratch_re);
+            im.copy_from_slice(scratch_im);
+        }
+        return;
+    }
+    let sign = if dir == Direction::Inverse { -1.0 } else { 1.0 };
+    if in_src {
+        tail_codelet_inplace(plan.tail, sign, re, im);
+    } else {
+        tail_codelet(plan.tail, sign, scratch_re, scratch_im, re, im);
+    }
+}
+
 /// Apply one DIF stage for butterflies `p ∈ [p_lo, p_hi)`, reading the
 /// full `src` planes and writing `dst`, which must cover *exactly* the
 /// output blocks of the range: `dst.len() == (p_hi − p_lo)·r·stride`
 /// (the range's blocks are contiguous, starting at absolute offset
 /// `r·stride·p_lo`). Because ranges own disjoint output slices, the
 /// executor runs them concurrently with plain `split_at_mut`; the
-/// arithmetic is identical regardless of how the range is split
-/// (bit-exact thread-count invariance).
+/// arithmetic is identical regardless of how the range is split — and
+/// identical between the scalar loops and the AVX2 kernels, which use
+/// the same IEEE-754 operation order (bit-exact thread-count and
+/// scalar-vs-SIMD invariance).
 #[allow(clippy::too_many_arguments)]
 pub fn apply_stage_range(
     stage: &RadixStage,
@@ -247,6 +417,26 @@ fn stage2(
     m: usize,
     stride: usize,
 ) {
+    // narrow first stages: explicit AVX2 kernels when available
+    // (bit-identical arithmetic, so this dispatch is unobservable in
+    // the output); scalar loop otherwise
+    if stage.simd_ok
+        && simd::try_stage2(
+            sign,
+            &stage.tw_re,
+            &stage.tw_im,
+            src_re,
+            src_im,
+            dst_re,
+            dst_im,
+            p_lo,
+            p_hi,
+            m,
+            stride,
+        )
+    {
+        return;
+    }
     for p in p_lo..p_hi {
         let wr = stage.tw_re[p];
         let wi = sign * stage.tw_im[p];
@@ -290,7 +480,7 @@ fn stage3(
     stride: usize,
 ) {
     const C3: f64 = -0.5; // cos(2π/3)
-    let s3 = sign * (-(3.0f64.sqrt()) / 2.0); // sin(−2π/3), sign-adjusted
+    let s3 = sign * (-S3); // sin(−2π/3), sign-adjusted
     for p in p_lo..p_hi {
         let t = 2 * p;
         let w1r = stage.tw_re[t];
@@ -352,19 +542,19 @@ fn stage5(
     m: usize,
     stride: usize,
 ) {
-    let fifth = 2.0 * std::f64::consts::PI / 5.0;
-    let c1 = fifth.cos(); // cos(2π/5)
-    let c2 = (2.0 * fifth).cos(); // cos(4π/5)
-    let s1 = sign * (-fifth.sin()); // sin(−2π/5), sign-adjusted
-    let s2 = sign * (-(2.0 * fifth).sin()); // sin(−4π/5), sign-adjusted
+    let c1 = C5_1; // cos(2π/5)
+    let c2 = C5_2; // cos(4π/5)
+    let s1 = sign * (-S5_1); // sin(−2π/5), sign-adjusted
+    let s2 = sign * (-S5_2); // sin(−4π/5), sign-adjusted
     for p in p_lo..p_hi {
         let t = 4 * p;
-        let mut wr = [0.0f64; 4];
-        let mut wi = [0.0f64; 4];
-        for k in 0..4 {
-            wr[k] = stage.tw_re[t + k];
-            wi[k] = sign * stage.tw_im[t + k];
-        }
+        let wr = [stage.tw_re[t], stage.tw_re[t + 1], stage.tw_re[t + 2], stage.tw_re[t + 3]];
+        let wi = [
+            sign * stage.tw_im[t],
+            sign * stage.tw_im[t + 1],
+            sign * stage.tw_im[t + 2],
+            sign * stage.tw_im[t + 3],
+        ];
         let o = stride * 5 * (p - p_lo);
         let bases = [
             stride * p,
@@ -436,17 +626,298 @@ fn stage5(
     }
 }
 
-/// Batched convenience wrapper (allocates a plan + scratch per call;
-/// tests and cold paths only — hot paths go through
-/// [`crate::dft::exec::fft_rows_pooled`]).
-pub fn fft_rows_radix(re: &mut [f64], im: &mut [f64], rows: usize, n: usize, dir: Direction) {
-    let plan = RadixPlan::new(n);
-    let mut sr = vec![0.0; n];
-    let mut si = vec![0.0; n];
-    for r in 0..rows {
-        let span = r * n..(r + 1) * n;
-        fft_row_radix(&mut re[span.clone()], &mut im[span], &mut sr, &mut si, &plan, dir);
+// ---------------------------------------------------------------------------
+// Tail codelets — hardcoded-twiddle FFT2/FFT4/FFT8 over the lane set
+// ---------------------------------------------------------------------------
+// After the explicit stages, the state is an `(tail, s)` matrix with
+// s = n/tail: lane q of the length-`tail` sub-DFT lives at indices
+// `s·p + q`. The codelet computes the full natural-order DFT of each
+// lane in one pass — output `s·k + q` covers exactly the input block
+// set, so the in-place form needs no scratch and no final copy. `sign`
+// is +1 forward / −1 inverse (the same convention as the stages; the
+// 1/n inverse scale stays with the caller).
+
+/// One complex FFT4 butterfly on lane `q` of the chunked planes (the
+/// radix-4 DIT with hardcoded ±i twiddles). Reads every input before
+/// the first write, so source and destination chunks may alias (the
+/// in-place form passes the same identifiers for both).
+macro_rules! fft4_lanes_body {
+    ($q:expr, $sign:expr,
+     $s0r:ident, $s0i:ident, $s1r:ident, $s1i:ident,
+     $s2r:ident, $s2i:ident, $s3r:ident, $s3i:ident,
+     $d0r:ident, $d0i:ident, $d1r:ident, $d1i:ident,
+     $d2r:ident, $d2i:ident, $d3r:ident, $d3i:ident) => {{
+        let (x0r, x0i) = ($s0r[$q], $s0i[$q]);
+        let (x1r, x1i) = ($s1r[$q], $s1i[$q]);
+        let (x2r, x2i) = ($s2r[$q], $s2i[$q]);
+        let (x3r, x3i) = ($s3r[$q], $s3i[$q]);
+        let t0r = x0r + x2r;
+        let t0i = x0i + x2i;
+        let t1r = x1r + x3r;
+        let t1i = x1i + x3i;
+        let u0r = x0r - x2r;
+        let u0i = x0i - x2i;
+        let u1r = x1r - x3r;
+        let u1i = x1i - x3i;
+        $d0r[$q] = t0r + t1r;
+        $d0i[$q] = t0i + t1i;
+        $d2r[$q] = t0r - t1r;
+        $d2i[$q] = t0i - t1i;
+        // y1 = u0 − i·sign·u1, y3 = u0 + i·sign·u1
+        $d1r[$q] = u0r + $sign * u1i;
+        $d1i[$q] = u0i - $sign * u1r;
+        $d3r[$q] = u0r - $sign * u1i;
+        $d3i[$q] = u0i + $sign * u1r;
+    }};
+}
+
+/// One complex FFT8 butterfly on lane `q`: DIT over two FFT4s (evens
+/// x0,x2,x4,x6 and odds x1,x3,x5,x7) with the 1/√2 twiddles hardcoded.
+/// Same aliasing contract as [`fft4_lanes_body`].
+macro_rules! fft8_lanes_body {
+    ($q:expr, $sign:expr,
+     $s0r:ident, $s0i:ident, $s1r:ident, $s1i:ident,
+     $s2r:ident, $s2i:ident, $s3r:ident, $s3i:ident,
+     $s4r:ident, $s4i:ident, $s5r:ident, $s5i:ident,
+     $s6r:ident, $s6i:ident, $s7r:ident, $s7i:ident,
+     $d0r:ident, $d0i:ident, $d1r:ident, $d1i:ident,
+     $d2r:ident, $d2i:ident, $d3r:ident, $d3i:ident,
+     $d4r:ident, $d4i:ident, $d5r:ident, $d5i:ident,
+     $d6r:ident, $d6i:ident, $d7r:ident, $d7i:ident) => {{
+        let (x0r, x0i) = ($s0r[$q], $s0i[$q]);
+        let (x1r, x1i) = ($s1r[$q], $s1i[$q]);
+        let (x2r, x2i) = ($s2r[$q], $s2i[$q]);
+        let (x3r, x3i) = ($s3r[$q], $s3i[$q]);
+        let (x4r, x4i) = ($s4r[$q], $s4i[$q]);
+        let (x5r, x5i) = ($s5r[$q], $s5i[$q]);
+        let (x6r, x6i) = ($s6r[$q], $s6i[$q]);
+        let (x7r, x7i) = ($s7r[$q], $s7i[$q]);
+        // FFT4 of the evens (x0, x2, x4, x6) → e0..e3
+        let a0r = x0r + x4r;
+        let a0i = x0i + x4i;
+        let a1r = x2r + x6r;
+        let a1i = x2i + x6i;
+        let b0r = x0r - x4r;
+        let b0i = x0i - x4i;
+        let b1r = x2r - x6r;
+        let b1i = x2i - x6i;
+        let e0r = a0r + a1r;
+        let e0i = a0i + a1i;
+        let e2r = a0r - a1r;
+        let e2i = a0i - a1i;
+        let e1r = b0r + $sign * b1i;
+        let e1i = b0i - $sign * b1r;
+        let e3r = b0r - $sign * b1i;
+        let e3i = b0i + $sign * b1r;
+        // FFT4 of the odds (x1, x3, x5, x7) → o0..o3
+        let a0r = x1r + x5r;
+        let a0i = x1i + x5i;
+        let a1r = x3r + x7r;
+        let a1i = x3i + x7i;
+        let b0r = x1r - x5r;
+        let b0i = x1i - x5i;
+        let b1r = x3r - x7r;
+        let b1i = x3i - x7i;
+        let o0r = a0r + a1r;
+        let o0i = a0i + a1i;
+        let o2r = a0r - a1r;
+        let o2i = a0i - a1i;
+        let o1r = b0r + $sign * b1i;
+        let o1i = b0i - $sign * b1r;
+        let o3r = b0r - $sign * b1i;
+        let o3i = b0i + $sign * b1r;
+        // odd branch twiddled by w8^k = e^(−sign·2πik/8), c = 1/√2
+        let t1r = C8 * (o1r + $sign * o1i);
+        let t1i = C8 * (o1i - $sign * o1r);
+        let t2r = $sign * o2i;
+        let t2i = -($sign * o2r);
+        let t3r = -(C8 * (o3r - $sign * o3i));
+        let t3i = -(C8 * (o3i + $sign * o3r));
+        $d0r[$q] = e0r + o0r;
+        $d0i[$q] = e0i + o0i;
+        $d4r[$q] = e0r - o0r;
+        $d4i[$q] = e0i - o0i;
+        $d1r[$q] = e1r + t1r;
+        $d1i[$q] = e1i + t1i;
+        $d5r[$q] = e1r - t1r;
+        $d5i[$q] = e1i - t1i;
+        $d2r[$q] = e2r + t2r;
+        $d2i[$q] = e2i + t2i;
+        $d6r[$q] = e2r - t2r;
+        $d6i[$q] = e2i - t2i;
+        $d3r[$q] = e3r + t3r;
+        $d3i[$q] = e3i + t3i;
+        $d7r[$q] = e3r - t3r;
+        $d7i[$q] = e3i - t3i;
+    }};
+}
+
+/// Out-of-place tail codelet: gather lanes from `src`, write the
+/// natural-order result to `dst` (used when the ping-pong left the data
+/// in the scratch planes — replaces codelet stages *and* the copy).
+pub(crate) fn tail_codelet(
+    tail: usize,
+    sign: f64,
+    src_re: &[f64],
+    src_im: &[f64],
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+) {
+    let s = src_re.len() / tail;
+    debug_assert_eq!(src_re.len(), tail * s);
+    debug_assert_eq!(dst_re.len(), tail * s);
+    match tail {
+        2 => {
+            let (s0r, s1r) = src_re.split_at(s);
+            let (s0i, s1i) = src_im.split_at(s);
+            let (d0r, d1r) = dst_re.split_at_mut(s);
+            let (d0i, d1i) = dst_im.split_at_mut(s);
+            for q in 0..s {
+                let (ar, ai) = (s0r[q], s0i[q]);
+                let (br, bi) = (s1r[q], s1i[q]);
+                d0r[q] = ar + br;
+                d0i[q] = ai + bi;
+                d1r[q] = ar - br;
+                d1i[q] = ai - bi;
+            }
+        }
+        4 => {
+            let (s0r, rest) = src_re.split_at(s);
+            let (s1r, rest) = rest.split_at(s);
+            let (s2r, s3r) = rest.split_at(s);
+            let (s0i, rest) = src_im.split_at(s);
+            let (s1i, rest) = rest.split_at(s);
+            let (s2i, s3i) = rest.split_at(s);
+            let (d0r, rest) = dst_re.split_at_mut(s);
+            let (d1r, rest) = rest.split_at_mut(s);
+            let (d2r, d3r) = rest.split_at_mut(s);
+            let (d0i, rest) = dst_im.split_at_mut(s);
+            let (d1i, rest) = rest.split_at_mut(s);
+            let (d2i, d3i) = rest.split_at_mut(s);
+            for q in 0..s {
+                fft4_lanes_body!(
+                    q, sign, s0r, s0i, s1r, s1i, s2r, s2i, s3r, s3i, d0r, d0i, d1r, d1i, d2r, d2i,
+                    d3r, d3i
+                );
+            }
+        }
+        8 => {
+            let (s0r, rest) = src_re.split_at(s);
+            let (s1r, rest) = rest.split_at(s);
+            let (s2r, rest) = rest.split_at(s);
+            let (s3r, rest) = rest.split_at(s);
+            let (s4r, rest) = rest.split_at(s);
+            let (s5r, rest) = rest.split_at(s);
+            let (s6r, s7r) = rest.split_at(s);
+            let (s0i, rest) = src_im.split_at(s);
+            let (s1i, rest) = rest.split_at(s);
+            let (s2i, rest) = rest.split_at(s);
+            let (s3i, rest) = rest.split_at(s);
+            let (s4i, rest) = rest.split_at(s);
+            let (s5i, rest) = rest.split_at(s);
+            let (s6i, s7i) = rest.split_at(s);
+            let (d0r, rest) = dst_re.split_at_mut(s);
+            let (d1r, rest) = rest.split_at_mut(s);
+            let (d2r, rest) = rest.split_at_mut(s);
+            let (d3r, rest) = rest.split_at_mut(s);
+            let (d4r, rest) = rest.split_at_mut(s);
+            let (d5r, rest) = rest.split_at_mut(s);
+            let (d6r, d7r) = rest.split_at_mut(s);
+            let (d0i, rest) = dst_im.split_at_mut(s);
+            let (d1i, rest) = rest.split_at_mut(s);
+            let (d2i, rest) = rest.split_at_mut(s);
+            let (d3i, rest) = rest.split_at_mut(s);
+            let (d4i, rest) = rest.split_at_mut(s);
+            let (d5i, rest) = rest.split_at_mut(s);
+            let (d6i, d7i) = rest.split_at_mut(s);
+            for q in 0..s {
+                fft8_lanes_body!(
+                    q, sign, s0r, s0i, s1r, s1i, s2r, s2i, s3r, s3i, s4r, s4i, s5r, s5i, s6r, s6i,
+                    s7r, s7i, d0r, d0i, d1r, d1i, d2r, d2i, d3r, d3i, d4r, d4i, d5r, d5i, d6r,
+                    d6i, d7r, d7i
+                );
+            }
+        }
+        other => unreachable!("unsupported tail {other}"),
     }
+}
+
+/// In-place tail codelet (used when the ping-pong left the data in the
+/// destination planes): identical arithmetic to [`tail_codelet`] — the
+/// butterfly bodies read every input before writing.
+pub(crate) fn tail_codelet_inplace(tail: usize, sign: f64, re: &mut [f64], im: &mut [f64]) {
+    let s = re.len() / tail;
+    debug_assert_eq!(re.len(), tail * s);
+    match tail {
+        2 => {
+            let (c0r, c1r) = re.split_at_mut(s);
+            let (c0i, c1i) = im.split_at_mut(s);
+            for q in 0..s {
+                let (ar, ai) = (c0r[q], c0i[q]);
+                let (br, bi) = (c1r[q], c1i[q]);
+                c0r[q] = ar + br;
+                c0i[q] = ai + bi;
+                c1r[q] = ar - br;
+                c1i[q] = ai - bi;
+            }
+        }
+        4 => {
+            let (c0r, rest) = re.split_at_mut(s);
+            let (c1r, rest) = rest.split_at_mut(s);
+            let (c2r, c3r) = rest.split_at_mut(s);
+            let (c0i, rest) = im.split_at_mut(s);
+            let (c1i, rest) = rest.split_at_mut(s);
+            let (c2i, c3i) = rest.split_at_mut(s);
+            for q in 0..s {
+                fft4_lanes_body!(
+                    q, sign, c0r, c0i, c1r, c1i, c2r, c2i, c3r, c3i, c0r, c0i, c1r, c1i, c2r, c2i,
+                    c3r, c3i
+                );
+            }
+        }
+        8 => {
+            let (c0r, rest) = re.split_at_mut(s);
+            let (c1r, rest) = rest.split_at_mut(s);
+            let (c2r, rest) = rest.split_at_mut(s);
+            let (c3r, rest) = rest.split_at_mut(s);
+            let (c4r, rest) = rest.split_at_mut(s);
+            let (c5r, rest) = rest.split_at_mut(s);
+            let (c6r, c7r) = rest.split_at_mut(s);
+            let (c0i, rest) = im.split_at_mut(s);
+            let (c1i, rest) = rest.split_at_mut(s);
+            let (c2i, rest) = rest.split_at_mut(s);
+            let (c3i, rest) = rest.split_at_mut(s);
+            let (c4i, rest) = rest.split_at_mut(s);
+            let (c5i, rest) = rest.split_at_mut(s);
+            let (c6i, c7i) = rest.split_at_mut(s);
+            for q in 0..s {
+                fft8_lanes_body!(
+                    q, sign, c0r, c0i, c1r, c1i, c2r, c2i, c3r, c3i, c4r, c4i, c5r, c5i, c6r, c6i,
+                    c7r, c7i, c0r, c0i, c1r, c1i, c2r, c2i, c3r, c3i, c4r, c4i, c5r, c5i, c6r,
+                    c6i, c7r, c7i
+                );
+            }
+        }
+        other => unreachable!("unsupported tail {other}"),
+    }
+}
+
+/// Batched convenience wrapper for tests and cold paths: shares the
+/// process-wide cached plan ([`crate::dft::plan::PlanCache`]) and this
+/// thread's scratch arena ([`crate::dft::exec::with_scratch`]) instead
+/// of allocating either per call — hot paths still go through
+/// [`crate::dft::exec::fft_rows_pooled`].
+pub fn fft_rows_radix(re: &mut [f64], im: &mut [f64], rows: usize, n: usize, dir: Direction) {
+    debug_assert_eq!(re.len(), rows * n);
+    debug_assert_eq!(im.len(), re.len());
+    let plan = crate::dft::plan::PlanCache::global().radix(n);
+    crate::dft::exec::with_scratch(|scratch| {
+        let (sr, si) = scratch.pair(n);
+        for r in 0..rows {
+            let span = r * n..(r + 1) * n;
+            fft_row_radix(&mut re[span.clone()], &mut im[span], sr, si, &plan, dir);
+        }
+    });
 }
 
 #[cfg(test)]
@@ -457,6 +928,18 @@ mod tests {
     fn radix_matrix(m: &SignalMatrix, dir: Direction) -> SignalMatrix {
         let mut out = m.clone();
         fft_rows_radix(&mut out.re, &mut out.im, m.rows, m.cols, dir);
+        out
+    }
+
+    fn variant_matrix(m: &SignalMatrix, variant: KernelVariant, dir: Direction) -> SignalMatrix {
+        let plan = RadixPlan::with_variant(m.cols, variant);
+        let mut out = m.clone();
+        let mut sr = vec![0.0; m.cols];
+        let mut si = vec![0.0; m.cols];
+        for r in 0..m.rows {
+            let span = r * m.cols..(r + 1) * m.cols;
+            fft_row_radix(&mut out.re[span.clone()], &mut out.im[span], &mut sr, &mut si, &plan, dir);
+        }
         out
     }
 
@@ -475,17 +958,66 @@ mod tests {
     }
 
     #[test]
+    fn hoisted_constants_match_trig() {
+        // ~1e-15, NOT bitwise: libm is not correctly rounded and varies
+        // by platform; the consts are the correctly-rounded values
+        let third = 2.0 * std::f64::consts::PI / 3.0;
+        let fifth = 2.0 * std::f64::consts::PI / 5.0;
+        assert!((S3 - third.sin()).abs() < 1e-15);
+        assert!((C5_1 - fifth.cos()).abs() < 1e-15);
+        assert!((C5_2 - (2.0 * fifth).cos()).abs() < 1e-15);
+        assert!((S5_1 - fifth.sin()).abs() < 1e-15);
+        assert!((S5_2 - (2.0 * fifth).sin()).abs() < 1e-15);
+        assert!((C8 - (std::f64::consts::PI / 4.0).cos()).abs() < 1e-15);
+    }
+
+    #[test]
     fn kernel_summary_strings() {
-        assert_eq!(kernel_summary(384), "mixed-radix 2^7*3");
-        assert_eq!(kernel_summary(640), "mixed-radix 2^7*5");
-        assert_eq!(kernel_summary(6), "mixed-radix 2*3");
+        let avx2 = if simd_active() { "+avx2" } else { "" };
+        assert_eq!(kernel_summary(384), format!("mixed-radix 2^7*3 [fft8 codelet{avx2}]"));
+        assert_eq!(kernel_summary(640), format!("mixed-radix 2^7*5 [fft8 codelet{avx2}]"));
+        // all 2s fused into the tail → no stride-1/2 stages → no avx2 tag
+        assert_eq!(kernel_summary(6), "mixed-radix 2*3 [fft2 codelet]");
+        assert_eq!(kernel_summary(24), "mixed-radix 2^3*3 [fft8 codelet]");
+        // no radix-2 factor → no codelet tail
+        assert_eq!(kernel_summary(15), "mixed-radix 3*5");
         assert!(kernel_summary(7).starts_with("bluestein"));
         assert_eq!(kernel_summary(1), "identity");
     }
 
     #[test]
+    fn kernel_generation_tracks_simd() {
+        let gen = kernel_generation();
+        assert!(gen.starts_with("stockham-v2-codelet"));
+        assert_eq!(gen.ends_with("+avx2"), simd_active());
+    }
+
+    #[test]
+    fn plan_schedules() {
+        // vectorized: 2s first, minus the 3 fused into the fft8 tail
+        let p = RadixPlan::new(384); // 2^7·3
+        assert_eq!(p.variant, KernelVariant::Vectorized);
+        assert_eq!(p.tail, 8);
+        assert_eq!(p.stages.iter().map(|s| s.radix).collect::<Vec<_>>(), vec![2, 2, 2, 2, 3]);
+        assert_eq!(p.factors, vec![2, 2, 2, 2, 2, 2, 2, 3]); // still ascending
+        assert_eq!(p.stages.last().unwrap().n_cur, 24);
+        // scalar keeps the pre-codelet shape
+        let s = RadixPlan::with_variant(384, KernelVariant::Scalar);
+        assert_eq!(s.tail, 1);
+        assert_eq!(s.stages.len(), 8);
+        // fewer than 3 twos → smaller tail; no twos → no tail
+        assert_eq!(RadixPlan::new(12).tail, 4); // 2^2·3
+        assert_eq!(RadixPlan::new(15).tail, 1);
+        assert_eq!(RadixPlan::new(8).tail, 8); // pure codelet, no stages
+        assert!(RadixPlan::new(8).stages.is_empty());
+    }
+
+    #[test]
     fn matches_naive_across_smooth_sizes() {
-        for &n in &[1usize, 2, 3, 4, 5, 6, 8, 10, 12, 15, 16, 20, 24, 30, 60, 128, 384, 640] {
+        for &n in &[
+            1usize, 2, 3, 4, 5, 6, 8, 10, 12, 15, 16, 20, 24, 30, 40, 48, 60, 80, 96, 120, 128,
+            240, 384, 480, 640,
+        ] {
             let m = SignalMatrix::random(2, n, n as u64 + 3);
             let got = radix_matrix(&m, Direction::Forward);
             let want = naive_dft_rows(&m, false);
@@ -494,6 +1026,24 @@ mod tests {
                 got.max_abs_diff(&want) / scale < 1e-10,
                 "n={n}: rel diff {}",
                 got.max_abs_diff(&want) / scale
+            );
+        }
+    }
+
+    #[test]
+    fn scalar_variant_matches_vectorized() {
+        // both kernels are exact FFTs of the same row — they agree far
+        // below the oracle tolerance, on every tail size and parity of
+        // stage count
+        for &n in &[2usize, 4, 6, 8, 12, 16, 24, 40, 48, 60, 120, 384, 640, 1152] {
+            let m = SignalMatrix::random(2, n, 17 * n as u64 + 1);
+            let a = variant_matrix(&m, KernelVariant::Scalar, Direction::Forward);
+            let b = variant_matrix(&m, KernelVariant::Vectorized, Direction::Forward);
+            let scale = a.norm().max(1.0);
+            assert!(
+                a.max_abs_diff(&b) / scale < 1e-12,
+                "n={n}: scalar vs vectorized rel diff {}",
+                a.max_abs_diff(&b) / scale
             );
         }
     }
@@ -562,22 +1112,53 @@ mod tests {
     #[test]
     fn stage_range_split_is_bit_exact() {
         // applying a stage in two halves must equal one full application
+        // — for both kernel variants (the SIMD fast path, when active,
+        // must be bit-identical to the scalar loop as well)
         let n = 240; // 2^4·3·5 — exercises all three radixes
-        let plan = RadixPlan::new(n);
-        let m = SignalMatrix::random(1, n, 5);
-        for stage in &plan.stages {
-            let bf = stage.butterflies();
-            let (mut full_r, mut full_i) = (vec![0.0; n], vec![0.0; n]);
-            apply_stage_range(stage, Direction::Forward, &m.re, &m.im, &mut full_r, &mut full_i, 0, bf);
-            let (mut split_r, mut split_i) = (vec![0.0; n], vec![0.0; n]);
-            let mid = bf / 2;
-            let cut = stage.radix * stage.stride * mid;
-            let (lo_r, hi_r) = split_r.split_at_mut(cut);
-            let (lo_i, hi_i) = split_i.split_at_mut(cut);
-            apply_stage_range(stage, Direction::Forward, &m.re, &m.im, lo_r, lo_i, 0, mid);
-            apply_stage_range(stage, Direction::Forward, &m.re, &m.im, hi_r, hi_i, mid, bf);
-            assert_eq!(full_r, split_r, "radix {} re", stage.radix);
-            assert_eq!(full_i, split_i, "radix {} im", stage.radix);
+        for variant in [KernelVariant::Scalar, KernelVariant::Vectorized] {
+            let plan = RadixPlan::with_variant(n, variant);
+            let m = SignalMatrix::random(1, n, 5);
+            for stage in &plan.stages {
+                let bf = stage.butterflies();
+                let (mut full_r, mut full_i) = (vec![0.0; n], vec![0.0; n]);
+                apply_stage_range(
+                    stage,
+                    Direction::Forward,
+                    &m.re,
+                    &m.im,
+                    &mut full_r,
+                    &mut full_i,
+                    0,
+                    bf,
+                );
+                let (mut split_r, mut split_i) = (vec![0.0; n], vec![0.0; n]);
+                let mid = bf / 2;
+                let cut = stage.radix * stage.stride * mid;
+                let (lo_r, hi_r) = split_r.split_at_mut(cut);
+                let (lo_i, hi_i) = split_i.split_at_mut(cut);
+                apply_stage_range(stage, Direction::Forward, &m.re, &m.im, lo_r, lo_i, 0, mid);
+                apply_stage_range(stage, Direction::Forward, &m.re, &m.im, hi_r, hi_i, mid, bf);
+                assert_eq!(full_r, split_r, "{variant:?} radix {} re", stage.radix);
+                assert_eq!(full_i, split_i, "{variant:?} radix {} im", stage.radix);
+            }
+        }
+    }
+
+    #[test]
+    fn tail_codelet_inplace_matches_out_of_place() {
+        // the two codelet forms share one butterfly body; pin it
+        for tail in [2usize, 4, 8] {
+            let s = 6;
+            let n = tail * s;
+            let m = SignalMatrix::random(1, n, 31 + tail as u64);
+            for sign in [1.0, -1.0] {
+                let (mut or, mut oi) = (vec![0.0; n], vec![0.0; n]);
+                tail_codelet(tail, sign, &m.re, &m.im, &mut or, &mut oi);
+                let (mut ir, mut ii) = (m.re.clone(), m.im.clone());
+                tail_codelet_inplace(tail, sign, &mut ir, &mut ii);
+                assert_eq!(or, ir, "tail {tail} sign {sign} re");
+                assert_eq!(oi, ii, "tail {tail} sign {sign} im");
+            }
         }
     }
 

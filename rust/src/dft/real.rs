@@ -34,6 +34,12 @@
 //! plans run the pair FFT at the group's pad length `v > n` and keep
 //! the first `n/2+1` bins — the same forward-only spectral
 //! interpolation semantics as the c2c PFFT-FPM-PAD row phase.
+//!
+//! The pair FFT is an ordinary complex row transform, so the real path
+//! inherits the vectorized mixed-radix kernel for free: the fused
+//! FFT2/4/8 tail codelets and (with `--features simd`) the AVX2
+//! radix-2 stages of [`crate::dft::radix`] apply to every packed pair,
+//! compounding with the ~2x pairing win above.
 
 use crate::dft::exec::{fft_rows_pooled, with_scratch, ExecCtx, Job};
 use crate::dft::fft::Direction;

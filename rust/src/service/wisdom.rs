@@ -98,6 +98,13 @@ pub struct WisdomRecord {
     /// re-plan (new ε, pad policy, ...) without re-measuring. Empty for
     /// simulator-backed records (their surfaces are recomputable).
     pub fpms: Vec<crate::coordinator::fpm::SpeedFunction>,
+    /// the row-kernel generation
+    /// ([`crate::dft::radix::kernel_generation`]) the surfaces were
+    /// measured against. Native records tagged with a *different*
+    /// non-empty generation are treated as stale at lookup (the kernel
+    /// they price no longer exists), forcing a re-measure; legacy
+    /// records carry the empty string and stay valid.
+    pub kernel_gen: String,
 }
 
 impl WisdomRecord {
@@ -186,6 +193,7 @@ impl WisdomRecord {
             predicted_cost_s,
             factors: crate::dft::radix::factorize_235(n).unwrap_or_default(),
             fpms,
+            kernel_gen: crate::dft::radix::kernel_generation().to_string(),
         };
         (rec, samples)
     }
@@ -261,6 +269,7 @@ impl WisdomRecord {
             predicted_cost_s,
             factors: crate::dft::radix::factorize_235(n).unwrap_or_default(),
             fpms: Vec::new(),
+            kernel_gen: crate::dft::radix::kernel_generation().to_string(),
         }
     }
 
@@ -297,6 +306,7 @@ impl WisdomRecord {
             predicted_cost_s: if pad { point.t_pad } else { point.t_fpm },
             factors: crate::dft::radix::factorize_235(n).unwrap_or_default(),
             fpms: Vec::new(),
+            kernel_gen: crate::dft::radix::kernel_generation().to_string(),
         }
     }
 
@@ -326,6 +336,7 @@ impl WisdomRecord {
             .set("makespan", Json::Num(self.plan.makespan))
             .set("predicted_cost_s", self.predicted_cost_s)
             .set("factors", self.factors.clone())
+            .set("kernel", self.kernel_gen.as_str())
             .set("fpms", Json::Arr(fpms))
     }
 
@@ -399,6 +410,10 @@ impl WisdomRecord {
         // a stale or hand-edited field can never poison the executor,
         // and legacy files without it load identically
         let factors = crate::dft::radix::factorize_235(n).unwrap_or_default();
+        // kernel-generation tag: absent on legacy files (empty = "was
+        // measured before kernels were tagged" — accepted at lookup)
+        let kernel_gen =
+            j.get("kernel").and_then(Json::as_str).unwrap_or_default().to_string();
         // fpms are optional (older files / simulator records have none)
         let fpms = match j.get("fpms").and_then(Json::as_arr) {
             Some(arr) => arr
@@ -417,6 +432,7 @@ impl WisdomRecord {
             predicted_cost_s,
             factors,
             fpms,
+            kernel_gen,
         })
     }
 
@@ -469,7 +485,14 @@ impl WisdomStore {
         self.get_kind(engine, n, p, TransformKind::C2c)
     }
 
-    /// Kind-keyed lookup (real planes are separate artifacts).
+    /// Kind-keyed lookup (real planes are separate artifacts). Native
+    /// records measured against a different row-kernel generation (see
+    /// [`crate::dft::radix::kernel_generation`]) miss here: their FPM
+    /// surfaces price a kernel that no longer exists, so the caller
+    /// pays a fresh profiling event and POPTA/HPOPTA re-partitions
+    /// against the installed kernel's speed curve. Untagged (legacy)
+    /// records and non-native engines are exempt — simulator surfaces
+    /// do not depend on the native kernel.
     pub fn get_kind(
         &self,
         engine: &str,
@@ -477,7 +500,14 @@ impl WisdomStore {
         p: usize,
         kind: TransformKind,
     ) -> Option<&WisdomRecord> {
-        self.records.get(&(engine.to_string(), n, p, kind.plan_kind()))
+        let rec = self.records.get(&(engine.to_string(), n, p, kind.plan_kind()))?;
+        if rec.engine == "native"
+            && !rec.kernel_gen.is_empty()
+            && rec.kernel_gen != crate::dft::radix::kernel_generation()
+        {
+            return None;
+        }
+        Some(rec)
     }
 
     /// Insert (replacing any previous record for the key).
@@ -594,6 +624,7 @@ mod tests {
             predicted_cost_s: 0.01,
             factors: vec![2, 2, 2, 2],
             fpms: vec![surface],
+            kernel_gen: crate::dft::radix::kernel_generation().to_string(),
         }
     }
 
@@ -648,6 +679,34 @@ mod tests {
         // corrupt kind values are rejected, not defaulted
         let bad = demo_record().to_json().set("kind", "c2z");
         assert!(WisdomRecord::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn kernel_generation_mismatch_invalidates_native_records() {
+        let mut store = WisdomStore::new();
+        // current generation: hits
+        store.insert(demo_record());
+        assert!(store.get("native", 16, 2).is_some());
+        // a record measured against a retired kernel: misses (forces a
+        // re-measure so FPM surfaces track the installed kernel)
+        let mut stale = demo_record();
+        stale.kernel_gen = "stockham-v1-scalar".to_string();
+        store.insert(stale.clone());
+        assert!(store.get("native", 16, 2).is_none());
+        // legacy untagged records stay valid (pre-tag files upgrade
+        // without a cold-planning storm)
+        let mut legacy = demo_record();
+        legacy.kernel_gen = String::new();
+        store.insert(legacy);
+        assert!(store.get("native", 16, 2).is_some());
+        // non-native engines never carry kernel staleness
+        stale.engine = "sim-mkl".to_string();
+        store.insert(stale);
+        assert!(store.get("sim-mkl", 16, 2).is_some());
+        // the tag round-trips through JSON
+        let rec = demo_record();
+        let j = Json::parse(&rec.to_json().to_string()).unwrap();
+        assert_eq!(WisdomRecord::from_json(&j).unwrap().kernel_gen, rec.kernel_gen);
     }
 
     #[test]

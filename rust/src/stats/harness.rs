@@ -62,7 +62,10 @@ impl BenchSuite {
     pub fn from_env(name: &str) -> Self {
         let mut suite = Self::new(name);
         if std::env::var("HCLFFT_BENCH_FAST").is_ok() {
-            suite.policy = TtestPolicy { min_reps: 3, max_reps: 10, max_time_s: 2.0, cl: 0.95, eps: 0.1 };
+            // even the smoke policy keeps >= 5 reps so every reported
+            // mean carries a t-test CI (single-shot ratios rot — see
+            // the SNIPPETS.md consensus cautionary tale)
+            suite.policy = TtestPolicy { min_reps: 5, max_reps: 10, max_time_s: 2.0, cl: 0.95, eps: 0.1 };
             suite.warmup_iters = 1;
         }
         suite

@@ -485,6 +485,7 @@ fn prop_wisdom_record_json_roundtrip() {
                 predicted_cost_s: rng.next_f64() * 10.0,
                 factors: hclfft::dft::radix::factorize_235(n).unwrap_or_default(),
                 fpms: if rng.next_f64() < 0.5 { vec![gen_speed_function(rng)] } else { vec![] },
+                kernel_gen: hclfft::dft::radix::kernel_generation().to_string(),
             }
         },
         |_| vec![],
@@ -505,6 +506,7 @@ fn prop_wisdom_record_json_roundtrip() {
                 || back.predicted_cost_s != rec.predicted_cost_s
                 || back.factors != rec.factors
                 || back.fpms != rec.fpms
+                || back.kernel_gen != rec.kernel_gen
             {
                 return Err("field mismatch after roundtrip".to_string());
             }

@@ -7,7 +7,9 @@ use hclfft::coordinator::engine::{NativeEngine, RowFftEngine};
 use hclfft::dft::bluestein::{fft_row_bluestein, BluesteinPlan};
 use hclfft::dft::exec::{fft_rows_pooled, work_units, ExecCtx, STAGE_PARALLEL_MIN_N};
 use hclfft::dft::fft::Direction;
-use hclfft::dft::radix::{factorize_235, fft_rows_radix, is_five_smooth};
+use hclfft::dft::radix::{
+    factorize_235, fft_row_radix, fft_rows_radix, is_five_smooth, KernelVariant, RadixPlan,
+};
 use hclfft::dft::{naive_dft_rows, SignalMatrix};
 use hclfft::util::proptest::{run, Config};
 
@@ -157,6 +159,77 @@ fn small_rows_large_n_regression() {
     let mut back = wide.clone();
     fft_rows_pooled(&ctx, &mut back.re, &mut back.im, 3, n, Direction::Inverse, 8);
     assert!(back.max_abs_diff(&orig) < 1e-10);
+}
+
+/// Transform one row with an explicit kernel variant (fresh plan and
+/// scratch — this is the reference harness, not the hot path).
+fn run_variant(m: &SignalMatrix, variant: KernelVariant, dir: Direction) -> SignalMatrix {
+    let n = m.cols;
+    let plan = RadixPlan::with_variant(n, variant);
+    let mut out = m.clone();
+    let (mut sr, mut si) = (vec![0.0; n], vec![0.0; n]);
+    fft_row_radix(&mut out.re, &mut out.im, &mut sr, &mut si, &plan, dir);
+    out
+}
+
+#[test]
+fn prop_scalar_and_vectorized_kernels_agree() {
+    // property: on random 5-smooth lengths the Scalar (pre-codelet)
+    // and Vectorized (codelet + optional AVX2) kernels agree within
+    // 1e-12 relative error, both stay inside the naive-DFT oracle
+    // band, and the vectorized inverse round-trips
+    let smooth: Vec<usize> = (2..=1280usize).filter(|&n| is_five_smooth(n)).collect();
+    run(
+        "scalar-vs-vectorized-kernels",
+        &Config { cases: 40, ..Config::default() },
+        |rng| smooth[rng.range_usize(0, smooth.len() - 1)],
+        |_| vec![],
+        |&n| {
+            let m = SignalMatrix::random(1, n, 31 * n as u64 + 7);
+            let scalar = run_variant(&m, KernelVariant::Scalar, Direction::Forward);
+            let vectorized = run_variant(&m, KernelVariant::Vectorized, Direction::Forward);
+            let want = naive_dft_rows(&m, false);
+            let scale = want.norm().max(1.0);
+            let cross = scalar.max_abs_diff(&vectorized) / scale;
+            if cross >= 1e-12 {
+                return Err(format!("n={n}: scalar vs vectorized rel err {cross}"));
+            }
+            for (label, got) in [("scalar", &scalar), ("vectorized", &vectorized)] {
+                let err = got.max_abs_diff(&want) / scale;
+                if err >= 1e-9 {
+                    return Err(format!("n={n}: {label} vs naive rel err {err}"));
+                }
+            }
+            let back = run_variant(&vectorized, KernelVariant::Vectorized, Direction::Inverse);
+            let rt = back.max_abs_diff(&m);
+            if rt >= 1e-9 {
+                return Err(format!("n={n}: vectorized roundtrip err {rt}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pooled_split_row_is_bit_exact_with_codelet_tail() {
+    // a single long 5-smooth row (>= STAGE_PARALLEL_MIN_N) takes the
+    // split-stage path, which now finishes through the fused tail
+    // codelet: every thread budget must produce identical bits, and
+    // the result must still invert
+    let n = 4320; // 2^5·3^3·5 — all three radixes plus an fft8 tail
+    assert!(n >= STAGE_PARALLEL_MIN_N && is_five_smooth(n));
+    let ctx = ExecCtx::new(8);
+    let orig = SignalMatrix::random(2, n, 23);
+    let mut serial = orig.clone();
+    fft_rows_pooled(&ctx, &mut serial.re, &mut serial.im, 2, n, Direction::Forward, 1);
+    for threads in [3usize, 8] {
+        let mut m = orig.clone();
+        fft_rows_pooled(&ctx, &mut m.re, &mut m.im, 2, n, Direction::Forward, threads);
+        assert_eq!(serial.max_abs_diff(&m), 0.0, "threads={threads}: must be bit-exact");
+    }
+    let mut back = serial.clone();
+    fft_rows_pooled(&ctx, &mut back.re, &mut back.im, 2, n, Direction::Inverse, 8);
+    assert!(back.max_abs_diff(&orig) < 1e-9);
 }
 
 #[test]
