@@ -1,12 +1,20 @@
 //! Bench: the row-kernel story at the paper's N = 128·k sizes.
 //!
 //! The paper benchmarks grid sizes that are mostly *not* powers of two
-//! (384 = 2^7·3, 640 = 2^7·5, 1152 = 2^7·3^2, 3200 = 2^7·5^2). Three
+//! (384 = 2^7·3, 640 = 2^7·5, 1152 = 2^7·3^2, 3200 = 2^7·5^2). Five
 //! arms per size:
 //!
 //! * `radix_…` — the vectorized mixed-radix kernel (reordered schedule,
-//!   fused FFT2/4/8 tail codelet, AVX2 first stages with `--features
-//!   simd`): the executor's live path,
+//!   fused FFT2/4/8 tail codelet + AVX2 bodies, AVX2 radix-2/3/5 stages
+//!   with `--features simd`, the FMA generation with `--features fma`):
+//!   the executor's live per-row path,
+//! * `radix_fma_…` — the same Vectorized plan, reported separately so
+//!   the FMA-generation speedup has its own trajectory: on an FMA-off
+//!   build/host it coincides with `radix_…` (the `scalar_vs_vector_fma_*`
+//!   gate metrics then degenerate to the plain vector ratio and still
+//!   pass), on the `--features fma` leg it is the contracted kernel,
+//! * `multirow_…` — the stage-major multi-row tile driver
+//!   (`fft_rows_radix_tiled`, 4 rows per register-resident stage pass),
 //! * `scalar_…` — [`KernelVariant::Scalar`], the pre-codelet kernel
 //!   shape kept as the reference arm, so the scalar-vs-vectorized
 //!   speedup is measured honestly in one process,
@@ -23,7 +31,9 @@
 
 use hclfft::dft::bluestein::{fft_row_bluestein, BluesteinPlan};
 use hclfft::dft::fft::Direction;
-use hclfft::dft::radix::{fft_row_radix, kernel_generation, KernelVariant, RadixPlan};
+use hclfft::dft::radix::{
+    fft_row_radix, fft_rows_radix_tiled, fma_active, kernel_generation, KernelVariant, RadixPlan,
+};
 use hclfft::dft::SignalMatrix;
 use hclfft::stats::harness::{fft_flops, BenchResult, BenchSuite};
 
@@ -63,6 +73,49 @@ fn main() {
                     &vec_plan,
                     Direction::Forward,
                 );
+            }
+        });
+
+        // the FMA-generation trajectory: the same Vectorized plan under
+        // its own name, so the fma CI leg's contracted kernels get a
+        // dedicated perf-gate metric (coincides with radix_… when the
+        // FMA generation is inactive)
+        let mut mf = orig.clone();
+        suite.bench_flops(&format!("radix_fma_{rows}x{n}"), fft_flops(rows, n), || {
+            for r in 0..rows {
+                let span = r * n..(r + 1) * n;
+                fft_row_radix(
+                    &mut mf.re[span.clone()],
+                    &mut mf.im[span],
+                    &mut sr,
+                    &mut si,
+                    &vec_plan,
+                    Direction::Forward,
+                );
+            }
+        });
+
+        // stage-major multi-row tiling: 4 rows per register-resident
+        // stage pass (the executor's in-chunk driver, forced to width 4)
+        let tile = 4usize;
+        let mut tr = vec![0.0; tile * n];
+        let mut ti = vec![0.0; tile * n];
+        let mut mt = orig.clone();
+        suite.bench_flops(&format!("multirow_{rows}x{n}"), fft_flops(rows, n), || {
+            let mut r = 0;
+            while r < rows {
+                let w = tile.min(rows - r);
+                let span = r * n..(r + w) * n;
+                fft_rows_radix_tiled(
+                    &mut mt.re[span.clone()],
+                    &mut mt.im[span],
+                    w,
+                    &mut tr,
+                    &mut ti,
+                    &vec_plan,
+                    Direction::Forward,
+                );
+                r += w;
             }
         });
 
@@ -134,6 +187,41 @@ fn main() {
     let geo_hw = geo * rel2_sum.sqrt() / paper.len() as f64;
     let verdict = if geo >= 1.0 { "PASS" } else { "FAIL" };
     println!("vector-vs-scalar geomean {geo:.2}x ± {geo_hw:.2} {verdict} (target >= 1.30x)");
+
+    // the FMA-generation arm vs the scalar reference (Student-t CIs
+    // propagated into the ratio, like every speedup line here)
+    println!(
+        "\n== scalar vs fma-generation row kernel (fma_active: {}) ==",
+        fma_active()
+    );
+    for &n in &paper {
+        let s = find(&suite.results, &format!("scalar_{rows}x{n}"));
+        let f = find(&suite.results, &format!("radix_fma_{rows}x{n}"));
+        let speedup = s.mean_s / f.mean_s;
+        println!(
+            "{:>16} vs {:<20} speedup {:.2}x ± {:.2}",
+            s.name,
+            f.name,
+            speedup,
+            speedup * ratio_rel_hw(s, f)
+        );
+    }
+
+    // multi-row tiling vs the per-row driver (same kernels, stage-major
+    // loop order): the twiddle-stream amortization the tile model prices
+    println!("\n== per-row vs multi-row (4-row tile) driver ==");
+    for &n in &paper {
+        let p = find(&suite.results, &format!("radix_{rows}x{n}"));
+        let t = find(&suite.results, &format!("multirow_{rows}x{n}"));
+        let speedup = p.mean_s / t.mean_s;
+        println!(
+            "{:>16} vs {:<20} speedup {:.2}x ± {:.2}",
+            p.name,
+            t.name,
+            speedup,
+            speedup * ratio_rel_hw(p, t)
+        );
+    }
 
     // the PR-2 story, still pinned: mixed-radix vs the chirp-z fallback
     println!("\n== bluestein/radix speedup ==");

@@ -20,6 +20,16 @@
 //! cache-resident tile, never a whole-matrix `pad_cols`/`crop_cols`
 //! copy, and the two transpose barriers of the four-step skeleton
 //! disappear. Compilation is input-independent, like the plan itself.
+//!
+//! Plans are kernel-generation-relative: the FPM surfaces they are
+//! planned over describe one row kernel
+//! ([`crate::dft::radix::kernel_generation`] — scalar, AVX2, or the
+//! FMA generation), so persisted plans/wisdom re-measure when the
+//! runtime-detected generation changes. Below a dispatch tile, rows
+//! additionally advance in model-chosen multi-row kernel tiles
+//! ([`crate::dft::exec::preferred_row_tile`]); that choice is made at
+//! execution time from the same `PerfModel`-shaped surface, so it needs
+//! no plan-level state.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;

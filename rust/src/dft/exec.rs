@@ -21,7 +21,11 @@
 //!   ([`crate::dft::radix`]), everything else falls back to Bluestein.
 //!   Batches split by rows; a *small* batch of *long* smooth rows splits
 //!   within each row across stage sub-ranges instead of clamping the
-//!   thread budget to the row count.
+//!   thread budget to the row count. Within a worker's chunk, smooth
+//!   rows advance in stage-major multi-row tiles
+//!   ([`radix::fft_rows_radix_tiled`]) whose width is chosen by the
+//!   model surface in [`row_tile_curve`] — twiddle streams amortize
+//!   across the tile while the working set stays cache-resident.
 //!
 //! Determinism: all split strategies preserve per-element arithmetic
 //! exactly, so results are bit-identical for every `parallelism` value —
@@ -389,7 +393,77 @@ pub fn work_units(rows: usize, n: usize, parallelism: usize) -> usize {
     parallelism.min(rows)
 }
 
+// ---------------------------------------------------------------------------
+// Multi-row tile model
+// ---------------------------------------------------------------------------
+
+/// Candidate multi-row tile widths for the stage-major radix driver
+/// ([`radix::fft_rows_radix_tiled`]): 1 (per-row), 2, 4.
+pub const ROW_TILE_CANDIDATES: [usize; 3] = [1, 2, 4];
+
+/// Per-core cache budget (bytes) the tile model plans against: the
+/// tile's working set (4 ping-pong planes per row) should stay resident
+/// across a stage pass. 256 KiB is a conservative per-core L2 slice.
+const ROW_TILE_CACHE_BUDGET: usize = 256 << 10;
+
+/// Model surface for the multi-row tile width at row length `n`: a
+/// [`Curve`](crate::model::surface::Curve) over the candidate widths,
+/// scored by modeled per-row memory traffic. One stage pass moves
+/// `32·n` bytes of row data per row (read + write, both planes) plus a
+/// `~16·n`-byte twiddle stream that a W-row tile amortizes W ways; a
+/// tile whose working set (`32·n·W` bytes) overflows the per-core cache
+/// budget is penalized by the overflow ratio. The same `PerfModel`
+/// surface shape (monotone xs, positive speeds) the planner uses
+/// everywhere, so tile choice stays model-driven rather than a
+/// hardcoded constant.
+pub fn row_tile_curve(n: usize) -> crate::model::surface::Curve {
+    let n = n.max(1);
+    let mut speeds = Vec::with_capacity(ROW_TILE_CANDIDATES.len());
+    for &w in &ROW_TILE_CANDIDATES {
+        let data = 32.0 * n as f64; // per-row plane traffic per pass
+        let twiddle = 16.0 * n as f64 / w as f64; // amortized over the tile
+        let footprint = 32.0 * n as f64 * w as f64;
+        let over = (footprint / ROW_TILE_CACHE_BUDGET as f64).max(1.0);
+        speeds.push(1.0 / ((data + twiddle) * over));
+    }
+    crate::model::surface::Curve::new(ROW_TILE_CANDIDATES.to_vec(), speeds)
+}
+
+/// The tile width the model prefers at row length `n` (argmax of
+/// [`row_tile_curve`]; `HCLFFT_ROW_TILE` overrides for experiments,
+/// clamped to 1..=8 — an unparsable value warns and falls back to the
+/// model, matching the `HCLFFT_POOL_THREADS` policy).
+pub fn preferred_row_tile(n: usize) -> usize {
+    static OVERRIDE: OnceLock<Option<usize>> = OnceLock::new();
+    let forced = *OVERRIDE.get_or_init(|| match std::env::var("HCLFFT_ROW_TILE") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(w) if w >= 1 => Some(w.min(8)),
+            _ => {
+                eprintln!(
+                    "warning: HCLFFT_ROW_TILE=`{v}` is not a positive integer; \
+                     using the model-preferred tile width"
+                );
+                None
+            }
+        },
+        Err(_) => None,
+    });
+    if let Some(w) = forced {
+        return w;
+    }
+    let curve = row_tile_curve(n);
+    let mut best = (1usize, f64::MIN);
+    for (&w, &s) in curve.xs.iter().zip(&curve.speeds) {
+        if s > best.1 {
+            best = (w, s);
+        }
+    }
+    best.0
+}
+
 /// One worker's serial chunk: `rows` rows with the per-thread arena.
+/// Smooth rows advance through the stage-major multi-row driver in
+/// tiles of the model-preferred width (identical bits to per-row).
 fn fft_rows_chunk(
     plan: &RowPlan,
     re: &mut [f64],
@@ -401,10 +475,14 @@ fn fft_rows_chunk(
 ) {
     match plan {
         RowPlan::Radix(p) => {
-            let (sr, si) = scratch.pair(n);
-            for r in 0..rows {
-                let span = r * n..(r + 1) * n;
-                radix::fft_row_radix(&mut re[span.clone()], &mut im[span], sr, si, p, dir);
+            let tile = preferred_row_tile(n).min(rows.max(1));
+            let (sr, si) = scratch.pair(tile * n);
+            let mut r = 0;
+            while r < rows {
+                let w = tile.min(rows - r);
+                let span = r * n..(r + w) * n;
+                radix::fft_rows_radix_tiled(&mut re[span.clone()], &mut im[span], w, sr, si, p, dir);
+                r += w;
             }
         }
         RowPlan::Bluestein(p) => {
@@ -595,6 +673,21 @@ mod tests {
         assert_eq!(work_units(64, 1024, 1), 1);
         // non-smooth long rows stay row-chunked (Bluestein is serial per row)
         assert_eq!(work_units(2, 4096 + 1, 8), 2);
+    }
+
+    #[test]
+    fn row_tile_model_prefers_multirow_at_paper_sizes() {
+        // twiddle amortization wins while the tile fits the cache budget
+        for &n in &[384usize, 640, 1152] {
+            assert_eq!(preferred_row_tile(n), 4, "n={n}");
+        }
+        // a huge row overflows the budget at width 4 → narrower tiles
+        assert!(preferred_row_tile(1 << 20) <= 2);
+        // the curve is a valid model surface over the candidate widths
+        let c = row_tile_curve(384);
+        assert_eq!(c.xs, ROW_TILE_CANDIDATES.to_vec());
+        assert!(c.speeds.iter().all(|&s| s > 0.0));
+        assert!(c.speed_nearest(4) >= c.speed_nearest(1));
     }
 
     #[test]

@@ -22,6 +22,11 @@
 //! scalar — dispatches to the AVX2 kernel in [`crate::dft::simd`] when
 //! the `simd` feature is compiled in and the CPU supports it (identical
 //! IEEE-754 operation order, so the output is bit-identical either way).
+//! Because the tail codelets and the stage dispatchers are shared, this
+//! kernel inherits phase-2 vectorization for free: the AVX2 codelet
+//! bodies sweep the tail 4 lanes at a time, and under `--features fma`
+//! the stride-1 stage runs the FMA kernel generation (see
+//! [`crate::dft::simd`]'s module docs for the bit-exactness contract).
 
 use crate::dft::plan::Pow2Plan;
 use crate::dft::{radix, simd};

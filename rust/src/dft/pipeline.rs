@@ -138,6 +138,12 @@ pub fn default_mode() -> PipelineMode {
 /// Rows per row-stage tile. Small enough that a partition's row range
 /// fans out across the whole pool; large enough that per-tile dispatch
 /// overhead stays negligible against an FFT over `tile × n` points.
+/// Orthogonal to the *kernel-level* multi-row tiling
+/// ([`crate::dft::exec::preferred_row_tile`], 2–4 rows per
+/// register-resident stage pass): this constant parallelizes dispatch
+/// across the pool, while the kernel tile amortizes twiddle streams
+/// inside one worker's chunk — a 32-row dispatch tile executes as eight
+/// 4-row kernel tiles.
 pub const DEFAULT_ROW_TILE: usize = 32;
 
 /// Columns per column-stage tile: each source row contributes one

@@ -12,6 +12,13 @@
 //! construction is O(n) but shows up hard in profiles when executed per
 //! call — see EXPERIMENTS.md §Perf), and [`PlanCache::row_plan`] is the
 //! single dispatch point deciding which kernel a row length gets.
+//!
+//! Radix plans additionally dedupe *per-stage twiddle tables* across
+//! cache entries: a stage table depends only on `(radix, n_cur)`, so
+//! plans whose schedules pass through the same geometry (384 and 768
+//! share five of six stage tables) hold `Arc`s into one process-wide
+//! table cache — see `radix::StageTwiddles`. The counting-allocator
+//! audit in `rust/tests/exec_steadystate.rs` asserts the sharing.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};

@@ -45,22 +45,30 @@
 //!   block set `s·p+q`), which also eliminates the final un-ping-pong
 //!   copy. At 384 that turns 8 full-row passes into 6; at 1152, 9+copy
 //!   into 7.
-//! * **SIMD first stages.** With the `simd` cargo feature on x86_64,
-//!   the stride-1 and stride-2 radix-2 stages — where the scalar lane
-//!   loop degenerates — dispatch to explicit AVX2 kernels
-//!   ([`crate::dft::simd`]), selected at runtime via
-//!   `is_x86_feature_detected!` with a safe scalar fallback. The SIMD
-//!   kernels perform identical IEEE-754 operations (no FMA), so their
-//!   output is bit-identical to the scalar loop.
+//! * **SIMD stages.** With the `simd` cargo feature on x86_64, every
+//!   radix-2/3/5 stage shape (stride 1, stride 2, and the wide
+//!   stride ≥ 4 lane loops) and the FFT4/FFT8 tail codelet bodies
+//!   dispatch to explicit AVX2 kernels ([`crate::dft::simd`]), selected
+//!   at runtime via `is_x86_feature_detected!` with a safe scalar
+//!   fallback. The plain AVX2 kernels perform identical IEEE-754
+//!   operations (no FMA), so their output is bit-identical to the
+//!   scalar loops; with `--features fma` (and runtime FMA support) a
+//!   second kernel generation contracts the complex multiplies to
+//!   fused ops — faster, not bit-identical, and therefore tagged as a
+//!   distinct [`kernel_generation`].
 //!
 //! [`apply_stage_range`] applies one stage over a sub-range of `p`, so
 //! the executor ([`crate::dft::exec`]) can split a *single long row*
 //! across pool workers (disjoint output blocks per `p`) with bit-exact
 //! results regardless of the split; the tail codelet is a single serial
-//! pass in that path. [`kernel_generation`] names the kernel's
-//! measurable speed surface — wisdom records tagged with a different
-//! generation miss at lookup so the profiler re-measures FPM surfaces
-//! (and POPTA/HPOPTA partitions shift) after a kernel change.
+//! pass in that path. [`fft_rows_radix_tiled`] advances a small tile of
+//! rows through each stage together (stage-major order), so per-stage
+//! twiddle tables are streamed once per tile instead of once per row —
+//! bit-identical to the row-major order because the per-row arithmetic
+//! is untouched. [`kernel_generation`] names the kernel's measurable
+//! speed surface — wisdom records tagged with a different generation
+//! miss at lookup so the profiler re-measures FPM surfaces (and
+//! POPTA/HPOPTA partitions shift) after a kernel change.
 
 use crate::dft::fft::Direction;
 use crate::dft::simd;
@@ -75,17 +83,17 @@ use crate::dft::simd;
 // ~1e-15 — not bitwise, exactly because libm varies by platform.
 
 /// sin(2π/3) = √3/2
-const S3: f64 = 0.866_025_403_784_438_6;
+pub(crate) const S3: f64 = 0.866_025_403_784_438_6;
 /// cos(2π/5) = (√5 − 1)/4
-const C5_1: f64 = 0.309_016_994_374_947_45;
+pub(crate) const C5_1: f64 = 0.309_016_994_374_947_45;
 /// cos(4π/5) = −(√5 + 1)/4
-const C5_2: f64 = -0.809_016_994_374_947_5;
+pub(crate) const C5_2: f64 = -0.809_016_994_374_947_5;
 /// sin(2π/5)
-const S5_1: f64 = 0.951_056_516_295_153_5;
+pub(crate) const S5_1: f64 = 0.951_056_516_295_153_5;
 /// sin(4π/5)
-const S5_2: f64 = 0.587_785_252_292_473_1;
+pub(crate) const S5_2: f64 = 0.587_785_252_292_473_1;
 /// cos(2π/8) = 1/√2 (FFT8 codelet twiddle)
-const C8: f64 = std::f64::consts::FRAC_1_SQRT_2;
+pub(crate) const C8: f64 = std::f64::consts::FRAC_1_SQRT_2;
 
 /// Factor `n` into its {2, 3, 5} prime factors (ascending), or `None`
 /// if `n` has any other prime factor (or is zero). `n == 1` factors as
@@ -142,14 +150,27 @@ pub fn simd_active() -> bool {
     simd::avx2_enabled()
 }
 
+/// Is the FMA kernel generation active in this process (`fma` feature
+/// compiled in *and* FMA detected at runtime)? Implies [`simd_active`].
+pub fn fma_active() -> bool {
+    simd::fma_enabled()
+}
+
 /// Name of the kernel generation whose speed surface the profiler would
-/// measure right now. Stored on wisdom records: a native record tagged
-/// with a *different* generation (pre-codelet artifact, or an AVX2
-/// on/off mismatch across machines) misses at lookup, forcing a
-/// re-measure so FPM surfaces — and the POPTA/HPOPTA partitions and pad
-/// choices planned over them — track the installed kernel.
+/// measure right now — the *runtime-detected* feature set, not the
+/// compile-time one, so a wisdom file written on a non-AVX2 host never
+/// stale-loops on an AVX2 host and vice versa. Stored on wisdom
+/// records: a native record tagged with a *different* generation
+/// (pre-codelet artifact, an AVX2 on/off mismatch across machines, or
+/// an FMA generation switch) misses at lookup, forcing a re-measure so
+/// FPM surfaces — and the POPTA/HPOPTA partitions and pad choices
+/// planned over them — track the installed kernel. The FMA generation
+/// is split out because its contracted roundings change both the speed
+/// surface *and* the bit-level output.
 pub fn kernel_generation() -> &'static str {
-    if simd_active() {
+    if fma_active() {
+        "stockham-v2-codelet+avx2+fma"
+    } else if simd_active() {
         "stockham-v2-codelet+avx2"
     } else {
         "stockham-v2-codelet"
@@ -184,13 +205,23 @@ pub fn kernel_summary(n: usize) -> String {
             }
             let base = format!("mixed-radix {}", parts.join("*"));
             let k = two.min(3);
-            if k == 0 {
+            // runtime-detected feature tags: AVX2 now covers every
+            // radix-2/3/5 stage shape and the codelet bodies, so it
+            // applies to any vectorized plan; FMA marks the contracted
+            // kernel generation
+            let mut tags: Vec<String> = Vec::new();
+            if k > 0 {
+                tags.push(format!("fft{} codelet", 1usize << k));
+            }
+            if fma_active() {
+                tags.push("avx2+fma".to_string());
+            } else if simd_active() {
+                tags.push("avx2".to_string());
+            }
+            if tags.is_empty() {
                 base
             } else {
-                // AVX2 applies to the stride-1/2 radix-2 stages, which
-                // exist only when 2s remain outside the fused tail
-                let avx2 = if simd_active() && two > k { "+avx2" } else { "" };
-                format!("{base} [fft{} codelet{avx2}]", 1usize << k)
+                format!("{base} [{}]", tags.join("+"))
             }
         }
         None => {
@@ -200,8 +231,53 @@ pub fn kernel_summary(n: usize) -> String {
     }
 }
 
-/// One DIF stage: radix, sub-DFT geometry, and the twiddle table
-/// `tw[p·(r−1) + (k−1)] = exp(−2πi·p·k/n_cur)` for p ∈ [0, m), k ∈ [1, r).
+/// One stage's twiddle table, split-complex:
+/// `re[p·(r−1) + (k−1)] = cos(−2π·p·k/n_cur)` (and `im` the sine) for
+/// p ∈ [0, m), k ∈ [1, r). The table depends only on `(radix, n_cur)`,
+/// so it is built once in a process-wide cache and shared behind `Arc`
+/// across every plan whose schedule passes through that geometry — 384
+/// and 768 share five of six stage tables; see [`stage_twiddles`].
+#[derive(Debug)]
+pub struct StageTwiddles {
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
+}
+
+/// Process-wide twiddle-table cache keyed by `(radix, n_cur)`. Plans
+/// for different lengths routinely share stage geometries (every 5-smooth
+/// multiple of 384 runs the same (2, 384) stage, every length with a
+/// trailing ·3 factor after the pow2 run hits (3, 24), …), and
+/// [`crate::dft::plan::PlanCache`] keeps plans alive for the process
+/// lifetime — deduping the tables bounds plan-cache memory by the set of
+/// distinct geometries instead of the sum over lengths.
+fn stage_twiddles(radix: usize, n_cur: usize) -> std::sync::Arc<StageTwiddles> {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex, OnceLock};
+    static CACHE: OnceLock<Mutex<HashMap<(usize, usize), Arc<StageTwiddles>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(t) = cache.lock().unwrap().get(&(radix, n_cur)) {
+        return Arc::clone(t);
+    }
+    // build outside the lock — tables are O(n_cur) and the first plan
+    // for a big length should not stall concurrent planners
+    let m = n_cur / radix;
+    let mut re = Vec::with_capacity(m * (radix - 1));
+    let mut im = Vec::with_capacity(m * (radix - 1));
+    for p in 0..m {
+        for k in 1..radix {
+            // p·k mod n_cur keeps the angle argument small (exactness)
+            let pk = (p * k) % n_cur;
+            let ang = -2.0 * std::f64::consts::PI * pk as f64 / n_cur as f64;
+            re.push(ang.cos());
+            im.push(ang.sin());
+        }
+    }
+    let fresh = Arc::new(StageTwiddles { re, im });
+    Arc::clone(cache.lock().unwrap().entry((radix, n_cur)).or_insert(fresh))
+}
+
+/// One DIF stage: radix, sub-DFT geometry, and the (shared) twiddle
+/// table — see [`StageTwiddles`] for the layout.
 #[derive(Clone, Debug)]
 pub struct RadixStage {
     pub radix: usize,
@@ -209,10 +285,10 @@ pub struct RadixStage {
     pub n_cur: usize,
     /// lane width (original-index stride factor) at this stage
     pub stride: usize,
-    /// eligible for the AVX2 fast path (vectorized radix-2, stride ≤ 2)
+    /// eligible for the AVX2/FMA fast paths (any vectorized-plan stage;
+    /// the dispatcher picks the kernel by radix and stride)
     simd_ok: bool,
-    tw_re: Vec<f64>,
-    tw_im: Vec<f64>,
+    tw: std::sync::Arc<StageTwiddles>,
 }
 
 impl RadixStage {
@@ -220,6 +296,13 @@ impl RadixStage {
     #[inline]
     pub fn butterflies(&self) -> usize {
         self.n_cur / self.radix
+    }
+
+    /// The shared twiddle table. Exposed so the steady-state memory
+    /// audit can assert that plans of different lengths hold the *same*
+    /// allocation for a common stage geometry (`Arc::ptr_eq`).
+    pub fn twiddles(&self) -> &std::sync::Arc<StageTwiddles> {
+        &self.tw
     }
 }
 
@@ -280,19 +363,12 @@ impl RadixPlan {
         let mut stride = 1usize;
         for &r in &schedule {
             let m = n_cur / r;
-            let mut tw_re = Vec::with_capacity(m * (r - 1));
-            let mut tw_im = Vec::with_capacity(m * (r - 1));
-            for p in 0..m {
-                for k in 1..r {
-                    // p·k mod n_cur keeps the angle argument small (exactness)
-                    let pk = (p * k) % n_cur;
-                    let ang = -2.0 * std::f64::consts::PI * pk as f64 / n_cur as f64;
-                    tw_re.push(ang.cos());
-                    tw_im.push(ang.sin());
-                }
-            }
-            let simd_ok = variant == KernelVariant::Vectorized && r == 2 && stride <= 2;
-            stages.push(RadixStage { radix: r, n_cur, stride, simd_ok, tw_re, tw_im });
+            let tw = stage_twiddles(r, n_cur);
+            // the AVX2/FMA dispatcher handles every vectorized-plan
+            // stage shape (it declines the rare ones it has no kernel
+            // for); the scalar reference variant never dispatches
+            let simd_ok = variant == KernelVariant::Vectorized;
+            stages.push(RadixStage { radix: r, n_cur, stride, simd_ok, tw });
             n_cur = m;
             stride *= r;
         }
@@ -376,9 +452,12 @@ pub(crate) fn finish_tail(
 /// `r·stride·p_lo`). Because ranges own disjoint output slices, the
 /// executor runs them concurrently with plain `split_at_mut`; the
 /// arithmetic is identical regardless of how the range is split — and
-/// identical between the scalar loops and the AVX2 kernels, which use
-/// the same IEEE-754 operation order (bit-exact thread-count and
-/// scalar-vs-SIMD invariance).
+/// identical between the scalar loops and the plain AVX2 kernels, which
+/// use the same IEEE-754 operation order (bit-exact thread-count and
+/// scalar-vs-SIMD invariance). The FMA generation is *not* bit-identical
+/// to the scalar loops, but its vector bodies and scalar remainders use
+/// the same fused association, so split-position/thread-count
+/// invariance still holds bitwise within that generation.
 #[allow(clippy::too_many_arguments)]
 pub fn apply_stage_range(
     stage: &RadixStage,
@@ -417,14 +496,15 @@ fn stage2(
     m: usize,
     stride: usize,
 ) {
-    // narrow first stages: explicit AVX2 kernels when available
-    // (bit-identical arithmetic, so this dispatch is unobservable in
-    // the output); scalar loop otherwise
+    // explicit AVX2 kernels when available (bit-identical arithmetic in
+    // the plain generation, so the dispatch is unobservable in the
+    // output; the FMA generation is its own kernel_generation());
+    // scalar loop otherwise
     if stage.simd_ok
         && simd::try_stage2(
             sign,
-            &stage.tw_re,
-            &stage.tw_im,
+            &stage.tw.re,
+            &stage.tw.im,
             src_re,
             src_im,
             dst_re,
@@ -438,8 +518,8 @@ fn stage2(
         return;
     }
     for p in p_lo..p_hi {
-        let wr = stage.tw_re[p];
-        let wi = sign * stage.tw_im[p];
+        let wr = stage.tw.re[p];
+        let wi = sign * stage.tw.im[p];
         let a_base = stride * p;
         let b_base = stride * (p + m);
         let o_base = stride * 2 * (p - p_lo);
@@ -479,14 +559,31 @@ fn stage3(
     m: usize,
     stride: usize,
 ) {
+    if stage.simd_ok
+        && simd::try_stage3(
+            sign,
+            &stage.tw.re,
+            &stage.tw.im,
+            src_re,
+            src_im,
+            dst_re,
+            dst_im,
+            p_lo,
+            p_hi,
+            m,
+            stride,
+        )
+    {
+        return;
+    }
     const C3: f64 = -0.5; // cos(2π/3)
     let s3 = sign * (-S3); // sin(−2π/3), sign-adjusted
     for p in p_lo..p_hi {
         let t = 2 * p;
-        let w1r = stage.tw_re[t];
-        let w1i = sign * stage.tw_im[t];
-        let w2r = stage.tw_re[t + 1];
-        let w2i = sign * stage.tw_im[t + 1];
+        let w1r = stage.tw.re[t];
+        let w1i = sign * stage.tw.im[t];
+        let w2r = stage.tw.re[t + 1];
+        let w2i = sign * stage.tw.im[t + 1];
         let a0 = stride * p;
         let a1 = stride * (p + m);
         let a2 = stride * (p + 2 * m);
@@ -542,18 +639,35 @@ fn stage5(
     m: usize,
     stride: usize,
 ) {
+    if stage.simd_ok
+        && simd::try_stage5(
+            sign,
+            &stage.tw.re,
+            &stage.tw.im,
+            src_re,
+            src_im,
+            dst_re,
+            dst_im,
+            p_lo,
+            p_hi,
+            m,
+            stride,
+        )
+    {
+        return;
+    }
     let c1 = C5_1; // cos(2π/5)
     let c2 = C5_2; // cos(4π/5)
     let s1 = sign * (-S5_1); // sin(−2π/5), sign-adjusted
     let s2 = sign * (-S5_2); // sin(−4π/5), sign-adjusted
     for p in p_lo..p_hi {
         let t = 4 * p;
-        let wr = [stage.tw_re[t], stage.tw_re[t + 1], stage.tw_re[t + 2], stage.tw_re[t + 3]];
+        let wr = [stage.tw.re[t], stage.tw.re[t + 1], stage.tw.re[t + 2], stage.tw.re[t + 3]];
         let wi = [
-            sign * stage.tw_im[t],
-            sign * stage.tw_im[t + 1],
-            sign * stage.tw_im[t + 2],
-            sign * stage.tw_im[t + 3],
+            sign * stage.tw.im[t],
+            sign * stage.tw.im[t + 1],
+            sign * stage.tw.im[t + 2],
+            sign * stage.tw.im[t + 3],
         ];
         let o = stride * 5 * (p - p_lo);
         let bases = [
@@ -782,6 +896,10 @@ pub(crate) fn tail_codelet(
             }
         }
         4 => {
+            // AVX2 body covers a multiple-of-4 lane prefix (identical
+            // IEEE-754 op order — bit-identical, in every generation);
+            // the scalar body finishes the remainder
+            let done = simd::tail4_oop(sign, src_re, src_im, dst_re, dst_im);
             let (s0r, rest) = src_re.split_at(s);
             let (s1r, rest) = rest.split_at(s);
             let (s2r, s3r) = rest.split_at(s);
@@ -794,7 +912,7 @@ pub(crate) fn tail_codelet(
             let (d0i, rest) = dst_im.split_at_mut(s);
             let (d1i, rest) = rest.split_at_mut(s);
             let (d2i, d3i) = rest.split_at_mut(s);
-            for q in 0..s {
+            for q in done..s {
                 fft4_lanes_body!(
                     q, sign, s0r, s0i, s1r, s1i, s2r, s2i, s3r, s3i, d0r, d0i, d1r, d1i, d2r, d2i,
                     d3r, d3i
@@ -802,6 +920,7 @@ pub(crate) fn tail_codelet(
             }
         }
         8 => {
+            let done = simd::tail8_oop(sign, src_re, src_im, dst_re, dst_im);
             let (s0r, rest) = src_re.split_at(s);
             let (s1r, rest) = rest.split_at(s);
             let (s2r, rest) = rest.split_at(s);
@@ -830,7 +949,7 @@ pub(crate) fn tail_codelet(
             let (d4i, rest) = rest.split_at_mut(s);
             let (d5i, rest) = rest.split_at_mut(s);
             let (d6i, d7i) = rest.split_at_mut(s);
-            for q in 0..s {
+            for q in done..s {
                 fft8_lanes_body!(
                     q, sign, s0r, s0i, s1r, s1i, s2r, s2i, s3r, s3i, s4r, s4i, s5r, s5i, s6r, s6i,
                     s7r, s7i, d0r, d0i, d1r, d1i, d2r, d2i, d3r, d3i, d4r, d4i, d5r, d5i, d6r,
@@ -862,13 +981,16 @@ pub(crate) fn tail_codelet_inplace(tail: usize, sign: f64, re: &mut [f64], im: &
             }
         }
         4 => {
+            // AVX2 prefix as in [`tail_codelet`]: each 4-lane group loads
+            // every input before storing, so in-place aliasing is safe
+            let done = simd::tail4_inplace(sign, re, im);
             let (c0r, rest) = re.split_at_mut(s);
             let (c1r, rest) = rest.split_at_mut(s);
             let (c2r, c3r) = rest.split_at_mut(s);
             let (c0i, rest) = im.split_at_mut(s);
             let (c1i, rest) = rest.split_at_mut(s);
             let (c2i, c3i) = rest.split_at_mut(s);
-            for q in 0..s {
+            for q in done..s {
                 fft4_lanes_body!(
                     q, sign, c0r, c0i, c1r, c1i, c2r, c2i, c3r, c3i, c0r, c0i, c1r, c1i, c2r, c2i,
                     c3r, c3i
@@ -876,6 +998,7 @@ pub(crate) fn tail_codelet_inplace(tail: usize, sign: f64, re: &mut [f64], im: &
             }
         }
         8 => {
+            let done = simd::tail8_inplace(sign, re, im);
             let (c0r, rest) = re.split_at_mut(s);
             let (c1r, rest) = rest.split_at_mut(s);
             let (c2r, rest) = rest.split_at_mut(s);
@@ -890,7 +1013,7 @@ pub(crate) fn tail_codelet_inplace(tail: usize, sign: f64, re: &mut [f64], im: &
             let (c4i, rest) = rest.split_at_mut(s);
             let (c5i, rest) = rest.split_at_mut(s);
             let (c6i, c7i) = rest.split_at_mut(s);
-            for q in 0..s {
+            for q in done..s {
                 fft8_lanes_body!(
                     q, sign, c0r, c0i, c1r, c1i, c2r, c2i, c3r, c3i, c4r, c4i, c5r, c5i, c6r, c6i,
                     c7r, c7i, c0r, c0i, c1r, c1i, c2r, c2i, c3r, c3i, c4r, c4i, c5r, c5i, c6r,
@@ -902,20 +1025,105 @@ pub(crate) fn tail_codelet_inplace(tail: usize, sign: f64, re: &mut [f64], im: &
     }
 }
 
+/// Transform `rows` contiguous length-`n` rows through one *stage-major*
+/// sweep: every row advances through stage `k` before any row starts
+/// stage `k+1`, so each stage's twiddle table is streamed once per tile
+/// instead of once per row and the stage kernel stays register-resident
+/// across rows. The per-row arithmetic is exactly [`fft_row_radix`]'s —
+/// the loop order changes, the operations do not — so the output is
+/// bit-identical to the per-row driver in every kernel generation.
+///
+/// `scratch_re`/`scratch_im` must each hold at least `rows * plan.n`
+/// elements (one ping-pong plane per row in the tile).
+pub fn fft_rows_radix_tiled(
+    re: &mut [f64],
+    im: &mut [f64],
+    rows: usize,
+    scratch_re: &mut [f64],
+    scratch_im: &mut [f64],
+    plan: &RadixPlan,
+    dir: Direction,
+) {
+    let n = plan.n;
+    debug_assert_eq!(re.len(), rows * n);
+    debug_assert_eq!(im.len(), re.len());
+    debug_assert!(scratch_re.len() >= rows * n);
+    debug_assert!(scratch_im.len() >= rows * n);
+
+    let mut in_src = true; // data currently in re/im?
+    for stage in &plan.stages {
+        let m = stage.butterflies();
+        for r in 0..rows {
+            let span = r * n..(r + 1) * n;
+            if in_src {
+                apply_stage_range(
+                    stage,
+                    dir,
+                    &re[span.clone()],
+                    &im[span.clone()],
+                    &mut scratch_re[span.clone()],
+                    &mut scratch_im[span],
+                    0,
+                    m,
+                );
+            } else {
+                apply_stage_range(
+                    stage,
+                    dir,
+                    &scratch_re[span.clone()],
+                    &scratch_im[span.clone()],
+                    &mut re[span.clone()],
+                    &mut im[span],
+                    0,
+                    m,
+                );
+            }
+        }
+        in_src = !in_src;
+    }
+    for r in 0..rows {
+        let span = r * n..(r + 1) * n;
+        finish_tail(
+            plan,
+            dir,
+            &mut re[span.clone()],
+            &mut im[span.clone()],
+            &mut scratch_re[span.clone()],
+            &mut scratch_im[span],
+            in_src,
+        );
+    }
+    if dir == Direction::Inverse {
+        let inv_n = 1.0 / n as f64;
+        for v in re.iter_mut() {
+            *v *= inv_n;
+        }
+        for v in im.iter_mut() {
+            *v *= inv_n;
+        }
+    }
+}
+
 /// Batched convenience wrapper for tests and cold paths: shares the
 /// process-wide cached plan ([`crate::dft::plan::PlanCache`]) and this
 /// thread's scratch arena ([`crate::dft::exec::with_scratch`]) instead
 /// of allocating either per call — hot paths still go through
-/// [`crate::dft::exec::fft_rows_pooled`].
+/// [`crate::dft::exec::fft_rows_pooled`]. Rows are processed in
+/// multi-row tiles ([`fft_rows_radix_tiled`]) of the model-preferred
+/// width ([`crate::dft::exec::preferred_row_tile`]).
 pub fn fft_rows_radix(re: &mut [f64], im: &mut [f64], rows: usize, n: usize, dir: Direction) {
     debug_assert_eq!(re.len(), rows * n);
     debug_assert_eq!(im.len(), re.len());
     let plan = crate::dft::plan::PlanCache::global().radix(n);
+    let tile = crate::dft::exec::preferred_row_tile(n).min(rows.max(1));
     crate::dft::exec::with_scratch(|scratch| {
-        let (sr, si) = scratch.pair(n);
-        for r in 0..rows {
-            let span = r * n..(r + 1) * n;
-            fft_row_radix(&mut re[span.clone()], &mut im[span], sr, si, &plan, dir);
+        let (sr, si) = scratch.pair(tile * n);
+        let mut r = 0;
+        while r < rows {
+            let w = tile.min(rows - r);
+            let span = r * n..(r + w) * n;
+            fft_rows_radix_tiled(&mut re[span.clone()], &mut im[span], w, sr, si, &plan, dir);
+            r += w;
         }
     });
 }
@@ -973,23 +1181,42 @@ mod tests {
 
     #[test]
     fn kernel_summary_strings() {
-        let avx2 = if simd_active() { "+avx2" } else { "" };
-        assert_eq!(kernel_summary(384), format!("mixed-radix 2^7*3 [fft8 codelet{avx2}]"));
-        assert_eq!(kernel_summary(640), format!("mixed-radix 2^7*5 [fft8 codelet{avx2}]"));
-        // all 2s fused into the tail → no stride-1/2 stages → no avx2 tag
-        assert_eq!(kernel_summary(6), "mixed-radix 2*3 [fft2 codelet]");
-        assert_eq!(kernel_summary(24), "mixed-radix 2^3*3 [fft8 codelet]");
-        // no radix-2 factor → no codelet tail
-        assert_eq!(kernel_summary(15), "mixed-radix 3*5");
+        // runtime-detected feature tag: AVX2 covers every stage shape
+        // plus the codelet bodies, so it applies to any vectorized plan
+        let feat = if fma_active() {
+            "+avx2+fma"
+        } else if simd_active() {
+            "+avx2"
+        } else {
+            ""
+        };
+        assert_eq!(kernel_summary(384), format!("mixed-radix 2^7*3 [fft8 codelet{feat}]"));
+        assert_eq!(kernel_summary(640), format!("mixed-radix 2^7*5 [fft8 codelet{feat}]"));
+        assert_eq!(kernel_summary(6), format!("mixed-radix 2*3 [fft2 codelet{feat}]"));
+        assert_eq!(kernel_summary(24), format!("mixed-radix 2^3*3 [fft8 codelet{feat}]"));
+        // no radix-2 factor → no codelet tail, but the vectorized
+        // radix-3/5 stages still earn the feature tag
+        let solo = if fma_active() {
+            " [avx2+fma]"
+        } else if simd_active() {
+            " [avx2]"
+        } else {
+            ""
+        };
+        assert_eq!(kernel_summary(15), format!("mixed-radix 3*5{solo}"));
         assert!(kernel_summary(7).starts_with("bluestein"));
         assert_eq!(kernel_summary(1), "identity");
     }
 
     #[test]
-    fn kernel_generation_tracks_simd() {
+    fn kernel_generation_tracks_detected_features() {
         let gen = kernel_generation();
         assert!(gen.starts_with("stockham-v2-codelet"));
-        assert_eq!(gen.ends_with("+avx2"), simd_active());
+        assert_eq!(gen.ends_with("+avx2+fma"), fma_active());
+        assert_eq!(gen.contains("+avx2"), simd_active());
+        if fma_active() {
+            assert!(simd_active(), "fma generation implies avx2");
+        }
     }
 
     #[test]
@@ -1159,6 +1386,108 @@ mod tests {
                 assert_eq!(or, ir, "tail {tail} sign {sign} re");
                 assert_eq!(oi, ii, "tail {tail} sign {sign} im");
             }
+        }
+    }
+
+    #[test]
+    fn simd_stage_dispatch_matches_forced_scalar() {
+        // every stage shape the dispatchers cover: radix-3 stride 1 (24),
+        // radix-5 stride 2 (80), radix-3 stride 1+3 / radix-5 wide (90),
+        // all three radixes incl. wide (240), wide radix-3 (384, 1152),
+        // wide radix-5 (640)
+        for &n in &[24usize, 80, 90, 240, 384, 640, 1152] {
+            let plan = RadixPlan::new(n);
+            let m = SignalMatrix::random(1, n, 41 * n as u64 + 5);
+            for (si, stage) in plan.stages.iter().enumerate() {
+                let mut forced = stage.clone();
+                forced.simd_ok = false;
+                let bf = stage.butterflies();
+                for dir in [Direction::Forward, Direction::Inverse] {
+                    let (mut vr, mut vi) = (vec![0.0; n], vec![0.0; n]);
+                    apply_stage_range(stage, dir, &m.re, &m.im, &mut vr, &mut vi, 0, bf);
+                    let (mut sr2, mut si2) = (vec![0.0; n], vec![0.0; n]);
+                    apply_stage_range(&forced, dir, &m.re, &m.im, &mut sr2, &mut si2, 0, bf);
+                    if fma_active() {
+                        // contracted roundings: tolerance, not equality
+                        for q in 0..n {
+                            let scale = vr[q].abs().max(vi[q].abs()).max(1.0);
+                            assert!(
+                                (vr[q] - sr2[q]).abs() / scale < 1e-12
+                                    && (vi[q] - si2[q]).abs() / scale < 1e-12,
+                                "n={n} stage {si} (radix {}, stride {}) q={q}",
+                                stage.radix,
+                                stage.stride
+                            );
+                        }
+                    } else {
+                        // plain AVX2 keeps the scalar IEEE-754 op order
+                        assert_eq!(vr, sr2, "n={n} stage {si} radix {} re", stage.radix);
+                        assert_eq!(vi, si2, "n={n} stage {si} radix {} im", stage.radix);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_rows_bitwise_match_per_row() {
+        // stage-major multi-row tiling reorders loops, not arithmetic —
+        // bit-identical to the per-row driver in every generation
+        for &n in &[240usize, 384] {
+            let rows = 5;
+            let plan = RadixPlan::new(n);
+            let m = SignalMatrix::random(rows, n, 61 + n as u64);
+            for dir in [Direction::Forward, Direction::Inverse] {
+                let mut per_row = m.clone();
+                let (mut sr, mut si) = (vec![0.0; n], vec![0.0; n]);
+                for r in 0..rows {
+                    let span = r * n..(r + 1) * n;
+                    fft_row_radix(
+                        &mut per_row.re[span.clone()],
+                        &mut per_row.im[span],
+                        &mut sr,
+                        &mut si,
+                        &plan,
+                        dir,
+                    );
+                }
+                let mut tiled = m.clone();
+                let (mut tr, mut ti) = (vec![0.0; rows * n], vec![0.0; rows * n]);
+                fft_rows_radix_tiled(
+                    &mut tiled.re, &mut tiled.im, rows, &mut tr, &mut ti, &plan, dir,
+                );
+                assert_eq!(per_row.re, tiled.re, "n={n} {dir:?} re");
+                assert_eq!(per_row.im, tiled.im, "n={n} {dir:?} im");
+            }
+        }
+    }
+
+    #[test]
+    fn stage_twiddles_shared_across_plans() {
+        // 384 = 2^7·3 and 768 = 2^8·3 share every stage geometry after
+        // 768's extra leading radix-2 — the Arc allocations must be the
+        // same, not equal copies
+        let a = RadixPlan::new(384);
+        let b = RadixPlan::new(768);
+        let mut shared = 0usize;
+        for sa in &a.stages {
+            for sb in &b.stages {
+                if sa.radix == sb.radix && sa.n_cur == sb.n_cur {
+                    assert!(
+                        std::sync::Arc::ptr_eq(sa.twiddles(), sb.twiddles()),
+                        "radix {} n_cur {} not shared",
+                        sa.radix,
+                        sa.n_cur
+                    );
+                    shared += 1;
+                }
+            }
+        }
+        assert!(shared >= 4, "expected shared stage geometries, got {shared}");
+        // and two plans for the *same* length share everything
+        let c = RadixPlan::new(384);
+        for (sa, sc) in a.stages.iter().zip(&c.stages) {
+            assert!(std::sync::Arc::ptr_eq(sa.twiddles(), sc.twiddles()));
         }
     }
 

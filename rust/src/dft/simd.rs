@@ -1,39 +1,75 @@
-//! Opt-in AVX2 fast path for the radix-2 butterfly stages (`simd`
-//! cargo feature, x86_64 only).
+//! Opt-in AVX2/FMA fast paths for the mixed-radix butterfly stages and
+//! the FFT4/FFT8 tail codelets (`simd` / `fma` cargo features, x86_64
+//! only).
 //!
 //! The scalar stage loops in [`crate::dft::radix`] / [`crate::dft::fft`]
-//! autovectorize well when the lane width `stride` is ≥ 4, but the
-//! *first* stages of the reordered schedule run at `stride` 1 and 2 —
-//! there the per-`q` lane loop degenerates to scalar code and LLVM is
-//! left vectorizing across butterflies on its own, which it does not do
-//! reliably through the twiddle multiply. This module provides explicit
-//! `core::arch` kernels for exactly those two shapes:
+//! autovectorize when the lane width `stride` is large, but the *first*
+//! stages of the reordered schedule run at `stride` 1 and 2 — there the
+//! per-`q` lane loop degenerates to scalar code — and even the wide
+//! stages never contract to FMA on their own (rustc does not fuse
+//! `a*b + c` without explicit intrinsics). This module provides explicit
+//! `core::arch` kernels for every stage shape of all three radixes:
 //!
-//! * **stride 1** — four butterflies per iteration: contiguous loads of
-//!   `a`, `b`, and the stage twiddles, with the element-interleaved
-//!   outputs produced by `unpacklo/unpackhi` + a 128-bit lane permute.
-//! * **stride 2** — two butterflies (four lanes) per iteration: outputs
-//!   interleave at 128-bit granularity so a single `permute2f128` pair
-//!   suffices; the per-butterfly twiddle is duplicated across its two
-//!   lanes with `permute4x64`.
+//! * **stride 1** — radix-2 and radix-3: four butterflies per
+//!   iteration; contiguous loads, twiddles deinterleaved with
+//!   `unpack*` + `permute4x64`, and the element-interleaved outputs
+//!   rebuilt with lane permutes (+ blends for the 3-way scatter).
+//! * **stride 2** — radix-2/3/5: two butterflies (four lanes) per
+//!   iteration; outputs interleave at 128-bit granularity so
+//!   `permute2f128` pairs suffice, and each butterfly's twiddle is
+//!   duplicated across its two lanes with `permute4x64`.
+//! * **stride ≥ 4 (wide)** — radix-2/3/5: the lane loop itself is
+//!   vectorized four `q` at a time with broadcast per-butterfly
+//!   twiddles; no shuffles at all. This is what runs on the large-
+//!   stride radix-3/5 stages of the paper sizes (384 = 2⁷·3 runs its
+//!   radix-3 stage at stride 16).
+//! * **tail codelets** — the fused FFT4/FFT8 tail sweep
+//!   ([`crate::dft::radix::tail_codelet`]) processes four lanes `q` per
+//!   iteration. Pure elementwise arithmetic across the `s`-strided
+//!   chunks, so the same kernel serves the in-place and out-of-place
+//!   forms (all loads precede all stores per lane group).
 //!
-//! **Bit-exactness contract:** the vector kernels perform the *same*
-//! IEEE-754 operations in the same order as the scalar loop — mul, mul,
-//! sub/add per complex multiply, never FMA. SIMD output is therefore
-//! bit-identical to scalar output, which keeps the repo's thread-count
-//! invariance and fused==barrier bit-exactness properties intact per
-//! kernel variant, and lets tests assert exact equality between the
-//! scalar and SIMD paths.
+//! # Bit-exactness and the FMA generation
 //!
-//! Selection is at runtime: [`avx2_enabled`] caches one
-//! `is_x86_feature_detected!("avx2")` probe; non-AVX2 machines (and
-//! non-x86_64 builds, and builds without the feature) fall back to the
+//! The **plain** (non-FMA) kernels perform the *same* IEEE-754
+//! operations in the same order as the scalar loops — mul, mul, sub/add
+//! per complex multiply, never FMA — so their output is bit-identical
+//! to scalar output. That keeps the repo's thread-count invariance and
+//! fused==barrier bit-exactness properties intact per kernel variant,
+//! and lets tests assert exact equality between the scalar and SIMD
+//! paths.
+//!
+//! With `--features fma` (and runtime FMA support) the stage kernels
+//! are instead generated with `fmadd/fmsub/fnmadd`, which contract each
+//! multiply-accumulate to a single rounding. That output **cannot** be
+//! bit-identical to the plain kernels, so the FMA build is a distinct
+//! [`crate::dft::radix::kernel_generation`] (wisdom records re-measure
+//! across the switch) and is accuracy-tested against the scalar kernel
+//! within 1e-12 relative error instead of asserted equal. Thread-count
+//! invariance still holds bitwise *within* the FMA generation: the
+//! executor may split a stage at any butterfly boundary, which moves
+//! butterflies between the vector body and the scalar remainder — so
+//! the FMA remainders use `f64::mul_add` with exactly the association
+//! of the vector fmadd/fmsub, making every element's arithmetic
+//! independent of where the split lands. The tail codelets contain no
+//! multiply-accumulate chains worth fusing and are generated once,
+//! bit-identical to scalar in both generations.
+//!
+//! Selection is at runtime: [`avx2_enabled`] / [`fma_enabled`] cache
+//! one `is_x86_feature_detected!` probe each; non-AVX2 machines (and
+//! non-x86_64 builds, and builds without the features) fall back to the
 //! safe scalar loops with zero overhead beyond one branch per stage.
 
 /// Is the AVX2 fast path compiled in *and* available on this CPU?
 /// Always `false` without the `simd` feature or off x86_64.
 pub fn avx2_enabled() -> bool {
     imp::avx2_enabled()
+}
+
+/// Is the FMA kernel generation compiled in (`fma` feature) *and*
+/// available on this CPU? Implies [`avx2_enabled`].
+pub fn fma_enabled() -> bool {
+    imp::fma_enabled()
 }
 
 /// Try to run one radix-2 DIF stage over butterflies `p ∈ [p_lo, p_hi)`
@@ -61,17 +97,1161 @@ pub(crate) fn try_stage2(
     imp::try_stage2(sign, tw_re, tw_im, src_re, src_im, dst_re, dst_im, p_lo, p_hi, m, stride)
 }
 
+/// Radix-3 counterpart of [`try_stage2`]; `tw[2p]`/`tw[2p+1]` are the
+/// k = 1, 2 twiddles of butterfly `p`. Handles stride 1, 2 and ≥ 4.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn try_stage3(
+    sign: f64,
+    tw_re: &[f64],
+    tw_im: &[f64],
+    src_re: &[f64],
+    src_im: &[f64],
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+    p_lo: usize,
+    p_hi: usize,
+    m: usize,
+    stride: usize,
+) -> bool {
+    imp::try_stage3(sign, tw_re, tw_im, src_re, src_im, dst_re, dst_im, p_lo, p_hi, m, stride)
+}
+
+/// Radix-5 counterpart of [`try_stage2`]; `tw[4p..4p+4]` are the
+/// k = 1..4 twiddles of butterfly `p`. Handles stride 2 and ≥ 4 (the
+/// stride-1/3 shapes occur only on pure 3^a·5^b lengths and stay
+/// scalar).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn try_stage5(
+    sign: f64,
+    tw_re: &[f64],
+    tw_im: &[f64],
+    src_re: &[f64],
+    src_im: &[f64],
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+    p_lo: usize,
+    p_hi: usize,
+    m: usize,
+    stride: usize,
+) -> bool {
+    imp::try_stage5(sign, tw_re, tw_im, src_re, src_im, dst_re, dst_im, p_lo, p_hi, m, stride)
+}
+
+/// AVX2 body of the FFT4 tail codelet, out-of-place form: planes are
+/// `(4, s)` chunked, `s = len/4`. Processes a multiple-of-4 prefix of
+/// the lane range `q ∈ [0, s)` and returns how many lanes were done
+/// (0 when the fast path is unavailable); the caller finishes the
+/// remainder with the scalar body.
+pub(crate) fn tail4_oop(
+    sign: f64,
+    src_re: &[f64],
+    src_im: &[f64],
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+) -> usize {
+    imp::tail4_oop(sign, src_re, src_im, dst_re, dst_im)
+}
+
+/// In-place form of [`tail4_oop`] (same kernel: all loads precede all
+/// stores within each lane group, so aliasing src/dst is fine).
+pub(crate) fn tail4_inplace(sign: f64, re: &mut [f64], im: &mut [f64]) -> usize {
+    imp::tail4_inplace(sign, re, im)
+}
+
+/// AVX2 body of the FFT8 tail codelet, out-of-place form; see
+/// [`tail4_oop`] for the lane-prefix contract (`s = len/8`).
+pub(crate) fn tail8_oop(
+    sign: f64,
+    src_re: &[f64],
+    src_im: &[f64],
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+) -> usize {
+    imp::tail8_oop(sign, src_re, src_im, dst_re, dst_im)
+}
+
+/// In-place form of [`tail8_oop`].
+pub(crate) fn tail8_inplace(sign: f64, re: &mut [f64], im: &mut [f64]) -> usize {
+    imp::tail8_inplace(sign, re, im)
+}
+
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 mod imp {
+    use crate::dft::radix::{C5_1, C5_2, C8, S3, S5_1, S5_2};
+    use std::arch::x86_64::*;
     use std::sync::OnceLock;
+
+    /// cos(2π/3), the radix-3 butterfly constant (shared with the
+    /// scalar loop in `radix.rs`).
+    const C3: f64 = -0.5;
 
     pub fn avx2_enabled() -> bool {
         static AVX2: OnceLock<bool> = OnceLock::new();
         *AVX2.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
     }
 
+    pub fn fma_enabled() -> bool {
+        static FMA: OnceLock<bool> = OnceLock::new();
+        *FMA.get_or_init(|| {
+            cfg!(feature = "fma")
+                && avx2_enabled()
+                && std::arch::is_x86_feature_detected!("fma")
+        })
+    }
+
+    // -----------------------------------------------------------------
+    // Multiply-accumulate families
+    // -----------------------------------------------------------------
+    // Each stage kernel is generated twice from one body: the *plain*
+    // family mirrors the scalar loops' op order exactly (separate mul
+    // then add/sub — bit-identical to scalar), the *fma* family
+    // contracts to one rounding. The s-prefixed macros are the scalar
+    // remainder counterparts: the fma scalar forms use `f64::mul_add`
+    // with the same association as the vector fmadd/fmsub, so an
+    // element computes identical bits whether a stage-range split lands
+    // it in the vector body or the remainder.
+
+    /// a·b + c
+    macro_rules! vmla_plain {
+        ($a:expr, $b:expr, $c:expr) => {
+            _mm256_add_pd(_mm256_mul_pd($a, $b), $c)
+        };
+    }
+    /// a·b − c
+    macro_rules! vmls_plain {
+        ($a:expr, $b:expr, $c:expr) => {
+            _mm256_sub_pd(_mm256_mul_pd($a, $b), $c)
+        };
+    }
+    /// c − a·b
+    macro_rules! vmnla_plain {
+        ($a:expr, $b:expr, $c:expr) => {
+            _mm256_sub_pd($c, _mm256_mul_pd($a, $b))
+        };
+    }
+    macro_rules! smla_plain {
+        ($a:expr, $b:expr, $c:expr) => {
+            ($a) * ($b) + ($c)
+        };
+    }
+    macro_rules! smls_plain {
+        ($a:expr, $b:expr, $c:expr) => {
+            ($a) * ($b) - ($c)
+        };
+    }
+    macro_rules! smnla_plain {
+        ($a:expr, $b:expr, $c:expr) => {
+            ($c) - ($a) * ($b)
+        };
+    }
+
+    #[cfg(feature = "fma")]
+    macro_rules! vmla_fma {
+        ($a:expr, $b:expr, $c:expr) => {
+            _mm256_fmadd_pd($a, $b, $c)
+        };
+    }
+    #[cfg(feature = "fma")]
+    macro_rules! vmls_fma {
+        ($a:expr, $b:expr, $c:expr) => {
+            _mm256_fmsub_pd($a, $b, $c)
+        };
+    }
+    #[cfg(feature = "fma")]
+    macro_rules! vmnla_fma {
+        ($a:expr, $b:expr, $c:expr) => {
+            _mm256_fnmadd_pd($a, $b, $c)
+        };
+    }
+    #[cfg(feature = "fma")]
+    macro_rules! smla_fma {
+        ($a:expr, $b:expr, $c:expr) => {
+            f64::mul_add($a, $b, $c)
+        };
+    }
+    #[cfg(feature = "fma")]
+    macro_rules! smls_fma {
+        ($a:expr, $b:expr, $c:expr) => {
+            f64::mul_add($a, $b, -($c))
+        };
+    }
+    #[cfg(feature = "fma")]
+    macro_rules! smnla_fma {
+        ($a:expr, $b:expr, $c:expr) => {
+            f64::mul_add(-($a), $b, $c)
+        };
+    }
+
+    // -----------------------------------------------------------------
+    // Shared shuffle helpers (generation-independent data movement)
+    // -----------------------------------------------------------------
+
+    /// Scatter the radix-3 stride-1 outputs of four butterflies:
+    /// `dk = [dk(p) dk(p+1) dk(p+2) dk(p+3)]` interleaves to the 12
+    /// contiguous doubles `out[3j + k] = dk(p+j)`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn interleave3_store(d0: __m256d, d1: __m256d, d2: __m256d, out: *mut f64) {
+        // o0 = [d0_0 d1_0 d2_0 d0_1], o1 = [d1_1 d2_1 d0_2 d1_2],
+        // o2 = [d2_2 d0_3 d1_3 d2_3]; each is one lane permute per
+        // source + two blends
+        let o0 = _mm256_blend_pd(
+            _mm256_blend_pd(
+                _mm256_permute4x64_pd(d0, 0x40),
+                _mm256_permute4x64_pd(d1, 0x00),
+                0b0010,
+            ),
+            _mm256_permute4x64_pd(d2, 0x00),
+            0b0100,
+        );
+        let o1 = _mm256_blend_pd(
+            _mm256_blend_pd(
+                _mm256_permute4x64_pd(d1, 0x81),
+                _mm256_permute4x64_pd(d2, 0x55),
+                0b0010,
+            ),
+            _mm256_permute4x64_pd(d0, 0xAA),
+            0b0100,
+        );
+        let o2 = _mm256_blend_pd(
+            _mm256_blend_pd(
+                _mm256_permute4x64_pd(d2, 0xC2),
+                _mm256_permute4x64_pd(d0, 0xFF),
+                0b0010,
+            ),
+            _mm256_permute4x64_pd(d1, 0xFF),
+            0b0100,
+        );
+        _mm256_storeu_pd(out, o0);
+        _mm256_storeu_pd(out.add(4), o1);
+        _mm256_storeu_pd(out.add(8), o2);
+    }
+
+    /// Deinterleave four butterflies' (w1, w2) twiddle pairs from the
+    /// radix-3 layout `tw[2p + {0,1}]`: returns
+    /// `([w1_0..w1_3], [w2_0..w2_3])` from the 8 doubles at `tw + 2p`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn deinterleave2(tw: *const f64) -> (__m256d, __m256d) {
+        let v0 = _mm256_loadu_pd(tw);
+        let v1 = _mm256_loadu_pd(tw.add(4));
+        // unpacklo = [w1_0 w1_2 w1_1 w1_3] → 0xD8 reorders to ascending
+        let w1 = _mm256_permute4x64_pd(_mm256_unpacklo_pd(v0, v1), 0xD8);
+        let w2 = _mm256_permute4x64_pd(_mm256_unpackhi_pd(v0, v1), 0xD8);
+        (w1, w2)
+    }
+
+    /// `[w_p, w_p, w_{p+1}, w_{p+1}]` from a 128-bit pair load (the
+    /// stride-2 per-butterfly twiddle duplication).
+    #[target_feature(enable = "avx2")]
+    unsafe fn dup2(tw: *const f64) -> __m256d {
+        let v = _mm256_castpd128_pd256(_mm_loadu_pd(tw));
+        _mm256_permute4x64_pd(v, 0x50)
+    }
+
+    // -----------------------------------------------------------------
+    // Stage kernels, generated once per multiply-accumulate family
+    // -----------------------------------------------------------------
+
+    macro_rules! define_stage_kernels {
+        ($feat:literal, $vmla:ident, $vmls:ident, $vmnla:ident,
+         $smla:ident, $smls:ident, $smnla:ident,
+         $s2s1:ident, $s2s2:ident, $s2w:ident,
+         $s3s1:ident, $s3s2:ident, $s3w:ident,
+         $s5s2:ident, $s5w:ident) => {
+
+        /// Radix-2 stage at `stride == 1`: butterfly `p` reads `src[p]`,
+        /// `src[p+m]` and writes `dst[2(p−p_lo)]`, `dst[2(p−p_lo)+1]`.
+        /// Four butterflies per iteration; the 4-lane `d0`/`d1` results
+        /// are element-interleaved into 8 contiguous outputs.
+        #[allow(clippy::too_many_arguments)]
+        #[target_feature(enable = $feat)]
+        unsafe fn $s2s1(
+            sign: f64,
+            tw_re: &[f64],
+            tw_im: &[f64],
+            src_re: &[f64],
+            src_im: &[f64],
+            dst_re: &mut [f64],
+            dst_im: &mut [f64],
+            p_lo: usize,
+            p_hi: usize,
+            m: usize,
+        ) {
+            let sgn = _mm256_set1_pd(sign);
+            let mut p = p_lo;
+            while p + 4 <= p_hi {
+                let ar = _mm256_loadu_pd(src_re.as_ptr().add(p));
+                let ai = _mm256_loadu_pd(src_im.as_ptr().add(p));
+                let br = _mm256_loadu_pd(src_re.as_ptr().add(p + m));
+                let bi = _mm256_loadu_pd(src_im.as_ptr().add(p + m));
+                let wr = _mm256_loadu_pd(tw_re.as_ptr().add(p));
+                let wi = _mm256_mul_pd(sgn, _mm256_loadu_pd(tw_im.as_ptr().add(p)));
+                let d0r = _mm256_add_pd(ar, br);
+                let d0i = _mm256_add_pd(ai, bi);
+                let xr = _mm256_sub_pd(ar, br);
+                let xi = _mm256_sub_pd(ai, bi);
+                let d1r = $vmls!(xr, wr, _mm256_mul_pd(xi, wi));
+                let d1i = $vmla!(xr, wi, _mm256_mul_pd(xi, wr));
+                // interleave lanes k of d0/d1 into out[2k], out[2k+1]:
+                // unpacklo = [d0_0 d1_0 d0_2 d1_2], unpackhi = odd lanes
+                let o = 2 * (p - p_lo);
+                let lo = _mm256_unpacklo_pd(d0r, d1r);
+                let hi = _mm256_unpackhi_pd(d0r, d1r);
+                _mm256_storeu_pd(dst_re.as_mut_ptr().add(o), _mm256_permute2f128_pd(lo, hi, 0x20));
+                _mm256_storeu_pd(
+                    dst_re.as_mut_ptr().add(o + 4),
+                    _mm256_permute2f128_pd(lo, hi, 0x31),
+                );
+                let lo = _mm256_unpacklo_pd(d0i, d1i);
+                let hi = _mm256_unpackhi_pd(d0i, d1i);
+                _mm256_storeu_pd(dst_im.as_mut_ptr().add(o), _mm256_permute2f128_pd(lo, hi, 0x20));
+                _mm256_storeu_pd(
+                    dst_im.as_mut_ptr().add(o + 4),
+                    _mm256_permute2f128_pd(lo, hi, 0x31),
+                );
+                p += 4;
+            }
+            // remainder butterflies: the scalar expressions with the
+            // family's multiply-accumulate forms
+            while p < p_hi {
+                let wr = tw_re[p];
+                let wi = sign * tw_im[p];
+                let (ar, ai) = (src_re[p], src_im[p]);
+                let (br, bi) = (src_re[p + m], src_im[p + m]);
+                let o = 2 * (p - p_lo);
+                dst_re[o] = ar + br;
+                dst_im[o] = ai + bi;
+                let xr = ar - br;
+                let xi = ai - bi;
+                dst_re[o + 1] = $smls!(xr, wr, xi * wi);
+                dst_im[o + 1] = $smla!(xr, wi, xi * wr);
+                p += 1;
+            }
+        }
+
+        /// Radix-2 stage at `stride == 2`: butterfly `p` reads lanes
+        /// `src[2p..2p+2]`, `src[2(p+m)..+2]` and writes
+        /// `dst[4(p−p_lo)..+2]` / `dst[4(p−p_lo)+2..+4]`. Two
+        /// butterflies per iteration; outputs interleave at 128-bit
+        /// granularity.
+        #[allow(clippy::too_many_arguments)]
+        #[target_feature(enable = $feat)]
+        unsafe fn $s2s2(
+            sign: f64,
+            tw_re: &[f64],
+            tw_im: &[f64],
+            src_re: &[f64],
+            src_im: &[f64],
+            dst_re: &mut [f64],
+            dst_im: &mut [f64],
+            p_lo: usize,
+            p_hi: usize,
+            m: usize,
+        ) {
+            let sgn = _mm256_set1_pd(sign);
+            let mut p = p_lo;
+            while p + 2 <= p_hi {
+                let ar = _mm256_loadu_pd(src_re.as_ptr().add(2 * p));
+                let ai = _mm256_loadu_pd(src_im.as_ptr().add(2 * p));
+                let br = _mm256_loadu_pd(src_re.as_ptr().add(2 * (p + m)));
+                let bi = _mm256_loadu_pd(src_im.as_ptr().add(2 * (p + m)));
+                let wr = dup2(tw_re.as_ptr().add(p));
+                let wi = _mm256_mul_pd(sgn, dup2(tw_im.as_ptr().add(p)));
+                let d0r = _mm256_add_pd(ar, br);
+                let d0i = _mm256_add_pd(ai, bi);
+                let xr = _mm256_sub_pd(ar, br);
+                let xi = _mm256_sub_pd(ai, bi);
+                let d1r = $vmls!(xr, wr, _mm256_mul_pd(xi, wi));
+                let d1i = $vmla!(xr, wi, _mm256_mul_pd(xi, wr));
+                // out[0..4] = [d0 lanes 0,1 | d1 lanes 0,1], out[4..8] = lanes 2,3
+                let o = 4 * (p - p_lo);
+                _mm256_storeu_pd(dst_re.as_mut_ptr().add(o), _mm256_permute2f128_pd(d0r, d1r, 0x20));
+                _mm256_storeu_pd(
+                    dst_re.as_mut_ptr().add(o + 4),
+                    _mm256_permute2f128_pd(d0r, d1r, 0x31),
+                );
+                _mm256_storeu_pd(dst_im.as_mut_ptr().add(o), _mm256_permute2f128_pd(d0i, d1i, 0x20));
+                _mm256_storeu_pd(
+                    dst_im.as_mut_ptr().add(o + 4),
+                    _mm256_permute2f128_pd(d0i, d1i, 0x31),
+                );
+                p += 2;
+            }
+            while p < p_hi {
+                let wr = tw_re[p];
+                let wi = sign * tw_im[p];
+                for q in 0..2 {
+                    let (ar, ai) = (src_re[2 * p + q], src_im[2 * p + q]);
+                    let (br, bi) = (src_re[2 * (p + m) + q], src_im[2 * (p + m) + q]);
+                    let o = 4 * (p - p_lo) + q;
+                    dst_re[o] = ar + br;
+                    dst_im[o] = ai + bi;
+                    let xr = ar - br;
+                    let xi = ai - bi;
+                    dst_re[o + 2] = $smls!(xr, wr, xi * wi);
+                    dst_im[o + 2] = $smla!(xr, wi, xi * wr);
+                }
+                p += 1;
+            }
+        }
+
+        /// Radix-2 stage at `stride >= 4` (wide): the `q` lane loop runs
+        /// four lanes per iteration with the butterfly's twiddle
+        /// broadcast — contiguous loads/stores, no shuffles.
+        #[allow(clippy::too_many_arguments)]
+        #[target_feature(enable = $feat)]
+        unsafe fn $s2w(
+            sign: f64,
+            tw_re: &[f64],
+            tw_im: &[f64],
+            src_re: &[f64],
+            src_im: &[f64],
+            dst_re: &mut [f64],
+            dst_im: &mut [f64],
+            p_lo: usize,
+            p_hi: usize,
+            m: usize,
+            stride: usize,
+        ) {
+            for p in p_lo..p_hi {
+                let wr_s = tw_re[p];
+                let wi_s = sign * tw_im[p];
+                let wr = _mm256_set1_pd(wr_s);
+                let wi = _mm256_set1_pd(wi_s);
+                let a_base = stride * p;
+                let b_base = stride * (p + m);
+                let o = 2 * stride * (p - p_lo);
+                let mut q = 0usize;
+                while q + 4 <= stride {
+                    let ar = _mm256_loadu_pd(src_re.as_ptr().add(a_base + q));
+                    let ai = _mm256_loadu_pd(src_im.as_ptr().add(a_base + q));
+                    let br = _mm256_loadu_pd(src_re.as_ptr().add(b_base + q));
+                    let bi = _mm256_loadu_pd(src_im.as_ptr().add(b_base + q));
+                    _mm256_storeu_pd(dst_re.as_mut_ptr().add(o + q), _mm256_add_pd(ar, br));
+                    _mm256_storeu_pd(dst_im.as_mut_ptr().add(o + q), _mm256_add_pd(ai, bi));
+                    let xr = _mm256_sub_pd(ar, br);
+                    let xi = _mm256_sub_pd(ai, bi);
+                    _mm256_storeu_pd(
+                        dst_re.as_mut_ptr().add(o + stride + q),
+                        $vmls!(xr, wr, _mm256_mul_pd(xi, wi)),
+                    );
+                    _mm256_storeu_pd(
+                        dst_im.as_mut_ptr().add(o + stride + q),
+                        $vmla!(xr, wi, _mm256_mul_pd(xi, wr)),
+                    );
+                    q += 4;
+                }
+                while q < stride {
+                    let (ar, ai) = (src_re[a_base + q], src_im[a_base + q]);
+                    let (br, bi) = (src_re[b_base + q], src_im[b_base + q]);
+                    dst_re[o + q] = ar + br;
+                    dst_im[o + q] = ai + bi;
+                    let xr = ar - br;
+                    let xi = ai - bi;
+                    dst_re[o + stride + q] = $smls!(xr, wr_s, xi * wi_s);
+                    dst_im[o + stride + q] = $smla!(xr, wi_s, xi * wr_s);
+                    q += 1;
+                }
+            }
+        }
+
+        /// Radix-3 stage at `stride == 1`, four butterflies per
+        /// iteration: contiguous x0/x1/x2 loads, twiddle pairs
+        /// deinterleaved, and the 3-way output scatter rebuilt with
+        /// lane permutes + blends ([`interleave3_store`]).
+        #[allow(clippy::too_many_arguments)]
+        #[target_feature(enable = $feat)]
+        unsafe fn $s3s1(
+            sign: f64,
+            tw_re: &[f64],
+            tw_im: &[f64],
+            src_re: &[f64],
+            src_im: &[f64],
+            dst_re: &mut [f64],
+            dst_im: &mut [f64],
+            p_lo: usize,
+            p_hi: usize,
+            m: usize,
+        ) {
+            let sgn = _mm256_set1_pd(sign);
+            let c3v = _mm256_set1_pd(C3);
+            let s3 = sign * (-S3);
+            let s3v = _mm256_set1_pd(s3);
+            let mut p = p_lo;
+            while p + 4 <= p_hi {
+                let x0r = _mm256_loadu_pd(src_re.as_ptr().add(p));
+                let x0i = _mm256_loadu_pd(src_im.as_ptr().add(p));
+                let x1r = _mm256_loadu_pd(src_re.as_ptr().add(p + m));
+                let x1i = _mm256_loadu_pd(src_im.as_ptr().add(p + m));
+                let x2r = _mm256_loadu_pd(src_re.as_ptr().add(p + 2 * m));
+                let x2i = _mm256_loadu_pd(src_im.as_ptr().add(p + 2 * m));
+                let (w1r, w2r) = deinterleave2(tw_re.as_ptr().add(2 * p));
+                let (w1i, w2i) = deinterleave2(tw_im.as_ptr().add(2 * p));
+                let w1i = _mm256_mul_pd(sgn, w1i);
+                let w2i = _mm256_mul_pd(sgn, w2i);
+                let tr = _mm256_add_pd(x1r, x2r);
+                let ti = _mm256_add_pd(x1i, x2i);
+                let dr = _mm256_sub_pd(x1r, x2r);
+                let di = _mm256_sub_pd(x1i, x2i);
+                let d0r = _mm256_add_pd(x0r, tr);
+                let d0i = _mm256_add_pd(x0i, ti);
+                let br = $vmla!(c3v, tr, x0r);
+                let bi = $vmla!(c3v, ti, x0i);
+                // y1 = b + i·s3·d, y2 = b − i·s3·d
+                let y1r = $vmnla!(s3v, di, br);
+                let y1i = $vmla!(s3v, dr, bi);
+                let y2r = $vmla!(s3v, di, br);
+                let y2i = $vmnla!(s3v, dr, bi);
+                let d1r = $vmls!(y1r, w1r, _mm256_mul_pd(y1i, w1i));
+                let d1i = $vmla!(y1r, w1i, _mm256_mul_pd(y1i, w1r));
+                let d2r = $vmls!(y2r, w2r, _mm256_mul_pd(y2i, w2i));
+                let d2i = $vmla!(y2r, w2i, _mm256_mul_pd(y2i, w2r));
+                let o = 3 * (p - p_lo);
+                interleave3_store(d0r, d1r, d2r, dst_re.as_mut_ptr().add(o));
+                interleave3_store(d0i, d1i, d2i, dst_im.as_mut_ptr().add(o));
+                p += 4;
+            }
+            while p < p_hi {
+                let t = 2 * p;
+                let w1r = tw_re[t];
+                let w1i = sign * tw_im[t];
+                let w2r = tw_re[t + 1];
+                let w2i = sign * tw_im[t + 1];
+                let (x0r, x0i) = (src_re[p], src_im[p]);
+                let (x1r, x1i) = (src_re[p + m], src_im[p + m]);
+                let (x2r, x2i) = (src_re[p + 2 * m], src_im[p + 2 * m]);
+                let tr = x1r + x2r;
+                let ti = x1i + x2i;
+                let dr = x1r - x2r;
+                let di = x1i - x2i;
+                let o = 3 * (p - p_lo);
+                dst_re[o] = x0r + tr;
+                dst_im[o] = x0i + ti;
+                let br = $smla!(C3, tr, x0r);
+                let bi = $smla!(C3, ti, x0i);
+                let y1r = $smnla!(s3, di, br);
+                let y1i = $smla!(s3, dr, bi);
+                let y2r = $smla!(s3, di, br);
+                let y2i = $smnla!(s3, dr, bi);
+                dst_re[o + 1] = $smls!(y1r, w1r, y1i * w1i);
+                dst_im[o + 1] = $smla!(y1r, w1i, y1i * w1r);
+                dst_re[o + 2] = $smls!(y2r, w2r, y2i * w2i);
+                dst_im[o + 2] = $smla!(y2r, w2i, y2i * w2r);
+                p += 1;
+            }
+        }
+
+        /// Radix-3 stage at `stride == 2`, two butterflies per
+        /// iteration: outputs interleave at 128-bit granularity
+        /// (`permute2f128` trio), twiddles duplicate across each
+        /// butterfly's two lanes with `permute4x64`.
+        #[allow(clippy::too_many_arguments)]
+        #[target_feature(enable = $feat)]
+        unsafe fn $s3s2(
+            sign: f64,
+            tw_re: &[f64],
+            tw_im: &[f64],
+            src_re: &[f64],
+            src_im: &[f64],
+            dst_re: &mut [f64],
+            dst_im: &mut [f64],
+            p_lo: usize,
+            p_hi: usize,
+            m: usize,
+        ) {
+            let sgn = _mm256_set1_pd(sign);
+            let c3v = _mm256_set1_pd(C3);
+            let s3 = sign * (-S3);
+            let s3v = _mm256_set1_pd(s3);
+            let mut p = p_lo;
+            while p + 2 <= p_hi {
+                let x0r = _mm256_loadu_pd(src_re.as_ptr().add(2 * p));
+                let x0i = _mm256_loadu_pd(src_im.as_ptr().add(2 * p));
+                let x1r = _mm256_loadu_pd(src_re.as_ptr().add(2 * (p + m)));
+                let x1i = _mm256_loadu_pd(src_im.as_ptr().add(2 * (p + m)));
+                let x2r = _mm256_loadu_pd(src_re.as_ptr().add(2 * (p + 2 * m)));
+                let x2i = _mm256_loadu_pd(src_im.as_ptr().add(2 * (p + 2 * m)));
+                // tw[2p..2p+4] = [w1_p w2_p w1_{p+1} w2_{p+1}]
+                let v = _mm256_loadu_pd(tw_re.as_ptr().add(2 * p));
+                let w1r = _mm256_permute4x64_pd(v, 0xA0);
+                let w2r = _mm256_permute4x64_pd(v, 0xF5);
+                let v = _mm256_loadu_pd(tw_im.as_ptr().add(2 * p));
+                let w1i = _mm256_mul_pd(sgn, _mm256_permute4x64_pd(v, 0xA0));
+                let w2i = _mm256_mul_pd(sgn, _mm256_permute4x64_pd(v, 0xF5));
+                let tr = _mm256_add_pd(x1r, x2r);
+                let ti = _mm256_add_pd(x1i, x2i);
+                let dr = _mm256_sub_pd(x1r, x2r);
+                let di = _mm256_sub_pd(x1i, x2i);
+                let d0r = _mm256_add_pd(x0r, tr);
+                let d0i = _mm256_add_pd(x0i, ti);
+                let br = $vmla!(c3v, tr, x0r);
+                let bi = $vmla!(c3v, ti, x0i);
+                let y1r = $vmnla!(s3v, di, br);
+                let y1i = $vmla!(s3v, dr, bi);
+                let y2r = $vmla!(s3v, di, br);
+                let y2i = $vmnla!(s3v, dr, bi);
+                let d1r = $vmls!(y1r, w1r, _mm256_mul_pd(y1i, w1i));
+                let d1i = $vmla!(y1r, w1i, _mm256_mul_pd(y1i, w1r));
+                let d2r = $vmls!(y2r, w2r, _mm256_mul_pd(y2i, w2i));
+                let d2i = $vmla!(y2r, w2i, _mm256_mul_pd(y2i, w2r));
+                // dst[6p'..6p'+12] = [d0(p) d1(p) | d2(p) d0(p+1) | d1(p+1) d2(p+1)]
+                let o = 6 * (p - p_lo);
+                _mm256_storeu_pd(dst_re.as_mut_ptr().add(o), _mm256_permute2f128_pd(d0r, d1r, 0x20));
+                _mm256_storeu_pd(
+                    dst_re.as_mut_ptr().add(o + 4),
+                    _mm256_permute2f128_pd(d2r, d0r, 0x30),
+                );
+                _mm256_storeu_pd(
+                    dst_re.as_mut_ptr().add(o + 8),
+                    _mm256_permute2f128_pd(d1r, d2r, 0x31),
+                );
+                _mm256_storeu_pd(dst_im.as_mut_ptr().add(o), _mm256_permute2f128_pd(d0i, d1i, 0x20));
+                _mm256_storeu_pd(
+                    dst_im.as_mut_ptr().add(o + 4),
+                    _mm256_permute2f128_pd(d2i, d0i, 0x30),
+                );
+                _mm256_storeu_pd(
+                    dst_im.as_mut_ptr().add(o + 8),
+                    _mm256_permute2f128_pd(d1i, d2i, 0x31),
+                );
+                p += 2;
+            }
+            while p < p_hi {
+                let t = 2 * p;
+                let w1r = tw_re[t];
+                let w1i = sign * tw_im[t];
+                let w2r = tw_re[t + 1];
+                let w2i = sign * tw_im[t + 1];
+                for q in 0..2 {
+                    let (x0r, x0i) = (src_re[2 * p + q], src_im[2 * p + q]);
+                    let (x1r, x1i) = (src_re[2 * (p + m) + q], src_im[2 * (p + m) + q]);
+                    let (x2r, x2i) = (src_re[2 * (p + 2 * m) + q], src_im[2 * (p + 2 * m) + q]);
+                    let tr = x1r + x2r;
+                    let ti = x1i + x2i;
+                    let dr = x1r - x2r;
+                    let di = x1i - x2i;
+                    let o = 6 * (p - p_lo) + q;
+                    dst_re[o] = x0r + tr;
+                    dst_im[o] = x0i + ti;
+                    let br = $smla!(C3, tr, x0r);
+                    let bi = $smla!(C3, ti, x0i);
+                    let y1r = $smnla!(s3, di, br);
+                    let y1i = $smla!(s3, dr, bi);
+                    let y2r = $smla!(s3, di, br);
+                    let y2i = $smnla!(s3, dr, bi);
+                    dst_re[o + 2] = $smls!(y1r, w1r, y1i * w1i);
+                    dst_im[o + 2] = $smla!(y1r, w1i, y1i * w1r);
+                    dst_re[o + 4] = $smls!(y2r, w2r, y2i * w2i);
+                    dst_im[o + 4] = $smla!(y2r, w2i, y2i * w2r);
+                }
+                p += 1;
+            }
+        }
+
+        /// Radix-3 stage at `stride >= 4` (wide): vectorized `q` lane
+        /// loop with broadcast twiddles — the shape the paper sizes'
+        /// radix-3 stages actually run at.
+        #[allow(clippy::too_many_arguments)]
+        #[target_feature(enable = $feat)]
+        unsafe fn $s3w(
+            sign: f64,
+            tw_re: &[f64],
+            tw_im: &[f64],
+            src_re: &[f64],
+            src_im: &[f64],
+            dst_re: &mut [f64],
+            dst_im: &mut [f64],
+            p_lo: usize,
+            p_hi: usize,
+            m: usize,
+            stride: usize,
+        ) {
+            let c3v = _mm256_set1_pd(C3);
+            let s3 = sign * (-S3);
+            let s3v = _mm256_set1_pd(s3);
+            for p in p_lo..p_hi {
+                let t = 2 * p;
+                let w1r_s = tw_re[t];
+                let w1i_s = sign * tw_im[t];
+                let w2r_s = tw_re[t + 1];
+                let w2i_s = sign * tw_im[t + 1];
+                let w1r = _mm256_set1_pd(w1r_s);
+                let w1i = _mm256_set1_pd(w1i_s);
+                let w2r = _mm256_set1_pd(w2r_s);
+                let w2i = _mm256_set1_pd(w2i_s);
+                let a0 = stride * p;
+                let a1 = stride * (p + m);
+                let a2 = stride * (p + 2 * m);
+                let o = 3 * stride * (p - p_lo);
+                let mut q = 0usize;
+                while q + 4 <= stride {
+                    let x0r = _mm256_loadu_pd(src_re.as_ptr().add(a0 + q));
+                    let x0i = _mm256_loadu_pd(src_im.as_ptr().add(a0 + q));
+                    let x1r = _mm256_loadu_pd(src_re.as_ptr().add(a1 + q));
+                    let x1i = _mm256_loadu_pd(src_im.as_ptr().add(a1 + q));
+                    let x2r = _mm256_loadu_pd(src_re.as_ptr().add(a2 + q));
+                    let x2i = _mm256_loadu_pd(src_im.as_ptr().add(a2 + q));
+                    let tr = _mm256_add_pd(x1r, x2r);
+                    let ti = _mm256_add_pd(x1i, x2i);
+                    let dr = _mm256_sub_pd(x1r, x2r);
+                    let di = _mm256_sub_pd(x1i, x2i);
+                    _mm256_storeu_pd(dst_re.as_mut_ptr().add(o + q), _mm256_add_pd(x0r, tr));
+                    _mm256_storeu_pd(dst_im.as_mut_ptr().add(o + q), _mm256_add_pd(x0i, ti));
+                    let br = $vmla!(c3v, tr, x0r);
+                    let bi = $vmla!(c3v, ti, x0i);
+                    let y1r = $vmnla!(s3v, di, br);
+                    let y1i = $vmla!(s3v, dr, bi);
+                    let y2r = $vmla!(s3v, di, br);
+                    let y2i = $vmnla!(s3v, dr, bi);
+                    _mm256_storeu_pd(
+                        dst_re.as_mut_ptr().add(o + stride + q),
+                        $vmls!(y1r, w1r, _mm256_mul_pd(y1i, w1i)),
+                    );
+                    _mm256_storeu_pd(
+                        dst_im.as_mut_ptr().add(o + stride + q),
+                        $vmla!(y1r, w1i, _mm256_mul_pd(y1i, w1r)),
+                    );
+                    _mm256_storeu_pd(
+                        dst_re.as_mut_ptr().add(o + 2 * stride + q),
+                        $vmls!(y2r, w2r, _mm256_mul_pd(y2i, w2i)),
+                    );
+                    _mm256_storeu_pd(
+                        dst_im.as_mut_ptr().add(o + 2 * stride + q),
+                        $vmla!(y2r, w2i, _mm256_mul_pd(y2i, w2r)),
+                    );
+                    q += 4;
+                }
+                while q < stride {
+                    let (x0r, x0i) = (src_re[a0 + q], src_im[a0 + q]);
+                    let (x1r, x1i) = (src_re[a1 + q], src_im[a1 + q]);
+                    let (x2r, x2i) = (src_re[a2 + q], src_im[a2 + q]);
+                    let tr = x1r + x2r;
+                    let ti = x1i + x2i;
+                    let dr = x1r - x2r;
+                    let di = x1i - x2i;
+                    dst_re[o + q] = x0r + tr;
+                    dst_im[o + q] = x0i + ti;
+                    let br = $smla!(C3, tr, x0r);
+                    let bi = $smla!(C3, ti, x0i);
+                    let y1r = $smnla!(s3, di, br);
+                    let y1i = $smla!(s3, dr, bi);
+                    let y2r = $smla!(s3, di, br);
+                    let y2i = $smnla!(s3, dr, bi);
+                    dst_re[o + stride + q] = $smls!(y1r, w1r_s, y1i * w1i_s);
+                    dst_im[o + stride + q] = $smla!(y1r, w1i_s, y1i * w1r_s);
+                    dst_re[o + 2 * stride + q] = $smls!(y2r, w2r_s, y2i * w2i_s);
+                    dst_im[o + 2 * stride + q] = $smla!(y2r, w2i_s, y2i * w2r_s);
+                    q += 1;
+                }
+            }
+        }
+
+        /// Radix-5 stage at `stride == 2`, two butterflies per
+        /// iteration: `permute2f128` gathers the k = 1..4 twiddle
+        /// quads, the five outputs scatter through five `permute2f128`
+        /// stores.
+        #[allow(clippy::too_many_arguments)]
+        #[target_feature(enable = $feat)]
+        unsafe fn $s5s2(
+            sign: f64,
+            tw_re: &[f64],
+            tw_im: &[f64],
+            src_re: &[f64],
+            src_im: &[f64],
+            dst_re: &mut [f64],
+            dst_im: &mut [f64],
+            p_lo: usize,
+            p_hi: usize,
+            m: usize,
+        ) {
+            let sgn = _mm256_set1_pd(sign);
+            let c1v = _mm256_set1_pd(C5_1);
+            let c2v = _mm256_set1_pd(C5_2);
+            let s1 = sign * (-S5_1);
+            let s2 = sign * (-S5_2);
+            let s1v = _mm256_set1_pd(s1);
+            let s2v = _mm256_set1_pd(s2);
+            let mut p = p_lo;
+            while p + 2 <= p_hi {
+                let x0r = _mm256_loadu_pd(src_re.as_ptr().add(2 * p));
+                let x0i = _mm256_loadu_pd(src_im.as_ptr().add(2 * p));
+                let x1r = _mm256_loadu_pd(src_re.as_ptr().add(2 * (p + m)));
+                let x1i = _mm256_loadu_pd(src_im.as_ptr().add(2 * (p + m)));
+                let x2r = _mm256_loadu_pd(src_re.as_ptr().add(2 * (p + 2 * m)));
+                let x2i = _mm256_loadu_pd(src_im.as_ptr().add(2 * (p + 2 * m)));
+                let x3r = _mm256_loadu_pd(src_re.as_ptr().add(2 * (p + 3 * m)));
+                let x3i = _mm256_loadu_pd(src_im.as_ptr().add(2 * (p + 3 * m)));
+                let x4r = _mm256_loadu_pd(src_re.as_ptr().add(2 * (p + 4 * m)));
+                let x4i = _mm256_loadu_pd(src_im.as_ptr().add(2 * (p + 4 * m)));
+                // tw[4p..4p+8] = [w1 w2 w3 w4](p) ++ [w1 w2 w3 w4](p+1)
+                let a = _mm256_loadu_pd(tw_re.as_ptr().add(4 * p));
+                let b = _mm256_loadu_pd(tw_re.as_ptr().add(4 * p + 4));
+                let lo = _mm256_permute2f128_pd(a, b, 0x20);
+                let hi = _mm256_permute2f128_pd(a, b, 0x31);
+                let w1r = _mm256_permute4x64_pd(lo, 0xA0);
+                let w2r = _mm256_permute4x64_pd(lo, 0xF5);
+                let w3r = _mm256_permute4x64_pd(hi, 0xA0);
+                let w4r = _mm256_permute4x64_pd(hi, 0xF5);
+                let a = _mm256_loadu_pd(tw_im.as_ptr().add(4 * p));
+                let b = _mm256_loadu_pd(tw_im.as_ptr().add(4 * p + 4));
+                let lo = _mm256_permute2f128_pd(a, b, 0x20);
+                let hi = _mm256_permute2f128_pd(a, b, 0x31);
+                let w1i = _mm256_mul_pd(sgn, _mm256_permute4x64_pd(lo, 0xA0));
+                let w2i = _mm256_mul_pd(sgn, _mm256_permute4x64_pd(lo, 0xF5));
+                let w3i = _mm256_mul_pd(sgn, _mm256_permute4x64_pd(hi, 0xA0));
+                let w4i = _mm256_mul_pd(sgn, _mm256_permute4x64_pd(hi, 0xF5));
+                let t1r = _mm256_add_pd(x1r, x4r);
+                let t1i = _mm256_add_pd(x1i, x4i);
+                let t2r = _mm256_add_pd(x2r, x3r);
+                let t2i = _mm256_add_pd(x2i, x3i);
+                let e1r = _mm256_sub_pd(x1r, x4r);
+                let e1i = _mm256_sub_pd(x1i, x4i);
+                let e2r = _mm256_sub_pd(x2r, x3r);
+                let e2i = _mm256_sub_pd(x2i, x3i);
+                let d0r = _mm256_add_pd(_mm256_add_pd(x0r, t1r), t2r);
+                let d0i = _mm256_add_pd(_mm256_add_pd(x0i, t1i), t2i);
+                let m1r = $vmla!(c2v, t2r, $vmla!(c1v, t1r, x0r));
+                let m1i = $vmla!(c2v, t2i, $vmla!(c1v, t1i, x0i));
+                let m2r = $vmla!(c1v, t2r, $vmla!(c2v, t1r, x0r));
+                let m2i = $vmla!(c1v, t2i, $vmla!(c2v, t1i, x0i));
+                let u1r = $vmla!(s2v, e2r, _mm256_mul_pd(s1v, e1r));
+                let u1i = $vmla!(s2v, e2i, _mm256_mul_pd(s1v, e1i));
+                let u2r = $vmls!(s2v, e1r, _mm256_mul_pd(s1v, e2r));
+                let u2i = $vmls!(s2v, e1i, _mm256_mul_pd(s1v, e2i));
+                // y1 = m1 + i·u1, y4 = m1 − i·u1, y2 = m2 + i·u2, y3 = m2 − i·u2
+                let y1r = _mm256_sub_pd(m1r, u1i);
+                let y1i = _mm256_add_pd(m1i, u1r);
+                let y4r = _mm256_add_pd(m1r, u1i);
+                let y4i = _mm256_sub_pd(m1i, u1r);
+                let y2r = _mm256_sub_pd(m2r, u2i);
+                let y2i = _mm256_add_pd(m2i, u2r);
+                let y3r = _mm256_add_pd(m2r, u2i);
+                let y3i = _mm256_sub_pd(m2i, u2r);
+                let d1r = $vmls!(y1r, w1r, _mm256_mul_pd(y1i, w1i));
+                let d1i = $vmla!(y1r, w1i, _mm256_mul_pd(y1i, w1r));
+                let d2r = $vmls!(y2r, w2r, _mm256_mul_pd(y2i, w2i));
+                let d2i = $vmla!(y2r, w2i, _mm256_mul_pd(y2i, w2r));
+                let d3r = $vmls!(y3r, w3r, _mm256_mul_pd(y3i, w3i));
+                let d3i = $vmla!(y3r, w3i, _mm256_mul_pd(y3i, w3r));
+                let d4r = $vmls!(y4r, w4r, _mm256_mul_pd(y4i, w4i));
+                let d4i = $vmla!(y4r, w4i, _mm256_mul_pd(y4i, w4r));
+                // dst[10p'..10p'+20] = [d0 d1 | d2 d3 | d4 d0' | d1' d2' | d3' d4']
+                let o = 10 * (p - p_lo);
+                _mm256_storeu_pd(dst_re.as_mut_ptr().add(o), _mm256_permute2f128_pd(d0r, d1r, 0x20));
+                _mm256_storeu_pd(
+                    dst_re.as_mut_ptr().add(o + 4),
+                    _mm256_permute2f128_pd(d2r, d3r, 0x20),
+                );
+                _mm256_storeu_pd(
+                    dst_re.as_mut_ptr().add(o + 8),
+                    _mm256_permute2f128_pd(d4r, d0r, 0x30),
+                );
+                _mm256_storeu_pd(
+                    dst_re.as_mut_ptr().add(o + 12),
+                    _mm256_permute2f128_pd(d1r, d2r, 0x31),
+                );
+                _mm256_storeu_pd(
+                    dst_re.as_mut_ptr().add(o + 16),
+                    _mm256_permute2f128_pd(d3r, d4r, 0x31),
+                );
+                _mm256_storeu_pd(dst_im.as_mut_ptr().add(o), _mm256_permute2f128_pd(d0i, d1i, 0x20));
+                _mm256_storeu_pd(
+                    dst_im.as_mut_ptr().add(o + 4),
+                    _mm256_permute2f128_pd(d2i, d3i, 0x20),
+                );
+                _mm256_storeu_pd(
+                    dst_im.as_mut_ptr().add(o + 8),
+                    _mm256_permute2f128_pd(d4i, d0i, 0x30),
+                );
+                _mm256_storeu_pd(
+                    dst_im.as_mut_ptr().add(o + 12),
+                    _mm256_permute2f128_pd(d1i, d2i, 0x31),
+                );
+                _mm256_storeu_pd(
+                    dst_im.as_mut_ptr().add(o + 16),
+                    _mm256_permute2f128_pd(d3i, d4i, 0x31),
+                );
+                p += 2;
+            }
+            while p < p_hi {
+                let t = 4 * p;
+                for q in 0..2 {
+                    let (x0r, x0i) = (src_re[2 * p + q], src_im[2 * p + q]);
+                    let (x1r, x1i) = (src_re[2 * (p + m) + q], src_im[2 * (p + m) + q]);
+                    let (x2r, x2i) = (src_re[2 * (p + 2 * m) + q], src_im[2 * (p + 2 * m) + q]);
+                    let (x3r, x3i) = (src_re[2 * (p + 3 * m) + q], src_im[2 * (p + 3 * m) + q]);
+                    let (x4r, x4i) = (src_re[2 * (p + 4 * m) + q], src_im[2 * (p + 4 * m) + q]);
+                    let t1r = x1r + x4r;
+                    let t1i = x1i + x4i;
+                    let t2r = x2r + x3r;
+                    let t2i = x2i + x3i;
+                    let e1r = x1r - x4r;
+                    let e1i = x1i - x4i;
+                    let e2r = x2r - x3r;
+                    let e2i = x2i - x3i;
+                    let o = 10 * (p - p_lo) + q;
+                    dst_re[o] = x0r + t1r + t2r;
+                    dst_im[o] = x0i + t1i + t2i;
+                    let m1r = $smla!(C5_2, t2r, $smla!(C5_1, t1r, x0r));
+                    let m1i = $smla!(C5_2, t2i, $smla!(C5_1, t1i, x0i));
+                    let m2r = $smla!(C5_1, t2r, $smla!(C5_2, t1r, x0r));
+                    let m2i = $smla!(C5_1, t2i, $smla!(C5_2, t1i, x0i));
+                    let u1r = $smla!(s2, e2r, s1 * e1r);
+                    let u1i = $smla!(s2, e2i, s1 * e1i);
+                    let u2r = $smls!(s2, e1r, s1 * e2r);
+                    let u2i = $smls!(s2, e1i, s1 * e2i);
+                    let y1r = m1r - u1i;
+                    let y1i = m1i + u1r;
+                    let y4r = m1r + u1i;
+                    let y4i = m1i - u1r;
+                    let y2r = m2r - u2i;
+                    let y2i = m2i + u2r;
+                    let y3r = m2r + u2i;
+                    let y3i = m2i - u2r;
+                    let (w1r, w1i) = (tw_re[t], sign * tw_im[t]);
+                    let (w2r, w2i) = (tw_re[t + 1], sign * tw_im[t + 1]);
+                    let (w3r, w3i) = (tw_re[t + 2], sign * tw_im[t + 2]);
+                    let (w4r, w4i) = (tw_re[t + 3], sign * tw_im[t + 3]);
+                    dst_re[o + 2] = $smls!(y1r, w1r, y1i * w1i);
+                    dst_im[o + 2] = $smla!(y1r, w1i, y1i * w1r);
+                    dst_re[o + 4] = $smls!(y2r, w2r, y2i * w2i);
+                    dst_im[o + 4] = $smla!(y2r, w2i, y2i * w2r);
+                    dst_re[o + 6] = $smls!(y3r, w3r, y3i * w3i);
+                    dst_im[o + 6] = $smla!(y3r, w3i, y3i * w3r);
+                    dst_re[o + 8] = $smls!(y4r, w4r, y4i * w4i);
+                    dst_im[o + 8] = $smla!(y4r, w4i, y4i * w4r);
+                }
+                p += 1;
+            }
+        }
+
+        /// Radix-5 stage at `stride >= 4` (wide): vectorized `q` lane
+        /// loop with broadcast twiddles (the 640 = 2⁷·5 shape).
+        #[allow(clippy::too_many_arguments)]
+        #[target_feature(enable = $feat)]
+        unsafe fn $s5w(
+            sign: f64,
+            tw_re: &[f64],
+            tw_im: &[f64],
+            src_re: &[f64],
+            src_im: &[f64],
+            dst_re: &mut [f64],
+            dst_im: &mut [f64],
+            p_lo: usize,
+            p_hi: usize,
+            m: usize,
+            stride: usize,
+        ) {
+            let c1v = _mm256_set1_pd(C5_1);
+            let c2v = _mm256_set1_pd(C5_2);
+            let s1 = sign * (-S5_1);
+            let s2 = sign * (-S5_2);
+            let s1v = _mm256_set1_pd(s1);
+            let s2v = _mm256_set1_pd(s2);
+            for p in p_lo..p_hi {
+                let t = 4 * p;
+                let (w1r_s, w1i_s) = (tw_re[t], sign * tw_im[t]);
+                let (w2r_s, w2i_s) = (tw_re[t + 1], sign * tw_im[t + 1]);
+                let (w3r_s, w3i_s) = (tw_re[t + 2], sign * tw_im[t + 2]);
+                let (w4r_s, w4i_s) = (tw_re[t + 3], sign * tw_im[t + 3]);
+                let w1r = _mm256_set1_pd(w1r_s);
+                let w1i = _mm256_set1_pd(w1i_s);
+                let w2r = _mm256_set1_pd(w2r_s);
+                let w2i = _mm256_set1_pd(w2i_s);
+                let w3r = _mm256_set1_pd(w3r_s);
+                let w3i = _mm256_set1_pd(w3i_s);
+                let w4r = _mm256_set1_pd(w4r_s);
+                let w4i = _mm256_set1_pd(w4i_s);
+                let a0 = stride * p;
+                let a1 = stride * (p + m);
+                let a2 = stride * (p + 2 * m);
+                let a3 = stride * (p + 3 * m);
+                let a4 = stride * (p + 4 * m);
+                let o = 5 * stride * (p - p_lo);
+                let mut q = 0usize;
+                while q + 4 <= stride {
+                    let x0r = _mm256_loadu_pd(src_re.as_ptr().add(a0 + q));
+                    let x0i = _mm256_loadu_pd(src_im.as_ptr().add(a0 + q));
+                    let x1r = _mm256_loadu_pd(src_re.as_ptr().add(a1 + q));
+                    let x1i = _mm256_loadu_pd(src_im.as_ptr().add(a1 + q));
+                    let x2r = _mm256_loadu_pd(src_re.as_ptr().add(a2 + q));
+                    let x2i = _mm256_loadu_pd(src_im.as_ptr().add(a2 + q));
+                    let x3r = _mm256_loadu_pd(src_re.as_ptr().add(a3 + q));
+                    let x3i = _mm256_loadu_pd(src_im.as_ptr().add(a3 + q));
+                    let x4r = _mm256_loadu_pd(src_re.as_ptr().add(a4 + q));
+                    let x4i = _mm256_loadu_pd(src_im.as_ptr().add(a4 + q));
+                    let t1r = _mm256_add_pd(x1r, x4r);
+                    let t1i = _mm256_add_pd(x1i, x4i);
+                    let t2r = _mm256_add_pd(x2r, x3r);
+                    let t2i = _mm256_add_pd(x2i, x3i);
+                    let e1r = _mm256_sub_pd(x1r, x4r);
+                    let e1i = _mm256_sub_pd(x1i, x4i);
+                    let e2r = _mm256_sub_pd(x2r, x3r);
+                    let e2i = _mm256_sub_pd(x2i, x3i);
+                    _mm256_storeu_pd(
+                        dst_re.as_mut_ptr().add(o + q),
+                        _mm256_add_pd(_mm256_add_pd(x0r, t1r), t2r),
+                    );
+                    _mm256_storeu_pd(
+                        dst_im.as_mut_ptr().add(o + q),
+                        _mm256_add_pd(_mm256_add_pd(x0i, t1i), t2i),
+                    );
+                    let m1r = $vmla!(c2v, t2r, $vmla!(c1v, t1r, x0r));
+                    let m1i = $vmla!(c2v, t2i, $vmla!(c1v, t1i, x0i));
+                    let m2r = $vmla!(c1v, t2r, $vmla!(c2v, t1r, x0r));
+                    let m2i = $vmla!(c1v, t2i, $vmla!(c2v, t1i, x0i));
+                    let u1r = $vmla!(s2v, e2r, _mm256_mul_pd(s1v, e1r));
+                    let u1i = $vmla!(s2v, e2i, _mm256_mul_pd(s1v, e1i));
+                    let u2r = $vmls!(s2v, e1r, _mm256_mul_pd(s1v, e2r));
+                    let u2i = $vmls!(s2v, e1i, _mm256_mul_pd(s1v, e2i));
+                    let y1r = _mm256_sub_pd(m1r, u1i);
+                    let y1i = _mm256_add_pd(m1i, u1r);
+                    let y4r = _mm256_add_pd(m1r, u1i);
+                    let y4i = _mm256_sub_pd(m1i, u1r);
+                    let y2r = _mm256_sub_pd(m2r, u2i);
+                    let y2i = _mm256_add_pd(m2i, u2r);
+                    let y3r = _mm256_add_pd(m2r, u2i);
+                    let y3i = _mm256_sub_pd(m2i, u2r);
+                    _mm256_storeu_pd(
+                        dst_re.as_mut_ptr().add(o + stride + q),
+                        $vmls!(y1r, w1r, _mm256_mul_pd(y1i, w1i)),
+                    );
+                    _mm256_storeu_pd(
+                        dst_im.as_mut_ptr().add(o + stride + q),
+                        $vmla!(y1r, w1i, _mm256_mul_pd(y1i, w1r)),
+                    );
+                    _mm256_storeu_pd(
+                        dst_re.as_mut_ptr().add(o + 2 * stride + q),
+                        $vmls!(y2r, w2r, _mm256_mul_pd(y2i, w2i)),
+                    );
+                    _mm256_storeu_pd(
+                        dst_im.as_mut_ptr().add(o + 2 * stride + q),
+                        $vmla!(y2r, w2i, _mm256_mul_pd(y2i, w2r)),
+                    );
+                    _mm256_storeu_pd(
+                        dst_re.as_mut_ptr().add(o + 3 * stride + q),
+                        $vmls!(y3r, w3r, _mm256_mul_pd(y3i, w3i)),
+                    );
+                    _mm256_storeu_pd(
+                        dst_im.as_mut_ptr().add(o + 3 * stride + q),
+                        $vmla!(y3r, w3i, _mm256_mul_pd(y3i, w3r)),
+                    );
+                    _mm256_storeu_pd(
+                        dst_re.as_mut_ptr().add(o + 4 * stride + q),
+                        $vmls!(y4r, w4r, _mm256_mul_pd(y4i, w4i)),
+                    );
+                    _mm256_storeu_pd(
+                        dst_im.as_mut_ptr().add(o + 4 * stride + q),
+                        $vmla!(y4r, w4i, _mm256_mul_pd(y4i, w4r)),
+                    );
+                    q += 4;
+                }
+                while q < stride {
+                    let (x0r, x0i) = (src_re[a0 + q], src_im[a0 + q]);
+                    let (x1r, x1i) = (src_re[a1 + q], src_im[a1 + q]);
+                    let (x2r, x2i) = (src_re[a2 + q], src_im[a2 + q]);
+                    let (x3r, x3i) = (src_re[a3 + q], src_im[a3 + q]);
+                    let (x4r, x4i) = (src_re[a4 + q], src_im[a4 + q]);
+                    let t1r = x1r + x4r;
+                    let t1i = x1i + x4i;
+                    let t2r = x2r + x3r;
+                    let t2i = x2i + x3i;
+                    let e1r = x1r - x4r;
+                    let e1i = x1i - x4i;
+                    let e2r = x2r - x3r;
+                    let e2i = x2i - x3i;
+                    dst_re[o + q] = x0r + t1r + t2r;
+                    dst_im[o + q] = x0i + t1i + t2i;
+                    let m1r = $smla!(C5_2, t2r, $smla!(C5_1, t1r, x0r));
+                    let m1i = $smla!(C5_2, t2i, $smla!(C5_1, t1i, x0i));
+                    let m2r = $smla!(C5_1, t2r, $smla!(C5_2, t1r, x0r));
+                    let m2i = $smla!(C5_1, t2i, $smla!(C5_2, t1i, x0i));
+                    let u1r = $smla!(s2, e2r, s1 * e1r);
+                    let u1i = $smla!(s2, e2i, s1 * e1i);
+                    let u2r = $smls!(s2, e1r, s1 * e2r);
+                    let u2i = $smls!(s2, e1i, s1 * e2i);
+                    let y1r = m1r - u1i;
+                    let y1i = m1i + u1r;
+                    let y4r = m1r + u1i;
+                    let y4i = m1i - u1r;
+                    let y2r = m2r - u2i;
+                    let y2i = m2i + u2r;
+                    let y3r = m2r + u2i;
+                    let y3i = m2i - u2r;
+                    dst_re[o + stride + q] = $smls!(y1r, w1r_s, y1i * w1i_s);
+                    dst_im[o + stride + q] = $smla!(y1r, w1i_s, y1i * w1r_s);
+                    dst_re[o + 2 * stride + q] = $smls!(y2r, w2r_s, y2i * w2i_s);
+                    dst_im[o + 2 * stride + q] = $smla!(y2r, w2i_s, y2i * w2r_s);
+                    dst_re[o + 3 * stride + q] = $smls!(y3r, w3r_s, y3i * w3i_s);
+                    dst_im[o + 3 * stride + q] = $smla!(y3r, w3i_s, y3i * w3r_s);
+                    dst_re[o + 4 * stride + q] = $smls!(y4r, w4r_s, y4i * w4i_s);
+                    dst_im[o + 4 * stride + q] = $smla!(y4r, w4i_s, y4i * w4r_s);
+                    q += 1;
+                }
+            }
+        }
+
+        };
+    }
+
+    // The plain generation: AVX2 only, every op in the same IEEE-754
+    // order as the scalar stage loops → bit-identical results.
+    define_stage_kernels!(
+        "avx2",
+        vmla_plain,
+        vmls_plain,
+        vmnla_plain,
+        smla_plain,
+        smls_plain,
+        smnla_plain,
+        stage2_s1,
+        stage2_s2,
+        stage2_w,
+        stage3_s1,
+        stage3_s2,
+        stage3_w,
+        stage5_s2,
+        stage5_w
+    );
+
+    // The FMA generation: identical structure, but every mul+add /
+    // mul+sub pair contracts to a fused op (vector *and* scalar
+    // remainder, so arbitrary stage-range splits stay bitwise
+    // consistent within the generation). Not bit-identical to scalar.
+    #[cfg(feature = "fma")]
+    define_stage_kernels!(
+        "avx2,fma",
+        vmla_fma,
+        vmls_fma,
+        vmnla_fma,
+        smla_fma,
+        smls_fma,
+        smnla_fma,
+        stage2_s1_fma,
+        stage2_s2_fma,
+        stage2_w_fma,
+        stage3_s1_fma,
+        stage3_s2_fma,
+        stage3_w_fma,
+        stage5_s2_fma,
+        stage5_w_fma
+    );
+
+    /// Dispatch one stage shape to the FMA kernel when that generation
+    /// is active, else to the plain AVX2 kernel.
+    macro_rules! run_kernel {
+        ($plain:ident, $fma:ident, ($($a:expr),* $(,)?)) => {{
+            #[cfg(feature = "fma")]
+            if fma_enabled() {
+                unsafe { $fma($($a),*) };
+                return true;
+            }
+            unsafe { $plain($($a),*) };
+            true
+        }};
+    }
+
     #[allow(clippy::too_many_arguments)]
-    pub fn try_stage2(
+    pub(crate) fn try_stage2(
         sign: f64,
         tw_re: &[f64],
         tw_im: &[f64],
@@ -84,163 +1264,365 @@ mod imp {
         m: usize,
         stride: usize,
     ) -> bool {
-        if !avx2_enabled() || stride > 2 {
+        if !avx2_enabled() {
             return false;
         }
         debug_assert!(p_hi <= m && tw_re.len() >= m && tw_im.len() >= m);
-        // SAFETY: avx2_enabled() verified the CPU supports the target
-        // features; all slice accesses inside stay within the bounds
-        // asserted by apply_stage_range's dst-slice contract.
+        match stride {
+            1 => run_kernel!(
+                stage2_s1,
+                stage2_s1_fma,
+                (sign, tw_re, tw_im, src_re, src_im, dst_re, dst_im, p_lo, p_hi, m)
+            ),
+            2 => run_kernel!(
+                stage2_s2,
+                stage2_s2_fma,
+                (sign, tw_re, tw_im, src_re, src_im, dst_re, dst_im, p_lo, p_hi, m)
+            ),
+            s if s >= 4 => run_kernel!(
+                stage2_w,
+                stage2_w_fma,
+                (sign, tw_re, tw_im, src_re, src_im, dst_re, dst_im, p_lo, p_hi, m, s)
+            ),
+            _ => false,
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn try_stage3(
+        sign: f64,
+        tw_re: &[f64],
+        tw_im: &[f64],
+        src_re: &[f64],
+        src_im: &[f64],
+        dst_re: &mut [f64],
+        dst_im: &mut [f64],
+        p_lo: usize,
+        p_hi: usize,
+        m: usize,
+        stride: usize,
+    ) -> bool {
+        if !avx2_enabled() {
+            return false;
+        }
+        debug_assert!(p_hi <= m && tw_re.len() >= 2 * m && tw_im.len() >= 2 * m);
+        match stride {
+            1 => run_kernel!(
+                stage3_s1,
+                stage3_s1_fma,
+                (sign, tw_re, tw_im, src_re, src_im, dst_re, dst_im, p_lo, p_hi, m)
+            ),
+            2 => run_kernel!(
+                stage3_s2,
+                stage3_s2_fma,
+                (sign, tw_re, tw_im, src_re, src_im, dst_re, dst_im, p_lo, p_hi, m)
+            ),
+            s if s >= 4 => run_kernel!(
+                stage3_w,
+                stage3_w_fma,
+                (sign, tw_re, tw_im, src_re, src_im, dst_re, dst_im, p_lo, p_hi, m, s)
+            ),
+            _ => false,
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn try_stage5(
+        sign: f64,
+        tw_re: &[f64],
+        tw_im: &[f64],
+        src_re: &[f64],
+        src_im: &[f64],
+        dst_re: &mut [f64],
+        dst_im: &mut [f64],
+        p_lo: usize,
+        p_hi: usize,
+        m: usize,
+        stride: usize,
+    ) -> bool {
+        if !avx2_enabled() {
+            return false;
+        }
+        debug_assert!(p_hi <= m && tw_re.len() >= 4 * m && tw_im.len() >= 4 * m);
+        match stride {
+            2 => run_kernel!(
+                stage5_s2,
+                stage5_s2_fma,
+                (sign, tw_re, tw_im, src_re, src_im, dst_re, dst_im, p_lo, p_hi, m)
+            ),
+            s if s >= 4 => run_kernel!(
+                stage5_w,
+                stage5_w_fma,
+                (sign, tw_re, tw_im, src_re, src_im, dst_re, dst_im, p_lo, p_hi, m, s)
+            ),
+            _ => false,
+        }
+    }
+
+    // ---- AVX2 tail-codelet bodies -------------------------------------
+    //
+    // One generation only (plain AVX2): the FFT4/FFT8 butterflies have
+    // no worthwhile mul+add chains to fuse, so an FMA variant would buy
+    // nothing and cost bit-identity. Keeping a single body means the
+    // tail sweep is *always* bit-identical to the scalar codelet, under
+    // every feature combination.
+
+    /// Vectorized FFT4 columns: butterflies `q, q+1, q+2, q+3` of the
+    /// final fused radix-4 tail, 4 per iteration. Processes
+    /// `qend = s & !3` columns (caller finishes the remainder in
+    /// scalar); all loads complete before the first store so the
+    /// in-place wrapper can alias `src == dst`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn tail4_core(
+        sign: f64,
+        sr: *const f64,
+        si: *const f64,
+        dr: *mut f64,
+        di: *mut f64,
+        s: usize,
+        qend: usize,
+    ) {
+        let sgn = _mm256_set1_pd(sign);
+        let mut q = 0usize;
+        while q < qend {
+            let x0r = _mm256_loadu_pd(sr.add(q));
+            let x0i = _mm256_loadu_pd(si.add(q));
+            let x1r = _mm256_loadu_pd(sr.add(s + q));
+            let x1i = _mm256_loadu_pd(si.add(s + q));
+            let x2r = _mm256_loadu_pd(sr.add(2 * s + q));
+            let x2i = _mm256_loadu_pd(si.add(2 * s + q));
+            let x3r = _mm256_loadu_pd(sr.add(3 * s + q));
+            let x3i = _mm256_loadu_pd(si.add(3 * s + q));
+            let t0r = _mm256_add_pd(x0r, x2r);
+            let t0i = _mm256_add_pd(x0i, x2i);
+            let t1r = _mm256_add_pd(x1r, x3r);
+            let t1i = _mm256_add_pd(x1i, x3i);
+            let u0r = _mm256_sub_pd(x0r, x2r);
+            let u0i = _mm256_sub_pd(x0i, x2i);
+            let u1r = _mm256_sub_pd(x1r, x3r);
+            let u1i = _mm256_sub_pd(x1i, x3i);
+            let su1i = _mm256_mul_pd(sgn, u1i);
+            let su1r = _mm256_mul_pd(sgn, u1r);
+            _mm256_storeu_pd(dr.add(q), _mm256_add_pd(t0r, t1r));
+            _mm256_storeu_pd(di.add(q), _mm256_add_pd(t0i, t1i));
+            _mm256_storeu_pd(dr.add(s + q), _mm256_add_pd(u0r, su1i));
+            _mm256_storeu_pd(di.add(s + q), _mm256_sub_pd(u0i, su1r));
+            _mm256_storeu_pd(dr.add(2 * s + q), _mm256_sub_pd(t0r, t1r));
+            _mm256_storeu_pd(di.add(2 * s + q), _mm256_sub_pd(t0i, t1i));
+            _mm256_storeu_pd(dr.add(3 * s + q), _mm256_sub_pd(u0r, su1i));
+            _mm256_storeu_pd(di.add(3 * s + q), _mm256_add_pd(u0i, su1r));
+            q += 4;
+        }
+    }
+
+    /// Vectorized FFT8 columns, 4 per iteration, same aliasing contract
+    /// as [`tail4_core`].
+    #[target_feature(enable = "avx2")]
+    unsafe fn tail8_core(
+        sign: f64,
+        sr: *const f64,
+        si: *const f64,
+        dr: *mut f64,
+        di: *mut f64,
+        s: usize,
+        qend: usize,
+    ) {
+        let sgn = _mm256_set1_pd(sign);
+        let c8v = _mm256_set1_pd(C8);
+        let neg0 = _mm256_set1_pd(-0.0);
+        let mut q = 0usize;
+        while q < qend {
+            let x0r = _mm256_loadu_pd(sr.add(q));
+            let x0i = _mm256_loadu_pd(si.add(q));
+            let x1r = _mm256_loadu_pd(sr.add(s + q));
+            let x1i = _mm256_loadu_pd(si.add(s + q));
+            let x2r = _mm256_loadu_pd(sr.add(2 * s + q));
+            let x2i = _mm256_loadu_pd(si.add(2 * s + q));
+            let x3r = _mm256_loadu_pd(sr.add(3 * s + q));
+            let x3i = _mm256_loadu_pd(si.add(3 * s + q));
+            let x4r = _mm256_loadu_pd(sr.add(4 * s + q));
+            let x4i = _mm256_loadu_pd(si.add(4 * s + q));
+            let x5r = _mm256_loadu_pd(sr.add(5 * s + q));
+            let x5i = _mm256_loadu_pd(si.add(5 * s + q));
+            let x6r = _mm256_loadu_pd(sr.add(6 * s + q));
+            let x6i = _mm256_loadu_pd(si.add(6 * s + q));
+            let x7r = _mm256_loadu_pd(sr.add(7 * s + q));
+            let x7i = _mm256_loadu_pd(si.add(7 * s + q));
+            // FFT4 over evens (x0 x2 x4 x6) → e0..e3
+            let t0r = _mm256_add_pd(x0r, x4r);
+            let t0i = _mm256_add_pd(x0i, x4i);
+            let t1r = _mm256_add_pd(x2r, x6r);
+            let t1i = _mm256_add_pd(x2i, x6i);
+            let u0r = _mm256_sub_pd(x0r, x4r);
+            let u0i = _mm256_sub_pd(x0i, x4i);
+            let u1r = _mm256_sub_pd(x2r, x6r);
+            let u1i = _mm256_sub_pd(x2i, x6i);
+            let su1i = _mm256_mul_pd(sgn, u1i);
+            let su1r = _mm256_mul_pd(sgn, u1r);
+            let e0r = _mm256_add_pd(t0r, t1r);
+            let e0i = _mm256_add_pd(t0i, t1i);
+            let e1r = _mm256_add_pd(u0r, su1i);
+            let e1i = _mm256_sub_pd(u0i, su1r);
+            let e2r = _mm256_sub_pd(t0r, t1r);
+            let e2i = _mm256_sub_pd(t0i, t1i);
+            let e3r = _mm256_sub_pd(u0r, su1i);
+            let e3i = _mm256_add_pd(u0i, su1r);
+            // FFT4 over odds (x1 x3 x5 x7) → o0..o3
+            let t0r = _mm256_add_pd(x1r, x5r);
+            let t0i = _mm256_add_pd(x1i, x5i);
+            let t1r = _mm256_add_pd(x3r, x7r);
+            let t1i = _mm256_add_pd(x3i, x7i);
+            let u0r = _mm256_sub_pd(x1r, x5r);
+            let u0i = _mm256_sub_pd(x1i, x5i);
+            let u1r = _mm256_sub_pd(x3r, x7r);
+            let u1i = _mm256_sub_pd(x3i, x7i);
+            let su1i = _mm256_mul_pd(sgn, u1i);
+            let su1r = _mm256_mul_pd(sgn, u1r);
+            let o0r = _mm256_add_pd(t0r, t1r);
+            let o0i = _mm256_add_pd(t0i, t1i);
+            let o1r = _mm256_add_pd(u0r, su1i);
+            let o1i = _mm256_sub_pd(u0i, su1r);
+            let o2r = _mm256_sub_pd(t0r, t1r);
+            let o2i = _mm256_sub_pd(t0i, t1i);
+            let o3r = _mm256_sub_pd(u0r, su1i);
+            let o3i = _mm256_add_pd(u0i, su1r);
+            // twiddled odd terms: t1 = w^1·o1, t2 = w^2·o2, t3 = w^3·o3
+            let t1r = _mm256_mul_pd(c8v, _mm256_add_pd(o1r, _mm256_mul_pd(sgn, o1i)));
+            let t1i = _mm256_mul_pd(c8v, _mm256_sub_pd(o1i, _mm256_mul_pd(sgn, o1r)));
+            let t2r = _mm256_mul_pd(sgn, o2i);
+            let t2i = _mm256_xor_pd(_mm256_mul_pd(sgn, o2r), neg0);
+            let t3r = _mm256_xor_pd(
+                _mm256_mul_pd(c8v, _mm256_sub_pd(o3r, _mm256_mul_pd(sgn, o3i))),
+                neg0,
+            );
+            let t3i = _mm256_xor_pd(
+                _mm256_mul_pd(c8v, _mm256_add_pd(o3i, _mm256_mul_pd(sgn, o3r))),
+                neg0,
+            );
+            _mm256_storeu_pd(dr.add(q), _mm256_add_pd(e0r, o0r));
+            _mm256_storeu_pd(di.add(q), _mm256_add_pd(e0i, o0i));
+            _mm256_storeu_pd(dr.add(s + q), _mm256_add_pd(e1r, t1r));
+            _mm256_storeu_pd(di.add(s + q), _mm256_add_pd(e1i, t1i));
+            _mm256_storeu_pd(dr.add(2 * s + q), _mm256_add_pd(e2r, t2r));
+            _mm256_storeu_pd(di.add(2 * s + q), _mm256_add_pd(e2i, t2i));
+            _mm256_storeu_pd(dr.add(3 * s + q), _mm256_add_pd(e3r, t3r));
+            _mm256_storeu_pd(di.add(3 * s + q), _mm256_add_pd(e3i, t3i));
+            _mm256_storeu_pd(dr.add(4 * s + q), _mm256_sub_pd(e0r, o0r));
+            _mm256_storeu_pd(di.add(4 * s + q), _mm256_sub_pd(e0i, o0i));
+            _mm256_storeu_pd(dr.add(5 * s + q), _mm256_sub_pd(e1r, t1r));
+            _mm256_storeu_pd(di.add(5 * s + q), _mm256_sub_pd(e1i, t1i));
+            _mm256_storeu_pd(dr.add(6 * s + q), _mm256_sub_pd(e2r, t2r));
+            _mm256_storeu_pd(di.add(6 * s + q), _mm256_sub_pd(e2i, t2i));
+            _mm256_storeu_pd(dr.add(7 * s + q), _mm256_sub_pd(e3r, t3r));
+            _mm256_storeu_pd(di.add(7 * s + q), _mm256_sub_pd(e3i, t3i));
+            q += 4;
+        }
+    }
+
+    pub(crate) fn tail4_oop(
+        sign: f64,
+        src_re: &[f64],
+        src_im: &[f64],
+        dst_re: &mut [f64],
+        dst_im: &mut [f64],
+    ) -> usize {
+        if !avx2_enabled() {
+            return 0;
+        }
+        let s = src_re.len() / 4;
+        let qend = s & !3;
+        if qend == 0 {
+            return 0;
+        }
         unsafe {
-            match stride {
-                1 => stage2_stride1(sign, tw_re, tw_im, src_re, src_im, dst_re, dst_im, p_lo, p_hi, m),
-                _ => stage2_stride2(sign, tw_re, tw_im, src_re, src_im, dst_re, dst_im, p_lo, p_hi, m),
-            }
-        }
-        true
-    }
-
-    /// Radix-2 stage at `stride == 1`: butterfly `p` reads `src[p]`,
-    /// `src[p+m]` and writes `dst[2(p−p_lo)]`, `dst[2(p−p_lo)+1]`.
-    /// Four butterflies per iteration; the 4-lane `d0`/`d1` results are
-    /// element-interleaved into 8 contiguous outputs.
-    #[allow(clippy::too_many_arguments)]
-    #[target_feature(enable = "avx2")]
-    unsafe fn stage2_stride1(
-        sign: f64,
-        tw_re: &[f64],
-        tw_im: &[f64],
-        src_re: &[f64],
-        src_im: &[f64],
-        dst_re: &mut [f64],
-        dst_im: &mut [f64],
-        p_lo: usize,
-        p_hi: usize,
-        m: usize,
-    ) {
-        use std::arch::x86_64::*;
-        let sgn = _mm256_set1_pd(sign);
-        let mut p = p_lo;
-        while p + 4 <= p_hi {
-            let ar = _mm256_loadu_pd(src_re.as_ptr().add(p));
-            let ai = _mm256_loadu_pd(src_im.as_ptr().add(p));
-            let br = _mm256_loadu_pd(src_re.as_ptr().add(p + m));
-            let bi = _mm256_loadu_pd(src_im.as_ptr().add(p + m));
-            let wr = _mm256_loadu_pd(tw_re.as_ptr().add(p));
-            let wi = _mm256_mul_pd(sgn, _mm256_loadu_pd(tw_im.as_ptr().add(p)));
-            let d0r = _mm256_add_pd(ar, br);
-            let d0i = _mm256_add_pd(ai, bi);
-            let xr = _mm256_sub_pd(ar, br);
-            let xi = _mm256_sub_pd(ai, bi);
-            // same op order as the scalar loop: mul, mul, sub/add (no FMA)
-            let d1r = _mm256_sub_pd(_mm256_mul_pd(xr, wr), _mm256_mul_pd(xi, wi));
-            let d1i = _mm256_add_pd(_mm256_mul_pd(xr, wi), _mm256_mul_pd(xi, wr));
-            // interleave lanes k of d0/d1 into out[2k], out[2k+1]:
-            // unpacklo = [d0_0 d1_0 d0_2 d1_2], unpackhi = [d0_1 d1_1 d0_3 d1_3]
-            let o = 2 * (p - p_lo);
-            let lo = _mm256_unpacklo_pd(d0r, d1r);
-            let hi = _mm256_unpackhi_pd(d0r, d1r);
-            _mm256_storeu_pd(dst_re.as_mut_ptr().add(o), _mm256_permute2f128_pd(lo, hi, 0x20));
-            _mm256_storeu_pd(dst_re.as_mut_ptr().add(o + 4), _mm256_permute2f128_pd(lo, hi, 0x31));
-            let lo = _mm256_unpacklo_pd(d0i, d1i);
-            let hi = _mm256_unpackhi_pd(d0i, d1i);
-            _mm256_storeu_pd(dst_im.as_mut_ptr().add(o), _mm256_permute2f128_pd(lo, hi, 0x20));
-            _mm256_storeu_pd(dst_im.as_mut_ptr().add(o + 4), _mm256_permute2f128_pd(lo, hi, 0x31));
-            p += 4;
-        }
-        // remainder butterflies: the scalar expressions, verbatim
-        while p < p_hi {
-            let wr = tw_re[p];
-            let wi = sign * tw_im[p];
-            let (ar, ai) = (src_re[p], src_im[p]);
-            let (br, bi) = (src_re[p + m], src_im[p + m]);
-            let o = 2 * (p - p_lo);
-            dst_re[o] = ar + br;
-            dst_im[o] = ai + bi;
-            let xr = ar - br;
-            let xi = ai - bi;
-            dst_re[o + 1] = xr * wr - xi * wi;
-            dst_im[o + 1] = xr * wi + xi * wr;
-            p += 1;
-        }
-    }
-
-    /// Radix-2 stage at `stride == 2`: butterfly `p` reads lanes
-    /// `src[2p..2p+2]`, `src[2(p+m)..2(p+m)+2]` and writes
-    /// `dst[4(p−p_lo)..+2]` / `dst[4(p−p_lo)+2..+4]`. Two butterflies
-    /// per iteration; outputs interleave at 128-bit granularity, so one
-    /// `permute2f128` pair reshuffles them, and each butterfly's
-    /// twiddle is duplicated across its two lanes.
-    #[allow(clippy::too_many_arguments)]
-    #[target_feature(enable = "avx2")]
-    unsafe fn stage2_stride2(
-        sign: f64,
-        tw_re: &[f64],
-        tw_im: &[f64],
-        src_re: &[f64],
-        src_im: &[f64],
-        dst_re: &mut [f64],
-        dst_im: &mut [f64],
-        p_lo: usize,
-        p_hi: usize,
-        m: usize,
-    ) {
-        use std::arch::x86_64::*;
-        let sgn = _mm256_set1_pd(sign);
-        // [w_p, w_p, w_{p+1}, w_{p+1}] from a 128-bit pair load
-        let dup = |tw: &[f64], p: usize| {
-            let v = _mm256_castpd128_pd256(_mm_loadu_pd(tw.as_ptr().add(p)));
-            _mm256_permute4x64_pd(v, 0x50)
+            tail4_core(
+                sign,
+                src_re.as_ptr(),
+                src_im.as_ptr(),
+                dst_re.as_mut_ptr(),
+                dst_im.as_mut_ptr(),
+                s,
+                qend,
+            )
         };
-        let mut p = p_lo;
-        while p + 2 <= p_hi {
-            let ar = _mm256_loadu_pd(src_re.as_ptr().add(2 * p));
-            let ai = _mm256_loadu_pd(src_im.as_ptr().add(2 * p));
-            let br = _mm256_loadu_pd(src_re.as_ptr().add(2 * (p + m)));
-            let bi = _mm256_loadu_pd(src_im.as_ptr().add(2 * (p + m)));
-            let wr = dup(tw_re, p);
-            let wi = _mm256_mul_pd(sgn, dup(tw_im, p));
-            let d0r = _mm256_add_pd(ar, br);
-            let d0i = _mm256_add_pd(ai, bi);
-            let xr = _mm256_sub_pd(ar, br);
-            let xi = _mm256_sub_pd(ai, bi);
-            let d1r = _mm256_sub_pd(_mm256_mul_pd(xr, wr), _mm256_mul_pd(xi, wi));
-            let d1i = _mm256_add_pd(_mm256_mul_pd(xr, wi), _mm256_mul_pd(xi, wr));
-            // out[0..4] = [d0 lanes 0,1 | d1 lanes 0,1], out[4..8] = lanes 2,3
-            let o = 4 * (p - p_lo);
-            _mm256_storeu_pd(dst_re.as_mut_ptr().add(o), _mm256_permute2f128_pd(d0r, d1r, 0x20));
-            _mm256_storeu_pd(dst_re.as_mut_ptr().add(o + 4), _mm256_permute2f128_pd(d0r, d1r, 0x31));
-            _mm256_storeu_pd(dst_im.as_mut_ptr().add(o), _mm256_permute2f128_pd(d0i, d1i, 0x20));
-            _mm256_storeu_pd(dst_im.as_mut_ptr().add(o + 4), _mm256_permute2f128_pd(d0i, d1i, 0x31));
-            p += 2;
+        qend
+    }
+
+    pub(crate) fn tail4_inplace(sign: f64, re: &mut [f64], im: &mut [f64]) -> usize {
+        if !avx2_enabled() {
+            return 0;
         }
-        while p < p_hi {
-            let wr = tw_re[p];
-            let wi = sign * tw_im[p];
-            for q in 0..2 {
-                let (ar, ai) = (src_re[2 * p + q], src_im[2 * p + q]);
-                let (br, bi) = (src_re[2 * (p + m) + q], src_im[2 * (p + m) + q]);
-                let o = 4 * (p - p_lo) + q;
-                dst_re[o] = ar + br;
-                dst_im[o] = ai + bi;
-                let xr = ar - br;
-                let xi = ai - bi;
-                dst_re[o + 2] = xr * wr - xi * wi;
-                dst_im[o + 2] = xr * wi + xi * wr;
-            }
-            p += 1;
+        let s = re.len() / 4;
+        let qend = s & !3;
+        if qend == 0 {
+            return 0;
         }
+        let pr = re.as_mut_ptr();
+        let pi = im.as_mut_ptr();
+        unsafe { tail4_core(sign, pr as *const f64, pi as *const f64, pr, pi, s, qend) };
+        qend
+    }
+
+    pub(crate) fn tail8_oop(
+        sign: f64,
+        src_re: &[f64],
+        src_im: &[f64],
+        dst_re: &mut [f64],
+        dst_im: &mut [f64],
+    ) -> usize {
+        if !avx2_enabled() {
+            return 0;
+        }
+        let s = src_re.len() / 8;
+        let qend = s & !3;
+        if qend == 0 {
+            return 0;
+        }
+        unsafe {
+            tail8_core(
+                sign,
+                src_re.as_ptr(),
+                src_im.as_ptr(),
+                dst_re.as_mut_ptr(),
+                dst_im.as_mut_ptr(),
+                s,
+                qend,
+            )
+        };
+        qend
+    }
+
+    pub(crate) fn tail8_inplace(sign: f64, re: &mut [f64], im: &mut [f64]) -> usize {
+        if !avx2_enabled() {
+            return 0;
+        }
+        let s = re.len() / 8;
+        let qend = s & !3;
+        if qend == 0 {
+            return 0;
+        }
+        let pr = re.as_mut_ptr();
+        let pi = im.as_mut_ptr();
+        unsafe { tail8_core(sign, pr as *const f64, pi as *const f64, pr, pi, s, qend) };
+        qend
     }
 }
 
+/// Portable stub: every probe reports `false`, every hook declines, so
+/// callers always take the scalar loops. Compiled when the `simd`
+/// feature is off or the target is not x86_64.
 #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
 mod imp {
-    pub fn avx2_enabled() -> bool {
+    pub(crate) fn avx2_enabled() -> bool {
+        false
+    }
+
+    pub(crate) fn fma_enabled() -> bool {
         false
     }
 
     #[allow(clippy::too_many_arguments)]
-    pub fn try_stage2(
+    pub(crate) fn try_stage2(
         _sign: f64,
         _tw_re: &[f64],
         _tw_im: &[f64],
@@ -255,24 +1637,101 @@ mod imp {
     ) -> bool {
         false
     }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn try_stage3(
+        _sign: f64,
+        _tw_re: &[f64],
+        _tw_im: &[f64],
+        _src_re: &[f64],
+        _src_im: &[f64],
+        _dst_re: &mut [f64],
+        _dst_im: &mut [f64],
+        _p_lo: usize,
+        _p_hi: usize,
+        _m: usize,
+        _stride: usize,
+    ) -> bool {
+        false
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn try_stage5(
+        _sign: f64,
+        _tw_re: &[f64],
+        _tw_im: &[f64],
+        _src_re: &[f64],
+        _src_im: &[f64],
+        _dst_re: &mut [f64],
+        _dst_im: &mut [f64],
+        _p_lo: usize,
+        _p_hi: usize,
+        _m: usize,
+        _stride: usize,
+    ) -> bool {
+        false
+    }
+
+    pub(crate) fn tail4_oop(
+        _sign: f64,
+        _src_re: &[f64],
+        _src_im: &[f64],
+        _dst_re: &mut [f64],
+        _dst_im: &mut [f64],
+    ) -> usize {
+        0
+    }
+
+    pub(crate) fn tail4_inplace(_sign: f64, _re: &mut [f64], _im: &mut [f64]) -> usize {
+        0
+    }
+
+    pub(crate) fn tail8_oop(
+        _sign: f64,
+        _src_re: &[f64],
+        _src_im: &[f64],
+        _dst_re: &mut [f64],
+        _dst_im: &mut [f64],
+    ) -> usize {
+        0
+    }
+
+    pub(crate) fn tail8_inplace(_sign: f64, _re: &mut [f64], _im: &mut [f64]) -> usize {
+        0
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// The feature lattice must be monotone: FMA implies AVX2, and both
+    /// are constant across repeated probes (OnceLock-cached).
     #[test]
     fn detection_is_consistent() {
-        // cached probe must be stable across calls; without the feature
-        // (or off x86_64) it is identically false
-        assert_eq!(avx2_enabled(), avx2_enabled());
+        let a1 = avx2_enabled();
+        let a2 = avx2_enabled();
+        assert_eq!(a1, a2, "avx2 probe must be stable");
+        let f1 = fma_enabled();
+        let f2 = fma_enabled();
+        assert_eq!(f1, f2, "fma probe must be stable");
+        assert!(
+            !f1 || a1,
+            "fma generation requires the avx2 kernels to exist"
+        );
         #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
-        assert!(!avx2_enabled());
+        {
+            assert!(!a1 && !f1, "stub must report no SIMD support");
+        }
+        #[cfg(not(feature = "fma"))]
+        {
+            assert!(!f1, "fma generation requires --features fma");
+        }
     }
 
-    // Scalar-vs-SIMD bit-exactness is asserted at the stage level from
-    // `radix::tests` (stage_range_split_is_bit_exact runs both paths)
-    // and end-to-end from `rust/tests/radix_integration.rs`, where the
-    // Scalar-variant plan (never SIMD) is compared against the
-    // Vectorized plan on every random 5-smooth size.
+    // Numeric coverage for every kernel shape (stride 1/2/wide for
+    // radix-2/3/5, the AVX2 tails, and the FMA generation) lives in
+    // rust/src/dft/radix.rs unit tests and rust/tests/radix_integration.rs,
+    // where the kernels are exercised through real plans against the
+    // scalar KernelVariant.
 }

@@ -710,6 +710,39 @@ mod tests {
     }
 
     #[test]
+    fn fma_generation_splits_wisdom_staleness() {
+        // the FMA kernel generation is its own staleness domain: a
+        // native record measured under the *other* generation (FMA off
+        // vs on) must re-measure, while a record from the installed
+        // generation stays warm — including across a JSON persist/load
+        // roundtrip, the restart path that motivates the tag
+        let cur = crate::dft::radix::kernel_generation();
+        let other = if crate::dft::radix::fma_active() {
+            "stockham-v2-codelet+avx2"
+        } else {
+            "stockham-v2-codelet+avx2+fma"
+        };
+        assert_ne!(cur, other);
+        let mut store = WisdomStore::new();
+        let mut cross = demo_record();
+        cross.kernel_gen = other.to_string();
+        store.insert(cross);
+        assert!(
+            store.get("native", 16, 2).is_none(),
+            "record from the other FMA generation must force a re-measure"
+        );
+        let warm = demo_record(); // tagged with the installed generation
+        let j = Json::parse(&warm.to_json().to_string()).unwrap();
+        let back = WisdomRecord::from_json(&j).unwrap();
+        assert_eq!(back.kernel_gen, cur);
+        store.insert(back);
+        assert!(
+            store.get("native", 16, 2).is_some(),
+            "same-generation record must stay warm after reload"
+        );
+    }
+
+    #[test]
     fn nan_makespan_survives_as_nan() {
         let mut rec = demo_record();
         rec.plan.makespan = f64::NAN;

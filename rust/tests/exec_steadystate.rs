@@ -316,4 +316,41 @@ fn warm_fft_loop_does_not_allocate_scratch() {
     for (f, b) in packed_outs.iter().zip(&barrier_out) {
         assert_eq!(f.max_abs_diff(b), 0.0, "warm real pipeline must stay bit-exact");
     }
+
+    // ----- plan-cache footprint: shared per-stage twiddle tables -----
+    // Stage twiddle tables depend only on (radix, n_cur), so plans for
+    // different lengths must hold the *same* Arc allocation for a
+    // common stage geometry — 384 = 2^7·3 and 768 = 2^8·3 (both used
+    // above) share every geometry after 768's extra leading radix-2.
+    use hclfft::dft::plan::PlanCache;
+    let p384 = PlanCache::global().radix(384);
+    let p768 = PlanCache::global().radix(768);
+    let mut shared = 0usize;
+    for sa in &p384.stages {
+        for sb in &p768.stages {
+            if sa.radix == sb.radix && sa.n_cur == sb.n_cur {
+                assert!(
+                    std::sync::Arc::ptr_eq(sa.twiddles(), sb.twiddles()),
+                    "stage ({}, {}) duplicated across plans",
+                    sa.radix,
+                    sa.n_cur
+                );
+                shared += 1;
+            }
+        }
+    }
+    assert!(shared >= 4, "384/768 share only {shared} stage geometries");
+
+    // and the counting allocator proves it: re-planning a length whose
+    // stage tables are all cached allocates only plan skeleton (factor
+    // + stage vecs), never the ~12 KiB of twiddle planes an un-deduped
+    // 768 build would copy
+    let bytes_before = ALLOCATED_BYTES.load(Ordering::Relaxed);
+    let rebuilt = hclfft::dft::radix::RadixPlan::new(768);
+    let plan_bytes = ALLOCATED_BYTES.load(Ordering::Relaxed) - bytes_before;
+    assert_eq!(rebuilt.n, 768);
+    assert!(
+        plan_bytes < 4 * 1024,
+        "re-planning 768 allocated {plan_bytes} B — twiddle tables are not shared"
+    );
 }
