@@ -21,6 +21,12 @@
 //! * `bluestein_…` — chirp-z forced at the same length (the pre-PR-2
 //!   path for these sizes).
 //!
+//! Plus, at the paper sizes only, the memory-bound column-phase A/B:
+//! `colphase_scalar_…` (forced-scalar gather/scatter via
+//! `set_col_tile_force_scalar`) vs `colphase_simd_…` (the in-register
+//! 4×4/8×8 tile transpose), full n×n column pass on one thread, with
+//! its own `colphase simd-vs-scalar geomean` PASS/FAIL line.
+//!
 //! Every mean carries a t-test confidence interval (≥ 5 reps even under
 //! `HCLFFT_BENCH_FAST`), and the scalar-vs-vectorized speedups are
 //! reported with the CIs propagated into the ratio — plus a geometric
@@ -161,10 +167,35 @@ fn main() {
         });
     }
 
+    // the memory-bound column phase at the paper sizes: forced-scalar
+    // gather/scatter vs the in-register SIMD tile transpose, full n×n
+    // column pass on one thread (the A/B `perf-gate` locks as
+    // `colphase_scalar_vs_simd_*`). On builds/hosts without the AVX2
+    // transpose the two arms run identical code and the ratio sits at
+    // ~1.0 — the gate's 0.9 baseline still passes.
+    let paper = [384usize, 640, 1152];
+    {
+        use hclfft::dft::exec::ExecCtx;
+        use hclfft::dft::pipeline::{fft_cols_fused, set_col_tile_force_scalar};
+        let ctx = ExecCtx::new(1);
+        for &n in &paper {
+            let orig = SignalMatrix::random(n, n, n as u64 + 1);
+            let mut mc = orig.clone();
+            set_col_tile_force_scalar(true);
+            suite.bench_flops(&format!("colphase_scalar_{n}"), fft_flops(n, n), || {
+                fft_cols_fused(&ctx, &mut mc, Direction::Forward, 1);
+            });
+            let mut ms = orig.clone();
+            set_col_tile_force_scalar(false);
+            suite.bench_flops(&format!("colphase_simd_{n}"), fft_flops(n, n), || {
+                fft_cols_fused(&ctx, &mut ms, Direction::Forward, 1);
+            });
+        }
+    }
+
     // scalar vs vectorized at the paper sizes, CIs propagated into the
     // ratio; the geomean line is the CI smoke's grep target and the
     // perf gate's `scalar_vs_vector_geomean` metric mirrors it
-    let paper = [384usize, 640, 1152];
     println!("\n== scalar vs vectorized row kernel ==");
     let mut log_sum = 0.0;
     let mut rel2_sum = 0.0;
@@ -237,6 +268,35 @@ fn main() {
             speedup * ratio_rel_hw(b, v)
         );
     }
+    // the column-phase A/B: pure data movement, so the speedup is the
+    // memory-access win of the tile transpose alone. The geomean line
+    // is the SIMD CI legs' grep target; `colphase_geomean` in the perf
+    // gate mirrors it against the committed baseline.
+    println!("\n== column phase: scalar gather vs SIMD tile transpose ==");
+    let mut c_log_sum = 0.0;
+    let mut c_rel2_sum = 0.0;
+    for &n in &paper {
+        let s = find(&suite.results, &format!("colphase_scalar_{n}"));
+        let v = find(&suite.results, &format!("colphase_simd_{n}"));
+        let speedup = s.mean_s / v.mean_s;
+        let rel = ratio_rel_hw(s, v);
+        println!(
+            "{:>20} vs {:<20} speedup {:.2}x ± {:.2}",
+            s.name,
+            v.name,
+            speedup,
+            speedup * rel
+        );
+        c_log_sum += speedup.ln();
+        c_rel2_sum += rel * rel;
+    }
+    let c_geo = (c_log_sum / paper.len() as f64).exp();
+    let c_geo_hw = c_geo * c_rel2_sum.sqrt() / paper.len() as f64;
+    let c_verdict = if c_geo >= 1.0 { "PASS" } else { "FAIL" };
+    println!(
+        "colphase simd-vs-scalar geomean {c_geo:.2}x ± {c_geo_hw:.2} {c_verdict} (target >= 1.00x)"
+    );
+
     suite.write_json(std::path::Path::new("results/bench_fft_sizes.json")).ok();
     println!("{}", suite.report());
 }

@@ -142,11 +142,13 @@ SUBCOMMANDS:
   serve-bench
             Closed-loop load generator against the in-process 2D-DFT
             service (batching + wisdom + FPM scheduling); runs a cold
-            and a warm pass, prints latency/throughput tables + model
-            calibration, writes the BENCH_serve.json trajectory and
-            persists planning wisdom + model deltas
+            pass and --reps warm passes, prints latency/throughput
+            tables + model calibration (p50/p95 mean ± 95% Student-t CI
+            across warm repetitions when --reps >= 2), writes the
+            BENCH_serve.json trajectory and persists planning wisdom +
+            model deltas
             --n <size[,size...]> [--requests <count-per-pass>]
-            [--clients <threads>]
+            [--clients <threads>] [--reps <warm-passes>]
             [--engine native|sim-mkl|sim-fftw3|sim-fftw2] [--p <groups>]
             [--t <threads>] [--workers <count>] [--batch <max>]
             [--wisdom <file.json>] [--no-wisdom] [--pad] [--starve <s>]
@@ -178,7 +180,8 @@ SUBCOMMANDS:
             [--verify]   (check spectra against the local oracle)
             [--shutdown]   (ask the server to drain and exit)
   wisdom    Inspect or prewarm the planning wisdom store (records are
-            kind-keyed; JSON v3, v2 files load as c2c)
+            kind-keyed; JSON v4 adds measured row-tile widths, v3 files
+            load with no tiles, v2 files load as c2c)
             [--file <file.json>] [--prewarm <size[,size...]>]
             [--engine native|sim-mkl|...] [--p <groups>] [--t <threads>]
             [--pad] [--budget <s>] [--kind c2c|real]

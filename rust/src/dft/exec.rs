@@ -23,9 +23,12 @@
 //!   within each row across stage sub-ranges instead of clamping the
 //!   thread budget to the row count. Within a worker's chunk, smooth
 //!   rows advance in stage-major multi-row tiles
-//!   ([`radix::fft_rows_radix_tiled`]) whose width is chosen by the
-//!   model surface in [`row_tile_curve`] — twiddle streams amortize
-//!   across the tile while the working set stays cache-resident.
+//!   ([`radix::fft_rows_radix_tiled`]) whose width comes from
+//!   [`effective_row_tile`]: a measured one-shot micro-calibration
+//!   ([`calibrate_row_tile`], persisted via wisdom, invalidated by
+//!   memory-class model drift) when one exists, else the model surface
+//!   in [`row_tile_curve`] — twiddle streams amortize across the tile
+//!   while the working set stays cache-resident.
 //!
 //! Determinism: all split strategies preserve per-element arithmetic
 //! exactly, so results are bit-identical for every `parallelism` value —
@@ -429,26 +432,50 @@ pub fn row_tile_curve(n: usize) -> crate::model::surface::Curve {
     crate::model::surface::Curve::new(ROW_TILE_CANDIDATES.to_vec(), speeds)
 }
 
+/// Resolve a raw `HCLFFT_ROW_TILE` value: parse it (clamped to 1..=8),
+/// or warn to stderr and fall back to the model/measured choice — the
+/// same parse-fallback contract as `HCLFFT_POOL_THREADS` and
+/// `HCLFFT_PIPELINE`, with distinct zero vs non-integer messages.
+/// Factored out of [`preferred_row_tile`]'s OnceLock init so the
+/// fallback path is unit-testable without racing on the cached
+/// override or the ambient environment.
+fn row_tile_from_env_value(v: &str) -> Option<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(w) if w >= 1 => Some(w.min(8)),
+        Ok(_) => {
+            eprintln!(
+                "warning: HCLFFT_ROW_TILE=0 is not a valid tile width; \
+                 using the model-preferred tile width"
+            );
+            None
+        }
+        Err(_) => {
+            eprintln!(
+                "warning: HCLFFT_ROW_TILE=`{v}` is not a positive integer; \
+                 using the model-preferred tile width"
+            );
+            None
+        }
+    }
+}
+
+/// The cached `HCLFFT_ROW_TILE` experiment override, if any.
+fn row_tile_env_override() -> Option<usize> {
+    static OVERRIDE: OnceLock<Option<usize>> = OnceLock::new();
+    *OVERRIDE.get_or_init(|| match std::env::var("HCLFFT_ROW_TILE") {
+        Ok(v) => row_tile_from_env_value(&v),
+        Err(_) => None,
+    })
+}
+
 /// The tile width the model prefers at row length `n` (argmax of
 /// [`row_tile_curve`]; `HCLFFT_ROW_TILE` overrides for experiments,
-/// clamped to 1..=8 — an unparsable value warns and falls back to the
-/// model, matching the `HCLFFT_POOL_THREADS` policy).
+/// clamped to 1..=8 — an unparsable or zero value warns and falls back
+/// to the model, matching the `HCLFFT_POOL_THREADS` policy). This is
+/// the purely *modeled* answer; execution paths consult
+/// [`effective_row_tile`], which lets a measured calibration win.
 pub fn preferred_row_tile(n: usize) -> usize {
-    static OVERRIDE: OnceLock<Option<usize>> = OnceLock::new();
-    let forced = *OVERRIDE.get_or_init(|| match std::env::var("HCLFFT_ROW_TILE") {
-        Ok(v) => match v.trim().parse::<usize>() {
-            Ok(w) if w >= 1 => Some(w.min(8)),
-            _ => {
-                eprintln!(
-                    "warning: HCLFFT_ROW_TILE=`{v}` is not a positive integer; \
-                     using the model-preferred tile width"
-                );
-                None
-            }
-        },
-        Err(_) => None,
-    });
-    if let Some(w) = forced {
+    if let Some(w) = row_tile_env_override() {
         return w;
     }
     let curve = row_tile_curve(n);
@@ -461,9 +488,132 @@ pub fn preferred_row_tile(n: usize) -> usize {
     best.0
 }
 
+// ---------------------------------------------------------------------------
+// Measured tile-width calibration
+// ---------------------------------------------------------------------------
+
+/// Tile widths the measured calibration times: the model's candidates
+/// plus 8, so a machine whose cache comfortably holds wider tiles can
+/// beat the conservative modeled budget.
+pub const ROW_TILE_MEASURE_CANDIDATES: [usize; 4] = [1, 2, 4, 8];
+
+/// The process-wide measured tile-width cache, keyed by row length.
+/// Widths never change output bits (the tiled driver is bit-identical
+/// to per-row in every generation), so this cache affects speed only.
+/// Seeded from wisdom at service build, filled by
+/// [`calibrate_row_tile`] on cold plans, cleared per length when the
+/// online model reports memory-class drift. Kernel-generation staleness
+/// is handled at the wisdom layer: within one process the generation
+/// cannot change.
+fn measured_tiles() -> &'static Mutex<std::collections::BTreeMap<usize, usize>> {
+    static TILES: OnceLock<Mutex<std::collections::BTreeMap<usize, usize>>> = OnceLock::new();
+    TILES.get_or_init(|| Mutex::new(std::collections::BTreeMap::new()))
+}
+
+/// The measured tile width for row length `n`, if one is cached.
+pub fn measured_row_tile(n: usize) -> Option<usize> {
+    measured_tiles().lock().unwrap().get(&n).copied()
+}
+
+/// Record a measured tile width for row length `n` (wisdom seeding /
+/// calibration). Zero is ignored; widths clamp to the 1..=8 range the
+/// execution paths accept.
+pub fn set_measured_row_tile(n: usize, width: usize) {
+    if width >= 1 {
+        measured_tiles().lock().unwrap().insert(n, width.min(8));
+    }
+}
+
+/// Drop the measured tile width for row length `n` (memory-class drift
+/// invalidation — the next cold plan re-calibrates).
+pub fn clear_measured_row_tile(n: usize) {
+    measured_tiles().lock().unwrap().remove(&n);
+}
+
+/// One-shot micro-calibration: time the stage-major tiled driver at
+/// each [`ROW_TILE_MEASURE_CANDIDATES`] width over a small synthetic
+/// batch, cache and return the fastest. Returns the cached winner
+/// without re-measuring when one exists; Bluestein lengths return 1
+/// (their kernel is per-row, so width cannot matter). Best-of-3 trials
+/// per arm keeps scheduler noise out of the winner; the whole sweep is
+/// a few hundred microseconds at paper sizes — cold-plan-path cost,
+/// amortized by the wisdom store across processes.
+pub fn calibrate_row_tile(n: usize) -> usize {
+    if n == 0 {
+        return 1;
+    }
+    if let Some(w) = measured_row_tile(n) {
+        return w;
+    }
+    let row_plan = PlanCache::global().row_plan(n);
+    let RowPlan::Radix(plan) = &row_plan else {
+        set_measured_row_tile(n, 1);
+        return 1;
+    };
+    let rows = 8usize; // one full pass per candidate width divides 8
+    let iters = (32_768 / n).clamp(1, 32);
+    let mut re = vec![0.0f64; rows * n];
+    let mut im = vec![0.0f64; rows * n];
+    for (i, v) in re.iter_mut().enumerate() {
+        *v = (i % 17) as f64 * 0.125 - 1.0;
+    }
+    for (i, v) in im.iter_mut().enumerate() {
+        *v = (i % 13) as f64 * 0.0625 - 0.5;
+    }
+    let mut best = (preferred_row_tile(n), f64::INFINITY);
+    with_scratch(|scratch| {
+        for &w in &ROW_TILE_MEASURE_CANDIDATES {
+            let (sr, si) = scratch.pair(w * n);
+            let mut arm = f64::INFINITY;
+            for _ in 0..3 {
+                let t0 = std::time::Instant::now();
+                for _ in 0..iters {
+                    let mut r = 0;
+                    while r < rows {
+                        let t = w.min(rows - r);
+                        let span = r * n..(r + t) * n;
+                        radix::fft_rows_radix_tiled(
+                            &mut re[span.clone()],
+                            &mut im[span],
+                            t,
+                            sr,
+                            si,
+                            plan,
+                            Direction::Forward,
+                        );
+                        r += t;
+                    }
+                }
+                arm = arm.min(t0.elapsed().as_secs_f64());
+            }
+            if arm < best.1 {
+                best = (w, arm);
+            }
+        }
+    });
+    set_measured_row_tile(n, best.0);
+    best.0
+}
+
+/// The tile width the execution paths actually use at row length `n`:
+/// the `HCLFFT_ROW_TILE` experiment override when set, else the
+/// measured calibration winner when one is cached, else the modeled
+/// [`preferred_row_tile`] choice. Never changes output bits — only
+/// which loop order computes them.
+pub fn effective_row_tile(n: usize) -> usize {
+    if let Some(w) = row_tile_env_override() {
+        return w;
+    }
+    if let Some(w) = measured_row_tile(n) {
+        return w;
+    }
+    preferred_row_tile(n)
+}
+
 /// One worker's serial chunk: `rows` rows with the per-thread arena.
 /// Smooth rows advance through the stage-major multi-row driver in
-/// tiles of the model-preferred width (identical bits to per-row).
+/// tiles of the effective width — measured when a calibration exists,
+/// modeled otherwise (identical bits to per-row either way).
 fn fft_rows_chunk(
     plan: &RowPlan,
     re: &mut [f64],
@@ -475,7 +625,7 @@ fn fft_rows_chunk(
 ) {
     match plan {
         RowPlan::Radix(p) => {
-            let tile = preferred_row_tile(n).min(rows.max(1));
+            let tile = effective_row_tile(n).min(rows.max(1));
             let (sr, si) = scratch.pair(tile * n);
             let mut r = 0;
             while r < rows {
@@ -688,6 +838,63 @@ mod tests {
         assert_eq!(c.xs, ROW_TILE_CANDIDATES.to_vec());
         assert!(c.speeds.iter().all(|&s| s > 0.0));
         assert!(c.speed_nearest(4) >= c.speed_nearest(1));
+    }
+
+    #[test]
+    fn row_tile_env_value_warns_and_falls_back() {
+        // regression: a zero or unparsable HCLFFT_ROW_TILE must take the
+        // same warn-to-stderr fallback route as HCLFFT_POOL_THREADS /
+        // HCLFFT_PIPELINE — never a silent ignore. The helper is
+        // exercised directly so this test cannot race the OnceLock
+        // cache or the ambient environment.
+        assert_eq!(row_tile_from_env_value("bogus"), None);
+        assert_eq!(row_tile_from_env_value(""), None);
+        assert_eq!(row_tile_from_env_value("0"), None);
+        assert_eq!(row_tile_from_env_value("-3"), None);
+        // parsable values pass through (trimmed, clamped to 1..=8)
+        assert_eq!(row_tile_from_env_value("4"), Some(4));
+        assert_eq!(row_tile_from_env_value(" 2 "), Some(2));
+        assert_eq!(row_tile_from_env_value("64"), Some(8));
+    }
+
+    #[test]
+    fn measured_tile_cache_overrides_model() {
+        // distinct n so parallel tests sharing the process-global cache
+        // never collide; tile width cannot change bits, so even a
+        // collision would only change speed
+        let n = 9999;
+        assert_eq!(measured_row_tile(n), None);
+        assert_eq!(effective_row_tile(n), preferred_row_tile(n));
+        set_measured_row_tile(n, 2);
+        assert_eq!(effective_row_tile(n), 2);
+        set_measured_row_tile(n, 64); // clamped like the env override
+        assert_eq!(effective_row_tile(n), 8);
+        set_measured_row_tile(n, 0); // ignored
+        assert_eq!(effective_row_tile(n), 8);
+        clear_measured_row_tile(n);
+        assert_eq!(effective_row_tile(n), preferred_row_tile(n));
+    }
+
+    #[test]
+    fn calibration_measures_caches_and_clears() {
+        let n = 30; // 5-smooth, unused by other tests
+        clear_measured_row_tile(n);
+        let w = calibrate_row_tile(n);
+        assert!(
+            ROW_TILE_MEASURE_CANDIDATES.contains(&w),
+            "winner {w} not a candidate"
+        );
+        assert_eq!(measured_row_tile(n), Some(w), "winner must be cached");
+        assert_eq!(effective_row_tile(n), w);
+        // re-calibration is a cache hit, not a re-measure
+        assert_eq!(calibrate_row_tile(n), w);
+        clear_measured_row_tile(n);
+        assert_eq!(measured_row_tile(n), None);
+        // Bluestein lengths pin width 1: the kernel is per-row
+        let nb = 4099; // prime
+        clear_measured_row_tile(nb);
+        assert_eq!(calibrate_row_tile(nb), 1);
+        clear_measured_row_tile(nb);
     }
 
     #[test]

@@ -14,9 +14,12 @@
 //!   grid (384 = 2⁷·3, 640 = 2⁷·5, 1152 = 2⁷·3², …) — runs natively in
 //!   O(n log n); its vectorized schedule fuses the last pow2 stages
 //!   into hardcoded-twiddle FFT2/4/8 tail codelets,
-//! * [`simd`] — opt-in (`--features simd`) AVX2 kernels for the
-//!   narrow-stride radix-2 stages, runtime-detected with a safe scalar
-//!   fallback and bit-identical output,
+//! * [`simd`] — opt-in (`--features simd`) AVX2 kernels, runtime-
+//!   detected with a safe scalar fallback and bit-identical output:
+//!   the narrow-stride radix-2 stages, the 4×4/8×8 in-register tile
+//!   transposes behind the column-phase gather/scatter and the blocked
+//!   transpose, and the cross-row vectorization of the stride-1
+//!   odd-radix stages (4 rows per vector),
 //! * [`fft`] — iterative Stockham radix-2 (same algorithm as the L1
 //!   Pallas kernel, so the two implementations cross-check each other;
 //!   still the engine behind Bluestein's internal convolution FFTs),
@@ -31,8 +34,8 @@
 //!   (parallel variant runs on the shared pool),
 //! * [`pipeline`] — the fused tiled 2D pipeline: a stage-DAG tile
 //!   scheduler on the shared pool plus strided column FFTs (per-tile
-//!   transpose into scratch) that replace the global transpose
-//!   barriers; the barrier path survives as
+//!   SIMD transpose-gather into scratch) that replace the global
+//!   transpose barriers; the barrier path survives as
 //!   [`pipeline::PipelineMode::Barrier`],
 //! * [`real`] — the real-input (r2c / c2r) path: two real rows packed
 //!   into one complex FFT (Hermitian unpack), `N×(N/2+1)` packed

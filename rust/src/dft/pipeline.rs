@@ -14,6 +14,16 @@
 //! through gather → FFT → scatter, and the matrix is touched twice per
 //! 2D transform instead of four times.
 //!
+//! The per-tile gather/scatter itself is the memory-bound half of the
+//! fused transform (the phase-resolved model classifies it as such), so
+//! on AVX2 machines it runs through the in-register 4×4/8×8 transpose
+//! kernels of [`crate::dft::simd`]: strided scalar element moves become
+//! unit-stride vector loads along source rows and vector stores along
+//! tile rows. The scalar loops remain as the runtime-detected fallback
+//! and as the A/B reference arm ([`set_col_tile_force_scalar`]); both
+//! paths are pure data movement, so they are bit-identical in every
+//! kernel generation.
+//!
 //! Three pieces live here:
 //!
 //! * [`PipelineMode`] — fused vs barrier selection, with a process-wide
@@ -36,11 +46,12 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::{Condvar, Mutex};
 
 use crate::dft::exec::{fft_rows_pooled, with_scratch, ExecCtx, Job};
 use crate::dft::fft::Direction;
+use crate::dft::simd;
 use crate::dft::SignalMatrix;
 
 // ---------------------------------------------------------------------------
@@ -154,6 +165,26 @@ pub const DEFAULT_ROW_TILE: usize = 32;
 /// gather → FFT → scatter, and N = 640 still yields 20 column tasks to
 /// keep a wide pool busy.
 pub const DEFAULT_COL_TILE: usize = 32;
+
+/// When set, [`gather_col_tile`]/[`scatter_col_tile`] skip the AVX2
+/// in-register transpose kernels and run their scalar strided loops —
+/// the A/B switch the `colphase_scalar_vs_simd_*` bench arms and the
+/// bit-identity property test flip. Scalar and SIMD tile moves are pure
+/// data movement either way, so this toggle can never change values,
+/// only speed.
+static COL_TILE_FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Force (or stop forcing) the scalar column-tile gather/scatter path.
+pub fn set_col_tile_force_scalar(on: bool) {
+    COL_TILE_FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+/// Does the column-tile gather/scatter currently take the AVX2
+/// in-register transpose path? `false` on non-AVX2 machines, builds
+/// without `--features simd`, or under [`set_col_tile_force_scalar`].
+pub fn col_tile_simd_active() -> bool {
+    simd::avx2_enabled() && !COL_TILE_FORCE_SCALAR.load(Ordering::Relaxed)
+}
 
 /// A raw split-plane pointer that pipeline tasks share. SAFETY contract
 /// (upheld by every constructor in this crate): tasks built over one
@@ -340,6 +371,19 @@ pub unsafe fn gather_col_tile(
     let w = c1 - c0;
     debug_assert!(c1 <= stride && fft_len >= rows);
     debug_assert!(dst_re.len() >= w * fft_len && dst_im.len() >= w * fft_len);
+    if !COL_TILE_FORCE_SCALAR.load(Ordering::Relaxed) {
+        // in-register 4×4/8×8 tile transpose: unit-stride vector loads
+        // along the source rows, vector stores along the tile rows.
+        // SAFETY: the rows × w source window starting at column c0 and
+        // the w × fft_len destination tile satisfy the caller's
+        // exclusivity contract; transpose_block is pure data movement,
+        // bit-identical to the scalar loop below.
+        let did = simd::transpose_block(re.0.add(c0), stride, dst_re.as_mut_ptr(), fft_len, rows, w)
+            && simd::transpose_block(im.0.add(c0), stride, dst_im.as_mut_ptr(), fft_len, rows, w);
+        if did {
+            return;
+        }
+    }
     for r in 0..rows {
         let base = r * stride + c0;
         for j in 0..w {
@@ -369,6 +413,16 @@ pub unsafe fn scatter_col_tile(
 ) {
     let w = c1 - c0;
     debug_assert!(c1 <= stride && fft_len >= rows);
+    debug_assert!(src_re.len() >= w * fft_len && src_im.len() >= w * fft_len);
+    if !COL_TILE_FORCE_SCALAR.load(Ordering::Relaxed) {
+        // SAFETY: mirror of the gather — the w × rows tile transposes
+        // back into the rows × w column window at c0.
+        let did = simd::transpose_block(src_re.as_ptr(), fft_len, re.0.add(c0), stride, w, rows)
+            && simd::transpose_block(src_im.as_ptr(), fft_len, im.0.add(c0), stride, w, rows);
+        if did {
+            return;
+        }
+    }
     for r in 0..rows {
         let base = r * stride + c0;
         for j in 0..w {
@@ -618,6 +672,24 @@ mod tests {
                 fused.max_abs_diff(&want) / scale
             );
         }
+    }
+
+    #[test]
+    fn forced_scalar_col_tiles_match_simd_bitwise() {
+        // The SIMD tile transpose is pure data movement: forcing the
+        // scalar gather/scatter must reproduce the exact same bits,
+        // remainder rims included (70 = 2·5·7 leaves a 6-wide tail tile
+        // and non-multiple-of-4 row count). On non-AVX2 machines both
+        // runs take the scalar path and the assert is trivially true.
+        let ctx = ExecCtx::new(2);
+        let orig = SignalMatrix::random(70, 70, 17);
+        let mut simd_run = orig.clone();
+        fft_cols_fused(&ctx, &mut simd_run, Direction::Forward, 2);
+        set_col_tile_force_scalar(true);
+        let mut scalar_run = orig.clone();
+        fft_cols_fused(&ctx, &mut scalar_run, Direction::Forward, 2);
+        set_col_tile_force_scalar(false);
+        assert_eq!(simd_run.max_abs_diff(&scalar_run), 0.0);
     }
 
     #[test]

@@ -1033,6 +1033,15 @@ pub(crate) fn tail_codelet_inplace(tail: usize, sign: f64, re: &mut [f64], im: &
 /// the loop order changes, the operations do not — so the output is
 /// bit-identical to the per-row driver in every kernel generation.
 ///
+/// Exactly-4-row tiles additionally vectorize stride-1 radix-3/5
+/// stages *across* the rows (`simd::try_stage{3,5}_xrow4`): those
+/// shapes appear whenever a length carries at most three factors of 2
+/// (the tail codelet absorbs them all, e.g. 360 = 2³·3²·5 opens on a
+/// stride-1 radix-3 stage, 40 = 2³·5 on a stride-1 radix-5 one) and
+/// have no within-row vector form at radix 5. The kernels replicate
+/// the per-row op order bit-for-bit — and decline any generation where
+/// they could not — so tile width stays unobservable in the output.
+///
 /// `scratch_re`/`scratch_im` must each hold at least `rows * plan.n`
 /// elements (one ping-pong plane per row in the tile).
 pub fn fft_rows_radix_tiled(
@@ -1053,30 +1062,63 @@ pub fn fft_rows_radix_tiled(
     let mut in_src = true; // data currently in re/im?
     for stage in &plan.stages {
         let m = stage.butterflies();
-        for r in 0..rows {
-            let span = r * n..(r + 1) * n;
-            if in_src {
-                apply_stage_range(
-                    stage,
-                    dir,
-                    &re[span.clone()],
-                    &im[span.clone()],
-                    &mut scratch_re[span.clone()],
-                    &mut scratch_im[span],
-                    0,
-                    m,
-                );
-            } else {
-                apply_stage_range(
-                    stage,
-                    dir,
-                    &scratch_re[span.clone()],
-                    &scratch_im[span.clone()],
-                    &mut re[span.clone()],
-                    &mut im[span],
-                    0,
-                    m,
-                );
+        // Cross-row fast path: in a 4-row tile, the stride-1 odd-radix
+        // stages (pure 3^a·5^b row lengths, where no within-row vector
+        // shape exists) vectorize *across* the rows — unit-stride quad
+        // loads/stores plus in-register 4×4 transposes, exact scalar op
+        // order (see `simd::try_stage{3,5}_xrow4` for the generation
+        // gating that keeps tile width unobservable in the bits). The
+        // kernel covers a multiple-of-4 prefix of the butterflies for
+        // all four rows at once; the per-row loop below finishes the
+        // remainder.
+        let done = if rows == 4 && stage.stride == 1 && stage.simd_ok {
+            let sign = if dir == Direction::Inverse { -1.0 } else { 1.0 };
+            let (twr, twi) = (&stage.tw.re[..], &stage.tw.im[..]);
+            match (stage.radix, in_src) {
+                (3, true) => {
+                    simd::try_stage3_xrow4(sign, twr, twi, re, im, scratch_re, scratch_im, n, m)
+                }
+                (3, false) => {
+                    simd::try_stage3_xrow4(sign, twr, twi, scratch_re, scratch_im, re, im, n, m)
+                }
+                (5, true) => {
+                    simd::try_stage5_xrow4(sign, twr, twi, re, im, scratch_re, scratch_im, n, m)
+                }
+                (5, false) => {
+                    simd::try_stage5_xrow4(sign, twr, twi, scratch_re, scratch_im, re, im, n, m)
+                }
+                _ => 0,
+            }
+        } else {
+            0
+        };
+        if done < m {
+            for r in 0..rows {
+                let span = r * n..(r + 1) * n;
+                let dst_span = r * n + stage.radix * stage.stride * done..(r + 1) * n;
+                if in_src {
+                    apply_stage_range(
+                        stage,
+                        dir,
+                        &re[span.clone()],
+                        &im[span],
+                        &mut scratch_re[dst_span.clone()],
+                        &mut scratch_im[dst_span],
+                        done,
+                        m,
+                    );
+                } else {
+                    apply_stage_range(
+                        stage,
+                        dir,
+                        &scratch_re[span.clone()],
+                        &scratch_im[span],
+                        &mut re[dst_span.clone()],
+                        &mut im[dst_span],
+                        done,
+                        m,
+                    );
+                }
             }
         }
         in_src = !in_src;
@@ -1109,13 +1151,14 @@ pub fn fft_rows_radix_tiled(
 /// thread's scratch arena ([`crate::dft::exec::with_scratch`]) instead
 /// of allocating either per call — hot paths still go through
 /// [`crate::dft::exec::fft_rows_pooled`]. Rows are processed in
-/// multi-row tiles ([`fft_rows_radix_tiled`]) of the model-preferred
-/// width ([`crate::dft::exec::preferred_row_tile`]).
+/// multi-row tiles ([`fft_rows_radix_tiled`]) of the effective width
+/// ([`crate::dft::exec::effective_row_tile`]: measured calibration when
+/// one is cached, the model otherwise).
 pub fn fft_rows_radix(re: &mut [f64], im: &mut [f64], rows: usize, n: usize, dir: Direction) {
     debug_assert_eq!(re.len(), rows * n);
     debug_assert_eq!(im.len(), re.len());
     let plan = crate::dft::plan::PlanCache::global().radix(n);
-    let tile = crate::dft::exec::preferred_row_tile(n).min(rows.max(1));
+    let tile = crate::dft::exec::effective_row_tile(n).min(rows.max(1));
     crate::dft::exec::with_scratch(|scratch| {
         let (sr, si) = scratch.pair(tile * n);
         let mut r = 0;
@@ -1437,6 +1480,44 @@ mod tests {
             let rows = 5;
             let plan = RadixPlan::new(n);
             let m = SignalMatrix::random(rows, n, 61 + n as u64);
+            for dir in [Direction::Forward, Direction::Inverse] {
+                let mut per_row = m.clone();
+                let (mut sr, mut si) = (vec![0.0; n], vec![0.0; n]);
+                for r in 0..rows {
+                    let span = r * n..(r + 1) * n;
+                    fft_row_radix(
+                        &mut per_row.re[span.clone()],
+                        &mut per_row.im[span],
+                        &mut sr,
+                        &mut si,
+                        &plan,
+                        dir,
+                    );
+                }
+                let mut tiled = m.clone();
+                let (mut tr, mut ti) = (vec![0.0; rows * n], vec![0.0; rows * n]);
+                fft_rows_radix_tiled(
+                    &mut tiled.re, &mut tiled.im, rows, &mut tr, &mut ti, &plan, dir,
+                );
+                assert_eq!(per_row.re, tiled.re, "n={n} {dir:?} re");
+                assert_eq!(per_row.im, tiled.im, "n={n} {dir:?} im");
+            }
+        }
+    }
+
+    #[test]
+    fn xrow4_tile_bitwise_matches_per_row() {
+        // exactly-4-row tiles take the cross-row stride-1 radix-3/5
+        // kernels; lengths chosen so those stages fire with
+        // non-multiple-of-4 butterfly remainders: 45 = 3²·5 (radix-3
+        // stride 1, m=15), 25 = 5² (radix-5 stride 1, m=5), 40 = 2³·5
+        // (radix-5 stride 1 after the tail absorbs the 2s), 360 =
+        // 2³·3²·5 (radix-3 stride 1 opener plus an FFT8 tail), 375 =
+        // 3·5³ (m=125). Must stay bit-identical to the per-row driver.
+        for &n in &[45usize, 25, 40, 360, 375] {
+            let rows = 4;
+            let plan = RadixPlan::new(n);
+            let m = SignalMatrix::random(rows, n, 91 + n as u64);
             for dir in [Direction::Forward, Direction::Inverse] {
                 let mut per_row = m.clone();
                 let (mut sr, mut si) = (vec![0.0; n], vec![0.0; n]);

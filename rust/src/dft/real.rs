@@ -19,9 +19,14 @@
 //!   down the `N/2+1` stored columns, executed as the fused pipeline's
 //!   strided tiles (per-tile transpose-gather into pooled scratch — the
 //!   same access pattern as [`crate::dft::pipeline::fft_col_range`],
-//!   at the packed stride). The barrier fallback transposes the packed
-//!   rectangle out of place instead; both modes feed every logical
-//!   column vector to the same kernel, so they are bit-identical.
+//!   at the packed stride). With `--features simd` both the tile
+//!   gather/scatter here and the barrier fallback's out-of-place
+//!   rectangle transpose run on the 4×4 in-register transpose kernels
+//!   of [`crate::dft::simd`] — the packed `N/2+1` width is always odd,
+//!   so the non-multiple-of-4 rim columns take the scalar edge path.
+//!   Both modes feed every logical column vector to the same kernel,
+//!   and the transpose kernels are pure data movement, so fused,
+//!   barrier, scalar and SIMD routes are all bit-identical.
 //! * **c2r inverse** ([`c2r_rows`], [`irfft2d`]): inverse column FFTs,
 //!   then the inverse pair trick — two Hermitian half-spectra rows
 //!   re-combine into one complex inverse FFT whose re/im planes are the

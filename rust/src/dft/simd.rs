@@ -137,6 +137,109 @@ pub(crate) fn try_stage5(
     imp::try_stage5(sign, tw_re, tw_im, src_re, src_im, dst_re, dst_im, p_lo, p_hi, m, stride)
 }
 
+/// Cross-row radix-3 stage kernel for a **4-row tile** at stride 1
+/// (the shape [`try_stage3`] handles per-row, vectorized here *across*
+/// rows instead): each group of four butterflies loads unit-stride
+/// quads from all four rows, 4×4-transposes them into row-lane
+/// vectors, runs the scalar-order butterfly with broadcast twiddles,
+/// and transposes back to unit-stride stores. Plane layout is four
+/// contiguous length-`n` rows (`n = 3m`, the stage spans the whole
+/// row since stride-1 stages come first). Returns how many butterflies
+/// (a multiple of 4) were processed for *all* rows — the caller
+/// finishes `[done, m)` per row; 0 means declined. Declines under the
+/// FMA generation: there the per-row stride-1 radix-3 path runs the
+/// contracted kernel, and mixing it with this plain-op body would make
+/// a row's bits depend on its tile width.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn try_stage3_xrow4(
+    sign: f64,
+    tw_re: &[f64],
+    tw_im: &[f64],
+    src_re: &[f64],
+    src_im: &[f64],
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+    n: usize,
+    m: usize,
+) -> usize {
+    imp::try_stage3_xrow4(sign, tw_re, tw_im, src_re, src_im, dst_re, dst_im, n, m)
+}
+
+/// Radix-5 counterpart of [`try_stage3_xrow4`] (`n = 5m`). Dispatches
+/// in every generation: the per-row radix-5 stride-1 shape is scalar
+/// plain-op arithmetic under *all* feature combinations, and this body
+/// replicates that exact IEEE-754 op order — so a row computes the
+/// same bits whether it runs per-row or inside a 4-row tile.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn try_stage5_xrow4(
+    sign: f64,
+    tw_re: &[f64],
+    tw_im: &[f64],
+    src_re: &[f64],
+    src_im: &[f64],
+    dst_re: &mut [f64],
+    dst_im: &mut [f64],
+    n: usize,
+    m: usize,
+) -> usize {
+    imp::try_stage5_xrow4(sign, tw_re, tw_im, src_re, src_im, dst_re, dst_im, n, m)
+}
+
+/// Blocked out-of-place transpose of one f64 plane with in-register
+/// 4×4 (and 8×8 two-register) AVX2 kernels:
+/// `dst[c·dst_stride + r] = src[r·src_stride + c]` for the `nr × nc`
+/// rectangle, scalar rim for non-multiple-of-4 edges. Returns `false`
+/// having done nothing when AVX2 is unavailable — the caller keeps its
+/// scalar loops. Pure data movement, so the result is bit-identical to
+/// the scalar path in every kernel generation.
+///
+/// # Safety
+/// `src` must be valid for reads of `(nr-1)·src_stride + nc` elements
+/// and `dst` for writes of `(nc-1)·dst_stride + nr` elements, with
+/// `src_stride >= nc`, `dst_stride >= nr`, and no overlap.
+pub(crate) unsafe fn transpose_block(
+    src: *const f64,
+    src_stride: usize,
+    dst: *mut f64,
+    dst_stride: usize,
+    nr: usize,
+    nc: usize,
+) -> bool {
+    imp::transpose_block(src, src_stride, dst, dst_stride, nr, nc)
+}
+
+/// In-place swap-transpose of the tile `rows [r0, r1) × cols [c0, c1)`
+/// of an `n×n` plane with its mirror tile (the barrier transpose's
+/// `swap_tiles` body): element `(r, c)` trades places with `(c, r)`,
+/// 4×4 register blocks plus a scalar rim. Returns `false` (nothing
+/// done) without AVX2.
+///
+/// # Safety
+/// `x` must be valid for reads/writes of `n·n` elements, with
+/// `r1 <= n`, `c1 <= n` and the tile strictly off-diagonal
+/// (`c0 >= r1`), so the tile and its mirror are disjoint.
+pub(crate) unsafe fn transpose_swap(
+    x: *mut f64,
+    n: usize,
+    r0: usize,
+    r1: usize,
+    c0: usize,
+    c1: usize,
+) -> bool {
+    imp::transpose_swap(x, n, r0, r1, c0, c1)
+}
+
+/// In-place transpose of the diagonal tile `[lo, hi) × [lo, hi)` of an
+/// `n×n` plane (the barrier transpose's `transpose_diag_tile` body):
+/// 4×4 in-register blocks on the diagonal, swap-transposed pairs off
+/// it, scalar rim. Returns `false` (nothing done) without AVX2.
+///
+/// # Safety
+/// `x` must be valid for reads/writes of `n·n` elements and `hi <= n`.
+pub(crate) unsafe fn transpose_diag(x: *mut f64, n: usize, lo: usize, hi: usize) -> bool {
+    imp::transpose_diag(x, n, lo, hi)
+}
+
 /// AVX2 body of the FFT4 tail codelet, out-of-place form: planes are
 /// `(4, s)` chunked, `s = len/4`. Processes a multiple-of-4 prefix of
 /// the lane range `q ∈ [0, s)` and returns how many lanes were done
@@ -1359,6 +1462,600 @@ mod imp {
         }
     }
 
+    // ---- In-register transpose kernels --------------------------------
+    //
+    // Pure data movement — no arithmetic at all — so every consumer
+    // (column-tile gather/scatter, the barrier transpose, the rect
+    // transpose on the real route) is bit-identical to its scalar loop
+    // in every kernel generation. The 4×4 f64 transpose is the
+    // primitive: unpacklo/unpackhi pair rows within 128-bit lanes,
+    // then permute2f128 crosses the lanes. 8×8 blocks are four 4×4
+    // quadrant transposes (an 8-wide f64 row is two ymm registers).
+
+    /// Transpose a 4×4 f64 block held in four ymm registers: output
+    /// vector `j` holds lane `j` of each input (`out_j[i] = in_i[j]`).
+    #[target_feature(enable = "avx2")]
+    unsafe fn tr4(
+        r0: __m256d,
+        r1: __m256d,
+        r2: __m256d,
+        r3: __m256d,
+    ) -> (__m256d, __m256d, __m256d, __m256d) {
+        let t0 = _mm256_unpacklo_pd(r0, r1);
+        let t1 = _mm256_unpackhi_pd(r0, r1);
+        let t2 = _mm256_unpacklo_pd(r2, r3);
+        let t3 = _mm256_unpackhi_pd(r2, r3);
+        (
+            _mm256_permute2f128_pd(t0, t2, 0x20),
+            _mm256_permute2f128_pd(t1, t3, 0x20),
+            _mm256_permute2f128_pd(t0, t2, 0x31),
+            _mm256_permute2f128_pd(t1, t3, 0x31),
+        )
+    }
+
+    /// Transpose one 4×4 block out-of-place: rows of `src` (stride
+    /// `ss`) become rows of `dst` (stride `ds`).
+    #[target_feature(enable = "avx2")]
+    unsafe fn tr4x4_block(src: *const f64, ss: usize, dst: *mut f64, ds: usize) {
+        let a = _mm256_loadu_pd(src);
+        let b = _mm256_loadu_pd(src.add(ss));
+        let c = _mm256_loadu_pd(src.add(2 * ss));
+        let d = _mm256_loadu_pd(src.add(3 * ss));
+        let (t0, t1, t2, t3) = tr4(a, b, c, d);
+        _mm256_storeu_pd(dst, t0);
+        _mm256_storeu_pd(dst.add(ds), t1);
+        _mm256_storeu_pd(dst.add(2 * ds), t2);
+        _mm256_storeu_pd(dst.add(3 * ds), t3);
+    }
+
+    /// Transpose one 8×8 block out-of-place as four 4×4 quadrants
+    /// (each 8-wide f64 row spans two ymm registers): the off-diagonal
+    /// quadrants swap places, the diagonal ones transpose in place.
+    #[target_feature(enable = "avx2")]
+    unsafe fn tr8x8_block(src: *const f64, ss: usize, dst: *mut f64, ds: usize) {
+        tr4x4_block(src, ss, dst, ds);
+        tr4x4_block(src.add(4), ss, dst.add(4 * ds), ds);
+        tr4x4_block(src.add(4 * ss), ss, dst.add(4), ds);
+        tr4x4_block(src.add(4 * ss + 4), ss, dst.add(4 * ds + 4), ds);
+    }
+
+    /// Swap-transpose two disjoint 4×4 blocks of an `n`-stride plane in
+    /// place: `a` receives the transpose of `b` and vice versa. All
+    /// eight loads complete before the first store.
+    #[target_feature(enable = "avx2")]
+    unsafe fn tr4x4_swap(a: *mut f64, b: *mut f64, n: usize) {
+        let a0 = _mm256_loadu_pd(a);
+        let a1 = _mm256_loadu_pd(a.add(n));
+        let a2 = _mm256_loadu_pd(a.add(2 * n));
+        let a3 = _mm256_loadu_pd(a.add(3 * n));
+        let b0 = _mm256_loadu_pd(b);
+        let b1 = _mm256_loadu_pd(b.add(n));
+        let b2 = _mm256_loadu_pd(b.add(2 * n));
+        let b3 = _mm256_loadu_pd(b.add(3 * n));
+        let (ta0, ta1, ta2, ta3) = tr4(a0, a1, a2, a3);
+        let (tb0, tb1, tb2, tb3) = tr4(b0, b1, b2, b3);
+        _mm256_storeu_pd(a, tb0);
+        _mm256_storeu_pd(a.add(n), tb1);
+        _mm256_storeu_pd(a.add(2 * n), tb2);
+        _mm256_storeu_pd(a.add(3 * n), tb3);
+        _mm256_storeu_pd(b, ta0);
+        _mm256_storeu_pd(b.add(n), ta1);
+        _mm256_storeu_pd(b.add(2 * n), ta2);
+        _mm256_storeu_pd(b.add(3 * n), ta3);
+    }
+
+    /// Transpose a 4×4 block of an `n`-stride plane in place (used for
+    /// blocks sitting on the main diagonal). Loads before stores, so
+    /// aliasing the block with itself is fine.
+    #[target_feature(enable = "avx2")]
+    unsafe fn tr4x4_inplace(p: *mut f64, n: usize) {
+        let a = _mm256_loadu_pd(p);
+        let b = _mm256_loadu_pd(p.add(n));
+        let c = _mm256_loadu_pd(p.add(2 * n));
+        let d = _mm256_loadu_pd(p.add(3 * n));
+        let (t0, t1, t2, t3) = tr4(a, b, c, d);
+        _mm256_storeu_pd(p, t0);
+        _mm256_storeu_pd(p.add(n), t1);
+        _mm256_storeu_pd(p.add(2 * n), t2);
+        _mm256_storeu_pd(p.add(3 * n), t3);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn transpose_block_core(
+        src: *const f64,
+        ss: usize,
+        dst: *mut f64,
+        ds: usize,
+        nr: usize,
+        nc: usize,
+    ) {
+        let mut i = 0usize;
+        while i + 8 <= nr {
+            let mut j = 0usize;
+            while j + 8 <= nc {
+                tr8x8_block(src.add(i * ss + j), ss, dst.add(j * ds + i), ds);
+                j += 8;
+            }
+            while j + 4 <= nc {
+                tr4x4_block(src.add(i * ss + j), ss, dst.add(j * ds + i), ds);
+                tr4x4_block(src.add((i + 4) * ss + j), ss, dst.add(j * ds + i + 4), ds);
+                j += 4;
+            }
+            for c in j..nc {
+                for r in i..i + 8 {
+                    *dst.add(c * ds + r) = *src.add(r * ss + c);
+                }
+            }
+            i += 8;
+        }
+        while i + 4 <= nr {
+            let mut j = 0usize;
+            while j + 4 <= nc {
+                tr4x4_block(src.add(i * ss + j), ss, dst.add(j * ds + i), ds);
+                j += 4;
+            }
+            for c in j..nc {
+                for r in i..i + 4 {
+                    *dst.add(c * ds + r) = *src.add(r * ss + c);
+                }
+            }
+            i += 4;
+        }
+        for r in i..nr {
+            for c in 0..nc {
+                *dst.add(c * ds + r) = *src.add(r * ss + c);
+            }
+        }
+    }
+
+    pub(crate) unsafe fn transpose_block(
+        src: *const f64,
+        ss: usize,
+        dst: *mut f64,
+        ds: usize,
+        nr: usize,
+        nc: usize,
+    ) -> bool {
+        if !avx2_enabled() {
+            return false;
+        }
+        transpose_block_core(src, ss, dst, ds, nr, nc);
+        true
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn transpose_swap_core(
+        x: *mut f64,
+        n: usize,
+        r0: usize,
+        r1: usize,
+        c0: usize,
+        c1: usize,
+    ) {
+        let rq = r0 + ((r1 - r0) & !3);
+        let cq = c0 + ((c1 - c0) & !3);
+        let mut r = r0;
+        while r < rq {
+            let mut c = c0;
+            while c < cq {
+                tr4x4_swap(x.add(r * n + c), x.add(c * n + r), n);
+                c += 4;
+            }
+            r += 4;
+        }
+        // scalar rim: leftover columns of the aligned row band, then
+        // the leftover rows in full
+        for r in r0..r1 {
+            let c_lo = if r < rq { cq } else { c0 };
+            for c in c_lo..c1 {
+                let i = r * n + c;
+                let j = c * n + r;
+                let t = *x.add(i);
+                *x.add(i) = *x.add(j);
+                *x.add(j) = t;
+            }
+        }
+    }
+
+    pub(crate) unsafe fn transpose_swap(
+        x: *mut f64,
+        n: usize,
+        r0: usize,
+        r1: usize,
+        c0: usize,
+        c1: usize,
+    ) -> bool {
+        if !avx2_enabled() {
+            return false;
+        }
+        transpose_swap_core(x, n, r0, r1, c0, c1);
+        true
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn transpose_diag_core(x: *mut f64, n: usize, lo: usize, hi: usize) {
+        let q = lo + ((hi - lo) & !3);
+        let mut bi = lo;
+        while bi < q {
+            tr4x4_inplace(x.add(bi * n + bi), n);
+            let mut bj = bi + 4;
+            while bj < q {
+                tr4x4_swap(x.add(bi * n + bj), x.add(bj * n + bi), n);
+                bj += 4;
+            }
+            bi += 4;
+        }
+        // scalar rim: every (r, c) pair with c >= q (covers r >= q too,
+        // since only pairs above the diagonal are swapped)
+        for r in lo..hi {
+            for c in (r + 1).max(q)..hi {
+                let i = r * n + c;
+                let j = c * n + r;
+                let t = *x.add(i);
+                *x.add(i) = *x.add(j);
+                *x.add(j) = t;
+            }
+        }
+    }
+
+    pub(crate) unsafe fn transpose_diag(x: *mut f64, n: usize, lo: usize, hi: usize) -> bool {
+        if !avx2_enabled() {
+            return false;
+        }
+        transpose_diag_core(x, n, lo, hi);
+        true
+    }
+
+    // ---- Cross-row stage kernels (4-row tile, stride 1) ---------------
+    //
+    // Odd-radix stride-1 stages (pure 3^a·5^b row lengths) have no
+    // within-row vector shape: lanes would sit `m` apart. Across a
+    // 4-row tile they do — four rows' elements at the same position are
+    // a strided 4×4 block, and `tr4` turns unit-stride quad loads into
+    // row-lane vectors. The butterfly then runs 4 rows at a time with
+    // broadcast twiddles in the exact scalar op order, and the outputs
+    // transpose back into unit-stride quad stores. Single plain-op
+    // generation, like the tail codelets.
+
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn try_stage3_xrow4(
+        sign: f64,
+        tw_re: &[f64],
+        tw_im: &[f64],
+        src_re: &[f64],
+        src_im: &[f64],
+        dst_re: &mut [f64],
+        dst_im: &mut [f64],
+        n: usize,
+        m: usize,
+    ) -> usize {
+        // Under the FMA generation the *per-row* stride-1 radix-3 path
+        // runs the contracted kernel; this body is plain-op, so mixing
+        // them would make a row's bits depend on its tile width.
+        if !avx2_enabled() || fma_enabled() {
+            return 0;
+        }
+        let qend = m & !3;
+        if qend == 0 {
+            return 0;
+        }
+        debug_assert!(n == 3 * m);
+        debug_assert!(src_re.len() >= 4 * n && src_im.len() >= 4 * n);
+        debug_assert!(dst_re.len() >= 4 * n && dst_im.len() >= 4 * n);
+        debug_assert!(tw_re.len() >= 2 * m && tw_im.len() >= 2 * m);
+        unsafe {
+            xrow4_r3(
+                sign,
+                tw_re.as_ptr(),
+                tw_im.as_ptr(),
+                src_re.as_ptr(),
+                src_im.as_ptr(),
+                dst_re.as_mut_ptr(),
+                dst_im.as_mut_ptr(),
+                n,
+                m,
+                qend,
+            );
+        }
+        qend
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn try_stage5_xrow4(
+        sign: f64,
+        tw_re: &[f64],
+        tw_im: &[f64],
+        src_re: &[f64],
+        src_im: &[f64],
+        dst_re: &mut [f64],
+        dst_im: &mut [f64],
+        n: usize,
+        m: usize,
+    ) -> usize {
+        // Radix-5 stride-1 is scalar plain-op per row in every
+        // generation (try_stage5 declines stride 1), so this body is
+        // bit-compatible under fma too and always dispatches.
+        if !avx2_enabled() {
+            return 0;
+        }
+        let qend = m & !3;
+        if qend == 0 {
+            return 0;
+        }
+        debug_assert!(n == 5 * m);
+        debug_assert!(src_re.len() >= 4 * n && src_im.len() >= 4 * n);
+        debug_assert!(dst_re.len() >= 4 * n && dst_im.len() >= 4 * n);
+        debug_assert!(tw_re.len() >= 4 * m && tw_im.len() >= 4 * m);
+        unsafe {
+            xrow4_r5(
+                sign,
+                tw_re.as_ptr(),
+                tw_im.as_ptr(),
+                src_re.as_ptr(),
+                src_im.as_ptr(),
+                dst_re.as_mut_ptr(),
+                dst_im.as_mut_ptr(),
+                n,
+                m,
+                qend,
+            );
+        }
+        qend
+    }
+
+    /// Which output vectors feed each unit-stride store quad: flat
+    /// output index `l = 3j + k` (position offset `j`, branch `k`)
+    /// lands at row offset `3·p0 + l`, so quad `t` packs `(j, k)` pairs
+    /// with `l ∈ [4t, 4t+4)`.
+    const R3_QUADS: [[(usize, usize); 4]; 3] = [
+        [(0, 0), (0, 1), (0, 2), (1, 0)],
+        [(1, 1), (1, 2), (2, 0), (2, 1)],
+        [(2, 2), (3, 0), (3, 1), (3, 2)],
+    ];
+
+    /// Radix-5 analogue of [`R3_QUADS`]: `l = 5j + k`.
+    const R5_QUADS: [[(usize, usize); 4]; 5] = [
+        [(0, 0), (0, 1), (0, 2), (0, 3)],
+        [(0, 4), (1, 0), (1, 1), (1, 2)],
+        [(1, 3), (1, 4), (2, 0), (2, 1)],
+        [(2, 2), (2, 3), (2, 4), (3, 0)],
+        [(3, 1), (3, 2), (3, 3), (3, 4)],
+    ];
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    unsafe fn xrow4_r3(
+        sign: f64,
+        twr: *const f64,
+        twi: *const f64,
+        sr: *const f64,
+        si: *const f64,
+        dr: *mut f64,
+        di: *mut f64,
+        n: usize,
+        m: usize,
+        qend: usize,
+    ) {
+        let c3 = _mm256_set1_pd(C3);
+        let s3 = _mm256_set1_pd(sign * (-S3));
+        let mut p0 = 0usize;
+        while p0 < qend {
+            // gather: branch k, rows 0..4, positions p0..p0+4 →
+            // per-position row-lane vectors x[k][j]
+            let mut xr = [[_mm256_setzero_pd(); 4]; 3];
+            let mut xi = [[_mm256_setzero_pd(); 4]; 3];
+            for (k, (xrk, xik)) in xr.iter_mut().zip(xi.iter_mut()).enumerate() {
+                let base = k * m + p0;
+                let (v0, v1, v2, v3) = tr4(
+                    _mm256_loadu_pd(sr.add(base)),
+                    _mm256_loadu_pd(sr.add(n + base)),
+                    _mm256_loadu_pd(sr.add(2 * n + base)),
+                    _mm256_loadu_pd(sr.add(3 * n + base)),
+                );
+                *xrk = [v0, v1, v2, v3];
+                let (v0, v1, v2, v3) = tr4(
+                    _mm256_loadu_pd(si.add(base)),
+                    _mm256_loadu_pd(si.add(n + base)),
+                    _mm256_loadu_pd(si.add(2 * n + base)),
+                    _mm256_loadu_pd(si.add(3 * n + base)),
+                );
+                *xik = [v0, v1, v2, v3];
+            }
+            // butterfly: y[j][k], lanes = rows; scalar op order with
+            // broadcast twiddles
+            let mut yr = [[_mm256_setzero_pd(); 3]; 4];
+            let mut yi = [[_mm256_setzero_pd(); 3]; 4];
+            for j in 0..4 {
+                let t = 2 * (p0 + j);
+                let w1r = _mm256_set1_pd(*twr.add(t));
+                let w1i = _mm256_set1_pd(sign * *twi.add(t));
+                let w2r = _mm256_set1_pd(*twr.add(t + 1));
+                let w2i = _mm256_set1_pd(sign * *twi.add(t + 1));
+                let (x0r, x0i) = (xr[0][j], xi[0][j]);
+                let (x1r, x1i) = (xr[1][j], xi[1][j]);
+                let (x2r, x2i) = (xr[2][j], xi[2][j]);
+                let tr = _mm256_add_pd(x1r, x2r);
+                let ti = _mm256_add_pd(x1i, x2i);
+                let dr_ = _mm256_sub_pd(x1r, x2r);
+                let di_ = _mm256_sub_pd(x1i, x2i);
+                yr[j][0] = _mm256_add_pd(x0r, tr);
+                yi[j][0] = _mm256_add_pd(x0i, ti);
+                let br = _mm256_add_pd(x0r, _mm256_mul_pd(c3, tr));
+                let bi = _mm256_add_pd(x0i, _mm256_mul_pd(c3, ti));
+                let y1r = _mm256_sub_pd(br, _mm256_mul_pd(s3, di_));
+                let y1i = _mm256_add_pd(bi, _mm256_mul_pd(s3, dr_));
+                let y2r = _mm256_add_pd(br, _mm256_mul_pd(s3, di_));
+                let y2i = _mm256_sub_pd(bi, _mm256_mul_pd(s3, dr_));
+                yr[j][1] = _mm256_sub_pd(_mm256_mul_pd(y1r, w1r), _mm256_mul_pd(y1i, w1i));
+                yi[j][1] = _mm256_add_pd(_mm256_mul_pd(y1r, w1i), _mm256_mul_pd(y1i, w1r));
+                yr[j][2] = _mm256_sub_pd(_mm256_mul_pd(y2r, w2r), _mm256_mul_pd(y2i, w2i));
+                yi[j][2] = _mm256_add_pd(_mm256_mul_pd(y2r, w2i), _mm256_mul_pd(y2i, w2r));
+            }
+            // scatter: transpose each output quad back to row-major
+            // unit-stride stores
+            let ob = 3 * p0;
+            for (t, ix) in R3_QUADS.iter().enumerate() {
+                let o = ob + 4 * t;
+                let (w0, w1, w2, w3) = tr4(
+                    yr[ix[0].0][ix[0].1],
+                    yr[ix[1].0][ix[1].1],
+                    yr[ix[2].0][ix[2].1],
+                    yr[ix[3].0][ix[3].1],
+                );
+                _mm256_storeu_pd(dr.add(o), w0);
+                _mm256_storeu_pd(dr.add(n + o), w1);
+                _mm256_storeu_pd(dr.add(2 * n + o), w2);
+                _mm256_storeu_pd(dr.add(3 * n + o), w3);
+                let (w0, w1, w2, w3) = tr4(
+                    yi[ix[0].0][ix[0].1],
+                    yi[ix[1].0][ix[1].1],
+                    yi[ix[2].0][ix[2].1],
+                    yi[ix[3].0][ix[3].1],
+                );
+                _mm256_storeu_pd(di.add(o), w0);
+                _mm256_storeu_pd(di.add(n + o), w1);
+                _mm256_storeu_pd(di.add(2 * n + o), w2);
+                _mm256_storeu_pd(di.add(3 * n + o), w3);
+            }
+            p0 += 4;
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    unsafe fn xrow4_r5(
+        sign: f64,
+        twr: *const f64,
+        twi: *const f64,
+        sr: *const f64,
+        si: *const f64,
+        dr: *mut f64,
+        di: *mut f64,
+        n: usize,
+        m: usize,
+        qend: usize,
+    ) {
+        let c1 = _mm256_set1_pd(C5_1);
+        let c2 = _mm256_set1_pd(C5_2);
+        let s1 = _mm256_set1_pd(sign * (-S5_1));
+        let s2 = _mm256_set1_pd(sign * (-S5_2));
+        let mut p0 = 0usize;
+        while p0 < qend {
+            let mut xr = [[_mm256_setzero_pd(); 4]; 5];
+            let mut xi = [[_mm256_setzero_pd(); 4]; 5];
+            for (k, (xrk, xik)) in xr.iter_mut().zip(xi.iter_mut()).enumerate() {
+                let base = k * m + p0;
+                let (v0, v1, v2, v3) = tr4(
+                    _mm256_loadu_pd(sr.add(base)),
+                    _mm256_loadu_pd(sr.add(n + base)),
+                    _mm256_loadu_pd(sr.add(2 * n + base)),
+                    _mm256_loadu_pd(sr.add(3 * n + base)),
+                );
+                *xrk = [v0, v1, v2, v3];
+                let (v0, v1, v2, v3) = tr4(
+                    _mm256_loadu_pd(si.add(base)),
+                    _mm256_loadu_pd(si.add(n + base)),
+                    _mm256_loadu_pd(si.add(2 * n + base)),
+                    _mm256_loadu_pd(si.add(3 * n + base)),
+                );
+                *xik = [v0, v1, v2, v3];
+            }
+            let mut yr = [[_mm256_setzero_pd(); 5]; 4];
+            let mut yi = [[_mm256_setzero_pd(); 5]; 4];
+            for j in 0..4 {
+                let t = 4 * (p0 + j);
+                let wr = [
+                    _mm256_set1_pd(*twr.add(t)),
+                    _mm256_set1_pd(*twr.add(t + 1)),
+                    _mm256_set1_pd(*twr.add(t + 2)),
+                    _mm256_set1_pd(*twr.add(t + 3)),
+                ];
+                let wi = [
+                    _mm256_set1_pd(sign * *twi.add(t)),
+                    _mm256_set1_pd(sign * *twi.add(t + 1)),
+                    _mm256_set1_pd(sign * *twi.add(t + 2)),
+                    _mm256_set1_pd(sign * *twi.add(t + 3)),
+                ];
+                let (x0r, x0i) = (xr[0][j], xi[0][j]);
+                let (x1r, x1i) = (xr[1][j], xi[1][j]);
+                let (x2r, x2i) = (xr[2][j], xi[2][j]);
+                let (x3r, x3i) = (xr[3][j], xi[3][j]);
+                let (x4r, x4i) = (xr[4][j], xi[4][j]);
+                let t1r = _mm256_add_pd(x1r, x4r);
+                let t1i = _mm256_add_pd(x1i, x4i);
+                let t2r = _mm256_add_pd(x2r, x3r);
+                let t2i = _mm256_add_pd(x2i, x3i);
+                let e1r = _mm256_sub_pd(x1r, x4r);
+                let e1i = _mm256_sub_pd(x1i, x4i);
+                let e2r = _mm256_sub_pd(x2r, x3r);
+                let e2i = _mm256_sub_pd(x2i, x3i);
+                yr[j][0] = _mm256_add_pd(_mm256_add_pd(x0r, t1r), t2r);
+                yi[j][0] = _mm256_add_pd(_mm256_add_pd(x0i, t1i), t2i);
+                let m1r = _mm256_add_pd(
+                    _mm256_add_pd(x0r, _mm256_mul_pd(c1, t1r)),
+                    _mm256_mul_pd(c2, t2r),
+                );
+                let m1i = _mm256_add_pd(
+                    _mm256_add_pd(x0i, _mm256_mul_pd(c1, t1i)),
+                    _mm256_mul_pd(c2, t2i),
+                );
+                let m2r = _mm256_add_pd(
+                    _mm256_add_pd(x0r, _mm256_mul_pd(c2, t1r)),
+                    _mm256_mul_pd(c1, t2r),
+                );
+                let m2i = _mm256_add_pd(
+                    _mm256_add_pd(x0i, _mm256_mul_pd(c2, t1i)),
+                    _mm256_mul_pd(c1, t2i),
+                );
+                let u1r = _mm256_add_pd(_mm256_mul_pd(s1, e1r), _mm256_mul_pd(s2, e2r));
+                let u1i = _mm256_add_pd(_mm256_mul_pd(s1, e1i), _mm256_mul_pd(s2, e2i));
+                let u2r = _mm256_sub_pd(_mm256_mul_pd(s2, e1r), _mm256_mul_pd(s1, e2r));
+                let u2i = _mm256_sub_pd(_mm256_mul_pd(s2, e1i), _mm256_mul_pd(s1, e2i));
+                let y1r = _mm256_sub_pd(m1r, u1i);
+                let y1i = _mm256_add_pd(m1i, u1r);
+                let y4r = _mm256_add_pd(m1r, u1i);
+                let y4i = _mm256_sub_pd(m1i, u1r);
+                let y2r = _mm256_sub_pd(m2r, u2i);
+                let y2i = _mm256_add_pd(m2i, u2r);
+                let y3r = _mm256_add_pd(m2r, u2i);
+                let y3i = _mm256_sub_pd(m2i, u2r);
+                yr[j][1] = _mm256_sub_pd(_mm256_mul_pd(y1r, wr[0]), _mm256_mul_pd(y1i, wi[0]));
+                yi[j][1] = _mm256_add_pd(_mm256_mul_pd(y1r, wi[0]), _mm256_mul_pd(y1i, wr[0]));
+                yr[j][2] = _mm256_sub_pd(_mm256_mul_pd(y2r, wr[1]), _mm256_mul_pd(y2i, wi[1]));
+                yi[j][2] = _mm256_add_pd(_mm256_mul_pd(y2r, wi[1]), _mm256_mul_pd(y2i, wr[1]));
+                yr[j][3] = _mm256_sub_pd(_mm256_mul_pd(y3r, wr[2]), _mm256_mul_pd(y3i, wi[2]));
+                yi[j][3] = _mm256_add_pd(_mm256_mul_pd(y3r, wi[2]), _mm256_mul_pd(y3i, wr[2]));
+                yr[j][4] = _mm256_sub_pd(_mm256_mul_pd(y4r, wr[3]), _mm256_mul_pd(y4i, wi[3]));
+                yi[j][4] = _mm256_add_pd(_mm256_mul_pd(y4r, wi[3]), _mm256_mul_pd(y4i, wr[3]));
+            }
+            let ob = 5 * p0;
+            for (t, ix) in R5_QUADS.iter().enumerate() {
+                let o = ob + 4 * t;
+                let (w0, w1, w2, w3) = tr4(
+                    yr[ix[0].0][ix[0].1],
+                    yr[ix[1].0][ix[1].1],
+                    yr[ix[2].0][ix[2].1],
+                    yr[ix[3].0][ix[3].1],
+                );
+                _mm256_storeu_pd(dr.add(o), w0);
+                _mm256_storeu_pd(dr.add(n + o), w1);
+                _mm256_storeu_pd(dr.add(2 * n + o), w2);
+                _mm256_storeu_pd(dr.add(3 * n + o), w3);
+                let (w0, w1, w2, w3) = tr4(
+                    yi[ix[0].0][ix[0].1],
+                    yi[ix[1].0][ix[1].1],
+                    yi[ix[2].0][ix[2].1],
+                    yi[ix[3].0][ix[3].1],
+                );
+                _mm256_storeu_pd(di.add(o), w0);
+                _mm256_storeu_pd(di.add(n + o), w1);
+                _mm256_storeu_pd(di.add(2 * n + o), w2);
+                _mm256_storeu_pd(di.add(3 * n + o), w3);
+            }
+            p0 += 4;
+        }
+    }
+
     // ---- AVX2 tail-codelet bodies -------------------------------------
     //
     // One generation only (plain AVX2): the FFT4/FFT8 butterflies have
@@ -1698,6 +2395,62 @@ mod imp {
 
     pub(crate) fn tail8_inplace(_sign: f64, _re: &mut [f64], _im: &mut [f64]) -> usize {
         0
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn try_stage3_xrow4(
+        _sign: f64,
+        _tw_re: &[f64],
+        _tw_im: &[f64],
+        _src_re: &[f64],
+        _src_im: &[f64],
+        _dst_re: &mut [f64],
+        _dst_im: &mut [f64],
+        _n: usize,
+        _m: usize,
+    ) -> usize {
+        0
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn try_stage5_xrow4(
+        _sign: f64,
+        _tw_re: &[f64],
+        _tw_im: &[f64],
+        _src_re: &[f64],
+        _src_im: &[f64],
+        _dst_re: &mut [f64],
+        _dst_im: &mut [f64],
+        _n: usize,
+        _m: usize,
+    ) -> usize {
+        0
+    }
+
+    pub(crate) unsafe fn transpose_block(
+        _src: *const f64,
+        _ss: usize,
+        _dst: *mut f64,
+        _ds: usize,
+        _nr: usize,
+        _nc: usize,
+    ) -> bool {
+        false
+    }
+
+    pub(crate) unsafe fn transpose_swap(
+        _x: *mut f64,
+        _n: usize,
+        _r0: usize,
+        _r1: usize,
+        _c0: usize,
+        _c1: usize,
+    ) -> bool {
+        false
+    }
+
+    pub(crate) unsafe fn transpose_diag(_x: *mut f64, _n: usize, _lo: usize, _hi: usize) -> bool {
+        false
     }
 }
 

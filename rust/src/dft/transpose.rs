@@ -6,7 +6,17 @@
 //! swaps mirrored tiles; the diagonal tiles transpose in place. This is
 //! the paper's cache-blocking scheme exactly (their `block_size=64` default
 //! is kept; the sweep lives in `rust/benches/bench_transpose.rs`).
+//!
+//! On AVX2 machines the element moves inside each cache tile run
+//! through the in-register 4×4 transpose kernels of
+//! [`crate::dft::simd`] ([`crate::dft::simd::transpose_swap`] /
+//! [`crate::dft::simd::transpose_diag`] for the in-place barrier path,
+//! [`crate::dft::simd::transpose_block`] for the rectangular
+//! out-of-place transpose the real c2r route uses); the scalar loops
+//! below are the runtime-detected fallback. Transposition is pure data
+//! movement, so the two paths are bit-identical always.
 
+use crate::dft::simd;
 use crate::dft::SignalMatrix;
 
 /// Paper's default block size (Appendix A: "We use a block size of 64").
@@ -37,6 +47,13 @@ pub fn transpose_in_place(m: &mut SignalMatrix, block: usize) {
 
 /// Transpose the diagonal tile rows [lo, hi) in place.
 fn transpose_diag_tile(x: &mut [f64], n: usize, lo: usize, hi: usize) {
+    debug_assert!(hi <= n && x.len() >= n * n);
+    // SAFETY: `x` is the full n×n plane and the tile bounds are checked
+    // above; the kernel swaps exactly the (r, c)/(c, r) pairs of the
+    // scalar loop below.
+    if unsafe { simd::transpose_diag(x.as_mut_ptr(), n, lo, hi) } {
+        return;
+    }
     for r in lo..hi {
         for c in (r + 1)..hi {
             x.swap(r * n + c, c * n + r);
@@ -46,6 +63,13 @@ fn transpose_diag_tile(x: &mut [f64], n: usize, lo: usize, hi: usize) {
 
 /// Swap tile (ri.., cj..) with its mirror (cj.., ri..), transposing both.
 fn swap_tiles(x: &mut [f64], n: usize, r0: usize, r1: usize, c0: usize, c1: usize) {
+    debug_assert!(r1 <= n && c1 <= n && c0 >= r1 && x.len() >= n * n);
+    // SAFETY: bounds checked above and the tile sits strictly above the
+    // diagonal (`c0 >= r1`), so tile and mirror are disjoint as the
+    // kernel requires.
+    if unsafe { simd::transpose_swap(x.as_mut_ptr(), n, r0, r1, c0, c1) } {
+        return;
+    }
     for r in r0..r1 {
         for c in c0..c1 {
             x.swap(r * n + c, c * n + r);
@@ -127,12 +151,35 @@ pub fn transposed(m: &SignalMatrix) -> SignalMatrix {
         let mut j = 0;
         while j < m.cols {
             let jh = (j + b).min(m.cols);
-            for r in i..ih {
-                for c in j..jh {
-                    let src = r * m.cols + c;
-                    let dst = c * m.rows + r;
-                    out.re[dst] = m.re[src];
-                    out.im[dst] = m.im[src];
+            // SAFETY: the (ih-i) × (jh-j) source block and its
+            // transposed destination block lie inside the two
+            // allocations (`out` is cols × rows); pure data movement,
+            // bit-identical to the scalar fallback.
+            let did = unsafe {
+                simd::transpose_block(
+                    m.re.as_ptr().add(i * m.cols + j),
+                    m.cols,
+                    out.re.as_mut_ptr().add(j * m.rows + i),
+                    m.rows,
+                    ih - i,
+                    jh - j,
+                ) && simd::transpose_block(
+                    m.im.as_ptr().add(i * m.cols + j),
+                    m.cols,
+                    out.im.as_mut_ptr().add(j * m.rows + i),
+                    m.rows,
+                    ih - i,
+                    jh - j,
+                )
+            };
+            if !did {
+                for r in i..ih {
+                    for c in j..jh {
+                        let src = r * m.cols + c;
+                        let dst = c * m.rows + r;
+                        out.re[dst] = m.re[src];
+                        out.im[dst] = m.im[src];
+                    }
                 }
             }
             j = jh;
@@ -206,6 +253,23 @@ mod tests {
         for r in 0..3 {
             for c in 0..7 {
                 assert_eq!(m.get(r, c), t.get(c, r));
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_place_rectangular_vector_blocks_and_rims() {
+        // shapes straddling the 8/4/scalar block boundaries of the AVX2
+        // kernel in both dimensions (and the packed-real 70×33 shape);
+        // on non-AVX2 machines this still passes through the scalar path
+        for &(rows, cols) in &[(13usize, 70usize), (70, 33), (8, 8), (9, 65)] {
+            let m = SignalMatrix::random(rows, cols, (rows * cols) as u64);
+            let t = transposed(&m);
+            assert_eq!((t.rows, t.cols), (cols, rows));
+            for r in 0..rows {
+                for c in 0..cols {
+                    assert_eq!(m.get(r, c), t.get(c, r), "{rows}x{cols} at ({r},{c})");
+                }
             }
         }
     }

@@ -464,7 +464,7 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
         "n", "requests", "clients", "engine", "p", "t", "workers", "batch", "wisdom",
         "no-wisdom", "pad", "starve", "budget", "seed", "config", "drift-factor", "json",
         "no-json", "pipeline", "kind", "mode", "rate", "arrivals", "shards", "capacity",
-        "route", "slowdowns",
+        "route", "slowdowns", "reps",
     ])?;
     match args.opt_or("mode", "closed").as_str() {
         "closed" => {}
@@ -479,6 +479,7 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     }
     let requests = args.opt_usize("requests")?.unwrap_or(64).max(1);
     let clients = args.opt_usize("clients")?.unwrap_or(8).max(1);
+    let reps = args.opt_usize("reps")?.unwrap_or(1).max(1);
     let engine = args.opt_or("engine", "native");
     let seed = args.opt_usize("seed")?.unwrap_or(42) as u64;
     let virtual_engine = engine.starts_with("sim-");
@@ -533,9 +534,9 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     }
 
     println!(
-        "serve-bench: engine {engine} | kind {} | sizes {ns:?} | {requests} requests/pass x 2 \
-         passes (cold+warm) | {clients} clients | {workers} workers | max batch {max_batch} | \
-         {} pipeline | exec pool {} thread(s)",
+        "serve-bench: engine {engine} | kind {} | sizes {ns:?} | {requests} requests/pass x \
+         (1 cold + {reps} warm) passes | {clients} clients | {workers} workers | max batch \
+         {max_batch} | {} pipeline | exec pool {} thread(s)",
         kind.name(),
         pipeline.name(),
         hclfft::dft::exec::ExecCtx::global().workers()
@@ -586,9 +587,12 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
         failures.into_inner().unwrap()
     };
 
-    // cold pass (plans, first observations), then warm pass (memoized
-    // wisdom; the --drift-factor speed shift is injected in between so
-    // the warm pass exercises drift detection + re-planning)
+    // cold pass (plans, first observations), then `--reps` warm passes
+    // (memoized wisdom; the --drift-factor speed shift is injected in
+    // between so the warm passes exercise drift detection +
+    // re-planning). Each warm repetition gets its own stats window —
+    // cross-repetition scatter is the run-to-run variance the t-CI
+    // summarizes below.
     svc.stats_mark();
     let mut failures = run_pass(0);
     let cold = svc.stats_since_mark();
@@ -597,10 +601,27 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
         println!("injecting virtual machine slowdown x{f} before the warm pass");
         svc.set_virtual_slowdown(&engine, f);
     }
-    svc.stats_mark();
-    failures.extend(run_pass(1));
-    let warm = svc.stats_since_mark();
+    let mut warm_reps: Vec<hclfft::service::stats::ServiceStats> = Vec::with_capacity(reps);
+    for r in 0..reps {
+        svc.stats_mark();
+        failures.extend(run_pass(1 + r as u64));
+        warm_reps.push(svc.stats_since_mark());
+    }
+    let warm = warm_reps.last().expect("reps >= 1").clone();
     println!("{}", warm.render_table(&format!("serve-bench {engine} — warm pass")));
+    // cross-repetition variance: per-rep p50/p95 as mean ± 95% two-sided
+    // Student-t half-width over the `--reps` independent warm windows
+    let warm_ci = (reps >= 2).then(|| {
+        let p50s: Vec<f64> = warm_reps.iter().map(|s| s.latency_p50_s * 1e3).collect();
+        let p95s: Vec<f64> = warm_reps.iter().map(|s| s.latency_p95_s * 1e3).collect();
+        (mean_t_ci(&p50s), mean_t_ci(&p95s))
+    });
+    if let Some(((p50m, p50h), (p95m, p95h))) = warm_ci {
+        println!(
+            "warm variance over {reps} repetitions: latency p50 {p50m:.3} ± {p50h:.3} ms, \
+             p95 {p95m:.3} ± {p95h:.3} ms (95% Student-t CI)"
+        );
+    }
 
     let total = svc.stats();
     let model = svc.model_snapshot(&hclfft::service::model_key(&engine, kind));
@@ -622,13 +643,14 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
 
     if !args.flag("no-json") {
         let json_path = PathBuf::from(args.opt_or("json", "BENCH_serve.json"));
-        let doc = hclfft::util::json::Json::obj()
+        let mut doc = hclfft::util::json::Json::obj()
             .set("bench", "serve")
             .set("engine", engine.as_str())
             .set("kind", kind.name())
             .set("sizes", ns.clone())
             .set("requests_per_pass", requests)
             .set("clients", clients)
+            .set("reps", reps)
             .set("workers", workers)
             .set("max_batch", max_batch)
             .set("pipeline", pipeline.name())
@@ -640,9 +662,23 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
             )
             .set("cold", phase_json(&cold))
             .set("warm", phase_json(&warm))
+            .set(
+                "warm_reps",
+                hclfft::util::json::Json::Arr(warm_reps.iter().map(phase_json).collect()),
+            )
             .set("drift_events", total.drift_events as i64)
             .set("model_observations", obs as i64)
             .set("model_points", points as i64);
+        if let Some(((p50m, p50h), (p95m, p95h))) = warm_ci {
+            doc = doc.set(
+                "warm_ci",
+                hclfft::util::json::Json::obj()
+                    .set("p50_ms_mean", p50m)
+                    .set("p50_ms_hw", p50h)
+                    .set("p95_ms_mean", p95m)
+                    .set("p95_ms_hw", p95h),
+            );
+        }
         if let Some(dir) = json_path.parent().filter(|d| !d.as_os_str().is_empty()) {
             std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
         }
@@ -661,7 +697,11 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     }
     svc.shutdown();
     if !failures.is_empty() {
-        return Err(format!("{} of {} request(s) failed", failures.len(), 2 * requests));
+        return Err(format!(
+            "{} of {} request(s) failed",
+            failures.len(),
+            (1 + reps) * requests
+        ));
     }
     Ok(())
 }
@@ -1057,6 +1097,19 @@ fn verify_against_local(
         max_err = max_err.max((a - b).abs());
     }
     Ok(max_err)
+}
+
+/// Sample mean ± 95% two-sided Student-t half-width
+/// (`t_inv_cdf(0.975, n-1) * sd / sqrt(n)`); half-width 0 for n < 2.
+fn mean_t_ci(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n.max(1.0);
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0);
+    let hw = hclfft::stats::ttest::t_inv_cdf(0.975, n - 1.0) * (var / n).sqrt();
+    (mean, hw)
 }
 
 /// "12.3%" or "n/a" when no calibration samples exist.

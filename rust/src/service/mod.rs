@@ -61,7 +61,12 @@
 //! stream contradicts the established estimate (`variation_pct` drift),
 //! the affected wisdom partition is invalidated and re-planning runs in
 //! the worker — POPTA/HPOPTA and pad selection against the model's
-//! refreshed (speed-rescaled) sections. `save_wisdom` persists the
+//! refreshed (speed-rescaled) sections. Memory-classified drift
+//! additionally invalidates the *measured row-tile widths*
+//! ([`crate::dft::exec::calibrate_row_tile`], timed on the cold-plan
+//! path and persisted in the wisdom artifact's v4 `tiles` array): a
+//! width tuned for the old cache behaviour is exactly what a
+//! memory-regime shift makes stale. `save_wisdom` persists the
 //! model deltas and drift log next to the plans; virtual backends
 //! accept an injected slowdown factor
 //! ([`Dft2dService::set_virtual_slowdown`]) so the whole loop is
@@ -85,7 +90,7 @@ use crate::dft::fft::Direction;
 use crate::dft::pipeline::PipelineMode;
 use crate::dft::real::{half_cols, irfft2d_owned_with_mode, TransformKind};
 use crate::dft::SignalMatrix;
-use crate::model::{DriftPolicy, OnlineModel, PerfModel, Phase, SimModel, StaticModel};
+use crate::model::{DriftClass, DriftPolicy, OnlineModel, PerfModel, Phase, SimModel, StaticModel};
 use crate::simulator::Package;
 use crate::stats::harness::fft2d_flops;
 
@@ -518,6 +523,19 @@ impl ServiceBuilder {
                 rec.warm_plan_cache();
             }
         }
+        // measured row-tile widths persisted in the artifact (JSON v4)
+        // seed the executor's calibration cache, so a restarted server
+        // serves at the measured width without re-timing on its first
+        // cold plan. `tile_width` applies the kernel-generation
+        // staleness rule — widths timed against a retired row kernel
+        // are skipped and the next cold plan re-calibrates.
+        if self.engines.values().any(|b| matches!(b, Backend::Real(_))) {
+            for t in self.wisdom.tiles() {
+                if let Some(w) = self.wisdom.tile_width(t.n, t.kind) {
+                    crate::dft::exec::set_measured_row_tile(t.n, w);
+                }
+            }
+        }
         // one live model per engine: persisted deltas when the wisdom
         // file carried them, fresh otherwise; virtual backends get their
         // calibrated testbed as base, real engines get the latest
@@ -941,6 +959,7 @@ impl Inner {
         // we own the cold plan for this key; no locks held while measuring
         self.stats.record_planning_event();
         let mkey = model_key(&key.engine, kind);
+        let mut tile_widths: Vec<(usize, usize)> = Vec::new();
         let rec = match backend {
             Backend::Real(engine) => {
                 let (rec, samples) = WisdomRecord::from_measurement_sampled(
@@ -951,6 +970,17 @@ impl Inner {
                     kind,
                 );
                 rec.warm_plan_cache();
+                // one-shot row-tile calibration for every row length the
+                // plan can execute (pads included): the cold-plan path
+                // *is* the executor's warmup, so steady state serves at
+                // the measured width and never pays the timing again
+                let mut tile_lens = rec.plan.pad_lens();
+                tile_lens.push(key.n);
+                tile_lens.sort_unstable();
+                tile_lens.dedup();
+                for len in tile_lens.into_iter().filter(|&l| l > 0) {
+                    tile_widths.push((len, crate::dft::exec::calibrate_row_tile(len)));
+                }
                 // profiling emits into the same model store the serving
                 // executor appends to, and refreshes the static base.
                 // A profiler sample is *per group* (x rows on one of p
@@ -1009,7 +1039,14 @@ impl Inner {
                 })
             }
         };
-        self.wisdom.lock().unwrap().insert(rec.clone());
+        {
+            let mut w = self.wisdom.lock().unwrap();
+            w.insert(rec.clone());
+            // the calibration winners ride the same artifact (v4 tiles)
+            for (len, width) in tile_widths {
+                w.set_tile(len, kind, width);
+            }
+        }
         let mut inflight = self.planning_inflight.lock().unwrap();
         inflight.remove(&wkey);
         self.planning_cv.notify_all();
@@ -1154,7 +1191,10 @@ impl Inner {
         };
 
         let executed_s = executed_batch_s / size.max(1) as f64;
-        let mut drifted = false;
+        // a fired drift event carries its classification (compute vs
+        // memory-bandwidth, from the per-phase streams) — the reaction
+        // below is class-dependent, so keep the whole event's class
+        let mut drifted: Option<DriftClass> = None;
         if exec_result.is_ok() && key.forward {
             // the feedback loop: fold the measured per-request time into
             // the live model and record calibration (cheap, lock-scoped);
@@ -1178,7 +1218,7 @@ impl Inner {
                     m.observe_phase(Phase::Row, x, y, ph.row_s / b);
                     m.observe_phase(Phase::Col, x, y, ph.col_s / b);
                 }
-                m.observe(x, y, executed_s).is_some()
+                m.observe(x, y, executed_s).map(|e| e.class)
             };
         }
 
@@ -1213,11 +1253,11 @@ impl Inner {
             }
         }
 
-        if drifted {
+        if let Some(class) = drifted {
             // responses are out; now invalidate the affected wisdom
             // partition and re-plan in the worker, background wrt the
             // clients of this batch
-            self.drift_replan(&key, &rec);
+            self.drift_replan(&key, &rec, class);
         }
     }
 
@@ -1228,11 +1268,32 @@ impl Inner {
     /// pad selection re-run with *no re-measurement*; otherwise (and
     /// for virtual backends, via `plan_for`'s model path) the normal
     /// cold-plan route runs.
-    fn drift_replan(&self, key: &BatchKey, old: &WisdomRecord) {
+    ///
+    /// **Memory-classified** drift additionally drops the measured
+    /// row-tile widths for this key's row lengths — both from the
+    /// executor's live cache and from the wisdom artifact. A tile width
+    /// is a pure cache-behaviour artifact (it times L1/L2 pressure of
+    /// tiled rows), so a memory-regime shift is precisely the event
+    /// that invalidates it; compute drift leaves the widths alone (the
+    /// kernel's relative width ranking is not what moved).
+    fn drift_replan(&self, key: &BatchKey, old: &WisdomRecord, class: DriftClass) {
         self.stats.record_drift();
         let p = self.plan_groups(&key.engine);
         let kind = key.kind.plan_kind();
-        self.wisdom.lock().unwrap().remove(&key.engine, key.n, p, kind);
+        {
+            let mut w = self.wisdom.lock().unwrap();
+            w.remove(&key.engine, key.n, p, kind);
+            if class == DriftClass::Memory {
+                let mut lens = old.plan.pad_lens();
+                lens.push(key.n);
+                lens.sort_unstable();
+                lens.dedup();
+                for len in lens.into_iter().filter(|&l| l > 0) {
+                    crate::dft::exec::clear_measured_row_tile(len);
+                    w.clear_tile(len, kind);
+                }
+            }
+        }
         let is_real_backend = matches!(self.engines.get(&key.engine), Some(Backend::Real(_)));
         if is_real_backend && !old.fpms.is_empty() {
             let model = {
@@ -1439,6 +1500,36 @@ mod tests {
         let err = svc.submit(Dft2dRequest::probe("native", 1024)).unwrap_err();
         assert!(matches!(err, ServiceError::BadShape { .. }));
         svc.shutdown();
+    }
+
+    #[test]
+    fn cold_plans_calibrate_and_persist_tile_widths() {
+        // n=18 is unique to this test: the measured-tile cache is
+        // process-global, so a shared n would race other service tests
+        // (harmlessly for correctness — widths never change bits — but
+        // this test asserts on exact cache contents)
+        let n = 18;
+        let svc = ServiceBuilder::new(quick_cfg()).native().build();
+        let resp = svc
+            .submit(Dft2dRequest::forward("native", SignalMatrix::random(n, n, 5)))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(resp.report.planned_cold);
+        // the cold plan ran the one-shot width calibration...
+        let w = crate::dft::exec::measured_row_tile(n).expect("cold plan calibrates");
+        assert!(crate::dft::exec::ROW_TILE_MEASURE_CANDIDATES.contains(&w));
+        // ...and the winner rides the wisdom artifact (JSON v4 tiles)
+        let snap = svc.wisdom_snapshot();
+        assert_eq!(snap.tile_width(n, TransformKind::C2c), Some(w));
+        svc.shutdown();
+        // a rebuilt service seeds the executor cache from the artifact
+        // (no re-timing on restart)
+        crate::dft::exec::clear_measured_row_tile(n);
+        assert_eq!(crate::dft::exec::measured_row_tile(n), None);
+        let svc2 = ServiceBuilder::new(quick_cfg()).native().wisdom(snap).paused().build();
+        assert_eq!(crate::dft::exec::measured_row_tile(n), Some(w));
+        svc2.shutdown();
     }
 
     #[test]

@@ -10,8 +10,11 @@
 //! Records are keyed per [`TransformKind`] plane: real (r2c) planes run
 //! roughly 2x faster than c2c, so their measured surfaces — and hence
 //! their POPTA/HPOPTA partitions and pad choices — are separate
-//! artifacts. The JSON artifact is **version 3** (per-record `kind`
-//! field); version-2 files load with every record as c2c.
+//! artifacts. The JSON artifact is **version 4** (adds the measured
+//! row-tile widths of [`crate::dft::exec::calibrate_row_tile`] as a
+//! `tiles` array); version-3 files load with no tiles — the executor
+//! falls back to the modeled width — and version-2 files additionally
+//! load with every record as c2c.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -457,14 +460,36 @@ impl WisdomRecord {
 /// `(engine, n, p, kind)` — what a plan depends on.
 pub type WisdomKey = (String, usize, usize, TransformKind);
 
+/// One measured row-tile width — the winner of the executor's one-shot
+/// micro-calibration ([`crate::dft::exec::calibrate_row_tile`]) for a
+/// row length, persisted so a restarted server seeds its tile cache
+/// instead of re-timing the widths on the first cold plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TileRecord {
+    /// the row length the widths were timed at
+    pub n: usize,
+    /// the transform-kind plane the calibration ran under (c2r shares
+    /// the r2c plane, exactly like [`WisdomRecord`] keys)
+    pub kind: TransformKind,
+    /// the row-kernel generation the timing ran against
+    /// ([`crate::dft::radix::kernel_generation`]); a *different*
+    /// non-empty tag is stale at lookup — the kernel the width was
+    /// measured for no longer exists
+    pub kernel: String,
+    /// the winning tile width (1..=8)
+    pub width: usize,
+}
+
 /// The persistent map of planning outcomes, plus the per-engine online
-/// model deltas + drift log. JSON artifact version 3 (kind-keyed
-/// records); version-2 files load with every record as c2c, version-1
-/// files additionally load with no model state.
+/// model deltas + drift log and the measured row-tile widths. JSON
+/// artifact version 4 (`tiles` array); version-3 files load with no
+/// tiles, version-2 files additionally load with every record as c2c,
+/// version-1 files additionally load with no model state.
 #[derive(Clone, Debug, Default)]
 pub struct WisdomStore {
     records: BTreeMap<WisdomKey, WisdomRecord>,
     models: BTreeMap<String, OnlineModel>,
+    tiles: BTreeMap<(usize, TransformKind), TileRecord>,
 }
 
 impl WisdomStore {
@@ -544,6 +569,45 @@ impl WisdomStore {
         self.models.iter()
     }
 
+    /// Record a measured row-tile width, stamped with the installed
+    /// kernel generation (re-measuring re-stamps).
+    pub fn set_tile(&mut self, n: usize, kind: TransformKind, width: usize) {
+        let kind = kind.plan_kind();
+        self.tiles.insert(
+            (n, kind),
+            TileRecord {
+                n,
+                kind,
+                kernel: crate::dft::radix::kernel_generation().to_string(),
+                width: width.clamp(1, 8),
+            },
+        );
+    }
+
+    /// The measured tile width for a row length, or `None` when none
+    /// was recorded *or* the record was timed against a different
+    /// row-kernel generation — same staleness rule as
+    /// [`get_kind`](WisdomStore::get_kind), so a kernel upgrade forces
+    /// a re-calibration rather than applying a width tuned for a
+    /// retired kernel's port pressure.
+    pub fn tile_width(&self, n: usize, kind: TransformKind) -> Option<usize> {
+        let rec = self.tiles.get(&(n, kind.plan_kind()))?;
+        if !rec.kernel.is_empty() && rec.kernel != crate::dft::radix::kernel_generation() {
+            return None;
+        }
+        Some(rec.width)
+    }
+
+    /// Drop a measured tile width (memory-class drift invalidation:
+    /// the cache hierarchy the timing saw has changed).
+    pub fn clear_tile(&mut self, n: usize, kind: TransformKind) -> Option<TileRecord> {
+        self.tiles.remove(&(n, kind.plan_kind()))
+    }
+
+    pub fn tiles(&self) -> impl Iterator<Item = &TileRecord> {
+        self.tiles.values()
+    }
+
     pub fn to_json(&self) -> Json {
         let recs: Vec<Json> = self.records.values().map(WisdomRecord::to_json).collect();
         let models: Vec<Json> = self
@@ -551,10 +615,22 @@ impl WisdomStore {
             .iter()
             .map(|(e, m)| Json::obj().set("engine", e.as_str()).set("model", m.to_json()))
             .collect();
+        let tiles: Vec<Json> = self
+            .tiles
+            .values()
+            .map(|t| {
+                Json::obj()
+                    .set("n", t.n)
+                    .set("kind", t.kind.name())
+                    .set("kernel", t.kernel.as_str())
+                    .set("width", t.width)
+            })
+            .collect();
         Json::obj()
-            .set("version", 3i64)
+            .set("version", 4i64)
             .set("records", Json::Arr(recs))
             .set("models", Json::Arr(models))
+            .set("tiles", Json::Arr(tiles))
     }
 
     pub fn from_json(j: &Json) -> Result<WisdomStore, String> {
@@ -573,6 +649,32 @@ impl WisdomStore {
                 mj.get("model").ok_or("wisdom: model entry missing model")?,
             )?;
             store.models.insert(engine.to_string(), model);
+        }
+        // measured tile widths arrived with JSON v4 — older files load
+        // with none (the executor then falls back to the modeled
+        // width); a malformed entry is corrupt, not legacy
+        for tj in j.get("tiles").and_then(Json::as_arr).unwrap_or(&[]) {
+            let n = tj
+                .get("n")
+                .and_then(Json::as_usize)
+                .ok_or("wisdom: tile entry missing n")?;
+            let kind = match tj.get("kind").and_then(Json::as_str) {
+                Some(s) => {
+                    TransformKind::parse(s).ok_or(format!("wisdom: bad tile kind `{s}`"))?
+                }
+                None => TransformKind::C2c,
+            };
+            let width = tj
+                .get("width")
+                .and_then(Json::as_usize)
+                .ok_or("wisdom: tile entry missing width")?;
+            if width == 0 || width > 64 {
+                return Err(format!("wisdom: tile width {width} out of range for n {n}"));
+            }
+            let kernel =
+                tj.get("kernel").and_then(Json::as_str).unwrap_or_default().to_string();
+            let kind = kind.plan_kind();
+            store.tiles.insert((n, kind), TileRecord { n, kind, kernel, width });
         }
         Ok(store)
     }
@@ -740,6 +842,66 @@ mod tests {
             store.get("native", 16, 2).is_some(),
             "same-generation record must stay warm after reload"
         );
+    }
+
+    #[test]
+    fn tile_widths_roundtrip_and_go_stale_with_kernel_generation() {
+        let mut store = WisdomStore::new();
+        store.set_tile(384, TransformKind::C2c, 4);
+        store.set_tile(384, TransformKind::R2c, 2);
+        assert_eq!(store.tile_width(384, TransformKind::C2c), Some(4));
+        // c2r shares the r2c plane, exactly like plan records
+        assert_eq!(store.tile_width(384, TransformKind::C2r), Some(2));
+        // out-of-range widths are clamped at insert
+        store.set_tile(640, TransformKind::C2c, 64);
+        assert_eq!(store.tile_width(640, TransformKind::C2c), Some(8));
+        let j = Json::parse(&store.to_json().to_string()).unwrap();
+        let back = WisdomStore::from_json(&j).unwrap();
+        assert_eq!(back.tile_width(384, TransformKind::C2c), Some(4));
+        assert_eq!(back.tile_width(384, TransformKind::R2c), Some(2));
+        // a width timed against a retired kernel generation misses (the
+        // kernel whose port pressure it was tuned for no longer exists)
+        let mut stale = back.clone();
+        stale.tiles.get_mut(&(384, TransformKind::C2c)).unwrap().kernel =
+            "stockham-v1-scalar".to_string();
+        assert_eq!(stale.tile_width(384, TransformKind::C2c), None);
+        // ...while the entry itself survives until a re-measure re-stamps
+        assert_eq!(stale.tiles().count(), 3);
+        // clearing drops the entry entirely (memory-drift invalidation)
+        let mut cleared = back;
+        assert!(cleared.clear_tile(384, TransformKind::C2c).is_some());
+        assert_eq!(cleared.tile_width(384, TransformKind::C2c), None);
+        assert_eq!(cleared.tiles().count(), 2);
+    }
+
+    #[test]
+    fn v3_files_load_with_no_tiles_and_artifact_is_stamped_v4() {
+        let mut store = WisdomStore::new();
+        store.insert(demo_record());
+        store.set_tile(16, TransformKind::C2c, 4);
+        // strip the tiles array and re-stamp — a version-3 file
+        let mut j = store.to_json();
+        if let Json::Obj(fields) = &mut j {
+            fields.retain(|(k, _)| k != "tiles");
+        }
+        let j = j.set("version", 3i64);
+        let back = WisdomStore::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.len(), 1);
+        assert!(back.tiles().next().is_none(), "v3 files carry no measured widths");
+        assert_eq!(back.tile_width(16, TransformKind::C2c), None);
+        // corrupt tile entries are rejected, not defaulted
+        let bad = WisdomStore::new()
+            .to_json()
+            .set("tiles", Json::Arr(vec![Json::obj().set("n", 8usize)]));
+        assert!(WisdomStore::from_json(&bad).is_err());
+        let zero = WisdomStore::new().to_json().set(
+            "tiles",
+            Json::Arr(vec![Json::obj().set("n", 8usize).set("width", 0usize)]),
+        );
+        assert!(WisdomStore::from_json(&zero).is_err());
+        // the artifact itself is stamped v4 in pretty output (the CI
+        // upgrade smoke greps for this exact string)
+        assert!(store.to_json().to_pretty().contains("\"version\": 4"));
     }
 
     #[test]

@@ -436,6 +436,74 @@ fn prop_online_drift_no_false_positives_on_stationary_stream() {
 }
 
 #[test]
+fn prop_colphase_simd_matches_scalar_gather_bitwise() {
+    use hclfft::dft::exec::ExecCtx;
+    use hclfft::dft::pipeline::{fft_cols_fused_rect, set_col_tile_force_scalar};
+    run(
+        "colphase-simd-vs-scalar-bitwise",
+        &Config { cases: 24, ..Config::default() },
+        |rng| {
+            // 5-smooth column lengths, including non-multiple-of-4 ones
+            // (vector-rim remainders in the 4×4 tile transpose)
+            let rows = [8usize, 12, 20, 30, 40, 45, 64, 90, 100][rng.range_usize(0, 8)];
+            // width: square, packed-real (n/2+1 — always odd here), or
+            // arbitrary rectangular
+            let cols = match rng.range_usize(0, 2) {
+                0 => rows,
+                1 => rows / 2 + 1,
+                _ => rng.range_usize(1, 70),
+            };
+            let threads = 1 + rng.range_usize(0, 3);
+            let dir =
+                if rng.next_f64() < 0.5 { Direction::Forward } else { Direction::Inverse };
+            (rows, cols, threads, dir, rng.next_u64())
+        },
+        |_| vec![],
+        |&(rows, cols, threads, dir, seed)| {
+            let ctx = ExecCtx::new(threads);
+            let base = SignalMatrix::random(rows, cols, seed);
+            let mut vector = base.clone();
+            let mut scalar = base.clone();
+            // The toggle is process-global, so both passes run inside
+            // this one case and the forcing is always restored. Other
+            // tests observing a transient flip only vary in speed: the
+            // SIMD gather/scatter is bit-identical by contract — the
+            // very property under test.
+            set_col_tile_force_scalar(false);
+            fft_cols_fused_rect(
+                &ctx,
+                &mut vector.re,
+                &mut vector.im,
+                rows,
+                cols,
+                rows,
+                dir,
+                threads,
+            );
+            set_col_tile_force_scalar(true);
+            fft_cols_fused_rect(
+                &ctx,
+                &mut scalar.re,
+                &mut scalar.im,
+                rows,
+                cols,
+                rows,
+                dir,
+                threads,
+            );
+            set_col_tile_force_scalar(false);
+            if vector != scalar {
+                return Err(format!(
+                    "simd/scalar column phase mismatch {} (rows {rows}, cols {cols}, threads {threads})",
+                    vector.max_abs_diff(&scalar)
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_wisdom_record_json_roundtrip() {
     use hclfft::coordinator::pad::PadDecision;
     use hclfft::coordinator::partition::Algorithm;

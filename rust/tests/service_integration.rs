@@ -115,10 +115,10 @@ fn real_responses_bit_exact_and_wisdom_kind_keyed() {
 
 /// A committed version-2 wisdom file (no `kind` fields) upgrades
 /// cleanly: every record loads as c2c, and re-saving writes the
-/// kind-keyed version-3 artifact. The CI `wisdom` smoke drives the same
+/// current version-4 artifact. The CI `wisdom` smoke drives the same
 /// upgrade through the CLI.
 #[test]
-fn v2_wisdom_file_upgrades_to_kind_keyed_v3() {
+fn v2_wisdom_file_upgrades_to_current_version() {
     let store =
         WisdomStore::load(std::path::Path::new("rust/tests/fixtures/wisdom_v2.json")).unwrap();
     assert_eq!(store.len(), 1);
@@ -126,7 +126,42 @@ fn v2_wisdom_file_upgrades_to_kind_keyed_v3() {
     assert_eq!(rec.kind(), TransformKind::C2c);
     assert_eq!(rec.plan.d, vec![10, 6]);
     let j = store.to_json();
-    assert_eq!(j.get("version").and_then(hclfft::util::json::Json::as_usize), Some(3));
+    assert_eq!(j.get("version").and_then(hclfft::util::json::Json::as_usize), Some(4));
+}
+
+/// A committed version-3 wisdom file (kind-keyed records, no `tiles`
+/// array) upgrades cleanly: records keep their kinds, the store starts
+/// with no measured tile widths (the executor falls back to the
+/// modeled widths), and the save → load roundtrip of the upgraded
+/// store preserves both the records and any tiles recorded after the
+/// upgrade.
+#[test]
+fn v3_wisdom_file_upgrades_to_v4_and_roundtrips() {
+    let mut store =
+        WisdomStore::load(std::path::Path::new("rust/tests/fixtures/wisdom_v3.json")).unwrap();
+    assert_eq!(store.len(), 1);
+    let rec = store
+        .get_kind("native", 16, 2, TransformKind::R2c)
+        .expect("v3 kind-keyed record loads under its own plane");
+    assert_eq!(rec.kind(), TransformKind::R2c);
+    assert_eq!(rec.plan.d, vec![12, 4]);
+    assert!(store.tiles().next().is_none(), "v3 files carry no measured tile widths");
+    assert_eq!(store.tile_width(16, TransformKind::R2c), None);
+    // re-saving stamps v4; a width recorded post-upgrade survives the
+    // save → load roundtrip with the record intact
+    store.set_tile(16, TransformKind::R2c, 4);
+    let path = tmp_path("v3upgrade");
+    store.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"version\": 4"), "upgraded artifact must be stamped v4");
+    let back = WisdomStore::load(&path).unwrap();
+    assert_eq!(back.tile_width(16, TransformKind::R2c), Some(4));
+    // c2r shares the r2c plane for tiles exactly like plan records
+    assert_eq!(back.tile_width(16, TransformKind::C2r), Some(4));
+    assert_eq!(
+        back.get_kind("native", 16, 2, TransformKind::R2c).unwrap().plan.d,
+        vec![12, 4]
+    );
 }
 
 /// Satellite: 8 client threads hammer the service; every response must
