@@ -2,7 +2,7 @@
 //! batching + wisdom reuse buy on repeated same-size traffic, plus the
 //! cold-vs-warm planning gap the wisdom store closes.
 
-use hclfft::coordinator::engine::NativeEngine;
+use hclfft::coordinator::engine::{EngineId, NativeEngine};
 use hclfft::dft::SignalMatrix;
 use hclfft::service::wisdom::PlanningConfig;
 use hclfft::service::{Dft2dRequest, Dft2dService, ServiceBuilder, ServiceConfig};
@@ -45,7 +45,7 @@ fn main() {
     // reference: one-shot planned driver, sequential requests
     {
         let rec = hclfft::service::wisdom::WisdomRecord::from_measurement(
-            "native",
+            EngineId::Native,
             &NativeEngine,
             n,
             &PlanningConfig {

@@ -123,7 +123,7 @@ SUBCOMMANDS:
   run       Execute a 2D-DFT via an engine and report time/MFLOPs and
             the row kernel used (mixed-radix for 5-smooth N, Bluestein
             fallback otherwise)
-            --n <size> [--engine native|pjrt|sim] [--algo lb|fpm|fpm-pad|basic]
+            --n <size> [--engine native|pjrt] [--algo lb|fpm|fpm-pad|basic]
             [--p <groups>] [--t <threads>] [--artifacts <dir>] [--verify]
             [--kind c2c|real]   (real = r2c: a real signal transforms via
             the pair kernel into an N x (N/2+1) Hermitian-packed half
@@ -149,15 +149,22 @@ SUBCOMMANDS:
             model deltas
             --n <size[,size...]> [--requests <count-per-pass>]
             [--clients <threads>] [--reps <warm-passes>]
-            [--engine native|sim-mkl|sim-fftw3|sim-fftw2] [--p <groups>]
-            [--t <threads>] [--workers <count>] [--batch <max>]
+            [--engine native|sim-mkl|sim-fftw3|sim-fftw2|portfolio]
+            [--p <groups>] [--t <threads>] [--workers <count>] [--batch <max>]
             [--wisdom <file.json>] [--no-wisdom] [--pad] [--starve <s>]
             [--budget <s>] [--seed <u64>] [--json <file.json>] [--no-json]
             [--pipeline fused|barrier]
             [--kind c2c|real]   (real: r2c requests — batching, wisdom and
             the online model are all keyed per kind; real engines only)
-            [--drift-factor <x>]   (sim-* only: slow the virtual machine
-            by x before the warm pass to exercise drift -> re-planning)
+            [--drift-factor <x>]   (sim-*/portfolio only: slow the virtual
+            machine -- under portfolio, the incumbent member(s) -- by x
+            before the warm pass to exercise drift -> re-planning and
+            portfolio re-picking)
+            (--engine portfolio registers every sim-* member and resolves
+            each request to the model-fastest engine per (n, kind) at
+            admission; prints `portfolio:` pick lines and `portfolio
+            re-pick after drift:` lines, and persists the learned
+            per-engine surfaces in the wisdom file)
             [--mode closed|open]   (open: open-loop arrivals against a
             sharded front end — latency measured from arrival, overload
             sheds instead of queueing without bound)
@@ -180,8 +187,9 @@ SUBCOMMANDS:
             [--verify]   (check spectra against the local oracle)
             [--shutdown]   (ask the server to drain and exit)
   wisdom    Inspect or prewarm the planning wisdom store (records are
-            kind-keyed; JSON v4 adds measured row-tile widths, v3 files
-            load with no tiles, v2 files load as c2c)
+            kind-keyed; JSON v5 adds the engine-portfolio surfaces, v4
+            measured row-tile widths -- older files all load forward:
+            v3 with no tiles, v2 as c2c)
             [--file <file.json>] [--prewarm <size[,size...]>]
             [--engine native|sim-mkl|...] [--p <groups>] [--t <threads>]
             [--pad] [--budget <s>] [--kind c2c|real]

@@ -1,4 +1,5 @@
-//! `RowFftEngine` — the compute abstraction the PFFT drivers dispatch to.
+//! `RowFftEngine` — the compute abstraction the PFFT drivers dispatch to
+//! — plus the typed engine identity layer built on top of it.
 //!
 //! The paper's abstract processors execute "series of row 1D-FFTs"
 //! (`1D_ROW_FFTS_LOCAL`); the engine trait is exactly that call. Three
@@ -14,22 +15,70 @@
 //! Engines operate on raw split-plane row slices so the drivers can hand
 //! disjoint row ranges to concurrent abstract-processor threads with
 //! `split_at_mut` — no interior locking on the hot path.
+//!
+//! On top of the trait sit the identity and construction APIs the rest
+//! of the repo names engines by:
+//!
+//! * [`EngineId`] — the first-class engine identity (the paper's
+//!   *package* axis: choosing among FFT implementations is itself a
+//!   model decision). Replaces the bare strings previously threaded
+//!   through wisdom keys, batch keys and service admission; parse one
+//!   with [`EngineId::parse`]/`FromStr`, render with `Display`/
+//!   [`EngineId::as_str`]. The canonical string is also the wire and
+//!   persistence encoding, so old wisdom files and old clients
+//!   interoperate losslessly.
+//! * [`EngineRegistry`] — the single construction seam: every consumer
+//!   (CLI subcommands, `Dft2dService`, the serve front end) obtains a
+//!   backend through [`EngineRegistry::build`] instead of a per-call-site
+//!   `match` on strings.
 
 use crate::dft::fft::Direction;
+use crate::dft::real::TransformKind;
+use crate::simulator::Package;
 
 /// Errors an engine can raise (artifact-backed engines can fail on
 /// unsupported shapes; the native engine is total). Display/Error are
 /// hand-implemented — the offline vendor set has no `thiserror`.
 #[derive(Debug)]
 pub enum EngineError {
-    UnsupportedLength(usize, String),
+    /// The engine cannot execute rows of this length. Engines construct
+    /// it with [`EngineError::unsupported_length`] (they do not know the
+    /// transform kind); the batching layer attaches the request context
+    /// via [`EngineError::with_kind`] so a mid-batch failure names the
+    /// `(n, kind, engine)` the admission-side validation knew.
+    UnsupportedLength {
+        n: usize,
+        engine: String,
+        kind: Option<TransformKind>,
+    },
     Runtime(String),
+}
+
+impl EngineError {
+    /// An unsupported-length error with no transform-kind context yet.
+    pub fn unsupported_length(n: usize, engine: impl Into<String>) -> EngineError {
+        EngineError::UnsupportedLength { n, engine: engine.into(), kind: None }
+    }
+
+    /// Attach the transform kind the failing batch was executing —
+    /// engines raise length errors without it, the service layer has it.
+    pub fn with_kind(self, kind: TransformKind) -> EngineError {
+        match self {
+            EngineError::UnsupportedLength { n, engine, .. } => {
+                EngineError::UnsupportedLength { n, engine, kind: Some(kind) }
+            }
+            other => other,
+        }
+    }
 }
 
 impl std::fmt::Display for EngineError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            EngineError::UnsupportedLength(n, engine) => {
+            EngineError::UnsupportedLength { n, engine, kind: Some(k) } => {
+                write!(f, "row length {n} ({} plane) not supported by engine `{engine}`", k.name())
+            }
+            EngineError::UnsupportedLength { n, engine, kind: None } => {
                 write!(f, "row length {n} not supported by engine `{engine}`")
             }
             EngineError::Runtime(msg) => write!(f, "runtime failure: {msg}"),
@@ -38,6 +87,177 @@ impl std::fmt::Display for EngineError {
 }
 
 impl std::error::Error for EngineError {}
+
+/// First-class engine identity.
+///
+/// `Copy` + `Ord` so it keys ordered maps directly (wisdom records,
+/// batch buckets, portfolio surfaces). The canonical string
+/// ([`EngineId::as_str`]) is the stable wire encoding: requests carry it
+/// as `u16 len + UTF-8` on the TCP protocol and wisdom JSON persists it,
+/// so every pre-redesign artifact and client parses forward losslessly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum EngineId {
+    /// the from-scratch rust FFT ([`NativeEngine`])
+    Native,
+    /// AOT JAX/Pallas artifacts via PJRT ([`crate::runtime`])
+    Pjrt,
+    /// deterministic virtual-time testbed backend for one calibrated
+    /// package ([`crate::simulator`])
+    Sim(Package),
+    /// not one engine but a policy: admission resolves each request to
+    /// the fastest registered member engine per `(n, kind)` via the
+    /// portfolio model ([`crate::model::PortfolioModel`])
+    Portfolio,
+}
+
+impl EngineId {
+    /// Every id (construction-order stable; used by roundtrip tests).
+    pub const ALL: [EngineId; 6] = [
+        EngineId::Native,
+        EngineId::Pjrt,
+        EngineId::Sim(Package::Fftw2),
+        EngineId::Sim(Package::Fftw3),
+        EngineId::Sim(Package::Mkl),
+        EngineId::Portfolio,
+    ];
+
+    /// Canonical name — also the persisted/wire spelling. Stable.
+    pub const fn as_str(&self) -> &'static str {
+        match self {
+            EngineId::Native => "native",
+            EngineId::Pjrt => "pjrt",
+            EngineId::Sim(Package::Fftw2) => "sim-fftw2",
+            EngineId::Sim(Package::Fftw3) => "sim-fftw3",
+            EngineId::Sim(Package::Mkl) => "sim-mkl",
+            EngineId::Portfolio => "portfolio",
+        }
+    }
+
+    /// Parse an engine name. Canonical spellings plus every
+    /// `sim-<alias>` the package parser accepts (`sim-fftw-3.3.7`, ...),
+    /// so engine strings from old wisdom files and old clients all
+    /// resolve to the same typed id.
+    pub fn parse(s: &str) -> Option<EngineId> {
+        match s {
+            "native" => Some(EngineId::Native),
+            "pjrt" => Some(EngineId::Pjrt),
+            "portfolio" => Some(EngineId::Portfolio),
+            _ => s.strip_prefix("sim-").and_then(Package::parse).map(EngineId::Sim),
+        }
+    }
+
+    /// Stable numeric encoding for compact binary contexts. Append-only:
+    /// codes are never reassigned (the same contract as
+    /// [`crate::service::ServiceError::code`]).
+    pub const fn wire_code(&self) -> u8 {
+        match self {
+            EngineId::Native => 0,
+            EngineId::Pjrt => 1,
+            EngineId::Sim(Package::Fftw2) => 2,
+            EngineId::Sim(Package::Fftw3) => 3,
+            EngineId::Sim(Package::Mkl) => 4,
+            EngineId::Portfolio => 5,
+        }
+    }
+
+    pub const fn from_wire_code(code: u8) -> Option<EngineId> {
+        match code {
+            0 => Some(EngineId::Native),
+            1 => Some(EngineId::Pjrt),
+            2 => Some(EngineId::Sim(Package::Fftw2)),
+            3 => Some(EngineId::Sim(Package::Fftw3)),
+            4 => Some(EngineId::Sim(Package::Mkl)),
+            5 => Some(EngineId::Portfolio),
+            _ => None,
+        }
+    }
+
+    /// Is this a virtual-time testbed backend?
+    pub const fn is_sim(&self) -> bool {
+        matches!(self, EngineId::Sim(_))
+    }
+
+    /// The calibrated package behind a `sim-*` id.
+    pub const fn package(&self) -> Option<Package> {
+        match self {
+            EngineId::Sim(p) => Some(*p),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for EngineId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for EngineId {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<EngineId, String> {
+        EngineId::parse(s).ok_or_else(|| {
+            format!("unknown engine `{s}` (native|pjrt|sim-fftw2|sim-fftw3|sim-mkl|portfolio)")
+        })
+    }
+}
+
+/// One backend as [`EngineRegistry::build`] constructs it.
+pub enum BuiltEngine {
+    /// a real engine executing FFTs, shareable across worker threads
+    Real(std::sync::Arc<dyn RowFftEngine + Send + Sync>),
+    /// a virtual-time backend: requests are priced by the calibrated
+    /// package model, never executed
+    Virtual(Package),
+}
+
+/// The single engine-construction seam. Replaces the per-call-site
+/// `match engine_name { ... }` arms previously scattered across the CLI
+/// subcommands, `ServiceBuilder` and the serve front end — a new engine
+/// (FFTW FFI, revived PJRT) slots in here once and every consumer gets
+/// it.
+#[derive(Clone, Debug, Default)]
+pub struct EngineRegistry {
+    artifacts: Option<std::path::PathBuf>,
+}
+
+impl EngineRegistry {
+    /// A registry for artifact-free engines (everything but `pjrt`).
+    pub fn new() -> EngineRegistry {
+        EngineRegistry::default()
+    }
+
+    /// A registry that can additionally build the artifact-backed
+    /// `pjrt` engine from `<dir>/manifest.tsv`.
+    pub fn with_artifacts(dir: impl Into<std::path::PathBuf>) -> EngineRegistry {
+        EngineRegistry { artifacts: Some(dir.into()) }
+    }
+
+    /// Construct the backend for an id. `Portfolio` is deliberately not
+    /// buildable — it is a planning mode resolved at admission, not an
+    /// engine; register its members and enable it via
+    /// `ServiceBuilder::portfolio`.
+    pub fn build(&self, id: EngineId) -> Result<BuiltEngine, String> {
+        match id {
+            EngineId::Native => Ok(BuiltEngine::Real(std::sync::Arc::new(NativeEngine))),
+            EngineId::Pjrt => {
+                let dir = self.artifacts.as_ref().ok_or_else(|| {
+                    "engine `pjrt` needs an artifacts directory \
+                     (EngineRegistry::with_artifacts / --artifacts)"
+                        .to_string()
+                })?;
+                let eng = crate::runtime::PjrtRowFftEngine::load(dir).map_err(|e| e.to_string())?;
+                Ok(BuiltEngine::Real(std::sync::Arc::new(eng)))
+            }
+            EngineId::Sim(pkg) => Ok(BuiltEngine::Virtual(pkg)),
+            EngineId::Portfolio => Err(
+                "`portfolio` is a planning mode, not a buildable engine: register member \
+                 engines and resolve per request (ServiceBuilder::portfolio)"
+                    .to_string(),
+            ),
+        }
+    }
+}
 
 /// A compute engine executing batches of row 1D-FFTs in place.
 pub trait RowFftEngine: Sync {

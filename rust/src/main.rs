@@ -26,7 +26,9 @@ use std::path::{Path, PathBuf};
 
 use hclfft::cli;
 use hclfft::config::Config;
-use hclfft::coordinator::engine::{NativeEngine, RowFftEngine};
+use hclfft::coordinator::engine::{
+    BuiltEngine, EngineId, EngineRegistry, NativeEngine, RowFftEngine,
+};
 use hclfft::coordinator::group::GroupConfig;
 use hclfft::coordinator::pad::PadCost;
 use hclfft::coordinator::pfft::{
@@ -38,7 +40,6 @@ use hclfft::dft::SignalMatrix;
 use hclfft::figures::{generate, generate_all, Ctx};
 use hclfft::model::PerfModel;
 use hclfft::profiler::{build_fpms, ProfileSpec};
-use hclfft::runtime::PjrtRowFftEngine;
 use hclfft::simulator::vexec::{Campaign, CampaignSummary};
 use hclfft::simulator::Package;
 use hclfft::stats::{mean_using_ttest, TtestPolicy};
@@ -136,11 +137,19 @@ fn cmd_plan(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     Ok(())
 }
 
-fn make_engine(name: &str, artifacts: &Path) -> Result<Box<dyn RowFftEngine>, String> {
-    match name {
-        "native" => Ok(Box::new(NativeEngine)),
-        "pjrt" => Ok(Box::new(PjrtRowFftEngine::load(artifacts).map_err(|e| e.to_string())?)),
-        other => Err(format!("unknown engine `{other}` (native|pjrt)")),
+/// Build a real (executing) engine through the [`EngineRegistry`]
+/// seam; sim-* and `portfolio` ids are serving-side concepts and are
+/// rejected here with a pointer at the subcommands that drive them.
+fn make_engine(
+    id: EngineId,
+    artifacts: &Path,
+) -> Result<std::sync::Arc<dyn RowFftEngine + Send + Sync>, String> {
+    match EngineRegistry::with_artifacts(artifacts).build(id)? {
+        BuiltEngine::Real(e) => Ok(e),
+        BuiltEngine::Virtual(_) => Err(format!(
+            "engine `{id}` is a virtual-time backend; drive it with `serve-bench`/`simulate` \
+             (run/bench/profile execute real FFTs)"
+        )),
     }
 }
 
@@ -189,7 +198,8 @@ fn cmd_run(args: &cli::Args, cfg: &Config, bench: bool) -> Result<(), String> {
         .opt("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(|| cfg.artifacts_dir.clone());
-    let engine = make_engine(&args.opt_or("engine", "native"), &artifacts)?;
+    let engine_id: EngineId = args.opt_or("engine", "native").parse()?;
+    let engine = make_engine(engine_id, &artifacts)?;
     let seed = args.opt_usize("seed")?.unwrap_or(42) as u64;
     let grp = GroupConfig::new(p, t);
 
@@ -263,7 +273,7 @@ fn cmd_run(args: &cli::Args, cfg: &Config, bench: bool) -> Result<(), String> {
     // by length (mixed-radix for 5-smooth, Bluestein else) — with
     // padding, the row phases run at the *pad* lengths; other engines
     // bring their own kernels (PJRT executes pow2 AOT artifacts)
-    let kernel = if args.opt_or("engine", "native") == "native" {
+    let kernel = if engine_id == EngineId::Native {
         let lens = if algo == "fpm-pad" { plan.pad_lens() } else { vec![n] };
         kernel_label(&lens)
     } else {
@@ -344,7 +354,7 @@ fn cmd_profile(args: &cli::Args, cfg: &Config) -> Result<(), String> {
         .opt("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(|| cfg.artifacts_dir.clone());
-    let engine = make_engine(&args.opt_or("engine", "native"), &artifacts)?;
+    let engine = make_engine(args.opt_or("engine", "native").parse::<EngineId>()?, &artifacts)?;
     let mut spec = ProfileSpec::new(xs, ys, GroupConfig::new(p, t));
     spec.rep_scale = args.opt_usize("scale")?.unwrap_or(cfg.rep_scale);
     if let Some(b) = args.opt_f64("budget")? {
@@ -405,24 +415,27 @@ fn kernel_label(lens: &[usize]) -> String {
 /// phases actually execute, or a non-kernel marker for virtual /
 /// artifact-backed engines.
 fn record_kernel(rec: &hclfft::service::wisdom::WisdomRecord) -> String {
-    if rec.engine.starts_with("sim-") {
+    if rec.engine.is_sim() {
         return "virtual".to_string();
     }
-    if rec.engine != "native" {
+    if rec.engine != EngineId::Native {
         return "engine-defined".to_string();
     }
     kernel_label(&rec.plan.pad_lens())
 }
 
-/// `sim-<pkg>` engine names resolve to a virtual-testbed package;
-/// anything else returns Ok(None). Bad `sim-` suffixes are errors.
+/// `sim-<pkg>` engine names resolve to a virtual-testbed package (via
+/// [`EngineId::parse`], so every package alias the typed layer accepts
+/// works here too); anything else returns Ok(None). Bad `sim-`
+/// suffixes are errors.
 fn sim_package(engine: &str) -> Result<Option<Package>, String> {
-    match engine.strip_prefix("sim-") {
-        Some(pkg_name) => Package::parse(pkg_name)
-            .map(Some)
-            .ok_or_else(|| format!("unknown simulator package `{pkg_name}`")),
-        None => Ok(None),
+    if !engine.starts_with("sim-") {
+        return Ok(None);
     }
+    EngineId::parse(engine)
+        .and_then(|id| id.package())
+        .map(Some)
+        .ok_or_else(|| format!("unknown simulator package `{engine}`"))
 }
 
 /// The shared `--p/--t/--pad/--budget` → PlanningConfig plumbing of
@@ -441,20 +454,33 @@ fn planning_from_args(
     })
 }
 
-/// Build a service backend registry entry from an engine name:
-/// "native" is the real from-scratch engine, "sim-<pkg>" the
-/// deterministic virtual-time testbed.
+/// The calibrated sim-* members `--engine portfolio` registers. Their
+/// crossover structure (MKL wins small sizes, FFTW3 large ones) is what
+/// makes per-`(n, kind)` engine selection non-trivial.
+const PORTFOLIO_MEMBERS: [EngineId; 3] = [
+    EngineId::Sim(Package::Fftw2),
+    EngineId::Sim(Package::Fftw3),
+    EngineId::Sim(Package::Mkl),
+];
+
+/// Register the backend(s) for one `--engine` id through the
+/// [`EngineRegistry`] seam: real/sim ids map to a single backend;
+/// `portfolio` registers every sim-* member and enables portfolio
+/// planning, so admission resolves each request to the fastest member
+/// per `(n, kind)`.
 fn service_builder_for_engine(
     builder: hclfft::service::ServiceBuilder,
-    engine: &str,
+    registry: &EngineRegistry,
+    id: EngineId,
 ) -> Result<hclfft::service::ServiceBuilder, String> {
-    if engine == "native" {
-        return Ok(builder.native());
+    if id == EngineId::Portfolio {
+        let mut b = builder;
+        for m in PORTFOLIO_MEMBERS {
+            b = b.engine_id(registry, m)?;
+        }
+        return Ok(b.portfolio(PORTFOLIO_MEMBERS.to_vec()));
     }
-    if let Some(pkg) = sim_package(engine)? {
-        return Ok(builder.virtual_package(engine, pkg));
-    }
-    Err(format!("unknown service engine `{engine}` (native|sim-mkl|sim-fftw3|sim-fftw2)"))
+    builder.engine_id(registry, id)
 }
 
 fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
@@ -480,9 +506,11 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     let requests = args.opt_usize("requests")?.unwrap_or(64).max(1);
     let clients = args.opt_usize("clients")?.unwrap_or(8).max(1);
     let reps = args.opt_usize("reps")?.unwrap_or(1).max(1);
-    let engine = args.opt_or("engine", "native");
+    let engine: EngineId = args.opt_or("engine", "native").parse()?;
     let seed = args.opt_usize("seed")?.unwrap_or(42) as u64;
-    let virtual_engine = engine.starts_with("sim-");
+    let portfolio = engine == EngineId::Portfolio;
+    // the portfolio's members are sim-* backends: priced in virtual time
+    let virtual_engine = engine.is_sim() || portfolio;
     if kind.is_real() && virtual_engine {
         return Err("--kind real requires a real engine (sim-* backends price c2c only)".into());
     }
@@ -494,7 +522,7 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     let drift_factor = args.opt_f64("drift-factor")?;
     if let Some(f) = drift_factor {
         if !virtual_engine {
-            return Err("--drift-factor requires a sim-* engine (virtual time)".into());
+            return Err("--drift-factor requires a sim-* or portfolio engine (virtual time)".into());
         }
         if !(f.is_finite() && f > 0.0) {
             return Err("--drift-factor must be a positive number".into());
@@ -520,7 +548,8 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
 
     let workers = scfg.workers;
     let max_batch = scfg.max_batch;
-    let mut builder = service_builder_for_engine(ServiceBuilder::new(scfg), &engine)?;
+    let registry = EngineRegistry::new();
+    let mut builder = service_builder_for_engine(ServiceBuilder::new(scfg), &registry, engine)?;
     if let Some(path) = wisdom_path.as_ref().filter(|p| p.exists()) {
         builder = builder.load_wisdom(path)?;
     }
@@ -544,7 +573,7 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
 
     // one closed-loop pass: each client owns its share of the request
     // budget and waits for every response before the next send
-    let engine_name: &str = &engine;
+    let engine_str: &str = engine.as_str();
     let run_pass = |pass: u64| -> Vec<String> {
         let failures: std::sync::Mutex<Vec<String>> = std::sync::Mutex::new(Vec::new());
         std::thread::scope(|scope| {
@@ -557,7 +586,7 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
                     for i in 0..mine {
                         let n = ns[(c + i) % ns.len()];
                         let req = if virtual_engine {
-                            Dft2dRequest::probe(engine_name, n)
+                            Dft2dRequest::probe(engine_str, n)
                         } else {
                             // hash (seed, pass, client, i): collision-free
                             // regardless of request division
@@ -566,12 +595,12 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
                             ]);
                             if kind == TransformKind::R2c {
                                 Dft2dRequest::real_forward(
-                                    engine_name,
+                                    engine_str,
                                     hclfft::dft::SignalMatrix::random_real(n, n, mseed),
                                 )
                             } else {
                                 Dft2dRequest::forward(
-                                    engine_name,
+                                    engine_str,
                                     hclfft::dft::SignalMatrix::random(n, n, mseed),
                                 )
                             }
@@ -598,8 +627,29 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     let cold = svc.stats_since_mark();
     println!("{}", cold.render_table(&format!("serve-bench {engine} — cold pass")));
     if let Some(f) = drift_factor {
-        println!("injecting virtual machine slowdown x{f} before the warm pass");
-        svc.set_virtual_slowdown(&engine, f);
+        if portfolio {
+            // slow the incumbent member(s) the cold pass settled on: their
+            // drift detectors fire in the warm pass and the portfolio must
+            // re-pick toward an unslowed member
+            let mut incumbents: Vec<EngineId> =
+                svc.portfolio_picks().into_iter().map(|(_, _, m)| m).collect();
+            incumbents.sort_unstable();
+            incumbents.dedup();
+            if incumbents.len() == PORTFOLIO_MEMBERS.len() {
+                // keep at least one member unslowed so a strictly faster
+                // alternative exists to re-pick onto
+                incumbents.pop();
+            }
+            for m in incumbents {
+                println!(
+                    "injecting virtual machine slowdown x{f} on incumbent {m} before the warm pass"
+                );
+                svc.set_virtual_slowdown(m.as_str(), f);
+            }
+        } else {
+            println!("injecting virtual machine slowdown x{f} before the warm pass");
+            svc.set_virtual_slowdown(engine.as_str(), f);
+        }
     }
     let mut warm_reps: Vec<hclfft::service::stats::ServiceStats> = Vec::with_capacity(reps);
     for r in 0..reps {
@@ -623,8 +673,17 @@ fn cmd_serve_bench(args: &cli::Args, cfg: &Config) -> Result<(), String> {
         );
     }
 
+    if portfolio {
+        for (n, k, m) in svc.portfolio_picks() {
+            println!("portfolio: n {n} {} -> {m}", k.name());
+        }
+        for ev in svc.portfolio_repicks() {
+            println!("portfolio re-pick after drift: {ev}");
+        }
+    }
+
     let total = svc.stats();
-    let model = svc.model_snapshot(&hclfft::service::model_key(&engine, kind));
+    let model = svc.model_snapshot(&hclfft::service::model_key(engine.as_str(), kind));
     let (obs, points) = model.as_ref().map_or((0, 0), |m| (m.observations(), m.len()));
     println!(
         "planning: {} cold event(s), {} warm wisdom hit(s)",
@@ -731,7 +790,14 @@ fn cmd_serve_bench_open(args: &cli::Args, cfg: &Config) -> Result<(), String> {
         return Err("--n requires at least one size".into());
     }
     let requests = args.opt_usize("requests")?.unwrap_or(200).max(1);
-    let engine = args.opt_or("engine", "sim-mkl");
+    let engine: EngineId = args.opt_or("engine", "sim-mkl").parse()?;
+    if engine == EngineId::Portfolio {
+        return Err(
+            "--mode open drives one engine per run; portfolio planning is the closed-loop \
+             serve-bench (omit --mode)"
+                .into(),
+        );
+    }
     let seed = args.opt_usize("seed")?.unwrap_or(42) as u64;
     let shard_count = args.opt_usize("shards")?.unwrap_or(2).max(1);
     let capacity = args.opt_usize("capacity")?.unwrap_or(8).max(1);
@@ -750,14 +816,14 @@ fn cmd_serve_bench_open(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     if slowdowns.len() != shard_count {
         return Err(format!("--slowdowns needs exactly {shard_count} value(s)"));
     }
-    if kind.is_real() && engine.starts_with("sim-") {
+    if kind.is_real() && engine.is_sim() {
         return Err("--kind real requires a real engine (sim-* backends price c2c only)".into());
     }
     let rate_arg = args.opt_f64("rate")?;
     let arrivals_name = args.opt_or("arrivals", "poisson");
 
     let mut reports: Vec<OpenLoopReport> = Vec::new();
-    if let Some(pkg) = sim_package(&engine)? {
+    if let Some(pkg) = engine.package() {
         let base: Vec<f64> = ns
             .iter()
             .map(|&n| hclfft::simulator::vexec::predict_point(pkg, n).t_fpm)
@@ -826,16 +892,21 @@ fn cmd_serve_bench_open(args: &cli::Args, cfg: &Config) -> Result<(), String> {
              live",
             kind.name()
         );
+        let registry = EngineRegistry::new();
         for (pass, &policy) in policies.iter().enumerate() {
             let mut fb = FrontBuilder::new(FrontConfig { capacity, policy });
             for j in 0..shard_count {
                 fb = fb.shard(
                     &format!("s{j}"),
-                    service_builder_for_engine(ServiceBuilder::new(scfg.clone()), &engine)?,
+                    service_builder_for_engine(
+                        ServiceBuilder::new(scfg.clone()),
+                        &registry,
+                        engine,
+                    )?,
                 );
             }
             let front = fb.build();
-            let engine_name: &str = &engine;
+            let engine_str: &str = engine.as_str();
             let spec = OpenLoopSpec { requests, arrivals };
             let rep = run_open_loop(
                 &front,
@@ -845,11 +916,11 @@ fn cmd_serve_bench_open(args: &cli::Args, cfg: &Config) -> Result<(), String> {
                         hclfft::util::prng::hash_key(&[seed, pass as u64, i as u64]);
                     if kind == TransformKind::R2c {
                         Dft2dRequest::real_forward(
-                            engine_name,
+                            engine_str,
                             SignalMatrix::random_real(n, n, mseed),
                         )
                     } else {
-                        Dft2dRequest::forward(engine_name, SignalMatrix::random(n, n, mseed))
+                        Dft2dRequest::forward(engine_str, SignalMatrix::random(n, n, mseed))
                     }
                 },
                 &spec,
@@ -937,7 +1008,7 @@ fn serve_net_server(args: &cli::Args, cfg: &Config, addr: &str) -> Result<(), St
     use hclfft::serve::{FrontBuilder, FrontConfig, NetConfig, NetServer, RoutePolicy};
     use hclfft::service::{ServiceBuilder, ServiceConfig};
 
-    let engine = args.opt_or("engine", "native");
+    let engine: EngineId = args.opt_or("engine", "native").parse()?;
     let shard_count = args.opt_usize("shards")?.unwrap_or(2).max(1);
     let capacity = args.opt_usize("capacity")?.unwrap_or(64).max(1);
     let policy = RoutePolicy::parse(&args.opt_or("route", "model"))
@@ -958,9 +1029,11 @@ fn serve_net_server(args: &cli::Args, cfg: &Config, addr: &str) -> Result<(), St
     } else {
         Some(PathBuf::from(args.opt_or("wisdom", "results/wisdom.json")))
     };
+    let registry = EngineRegistry::new();
     let mut fb = FrontBuilder::new(FrontConfig { capacity, policy });
     for j in 0..shard_count {
-        let mut b = service_builder_for_engine(ServiceBuilder::new(scfg.clone()), &engine)?;
+        let mut b =
+            service_builder_for_engine(ServiceBuilder::new(scfg.clone()), &registry, engine)?;
         if let Some(path) = wisdom_path.as_ref().filter(|p| p.exists()) {
             b = b.load_wisdom(path)?;
         }
@@ -1157,30 +1230,28 @@ fn cmd_wisdom(args: &cli::Args, cfg: &Config) -> Result<(), String> {
 
     if let Some(list) = args.opt("prewarm") {
         let sizes = parse_csv_usize(list)?;
-        let engine = args.opt_or("engine", "native");
+        let engine: EngineId = args.opt_or("engine", "native").parse()?;
         let kind = kind_from_args(args)?;
         let planning = planning_from_args(args, cfg)?;
-        if engine.starts_with("sim-") && (args.opt("p").is_some() || args.opt("t").is_some()) {
+        if engine.is_sim() && (args.opt("p").is_some() || args.opt("t").is_some()) {
             eprintln!(
                 "note: sim-* engines pin their package's paper-best (p, t); --p/--t are ignored"
             );
         }
         for &n in &sizes {
-            let rec = if let Some(pkg) = sim_package(&engine)? {
-                if kind.is_real() {
-                    return Err("--kind real requires a real engine for prewarm".into());
+            let rec = match engine {
+                EngineId::Sim(pkg) => {
+                    if kind.is_real() {
+                        return Err("--kind real requires a real engine for prewarm".into());
+                    }
+                    WisdomRecord::from_simulator(pkg, n, planning.pad_cost.is_some())
                 }
-                WisdomRecord::from_simulator(&engine, pkg, n, planning.pad_cost.is_some())
-            } else if engine == "native" {
-                WisdomRecord::from_measurement_kind(
-                    &engine,
-                    &hclfft::coordinator::engine::NativeEngine,
-                    n,
-                    &planning,
-                    kind,
-                )
-            } else {
-                return Err(format!("unknown engine `{engine}` for prewarm"));
+                EngineId::Native => {
+                    WisdomRecord::from_measurement_kind(engine, &NativeEngine, n, &planning, kind)
+                }
+                other => {
+                    return Err(format!("engine `{other}` is not prewarmable (native|sim-*)"))
+                }
             };
             println!(
                 "prewarmed {engine} {} N={n}: d = {:?}, algo {}, kernel {}, predicted {:.6}s",
@@ -1202,7 +1273,7 @@ fn cmd_wisdom(args: &cli::Args, cfg: &Config) -> Result<(), String> {
     );
     for rec in store.iter() {
         table.row(vec![
-            rec.engine.clone(),
+            rec.engine.to_string(),
             rec.n.to_string(),
             rec.p.to_string(),
             rec.t.to_string(),
@@ -1308,7 +1379,7 @@ fn cmd_model(args: &cli::Args) -> Result<(), String> {
         } else {
             store
                 .iter()
-                .find(|r| r.engine == engine && r.n == n && !r.fpms.is_empty())
+                .find(|r| r.engine.as_str() == engine && r.n == n && !r.fpms.is_empty())
                 .map(|r| Box::new(StaticModel::new(r.fpms.clone())) as Box<dyn PerfModel>)
         };
         match model {

@@ -25,13 +25,19 @@
 //!   streamed), detects drift via the paper's Eq-1 `variation_pct`, and
 //!   lets the serving layer invalidate wisdom and re-plan against
 //!   sections rescaled to the machine's current speed.
+//! * [`PortfolioModel`] — lifts the modeling one level up, to the
+//!   paper's *package* axis: per-engine cost surfaces keyed
+//!   `(engine, n, kind)` answer which registered engine should run a
+//!   request, with drift on the incumbent forcing a re-pick.
 
 pub mod online;
+pub mod portfolio;
 pub mod sim;
 pub mod static_model;
 pub mod surface;
 
 pub use online::{DriftClass, DriftEvent, DriftPolicy, OnlineModel, PhaseStat, PointStat};
+pub use portfolio::{PortfolioModel, RepickEvent};
 pub use sim::SimModel;
 pub use static_model::StaticModel;
 pub use surface::{

@@ -1,0 +1,419 @@
+//! `PortfolioModel` — model-driven choice *among* engines.
+//!
+//! The paper's central move is selecting among FFT packages (FFTW-2,
+//! FFTW-3, MKL) by their measured performance models; the repo's serving
+//! layer previously planned only *within* one engine per service —
+//! engine choice was a config knob, never a model output. This module
+//! makes that choice the model's job:
+//!
+//! * the portfolio holds one **cost surface per member engine**, keyed
+//!   `(engine, n, kind)` — whole-platform predicted seconds for a 2D
+//!   transform of size `n` and transform kind, profiled cold (wisdom
+//!   records / simulator beliefs) and refined by the same per-engine
+//!   [`OnlineModel`](crate::model::OnlineModel) streams that already
+//!   drive drift detection,
+//! * [`PortfolioModel::best_engine`] answers "which engine runs this
+//!   request" — the admission-side resolution that must happen *before*
+//!   bucketing, because batch buckets key on the engine,
+//! * picks are **sticky**: once an incumbent wins `(n, kind)` it keeps
+//!   winning (no flapping on noise) until
+//!   [`PortfolioModel::note_drift`] invalidates every pick held by a
+//!   drifted engine — the next request at that point re-resolves against
+//!   the refreshed surfaces, and an actual engine change is recorded in
+//!   the [`RepickEvent`] log.
+//!
+//! Surfaces are persisted in wisdom JSON v5 (a `"portfolio"` object next
+//! to `records`/`models`/`tiles`); v4 files load with an empty
+//! portfolio. See the README "Engine portfolio" section for the
+//! lifecycle walk-through.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::engine::EngineId;
+use crate::dft::real::TransformKind;
+use crate::util::json::Json;
+
+/// One logged engine change: drift on `from` invalidated the pick at
+/// `(n, kind)` and the next resolution chose `to`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RepickEvent {
+    pub n: usize,
+    pub kind: TransformKind,
+    pub from: EngineId,
+    pub to: EngineId,
+}
+
+impl std::fmt::Display for RepickEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n {} {} {} -> {}", self.n, self.kind.name(), self.from, self.to)
+    }
+}
+
+/// Per-`(engine, n, kind)` cost surfaces plus the sticky pick cache.
+///
+/// `best_engine` is deterministic: exact-point surfaces first, nearest-n
+/// fallback scaled by the `n² log n` work ratio, ties broken by member
+/// registration order.
+#[derive(Clone, Debug, Default)]
+pub struct PortfolioModel {
+    members: Vec<EngineId>,
+    /// predicted whole-transform seconds per (engine, n, kind)
+    surfaces: BTreeMap<(EngineId, usize, TransformKind), f64>,
+    /// sticky incumbents per (n, kind)
+    picks: BTreeMap<(usize, TransformKind), EngineId>,
+    /// old incumbents whose pick was drift-invalidated, awaiting the
+    /// re-resolution that decides whether an actual switch happened
+    pending: BTreeMap<(usize, TransformKind), EngineId>,
+    repicks: Vec<RepickEvent>,
+}
+
+impl PortfolioModel {
+    /// A portfolio over `members` (registration order breaks cost ties).
+    /// `Portfolio` itself is not a member and is skipped if passed.
+    pub fn new(members: Vec<EngineId>) -> PortfolioModel {
+        let mut seen = Vec::new();
+        for m in members {
+            if m != EngineId::Portfolio && !seen.contains(&m) {
+                seen.push(m);
+            }
+        }
+        PortfolioModel { members: seen, ..PortfolioModel::default() }
+    }
+
+    pub fn members(&self) -> &[EngineId] {
+        &self.members
+    }
+
+    /// Replace the member list (a service restart may register a
+    /// different engine set than the persisted portfolio knew).
+    /// Surfaces are kept — they stay keyed by engine and re-apply if the
+    /// member returns — but picks held by engines no longer registered
+    /// are dropped so resolution cannot route to a missing backend.
+    pub fn set_members(&mut self, members: Vec<EngineId>) {
+        let fresh = PortfolioModel::new(members);
+        let keep = fresh.members;
+        self.picks.retain(|_, e| keep.contains(e));
+        self.pending.retain(|_, e| keep.contains(e));
+        self.members = keep;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty() && self.surfaces.is_empty()
+    }
+
+    /// Install/overwrite the cold-profiled cost at one surface point.
+    pub fn set_surface(&mut self, engine: EngineId, n: usize, kind: TransformKind, seconds: f64) {
+        if seconds.is_finite() && seconds > 0.0 {
+            self.surfaces.insert((engine, n, kind), seconds);
+        }
+    }
+
+    /// Fold one observed/refined cost into the surface: new points are
+    /// installed as-is, existing points blend (equal-weight EWMA) so a
+    /// single noisy batch cannot swing the portfolio.
+    pub fn observe_cost(&mut self, engine: EngineId, n: usize, kind: TransformKind, seconds: f64) {
+        if !(seconds.is_finite() && seconds > 0.0) {
+            return;
+        }
+        let slot = self.surfaces.entry((engine, n, kind)).or_insert(seconds);
+        *slot = 0.5 * *slot + 0.5 * seconds;
+    }
+
+    /// The stored cost at an exact surface point.
+    pub fn surface(&self, engine: EngineId, n: usize, kind: TransformKind) -> Option<f64> {
+        self.surfaces.get(&(engine, n, kind)).copied()
+    }
+
+    /// Number of stored surface points.
+    pub fn surface_len(&self) -> usize {
+        self.surfaces.len()
+    }
+
+    /// Estimated cost for `engine` at `(n, kind)`: the exact point if
+    /// stored, else the nearest-n point for the same `(engine, kind)`
+    /// scaled by the `n² log₂ n` 2D-FFT work ratio. `None` when the
+    /// engine has no surface data for this kind at all.
+    pub fn estimate(&self, engine: EngineId, n: usize, kind: TransformKind) -> Option<f64> {
+        if let Some(t) = self.surfaces.get(&(engine, n, kind)) {
+            return Some(*t);
+        }
+        let mut best: Option<(usize, f64)> = None;
+        for (&(e, sn, k), &t) in &self.surfaces {
+            if e == engine && k == kind {
+                let dist = sn.abs_diff(n);
+                if best.map(|(d, _)| dist < d).unwrap_or(true) {
+                    best = Some((dist, t * work_ratio(n, sn)));
+                }
+            }
+        }
+        best.map(|(_, t)| t)
+    }
+
+    /// Resolve the engine that should run a `(n, kind)` request.
+    ///
+    /// Sticky: a cached incumbent is returned without re-scoring until
+    /// [`note_drift`](PortfolioModel::note_drift) evicts it. On a cold
+    /// or evicted point the members are scored via
+    /// [`estimate`](PortfolioModel::estimate) (missing data loses to any
+    /// data; all-missing falls back to the first member so admission
+    /// always has an answer), the winner is cached, and — if the point
+    /// was drift-evicted and the winner differs from the old incumbent —
+    /// a [`RepickEvent`] is logged.
+    ///
+    /// `p` (requested thread budget) is accepted for signature stability
+    /// but does not discriminate yet: each member executes at its own
+    /// paper-best grouping, so the surfaces are already per-engine
+    /// whole-platform costs.
+    pub fn best_engine(&mut self, n: usize, kind: TransformKind, p: usize) -> Option<EngineId> {
+        let _ = p;
+        if let Some(&e) = self.picks.get(&(n, kind)) {
+            return Some(e);
+        }
+        let mut winner: Option<(EngineId, f64)> = None;
+        for &m in &self.members {
+            if let Some(t) = self.estimate(m, n, kind) {
+                if winner.map(|(_, best)| t < best).unwrap_or(true) {
+                    winner = Some((m, t));
+                }
+            }
+        }
+        let pick = winner.map(|(e, _)| e).or_else(|| self.members.first().copied())?;
+        self.picks.insert((n, kind), pick);
+        if let Some(old) = self.pending.remove(&(n, kind)) {
+            if old != pick {
+                self.repicks.push(RepickEvent { n, kind, from: old, to: pick });
+            }
+        }
+        Some(pick)
+    }
+
+    /// Peek at the cached incumbent without resolving.
+    pub fn pick(&self, n: usize, kind: TransformKind) -> Option<EngineId> {
+        self.picks.get(&(n, kind)).copied()
+    }
+
+    /// All cached incumbents, ordered by `(n, kind)`.
+    pub fn picks(&self) -> Vec<(usize, TransformKind, EngineId)> {
+        self.picks.iter().map(|(&(n, k), &e)| (n, k, e)).collect()
+    }
+
+    /// The drift detector fired on `engine`: evict every pick it holds
+    /// so those points re-resolve against the refreshed surfaces.
+    /// Returns how many picks were evicted.
+    pub fn note_drift(&mut self, engine: EngineId) -> usize {
+        let evicted: Vec<(usize, TransformKind)> = self
+            .picks
+            .iter()
+            .filter(|(_, &e)| e == engine)
+            .map(|(&key, _)| key)
+            .collect();
+        for key in &evicted {
+            self.picks.remove(key);
+            self.pending.insert(*key, engine);
+        }
+        evicted.len()
+    }
+
+    /// Scale every surface point of `engine` by `time_factor` (> 1 =
+    /// slower). The serving layer applies the drift event's observed
+    /// speed change so the very next re-pick sees the degraded engine —
+    /// without waiting for fresh per-point observations to trickle in.
+    pub fn scale_engine(&mut self, engine: EngineId, time_factor: f64) {
+        if !(time_factor.is_finite() && time_factor > 0.0) {
+            return;
+        }
+        for ((e, _, _), t) in self.surfaces.iter_mut() {
+            if *e == engine {
+                *t *= time_factor;
+            }
+        }
+    }
+
+    /// Chronological log of actual engine changes (drift → re-pick).
+    pub fn repick_log(&self) -> &[RepickEvent] {
+        &self.repicks
+    }
+
+    /// Wisdom v5 `"portfolio"` object.
+    pub fn to_json(&self) -> Json {
+        let members: Vec<Json> =
+            self.members.iter().map(|m| Json::Str(m.as_str().to_string())).collect();
+        let surfaces: Vec<Json> = self
+            .surfaces
+            .iter()
+            .map(|(&(e, n, k), &t)| {
+                Json::obj()
+                    .set("engine", e.as_str())
+                    .set("n", n)
+                    .set("kind", k.name())
+                    .set("t", t)
+            })
+            .collect();
+        let picks: Vec<Json> = self
+            .picks
+            .iter()
+            .map(|(&(n, k), &e)| {
+                Json::obj().set("n", n).set("kind", k.name()).set("engine", e.as_str())
+            })
+            .collect();
+        Json::obj()
+            .set("members", Json::Arr(members))
+            .set("surfaces", Json::Arr(surfaces))
+            .set("picks", Json::Arr(picks))
+    }
+
+    /// Parse a persisted portfolio. Unknown engine names are a hard
+    /// error — the typed id layer does not silently drop surfaces.
+    pub fn from_json(j: &Json) -> Result<PortfolioModel, String> {
+        let engine_of = |j: &Json, ctx: &str| -> Result<EngineId, String> {
+            let s = j
+                .get("engine")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("portfolio {ctx}: missing engine"))?;
+            EngineId::parse(s).ok_or_else(|| format!("portfolio {ctx}: unknown engine `{s}`"))
+        };
+        let kind_of = |j: &Json, ctx: &str| -> Result<TransformKind, String> {
+            let s = j
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("portfolio {ctx}: missing kind"))?;
+            TransformKind::parse(s).ok_or_else(|| format!("portfolio {ctx}: unknown kind `{s}`"))
+        };
+        let mut members = Vec::new();
+        if let Some(arr) = j.get("members").and_then(Json::as_arr) {
+            for m in arr {
+                let s = m.as_str().ok_or("portfolio members: non-string entry")?;
+                members.push(
+                    EngineId::parse(s)
+                        .ok_or_else(|| format!("portfolio members: unknown engine `{s}`"))?,
+                );
+            }
+        }
+        let mut out = PortfolioModel::new(members);
+        if let Some(arr) = j.get("surfaces").and_then(Json::as_arr) {
+            for s in arr {
+                let e = engine_of(s, "surface")?;
+                let n = s
+                    .get("n")
+                    .and_then(Json::as_usize)
+                    .ok_or("portfolio surface: bad n")?;
+                let k = kind_of(s, "surface")?;
+                let t = s.get("t").and_then(Json::as_f64).ok_or("portfolio surface: bad t")?;
+                out.set_surface(e, n, k, t);
+            }
+        }
+        if let Some(arr) = j.get("picks").and_then(Json::as_arr) {
+            for p in arr {
+                let e = engine_of(p, "pick")?;
+                let n = p.get("n").and_then(Json::as_usize).ok_or("portfolio pick: bad n")?;
+                let k = kind_of(p, "pick")?;
+                out.picks.insert((n, k), e);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// `n² log₂ n` work ratio for scaling a cost from size `from` to `to`.
+fn work_ratio(to: usize, from: usize) -> f64 {
+    let (t, f) = (to.max(2) as f64, from.max(2) as f64);
+    (t * t * t.log2()) / (f * f * f.log2())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::Package;
+
+    const FFTW3: EngineId = EngineId::Sim(Package::Fftw3);
+    const MKL: EngineId = EngineId::Sim(Package::Mkl);
+
+    fn two_member() -> PortfolioModel {
+        PortfolioModel::new(vec![FFTW3, MKL])
+    }
+
+    #[test]
+    fn picks_cheapest_and_sticks() {
+        let mut p = two_member();
+        p.set_surface(FFTW3, 1024, TransformKind::C2c, 0.010);
+        p.set_surface(MKL, 1024, TransformKind::C2c, 0.004);
+        assert_eq!(p.best_engine(1024, TransformKind::C2c, 4), Some(MKL));
+        // incumbent sticks even when the rival's surface improves
+        p.set_surface(FFTW3, 1024, TransformKind::C2c, 0.001);
+        assert_eq!(p.best_engine(1024, TransformKind::C2c, 4), Some(MKL));
+    }
+
+    #[test]
+    fn per_point_crossover() {
+        let mut p = two_member();
+        p.set_surface(MKL, 512, TransformKind::C2c, 0.001);
+        p.set_surface(FFTW3, 512, TransformKind::C2c, 0.002);
+        p.set_surface(MKL, 8192, TransformKind::C2c, 0.50);
+        p.set_surface(FFTW3, 8192, TransformKind::C2c, 0.30);
+        assert_eq!(p.best_engine(512, TransformKind::C2c, 4), Some(MKL));
+        assert_eq!(p.best_engine(8192, TransformKind::C2c, 4), Some(FFTW3));
+    }
+
+    #[test]
+    fn nearest_n_fallback_scales_by_work() {
+        let mut p = two_member();
+        p.set_surface(MKL, 1000, TransformKind::C2c, 0.1);
+        let est = p.estimate(MKL, 2000, TransformKind::C2c).unwrap();
+        assert!(est > 0.4 && est < 0.6, "{est}"); // ~4.4x the 1000-point cost
+        // no data for this kind at all -> None
+        assert_eq!(p.estimate(MKL, 2000, TransformKind::R2c), None);
+    }
+
+    #[test]
+    fn cold_portfolio_falls_back_to_first_member() {
+        let mut p = two_member();
+        assert_eq!(p.best_engine(4096, TransformKind::C2c, 2), Some(FFTW3));
+        assert!(PortfolioModel::new(vec![]).best_engine(64, TransformKind::C2c, 1).is_none());
+    }
+
+    #[test]
+    fn drift_evicts_and_logs_repick() {
+        let mut p = two_member();
+        p.set_surface(FFTW3, 1024, TransformKind::C2c, 0.010);
+        p.set_surface(MKL, 1024, TransformKind::C2c, 0.004);
+        assert_eq!(p.best_engine(1024, TransformKind::C2c, 4), Some(MKL));
+        // MKL drifts 5x slower: evict its pick, degrade its surface
+        assert_eq!(p.note_drift(MKL), 1);
+        p.scale_engine(MKL, 5.0);
+        assert_eq!(p.best_engine(1024, TransformKind::C2c, 4), Some(FFTW3));
+        assert_eq!(
+            p.repick_log(),
+            &[RepickEvent { n: 1024, kind: TransformKind::C2c, from: MKL, to: FFTW3 }]
+        );
+        // re-resolving to the same engine logs nothing
+        assert_eq!(p.note_drift(FFTW3), 1);
+        assert_eq!(p.best_engine(1024, TransformKind::C2c, 4), Some(FFTW3));
+        assert_eq!(p.repick_log().len(), 1);
+    }
+
+    #[test]
+    fn json_roundtrip_and_unknown_engine_rejected() {
+        let mut p = two_member();
+        p.set_surface(MKL, 512, TransformKind::R2c, 0.003);
+        p.set_surface(FFTW3, 512, TransformKind::C2c, 0.007);
+        assert_eq!(p.best_engine(512, TransformKind::C2c, 4), Some(FFTW3));
+        let j = p.to_json();
+        let back = PortfolioModel::from_json(&j).unwrap();
+        assert_eq!(back.members(), p.members());
+        assert_eq!(back.surface(MKL, 512, TransformKind::R2c), Some(0.003));
+        assert_eq!(back.pick(512, TransformKind::C2c), Some(FFTW3));
+
+        let bad = Json::parse(r#"{"members": ["cufft"]}"#).unwrap();
+        assert!(PortfolioModel::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn observe_blends() {
+        let mut p = two_member();
+        p.observe_cost(MKL, 256, TransformKind::C2c, 0.4);
+        assert_eq!(p.surface(MKL, 256, TransformKind::C2c), Some(0.4));
+        p.observe_cost(MKL, 256, TransformKind::C2c, 0.2);
+        let t = p.surface(MKL, 256, TransformKind::C2c).unwrap();
+        assert!((t - 0.3).abs() < 1e-12, "{t}");
+    }
+}

@@ -103,7 +103,7 @@ mod xla_backend {
             let mut core = self.inner.lock().unwrap();
             let chunks = core.manifest.chunks_for(kind, n);
             if chunks.is_empty() {
-                return Err(EngineError::UnsupportedLength(n, "pjrt".to_string()));
+                return Err(EngineError::unsupported_length(n, "pjrt"));
             }
             let plan = manifest::tile_rows(rows, &chunks).map_err(EngineError::Runtime)?;
             let mut row = 0usize;
@@ -124,7 +124,7 @@ mod xla_backend {
         ) -> Result<(), EngineError> {
             let mut core = self.inner.lock().unwrap();
             if core.manifest.find(Kind::Full2d, n, n).is_none() {
-                return Err(EngineError::UnsupportedLength(n, "pjrt-full2d".to_string()));
+                return Err(EngineError::unsupported_length(n, "pjrt-full2d"));
             }
             core.execute_chunk(Kind::Full2d, n, n, re, im)
         }
@@ -141,7 +141,7 @@ mod xla_backend {
                 let entry = self
                     .manifest
                     .find(kind, rows, n)
-                    .ok_or_else(|| EngineError::UnsupportedLength(n, format!("pjrt {rows}x{n}")))?;
+                    .ok_or_else(|| EngineError::unsupported_length(n, format!("pjrt {rows}x{n}")))?;
                 let proto = xla::HloModuleProto::from_text_file(
                     entry.path.to_str().ok_or_else(|| EngineError::Runtime("bad path".into()))?,
                 )
@@ -246,7 +246,7 @@ mod stub_backend {
                 Direction::Inverse => Kind::RowIfft,
             };
             if self.inner.lock().unwrap().chunks_for(kind, n).is_empty() {
-                return Err(EngineError::UnsupportedLength(n, "pjrt".to_string()));
+                return Err(EngineError::unsupported_length(n, "pjrt"));
             }
             Err(not_compiled())
         }
@@ -258,7 +258,7 @@ mod stub_backend {
             n: usize,
         ) -> Result<(), EngineError> {
             if self.inner.lock().unwrap().find(Kind::Full2d, n, n).is_none() {
-                return Err(EngineError::UnsupportedLength(n, "pjrt-full2d".to_string()));
+                return Err(EngineError::unsupported_length(n, "pjrt-full2d"));
             }
             Err(not_compiled())
         }

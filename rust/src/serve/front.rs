@@ -25,6 +25,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::coordinator::engine::EngineId;
 use crate::service::stats::{ServiceStats, StatsCollector};
 use crate::service::{Dft2dRequest, Dft2dService, ServiceBuilder, ServiceError};
 use crate::stats::harness::fft2d_flops;
@@ -190,6 +191,14 @@ impl ShardedFront {
         if inner.draining.load(Ordering::Acquire) {
             return Err(ServiceError::ShuttingDown);
         }
+        // typed engine identity up front: an unknown engine name is the
+        // stable UnknownEngine rejection (code 1) before an admission
+        // slot is even reserved. `portfolio` is a valid id here — each
+        // shard resolves it to a member at its own admission.
+        let Some(engine) = EngineId::parse(&req.engine) else {
+            inner.stats.record_rejection();
+            return Err(ServiceError::UnknownEngine(req.engine));
+        };
         // Reserve an admission slot, or shed. CAS keeps the window exact
         // under concurrent submitters.
         let mut cur = inner.inflight.load(Ordering::Acquire);
@@ -219,11 +228,11 @@ impl ShardedFront {
         let mut costs = Vec::with_capacity(inner.shards.len());
         for (i, sh) in inner.shards.iter().enumerate() {
             inner.router.note_drift(i, sh.svc.drift_events_total());
-            let cost_s = match inner.router.cached_cost(i, req.n, req.kind) {
+            let cost_s = match inner.router.cached_cost(i, engine, req.n, req.kind) {
                 Some(c) => c,
                 None => {
                     let c = sh.svc.predicted_cost(&req.engine, req.n, req.kind);
-                    inner.router.store_cost(i, req.n, req.kind, c);
+                    inner.router.store_cost(i, engine, req.n, req.kind, c);
                     c
                 }
             };

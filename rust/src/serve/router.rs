@@ -11,9 +11,12 @@
 //! ([`crate::serve::loadgen`]) exercises the *same* placement logic the
 //! live front end runs.
 //!
-//! Costs are memoized per `(shard, n, kind)` — a cost lookup walks the
-//! shard's model/wisdom locks, and open-loop arrival rates would pay it
-//! per arrival. The cache is **drift-aware**: [`Router::note_drift`]
+//! Costs are memoized per `(shard, engine, n, kind)` — a cost lookup
+//! walks the shard's model/wisdom locks, and open-loop arrival rates
+//! would pay it per arrival. The engine axis matters under the engine
+//! portfolio: the same `(n, kind)` on the same shard prices differently
+//! per [`EngineId`], and a portfolio re-pick must not serve a stale
+//! single-engine cost. The cache is **drift-aware**: [`Router::note_drift`]
 //! compares the shard's drift-event counter against the last value seen
 //! and purges that shard's entries when it moved, so placement re-scores
 //! against the refreshed model the very next arrival (the
@@ -27,6 +30,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::coordinator::engine::EngineId;
 use crate::dft::real::TransformKind;
 
 /// Placement policy.
@@ -78,8 +82,8 @@ pub struct Router {
     rr_next: AtomicUsize,
     /// last drift-event count seen per shard
     seen_drift: Mutex<Vec<u64>>,
-    /// (shard, n, kind) → predicted cost seconds
-    costs: Mutex<BTreeMap<(usize, usize, TransformKind), f64>>,
+    /// (shard, engine, n, kind) → predicted cost seconds
+    costs: Mutex<BTreeMap<(usize, EngineId, usize, TransformKind), f64>>,
     rescores: AtomicU64,
 }
 
@@ -119,14 +123,28 @@ impl Router {
         }
     }
 
-    /// Cached predicted cost for `(shard, n, kind)`, if still valid.
-    pub fn cached_cost(&self, shard: usize, n: usize, kind: TransformKind) -> Option<f64> {
-        self.costs.lock().unwrap().get(&(shard, n, kind)).copied()
+    /// Cached predicted cost for `(shard, engine, n, kind)`, if still
+    /// valid.
+    pub fn cached_cost(
+        &self,
+        shard: usize,
+        engine: EngineId,
+        n: usize,
+        kind: TransformKind,
+    ) -> Option<f64> {
+        self.costs.lock().unwrap().get(&(shard, engine, n, kind)).copied()
     }
 
     /// Memoize a freshly computed predicted cost.
-    pub fn store_cost(&self, shard: usize, n: usize, kind: TransformKind, cost_s: f64) {
-        self.costs.lock().unwrap().insert((shard, n, kind), cost_s);
+    pub fn store_cost(
+        &self,
+        shard: usize,
+        engine: EngineId,
+        n: usize,
+        kind: TransformKind,
+        cost_s: f64,
+    ) {
+        self.costs.lock().unwrap().insert((shard, engine, n, kind), cost_s);
     }
 
     /// Feed the shard's current drift-event counter. When it moved since
@@ -143,7 +161,7 @@ impl Router {
             }
             seen[shard] = drift_total;
         }
-        self.costs.lock().unwrap().retain(|&(s, _, _), _| s != shard);
+        self.costs.lock().unwrap().retain(|&(s, _, _, _), _| s != shard);
         self.rescores.fetch_add(1, Ordering::Relaxed);
         true
     }
@@ -184,21 +202,33 @@ mod tests {
 
     #[test]
     fn drift_purges_only_that_shards_costs() {
+        let native = EngineId::Native;
         let r = Router::new(RoutePolicy::ModelFinishTime, 2);
-        r.store_cost(0, 1024, TransformKind::C2c, 0.5);
-        r.store_cost(1, 1024, TransformKind::C2c, 0.7);
+        r.store_cost(0, native, 1024, TransformKind::C2c, 0.5);
+        r.store_cost(1, native, 1024, TransformKind::C2c, 0.7);
         // unchanged counter: no rescore
         assert!(!r.note_drift(0, 0));
         assert_eq!(r.rescore_events(), 0);
         // drift on shard 0 purges shard 0's cache only
         assert!(r.note_drift(0, 1));
         assert_eq!(r.rescore_events(), 1);
-        assert!(r.cached_cost(0, 1024, TransformKind::C2c).is_none());
-        assert_eq!(r.cached_cost(1, 1024, TransformKind::C2c), Some(0.7));
+        assert!(r.cached_cost(0, native, 1024, TransformKind::C2c).is_none());
+        assert_eq!(r.cached_cost(1, native, 1024, TransformKind::C2c), Some(0.7));
         // same counter again: cache stays
-        r.store_cost(0, 1024, TransformKind::C2c, 0.9);
+        r.store_cost(0, native, 1024, TransformKind::C2c, 0.9);
         assert!(!r.note_drift(0, 1));
-        assert_eq!(r.cached_cost(0, 1024, TransformKind::C2c), Some(0.9));
+        assert_eq!(r.cached_cost(0, native, 1024, TransformKind::C2c), Some(0.9));
+    }
+
+    #[test]
+    fn cost_cache_is_engine_aware() {
+        use crate::simulator::Package;
+        let r = Router::new(RoutePolicy::ModelFinishTime, 1);
+        let (a, b) = (EngineId::Sim(Package::Mkl), EngineId::Sim(Package::Fftw3));
+        r.store_cost(0, a, 1024, TransformKind::C2c, 0.2);
+        // a different engine at the same (shard, n, kind) is a miss
+        assert_eq!(r.cached_cost(0, b, 1024, TransformKind::C2c), None);
+        assert_eq!(r.cached_cost(0, a, 1024, TransformKind::C2c), Some(0.2));
     }
 
     #[test]

@@ -152,6 +152,7 @@ mod tests {
             id,
             matrix: SignalMatrix::zeros(2, 2),
             report: ResponseReport {
+                engine: crate::coordinator::engine::EngineId::Native,
                 d: vec![2],
                 pads: vec![2],
                 algorithm: "test".into(),

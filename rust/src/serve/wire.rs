@@ -26,6 +26,16 @@
 //! `im` plane (count 0) means "all zeros" — the common real-signal case
 //! ships half the bytes.
 //!
+//! The engine name's wire encoding is the canonical `EngineId`
+//! spelling (`native`, `pjrt`, `sim-fftw2`, `sim-fftw3`, `sim-mkl`,
+//! `portfolio` — see
+//! [`EngineId::as_str`](crate::coordinator::engine::EngineId::as_str)).
+//! Decode deliberately does **not** validate the name: an unknown
+//! engine is an *admission* concern, rejected there as the typed
+//! [`ServiceError::UnknownEngine`](crate::service::ServiceError) (stable
+//! code 1) and shipped back as an error frame — not a protocol error
+//! that would tear down the connection.
+//!
 //! Response body: `rows u64`, `cols u64`, `predicted_s f64`,
 //! `executed_s f64`, `server_latency_s f64`, `shard u32`, `re_count
 //! u64`, `im_count u64`, planes. Error body: `code u16` (the stable

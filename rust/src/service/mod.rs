@@ -71,6 +71,18 @@
 //! accept an injected slowdown factor
 //! ([`Dft2dService::set_virtual_slowdown`]) so the whole loop is
 //! deterministically testable in virtual time.
+//!
+//! **The engine portfolio** (PR 10): engines are identified by typed
+//! [`EngineId`]s (requests still carry the canonical string on the
+//! wire) and a service built with [`ServiceBuilder::portfolio`] serves
+//! requests addressed to `"portfolio"` by resolving the fastest
+//! registered member per `(n, kind)` from the
+//! [`PortfolioModel`]'s cost surfaces — *before* bucketing, because
+//! batch buckets key on the engine that executes. Drift on the
+//! incumbent engine evicts its picks and degrades its surfaces, so the
+//! next request at that point re-picks; actual switches land in the
+//! [`RepickEvent`] log ([`Dft2dService::portfolio_repicks`]). Surfaces
+//! persist in the wisdom artifact (JSON v5).
 
 pub mod batch;
 pub mod sched;
@@ -83,14 +95,17 @@ use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
-use crate::coordinator::engine::RowFftEngine;
+use crate::coordinator::engine::{BuiltEngine, EngineId, EngineRegistry, RowFftEngine};
 use crate::coordinator::plan::{PhaseTimings, PlannedTransform};
 use crate::coordinator::real::execute_real_batch_with_mode;
 use crate::dft::fft::Direction;
 use crate::dft::pipeline::PipelineMode;
 use crate::dft::real::{half_cols, irfft2d_owned_with_mode, TransformKind};
 use crate::dft::SignalMatrix;
-use crate::model::{DriftClass, DriftPolicy, OnlineModel, PerfModel, Phase, SimModel, StaticModel};
+use crate::model::{
+    DriftClass, DriftPolicy, OnlineModel, PerfModel, Phase, PortfolioModel, RepickEvent, SimModel,
+    StaticModel,
+};
 use crate::simulator::Package;
 use crate::stats::harness::fft2d_flops;
 
@@ -214,7 +229,9 @@ pub struct Dft2dRequest {
     /// real signal in the `re` plane in, packed n×(n/2+1) half spectrum
     /// out) or c2r (packed in, n×n real out in the `re` plane)
     pub kind: TransformKind,
-    /// engine key in the service registry ("native", "sim-mkl", ...)
+    /// engine name — the canonical [`EngineId`] spelling ("native",
+    /// "sim-mkl", ..., or "portfolio" to let the portfolio model pick);
+    /// parsed and validated at submit, kept as the wire-format string
     pub engine: String,
     /// optional latency budget in seconds — the admission policy rejects
     /// the request up front when the FPM-predicted cost already exceeds it
@@ -299,6 +316,9 @@ impl Dft2dRequest {
 /// Per-request execution report.
 #[derive(Clone, Debug)]
 pub struct ResponseReport {
+    /// the engine that actually executed — for portfolio requests, the
+    /// member the portfolio resolved to at admission
+    pub engine: EngineId,
     /// rows per abstract processor used
     pub d: Vec<usize>,
     /// padded row length per processor
@@ -427,7 +447,7 @@ struct Pending {
 
 struct Inner {
     cfg: ServiceConfig,
-    engines: BTreeMap<String, Backend>,
+    engines: BTreeMap<EngineId, Backend>,
     queue: Mutex<BatchQueue<Pending>>,
     cv: Condvar,
     wisdom: Mutex<WisdomStore>,
@@ -444,10 +464,14 @@ struct Inner {
     models: Mutex<BTreeMap<String, OnlineModel>>,
     /// injected machine-speed divisor for virtual backends (test/CI
     /// drift hook): execution time = simulator cost × factor
-    virtual_slowdown: Mutex<BTreeMap<String, f64>>,
+    virtual_slowdown: Mutex<BTreeMap<EngineId, f64>>,
     /// the simulator's *true* per-request cost per (engine, n) — fixed
     /// machine ground truth, independent of what the model believes
-    virtual_base: Mutex<BTreeMap<(String, usize), f64>>,
+    virtual_base: Mutex<BTreeMap<(EngineId, usize), f64>>,
+    /// the engine portfolio, when this service plans across engines.
+    /// Lock order: `portfolio` may be taken before `models`/`wisdom`
+    /// (seeding reads them), never the reverse.
+    portfolio: Mutex<Option<PortfolioModel>>,
     /// virtual seconds consumed by virtual backends
     vclock: Mutex<f64>,
     next_id: std::sync::atomic::AtomicU64,
@@ -465,30 +489,99 @@ pub struct Dft2dService {
 /// deterministic tests.
 pub struct ServiceBuilder {
     cfg: ServiceConfig,
-    engines: BTreeMap<String, Backend>,
+    engines: BTreeMap<EngineId, Backend>,
     wisdom: WisdomStore,
+    portfolio_members: Option<Vec<EngineId>>,
     paused: bool,
 }
 
 impl ServiceBuilder {
     pub fn new(cfg: ServiceConfig) -> ServiceBuilder {
-        ServiceBuilder { cfg, engines: BTreeMap::new(), wisdom: WisdomStore::new(), paused: false }
+        ServiceBuilder {
+            cfg,
+            engines: BTreeMap::new(),
+            wisdom: WisdomStore::new(),
+            portfolio_members: None,
+            paused: false,
+        }
     }
 
-    /// Register the from-scratch native engine under "native".
+    /// Register the from-scratch native engine under [`EngineId::Native`].
     pub fn native(self) -> ServiceBuilder {
-        self.engine("native", Arc::new(crate::coordinator::engine::NativeEngine))
+        self.engine_typed(EngineId::Native, Arc::new(crate::coordinator::engine::NativeEngine))
     }
 
-    /// Register any real engine.
-    pub fn engine(mut self, name: &str, engine: Arc<dyn RowFftEngine + Send + Sync>) -> ServiceBuilder {
-        self.engines.insert(name.to_string(), Backend::Real(engine));
+    /// Register a backend built by the engine registry — the
+    /// consolidated construction path every CLI subcommand and the
+    /// serve front end go through ([`EngineRegistry::build`]).
+    pub fn engine_id(
+        mut self,
+        registry: &EngineRegistry,
+        id: EngineId,
+    ) -> Result<ServiceBuilder, String> {
+        match registry.build(id)? {
+            BuiltEngine::Real(e) => {
+                self.engines.insert(id, Backend::Real(e));
+            }
+            BuiltEngine::Virtual(pkg) => {
+                self.engines.insert(id, Backend::Virtual(pkg));
+            }
+        }
+        Ok(self)
+    }
+
+    /// Register any real engine under a typed id.
+    pub fn engine_typed(
+        mut self,
+        id: EngineId,
+        engine: Arc<dyn RowFftEngine + Send + Sync>,
+    ) -> ServiceBuilder {
+        self.engines.insert(id, Backend::Real(engine));
         self
     }
 
+    /// Register any real engine by name.
+    ///
+    /// Deprecated raw-string form kept for source compatibility: the
+    /// name must parse as a canonical [`EngineId`] spelling (panics
+    /// otherwise — builder misuse). Migrate to
+    /// [`ServiceBuilder::engine_typed`] or
+    /// [`ServiceBuilder::engine_id`].
+    pub fn engine(self, name: &str, engine: Arc<dyn RowFftEngine + Send + Sync>) -> ServiceBuilder {
+        let id = EngineId::parse(name)
+            .unwrap_or_else(|| panic!("unknown engine name `{name}`; use engine_typed(EngineId)"));
+        self.engine_typed(id, engine)
+    }
+
     /// Register a virtual-time backend over a calibrated package model.
-    pub fn virtual_package(mut self, name: &str, package: Package) -> ServiceBuilder {
-        self.engines.insert(name.to_string(), Backend::Virtual(package));
+    pub fn virtual_id(mut self, package: Package) -> ServiceBuilder {
+        self.engines.insert(EngineId::Sim(package), Backend::Virtual(package));
+        self
+    }
+
+    /// Register a virtual-time backend by name.
+    ///
+    /// Deprecated raw-string form kept for source compatibility: the
+    /// name must be the package's canonical `sim-*` spelling (panics on
+    /// a mismatch). Migrate to [`ServiceBuilder::virtual_id`] /
+    /// [`ServiceBuilder::engine_id`].
+    pub fn virtual_package(self, name: &str, package: Package) -> ServiceBuilder {
+        assert_eq!(
+            EngineId::parse(name),
+            Some(EngineId::Sim(package)),
+            "virtual engine name `{name}` does not match package {}; use virtual_id",
+            package.name()
+        );
+        self.virtual_id(package)
+    }
+
+    /// Enable portfolio planning over the given member engines:
+    /// requests addressed to `"portfolio"` resolve to the fastest
+    /// member per `(n, kind)` at admission. Persisted surfaces from the
+    /// wisdom artifact (JSON v5) seed the model; members must also be
+    /// registered as engines.
+    pub fn portfolio(mut self, members: Vec<EngineId>) -> ServiceBuilder {
+        self.portfolio_members = Some(members);
         self
     }
 
@@ -544,9 +637,9 @@ impl ServiceBuilder {
         for (name, backend) in &self.engines {
             let mut model = self
                 .wisdom
-                .model(name)
+                .model(name.as_str())
                 .cloned()
-                .unwrap_or_else(|| OnlineModel::new(name, self.cfg.drift));
+                .unwrap_or_else(|| OnlineModel::new(name.as_str(), self.cfg.drift));
             match backend {
                 Backend::Virtual(pkg) => {
                     model.set_base(Arc::new(SimModel::paper_best(*pkg)));
@@ -556,7 +649,7 @@ impl ServiceBuilder {
                     // ~2x-faster surfaces would halve every c2c cost
                     // estimate (wrong admission + SPJF weights)
                     if let Some(rec) = self.wisdom.iter().find(|r| {
-                        &r.engine == name
+                        r.engine == *name
                             && r.kind() == TransformKind::C2c
                             && !r.fpms.is_empty()
                     }) {
@@ -564,24 +657,34 @@ impl ServiceBuilder {
                     }
                 }
             }
-            models.insert(name.clone(), model);
+            models.insert(name.as_str().to_string(), model);
         }
         // resume persisted per-kind streams (keys like "native+r2c"):
         // the real plane's observations survive restarts exactly like
         // the c2c plane's, with its own measured surfaces as base
         for (name, m) in self.wisdom.models() {
             let Some((engine, _)) = name.split_once('+') else { continue };
-            if models.contains_key(name) || !self.engines.contains_key(engine) {
+            let Some(eid) = EngineId::parse(engine) else { continue };
+            if models.contains_key(name) || !self.engines.contains_key(&eid) {
                 continue;
             }
             let mut model = m.clone();
             if let Some(rec) = self.wisdom.iter().find(|r| {
-                r.engine == engine && r.kind() == TransformKind::R2c && !r.fpms.is_empty()
+                r.engine == eid && r.kind() == TransformKind::R2c && !r.fpms.is_empty()
             }) {
                 model.set_base(Arc::new(StaticModel::new(rec.fpms.clone())));
             }
             models.insert(name.clone(), model);
         }
+        // the portfolio: persisted surfaces/picks from the artifact when
+        // the wisdom file carried them (JSON v5), reset to the builder's
+        // member list; missing-from-wisdom is a cold start
+        let persisted = self.wisdom.portfolio().cloned();
+        let portfolio = self.portfolio_members.map(|members| {
+            let mut pf = persisted.unwrap_or_default();
+            pf.set_members(members);
+            pf
+        });
         let inner = Arc::new(Inner {
             cfg: self.cfg,
             engines: self.engines,
@@ -594,6 +697,7 @@ impl ServiceBuilder {
             models: Mutex::new(models),
             virtual_slowdown: Mutex::new(BTreeMap::new()),
             virtual_base: Mutex::new(BTreeMap::new()),
+            portfolio: Mutex::new(portfolio),
             vclock: Mutex::new(0.0),
             next_id: std::sync::atomic::AtomicU64::new(1),
             shutdown: AtomicBool::new(false),
@@ -647,13 +751,30 @@ impl Dft2dService {
         if self.inner.shutdown.load(Ordering::Acquire) {
             return Err(ServiceError::ShuttingDown);
         }
-        let Some(backend) = self.inner.engines.get(&req.engine) else {
+        // typed engine identity: an unknown name becomes the stable
+        // UnknownEngine rejection (code 1) here, before any other check
+        let Some(requested) = EngineId::parse(&req.engine) else {
+            return Err(ServiceError::UnknownEngine(req.engine));
+        };
+        // portfolio resolution happens BEFORE bucketing — batch buckets
+        // key on the engine that executes, so "portfolio" must become a
+        // concrete member id now (sticky per (n, kind) until drift)
+        let engine = if requested == EngineId::Portfolio {
+            match self.inner.resolve_portfolio(req.n, req.kind) {
+                Some(member) => member,
+                // this service has no portfolio configured
+                None => return Err(ServiceError::UnknownEngine(req.engine)),
+            }
+        } else {
+            requested
+        };
+        let Some(backend) = self.inner.engines.get(&engine) else {
             return Err(ServiceError::UnknownEngine(req.engine));
         };
         // real kinds run real kernels — virtual backends only price c2c
         if req.kind.is_real() && matches!(backend, Backend::Virtual(_)) {
             return Err(ServiceError::UnsupportedKind {
-                engine: req.engine,
+                engine: engine.to_string(),
                 kind: req.kind.name(),
             });
         }
@@ -667,7 +788,7 @@ impl Dft2dService {
         };
         if !dir_ok {
             return Err(ServiceError::UnsupportedKind {
-                engine: req.engine,
+                engine: engine.to_string(),
                 kind: match req.kind {
                     TransformKind::R2c => "inverse r2c (r2c is forward-only)",
                     _ => "forward c2r (c2r is inverse-only)",
@@ -720,7 +841,7 @@ impl Dft2dService {
                 }
             }
         }
-        let cost = self.inner.predicted_cost(&req.engine, n, req.kind);
+        let cost = self.inner.predicted_cost(engine, n, req.kind);
         if let Some(hint) = req.deadline_hint {
             if cost > hint {
                 self.inner.stats.record_rejection();
@@ -734,7 +855,7 @@ impl Dft2dService {
         }
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         let pending = Pending { id, matrix: req.matrix, tx, submitted: Instant::now() };
-        let key = BatchKey::new_kind(&req.engine, n, req.direction, req.kind);
+        let key = BatchKey::new_kind(engine, n, req.direction, req.kind);
         {
             let mut q = self.inner.queue.lock().unwrap();
             // re-check under the queue lock: shutdown() flushes the queue
@@ -755,7 +876,10 @@ impl Dft2dService {
     /// This is the estimate admission and SPJF schedule with; the
     /// [`crate::serve`] router prices shard placement through it.
     pub fn predicted_cost(&self, engine: &str, n: usize, kind: TransformKind) -> f64 {
-        self.inner.predicted_cost(engine, n, kind)
+        match EngineId::parse(engine) {
+            Some(id) => self.inner.predicted_cost(id, n, kind),
+            None => kind_flops(n, kind) / (DEFAULT_MFLOPS * 1e6),
+        }
     }
 
     /// Queue-backlog snapshot: admitted-but-unexecuted requests and the
@@ -798,6 +922,11 @@ impl Dft2dService {
                 store.set_model(engine, model.clone());
             }
         }
+        if let Some(pf) = self.inner.portfolio.lock().unwrap().as_ref() {
+            if !pf.is_empty() {
+                store.set_portfolio(pf.clone());
+            }
+        }
         store
     }
 
@@ -811,13 +940,34 @@ impl Dft2dService {
         self.inner.models.lock().unwrap().get(engine).cloned()
     }
 
+    /// The portfolio's sticky picks — `(n, kind, engine)` incumbents in
+    /// `(n, kind)` order. Empty when this service has no portfolio.
+    pub fn portfolio_picks(&self) -> Vec<(usize, TransformKind, EngineId)> {
+        self.inner.portfolio.lock().unwrap().as_ref().map(|p| p.picks()).unwrap_or_default()
+    }
+
+    /// The portfolio's re-pick log: actual engine switches after drift
+    /// evicted an incumbent, in chronological order. Empty when this
+    /// service has no portfolio (or nothing ever switched).
+    pub fn portfolio_repicks(&self) -> Vec<RepickEvent> {
+        self.inner
+            .portfolio
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|p| p.repick_log().to_vec())
+            .unwrap_or_default()
+    }
+
     /// Inject a machine-speed shift on a virtual backend: execution
     /// takes `factor`× the simulator's predicted time from now on. This
     /// is the deterministic drift hook for tests and the CI smoke — the
     /// model only ever sees the resulting timings, never the factor.
     pub fn set_virtual_slowdown(&self, engine: &str, factor: f64) {
         assert!(factor.is_finite() && factor > 0.0, "slowdown factor must be positive");
-        self.inner.virtual_slowdown.lock().unwrap().insert(engine.to_string(), factor);
+        let id = EngineId::parse(engine)
+            .unwrap_or_else(|| panic!("set_virtual_slowdown: unknown engine `{engine}`"));
+        self.inner.virtual_slowdown.lock().unwrap().insert(id, factor);
     }
 
     /// The memoized plan for `(engine, n)` under the service's group
@@ -833,8 +983,9 @@ impl Dft2dService {
         n: usize,
         kind: TransformKind,
     ) -> Option<PlannedTransform> {
-        let p = self.inner.plan_groups(engine);
-        self.inner.wisdom.lock().unwrap().get_kind(engine, n, p, kind).map(|r| r.plan.clone())
+        let id = EngineId::parse(engine)?;
+        let p = self.inner.plan_groups(id);
+        self.inner.wisdom.lock().unwrap().get_kind(id, n, p, kind).map(|r| r.plan.clone())
     }
 
     /// Current virtual clock (virtual backends only; 0 otherwise).
@@ -881,8 +1032,8 @@ impl Inner {
 
     /// The group count planning uses for an engine (virtual backends pin
     /// the paper-best p of their package).
-    fn plan_groups(&self, engine: &str) -> usize {
-        match self.engines.get(engine) {
+    fn plan_groups(&self, engine: EngineId) -> usize {
+        match self.engines.get(&engine) {
             Some(Backend::Virtual(pkg)) => pkg.best_groups().p,
             _ => self.cfg.planning.groups,
         }
@@ -896,9 +1047,17 @@ impl Inner {
     /// `(engine, kind)` plane has its own model stream and wisdom key:
     /// real requests do ~half the work, so sharing an estimate with c2c
     /// would starve one kind or admit the other into missed deadlines.
-    fn predicted_cost(&self, engine: &str, n: usize, kind: TransformKind) -> f64 {
+    fn predicted_cost(&self, engine: EngineId, n: usize, kind: TransformKind) -> f64 {
+        if engine == EngineId::Portfolio {
+            // price the member the portfolio would run — resolution is
+            // sticky, so this is the engine submit() will actually pick
+            if let Some(member) = self.resolve_portfolio(n, kind) {
+                return self.predicted_cost(member, n, kind);
+            }
+            return kind_flops(n, kind) / (DEFAULT_MFLOPS * 1e6);
+        }
         let (x, y) = observation_point(n);
-        if let Some(model) = self.models.lock().unwrap().get(&model_key(engine, kind)) {
+        if let Some(model) = self.models.lock().unwrap().get(&model_key(engine.as_str(), kind)) {
             if let Some(t) = model.refined_time(x, y) {
                 return t;
             }
@@ -910,12 +1069,58 @@ impl Inner {
         kind_flops(n, kind) / (DEFAULT_MFLOPS * 1e6)
     }
 
+    /// Portfolio resolution for one `(n, kind)` point: seed any missing
+    /// member surface from the best cold source, then ask the portfolio
+    /// for the sticky winner. `None` when this service has no portfolio.
+    /// (Lock order: `portfolio` before `models`/`wisdom` — see the
+    /// field's doc.)
+    fn resolve_portfolio(&self, n: usize, kind: TransformKind) -> Option<EngineId> {
+        let kind = kind.plan_kind();
+        let mut guard = self.portfolio.lock().unwrap();
+        let pf = guard.as_mut()?;
+        for m in pf.members().to_vec() {
+            if pf.surface(m, n, kind).is_none() {
+                if let Some(t) = self.member_cost_cold(m, n, kind) {
+                    pf.set_surface(m, n, kind, t);
+                }
+            }
+        }
+        pf.best_engine(n, kind, self.cfg.planning.groups)
+    }
+
+    /// A member's cold cost at `(n, kind)`: the live model's refined
+    /// estimate first (it tracks the machine), the wisdom record's
+    /// planned prediction second, the calibrated simulator belief for
+    /// virtual members last. `None` when nothing is known — the
+    /// portfolio then falls back to its first member.
+    fn member_cost_cold(&self, engine: EngineId, n: usize, kind: TransformKind) -> Option<f64> {
+        let (x, y) = observation_point(n);
+        if let Some(m) = self.models.lock().unwrap().get(&model_key(engine.as_str(), kind)) {
+            if let Some(t) = m.refined_time(x, y) {
+                return Some(t);
+            }
+        }
+        let p = self.plan_groups(engine);
+        if let Some(rec) = self.wisdom.lock().unwrap().get_kind(engine, n, p, kind) {
+            return Some(rec.predicted_cost_s);
+        }
+        if let Some(Backend::Virtual(pkg)) = self.engines.get(&engine) {
+            let point = crate::simulator::vexec::predict_point(*pkg, n);
+            return Some(if self.cfg.planning.pad_cost.is_some() {
+                point.t_pad
+            } else {
+                point.t_fpm
+            });
+        }
+        None
+    }
+
     /// The simulator's fixed ground-truth per-request cost for a
     /// virtual (engine, n) — memoized once, never affected by what the
     /// model currently believes (re-planning must not move the machine).
-    fn virtual_true_cost(&self, engine: &str, pkg: Package, n: usize) -> f64 {
+    fn virtual_true_cost(&self, engine: EngineId, pkg: Package, n: usize) -> f64 {
         let mut base = self.virtual_base.lock().unwrap();
-        *base.entry((engine.to_string(), n)).or_insert_with(|| {
+        *base.entry((engine, n)).or_insert_with(|| {
             let point = crate::simulator::vexec::predict_point(pkg, n);
             if self.cfg.planning.pad_cost.is_some() {
                 point.t_pad
@@ -934,22 +1139,22 @@ impl Inner {
     /// the cold-plan counter exact — one planning event per key, ever.
     fn plan_for(&self, key: &BatchKey) -> (WisdomRecord, bool) {
         let backend = self.engines.get(&key.engine).expect("validated at submit");
-        let p = self.plan_groups(&key.engine);
+        let p = self.plan_groups(key.engine);
         let kind = key.kind.plan_kind();
-        let wkey: wisdom::WisdomKey = (key.engine.clone(), key.n, p, kind);
+        let wkey: wisdom::WisdomKey = (key.engine, key.n, p, kind);
 
         // claim the key, or wait for whoever holds it (lock order:
         // planning_inflight, then wisdom — never the reverse)
         {
             let mut inflight = self.planning_inflight.lock().unwrap();
             loop {
-                if let Some(rec) = self.wisdom.lock().unwrap().get_kind(&key.engine, key.n, p, kind)
+                if let Some(rec) = self.wisdom.lock().unwrap().get_kind(key.engine, key.n, p, kind)
                 {
                     self.stats.record_wisdom_hit();
                     return (rec.clone(), false);
                 }
                 if !inflight.contains(&wkey) {
-                    inflight.insert(wkey.clone());
+                    inflight.insert(wkey);
                     break;
                 }
                 inflight = self.planning_cv.wait(inflight).unwrap();
@@ -958,12 +1163,12 @@ impl Inner {
 
         // we own the cold plan for this key; no locks held while measuring
         self.stats.record_planning_event();
-        let mkey = model_key(&key.engine, kind);
+        let mkey = model_key(key.engine.as_str(), kind);
         let mut tile_widths: Vec<(usize, usize)> = Vec::new();
         let rec = match backend {
             Backend::Real(engine) => {
                 let (rec, samples) = WisdomRecord::from_measurement_sampled(
-                    &key.engine,
+                    key.engine,
                     engine.as_ref(),
                     key.n,
                     &self.cfg.planning,
@@ -1016,9 +1221,9 @@ impl Inner {
                 let cfg = pkg.best_groups();
                 let model_rec = {
                     let models = self.models.lock().unwrap();
-                    models.get(&key.engine).filter(|m| m.has_refined()).map(|m| {
+                    models.get(key.engine.as_str()).filter(|m| m.has_refined()).map(|m| {
                         WisdomRecord::from_model(
-                            &key.engine,
+                            key.engine,
                             m,
                             key.n,
                             cfg.p,
@@ -1030,12 +1235,7 @@ impl Inner {
                     })
                 };
                 model_rec.unwrap_or_else(|| {
-                    WisdomRecord::from_simulator(
-                        &key.engine,
-                        *pkg,
-                        key.n,
-                        self.cfg.planning.pad_cost.is_some(),
-                    )
+                    WisdomRecord::from_simulator(*pkg, key.n, self.cfg.planning.pad_cost.is_some())
                 })
             }
         };
@@ -1060,7 +1260,7 @@ impl Inner {
         self.stats.record_batch(size);
         // what the scheduler believed this batch costs per request —
         // compared against the measured time below (calibration)
-        let predicted_s = self.predicted_cost(&key.engine, key.n, key.kind);
+        let predicted_s = self.predicted_cost(key.engine, key.n, key.kind);
 
         let mut items: Vec<Pending> = Vec::with_capacity(size);
         let mut waits: Vec<f64> = Vec::with_capacity(size);
@@ -1110,7 +1310,7 @@ impl Inner {
                                 }
                                 Ok(())
                             }
-                            Err(e) => Err(ServiceError::Engine(e.to_string())),
+                            Err(e) => Err(ServiceError::Engine(e.with_kind(key.kind).to_string())),
                         }
                     }
                     TransformKind::C2r => {
@@ -1149,7 +1349,7 @@ impl Inner {
                                 phase_timings = Some(timings);
                                 Ok(())
                             }
-                            Err(e) => Err(ServiceError::Engine(e.to_string())),
+                            Err(e) => Err(ServiceError::Engine(e.with_kind(key.kind).to_string())),
                         }
                     }
                     TransformKind::C2c => {
@@ -1174,7 +1374,7 @@ impl Inner {
                 // virtual time: the machine's ground-truth cost for
                 // `size` stacked requests, times any injected slowdown;
                 // matrices pass through untouched
-                let true_cost = self.virtual_true_cost(&key.engine, *pkg, key.n);
+                let true_cost = self.virtual_true_cost(key.engine, *pkg, key.n);
                 let factor = self
                     .virtual_slowdown
                     .lock()
@@ -1206,7 +1406,7 @@ impl Inner {
             let (x, y) = observation_point(key.n);
             drifted = {
                 let mut models = self.models.lock().unwrap();
-                let mkey = model_key(&key.engine, key.kind);
+                let mkey = model_key(key.engine.as_str(), key.kind);
                 let m = models
                     .entry(mkey.clone())
                     .or_insert_with(|| OnlineModel::new(&mkey, self.cfg.drift));
@@ -1220,6 +1420,19 @@ impl Inner {
                 }
                 m.observe(x, y, executed_s).map(|e| e.class)
             };
+            // the portfolio learns from the same measurement: refine the
+            // executing member's surface; on drift, degrade the whole
+            // engine by the observed slowdown and evict its picks so the
+            // next request at those points re-picks
+            if let Some(pf) = self.portfolio.lock().unwrap().as_mut() {
+                pf.observe_cost(key.engine, key.n, key.kind.plan_kind(), executed_s);
+                if drifted.is_some() {
+                    if predicted_s > 0.0 && executed_s > predicted_s {
+                        pf.scale_engine(key.engine, (executed_s / predicted_s).min(100.0));
+                    }
+                    pf.note_drift(key.engine);
+                }
+            }
         }
 
         let flops = kind_flops(key.n, key.kind);
@@ -1232,6 +1445,7 @@ impl Inner {
                         id: p.id,
                         matrix: p.matrix,
                         report: ResponseReport {
+                            engine: key.engine,
                             d: rec.plan.d.clone(),
                             pads: rec.plan.pad_lens(),
                             algorithm: rec.plan.algorithm.name().to_string(),
@@ -1278,11 +1492,11 @@ impl Inner {
     /// kernel's relative width ranking is not what moved).
     fn drift_replan(&self, key: &BatchKey, old: &WisdomRecord, class: DriftClass) {
         self.stats.record_drift();
-        let p = self.plan_groups(&key.engine);
+        let p = self.plan_groups(key.engine);
         let kind = key.kind.plan_kind();
         {
             let mut w = self.wisdom.lock().unwrap();
-            w.remove(&key.engine, key.n, p, kind);
+            w.remove(key.engine, key.n, p, kind);
             if class == DriftClass::Memory {
                 let mut lens = old.plan.pad_lens();
                 lens.push(key.n);
@@ -1298,7 +1512,7 @@ impl Inner {
         if is_real_backend && !old.fpms.is_empty() {
             let model = {
                 let mut models = self.models.lock().unwrap();
-                models.get_mut(&model_key(&key.engine, kind)).map(|m| {
+                models.get_mut(&model_key(key.engine.as_str(), kind)).map(|m| {
                     // the invalidated record's surfaces are this key's
                     // own y = N sections — the right base to rescale
                     m.set_base(Arc::new(StaticModel::new(old.fpms.clone())));
@@ -1308,7 +1522,7 @@ impl Inner {
             if let Some(model) = model {
                 self.stats.record_planning_event();
                 let rec = WisdomRecord::from_model_kind(
-                    &key.engine,
+                    key.engine,
                     &model,
                     key.n,
                     old.p,
@@ -1422,13 +1636,13 @@ mod tests {
     #[test]
     fn deadline_admission_uses_wisdom() {
         let mut store = WisdomStore::new();
-        store.insert(WisdomRecord::from_simulator("sim-mkl", Package::Mkl, 24_704, false));
+        store.insert(WisdomRecord::from_simulator(Package::Mkl, 24_704, false));
         let svc = ServiceBuilder::new(quick_cfg())
             .virtual_package("sim-mkl", Package::Mkl)
             .wisdom(store)
             .paused()
             .build();
-        let predicted = svc.inner.predicted_cost("sim-mkl", 24_704, TransformKind::C2c);
+        let predicted = svc.predicted_cost("sim-mkl", 24_704, TransformKind::C2c);
         assert!(predicted > 0.0, "wisdom-backed prediction must exist");
         // a deadline below the FPM-predicted cost is rejected at submit
         let req = Dft2dRequest::probe("sim-mkl", 24_704).with_deadline(predicted / 2.0);
@@ -1530,6 +1744,59 @@ mod tests {
         let svc2 = ServiceBuilder::new(quick_cfg()).native().wisdom(snap).paused().build();
         assert_eq!(crate::dft::exec::measured_row_tile(n), Some(w));
         svc2.shutdown();
+    }
+
+    #[test]
+    fn portfolio_resolves_before_bucketing() {
+        // two sim members: the service must resolve "portfolio" to a
+        // concrete member at admission, bucket and execute there, and
+        // report that engine back
+        let svc = ServiceBuilder::new(quick_cfg())
+            .virtual_id(Package::Fftw3)
+            .virtual_id(Package::Mkl)
+            .portfolio(vec![EngineId::Sim(Package::Fftw3), EngineId::Sim(Package::Mkl)])
+            .build();
+        let resp = svc.submit(Dft2dRequest::probe("portfolio", 24_704)).unwrap().wait().unwrap();
+        assert!(matches!(resp.report.engine, EngineId::Sim(_)), "{}", resp.report.engine);
+        // the pick is cached and names the member that executed
+        let picks = svc.portfolio_picks();
+        assert_eq!(picks.len(), 1);
+        assert_eq!((picks[0].0, picks[0].2), (24_704, resp.report.engine));
+        // the resolved member rides the wisdom snapshot (v5 portfolio)
+        let snap = svc.wisdom_snapshot();
+        assert_eq!(
+            snap.portfolio().unwrap().pick(24_704, TransformKind::C2c),
+            Some(resp.report.engine)
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn portfolio_without_config_is_unknown_engine() {
+        let svc = ServiceBuilder::new(quick_cfg()).native().build();
+        let err = svc
+            .submit(Dft2dRequest::forward("portfolio", SignalMatrix::random(8, 8, 1)))
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::UnknownEngine(_)), "{err}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn portfolio_over_native_is_bit_identical_to_direct() {
+        let m = SignalMatrix::random(16, 16, 7);
+        let direct = {
+            let svc = ServiceBuilder::new(quick_cfg()).native().build();
+            let r =
+                svc.submit(Dft2dRequest::forward("native", m.clone())).unwrap().wait().unwrap();
+            svc.shutdown();
+            r.matrix
+        };
+        let svc =
+            ServiceBuilder::new(quick_cfg()).native().portfolio(vec![EngineId::Native]).build();
+        let r = svc.submit(Dft2dRequest::forward("portfolio", m)).unwrap().wait().unwrap();
+        assert_eq!(r.report.engine, EngineId::Native);
+        assert_eq!(r.matrix, direct, "portfolio must not change a single output bit");
+        svc.shutdown();
     }
 
     #[test]

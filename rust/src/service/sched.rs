@@ -16,27 +16,31 @@
 //! path feed deterministic timestamps — scheduling behaviour is testable
 //! at paper-scale sizes without executing a single FFT.
 
+use crate::coordinator::engine::EngineId;
 use crate::dft::fft::Direction;
 use crate::dft::real::TransformKind;
 
 /// What coalesces: same engine, same size, same direction, same
 /// transform kind (r2c batches run the real executor — mixing them
 /// with c2c work would force the slower path on everyone).
-#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct BatchKey {
-    pub engine: String,
+    /// the engine that will execute the bucket — for portfolio requests
+    /// this is the *resolved member*, never [`EngineId::Portfolio`]:
+    /// resolution happens at admission, before bucketing
+    pub engine: EngineId,
     pub n: usize,
     pub forward: bool,
     pub kind: TransformKind,
 }
 
 impl BatchKey {
-    pub fn new(engine: &str, n: usize, dir: Direction) -> BatchKey {
+    pub fn new(engine: EngineId, n: usize, dir: Direction) -> BatchKey {
         BatchKey::new_kind(engine, n, dir, TransformKind::C2c)
     }
 
-    pub fn new_kind(engine: &str, n: usize, dir: Direction, kind: TransformKind) -> BatchKey {
-        BatchKey { engine: engine.to_string(), n, forward: dir == Direction::Forward, kind }
+    pub fn new_kind(engine: EngineId, n: usize, dir: Direction, kind: TransformKind) -> BatchKey {
+        BatchKey { engine, n, forward: dir == Direction::Forward, kind }
     }
 
     pub fn direction(&self) -> Direction {
@@ -163,7 +167,7 @@ impl<T> BatchQueue<T> {
         let b = &mut self.buckets[idx];
         let entries: Vec<(T, f64)> = b.entries.drain(..take).collect();
         self.len -= entries.len();
-        let batch = Batch { key: b.key.clone(), entries, cost_s: b.cost_s };
+        let batch = Batch { key: b.key, entries, cost_s: b.cost_s };
         if self.buckets[idx].entries.is_empty() {
             self.buckets.swap_remove(idx);
         } else {
@@ -178,7 +182,7 @@ mod tests {
     use super::*;
 
     fn key(n: usize) -> BatchKey {
-        BatchKey::new("native", n, Direction::Forward)
+        BatchKey::new(EngineId::Native, n, Direction::Forward)
     }
 
     #[test]
@@ -261,8 +265,8 @@ mod tests {
     #[test]
     fn direction_separates_buckets() {
         let mut q: BatchQueue<u32> = BatchQueue::new();
-        q.push(BatchKey::new("native", 64, Direction::Forward), 0.1, 1, 0.0);
-        q.push(BatchKey::new("native", 64, Direction::Inverse), 0.1, 2, 0.0);
+        q.push(BatchKey::new(EngineId::Native, 64, Direction::Forward), 0.1, 1, 0.0);
+        q.push(BatchKey::new(EngineId::Native, 64, Direction::Inverse), 0.1, 2, 0.0);
         let b = q.pop(0.0, f64::INFINITY, 8).unwrap();
         assert_eq!(b.entries.len(), 1);
         assert_eq!(b.key.direction(), Direction::Forward);
@@ -274,9 +278,9 @@ mod tests {
         // an r2c request must never coalesce with a c2c request of the
         // same (engine, n, direction) — they run different executors
         let mut q: BatchQueue<u32> = BatchQueue::new();
-        q.push(BatchKey::new("native", 64, Direction::Forward), 0.1, 1, 0.0);
+        q.push(BatchKey::new(EngineId::Native, 64, Direction::Forward), 0.1, 1, 0.0);
         q.push(
-            BatchKey::new_kind("native", 64, Direction::Forward, TransformKind::R2c),
+            BatchKey::new_kind(EngineId::Native, 64, Direction::Forward, TransformKind::R2c),
             0.1,
             2,
             0.0,

@@ -10,22 +10,25 @@
 //! Records are keyed per [`TransformKind`] plane: real (r2c) planes run
 //! roughly 2x faster than c2c, so their measured surfaces — and hence
 //! their POPTA/HPOPTA partitions and pad choices — are separate
-//! artifacts. The JSON artifact is **version 4** (adds the measured
-//! row-tile widths of [`crate::dft::exec::calibrate_row_tile`] as a
-//! `tiles` array); version-3 files load with no tiles — the executor
+//! artifacts. The JSON artifact is **version 5**: engine names are
+//! parsed into typed [`EngineId`]s (the persisted spellings are
+//! unchanged, so older files parse forward losslessly) and the engine
+//! portfolio's per-`(engine, n, kind)` cost surfaces persist as a
+//! `portfolio` object. Version-4 files load with an empty portfolio,
+//! version-3 files additionally load with no tiles — the executor
 //! falls back to the modeled width — and version-2 files additionally
 //! load with every record as c2c.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::coordinator::engine::RowFftEngine;
+use crate::coordinator::engine::{EngineId, RowFftEngine};
 use crate::coordinator::group::GroupConfig;
 use crate::coordinator::pad::{PadCost, PadDecision};
 use crate::coordinator::partition::Algorithm;
 use crate::coordinator::plan::PlannedTransform;
 use crate::dft::real::TransformKind;
-use crate::model::{OnlineModel, PerfModel};
+use crate::model::{OnlineModel, PerfModel, PortfolioModel};
 use crate::profiler::{build_fpms_with, ProfileSpec};
 use crate::simulator::vexec::predict_point;
 use crate::simulator::Package;
@@ -83,7 +86,7 @@ pub const PAD_SEARCH_WINDOW: usize = 512;
 /// One memoized planning outcome for `(engine, n, p)`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WisdomRecord {
-    pub engine: String,
+    pub engine: EngineId,
     pub n: usize,
     /// abstract processors the plan targets
     pub p: usize,
@@ -114,7 +117,7 @@ impl WisdomRecord {
     /// Key inside the store. The transform kind lives on the plan — a
     /// record plans exactly one (engine, N, p, kind) plane.
     pub fn key(&self) -> WisdomKey {
-        (self.engine.clone(), self.n, self.p, self.plan.kind)
+        (self.engine, self.n, self.p, self.plan.kind)
     }
 
     /// The transform kind this record's plan targets.
@@ -128,7 +131,7 @@ impl WisdomRecord {
     /// distribution on degenerate profiling outcomes rather than failing
     /// the request.
     pub fn from_measurement(
-        engine_label: &str,
+        engine_label: EngineId,
         engine: &dyn RowFftEngine,
         n: usize,
         cfg: &PlanningConfig,
@@ -141,7 +144,7 @@ impl WisdomRecord {
     /// r2c pair kernel, so their surfaces — and the partitions planned
     /// over them — reflect the real path's ~2x row-phase speed.
     pub fn from_measurement_kind(
-        engine_label: &str,
+        engine_label: EngineId,
         engine: &dyn RowFftEngine,
         n: usize,
         cfg: &PlanningConfig,
@@ -159,7 +162,7 @@ impl WisdomRecord {
     /// platform-level model must rescale the row count to p·x (see the
     /// service's `plan_for`).
     pub fn from_measurement_sampled(
-        engine_label: &str,
+        engine_label: EngineId,
         engine: &dyn RowFftEngine,
         n: usize,
         cfg: &PlanningConfig,
@@ -187,7 +190,7 @@ impl WisdomRecord {
             .with_kind(kind);
         let predicted_cost_s = plan.predicted_seconds(DEFAULT_MFLOPS);
         let rec = WisdomRecord {
-            engine: engine_label.to_string(),
+            engine: engine_label,
             n,
             p: cfg.groups,
             t: cfg.threads_per_group,
@@ -208,7 +211,7 @@ impl WisdomRecord {
     /// one. This is the drift-recovery path — no re-measurement needed.
     #[allow(clippy::too_many_arguments)]
     pub fn from_model(
-        engine_label: &str,
+        engine_label: EngineId,
         model: &OnlineModel,
         n: usize,
         p: usize,
@@ -235,7 +238,7 @@ impl WisdomRecord {
     /// the *real* model stream's refreshed sections.
     #[allow(clippy::too_many_arguments)]
     pub fn from_model_kind(
-        engine_label: &str,
+        engine_label: EngineId,
         model: &OnlineModel,
         n: usize,
         p: usize,
@@ -263,7 +266,7 @@ impl WisdomRecord {
             .or_else(|| model.predict_time(2 * n, n))
             .unwrap_or_else(|| plan.predicted_seconds(DEFAULT_MFLOPS));
         WisdomRecord {
-            engine: engine_label.to_string(),
+            engine: engine_label,
             n,
             p,
             t,
@@ -278,7 +281,7 @@ impl WisdomRecord {
 
     /// Plan deterministically from the virtual testbed (no measurement,
     /// instant even at paper scale) — the service's virtual-time path.
-    pub fn from_simulator(engine_label: &str, package: Package, n: usize, pad: bool) -> WisdomRecord {
+    pub fn from_simulator(package: Package, n: usize, pad: bool) -> WisdomRecord {
         let point = predict_point(package, n);
         let cfg = package.best_groups();
         let pads: Vec<PadDecision> = point
@@ -300,7 +303,7 @@ impl WisdomRecord {
             kind: TransformKind::C2c,
         };
         WisdomRecord {
-            engine: engine_label.to_string(),
+            engine: EngineId::Sim(package),
             n,
             p: cfg.p,
             t: cfg.t,
@@ -351,7 +354,12 @@ impl WisdomRecord {
             j.get(k).and_then(Json::as_usize).ok_or(format!("wisdom: missing {k}"))
         };
         let f64_field = |k: &str| j.get(k).and_then(Json::as_f64).ok_or(format!("wisdom: missing {k}"));
-        let engine = str_field("engine")?;
+        // persisted spellings are the canonical `EngineId` strings (and
+        // every historical alias `EngineId::parse` accepts) — unknown
+        // names are corrupt, not silently kept
+        let engine_str = str_field("engine")?;
+        let engine = EngineId::parse(&engine_str)
+            .ok_or_else(|| format!("wisdom: unknown engine `{engine_str}`"))?;
         let n = usize_field("n")?;
         let p = usize_field("p")?;
         let t = usize_field("t")?;
@@ -458,7 +466,7 @@ impl WisdomRecord {
 }
 
 /// `(engine, n, p, kind)` — what a plan depends on.
-pub type WisdomKey = (String, usize, usize, TransformKind);
+pub type WisdomKey = (EngineId, usize, usize, TransformKind);
 
 /// One measured row-tile width — the winner of the executor's one-shot
 /// micro-calibration ([`crate::dft::exec::calibrate_row_tile`]) for a
@@ -481,15 +489,18 @@ pub struct TileRecord {
 }
 
 /// The persistent map of planning outcomes, plus the per-engine online
-/// model deltas + drift log and the measured row-tile widths. JSON
-/// artifact version 4 (`tiles` array); version-3 files load with no
-/// tiles, version-2 files additionally load with every record as c2c,
-/// version-1 files additionally load with no model state.
+/// model deltas + drift log, the measured row-tile widths and the
+/// engine portfolio's cost surfaces. JSON artifact version 5
+/// (`portfolio` object); version-4 files load with an empty portfolio,
+/// version-3 files additionally load with no tiles, version-2 files
+/// additionally load with every record as c2c, version-1 files
+/// additionally load with no model state.
 #[derive(Clone, Debug, Default)]
 pub struct WisdomStore {
     records: BTreeMap<WisdomKey, WisdomRecord>,
     models: BTreeMap<String, OnlineModel>,
     tiles: BTreeMap<(usize, TransformKind), TileRecord>,
+    portfolio: Option<PortfolioModel>,
 }
 
 impl WisdomStore {
@@ -506,7 +517,7 @@ impl WisdomStore {
     }
 
     /// Lookup of a c2c plan (the overwhelmingly common key shape).
-    pub fn get(&self, engine: &str, n: usize, p: usize) -> Option<&WisdomRecord> {
+    pub fn get(&self, engine: EngineId, n: usize, p: usize) -> Option<&WisdomRecord> {
         self.get_kind(engine, n, p, TransformKind::C2c)
     }
 
@@ -520,13 +531,13 @@ impl WisdomStore {
     /// do not depend on the native kernel.
     pub fn get_kind(
         &self,
-        engine: &str,
+        engine: EngineId,
         n: usize,
         p: usize,
         kind: TransformKind,
     ) -> Option<&WisdomRecord> {
-        let rec = self.records.get(&(engine.to_string(), n, p, kind.plan_kind()))?;
-        if rec.engine == "native"
+        let rec = self.records.get(&(engine, n, p, kind.plan_kind()))?;
+        if rec.engine == EngineId::Native
             && !rec.kernel_gen.is_empty()
             && rec.kernel_gen != crate::dft::radix::kernel_generation()
         {
@@ -544,12 +555,12 @@ impl WisdomStore {
     /// pays a fresh planning event against the refreshed model.
     pub fn remove(
         &mut self,
-        engine: &str,
+        engine: EngineId,
         n: usize,
         p: usize,
         kind: TransformKind,
     ) -> Option<WisdomRecord> {
-        self.records.remove(&(engine.to_string(), n, p, kind.plan_kind()))
+        self.records.remove(&(engine, n, p, kind.plan_kind()))
     }
 
     pub fn iter(&self) -> impl Iterator<Item = &WisdomRecord> {
@@ -608,6 +619,20 @@ impl WisdomStore {
         self.tiles.values()
     }
 
+    /// Attach/replace the persisted engine-portfolio state (cost
+    /// surfaces + sticky picks).
+    pub fn set_portfolio(&mut self, portfolio: PortfolioModel) {
+        self.portfolio = Some(portfolio);
+    }
+
+    pub fn portfolio(&self) -> Option<&PortfolioModel> {
+        self.portfolio.as_ref()
+    }
+
+    pub fn take_portfolio(&mut self) -> Option<PortfolioModel> {
+        self.portfolio.take()
+    }
+
     pub fn to_json(&self) -> Json {
         let recs: Vec<Json> = self.records.values().map(WisdomRecord::to_json).collect();
         let models: Vec<Json> = self
@@ -626,11 +651,17 @@ impl WisdomStore {
                     .set("width", t.width)
             })
             .collect();
-        Json::obj()
-            .set("version", 4i64)
+        let mut out = Json::obj()
+            .set("version", 5i64)
             .set("records", Json::Arr(recs))
             .set("models", Json::Arr(models))
-            .set("tiles", Json::Arr(tiles))
+            .set("tiles", Json::Arr(tiles));
+        if let Some(p) = &self.portfolio {
+            if !p.is_empty() {
+                out = out.set("portfolio", p.to_json());
+            }
+        }
+        out
     }
 
     pub fn from_json(j: &Json) -> Result<WisdomStore, String> {
@@ -676,6 +707,11 @@ impl WisdomStore {
             let kind = kind.plan_kind();
             store.tiles.insert((n, kind), TileRecord { n, kind, kernel, width });
         }
+        // the portfolio object arrived with JSON v5 — older files load
+        // with none; a malformed entry is corrupt, not legacy
+        if let Some(pj) = j.get("portfolio") {
+            store.portfolio = Some(PortfolioModel::from_json(pj)?);
+        }
         Ok(store)
     }
 
@@ -707,7 +743,7 @@ mod tests {
             crate::coordinator::fpm::SpeedFunction::new("native-group1", vec![8, 16], vec![16]);
         surface.set(8, 16, 123.5);
         WisdomRecord {
-            engine: "native".to_string(),
+            engine: EngineId::Native,
             n: 16,
             p: 2,
             t: 1,
@@ -749,14 +785,14 @@ mod tests {
         store.insert(c2c.clone());
         store.insert(r2c.clone());
         assert_eq!(store.len(), 2);
-        assert_eq!(store.get("native", 16, 2).unwrap().plan.d, c2c.plan.d);
+        assert_eq!(store.get(EngineId::Native, 16, 2).unwrap().plan.d, c2c.plan.d);
         assert_eq!(
-            store.get_kind("native", 16, 2, TransformKind::R2c).unwrap().plan.d,
+            store.get_kind(EngineId::Native, 16, 2, TransformKind::R2c).unwrap().plan.d,
             r2c.plan.d
         );
         // c2r shares the r2c plane
         assert_eq!(
-            store.get_kind("native", 16, 2, TransformKind::C2r).unwrap().plan.d,
+            store.get_kind(EngineId::Native, 16, 2, TransformKind::C2r).unwrap().plan.d,
             r2c.plan.d
         );
         // both survive persistence with their kinds
@@ -764,7 +800,7 @@ mod tests {
         let back = WisdomStore::from_json(&j).unwrap();
         assert_eq!(back.len(), 2);
         assert_eq!(
-            back.get_kind("native", 16, 2, TransformKind::R2c).unwrap().kind(),
+            back.get_kind(EngineId::Native, 16, 2, TransformKind::R2c).unwrap().kind(),
             TransformKind::R2c
         );
     }
@@ -788,23 +824,23 @@ mod tests {
         let mut store = WisdomStore::new();
         // current generation: hits
         store.insert(demo_record());
-        assert!(store.get("native", 16, 2).is_some());
+        assert!(store.get(EngineId::Native, 16, 2).is_some());
         // a record measured against a retired kernel: misses (forces a
         // re-measure so FPM surfaces track the installed kernel)
         let mut stale = demo_record();
         stale.kernel_gen = "stockham-v1-scalar".to_string();
         store.insert(stale.clone());
-        assert!(store.get("native", 16, 2).is_none());
+        assert!(store.get(EngineId::Native, 16, 2).is_none());
         // legacy untagged records stay valid (pre-tag files upgrade
         // without a cold-planning storm)
         let mut legacy = demo_record();
         legacy.kernel_gen = String::new();
         store.insert(legacy);
-        assert!(store.get("native", 16, 2).is_some());
+        assert!(store.get(EngineId::Native, 16, 2).is_some());
         // non-native engines never carry kernel staleness
-        stale.engine = "sim-mkl".to_string();
+        stale.engine = EngineId::Sim(Package::Mkl);
         store.insert(stale);
-        assert!(store.get("sim-mkl", 16, 2).is_some());
+        assert!(store.get(EngineId::Sim(Package::Mkl), 16, 2).is_some());
         // the tag round-trips through JSON
         let rec = demo_record();
         let j = Json::parse(&rec.to_json().to_string()).unwrap();
@@ -830,7 +866,7 @@ mod tests {
         cross.kernel_gen = other.to_string();
         store.insert(cross);
         assert!(
-            store.get("native", 16, 2).is_none(),
+            store.get(EngineId::Native, 16, 2).is_none(),
             "record from the other FMA generation must force a re-measure"
         );
         let warm = demo_record(); // tagged with the installed generation
@@ -839,7 +875,7 @@ mod tests {
         assert_eq!(back.kernel_gen, cur);
         store.insert(back);
         assert!(
-            store.get("native", 16, 2).is_some(),
+            store.get(EngineId::Native, 16, 2).is_some(),
             "same-generation record must stay warm after reload"
         );
     }
@@ -875,7 +911,7 @@ mod tests {
     }
 
     #[test]
-    fn v3_files_load_with_no_tiles_and_artifact_is_stamped_v4() {
+    fn v3_files_load_with_no_tiles_and_artifact_is_stamped_v5() {
         let mut store = WisdomStore::new();
         store.insert(demo_record());
         store.set_tile(16, TransformKind::C2c, 4);
@@ -899,9 +935,56 @@ mod tests {
             Json::Arr(vec![Json::obj().set("n", 8usize).set("width", 0usize)]),
         );
         assert!(WisdomStore::from_json(&zero).is_err());
-        // the artifact itself is stamped v4 in pretty output (the CI
+        // the artifact itself is stamped v5 in pretty output (the CI
         // upgrade smoke greps for this exact string)
-        assert!(store.to_json().to_pretty().contains("\"version\": 4"));
+        assert!(store.to_json().to_pretty().contains("\"version\": 5"));
+    }
+
+    #[test]
+    fn unknown_engine_names_are_rejected_on_load() {
+        let bad = demo_record().to_json().set("engine", "cufft");
+        let err = WisdomRecord::from_json(&bad).unwrap_err();
+        assert!(err.contains("unknown engine"), "{err}");
+        // every canonical EngineId spelling (the persisted format since
+        // the stringly-typed era) parses back to the same id
+        for id in EngineId::ALL {
+            let mut rec = demo_record();
+            rec.engine = id;
+            let j = Json::parse(&rec.to_json().to_string()).unwrap();
+            assert_eq!(WisdomRecord::from_json(&j).unwrap().engine, id);
+        }
+    }
+
+    #[test]
+    fn portfolio_persists_and_v4_files_load_without_one() {
+        let mkl = EngineId::Sim(Package::Mkl);
+        let fftw3 = EngineId::Sim(Package::Fftw3);
+        let mut pf = PortfolioModel::new(vec![fftw3, mkl]);
+        pf.set_surface(mkl, 512, TransformKind::C2c, 0.002);
+        pf.set_surface(fftw3, 512, TransformKind::C2c, 0.004);
+        assert_eq!(pf.best_engine(512, TransformKind::C2c, 2), Some(mkl));
+        let mut store = WisdomStore::new();
+        store.insert(demo_record());
+        store.set_portfolio(pf);
+        let j = Json::parse(&store.to_json().to_string()).unwrap();
+        let back = WisdomStore::from_json(&j).unwrap();
+        let bp = back.portfolio().expect("portfolio persisted");
+        assert_eq!(bp.surface(mkl, 512, TransformKind::C2c), Some(0.002));
+        assert_eq!(bp.pick(512, TransformKind::C2c), Some(mkl));
+        // a v4-shaped file (no portfolio object) loads with none
+        let mut v4 = store.to_json();
+        if let Json::Obj(fields) = &mut v4 {
+            fields.retain(|(k, _)| k != "portfolio");
+        }
+        let v4 = v4.set("version", 4i64);
+        let back4 = WisdomStore::from_json(&Json::parse(&v4.to_string()).unwrap()).unwrap();
+        assert!(back4.portfolio().is_none());
+        assert_eq!(back4.len(), 1);
+        // a corrupt portfolio entry is rejected, not dropped
+        let bad = WisdomStore::new()
+            .to_json()
+            .set("portfolio", Json::obj().set("members", Json::Arr(vec![Json::from("cufft")])));
+        assert!(WisdomStore::from_json(&bad).is_err());
     }
 
     #[test]
@@ -917,14 +1000,17 @@ mod tests {
     fn store_save_load_roundtrip() {
         let mut store = WisdomStore::new();
         store.insert(demo_record());
-        store.insert(WisdomRecord::from_simulator("sim-mkl", Package::Mkl, 24_704, true));
+        store.insert(WisdomRecord::from_simulator(Package::Mkl, 24_704, true));
         let path = std::env::temp_dir()
             .join(format!("hclfft_wisdom_test_{}/w.json", std::process::id()));
         store.save(&path).unwrap();
         let back = WisdomStore::load(&path).unwrap();
         assert_eq!(back.len(), 2);
-        assert_eq!(back.get("native", 16, 2).unwrap(), store.get("native", 16, 2).unwrap());
-        let sim = back.get("sim-mkl", 24_704, 2).unwrap();
+        assert_eq!(
+            back.get(EngineId::Native, 16, 2).unwrap(),
+            store.get(EngineId::Native, 16, 2).unwrap()
+        );
+        let sim = back.get(EngineId::Sim(Package::Mkl), 24_704, 2).unwrap();
         assert_eq!(sim.plan.d.iter().sum::<usize>(), 24_704);
         assert!(sim.predicted_cost_s > 0.0);
     }
@@ -1018,7 +1104,7 @@ mod tests {
             m.observe(2 * n, n, base_t * 2.0);
         }
         let rec = WisdomRecord::from_model(
-            "sim-mkl",
+            EngineId::Sim(Package::Mkl),
             &m,
             n,
             cfg.p,
@@ -1040,7 +1126,7 @@ mod tests {
             rep_scale: 10_000,
             ..PlanningConfig::default()
         };
-        let rec = WisdomRecord::from_measurement("native", &NativeEngine, 32, &cfg);
+        let rec = WisdomRecord::from_measurement(EngineId::Native, &NativeEngine, 32, &cfg);
         assert_eq!(rec.plan.d.iter().sum::<usize>(), 32);
         assert_eq!(rec.plan.d.len(), 2);
         assert!(!rec.plan.is_padded(), "pad_cost None must not pad");
@@ -1061,14 +1147,14 @@ mod tests {
         assert_eq!(WisdomRecord::from_json(&stale).unwrap().factors, vec![2, 2, 2, 2]);
         // a non-smooth n (24704 = 128·193) records an empty schedule
         // (Bluestein row kernel)
-        let sim = WisdomRecord::from_simulator("sim-mkl", Package::Mkl, 24_704, false);
+        let sim = WisdomRecord::from_simulator(Package::Mkl, 24_704, false);
         assert!(sim.factors.is_empty());
     }
 
     #[test]
     fn simulator_planning_is_deterministic() {
-        let a = WisdomRecord::from_simulator("sim-fftw3", Package::Fftw3, 16_064, false);
-        let b = WisdomRecord::from_simulator("sim-fftw3", Package::Fftw3, 16_064, false);
+        let a = WisdomRecord::from_simulator(Package::Fftw3, 16_064, false);
+        let b = WisdomRecord::from_simulator(Package::Fftw3, 16_064, false);
         assert_eq!(a, b);
         assert!(!a.plan.is_padded());
     }

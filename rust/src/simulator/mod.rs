@@ -23,8 +23,10 @@ pub mod fpm;
 pub mod packages;
 pub mod vexec;
 
-/// The three FFT packages the paper studies.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// The three FFT packages the paper studies. `Ord` so the typed engine
+/// ids built on top ([`crate::coordinator::engine::EngineId`]) can key
+/// ordered maps (wisdom records, portfolio surfaces).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Package {
     Fftw2,
     Fftw3,
@@ -37,6 +39,17 @@ impl Package {
             Package::Fftw2 => "FFTW-2.1.5",
             Package::Fftw3 => "FFTW-3.3.7",
             Package::Mkl => "Intel MKL FFT",
+        }
+    }
+
+    /// Short lowercase tag — the suffix of the `sim-<pkg>` engine ids
+    /// ([`crate::coordinator::engine::EngineId::Sim`]). Must stay stable:
+    /// it is the persisted wisdom / wire spelling of a virtual engine.
+    pub fn short_name(&self) -> &'static str {
+        match self {
+            Package::Fftw2 => "fftw2",
+            Package::Fftw3 => "fftw3",
+            Package::Mkl => "mkl",
         }
     }
 
@@ -109,6 +122,10 @@ mod tests {
         assert_eq!(Package::parse("FFTW3"), Some(Package::Fftw3));
         assert_eq!(Package::parse("fftw-2.1.5"), Some(Package::Fftw2));
         assert_eq!(Package::parse("cufft"), None);
+        // short names parse back (the persisted engine-id spelling)
+        for p in [Package::Fftw2, Package::Fftw3, Package::Mkl] {
+            assert_eq!(Package::parse(p.short_name()), Some(p));
+        }
     }
 
     #[test]

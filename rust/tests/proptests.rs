@@ -505,6 +505,7 @@ fn prop_colphase_simd_matches_scalar_gather_bitwise() {
 
 #[test]
 fn prop_wisdom_record_json_roundtrip() {
+    use hclfft::coordinator::engine::EngineId;
     use hclfft::coordinator::pad::PadDecision;
     use hclfft::coordinator::partition::Algorithm;
     use hclfft::coordinator::plan::PlannedTransform;
@@ -536,7 +537,7 @@ fn prop_wisdom_record_json_roundtrip() {
                 })
                 .collect();
             WisdomRecord {
-                engine: "native".to_string(),
+                engine: EngineId::Native,
                 n,
                 p,
                 t: 1 + rng.range_usize(0, 8),
@@ -586,4 +587,48 @@ fn prop_wisdom_record_json_roundtrip() {
             Ok(())
         },
     );
+}
+
+/// The typed engine identity (PR 10): canonical string and numeric wire
+/// encodings are lossless inverses over every id, `Display` agrees with
+/// `as_str`, and unknown spellings are rejected (never silently mapped).
+#[test]
+fn prop_engine_id_parse_display_wire_roundtrip() {
+    use hclfft::coordinator::engine::EngineId;
+    run(
+        "engine-id-roundtrip",
+        &Config { cases: 100, ..Config::default() },
+        |rng| EngineId::ALL[rng.range_usize(0, EngineId::ALL.len() - 1)],
+        |_| vec![],
+        |&id| {
+            let s = id.to_string();
+            if s != id.as_str() {
+                return Err(format!("Display `{s}` != as_str `{}`", id.as_str()));
+            }
+            if EngineId::parse(&s) != Some(id) {
+                return Err(format!("parse({s}) lost identity"));
+            }
+            if s.parse::<EngineId>() != Ok(id) {
+                return Err(format!("FromStr({s}) lost identity"));
+            }
+            if EngineId::from_wire_code(id.wire_code()) != Some(id) {
+                return Err(format!("wire code {} not invertible", id.wire_code()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn engine_id_unknown_strings_rejected_and_wire_codes_unique() {
+    use hclfft::coordinator::engine::EngineId;
+    for bad in ["", "cufft", "sim-", "sim-cufft", "NATIVE", "native "] {
+        assert!(EngineId::parse(bad).is_none(), "`{bad}` must not parse");
+        assert!(bad.parse::<EngineId>().is_err(), "`{bad}` must not FromStr");
+    }
+    let mut codes: Vec<u8> = EngineId::ALL.iter().map(|e| e.wire_code()).collect();
+    codes.sort_unstable();
+    codes.dedup();
+    assert_eq!(codes.len(), EngineId::ALL.len(), "wire codes must be unique");
+    assert!(EngineId::from_wire_code(EngineId::ALL.len() as u8).is_none());
 }

@@ -5,7 +5,7 @@
 
 use std::sync::Mutex;
 
-use hclfft::coordinator::engine::NativeEngine;
+use hclfft::coordinator::engine::{EngineId, NativeEngine};
 use hclfft::dft::fft::Direction;
 use hclfft::dft::real::TransformKind;
 use hclfft::dft::SignalMatrix;
@@ -115,18 +115,18 @@ fn real_responses_bit_exact_and_wisdom_kind_keyed() {
 
 /// A committed version-2 wisdom file (no `kind` fields) upgrades
 /// cleanly: every record loads as c2c, and re-saving writes the
-/// current version-4 artifact. The CI `wisdom` smoke drives the same
+/// current version-5 artifact. The CI `wisdom` smoke drives the same
 /// upgrade through the CLI.
 #[test]
 fn v2_wisdom_file_upgrades_to_current_version() {
     let store =
         WisdomStore::load(std::path::Path::new("rust/tests/fixtures/wisdom_v2.json")).unwrap();
     assert_eq!(store.len(), 1);
-    let rec = store.get("native", 16, 2).expect("v2 record loads under the c2c key");
+    let rec = store.get(EngineId::Native, 16, 2).expect("v2 record loads under the c2c key");
     assert_eq!(rec.kind(), TransformKind::C2c);
     assert_eq!(rec.plan.d, vec![10, 6]);
     let j = store.to_json();
-    assert_eq!(j.get("version").and_then(hclfft::util::json::Json::as_usize), Some(4));
+    assert_eq!(j.get("version").and_then(hclfft::util::json::Json::as_usize), Some(5));
 }
 
 /// A committed version-3 wisdom file (kind-keyed records, no `tiles`
@@ -136,30 +136,31 @@ fn v2_wisdom_file_upgrades_to_current_version() {
 /// store preserves both the records and any tiles recorded after the
 /// upgrade.
 #[test]
-fn v3_wisdom_file_upgrades_to_v4_and_roundtrips() {
+fn v3_wisdom_file_upgrades_to_current_and_roundtrips() {
     let mut store =
         WisdomStore::load(std::path::Path::new("rust/tests/fixtures/wisdom_v3.json")).unwrap();
     assert_eq!(store.len(), 1);
     let rec = store
-        .get_kind("native", 16, 2, TransformKind::R2c)
+        .get_kind(EngineId::Native, 16, 2, TransformKind::R2c)
         .expect("v3 kind-keyed record loads under its own plane");
     assert_eq!(rec.kind(), TransformKind::R2c);
     assert_eq!(rec.plan.d, vec![12, 4]);
     assert!(store.tiles().next().is_none(), "v3 files carry no measured tile widths");
     assert_eq!(store.tile_width(16, TransformKind::R2c), None);
-    // re-saving stamps v4; a width recorded post-upgrade survives the
-    // save → load roundtrip with the record intact
+    // re-saving stamps the current version; a width recorded
+    // post-upgrade survives the save → load roundtrip with the record
+    // intact
     store.set_tile(16, TransformKind::R2c, 4);
     let path = tmp_path("v3upgrade");
     store.save(&path).unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
-    assert!(text.contains("\"version\": 4"), "upgraded artifact must be stamped v4");
+    assert!(text.contains("\"version\": 5"), "upgraded artifact must be stamped v5");
     let back = WisdomStore::load(&path).unwrap();
     assert_eq!(back.tile_width(16, TransformKind::R2c), Some(4));
     // c2r shares the r2c plane for tiles exactly like plan records
     assert_eq!(back.tile_width(16, TransformKind::C2r), Some(4));
     assert_eq!(
-        back.get_kind("native", 16, 2, TransformKind::R2c).unwrap().plan.d,
+        back.get_kind(EngineId::Native, 16, 2, TransformKind::R2c).unwrap().plan.d,
         vec![12, 4]
     );
 }
@@ -294,11 +295,16 @@ fn virtual_time_spjf_schedules_cheap_sizes_first() {
     let sizes = [24_704usize, 8_064, 16_064];
     let mut store = WisdomStore::new();
     for &n in &sizes {
-        store.insert(WisdomRecord::from_simulator("sim-mkl", Package::Mkl, n, false));
+        store.insert(WisdomRecord::from_simulator(Package::Mkl, n, false));
     }
     let costs: Vec<f64> = sizes
         .iter()
-        .map(|&n| store.get("sim-mkl", n, Package::Mkl.best_groups().p).unwrap().predicted_cost_s)
+        .map(|&n| {
+            store
+                .get(EngineId::Sim(Package::Mkl), n, Package::Mkl.best_groups().p)
+                .unwrap()
+                .predicted_cost_s
+        })
         .collect();
     assert!(costs[1] < costs[2] && costs[2] < costs[0], "model must order sizes: {costs:?}");
 
@@ -343,7 +349,7 @@ fn zero_starvation_bound_means_fifo() {
     let sizes = [24_704usize, 8_064];
     let mut store = WisdomStore::new();
     for &n in &sizes {
-        store.insert(WisdomRecord::from_simulator("sim-mkl", Package::Mkl, n, false));
+        store.insert(WisdomRecord::from_simulator(Package::Mkl, n, false));
     }
     let cfg = ServiceConfig { workers: 1, starvation_bound_s: 0.0, ..quick_cfg() };
     let svc = ServiceBuilder::new(cfg)
@@ -371,7 +377,7 @@ fn zero_starvation_bound_means_fifo() {
 #[test]
 fn admission_rejects_infeasible_deadlines() {
     let mut store = WisdomStore::new();
-    store.insert(WisdomRecord::from_simulator("sim-fftw3", Package::Fftw3, 24_704, false));
+    store.insert(WisdomRecord::from_simulator(Package::Fftw3, 24_704, false));
     let svc = ServiceBuilder::new(quick_cfg())
         .virtual_package("sim-fftw3", Package::Fftw3)
         .wisdom(store)
@@ -447,9 +453,10 @@ fn online_model_learns_and_replans_on_drift_in_virtual_time() {
     let plan = svc.planned("sim-mkl", n).expect("re-planned partition exists");
     assert_eq!(plan.d.iter().sum::<usize>(), n);
     // the re-planned record prices the *shifted* machine
-    let unscaled = WisdomRecord::from_simulator("sim-mkl", pkg, n, false).predicted_cost_s;
+    let unscaled = WisdomRecord::from_simulator(pkg, n, false).predicted_cost_s;
     let p = pkg.best_groups().p;
-    let replanned = svc.wisdom_snapshot().get("sim-mkl", n, p).unwrap().predicted_cost_s;
+    let replanned =
+        svc.wisdom_snapshot().get(EngineId::Sim(pkg), n, p).unwrap().predicted_cost_s;
     assert!(
         replanned > 2.5 * unscaled,
         "re-planned cost {replanned} must track the 6x machine (base {unscaled})"
@@ -508,6 +515,194 @@ fn replans_keep_outputs_bit_exact() {
         plans[0],
         plans[1]
     );
+}
+
+/// A committed version-4 wisdom file (kind-keyed records + measured
+/// tiles, no `portfolio` object) upgrades cleanly: records and tiles
+/// both survive, the store starts with no portfolio state, and
+/// portfolio surfaces attached post-upgrade roundtrip through the
+/// re-saved version-5 artifact.
+#[test]
+fn v4_wisdom_file_upgrades_to_v5_and_roundtrips() {
+    use hclfft::model::PortfolioModel;
+    let mut store =
+        WisdomStore::load(std::path::Path::new("rust/tests/fixtures/wisdom_v4.json")).unwrap();
+    assert_eq!(store.len(), 1);
+    let rec = store
+        .get_kind(EngineId::Native, 16, 2, TransformKind::R2c)
+        .expect("v4 engine string must parse forward to the typed id");
+    assert_eq!(rec.engine, EngineId::Native);
+    assert_eq!(rec.plan.d, vec![12, 4]);
+    assert_eq!(store.tile_width(16, TransformKind::R2c), Some(4), "v4 tiles must survive");
+    assert!(store.portfolio().is_none(), "v4 files carry no portfolio state");
+    // surfaces attached after the upgrade persist in the v5 artifact
+    let mut pf = PortfolioModel::new(vec![
+        EngineId::Sim(Package::Mkl),
+        EngineId::Sim(Package::Fftw3),
+    ]);
+    pf.set_surface(EngineId::Sim(Package::Mkl), 8_064, TransformKind::C2c, 0.25);
+    store.set_portfolio(pf);
+    let path = tmp_path("v4upgrade");
+    store.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"version\": 5"), "upgraded artifact must be stamped v5");
+    let back = WisdomStore::load(&path).unwrap();
+    assert_eq!(back.tile_width(16, TransformKind::R2c), Some(4));
+    assert_eq!(
+        back.get_kind(EngineId::Native, 16, 2, TransformKind::R2c).unwrap().plan.d,
+        vec![12, 4]
+    );
+    let bp = back.portfolio().expect("portfolio surfaces persisted");
+    assert_eq!(bp.members().len(), 2);
+    assert_eq!(
+        bp.surface(EngineId::Sim(Package::Mkl), 8_064, TransformKind::C2c),
+        Some(0.25)
+    );
+}
+
+/// Acceptance (portfolio tentpole): with heterogeneous calibrated
+/// members the portfolio picks different engines at different sizes,
+/// an injected machine slowdown on the incumbent fires drift and
+/// triggers a re-pick onto the other member, and the learned surfaces
+/// persist — all in deterministic virtual time.
+#[test]
+fn portfolio_picks_per_size_and_repicks_after_drift_in_virtual_time() {
+    use hclfft::simulator::vexec::predict_point;
+    let mkl = EngineId::Sim(Package::Mkl);
+    let fftw3 = EngineId::Sim(Package::Fftw3);
+    // self-calibrating: find one campaign size per winner from the same
+    // cold surfaces admission seeds the portfolio with (pad_cost: None
+    // in quick_cfg, so the fpm point prices the member)
+    let cold = |e: EngineId, n: usize| predict_point(e.package().unwrap(), n).t_fpm;
+    let sampled: Vec<usize> = hclfft::simulator::campaign_sizes().into_iter().step_by(97).collect();
+    let mkl_n = sampled
+        .iter()
+        .copied()
+        .find(|&n| cold(mkl, n) < cold(fftw3, n))
+        .expect("calibration must give sim-mkl a winning size");
+    let fftw3_n = sampled
+        .iter()
+        .copied()
+        .find(|&n| cold(fftw3, n) < cold(mkl, n))
+        .expect("calibration must give sim-fftw3 a winning size");
+
+    let cfg = ServiceConfig { workers: 1, ..quick_cfg() };
+    let svc = ServiceBuilder::new(cfg)
+        .virtual_id(Package::Mkl)
+        .virtual_id(Package::Fftw3)
+        .portfolio(vec![mkl, fftw3])
+        .build();
+    let probe = |n: usize| {
+        let r = svc.submit(Dft2dRequest::probe("portfolio", n)).unwrap().wait().unwrap().report;
+        assert!(r.virtual_done_s.is_some(), "portfolio members run in virtual time");
+        r
+    };
+
+    // per-size resolution: each size routes to its calibrated winner
+    assert_eq!(probe(mkl_n).engine, mkl);
+    assert_eq!(probe(fftw3_n).engine, fftw3);
+    let picks = svc.portfolio_picks();
+    assert_eq!(picks.len(), 2);
+    assert!(
+        picks.iter().any(|&(n, _, e)| n == mkl_n && e == mkl)
+            && picks.iter().any(|&(n, _, e)| n == fftw3_n && e == fftw3),
+        "portfolio must pick different engines at different sizes: {picks:?}"
+    );
+
+    // converge the incumbent's model at the true machine speed, then
+    // shift the machine hard enough that the other member must win
+    for _ in 0..4 {
+        assert_eq!(probe(mkl_n).engine, mkl, "picks are sticky while calibrated");
+    }
+    let factor = 4.0 * (cold(fftw3, mkl_n) / cold(mkl, mkl_n)).max(1.0);
+    svc.set_virtual_slowdown(mkl.as_str(), factor);
+    let window = hclfft::model::DriftPolicy::default().window;
+    let mut last = probe(mkl_n);
+    for _ in 0..window + 4 {
+        last = probe(mkl_n);
+    }
+    assert!(svc.stats().drift_events >= 1, "slowdown x{factor} must fire drift");
+    let repicks = svc.portfolio_repicks();
+    assert!(
+        repicks.iter().any(|ev| ev.n == mkl_n && ev.from == mkl && ev.to == fftw3),
+        "drift on the incumbent must re-pick the other member: {repicks:?}"
+    );
+    assert_eq!(last.engine, fftw3, "post-drift requests run on the re-picked member");
+    assert_eq!(
+        probe(fftw3_n).engine,
+        fftw3,
+        "drift on one member must not disturb the other size's pick"
+    );
+
+    // the portfolio state (members + surfaces) persists in wisdom v5
+    let path = tmp_path("portfolio");
+    svc.save_wisdom(&path).unwrap();
+    let store = WisdomStore::load(&path).unwrap();
+    let pf = store.portfolio().expect("portfolio surfaces persisted");
+    assert_eq!(pf.members(), [mkl, fftw3]);
+    assert!(pf.surface(fftw3, mkl_n, TransformKind::C2c).is_some());
+    svc.shutdown();
+}
+
+/// Acceptance (portfolio tentpole): routing a request through the
+/// portfolio must not change a single bit versus forcing the resolved
+/// engine directly — c2c and r2c, across 5-smooth sizes. Both services
+/// share one wisdom snapshot so they execute the identical plan.
+#[test]
+fn portfolio_execution_bit_identical_to_direct_engine() {
+    let sizes = [16usize, 18, 20, 24, 27, 45, 50, 60];
+    let direct = ServiceBuilder::new(quick_cfg()).native().build();
+    let mut complex_out = Vec::new();
+    let mut real_out = Vec::new();
+    for &n in &sizes {
+        let orig = SignalMatrix::random(n, n, n as u64 + 1);
+        let resp =
+            direct.submit(Dft2dRequest::forward("native", orig.clone())).unwrap().wait().unwrap();
+        complex_out.push((orig, resp.matrix));
+        let real = SignalMatrix::random_real(n, n, n as u64 + 2);
+        let resp = direct
+            .submit(Dft2dRequest::real_forward("native", real.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        real_out.push((real, resp.matrix));
+    }
+    let wisdom = direct.wisdom_snapshot();
+    direct.shutdown();
+
+    let viapf = ServiceBuilder::new(quick_cfg())
+        .native()
+        .portfolio(vec![EngineId::Native])
+        .wisdom(wisdom)
+        .build();
+    for (&n, (orig, want)) in sizes.iter().zip(&complex_out) {
+        let resp = viapf
+            .submit(Dft2dRequest::forward("portfolio", orig.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(resp.report.engine, EngineId::Native, "n={n}: resolved member is reported");
+        assert_eq!(
+            resp.matrix.max_abs_diff(want),
+            0.0,
+            "n={n} c2c: portfolio routing must be bit-identical to the direct engine"
+        );
+    }
+    for (&n, (orig, want)) in sizes.iter().zip(&real_out) {
+        let resp = viapf
+            .submit(Dft2dRequest::real_forward("portfolio", orig.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(resp.report.engine, EngineId::Native, "n={n}: resolved member is reported");
+        assert_eq!(
+            resp.matrix.max_abs_diff(want),
+            0.0,
+            "n={n} r2c: portfolio routing must be bit-identical to the direct engine"
+        );
+    }
+    assert_eq!(viapf.stats().planning_events, 0, "shared wisdom must keep the warm path warm");
+    viapf.shutdown();
 }
 
 /// Inverse requests take the exact dft2d path and undo forward service
